@@ -1,0 +1,77 @@
+//! Cluster-trace study (paper §2.1 / Fig. 2) — synthesize the Alibaba
+//! gpu-v2020-like utilisation distribution, then replay a machine's
+//! tenant timeline against the Harvest controller to measure how much
+//! peer memory is harvestable over a day and how often it gets revoked.
+//!
+//! Run: `cargo run --release --example cluster_trace`
+
+use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime};
+use harvest::memsim::{NodeSpec, SimNode, TenantLoad, UtilizationModel};
+use harvest::trace::{ClusterTrace, TraceSpec};
+use harvest::util::fmt_bytes;
+use harvest::util::rng::Rng;
+
+const GIB: u64 = 1 << 30;
+const HOUR: u64 = 3_600_000_000_000;
+
+fn main() {
+    // Part 1: the Fig. 2 distribution.
+    let trace = ClusterTrace::synthesize(TraceSpec::default());
+    println!("Fig. 2 replica — {} machine snapshots:", trace.len());
+    for u in [0.2, 0.5] {
+        println!("  {:.0}% of machines use <= {:.0}% of GPU memory", trace.cdf_at(u) * 100.0, u * 100.0);
+    }
+    println!("  (paper: ~68% <= 20%, ~87% <= 50%)\n");
+
+    // Part 2: replay a 24h tenant timeline on the peer GPU and keep a
+    // standing harvest of as much memory as the controller will give us.
+    println!("24h replay: opportunistic harvesting against a gpu-v2020-like tenant");
+    let mut rng = Rng::new(7);
+    // stationary target drawn from the Fig. 2 distribution
+    let model = UtilizationModel::gpu_v2020();
+    let target = model.sample(&mut rng);
+    println!("  tenant stationary utilisation target: {:.0}%", target * 100.0);
+    let timeline =
+        TenantLoad::generate(&mut rng, 80 * GIB, target, Default::default(), 24 * HOUR);
+    let mut node = SimNode::new(NodeSpec::h100x2());
+    node.set_tenant_load(1, timeline);
+    let mut hr = HarvestRuntime::new(node, HarvestConfig::for_node(2));
+    let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+
+    let chunk = 1 * GIB;
+    let mut held: Vec<harvest::harvest::HandleId> = Vec::new();
+    let mut samples = Vec::new();
+    for hour5 in 0..(24 * 12) {
+        let t = hour5 * (HOUR / 12);
+        let revs = hr.advance_to(t);
+        for r in &revs {
+            held.retain(|&h| h != r.handle.id);
+        }
+        // greedily top up
+        while let Ok(h) = hr.alloc(chunk, hints) {
+            held.push(h.id);
+        }
+        samples.push(hr.live_bytes_on(1));
+    }
+    let mean = samples.iter().sum::<u64>() / samples.len() as u64;
+    let min = *samples.iter().min().unwrap();
+    let max = *samples.iter().max().unwrap();
+    println!(
+        "  harvested on peer: mean {} (min {}, max {}) of 80 GiB",
+        fmt_bytes(mean),
+        fmt_bytes(min),
+        fmt_bytes(max)
+    );
+    println!(
+        "  allocation attempts {} (failures {}), revocations {}",
+        hr.alloc_attempts,
+        hr.alloc_failures,
+        hr.revocations.len()
+    );
+    println!(
+        "\ntakeaway: production-trace-shaped tenants leave large, mostly-stable\n\
+         headroom — the §2.1 premise — but the controller must absorb {} \n\
+         revocation events/day to use it safely.",
+        hr.revocations.len()
+    );
+}

@@ -1,0 +1,105 @@
+//! Long-context KV offload (paper §5) — decode a handful of very long
+//! sequences whose KV cache exceeds the local pool, comparing vanilla
+//! vLLM behaviour (evict to host DRAM over PCIe) against Harvest (evict
+//! to peer HBM over NVLink), then inject a revocation storm and watch
+//! the lossy tier recompute.
+//!
+//! Run: `cargo run --release --example kv_longcontext`
+
+use harvest::harvest::{HarvestConfig, HarvestRuntime, RevocationReason};
+use harvest::kv::{KvConfig, KvOffloadManager, SeqId};
+use harvest::memsim::{NodeSpec, SimNode};
+use harvest::moe::find_kv_model;
+use harvest::util::{fmt_bytes, fmt_ns};
+
+fn run(use_harvest: bool) -> (u64, harvest::kv::KvStats) {
+    let model = find_kv_model("kimi").unwrap();
+    let cfg = KvConfig {
+        model,
+        block_tokens: 16,
+        local_capacity_blocks: 256, // 4096 tokens of local KV
+        use_harvest,
+        host_backed_peer: false,
+    };
+    let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+    let mut kv = KvOffloadManager::new(cfg, 0);
+
+    // 4 sequences × 4096-token contexts = 4x the local pool.
+    let seqs: Vec<SeqId> = (0..4).map(SeqId).collect();
+    for &s in &seqs {
+        for _ in 0..4096 {
+            kv.append_token(&mut hr, s);
+        }
+    }
+    // Decode phase: each step touches every sequence's full KV (attention
+    // reads all blocks), round-robin — the reuse pattern §6.2 highlights.
+    let t0 = hr.node.clock.now();
+    for _step in 0..32 {
+        for &s in &seqs {
+            kv.access_seq(&mut hr, s);
+            kv.append_token(&mut hr, s);
+        }
+    }
+    (hr.node.clock.now() - t0, kv.stats.clone())
+}
+
+fn main() {
+    let model = find_kv_model("kimi").unwrap();
+    println!(
+        "long-context decode: Kimi-K2 geometry, {} per token, 4 x 4096-token sequences,\n\
+         local pool 256 blocks (4096 tokens) -> 75% of KV must live off-GPU\n",
+        fmt_bytes(model.kv_bytes_per_token())
+    );
+
+    let (host_ns, host_stats) = run(false);
+    let (peer_ns, peer_stats) = run(true);
+
+    println!("vanilla vLLM (host offload):");
+    println!(
+        "  decode time {}   reloads {} (host {}, peer {})   hit rate {:.1}%",
+        fmt_ns(host_ns),
+        host_stats.reloads(),
+        host_stats.host_reloads,
+        host_stats.peer_reloads,
+        host_stats.hit_rate() * 100.0
+    );
+    println!("harvest (peer offload):");
+    println!(
+        "  decode time {}   reloads {} (host {}, peer {})   hit rate {:.1}%",
+        fmt_ns(peer_ns),
+        peer_stats.reloads(),
+        peer_stats.host_reloads,
+        peer_stats.peer_reloads,
+        peer_stats.hit_rate() * 100.0
+    );
+    println!("  speedup: {:.2}x\n", host_ns as f64 / peer_ns as f64);
+
+    // Revocation storm mid-decode: the lossy peer tier disappears.
+    println!("injecting peer revocation mid-decode (lossy tier) ...");
+    let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+    let cfg = KvConfig {
+        model,
+        block_tokens: 16,
+        local_capacity_blocks: 256,
+        use_harvest: true,
+        host_backed_peer: false,
+    };
+    let mut kv = KvOffloadManager::new(cfg, 0);
+    let s = SeqId(0);
+    // 12288 tokens = 768 blocks vs a 256-block pool: 512 blocks spill to peer
+    for _ in 0..12288 {
+        kv.append_token(&mut hr, s);
+    }
+    let revs = hr.revoke_peer(1, RevocationReason::ExternalReclaim);
+    println!("  {} peer blocks revoked; correctness preserved by recomputation:", revs.len());
+    kv.access_seq(&mut hr, s);
+    let inv = match kv.check_invariants() {
+        Ok(()) => "ok".to_string(),
+        Err(e) => e,
+    };
+    println!(
+        "  after reaccess: recomputes {}, drops observed {}, invariants {inv}",
+        kv.stats.recomputes,
+        kv.drops_observed(),
+    );
+}

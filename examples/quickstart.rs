@@ -1,0 +1,78 @@
+//! Quickstart — the Harvest API in 60 lines (paper §3.2).
+//!
+//! Simulates a 2× H100 node, harvests peer HBM, populates it, serves a
+//! fast peer fetch, then watches a co-tenant pressure spike revoke the
+//! allocation (drain → invalidate → callback) and falls back to host.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use harvest::harvest::{AllocHints, Durability, HarvestConfig, HarvestRuntime};
+use harvest::memsim::{DeviceId, NodeSpec, SimNode, TenantLoad};
+use harvest::util::{fmt_bytes, fmt_ns};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+const GIB: u64 = 1 << 30;
+const MIB: u64 = 1 << 20;
+
+fn main() {
+    // A 2-GPU NVLink node (the paper's testbed shape). GPU 0 is our
+    // memory-pressured compute GPU; GPU 1 has headroom.
+    let node = SimNode::new(NodeSpec::h100x2());
+    let mut hr = HarvestRuntime::new(node, HarvestConfig::for_node(2));
+
+    // 1. harvest_alloc: ask for 256 MiB of peer HBM for compute GPU 0.
+    let hints = AllocHints {
+        compute_gpu: Some(0),
+        durability: Durability::HostBacked, // authoritative copy in DRAM
+        ..Default::default()
+    };
+    let handle = hr.alloc(256 * MIB, hints).expect("peer capacity available");
+    println!(
+        "harvest_alloc -> handle {:?}: {} on peer GPU {} (offset {:#x})",
+        handle.id,
+        fmt_bytes(handle.size),
+        handle.peer,
+        handle.offset
+    );
+
+    // 2. harvest_register_cb: get told when the allocation is revoked.
+    let revoked = Rc::new(RefCell::new(None));
+    let seen = revoked.clone();
+    hr.register_cb(handle.id, move |rev| {
+        *seen.borrow_mut() = Some((rev.reason, rev.at));
+    })
+    .unwrap();
+
+    // 3. Populate the cache (host -> peer over PCIe, off the hot path)...
+    let fill = hr.copy_in(handle.id, DeviceId::Host).unwrap();
+    println!("populate: host->peer copy finishes at t={}", fmt_ns(fill.end));
+
+    // ...then serve a hit (peer -> compute over NVLink, the fast path).
+    let hit = hr.fetch_to(handle.id, 0).unwrap();
+    let host_equivalent =
+        hr.node.topo.estimate(DeviceId::Host, DeviceId::Gpu(0), handle.size).unwrap();
+    println!(
+        "cache hit:  peer->gpu0 in {} (host DRAM would take {}; {:.1}x slower)",
+        fmt_ns(hit.duration()),
+        fmt_ns(host_equivalent),
+        host_equivalent as f64 / hit.duration() as f64
+    );
+
+    // 4. A co-tenant on GPU 1 suddenly wants (almost) all of its memory.
+    let now = hr.node.clock.now();
+    hr.node.set_tenant_load(
+        1,
+        TenantLoad::from_steps(80 * GIB, vec![(0, 0), (now + 1_000_000, 80 * GIB)]),
+    );
+    let revs = hr.advance_to(now + 2_000_000);
+    println!("tenant pressure spike -> {} revocation(s)", revs.len());
+    let (reason, at) = revoked.borrow().expect("callback fired");
+    println!("callback observed: reason {reason:?} at t={}", fmt_ns(at));
+    assert!(!hr.is_live(handle.id), "handle is gone");
+
+    // 5. Correctness never depended on the peer tier: the object still
+    //    has its authoritative host copy; we just fetch from there now.
+    let fallback = hr.node.copy(DeviceId::Host, DeviceId::Gpu(0), 256 * MIB, None);
+    println!("fallback:   host->gpu0 in {} (correct, just slower)", fmt_ns(fallback.duration()));
+}

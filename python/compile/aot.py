@@ -1,0 +1,164 @@
+"""AOT pipeline: lower the L2 graph to HLO *text* + weights + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the `xla` crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  decode_step_b{B}.hlo.txt   full transformer decode step per batch variant
+  moe_ffn.hlo.txt            standalone L1 MoE FFN kernel (micro-bench)
+  paged_attention.hlo.txt    standalone L1 paged attention kernel
+  weights.bin                all parameters, f32 LE, param_specs order
+  manifest.json              shapes/dtypes/arg order + model config + seed
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.moe_ffn import moe_ffn
+from .kernels.paged_attention import paged_attention
+from .model import (ModelConfig, decode_step_flat, example_inputs,
+                    init_params, param_specs)
+
+BATCH_VARIANTS = (1, 4)
+SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=False: PJRT
+    untuples the root, so the Rust side reads one buffer per result —
+    half the output copy of the tuple path, see EXPERIMENTS.md §Perf)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+
+
+def build(out_dir: pathlib.Path) -> dict:
+    cfg = ModelConfig()
+    cfg.validate()
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {
+        "seed": SEED,
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "head_dim": cfg.head_dim,
+            "n_layers": cfg.n_layers, "n_experts": cfg.n_experts,
+            "top_k": cfg.top_k, "d_ff": cfg.d_ff,
+            "page_size": cfg.page_size, "num_pages": cfg.num_pages,
+            "max_pages_per_seq": cfg.max_pages_per_seq,
+        },
+        "executables": {},
+        "params": [],
+    }
+
+    # ---- weights.bin -------------------------------------------------
+    params = init_params(cfg, SEED)
+    blob = bytearray()
+    for name, shape in param_specs(cfg):
+        arr = np.asarray(params[name], np.float32)
+        manifest["params"].append(
+            {"name": name, "shape": list(shape), "offset": len(blob),
+             "nbytes": arr.nbytes})
+        blob += arr.tobytes()
+    (out_dir / "weights.bin").write_bytes(bytes(blob))
+    manifest["weights_sha256"] = hashlib.sha256(bytes(blob)).hexdigest()
+    manifest["weights_nbytes"] = len(blob)
+
+    # ---- decode_step variants ----------------------------------------
+    flat_param_specs = [
+        jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+        for _, shape in param_specs(cfg)
+    ]
+    for b in BATCH_VARIANTS:
+        fn = decode_step_flat(cfg)
+        lowered = jax.jit(fn).lower(*flat_param_specs, *example_inputs(cfg, b))
+        text = to_hlo_text(lowered)
+        name = f"decode_step_b{b}.hlo.txt"
+        (out_dir / name).write_text(text)
+        manifest["executables"][f"decode_step_b{b}"] = {
+            "path": name,
+            "args": (
+                [{"name": n, **_spec_json(s)}
+                 for (n, _), s in zip(param_specs(cfg), flat_param_specs)]
+                + [{"name": n, **_spec_json(s)}
+                   for n, s in zip(
+                       ["ids", "pos", "page_table", "seq_lens", "kv_k",
+                        "kv_v"], example_inputs(cfg, b))]
+            ),
+            "outputs": ["logits", "routed_experts", "kv_k", "kv_v"],
+        }
+
+    # ---- standalone kernels (micro-bench / cross-checking) -----------
+    B, d, f, E, k = 4, cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.top_k
+    f32, i32 = jnp.float32, jnp.int32
+    moe_args = (
+        jax.ShapeDtypeStruct((B, d), f32),
+        jax.ShapeDtypeStruct((E, d, f), f32),
+        jax.ShapeDtypeStruct((E, f, d), f32),
+        jax.ShapeDtypeStruct((B, k), i32),
+        jax.ShapeDtypeStruct((B, k), f32),
+    )
+    text = to_hlo_text(jax.jit(lambda *a: (moe_ffn(*a),)).lower(*moe_args))
+    (out_dir / "moe_ffn.hlo.txt").write_text(text)
+    manifest["executables"]["moe_ffn"] = {
+        "path": "moe_ffn.hlo.txt",
+        "args": [{"name": n, **_spec_json(s)} for n, s in zip(
+            ["x", "w1", "w2", "topk_idx", "topk_w"], moe_args)],
+        "outputs": ["y"],
+    }
+
+    H, hd, P, bs, mp = cfg.n_heads, cfg.head_dim, cfg.num_pages, \
+        cfg.page_size, cfg.max_pages_per_seq
+    pa_args = (
+        jax.ShapeDtypeStruct((B, H, hd), f32),
+        jax.ShapeDtypeStruct((P, bs, H, hd), f32),
+        jax.ShapeDtypeStruct((P, bs, H, hd), f32),
+        jax.ShapeDtypeStruct((B, mp), i32),
+        jax.ShapeDtypeStruct((B,), i32),
+    )
+    text = to_hlo_text(
+        jax.jit(lambda *a: (paged_attention(*a),)).lower(*pa_args))
+    (out_dir / "paged_attention.hlo.txt").write_text(text)
+    manifest["executables"]["paged_attention"] = {
+        "path": "paged_attention.hlo.txt",
+        "args": [{"name": n, **_spec_json(s)} for n, s in zip(
+            ["q", "k_pages", "v_pages", "page_table", "seq_lens"], pa_args)],
+        "outputs": ["out"],
+    }
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    m = build(out)
+    total = sum(p.stat().st_size for p in out.iterdir())
+    print(f"wrote {len(m['executables'])} executables + "
+          f"{m['weights_nbytes']} weight bytes to {out} "
+          f"({total / 1e6:.1f} MB total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Pallas kernel: single-token decode attention over a paged KV cache.
+
+This is the L1 hot-spot of the KV-offload workload (paper §5): decode
+attention where the KV cache lives in fixed-size pages (vLLM-style) and a
+per-sequence page table maps logical block ids to physical pages. The Rust
+coordinator decides *which tier* each page lives on (local HBM / peer HBM /
+host DRAM — the Harvest contribution); by the time the kernel runs, pages
+referenced by the table are resident and the kernel only sees physical page
+indices.
+
+TPU-minded structure: grid over sequences; the query tile (`[1, H, hd]`)
+and the sequence's page-table row are staged into VMEM via BlockSpecs,
+while the page pool stays in HBM and is gathered per-sequence. Scores are
+computed against the full (static) `mp*bs` window with a length mask —
+static shapes keep the lowering scatter/loop-free, and the softmax is
+numerically stabilised with a running max exactly like a single-block
+flash step.
+
+`interpret=True` is mandatory on this image (Mosaic custom-calls cannot run
+on the CPU PJRT plugin). Oracle: `ref.paged_attention_ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _paged_attention_kernel(q_ref, kp_ref, vp_ref, pt_ref, len_ref, o_ref):
+    b = pl.program_id(0)
+    H, hd = q_ref.shape[1], q_ref.shape[2]
+    bs = kp_ref.shape[1]
+    mp = pt_ref.shape[1]
+    T = mp * bs
+
+    q = q_ref[0]                                  # [H, hd]
+    pages = pt_ref[0]                             # [mp] int32
+    k_pool = kp_ref[...]                          # [P, bs, H, hd]
+    v_pool = vp_ref[...]
+    k_all = k_pool[pages].reshape(T, H, hd)       # gather logical window
+    v_all = v_pool[pages].reshape(T, H, hd)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, q.dtype))
+    scores = jnp.einsum("hd,thd->ht", q, k_all) * scale  # [H, T]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (1, T), 1) < len_ref[b]
+    scores = jnp.where(mask, scores, jnp.asarray(-1e30, q.dtype))
+    # Stabilised softmax (single-block flash step).
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.einsum("ht,thd->hd", p / denom, v_all)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, page_table, seq_lens, *,
+                    interpret: bool = True):
+    """Decode attention over paged KV.
+
+    Shapes: q [B,H,hd], k_pages/v_pages [P,bs,H,hd], page_table [B,mp] i32,
+    seq_lens [B] i32. Returns [B,H,hd].
+    """
+    B, H, hd = q.shape
+    P, bs, _, _ = k_pages.shape
+    mp = page_table.shape[1]
+    return pl.pallas_call(
+        _paged_attention_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b: (b, 0, 0)),
+            pl.BlockSpec((P, bs, H, hd), lambda b: (0, 0, 0, 0)),
+            pl.BlockSpec((P, bs, H, hd), lambda b: (0, 0, 0, 0)),
+            pl.BlockSpec((1, mp), lambda b: (b, 0)),
+            pl.BlockSpec((B,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(q, k_pages, v_pages, page_table, seq_lens)

@@ -1,0 +1,71 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its reference here to float tolerance. pytest (and hypothesis
+shape sweeps) assert kernel-vs-ref allclose at build time; nothing in the
+Rust request path ever runs without the oracle having passed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def moe_ffn_ref(x, w1, w2, topk_idx, topk_w):
+    """Reference top-k routed mixture-of-experts feed-forward.
+
+    Args:
+      x:        [B, d]   token activations.
+      w1:       [E, d, f] expert up-projection weights.
+      w2:       [E, f, d] expert down-projection weights.
+      topk_idx: [B, k]   int32 expert ids selected per token.
+      topk_w:   [B, k]   routing weights (already normalised).
+
+    Returns:
+      [B, d] combined expert outputs: sum_k w_k * FFN_{e_k}(x).
+    """
+    E = w1.shape[0]
+    out = jnp.zeros_like(x)
+    for e in range(E):
+        h = silu(x @ w1[e])          # [B, f]
+        y = h @ w2[e]                # [B, d]
+        sel = topk_idx == e          # [B, k]
+        wt = jnp.sum(jnp.where(sel, topk_w, 0.0), axis=1)  # [B]
+        out = out + y * wt[:, None]
+    return out
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens):
+    """Reference single-token decode attention over a paged KV cache.
+
+    Args:
+      q:          [B, H, hd]      query for the current decode position.
+      k_pages:    [P, bs, H, hd]  paged key cache (physical pages).
+      v_pages:    [P, bs, H, hd]  paged value cache.
+      page_table: [B, mp]  int32  logical->physical page map per sequence.
+      seq_lens:   [B]      int32  valid KV length per sequence (incl. current).
+
+    Returns:
+      [B, H, hd] attention outputs.
+    """
+    B, H, hd = q.shape
+    _, bs, _, _ = k_pages.shape
+    mp = page_table.shape[1]
+    T = mp * bs
+    outs = []
+    for b in range(B):
+        pages = page_table[b]                       # [mp]
+        k_all = k_pages[pages].reshape(T, H, hd)    # logical order
+        v_all = v_pages[pages].reshape(T, H, hd)
+        scores = jnp.einsum("hd,thd->ht", q[b], k_all) / jnp.sqrt(
+            jnp.asarray(hd, q.dtype)
+        )
+        mask = jnp.arange(T) < seq_lens[b]
+        scores = jnp.where(mask[None, :], scores, jnp.asarray(-1e30, q.dtype))
+        p = jax.nn.softmax(scores, axis=-1)
+        outs.append(jnp.einsum("ht,thd->hd", p, v_all))
+    return jnp.stack(outs)

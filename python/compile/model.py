@@ -1,0 +1,205 @@
+"""L2: tiny MoE transformer decode step over a paged KV cache (JAX).
+
+This is the compute graph the Rust coordinator executes through PJRT: a
+pre-norm transformer block stack where the attention reads/writes a
+vLLM-style paged KV cache (physical page pool + per-sequence page table)
+and the FFN is a top-k routed mixture of experts. Both hot-spots call the
+L1 Pallas kernels (`kernels.paged_attention`, `kernels.moe_ffn`); top-k
+gating stays in plain jnp (it is tiny and XLA fuses it).
+
+Everything is shape-static so the whole step lowers to a single HLO module:
+  decode_step(params..., ids, pos, page_table, seq_lens, kv_k, kv_v)
+      -> (logits, kv_k', kv_v')
+The KV cache is passed in and returned functionally; the Rust side keeps it
+as a device-resident buffer and feeds it back each step. Prefill is done by
+calling the same step once per prompt token (chunked prefill of one), so a
+single artifact serves both phases.
+
+Build-time only: this module is never imported on the request path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.moe_ffn import moe_ffn
+from .kernels.paged_attention import paged_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static geometry of the tiny serving model (and its KV layout)."""
+
+    vocab: int = 1024
+    d_model: int = 256
+    n_heads: int = 4
+    head_dim: int = 64
+    n_layers: int = 4
+    n_experts: int = 8
+    top_k: int = 2
+    d_ff: int = 512
+    page_size: int = 16          # KV entries per physical page
+    num_pages: int = 64          # physical page pool size (per layer)
+    max_pages_per_seq: int = 16  # logical pages per sequence (max ctx 256)
+
+    @property
+    def max_context(self) -> int:
+        return self.page_size * self.max_pages_per_seq
+
+    def validate(self) -> None:
+        assert self.n_heads * self.head_dim == self.d_model
+        assert self.top_k <= self.n_experts
+
+
+# Parameter registry: (name, shape-fn) in the exact order Rust's weight
+# loader consumes them from weights.bin (see aot.py manifest).
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, d)),
+    ]
+    for l in range(cfg.n_layers):
+        specs += [
+            (f"l{l}.ln1", (d,)),
+            (f"l{l}.wqkv", (d, 3 * d)),
+            (f"l{l}.wo", (d, d)),
+            (f"l{l}.ln2", (d,)),
+            (f"l{l}.gate", (d, E)),
+            (f"l{l}.w1", (E, d, f)),
+            (f"l{l}.w2", (E, f, d)),
+        ]
+    specs += [("ln_f", (d,)), ("unembed", (d, cfg.vocab))]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Deterministic scaled-normal init (numpy RNG so Rust tests can rely on
+    byte-identical weights.bin for a given seed)."""
+    rng = np.random.default_rng(seed)
+    params: Dict[str, jax.Array] = {}
+    for name, shape in param_specs(cfg):
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            arr = np.ones(shape, np.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            arr = rng.normal(0.0, fan_in ** -0.5, size=shape).astype(np.float32)
+        params[name] = jnp.asarray(arr)
+    return params
+
+
+def _rmsnorm(x: jax.Array, scale: jax.Array) -> jax.Array:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def _rope(x: jax.Array, pos: jax.Array) -> jax.Array:
+    """Rotary embedding: x [B,H,hd], pos [B] int32."""
+    B, H, hd = x.shape
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = pos[:, None].astype(jnp.float32) * freqs[None, :]       # [B, half]
+    cos = jnp.cos(ang)[:, None, :]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def top_k_gating(x: jax.Array, gate_w: jax.Array, k: int):
+    """Softmax-renormalised top-k gating. Returns ([B,k] i32, [B,k] f32).
+
+    Implemented as k unrolled argmax+mask rounds rather than
+    `jax.lax.top_k`: jax >= 0.5 lowers top_k to an HLO `topk(...,
+    largest=true)` custom attribute that the xla_extension 0.5.1 text
+    parser (the Rust loader's XLA) rejects. Argmax lowers to plain
+    reduce/select ops that round-trip cleanly, and k is tiny (<= 4).
+    """
+    B = x.shape[0]
+    logits = x @ gate_w                                   # [B, E]
+    cur = logits
+    idxs, vals = [], []
+    for _ in range(k):
+        i = jnp.argmax(cur, axis=-1)                      # [B]
+        v = jnp.take_along_axis(cur, i[:, None], axis=-1)[:, 0]
+        idxs.append(i)
+        vals.append(v)
+        cur = cur.at[jnp.arange(B), i].set(-jnp.inf)
+    idx = jnp.stack(idxs, axis=1).astype(jnp.int32)       # [B, k]
+    w = jax.nn.softmax(jnp.stack(vals, axis=1), axis=-1)
+    return idx, w.astype(x.dtype)
+
+
+def decode_step(
+    params: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    ids: jax.Array,          # [B] i32 current token ids
+    pos: jax.Array,          # [B] i32 decode positions (0-based)
+    page_table: jax.Array,   # [B, mp] i32
+    seq_lens: jax.Array,     # [B] i32 valid KV length AFTER this token
+    kv_k: jax.Array,         # [L, P, bs, H, hd] f32
+    kv_v: jax.Array,         # [L, P, bs, H, hd] f32
+):
+    """One decode step for a batch of B sequences; returns
+    (logits [B,V], routed_experts [L,B,k] i32, kv_k', kv_v')."""
+    B = ids.shape[0]
+    H, hd, bs = cfg.n_heads, cfg.head_dim, cfg.page_size
+    x = params["embed"][ids]                              # [B, d]
+    batch_ix = jnp.arange(B)
+    page = page_table[batch_ix, pos // bs]                # [B] physical page
+    off = pos % bs                                        # [B]
+    routed = []
+    for l in range(cfg.n_layers):
+        h = _rmsnorm(x, params[f"l{l}.ln1"])
+        qkv = h @ params[f"l{l}.wqkv"]                    # [B, 3d]
+        q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+        q = _rope(q.reshape(B, H, hd), pos)
+        k_new = _rope(k_new.reshape(B, H, hd), pos)
+        v_new = v_new.reshape(B, H, hd)
+        kv_k = kv_k.at[l, page, off].set(k_new)           # scatter into pages
+        kv_v = kv_v.at[l, page, off].set(v_new)
+        attn = paged_attention(q, kv_k[l], kv_v[l], page_table, seq_lens)
+        x = x + attn.reshape(B, cfg.d_model) @ params[f"l{l}.wo"]
+        h = _rmsnorm(x, params[f"l{l}.ln2"])
+        topk_idx, topk_w = top_k_gating(h, params[f"l{l}.gate"], cfg.top_k)
+        routed.append(topk_idx)
+        x = x + moe_ffn(h, params[f"l{l}.w1"], params[f"l{l}.w2"],
+                        topk_idx, topk_w)
+    x = _rmsnorm(x, params["ln_f"])
+    logits = x @ params["unembed"]
+    return logits, jnp.stack(routed), kv_k, kv_v
+
+
+def decode_step_flat(cfg: ModelConfig):
+    """Returns a function taking (flat params..., ids, pos, page_table,
+    seq_lens, kv_k, kv_v) in `param_specs` order — the exact calling
+    convention of the AOT artifact consumed by the Rust runtime."""
+    names = [n for n, _ in param_specs(cfg)]
+
+    def fn(*args):
+        n = len(names)
+        params = dict(zip(names, args[:n]))
+        ids, pos, page_table, seq_lens, kv_k, kv_v = args[n:]
+        return decode_step(params, cfg, ids, pos, page_table, seq_lens,
+                           kv_k, kv_v)
+
+    return fn
+
+
+def example_inputs(cfg: ModelConfig, batch: int):
+    """ShapeDtypeStructs for the non-parameter decode_step arguments."""
+    L, P, bs = cfg.n_layers, cfg.num_pages, cfg.page_size
+    H, hd, mp = cfg.n_heads, cfg.head_dim, cfg.max_pages_per_seq
+    i32, f32 = jnp.int32, jnp.float32
+    return (
+        jax.ShapeDtypeStruct((batch,), i32),            # ids
+        jax.ShapeDtypeStruct((batch,), i32),            # pos
+        jax.ShapeDtypeStruct((batch, mp), i32),         # page_table
+        jax.ShapeDtypeStruct((batch,), i32),            # seq_lens
+        jax.ShapeDtypeStruct((L, P, bs, H, hd), f32),   # kv_k
+        jax.ShapeDtypeStruct((L, P, bs, H, hd), f32),   # kv_v
+    )

@@ -1,0 +1,110 @@
+"""AOT artifact pipeline tests: manifest/weights/HLO-text integrity.
+
+Builds into a tmp dir (does not touch ../artifacts) so pytest stays
+side-effect free.
+"""
+import hashlib
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import ModelConfig, init_params, param_specs
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(out)
+    return out, manifest
+
+
+class TestManifest:
+    def test_all_executables_present(self, built):
+        out, m = built
+        expected = {"decode_step_b1", "decode_step_b4", "moe_ffn",
+                    "paged_attention"}
+        assert set(m["executables"]) == expected
+        for exe in m["executables"].values():
+            assert (out / exe["path"]).exists()
+
+    def test_manifest_json_round_trips(self, built):
+        out, m = built
+        loaded = json.loads((out / "manifest.json").read_text())
+        assert loaded == json.loads(json.dumps(m))
+
+    def test_config_matches_model_default(self, built):
+        _, m = built
+        cfg = ModelConfig()
+        assert m["config"]["d_model"] == cfg.d_model
+        assert m["config"]["n_experts"] == cfg.n_experts
+        assert m["config"]["page_size"] == cfg.page_size
+
+    def test_decode_step_arg_order(self, built):
+        """Rust feeds weights first (param_specs order) then runtime args —
+        the manifest must pin exactly that order."""
+        _, m = built
+        cfg = ModelConfig()
+        names = [a["name"] for a in m["executables"]["decode_step_b4"]["args"]]
+        want = [n for n, _ in param_specs(cfg)] + [
+            "ids", "pos", "page_table", "seq_lens", "kv_k", "kv_v"]
+        assert names == want
+
+    def test_batch_variants_differ_only_in_batch(self, built):
+        _, m = built
+        a1 = {a["name"]: a for a in m["executables"]["decode_step_b1"]["args"]}
+        a4 = {a["name"]: a for a in m["executables"]["decode_step_b4"]["args"]}
+        assert a1["ids"]["shape"] == [1] and a4["ids"]["shape"] == [4]
+        assert a1["kv_k"]["shape"] == a4["kv_k"]["shape"]
+
+
+class TestWeights:
+    def test_weights_bin_layout(self, built):
+        out, m = built
+        blob = (out / "weights.bin").read_bytes()
+        assert len(blob) == m["weights_nbytes"]
+        assert hashlib.sha256(blob).hexdigest() == m["weights_sha256"]
+        # offsets are contiguous and cover the blob
+        end = 0
+        for p in m["params"]:
+            assert p["offset"] == end
+            end += p["nbytes"]
+        assert end == len(blob)
+
+    def test_weights_match_init_params(self, built):
+        out, m = built
+        cfg = ModelConfig()
+        params = init_params(cfg, m["seed"])
+        blob = (out / "weights.bin").read_bytes()
+        for p in m["params"]:
+            arr = np.frombuffer(
+                blob, np.float32, count=p["nbytes"] // 4,
+                offset=p["offset"]).reshape(p["shape"])
+            np.testing.assert_array_equal(arr, np.asarray(params[p["name"]]))
+
+
+class TestHloText:
+    def test_hlo_text_parses_as_module(self, built):
+        out, m = built
+        for exe in m["executables"].values():
+            text = (out / exe["path"]).read_text()
+            assert text.startswith("HloModule"), exe["path"]
+            assert "ENTRY" in text
+
+    def test_hlo_has_no_mosaic_custom_call(self, built):
+        """interpret=True must have erased all Mosaic custom-calls — a
+        tpu_custom_call in the text would be unloadable on CPU PJRT."""
+        out, m = built
+        for exe in m["executables"].values():
+            text = (out / exe["path"]).read_text()
+            assert "tpu_custom_call" not in text, exe["path"]
+            assert "mosaic" not in text.lower(), exe["path"]
+
+    def test_decode_step_parameter_count(self, built):
+        out, m = built
+        text = (out / "decode_step_b4.hlo.txt").read_text()
+        n_args = len(m["executables"]["decode_step_b4"]["args"])
+        # every arg appears as a parameter( in the entry computation
+        assert text.count("parameter(") >= n_args

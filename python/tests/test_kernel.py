@@ -1,0 +1,204 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Fixed-shape unit tests plus hypothesis sweeps over shapes/dtypes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.moe_ffn import moe_ffn
+from compile.kernels.paged_attention import paged_attention
+
+RNG = np.random.default_rng(1234)
+
+
+def _moe_inputs(B, d, E, f, k, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(B, d)), dtype)
+    w1 = jnp.asarray(rng.normal(0, d ** -0.5, size=(E, d, f)), dtype)
+    w2 = jnp.asarray(rng.normal(0, f ** -0.5, size=(E, f, d)), dtype)
+    idx = jnp.asarray(rng.integers(0, E, size=(B, k)), jnp.int32)
+    w = rng.random((B, k)).astype(np.float32)
+    w = w / w.sum(axis=1, keepdims=True)
+    return x, w1, w2, idx, jnp.asarray(w, dtype)
+
+
+def _attn_inputs(B, H, hd, P, bs, mp, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), dtype)
+    kp = jnp.asarray(rng.normal(size=(P, bs, H, hd)), dtype)
+    vp = jnp.asarray(rng.normal(size=(P, bs, H, hd)), dtype)
+    # Each sequence gets mp distinct physical pages (disjoint across seqs
+    # requires P >= B*mp; allow sharing otherwise — both are legal).
+    if P >= B * mp:
+        pt = rng.permutation(P)[: B * mp].reshape(B, mp)
+    else:
+        pt = rng.integers(0, P, size=(B, mp))
+    sl = rng.integers(1, mp * bs + 1, size=(B,))
+    return q, kp, vp, jnp.asarray(pt, jnp.int32), jnp.asarray(sl, jnp.int32)
+
+
+class TestMoeFfn:
+    def test_matches_ref_basic(self):
+        args = _moe_inputs(4, 32, 8, 64, 2)
+        np.testing.assert_allclose(
+            moe_ffn(*args), ref.moe_ffn_ref(*args), rtol=2e-5, atol=2e-5)
+
+    def test_single_expert_all_weight(self):
+        """k=1 with weight 1.0 must equal a plain dense FFN of that expert."""
+        B, d, E, f = 4, 16, 4, 32
+        x, w1, w2, _, _ = _moe_inputs(B, d, E, f, 1)
+        idx = jnp.full((B, 1), 2, jnp.int32)
+        w = jnp.ones((B, 1), jnp.float32)
+        got = moe_ffn(x, w1, w2, idx, w)
+        h = x @ w1[2]
+        want = (h * jax.nn.sigmoid(h)) @ w2[2]
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_zero_weights_give_zero(self):
+        B, d, E, f, k = 3, 16, 4, 32, 2
+        x, w1, w2, idx, _ = _moe_inputs(B, d, E, f, k)
+        w = jnp.zeros((B, k), jnp.float32)
+        np.testing.assert_allclose(
+            moe_ffn(x, w1, w2, idx, w), jnp.zeros((B, d)), atol=1e-7)
+
+    def test_duplicate_expert_in_topk_sums_weights(self):
+        """Routing the same expert twice must behave like summed weight."""
+        B, d, E, f = 2, 16, 4, 32
+        x, w1, w2, _, _ = _moe_inputs(B, d, E, f, 2)
+        idx = jnp.full((B, 2), 1, jnp.int32)
+        w = jnp.asarray([[0.3, 0.7], [0.5, 0.5]], jnp.float32)
+        got = moe_ffn(x, w1, w2, idx, w)
+        idx1 = jnp.full((B, 1), 1, jnp.int32)
+        w1_ = jnp.ones((B, 1), jnp.float32)
+        want = moe_ffn(x, w1, w2, idx1, w1_)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_linearity_in_routing_weights(self):
+        B, d, E, f, k = 4, 16, 4, 32, 2
+        x, w1, w2, idx, w = _moe_inputs(B, d, E, f, k)
+        got2 = moe_ffn(x, w1, w2, idx, 2.0 * w)
+        want2 = 2.0 * moe_ffn(x, w1, w2, idx, w)
+        np.testing.assert_allclose(got2, want2, rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        B=st.integers(1, 8),
+        d=st.sampled_from([8, 16, 64, 128]),
+        E=st.sampled_from([2, 4, 8, 16]),
+        f=st.sampled_from([8, 32, 128]),
+        k=st.integers(1, 4),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_hypothesis_shape_sweep(self, B, d, E, f, k, seed):
+        k = min(k, E)
+        args = _moe_inputs(B, d, E, f, k, seed=seed)
+        np.testing.assert_allclose(
+            moe_ffn(*args), ref.moe_ffn_ref(*args), rtol=5e-5, atol=5e-5)
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16))
+    def test_hypothesis_bf16(self, seed):
+        args = _moe_inputs(4, 32, 4, 64, 2, dtype=jnp.bfloat16, seed=seed)
+        got = np.asarray(moe_ffn(*args), np.float32)
+        want = np.asarray(ref.moe_ffn_ref(*args), np.float32)
+        np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+class TestPagedAttention:
+    def test_matches_ref_basic(self):
+        args = _attn_inputs(4, 4, 16, 16, 8, 4)
+        np.testing.assert_allclose(
+            paged_attention(*args), ref.paged_attention_ref(*args),
+            rtol=2e-5, atol=2e-5)
+
+    def test_single_kv_entry_returns_its_value(self):
+        """seq_len=1 ⇒ softmax over one position ⇒ output == v[first]."""
+        B, H, hd, P, bs, mp = 2, 2, 8, 8, 4, 2
+        q, kp, vp, pt, _ = _attn_inputs(B, H, hd, P, bs, mp)
+        sl = jnp.ones((B,), jnp.int32)
+        got = paged_attention(q, kp, vp, pt, sl)
+        for b in range(B):
+            want = vp[pt[b, 0], 0]
+            np.testing.assert_allclose(got[b], want, rtol=1e-5, atol=1e-5)
+
+    def test_mask_excludes_stale_pages(self):
+        """Garbage beyond seq_len (stale/revoked data) must not leak in."""
+        B, H, hd, P, bs, mp = 2, 2, 8, 8, 4, 2
+        q, kp, vp, pt, _ = _attn_inputs(B, H, hd, P, bs, mp)
+        sl = jnp.asarray([3, 5], jnp.int32)
+        base = paged_attention(q, kp, vp, pt, sl)
+        # Poison everything at logical positions >= seq_len.
+        kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+        for b in range(B):
+            for t in range(int(sl[b]), mp * bs):
+                kp2[pt[b, t // bs], t % bs] = 1e4
+                vp2[pt[b, t // bs], t % bs] = -1e4
+        got = paged_attention(q, jnp.asarray(kp2), jnp.asarray(vp2), pt, sl)
+        np.testing.assert_allclose(got, base, rtol=1e-4, atol=1e-4)
+
+    def test_permutation_invariance_of_page_table(self):
+        """Physical page ids are arbitrary: relabeling pages (and moving
+        their contents) must not change the output."""
+        B, H, hd, P, bs, mp = 2, 2, 8, 8, 4, 2
+        q, kp, vp, pt, sl = _attn_inputs(B, H, hd, P, bs, mp)
+        perm = np.random.default_rng(7).permutation(P)
+        inv = np.empty(P, np.int64)
+        inv[perm] = np.arange(P)
+        kp2 = jnp.asarray(np.asarray(kp)[perm])
+        vp2 = jnp.asarray(np.asarray(vp)[perm])
+        pt2 = jnp.asarray(inv[np.asarray(pt)], jnp.int32)
+        got = paged_attention(q, kp2, vp2, pt2, sl)
+        want = paged_attention(q, kp, vp, pt, sl)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_softmax_weights_bound_output(self):
+        """|out| <= max |v| elementwise-ish (convex combination)."""
+        args = _attn_inputs(4, 4, 16, 16, 8, 4, seed=3)
+        out = np.asarray(paged_attention(*args))
+        assert np.all(np.abs(out) <= np.abs(np.asarray(args[2])).max() + 1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        B=st.integers(1, 6),
+        H=st.sampled_from([1, 2, 4]),
+        hd=st.sampled_from([4, 8, 32]),
+        bs=st.sampled_from([2, 4, 16]),
+        mp=st.integers(1, 6),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_hypothesis_shape_sweep(self, B, H, hd, bs, mp, seed):
+        P = max(B * mp, 8)
+        args = _attn_inputs(B, H, hd, P, bs, mp, seed=seed)
+        np.testing.assert_allclose(
+            paged_attention(*args), ref.paged_attention_ref(*args),
+            rtol=5e-5, atol=5e-5)
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16))
+    def test_hypothesis_bf16(self, seed):
+        args = _attn_inputs(2, 2, 8, 8, 4, 2, dtype=jnp.bfloat16, seed=seed)
+        got = np.asarray(paged_attention(*args), np.float32)
+        want = np.asarray(ref.paged_attention_ref(*args), np.float32)
+        np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+class TestMoeExpertBlock:
+    """expert_block chunking must agree with the all-at-once default and
+    the jnp oracle (the §Perf L1.1 knob)."""
+
+    @pytest.mark.parametrize("eb", [1, 2, 4, 8])
+    def test_expert_block_matches_ref(self, eb):
+        x, w1, w2, idx, w = _moe_inputs(B=5, d=32, E=8, f=16, k=2, seed=11)
+        got = moe_ffn(x, w1, w2, idx, w, expert_block=eb)
+        want = ref.moe_ffn_ref(x, w1, w2, idx, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_expert_block_must_divide(self):
+        x, w1, w2, idx, w = _moe_inputs(B=2, d=8, E=6, f=4, k=2)
+        with pytest.raises(ValueError, match="must divide"):
+            moe_ffn(x, w1, w2, idx, w, expert_block=4)

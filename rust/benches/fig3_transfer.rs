@@ -1,0 +1,70 @@
+//! Fig. 3 — GPU↔GPU vs GPU↔CPU transfer latency of memory chunks of
+//! different sizes, mapped to expert sizes of the Table-1 MoE models.
+//!
+//! Paper anchors: speedup ranges from 7.5× (Phi-tiny) to 9.5× (Mixtral).
+//!
+//! Run: `cargo bench --bench fig3_transfer`
+
+use harvest::memsim::{DeviceId, NodeSpec, SimNode};
+use harvest::moe::MOE_MODELS;
+use harvest::util::bench::Table;
+use harvest::util::{fmt_bytes, fmt_ns};
+
+fn measure(bytes: u64) -> (u64, u64) {
+    // Fresh node per measurement: link FIFO starts idle (matches the
+    // paper's isolated microbenchmark).
+    let mut node = SimNode::new(NodeSpec::h100x2());
+    let p2p = node.copy(DeviceId::Gpu(1), DeviceId::Gpu(0), bytes, None).duration();
+    let mut node = SimNode::new(NodeSpec::h100x2());
+    let h2d = node.copy(DeviceId::Host, DeviceId::Gpu(0), bytes, None).duration();
+    (p2p, h2d)
+}
+
+fn main() {
+    println!("Fig. 3 — GPU<->GPU vs GPU<->CPU transfer latency (virtual time)\n");
+    let table = Table::new(&[22, 12, 13, 13, 9, 10]);
+    table.row(&[
+        "CHUNK".into(),
+        "SIZE".into(),
+        "GPU<->GPU".into(),
+        "CPU<->GPU".into(),
+        "SPEEDUP".into(),
+        "PAPER".into(),
+    ]);
+    table.sep();
+
+    // Size sweep (the x-axis of Fig. 3).
+    for mib in [1u64, 2, 4, 8, 32, 64, 128, 256, 512] {
+        let bytes = mib << 20;
+        let (p2p, h2d) = measure(bytes);
+        table.row(&[
+            format!("{mib} MiB chunk"),
+            fmt_bytes(bytes),
+            fmt_ns(p2p),
+            fmt_ns(h2d),
+            format!("{:.1}x", h2d as f64 / p2p as f64),
+            "-".into(),
+        ]);
+    }
+    table.sep();
+
+    // Expert-size markers (the labelled points of Fig. 3).
+    for m in MOE_MODELS {
+        let bytes = m.expert_bytes();
+        let (p2p, h2d) = measure(bytes);
+        let paper = match m.name {
+            "Phi-tiny-MoE" => "7.5x",
+            "Mixtral-8x7B" => "9.5x",
+            _ => "-",
+        };
+        table.row(&[
+            format!("{} expert", m.name),
+            fmt_bytes(bytes),
+            fmt_ns(p2p),
+            fmt_ns(h2d),
+            format!("{:.1}x", h2d as f64 / p2p as f64),
+            paper.into(),
+        ]);
+    }
+    println!("\n(testbed model: 2x H100, 12-link NVLink4 vs PCIe 5.0 x16 — DESIGN.md §Calibration)");
+}

@@ -1,0 +1,63 @@
+//! Fig. 7 — KV-cache transfer latency for CPU vs peer-GPU reloads, for
+//! the §5.3 models (DeepSeek-V3, Mistral-Large-3-675B, Kimi-K2) at FP16
+//! across chunk sizes of 100–8000 KV cache entries.
+//!
+//! Paper anchors: Kimi-K2 speedup 5.42× (100 entries) → 5.68× (8000);
+//! Mistral-Large-3 ~3× → 5.65× over the same range.
+//!
+//! Run: `cargo bench --bench fig7_kv_latency`
+
+use harvest::kv::manager::RELOAD_CHUNK_BYTES;
+use harvest::memsim::{DeviceId, NodeSpec, SimNode};
+use harvest::moe::KV_MODELS;
+use harvest::util::bench::Table;
+use harvest::util::{fmt_bytes, fmt_ns};
+
+const ENTRIES: &[u64] = &[100, 500, 1000, 2000, 4000, 8000];
+
+/// One reload measurement: scattered block copies batched into ~4 MiB DMA
+/// descriptors, the same path `kv::OffloadingHandler` uses.
+fn reload(src: DeviceId, bytes: u64) -> u64 {
+    let mut node = SimNode::new(NodeSpec::h100x2());
+    let chunks = bytes.div_ceil(RELOAD_CHUNK_BYTES).max(1);
+    node.copy_scattered(src, DeviceId::Gpu(0), bytes, chunks, None).duration()
+}
+
+fn main() {
+    println!("Fig. 7 — KV cache transfer latency, CPU vs peer-GPU reloads (FP16)\n");
+    for m in KV_MODELS {
+        println!("{} ({} KiB per KV entry):", m.name, m.kv_bytes_per_token() / 1024);
+        let table = Table::new(&[10, 12, 13, 13, 9, 9]);
+        table.row(&[
+            "ENTRIES".into(),
+            "BYTES".into(),
+            "GPU RELOAD".into(),
+            "CPU RELOAD".into(),
+            "SPEEDUP".into(),
+            "PAPER".into(),
+        ]);
+        table.sep();
+        for &n in ENTRIES {
+            let bytes = n * m.kv_bytes_per_token();
+            let p2p = reload(DeviceId::Gpu(1), bytes);
+            let h2d = reload(DeviceId::Host, bytes);
+            let paper = match (m.name, n) {
+                ("Kimi-K2", 100) => "5.42x",
+                ("Kimi-K2", 8000) => "5.68x",
+                ("Mistral-Large-3-675B", 100) => "~3x",
+                ("Mistral-Large-3-675B", 8000) => "5.65x",
+                _ => "-",
+            };
+            table.row(&[
+                format!("{n}"),
+                fmt_bytes(bytes),
+                fmt_ns(p2p),
+                fmt_ns(h2d),
+                format!("{:.2}x", h2d as f64 / p2p as f64),
+                paper.into(),
+            ]);
+        }
+        println!();
+    }
+    println!("(reloads batched into {} DMA descriptors — kv::OffloadingHandler path)", fmt_bytes(RELOAD_CHUNK_BYTES));
+}

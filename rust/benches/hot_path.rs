@@ -1,0 +1,174 @@
+//! Hot-path wall-clock microbenchmarks — the criterion-style suite the
+//! §Perf optimization pass iterates on. Measures the L3 coordinator
+//! primitives (allocation, placement, fetch, KV access, scheduling,
+//! whole decode passes) and, when `artifacts/` is present, the real PJRT
+//! decode step (the L1/L2 hot path as seen from Rust).
+//!
+//! Run: `cargo bench --bench hot_path`
+
+use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime};
+use harvest::kv::{KvConfig, KvOffloadManager, SeqId};
+use harvest::memsim::{NodeSpec, SimNode};
+use harvest::moe::pipeline::OffloadTier;
+use harvest::moe::{find_kv_model, find_moe_model, CgoPipe, ExpertRebalancer, RouterSim};
+use harvest::runtime::{DecodeSlot, ModelRuntime};
+use harvest::server::{CompletelyFair, Scheduler};
+use harvest::trace::{ClusterTrace, TraceSpec};
+use harvest::util::bench::{sink, Bench};
+use std::path::Path;
+
+const MIB: u64 = 1 << 20;
+
+fn bench_harvest_alloc_free(b: &Bench) {
+    let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+    let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+    b.wall("harvest_alloc+free (64 MiB, 2-GPU)", || {
+        let h = hr.alloc(64 * MIB, hints).unwrap();
+        hr.free(h.id).unwrap();
+    });
+    // Placement cost grows with domain size: policy scans all peers.
+    let mut hr8 =
+        HarvestRuntime::new(SimNode::new(NodeSpec::nvlink_domain(8)), HarvestConfig::for_node(8));
+    b.wall("harvest_alloc+free (64 MiB, 8-GPU)", || {
+        let h = hr8.alloc(64 * MIB, hints).unwrap();
+        hr8.free(h.id).unwrap();
+    });
+}
+
+fn bench_alloc_under_fragmentation(b: &Bench) {
+    // 2000 standing allocations fragment the arena; measure steady-state
+    // alloc/free with a full policy view rebuild.
+    let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+    let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+    let standing: Vec<_> =
+        (0..2000).map(|i| hr.alloc((1 + i % 16) * MIB, hints).unwrap()).collect();
+    sink(&standing);
+    b.wall("harvest_alloc+free (2000 standing allocs)", || {
+        let h = hr.alloc(8 * MIB, hints).unwrap();
+        hr.free(h.id).unwrap();
+    });
+}
+
+fn bench_expert_fetch(b: &Bench) {
+    let model = find_moe_model("mixtral").unwrap();
+    let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+    let mut reb = ExpertRebalancer::new(model, 0, 0.5);
+    reb.rebalance(&mut hr, usize::MAX);
+    let peer_key = harvest::moe::ExpertKey { layer: 0, expert: reb.model.n_experts as u32 / 2 };
+    b.wall("fetch_expert (peer hit, Mixtral)", || {
+        sink(reb.fetch_expert(&mut hr, peer_key));
+    });
+    let host_key = harvest::moe::ExpertKey { layer: 0, expert: 0 };
+    b.wall("fetch_expert (local hit, Mixtral)", || {
+        sink(reb.fetch_expert(&mut hr, host_key));
+    });
+}
+
+fn bench_kv_ops(b: &Bench) {
+    let cfg = KvConfig {
+        model: find_kv_model("kimi").unwrap(),
+        block_tokens: 16,
+        local_capacity_blocks: 4096,
+        use_harvest: true,
+        host_backed_peer: false,
+    };
+    let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+    let mut kv = KvOffloadManager::new(cfg, 0);
+    b.wall("kv append_token (no eviction)", || {
+        sink(kv.append_token(&mut hr, SeqId(1)));
+    });
+    // tight pool: every append evicts (the churn path §6.3 stresses)
+    let tight = KvConfig { local_capacity_blocks: 8, ..cfg };
+    let mut hr2 =
+        HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+    let mut kv2 = KvOffloadManager::new(tight, 0);
+    for _ in 0..32 * 16 {
+        kv2.append_token(&mut hr2, SeqId(1));
+    }
+    b.wall("kv append_token (evicting)", || {
+        sink(kv2.append_token(&mut hr2, SeqId(1)));
+    });
+    b.wall("kv access_seq (hot, 4096-block pool)", || {
+        sink(kv.access_seq(&mut hr, SeqId(1)));
+    });
+}
+
+fn bench_router_and_scheduler(b: &Bench) {
+    let model = find_moe_model("qwen").unwrap();
+    let mut router = RouterSim::new(model, model.n_layers as usize, 1);
+    b.wall("route_microbatch (324 tok, Qwen 64-expert)", || {
+        sink(router.route_microbatch(0, 324));
+    });
+    let mut cf = CompletelyFair::new(1);
+    for i in 0..256 {
+        cf.admit(SeqId(i));
+    }
+    b.wall("CF select (256 runnable, 32 slots)", || {
+        sink(cf.select(32));
+    });
+}
+
+fn bench_decode_pass(b: &Bench) {
+    // Whole CGOPipe decode pass in virtual time — wall time here is the
+    // simulator's own overhead (the L3 inner loop).
+    let model = find_moe_model("qwen").unwrap();
+    let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+    let pipe = CgoPipe::paper_setup(model);
+    let mut router = RouterSim::new(model, model.n_layers as usize, 2);
+    let mut reb = ExpertRebalancer::new(model, 0, 0.5);
+    reb.rebalance(&mut hr, usize::MAX);
+    b.wall("CGOPipe decode_pass (Qwen, 4536 tok)", || {
+        sink(pipe.decode_pass(&mut router, &mut reb, &mut hr, OffloadTier::Harvest));
+    });
+}
+
+fn bench_trace(b: &Bench) {
+    let spec = TraceSpec { machines: 200, snapshots_per_machine: 64, ..Default::default() };
+    b.wall("trace synthesize (12.8k snapshots)", || {
+        sink(ClusterTrace::synthesize(spec.clone()));
+    });
+}
+
+fn bench_pjrt_decode(b: &Bench) {
+    let dir = std::env::var("HARVEST_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !Path::new(&dir).join("manifest.json").exists() {
+        println!("(skipping PJRT decode bench: no {dir}/manifest.json — run `make artifacts`)");
+        return;
+    }
+    let mut rt = match ModelRuntime::load(Path::new(&dir)) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("(skipping PJRT decode bench: {e:#})");
+            return;
+        }
+    };
+    let cfg = rt.config().clone();
+    for &bsz in &rt.batch_variants() {
+        let slots: Vec<DecodeSlot> = (0..bsz)
+            .map(|i| DecodeSlot {
+                token: (i % cfg.vocab) as i32,
+                pos: 0,
+                page_table: (0..cfg.max_pages_per_seq).map(|p| p as i32).collect(),
+            })
+            .collect();
+        let small = Bench::new(2, 10);
+        small.wall(&format!("PJRT decode step (batch {bsz})"), || {
+            sink(rt.decode(&slots).expect("decode"));
+        });
+        rt.reset_kv().unwrap();
+    }
+}
+
+fn main() {
+    println!("== Harvest hot-path wall-clock benches ==\n");
+    Bench::header();
+    let b = Bench::default();
+    bench_harvest_alloc_free(&b);
+    bench_alloc_under_fragmentation(&b);
+    bench_expert_fetch(&b);
+    bench_kv_ops(&b);
+    bench_router_and_scheduler(&b);
+    bench_decode_pass(&b);
+    bench_trace(&b);
+    bench_pjrt_decode(&b);
+}

@@ -1,0 +1,214 @@
+//! Future-deployment studies the paper motivates but defers:
+//!
+//! * §2.2 — "future deployments will increase the size of the NVLink
+//!   domain": domain-size sweep of harvestable capacity + MoE speedup.
+//! * §7 — NVLink congestion from concurrent model-parallel collectives.
+//! * §8 — topology-aware placement (full-mesh vs NVSwitch vs ring) and
+//!   CXL-attached memory as an intermediate tier.
+//!
+//! Run: `cargo bench --bench topology`
+
+use harvest::harvest::{
+    BestFit, HarvestConfig, HarvestRuntime, LocalityAware, PlacementPolicy,
+};
+use harvest::memsim::{
+    CollectivePattern, CollectiveTraffic, DeviceId, NodeSpec, SimNode, TenantLoad,
+};
+use harvest::moe::pipeline::OffloadTier;
+use harvest::moe::{find_moe_model, CgoPipe, ExpertRebalancer, RouterSim};
+use harvest::util::bench::Table;
+use harvest::util::{fmt_bytes, fmt_ns};
+
+const GIB: u64 = 1 << 30;
+const MIB: u64 = 1 << 20;
+
+// ------------------------------------------------------------------
+// §2.2 domain-size sweep
+// ------------------------------------------------------------------
+
+fn domain_size_sweep() {
+    println!("§2.2 — NVLink domain size vs harvestable capacity (busy peers, 74/80 GiB used)");
+    let table = Table::new(&[10, 16, 12, 12]);
+    table.row(&["GPUS".into(), "HARVESTABLE".into(), "EXPERTS".into(), "TOK/S".into()]);
+    table.sep();
+    let model = find_moe_model("mixtral").unwrap();
+    for n in [2usize, 4, 8, 16, 32] {
+        let mut node = SimNode::new(NodeSpec::nvswitch_domain(n));
+        for p in 1..n {
+            node.set_tenant_load(p, TenantLoad::constant(80 * GIB, 74 * GIB));
+        }
+        let mut hr = HarvestRuntime::new(node, HarvestConfig::for_node(n));
+        let mut reb = ExpertRebalancer::new(model, 0, 1.0);
+        let promoted = reb.rebalance(&mut hr, usize::MAX);
+        let harvestable: u64 = (1..n).map(|p| hr.node.harvestable_now(p)).sum::<u64>()
+            + promoted as u64 * model.expert_bytes();
+        let pipe = CgoPipe::paper_setup(model);
+        let mut router = RouterSim::new(model, model.n_layers as usize, 3);
+        let t = pipe
+            .decode_many(&mut router, &mut reb, &mut hr, OffloadTier::Harvest, 2)
+            .tokens_per_sec();
+        table.row(&[
+            format!("{n}"),
+            fmt_bytes(harvestable),
+            format!("{promoted}/{}", model.n_layers * model.n_experts),
+            format!("{t:.0}"),
+        ]);
+    }
+    println!("(larger domains -> more spare HBM in reach -> more of the model cached)\n");
+}
+
+// ------------------------------------------------------------------
+// §8 fabric comparison + topology-aware placement
+// ------------------------------------------------------------------
+
+fn fabric_comparison() {
+    println!("§8 — fabric kind x placement policy (8-GPU domain, Mixtral expert fetches)");
+    let table = Table::new(&[12, 14, 16, 14]);
+    table.row(&[
+        "FABRIC".into(),
+        "POLICY".into(),
+        "MEAN FETCH".into(),
+        "vs PCIe".into(),
+    ]);
+    table.sep();
+    let model = find_moe_model("mixtral").unwrap();
+    let specs: [(&str, NodeSpec); 3] = [
+        ("full-mesh", NodeSpec::nvlink_domain(8)),
+        ("nvswitch", NodeSpec::nvswitch_domain(8)),
+        ("ring", NodeSpec::ring_domain(8)),
+    ];
+    for (fname, spec) in specs {
+        let policies: Vec<(&str, Box<dyn PlacementPolicy>)> =
+            vec![("best-fit", Box::new(BestFit)), ("locality", Box::new(LocalityAware))];
+        for (pname, policy) in policies {
+            let mut node = SimNode::new(spec.clone());
+            // distant peers are tight (small leftover segments attract
+            // best-fit); near peers are empty. Topology-blind best-fit
+            // therefore places on far peers, which costs hops on a ring.
+            for far in [3usize, 4, 5] {
+                node.set_tenant_load(far, TenantLoad::constant(80 * GIB, 70 * GIB));
+            }
+            let mut hr = HarvestRuntime::with_policy(node, HarvestConfig::for_node(8), policy);
+            let mut reb = ExpertRebalancer::new(model, 0, 1.0);
+            reb.rebalance(&mut hr, 64);
+            // measure the serve path: fetch every peer-cached expert once
+            let keys: Vec<_> = reb.residency().peer_cached().map(|(k, _, _)| k).collect();
+            let mut total: u64 = 0;
+            let mut count = 0u64;
+            for key in keys {
+                let (_, ev) = reb.fetch_expert(&mut hr, key);
+                if let Some(ev) = ev {
+                    total += ev.duration();
+                    count += 1;
+                }
+            }
+            let mean = if count > 0 { total / count } else { 0 };
+            let pcie = hr
+                .node
+                .topo
+                .estimate(DeviceId::Host, DeviceId::Gpu(0), model.expert_bytes())
+                .unwrap();
+            table.row(&[
+                fname.into(),
+                pname.into(),
+                fmt_ns(mean),
+                format!("{:.1}x faster", pcie as f64 / mean.max(1) as f64),
+            ]);
+        }
+    }
+    println!("(locality-aware placement matters once the fabric is not a full mesh)\n");
+}
+
+// ------------------------------------------------------------------
+// §7 collective congestion
+// ------------------------------------------------------------------
+
+fn collective_congestion() {
+    println!("§7 — NVLink congestion from a concurrent tensor-parallel collective");
+    let table = Table::new(&[26, 14, 12]);
+    table.row(&["BACKGROUND TRAFFIC".into(), "MEAN FETCH".into(), "vs QUIET".into()]);
+    table.sep();
+    let model = find_moe_model("mixtral").unwrap();
+    // Duty cycle of the background allreduce on the shared bridge
+    // (Mixtral expert = 336 MiB ≈ 0.8 ms on an idle link):
+    //   64 MiB/ms ≈ 15%, 192 MiB/ms ≈ 45%, 320 MiB/ms ≈ 75%.
+    // Beyond 100% duty the FIFO queue diverges — not a steady state.
+    let loads: [(&str, Option<(u64, u64)>); 4] = [
+        ("quiet", None),
+        ("allreduce 64 MiB / 1 ms (15%)", Some((64 * MIB, 1_000_000))),
+        ("allreduce 192 MiB / 1 ms (45%)", Some((192 * MIB, 1_000_000))),
+        ("allreduce 320 MiB / 1 ms (75%)", Some((320 * MIB, 1_000_000))),
+    ];
+    // A pipeline issues one expert fetch every 2 ms of decode compute.
+    const SPACING: u64 = 2_000_000;
+    let mut quiet_mean = 0u64;
+    for (name, load) in loads {
+        let mut hr =
+            HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+        let mut reb = ExpertRebalancer::new(model, 0, 1.0);
+        reb.rebalance(&mut hr, 32);
+        let keys: Vec<_> = reb.residency().peer_cached().map(|(k, _, _)| k).collect();
+        let mut coll = load.map(|(bytes, period)| {
+            CollectiveTraffic::new(CollectivePattern::RingAllReduce, vec![0, 1], bytes, period)
+        });
+        let mut total = 0u64;
+        let mut n = 0u64;
+        for (i, key) in keys.into_iter().enumerate() {
+            let issue = i as u64 * SPACING;
+            hr.node.clock.advance_to(hr.node.clock.now().max(issue));
+            // Inject exactly the collective steps that have *started* by
+            // the fetch's issue time (the FIFO link has no reordering, so
+            // injecting future steps first would be unfair to the fetch).
+            if let Some(c) = coll.as_mut() {
+                c.inject_until(&mut hr.node.topo, issue + 1);
+            }
+            let (_, ev) = reb.fetch_expert(&mut hr, key);
+            if let Some(ev) = ev {
+                // latency as the pipeline sees it: queueing + transfer
+                total += ev.end - issue;
+                n += 1;
+            }
+        }
+        let mean = total / n.max(1);
+        if load.is_none() {
+            quiet_mean = mean;
+        }
+        table.row(&[
+            name.into(),
+            fmt_ns(mean),
+            format!("{:.2}x", mean as f64 / quiet_mean.max(1) as f64),
+        ]);
+    }
+    println!("(heavy collectives queue ahead of paging and erode the peer tier's advantage)\n");
+}
+
+// ------------------------------------------------------------------
+// §8 CXL tier
+// ------------------------------------------------------------------
+
+fn cxl_tier() {
+    println!("§8 — heterogeneous access costs: local HBM / peer NVLink / CXL / host PCIe");
+    let table = Table::new(&[22, 14, 10]);
+    table.row(&["TIER".into(), "336 MiB FETCH".into(), "RATIO".into()]);
+    table.sep();
+    let bytes = find_moe_model("mixtral").unwrap().expert_bytes();
+    let mut node = SimNode::new(NodeSpec::h100x2());
+    let peer = node.copy(DeviceId::Gpu(1), DeviceId::Gpu(0), bytes, None).duration();
+    let mut cxl_node = SimNode::new(NodeSpec::h100x2().with_cxl_host());
+    let cxl = cxl_node.copy(DeviceId::Host, DeviceId::Gpu(0), bytes, None).duration();
+    let mut host_node = SimNode::new(NodeSpec::h100x2());
+    let host = host_node.copy(DeviceId::Host, DeviceId::Gpu(0), bytes, None).duration();
+    for (name, ns) in [("peer HBM (NVLink)", peer), ("CXL-attached", cxl), ("host DRAM (PCIe)", host)]
+    {
+        table.row(&[name.into(), fmt_ns(ns), format!("{:.1}x", ns as f64 / peer as f64)]);
+    }
+    println!("(a NUMA-like pool: policy-driven placement across tiers, peer HBM fastest)\n");
+}
+
+fn main() {
+    println!("== Harvest topology / future-deployment studies ==\n");
+    domain_size_sweep();
+    fabric_comparison();
+    collective_congestion();
+    cxl_tier();
+}

@@ -1,0 +1,818 @@
+//! Config system: a TOML-subset parser plus the typed deployment
+//! configuration the launcher (`rust/src/main.rs`) consumes.
+//!
+//! The image's offline crate set has no `toml`/`serde`, so — like
+//! [`crate::util::json`] — the parser is hand-rolled. It supports the
+//! subset real deployments of this repo need:
+//!
+//! * `[section]` and `[section.sub]` headers
+//! * `key = value` with string / integer / float / bool / array values
+//! * `#` comments, blank lines
+//!
+//! A [`DeploymentConfig`] describes a full launch: node shape, harvest
+//! controller settings, the serving workload, and which paper workload
+//! (MoE expert offload or KV-cache offload) to run. `presets()` returns
+//! the configurations used by the examples and benches, and every preset
+//! round-trips through the parser (tested below).
+
+use crate::harvest::{HarvestConfig, MigConfig, VictimPolicy};
+use crate::kv::KvConfig;
+use crate::memsim::{FabricKind, GpuSpec, NodeSpec};
+use crate::moe::{find_kv_model, find_moe_model};
+use crate::server::WorkloadSpec;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+const GIB: u64 = 1 << 30;
+
+// ---------------------------------------------------------------------
+// TOML-subset value + parser
+// ---------------------------------------------------------------------
+
+/// A parsed TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        let i = self.as_i64()?;
+        u64::try_from(i).map_err(|_| anyhow!("expected non-negative integer, got {i}"))
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_u64()? as usize)
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Ok(a),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+}
+
+/// A parsed TOML-subset document: dotted-path key → value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    /// Parse `text`. Errors carry the 1-based line number.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section header", ln + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", ln + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", ln + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", ln + 1);
+            }
+            let value = parse_value(value.trim())
+                .with_context(|| format!("line {}: bad value for `{key}`", ln + 1))?;
+            let path =
+                if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            if doc.entries.insert(path.clone(), value).is_some() {
+                bail!("line {}: duplicate key `{path}`", ln + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn require(&self, path: &str) -> Result<&TomlValue> {
+        self.get(path).ok_or_else(|| anyhow!("missing config key `{path}`"))
+    }
+
+    /// All keys under `section.` (for validation / introspection).
+    pub fn section_keys<'a>(&'a self, section: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let prefix = format!("{section}.");
+        self.entries.keys().filter(move |k| k.starts_with(&prefix)).map(|k| k.as_str())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> + '_ {
+        self.entries.keys().map(|k| k.as_str())
+    }
+
+    fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path)
+            .and_then(|v| v.as_str().ok())
+            .map(str::to_string)
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    fn u64_or(&self, path: &str, default: u64) -> Result<u64> {
+        match self.get(path) {
+            Some(v) => v.as_u64().with_context(|| format!("key `{path}`")),
+            None => Ok(default),
+        }
+    }
+
+    fn usize_or(&self, path: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(path, default as u64)? as usize)
+    }
+
+    fn f64_or(&self, path: &str, default: f64) -> Result<f64> {
+        match self.get(path) {
+            Some(v) => v.as_f64().with_context(|| format!("key `{path}`")),
+            None => Ok(default),
+        }
+    }
+
+    fn bool_or(&self, path: &str, default: bool) -> Result<bool> {
+        match self.get(path) {
+            Some(v) => v.as_bool().with_context(|| format!("key `{path}`")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a string literal.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        if inner.contains('"') {
+            bail!("embedded quote in string");
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items = split_top_level(inner)?
+            .into_iter()
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    // numbers: underscores allowed as digit separators, like real TOML
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        if let Ok(f) = cleaned.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    } else if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    bail!("cannot parse value `{s}`")
+}
+
+/// Split a comma-separated list, respecting nested `[...]` and strings.
+fn split_top_level(s: &str) -> Result<Vec<&str>> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => {
+                depth = depth.checked_sub(1).ok_or_else(|| anyhow!("unbalanced `]`"))?
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str || depth != 0 {
+        bail!("unbalanced array or string");
+    }
+    out.push(&s[start..]);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Typed deployment config
+// ---------------------------------------------------------------------
+
+/// Which paper workload a launch runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// §4: MoE expert offload through the CGOPipe-style pipeline.
+    MoeOffload,
+    /// §5: KV-cache offload through the SimEngine decode loop.
+    KvOffload,
+    /// End-to-end: real PJRT compute on the AOT tiny model.
+    RealServe,
+}
+
+impl WorkloadKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "moe" | "moe-offload" => Ok(WorkloadKind::MoeOffload),
+            "kv" | "kv-offload" => Ok(WorkloadKind::KvOffload),
+            "real" | "serve" | "real-serve" => Ok(WorkloadKind::RealServe),
+            other => bail!("unknown workload kind `{other}` (moe | kv | real)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::MoeOffload => "moe",
+            WorkloadKind::KvOffload => "kv",
+            WorkloadKind::RealServe => "real",
+        }
+    }
+}
+
+/// A full launch description.
+#[derive(Debug, Clone)]
+pub struct DeploymentConfig {
+    pub name: String,
+    pub workload: WorkloadKind,
+    /// Node shape.
+    pub n_gpus: usize,
+    pub hbm_gib: u64,
+    pub fabric: FabricKind,
+    /// Harvest controller.
+    pub harvest_enabled: bool,
+    pub victim_policy: VictimPolicy,
+    pub reserve_gib: u64,
+    pub mig_cache_gib: Option<u64>,
+    /// MoE workload parameters (§4.4 defaults).
+    pub moe_model: String,
+    pub offload_fraction: f64,
+    pub micro_batch_tokens: usize,
+    pub n_micro_batches: usize,
+    pub max_new_tokens: u32,
+    /// KV workload parameters (§5.3 defaults).
+    pub kv_model: String,
+    pub block_tokens: u32,
+    pub local_capacity_blocks: usize,
+    pub decode_slots: usize,
+    pub max_running: usize,
+    pub scheduler: String,
+    pub quantum: u32,
+    /// Request workload.
+    pub n_requests: usize,
+    pub mean_prompt_tokens: f64,
+    pub shared_prefix_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for DeploymentConfig {
+    fn default() -> Self {
+        Self {
+            name: "default".into(),
+            workload: WorkloadKind::MoeOffload,
+            n_gpus: 2,
+            hbm_gib: 80,
+            fabric: FabricKind::FullMesh,
+            harvest_enabled: true,
+            victim_policy: VictimPolicy::Lifo,
+            reserve_gib: 0,
+            mig_cache_gib: None,
+            moe_model: "Qwen2-MoE".into(),
+            offload_fraction: 0.5,
+            micro_batch_tokens: 324,
+            n_micro_batches: 14,
+            max_new_tokens: 32,
+            kv_model: "Kimi-K2".into(),
+            block_tokens: 16,
+            local_capacity_blocks: 2048,
+            decode_slots: 32,
+            max_running: 64,
+            scheduler: "fcfs".into(),
+            quantum: 4,
+            n_requests: 64,
+            mean_prompt_tokens: 180.0,
+            shared_prefix_fraction: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+fn fabric_from_str(s: &str) -> Result<FabricKind> {
+    match s {
+        "mesh" | "full-mesh" => Ok(FabricKind::FullMesh),
+        "nvswitch" => Ok(FabricKind::NvSwitch),
+        "ring" => Ok(FabricKind::Ring),
+        other => bail!("unknown fabric `{other}` (mesh | nvswitch | ring)"),
+    }
+}
+
+fn fabric_name(f: FabricKind) -> &'static str {
+    match f {
+        FabricKind::FullMesh => "mesh",
+        FabricKind::NvSwitch => "nvswitch",
+        FabricKind::Ring => "ring",
+    }
+}
+
+fn victim_policy_from_str(s: &str) -> Result<VictimPolicy> {
+    match s {
+        "lifo" => Ok(VictimPolicy::Lifo),
+        "fifo" => Ok(VictimPolicy::Fifo),
+        "largest" | "largest-first" => Ok(VictimPolicy::LargestFirst),
+        "smallest" | "smallest-first" => Ok(VictimPolicy::SmallestFirst),
+        other => bail!("unknown victim policy `{other}`"),
+    }
+}
+
+fn victim_policy_name(v: VictimPolicy) -> &'static str {
+    match v {
+        VictimPolicy::Lifo => "lifo",
+        VictimPolicy::Fifo => "fifo",
+        VictimPolicy::LargestFirst => "largest",
+        VictimPolicy::SmallestFirst => "smallest",
+    }
+}
+
+impl DeploymentConfig {
+    /// Parse from TOML-subset text. Unknown keys are rejected so typos
+    /// fail loudly rather than silently falling back to defaults.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        const KNOWN: &[&str] = &[
+            "name",
+            "workload",
+            "node.gpus",
+            "node.hbm_gib",
+            "node.fabric",
+            "harvest.enabled",
+            "harvest.victim_policy",
+            "harvest.reserve_gib",
+            "harvest.mig_cache_gib",
+            "moe.model",
+            "moe.offload_fraction",
+            "moe.micro_batch_tokens",
+            "moe.n_micro_batches",
+            "moe.max_new_tokens",
+            "kv.model",
+            "kv.block_tokens",
+            "kv.local_capacity_blocks",
+            "server.decode_slots",
+            "server.max_running",
+            "server.scheduler",
+            "server.quantum",
+            "requests.n",
+            "requests.mean_prompt_tokens",
+            "requests.shared_prefix_fraction",
+            "requests.seed",
+        ];
+        for key in doc.keys() {
+            if !KNOWN.contains(&key) {
+                bail!("unknown config key `{key}`");
+            }
+        }
+        let d = DeploymentConfig::default();
+        let cfg = DeploymentConfig {
+            name: doc.str_or("name", &d.name),
+            workload: WorkloadKind::parse(&doc.str_or("workload", d.workload.name()))?,
+            n_gpus: doc.usize_or("node.gpus", d.n_gpus)?,
+            hbm_gib: doc.u64_or("node.hbm_gib", d.hbm_gib)?,
+            fabric: fabric_from_str(&doc.str_or("node.fabric", fabric_name(d.fabric)))?,
+            harvest_enabled: doc.bool_or("harvest.enabled", d.harvest_enabled)?,
+            victim_policy: victim_policy_from_str(
+                &doc.str_or("harvest.victim_policy", victim_policy_name(d.victim_policy)),
+            )?,
+            reserve_gib: doc.u64_or("harvest.reserve_gib", d.reserve_gib)?,
+            mig_cache_gib: match doc.get("harvest.mig_cache_gib") {
+                Some(v) => Some(v.as_u64().context("key `harvest.mig_cache_gib`")?),
+                None => None,
+            },
+            moe_model: doc.str_or("moe.model", &d.moe_model),
+            offload_fraction: doc.f64_or("moe.offload_fraction", d.offload_fraction)?,
+            micro_batch_tokens: doc.usize_or("moe.micro_batch_tokens", d.micro_batch_tokens)?,
+            n_micro_batches: doc.usize_or("moe.n_micro_batches", d.n_micro_batches)?,
+            max_new_tokens: doc.u64_or("moe.max_new_tokens", d.max_new_tokens as u64)? as u32,
+            kv_model: doc.str_or("kv.model", &d.kv_model),
+            block_tokens: doc.u64_or("kv.block_tokens", d.block_tokens as u64)? as u32,
+            local_capacity_blocks: doc
+                .usize_or("kv.local_capacity_blocks", d.local_capacity_blocks)?,
+            decode_slots: doc.usize_or("server.decode_slots", d.decode_slots)?,
+            max_running: doc.usize_or("server.max_running", d.max_running)?,
+            scheduler: doc.str_or("server.scheduler", &d.scheduler),
+            quantum: doc.u64_or("server.quantum", d.quantum as u64)? as u32,
+            n_requests: doc.usize_or("requests.n", d.n_requests)?,
+            mean_prompt_tokens: doc.f64_or("requests.mean_prompt_tokens", d.mean_prompt_tokens)?,
+            shared_prefix_fraction: doc
+                .f64_or("requests.shared_prefix_fraction", d.shared_prefix_fraction)?,
+            seed: doc.u64_or("requests.seed", d.seed)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&text).with_context(|| format!("parsing config {}", path.display()))
+    }
+
+    /// Sanity-check parameter ranges and model names.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_gpus < 2 {
+            bail!("node.gpus must be >= 2 (need at least one peer)");
+        }
+        if self.hbm_gib == 0 {
+            bail!("node.hbm_gib must be > 0");
+        }
+        if !(0.0..=1.0).contains(&self.offload_fraction) {
+            bail!("moe.offload_fraction must be in [0, 1]");
+        }
+        if !(0.0..=1.0).contains(&self.shared_prefix_fraction) {
+            bail!("requests.shared_prefix_fraction must be in [0, 1]");
+        }
+        if self.workload == WorkloadKind::MoeOffload && find_moe_model(&self.moe_model).is_none() {
+            bail!("unknown MoE model `{}` (see Table 1 registry)", self.moe_model);
+        }
+        if self.workload == WorkloadKind::KvOffload && find_kv_model(&self.kv_model).is_none() {
+            bail!("unknown KV model `{}` (see §5.3 registry)", self.kv_model);
+        }
+        if !matches!(self.scheduler.as_str(), "fcfs" | "cf" | "completely-fair") {
+            bail!("unknown scheduler `{}` (fcfs | cf)", self.scheduler);
+        }
+        if self.decode_slots == 0 || self.max_running == 0 {
+            bail!("server.decode_slots and server.max_running must be > 0");
+        }
+        Ok(())
+    }
+
+    /// Serialize back to TOML-subset text (round-trips through
+    /// [`Self::from_toml`]).
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("name = \"{}\"\n", self.name));
+        s.push_str(&format!("workload = \"{}\"\n\n", self.workload.name()));
+        s.push_str("[node]\n");
+        s.push_str(&format!("gpus = {}\n", self.n_gpus));
+        s.push_str(&format!("hbm_gib = {}\n", self.hbm_gib));
+        s.push_str(&format!("fabric = \"{}\"\n\n", fabric_name(self.fabric)));
+        s.push_str("[harvest]\n");
+        s.push_str(&format!("enabled = {}\n", self.harvest_enabled));
+        s.push_str(&format!("victim_policy = \"{}\"\n", victim_policy_name(self.victim_policy)));
+        s.push_str(&format!("reserve_gib = {}\n", self.reserve_gib));
+        if let Some(gib) = self.mig_cache_gib {
+            s.push_str(&format!("mig_cache_gib = {gib}\n"));
+        }
+        s.push('\n');
+        s.push_str("[moe]\n");
+        s.push_str(&format!("model = \"{}\"\n", self.moe_model));
+        s.push_str(&format!("offload_fraction = {:?}\n", self.offload_fraction));
+        s.push_str(&format!("micro_batch_tokens = {}\n", self.micro_batch_tokens));
+        s.push_str(&format!("n_micro_batches = {}\n", self.n_micro_batches));
+        s.push_str(&format!("max_new_tokens = {}\n\n", self.max_new_tokens));
+        s.push_str("[kv]\n");
+        s.push_str(&format!("model = \"{}\"\n", self.kv_model));
+        s.push_str(&format!("block_tokens = {}\n", self.block_tokens));
+        s.push_str(&format!("local_capacity_blocks = {}\n\n", self.local_capacity_blocks));
+        s.push_str("[server]\n");
+        s.push_str(&format!("decode_slots = {}\n", self.decode_slots));
+        s.push_str(&format!("max_running = {}\n", self.max_running));
+        s.push_str(&format!("scheduler = \"{}\"\n", self.scheduler));
+        s.push_str(&format!("quantum = {}\n\n", self.quantum));
+        s.push_str("[requests]\n");
+        s.push_str(&format!("n = {}\n", self.n_requests));
+        s.push_str(&format!("mean_prompt_tokens = {:?}\n", self.mean_prompt_tokens));
+        s.push_str(&format!("shared_prefix_fraction = {:?}\n", self.shared_prefix_fraction));
+        s.push_str(&format!("seed = {}\n", self.seed));
+        s
+    }
+
+    // -- Materialization into the runtime types --
+
+    pub fn node_spec(&self) -> NodeSpec {
+        let mut spec = NodeSpec::nvlink_domain(self.n_gpus);
+        spec.fabric = self.fabric;
+        for g in &mut spec.gpus {
+            *g = GpuSpec { hbm_bytes: self.hbm_gib * GIB, ..GpuSpec::default() };
+        }
+        spec
+    }
+
+    pub fn harvest_config(&self) -> HarvestConfig {
+        let mut cfg = HarvestConfig::for_node(self.n_gpus);
+        cfg.victim_policy = self.victim_policy;
+        cfg.reserve_bytes = self.reserve_gib * GIB;
+        if let Some(gib) = self.mig_cache_gib {
+            // Partition every potential peer; the compute GPU's entry is
+            // ignored by the controller (never selected as a peer).
+            for m in &mut cfg.mig {
+                *m = MigConfig::CachePartition { bytes: gib * GIB };
+            }
+        }
+        cfg
+    }
+
+    pub fn kv_config(&self) -> Result<KvConfig> {
+        let model = find_kv_model(&self.kv_model)
+            .ok_or_else(|| anyhow!("unknown KV model `{}`", self.kv_model))?;
+        Ok(KvConfig {
+            model,
+            block_tokens: self.block_tokens,
+            local_capacity_blocks: self.local_capacity_blocks,
+            use_harvest: self.harvest_enabled,
+            host_backed_peer: false,
+        })
+    }
+
+    pub fn workload_spec(&self) -> WorkloadSpec {
+        WorkloadSpec {
+            n_requests: self.n_requests,
+            mean_prompt_tokens: self.mean_prompt_tokens,
+            max_new_tokens: self.max_new_tokens,
+            shared_prefix_fraction: self.shared_prefix_fraction,
+            shared_prefix_tokens: if self.shared_prefix_fraction > 0.0 { 64 } else { 0 },
+            seed: self.seed,
+            ..WorkloadSpec::default()
+        }
+    }
+}
+
+/// Named presets used by examples, benches and the CLI (`--preset`).
+pub fn presets() -> Vec<DeploymentConfig> {
+    let base = DeploymentConfig::default();
+    vec![
+        // The paper's §4.4 MoE setup: 2× H100, half the experts offloaded.
+        DeploymentConfig {
+            name: "paper-moe".into(),
+            workload: WorkloadKind::MoeOffload,
+            moe_model: "Mixtral-8x7B".into(),
+            ..base.clone()
+        },
+        // The paper's §5.3 KV setup.
+        DeploymentConfig {
+            name: "paper-kv".into(),
+            workload: WorkloadKind::KvOffload,
+            kv_model: "Kimi-K2".into(),
+            ..base.clone()
+        },
+        // §6.3 fair decoding: CF scheduler, tight KV budget.
+        DeploymentConfig {
+            name: "fair-decode".into(),
+            workload: WorkloadKind::KvOffload,
+            scheduler: "cf".into(),
+            quantum: 2,
+            local_capacity_blocks: 512,
+            shared_prefix_fraction: 0.5,
+            ..base.clone()
+        },
+        // CPU-offload baseline (vanilla vLLM / CGOPipe-to-host).
+        DeploymentConfig { name: "baseline-host".into(), harvest_enabled: false, ..base.clone() },
+        // Future-deployment sweep: an 8-GPU NVSwitch domain.
+        DeploymentConfig {
+            name: "nvswitch-8".into(),
+            n_gpus: 8,
+            fabric: FabricKind::NvSwitch,
+            moe_model: "Phi-3.5-MoE".into(),
+            ..base.clone()
+        },
+        // End-to-end real-compute serve on the AOT tiny model.
+        DeploymentConfig {
+            name: "real-serve".into(),
+            workload: WorkloadKind::RealServe,
+            n_requests: 16,
+            max_new_tokens: 16,
+            ..base
+        },
+    ]
+}
+
+/// Look up a preset by name.
+pub fn find_preset(name: &str) -> Option<DeploymentConfig> {
+    presets().into_iter().find(|p| p.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = TomlDoc::parse(
+            r#"
+            name = "x"            # comment
+            n = 42
+            ratio = 0.5
+            big = 1_000_000
+            on = true
+            [sec]
+            key = "v"
+            [sec.sub]
+            deep = -3
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str().unwrap(), "x");
+        assert_eq!(doc.get("n").unwrap().as_i64().unwrap(), 42);
+        assert_eq!(doc.get("ratio").unwrap().as_f64().unwrap(), 0.5);
+        assert_eq!(doc.get("big").unwrap().as_i64().unwrap(), 1_000_000);
+        assert!(doc.get("on").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("sec.key").unwrap().as_str().unwrap(), "v");
+        assert_eq!(doc.get("sec.sub.deep").unwrap().as_i64().unwrap(), -3);
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = TomlDoc::parse("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\nempty = []").unwrap();
+        let xs = doc.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs.iter().map(|v| v.as_i64().unwrap()).collect::<Vec<_>>(), vec![1, 2, 3]);
+        let ys = doc.get("ys").unwrap().as_array().unwrap();
+        assert_eq!(ys[1].as_str().unwrap(), "b");
+        assert!(doc.get("empty").unwrap().as_array().unwrap().is_empty());
+    }
+
+    #[test]
+    fn comment_inside_string_is_kept() {
+        let doc = TomlDoc::parse("k = \"a # b\"").unwrap();
+        assert_eq!(doc.get("k").unwrap().as_str().unwrap(), "a # b");
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let err = TomlDoc::parse("ok = 1\nbroken").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let err = TomlDoc::parse("k = ").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        let err = TomlDoc::parse("[sec\nk = 1").unwrap_err().to_string();
+        assert!(err.contains("unterminated section"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let err = TomlDoc::parse("a = 1\na = 2").unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn section_keys_lists_section() {
+        let doc = TomlDoc::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
+        let keys: Vec<_> = doc.section_keys("a").collect();
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+
+    #[test]
+    fn require_reports_missing_key() {
+        let doc = TomlDoc::parse("a = 1").unwrap();
+        assert!(doc.require("a").is_ok());
+        assert!(doc.require("b").unwrap_err().to_string().contains("missing config key"));
+    }
+
+    #[test]
+    fn deployment_defaults_parse_from_empty() {
+        let cfg = DeploymentConfig::from_toml("").unwrap();
+        assert_eq!(cfg.n_gpus, 2);
+        assert!(cfg.harvest_enabled);
+        assert_eq!(cfg.workload, WorkloadKind::MoeOffload);
+    }
+
+    #[test]
+    fn unknown_keys_fail_loudly() {
+        let err = DeploymentConfig::from_toml("[moe]\nmodle = \"x\"").unwrap_err().to_string();
+        assert!(err.contains("unknown config key `moe.modle`"), "{err}");
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let err =
+            DeploymentConfig::from_toml("[moe]\nmodel = \"GPT-9\"").unwrap_err().to_string();
+        assert!(err.contains("unknown MoE model"), "{err}");
+    }
+
+    #[test]
+    fn bad_ranges_rejected() {
+        assert!(DeploymentConfig::from_toml("[node]\ngpus = 1").is_err());
+        assert!(DeploymentConfig::from_toml("[moe]\noffload_fraction = 1.5").is_err());
+        assert!(DeploymentConfig::from_toml("[server]\nscheduler = \"sjf\"").is_err());
+    }
+
+    #[test]
+    fn every_preset_validates_and_roundtrips() {
+        for p in presets() {
+            p.validate().unwrap_or_else(|e| panic!("preset {}: {e}", p.name));
+            let text = p.to_toml();
+            let back = DeploymentConfig::from_toml(&text)
+                .unwrap_or_else(|e| panic!("preset {} roundtrip: {e}\n{text}", p.name));
+            assert_eq!(back.name, p.name);
+            assert_eq!(back.workload, p.workload);
+            assert_eq!(back.n_gpus, p.n_gpus);
+            assert_eq!(back.victim_policy, p.victim_policy);
+            assert_eq!(back.offload_fraction, p.offload_fraction);
+            assert_eq!(back.scheduler, p.scheduler);
+            assert_eq!(back.mig_cache_gib, p.mig_cache_gib);
+        }
+    }
+
+    #[test]
+    fn find_preset_by_name() {
+        assert!(find_preset("paper-moe").is_some());
+        assert!(find_preset("nope").is_none());
+    }
+
+    #[test]
+    fn materializes_runtime_types() {
+        let cfg = find_preset("paper-kv").unwrap();
+        let spec = cfg.node_spec();
+        assert_eq!(spec.gpus.len(), 2);
+        assert_eq!(spec.gpus[0].hbm_bytes, 80 * GIB);
+        let hc = cfg.harvest_config();
+        assert_eq!(hc.mig.len(), 2);
+        let kv = cfg.kv_config().unwrap();
+        assert_eq!(kv.model.name, "Kimi-K2");
+        assert!(kv.use_harvest);
+        let w = cfg.workload_spec();
+        assert_eq!(w.n_requests, cfg.n_requests);
+    }
+
+    #[test]
+    fn fabric_roundtrips_and_materializes() {
+        let cfg = DeploymentConfig::from_toml("[node]\ngpus = 8\nfabric = \"ring\"").unwrap();
+        assert_eq!(cfg.fabric, FabricKind::Ring);
+        assert_eq!(cfg.node_spec().fabric, FabricKind::Ring);
+        let back = DeploymentConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.fabric, FabricKind::Ring);
+        assert!(DeploymentConfig::from_toml("[node]\nfabric = \"torus\"").is_err());
+        assert_eq!(find_preset("nvswitch-8").unwrap().fabric, FabricKind::NvSwitch);
+    }
+
+    #[test]
+    fn mig_preset_materializes_partitions() {
+        let mut cfg = DeploymentConfig::default();
+        cfg.mig_cache_gib = Some(10);
+        let hc = cfg.harvest_config();
+        assert!(hc.mig.iter().all(|m| m.harvest_limit() == Some(10 * GIB)));
+    }
+}

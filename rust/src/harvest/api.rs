@@ -1,0 +1,104 @@
+//! Harvest API surface types (§3.2).
+
+use crate::memsim::hbm::AllocId;
+use crate::memsim::Ns;
+
+/// Opaque, never-reused identifier of a harvest allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct HandleId(pub u64);
+
+/// What happens to the cached object when its peer allocation is revoked
+/// (§3.1: consistency is an application choice).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Durability {
+    /// An authoritative copy lives in host DRAM; revocation falls back to
+    /// it (the MoE expert-weights mode).
+    #[default]
+    HostBacked,
+    /// The object is lost on revocation and reconstructed later (the KV
+    /// cache mode — recompute or drop).
+    Lossy,
+}
+
+/// Placement hints passed to `harvest_alloc` (§3.2 "hint constraints").
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AllocHints {
+    /// The compute GPU this cache entry serves (locality policies place
+    /// close to it; it is never selected as the peer).
+    pub compute_gpu: Option<usize>,
+    /// Pin to an explicit peer.
+    pub prefer_peer: Option<usize>,
+    /// Client identity for fairness accounting.
+    pub client: Option<u32>,
+    /// Durability mode (recorded on the handle; the runtime never tracks
+    /// dirty state either way).
+    pub durability: Durability,
+}
+
+/// The (device, pointer, size) tuple the paper's API returns, plus
+/// bookkeeping metadata.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HarvestHandle {
+    pub id: HandleId,
+    /// Peer GPU index holding the bytes.
+    pub peer: usize,
+    /// The device "pointer" (simulated: allocation id + byte offset).
+    pub alloc: AllocId,
+    pub offset: u64,
+    pub size: u64,
+    pub durability: Durability,
+    pub client: Option<u32>,
+}
+
+/// Why a peer allocation disappeared (§3.2: allocator pressure,
+/// policy-driven eviction, or external reclamation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RevocationReason {
+    /// Co-tenant memory demand grew past the harvestable budget.
+    TenantPressure,
+    /// The controller's own policy evicted it (e.g. rebalancing).
+    PolicyEviction,
+    /// A higher-priority workload reclaimed the MIG partition.
+    ExternalReclaim,
+    /// Runtime shutdown.
+    Shutdown,
+}
+
+/// A completed revocation, as delivered to callbacks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Revocation {
+    pub handle: HarvestHandle,
+    pub reason: RevocationReason,
+    /// Virtual time at which the free completed (after DMA drain).
+    pub at: Ns,
+}
+
+/// Errors from the allocation path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HarvestError {
+    /// No peer currently has a segment that fits under the policy.
+    NoCapacity { requested: u64 },
+    /// The hints pinned a peer that cannot serve the request.
+    PeerUnavailable { peer: usize },
+    /// Unknown or already-freed handle.
+    StaleHandle(HandleId),
+    /// Zero-byte request.
+    ZeroSize,
+}
+
+impl std::fmt::Display for HarvestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HarvestError::NoCapacity { requested } => {
+                write!(f, "no peer capacity for {requested} bytes")
+            }
+            HarvestError::PeerUnavailable { peer } => {
+                write!(f, "pinned peer gpu{peer} unavailable")
+            }
+            HarvestError::StaleHandle(id) => write!(f, "stale handle {id:?}"),
+            HarvestError::ZeroSize => write!(f, "zero-size harvest_alloc"),
+        }
+    }
+}
+
+impl std::error::Error for HarvestError {}

@@ -1,0 +1,618 @@
+//! The Harvest controller: allocation, data movement, pressure watching,
+//! and the ordered revocation pipeline (§3.2).
+//!
+//! Lifecycle of a cached object:
+//!
+//! 1. `harvest_alloc(size, hints)` — the controller builds peer views,
+//!    asks the [`PlacementPolicy`] for a peer, allocates in that peer's
+//!    HBM arena (standard CUDA allocation path stand-in) and returns a
+//!    [`HarvestHandle`].
+//! 2. The application moves data explicitly (`copy_in` / `fetch_to` —
+//!    `cudaMemcpyPeerAsync` stand-ins tagged with the handle).
+//! 3. On revocation (tenant pressure, MIG reclaim, policy eviction, or
+//!    explicit free) the controller **first drains in-flight DMA touching
+//!    the region, then invalidates the placement entry, then fires the
+//!    registered callback** — exactly the §3.2 ordering.
+//!
+//! The controller never tracks dirty state and never writes back: the
+//! handle's [`Durability`] only tells the *application's* callback what
+//! fallback is legal.
+
+use super::api::{AllocHints, HandleId, HarvestError, HarvestHandle, Revocation, RevocationReason};
+use super::mig::MigConfig;
+use super::monitor::PeerMonitor;
+use super::policy::{BestFit, PlacementPolicy, PlacementRequest};
+use crate::memsim::{CopyEvent, DeviceId, Ns, SimNode};
+use std::collections::BTreeMap;
+
+/// Which live allocations die first under pressure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum VictimPolicy {
+    /// Newest first (default: oldest entries have proven useful).
+    #[default]
+    Lifo,
+    /// Oldest first.
+    Fifo,
+    /// Largest first (frees the most with the fewest callbacks).
+    LargestFirst,
+    /// Smallest first.
+    SmallestFirst,
+}
+
+/// Controller configuration.
+#[derive(Debug, Clone)]
+pub struct HarvestConfig {
+    pub victim_policy: VictimPolicy,
+    /// Per-GPU MIG partitioning (defaults to disabled everywhere).
+    pub mig: Vec<MigConfig>,
+    /// Sliding window for churn/bandwidth monitoring.
+    pub monitor_window: Ns,
+    /// Headroom kept free for tenants on every peer: the controller
+    /// revokes once tenant usage pushes free space under this reserve.
+    pub reserve_bytes: u64,
+}
+
+impl HarvestConfig {
+    pub fn for_node(n_gpus: usize) -> Self {
+        Self {
+            victim_policy: VictimPolicy::default(),
+            mig: vec![MigConfig::Disabled; n_gpus],
+            monitor_window: 1_000_000_000,
+            reserve_bytes: 0,
+        }
+    }
+}
+
+type Callback = Box<dyn FnMut(&Revocation)>;
+
+/// The runtime. Owns the simulated node; subsystems (MoE rebalancer, KV
+/// manager) drive it single-threadedly.
+pub struct HarvestRuntime {
+    pub node: SimNode,
+    policy: Box<dyn PlacementPolicy>,
+    pub config: HarvestConfig,
+    monitor: PeerMonitor,
+    live: BTreeMap<HandleId, HarvestHandle>,
+    /// Incremental accounting: our live bytes per peer, and per
+    /// (peer, client) for the fairness ledger — avoids an O(live)
+    /// scan on every allocation (EXPERIMENTS.md §Perf).
+    bytes_on: Vec<u64>,
+    client_bytes: BTreeMap<(usize, u32), u64>,
+    /// Allocation order per peer (for LIFO/FIFO victim selection):
+    /// insertion-sequence -> handle, O(log n) removal on free/revoke.
+    order: Vec<BTreeMap<u64, HandleId>>,
+    order_key: BTreeMap<HandleId, u64>,
+    next_order: u64,
+    callbacks: BTreeMap<HandleId, Callback>,
+    next_handle: u64,
+    /// Every completed revocation, in order (for tests/metrics).
+    pub revocations: Vec<Revocation>,
+    /// Cumulative counters.
+    pub alloc_attempts: u64,
+    pub alloc_failures: u64,
+}
+
+impl HarvestRuntime {
+    pub fn new(node: SimNode, config: HarvestConfig) -> Self {
+        Self::with_policy(node, config, Box::new(BestFit))
+    }
+
+    pub fn with_policy(
+        node: SimNode,
+        config: HarvestConfig,
+        policy: Box<dyn PlacementPolicy>,
+    ) -> Self {
+        assert_eq!(config.mig.len(), node.n_gpus(), "one MigConfig per GPU");
+        let n = node.n_gpus();
+        let monitor = PeerMonitor::new(n, config.monitor_window);
+        Self {
+            node,
+            policy,
+            config,
+            monitor,
+            live: BTreeMap::new(),
+            bytes_on: vec![0; n],
+            client_bytes: BTreeMap::new(),
+            order: vec![BTreeMap::new(); n],
+            order_key: BTreeMap::new(),
+            next_order: 0,
+            callbacks: BTreeMap::new(),
+            next_handle: 0,
+            revocations: Vec::new(),
+            alloc_attempts: 0,
+            alloc_failures: 0,
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn live_handles(&self) -> impl Iterator<Item = &HarvestHandle> {
+        self.live.values()
+    }
+
+    pub fn live_bytes_on(&self, peer: usize) -> u64 {
+        self.bytes_on[peer]
+    }
+
+    pub fn is_live(&self, id: HandleId) -> bool {
+        self.live.contains_key(&id)
+    }
+
+    fn partition_limits(&self) -> Vec<Option<u64>> {
+        self.config.mig.iter().map(|m| m.harvest_limit()).collect()
+    }
+
+    fn views_for(&mut self, client: Option<u32>) -> Vec<super::monitor::PeerView> {
+        self.monitor.observe(&self.node);
+        let limits = self.partition_limits();
+        let ours: Vec<u64> = (0..self.node.n_gpus())
+            .map(|p| match client {
+                None => self.bytes_on[p],
+                Some(c) => self.client_bytes.get(&(p, c)).copied().unwrap_or(0),
+            })
+            .collect();
+        self.monitor.views(&self.node, &limits, &ours)
+    }
+
+    /// Bookkeeping shared by alloc and the two removal paths.
+    fn account_add(&mut self, h: &HarvestHandle) {
+        self.bytes_on[h.peer] += h.size;
+        if let Some(c) = h.client {
+            *self.client_bytes.entry((h.peer, c)).or_insert(0) += h.size;
+        }
+    }
+
+    fn account_remove(&mut self, h: &HarvestHandle) {
+        self.bytes_on[h.peer] -= h.size;
+        if let Some(c) = h.client {
+            if let Some(b) = self.client_bytes.get_mut(&(h.peer, c)) {
+                *b -= h.size;
+                if *b == 0 {
+                    self.client_bytes.remove(&(h.peer, c));
+                }
+            }
+        }
+    }
+
+    /// §3.2 `harvest_alloc`: select a peer and allocate.
+    pub fn alloc(&mut self, size: u64, hints: AllocHints) -> Result<HarvestHandle, HarvestError> {
+        self.alloc_attempts += 1;
+        if size == 0 {
+            self.alloc_failures += 1;
+            return Err(HarvestError::ZeroSize);
+        }
+        let views = self.views_for(hints.client);
+        let peer = if let Some(p) = hints.prefer_peer {
+            let ok = p < views.len()
+                && views[p].harvestable >= size
+                && views[p].largest_free >= size
+                && Some(p) != hints.compute_gpu
+                && self.config.mig[p].allows_harvest();
+            if !ok {
+                self.alloc_failures += 1;
+                return Err(HarvestError::PeerUnavailable { peer: p });
+            }
+            p
+        } else {
+            // Filter P2P-restricted devices before the policy sees them.
+            let views: Vec<_> = views
+                .into_iter()
+                .filter(|v| self.config.mig[v.device].allows_harvest())
+                .collect();
+            let req = PlacementRequest { size, hints, views: &views, topo: &self.node.topo };
+            match self.policy.select(&req) {
+                Some(p) => p,
+                None => {
+                    self.alloc_failures += 1;
+                    return Err(HarvestError::NoCapacity { requested: size });
+                }
+            }
+        };
+        let alloc = self.node.gpus[peer].hbm.alloc(size).map_err(|_| {
+            self.alloc_failures += 1;
+            HarvestError::NoCapacity { requested: size }
+        })?;
+        let offset = self.node.gpus[peer].hbm.offset_of(alloc).unwrap();
+        let handle = HarvestHandle {
+            id: HandleId(self.next_handle),
+            peer,
+            alloc,
+            offset,
+            size,
+            durability: hints.durability,
+            client: hints.client,
+        };
+        self.next_handle += 1;
+        self.live.insert(handle.id, handle);
+        self.account_add(&handle);
+        let k = self.next_order;
+        self.next_order += 1;
+        self.order[peer].insert(k, handle.id);
+        self.order_key.insert(handle.id, k);
+        Ok(handle)
+    }
+
+    /// §3.2 `harvest_register_cb`.
+    pub fn register_cb(
+        &mut self,
+        id: HandleId,
+        cb: impl FnMut(&Revocation) + 'static,
+    ) -> Result<(), HarvestError> {
+        if !self.live.contains_key(&id) {
+            return Err(HarvestError::StaleHandle(id));
+        }
+        self.callbacks.insert(id, Box::new(cb));
+        Ok(())
+    }
+
+    /// §3.2 `harvest_free`: explicit, ordered deallocation (drains DMA
+    /// first; does NOT fire the revocation callback — the app initiated
+    /// the free).
+    pub fn free(&mut self, id: HandleId) -> Result<(), HarvestError> {
+        let handle = self.live.remove(&id).ok_or(HarvestError::StaleHandle(id))?;
+        self.account_remove(&handle);
+        self.node.dma.drain_tag(&self.node.topo, id.0);
+        self.node.gpus[handle.peer].hbm.free(handle.alloc);
+        if let Some(k) = self.order_key.remove(&id) {
+            self.order[handle.peer].remove(&k);
+        }
+        self.callbacks.remove(&id);
+        Ok(())
+    }
+
+    /// Populate the peer cache: async copy `handle.size` bytes from `src`
+    /// into the peer allocation.
+    pub fn copy_in(&mut self, id: HandleId, src: DeviceId) -> Result<CopyEvent, HarvestError> {
+        let h = *self.live.get(&id).ok_or(HarvestError::StaleHandle(id))?;
+        let ev = self.node.copy(src, DeviceId::Gpu(h.peer), h.size, Some(id.0));
+        self.monitor.record_transfer(h.peer, ev.end, h.size);
+        Ok(ev)
+    }
+
+    /// Serve a cache hit: async copy the object from its peer to the
+    /// compute GPU. This is the fast path the paper measures.
+    pub fn fetch_to(&mut self, id: HandleId, compute: usize) -> Result<CopyEvent, HarvestError> {
+        let h = *self.live.get(&id).ok_or(HarvestError::StaleHandle(id))?;
+        let ev = self.node.copy(DeviceId::Gpu(h.peer), DeviceId::Gpu(compute), h.size, Some(id.0));
+        self.monitor.record_transfer(h.peer, ev.end, h.size);
+        Ok(ev)
+    }
+
+    /// The revocation pipeline for one handle. Ordering per §3.2:
+    /// drain in-flight DMA → free + invalidate → fire callback.
+    pub fn revoke(&mut self, id: HandleId, reason: RevocationReason) -> Option<Revocation> {
+        let handle = self.live.remove(&id)?;
+        self.account_remove(&handle);
+        // 1. Drain: advance virtual time past every op touching the region.
+        let drained_at = self.node.dma.drain_tag(&self.node.topo, id.0);
+        // 2. Invalidate + free.
+        self.node.gpus[handle.peer].hbm.free(handle.alloc);
+        if let Some(k) = self.order_key.remove(&id) {
+            self.order[handle.peer].remove(&k);
+        }
+        let rev = Revocation { handle, reason, at: drained_at };
+        self.revocations.push(rev);
+        // 3. Callback (exactly once; the entry is gone from `live`).
+        if let Some(mut cb) = self.callbacks.remove(&id) {
+            cb(&rev);
+        }
+        Some(rev)
+    }
+
+    /// Revoke everything on `peer` (e.g. MIG instance reclaimed).
+    pub fn revoke_peer(&mut self, peer: usize, reason: RevocationReason) -> Vec<Revocation> {
+        let ids: Vec<HandleId> = self.order[peer].values().copied().collect();
+        ids.into_iter().rev().filter_map(|id| self.revoke(id, reason)).collect()
+    }
+
+    fn pick_victim(&self, peer: usize) -> Option<HandleId> {
+        let order = &self.order[peer];
+        match self.config.victim_policy {
+            VictimPolicy::Lifo => order.last_key_value().map(|(_, &id)| id),
+            VictimPolicy::Fifo => order.first_key_value().map(|(_, &id)| id),
+            VictimPolicy::LargestFirst => {
+                order.values().max_by_key(|id| self.live[id].size).copied()
+            }
+            VictimPolicy::SmallestFirst => {
+                order.values().min_by_key(|id| self.live[id].size).copied()
+            }
+        }
+    }
+
+    /// Enforce capacity on every peer at the current virtual time:
+    /// while co-tenant demand + our allocations + reserve exceed
+    /// capacity (or a MIG partition shrank), revoke victims. Returns the
+    /// revocations performed.
+    pub fn enforce_pressure(&mut self) -> Vec<Revocation> {
+        let now = self.node.clock.now();
+        let mut out = Vec::new();
+        for peer in 0..self.node.n_gpus() {
+            loop {
+                let cap = self.node.gpus[peer].hbm.capacity();
+                let tenant = self.node.gpus[peer].tenant.used_at(now);
+                let ours = self.node.gpus[peer].hbm.used();
+                let budget = cap.saturating_sub(tenant).saturating_sub(self.config.reserve_bytes);
+                let limit = self.config.mig[peer].harvest_limit().unwrap_or(u64::MAX);
+                if ours <= budget.min(limit) {
+                    break;
+                }
+                let Some(victim) = self.pick_victim(peer) else { break };
+                if let Some(rev) = self.revoke(victim, RevocationReason::TenantPressure) {
+                    out.push(rev);
+                }
+            }
+        }
+        self.monitor.observe(&self.node);
+        out
+    }
+
+    /// Advance virtual time to `t`, enforcing pressure at every tenant
+    /// change in between (so revocations happen when capacity disappears,
+    /// not when someone next allocates). Returns all revocations.
+    pub fn advance_to(&mut self, t: Ns) -> Vec<Revocation> {
+        let mut out = Vec::new();
+        loop {
+            let now = self.node.clock.now();
+            let next_change = self
+                .node
+                .gpus
+                .iter()
+                .filter_map(|g| g.tenant.next_change_after(now))
+                .map(|e| e.at)
+                .min();
+            match next_change {
+                Some(at) if at <= t => {
+                    self.node.clock.advance_to(at);
+                    out.extend(self.enforce_pressure());
+                }
+                _ => break,
+            }
+        }
+        self.node.clock.advance_to(t);
+        out.extend(self.enforce_pressure());
+        out
+    }
+
+    /// Policy views at now (for introspection / examples).
+    pub fn peer_views(&mut self) -> Vec<super::monitor::PeerView> {
+        self.views_for(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::tenant::TenantLoad;
+    use crate::memsim::NodeSpec;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    const GIB: u64 = 1 << 30;
+    const MIB: u64 = 1 << 20;
+
+    fn rt() -> HarvestRuntime {
+        let node = SimNode::new(NodeSpec::h100x2());
+        let config = HarvestConfig::for_node(2);
+        HarvestRuntime::new(node, config)
+    }
+
+    fn hints(compute: usize) -> AllocHints {
+        AllocHints { compute_gpu: Some(compute), ..Default::default() }
+    }
+
+    #[test]
+    fn alloc_places_on_peer_not_compute() {
+        let mut h = rt();
+        let handle = h.alloc(100 * MIB, hints(0)).unwrap();
+        assert_eq!(handle.peer, 1);
+        assert_eq!(handle.size, 100 * MIB);
+        assert!(h.is_live(handle.id));
+        assert_eq!(h.live_bytes_on(1), 100 * MIB);
+    }
+
+    #[test]
+    fn alloc_respects_tenant_capacity() {
+        let mut h = rt();
+        h.node.set_tenant_load(1, TenantLoad::constant(80 * GIB, 79 * GIB));
+        match h.alloc(2 * GIB, hints(0)) {
+            Err(HarvestError::NoCapacity { .. }) => {}
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(h.alloc_failures, 1);
+    }
+
+    #[test]
+    fn pinned_peer_honoured_or_rejected() {
+        let mut h = rt();
+        let hint = AllocHints { prefer_peer: Some(1), ..hints(0) };
+        let handle = h.alloc(MIB, hint).unwrap();
+        assert_eq!(handle.peer, 1);
+        // pinning the compute GPU itself is rejected
+        let bad = AllocHints { prefer_peer: Some(0), ..hints(0) };
+        assert!(matches!(h.alloc(MIB, bad), Err(HarvestError::PeerUnavailable { peer: 0 })));
+    }
+
+    #[test]
+    fn explicit_free_releases_and_skips_callback() {
+        let mut h = rt();
+        let handle = h.alloc(MIB, hints(0)).unwrap();
+        let fired = Rc::new(RefCell::new(0));
+        let f2 = fired.clone();
+        h.register_cb(handle.id, move |_| *f2.borrow_mut() += 1).unwrap();
+        h.free(handle.id).unwrap();
+        assert!(!h.is_live(handle.id));
+        assert_eq!(*fired.borrow(), 0, "explicit free must not fire revocation cb");
+        assert_eq!(h.node.gpus[1].hbm.used(), 0);
+        // double free reports stale handle
+        assert!(matches!(h.free(handle.id), Err(HarvestError::StaleHandle(_))));
+    }
+
+    #[test]
+    fn revocation_order_drain_then_invalidate_then_callback() {
+        let mut h = rt();
+        let handle = h.alloc(64 * MIB, hints(0)).unwrap();
+        // start a long copy touching the region
+        let ev = h.copy_in(handle.id, DeviceId::Host).unwrap();
+        assert!(ev.end > h.node.clock.now(), "copy is in flight");
+        let observed = Rc::new(RefCell::new(None));
+        let obs = observed.clone();
+        h.register_cb(handle.id, move |rev| *obs.borrow_mut() = Some(*rev)).unwrap();
+        let rev = h.revoke(handle.id, RevocationReason::PolicyEviction).unwrap();
+        // drained: revocation time is not before the in-flight copy end
+        assert!(rev.at >= ev.end, "rev.at={} ev.end={}", rev.at, ev.end);
+        // invalidated before callback: handle no longer live inside cb's view
+        assert!(!h.is_live(handle.id));
+        assert_eq!(observed.borrow().unwrap().handle.id, handle.id);
+        assert_eq!(observed.borrow().unwrap().reason, RevocationReason::PolicyEviction);
+    }
+
+    #[test]
+    fn callback_fires_exactly_once() {
+        let mut h = rt();
+        let handle = h.alloc(MIB, hints(0)).unwrap();
+        let fired = Rc::new(RefCell::new(0));
+        let f2 = fired.clone();
+        h.register_cb(handle.id, move |_| *f2.borrow_mut() += 1).unwrap();
+        assert!(h.revoke(handle.id, RevocationReason::TenantPressure).is_some());
+        assert!(h.revoke(handle.id, RevocationReason::TenantPressure).is_none());
+        assert_eq!(*fired.borrow(), 1);
+    }
+
+    #[test]
+    fn tenant_pressure_triggers_revocation_on_advance() {
+        let mut h = rt();
+        h.node.set_tenant_load(
+            1,
+            TenantLoad::from_steps(80 * GIB, vec![(0, 0), (1_000_000, 79 * GIB)]),
+        );
+        let a = h.alloc(2 * GIB, hints(0)).unwrap();
+        let b = h.alloc(1 * GIB, hints(0)).unwrap();
+        assert_eq!(h.live_bytes_on(1), 3 * GIB);
+        let revs = h.advance_to(2_000_000);
+        // budget after pressure: 1 GiB; LIFO kills b (1 GiB) -> 2 GiB still
+        // over, kills a too.
+        assert_eq!(revs.len(), 2);
+        assert_eq!(revs[0].handle.id, b.id, "LIFO victim first");
+        assert_eq!(revs[1].handle.id, a.id);
+        assert!(revs.iter().all(|r| r.reason == RevocationReason::TenantPressure));
+        assert_eq!(h.live_bytes_on(1), 0);
+    }
+
+    #[test]
+    fn partial_pressure_revokes_minimum() {
+        let mut h = rt();
+        h.node.set_tenant_load(
+            1,
+            TenantLoad::from_steps(80 * GIB, vec![(0, 0), (1_000, 78 * GIB)]),
+        );
+        let a = h.alloc(1 * GIB, hints(0)).unwrap();
+        let _b = h.alloc(1 * GIB, hints(0)).unwrap();
+        // budget 2 GiB -> both fit exactly; no revocation
+        let revs = h.advance_to(2_000);
+        assert!(revs.is_empty(), "{revs:?}");
+        assert!(h.is_live(a.id));
+    }
+
+    #[test]
+    fn victim_policy_fifo_and_largest() {
+        let mk = |vp| {
+            let node = SimNode::new(NodeSpec::h100x2());
+            let mut cfg = HarvestConfig::for_node(2);
+            cfg.victim_policy = vp;
+            let mut h = HarvestRuntime::new(node, cfg);
+            let a = h.alloc(3 * GIB, hints(0)).unwrap();
+            let b = h.alloc(1 * GIB, hints(0)).unwrap();
+            let c = h.alloc(2 * GIB, hints(0)).unwrap();
+            h.node.set_tenant_load(
+                1,
+                TenantLoad::from_steps(80 * GIB, vec![(0, 0), (10, 75 * GIB)]),
+            );
+            let revs = h.advance_to(20);
+            (a, b, c, revs)
+        };
+        let (a, _b, _c, revs) = mk(VictimPolicy::Fifo);
+        assert_eq!(revs[0].handle.id, a.id);
+        let (a2, _b2, _c2, revs) = mk(VictimPolicy::LargestFirst);
+        assert_eq!(revs[0].handle.id, a2.id, "3 GiB is largest");
+        let (_a3, b3, _c3, revs) = mk(VictimPolicy::SmallestFirst);
+        assert_eq!(revs[0].handle.id, b3.id, "1 GiB is smallest");
+    }
+
+    #[test]
+    fn mig_partition_caps_allocation() {
+        let node = SimNode::new(NodeSpec::h100x2());
+        let mut cfg = HarvestConfig::for_node(2);
+        cfg.mig[1] = MigConfig::CachePartition { bytes: 1 * GIB };
+        let mut h = HarvestRuntime::new(node, cfg);
+        let _a = h.alloc(512 * MIB, hints(0)).unwrap();
+        let _b = h.alloc(512 * MIB, hints(0)).unwrap();
+        assert!(matches!(h.alloc(512 * MIB, hints(0)), Err(HarvestError::NoCapacity { .. })));
+    }
+
+    #[test]
+    fn mig_p2p_restricted_blocks_device() {
+        let node = SimNode::new(NodeSpec::nvlink_domain(3));
+        let mut cfg = HarvestConfig::for_node(3);
+        cfg.mig[1] = MigConfig::P2pRestricted;
+        let mut h = HarvestRuntime::new(node, cfg);
+        // gpu1 is restricted; only gpu2 can serve
+        let handle = h.alloc(MIB, hints(0)).unwrap();
+        assert_eq!(handle.peer, 2);
+        let bad = AllocHints { prefer_peer: Some(1), ..hints(0) };
+        assert!(matches!(h.alloc(MIB, bad), Err(HarvestError::PeerUnavailable { peer: 1 })));
+    }
+
+    #[test]
+    fn mig_shrink_revokes_via_enforce() {
+        let node = SimNode::new(NodeSpec::h100x2());
+        let mut cfg = HarvestConfig::for_node(2);
+        cfg.mig[1] = MigConfig::CachePartition { bytes: 4 * GIB };
+        let mut h = HarvestRuntime::new(node, cfg);
+        let _a = h.alloc(3 * GIB, hints(0)).unwrap();
+        // operator shrinks the partition
+        h.config.mig[1] = MigConfig::CachePartition { bytes: 1 * GIB };
+        let revs = h.enforce_pressure();
+        assert_eq!(revs.len(), 1);
+        assert_eq!(h.live_bytes_on(1), 0);
+    }
+
+    #[test]
+    fn revoke_peer_clears_everything() {
+        let mut h = rt();
+        let _a = h.alloc(MIB, hints(0)).unwrap();
+        let _b = h.alloc(MIB, hints(0)).unwrap();
+        let revs = h.revoke_peer(1, RevocationReason::ExternalReclaim);
+        assert_eq!(revs.len(), 2);
+        assert_eq!(h.live_bytes_on(1), 0);
+        assert!(revs.iter().all(|r| r.reason == RevocationReason::ExternalReclaim));
+    }
+
+    #[test]
+    fn fetch_to_moves_bytes_over_nvlink() {
+        let mut h = rt();
+        let handle = h.alloc(64 * MIB, hints(0)).unwrap();
+        h.copy_in(handle.id, DeviceId::Host).unwrap();
+        let ev = h.fetch_to(handle.id, 0).unwrap();
+        assert_eq!(ev.src, DeviceId::Gpu(1));
+        assert_eq!(ev.dst, DeviceId::Gpu(0));
+        assert_eq!(h.node.topo.bytes_moved(DeviceId::Gpu(1), DeviceId::Gpu(0)), 64 * MIB);
+    }
+
+    #[test]
+    fn reserve_headroom_respected() {
+        let node = SimNode::new(NodeSpec::h100x2());
+        let mut cfg = HarvestConfig::for_node(2);
+        cfg.reserve_bytes = 70 * GIB;
+        let mut h = HarvestRuntime::new(node, cfg);
+        let _a = h.alloc(9 * GIB, hints(0)).unwrap();
+        // 80 - 0 tenant - 70 reserve = 10 GiB budget; 9 fits, next 2 doesn't
+        // at alloc time the views don't model reserve, but enforcement does:
+        let revs = h.enforce_pressure();
+        assert!(revs.is_empty());
+        let _b = h.alloc(5 * GIB, hints(0)).unwrap();
+        let revs = h.enforce_pressure();
+        assert_eq!(revs.len(), 1, "over reserve budget -> revoke LIFO victim");
+    }
+}

@@ -1,0 +1,58 @@
+//! MIG-style isolation (§3.2 "Isolation with MIG").
+//!
+//! On real hardware Harvest reserves one MIG instance per peer GPU as the
+//! cache device so harvested allocations cannot thrash co-tenants. Here
+//! the partition is a per-GPU byte budget the controller refuses to
+//! exceed, plus an "external reclaim" switch that models an operator
+//! shrinking/destroying the instance for a higher-priority workload
+//! (which revokes everything inside it). §3.2 also notes some driver
+//! configurations restrict P2P for MIG devices — modelled as a deployment
+//! flag that disables harvesting on the device entirely.
+
+/// Per-GPU partition configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigConfig {
+    /// No MIG: harvest may use all tenant-free HBM (the paper treats MIG
+    /// as a deployment choice, not a functional requirement).
+    Disabled,
+    /// A reserved cache instance of this many bytes.
+    CachePartition { bytes: u64 },
+    /// Driver configuration forbids cross-GPU P2P with MIG on — the
+    /// device cannot be harvested at all.
+    P2pRestricted,
+}
+
+impl Default for MigConfig {
+    fn default() -> Self {
+        MigConfig::Disabled
+    }
+}
+
+impl MigConfig {
+    /// The harvestable-byte cap this partition imposes (`None` = no cap).
+    pub fn harvest_limit(&self) -> Option<u64> {
+        match self {
+            MigConfig::Disabled => None,
+            MigConfig::CachePartition { bytes } => Some(*bytes),
+            MigConfig::P2pRestricted => Some(0),
+        }
+    }
+
+    pub fn allows_harvest(&self) -> bool {
+        !matches!(self, MigConfig::P2pRestricted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn limits() {
+        assert_eq!(MigConfig::Disabled.harvest_limit(), None);
+        assert_eq!(MigConfig::CachePartition { bytes: 7 }.harvest_limit(), Some(7));
+        assert_eq!(MigConfig::P2pRestricted.harvest_limit(), Some(0));
+        assert!(MigConfig::Disabled.allows_harvest());
+        assert!(!MigConfig::P2pRestricted.allows_harvest());
+    }
+}

@@ -1,0 +1,42 @@
+//! The Harvest runtime — the paper's system contribution (§3).
+//!
+//! Harvest exposes unused HBM on *peer GPUs* as a best-effort, revocable
+//! cache tier through three core operations (§3.2):
+//!
+//! ```text
+//! harvest_alloc(size, hints) -> handle
+//! harvest_free(handle)
+//! harvest_register_cb(handle, cb)
+//! ```
+//!
+//! * [`api`] — handles, hints, durability modes, revocation reasons.
+//! * [`policy`] — pluggable placement policies: best-fit (the paper's
+//!   default) plus the locality / fairness / interference / stability
+//!   variants §3.2 sketches.
+//! * [`monitor`] — peer-availability views (free capacity, churn,
+//!   bandwidth demand) that policies consult.
+//! * [`controller`] — the runtime: performs allocations on the selected
+//!   peer, watches tenant pressure, and drives the revocation pipeline
+//!   (drain in-flight DMA → invalidate placement → fire callback) in
+//!   exactly that order.
+//! * [`mig`] — MIG-style isolation: harvesting confined to a reserved
+//!   capacity partition per peer GPU.
+//!
+//! Correctness never depends on the peer tier: every cached object is
+//! either [`api::Durability::HostBacked`] or
+//! [`api::Durability::Lossy`] (reconstructible), and the runtime never
+//! tracks dirty state or performs write-back (§3.1).
+
+pub mod api;
+pub mod controller;
+pub mod mig;
+pub mod monitor;
+pub mod policy;
+
+pub use api::{AllocHints, Durability, HandleId, HarvestError, HarvestHandle, Revocation,
+              RevocationReason};
+pub use controller::{HarvestConfig, HarvestRuntime, VictimPolicy};
+pub use mig::MigConfig;
+pub use monitor::{PeerMonitor, PeerView};
+pub use policy::{BestFit, FirstAvailable, InterferenceAware, LocalityAware, PlacementPolicy,
+                 RateLimitFairness, StabilityAware};

@@ -1,0 +1,191 @@
+//! Peer-availability monitoring (§3.1: "The Harvest runtime monitors peer
+//! memory availability").
+//!
+//! [`PeerMonitor`] maintains, per GPU, the statistics placement policies
+//! consult: instantaneous harvestable bytes, largest allocatable segment,
+//! recent tenant *churn* (how often / how much co-tenant usage moved —
+//! the stability policy's signal), and recent link bandwidth demand (the
+//! interference policy's signal).
+
+use crate::memsim::{Ns, SimNode};
+use std::collections::VecDeque;
+
+/// Snapshot of one peer GPU as seen by placement policies.
+#[derive(Debug, Clone, Copy)]
+pub struct PeerView {
+    pub device: usize,
+    /// Bytes harvestable right now (capacity − tenant − our allocations),
+    /// clamped to the MIG partition if one is configured.
+    pub harvestable: u64,
+    /// Largest contiguous free segment in our arena view.
+    pub largest_free: u64,
+    /// Tenant churn rate over the sliding window: mean absolute usage
+    /// change per second, as a fraction of capacity (0 = placid peer).
+    pub churn_per_sec: f64,
+    /// Bytes/sec recently moved over links touching this device.
+    pub bw_demand: f64,
+    /// Bytes this monitor's owner already holds on the device, per the
+    /// fairness accounting.
+    pub our_bytes: u64,
+}
+
+/// Sliding-window churn/bandwidth tracker.
+#[derive(Debug, Clone)]
+pub struct PeerMonitor {
+    window: Ns,
+    /// Per device: (time, |usage delta| in bytes) events.
+    churn_events: Vec<VecDeque<(Ns, u64)>>,
+    /// Per device: (time, bytes transferred) events.
+    bw_events: Vec<VecDeque<(Ns, u64)>>,
+    last_seen_used: Vec<u64>,
+}
+
+impl PeerMonitor {
+    pub fn new(n_gpus: usize, window: Ns) -> Self {
+        Self {
+            window,
+            churn_events: vec![VecDeque::new(); n_gpus],
+            bw_events: vec![VecDeque::new(); n_gpus],
+            last_seen_used: vec![0; n_gpus],
+        }
+    }
+
+    /// Observe the current tenant usage on all devices (called by the
+    /// controller whenever virtual time advances past tenant events).
+    pub fn observe(&mut self, node: &SimNode) {
+        let now = node.clock.now();
+        for (i, gpu) in node.gpus.iter().enumerate() {
+            let used = gpu.tenant.used_at(now);
+            let prev = self.last_seen_used[i];
+            if used != prev {
+                let delta = used.abs_diff(prev);
+                self.churn_events[i].push_back((now, delta));
+                self.last_seen_used[i] = used;
+            }
+            Self::expire(&mut self.churn_events[i], now, self.window);
+            Self::expire(&mut self.bw_events[i], now, self.window);
+        }
+    }
+
+    /// Record link traffic touching `device` (for interference scoring).
+    pub fn record_transfer(&mut self, device: usize, at: Ns, bytes: u64) {
+        self.bw_events[device].push_back((at, bytes));
+    }
+
+    fn expire(q: &mut VecDeque<(Ns, u64)>, now: Ns, window: Ns) {
+        while let Some(&(t, _)) = q.front() {
+            if t + window < now {
+                q.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn rate_per_sec(q: &VecDeque<(Ns, u64)>, window: Ns) -> f64 {
+        let total: u64 = q.iter().map(|&(_, b)| b).sum();
+        total as f64 / (window as f64 / 1e9)
+    }
+
+    /// Build the policy view. `partition_limit[i]` caps the harvestable
+    /// report (MIG); `our_bytes[i]` is the fairness ledger.
+    pub fn views(
+        &self,
+        node: &SimNode,
+        partition_limit: &[Option<u64>],
+        our_bytes: &[u64],
+    ) -> Vec<PeerView> {
+        let _now = node.clock.now();
+        (0..node.n_gpus())
+            .map(|i| {
+                let cap = node.gpus[i].hbm.capacity();
+                let mut harvestable = node.harvestable_now(i);
+                if let Some(limit) = partition_limit[i] {
+                    harvestable = harvestable.min(limit.saturating_sub(node.gpus[i].hbm.used()));
+                }
+                PeerView {
+                    device: i,
+                    harvestable,
+                    largest_free: node.gpus[i].hbm.largest_free().min(harvestable),
+                    churn_per_sec: Self::rate_per_sec(&self.churn_events[i], self.window)
+                        / cap.max(1) as f64,
+                    bw_demand: Self::rate_per_sec(&self.bw_events[i], self.window),
+                    our_bytes: our_bytes[i],
+                }
+            })
+            .collect()
+    }
+
+    pub fn last_observed_tenant_used(&self, device: usize) -> u64 {
+        self.last_seen_used[device]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::tenant::TenantLoad;
+    use crate::memsim::{NodeSpec, SimNode};
+
+    const GIB: u64 = 1 << 30;
+
+    #[test]
+    fn views_report_harvestable_and_partition_cap() {
+        let mut node = SimNode::new(NodeSpec::default());
+        node.set_tenant_load(1, TenantLoad::constant(80 * GIB, 20 * GIB));
+        let mon = PeerMonitor::new(2, 1_000_000_000);
+        let views = mon.views(&node, &[None, Some(10 * GIB)], &[0, 0]);
+        assert_eq!(views[1].harvestable, 10 * GIB, "MIG partition caps harvest");
+        let views = mon.views(&node, &[None, None], &[0, 0]);
+        assert_eq!(views[1].harvestable, 60 * GIB);
+    }
+
+    #[test]
+    fn churn_rate_reflects_tenant_changes() {
+        let mut node = SimNode::new(NodeSpec::default());
+        node.set_tenant_load(
+            1,
+            TenantLoad::from_steps(
+                80 * GIB,
+                vec![(0, 0), (100_000_000, 8 * GIB), (200_000_000, 0)],
+            ),
+        );
+        let mut mon = PeerMonitor::new(2, 1_000_000_000);
+        mon.observe(&node);
+        node.clock.advance_to(100_000_000);
+        mon.observe(&node);
+        node.clock.advance_to(200_000_000);
+        mon.observe(&node);
+        let views = mon.views(&node, &[None, None], &[0, 0]);
+        assert!(views[1].churn_per_sec > 0.0);
+        assert_eq!(views[0].churn_per_sec, 0.0, "placid peer has zero churn");
+    }
+
+    #[test]
+    fn churn_events_expire_out_of_window() {
+        let mut node = SimNode::new(NodeSpec::default());
+        node.set_tenant_load(
+            1,
+            TenantLoad::from_steps(80 * GIB, vec![(0, 0), (1_000, 8 * GIB)]),
+        );
+        let mut mon = PeerMonitor::new(2, 1_000_000); // 1 ms window
+        node.clock.advance_to(1_000);
+        mon.observe(&node);
+        let v = mon.views(&node, &[None, None], &[0, 0]);
+        assert!(v[1].churn_per_sec > 0.0);
+        node.clock.advance_to(10_000_000); // 10 ms later
+        mon.observe(&node);
+        let v = mon.views(&node, &[None, None], &[0, 0]);
+        assert_eq!(v[1].churn_per_sec, 0.0, "old churn expired");
+    }
+
+    #[test]
+    fn bw_demand_tracks_recorded_transfers() {
+        let node = SimNode::new(NodeSpec::default());
+        let mut mon = PeerMonitor::new(2, 1_000_000_000);
+        mon.record_transfer(0, 0, 500_000_000);
+        let v = mon.views(&node, &[None, None], &[0, 0]);
+        assert!((v[0].bw_demand - 0.5e9).abs() < 1.0);
+        assert_eq!(v[1].bw_demand, 0.0);
+    }
+}

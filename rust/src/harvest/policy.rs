@@ -1,0 +1,299 @@
+//! Placement policies (§3.2 "Allocation policy").
+//!
+//! A [`PlacementPolicy`] chooses which peer GPU serves a `harvest_alloc`.
+//! The paper's prototype uses best-fit; the section explicitly sketches
+//! four alternatives ("Other policies can optimize locality ..., fairness
+//! ..., interference ..., or stability ...") — all five are implemented
+//! here and ablated in `rust/benches/` (DESIGN.md experiment index).
+
+use super::api::AllocHints;
+use super::monitor::PeerView;
+use crate::memsim::Topology;
+
+/// Context a policy sees for one allocation request.
+pub struct PlacementRequest<'a> {
+    pub size: u64,
+    pub hints: AllocHints,
+    pub views: &'a [PeerView],
+    pub topo: &'a Topology,
+}
+
+impl PlacementRequest<'_> {
+    /// Peers that can serve the request at all (not the compute GPU,
+    /// have a fitting segment).
+    pub fn feasible(&self) -> impl Iterator<Item = &PeerView> + '_ {
+        self.views.iter().filter(move |v| {
+            Some(v.device) != self.hints.compute_gpu
+                && v.harvestable >= self.size
+                && v.largest_free >= self.size
+        })
+    }
+}
+
+/// Chooses a peer GPU for an allocation, or `None` to reject.
+pub trait PlacementPolicy {
+    fn name(&self) -> &'static str;
+    fn select(&mut self, req: &PlacementRequest<'_>) -> Option<usize>;
+}
+
+/// The paper's default: the feasible peer whose fitting segment leaves
+/// the least leftover (minimises fragmentation). Ties break to the lower
+/// device index for determinism.
+#[derive(Debug, Default, Clone)]
+pub struct BestFit;
+
+impl PlacementPolicy for BestFit {
+    fn name(&self) -> &'static str {
+        "best-fit"
+    }
+
+    fn select(&mut self, req: &PlacementRequest<'_>) -> Option<usize> {
+        req.feasible()
+            .min_by_key(|v| (v.largest_free - req.size, v.device))
+            .map(|v| v.device)
+    }
+}
+
+/// Simplest baseline: first feasible peer by index.
+#[derive(Debug, Default, Clone)]
+pub struct FirstAvailable;
+
+impl PlacementPolicy for FirstAvailable {
+    fn name(&self) -> &'static str {
+        "first-available"
+    }
+
+    fn select(&mut self, req: &PlacementRequest<'_>) -> Option<usize> {
+        req.feasible().map(|v| v.device).next()
+    }
+}
+
+/// Locality: prefer the peer with the lowest estimated fetch latency to
+/// the compute GPU (NVLink-adjacent peers first on multi-hop fabrics).
+#[derive(Debug, Default, Clone)]
+pub struct LocalityAware;
+
+impl PlacementPolicy for LocalityAware {
+    fn name(&self) -> &'static str {
+        "locality"
+    }
+
+    fn select(&mut self, req: &PlacementRequest<'_>) -> Option<usize> {
+        let compute = req.hints.compute_gpu?;
+        req.feasible()
+            .filter_map(|v| {
+                let lat = req.topo.estimate(
+                    crate::memsim::DeviceId::Gpu(v.device),
+                    crate::memsim::DeviceId::Gpu(compute),
+                    req.size,
+                )?;
+                Some((lat, v.device))
+            })
+            .min()
+            .map(|(_, d)| d)
+    }
+}
+
+/// Fairness: rate-limit individual clients to `per_client_cap` bytes per
+/// peer; among feasible peers pick the one where this client holds the
+/// least.
+#[derive(Debug, Clone)]
+pub struct RateLimitFairness {
+    pub per_client_cap: u64,
+}
+
+impl PlacementPolicy for RateLimitFairness {
+    fn name(&self) -> &'static str {
+        "fairness"
+    }
+
+    fn select(&mut self, req: &PlacementRequest<'_>) -> Option<usize> {
+        req.feasible()
+            .filter(|v| v.our_bytes + req.size <= self.per_client_cap)
+            .min_by_key(|v| (v.our_bytes, v.device))
+            .map(|v| v.device)
+    }
+}
+
+/// Interference: avoid peers whose links already move a lot of data.
+#[derive(Debug, Clone)]
+pub struct InterferenceAware {
+    /// Peers above this bytes/sec demand are considered hot.
+    pub bw_demand_ceiling: f64,
+}
+
+impl Default for InterferenceAware {
+    fn default() -> Self {
+        Self { bw_demand_ceiling: 100e9 } // 100 GB/s
+    }
+}
+
+impl PlacementPolicy for InterferenceAware {
+    fn name(&self) -> &'static str {
+        "interference"
+    }
+
+    fn select(&mut self, req: &PlacementRequest<'_>) -> Option<usize> {
+        let cool =
+            req.feasible().filter(|v| v.bw_demand < self.bw_demand_ceiling).min_by(|a, b| {
+                a.bw_demand.partial_cmp(&b.bw_demand).unwrap().then(a.device.cmp(&b.device))
+            });
+        cool.map(|v| v.device)
+            // All peers hot: fall back to the least-hot feasible one.
+            .or_else(|| {
+                req.feasible()
+                    .min_by(|a, b| a.bw_demand.partial_cmp(&b.bw_demand).unwrap())
+                    .map(|v| v.device)
+            })
+    }
+}
+
+/// Stability: prefer peers with low tenant churn (fewer future
+/// revocations).
+#[derive(Debug, Default, Clone)]
+pub struct StabilityAware;
+
+impl PlacementPolicy for StabilityAware {
+    fn name(&self) -> &'static str {
+        "stability"
+    }
+
+    fn select(&mut self, req: &PlacementRequest<'_>) -> Option<usize> {
+        req.feasible()
+            .min_by(|a, b| {
+                a.churn_per_sec
+                    .partial_cmp(&b.churn_per_sec)
+                    .unwrap()
+                    .then(a.device.cmp(&b.device))
+            })
+            .map(|v| v.device)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::{Clock, Topology};
+
+    fn view(device: usize, harvestable: u64, largest: u64) -> PeerView {
+        PeerView {
+            device,
+            harvestable,
+            largest_free: largest,
+            churn_per_sec: 0.0,
+            bw_demand: 0.0,
+            our_bytes: 0,
+        }
+    }
+
+    fn topo(n: usize) -> Topology {
+        Topology::h100_node(Clock::new(), n)
+    }
+
+    fn req<'a>(size: u64, hints: AllocHints, views: &'a [PeerView], topo: &'a Topology)
+        -> PlacementRequest<'a> {
+        PlacementRequest { size, hints, views, topo }
+    }
+
+    #[test]
+    fn best_fit_minimises_leftover() {
+        let t = topo(4);
+        let views =
+            vec![view(0, 1000, 1000), view(1, 500, 500), view(2, 300, 300), view(3, 100, 100)];
+        let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+        let r = req(250, hints, &views, &t);
+        assert_eq!(BestFit.select(&r), Some(2), "300-byte segment leaves least");
+    }
+
+    #[test]
+    fn compute_gpu_never_selected() {
+        let t = topo(2);
+        let views = vec![view(0, 1000, 1000), view(1, 10, 10)];
+        let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+        let r = req(100, hints, &views, &t);
+        assert_eq!(BestFit.select(&r), None, "only feasible peer is the compute GPU itself");
+    }
+
+    #[test]
+    fn infeasible_when_fragmented() {
+        let t = topo(2);
+        // plenty harvestable but no contiguous segment
+        let views = vec![view(0, 0, 0), view(1, 1000, 50)];
+        let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+        let r = req(100, hints, &views, &t);
+        assert_eq!(BestFit.select(&r), None);
+    }
+
+    #[test]
+    fn first_available_picks_lowest_index() {
+        let t = topo(3);
+        let views = vec![view(0, 0, 0), view(1, 500, 500), view(2, 500, 500)];
+        let r = req(100, AllocHints::default(), &views, &t);
+        assert_eq!(FirstAvailable.select(&r), Some(1));
+    }
+
+    #[test]
+    fn locality_needs_compute_hint() {
+        let t = topo(3);
+        let views = vec![view(1, 500, 500), view(2, 500, 500)];
+        let r = req(100, AllocHints::default(), &views, &t);
+        assert_eq!(LocalityAware.select(&r), None);
+        let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+        let r = req(100, hints, &views, &t);
+        // symmetric topology: ties break deterministically to a valid peer
+        let got = LocalityAware.select(&r).unwrap();
+        assert!(got == 1 || got == 2);
+    }
+
+    #[test]
+    fn fairness_caps_and_spreads() {
+        let t = topo(3);
+        let mut v1 = view(1, 500, 500);
+        v1.our_bytes = 400;
+        let mut v2 = view(2, 500, 500);
+        v2.our_bytes = 100;
+        let views = vec![view(0, 0, 0), v1, v2];
+        let mut pol = RateLimitFairness { per_client_cap: 450 };
+        let r = req(100, AllocHints::default(), &views, &t);
+        // peer1 would exceed the cap (400+100 > 450): must pick peer2.
+        assert_eq!(pol.select(&r), Some(2));
+        let mut pol = RateLimitFairness { per_client_cap: 80 };
+        let r = req(100, AllocHints::default(), &views, &t);
+        assert_eq!(pol.select(&r), None, "cap below request size rejects");
+    }
+
+    #[test]
+    fn interference_prefers_cool_peer() {
+        let t = topo(3);
+        let mut hot = view(1, 500, 500);
+        hot.bw_demand = 500e9;
+        let mut cool = view(2, 500, 500);
+        cool.bw_demand = 1e9;
+        let views = vec![view(0, 0, 0), hot, cool];
+        let r = req(100, AllocHints::default(), &views, &t);
+        assert_eq!(InterferenceAware::default().select(&r), Some(2));
+    }
+
+    #[test]
+    fn interference_falls_back_when_all_hot() {
+        let t = topo(3);
+        let mut a = view(1, 500, 500);
+        a.bw_demand = 500e9;
+        let mut b = view(2, 500, 500);
+        b.bw_demand = 300e9;
+        let views = vec![a, b];
+        let r = req(100, AllocHints::default(), &views, &t);
+        assert_eq!(InterferenceAware::default().select(&r), Some(2), "least-hot fallback");
+    }
+
+    #[test]
+    fn stability_prefers_placid_peer() {
+        let t = topo(3);
+        let mut churny = view(1, 500, 500);
+        churny.churn_per_sec = 0.4;
+        let placid = view(2, 500, 500);
+        let views = vec![view(0, 0, 0), churny, placid];
+        let r = req(100, AllocHints::default(), &views, &t);
+        assert_eq!(StabilityAware.select(&r), Some(2));
+    }
+}

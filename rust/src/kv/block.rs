@@ -1,0 +1,49 @@
+//! Logical KV blocks (vLLM-style fixed-size paging, §5.2).
+
+use crate::memsim::Ns;
+
+/// Globally unique logical block id (never reused).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct BlockId(pub u64);
+
+/// Sequence (request) id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SeqId(pub u64);
+
+/// Metadata for one logical block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvBlockMeta {
+    pub seq: SeqId,
+    /// Position of this block within its sequence (0-based).
+    pub index_in_seq: u32,
+    /// Tokens currently written into the block (≤ block size).
+    pub tokens: u32,
+    pub last_access: Ns,
+    pub access_count: u64,
+}
+
+impl KvBlockMeta {
+    pub fn new(seq: SeqId, index_in_seq: u32, now: Ns) -> Self {
+        Self { seq, index_in_seq, tokens: 0, last_access: now, access_count: 0 }
+    }
+
+    pub fn touch(&mut self, now: Ns) {
+        self.last_access = now;
+        self.access_count += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn touch_updates_recency_and_count() {
+        let mut m = KvBlockMeta::new(SeqId(1), 0, 10);
+        assert_eq!(m.access_count, 0);
+        m.touch(50);
+        m.touch(70);
+        assert_eq!(m.last_access, 70);
+        assert_eq!(m.access_count, 2);
+    }
+}

@@ -1,0 +1,247 @@
+//! The unified KV block table (§5.2): logical block id → residency
+//! across local HBM / peer GPU / host DRAM, plus `Dropped` for
+//! lossy-revoked blocks awaiting recomputation.
+
+use super::block::{BlockId, KvBlockMeta, SeqId};
+use crate::harvest::api::HandleId;
+use crate::memsim::Ns;
+use std::collections::BTreeMap;
+
+/// Where a logical block's bytes currently live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockResidency {
+    /// In the compute GPU's KV pool — attention can read it directly.
+    Local,
+    /// Cached in peer HBM under a live harvest handle (lossy: no other
+    /// copy exists unless it was host-materialised first).
+    Peer { handle: HandleId, peer: usize },
+    /// Authoritative copy in host DRAM (vanilla-vLLM offload target).
+    Host,
+    /// Lost (peer revocation of a lossy block); must be recomputed.
+    Dropped,
+}
+
+/// The table. One entry per logical block, with per-sequence ordering and
+/// a reverse handle index for revocation callbacks.
+#[derive(Debug, Clone, Default)]
+pub struct UnifiedBlockTable {
+    entries: BTreeMap<BlockId, (KvBlockMeta, BlockResidency)>,
+    by_seq: BTreeMap<SeqId, Vec<BlockId>>,
+    by_handle: BTreeMap<HandleId, BlockId>,
+    next_id: u64,
+}
+
+impl UnifiedBlockTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a fresh (local) block to `seq`.
+    pub fn new_block(&mut self, seq: SeqId, now: Ns) -> BlockId {
+        let id = BlockId(self.next_id);
+        self.next_id += 1;
+        let index = self.by_seq.get(&seq).map(|v| v.len() as u32).unwrap_or(0);
+        self.entries.insert(id, (KvBlockMeta::new(seq, index, now), BlockResidency::Local));
+        self.by_seq.entry(seq).or_default().push(id);
+        id
+    }
+
+    pub fn meta(&self, id: BlockId) -> Option<&KvBlockMeta> {
+        self.entries.get(&id).map(|(m, _)| m)
+    }
+
+    pub fn meta_mut(&mut self, id: BlockId) -> Option<&mut KvBlockMeta> {
+        self.entries.get_mut(&id).map(|(m, _)| m)
+    }
+
+    pub fn residency(&self, id: BlockId) -> Option<BlockResidency> {
+        self.entries.get(&id).map(|(_, r)| *r)
+    }
+
+    /// Transition a block's residency, maintaining the handle index.
+    pub fn set_residency(&mut self, id: BlockId, res: BlockResidency) {
+        let Some((_, cur)) = self.entries.get_mut(&id) else { return };
+        if let BlockResidency::Peer { handle, .. } = *cur {
+            self.by_handle.remove(&handle);
+        }
+        if let BlockResidency::Peer { handle, .. } = res {
+            self.by_handle.insert(handle, id);
+        }
+        self.entries.get_mut(&id).unwrap().1 = res;
+    }
+
+    /// Revocation path: the peer copy under `handle` is gone. Lossy KV
+    /// semantics → the block becomes `Dropped`. Returns the block.
+    pub fn drop_by_handle(&mut self, handle: HandleId) -> Option<BlockId> {
+        let id = self.by_handle.remove(&handle)?;
+        self.entries.get_mut(&id)?.1 = BlockResidency::Dropped;
+        Some(id)
+    }
+
+    /// Remove a whole finished sequence; returns its blocks (the caller
+    /// releases physical resources).
+    pub fn remove_seq(&mut self, seq: SeqId) -> Vec<(BlockId, BlockResidency)> {
+        let ids = self.by_seq.remove(&seq).unwrap_or_default();
+        ids.into_iter()
+            .filter_map(|id| {
+                let (_, r) = self.entries.remove(&id)?;
+                if let BlockResidency::Peer { handle, .. } = r {
+                    self.by_handle.remove(&handle);
+                }
+                Some((id, r))
+            })
+            .collect()
+    }
+
+    pub fn seq_blocks(&self, seq: SeqId) -> &[BlockId] {
+        self.by_seq.get(&seq).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn seqs(&self) -> impl Iterator<Item = SeqId> + '_ {
+        self.by_seq.keys().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn count_by_residency(&self) -> (usize, usize, usize, usize) {
+        let mut c = (0, 0, 0, 0);
+        for (_, r) in self.entries.values() {
+            match r {
+                BlockResidency::Local => c.0 += 1,
+                BlockResidency::Peer { .. } => c.1 += 1,
+                BlockResidency::Host => c.2 += 1,
+                BlockResidency::Dropped => c.3 += 1,
+            }
+        }
+        c
+    }
+
+    /// Blocks currently local (eviction candidates), with metadata.
+    pub fn local_blocks(&self) -> impl Iterator<Item = (BlockId, &KvBlockMeta)> + '_ {
+        self.entries.iter().filter_map(|(&id, (m, r))| {
+            matches!(r, BlockResidency::Local).then_some((id, m))
+        })
+    }
+
+    /// Invariants (property-tested): reverse handle index is exactly the
+    /// set of Peer entries; per-seq lists are dense, ordered, and agree
+    /// with metadata.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (&h, &id) in &self.by_handle {
+            match self.residency(id) {
+                Some(BlockResidency::Peer { handle, .. }) if handle == h => {}
+                other => return Err(format!("by_handle {h:?} -> {id:?} but {other:?}")),
+            }
+        }
+        for (&id, (m, r)) in &self.entries {
+            if let BlockResidency::Peer { handle, .. } = r {
+                if self.by_handle.get(handle) != Some(&id) {
+                    return Err(format!("peer block {id:?} missing reverse index"));
+                }
+            }
+            let list = self.seq_blocks(m.seq);
+            if list.get(m.index_in_seq as usize) != Some(&id) {
+                return Err(format!("block {id:?} not at its index in seq list"));
+            }
+        }
+        for (&seq, ids) in &self.by_seq {
+            for (i, id) in ids.iter().enumerate() {
+                let m = self.meta(*id).ok_or(format!("seq {seq:?} lists dead block"))?;
+                if m.seq != seq || m.index_in_seq as usize != i {
+                    return Err(format!("seq list disagrees with meta for {id:?}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_append_in_order() {
+        let mut t = UnifiedBlockTable::new();
+        let s = SeqId(1);
+        let a = t.new_block(s, 0);
+        let b = t.new_block(s, 1);
+        assert_eq!(t.seq_blocks(s), &[a, b]);
+        assert_eq!(t.meta(b).unwrap().index_in_seq, 1);
+        assert_eq!(t.residency(a), Some(BlockResidency::Local));
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn residency_transitions_maintain_handle_index() {
+        let mut t = UnifiedBlockTable::new();
+        let s = SeqId(1);
+        let a = t.new_block(s, 0);
+        let h = HandleId(5);
+        t.set_residency(a, BlockResidency::Peer { handle: h, peer: 1 });
+        t.check_invariants().unwrap();
+        t.set_residency(a, BlockResidency::Local);
+        t.check_invariants().unwrap();
+        // handle mapping gone after leaving Peer
+        assert_eq!(t.drop_by_handle(h), None);
+    }
+
+    #[test]
+    fn drop_by_handle_marks_dropped() {
+        let mut t = UnifiedBlockTable::new();
+        let a = t.new_block(SeqId(1), 0);
+        let h = HandleId(9);
+        t.set_residency(a, BlockResidency::Peer { handle: h, peer: 1 });
+        assert_eq!(t.drop_by_handle(h), Some(a));
+        assert_eq!(t.residency(a), Some(BlockResidency::Dropped));
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_seq_cleans_everything() {
+        let mut t = UnifiedBlockTable::new();
+        let s = SeqId(2);
+        let a = t.new_block(s, 0);
+        let b = t.new_block(s, 0);
+        let h = HandleId(1);
+        t.set_residency(b, BlockResidency::Peer { handle: h, peer: 1 });
+        let removed = t.remove_seq(s);
+        assert_eq!(removed.len(), 2);
+        assert!(t.is_empty());
+        assert_eq!(t.drop_by_handle(h), None, "handle index cleaned");
+        assert_eq!(t.seq_blocks(s), &[] as &[BlockId]);
+        let _ = a;
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn counts_by_residency() {
+        let mut t = UnifiedBlockTable::new();
+        let s = SeqId(3);
+        let a = t.new_block(s, 0);
+        let b = t.new_block(s, 0);
+        let c = t.new_block(s, 0);
+        t.set_residency(a, BlockResidency::Host);
+        t.set_residency(b, BlockResidency::Dropped);
+        let _ = c;
+        assert_eq!(t.count_by_residency(), (1, 0, 1, 1));
+    }
+
+    #[test]
+    fn separate_seqs_independent() {
+        let mut t = UnifiedBlockTable::new();
+        let a = t.new_block(SeqId(1), 0);
+        let b = t.new_block(SeqId(2), 0);
+        assert_eq!(t.meta(a).unwrap().index_in_seq, 0);
+        assert_eq!(t.meta(b).unwrap().index_in_seq, 0);
+        t.remove_seq(SeqId(1));
+        assert_eq!(t.seq_blocks(SeqId(2)), &[b]);
+        t.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,372 @@
+//! Eviction policies for the local KV pool, plus the §8 sliding-window
+//! policy switcher ("a sliding window-like algorithm that monitors a
+//! system's performance and hot-swaps policies").
+
+use super::block::BlockId;
+use crate::memsim::Ns;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Tracks local blocks and picks eviction victims.
+pub trait EvictionPolicy {
+    fn name(&self) -> &'static str;
+    /// A block became local.
+    fn insert(&mut self, id: BlockId, now: Ns);
+    /// A local block was accessed.
+    fn touch(&mut self, id: BlockId, now: Ns);
+    /// A block left the local pool (evicted or sequence finished).
+    fn remove(&mut self, id: BlockId);
+    /// Pick (without removing) the current victim.
+    fn victim(&mut self) -> Option<BlockId>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Least-recently-used.
+#[derive(Debug, Default)]
+pub struct Lru {
+    by_recency: BTreeSet<(Ns, BlockId)>,
+    stamp: BTreeMap<BlockId, Ns>,
+    tick: u64,
+}
+
+impl Lru {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Monotone stamp even when `now` repeats (virtual time can stall).
+    fn next_stamp(&mut self, now: Ns) -> Ns {
+        self.tick += 1;
+        now.max(self.tick)
+    }
+}
+
+impl EvictionPolicy for Lru {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn insert(&mut self, id: BlockId, now: Ns) {
+        let s = self.next_stamp(now);
+        self.stamp.insert(id, s);
+        self.by_recency.insert((s, id));
+    }
+
+    fn touch(&mut self, id: BlockId, now: Ns) {
+        if let Some(&old) = self.stamp.get(&id) {
+            self.by_recency.remove(&(old, id));
+            let s = self.next_stamp(now);
+            self.stamp.insert(id, s);
+            self.by_recency.insert((s, id));
+        }
+    }
+
+    fn remove(&mut self, id: BlockId) {
+        if let Some(old) = self.stamp.remove(&id) {
+            self.by_recency.remove(&(old, id));
+        }
+    }
+
+    fn victim(&mut self) -> Option<BlockId> {
+        self.by_recency.first().map(|&(_, id)| id)
+    }
+
+    fn len(&self) -> usize {
+        self.stamp.len()
+    }
+}
+
+/// First-in-first-out.
+#[derive(Debug, Default)]
+pub struct Fifo {
+    queue: VecDeque<BlockId>,
+    present: BTreeSet<BlockId>,
+}
+
+impl Fifo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl EvictionPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn insert(&mut self, id: BlockId, _now: Ns) {
+        if self.present.insert(id) {
+            self.queue.push_back(id);
+        }
+    }
+
+    fn touch(&mut self, _id: BlockId, _now: Ns) {}
+
+    fn remove(&mut self, id: BlockId) {
+        if self.present.remove(&id) {
+            self.queue.retain(|&b| b != id);
+        }
+    }
+
+    fn victim(&mut self) -> Option<BlockId> {
+        self.queue.front().copied()
+    }
+
+    fn len(&self) -> usize {
+        self.present.len()
+    }
+}
+
+/// Least-frequently-used (ties by id = age).
+#[derive(Debug, Default)]
+pub struct Lfu {
+    counts: BTreeMap<BlockId, u64>,
+}
+
+impl Lfu {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl EvictionPolicy for Lfu {
+    fn name(&self) -> &'static str {
+        "lfu"
+    }
+
+    fn insert(&mut self, id: BlockId, _now: Ns) {
+        self.counts.entry(id).or_insert(0);
+    }
+
+    fn touch(&mut self, id: BlockId, _now: Ns) {
+        if let Some(c) = self.counts.get_mut(&id) {
+            *c += 1;
+        }
+    }
+
+    fn remove(&mut self, id: BlockId) {
+        self.counts.remove(&id);
+    }
+
+    fn victim(&mut self) -> Option<BlockId> {
+        self.counts.iter().min_by_key(|&(&id, &c)| (c, id)).map(|(&id, _)| id)
+    }
+
+    fn len(&self) -> usize {
+        self.counts.len()
+    }
+}
+
+/// §8 future-work: monitor reload rate over a sliding window and
+/// hot-swap between candidate policies when the current one
+/// underperforms. The switcher wraps two policies, mirrors every event
+/// into both (so the standby is warm), and delegates victim selection to
+/// the active one.
+pub struct PolicySwitcher {
+    policies: Vec<Box<dyn EvictionPolicy>>,
+    active: usize,
+    window: usize,
+    /// Sliding outcome window: true = access hit local, false = miss.
+    outcomes: VecDeque<bool>,
+    /// Miss-rate threshold that triggers a swap.
+    swap_threshold: f64,
+    /// Cooldown (events) after a swap before another is allowed.
+    cooldown: usize,
+    since_swap: usize,
+    pub swaps: u64,
+}
+
+impl PolicySwitcher {
+    pub fn new(policies: Vec<Box<dyn EvictionPolicy>>, window: usize, swap_threshold: f64) -> Self {
+        assert!(!policies.is_empty());
+        Self {
+            policies,
+            active: 0,
+            window: window.max(1),
+            outcomes: VecDeque::new(),
+            swap_threshold,
+            cooldown: window.max(1),
+            since_swap: 0,
+            swaps: 0,
+        }
+    }
+
+    pub fn active_name(&self) -> &'static str {
+        self.policies[self.active].name()
+    }
+
+    /// Report an access outcome; may rotate the active policy.
+    pub fn report(&mut self, hit: bool) {
+        self.outcomes.push_back(hit);
+        if self.outcomes.len() > self.window {
+            self.outcomes.pop_front();
+        }
+        self.since_swap += 1;
+        if self.outcomes.len() == self.window && self.since_swap >= self.cooldown {
+            let misses = self.outcomes.iter().filter(|&&h| !h).count();
+            if misses as f64 / self.window as f64 > self.swap_threshold {
+                self.active = (self.active + 1) % self.policies.len();
+                self.swaps += 1;
+                self.since_swap = 0;
+                self.outcomes.clear();
+            }
+        }
+    }
+}
+
+impl EvictionPolicy for PolicySwitcher {
+    fn name(&self) -> &'static str {
+        "switcher"
+    }
+
+    fn insert(&mut self, id: BlockId, now: Ns) {
+        for p in &mut self.policies {
+            p.insert(id, now);
+        }
+    }
+
+    fn touch(&mut self, id: BlockId, now: Ns) {
+        for p in &mut self.policies {
+            p.touch(id, now);
+        }
+    }
+
+    fn remove(&mut self, id: BlockId) {
+        for p in &mut self.policies {
+            p.remove(id);
+        }
+    }
+
+    fn victim(&mut self) -> Option<BlockId> {
+        self.policies[self.active].victim()
+    }
+
+    fn len(&self) -> usize {
+        self.policies[self.active].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b(i: u64) -> BlockId {
+        BlockId(i)
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut p = Lru::new();
+        p.insert(b(1), 10);
+        p.insert(b(2), 20);
+        p.insert(b(3), 30);
+        p.touch(b(1), 40); // 2 is now oldest
+        assert_eq!(p.victim(), Some(b(2)));
+        p.remove(b(2));
+        assert_eq!(p.victim(), Some(b(3)));
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn lru_handles_equal_timestamps() {
+        let mut p = Lru::new();
+        p.insert(b(1), 0);
+        p.insert(b(2), 0);
+        p.insert(b(3), 0);
+        assert_eq!(p.victim(), Some(b(1)), "insertion order breaks ties");
+        p.touch(b(1), 0);
+        assert_eq!(p.victim(), Some(b(2)));
+    }
+
+    #[test]
+    fn fifo_ignores_touches() {
+        let mut p = Fifo::new();
+        p.insert(b(1), 0);
+        p.insert(b(2), 0);
+        p.touch(b(1), 100);
+        assert_eq!(p.victim(), Some(b(1)));
+    }
+
+    #[test]
+    fn lfu_evicts_cold_block() {
+        let mut p = Lfu::new();
+        p.insert(b(1), 0);
+        p.insert(b(2), 0);
+        p.insert(b(3), 0);
+        p.touch(b(1), 1);
+        p.touch(b(1), 2);
+        p.touch(b(3), 3);
+        assert_eq!(p.victim(), Some(b(2)));
+    }
+
+    #[test]
+    fn remove_unknown_is_noop() {
+        let mut p = Lru::new();
+        p.insert(b(1), 0);
+        p.remove(b(99));
+        p.touch(b(99), 5);
+        assert_eq!(p.len(), 1);
+        let mut f = Fifo::new();
+        f.remove(b(1));
+        assert_eq!(f.victim(), None);
+    }
+
+    #[test]
+    fn switcher_swaps_on_sustained_misses() {
+        let mut s = PolicySwitcher::new(
+            vec![Box::new(Lru::new()), Box::new(Fifo::new())],
+            10,
+            0.5,
+        );
+        assert_eq!(s.active_name(), "lru");
+        for _ in 0..10 {
+            s.report(false);
+        }
+        assert_eq!(s.active_name(), "fifo");
+        assert_eq!(s.swaps, 1);
+        // cooldown: immediate further misses don't swap right away
+        for _ in 0..5 {
+            s.report(false);
+        }
+        assert_eq!(s.swaps, 1);
+        for _ in 0..5 {
+            s.report(false);
+        }
+        assert_eq!(s.swaps, 2, "swaps again after full window of misses");
+    }
+
+    #[test]
+    fn switcher_keeps_policy_on_hits() {
+        let mut s = PolicySwitcher::new(
+            vec![Box::new(Lru::new()), Box::new(Fifo::new())],
+            8,
+            0.5,
+        );
+        for _ in 0..100 {
+            s.report(true);
+        }
+        assert_eq!(s.swaps, 0);
+        assert_eq!(s.active_name(), "lru");
+    }
+
+    #[test]
+    fn switcher_mirrors_state_into_standby() {
+        let mut s = PolicySwitcher::new(
+            vec![Box::new(Lru::new()), Box::new(Fifo::new())],
+            4,
+            0.5,
+        );
+        s.insert(b(1), 1);
+        s.insert(b(2), 2);
+        s.touch(b(1), 3);
+        // swap to fifo
+        for _ in 0..4 {
+            s.report(false);
+        }
+        assert_eq!(s.active_name(), "fifo");
+        // fifo was warm: victim is first-inserted
+        assert_eq!(s.victim(), Some(b(1)));
+    }
+}

@@ -1,0 +1,35 @@
+//! Paged KV cache with Harvest offload (paper §5).
+//!
+//! Extends a vLLM-style paged KV manager with the paper's §5.2 design:
+//!
+//! * [`block`] — logical KV blocks (fixed token granularity) + metadata.
+//! * [`block_table`] — the *unified KV block table* mapping logical block
+//!   ids to their current residency across local HBM, peer GPU memory,
+//!   or host DRAM (plus `Dropped` for lossy-revoked blocks awaiting
+//!   recomputation).
+//! * [`eviction`] — pluggable eviction policies (LRU/FIFO/LFU) and the
+//!   §8 sliding-window policy switcher that monitors hit rate and
+//!   hot-swaps policies.
+//! * [`manager`] — the `KvOffloadManager`: decides when blocks are
+//!   offloaded/reloaded/evicted, and the per-device `OffloadingHandler`
+//!   that executes the data movement (scattered DMA batched into ~4 MiB
+//!   descriptors).
+//! * [`recompute`] — the recompute-vs-fetch decision (§5.1: "it can be
+//!   more efficient to recompute the KV cache instead of fetching it").
+//!
+//! Unlike MoE weights, KV state is treated as **lossy** on the peer tier
+//! (§5.2): revocation drops the block and the table entry falls to
+//! `Dropped`; the next access recomputes it (or reloads from host if the
+//! block was host-materialised at eviction time).
+
+pub mod block;
+pub mod block_table;
+pub mod eviction;
+pub mod manager;
+pub mod recompute;
+
+pub use block::{BlockId, KvBlockMeta, SeqId};
+pub use block_table::{BlockResidency, UnifiedBlockTable};
+pub use eviction::{EvictionPolicy, Fifo, Lfu, Lru, PolicySwitcher};
+pub use manager::{KvConfig, KvOffloadManager, KvStats, OffloadingHandler};
+pub use recompute::RecomputeModel;

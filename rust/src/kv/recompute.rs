@@ -1,0 +1,74 @@
+//! Recompute-vs-fetch (§5.1: "In extreme cases, it can be more efficient
+//! to recompute the KV cache instead of fetching it from the slow path
+//! after offloading" — the KVPR observation).
+//!
+//! Recomputing a dropped block means re-running prefill for its tokens:
+//! cost ≈ 2 × active-params FLOPs per token. The decision compares that
+//! against the estimated transfer latency of the candidate tier.
+
+use crate::memsim::Ns;
+
+/// Cost model for KV recomputation.
+#[derive(Debug, Clone, Copy)]
+pub struct RecomputeModel {
+    /// Active parameters of the serving model (decode path), in units of
+    /// parameters (not billions).
+    pub active_params: f64,
+    /// Effective prefill FLOPs/s (prefill GEMMs batch well; higher MFU
+    /// than decode).
+    pub eff_flops: f64,
+}
+
+impl RecomputeModel {
+    pub fn new(active_params_b: f64) -> Self {
+        Self { active_params: active_params_b * 1e9, eff_flops: 600e12 }
+    }
+
+    /// Time to recompute KV for `tokens` tokens (forward pass ≈ 2 FLOPs
+    /// per parameter per token).
+    pub fn recompute_ns(&self, tokens: u64) -> Ns {
+        let flops = 2.0 * self.active_params * tokens as f64;
+        (flops / self.eff_flops * 1e9) as Ns
+    }
+
+    /// §5.2: "triggering a fallback to host DRAM or recomputation when
+    /// more efficient". True if recomputing `tokens` beats a transfer
+    /// estimated at `fetch_ns`.
+    pub fn prefer_recompute(&self, tokens: u64, fetch_ns: Ns) -> bool {
+        self.recompute_ns(tokens) < fetch_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::interconnect::LinkModel;
+
+    #[test]
+    fn recompute_scales_with_tokens() {
+        let m = RecomputeModel::new(37.0); // DeepSeek-V3-class active
+        assert!(m.recompute_ns(32) > m.recompute_ns(16));
+        // 1 token ≈ 2*37e9/600e12 s ≈ 123 µs
+        let one = m.recompute_ns(1);
+        assert!((100_000..150_000).contains(&one), "{one}");
+    }
+
+    #[test]
+    fn small_blocks_prefer_recompute_over_pcie_only_when_cheap() {
+        let m = RecomputeModel::new(2.7); // Qwen2-MoE-class active
+        let pcie = LinkModel::pcie5_host();
+        // a 16-token block of a small model: recompute ~144µs
+        let fetch = pcie.latency(16 * 70_000); // ~1.1 MB block
+        assert!(m.prefer_recompute(16, fetch) == (m.recompute_ns(16) < fetch));
+        // huge fetches always lose to recompute for small models
+        assert!(m.prefer_recompute(16, pcie.latency(1 << 30)));
+    }
+
+    #[test]
+    fn fetch_preferred_for_big_models_fast_links() {
+        let m = RecomputeModel::new(675.0); // Mistral-Large-3-class
+        let nv = LinkModel::nvlink_h100();
+        let fetch = nv.latency(16 * 393_216);
+        assert!(!m.prefer_recompute(16, fetch), "NVLink fetch beats recomputing 675B model");
+    }
+}

@@ -1,0 +1,41 @@
+//! # Harvest — opportunistic peer-to-peer GPU caching for LLM inference
+//!
+//! Reproduction of *"Harvest: Opportunistic Peer-to-Peer GPU Caching for
+//! LLM Inference"* (Gopal & Kaffes, 2026) as a three-layer Rust + JAX +
+//! Pallas serving framework.
+//!
+//! Harvest treats spare HBM on NVLink-connected peer GPUs as a
+//! *best-effort, revocable* cache tier for LLM inference state — MoE
+//! expert weights and paged KV-cache blocks — replacing slow PCIe
+//! host-DRAM fetches with fast peer-to-peer GPU copies. Correctness never
+//! depends on the peer tier: every cached object is either backed by an
+//! authoritative host copy or is lossy and reconstructible.
+//!
+//! ## Crate layout
+//!
+//! | module | role |
+//! |---|---|
+//! | [`memsim`] | calibrated multi-GPU node simulation: HBM allocator, NVLink/PCIe interconnect model, virtual clock, async DMA, tenant pressure |
+//! | [`harvest`] | the paper's contribution: `harvest_alloc` / `harvest_free` / `harvest_register_cb`, placement policies, revocation pipeline, MIG isolation |
+//! | [`moe`] | MoE serving path: Table-1 model registry, routing simulator, expert residency map + rebalancer, CGOPipe-style pipeline |
+//! | [`kv`] | paged KV cache: blocks, unified block table, `KvOffloadManager`, per-device `OffloadingHandler`, eviction policies |
+//! | [`server`] | serving coordinator: requests, continuous batcher, FCFS + completely-fair schedulers, engine, metrics |
+//! | [`runtime`] | PJRT bridge: load AOT `artifacts/*.hlo.txt` (lowered from JAX/Pallas) and execute on the request path |
+//! | [`trace`] | Alibaba-gpu-v2020-like cluster trace synthesis (Fig. 2) |
+//! | [`config`] | TOML config system + deployment presets |
+//! | [`util`] | deterministic RNG, distributions, stats/histograms |
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
+//! request path is pure Rust via the `xla` crate's PJRT CPU client.
+
+pub mod config;
+pub mod harvest;
+pub mod kv;
+pub mod memsim;
+pub mod moe;
+pub mod runtime;
+pub mod server;
+pub mod trace;
+pub mod util;
+
+

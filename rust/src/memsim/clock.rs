@@ -1,0 +1,94 @@
+//! Virtual nanosecond clock shared by all simulation components.
+//!
+//! The simulation is single-threaded and deterministic: components advance
+//! the clock explicitly (`advance`, `advance_to`) and resources model
+//! contention by tracking their own `busy_until` horizon against it.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+/// Virtual time in nanoseconds.
+pub type Ns = u64;
+
+/// Shared, cheap-to-clone handle to the simulation's current time.
+#[derive(Debug, Clone, Default)]
+pub struct Clock(Rc<Cell<Ns>>);
+
+impl Clock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now(&self) -> Ns {
+        self.0.get()
+    }
+
+    /// Move time forward by `d` ns; returns the new now.
+    pub fn advance(&self, d: Ns) -> Ns {
+        let t = self.0.get() + d;
+        self.0.set(t);
+        t
+    }
+
+    /// Move time forward to `t` (no-op if `t` is in the past — virtual
+    /// time never goes backwards).
+    pub fn advance_to(&self, t: Ns) -> Ns {
+        if t > self.0.get() {
+            self.0.set(t);
+        }
+        self.0.get()
+    }
+}
+
+/// Convert seconds to [`Ns`].
+pub fn secs(s: f64) -> Ns {
+    (s * 1e9) as Ns
+}
+
+/// Convert microseconds to [`Ns`].
+pub fn micros(us: f64) -> Ns {
+    (us * 1e3) as Ns
+}
+
+/// Convert [`Ns`] to seconds.
+pub fn to_secs(ns: Ns) -> f64 {
+    ns as f64 / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_zero_and_advances() {
+        let c = Clock::new();
+        assert_eq!(c.now(), 0);
+        assert_eq!(c.advance(10), 10);
+        assert_eq!(c.now(), 10);
+    }
+
+    #[test]
+    fn clones_share_time() {
+        let a = Clock::new();
+        let b = a.clone();
+        a.advance(5);
+        assert_eq!(b.now(), 5);
+        b.advance_to(100);
+        assert_eq!(a.now(), 100);
+    }
+
+    #[test]
+    fn advance_to_never_rewinds() {
+        let c = Clock::new();
+        c.advance_to(50);
+        assert_eq!(c.advance_to(20), 50);
+        assert_eq!(c.now(), 50);
+    }
+
+    #[test]
+    fn unit_helpers() {
+        assert_eq!(secs(1.5), 1_500_000_000);
+        assert_eq!(micros(2.0), 2_000);
+        assert!((to_secs(500_000_000) - 0.5).abs() < 1e-12);
+    }
+}

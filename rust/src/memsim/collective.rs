@@ -1,0 +1,191 @@
+//! Background collective traffic — the §7 limitation the paper does not
+//! evaluate: "scenarios with significant NVLink congestion from
+//! concurrent model-parallel collectives or other tenants, which could
+//! reduce the bandwidth available for paging".
+//!
+//! A [`CollectiveTraffic`] generator pre-schedules periodic transfers on
+//! the GPU↔GPU links (ring all-reduce or all-to-all patterns). Because
+//! [`Topology::schedule`] serializes per-link FIFO, Harvest's own copies
+//! then queue behind the collective's, exactly like DMA engines sharing
+//! an NVLink bridge.
+
+use super::clock::Ns;
+use super::interconnect::{DeviceId, Topology};
+
+/// Communication pattern of the background job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectivePattern {
+    /// Ring all-reduce: GPU i → (i+1) mod n, every step.
+    RingAllReduce,
+    /// All-to-all (MoE dispatch-style): every ordered pair, every step.
+    AllToAll,
+}
+
+/// A periodic background collective on the node's GPUs.
+#[derive(Debug, Clone)]
+pub struct CollectiveTraffic {
+    pub pattern: CollectivePattern,
+    /// GPUs participating (e.g. a tensor-parallel group).
+    pub gpus: Vec<usize>,
+    /// Bytes each participant sends per step (per destination for
+    /// all-to-all).
+    pub bytes_per_step: u64,
+    /// Virtual time between step starts.
+    pub period_ns: Ns,
+    /// Next step start time (advanced by [`Self::inject_until`]).
+    next_step: Ns,
+    /// Totals for reporting.
+    pub steps_injected: u64,
+    pub bytes_injected: u64,
+}
+
+impl CollectiveTraffic {
+    pub fn new(
+        pattern: CollectivePattern,
+        gpus: Vec<usize>,
+        bytes_per_step: u64,
+        period_ns: Ns,
+    ) -> Self {
+        assert!(gpus.len() >= 2, "collective needs >= 2 GPUs");
+        assert!(period_ns > 0);
+        Self {
+            pattern,
+            gpus,
+            bytes_per_step,
+            period_ns,
+            next_step: 0,
+            steps_injected: 0,
+            bytes_injected: 0,
+        }
+    }
+
+    /// Mean bytes/sec this collective pushes onto each participating
+    /// link direction (for sizing experiments).
+    pub fn per_link_demand_bytes_per_sec(&self) -> f64 {
+        self.bytes_per_step as f64 / (self.period_ns as f64 / 1e9)
+    }
+
+    /// Schedule all collective steps with start times in `[next, until)`
+    /// onto the topology. Call before (or interleaved with) the
+    /// foreground workload; FIFO links then model the contention.
+    pub fn inject_until(&mut self, topo: &mut Topology, until: Ns) {
+        while self.next_step < until {
+            let t = self.next_step;
+            match self.pattern {
+                CollectivePattern::RingAllReduce => {
+                    let n = self.gpus.len();
+                    for (idx, &g) in self.gpus.iter().enumerate() {
+                        let dst = self.gpus[(idx + 1) % n];
+                        topo.schedule(DeviceId::Gpu(g), DeviceId::Gpu(dst), self.bytes_per_step, t);
+                        self.bytes_injected += self.bytes_per_step;
+                    }
+                }
+                CollectivePattern::AllToAll => {
+                    for &a in &self.gpus {
+                        for &b in &self.gpus {
+                            if a != b {
+                                topo.schedule(
+                                    DeviceId::Gpu(a),
+                                    DeviceId::Gpu(b),
+                                    self.bytes_per_step,
+                                    t,
+                                );
+                                self.bytes_injected += self.bytes_per_step;
+                            }
+                        }
+                    }
+                }
+            }
+            self.steps_injected += 1;
+            self.next_step += self.period_ns;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::{Clock, NodeSpec, SimNode};
+
+    const MIB: u64 = 1 << 20;
+
+    #[test]
+    fn ring_schedules_one_transfer_per_participant_per_step() {
+        let clock = Clock::new();
+        let mut topo = Topology::h100_node(clock, 4);
+        let mut c =
+            CollectiveTraffic::new(CollectivePattern::RingAllReduce, vec![0, 1, 2, 3], MIB, 1_000);
+        c.inject_until(&mut topo, 10_000);
+        assert_eq!(c.steps_injected, 10);
+        assert_eq!(topo.transfers(DeviceId::Gpu(0), DeviceId::Gpu(1)), 10);
+        assert_eq!(topo.transfers(DeviceId::Gpu(3), DeviceId::Gpu(0)), 10);
+        assert_eq!(topo.transfers(DeviceId::Gpu(0), DeviceId::Gpu(2)), 0, "ring skips non-neighbours");
+    }
+
+    #[test]
+    fn all_to_all_covers_every_pair() {
+        let clock = Clock::new();
+        let mut topo = Topology::h100_node(clock, 3);
+        let mut c =
+            CollectiveTraffic::new(CollectivePattern::AllToAll, vec![0, 1, 2], MIB, 1_000);
+        c.inject_until(&mut topo, 1);
+        for a in 0..3 {
+            for b in 0..3 {
+                if a != b {
+                    assert_eq!(topo.transfers(DeviceId::Gpu(a), DeviceId::Gpu(b)), 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn congestion_delays_foreground_copy() {
+        // Same copy with and without a heavy collective on the link.
+        let quiet = {
+            let mut node = SimNode::new(NodeSpec::h100x2());
+            node.copy(DeviceId::Gpu(1), DeviceId::Gpu(0), 64 * MIB, None).duration()
+        };
+        let congested = {
+            let mut node = SimNode::new(NodeSpec::h100x2());
+            let mut c = CollectiveTraffic::new(
+                CollectivePattern::RingAllReduce,
+                vec![0, 1],
+                256 * MIB,
+                100_000,
+            );
+            c.inject_until(&mut node.topo, 1_000_000);
+            let ev = node.copy(DeviceId::Gpu(1), DeviceId::Gpu(0), 64 * MIB, None);
+            ev.end // includes queueing behind the collective
+        };
+        assert!(
+            congested > quiet,
+            "congested end {congested} should exceed quiet duration {quiet}"
+        );
+    }
+
+    #[test]
+    fn inject_is_incremental() {
+        let clock = Clock::new();
+        let mut topo = Topology::h100_node(clock, 2);
+        let mut c =
+            CollectiveTraffic::new(CollectivePattern::RingAllReduce, vec![0, 1], MIB, 1_000);
+        c.inject_until(&mut topo, 5_000);
+        let five = c.steps_injected;
+        c.inject_until(&mut topo, 5_000);
+        assert_eq!(c.steps_injected, five, "no double injection");
+        c.inject_until(&mut topo, 10_000);
+        assert_eq!(c.steps_injected, 10);
+    }
+
+    #[test]
+    fn demand_accounting() {
+        let c = CollectiveTraffic::new(
+            CollectivePattern::RingAllReduce,
+            vec![0, 1],
+            100 * MIB,
+            1_000_000, // 1 ms
+        );
+        let d = c.per_link_demand_bytes_per_sec();
+        assert!((d - 100.0 * MIB as f64 * 1000.0).abs() / d < 1e-9);
+    }
+}

@@ -1,0 +1,240 @@
+//! Async DMA engine — the `cudaMemcpy{Peer}Async` / stream / event
+//! stand-in.
+//!
+//! Copies are issued on *streams* (FIFO queues). Each copy also contends
+//! on the underlying link (shared with other streams using the same
+//! endpoint pair). The engine records, per stream and per user *tag*
+//! (e.g. a harvest allocation id), when the last touching operation
+//! completes — this is what the Harvest revocation pipeline drains before
+//! freeing peer memory (§3.2: "Before freeing memory, the runtime drains
+//! in-flight DMA and kernel operations that touch the region").
+
+use super::clock::Ns;
+use super::interconnect::{DeviceId, Topology};
+use std::collections::BTreeMap;
+
+/// FIFO stream handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct StreamId(pub u64);
+
+/// A scheduled copy: when it started/completed in virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CopyEvent {
+    pub start: Ns,
+    pub end: Ns,
+    pub bytes: u64,
+    pub src: DeviceId,
+    pub dst: DeviceId,
+}
+
+impl CopyEvent {
+    pub fn duration(&self) -> Ns {
+        self.end - self.start
+    }
+}
+
+/// The engine. Owns stream state; borrows the topology per call so other
+/// components (e.g. compute pipelines) can also schedule on links.
+#[derive(Debug, Default)]
+pub struct DmaEngine {
+    streams: BTreeMap<StreamId, Ns>, // stream -> busy_until
+    tags: BTreeMap<u64, Ns>,         // tag -> last op end
+    next_stream: u64,
+}
+
+impl DmaEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn create_stream(&mut self) -> StreamId {
+        let id = StreamId(self.next_stream);
+        self.next_stream += 1;
+        self.streams.insert(id, 0);
+        id
+    }
+
+    /// Issue an async contiguous copy on `stream` at earliest the current
+    /// clock time; `tag` associates the op with a region for drains.
+    pub fn copy(
+        &mut self,
+        topo: &mut Topology,
+        stream: StreamId,
+        src: DeviceId,
+        dst: DeviceId,
+        bytes: u64,
+        tag: Option<u64>,
+    ) -> Option<CopyEvent> {
+        let now = topo.clock().now();
+        let sbusy = self.streams.get_mut(&stream)?;
+        let earliest = now.max(*sbusy);
+        let (start, end) = topo.schedule(src, dst, bytes, earliest)?;
+        *sbusy = end;
+        if let Some(t) = tag {
+            let e = self.tags.entry(t).or_insert(0);
+            *e = (*e).max(end);
+        }
+        Some(CopyEvent { start, end, bytes, src, dst })
+    }
+
+    /// Issue a *scattered* copy: `n_chunks` back-to-back chunk copies on
+    /// one stream (e.g. per-block KV reloads, which are many small
+    /// non-contiguous regions — each chunk pays the link's per-transfer
+    /// base latency). Returns the overall (first start, last end).
+    pub fn copy_scattered(
+        &mut self,
+        topo: &mut Topology,
+        stream: StreamId,
+        src: DeviceId,
+        dst: DeviceId,
+        total_bytes: u64,
+        n_chunks: u64,
+        tag: Option<u64>,
+    ) -> Option<CopyEvent> {
+        assert!(n_chunks > 0);
+        let chunk = total_bytes / n_chunks;
+        let rem = total_bytes % n_chunks;
+        let mut first_start = None;
+        let mut last_end = 0;
+        for i in 0..n_chunks {
+            let b = chunk + if i < rem { 1 } else { 0 };
+            let ev = self.copy(topo, stream, src, dst, b, tag)?;
+            first_start.get_or_insert(ev.start);
+            last_end = ev.end;
+        }
+        Some(CopyEvent { start: first_start.unwrap(), end: last_end, bytes: total_bytes, src, dst })
+    }
+
+    /// When all ops issued so far on `stream` complete.
+    pub fn stream_busy_until(&self, stream: StreamId) -> Ns {
+        self.streams.get(&stream).copied().unwrap_or(0)
+    }
+
+    /// Block (advance virtual time) until `stream` is idle; returns the
+    /// new now. The `cudaStreamSynchronize` stand-in.
+    pub fn sync_stream(&mut self, topo: &Topology, stream: StreamId) -> Ns {
+        let t = self.stream_busy_until(stream);
+        topo.clock().advance_to(t)
+    }
+
+    /// When the last operation touching `tag` completes (0 if none).
+    pub fn tag_busy_until(&self, tag: u64) -> Ns {
+        self.tags.get(&tag).copied().unwrap_or(0)
+    }
+
+    /// Drain all in-flight ops touching `tag`: advance virtual time past
+    /// them and forget the tag. The revocation pre-free barrier.
+    pub fn drain_tag(&mut self, topo: &Topology, tag: u64) -> Ns {
+        let t = self.tags.remove(&tag).unwrap_or(0);
+        topo.clock().advance_to(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::clock::Clock;
+
+    const MIB: u64 = 1024 * 1024;
+
+    fn setup() -> (Topology, DmaEngine) {
+        let clock = Clock::new();
+        (Topology::h100_node(clock, 2), DmaEngine::new())
+    }
+
+    #[test]
+    fn copies_on_one_stream_serialize() {
+        let (mut topo, mut dma) = setup();
+        let s = dma.create_stream();
+        let a = dma.copy(&mut topo, s, DeviceId::Gpu(0), DeviceId::Gpu(1), MIB, None).unwrap();
+        let b = dma.copy(&mut topo, s, DeviceId::Gpu(0), DeviceId::Gpu(1), MIB, None).unwrap();
+        assert_eq!(b.start, a.end);
+    }
+
+    #[test]
+    fn different_streams_still_contend_on_same_link() {
+        let (mut topo, mut dma) = setup();
+        let s1 = dma.create_stream();
+        let s2 = dma.create_stream();
+        let a = dma.copy(&mut topo, s1, DeviceId::Gpu(0), DeviceId::Gpu(1), MIB, None).unwrap();
+        let b = dma.copy(&mut topo, s2, DeviceId::Gpu(0), DeviceId::Gpu(1), MIB, None).unwrap();
+        // link FIFO: second transfer starts when first ends
+        assert_eq!(b.start, a.end);
+    }
+
+    #[test]
+    fn different_links_overlap_across_streams() {
+        let (mut topo, mut dma) = setup();
+        let s1 = dma.create_stream();
+        let s2 = dma.create_stream();
+        let a = dma.copy(&mut topo, s1, DeviceId::Gpu(0), DeviceId::Gpu(1), MIB, None).unwrap();
+        let b = dma.copy(&mut topo, s2, DeviceId::Host, DeviceId::Gpu(0), MIB, None).unwrap();
+        assert_eq!(a.start, 0);
+        assert_eq!(b.start, 0, "independent links overlap");
+    }
+
+    #[test]
+    fn sync_stream_advances_clock() {
+        let (mut topo, mut dma) = setup();
+        let s = dma.create_stream();
+        let ev = dma.copy(&mut topo, s, DeviceId::Gpu(0), DeviceId::Gpu(1), MIB, None).unwrap();
+        assert_eq!(topo.clock().now(), 0, "copy is async");
+        let t = dma.sync_stream(&topo, s);
+        assert_eq!(t, ev.end);
+        assert_eq!(topo.clock().now(), ev.end);
+    }
+
+    #[test]
+    fn drain_tag_waits_for_all_touching_ops() {
+        let (mut topo, mut dma) = setup();
+        let s1 = dma.create_stream();
+        let s2 = dma.create_stream();
+        let _a =
+            dma.copy(&mut topo, s1, DeviceId::Gpu(0), DeviceId::Gpu(1), MIB, Some(7)).unwrap();
+        let b =
+            dma.copy(&mut topo, s2, DeviceId::Gpu(1), DeviceId::Gpu(0), 4 * MIB, Some(7)).unwrap();
+        assert_eq!(dma.tag_busy_until(7), b.end);
+        let t = dma.drain_tag(&topo, 7);
+        assert_eq!(t, b.end);
+        // tag forgotten after drain
+        assert_eq!(dma.tag_busy_until(7), 0);
+    }
+
+    #[test]
+    fn scattered_copy_pays_per_chunk_overhead() {
+        let (mut topo, mut dma) = setup();
+        let s = dma.create_stream();
+        let total = 8 * MIB;
+        let one = dma
+            .copy(&mut topo, s, DeviceId::Gpu(0), DeviceId::Gpu(1), total, None)
+            .unwrap()
+            .duration();
+        let (mut topo2, mut dma2) = setup();
+        let s2 = dma2.create_stream();
+        let many = dma2
+            .copy_scattered(&mut topo2, s2, DeviceId::Gpu(0), DeviceId::Gpu(1), total, 16, None)
+            .unwrap();
+        assert!(
+            many.end - many.start > one,
+            "16 scattered chunks ({}) must be slower than 1 contiguous ({one})",
+            many.end - many.start
+        );
+    }
+
+    #[test]
+    fn scattered_copy_moves_exact_total() {
+        let (mut topo, mut dma) = setup();
+        let s = dma.create_stream();
+        // 100 bytes in 7 chunks: remainders distributed, total preserved.
+        dma.copy_scattered(&mut topo, s, DeviceId::Gpu(0), DeviceId::Host, 100, 7, None).unwrap();
+        assert_eq!(topo.bytes_moved(DeviceId::Gpu(0), DeviceId::Host), 100);
+        assert_eq!(topo.transfers(DeviceId::Gpu(0), DeviceId::Host), 7);
+    }
+
+    #[test]
+    fn copy_to_unknown_stream_is_none() {
+        let (mut topo, mut dma) = setup();
+        let bogus = StreamId(99);
+        assert!(dma.copy(&mut topo, bogus, DeviceId::Gpu(0), DeviceId::Gpu(1), 1, None).is_none());
+    }
+}

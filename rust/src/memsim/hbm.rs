@@ -1,0 +1,425 @@
+//! HBM segment allocator — the `cudaMalloc`/`cudaFree` stand-in.
+//!
+//! A sorted free-list allocator over a fixed byte range with pluggable
+//! fit strategies. The Harvest controller's default is best-fit, matching
+//! the paper (§3.2: "a best-fit strategy that chooses a peer GPU and a
+//! free segment that minimize leftover fragmentation").
+//!
+//! Invariants (enforced in debug asserts + property tests):
+//! * allocated segments never overlap;
+//! * free segments are sorted, non-adjacent (always coalesced), non-empty;
+//! * used + free == capacity.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Opaque allocation handle (monotonically increasing, never reused).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct AllocId(pub u64);
+
+/// Why an allocation failed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocError {
+    /// Not enough total free bytes.
+    OutOfMemory { requested: u64, free: u64 },
+    /// Enough free bytes but no contiguous segment fits (fragmentation).
+    Fragmented { requested: u64, largest_free: u64 },
+    /// Zero-sized request.
+    ZeroSize,
+}
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::OutOfMemory { requested, free } => {
+                write!(f, "out of memory: requested {requested}, free {free}")
+            }
+            AllocError::Fragmented { requested, largest_free } => {
+                write!(f, "fragmented: requested {requested}, largest free {largest_free}")
+            }
+            AllocError::ZeroSize => write!(f, "zero-size allocation"),
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
+
+/// Free-segment selection strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FitStrategy {
+    /// Smallest segment that fits (minimises leftover fragmentation —
+    /// the paper's default).
+    #[default]
+    BestFit,
+    /// Lowest-offset segment that fits.
+    FirstFit,
+    /// Largest segment (keeps small holes for small requests).
+    WorstFit,
+}
+
+/// One device's HBM arena.
+#[derive(Debug, Clone)]
+pub struct Hbm {
+    capacity: u64,
+    strategy: FitStrategy,
+    /// offset -> length, sorted, coalesced.
+    free: BTreeMap<u64, u64>,
+    /// (length, offset) index over `free` for O(log n) best/worst-fit
+    /// (EXPERIMENTS.md §Perf).
+    free_by_size: BTreeSet<(u64, u64)>,
+    /// id -> (offset, length).
+    allocs: BTreeMap<AllocId, (u64, u64)>,
+    /// Incremental sum of live allocation lengths (O(1) `used()`).
+    used: u64,
+    next_id: u64,
+    /// Cumulative counters for metrics.
+    pub total_allocs: u64,
+    pub total_frees: u64,
+    pub failed_allocs: u64,
+}
+
+impl Hbm {
+    pub fn new(capacity: u64, strategy: FitStrategy) -> Self {
+        let mut free = BTreeMap::new();
+        let mut free_by_size = BTreeSet::new();
+        if capacity > 0 {
+            free.insert(0, capacity);
+            free_by_size.insert((capacity, 0));
+        }
+        Self {
+            capacity,
+            strategy,
+            free,
+            free_by_size,
+            allocs: BTreeMap::new(),
+            used: 0,
+            next_id: 0,
+            total_allocs: 0,
+            total_frees: 0,
+            failed_allocs: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.free.values().sum()
+    }
+
+    pub fn largest_free(&self) -> u64 {
+        self.free_by_size.last().map(|&(len, _)| len).unwrap_or(0)
+    }
+
+    pub fn num_allocs(&self) -> usize {
+        self.allocs.len()
+    }
+
+    /// External fragmentation in [0,1]: 1 - largest_free/free (0 when
+    /// empty or when all free space is one segment).
+    pub fn fragmentation(&self) -> f64 {
+        let free = self.free_bytes();
+        if free == 0 {
+            0.0
+        } else {
+            1.0 - self.largest_free() as f64 / free as f64
+        }
+    }
+
+    /// Allocate `size` bytes; returns a handle or why it failed.
+    pub fn alloc(&mut self, size: u64) -> Result<AllocId, AllocError> {
+        if size == 0 {
+            return Err(AllocError::ZeroSize);
+        }
+        let pick = self.pick_segment(size);
+        let Some(offset) = pick else {
+            self.failed_allocs += 1;
+            let free = self.free_bytes();
+            return Err(if size > free {
+                AllocError::OutOfMemory { requested: size, free }
+            } else {
+                AllocError::Fragmented { requested: size, largest_free: self.largest_free() }
+            });
+        };
+        let seg_len = self.free.remove(&offset).expect("picked segment exists");
+        self.free_by_size.remove(&(seg_len, offset));
+        debug_assert!(seg_len >= size);
+        if seg_len > size {
+            self.free.insert(offset + size, seg_len - size);
+            self.free_by_size.insert((seg_len - size, offset + size));
+        }
+        let id = AllocId(self.next_id);
+        self.next_id += 1;
+        self.allocs.insert(id, (offset, size));
+        self.used += size;
+        self.total_allocs += 1;
+        debug_assert_eq!(self.used() + self.free_bytes(), self.capacity);
+        Ok(id)
+    }
+
+    fn pick_segment(&self, size: u64) -> Option<u64> {
+        match self.strategy {
+            FitStrategy::FirstFit => self
+                .free
+                .iter()
+                .find(|&(_, &len)| len >= size)
+                .map(|(&off, _)| off),
+            // Smallest fitting length, lowest offset among equals:
+            // exactly the (len, off) order of the size index.
+            FitStrategy::BestFit => self
+                .free_by_size
+                .range((size, 0)..)
+                .next()
+                .map(|&(_, off)| off),
+            // Largest length; lowest offset among equals. The index ends
+            // with the largest lengths, highest offset last — scan the
+            // equal-length run from its first element.
+            FitStrategy::WorstFit => {
+                let &(len, _) = self.free_by_size.last()?;
+                if len < size {
+                    return None;
+                }
+                self.free_by_size.range((len, 0)..).next().map(|&(_, off)| off)
+            }
+        }
+    }
+
+    /// Free a previous allocation. Returns its size. Panics on
+    /// double-free (a correctness bug in the caller, not a runtime
+    /// condition).
+    pub fn free(&mut self, id: AllocId) -> u64 {
+        let (offset, len) = self.allocs.remove(&id).expect("double free or bogus AllocId");
+        self.used -= len;
+        self.insert_free(offset, len);
+        self.total_frees += 1;
+        debug_assert_eq!(self.used() + self.free_bytes(), self.capacity);
+        len
+    }
+
+    fn insert_free(&mut self, mut offset: u64, mut len: u64) {
+        // Coalesce with predecessor.
+        if let Some((&poff, &plen)) = self.free.range(..offset).next_back() {
+            debug_assert!(poff + plen <= offset, "free list overlap");
+            if poff + plen == offset {
+                self.free.remove(&poff);
+                self.free_by_size.remove(&(plen, poff));
+                offset = poff;
+                len += plen;
+            }
+        }
+        // Coalesce with successor.
+        if let Some((&soff, &slen)) = self.free.range(offset + len..).next() {
+            if offset + len == soff {
+                self.free.remove(&soff);
+                self.free_by_size.remove(&(slen, soff));
+                len += slen;
+            }
+        }
+        self.free.insert(offset, len);
+        self.free_by_size.insert((len, offset));
+    }
+
+    /// Size of an allocation, if live.
+    pub fn size_of(&self, id: AllocId) -> Option<u64> {
+        self.allocs.get(&id).map(|&(_, len)| len)
+    }
+
+    /// Offset of an allocation (the simulated device pointer), if live.
+    pub fn offset_of(&self, id: AllocId) -> Option<u64> {
+        self.allocs.get(&id).map(|&(off, _)| off)
+    }
+
+    pub fn contains(&self, id: AllocId) -> bool {
+        self.allocs.contains_key(&id)
+    }
+
+    /// Live allocation ids, ascending (== allocation order).
+    pub fn alloc_ids(&self) -> Vec<AllocId> {
+        self.allocs.keys().copied().collect()
+    }
+
+    /// Verify all internal invariants; returns a description of the first
+    /// violation. Used by property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.used != self.allocs.values().map(|&(_, len)| len).sum::<u64>() {
+            return Err("used counter out of sync".into());
+        }
+        if self.free.len() != self.free_by_size.len()
+            || !self
+                .free
+                .iter()
+                .all(|(&o, &l)| self.free_by_size.contains(&(l, o)))
+        {
+            return Err("free list and size index out of sync".into());
+        }
+        let mut regions: Vec<(u64, u64, bool)> = self
+            .free
+            .iter()
+            .map(|(&o, &l)| (o, l, true))
+            .chain(self.allocs.values().map(|&(o, l)| (o, l, false)))
+            .collect();
+        regions.sort_unstable();
+        let mut cursor = 0u64;
+        let mut prev_free = false;
+        for (off, len, is_free) in regions {
+            if len == 0 {
+                return Err(format!("zero-length region at {off}"));
+            }
+            if off != cursor {
+                return Err(format!("gap or overlap at {off}, expected {cursor}"));
+            }
+            if is_free && prev_free {
+                return Err(format!("uncoalesced free segments at {off}"));
+            }
+            prev_free = is_free;
+            cursor = off + len;
+        }
+        if cursor != self.capacity {
+            return Err(format!("regions end at {cursor}, capacity {}", self.capacity));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut h = Hbm::new(1000, FitStrategy::BestFit);
+        let a = h.alloc(100).unwrap();
+        let b = h.alloc(200).unwrap();
+        assert_eq!(h.used(), 300);
+        assert_eq!(h.free(a), 100);
+        assert_eq!(h.free(b), 200);
+        assert_eq!(h.used(), 0);
+        assert_eq!(h.free_bytes(), 1000);
+        assert_eq!(h.largest_free(), 1000); // fully coalesced
+        h.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oom_reports_reason() {
+        let mut h = Hbm::new(100, FitStrategy::BestFit);
+        let _a = h.alloc(80).unwrap();
+        match h.alloc(50) {
+            Err(AllocError::OutOfMemory { requested: 50, free: 20 }) => {}
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(h.failed_allocs, 1);
+    }
+
+    #[test]
+    fn fragmentation_reported_when_total_fits_but_no_segment_does() {
+        let mut h = Hbm::new(300, FitStrategy::FirstFit);
+        let a = h.alloc(100).unwrap();
+        let _b = h.alloc(100).unwrap();
+        let _c = h.alloc(100).unwrap();
+        h.free(a); // free 100 at offset 0
+        // Now free = 100 contiguous; ask for 150 -> OOM (only 100 free).
+        match h.alloc(150) {
+            Err(AllocError::OutOfMemory { .. }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn fragmented_error_variant() {
+        let mut h = Hbm::new(400, FitStrategy::FirstFit);
+        let a = h.alloc(100).unwrap();
+        let _b = h.alloc(100).unwrap();
+        let c = h.alloc(100).unwrap();
+        let _d = h.alloc(100).unwrap();
+        h.free(a);
+        h.free(c);
+        // 200 free total, but in two 100-byte holes.
+        match h.alloc(150) {
+            Err(AllocError::Fragmented { requested: 150, largest_free: 100 }) => {}
+            other => panic!("{other:?}"),
+        }
+        h.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn best_fit_picks_smallest_hole() {
+        let mut h = Hbm::new(1000, FitStrategy::BestFit);
+        let a = h.alloc(300).unwrap(); // [0,300)
+        let b = h.alloc(100).unwrap(); // [300,400)
+        let _c = h.alloc(600).unwrap(); // [400,1000)
+        h.free(a);
+        h.free(b);
+        // coalesced -> single hole [0,400). Re-carve: alloc 300 then 100.
+        let d = h.alloc(300).unwrap();
+        assert_eq!(h.offset_of(d), Some(0));
+        // Now holes: [300,400). Alloc 50 must land there (best fit).
+        let e = h.alloc(50).unwrap();
+        assert_eq!(h.offset_of(e), Some(300));
+        h.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn first_fit_vs_best_fit_choice() {
+        // Two holes: big at low offset, small at high offset.
+        let mk = |strategy| {
+            let mut h = Hbm::new(1000, strategy);
+            let a = h.alloc(500).unwrap(); // [0,500)
+            let _keep = h.alloc(100).unwrap(); // [500,600)
+            let b = h.alloc(100).unwrap(); // [600,700)
+            let _keep2 = h.alloc(300).unwrap(); // [700,1000)
+            h.free(a); // hole [0,500)
+            h.free(b); // hole [600,700)
+            h
+        };
+        let mut first = mk(FitStrategy::FirstFit);
+        let f = first.alloc(100).unwrap();
+        assert_eq!(first.offset_of(f), Some(0));
+        let mut best = mk(FitStrategy::BestFit);
+        let g = best.alloc(100).unwrap();
+        assert_eq!(best.offset_of(g), Some(600));
+        let mut worst = mk(FitStrategy::WorstFit);
+        let w = worst.alloc(100).unwrap();
+        assert_eq!(worst.offset_of(w), Some(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut h = Hbm::new(100, FitStrategy::BestFit);
+        let a = h.alloc(10).unwrap();
+        h.free(a);
+        h.free(a);
+    }
+
+    #[test]
+    fn zero_size_rejected() {
+        let mut h = Hbm::new(100, FitStrategy::BestFit);
+        assert_eq!(h.alloc(0), Err(AllocError::ZeroSize));
+    }
+
+    #[test]
+    fn ids_never_reused() {
+        let mut h = Hbm::new(100, FitStrategy::BestFit);
+        let a = h.alloc(10).unwrap();
+        h.free(a);
+        let b = h.alloc(10).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn fragmentation_metric() {
+        let mut h = Hbm::new(400, FitStrategy::FirstFit);
+        assert_eq!(h.fragmentation(), 0.0);
+        let a = h.alloc(100).unwrap();
+        let _b = h.alloc(100).unwrap();
+        let c = h.alloc(100).unwrap();
+        h.free(a);
+        h.free(c);
+        // holes: 100 + (100+100 tail coalesced = 200) -> largest 200 of 300
+        assert!((h.fragmentation() - (1.0 - 200.0 / 300.0)).abs() < 1e-12);
+    }
+}

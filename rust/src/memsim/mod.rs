@@ -1,0 +1,35 @@
+//! Calibrated multi-GPU node simulation — the hardware substrate.
+//!
+//! The paper's testbed (2× H100 + 12 NVLink links + PCIe 5.0 + MIG + CUDA
+//! P2P) does not exist on this image, so per DESIGN.md's substitution rule
+//! everything Harvest touches is reproduced as a deterministic
+//! *virtual-time* simulation with the same API shape as the CUDA path:
+//!
+//! * [`clock`] — the virtual nanosecond clock all components share.
+//! * [`hbm`] — per-GPU HBM segment allocator (`cudaMalloc` stand-in)
+//!   with pluggable fit strategies.
+//! * [`interconnect`] — NVLink / PCIe link model: base latency +
+//!   size-dependent effective bandwidth + FIFO contention, calibrated so
+//!   the GPU↔GPU : CPU↔GPU latency ratio reproduces Fig. 3 (7.5–9.5×).
+//! * [`dma`] — async copy engine (`cudaMemcpyPeerAsync` stand-in):
+//!   streams, completion events, and the drain-before-free ordering the
+//!   Harvest revocation pipeline relies on.
+//! * [`node`] — a whole server: GPUs + host DRAM + topology.
+//! * [`tenant`] — background co-tenant memory pressure, sampled from the
+//!   Alibaba-gpu-v2020-like utilisation distribution of Fig. 2.
+
+pub mod clock;
+pub mod collective;
+pub mod dma;
+pub mod hbm;
+pub mod interconnect;
+pub mod node;
+pub mod tenant;
+
+pub use clock::{Clock, Ns};
+pub use collective::{CollectivePattern, CollectiveTraffic};
+pub use dma::{CopyEvent, DmaEngine, StreamId};
+pub use hbm::{AllocError, AllocId, FitStrategy, Hbm};
+pub use interconnect::{DeviceId, FabricKind, LinkKind, LinkModel, Topology};
+pub use node::{GpuSpec, NodeSpec, SimNode};
+pub use tenant::{TenantLoad, UtilizationModel};

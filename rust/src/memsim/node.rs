@@ -1,0 +1,248 @@
+//! A whole simulated server node: GPUs (HBM + tenant load) + host DRAM +
+//! link topology + DMA engine + virtual clock, wired together.
+//!
+//! This is the object the Harvest runtime, the MoE pipeline and the KV
+//! manager all share. It corresponds to the paper's testbed (an Azure
+//! NC80adis H100 v5: 2× H100 80 GB, PCIe 5.0, 12 NVLink links) by
+//! default, but node shape is fully configurable — DESIGN.md's §7
+//! limitations call out larger NVLink domains, and `NodeSpec::n_gpus`
+//! lets benches explore them.
+
+use super::clock::{Clock, Ns};
+use super::dma::{DmaEngine, StreamId};
+use super::hbm::{FitStrategy, Hbm};
+use super::interconnect::{DeviceId, FabricKind, LinkModel, Topology};
+use super::tenant::TenantLoad;
+
+const GIB: u64 = 1 << 30;
+
+/// Static description of one GPU.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub hbm_bytes: u64,
+    pub fit: FitStrategy,
+}
+
+impl Default for GpuSpec {
+    fn default() -> Self {
+        Self { hbm_bytes: 80 * GIB, fit: FitStrategy::BestFit }
+    }
+}
+
+/// Static description of the node.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub gpus: Vec<GpuSpec>,
+    pub nvlink: LinkModel,
+    pub pcie: LinkModel,
+    /// GPU↔GPU wiring (§2.2 larger NVLink domains / §8 topology).
+    pub fabric: FabricKind,
+}
+
+impl Default for NodeSpec {
+    fn default() -> Self {
+        Self::h100x2()
+    }
+}
+
+impl NodeSpec {
+    /// The paper's testbed: 2× H100 80 GB.
+    pub fn h100x2() -> Self {
+        Self {
+            gpus: vec![GpuSpec::default(), GpuSpec::default()],
+            nvlink: LinkModel::nvlink_h100(),
+            pcie: LinkModel::pcie5_host(),
+            fabric: FabricKind::FullMesh,
+        }
+    }
+
+    /// An `n`-GPU NVLink/NVSwitch domain (future-deployment sweeps).
+    pub fn nvlink_domain(n: usize) -> Self {
+        Self {
+            gpus: vec![GpuSpec::default(); n],
+            nvlink: LinkModel::nvlink_h100(),
+            pcie: LinkModel::pcie5_host(),
+            fabric: FabricKind::FullMesh,
+        }
+    }
+
+    /// Same, wired through an NVSwitch (NVL72-class racks).
+    pub fn nvswitch_domain(n: usize) -> Self {
+        Self { fabric: FabricKind::NvSwitch, ..Self::nvlink_domain(n) }
+    }
+
+    /// Cost-reduced ring fabric.
+    pub fn ring_domain(n: usize) -> Self {
+        Self { fabric: FabricKind::Ring, ..Self::nvlink_domain(n) }
+    }
+
+    /// Host tier replaced by CXL-attached memory (§8).
+    pub fn with_cxl_host(mut self) -> Self {
+        self.pcie = LinkModel::cxl_mem();
+        self
+    }
+}
+
+/// One simulated GPU: its HBM arena plus the co-tenant load timeline.
+#[derive(Debug)]
+pub struct Gpu {
+    pub hbm: Hbm,
+    pub tenant: TenantLoad,
+}
+
+/// The wired node.
+pub struct SimNode {
+    pub clock: Clock,
+    pub gpus: Vec<Gpu>,
+    pub topo: Topology,
+    pub dma: DmaEngine,
+    /// One pre-created stream per (src,dst) device-pair class, so
+    /// subsystems can issue copies without managing stream lifetime.
+    h2d_streams: Vec<StreamId>,
+    d2h_streams: Vec<StreamId>,
+    p2p_streams: Vec<Vec<StreamId>>,
+}
+
+impl SimNode {
+    pub fn new(spec: NodeSpec) -> Self {
+        let clock = Clock::new();
+        let n = spec.gpus.len();
+        let topo =
+            Topology::with_fabric(clock.clone(), n, spec.nvlink, spec.pcie, spec.fabric);
+        let mut dma = DmaEngine::new();
+        let gpus = spec
+            .gpus
+            .iter()
+            .map(|g| Gpu {
+                hbm: Hbm::new(g.hbm_bytes, g.fit),
+                tenant: TenantLoad::constant(g.hbm_bytes, 0),
+            })
+            .collect();
+        let h2d_streams = (0..n).map(|_| dma.create_stream()).collect();
+        let d2h_streams = (0..n).map(|_| dma.create_stream()).collect();
+        let p2p_streams = (0..n).map(|_| (0..n).map(|_| dma.create_stream()).collect()).collect();
+        Self { clock, gpus, topo, dma, h2d_streams, d2h_streams, p2p_streams }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    /// Install a tenant-load timeline on GPU `i`.
+    pub fn set_tenant_load(&mut self, i: usize, load: TenantLoad) {
+        assert_eq!(load.capacity(), self.gpus[i].hbm.capacity(), "timeline capacity mismatch");
+        self.gpus[i].tenant = load;
+    }
+
+    /// Bytes currently free for harvesting on GPU `i`: capacity minus
+    /// co-tenant usage minus what we have already allocated there.
+    pub fn harvestable_now(&self, i: usize) -> u64 {
+        let g = &self.gpus[i];
+        let tenant_used = g.tenant.used_at(self.clock.now());
+        g.hbm.capacity().saturating_sub(tenant_used).saturating_sub(g.hbm.used())
+    }
+
+    /// The default stream for a (src → dst) copy.
+    pub fn stream_for(&self, src: DeviceId, dst: DeviceId) -> StreamId {
+        match (src, dst) {
+            (DeviceId::Host, DeviceId::Gpu(d)) => self.h2d_streams[d],
+            (DeviceId::Gpu(d), DeviceId::Host) => self.d2h_streams[d],
+            (DeviceId::Gpu(s), DeviceId::Gpu(d)) => self.p2p_streams[s][d],
+            (DeviceId::Host, DeviceId::Host) => panic!("host->host copy"),
+        }
+    }
+
+    /// Async contiguous copy on the default stream; returns the event.
+    pub fn copy(
+        &mut self,
+        src: DeviceId,
+        dst: DeviceId,
+        bytes: u64,
+        tag: Option<u64>,
+    ) -> super::dma::CopyEvent {
+        let stream = self.stream_for(src, dst);
+        self.dma
+            .copy(&mut self.topo, stream, src, dst, bytes, tag)
+            .expect("copy on wired node cannot fail")
+    }
+
+    /// Async scattered copy (n_chunks pieces) on the default stream.
+    pub fn copy_scattered(
+        &mut self,
+        src: DeviceId,
+        dst: DeviceId,
+        bytes: u64,
+        n_chunks: u64,
+        tag: Option<u64>,
+    ) -> super::dma::CopyEvent {
+        let stream = self.stream_for(src, dst);
+        self.dma
+            .copy_scattered(&mut self.topo, stream, src, dst, bytes, n_chunks, tag)
+            .expect("copy on wired node cannot fail")
+    }
+
+    /// Synchronize the default (src → dst) stream (advances virtual time).
+    pub fn sync(&mut self, src: DeviceId, dst: DeviceId) -> Ns {
+        let stream = self.stream_for(src, dst);
+        self.dma.sync_stream(&self.topo, stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_node_is_two_h100() {
+        let node = SimNode::new(NodeSpec::default());
+        assert_eq!(node.n_gpus(), 2);
+        assert_eq!(node.gpus[0].hbm.capacity(), 80 * GIB);
+        assert!(node.topo.link_model(DeviceId::Gpu(0), DeviceId::Gpu(1)).is_some());
+        assert!(node.topo.link_model(DeviceId::Gpu(0), DeviceId::Host).is_some());
+    }
+
+    #[test]
+    fn harvestable_accounts_for_tenant_and_own_allocs() {
+        let mut node = SimNode::new(NodeSpec::default());
+        node.set_tenant_load(1, TenantLoad::constant(80 * GIB, 30 * GIB));
+        assert_eq!(node.harvestable_now(1), 50 * GIB);
+        let _a = node.gpus[1].hbm.alloc(10 * GIB).unwrap();
+        assert_eq!(node.harvestable_now(1), 40 * GIB);
+    }
+
+    #[test]
+    fn harvestable_saturates_at_zero() {
+        let mut node = SimNode::new(NodeSpec::default());
+        node.set_tenant_load(1, TenantLoad::constant(80 * GIB, 80 * GIB));
+        let _a = node.gpus[1].hbm.alloc(1).unwrap(); // we over-committed
+        assert_eq!(node.harvestable_now(1), 0);
+    }
+
+    #[test]
+    fn copy_and_sync_roundtrip() {
+        let mut node = SimNode::new(NodeSpec::default());
+        let ev = node.copy(DeviceId::Gpu(0), DeviceId::Gpu(1), 1 << 20, Some(1));
+        assert!(ev.end > 0);
+        let t = node.sync(DeviceId::Gpu(0), DeviceId::Gpu(1));
+        assert_eq!(t, ev.end);
+    }
+
+    #[test]
+    fn tenant_timeline_changes_harvestable_over_time() {
+        let mut node = SimNode::new(NodeSpec::default());
+        node.set_tenant_load(
+            1,
+            TenantLoad::from_steps(80 * GIB, vec![(0, 10 * GIB), (1_000, 70 * GIB)]),
+        );
+        assert_eq!(node.harvestable_now(1), 70 * GIB);
+        node.clock.advance_to(1_000);
+        assert_eq!(node.harvestable_now(1), 10 * GIB);
+    }
+
+    #[test]
+    fn nvlink_domain_spec_scales() {
+        let node = SimNode::new(NodeSpec::nvlink_domain(8));
+        assert_eq!(node.n_gpus(), 8);
+        assert!(node.topo.link_model(DeviceId::Gpu(3), DeviceId::Gpu(7)).is_some());
+    }
+}

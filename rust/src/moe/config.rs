@@ -1,0 +1,263 @@
+//! Model registry: the paper's evaluated architectures.
+//!
+//! Table 1 of the paper:
+//!
+//! | Model        | Params (B) | Active (B) | Experts | Active Exp. |
+//! |--------------|-----------|------------|---------|-------------|
+//! | Mixtral-8x7B | 47.0      | 13.0       | 8       | 2           |
+//! | Phi-3.5-MoE  | 60.8      | 6.6        | 16      | 2           |
+//! | Phi-tiny-MoE | 3.8       | 1.1        | 16      | 2           |
+//! | Qwen2-MoE    | 14.3      | 2.7        | 64      | 4           |
+//!
+//! Geometries below are taken from the public model cards where
+//! available and otherwise estimated to match the Table-1 parameter
+//! counts; expert byte sizes derived from them are the chunk sizes of
+//! Fig. 3 and the transfer costs of Figs. 5/6. The KV-cache models of
+//! §5.3 (DeepSeek-V3, Mistral-Large-3-675B, Kimi-K2) appear as
+//! [`KvModel`]s with per-token KV byte footprints for Fig. 7.
+
+/// FP16 bytes per parameter.
+pub const FP16: u64 = 2;
+
+/// An MoE architecture, with everything the simulators need.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MoeModel {
+    pub name: &'static str,
+    pub total_params_b: f64,
+    pub active_params_b: f64,
+    pub n_layers: u64,
+    pub n_experts: u64,
+    /// Experts activated per token (top-k).
+    pub top_k: u64,
+    pub d_model: u64,
+    /// Per-expert FFN hidden size.
+    pub d_ff_expert: u64,
+    /// Routing skew exponent observed for this family (higher = more
+    /// reuse; Phi-3.5's fewer experts + small fan-out give it higher
+    /// temporal locality than Qwen2 — §4.5's explanation for Fig. 5).
+    pub routing_zipf_s: f64,
+    /// Calibrated CPU-side attention + framework time per token per layer
+    /// (ns) in the MoE-Lightning execution model (attention runs on the
+    /// CPU; see §4.3). Fit so the CGOPipe pipeline reproduces the paper's
+    /// Fig. 5 per-model improvement band on this simulator — DESIGN.md
+    /// §Calibration.
+    pub cpu_attn_ns_per_token: u64,
+}
+
+impl MoeModel {
+    /// FP16 bytes of ONE expert in ONE layer (3 matrices: gate/up/down —
+    /// SwiGLU FFN). This is the Fig. 3 chunk size for this model.
+    pub fn expert_bytes(&self) -> u64 {
+        3 * self.d_model * self.d_ff_expert * FP16
+    }
+
+    /// Total expert bytes across all layers and experts.
+    pub fn total_expert_bytes(&self) -> u64 {
+        self.n_layers * self.n_experts * self.expert_bytes()
+    }
+
+    /// FLOPs to run one token through one expert's FFN (3 matmuls,
+    /// multiply-add = 2 FLOPs).
+    pub fn flops_per_token_per_expert(&self) -> f64 {
+        2.0 * 3.0 * (self.d_model * self.d_ff_expert) as f64
+    }
+
+    /// FLOPs per token per layer for the non-expert (attention + router)
+    /// part at decode. Approximation: 4 dense d×d projections.
+    pub fn attn_flops_per_token(&self) -> f64 {
+        2.0 * 4.0 * (self.d_model * self.d_model) as f64
+    }
+
+    /// Total decode FLOPs per token (all layers, top-k experts active).
+    pub fn decode_flops_per_token(&self) -> f64 {
+        self.n_layers as f64
+            * (self.attn_flops_per_token()
+                + self.top_k as f64 * self.flops_per_token_per_expert())
+    }
+}
+
+/// Table-1 registry, in the paper's row order.
+pub const MOE_MODELS: &[MoeModel] = &[
+    // Mixtral-8x7B: d=4096, d_ff=14336, 32 layers (public config).
+    MoeModel {
+        name: "Mixtral-8x7B",
+        total_params_b: 47.0,
+        active_params_b: 13.0,
+        n_layers: 32,
+        n_experts: 8,
+        top_k: 2,
+        d_model: 4096,
+        d_ff_expert: 14336,
+        routing_zipf_s: 1.0,
+        cpu_attn_ns_per_token: 52300,
+    },
+    // Phi-3.5-MoE: d=4096, d_ff=6400, 32 layers (public config).
+    MoeModel {
+        name: "Phi-3.5-MoE",
+        total_params_b: 60.8,
+        active_params_b: 6.6,
+        n_layers: 32,
+        n_experts: 16,
+        top_k: 2,
+        d_model: 4096,
+        d_ff_expert: 6400,
+        routing_zipf_s: 1.25,
+        cpu_attn_ns_per_token: 28800,
+    },
+    // Phi-tiny-MoE: geometry estimated to hit 3.8B total / 1.1B active.
+    MoeModel {
+        name: "Phi-tiny-MoE",
+        total_params_b: 3.8,
+        active_params_b: 1.1,
+        n_layers: 24,
+        n_experts: 16,
+        top_k: 2,
+        d_model: 1024,
+        d_ff_expert: 2816,
+        routing_zipf_s: 1.25,
+        cpu_attn_ns_per_token: 4100,
+    },
+    // Qwen2-MoE (Qwen1.5-MoE-A2.7B lineage): d=2048, 64 fine-grained
+    // experts of d_ff=1408, top-4, 24 layers.
+    MoeModel {
+        name: "Qwen2-MoE",
+        total_params_b: 14.3,
+        active_params_b: 2.7,
+        n_layers: 24,
+        n_experts: 64,
+        top_k: 4,
+        d_model: 2048,
+        d_ff_expert: 1408,
+        routing_zipf_s: 0.8,
+        cpu_attn_ns_per_token: 17600,
+    },
+];
+
+/// Look up a Table-1 model by (case-insensitive prefix of) name.
+pub fn find_moe_model(name: &str) -> Option<&'static MoeModel> {
+    let needle = name.to_ascii_lowercase();
+    MOE_MODELS.iter().find(|m| m.name.to_ascii_lowercase().starts_with(&needle))
+}
+
+/// A model evaluated in the KV-offload study (§5.3 / Fig. 7).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KvModel {
+    pub name: &'static str,
+    pub n_layers: u64,
+    /// KV bytes appended per token per layer at FP16.
+    pub kv_bytes_per_token_per_layer: u64,
+    /// Active parameters (B) — drives the recompute cost model (§5.1).
+    pub active_params_b: f64,
+}
+
+impl KvModel {
+    /// KV bytes per token across all layers (the per-"KV cache entry"
+    /// footprint of §5.3).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        self.n_layers * self.kv_bytes_per_token_per_layer
+    }
+}
+
+/// §5.3 registry.
+///
+/// * DeepSeek-V3 and Kimi-K2 use multi-head latent attention (MLA): the
+///   compressed KV is 512 + 64 (rope) dims per layer → 576 × 2 B.
+/// * Mistral-Large-3-675B (2026) has no public card on this image;
+///   estimated as GQA with 8 KV heads × 128 dims over 96 layers —
+///   DESIGN.md records the substitution.
+pub const KV_MODELS: &[KvModel] = &[
+    KvModel {
+        name: "DeepSeek-V3",
+        n_layers: 61,
+        kv_bytes_per_token_per_layer: 576 * FP16,
+        active_params_b: 37.0,
+    },
+    KvModel {
+        name: "Mistral-Large-3-675B",
+        n_layers: 96,
+        kv_bytes_per_token_per_layer: 8 * 128 * 2 * FP16,
+        active_params_b: 41.0, // MoE active-parameter estimate (no card)
+    },
+    KvModel {
+        name: "Kimi-K2",
+        n_layers: 61,
+        kv_bytes_per_token_per_layer: 576 * FP16,
+        active_params_b: 32.0,
+    },
+];
+
+pub fn find_kv_model(name: &str) -> Option<&'static KvModel> {
+    let needle = name.to_ascii_lowercase();
+    KV_MODELS.iter().find(|m| m.name.to_ascii_lowercase().starts_with(&needle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MIB: u64 = 1 << 20;
+
+    #[test]
+    fn registry_matches_table1() {
+        assert_eq!(MOE_MODELS.len(), 4);
+        let mixtral = find_moe_model("mixtral").unwrap();
+        assert_eq!(mixtral.n_experts, 8);
+        assert_eq!(mixtral.top_k, 2);
+        let qwen = find_moe_model("qwen").unwrap();
+        assert_eq!(qwen.n_experts, 64);
+        assert_eq!(qwen.top_k, 4);
+        let phi = find_moe_model("phi-3.5").unwrap();
+        assert_eq!(phi.n_experts, 16);
+    }
+
+    #[test]
+    fn expert_bytes_span_fig3_range() {
+        // Fig. 3 maps chunk sizes to expert sizes: Phi-tiny smallest,
+        // Mixtral largest (~20x ratio).
+        let tiny = find_moe_model("phi-tiny").unwrap().expert_bytes();
+        let mixtral = find_moe_model("mixtral").unwrap().expert_bytes();
+        assert!(tiny > 10 * MIB && tiny < 25 * MIB, "tiny={}", tiny / MIB);
+        assert!(mixtral > 300 * MIB && mixtral < 400 * MIB, "mixtral={}", mixtral / MIB);
+    }
+
+    #[test]
+    fn expert_param_totals_consistent_with_table1() {
+        // Expert params must be most of (but less than) total params.
+        for m in MOE_MODELS {
+            let expert_params =
+                (m.total_expert_bytes() / FP16) as f64 / 1e9;
+            assert!(
+                expert_params < m.total_params_b,
+                "{}: experts {expert_params:.1}B >= total {}B",
+                m.name,
+                m.total_params_b
+            );
+            assert!(
+                expert_params > 0.6 * m.total_params_b,
+                "{}: experts {expert_params:.1}B too small vs total {}B",
+                m.name,
+                m.total_params_b
+            );
+        }
+    }
+
+    #[test]
+    fn active_flops_ordering_matches_active_params() {
+        // Models with more active params must cost more FLOPs per token.
+        let by = |n: &str| find_moe_model(n).unwrap();
+        assert!(by("mixtral").decode_flops_per_token() > by("phi-3.5").decode_flops_per_token());
+        assert!(by("phi-3.5").decode_flops_per_token() > by("qwen").decode_flops_per_token());
+        assert!(by("qwen").decode_flops_per_token() > by("phi-tiny").decode_flops_per_token());
+    }
+
+    #[test]
+    fn kv_models_present_with_sane_footprints() {
+        assert_eq!(KV_MODELS.len(), 3);
+        let dsv3 = find_kv_model("deepseek").unwrap();
+        // MLA: ~70 KB/token
+        let per_tok = dsv3.kv_bytes_per_token();
+        assert!((60_000..90_000).contains(&per_tok), "{per_tok}");
+        let mistral = find_kv_model("mistral").unwrap();
+        assert!(mistral.kv_bytes_per_token() > dsv3.kv_bytes_per_token());
+    }
+}

@@ -1,0 +1,31 @@
+//! MoE serving with Harvest expert offload (paper §4).
+//!
+//! * [`config`] — the Table-1 model registry (Mixtral-8x7B, Phi-3.5-MoE,
+//!   Phi-tiny-MoE, Qwen2-MoE) with architecture-accurate geometry: expert
+//!   byte sizes (the Fig. 3 chunk sizes) and per-token FLOP counts (the
+//!   Fig. 5/6 compute model).
+//! * [`router`] — skewed, drifting expert-activation simulator (§4.2:
+//!   "expert access patterns are highly skewed ... this skew is dynamic").
+//! * [`residency`] — the expert residency map (§4.3): local HBM / peer
+//!   HBM / host DRAM per (layer, expert), with the fall-back order the
+//!   rebalancer maintains.
+//! * [`rebalancer`] — applies the Harvest API to expert weights: migrates
+//!   host-resident experts into peer HBM when capacity appears, and
+//!   invalidates residency entries on revocation.
+//! * [`pipeline`] — CGOPipe-style micro-batched decode pipeline
+//!   (MoE-Lightning's execution strategy, which Harvest extends): expert
+//!   weight fetches for micro-batch *i+1* overlap compute for *i*.
+//!   The baseline fetches from host over PCIe; Harvest serves hits from
+//!   peer HBM over NVLink.
+
+pub mod config;
+pub mod pipeline;
+pub mod rebalancer;
+pub mod residency;
+pub mod router;
+
+pub use config::{find_kv_model, find_moe_model, KvModel, MoeModel, KV_MODELS, MOE_MODELS};
+pub use pipeline::{CgoPipe, DecodeCostModel, PipelineStats};
+pub use rebalancer::ExpertRebalancer;
+pub use residency::{ExpertKey, ExpertResidency, ResidencyMap};
+pub use router::{RouterSim, RoutingStats};

@@ -1,0 +1,320 @@
+//! CGOPipe-style micro-batched decode pipeline (§4.3–§4.5).
+//!
+//! MoE-Lightning's CGOPipe partitions the batch into micro-batches and
+//! overlaps expert-weight transfers for micro-batch *i+1* with compute
+//! for micro-batch *i*; attention runs on the CPU. Harvest does not
+//! modify routing, batching, CPU-side attention or pipeline structure —
+//! it only adds peer GPUs as a tier for offloaded expert weights (§4.3).
+//!
+//! [`CgoPipe::decode_pass`] reproduces this: per layer, the distinct
+//! experts each micro-batch needs (from the routing simulator) are
+//! fetched in order on the appropriate link — peer HBM over NVLink when
+//! Harvest has a live cache entry, host DRAM over PCIe otherwise — while
+//! the compute timeline advances micro-batch by micro-batch. A
+//! micro-batch's FFN cannot start before its experts are resident
+//! ("an entire expert's parameters must be resident in GPU memory before
+//! its feed-forward computation can execute"). Link FIFO contention and
+//! per-transfer base latencies come from `memsim`; compute time comes
+//! from [`DecodeCostModel`] (FLOPs on the GPU + calibrated CPU-attention
+//! time per token).
+//!
+//! The paper's evaluation setup (§4.4): µ = 324 tokens, b = 14
+//! micro-batches, N = 4,536 tokens per decode step, `--max-new-tokens=32`,
+//! prompts drawn MTBench-like, 5 trials with 50-token warmup — all
+//! defaults here.
+
+use super::config::MoeModel;
+use super::rebalancer::{ExpertRebalancer, FetchSource};
+use super::residency::ExpertKey;
+use super::router::RouterSim;
+use crate::harvest::HarvestRuntime;
+use crate::memsim::Ns;
+
+/// Compute-side cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeCostModel {
+    /// Effective GPU FLOPs/s for decode GEMMs (H100 bf16 ≈ 990 TFLOP/s
+    /// peak; decode GEMMs at µ=324 run well below peak MFU).
+    pub eff_flops: f64,
+    /// Fixed per-micro-batch overhead (kernel launches, CPU↔GPU sync).
+    pub per_microbatch_overhead_ns: Ns,
+}
+
+impl Default for DecodeCostModel {
+    fn default() -> Self {
+        Self { eff_flops: 400e12, per_microbatch_overhead_ns: 200_000 }
+    }
+}
+
+impl DecodeCostModel {
+    /// Time for one micro-batch's compute in one layer: CPU attention
+    /// (per token) + expert FFN GEMMs (top-k per token) + overhead.
+    pub fn microbatch_ns(&self, model: &MoeModel, tokens: usize) -> Ns {
+        let attn = model.cpu_attn_ns_per_token * tokens as u64;
+        let ffn_flops =
+            tokens as f64 * model.top_k as f64 * model.flops_per_token_per_expert();
+        let ffn = (ffn_flops / self.eff_flops * 1e9) as Ns;
+        attn + ffn + self.per_microbatch_overhead_ns
+    }
+}
+
+/// Which tier offloaded experts are served from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OffloadTier {
+    /// Baseline CGOPipe: host DRAM over PCIe.
+    Cpu,
+    /// Harvest: peer HBM over NVLink when cached, host fallback.
+    Harvest,
+}
+
+/// Per-pass statistics.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineStats {
+    pub tokens: u64,
+    pub pass_ns: Ns,
+    pub compute_ns: Ns,
+    /// Time compute sat waiting for expert transfers.
+    pub stall_ns: Ns,
+    pub fetches_local: u64,
+    pub fetches_peer: u64,
+    pub fetches_host: u64,
+    pub bytes_from_peer: u64,
+    pub bytes_from_host: u64,
+}
+
+impl PipelineStats {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.pass_ns == 0 {
+            return 0.0;
+        }
+        self.tokens as f64 / (self.pass_ns as f64 / 1e9)
+    }
+
+    pub fn merge(&mut self, other: &PipelineStats) {
+        self.tokens += other.tokens;
+        self.pass_ns += other.pass_ns;
+        self.compute_ns += other.compute_ns;
+        self.stall_ns += other.stall_ns;
+        self.fetches_local += other.fetches_local;
+        self.fetches_peer += other.fetches_peer;
+        self.fetches_host += other.fetches_host;
+        self.bytes_from_peer += other.bytes_from_peer;
+        self.bytes_from_host += other.bytes_from_host;
+    }
+}
+
+/// The pipeline driver.
+pub struct CgoPipe {
+    pub model: &'static MoeModel,
+    pub micro_batch_tokens: usize,
+    pub n_micro_batches: usize,
+    pub cost: DecodeCostModel,
+}
+
+impl CgoPipe {
+    /// Paper defaults: µ=324, b=14 (§4.4).
+    pub fn paper_setup(model: &'static MoeModel) -> Self {
+        Self {
+            model,
+            micro_batch_tokens: 324,
+            n_micro_batches: 14,
+            cost: DecodeCostModel::default(),
+        }
+    }
+
+    pub fn batch_tokens(&self) -> u64 {
+        (self.micro_batch_tokens * self.n_micro_batches) as u64
+    }
+
+    /// Run one decode pass (every sequence advances one token). Virtual
+    /// time advances to the pass end.
+    pub fn decode_pass(
+        &self,
+        router: &mut RouterSim,
+        reb: &mut ExpertRebalancer,
+        hr: &mut HarvestRuntime,
+        tier: OffloadTier,
+    ) -> PipelineStats {
+        let mut stats = PipelineStats { tokens: self.batch_tokens(), ..Default::default() };
+        let pass_start = hr.node.clock.now();
+        let mut compute_cursor = pass_start;
+        for layer in 0..self.model.n_layers as usize {
+            // Routing for the whole layer is known up front (gating runs
+            // on the CPU from the previous layer's activations), so
+            // transfers for later micro-batches overlap earlier compute —
+            // the CGOPipe schedule.
+            let needed_sets: Vec<Vec<usize>> = (0..self.n_micro_batches)
+                .map(|_| router.route_microbatch(layer, self.micro_batch_tokens))
+                .collect();
+            for needed in needed_sets {
+                // 1. Fetch this micro-batch's non-local experts (async,
+                //    FIFO on the link; earliest start = link availability).
+                let mut ready_at = compute_cursor;
+                for expert in needed {
+                    let key = ExpertKey { layer: layer as u32, expert: expert as u32 };
+                    let is_local = reb.residency().is_local(key);
+                    if is_local {
+                        stats.fetches_local += 1;
+                        continue;
+                    }
+                    let (src, ev) = match tier {
+                        OffloadTier::Harvest => reb.fetch_expert(hr, key),
+                        OffloadTier::Cpu => {
+                            // Baseline: always serve offloaded experts
+                            // from host DRAM over PCIe.
+                            let ev = hr.node.copy(
+                                crate::memsim::DeviceId::Host,
+                                crate::memsim::DeviceId::Gpu(reb.compute_gpu()),
+                                self.model.expert_bytes(),
+                                None,
+                            );
+                            (FetchSource::Host, Some(ev))
+                        }
+                    };
+                    match src {
+                        FetchSource::Local => stats.fetches_local += 1,
+                        FetchSource::Peer => {
+                            stats.fetches_peer += 1;
+                            stats.bytes_from_peer += self.model.expert_bytes();
+                        }
+                        FetchSource::Host => {
+                            stats.fetches_host += 1;
+                            stats.bytes_from_host += self.model.expert_bytes();
+                        }
+                    }
+                    if let Some(ev) = ev {
+                        ready_at = ready_at.max(ev.end);
+                    }
+                }
+                // 2. Compute waits for residency, then runs.
+                let c = self.cost.microbatch_ns(self.model, self.micro_batch_tokens);
+                let start = compute_cursor.max(ready_at);
+                stats.stall_ns += start - compute_cursor;
+                stats.compute_ns += c;
+                compute_cursor = start + c;
+            }
+        }
+        hr.node.clock.advance_to(compute_cursor);
+        stats.pass_ns = compute_cursor - pass_start;
+        stats
+    }
+
+    /// Run `n_passes` decode passes and merge the stats (the paper
+    /// averages 5 trials of 32 new tokens after a 50-token warmup).
+    pub fn decode_many(
+        &self,
+        router: &mut RouterSim,
+        reb: &mut ExpertRebalancer,
+        hr: &mut HarvestRuntime,
+        tier: OffloadTier,
+        n_passes: usize,
+    ) -> PipelineStats {
+        let mut total = PipelineStats::default();
+        for _ in 0..n_passes {
+            let s = self.decode_pass(router, reb, hr, tier);
+            total.merge(&s);
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harvest::HarvestConfig;
+    use crate::memsim::{NodeSpec, SimNode};
+    use crate::moe::config::find_moe_model;
+
+    fn setup(
+        name: &str,
+        offload: f64,
+    ) -> (CgoPipe, RouterSim, ExpertRebalancer, HarvestRuntime) {
+        let model = find_moe_model(name).unwrap();
+        let hr =
+            HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+        let pipe = CgoPipe::paper_setup(model);
+        let router = RouterSim::new(model, model.n_layers as usize, 7);
+        let reb = ExpertRebalancer::new(model, 0, offload);
+        (pipe, router, reb, hr)
+    }
+
+    #[test]
+    fn no_offload_has_no_transfers() {
+        let (pipe, mut router, mut reb, mut hr) = setup("qwen", 0.0);
+        let s = pipe.decode_pass(&mut router, &mut reb, &mut hr, OffloadTier::Harvest);
+        assert_eq!(s.fetches_host + s.fetches_peer, 0);
+        assert_eq!(s.stall_ns, 0);
+        assert_eq!(s.tokens, 4536);
+        assert!(s.pass_ns > 0);
+    }
+
+    #[test]
+    fn harvest_beats_cpu_offload_at_50pct() {
+        for name in ["mixtral", "phi-3.5"] {
+            let (pipe, mut router, mut reb, mut hr) = setup(name, 0.5);
+            reb.rebalance(&mut hr, usize::MAX);
+            let h = pipe.decode_pass(&mut router, &mut reb, &mut hr, OffloadTier::Harvest);
+            let c = pipe.decode_pass(&mut router, &mut reb, &mut hr, OffloadTier::Cpu);
+            assert!(
+                h.tokens_per_sec() > c.tokens_per_sec(),
+                "{name}: harvest {:.0} <= cpu {:.0}",
+                h.tokens_per_sec(),
+                c.tokens_per_sec()
+            );
+            assert!(h.fetches_peer > 0);
+            assert_eq!(c.fetches_peer, 0);
+        }
+    }
+
+    #[test]
+    fn fig5_improvement_band() {
+        // Fig. 5: improvements range from ~48% to over 110% at 50%
+        // offload; allow a generous band on the simulator.
+        let (pipe, mut router, mut reb, mut hr) = setup("phi-3.5", 0.5);
+        reb.rebalance(&mut hr, usize::MAX);
+        let h = pipe.decode_many(&mut router, &mut reb, &mut hr, OffloadTier::Harvest, 3);
+        let c = pipe.decode_many(&mut router, &mut reb, &mut hr, OffloadTier::Cpu, 3);
+        let improvement = h.tokens_per_sec() / c.tokens_per_sec();
+        assert!(
+            (1.3..=3.0).contains(&improvement),
+            "phi-3.5 improvement {improvement:.2} out of band"
+        );
+    }
+
+    #[test]
+    fn stall_time_reflects_transfer_bound_baseline() {
+        let (pipe, mut router, mut reb, mut hr) = setup("mixtral", 1.0);
+        let c = pipe.decode_pass(&mut router, &mut reb, &mut hr, OffloadTier::Cpu);
+        assert!(c.stall_ns > 0, "full CPU offload must stall");
+        let (pipe, mut router, mut reb, mut hr) = setup("mixtral", 0.0);
+        let l = pipe.decode_pass(&mut router, &mut reb, &mut hr, OffloadTier::Cpu);
+        assert_eq!(l.stall_ns, 0, "fully local never stalls");
+    }
+
+    #[test]
+    fn pass_advances_virtual_clock() {
+        let (pipe, mut router, mut reb, mut hr) = setup("phi-tiny", 0.0);
+        let t0 = hr.node.clock.now();
+        let s = pipe.decode_pass(&mut router, &mut reb, &mut hr, OffloadTier::Harvest);
+        assert_eq!(hr.node.clock.now(), t0 + s.pass_ns);
+    }
+
+    #[test]
+    fn throughput_in_plausible_absolute_range() {
+        // Calibration sanity: Qwen2 baseline (0% offload) should land in
+        // the several-hundred-to-low-thousands tok/s range like the
+        // paper's ~975 tok/s (absolute numbers are calibrated, not
+        // measured — see EXPERIMENTS.md).
+        let (pipe, mut router, mut reb, mut hr) = setup("qwen", 0.0);
+        let s = pipe.decode_pass(&mut router, &mut reb, &mut hr, OffloadTier::Cpu);
+        let tps = s.tokens_per_sec();
+        assert!((300.0..4000.0).contains(&tps), "qwen baseline {tps:.0} tok/s");
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let (pipe, mut router, mut reb, mut hr) = setup("phi-tiny", 0.25);
+        let a = pipe.decode_many(&mut router, &mut reb, &mut hr, OffloadTier::Cpu, 2);
+        assert_eq!(a.tokens, 2 * 4536);
+    }
+}

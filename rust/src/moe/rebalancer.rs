@@ -1,0 +1,274 @@
+//! The Expert Rebalancer (§4.3) — applies the Harvest API to MoE weights.
+//!
+//! "At server start, a user-defined subset of experts is loaded into
+//! local HBM, while the remaining experts reside in host DRAM. As peer
+//! memory becomes available, the rebalancer allocates peer GPU memory
+//! using `harvest_alloc` and migrates selected expert weights into peer
+//! HBM. ... If a peer allocation is revoked, the rebalancer invalidates
+//! the corresponding residency entry, and future invocations
+//! automatically fall back to pinned host DRAM."
+
+use super::config::MoeModel;
+use super::residency::{ExpertKey, ExpertResidency, ResidencyMap};
+use crate::harvest::api::{AllocHints, Durability};
+use crate::harvest::HarvestRuntime;
+use crate::memsim::{CopyEvent, DeviceId};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Where an expert fetch was served from (metrics / Fig. 5 attribution).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FetchSource {
+    Local,
+    Peer,
+    Host,
+}
+
+/// The rebalancer. Holds the residency map behind `Rc<RefCell<_>>` so
+/// revocation callbacks (owned by the Harvest controller) can invalidate
+/// entries while the pipeline holds the rebalancer.
+pub struct ExpertRebalancer {
+    pub model: &'static MoeModel,
+    map: Rc<RefCell<ResidencyMap>>,
+    compute_gpu: usize,
+    /// Cumulative migration/fetch statistics.
+    pub migrations: u64,
+    pub migration_failures: u64,
+    pub revocations_observed: Rc<RefCell<u64>>,
+}
+
+impl ExpertRebalancer {
+    /// `offload_fraction` of each layer's experts start host-resident
+    /// (the Fig. 6 x-axis); the rest are pinned in local HBM.
+    pub fn new(model: &'static MoeModel, compute_gpu: usize, offload_fraction: f64) -> Self {
+        let n_local = ((1.0 - offload_fraction.clamp(0.0, 1.0)) * model.n_experts as f64).round()
+            as u32;
+        let map = Rc::new(RefCell::new(ResidencyMap::init(
+            model.n_layers as u32,
+            model.n_experts as u32,
+            n_local,
+        )));
+        Self {
+            model,
+            map,
+            compute_gpu,
+            migrations: 0,
+            migration_failures: 0,
+            revocations_observed: Rc::new(RefCell::new(0)),
+        }
+    }
+
+    pub fn residency(&self) -> std::cell::Ref<'_, ResidencyMap> {
+        self.map.borrow()
+    }
+
+    pub fn compute_gpu(&self) -> usize {
+        self.compute_gpu
+    }
+
+    /// Migrate up to `max_migrations` host-resident experts into peer HBM
+    /// (host → peer copies; the host copy stays authoritative). Returns
+    /// how many were promoted. Stops at the first capacity rejection.
+    pub fn rebalance(&mut self, hr: &mut HarvestRuntime, max_migrations: usize) -> usize {
+        let candidates: Vec<ExpertKey> =
+            self.map.borrow().host_resident().take(max_migrations).collect();
+        let mut promoted = 0;
+        for key in candidates {
+            let hints = AllocHints {
+                compute_gpu: Some(self.compute_gpu),
+                durability: Durability::HostBacked,
+                ..Default::default()
+            };
+            let handle = match hr.alloc(self.model.expert_bytes(), hints) {
+                Ok(h) => h,
+                Err(_) => {
+                    self.migration_failures += 1;
+                    break; // peers full: stop this round
+                }
+            };
+            // Populate the cache: host -> peer (stays off the critical
+            // path; CGOPipe compute continues meanwhile).
+            hr.copy_in(handle.id, DeviceId::Host).expect("fresh handle");
+            let map = Rc::clone(&self.map);
+            let observed = Rc::clone(&self.revocations_observed);
+            hr.register_cb(handle.id, move |rev| {
+                map.borrow_mut().invalidate_handle(rev.handle.id);
+                *observed.borrow_mut() += 1;
+            })
+            .expect("fresh handle");
+            let ok = self.map.borrow_mut().promote_to_peer(key, handle.id, handle.peer);
+            debug_assert!(ok);
+            promoted += 1;
+            self.migrations += 1;
+        }
+        promoted
+    }
+
+    /// Serve one expert for the FFN of `key` on the compute GPU. Returns
+    /// the tier it came from and the async copy event (None for local).
+    ///
+    /// Upon a miss the runtime does **not** automatically fetch the
+    /// weights to peer HBM (§4.3) — host misses go straight to the
+    /// compute GPU over PCIe, exactly like the CGOPipe baseline.
+    pub fn fetch_expert(
+        &mut self,
+        hr: &mut HarvestRuntime,
+        key: ExpertKey,
+    ) -> (FetchSource, Option<CopyEvent>) {
+        let residency = self.map.borrow().get(key);
+        match residency {
+            ExpertResidency::LocalHbm => (FetchSource::Local, None),
+            ExpertResidency::PeerHbm { handle, .. } => {
+                match hr.fetch_to(handle, self.compute_gpu) {
+                    Ok(ev) => (FetchSource::Peer, Some(ev)),
+                    Err(_) => {
+                        // Raced with a revocation: residency says peer but
+                        // the handle died. Invalidate and fall back.
+                        self.map.borrow_mut().invalidate_handle(handle);
+                        let ev = hr.node.copy(
+                            DeviceId::Host,
+                            DeviceId::Gpu(self.compute_gpu),
+                            self.model.expert_bytes(),
+                            None,
+                        );
+                        (FetchSource::Host, Some(ev))
+                    }
+                }
+            }
+            ExpertResidency::Host => {
+                let ev = hr.node.copy(
+                    DeviceId::Host,
+                    DeviceId::Gpu(self.compute_gpu),
+                    self.model.expert_bytes(),
+                    None,
+                );
+                (FetchSource::Host, Some(ev))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harvest::{HarvestConfig, RevocationReason};
+    use crate::memsim::tenant::TenantLoad;
+    use crate::memsim::{NodeSpec, SimNode};
+    use crate::moe::config::find_moe_model;
+
+    const GIB: u64 = 1 << 30;
+
+    fn runtime() -> HarvestRuntime {
+        HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2))
+    }
+
+    #[test]
+    fn rebalance_promotes_host_experts() {
+        let mut hr = runtime();
+        let model = find_moe_model("phi-tiny").unwrap();
+        let mut reb = ExpertRebalancer::new(model, 0, 0.5);
+        let (_l0, p0, h0) = reb.residency().counts();
+        assert_eq!(p0, 0);
+        let promoted = reb.rebalance(&mut hr, 16);
+        assert_eq!(promoted, 16);
+        let (_l, p, h) = reb.residency().counts();
+        assert_eq!(p, 16);
+        assert_eq!(h, h0 - 16);
+        reb.residency().check_invariants().unwrap();
+        // bytes actually landed on the peer
+        assert_eq!(hr.live_bytes_on(1), 16 * model.expert_bytes());
+    }
+
+    #[test]
+    fn rebalance_stops_at_capacity() {
+        let mut hr = runtime();
+        // Peer almost full: only ~2 Mixtral experts (352 MiB each) fit.
+        hr.node.set_tenant_load(1, TenantLoad::constant(80 * GIB, 79 * GIB));
+        let model = find_moe_model("mixtral").unwrap();
+        let mut reb = ExpertRebalancer::new(model, 0, 1.0);
+        let promoted = reb.rebalance(&mut hr, 64);
+        assert!(promoted >= 1 && promoted <= 3, "promoted={promoted}");
+        assert_eq!(reb.migration_failures, 1);
+    }
+
+    #[test]
+    fn fetch_tiers_and_sources() {
+        let mut hr = runtime();
+        let model = find_moe_model("phi-tiny").unwrap();
+        let mut reb = ExpertRebalancer::new(model, 0, 0.5);
+        reb.rebalance(&mut hr, 4);
+        // expert 0 is local (offload 0.5 -> experts 0..8 local)
+        let (src, ev) = reb.fetch_expert(&mut hr, ExpertKey { layer: 0, expert: 0 });
+        assert_eq!(src, FetchSource::Local);
+        assert!(ev.is_none());
+        // expert 8 was promoted to peer by the first rebalance round
+        let (src, ev) = reb.fetch_expert(&mut hr, ExpertKey { layer: 0, expert: 8 });
+        assert_eq!(src, FetchSource::Peer);
+        let ev = ev.unwrap();
+        assert_eq!(ev.src, DeviceId::Gpu(1));
+        // expert 15 of layer 23 is still host resident
+        let (src, ev) = reb.fetch_expert(&mut hr, ExpertKey { layer: 23, expert: 15 });
+        assert_eq!(src, FetchSource::Host);
+        assert_eq!(ev.unwrap().src, DeviceId::Host);
+    }
+
+    #[test]
+    fn peer_fetch_faster_than_host_fetch() {
+        let mut hr = runtime();
+        let model = find_moe_model("mixtral").unwrap();
+        let mut reb = ExpertRebalancer::new(model, 0, 1.0);
+        reb.rebalance(&mut hr, 1);
+        let (_, peer_ev) =
+            reb.fetch_expert(&mut hr, ExpertKey { layer: 0, expert: 0 });
+        let (_, host_ev) =
+            reb.fetch_expert(&mut hr, ExpertKey { layer: 0, expert: 1 });
+        let p = peer_ev.unwrap().duration();
+        let h = host_ev.unwrap().duration();
+        let ratio = h as f64 / p as f64;
+        assert!(ratio > 7.0, "expected Fig.3-band speedup, got {ratio}");
+    }
+
+    #[test]
+    fn revocation_invalidates_residency_and_falls_back() {
+        let mut hr = runtime();
+        let model = find_moe_model("phi-tiny").unwrap();
+        let mut reb = ExpertRebalancer::new(model, 0, 1.0);
+        reb.rebalance(&mut hr, 8);
+        let (_, p, _) = reb.residency().counts();
+        assert_eq!(p, 8);
+        // revoke everything on the peer
+        hr.revoke_peer(1, RevocationReason::TenantPressure);
+        assert_eq!(*reb.revocations_observed.borrow(), 8);
+        let (_, p, h) = reb.residency().counts();
+        assert_eq!(p, 0);
+        assert_eq!(h as u64, model.n_layers * model.n_experts);
+        reb.residency().check_invariants().unwrap();
+        // fetches now come from host
+        let (src, _) = reb.fetch_expert(&mut hr, ExpertKey { layer: 0, expert: 0 });
+        assert_eq!(src, FetchSource::Host);
+    }
+
+    #[test]
+    fn tenant_pressure_mid_run_revokes_and_rebalancer_recovers() {
+        let mut hr = runtime();
+        hr.node.set_tenant_load(
+            1,
+            TenantLoad::from_steps(
+                80 * GIB,
+                vec![(0, 0), (1_000_000, 80 * GIB), (2_000_000, 10 * GIB)],
+            ),
+        );
+        let model = find_moe_model("phi-tiny").unwrap();
+        let mut reb = ExpertRebalancer::new(model, 0, 1.0);
+        reb.rebalance(&mut hr, 32);
+        assert_eq!(reb.residency().counts().1, 32);
+        // pressure spike revokes everything
+        hr.advance_to(1_500_000);
+        assert_eq!(reb.residency().counts().1, 0);
+        // pressure clears; rebalancer re-promotes
+        hr.advance_to(2_500_000);
+        let promoted = reb.rebalance(&mut hr, 8);
+        assert_eq!(promoted, 8);
+        assert_eq!(reb.residency().counts().1, 8);
+    }
+}

@@ -1,0 +1,198 @@
+//! Expert residency map (§4.3).
+//!
+//! "Expert placement is tracked using an expert residency map that
+//! records, for each expert, whether it resides in local HBM, peer HBM,
+//! or host DRAM." Peer entries are a *cache* layered over the host copy
+//! (experts are [`Durability::HostBacked`]); local entries are pinned at
+//! server start. On revocation the rebalancer invalidates the peer entry
+//! and lookups fall back to pinned host DRAM automatically.
+
+use crate::harvest::api::HandleId;
+use std::collections::BTreeMap;
+
+/// (layer, expert) key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ExpertKey {
+    pub layer: u32,
+    pub expert: u32,
+}
+
+/// Where an expert's weights can be served from, fastest first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExpertResidency {
+    /// Pinned in the compute GPU's HBM — no transfer needed.
+    LocalHbm,
+    /// Cached in peer HBM under a live harvest handle (host copy remains
+    /// authoritative).
+    PeerHbm { handle: HandleId, peer: usize },
+    /// Host DRAM only (the authoritative copy).
+    Host,
+}
+
+/// The map. Every expert always has an implicit authoritative host copy;
+/// this structure tracks the *fastest currently valid* tier.
+#[derive(Debug, Clone, Default)]
+pub struct ResidencyMap {
+    entries: BTreeMap<ExpertKey, ExpertResidency>,
+    /// Reverse index: harvest handle -> expert (for revocation callbacks).
+    by_handle: BTreeMap<HandleId, ExpertKey>,
+}
+
+impl ResidencyMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Initialise all experts of a model: the first `n_local` experts of
+    /// every layer pinned locally (a user-defined subset per §4.3), the
+    /// rest host-resident.
+    pub fn init(n_layers: u32, n_experts: u32, n_local: u32) -> Self {
+        let mut m = Self::new();
+        for layer in 0..n_layers {
+            for expert in 0..n_experts {
+                let key = ExpertKey { layer, expert };
+                let res =
+                    if expert < n_local { ExpertResidency::LocalHbm } else { ExpertResidency::Host };
+                m.entries.insert(key, res);
+            }
+        }
+        m
+    }
+
+    pub fn get(&self, key: ExpertKey) -> ExpertResidency {
+        self.entries.get(&key).copied().unwrap_or(ExpertResidency::Host)
+    }
+
+    pub fn is_local(&self, key: ExpertKey) -> bool {
+        matches!(self.get(key), ExpertResidency::LocalHbm)
+    }
+
+    /// Promote a host-resident expert into the peer cache. Local experts
+    /// are never demoted to peer (that would be a slowdown).
+    pub fn promote_to_peer(&mut self, key: ExpertKey, handle: HandleId, peer: usize) -> bool {
+        match self.get(key) {
+            ExpertResidency::Host => {
+                self.entries.insert(key, ExpertResidency::PeerHbm { handle, peer });
+                self.by_handle.insert(handle, key);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Invalidate the peer entry for `handle` (revocation callback path);
+    /// the expert falls back to host. Returns the expert, if any.
+    pub fn invalidate_handle(&mut self, handle: HandleId) -> Option<ExpertKey> {
+        let key = self.by_handle.remove(&handle)?;
+        debug_assert!(matches!(self.get(key), ExpertResidency::PeerHbm { .. }));
+        self.entries.insert(key, ExpertResidency::Host);
+        Some(key)
+    }
+
+    /// All experts currently cached on a peer.
+    pub fn peer_cached(&self) -> impl Iterator<Item = (ExpertKey, HandleId, usize)> + '_ {
+        self.entries.iter().filter_map(|(&k, &r)| match r {
+            ExpertResidency::PeerHbm { handle, peer } => Some((k, handle, peer)),
+            _ => None,
+        })
+    }
+
+    /// Experts currently host-resident (candidates for promotion).
+    pub fn host_resident(&self) -> impl Iterator<Item = ExpertKey> + '_ {
+        self.entries.iter().filter_map(|(&k, &r)| match r {
+            ExpertResidency::Host => Some(k),
+            _ => None,
+        })
+    }
+
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut local = 0;
+        let mut peer = 0;
+        let mut host = 0;
+        for r in self.entries.values() {
+            match r {
+                ExpertResidency::LocalHbm => local += 1,
+                ExpertResidency::PeerHbm { .. } => peer += 1,
+                ExpertResidency::Host => host += 1,
+            }
+        }
+        (local, peer, host)
+    }
+
+    /// Consistency: every by_handle entry points at a PeerHbm entry with
+    /// the same handle, and vice versa. Property-tested.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (&h, &k) in &self.by_handle {
+            match self.get(k) {
+                ExpertResidency::PeerHbm { handle, .. } if handle == h => {}
+                other => return Err(format!("by_handle {h:?} -> {k:?} but entry is {other:?}")),
+            }
+        }
+        for (&k, &r) in &self.entries {
+            if let ExpertResidency::PeerHbm { handle, .. } = r {
+                if self.by_handle.get(&handle) != Some(&k) {
+                    return Err(format!("peer entry {k:?} missing reverse index"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(layer: u32, expert: u32) -> ExpertKey {
+        ExpertKey { layer, expert }
+    }
+
+    #[test]
+    fn init_splits_local_and_host() {
+        let m = ResidencyMap::init(2, 8, 3);
+        let (local, peer, host) = m.counts();
+        assert_eq!((local, peer, host), (6, 0, 10));
+        assert!(m.is_local(key(0, 0)));
+        assert!(m.is_local(key(1, 2)));
+        assert_eq!(m.get(key(0, 3)), ExpertResidency::Host);
+    }
+
+    #[test]
+    fn promote_and_invalidate_roundtrip() {
+        let mut m = ResidencyMap::init(1, 4, 1);
+        let h = HandleId(42);
+        assert!(m.promote_to_peer(key(0, 2), h, 1));
+        assert_eq!(m.get(key(0, 2)), ExpertResidency::PeerHbm { handle: h, peer: 1 });
+        m.check_invariants().unwrap();
+        assert_eq!(m.invalidate_handle(h), Some(key(0, 2)));
+        assert_eq!(m.get(key(0, 2)), ExpertResidency::Host);
+        m.check_invariants().unwrap();
+        // second invalidation is a no-op
+        assert_eq!(m.invalidate_handle(h), None);
+    }
+
+    #[test]
+    fn local_experts_never_promoted() {
+        let mut m = ResidencyMap::init(1, 4, 2);
+        assert!(!m.promote_to_peer(key(0, 0), HandleId(1), 1));
+        assert!(m.is_local(key(0, 0)));
+    }
+
+    #[test]
+    fn double_promotion_rejected() {
+        let mut m = ResidencyMap::init(1, 4, 0);
+        assert!(m.promote_to_peer(key(0, 1), HandleId(1), 1));
+        assert!(!m.promote_to_peer(key(0, 1), HandleId(2), 1), "already peer-cached");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn iterators_enumerate_tiers() {
+        let mut m = ResidencyMap::init(1, 4, 1);
+        m.promote_to_peer(key(0, 1), HandleId(9), 1);
+        let cached: Vec<_> = m.peer_cached().collect();
+        assert_eq!(cached, vec![(key(0, 1), HandleId(9), 1)]);
+        let host: Vec<_> = m.host_resident().collect();
+        assert_eq!(host, vec![key(0, 2), key(0, 3)]);
+    }
+}

@@ -1,0 +1,241 @@
+//! Expert-routing simulator (§4.2).
+//!
+//! Expert access is "highly skewed and exhibits temporal locality:
+//! certain experts are frequently activated, while others remain unused.
+//! Crucially, this skew is dynamic" — hotspots shift as query mix drifts.
+//!
+//! [`RouterSim`] models exactly that: per layer, token routing follows a
+//! Zipf(s) popularity law over a *permutation* of the experts; the
+//! permutation drifts over time (random adjacent swaps every
+//! `drift_interval` tokens), shifting hotspots unpredictably while
+//! preserving the marginal skew. For the tiny end-to-end model the real
+//! gating output from the PJRT runtime is used instead — this simulator
+//! covers the paper-scale models whose weights don't exist here.
+
+use crate::moe::config::MoeModel;
+use crate::util::rng::{Rng, Zipf};
+
+/// Aggregate routing statistics over a window.
+#[derive(Debug, Clone, Default)]
+pub struct RoutingStats {
+    pub tokens: u64,
+    /// Activation count per expert (layer-summed).
+    pub activations: Vec<u64>,
+}
+
+impl RoutingStats {
+    /// Fraction of activations landing on the top `n` experts.
+    pub fn top_n_share(&self, n: usize) -> f64 {
+        let mut counts = self.activations.clone();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        counts.iter().take(n).sum::<u64>() as f64 / total as f64
+    }
+}
+
+/// Per-layer drifting-Zipf router.
+#[derive(Debug, Clone)]
+pub struct RouterSim {
+    n_experts: usize,
+    top_k: usize,
+    zipf: Zipf,
+    /// rank -> expert id, per layer.
+    perms: Vec<Vec<usize>>,
+    drift_interval: u64,
+    tokens_since_drift: u64,
+    rng: Rng,
+    pub stats: RoutingStats,
+}
+
+impl RouterSim {
+    pub fn new(model: &MoeModel, n_layers_simulated: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let n = model.n_experts as usize;
+        let perms = (0..n_layers_simulated).map(|_| rng.permutation(n)).collect();
+        Self {
+            n_experts: n,
+            top_k: model.top_k as usize,
+            zipf: Zipf::new(n, model.routing_zipf_s),
+            perms,
+            drift_interval: 4096,
+            tokens_since_drift: 0,
+            rng,
+            stats: RoutingStats { tokens: 0, activations: vec![0; n] },
+        }
+    }
+
+    pub fn with_drift_interval(mut self, tokens: u64) -> Self {
+        self.drift_interval = tokens.max(1);
+        self
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    pub fn top_k(&self) -> usize {
+        self.top_k
+    }
+
+    /// Route one token at `layer`: distinct top-k expert ids.
+    pub fn route_token(&mut self, layer: usize) -> Vec<usize> {
+        let mut picked = Vec::with_capacity(self.top_k);
+        self.route_token_into(layer, &mut picked);
+        picked
+    }
+
+    /// Allocation-free variant: clears `picked` and fills it with the
+    /// token's distinct top-k experts (the `route_microbatch` hot path —
+    /// see EXPERIMENTS.md §Perf).
+    pub fn route_token_into(&mut self, layer: usize, picked: &mut Vec<usize>) {
+        picked.clear();
+        // Rejection-sample distinct ranks, then map through the drifting
+        // permutation.
+        let mut guard = 0;
+        while picked.len() < self.top_k {
+            let rank = self.zipf.sample(&mut self.rng);
+            let expert = self.perms[layer][rank];
+            if !picked.contains(&expert) {
+                picked.push(expert);
+            }
+            guard += 1;
+            if guard > 1000 {
+                // Pathological skew: fill with the first unused experts.
+                for e in self.perms[layer].iter() {
+                    if picked.len() == self.top_k {
+                        break;
+                    }
+                    if !picked.contains(e) {
+                        picked.push(*e);
+                    }
+                }
+            }
+        }
+        for &e in picked.iter() {
+            self.stats.activations[e] += 1;
+        }
+        self.stats.tokens += 1;
+        self.tokens_since_drift += 1;
+        if self.tokens_since_drift >= self.drift_interval {
+            self.drift();
+            self.tokens_since_drift = 0;
+        }
+    }
+
+    /// Route a micro-batch of `n_tokens` at `layer`; returns the set of
+    /// *distinct* experts activated (what must be resident before the
+    /// expert FFN can run — CGOPipe pages at expert granularity).
+    pub fn route_microbatch(&mut self, layer: usize, n_tokens: usize) -> Vec<usize> {
+        let mut needed = vec![false; self.n_experts];
+        let mut scratch = Vec::with_capacity(self.top_k);
+        for _ in 0..n_tokens {
+            self.route_token_into(layer, &mut scratch);
+            for &e in &scratch {
+                needed[e] = true;
+            }
+        }
+        (0..self.n_experts).filter(|&e| needed[e]).collect()
+    }
+
+    /// Shift hotspots: a few adjacent swaps in each layer's permutation
+    /// (gradual drift, as observed across query-mix changes).
+    fn drift(&mut self) {
+        for layer in 0..self.perms.len() {
+            for _ in 0..(self.n_experts / 8).max(1) {
+                let i = self.rng.below(self.n_experts as u64 - 1) as usize;
+                self.perms[layer].swap(i, i + 1);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::config::find_moe_model;
+
+    #[test]
+    fn routes_are_distinct_and_in_range() {
+        let m = find_moe_model("qwen").unwrap();
+        let mut r = RouterSim::new(m, 4, 1);
+        for _ in 0..200 {
+            let picks = r.route_token(0);
+            assert_eq!(picks.len(), 4);
+            let mut sorted = picks.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 4, "distinct experts");
+            assert!(picks.iter().all(|&e| e < 64));
+        }
+    }
+
+    #[test]
+    fn skew_is_visible() {
+        let m = find_moe_model("phi-3.5").unwrap();
+        let mut r = RouterSim::new(m, 1, 2);
+        for _ in 0..20_000 {
+            r.route_token(0);
+        }
+        // top-4 of 16 experts should take well over the uniform 25% share
+        let share = r.stats.top_n_share(4);
+        assert!(share > 0.5, "share={share}");
+    }
+
+    #[test]
+    fn qwen_larger_working_set_than_phi() {
+        // §4.5: "Qwen2-MoE activates a larger number of distinct experts
+        // per token, increasing expert working-set churn."
+        let route_distinct = |name: &str, tokens: usize| {
+            let m = find_moe_model(name).unwrap();
+            let mut r = RouterSim::new(m, 1, 3);
+            r.route_microbatch(0, tokens).len()
+        };
+        let phi = route_distinct("phi-3.5", 324);
+        let qwen = route_distinct("qwen", 324);
+        assert!(qwen > 2 * phi, "qwen working set {qwen} vs phi {phi}");
+        // And per-activation concentration is higher for Phi (zipf skew).
+        let share = |name: &str| {
+            let m = find_moe_model(name).unwrap();
+            let mut r = RouterSim::new(m, 1, 3);
+            for _ in 0..5_000 {
+                r.route_token(0);
+            }
+            r.stats.top_n_share((m.n_experts / 4) as usize)
+        };
+        assert!(share("phi-3.5") > share("qwen"));
+    }
+
+    #[test]
+    fn drift_changes_hotspots() {
+        let m = find_moe_model("phi-3.5").unwrap();
+        let mut r = RouterSim::new(m, 1, 4).with_drift_interval(100);
+        let before = r.perms[0].clone();
+        for _ in 0..1_000 {
+            r.route_token(0);
+        }
+        assert_ne!(before, r.perms[0], "permutation drifted");
+    }
+
+    #[test]
+    fn microbatch_needed_set_reasonable() {
+        let m = find_moe_model("mixtral").unwrap();
+        let mut r = RouterSim::new(m, 1, 5);
+        let needed = r.route_microbatch(0, 324);
+        // 324 tokens x top-2 of 8 experts: all or nearly all experts hit
+        assert!(needed.len() >= 6, "needed={needed:?}");
+        assert!(needed.windows(2).all(|w| w[0] < w[1]), "sorted distinct");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let m = find_moe_model("mixtral").unwrap();
+        let mut a = RouterSim::new(m, 2, 9);
+        let mut b = RouterSim::new(m, 2, 9);
+        for l in [0usize, 1, 0] {
+            assert_eq!(a.route_microbatch(l, 32), b.route_microbatch(l, 32));
+        }
+    }
+}

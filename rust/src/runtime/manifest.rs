@@ -1,0 +1,258 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! (producer, build time) and the Rust runtime (consumer, request path).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Static geometry of the AOT-compiled model; mirrors
+/// `python/compile/model.py::ModelConfig`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RuntimeModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_ff: usize,
+    pub page_size: usize,
+    pub num_pages: usize,
+    pub max_pages_per_seq: usize,
+}
+
+impl RuntimeModelConfig {
+    pub fn max_context(&self) -> usize {
+        self.page_size * self.max_pages_per_seq
+    }
+
+    /// f32 element count of one KV (key or value) page-pool tensor.
+    pub fn kv_pool_elems(&self) -> usize {
+        self.n_layers * self.num_pages * self.page_size * self.n_heads * self.head_dim
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            vocab: v.get("vocab")?.as_usize()?,
+            d_model: v.get("d_model")?.as_usize()?,
+            n_heads: v.get("n_heads")?.as_usize()?,
+            head_dim: v.get("head_dim")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            n_experts: v.get("n_experts")?.as_usize()?,
+            top_k: v.get("top_k")?.as_usize()?,
+            d_ff: v.get("d_ff")?.as_usize()?,
+            page_size: v.get("page_size")?.as_usize()?,
+            num_pages: v.get("num_pages")?.as_usize()?,
+            max_pages_per_seq: v.get("max_pages_per_seq")?.as_usize()?,
+        })
+    }
+}
+
+/// One argument of an AOT executable.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v.get("shape")?.as_usize_vec()?,
+            dtype: v.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT executable (an HLO-text file plus its calling convention).
+#[derive(Debug, Clone)]
+pub struct ExecutableSpec {
+    pub path: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<String>,
+}
+
+impl ExecutableSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            path: v.get("path")?.as_str()?.to_string(),
+            args: v.get("args")?.as_arr()?.iter().map(ArgSpec::from_json).collect::<Result<_>>()?,
+            outputs: v
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|o| Ok(o.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// A parameter slice inside `weights.bin`.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub seed: u64,
+    pub config: RuntimeModelConfig,
+    pub executables: BTreeMap<String, ExecutableSpec>,
+    pub params: Vec<ParamSpec>,
+    pub weights_sha256: String,
+    pub weights_nbytes: usize,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let mut executables = BTreeMap::new();
+        for (name, spec) in v.get("executables")?.as_obj()? {
+            executables.insert(name.clone(), ExecutableSpec::from_json(spec)?);
+        }
+        let params = v
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p.get("shape")?.as_usize_vec()?,
+                    offset: p.get("offset")?.as_usize()?,
+                    nbytes: p.get("nbytes")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let m = Manifest {
+            seed: v.get("seed")?.as_u64()?,
+            config: RuntimeModelConfig::from_json(v.get("config")?)?,
+            executables,
+            params,
+            weights_sha256: v.get("weights_sha256")?.as_str()?.to_string(),
+            weights_nbytes: v.get("weights_nbytes")?.as_usize()?,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Internal consistency: param offsets contiguous, executables present.
+    pub fn validate(&self) -> Result<()> {
+        let mut end = 0usize;
+        for p in &self.params {
+            if p.offset != end {
+                bail!("param {} offset {} != expected {end}", p.name, p.offset);
+            }
+            let elems: usize = p.shape.iter().product();
+            if elems * 4 != p.nbytes {
+                bail!("param {} nbytes mismatch", p.name);
+            }
+            end += p.nbytes;
+        }
+        if end != self.weights_nbytes {
+            bail!("weights_nbytes {} != sum of params {end}", self.weights_nbytes);
+        }
+        for name in ["decode_step_b1", "decode_step_b4", "moe_ffn", "paged_attention"] {
+            if !self.executables.contains_key(name) {
+                bail!("manifest missing executable {name}");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&ExecutableSpec> {
+        self.executables.get(name).ok_or_else(|| anyhow!("no executable {name} in manifest"))
+    }
+
+    /// Batch sizes for which a `decode_step_b{B}` variant exists, ascending.
+    pub fn decode_batch_variants(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .executables
+            .keys()
+            .filter_map(|k| k.strip_prefix("decode_step_b").and_then(|s| s.parse().ok()))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "seed": 0,
+      "config": {"vocab": 8, "d_model": 4, "n_heads": 1, "head_dim": 4,
+                 "n_layers": 1, "n_experts": 2, "top_k": 1, "d_ff": 8,
+                 "page_size": 2, "num_pages": 4, "max_pages_per_seq": 2},
+      "executables": {
+        "decode_step_b1": {"path": "a.hlo.txt", "args": [], "outputs": []},
+        "decode_step_b4": {"path": "b.hlo.txt", "args": [], "outputs": []},
+        "moe_ffn": {"path": "c.hlo.txt",
+          "args": [{"name": "x", "shape": [4, 4], "dtype": "float32"}],
+          "outputs": ["y"]},
+        "paged_attention": {"path": "d.hlo.txt", "args": [], "outputs": []}
+      },
+      "params": [
+        {"name": "embed", "shape": [8, 4], "offset": 0, "nbytes": 128},
+        {"name": "ln_f", "shape": [4], "offset": 128, "nbytes": 16}
+      ],
+      "weights_sha256": "x",
+      "weights_nbytes": 144
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.config.d_model, 4);
+        assert_eq!(m.decode_batch_variants(), vec![1, 4]);
+        assert_eq!(m.executable("moe_ffn").unwrap().args[0].shape, vec![4, 4]);
+        assert_eq!(m.config.max_context(), 4);
+    }
+
+    #[test]
+    fn rejects_bad_offsets() {
+        let bad = MINI.replace(r#""offset": 128"#, r#""offset": 64"#);
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_executable() {
+        let bad = MINI.replace("paged_attention", "paged_attn_typo");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_nbytes_shape_mismatch() {
+        let bad = MINI.replace(r#""nbytes": 16"#, r#""nbytes": 20"#);
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        let dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert_eq!(m.config.n_heads * m.config.head_dim, m.config.d_model);
+            assert!(!m.decode_batch_variants().is_empty());
+        }
+    }
+}

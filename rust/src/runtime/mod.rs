@@ -1,0 +1,136 @@
+//! PJRT runtime: load and execute the AOT-compiled L2/L1 artifacts.
+//!
+//! The bridge works on HLO **text** (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which the bundled
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly. See `python/compile/aot.py` and
+//! `/opt/xla-example/README.md`.
+//!
+//! One [`Executable`] per model variant is compiled once at startup; the
+//! request path then only calls `execute` with device-resident literals.
+//! Python never runs here.
+
+mod manifest;
+mod model;
+mod weights;
+
+pub use manifest::{ArgSpec, ExecutableSpec, Manifest, RuntimeModelConfig};
+pub use model::{DecodeOutput, DecodeSlot, ModelRuntime, PagedKvState};
+pub use weights::Weights;
+
+use anyhow::{anyhow as eyre, Context, Result};
+use std::path::Path;
+
+/// A compiled PJRT executable plus the metadata needed to call it.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    spec: ExecutableSpec,
+}
+
+/// Wrapper around the PJRT CPU client that loads `artifacts/*.hlo.txt`.
+#[derive(Clone)]
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Upload a host literal to a device-resident buffer.
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_literal(None, lit).map_err(|e| eyre!("{e:?}"))
+    }
+
+    /// Create a CPU PJRT client (the only backend available on this image;
+    /// on a real deployment this would be the GPU plugin).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| eyre!("{e:?}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load(&self, dir: &Path, name: &str, spec: &ExecutableSpec) -> Result<Executable> {
+        let path = dir.join(&spec.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| eyre!("non-utf8 path"))?,
+        )
+        .map_err(|e| eyre!("{e:?}"))
+        .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| eyre!("{e:?}"))
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(Executable { name: name.to_string(), exe, spec: spec.clone() })
+    }
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn spec(&self) -> &ExecutableSpec {
+        &self.spec
+    }
+
+    fn check_arity(&self, n: usize) -> Result<()> {
+        if n != self.spec.args.len() {
+            return Err(eyre!(
+                "{}: expected {} args, got {}",
+                self.name,
+                self.spec.args.len(),
+                n
+            ));
+        }
+        Ok(())
+    }
+
+    /// Normalize PJRT outputs to one literal per logical result, whether
+    /// the runtime untupled the root (return_tuple=False artifacts) or
+    /// handed back a single tuple buffer.
+    fn outputs_to_literals(bufs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+        let inner = bufs.into_iter().next().ok_or_else(|| eyre!("no replica outputs"))?;
+        if inner.len() == 1 {
+            let lit = inner[0].to_literal_sync().map_err(|e| eyre!("{e:?}"))?;
+            match lit.to_tuple() {
+                Ok(parts) if !parts.is_empty() => Ok(parts),
+                _ => Ok(vec![inner[0].to_literal_sync().map_err(|e| eyre!("{e:?}"))?]),
+            }
+        } else {
+            inner
+                .iter()
+                .map(|b| b.to_literal_sync().map_err(|e| eyre!("{e:?}")))
+                .collect()
+        }
+    }
+
+    /// Execute with the given literals; returns one literal per result.
+    pub fn execute(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.check_arity(args.len())?;
+        let bufs = self.exe.execute::<xla::Literal>(args).map_err(|e| eyre!("{e:?}"))?;
+        Self::outputs_to_literals(bufs)
+    }
+
+    /// Like [`Executable::execute`] but borrowing the argument literals —
+    /// avoids cloning multi-MB weight/KV literals on the hot path.
+    pub fn execute_refs(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.check_arity(args.len())?;
+        let bufs = self.exe.execute::<&xla::Literal>(args).map_err(|e| eyre!("{e:?}"))?;
+        Self::outputs_to_literals(bufs)
+    }
+
+    /// Device-buffer path: arguments stay resident on the device and the
+    /// results come back as device buffers — the decode hot loop feeds
+    /// the KV state buffers straight back without any host round-trip
+    /// (EXPERIMENTS.md §Perf).
+    pub fn execute_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        self.check_arity(args.len())?;
+        let bufs = self.exe.execute_b::<&xla::PjRtBuffer>(args).map_err(|e| eyre!("{e:?}"))?;
+        bufs.into_iter().next().ok_or_else(|| eyre!("no replica outputs"))
+    }
+}

@@ -1,0 +1,219 @@
+//! High-level model runtime: the real-compute decode path.
+//!
+//! [`ModelRuntime`] owns the compiled `decode_step_b{B}` executables, the
+//! weight literals, and a [`PagedKvState`] (the *physical* KV page pools
+//! fed to the HLO). The serving engine calls [`ModelRuntime::decode`] with
+//! a micro-batch; everything here is pure Rust + PJRT — Python never runs.
+//!
+//! Note the division of labour: the HLO only ever sees *physical page
+//! indices*. Which tier a page logically lives on (local / peer / host)
+//! and what the transfer costs are is the Harvest coordinator's business
+//! (`crate::kv`, `crate::harvest`); by the time a decode step executes,
+//! the referenced pages are resident in the pool.
+
+use super::{Executable, Manifest, PjrtRuntime, RuntimeModelConfig, Weights};
+use anyhow::{anyhow as eyre, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One sequence's slot in a decode micro-batch.
+#[derive(Debug, Clone)]
+pub struct DecodeSlot {
+    /// Token id to feed at this step.
+    pub token: i32,
+    /// 0-based decode position (== number of tokens already in the cache).
+    pub pos: i32,
+    /// Logical→physical page map for this sequence (padded to
+    /// `max_pages_per_seq`; unused entries may be any valid page).
+    pub page_table: Vec<i32>,
+}
+
+/// Output of one decode step.
+#[derive(Debug, Clone)]
+pub struct DecodeOutput {
+    /// `[B][vocab]` logits.
+    pub logits: Vec<Vec<f32>>,
+    /// `[L][B][k]` expert ids actually routed by the gating network —
+    /// this is what drives the MoE residency/transfer simulation with
+    /// *real* routing decisions.
+    pub routed: Vec<Vec<Vec<i32>>>,
+}
+
+/// The physical KV page pools (key + value), kept as literals and fed
+/// back functionally each step.
+pub struct PagedKvState {
+    kv_k: xla::Literal,
+    kv_v: xla::Literal,
+    shape: Vec<usize>,
+}
+
+impl PagedKvState {
+    fn zeros(cfg: &RuntimeModelConfig) -> Result<Self> {
+        let shape = vec![cfg.n_layers, cfg.num_pages, cfg.page_size, cfg.n_heads, cfg.head_dim];
+        let nbytes = shape.iter().product::<usize>() * 4;
+        let zeros = vec![0u8; nbytes];
+        let mk = || {
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &shape, &zeros)
+                .map_err(|e| eyre!("{e:?}"))
+        };
+        Ok(Self { kv_k: mk()?, kv_v: mk()?, shape })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        2 * self.shape.iter().product::<usize>() * 4
+    }
+}
+
+/// Loads everything under `artifacts/` and exposes a batched decode step.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    weights: Weights,
+    decode_exes: BTreeMap<usize, Executable>,
+    kv: PagedKvState,
+}
+
+fn lit_i32(vals: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, &bytes)
+        .map_err(|e| eyre!("{e:?}"))
+}
+
+impl ModelRuntime {
+    /// Load manifest + weights and compile all decode variants.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let rt = PjrtRuntime::cpu()?;
+        Self::load_with(artifacts_dir, &rt)
+    }
+
+    pub fn load_with(artifacts_dir: &Path, rt: &PjrtRuntime) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let weights = Weights::load(artifacts_dir, &manifest)?;
+        let mut decode_exes = BTreeMap::new();
+        for b in manifest.decode_batch_variants() {
+            let name = format!("decode_step_b{b}");
+            let spec = manifest.executable(&name)?;
+            decode_exes.insert(b, rt.load(artifacts_dir, &name, spec)?);
+        }
+        let kv = PagedKvState::zeros(&manifest.config)?;
+        Ok(Self { manifest, weights, decode_exes, kv })
+    }
+
+    pub fn config(&self) -> &RuntimeModelConfig {
+        &self.manifest.config
+    }
+
+    /// Batch sizes with a compiled variant, ascending.
+    pub fn batch_variants(&self) -> Vec<usize> {
+        self.decode_exes.keys().copied().collect()
+    }
+
+    /// Smallest compiled batch variant that fits `n` slots.
+    pub fn pick_batch(&self, n: usize) -> Option<usize> {
+        self.decode_exes.keys().copied().find(|b| *b >= n)
+    }
+
+    pub fn kv_state_bytes(&self) -> usize {
+        self.kv.size_bytes()
+    }
+
+    pub fn weights_bytes(&self) -> usize {
+        self.weights.total_bytes()
+    }
+
+    /// Reset the KV pools to zero (e.g. between benchmark trials).
+    pub fn reset_kv(&mut self) -> Result<()> {
+        self.kv = PagedKvState::zeros(&self.manifest.config)?;
+        Ok(())
+    }
+
+    /// Run one decode step for `slots` (padded up to a compiled batch
+    /// variant). Returns per-slot logits and per-layer routed experts;
+    /// the internal KV pools are updated functionally.
+    pub fn decode(&mut self, slots: &[DecodeSlot]) -> Result<DecodeOutput> {
+        let cfg = self.manifest.config.clone();
+        let b = self
+            .pick_batch(slots.len())
+            .ok_or_else(|| eyre!("no decode variant fits batch {}", slots.len()))?;
+        let exe = &self.decode_exes[&b];
+        let mp = cfg.max_pages_per_seq;
+
+        let mut ids = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let mut pt = vec![0i32; b * mp];
+        let mut lens = vec![0i32; b];
+        for (i, s) in slots.iter().enumerate() {
+            if s.page_table.len() != mp {
+                return Err(eyre!(
+                    "slot {i}: page_table len {} != max_pages_per_seq {mp}",
+                    s.page_table.len()
+                ));
+            }
+            let needed = (s.pos as usize) / cfg.page_size + 1;
+            debug_assert!(needed <= mp);
+            ids[i] = s.token;
+            pos[i] = s.pos;
+            lens[i] = s.pos + 1;
+            pt[i * mp..(i + 1) * mp].copy_from_slice(&s.page_table);
+        }
+        // Padding slots are parked on a dedicated scratch page (the last
+        // physical page) with seq_len 0, so their KV writes never touch a
+        // real sequence's pages and they are masked out of attention.
+        for i in slots.len()..b {
+            ids[i] = 0;
+            pos[i] = 0;
+            lens[i] = 0; // masked out of attention entirely
+            let scratch = (cfg.num_pages - 1) as i32;
+            for j in 0..mp {
+                pt[i * mp + j] = scratch;
+            }
+        }
+
+        let ids_l = lit_i32(&ids, &[b])?;
+        let pos_l = lit_i32(&pos, &[b])?;
+        let pt_l = lit_i32(&pt, &[b, mp])?;
+        let lens_l = lit_i32(&lens, &[b])?;
+
+        // NOTE (§Perf): a fully device-resident path via `execute_b`
+        // was tried and reverted — xla 0.1.6's `execute_b` returns the
+        // root as ONE tuple buffer (unlike `execute`, which untuples)
+        // and tuple buffers cannot be read back with this API. The
+        // untupled (return_tuple=False) artifacts still cut the output
+        // copy in half vs. the tuple path.
+        let mut arg_refs: Vec<&xla::Literal> = Vec::with_capacity(self.weights.len() + 6);
+        arg_refs.extend(self.weights.literals().iter());
+        arg_refs.push(&ids_l);
+        arg_refs.push(&pos_l);
+        arg_refs.push(&pt_l);
+        arg_refs.push(&lens_l);
+        arg_refs.push(&self.kv.kv_k);
+        arg_refs.push(&self.kv.kv_v);
+
+        let mut outs = exe.execute_refs(&arg_refs)?;
+        if outs.len() != 4 {
+            return Err(eyre!("decode_step returned {} outputs, want 4", outs.len()));
+        }
+        let kv_v = outs.pop().unwrap();
+        let kv_k = outs.pop().unwrap();
+        let routed_lit = outs.pop().unwrap();
+        let logits_lit = outs.pop().unwrap();
+        self.kv.kv_k = kv_k;
+        self.kv.kv_v = kv_v;
+
+        let logits_flat = logits_lit.to_vec::<f32>().map_err(|e| eyre!("{e:?}"))?;
+        let routed_flat = routed_lit.to_vec::<i32>().map_err(|e| eyre!("{e:?}"))?;
+        let v = cfg.vocab;
+        let (l_layers, k) = (cfg.n_layers, cfg.top_k);
+        let logits = (0..slots.len()).map(|i| logits_flat[i * v..(i + 1) * v].to_vec()).collect();
+        let routed = (0..l_layers)
+            .map(|l| {
+                (0..slots.len())
+                    .map(|i| {
+                        let base = l * b * k + i * k;
+                        routed_flat[base..base + k].to_vec()
+                    })
+                    .collect()
+            })
+            .collect();
+        Ok(DecodeOutput { logits, routed })
+    }
+}

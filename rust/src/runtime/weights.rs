@@ -1,0 +1,66 @@
+//! Loader for `artifacts/weights.bin` (f32 LE, `param_specs` order).
+
+use super::manifest::Manifest;
+use anyhow::{anyhow as eyre, Context, Result};
+use std::path::Path;
+
+/// All model parameters as XLA literals, in manifest (= calling
+/// convention) order. Created once at startup; literals are cheap to pass
+/// by reference to `Executable::execute`.
+pub struct Weights {
+    literals: Vec<xla::Literal>,
+    names: Vec<String>,
+}
+
+impl Weights {
+    pub fn load(artifacts_dir: &Path, manifest: &Manifest) -> Result<Self> {
+        let path = artifacts_dir.join("weights.bin");
+        let blob = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        if blob.len() != manifest.weights_nbytes {
+            return Err(eyre!(
+                "weights.bin is {} bytes, manifest says {}",
+                blob.len(),
+                manifest.weights_nbytes
+            ));
+        }
+        let mut literals = Vec::with_capacity(manifest.params.len());
+        let mut names = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let bytes = &blob[p.offset..p.offset + p.nbytes];
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &p.shape,
+                bytes,
+            )
+            .map_err(|e| eyre!("{e:?}"))?;
+            literals.push(lit);
+            names.push(p.name.clone());
+        }
+        Ok(Self { literals, names })
+    }
+
+    pub fn len(&self) -> usize {
+        self.literals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.literals.is_empty()
+    }
+
+    pub fn literals(&self) -> &[xla::Literal] {
+        &self.literals
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&xla::Literal> {
+        self.names.iter().position(|n| n == name).map(|i| &self.literals[i])
+    }
+
+    /// Total parameter bytes (all f32).
+    pub fn total_bytes(&self) -> usize {
+        self.literals.iter().map(|l| l.size_bytes()).sum()
+    }
+}

@@ -1,0 +1,114 @@
+//! Serving metrics: TTFT, end-to-end latency, throughput; JSON export.
+
+use crate::memsim::Ns;
+use crate::util::json::{obj, Json};
+use crate::util::stats::Summary;
+
+/// Aggregated serving metrics for one run.
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    /// Time-to-first-token per request (ns).
+    pub ttft: Summary,
+    /// End-to-end latency per request (ns).
+    pub e2e: Summary,
+    /// Per-token decode latencies (ns).
+    pub per_token: Summary,
+    pub tokens_generated: u64,
+    pub requests_finished: u64,
+    start: Option<Ns>,
+    end: Ns,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_start(&mut self, now: Ns) {
+        if self.start.is_none() {
+            self.start = Some(now);
+        }
+    }
+
+    pub fn on_first_token(&mut self, arrival: Ns, now: Ns) {
+        self.ttft.add((now - arrival) as f64);
+    }
+
+    pub fn on_token(&mut self, step_ns: Ns) {
+        self.per_token.add(step_ns as f64);
+        self.tokens_generated += 1;
+    }
+
+    pub fn on_finish(&mut self, arrival: Ns, now: Ns) {
+        self.e2e.add((now - arrival) as f64);
+        self.requests_finished += 1;
+        self.end = self.end.max(now);
+    }
+
+    pub fn makespan_ns(&self) -> Ns {
+        self.end.saturating_sub(self.start.unwrap_or(0))
+    }
+
+    /// Decode throughput over the whole run.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let span = self.makespan_ns();
+        if span == 0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / (span as f64 / 1e9)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("tokens_generated", self.tokens_generated.into()),
+            ("requests_finished", self.requests_finished.into()),
+            ("makespan_ns", self.makespan_ns().into()),
+            ("throughput_tps", self.tokens_per_sec().into()),
+            ("ttft_p50_ns", self.ttft.percentile(50.0).into()),
+            ("ttft_p99_ns", self.ttft.percentile(99.0).into()),
+            ("e2e_p50_ns", self.e2e.percentile(50.0).into()),
+            ("e2e_p99_ns", self.e2e.percentile(99.0).into()),
+            ("per_token_mean_ns", self.per_token.mean().into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_accumulates() {
+        let mut m = ServeMetrics::new();
+        m.on_start(100);
+        m.on_first_token(0, 150);
+        m.on_token(50);
+        m.on_token(50);
+        m.on_finish(0, 200);
+        assert_eq!(m.tokens_generated, 2);
+        assert_eq!(m.requests_finished, 1);
+        assert_eq!(m.makespan_ns(), 100);
+        assert!((m.tokens_per_sec() - 2.0 / 100e-9).abs() < 1.0);
+    }
+
+    #[test]
+    fn start_latches_first_value() {
+        let mut m = ServeMetrics::new();
+        m.on_start(100);
+        m.on_start(999);
+        m.on_finish(0, 300);
+        assert_eq!(m.makespan_ns(), 200);
+    }
+
+    #[test]
+    fn json_has_headline_fields() {
+        let mut m = ServeMetrics::new();
+        m.on_start(0);
+        m.on_token(10);
+        m.on_finish(0, 10);
+        let j = m.to_json();
+        assert!(j.get("throughput_tps").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("tokens_generated").unwrap().as_u64().unwrap(), 1);
+    }
+}

@@ -1,0 +1,27 @@
+//! Serving coordinator: requests, batching, scheduling, engines, metrics.
+//!
+//! Two engines share the coordinator pieces:
+//!
+//! * [`engine::RealEngine`] — the end-to-end path: real PJRT compute on
+//!   the AOT-compiled tiny MoE transformer (`crate::runtime`), with a
+//!   physical page pool and continuous batching. Wall-clock, Python-free.
+//! * [`sim::SimEngine`] — the paper-scale path: virtual-time decode over
+//!   the `KvOffloadManager`, used for the §6.3 fair-decoding study where
+//!   token-level preemption churns the KV working set.
+//!
+//! Schedulers ([`scheduler`]): FCFS continuous batching (vLLM-style) and
+//! Completely-Fair decoding (token-level preemption, §6.3).
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod sim;
+
+pub use batcher::ContinuousBatcher;
+pub use engine::RealEngine;
+pub use metrics::ServeMetrics;
+pub use request::{Request, RequestState, WorkloadGen, WorkloadSpec};
+pub use scheduler::{CompletelyFair, Fcfs, Scheduler};
+pub use sim::{SimEngine, SimEngineConfig, SimEngineReport};

@@ -1,0 +1,204 @@
+//! Decode schedulers.
+//!
+//! * [`Fcfs`] — vLLM-style continuous batching: admitted requests run to
+//!   completion; new requests join as slots free up.
+//! * [`CompletelyFair`] — §6.3 "Completely Fair Decoding": token-level
+//!   preemption. All admitted requests share decode slots round-robin
+//!   with a token quantum; a preempted request's KV cache becomes
+//!   eviction fodder, which "can amplify churn in the KV working set" —
+//!   exactly the regime where peer-HBM offload acts as a *scheduler
+//!   robustness mechanism*.
+//!
+//! Schedulers only decide *which* sequences decode next; KV residency and
+//! memory movement is the manager's job.
+
+use crate::kv::SeqId;
+use std::collections::VecDeque;
+
+/// Pick the set of sequences that decode the next token.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+    /// A request became runnable (admitted / finished prefill).
+    fn admit(&mut self, seq: SeqId);
+    /// A request finished (or was cancelled).
+    fn retire(&mut self, seq: SeqId);
+    /// Select up to `slots` sequences for the next decode step.
+    fn select(&mut self, slots: usize) -> Vec<SeqId>;
+    /// Number of runnable sequences.
+    fn runnable(&self) -> usize;
+}
+
+/// First-come-first-served continuous batching: the oldest `slots`
+/// runnable sequences decode every step (stable set until one finishes).
+#[derive(Debug, Default)]
+pub struct Fcfs {
+    queue: VecDeque<SeqId>,
+}
+
+impl Fcfs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Scheduler for Fcfs {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn admit(&mut self, seq: SeqId) {
+        self.queue.push_back(seq);
+    }
+
+    fn retire(&mut self, seq: SeqId) {
+        self.queue.retain(|&s| s != seq);
+    }
+
+    fn select(&mut self, slots: usize) -> Vec<SeqId> {
+        self.queue.iter().take(slots).copied().collect()
+    }
+
+    fn runnable(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+/// Token-level round-robin with a quantum: after a sequence has decoded
+/// `quantum` consecutive tokens it rotates to the back, so every runnable
+/// sequence makes progress (maximal fairness at quantum=1).
+#[derive(Debug)]
+pub struct CompletelyFair {
+    queue: VecDeque<SeqId>,
+    quantum: u32,
+    /// Tokens the current head-of-line set has consumed in this round.
+    used: u32,
+}
+
+impl CompletelyFair {
+    pub fn new(quantum: u32) -> Self {
+        Self { queue: VecDeque::new(), quantum: quantum.max(1), used: 0 }
+    }
+}
+
+impl Scheduler for CompletelyFair {
+    fn name(&self) -> &'static str {
+        "completely-fair"
+    }
+
+    fn admit(&mut self, seq: SeqId) {
+        self.queue.push_back(seq);
+    }
+
+    fn retire(&mut self, seq: SeqId) {
+        self.queue.retain(|&s| s != seq);
+    }
+
+    fn select(&mut self, slots: usize) -> Vec<SeqId> {
+        let picked: Vec<SeqId> = self.queue.iter().take(slots).copied().collect();
+        self.used += 1;
+        if self.used >= self.quantum && self.queue.len() > slots {
+            // Rotate the whole served set to the back: the *next* cohort
+            // gets the slots (token-level preemption).
+            for _ in 0..picked.len().min(self.queue.len()) {
+                if let Some(s) = self.queue.pop_front() {
+                    self.queue.push_back(s);
+                }
+            }
+            self.used = 0;
+        }
+        picked
+    }
+
+    fn runnable(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(i: u64) -> SeqId {
+        SeqId(i)
+    }
+
+    #[test]
+    fn fcfs_keeps_stable_set_until_retire() {
+        let mut f = Fcfs::new();
+        for i in 0..4 {
+            f.admit(s(i));
+        }
+        assert_eq!(f.select(2), vec![s(0), s(1)]);
+        assert_eq!(f.select(2), vec![s(0), s(1)], "stable");
+        f.retire(s(0));
+        assert_eq!(f.select(2), vec![s(1), s(2)]);
+        assert_eq!(f.runnable(), 3);
+    }
+
+    #[test]
+    fn cf_rotates_every_quantum() {
+        let mut c = CompletelyFair::new(1);
+        for i in 0..4 {
+            c.admit(s(i));
+        }
+        assert_eq!(c.select(2), vec![s(0), s(1)]);
+        assert_eq!(c.select(2), vec![s(2), s(3)], "rotated after quantum=1");
+        assert_eq!(c.select(2), vec![s(0), s(1)], "round robin wraps");
+    }
+
+    #[test]
+    fn cf_quantum_bigger_than_one() {
+        let mut c = CompletelyFair::new(3);
+        for i in 0..4 {
+            c.admit(s(i));
+        }
+        assert_eq!(c.select(2), vec![s(0), s(1)]);
+        assert_eq!(c.select(2), vec![s(0), s(1)]);
+        assert_eq!(c.select(2), vec![s(0), s(1)]);
+        assert_eq!(c.select(2), vec![s(2), s(3)], "rotates after 3 tokens");
+    }
+
+    #[test]
+    fn cf_no_rotation_when_everyone_fits() {
+        let mut c = CompletelyFair::new(1);
+        for i in 0..2 {
+            c.admit(s(i));
+        }
+        assert_eq!(c.select(4), vec![s(0), s(1)]);
+        assert_eq!(c.select(4), vec![s(0), s(1)], "no preemption if all served");
+    }
+
+    #[test]
+    fn cf_every_sequence_makes_progress() {
+        let mut c = CompletelyFair::new(1);
+        for i in 0..6 {
+            c.admit(s(i));
+        }
+        let mut served = std::collections::BTreeSet::new();
+        for _ in 0..3 {
+            for x in c.select(2) {
+                served.insert(x);
+            }
+        }
+        assert_eq!(served.len(), 6, "all sequences served within 3 rounds");
+    }
+
+    #[test]
+    fn retire_mid_rotation_is_safe() {
+        let mut c = CompletelyFair::new(1);
+        for i in 0..3 {
+            c.admit(s(i));
+        }
+        c.select(1);
+        c.retire(s(1));
+        // keeps functioning with remaining sequences
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..4 {
+            for x in c.select(1) {
+                seen.insert(x);
+            }
+        }
+        assert!(seen.contains(&s(0)) && seen.contains(&s(2)));
+        assert!(!seen.contains(&s(1)));
+    }
+}

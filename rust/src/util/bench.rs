@@ -1,0 +1,162 @@
+//! Minimal bench harness (criterion is not vendored on this image).
+//!
+//! Two measurement styles:
+//!
+//! * [`Bench::wall`] — wall-clock timing with warmup + fixed iteration
+//!   count, reporting mean / p50 / p99 (used by `rust/benches/hot_path.rs`
+//!   and the perf pass).
+//! * The paper-table benches (`fig*.rs`) mostly report *virtual-time*
+//!   results from the simulator; they use [`Table`] for aligned output.
+//!
+//! Output format is stable so `cargo bench | tee bench_output.txt` diffs
+//! cleanly between optimization iterations.
+
+use super::stats::{percentile, Summary};
+use std::time::Instant;
+
+/// Wall-clock bench runner.
+pub struct Bench {
+    warmup_iters: u32,
+    iters: u32,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup_iters: 3, iters: 30 }
+    }
+}
+
+/// One wall-clock measurement result (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct WallResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub iters: u32,
+}
+
+impl WallResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}   ({} iters)",
+            self.name,
+            super::fmt_ns(self.mean_ns as u64),
+            super::fmt_ns(self.p50_ns as u64),
+            super::fmt_ns(self.p99_ns as u64),
+            self.iters
+        );
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: u32, iters: u32) -> Self {
+        assert!(iters > 0);
+        Self { warmup_iters, iters }
+    }
+
+    /// Print the header matching [`WallResult::print`] rows.
+    pub fn header() {
+        println!("{:<44} {:>12} {:>12} {:>12}", "BENCH", "MEAN", "P50", "P99");
+    }
+
+    /// Time `f` (which should include any per-iteration setup itself or
+    /// amortize it via closures capturing prepared state).
+    pub fn wall<F: FnMut()>(&self, name: &str, mut f: F) -> WallResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let mut s = Summary::new();
+        for &x in &samples {
+            s.add(x);
+        }
+        let r = WallResult {
+            name: name.to_string(),
+            mean_ns: s.mean(),
+            p50_ns: percentile(&samples, 50.0),
+            p99_ns: percentile(&samples, 99.0),
+            iters: self.iters,
+        };
+        r.print();
+        r
+    }
+}
+
+/// Opaque value sink — prevents the optimizer from deleting the measured
+/// work (`std::hint::black_box` stand-in usage point for benches).
+pub fn sink<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Aligned table printer for the paper-figure benches.
+pub struct Table {
+    widths: Vec<usize>,
+}
+
+impl Table {
+    /// Column widths; first column is left-aligned, the rest right-aligned.
+    pub fn new(widths: &[usize]) -> Self {
+        Self { widths: widths.to_vec() }
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let mut line = String::new();
+        for (i, cell) in cells.iter().enumerate() {
+            let w = self.widths.get(i).copied().unwrap_or(12);
+            if i == 0 {
+                line.push_str(&format!("{cell:<w$}"));
+            } else {
+                line.push_str(&format!(" {cell:>w$}"));
+            }
+        }
+        println!("{}", line.trim_end());
+    }
+
+    pub fn sep(&self) {
+        let total: usize = self.widths.iter().sum::<usize>() + self.widths.len() - 1;
+        println!("{}", "-".repeat(total));
+    }
+}
+
+/// Shorthand for building string rows: `cells!["a", 1.5; "{:.1}"]`-free,
+/// just map to `to_string`.
+#[macro_export]
+macro_rules! cells {
+    ($($x:expr),* $(,)?) => {
+        &[$($x.to_string()),*]
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_measures_positive_time() {
+        let b = Bench::new(1, 5);
+        let r = b.wall("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(sink(i));
+            }
+            sink(acc);
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let t = Table::new(&[10, 8, 8]);
+        t.row(cells!["model", "a", "b"]);
+        t.sep();
+        t.row(cells!["x", 1, 2.5]);
+    }
+}

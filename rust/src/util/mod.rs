@@ -1,0 +1,105 @@
+//! Small self-contained utilities.
+//!
+//! This image builds fully offline against the vendored `xla` crate
+//! closure, so the usual ecosystem crates (serde_json, rand, criterion,
+//! proptest) are unavailable. The pieces of them this project needs are
+//! small and hand-rolled here, with their own tests:
+//!
+//! * [`json`] — minimal recursive-descent JSON parser + writer (for
+//!   `artifacts/manifest.json`, config files and metric dumps).
+//! * [`rng`] — deterministic xoshiro256** RNG + the distributions the
+//!   simulators need (normal, lognormal, zipf, exponential).
+//! * [`stats`] — mean/percentile/histogram helpers for benches/metrics.
+//! * [`check`] — a tiny randomized property-test harness (no shrinking;
+//!   failures print the reproducing seed).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Randomized property-test harness: runs `cases` random cases of `f`,
+/// seeding each case deterministically from `base_seed + i`. On failure,
+/// panics with the case seed so the failure is reproducible by unit test.
+///
+/// A stand-in for `proptest` (not vendored on this image): no shrinking,
+/// but deterministic replay via the printed seed.
+pub fn check<F>(name: &str, cases: u64, base_seed: u64, mut f: F)
+where
+    F: FnMut(&mut rng::Rng) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i);
+        let mut rng = rng::Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property `{name}` failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Format a byte count human-readably (MiB/GiB), for logs and tables.
+pub fn fmt_bytes(b: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KIB * KIB * KIB {
+        format!("{:.2} GiB", b / (KIB * KIB * KIB))
+    } else if b >= KIB * KIB {
+        format!("{:.2} MiB", b / (KIB * KIB))
+    } else if b >= KIB {
+        format!("{:.1} KiB", b / KIB)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Format nanoseconds human-readably (ns/µs/ms/s).
+pub fn fmt_ns(ns: u64) -> String {
+    match ns {
+        0..=999 => format!("{ns} ns"),
+        1_000..=999_999 => format!("{:.2} µs", ns as f64 / 1e3),
+        1_000_000..=999_999_999 => format!("{:.2} ms", ns as f64 / 1e6),
+        _ => format!("{:.3} s", ns as f64 / 1e9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024 * 1024), "5.00 GiB");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(17), "17 ns");
+        assert_eq!(fmt_ns(1_500), "1.50 µs");
+        assert_eq!(fmt_ns(2_500_000), "2.50 ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.000 s");
+    }
+
+    #[test]
+    fn check_passes_and_is_deterministic() {
+        let mut seen = Vec::new();
+        check("collect", 3, 42, |rng| {
+            seen.push(rng.u64());
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        check("collect2", 3, 42, |rng| {
+            seen2.push(rng.u64());
+            Ok(())
+        });
+        assert_eq!(seen, seen2);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `boom` failed at seed 7")]
+    fn check_reports_seed() {
+        check("boom", 5, 7, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,463 @@
+//! Cross-module integration tests: config → node → harvest → MoE/KV
+//! serving paths, exercised end-to-end in virtual time. These check the
+//! *shape* of the paper's headline results on the calibrated simulator
+//! (Fig. 3 / 5 / 6 / 7 bands, §6.3 fair-decoding interaction), plus
+//! failure-injection scenarios no single module covers.
+
+use harvest::config::{find_preset, DeploymentConfig, WorkloadKind};
+use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime, MigConfig, RevocationReason};
+use harvest::kv::{KvConfig, KvOffloadManager, SeqId};
+use harvest::memsim::{DeviceId, NodeSpec, SimNode, TenantLoad};
+use harvest::moe::pipeline::OffloadTier;
+use harvest::moe::{find_kv_model, find_moe_model, CgoPipe, ExpertRebalancer, RouterSim};
+use harvest::server::{
+    CompletelyFair, Fcfs, Scheduler, SimEngine, SimEngineConfig, WorkloadGen, WorkloadSpec,
+};
+use harvest::trace::{ClusterTrace, TraceSpec};
+
+const GIB: u64 = 1 << 30;
+
+fn hr2() -> HarvestRuntime {
+    HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2))
+}
+
+// ---------------------------------------------------------------------
+// Fig. 3: transfer-latency ratio band
+// ---------------------------------------------------------------------
+
+#[test]
+fn fig3_expert_sized_chunks_hit_speedup_band() {
+    // The paper reports 7.5× (Phi-tiny, 16.5 MiB) to 9.5× (Mixtral,
+    // 336 MiB). Check each Table-1 expert size lands in a band around it.
+    for m in harvest::moe::MOE_MODELS {
+        let bytes = m.expert_bytes();
+        let node = SimNode::new(NodeSpec::h100x2());
+        let p2p = node.topo.estimate(DeviceId::Gpu(1), DeviceId::Gpu(0), bytes).unwrap();
+        let h2d = node.topo.estimate(DeviceId::Host, DeviceId::Gpu(0), bytes).unwrap();
+        let speedup = h2d as f64 / p2p as f64;
+        assert!(
+            (6.5..=10.5).contains(&speedup),
+            "{}: {} -> {speedup:.1}x outside Fig. 3 band",
+            m.name,
+            bytes
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fig. 5: MoE decode throughput improvement at 50% offload
+// ---------------------------------------------------------------------
+
+#[test]
+fn fig5_all_models_improve_at_half_offload() {
+    for name in ["mixtral", "phi-3.5", "phi-tiny", "qwen"] {
+        let model = find_moe_model(name).unwrap();
+        let pipe = CgoPipe::paper_setup(model);
+
+        let mut hr = hr2();
+        let mut router = RouterSim::new(model, model.n_layers as usize, 7);
+        let mut reb = ExpertRebalancer::new(model, 0, 0.5);
+        reb.rebalance(&mut hr, usize::MAX);
+        let h = pipe.decode_many(&mut router, &mut reb, &mut hr, OffloadTier::Harvest, 4);
+
+        let mut hr = hr2();
+        let mut router = RouterSim::new(model, model.n_layers as usize, 7);
+        let mut reb = ExpertRebalancer::new(model, 0, 0.5);
+        let c = pipe.decode_many(&mut router, &mut reb, &mut hr, OffloadTier::Cpu, 4);
+
+        let improvement = h.tokens_per_sec() / c.tokens_per_sec() - 1.0;
+        // Paper band: +48% … +110%. The simulator lands in a wider band
+        // (EXPERIMENTS.md §Fig5 discusses the calibration gap) but the
+        // shape holds: every model improves substantially, none regresses.
+        assert!(
+            (0.25..=2.2).contains(&improvement),
+            "{name}: improvement {:.0}% outside band",
+            improvement * 100.0
+        );
+    }
+}
+
+#[test]
+fn fig5_phi35_beats_qwen_improvement() {
+    // §4.5: Phi-3.5-MoE nearly doubles Qwen2-MoE's speedup because of
+    // higher expert reuse (fewer experts, smaller fan-out).
+    let improvement = |name: &str| {
+        let model = find_moe_model(name).unwrap();
+        let pipe = CgoPipe::paper_setup(model);
+        let run = |tier| {
+            let mut hr = hr2();
+            let mut router = RouterSim::new(model, model.n_layers as usize, 7);
+            let mut reb = ExpertRebalancer::new(model, 0, 0.5);
+            if matches!(tier, OffloadTier::Harvest) {
+                reb.rebalance(&mut hr, usize::MAX);
+            }
+            pipe.decode_many(&mut router, &mut reb, &mut hr, tier, 3).tokens_per_sec()
+        };
+        run(OffloadTier::Harvest) / run(OffloadTier::Cpu)
+    };
+    let phi = improvement("phi-3.5");
+    let qwen = improvement("qwen");
+    assert!(phi > qwen, "phi {phi:.2}x <= qwen {qwen:.2}x");
+}
+
+// ---------------------------------------------------------------------
+// Fig. 6: offload-fraction sweep shape
+// ---------------------------------------------------------------------
+
+#[test]
+fn fig6_gpu_flat_cpu_degrades() {
+    let model = find_moe_model("qwen").unwrap();
+    let pipe = CgoPipe::paper_setup(model);
+    let tput = |tier: OffloadTier, frac: f64| {
+        let mut hr = hr2();
+        let mut router = RouterSim::new(model, model.n_layers as usize, 11);
+        let mut reb = ExpertRebalancer::new(model, 0, frac);
+        if matches!(tier, OffloadTier::Harvest) {
+            reb.rebalance(&mut hr, usize::MAX);
+        }
+        pipe.decode_many(&mut router, &mut reb, &mut hr, tier, 2).tokens_per_sec()
+    };
+    let gpu0 = tput(OffloadTier::Harvest, 0.0);
+    let gpu100 = tput(OffloadTier::Harvest, 1.0);
+    let cpu0 = tput(OffloadTier::Cpu, 0.0);
+    let cpu100 = tput(OffloadTier::Cpu, 1.0);
+    // GPU offload stays within ~12% of its 0% point (paper: "nearly
+    // constant at approximately 975 tokens/s").
+    let gpu_drop = 1.0 - gpu100 / gpu0;
+    assert!(gpu_drop < 0.12, "GPU offload dropped {:.0}%", gpu_drop * 100.0);
+    // CPU offload loses noticeably more (paper: Qwen 975 → ~810 tok/s;
+    // the simulator degrades more steeply at full offload — see
+    // EXPERIMENTS.md §Fig6 — but the qualitative gap is what Fig. 6
+    // demonstrates: GPU flat, CPU degrading).
+    let cpu_drop = 1.0 - cpu100 / cpu0;
+    assert!(cpu_drop > gpu_drop + 0.10, "cpu drop {cpu_drop:.2} vs gpu drop {gpu_drop:.2}");
+    assert!((0.10..=0.90).contains(&cpu_drop), "cpu drop {:.0}%", cpu_drop * 100.0);
+}
+
+#[test]
+fn fig6_monotone_cpu_degradation() {
+    let model = find_moe_model("mixtral").unwrap();
+    let pipe = CgoPipe::paper_setup(model);
+    let mut last = f64::INFINITY;
+    for frac in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let mut hr = hr2();
+        let mut router = RouterSim::new(model, model.n_layers as usize, 3);
+        let mut reb = ExpertRebalancer::new(model, 0, frac);
+        let t = pipe
+            .decode_many(&mut router, &mut reb, &mut hr, OffloadTier::Cpu, 2)
+            .tokens_per_sec();
+        assert!(t <= last * 1.02, "cpu offload tput rose at frac {frac}: {t:.0} > {last:.0}");
+        last = t;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fig. 7: KV reload latency, peer vs host
+// ---------------------------------------------------------------------
+
+#[test]
+fn fig7_kv_reload_speedup_band() {
+    for (name, lo, hi) in
+        [("kimi", 4.0, 7.0), ("deepseek", 4.0, 7.0), ("mistral-large", 2.5, 7.0)]
+    {
+        let model = find_kv_model(name).unwrap();
+        for entries in [100u64, 1000, 8000] {
+            let bytes = entries * model.kv_bytes_per_token();
+            let chunks = bytes.div_ceil(harvest::kv::manager::RELOAD_CHUNK_BYTES).max(1);
+            let mut node = SimNode::new(NodeSpec::h100x2());
+            let p2p = node.copy_scattered(DeviceId::Gpu(1), DeviceId::Gpu(0), bytes, chunks, None);
+            let mut node = SimNode::new(NodeSpec::h100x2());
+            let h2d = node.copy_scattered(DeviceId::Host, DeviceId::Gpu(0), bytes, chunks, None);
+            let speedup = (h2d.duration()) as f64 / (p2p.duration()) as f64;
+            assert!(
+                (lo..=hi).contains(&speedup),
+                "{name} @ {entries} entries: {speedup:.2}x outside [{lo}, {hi}]"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// §6.3 fair decoding + harvest as scheduler-robustness mechanism
+// ---------------------------------------------------------------------
+
+fn kv_run(
+    use_harvest: bool,
+    scheduler: Box<dyn Scheduler>,
+    cap_blocks: usize,
+    n_requests: usize,
+) -> harvest::server::SimEngineReport {
+    let mut hr = hr2();
+    let cfg = KvConfig {
+        model: find_kv_model("kimi").unwrap(),
+        block_tokens: 16,
+        local_capacity_blocks: cap_blocks,
+        use_harvest,
+        host_backed_peer: false,
+    };
+    let spec = WorkloadSpec {
+        n_requests,
+        mean_prompt_tokens: 96.0,
+        max_new_tokens: 16,
+        shared_prefix_fraction: 0.5,
+        shared_prefix_tokens: 32,
+        ..Default::default()
+    };
+    let mut eng = SimEngine::new(SimEngineConfig::new(cfg, 8, 32), scheduler, 0);
+    eng.run(&mut hr, WorkloadGen::new(spec).generate())
+}
+
+#[test]
+fn fair_decoding_penalty_shrinks_with_harvest() {
+    // CF pays a throughput penalty vs FCFS under tight memory; Harvest
+    // must shrink that penalty (§6.3: "reduces the performance penalty of
+    // fairness-oriented scheduling").
+    let cap = 48;
+    let n = 24;
+    let fcfs_host = kv_run(false, Box::new(Fcfs::new()), cap, n).metrics.tokens_per_sec();
+    let cf_host =
+        kv_run(false, Box::new(CompletelyFair::new(1)), cap, n).metrics.tokens_per_sec();
+    let fcfs_peer = kv_run(true, Box::new(Fcfs::new()), cap, n).metrics.tokens_per_sec();
+    let cf_peer =
+        kv_run(true, Box::new(CompletelyFair::new(1)), cap, n).metrics.tokens_per_sec();
+    let penalty_host = 1.0 - cf_host / fcfs_host;
+    let penalty_peer = 1.0 - cf_peer / fcfs_peer;
+    assert!(penalty_host > 0.0, "CF must cost something under pressure (host)");
+    assert!(
+        penalty_peer < penalty_host,
+        "harvest should shrink the CF penalty: host {:.1}% vs peer {:.1}%",
+        penalty_host * 100.0,
+        penalty_peer * 100.0
+    );
+}
+
+#[test]
+fn all_requests_complete_under_churn_and_revocation() {
+    // Tenant pressure oscillates while CF churns the KV working set:
+    // requests must all finish, tokens must be conserved.
+    let mut hr = hr2();
+    // Oscillate every 10 ms across the whole run (prefill of 16×~80-token
+    // prompts plus decode spans tens of ms of virtual time).
+    let steps: Vec<(u64, u64)> =
+        (0..20).map(|i| (i * 10_000_000, if i % 2 == 1 { 80 * GIB } else { 0 })).collect();
+    hr.node.set_tenant_load(1, TenantLoad::from_steps(80 * GIB, steps));
+    let cfg = KvConfig {
+        model: find_kv_model("deepseek").unwrap(),
+        block_tokens: 16,
+        local_capacity_blocks: 32,
+        use_harvest: true,
+        host_backed_peer: false,
+    };
+    let n = 16usize;
+    let new_tokens = 12u32;
+    let spec = WorkloadSpec {
+        n_requests: n,
+        mean_prompt_tokens: 80.0,
+        max_new_tokens: new_tokens,
+        ..Default::default()
+    };
+    let mut eng =
+        SimEngine::new(SimEngineConfig::new(cfg, 4, 16), Box::new(CompletelyFair::new(1)), 0);
+    let report = eng.run(&mut hr, WorkloadGen::new(spec).generate());
+    assert_eq!(report.metrics.requests_finished, n as u64);
+    assert_eq!(report.metrics.tokens_generated, n as u64 * new_tokens as u64);
+    // the oscillation must actually have caused revocations
+    assert!(!hr.revocations.is_empty(), "test intended to exercise revocation but none happened");
+}
+
+// ---------------------------------------------------------------------
+// MIG isolation through the full MoE path
+// ---------------------------------------------------------------------
+
+#[test]
+fn mig_partition_caps_expert_promotion() {
+    let model = find_moe_model("mixtral").unwrap(); // 336 MiB experts
+    let node = SimNode::new(NodeSpec::h100x2());
+    let mut cfg = HarvestConfig::for_node(2);
+    cfg.mig[1] = MigConfig::CachePartition { bytes: 2 * GIB };
+    let mut hr = HarvestRuntime::new(node, cfg);
+    let mut reb = ExpertRebalancer::new(model, 0, 1.0);
+    let promoted = reb.rebalance(&mut hr, usize::MAX);
+    // 2 GiB / 336 MiB ≈ 6 experts max
+    assert!(promoted >= 4 && promoted <= 6, "promoted {promoted}");
+    assert!(hr.live_bytes_on(1) <= 2 * GIB);
+}
+
+#[test]
+fn mig_reclaim_revokes_all_and_pipeline_falls_back() {
+    let model = find_moe_model("phi-tiny").unwrap();
+    let node = SimNode::new(NodeSpec::h100x2());
+    let mut cfg = HarvestConfig::for_node(2);
+    cfg.mig[1] = MigConfig::CachePartition { bytes: 4 * GIB };
+    let mut hr = HarvestRuntime::new(node, cfg);
+    let pipe = CgoPipe::paper_setup(model);
+    let mut router = RouterSim::new(model, model.n_layers as usize, 5);
+    let mut reb = ExpertRebalancer::new(model, 0, 0.5);
+    reb.rebalance(&mut hr, usize::MAX);
+    let before = pipe.decode_pass(&mut router, &mut reb, &mut hr, OffloadTier::Harvest);
+    assert!(before.fetches_peer > 0);
+    // operator reclaims the MIG instance
+    hr.revoke_peer(1, RevocationReason::ExternalReclaim);
+    let after = pipe.decode_pass(&mut router, &mut reb, &mut hr, OffloadTier::Harvest);
+    assert_eq!(after.fetches_peer, 0, "no peer fetches after reclaim");
+    assert!(after.fetches_host > 0, "falls back to host");
+    assert!(
+        after.tokens_per_sec() < before.tokens_per_sec(),
+        "losing the cache tier must cost throughput"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Larger NVLink domains (§2.2 future deployments)
+// ---------------------------------------------------------------------
+
+#[test]
+fn more_peers_harvest_more_experts() {
+    let model = find_moe_model("mixtral").unwrap();
+    let promoted_with = |n_gpus: usize, tenant_gib: u64| {
+        let node = SimNode::new(NodeSpec::nvlink_domain(n_gpus));
+        let mut hr = HarvestRuntime::new(node, HarvestConfig::for_node(n_gpus));
+        for p in 1..n_gpus {
+            hr.node.set_tenant_load(p, TenantLoad::constant(80 * GIB, tenant_gib * GIB));
+        }
+        let mut reb = ExpertRebalancer::new(model, 0, 1.0);
+        reb.rebalance(&mut hr, usize::MAX)
+    };
+    // busy peers: 76/80 GiB used -> ~12 experts per peer
+    let two = promoted_with(2, 76);
+    let four = promoted_with(4, 76);
+    let eight = promoted_with(8, 76);
+    assert!(two < four && four < eight, "{two} {four} {eight}");
+}
+
+// ---------------------------------------------------------------------
+// Config-driven launches
+// ---------------------------------------------------------------------
+
+#[test]
+fn preset_kv_launch_runs_end_to_end() {
+    let cfg = find_preset("fair-decode").unwrap();
+    assert_eq!(cfg.workload, WorkloadKind::KvOffload);
+    let mut hr = HarvestRuntime::new(SimNode::new(cfg.node_spec()), cfg.harvest_config());
+    let kv = cfg.kv_config().unwrap();
+    let mut eng = SimEngine::new(
+        SimEngineConfig::new(kv, cfg.decode_slots, cfg.max_running),
+        Box::new(CompletelyFair::new(cfg.quantum)),
+        0,
+    );
+    let mut spec = cfg.workload_spec();
+    spec.n_requests = 12; // keep the test fast
+    let report = eng.run(&mut hr, WorkloadGen::new(spec).generate());
+    assert_eq!(report.metrics.requests_finished, 12);
+    assert!(report.use_harvest);
+}
+
+#[test]
+fn config_file_roundtrip_drives_same_workload() {
+    let cfg = find_preset("paper-moe").unwrap();
+    let text = cfg.to_toml();
+    let dir = std::env::temp_dir().join(format!("harvest-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("deploy.toml");
+    std::fs::write(&path, &text).unwrap();
+    let loaded = DeploymentConfig::from_file(&path).unwrap();
+    assert_eq!(loaded.moe_model, cfg.moe_model);
+    assert_eq!(loaded.workload, WorkloadKind::MoeOffload);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Fig. 2 cluster trace anchors
+// ---------------------------------------------------------------------
+
+#[test]
+fn fig2_trace_cdf_matches_paper_anchors() {
+    let trace = ClusterTrace::synthesize(TraceSpec::default());
+    // Paper: ~68% of machines <= 20% util, ~87% <= 50%.
+    let at20 = trace.cdf_at(0.20);
+    let at50 = trace.cdf_at(0.50);
+    assert!((0.60..=0.76).contains(&at20), "CDF@20% = {at20:.2}");
+    assert!((0.80..=0.94).contains(&at50), "CDF@50% = {at50:.2}");
+}
+
+// ---------------------------------------------------------------------
+// Durability modes through the full stack
+// ---------------------------------------------------------------------
+
+#[test]
+fn lossy_kv_block_recomputes_after_revocation() {
+    let mut hr = hr2();
+    let cfg = KvConfig {
+        model: find_kv_model("kimi").unwrap(),
+        block_tokens: 16,
+        local_capacity_blocks: 4,
+        use_harvest: true,
+        host_backed_peer: false, // lossy peer tier
+    };
+    let mut kv = KvOffloadManager::new(cfg, 0);
+    let s = SeqId(1);
+    // overflow the local pool so blocks spill to peer
+    for _ in 0..16 * 16 {
+        kv.append_token(&mut hr, s);
+    }
+    let peer_blocks = {
+        let t = kv.table();
+        t.seq_blocks(s)
+            .iter()
+            .filter(|&&b| {
+                matches!(t.residency(b), Some(harvest::kv::BlockResidency::Peer { .. }))
+            })
+            .count()
+    };
+    assert!(peer_blocks > 0, "spill to peer expected");
+    // revoke the peer tier entirely
+    hr.revoke_peer(1, RevocationReason::TenantPressure);
+    let recomputes_before = kv.stats.recomputes;
+    kv.access_seq(&mut hr, s);
+    assert!(
+        kv.stats.recomputes > recomputes_before,
+        "lossy blocks must be recomputed after revocation"
+    );
+    kv.check_invariants().unwrap();
+}
+
+#[test]
+fn host_backed_kv_block_reloads_from_host_after_revocation() {
+    let mut hr = hr2();
+    let cfg = KvConfig {
+        model: find_kv_model("kimi").unwrap(),
+        block_tokens: 16,
+        local_capacity_blocks: 4,
+        use_harvest: true,
+        host_backed_peer: true, // durable: host copy materialised on evict
+    };
+    let mut kv = KvOffloadManager::new(cfg, 0);
+    let s = SeqId(1);
+    for _ in 0..16 * 16 {
+        kv.append_token(&mut hr, s);
+    }
+    hr.revoke_peer(1, RevocationReason::TenantPressure);
+    let host_reloads_before = kv.stats.host_reloads;
+    let recomputes_before = kv.stats.recomputes;
+    kv.access_seq(&mut hr, s);
+    assert!(kv.stats.host_reloads > host_reloads_before, "expected host reloads");
+    assert_eq!(kv.stats.recomputes, recomputes_before, "host-backed never recomputes");
+}
+
+// ---------------------------------------------------------------------
+// Harvest API contract seen by applications
+// ---------------------------------------------------------------------
+
+#[test]
+fn compute_gpu_is_never_selected_as_peer() {
+    let node = SimNode::new(NodeSpec::nvlink_domain(4));
+    let mut hr = HarvestRuntime::new(node, HarvestConfig::for_node(4));
+    for compute in 0..4usize {
+        for _ in 0..8 {
+            let h = hr
+                .alloc(GIB, AllocHints { compute_gpu: Some(compute), ..Default::default() })
+                .unwrap();
+            assert_ne!(h.peer, compute, "allocated on the compute GPU");
+        }
+    }
+}

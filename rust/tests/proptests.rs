@@ -1,0 +1,629 @@
+//! Randomized property tests over the system's core invariants
+//! (DESIGN.md §Repository layout lists them). Uses the crate's own
+//! `util::check` harness (proptest is not vendored); every failure
+//! prints a reproducing seed.
+
+use harvest::harvest::{
+    AllocHints, HarvestConfig, HarvestRuntime, RevocationReason, VictimPolicy,
+};
+use harvest::kv::{BlockResidency, KvConfig, KvOffloadManager, SeqId};
+use harvest::memsim::{DeviceId, FitStrategy, Hbm, NodeSpec, SimNode, TenantLoad};
+use harvest::moe::{find_kv_model, find_moe_model, ExpertRebalancer, RouterSim};
+use harvest::server::{CompletelyFair, Fcfs, Scheduler, WorkloadGen, WorkloadSpec};
+use harvest::util::check;
+use harvest::util::rng::Rng;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+const MIB: u64 = 1 << 20;
+const GIB: u64 = 1 << 30;
+
+fn err(msg: String) -> Result<(), String> {
+    Err(msg)
+}
+
+// ---------------------------------------------------------------------
+// HBM allocator
+// ---------------------------------------------------------------------
+
+/// Random alloc/free interleavings: accounting identity, no overlapping
+/// live segments, no double allocation, full coalescing on empty.
+#[test]
+fn prop_hbm_allocator_soundness() {
+    check("hbm-soundness", 200, 0x48424D, |rng| {
+        let strategy = match rng.below(3) {
+            0 => FitStrategy::BestFit,
+            1 => FitStrategy::FirstFit,
+            _ => FitStrategy::WorstFit,
+        };
+        let cap = (1 + rng.below(64)) * 16 * MIB;
+        let mut hbm = Hbm::new(cap, strategy);
+        let mut live: Vec<(harvest::memsim::AllocId, u64)> = Vec::new();
+        for _ in 0..rng.below(200) + 20 {
+            if live.is_empty() || rng.bool(0.6) {
+                let size = (1 + rng.below(32)) * MIB;
+                if let Ok(id) = hbm.alloc(size) {
+                    if live.iter().any(|&(l, _)| l == id) {
+                        return err(format!("AllocId {id:?} reused while live"));
+                    }
+                    live.push((id, size));
+                }
+            } else {
+                let i = rng.below(live.len() as u64) as usize;
+                let (id, size) = live.swap_remove(i);
+                let freed = hbm.free(id);
+                if freed != size {
+                    return err(format!("freed {freed} != allocated {size}"));
+                }
+            }
+            // Accounting identity.
+            let used: u64 = live.iter().map(|&(_, s)| s).sum();
+            if hbm.used() != used {
+                return err(format!("used {} != live sum {used}", hbm.used()));
+            }
+            if hbm.used() + hbm.free_bytes() != cap {
+                return err("used + free != capacity".into());
+            }
+            // No overlapping live segments.
+            let mut segs: Vec<(u64, u64)> = live
+                .iter()
+                .map(|&(id, s)| (hbm.offset_of(id).expect("live alloc has offset"), s))
+                .collect();
+            segs.sort();
+            for w in segs.windows(2) {
+                if w[0].0 + w[0].1 > w[1].0 {
+                    return err(format!("overlap: {:?} then {:?}", w[0], w[1]));
+                }
+            }
+        }
+        // Free everything: allocator must coalesce back to one segment.
+        for (id, _) in live.drain(..) {
+            hbm.free(id);
+        }
+        if hbm.used() != 0 || hbm.largest_free() != cap {
+            return err(format!(
+                "after full free: used={} largest_free={} cap={cap}",
+                hbm.used(),
+                hbm.largest_free()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Fragmented arenas still satisfy any request <= largest_free, and
+/// fragmentation() stays in [0,1].
+#[test]
+fn prop_hbm_largest_free_is_honest() {
+    check("hbm-largest-free", 120, 0xF4A6, |rng| {
+        let mut hbm = Hbm::new(256 * MIB, FitStrategy::BestFit);
+        let mut live = Vec::new();
+        for _ in 0..40 {
+            if let Ok(id) = hbm.alloc((1 + rng.below(16)) * MIB) {
+                live.push(id);
+            }
+        }
+        // free a random subset to fragment
+        live.retain(|&id| {
+            if rng.bool(0.5) {
+                hbm.free(id);
+                false
+            } else {
+                true
+            }
+        });
+        let f = hbm.fragmentation();
+        if !(0.0..=1.0).contains(&f) {
+            return err(format!("fragmentation {f} out of range"));
+        }
+        let lf = hbm.largest_free();
+        if lf > 0 && hbm.alloc(lf).is_err() {
+            return err(format!("alloc(largest_free={lf}) failed"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Harvest controller
+// ---------------------------------------------------------------------
+
+/// Random alloc/free/revoke/pressure interleavings: every revocation
+/// callback fires exactly once, drains precede frees, live accounting
+/// matches the arena, and pressure enforcement converges to budget.
+#[test]
+fn prop_controller_callbacks_exactly_once() {
+    check("controller-cb-once", 80, 0xCB01, |rng| {
+        let n_gpus = 2 + rng.below(3) as usize;
+        let node = SimNode::new(NodeSpec::nvlink_domain(n_gpus));
+        let mut cfg = HarvestConfig::for_node(n_gpus);
+        cfg.victim_policy = match rng.below(4) {
+            0 => VictimPolicy::Lifo,
+            1 => VictimPolicy::Fifo,
+            2 => VictimPolicy::LargestFirst,
+            _ => VictimPolicy::SmallestFirst,
+        };
+        let mut hr = HarvestRuntime::new(node, cfg);
+        let fired: Rc<RefCell<BTreeMap<u64, u32>>> = Rc::new(RefCell::new(BTreeMap::new()));
+        let mut live = Vec::new();
+        let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+        for step in 0..rng.below(120) + 20 {
+            match rng.below(10) {
+                0..=4 => {
+                    if let Ok(h) = hr.alloc((1 + rng.below(512)) * MIB, hints) {
+                        let f = fired.clone();
+                        hr.register_cb(h.id, move |rev| {
+                            *f.borrow_mut().entry(rev.handle.id.0).or_insert(0) += 1;
+                        })
+                        .map_err(|e| format!("register_cb: {e}"))?;
+                        if rng.bool(0.3) {
+                            let _ = hr.copy_in(h.id, DeviceId::Host);
+                        }
+                        live.push(h.id);
+                    }
+                }
+                5..=6 => {
+                    if !live.is_empty() {
+                        let id = live.swap_remove(rng.below(live.len() as u64) as usize);
+                        hr.free(id).map_err(|e| format!("free: {e}"))?;
+                        // explicit free must NOT fire the callback
+                        if fired.borrow().contains_key(&id.0) {
+                            return err(format!("free fired callback for {id:?}"));
+                        }
+                    }
+                }
+                7..=8 => {
+                    if !live.is_empty() {
+                        let id = live.swap_remove(rng.below(live.len() as u64) as usize);
+                        hr.revoke(id, RevocationReason::PolicyEviction);
+                    }
+                }
+                _ => {
+                    // tenant pressure spike on a random peer
+                    let peer = 1 + rng.below((n_gpus - 1) as u64) as usize;
+                    let now = hr.node.clock.now();
+                    let used = rng.below(80) * GIB;
+                    hr.node.set_tenant_load(
+                        peer,
+                        TenantLoad::from_steps(80 * GIB, vec![(0, 0), (now + step + 1, used)]),
+                    );
+                    let revs = hr.advance_to(now + step + 2);
+                    for r in &revs {
+                        live.retain(|&id| id != r.handle.id);
+                    }
+                }
+            }
+            // invariant: our arena usage equals live handle accounting
+            for p in 0..n_gpus {
+                let arena = hr.node.gpus[p].hbm.used();
+                let handles = hr.live_bytes_on(p);
+                if arena != handles {
+                    return err(format!("gpu{p}: arena {arena} != handles {handles}"));
+                }
+            }
+        }
+        // Shutdown: revoke all peers; every registered-and-revoked handle
+        // must have fired exactly once.
+        for p in 0..n_gpus {
+            hr.revoke_peer(p, RevocationReason::Shutdown);
+        }
+        for (&id, &count) in fired.borrow().iter() {
+            if count != 1 {
+                return err(format!("handle {id} callback fired {count} times"));
+            }
+        }
+        // Every revocation recorded must match a fired callback.
+        for rev in &hr.revocations {
+            if fired.borrow().get(&rev.handle.id.0) != Some(&1) {
+                return err(format!("revocation {:?} with no single callback", rev.handle.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// After `enforce_pressure`, every peer's harvested bytes fit within
+/// capacity - tenant - reserve (and the MIG limit if set).
+#[test]
+fn prop_pressure_enforcement_converges() {
+    check("pressure-converges", 100, 0x9E55, |rng| {
+        let node = SimNode::new(NodeSpec::h100x2());
+        let mut cfg = HarvestConfig::for_node(2);
+        cfg.reserve_bytes = rng.below(8) * GIB;
+        let reserve = cfg.reserve_bytes;
+        let mut hr = HarvestRuntime::new(node, cfg);
+        let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+        for _ in 0..rng.below(20) + 1 {
+            let _ = hr.alloc((1 + rng.below(8)) * GIB, hints);
+        }
+        let tenant_used = rng.below(80) * GIB;
+        let now = hr.node.clock.now();
+        hr.node.set_tenant_load(
+            1,
+            TenantLoad::from_steps(80 * GIB, vec![(0, 0), (now + 1, tenant_used)]),
+        );
+        hr.advance_to(now + 2);
+        let budget = (80 * GIB).saturating_sub(tenant_used).saturating_sub(reserve);
+        let ours = hr.live_bytes_on(1);
+        if ours > budget {
+            return err(format!("after enforcement: ours {ours} > budget {budget}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// KV manager + block table
+// ---------------------------------------------------------------------
+
+fn kv_cfg(rng: &mut Rng, use_harvest: bool) -> KvConfig {
+    KvConfig {
+        model: find_kv_model("deepseek").unwrap(),
+        block_tokens: 8 + 8 * rng.below(3) as u32,
+        local_capacity_blocks: 8 + rng.below(64) as usize,
+        use_harvest,
+        host_backed_peer: rng.bool(0.3),
+    }
+}
+
+/// Random append/access/evict/finish interleavings with tenant pressure:
+/// the unified block table never violates its invariants, the local pool
+/// never exceeds capacity, and finished sequences release everything.
+#[test]
+fn prop_kv_manager_invariants() {
+    check("kv-invariants", 60, 0x4B56, |rng| {
+        let node = SimNode::new(NodeSpec::h100x2());
+        let mut hr = HarvestRuntime::new(node, HarvestConfig::for_node(2));
+        let use_harvest = rng.bool(0.7);
+        let cfg = kv_cfg(rng, use_harvest);
+        let cap = cfg.local_capacity_blocks;
+        let mut kv = KvOffloadManager::new(cfg, 0);
+        let mut seqs: Vec<SeqId> = Vec::new();
+        let mut next_seq = 0u64;
+        for _ in 0..rng.below(300) + 50 {
+            match rng.below(10) {
+                0..=5 => {
+                    let seq = if seqs.is_empty() || rng.bool(0.2) {
+                        let s = SeqId(next_seq);
+                        next_seq += 1;
+                        seqs.push(s);
+                        s
+                    } else {
+                        seqs[rng.below(seqs.len() as u64) as usize]
+                    };
+                    kv.append_token(&mut hr, seq);
+                }
+                6..=7 => {
+                    if !seqs.is_empty() {
+                        let seq = seqs[rng.below(seqs.len() as u64) as usize];
+                        kv.access_seq(&mut hr, seq);
+                    }
+                }
+                8 => {
+                    if !seqs.is_empty() {
+                        let i = rng.below(seqs.len() as u64) as usize;
+                        let seq = seqs.swap_remove(i);
+                        kv.finish_seq(&mut hr, seq);
+                        if !kv.table().seq_blocks(seq).is_empty() {
+                            return err(format!("{seq:?} finished but still has blocks"));
+                        }
+                    }
+                }
+                _ => {
+                    // pressure spike revokes peer-resident blocks
+                    let now = hr.node.clock.now();
+                    let used = rng.below(80) * GIB;
+                    hr.node.set_tenant_load(
+                        1,
+                        TenantLoad::from_steps(80 * GIB, vec![(0, 0), (now + 1, used)]),
+                    );
+                    hr.advance_to(now + 2);
+                }
+            }
+            kv.check_invariants().map_err(|e| format!("kv invariant: {e}"))?;
+            kv.table().check_invariants().map_err(|e| format!("table invariant: {e}"))?;
+            if kv.local_blocks() > cap {
+                return err(format!("local blocks {} > capacity {cap}", kv.local_blocks()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Without harvest, no block is ever peer-resident; with host_backed_peer,
+/// eviction to peer keeps a host copy (never `Dropped` on revocation).
+#[test]
+fn prop_kv_tier_policy_respected() {
+    check("kv-tier-policy", 60, 0x7137, |rng| {
+        let node = SimNode::new(NodeSpec::h100x2());
+        let mut hr = HarvestRuntime::new(node, HarvestConfig::for_node(2));
+        let cfg = KvConfig {
+            model: find_kv_model("kimi").unwrap(),
+            block_tokens: 16,
+            local_capacity_blocks: 8,
+            use_harvest: false,
+            host_backed_peer: false,
+        };
+        let mut kv = KvOffloadManager::new(cfg, 0);
+        let s = SeqId(0);
+        for _ in 0..rng.below(400) + 100 {
+            kv.append_token(&mut hr, s);
+        }
+        let table = kv.table();
+        for seq_block in table.seq_blocks(s) {
+            if let Some(BlockResidency::Peer { .. }) = table.residency(*seq_block) {
+                return err("harvest disabled but block on peer".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Expert residency + routing
+// ---------------------------------------------------------------------
+
+/// Routing always returns exactly top-k distinct experts in range, for
+/// every Table-1 model, across drift epochs.
+#[test]
+fn prop_router_topk_distinct_in_range() {
+    check("router-topk", 60, 0x70CB, |rng| {
+        let model = match rng.below(4) {
+            0 => find_moe_model("mixtral").unwrap(),
+            1 => find_moe_model("phi-3.5").unwrap(),
+            2 => find_moe_model("phi-tiny").unwrap(),
+            _ => find_moe_model("qwen").unwrap(),
+        };
+        let mut router =
+            RouterSim::new(model, model.n_layers as usize, rng.u64()).with_drift_interval(64);
+        for _ in 0..200 {
+            let layer = rng.below(model.n_layers) as usize;
+            let picks = router.route_token(layer);
+            if picks.len() != model.top_k as usize {
+                return err(format!("{} picks != top_k {}", picks.len(), model.top_k));
+            }
+            let mut sorted = picks.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != picks.len() {
+                return err(format!("duplicate experts in {picks:?}"));
+            }
+            if picks.iter().any(|&e| e >= model.n_experts as usize) {
+                return err(format!("expert out of range in {picks:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The rebalancer + revocation keep the residency map consistent: no
+/// expert simultaneously local and peer-cached, peer entries always have
+/// live handles, and fallback after revocation is host.
+#[test]
+fn prop_residency_map_consistent_under_revocation() {
+    check("residency-consistent", 60, 0x5E51, |rng| {
+        let model = find_moe_model("qwen").unwrap();
+        let node = SimNode::new(NodeSpec::h100x2());
+        let mut hr = HarvestRuntime::new(node, HarvestConfig::for_node(2));
+        let offload = 0.2 + 0.6 * rng.f64();
+        let mut reb = ExpertRebalancer::new(model, 0, offload);
+        reb.rebalance(&mut hr, rng.below(200) as usize + 1);
+        reb.residency().check_invariants().map_err(|e| format!("post-rebalance: {e}"))?;
+        // revoke a random subset of peer allocations
+        let handles: Vec<_> = reb.residency().peer_cached().map(|(_, h, _)| h).collect();
+        // (the rebalancer registered callbacks that invalidate residency)
+        for h in handles {
+            if rng.bool(0.5) {
+                hr.revoke(h, RevocationReason::TenantPressure);
+            }
+        }
+        reb.residency().check_invariants().map_err(|e| format!("post-revoke: {e}"))?;
+        // every remaining peer entry must still be live in the runtime
+        for (_, h, _) in reb.residency().peer_cached() {
+            if !hr.is_live(h) {
+                return err(format!("residency references dead handle {h:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Schedulers
+// ---------------------------------------------------------------------
+
+/// Token conservation: any scheduler, any admission order — every
+/// admitted sequence is selected until retired, none is selected after
+/// retirement or duplicated within a step.
+#[test]
+fn prop_scheduler_conserves_sequences() {
+    check("sched-conservation", 120, 0x5C4D, |rng| {
+        let mut sched: Box<dyn Scheduler> = if rng.bool(0.5) {
+            Box::new(Fcfs::new())
+        } else {
+            Box::new(CompletelyFair::new(1 + rng.below(4) as u32))
+        };
+        let mut admitted = Vec::new();
+        let mut retired = Vec::new();
+        let mut next = 0u64;
+        for _ in 0..rng.below(200) + 20 {
+            match rng.below(4) {
+                0 => {
+                    let s = SeqId(next);
+                    next += 1;
+                    sched.admit(s);
+                    admitted.push(s);
+                }
+                1 if !admitted.is_empty() => {
+                    let i = rng.below(admitted.len() as u64) as usize;
+                    let s = admitted.swap_remove(i);
+                    sched.retire(s);
+                    retired.push(s);
+                }
+                _ => {
+                    let slots = 1 + rng.below(8) as usize;
+                    let picked = sched.select(slots);
+                    if picked.len() > slots {
+                        return err(format!("{} picked > {slots} slots", picked.len()));
+                    }
+                    let mut p = picked.clone();
+                    p.sort();
+                    p.dedup();
+                    if p.len() != picked.len() {
+                        return err(format!("duplicate seq in step {picked:?}"));
+                    }
+                    for s in &picked {
+                        if retired.contains(s) {
+                            return err(format!("{s:?} selected after retire"));
+                        }
+                        if !admitted.contains(s) {
+                            return err(format!("{s:?} selected but never admitted"));
+                        }
+                    }
+                }
+            }
+            if sched.runnable() != admitted.len() {
+                return err(format!(
+                    "runnable {} != admitted {}",
+                    sched.runnable(),
+                    admitted.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// CF with quantum=1 gives every runnable sequence service within
+/// `ceil(n/slots)` steps (no starvation).
+#[test]
+fn prop_cf_no_starvation() {
+    check("cf-no-starvation", 80, 0xFA12, |rng| {
+        let n = 2 + rng.below(12) as usize;
+        let slots = 1 + rng.below(4) as usize;
+        let mut cf = CompletelyFair::new(1);
+        for i in 0..n {
+            cf.admit(SeqId(i as u64));
+        }
+        let rounds = n.div_ceil(slots) + 1;
+        let mut seen = vec![false; n];
+        for _ in 0..rounds {
+            for s in cf.select(slots) {
+                seen[s.0 as usize] = true;
+            }
+        }
+        if !seen.iter().all(|&b| b) {
+            return err(format!("starved sequences within {rounds} rounds: {seen:?}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Workload generator + interconnect
+// ---------------------------------------------------------------------
+
+/// Workload generation is deterministic per seed, sorted by arrival, and
+/// respects prefix-sharing bounds.
+#[test]
+fn prop_workload_gen_well_formed() {
+    check("workload-gen", 100, 0x3A71, |rng| {
+        let spec = WorkloadSpec {
+            n_requests: 1 + rng.below(64) as usize,
+            mean_prompt_tokens: 16.0 + rng.f64() * 400.0,
+            prompt_sigma: 0.2 + rng.f64(),
+            max_new_tokens: 1 + rng.below(64) as u32,
+            mean_interarrival_ns: rng.below(2) * 1_000_000,
+            shared_prefix_fraction: rng.f64(),
+            shared_prefix_tokens: rng.below(128) as u32,
+            seed: rng.u64(),
+        };
+        let a = WorkloadGen::new(spec).generate();
+        let b = WorkloadGen::new(spec).generate();
+        if a.len() != spec.n_requests {
+            return err(format!("{} requests != {}", a.len(), spec.n_requests));
+        }
+        for (x, y) in a.iter().zip(&b) {
+            if x.prompt_tokens != y.prompt_tokens || x.arrival != y.arrival {
+                return err("same seed produced different workloads".into());
+            }
+        }
+        for w in a.windows(2) {
+            if w[0].arrival > w[1].arrival {
+                return err("arrivals not sorted".into());
+            }
+        }
+        for r in &a {
+            if r.prompt_tokens == 0 {
+                return err("zero-length prompt".into());
+            }
+            if r.shared_prefix_tokens > r.prompt_tokens {
+                return err(format!(
+                    "shared prefix {} > prompt {}",
+                    r.shared_prefix_tokens, r.prompt_tokens
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Link latency is monotone in transfer size, and NVLink strictly beats
+/// PCIe at every size (the Fig. 3 premise).
+#[test]
+fn prop_link_latency_monotone_and_ordered() {
+    check("link-monotone", 60, 0x11C4, |rng| {
+        let node = SimNode::new(NodeSpec::h100x2());
+        let mut sizes: Vec<u64> = (0..8).map(|_| 1 + rng.below(512 * MIB)).collect();
+        sizes.sort_unstable();
+        let mut last_p2p = 0;
+        let mut last_h2d = 0;
+        for &bytes in &sizes {
+            let p2p = node.topo.estimate(DeviceId::Gpu(1), DeviceId::Gpu(0), bytes).unwrap();
+            let h2d = node.topo.estimate(DeviceId::Host, DeviceId::Gpu(0), bytes).unwrap();
+            if p2p >= h2d {
+                return err(format!("p2p {p2p} >= h2d {h2d} at {bytes} bytes"));
+            }
+            if p2p < last_p2p || h2d < last_h2d {
+                return err(format!("latency not monotone at {bytes} bytes"));
+            }
+            last_p2p = p2p;
+            last_h2d = h2d;
+        }
+        Ok(())
+    });
+}
+
+/// DMA drain-by-tag is a barrier: after drain, no op with that tag is
+/// still in flight, and draining never rewinds the clock.
+#[test]
+fn prop_dma_drain_is_barrier() {
+    check("dma-drain", 80, 0xD7A1, |rng| {
+        let mut node = SimNode::new(NodeSpec::h100x2());
+        let mut tags = Vec::new();
+        for t in 0..rng.below(20) + 1 {
+            let bytes = 1 + rng.below(64 * MIB);
+            let (src, dst) = if rng.bool(0.5) {
+                (DeviceId::Host, DeviceId::Gpu(rng.below(2) as usize))
+            } else {
+                (DeviceId::Gpu(0), DeviceId::Gpu(1))
+            };
+            let ev = node.copy(src, dst, bytes, Some(t));
+            tags.push((t, ev.end));
+        }
+        let before = node.clock.now();
+        let (tag, end) = tags[rng.below(tags.len() as u64) as usize];
+        let drained = node.dma.drain_tag(&node.topo, tag);
+        if drained < end {
+            return err(format!("drained at {drained} < op end {end}"));
+        }
+        if node.clock.now() < before {
+            return err("drain rewound the clock".into());
+        }
+        if node.dma.tag_busy_until(tag) > node.clock.now() {
+            return err("tag still busy after drain".into());
+        }
+        Ok(())
+    });
+}
