@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --example cluster_trace`
 
-use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime};
+use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime, Lease, PayloadKind};
 use harvest::memsim::{NodeSpec, SimNode, TenantLoad, UtilizationModel};
 use harvest::trace::{ClusterTrace, TraceSpec};
 use harvest::util::fmt_bytes;
@@ -36,20 +36,22 @@ fn main() {
     let mut node = SimNode::new(NodeSpec::h100x2());
     node.set_tenant_load(1, timeline);
     let mut hr = HarvestRuntime::new(node, HarvestConfig::for_node(2));
+    let session = hr.open_session(PayloadKind::Generic);
     let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
 
     let chunk = 1 * GIB;
-    let mut held: Vec<harvest::harvest::HandleId> = Vec::new();
+    let mut held: Vec<Lease> = Vec::new();
     let mut samples = Vec::new();
     for hour5 in 0..(24 * 12) {
         let t = hour5 * (HOUR / 12);
-        let revs = hr.advance_to(t);
-        for r in &revs {
-            held.retain(|&h| h != r.handle.id);
+        hr.advance_to(t);
+        // pull-model: drop our RAII owners for whatever got revoked
+        for ev in session.drain_revocations(&mut hr) {
+            held.retain(|l| l.id() != ev.lease);
         }
         // greedily top up
-        while let Ok(h) = hr.alloc(chunk, hints) {
-            held.push(h.id);
+        while let Ok(lease) = session.alloc(&mut hr, chunk, hints) {
+            held.push(lease);
         }
         samples.push(hr.live_bytes_on(1));
     }

@@ -1,57 +1,63 @@
-//! Quickstart — the Harvest API in 60 lines (paper §3.2).
+//! Quickstart — the lease-based Harvest API in ~70 lines (paper §3.2,
+//! redesigned).
 //!
-//! Simulates a 2× H100 node, harvests peer HBM, populates it, serves a
-//! fast peer fetch, then watches a co-tenant pressure spike revoke the
-//! allocation (drain → invalidate → callback) and falls back to host.
+//! Simulates a 2× H100 node, opens a session, leases peer HBM, populates
+//! and serves it through the unified `Transfer` builder, then watches a
+//! co-tenant pressure spike revoke the lease (drain → invalidate →
+//! event) and falls back to host — all without callbacks or shared
+//! state: revocations are *pulled* with `drain_revocations`.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use harvest::harvest::{AllocHints, Durability, HarvestConfig, HarvestRuntime};
+use harvest::harvest::{
+    AllocHints, Durability, HarvestConfig, HarvestRuntime, PayloadKind, Transfer,
+};
 use harvest::memsim::{DeviceId, NodeSpec, SimNode, TenantLoad};
 use harvest::util::{fmt_bytes, fmt_ns};
-use std::cell::RefCell;
-use std::rc::Rc;
 
 const GIB: u64 = 1 << 30;
 const MIB: u64 = 1 << 20;
 
 fn main() {
     // A 2-GPU NVLink node (the paper's testbed shape). GPU 0 is our
-    // memory-pressured compute GPU; GPU 1 has headroom.
+    // memory-pressured compute GPU; GPU 1 has headroom. The controller
+    // config is TOML-loadable for sweeps; defaults would do here too.
     let node = SimNode::new(NodeSpec::h100x2());
-    let mut hr = HarvestRuntime::new(node, HarvestConfig::for_node(2));
+    let cfg = HarvestConfig::from_toml_str("gpus = 2\nvictim_policy = \"lifo\"").unwrap();
+    let mut hr = HarvestRuntime::new(node, cfg);
 
-    // 1. harvest_alloc: ask for 256 MiB of peer HBM for compute GPU 0.
+    // 1. Open a session and lease 256 MiB of peer HBM for compute GPU 0.
+    //    The payload kind, durability and client identity ride on the
+    //    lease; dropping it without release would be swept, releasing it
+    //    twice does not compile.
+    let session = hr.open_session(PayloadKind::Generic);
     let hints = AllocHints {
         compute_gpu: Some(0),
         durability: Durability::HostBacked, // authoritative copy in DRAM
         ..Default::default()
     };
-    let handle = hr.alloc(256 * MIB, hints).expect("peer capacity available");
+    let lease = session.alloc(&mut hr, 256 * MIB, hints).expect("peer capacity available");
     println!(
-        "harvest_alloc -> handle {:?}: {} on peer GPU {} (offset {:#x})",
-        handle.id,
-        fmt_bytes(handle.size),
-        handle.peer,
-        handle.offset
+        "alloc -> lease {:?}: {} on peer GPU {} ({:?})",
+        lease.id(),
+        fmt_bytes(lease.size()),
+        lease.peer(),
+        lease.kind(),
     );
 
-    // 2. harvest_register_cb: get told when the allocation is revoked.
-    let revoked = Rc::new(RefCell::new(None));
-    let seen = revoked.clone();
-    hr.register_cb(handle.id, move |rev| {
-        *seen.borrow_mut() = Some((rev.reason, rev.at));
-    })
-    .unwrap();
-
-    // 3. Populate the cache (host -> peer over PCIe, off the hot path)...
-    let fill = hr.copy_in(handle.id, DeviceId::Host).unwrap();
-    println!("populate: host->peer copy finishes at t={}", fmt_ns(fill.end));
-
-    // ...then serve a hit (peer -> compute over NVLink, the fast path).
-    let hit = hr.fetch_to(handle.id, 0).unwrap();
+    // 2. One transfer batch: populate the cache (host -> peer over PCIe,
+    //    off the hot path), then serve a hit (peer -> compute over
+    //    NVLink, the fast path). Both ops are tagged with the lease id,
+    //    so the revocation pipeline's DMA drain covers them.
+    let report = Transfer::new()
+        .populate(&lease, DeviceId::Host)
+        .fetch(&lease, 0)
+        .submit(&mut hr)
+        .unwrap();
+    let hit = report.events[1];
     let host_equivalent =
-        hr.node.topo.estimate(DeviceId::Host, DeviceId::Gpu(0), handle.size).unwrap();
+        hr.node.topo.estimate(DeviceId::Host, DeviceId::Gpu(0), lease.size()).unwrap();
+    println!("populate: host->peer copy finishes at t={}", fmt_ns(report.events[0].end));
     println!(
         "cache hit:  peer->gpu0 in {} (host DRAM would take {}; {:.1}x slower)",
         fmt_ns(hit.duration()),
@@ -59,7 +65,9 @@ fn main() {
         host_equivalent as f64 / hit.duration() as f64
     );
 
-    // 4. A co-tenant on GPU 1 suddenly wants (almost) all of its memory.
+    // 3. A co-tenant on GPU 1 suddenly wants (almost) all of its memory.
+    //    The controller drains in-flight DMA, invalidates the placement,
+    //    frees the bytes — and only then is the event observable.
     let now = hr.node.clock.now();
     hr.node.set_tenant_load(
         1,
@@ -67,12 +75,18 @@ fn main() {
     );
     let revs = hr.advance_to(now + 2_000_000);
     println!("tenant pressure spike -> {} revocation(s)", revs.len());
-    let (reason, at) = revoked.borrow().expect("callback fired");
-    println!("callback observed: reason {reason:?} at t={}", fmt_ns(at));
-    assert!(!hr.is_live(handle.id), "handle is gone");
+
+    // 4. Pull the event at our own tick boundary. No callback, no shared
+    //    state: we repair our index here, synchronously.
+    let events = session.drain_revocations(&mut hr);
+    let ev = events.first().expect("event pending");
+    assert_eq!(ev.lease, lease.id());
+    assert!(!hr.is_live(lease.id()), "lease is gone before the event is visible");
+    println!("event drained: reason {:?} at t={}", ev.reason, fmt_ns(ev.at));
 
     // 5. Correctness never depended on the peer tier: the object still
     //    has its authoritative host copy; we just fetch from there now.
     let fallback = hr.node.copy(DeviceId::Host, DeviceId::Gpu(0), 256 * MIB, None);
     println!("fallback:   host->gpu0 in {} (correct, just slower)", fmt_ns(fallback.duration()));
+    drop(lease); // stale RAII owner; the runtime's sweep ignores it
 }

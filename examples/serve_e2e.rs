@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     let requests = WorkloadGen::new(spec).generate();
     let total_new: u64 = requests.iter().map(|r| r.max_new_tokens as u64).sum();
 
-    let mut engine = RealEngine::new(rt);
+    let mut engine = RealEngine::new(rt)?;
     println!("serving {} requests ({total_new} new tokens) ...", requests.len());
     let report = engine.serve(requests)?;
 

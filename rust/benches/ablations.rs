@@ -13,7 +13,7 @@
 
 use harvest::harvest::{
     BestFit, FirstAvailable, HarvestConfig, HarvestRuntime, InterferenceAware, LocalityAware,
-    MigConfig, PlacementPolicy, RateLimitFairness, StabilityAware, VictimPolicy,
+    MigConfig, PlacementPolicy, RateLimitFairness, StabilityAware,
 };
 use harvest::kv::{EvictionPolicy, Fifo, KvConfig, KvOffloadManager, Lfu, Lru, PolicySwitcher};
 use harvest::memsim::{NodeSpec, SimNode, TenantLoad};
@@ -223,15 +223,12 @@ fn victim_policy_sweep() {
     let table = Table::new(&[16, 14, 16]);
     table.row(&["VICTIM".into(), "REVOCATIONS".into(), "BYTES REVOKED".into()]);
     table.sep();
-    for vp in [
-        VictimPolicy::Lifo,
-        VictimPolicy::Fifo,
-        VictimPolicy::LargestFirst,
-        VictimPolicy::SmallestFirst,
-    ] {
+    for vp in ["lifo", "fifo", "largest", "smallest"] {
         let node = SimNode::new(NodeSpec::h100x2());
-        let mut cfg = HarvestConfig::for_node(2);
-        cfg.victim_policy = vp;
+        // config-file path: policy sweeps load TOML instead of
+        // hand-constructing HarvestConfig
+        let cfg = HarvestConfig::from_toml_str(&format!("gpus = 2\nvictim_policy = \"{vp}\""))
+            .expect("valid sweep config");
         let mut hr = HarvestRuntime::new(node, cfg);
         // mixed-size allocations: Qwen (16.5 MiB) + Mixtral (336 MiB)
         let qwen = find_moe_model("qwen").unwrap();
@@ -248,12 +245,12 @@ fn victim_policy_sweep() {
         hr.advance_to(2_000_000);
         let bytes: u64 = hr.revocations.iter().map(|r| r.handle.size).sum();
         table.row(&[
-            format!("{vp:?}"),
+            vp.into(),
             format!("{}", hr.revocations.len()),
             harvest::util::fmt_bytes(bytes),
         ]);
     }
-    println!("(largest-first frees the budget with the fewest callbacks)\n");
+    println!("(largest-first frees the budget with the fewest revocation events)\n");
 }
 
 // ------------------------------------------------------------------

@@ -6,7 +6,7 @@
 //!
 //! Run: `cargo bench --bench hot_path`
 
-use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime};
+use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime, PayloadKind};
 use harvest::kv::{KvConfig, KvOffloadManager, SeqId};
 use harvest::memsim::{NodeSpec, SimNode};
 use harvest::moe::pipeline::OffloadTier;
@@ -46,6 +46,32 @@ fn bench_alloc_under_fragmentation(b: &Bench) {
     b.wall("harvest_alloc+free (2000 standing allocs)", || {
         let h = hr.alloc(8 * MIB, hints).unwrap();
         hr.free(h.id).unwrap();
+    });
+}
+
+fn bench_lease_session_paths(b: &Bench) {
+    // The redesigned surface: RAII lease alloc/release, and the vectored
+    // alloc_many path (one policy consultation per 16-block batch vs 16).
+    let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+    let session = hr.open_session(PayloadKind::KvBlock);
+    let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+    b.wall("session alloc+release (64 MiB lease)", || {
+        let lease = session.alloc(&mut hr, 64 * MIB, hints).unwrap();
+        session.release(&mut hr, lease).unwrap();
+    });
+    let sizes = [4 * MIB; 16];
+    b.wall("session alloc_many+release (16 x 4 MiB)", || {
+        let batch = session.alloc_many(&mut hr, &sizes, hints).unwrap();
+        for lease in batch {
+            session.release(&mut hr, lease).unwrap();
+        }
+    });
+    b.wall("scalar alloc x16 +release (4 MiB each)", || {
+        let batch: Vec<_> =
+            (0..16).map(|_| session.alloc(&mut hr, 4 * MIB, hints).unwrap()).collect();
+        for lease in batch {
+            session.release(&mut hr, lease).unwrap();
+        }
     });
 }
 
@@ -165,6 +191,7 @@ fn main() {
     let b = Bench::default();
     bench_harvest_alloc_free(&b);
     bench_alloc_under_fragmentation(&b);
+    bench_lease_session_paths(&b);
     bench_expert_fetch(&b);
     bench_kv_ops(&b);
     bench_router_and_scheduler(&b);

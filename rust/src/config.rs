@@ -380,25 +380,6 @@ fn fabric_name(f: FabricKind) -> &'static str {
     }
 }
 
-fn victim_policy_from_str(s: &str) -> Result<VictimPolicy> {
-    match s {
-        "lifo" => Ok(VictimPolicy::Lifo),
-        "fifo" => Ok(VictimPolicy::Fifo),
-        "largest" | "largest-first" => Ok(VictimPolicy::LargestFirst),
-        "smallest" | "smallest-first" => Ok(VictimPolicy::SmallestFirst),
-        other => bail!("unknown victim policy `{other}`"),
-    }
-}
-
-fn victim_policy_name(v: VictimPolicy) -> &'static str {
-    match v {
-        VictimPolicy::Lifo => "lifo",
-        VictimPolicy::Fifo => "fifo",
-        VictimPolicy::LargestFirst => "largest",
-        VictimPolicy::SmallestFirst => "smallest",
-    }
-}
-
 impl DeploymentConfig {
     /// Parse from TOML-subset text. Unknown keys are rejected so typos
     /// fail loudly rather than silently falling back to defaults.
@@ -444,8 +425,8 @@ impl DeploymentConfig {
             hbm_gib: doc.u64_or("node.hbm_gib", d.hbm_gib)?,
             fabric: fabric_from_str(&doc.str_or("node.fabric", fabric_name(d.fabric)))?,
             harvest_enabled: doc.bool_or("harvest.enabled", d.harvest_enabled)?,
-            victim_policy: victim_policy_from_str(
-                &doc.str_or("harvest.victim_policy", victim_policy_name(d.victim_policy)),
+            victim_policy: VictimPolicy::parse(
+                &doc.str_or("harvest.victim_policy", d.victim_policy.name()),
             )?,
             reserve_gib: doc.u64_or("harvest.reserve_gib", d.reserve_gib)?,
             mig_cache_gib: match doc.get("harvest.mig_cache_gib") {
@@ -523,7 +504,7 @@ impl DeploymentConfig {
         s.push_str(&format!("fabric = \"{}\"\n\n", fabric_name(self.fabric)));
         s.push_str("[harvest]\n");
         s.push_str(&format!("enabled = {}\n", self.harvest_enabled));
-        s.push_str(&format!("victim_policy = \"{}\"\n", victim_policy_name(self.victim_policy)));
+        s.push_str(&format!("victim_policy = \"{}\"\n", self.victim_policy.name()));
         s.push_str(&format!("reserve_gib = {}\n", self.reserve_gib));
         if let Some(gib) = self.mig_cache_gib {
             s.push_str(&format!("mig_cache_gib = {gib}\n"));

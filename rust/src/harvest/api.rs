@@ -1,11 +1,22 @@
-//! Harvest API surface types (§3.2).
+//! Harvest API surface types (§3.2), lease edition.
+//!
+//! The paper's raw surface (`harvest_alloc` / `harvest_free` /
+//! `harvest_register_cb`) is reproduced as deprecated shims on
+//! [`crate::harvest::HarvestRuntime`]; the supported surface is the
+//! lease-based one in [`crate::harvest::session`]. The types here are
+//! shared by both: identifiers, hints, durability modes, revocation
+//! reasons and errors.
 
 use crate::memsim::hbm::AllocId;
 use crate::memsim::Ns;
 
-/// Opaque, never-reused identifier of a harvest allocation.
+/// Opaque, never-reused identifier of a harvest lease (née "handle").
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
-pub struct HandleId(pub u64);
+pub struct LeaseId(pub u64);
+
+/// Deprecated alias for [`LeaseId`], kept so pre-lease call sites keep
+/// compiling during the migration. New code should say `LeaseId`.
+pub type HandleId = LeaseId;
 
 /// What happens to the cached object when its peer allocation is revoked
 /// (§3.1: consistency is an application choice).
@@ -20,7 +31,7 @@ pub enum Durability {
     Lossy,
 }
 
-/// Placement hints passed to `harvest_alloc` (§3.2 "hint constraints").
+/// Placement hints passed to allocation calls (§3.2 "hint constraints").
 #[derive(Debug, Clone, Copy, Default)]
 pub struct AllocHints {
     /// The compute GPU this cache entry serves (locality policies place
@@ -30,16 +41,17 @@ pub struct AllocHints {
     pub prefer_peer: Option<usize>,
     /// Client identity for fairness accounting.
     pub client: Option<u32>,
-    /// Durability mode (recorded on the handle; the runtime never tracks
+    /// Durability mode (recorded on the lease; the runtime never tracks
     /// dirty state either way).
     pub durability: Durability,
 }
 
 /// The (device, pointer, size) tuple the paper's API returns, plus
-/// bookkeeping metadata.
+/// bookkeeping metadata. This is the *raw* placement record; the RAII
+/// owner of it is [`crate::harvest::session::Lease`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HarvestHandle {
-    pub id: HandleId,
+    pub id: LeaseId,
     /// Peer GPU index holding the bytes.
     pub peer: usize,
     /// The device "pointer" (simulated: allocation id + byte offset).
@@ -64,7 +76,9 @@ pub enum RevocationReason {
     Shutdown,
 }
 
-/// A completed revocation, as delivered to callbacks.
+/// A completed revocation, as recorded in the runtime log (and delivered
+/// to the deprecated push callbacks). The pull-model equivalent handed
+/// to sessions is [`crate::harvest::events::RevocationEvent`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Revocation {
     pub handle: HarvestHandle,
@@ -73,16 +87,17 @@ pub struct Revocation {
     pub at: Ns,
 }
 
-/// Errors from the allocation path.
+/// Errors from the allocation and transfer paths.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum HarvestError {
-    /// No peer currently has a segment that fits under the policy.
+    /// No peer currently has a segment that fits under the policy. For
+    /// vectored allocations `requested` is the total batch size.
     NoCapacity { requested: u64 },
     /// The hints pinned a peer that cannot serve the request.
     PeerUnavailable { peer: usize },
-    /// Unknown or already-freed handle.
-    StaleHandle(HandleId),
-    /// Zero-byte request.
+    /// Unknown, revoked, or already-released lease.
+    StaleLease(LeaseId),
+    /// Zero-byte request (vectored: any zero-byte element).
     ZeroSize,
 }
 
@@ -95,8 +110,8 @@ impl std::fmt::Display for HarvestError {
             HarvestError::PeerUnavailable { peer } => {
                 write!(f, "pinned peer gpu{peer} unavailable")
             }
-            HarvestError::StaleHandle(id) => write!(f, "stale handle {id:?}"),
-            HarvestError::ZeroSize => write!(f, "zero-size harvest_alloc"),
+            HarvestError::StaleLease(id) => write!(f, "stale lease {id:?}"),
+            HarvestError::ZeroSize => write!(f, "zero-size harvest allocation"),
         }
     }
 }

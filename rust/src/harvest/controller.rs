@@ -1,31 +1,48 @@
 //! The Harvest controller: allocation, data movement, pressure watching,
 //! and the ordered revocation pipeline (§3.2).
 //!
-//! Lifecycle of a cached object:
+//! Lifecycle of a cached object, lease edition:
 //!
-//! 1. `harvest_alloc(size, hints)` — the controller builds peer views,
-//!    asks the [`PlacementPolicy`] for a peer, allocates in that peer's
-//!    HBM arena (standard CUDA allocation path stand-in) and returns a
-//!    [`HarvestHandle`].
-//! 2. The application moves data explicitly (`copy_in` / `fetch_to` —
-//!    `cudaMemcpyPeerAsync` stand-ins tagged with the handle).
-//! 3. On revocation (tenant pressure, MIG reclaim, policy eviction, or
-//!    explicit free) the controller **first drains in-flight DMA touching
-//!    the region, then invalidates the placement entry, then fires the
-//!    registered callback** — exactly the §3.2 ordering.
+//! 1. A consumer opens a [`super::session::HarvestSession`] and calls
+//!    `alloc` / `alloc_many` — the controller builds peer views, asks
+//!    the [`PlacementPolicy`] for a peer (once per call, even for a
+//!    vectored batch), allocates in that peer's HBM arena and returns
+//!    RAII [`super::session::Lease`]s.
+//! 2. The application moves data explicitly through the
+//!    [`super::session::Transfer`] builder (`cudaMemcpyPeerAsync`
+//!    stand-ins tagged with the lease id).
+//! 3. On revocation (tenant pressure, MIG reclaim, policy eviction) the
+//!    controller **first drains in-flight DMA touching the region, then
+//!    invalidates the placement entry, then enqueues the event** on the
+//!    owning session's [`RevocationQueue`] — exactly the §3.2 ordering,
+//!    now observable: by the time `drain_revocations` returns an event,
+//!    steps 1–2 are guaranteed complete.
 //!
-//! The controller never tracks dirty state and never writes back: the
-//! handle's [`Durability`] only tells the *application's* callback what
-//! fallback is legal.
+//! Leases dropped without release land in a reclaim inbox the controller
+//! sweeps at allocation / pressure / time boundaries, so leaked leases
+//! cannot leak `bytes_on` accounting. The paper's raw C-style surface
+//! (`alloc` → `HarvestHandle`, `free`, `register_cb`, `copy_in`,
+//! `fetch_to`) remains as deprecated shims over the same internals.
+//!
+//! The controller never tracks dirty state and never writes back: a
+//! lease's [`Durability`] only tells the *application* what fallback is
+//! legal.
 
-use super::api::{AllocHints, HandleId, HarvestError, HarvestHandle, Revocation, RevocationReason};
+use super::api::{
+    AllocHints, HarvestError, HarvestHandle, LeaseId, Revocation, RevocationReason,
+};
+use super::events::{PayloadKind, RevocationEvent, RevocationQueue};
 use super::mig::MigConfig;
 use super::monitor::PeerMonitor;
 use super::policy::{BestFit, PlacementPolicy, PlacementRequest};
+use super::session::{HarvestSession, ReclaimInbox, SessionId};
 use crate::memsim::{CopyEvent, DeviceId, Ns, SimNode};
 use std::collections::BTreeMap;
 
 /// Which live allocations die first under pressure.
+// serde is not in the offline crate set; the derive activates once a
+// vendored copy is added behind the `serde` feature.
+#[cfg_attr(feature = "serde", derive(serde::Deserialize))]
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum VictimPolicy {
     /// Newest first (default: oldest entries have proven useful).
@@ -33,13 +50,36 @@ pub enum VictimPolicy {
     Lifo,
     /// Oldest first.
     Fifo,
-    /// Largest first (frees the most with the fewest callbacks).
+    /// Largest first (frees the most with the fewest events).
     LargestFirst,
     /// Smallest first.
     SmallestFirst,
 }
 
+impl VictimPolicy {
+    /// Parse the config-file spelling.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "lifo" => Ok(VictimPolicy::Lifo),
+            "fifo" => Ok(VictimPolicy::Fifo),
+            "largest" | "largest-first" => Ok(VictimPolicy::LargestFirst),
+            "smallest" | "smallest-first" => Ok(VictimPolicy::SmallestFirst),
+            other => anyhow::bail!("unknown victim policy `{other}`"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            VictimPolicy::Lifo => "lifo",
+            VictimPolicy::Fifo => "fifo",
+            VictimPolicy::LargestFirst => "largest",
+            VictimPolicy::SmallestFirst => "smallest",
+        }
+    }
+}
+
 /// Controller configuration.
+#[cfg_attr(feature = "serde", derive(serde::Deserialize))]
 #[derive(Debug, Clone)]
 pub struct HarvestConfig {
     pub victim_policy: VictimPolicy,
@@ -52,6 +92,8 @@ pub struct HarvestConfig {
     pub reserve_bytes: u64,
 }
 
+const GIB: u64 = 1 << 30;
+
 impl HarvestConfig {
     pub fn for_node(n_gpus: usize) -> Self {
         Self {
@@ -61,30 +103,103 @@ impl HarvestConfig {
             reserve_bytes: 0,
         }
     }
+
+    /// Load from TOML-subset text (see [`crate::config::TomlDoc`] for
+    /// the grammar), so node/policy sweeps in benches and `main.rs`
+    /// scenarios stop hand-constructing configs. Flat keys:
+    ///
+    /// ```toml
+    /// gpus = 4                 # node size (one MigConfig per GPU), default 2
+    /// victim_policy = "lifo"   # lifo | fifo | largest | smallest
+    /// reserve_gib = 2          # tenant headroom per peer
+    /// monitor_window_ns = 1000000000
+    /// mig_cache_gib = 10       # optional: partition every GPU
+    /// ```
+    ///
+    /// Unknown keys are rejected so typos fail loudly.
+    pub fn from_toml_str(text: &str) -> anyhow::Result<Self> {
+        use anyhow::Context;
+        let doc = crate::config::TomlDoc::parse(text)?;
+        const KNOWN: &[&str] =
+            &["gpus", "victim_policy", "reserve_gib", "monitor_window_ns", "mig_cache_gib"];
+        for key in doc.keys() {
+            if !KNOWN.contains(&key) {
+                anyhow::bail!("unknown harvest config key `{key}`");
+            }
+        }
+        let n_gpus = match doc.get("gpus") {
+            Some(v) => v.as_u64().context("key `gpus`")? as usize,
+            None => 2,
+        };
+        if n_gpus < 2 {
+            anyhow::bail!("gpus must be >= 2 (need at least one peer)");
+        }
+        let mut cfg = Self::for_node(n_gpus);
+        if let Some(v) = doc.get("victim_policy") {
+            cfg.victim_policy = VictimPolicy::parse(v.as_str().context("key `victim_policy`")?)?;
+        }
+        if let Some(v) = doc.get("reserve_gib") {
+            cfg.reserve_bytes = v.as_u64().context("key `reserve_gib`")? * GIB;
+        }
+        if let Some(v) = doc.get("monitor_window_ns") {
+            cfg.monitor_window = v.as_u64().context("key `monitor_window_ns`")?;
+        }
+        if let Some(v) = doc.get("mig_cache_gib") {
+            let bytes = v.as_u64().context("key `mig_cache_gib`")? * GIB;
+            for m in &mut cfg.mig {
+                *m = MigConfig::CachePartition { bytes };
+            }
+        }
+        Ok(cfg)
+    }
 }
 
 type Callback = Box<dyn FnMut(&Revocation)>;
 
+/// Per-lease runtime record: the raw placement plus owner routing.
+struct LiveEntry {
+    handle: HarvestHandle,
+    session: SessionId,
+    kind: PayloadKind,
+}
+
+/// Per-session runtime state.
+struct SessionState {
+    kind: PayloadKind,
+    queue: RevocationQueue,
+}
+
+/// The session deprecated shims allocate under (created at construction,
+/// so raw-handle call sites need no setup).
+const LEGACY_SESSION: SessionId = SessionId(0);
+
 /// The runtime. Owns the simulated node; subsystems (MoE rebalancer, KV
-/// manager) drive it single-threadedly.
+/// manager) drive it single-threadedly through their sessions.
 pub struct HarvestRuntime {
     pub node: SimNode,
     policy: Box<dyn PlacementPolicy>,
     pub config: HarvestConfig,
     monitor: PeerMonitor,
-    live: BTreeMap<HandleId, HarvestHandle>,
+    live: BTreeMap<LeaseId, LiveEntry>,
     /// Incremental accounting: our live bytes per peer, and per
     /// (peer, client) for the fairness ledger — avoids an O(live)
     /// scan on every allocation (EXPERIMENTS.md §Perf).
     bytes_on: Vec<u64>,
     client_bytes: BTreeMap<(usize, u32), u64>,
     /// Allocation order per peer (for LIFO/FIFO victim selection):
-    /// insertion-sequence -> handle, O(log n) removal on free/revoke.
-    order: Vec<BTreeMap<u64, HandleId>>,
-    order_key: BTreeMap<HandleId, u64>,
+    /// insertion-sequence -> lease, O(log n) removal on free/revoke.
+    order: Vec<BTreeMap<u64, LeaseId>>,
+    order_key: BTreeMap<LeaseId, u64>,
     next_order: u64,
-    callbacks: BTreeMap<HandleId, Callback>,
-    next_handle: u64,
+    /// Deprecated push-callback registry (shim surface only).
+    callbacks: BTreeMap<LeaseId, Callback>,
+    next_lease: u64,
+    sessions: Vec<SessionState>,
+    /// Drop-inbox shared with RAII leases; swept at allocation /
+    /// pressure / time boundaries.
+    reclaim: ReclaimInbox,
+    /// Leases reclaimed by the leak sweep (metrics / tests).
+    pub leaked_reclaimed: u64,
     /// Every completed revocation, in order (for tests/metrics).
     pub revocations: Vec<Revocation>,
     /// Cumulative counters.
@@ -117,7 +232,10 @@ impl HarvestRuntime {
             order_key: BTreeMap::new(),
             next_order: 0,
             callbacks: BTreeMap::new(),
-            next_handle: 0,
+            next_lease: 0,
+            sessions: vec![SessionState { kind: PayloadKind::Generic, queue: RevocationQueue::new() }],
+            reclaim: ReclaimInbox::default(),
+            leaked_reclaimed: 0,
             revocations: Vec::new(),
             alloc_attempts: 0,
             alloc_failures: 0,
@@ -129,16 +247,81 @@ impl HarvestRuntime {
     }
 
     pub fn live_handles(&self) -> impl Iterator<Item = &HarvestHandle> {
-        self.live.values()
+        self.live.values().map(|e| &e.handle)
     }
 
     pub fn live_bytes_on(&self, peer: usize) -> u64 {
         self.bytes_on[peer]
     }
 
-    pub fn is_live(&self, id: HandleId) -> bool {
+    pub fn is_live(&self, id: LeaseId) -> bool {
         self.live.contains_key(&id)
     }
+
+    /// Raw placement record for a live lease (used by the transfer
+    /// builder and metrics).
+    pub fn handle_info(&self, id: LeaseId) -> Option<HarvestHandle> {
+        self.live.get(&id).map(|e| e.handle)
+    }
+
+    // -- session plumbing -------------------------------------------------
+
+    /// Open a session (sugar: [`HarvestSession::open`]).
+    pub fn open_session(&mut self, kind: PayloadKind) -> HarvestSession {
+        HarvestSession::open(self, kind)
+    }
+
+    pub(crate) fn register_session(&mut self, kind: PayloadKind) -> SessionId {
+        let id = SessionId(self.sessions.len() as u32);
+        self.sessions.push(SessionState { kind, queue: RevocationQueue::new() });
+        id
+    }
+
+    /// Identity of this runtime instance, stamped onto sessions so that
+    /// a session cached from one runtime cannot silently address another
+    /// (lease ids and session ids are runtime-local). Derived from the
+    /// reclaim inbox's allocation, which lives exactly as long as the
+    /// runtime.
+    pub(crate) fn runtime_tag(&self) -> usize {
+        std::rc::Rc::as_ptr(&self.reclaim) as *const () as usize
+    }
+
+    pub(crate) fn reclaim_inbox(&self) -> ReclaimInbox {
+        std::rc::Rc::clone(&self.reclaim)
+    }
+
+    pub(crate) fn drain_session(&mut self, session: SessionId) -> Vec<RevocationEvent> {
+        self.sweep_leaked();
+        self.sessions[session.0 as usize].queue.drain()
+    }
+
+    pub(crate) fn session_queue_len(&self, session: SessionId) -> usize {
+        self.sessions[session.0 as usize].queue.len()
+    }
+
+    pub(crate) fn record_peer_transfer(&mut self, peer: usize, at: Ns, bytes: u64) {
+        self.monitor.record_transfer(peer, at, bytes);
+    }
+
+    /// Free every lease that was dropped without an explicit release.
+    /// Returns how many were reclaimed. Called automatically at
+    /// allocation, pressure-enforcement, drain and time-advance
+    /// boundaries, and callable directly.
+    pub fn sweep_leaked(&mut self) -> usize {
+        let dropped: Vec<LeaseId> = std::mem::take(&mut *self.reclaim.borrow_mut());
+        let mut n = 0;
+        for id in dropped {
+            // Ids of already-revoked / already-released leases show up
+            // here too (their RAII owners were dropped later); skip them.
+            if self.live.contains_key(&id) && self.free(id).is_ok() {
+                self.leaked_reclaimed += 1;
+                n += 1;
+            }
+        }
+        n
+    }
+
+    // -- views + accounting ----------------------------------------------
 
     fn partition_limits(&self) -> Vec<Option<u64>> {
         self.config.mig.iter().map(|m| m.harvest_limit()).collect()
@@ -176,47 +359,55 @@ impl HarvestRuntime {
         }
     }
 
-    /// §3.2 `harvest_alloc`: select a peer and allocate.
-    pub fn alloc(&mut self, size: u64, hints: AllocHints) -> Result<HarvestHandle, HarvestError> {
-        self.alloc_attempts += 1;
-        if size == 0 {
-            self.alloc_failures += 1;
-            return Err(HarvestError::ZeroSize);
-        }
+    // -- allocation -------------------------------------------------------
+
+    /// Select a peer for `total` bytes needing `contiguous`-byte
+    /// segments, honouring pins. One policy consultation.
+    fn select_peer(
+        &mut self,
+        total: u64,
+        contiguous: u64,
+        hints: AllocHints,
+    ) -> Result<usize, HarvestError> {
         let views = self.views_for(hints.client);
-        let peer = if let Some(p) = hints.prefer_peer {
+        if let Some(p) = hints.prefer_peer {
             let ok = p < views.len()
-                && views[p].harvestable >= size
-                && views[p].largest_free >= size
+                && views[p].harvestable >= total
+                && views[p].largest_free >= contiguous
                 && Some(p) != hints.compute_gpu
                 && self.config.mig[p].allows_harvest();
             if !ok {
-                self.alloc_failures += 1;
                 return Err(HarvestError::PeerUnavailable { peer: p });
             }
-            p
-        } else {
-            // Filter P2P-restricted devices before the policy sees them.
-            let views: Vec<_> = views
-                .into_iter()
-                .filter(|v| self.config.mig[v.device].allows_harvest())
-                .collect();
-            let req = PlacementRequest { size, hints, views: &views, topo: &self.node.topo };
-            match self.policy.select(&req) {
-                Some(p) => p,
-                None => {
-                    self.alloc_failures += 1;
-                    return Err(HarvestError::NoCapacity { requested: size });
-                }
-            }
+            return Ok(p);
+        }
+        // Filter P2P-restricted devices before the policy sees them.
+        let views: Vec<_> = views
+            .into_iter()
+            .filter(|v| self.config.mig[v.device].allows_harvest())
+            .collect();
+        let req = PlacementRequest {
+            size: total,
+            contiguous,
+            hints,
+            views: &views,
+            topo: &self.node.topo,
         };
-        let alloc = self.node.gpus[peer].hbm.alloc(size).map_err(|_| {
-            self.alloc_failures += 1;
-            HarvestError::NoCapacity { requested: size }
-        })?;
+        self.policy.select(&req).ok_or(HarvestError::NoCapacity { requested: total })
+    }
+
+    /// Record an arena allocation as a live lease.
+    fn admit(
+        &mut self,
+        session: SessionId,
+        peer: usize,
+        alloc: crate::memsim::AllocId,
+        size: u64,
+        hints: AllocHints,
+    ) -> HarvestHandle {
         let offset = self.node.gpus[peer].hbm.offset_of(alloc).unwrap();
         let handle = HarvestHandle {
-            id: HandleId(self.next_handle),
+            id: LeaseId(self.next_lease),
             peer,
             alloc,
             offset,
@@ -224,34 +415,102 @@ impl HarvestRuntime {
             durability: hints.durability,
             client: hints.client,
         };
-        self.next_handle += 1;
-        self.live.insert(handle.id, handle);
+        self.next_lease += 1;
+        let kind = self.sessions[session.0 as usize].kind;
+        self.live.insert(handle.id, LiveEntry { handle, session, kind });
         self.account_add(&handle);
         let k = self.next_order;
         self.next_order += 1;
         self.order[peer].insert(k, handle.id);
         self.order_key.insert(handle.id, k);
-        Ok(handle)
+        handle
     }
 
-    /// §3.2 `harvest_register_cb`.
-    pub fn register_cb(
+    /// Single allocation under `session` (the lease wrapper lives in
+    /// [`super::session`]).
+    pub(crate) fn alloc_raw(
         &mut self,
-        id: HandleId,
-        cb: impl FnMut(&Revocation) + 'static,
-    ) -> Result<(), HarvestError> {
-        if !self.live.contains_key(&id) {
-            return Err(HarvestError::StaleHandle(id));
+        session: SessionId,
+        size: u64,
+        hints: AllocHints,
+    ) -> Result<HarvestHandle, HarvestError> {
+        self.sweep_leaked();
+        self.alloc_attempts += 1;
+        if size == 0 {
+            self.alloc_failures += 1;
+            return Err(HarvestError::ZeroSize);
         }
-        self.callbacks.insert(id, Box::new(cb));
-        Ok(())
+        let peer = match self.select_peer(size, size, hints) {
+            Ok(p) => p,
+            Err(e) => {
+                self.alloc_failures += 1;
+                return Err(e);
+            }
+        };
+        let alloc = self.node.gpus[peer].hbm.alloc(size).map_err(|_| {
+            self.alloc_failures += 1;
+            HarvestError::NoCapacity { requested: size }
+        })?;
+        Ok(self.admit(session, peer, alloc, size, hints))
     }
 
-    /// §3.2 `harvest_free`: explicit, ordered deallocation (drains DMA
-    /// first; does NOT fire the revocation callback — the app initiated
-    /// the free).
-    pub fn free(&mut self, id: HandleId) -> Result<(), HarvestError> {
-        let handle = self.live.remove(&id).ok_or(HarvestError::StaleHandle(id))?;
+    /// Vectored allocation under `session`: one policy consultation for
+    /// the aggregate, one peer for the whole batch, all-or-nothing
+    /// (partial arena failure rolls back every element).
+    pub(crate) fn alloc_many_raw(
+        &mut self,
+        session: SessionId,
+        sizes: &[u64],
+        hints: AllocHints,
+    ) -> Result<Vec<HarvestHandle>, HarvestError> {
+        self.sweep_leaked();
+        if sizes.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.alloc_attempts += sizes.len() as u64;
+        let fail = |this: &mut Self, err: HarvestError| {
+            this.alloc_failures += sizes.len() as u64;
+            Err(err)
+        };
+        if sizes.contains(&0) {
+            return fail(self, HarvestError::ZeroSize);
+        }
+        let total: u64 = sizes.iter().sum();
+        let contiguous = *sizes.iter().max().unwrap();
+        let peer = match self.select_peer(total, contiguous, hints) {
+            Ok(p) => p,
+            Err(e) => return fail(self, e),
+        };
+        // The views promise `total` bytes of budget and one
+        // `contiguous`-size segment; fragmentation can still defeat the
+        // batch, so place each element and roll back on the first miss.
+        let mut placed = Vec::with_capacity(sizes.len());
+        for &size in sizes {
+            match self.node.gpus[peer].hbm.alloc(size) {
+                Ok(a) => placed.push((a, size)),
+                Err(_) => {
+                    for (a, _) in placed {
+                        self.node.gpus[peer].hbm.free(a);
+                    }
+                    return fail(self, HarvestError::NoCapacity { requested: total });
+                }
+            }
+        }
+        Ok(placed
+            .into_iter()
+            .map(|(alloc, size)| self.admit(session, peer, alloc, size, hints))
+            .collect())
+    }
+
+    // -- removal ----------------------------------------------------------
+
+    /// Ordered deallocation (drains lease-tagged DMA first; produces no
+    /// revocation event — the owner initiated the free). Prefer
+    /// [`HarvestSession::release`], which consumes the RAII lease; this
+    /// raw form backs it and the deprecated `harvest_free` shim.
+    pub fn free(&mut self, id: LeaseId) -> Result<(), HarvestError> {
+        let entry = self.live.remove(&id).ok_or(HarvestError::StaleLease(id))?;
+        let handle = entry.handle;
         self.account_remove(&handle);
         self.node.dma.drain_tag(&self.node.topo, id.0);
         self.node.gpus[handle.peer].hbm.free(handle.alloc);
@@ -262,28 +521,12 @@ impl HarvestRuntime {
         Ok(())
     }
 
-    /// Populate the peer cache: async copy `handle.size` bytes from `src`
-    /// into the peer allocation.
-    pub fn copy_in(&mut self, id: HandleId, src: DeviceId) -> Result<CopyEvent, HarvestError> {
-        let h = *self.live.get(&id).ok_or(HarvestError::StaleHandle(id))?;
-        let ev = self.node.copy(src, DeviceId::Gpu(h.peer), h.size, Some(id.0));
-        self.monitor.record_transfer(h.peer, ev.end, h.size);
-        Ok(ev)
-    }
-
-    /// Serve a cache hit: async copy the object from its peer to the
-    /// compute GPU. This is the fast path the paper measures.
-    pub fn fetch_to(&mut self, id: HandleId, compute: usize) -> Result<CopyEvent, HarvestError> {
-        let h = *self.live.get(&id).ok_or(HarvestError::StaleHandle(id))?;
-        let ev = self.node.copy(DeviceId::Gpu(h.peer), DeviceId::Gpu(compute), h.size, Some(id.0));
-        self.monitor.record_transfer(h.peer, ev.end, h.size);
-        Ok(ev)
-    }
-
-    /// The revocation pipeline for one handle. Ordering per §3.2:
-    /// drain in-flight DMA → free + invalidate → fire callback.
-    pub fn revoke(&mut self, id: HandleId, reason: RevocationReason) -> Option<Revocation> {
-        let handle = self.live.remove(&id)?;
+    /// The revocation pipeline for one lease. Ordering per §3.2:
+    /// drain in-flight DMA → free + invalidate → make the event
+    /// observable (enqueue; fire the deprecated callback if one exists).
+    pub fn revoke(&mut self, id: LeaseId, reason: RevocationReason) -> Option<Revocation> {
+        let entry = self.live.remove(&id)?;
+        let handle = entry.handle;
         self.account_remove(&handle);
         // 1. Drain: advance virtual time past every op touching the region.
         let drained_at = self.node.dma.drain_tag(&self.node.topo, id.0);
@@ -294,7 +537,24 @@ impl HarvestRuntime {
         }
         let rev = Revocation { handle, reason, at: drained_at };
         self.revocations.push(rev);
-        // 3. Callback (exactly once; the entry is gone from `live`).
+        // 3. Notify. Real sessions get a pull-model event; the legacy
+        //    shim session is excluded — nothing can drain its queue, so
+        //    enqueueing there would leak one event per revocation (shim
+        //    users are notified through `register_cb` below, exactly as
+        //    the paper's API was).
+        if entry.session != LEGACY_SESSION {
+            self.sessions[entry.session.0 as usize].queue.push(RevocationEvent {
+                lease: id,
+                kind: entry.kind,
+                peer: handle.peer,
+                size: handle.size,
+                durability: handle.durability,
+                client: handle.client,
+                reason,
+                at: drained_at,
+            });
+        }
+        // Fire the deprecated push callback exactly once, if any.
         if let Some(mut cb) = self.callbacks.remove(&id) {
             cb(&rev);
         }
@@ -303,20 +563,20 @@ impl HarvestRuntime {
 
     /// Revoke everything on `peer` (e.g. MIG instance reclaimed).
     pub fn revoke_peer(&mut self, peer: usize, reason: RevocationReason) -> Vec<Revocation> {
-        let ids: Vec<HandleId> = self.order[peer].values().copied().collect();
+        let ids: Vec<LeaseId> = self.order[peer].values().copied().collect();
         ids.into_iter().rev().filter_map(|id| self.revoke(id, reason)).collect()
     }
 
-    fn pick_victim(&self, peer: usize) -> Option<HandleId> {
+    fn pick_victim(&self, peer: usize) -> Option<LeaseId> {
         let order = &self.order[peer];
         match self.config.victim_policy {
             VictimPolicy::Lifo => order.last_key_value().map(|(_, &id)| id),
             VictimPolicy::Fifo => order.first_key_value().map(|(_, &id)| id),
             VictimPolicy::LargestFirst => {
-                order.values().max_by_key(|id| self.live[id].size).copied()
+                order.values().max_by_key(|id| self.live[id].handle.size).copied()
             }
             VictimPolicy::SmallestFirst => {
-                order.values().min_by_key(|id| self.live[id].size).copied()
+                order.values().min_by_key(|id| self.live[id].handle.size).copied()
             }
         }
     }
@@ -326,6 +586,7 @@ impl HarvestRuntime {
     /// capacity (or a MIG partition shrank), revoke victims. Returns the
     /// revocations performed.
     pub fn enforce_pressure(&mut self) -> Vec<Revocation> {
+        self.sweep_leaked();
         let now = self.node.clock.now();
         let mut out = Vec::new();
         for peer in 0..self.node.n_gpus() {
@@ -379,17 +640,62 @@ impl HarvestRuntime {
     pub fn peer_views(&mut self) -> Vec<super::monitor::PeerView> {
         self.views_for(None)
     }
+
+    // -- deprecated shim surface ------------------------------------------
+    //
+    // The paper's §3.2 C-style API. Kept thin so the lease migration is
+    // reviewable; new code should open a session instead.
+
+    /// Deprecated: §3.2 `harvest_alloc` returning a raw, manually-freed
+    /// handle. Allocates under the runtime's legacy session.
+    pub fn alloc(&mut self, size: u64, hints: AllocHints) -> Result<HarvestHandle, HarvestError> {
+        self.alloc_raw(LEGACY_SESSION, size, hints)
+    }
+
+    /// Deprecated: §3.2 `harvest_register_cb`. Push callback fired at
+    /// step 3 of the revocation pipeline. Prefer
+    /// [`HarvestSession::drain_revocations`].
+    pub fn register_cb(
+        &mut self,
+        id: LeaseId,
+        cb: impl FnMut(&Revocation) + 'static,
+    ) -> Result<(), HarvestError> {
+        if !self.live.contains_key(&id) {
+            return Err(HarvestError::StaleLease(id));
+        }
+        self.callbacks.insert(id, Box::new(cb));
+        Ok(())
+    }
+
+    /// Deprecated: populate the peer cache (async copy `size` bytes from
+    /// `src` into the allocation). Prefer the
+    /// [`super::session::Transfer`] builder.
+    pub fn copy_in(&mut self, id: LeaseId, src: DeviceId) -> Result<CopyEvent, HarvestError> {
+        let h = self.handle_info(id).ok_or(HarvestError::StaleLease(id))?;
+        let ev = self.node.copy(src, DeviceId::Gpu(h.peer), h.size, Some(id.0));
+        self.monitor.record_transfer(h.peer, ev.end, h.size);
+        Ok(ev)
+    }
+
+    /// Deprecated: serve a cache hit (async peer → compute copy). Prefer
+    /// the [`super::session::Transfer`] builder.
+    pub fn fetch_to(&mut self, id: LeaseId, compute: usize) -> Result<CopyEvent, HarvestError> {
+        let h = self.handle_info(id).ok_or(HarvestError::StaleLease(id))?;
+        let ev = self.node.copy(DeviceId::Gpu(h.peer), DeviceId::Gpu(compute), h.size, Some(id.0));
+        self.monitor.record_transfer(h.peer, ev.end, h.size);
+        Ok(ev)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::harvest::session::Transfer;
     use crate::memsim::tenant::TenantLoad;
     use crate::memsim::NodeSpec;
     use std::cell::RefCell;
     use std::rc::Rc;
 
-    const GIB: u64 = 1 << 30;
     const MIB: u64 = 1 << 20;
 
     fn rt() -> HarvestRuntime {
@@ -435,41 +741,73 @@ mod tests {
     }
 
     #[test]
-    fn explicit_free_releases_and_skips_callback() {
+    fn explicit_free_releases_and_skips_events() {
         let mut h = rt();
-        let handle = h.alloc(MIB, hints(0)).unwrap();
-        let fired = Rc::new(RefCell::new(0));
-        let f2 = fired.clone();
-        h.register_cb(handle.id, move |_| *f2.borrow_mut() += 1).unwrap();
-        h.free(handle.id).unwrap();
-        assert!(!h.is_live(handle.id));
-        assert_eq!(*fired.borrow(), 0, "explicit free must not fire revocation cb");
+        let session = h.open_session(PayloadKind::Generic);
+        let lease = session.alloc(&mut h, MIB, hints(0)).unwrap();
+        let id = lease.id();
+        session.release(&mut h, lease).unwrap();
+        assert!(!h.is_live(id));
+        assert!(session.drain_revocations(&mut h).is_empty(), "free is not a revocation");
         assert_eq!(h.node.gpus[1].hbm.used(), 0);
-        // double free reports stale handle
-        assert!(matches!(h.free(handle.id), Err(HarvestError::StaleHandle(_))));
+        // the raw id is now stale
+        assert!(matches!(h.free(id), Err(HarvestError::StaleLease(_))));
     }
 
     #[test]
-    fn revocation_order_drain_then_invalidate_then_callback() {
+    fn revocation_pipeline_completes_before_event_observable() {
         let mut h = rt();
-        let handle = h.alloc(64 * MIB, hints(0)).unwrap();
+        let session = h.open_session(PayloadKind::Generic);
+        let lease = session.alloc(&mut h, 64 * MIB, hints(0)).unwrap();
+        let id = lease.id();
         // start a long copy touching the region
-        let ev = h.copy_in(handle.id, DeviceId::Host).unwrap();
-        assert!(ev.end > h.node.clock.now(), "copy is in flight");
-        let observed = Rc::new(RefCell::new(None));
-        let obs = observed.clone();
-        h.register_cb(handle.id, move |rev| *obs.borrow_mut() = Some(*rev)).unwrap();
-        let rev = h.revoke(handle.id, RevocationReason::PolicyEviction).unwrap();
-        // drained: revocation time is not before the in-flight copy end
-        assert!(rev.at >= ev.end, "rev.at={} ev.end={}", rev.at, ev.end);
-        // invalidated before callback: handle no longer live inside cb's view
-        assert!(!h.is_live(handle.id));
-        assert_eq!(observed.borrow().unwrap().handle.id, handle.id);
-        assert_eq!(observed.borrow().unwrap().reason, RevocationReason::PolicyEviction);
+        let fill = Transfer::new()
+            .populate(&lease, DeviceId::Host)
+            .submit(&mut h)
+            .unwrap();
+        assert!(fill.end > h.node.clock.now(), "copy is in flight");
+        let rev = h.revoke(id, RevocationReason::PolicyEviction).unwrap();
+        // before draining: the lease is already dead and the bytes freed —
+        // invalidation precedes observability
+        assert!(!h.is_live(id));
+        assert_eq!(h.node.gpus[1].hbm.used(), 0);
+        let events = session.drain_revocations(&mut h);
+        assert_eq!(events.len(), 1);
+        let ev = events[0];
+        assert_eq!(ev.lease, id);
+        assert_eq!(ev.reason, RevocationReason::PolicyEviction);
+        // drained: the event time is not before the in-flight copy end
+        assert!(ev.at >= fill.end, "ev.at={} fill.end={}", ev.at, fill.end);
+        assert_eq!(ev.at, rev.at);
+        // second drain yields nothing: events are delivered exactly once
+        assert!(session.drain_revocations(&mut h).is_empty());
+        drop(lease); // stale RAII owner; sweep ignores it
+        assert_eq!(h.sweep_leaked(), 0);
     }
 
     #[test]
-    fn callback_fires_exactly_once() {
+    fn events_route_to_owning_session() {
+        let mut h = rt();
+        let kv = h.open_session(PayloadKind::KvBlock);
+        let moe = h.open_session(PayloadKind::ExpertWeights);
+        let a = kv.alloc(&mut h, MIB, hints(0)).unwrap();
+        let b = moe.alloc(&mut h, MIB, hints(0)).unwrap();
+        h.revoke_peer(1, RevocationReason::ExternalReclaim);
+        let kv_events = kv.drain_revocations(&mut h);
+        let moe_events = moe.drain_revocations(&mut h);
+        assert_eq!(kv_events.len(), 1);
+        assert_eq!(kv_events[0].lease, a.id());
+        assert_eq!(kv_events[0].kind, PayloadKind::KvBlock);
+        assert_eq!(moe_events.len(), 1);
+        assert_eq!(moe_events[0].lease, b.id());
+        assert_eq!(moe_events[0].kind, PayloadKind::ExpertWeights);
+        drop((a, b));
+        h.sweep_leaked();
+        assert_eq!(h.live_bytes_on(1), 0);
+    }
+
+    #[test]
+    fn legacy_callback_shim_fires_exactly_once() {
         let mut h = rt();
         let handle = h.alloc(MIB, hints(0)).unwrap();
         let fired = Rc::new(RefCell::new(0));
@@ -478,6 +816,18 @@ mod tests {
         assert!(h.revoke(handle.id, RevocationReason::TenantPressure).is_some());
         assert!(h.revoke(handle.id, RevocationReason::TenantPressure).is_none());
         assert_eq!(*fired.borrow(), 1);
+    }
+
+    #[test]
+    fn legacy_free_skips_callback() {
+        let mut h = rt();
+        let handle = h.alloc(MIB, hints(0)).unwrap();
+        let fired = Rc::new(RefCell::new(0));
+        let f2 = fired.clone();
+        h.register_cb(handle.id, move |_| *f2.borrow_mut() += 1).unwrap();
+        h.free(handle.id).unwrap();
+        assert_eq!(*fired.borrow(), 0, "explicit free must not fire revocation cb");
+        assert!(matches!(h.free(handle.id), Err(HarvestError::StaleLease(_))));
     }
 
     #[test]
@@ -614,5 +964,40 @@ mod tests {
         let _b = h.alloc(5 * GIB, hints(0)).unwrap();
         let revs = h.enforce_pressure();
         assert_eq!(revs.len(), 1, "over reserve budget -> revoke LIFO victim");
+    }
+
+    #[test]
+    fn config_from_toml_str_parses_and_rejects() {
+        let cfg = HarvestConfig::from_toml_str(
+            "gpus = 4\nvictim_policy = \"largest\"\nreserve_gib = 2\nmig_cache_gib = 10",
+        )
+        .unwrap();
+        assert_eq!(cfg.mig.len(), 4);
+        assert_eq!(cfg.victim_policy, VictimPolicy::LargestFirst);
+        assert_eq!(cfg.reserve_bytes, 2 * GIB);
+        assert!(cfg.mig.iter().all(|m| m.harvest_limit() == Some(10 * GIB)));
+        // defaults
+        let cfg = HarvestConfig::from_toml_str("").unwrap();
+        assert_eq!(cfg.mig.len(), 2);
+        assert_eq!(cfg.victim_policy, VictimPolicy::Lifo);
+        // rejections
+        assert!(HarvestConfig::from_toml_str("gpus = 1").is_err());
+        assert!(HarvestConfig::from_toml_str("victim_policy = \"mru\"").is_err());
+        assert!(HarvestConfig::from_toml_str("reserve_gb = 2").is_err(), "typo rejected");
+    }
+
+    #[test]
+    fn config_from_toml_drives_runtime() {
+        let cfg =
+            HarvestConfig::from_toml_str("gpus = 2\nvictim_policy = \"fifo\"").unwrap();
+        let mut h = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), cfg);
+        let a = h.alloc(1 * GIB, hints(0)).unwrap();
+        let _b = h.alloc(1 * GIB, hints(0)).unwrap();
+        h.node.set_tenant_load(
+            1,
+            TenantLoad::from_steps(80 * GIB, vec![(0, 0), (10, 79 * GIB)]),
+        );
+        let revs = h.advance_to(20);
+        assert_eq!(revs[0].handle.id, a.id, "FIFO victim first");
     }
 }

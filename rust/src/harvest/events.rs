@@ -1,0 +1,157 @@
+//! Pull-model revocation events (§3.2, redesigned).
+//!
+//! The paper sketches `harvest_register_cb(handle, cb)` — a push
+//! callback fired inside the revocation pipeline. Push callbacks force
+//! every consumer to share mutable state with the runtime
+//! (`Rc<RefCell<…>>` in a single-threaded build, locks in a threaded
+//! one) and make the drain → invalidate → notify ordering invisible to
+//! the application. The redesigned surface is *pull*: each
+//! [`crate::harvest::session::HarvestSession`] owns a
+//! [`RevocationQueue`] inside the runtime; the controller completes the
+//! whole pipeline (drain in-flight DMA, invalidate the placement, free
+//! the arena bytes) **before** enqueueing the event, and the consumer
+//! drains its queue at a tick boundary of its choosing via
+//! `drain_revocations`. By the time an event is observable, the lease it
+//! names is guaranteed dead.
+
+use super::api::{Durability, LeaseId, RevocationReason};
+use crate::memsim::Ns;
+use std::collections::VecDeque;
+
+/// What kind of payload a lease (and therefore its revocation event)
+/// carries. Typed so a consumer that multiplexes payloads can route
+/// events without a side table, and so metrics can attribute revocations
+/// per tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PayloadKind {
+    /// MoE expert weights (host-backed cache entries, §4.3).
+    ExpertWeights,
+    /// Paged KV-cache blocks (lossy cache entries, §5.2).
+    KvBlock,
+    /// Anything else (examples, benches, the deprecated shim surface).
+    #[default]
+    Generic,
+}
+
+impl PayloadKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PayloadKind::ExpertWeights => "expert-weights",
+            PayloadKind::KvBlock => "kv-block",
+            PayloadKind::Generic => "generic",
+        }
+    }
+}
+
+/// One completed revocation as observed by the owning session. Unlike
+/// the legacy [`crate::harvest::api::Revocation`] it does not carry a
+/// live `HarvestHandle` — the placement it describes is already gone —
+/// only the facts a consumer needs to repair its own indexes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RevocationEvent {
+    /// The revoked lease. Guaranteed dead (not live in the runtime) by
+    /// the time the event can be drained.
+    pub lease: LeaseId,
+    /// Payload kind the owning session declared at `open`.
+    pub kind: PayloadKind,
+    /// Peer GPU the bytes lived on.
+    pub peer: usize,
+    /// Size of the revoked allocation.
+    pub size: u64,
+    /// Durability the lease was allocated with — tells the consumer
+    /// which fallback is legal (host copy vs reconstruct).
+    pub durability: Durability,
+    /// Client identity from the allocation hints, if any.
+    pub client: Option<u32>,
+    pub reason: RevocationReason,
+    /// Virtual time at which the free completed (after the DMA drain).
+    pub at: Ns,
+}
+
+/// A session's drainable event queue. FIFO: events are observed in
+/// exactly the order the controller completed them.
+#[derive(Debug, Default)]
+pub struct RevocationQueue {
+    events: VecDeque<RevocationEvent>,
+    /// Total events ever enqueued (drained or not), for metrics.
+    enqueued: u64,
+    /// High-water mark of undrained depth — a consumer that lets this
+    /// grow is draining too rarely.
+    peak_depth: usize,
+}
+
+impl RevocationQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, ev: RevocationEvent) {
+        self.events.push_back(ev);
+        self.enqueued += 1;
+        self.peak_depth = self.peak_depth.max(self.events.len());
+    }
+
+    /// Take every pending event, oldest first.
+    pub fn drain(&mut self) -> Vec<RevocationEvent> {
+        self.events.drain(..).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn total_enqueued(&self) -> u64 {
+        self.enqueued
+    }
+
+    pub fn peak_depth(&self) -> usize {
+        self.peak_depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64, at: Ns) -> RevocationEvent {
+        RevocationEvent {
+            lease: LeaseId(id),
+            kind: PayloadKind::Generic,
+            peer: 1,
+            size: 64,
+            durability: Durability::Lossy,
+            client: None,
+            reason: RevocationReason::TenantPressure,
+            at,
+        }
+    }
+
+    #[test]
+    fn drain_preserves_fifo_order() {
+        let mut q = RevocationQueue::new();
+        q.push(ev(1, 10));
+        q.push(ev(2, 20));
+        q.push(ev(3, 30));
+        let got = q.drain();
+        assert_eq!(got.iter().map(|e| e.lease.0).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert!(q.is_empty());
+        assert_eq!(q.drain(), Vec::new());
+    }
+
+    #[test]
+    fn counters_track_enqueues_and_depth() {
+        let mut q = RevocationQueue::new();
+        q.push(ev(1, 1));
+        q.push(ev(2, 2));
+        assert_eq!(q.len(), 2);
+        q.drain();
+        q.push(ev(3, 3));
+        assert_eq!(q.total_enqueued(), 3);
+        assert_eq!(q.peak_depth(), 2);
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -10,6 +10,9 @@
 //! flag that disables harvesting on the device entirely.
 
 /// Per-GPU partition configuration.
+// serde is not in the offline crate set; the derive activates once a
+// vendored copy is added behind the `serde` feature.
+#[cfg_attr(feature = "serde", derive(serde::Deserialize))]
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MigConfig {
     /// No MIG: harvest may use all tenant-free HBM (the paper treats MIG

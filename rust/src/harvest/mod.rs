@@ -1,7 +1,8 @@
-//! The Harvest runtime — the paper's system contribution (§3).
+//! The Harvest runtime — the paper's system contribution (§3), behind a
+//! lease-based client API.
 //!
 //! Harvest exposes unused HBM on *peer GPUs* as a best-effort, revocable
-//! cache tier through three core operations (§3.2):
+//! cache tier. The paper sketches a C-style surface (§3.2):
 //!
 //! ```text
 //! harvest_alloc(size, hints) -> handle
@@ -9,16 +10,37 @@
 //! harvest_register_cb(handle, cb)
 //! ```
 //!
-//! * [`api`] — handles, hints, durability modes, revocation reasons.
+//! This crate redesigns it around revocable **leases** with pull-model
+//! revocation events:
+//!
+//! ```text
+//! let session = hr.open_session(PayloadKind::KvBlock);
+//! let lease   = session.alloc(&mut hr, size, hints)?;          // RAII
+//! let batch   = session.alloc_many(&mut hr, &sizes, hints)?;   // all-or-nothing
+//! Transfer::new().populate(&lease, src).fetch(&lease, gpu).submit(&mut hr)?;
+//! session.release(&mut hr, lease)?;                            // consumes: no double free
+//! for ev in session.drain_revocations(&mut hr) { /* repair indexes */ }
+//! ```
+//!
+//! * [`session`] — [`session::HarvestSession`] (per-consumer identity +
+//!   private event queue), [`session::Lease`] (RAII: leaked leases are
+//!   swept, double-free does not typecheck), and the
+//!   [`session::Transfer`] builder unifying populate/fetch/raw moves in
+//!   one batched-DMA path with per-lease tagging.
+//! * [`events`] — [`events::PayloadKind`], [`events::RevocationEvent`]
+//!   and the drainable [`events::RevocationQueue`]. The controller
+//!   completes drain-DMA → invalidate → free **before** an event becomes
+//!   observable, so consumers repair their indexes at tick boundaries
+//!   with no shared mutable state.
+//! * [`api`] — ids, hints, durability modes, revocation reasons, errors.
 //! * [`policy`] — pluggable placement policies: best-fit (the paper's
 //!   default) plus the locality / fairness / interference / stability
-//!   variants §3.2 sketches.
+//!   variants §3.2 sketches. Vectored batches consult the policy once.
 //! * [`monitor`] — peer-availability views (free capacity, churn,
 //!   bandwidth demand) that policies consult.
 //! * [`controller`] — the runtime: performs allocations on the selected
-//!   peer, watches tenant pressure, and drives the revocation pipeline
-//!   (drain in-flight DMA → invalidate placement → fire callback) in
-//!   exactly that order.
+//!   peer, watches tenant pressure, drives the revocation pipeline, and
+//!   keeps the paper's raw surface alive as deprecated shims.
 //! * [`mig`] — MIG-style isolation: harvesting confined to a reserved
 //!   capacity partition per peer GPU.
 //!
@@ -29,14 +51,18 @@
 
 pub mod api;
 pub mod controller;
+pub mod events;
 pub mod mig;
 pub mod monitor;
 pub mod policy;
+pub mod session;
 
-pub use api::{AllocHints, Durability, HandleId, HarvestError, HarvestHandle, Revocation,
-              RevocationReason};
+pub use api::{AllocHints, Durability, HandleId, HarvestError, HarvestHandle, LeaseId,
+              Revocation, RevocationReason};
 pub use controller::{HarvestConfig, HarvestRuntime, VictimPolicy};
+pub use events::{PayloadKind, RevocationEvent, RevocationQueue};
 pub use mig::MigConfig;
 pub use monitor::{PeerMonitor, PeerView};
 pub use policy::{BestFit, FirstAvailable, InterferenceAware, LocalityAware, PlacementPolicy,
                  RateLimitFairness, StabilityAware};
+pub use session::{HarvestSession, Lease, SessionId, Transfer, TransferReport};

@@ -10,9 +10,16 @@ use super::api::AllocHints;
 use super::monitor::PeerView;
 use crate::memsim::Topology;
 
-/// Context a policy sees for one allocation request.
+/// Context a policy sees for one allocation request. A vectored
+/// `alloc_many` batch is presented as a single request: `size` is the
+/// aggregate and `contiguous` the largest single element, so the policy
+/// is consulted once per batch rather than once per element.
 pub struct PlacementRequest<'a> {
+    /// Total bytes requested (whole batch for vectored allocations).
     pub size: u64,
+    /// Largest single element — the segment size the arena must be able
+    /// to carve contiguously (== `size` for scalar allocations).
+    pub contiguous: u64,
     pub hints: AllocHints,
     pub views: &'a [PeerView],
     pub topo: &'a Topology,
@@ -20,12 +27,13 @@ pub struct PlacementRequest<'a> {
 
 impl PlacementRequest<'_> {
     /// Peers that can serve the request at all (not the compute GPU,
-    /// have a fitting segment).
+    /// enough budget for the total, a fitting segment for the largest
+    /// element).
     pub fn feasible(&self) -> impl Iterator<Item = &PeerView> + '_ {
         self.views.iter().filter(move |v| {
             Some(v.device) != self.hints.compute_gpu
                 && v.harvestable >= self.size
-                && v.largest_free >= self.size
+                && v.largest_free >= self.contiguous
         })
     }
 }
@@ -49,7 +57,7 @@ impl PlacementPolicy for BestFit {
 
     fn select(&mut self, req: &PlacementRequest<'_>) -> Option<usize> {
         req.feasible()
-            .min_by_key(|v| (v.largest_free - req.size, v.device))
+            .min_by_key(|v| (v.largest_free - req.contiguous, v.device))
             .map(|v| v.device)
     }
 }
@@ -192,7 +200,7 @@ mod tests {
 
     fn req<'a>(size: u64, hints: AllocHints, views: &'a [PeerView], topo: &'a Topology)
         -> PlacementRequest<'a> {
-        PlacementRequest { size, hints, views, topo }
+        PlacementRequest { size, contiguous: size, hints, views, topo }
     }
 
     #[test]
@@ -284,6 +292,21 @@ mod tests {
         let views = vec![a, b];
         let r = req(100, AllocHints::default(), &views, &t);
         assert_eq!(InterferenceAware::default().select(&r), Some(2), "least-hot fallback");
+    }
+
+    #[test]
+    fn vectored_request_uses_total_and_contiguous() {
+        let t = topo(3);
+        // peer1: big budget, 300-byte segments; peer2: small budget, one
+        // 400-byte segment.
+        let views = vec![view(0, 0, 0), view(1, 1000, 300), view(2, 400, 400)];
+        let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+        // batch: total 600, largest element 250 -> peer2 lacks budget
+        let r = PlacementRequest { size: 600, contiguous: 250, hints, views: &views, topo: &t };
+        assert_eq!(BestFit.select(&r), Some(1));
+        // a 350-byte element: nobody has both the budget and the segment
+        let r = PlacementRequest { size: 600, contiguous: 350, hints, views: &views, topo: &t };
+        assert_eq!(BestFit.select(&r), None);
     }
 
     #[test]

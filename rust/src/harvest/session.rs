@@ -1,0 +1,541 @@
+//! Lease-based client surface: sessions, RAII leases, and the unified
+//! transfer builder.
+//!
+//! Consumers open one [`HarvestSession`] per subsystem (the KV offload
+//! manager, the MoE rebalancer, …) and get:
+//!
+//! * [`Lease`] — an RAII handle replacing the bare `HandleId`. The
+//!   payload kind, durability and client identity ride on the lease;
+//!   releasing consumes it (double-free is unrepresentable), and a lease
+//!   dropped without release is reclaimed by the runtime's leak sweep,
+//!   so `bytes_on` accounting can never drift.
+//! * [`HarvestSession::alloc_many`] — vectored, all-or-nothing
+//!   allocation for multi-block admission: one policy consultation for
+//!   the whole batch, full rollback on partial placement failure.
+//! * [`HarvestSession::drain_revocations`] — the pull-model replacement
+//!   for `harvest_register_cb`: the controller finishes the whole
+//!   revocation pipeline (drain DMA → invalidate → free) before the
+//!   event becomes drainable.
+//! * [`Transfer`] — one builder for every data movement (`copy_in` and
+//!   `fetch_to` unified), with per-lease DMA tagging and optional
+//!   scattered-descriptor chunking for paged KV.
+
+use super::api::{AllocHints, HarvestError, HarvestHandle, LeaseId};
+use super::controller::HarvestRuntime;
+use super::events::{PayloadKind, RevocationEvent};
+use crate::memsim::{CopyEvent, DeviceId, Ns};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Identifier of a session within one runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SessionId(pub u32);
+
+/// Shared drop-inbox: leases dropped without an explicit release record
+/// their id here; the runtime sweeps it at allocation / pressure / time
+/// boundaries and frees whatever is still live.
+pub(crate) type ReclaimInbox = Rc<RefCell<Vec<LeaseId>>>;
+
+// ---------------------------------------------------------------------
+// Lease
+// ---------------------------------------------------------------------
+
+/// RAII ownership of one peer-HBM allocation.
+///
+/// A `Lease` is not `Clone`/`Copy`: exactly one owner exists, and the
+/// only ways it ends are
+///
+/// 1. [`HarvestSession::release`] — explicit, ordered free (consumes the
+///    lease, so releasing twice does not typecheck);
+/// 2. revocation by the runtime — the lease object the consumer still
+///    holds goes stale, and the session's event queue says so;
+/// 3. dropping it — the id lands in the reclaim inbox and the runtime
+///    frees the bytes at its next sweep. Leaks are therefore bounded to
+///    one sweep interval, never permanent.
+#[derive(Debug)]
+pub struct Lease {
+    handle: HarvestHandle,
+    kind: PayloadKind,
+    session: SessionId,
+    reclaim: ReclaimInbox,
+    /// True until released/revoked bookkeeping disarms the drop hook.
+    armed: bool,
+}
+
+impl Lease {
+    pub(crate) fn new(
+        handle: HarvestHandle,
+        kind: PayloadKind,
+        session: SessionId,
+        reclaim: ReclaimInbox,
+    ) -> Self {
+        Self { handle, kind, session, reclaim, armed: true }
+    }
+
+    pub fn id(&self) -> LeaseId {
+        self.handle.id
+    }
+
+    pub fn peer(&self) -> usize {
+        self.handle.peer
+    }
+
+    pub fn size(&self) -> u64 {
+        self.handle.size
+    }
+
+    pub fn durability(&self) -> super::api::Durability {
+        self.handle.durability
+    }
+
+    pub fn client(&self) -> Option<u32> {
+        self.handle.client
+    }
+
+    pub fn kind(&self) -> PayloadKind {
+        self.kind
+    }
+
+    pub fn session(&self) -> SessionId {
+        self.session
+    }
+
+    /// The raw placement record (for metrics / interop with the
+    /// deprecated surface).
+    pub fn raw(&self) -> HarvestHandle {
+        self.handle
+    }
+
+    /// Disarm the drop hook and surrender the raw handle. Used by the
+    /// release path and by the deprecated shim (which manages lifetime
+    /// manually, as the paper's C-style API did).
+    pub fn into_raw(mut self) -> HarvestHandle {
+        self.armed = false;
+        self.handle
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        if self.armed {
+            self.reclaim.borrow_mut().push(self.handle.id);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Session
+// ---------------------------------------------------------------------
+
+/// A consumer's identity against one [`HarvestRuntime`]: a payload kind,
+/// an optional client id for fairness accounting, and a private
+/// revocation queue inside the runtime. Copyable — it is just an
+/// address; the runtime owns the queue state.
+#[derive(Debug, Clone, Copy)]
+pub struct HarvestSession {
+    id: SessionId,
+    kind: PayloadKind,
+    client: Option<u32>,
+    /// Identity of the runtime this session was opened against. Session
+    /// and lease ids are runtime-local, so addressing a *different*
+    /// runtime would at best panic on an out-of-range index and at worst
+    /// silently drain another consumer's events — checked loudly instead.
+    runtime: usize,
+}
+
+impl HarvestSession {
+    /// Open a session of `kind` against `hr`.
+    pub fn open(hr: &mut HarvestRuntime, kind: PayloadKind) -> Self {
+        let id = hr.register_session(kind);
+        Self { id, kind, client: None, runtime: hr.runtime_tag() }
+    }
+
+    /// Open with a client identity; it is stamped onto every allocation
+    /// this session makes (unless the hints override it).
+    pub fn open_for_client(hr: &mut HarvestRuntime, kind: PayloadKind, client: u32) -> Self {
+        let id = hr.register_session(kind);
+        Self { id, kind, client: Some(client), runtime: hr.runtime_tag() }
+    }
+
+    pub fn id(&self) -> SessionId {
+        self.id
+    }
+
+    pub fn kind(&self) -> PayloadKind {
+        self.kind
+    }
+
+    fn check_bound(&self, hr: &HarvestRuntime) {
+        assert_eq!(
+            self.runtime,
+            hr.runtime_tag(),
+            "HarvestSession used against a different HarvestRuntime than it was opened on"
+        );
+    }
+
+    fn effective_hints(&self, hints: AllocHints) -> AllocHints {
+        AllocHints { client: hints.client.or(self.client), ..hints }
+    }
+
+    /// §3.2 `harvest_alloc`, lease edition: select a peer under the
+    /// placement policy and return an RAII lease for the allocation.
+    pub fn alloc(
+        &self,
+        hr: &mut HarvestRuntime,
+        size: u64,
+        hints: AllocHints,
+    ) -> Result<Lease, HarvestError> {
+        self.check_bound(hr);
+        let handle = hr.alloc_raw(self.id, size, self.effective_hints(hints))?;
+        Ok(Lease::new(handle, self.kind, self.id, hr.reclaim_inbox()))
+    }
+
+    /// Vectored allocation with all-or-nothing semantics: the placement
+    /// policy is consulted once for the aggregate request, every element
+    /// lands on the same peer, and a partial placement failure rolls the
+    /// whole batch back (no bytes remain allocated, no leases escape).
+    pub fn alloc_many(
+        &self,
+        hr: &mut HarvestRuntime,
+        sizes: &[u64],
+        hints: AllocHints,
+    ) -> Result<Vec<Lease>, HarvestError> {
+        self.check_bound(hr);
+        let handles = hr.alloc_many_raw(self.id, sizes, self.effective_hints(hints))?;
+        let inbox = hr.reclaim_inbox();
+        Ok(handles
+            .into_iter()
+            .map(|h| Lease::new(h, self.kind, self.id, Rc::clone(&inbox)))
+            .collect())
+    }
+
+    /// §3.2 `harvest_free`, lease edition: ordered, explicit
+    /// deallocation (drains DMA tagged with the lease first). Consumes
+    /// the lease — double release does not typecheck. No revocation
+    /// event is produced: the application initiated the free.
+    pub fn release(&self, hr: &mut HarvestRuntime, lease: Lease) -> Result<(), HarvestError> {
+        self.check_bound(hr);
+        let handle = lease.into_raw();
+        hr.free(handle.id)
+    }
+
+    /// Drain this session's pending revocation events, oldest first.
+    /// Consumers call this at tick boundaries (decode-pass start, KV
+    /// manager entry points); every event refers to a lease the runtime
+    /// has already drained, invalidated and freed — in that order.
+    pub fn drain_revocations(&self, hr: &mut HarvestRuntime) -> Vec<RevocationEvent> {
+        self.check_bound(hr);
+        hr.drain_session(self.id)
+    }
+
+    /// Pending (undrained) event count, without draining.
+    pub fn pending_revocations(&self, hr: &HarvestRuntime) -> usize {
+        self.check_bound(hr);
+        hr.session_queue_len(self.id)
+    }
+
+    /// Start a transfer batch (sugar for [`Transfer::new`]).
+    pub fn transfer(&self) -> Transfer {
+        Transfer::new()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Transfer builder
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+enum TransferOp {
+    /// Populate the peer cache: `src` → the lease's peer allocation.
+    Populate { lease: LeaseId, src: DeviceId },
+    /// Serve a hit: the lease's peer allocation → the compute GPU.
+    Fetch { lease: LeaseId, compute: usize },
+    /// An untagged raw move (host spill path, durable host copies).
+    Raw { src: DeviceId, dst: DeviceId, bytes: u64 },
+}
+
+/// Report of one submitted transfer batch.
+#[derive(Debug, Clone, Default)]
+pub struct TransferReport {
+    /// One entry per op, in submission order.
+    pub events: Vec<CopyEvent>,
+    /// Total bytes moved.
+    pub bytes: u64,
+    /// Completion time of the batch (max op end; current virtual time if
+    /// the batch was empty).
+    pub end: Ns,
+}
+
+impl TransferReport {
+    /// Completion of the last submitted op (panics on empty batches).
+    pub fn last(&self) -> &CopyEvent {
+        self.events.last().expect("non-empty transfer batch")
+    }
+}
+
+/// Batched-DMA builder unifying the old `copy_in` / `fetch_to` pair.
+///
+/// Ops accumulate, then [`Transfer::submit`] schedules them in order on
+/// the simulated DMA engine. Lease-addressed ops are tagged with the
+/// lease id, so the revocation pipeline's drain-by-tag covers them; raw
+/// ops are untagged. `chunked(n)` batches every op into scattered
+/// descriptors of at most `n` bytes (paged-KV reload granularity).
+#[derive(Debug, Default)]
+pub struct Transfer {
+    ops: Vec<TransferOp>,
+    chunk_bytes: Option<u64>,
+}
+
+impl Transfer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Split every op into scattered DMA descriptors of at most
+    /// `descriptor_bytes` (e.g. [`crate::kv::manager::RELOAD_CHUNK_BYTES`]).
+    pub fn chunked(mut self, descriptor_bytes: u64) -> Self {
+        assert!(descriptor_bytes > 0, "descriptor size must be positive");
+        self.chunk_bytes = Some(descriptor_bytes);
+        self
+    }
+
+    /// Queue a populate: copy `lease.size()` bytes from `src` into the
+    /// lease's peer allocation (the old `copy_in`).
+    pub fn populate(mut self, lease: &Lease, src: DeviceId) -> Self {
+        self.ops.push(TransferOp::Populate { lease: lease.id(), src });
+        self
+    }
+
+    /// Queue a fetch: copy the lease's bytes from its peer to
+    /// `compute_gpu` (the old `fetch_to` — the fast path the paper
+    /// measures).
+    pub fn fetch(mut self, lease: &Lease, compute_gpu: usize) -> Self {
+        self.ops.push(TransferOp::Fetch { lease: lease.id(), compute: compute_gpu });
+        self
+    }
+
+    /// Queue an untagged raw move between arbitrary devices (host
+    /// spills, durable host copies).
+    pub fn raw(mut self, src: DeviceId, dst: DeviceId, bytes: u64) -> Self {
+        self.ops.push(TransferOp::Raw { src, dst, bytes });
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Schedule every queued op, in order. Fails with
+    /// [`HarvestError::StaleLease`] (scheduling nothing at all) if any
+    /// lease-addressed op names a lease that is no longer live — check
+    /// ordering is all-or-nothing so a half-submitted batch cannot
+    /// occur.
+    pub fn submit(self, hr: &mut HarvestRuntime) -> Result<TransferReport, HarvestError> {
+        // Validate every lease op before scheduling anything.
+        let mut resolved: Vec<(DeviceId, DeviceId, u64, Option<u64>, Option<usize>)> =
+            Vec::with_capacity(self.ops.len());
+        for op in &self.ops {
+            match *op {
+                TransferOp::Populate { lease, src } => {
+                    let h = hr.handle_info(lease).ok_or(HarvestError::StaleLease(lease))?;
+                    resolved.push((src, DeviceId::Gpu(h.peer), h.size, Some(lease.0), Some(h.peer)));
+                }
+                TransferOp::Fetch { lease, compute } => {
+                    let h = hr.handle_info(lease).ok_or(HarvestError::StaleLease(lease))?;
+                    resolved.push((
+                        DeviceId::Gpu(h.peer),
+                        DeviceId::Gpu(compute),
+                        h.size,
+                        Some(lease.0),
+                        Some(h.peer),
+                    ));
+                }
+                TransferOp::Raw { src, dst, bytes } => {
+                    resolved.push((src, dst, bytes, None, None));
+                }
+            }
+        }
+        let mut report =
+            TransferReport { events: Vec::with_capacity(resolved.len()), bytes: 0, end: 0 };
+        for (src, dst, bytes, tag, peer) in resolved {
+            let ev = match self.chunk_bytes {
+                Some(chunk) if bytes > chunk => {
+                    let n_chunks = bytes.div_ceil(chunk);
+                    hr.node.copy_scattered(src, dst, bytes, n_chunks, tag)
+                }
+                _ => hr.node.copy(src, dst, bytes, tag),
+            };
+            if let Some(p) = peer {
+                hr.record_peer_transfer(p, ev.end, bytes);
+            }
+            report.bytes += bytes;
+            report.end = report.end.max(ev.end);
+            report.events.push(ev);
+        }
+        if report.events.is_empty() {
+            report.end = hr.node.clock.now();
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harvest::api::Durability;
+    use crate::harvest::controller::HarvestConfig;
+    use crate::memsim::{NodeSpec, SimNode};
+
+    const MIB: u64 = 1 << 20;
+    const GIB: u64 = 1 << 30;
+
+    fn rt() -> HarvestRuntime {
+        HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2))
+    }
+
+    fn hints() -> AllocHints {
+        AllocHints { compute_gpu: Some(0), ..Default::default() }
+    }
+
+    #[test]
+    fn lease_carries_typed_metadata() {
+        let mut hr = rt();
+        let s = HarvestSession::open_for_client(&mut hr, PayloadKind::KvBlock, 7);
+        let lease = s
+            .alloc(&mut hr, 2 * MIB, AllocHints { durability: Durability::Lossy, ..hints() })
+            .unwrap();
+        assert_eq!(lease.kind(), PayloadKind::KvBlock);
+        assert_eq!(lease.durability(), Durability::Lossy);
+        assert_eq!(lease.client(), Some(7), "session client stamped onto the lease");
+        assert_eq!(lease.peer(), 1);
+        assert_eq!(lease.size(), 2 * MIB);
+        s.release(&mut hr, lease).unwrap();
+        assert_eq!(hr.live_bytes_on(1), 0);
+    }
+
+    #[test]
+    fn dropped_lease_is_reclaimed_by_sweep() {
+        let mut hr = rt();
+        let s = HarvestSession::open(&mut hr, PayloadKind::Generic);
+        let lease = s.alloc(&mut hr, 4 * MIB, hints()).unwrap();
+        let id = lease.id();
+        drop(lease); // leaked, not released
+        assert!(hr.is_live(id), "not yet swept");
+        assert_eq!(hr.sweep_leaked(), 1);
+        assert!(!hr.is_live(id));
+        assert_eq!(hr.live_bytes_on(1), 0);
+        assert_eq!(hr.node.gpus[1].hbm.used(), 0);
+        // no revocation event: the app dropped it, nothing to repair
+        assert!(s.drain_revocations(&mut hr).is_empty());
+    }
+
+    #[test]
+    fn release_consumes_and_revoked_lease_is_stale() {
+        let mut hr = rt();
+        let s = HarvestSession::open(&mut hr, PayloadKind::Generic);
+        let lease = s.alloc(&mut hr, MIB, hints()).unwrap();
+        let id = lease.id();
+        s.release(&mut hr, lease).unwrap();
+        // `lease` is moved — releasing again does not compile. The raw id
+        // is stale:
+        assert_eq!(hr.free(id), Err(HarvestError::StaleLease(id)));
+        // a revoked lease's transfers fail closed
+        let lease2 = s.alloc(&mut hr, MIB, hints()).unwrap();
+        hr.revoke(lease2.id(), crate::harvest::api::RevocationReason::PolicyEviction);
+        let err = Transfer::new().fetch(&lease2, 0).submit(&mut hr).unwrap_err();
+        assert_eq!(err, HarvestError::StaleLease(lease2.id()));
+    }
+
+    #[test]
+    fn alloc_many_is_all_or_nothing() {
+        let mut hr = rt();
+        // cap the only peer at 3 GiB
+        hr.config.mig[1] = crate::harvest::MigConfig::CachePartition { bytes: 3 * GIB };
+        let s = HarvestSession::open(&mut hr, PayloadKind::KvBlock);
+        // 2 GiB fits...
+        let got = s.alloc_many(&mut hr, &[GIB, GIB], hints()).unwrap();
+        assert_eq!(got.len(), 2);
+        assert!(got.iter().all(|l| l.peer() == 1), "one peer for the whole batch");
+        assert_eq!(hr.live_bytes_on(1), 2 * GIB);
+        for l in got {
+            s.release(&mut hr, l).unwrap();
+        }
+        // ...4 GiB does not: nothing must stick
+        let before_fail = hr.alloc_failures;
+        let err = s.alloc_many(&mut hr, &[GIB, GIB, GIB, GIB], hints()).unwrap_err();
+        assert!(matches!(err, HarvestError::NoCapacity { requested } if requested == 4 * GIB));
+        assert_eq!(hr.live_bytes_on(1), 0, "rollback left no bytes");
+        assert_eq!(hr.node.gpus[1].hbm.used(), 0);
+        assert!(hr.alloc_failures > before_fail);
+    }
+
+    #[test]
+    fn alloc_many_rejects_zero_and_accepts_empty() {
+        let mut hr = rt();
+        let s = HarvestSession::open(&mut hr, PayloadKind::Generic);
+        assert!(s.alloc_many(&mut hr, &[], hints()).unwrap().is_empty());
+        assert_eq!(s.alloc_many(&mut hr, &[MIB, 0], hints()).unwrap_err(), HarvestError::ZeroSize);
+        assert_eq!(hr.live_bytes_on(1), 0);
+    }
+
+    #[test]
+    fn transfer_builder_orders_and_tags() {
+        let mut hr = rt();
+        let s = HarvestSession::open(&mut hr, PayloadKind::ExpertWeights);
+        let a = s.alloc(&mut hr, 32 * MIB, hints()).unwrap();
+        let b = s.alloc(&mut hr, 32 * MIB, hints()).unwrap();
+        let report = Transfer::new()
+            .populate(&a, DeviceId::Host)
+            .populate(&b, DeviceId::Host)
+            .fetch(&a, 0)
+            .submit(&mut hr)
+            .unwrap();
+        assert_eq!(report.events.len(), 3);
+        assert_eq!(report.bytes, 96 * MIB);
+        assert_eq!(report.events[2].src, DeviceId::Gpu(1));
+        assert_eq!(report.events[2].dst, DeviceId::Gpu(0));
+        assert!(report.end >= report.events[2].end);
+        // per-lease tagging: draining lease a's tag waits for its ops
+        let drained = hr.node.dma.drain_tag(&hr.node.topo, a.id().0);
+        assert!(drained >= report.events[2].end);
+        s.release(&mut hr, a).unwrap();
+        s.release(&mut hr, b).unwrap();
+    }
+
+    #[test]
+    fn chunked_transfer_uses_scattered_descriptors() {
+        let mut hr = rt();
+        let s = HarvestSession::open(&mut hr, PayloadKind::KvBlock);
+        let l = s.alloc(&mut hr, 16 * MIB, hints()).unwrap();
+        let whole =
+            Transfer::new().populate(&l, DeviceId::Host).submit(&mut hr).unwrap();
+        let l2 = s.alloc(&mut hr, 16 * MIB, hints()).unwrap();
+        let chunked = Transfer::new()
+            .chunked(4 * MIB)
+            .populate(&l2, DeviceId::Host)
+            .submit(&mut hr)
+            .unwrap();
+        // scattered descriptors pay per-chunk latency: strictly slower
+        assert!(
+            chunked.events[0].duration() > whole.events[0].duration(),
+            "chunked {} <= contiguous {}",
+            chunked.events[0].duration(),
+            whole.events[0].duration()
+        );
+        s.release(&mut hr, l).unwrap();
+        s.release(&mut hr, l2).unwrap();
+    }
+
+    #[test]
+    fn empty_transfer_is_a_noop() {
+        let mut hr = rt();
+        let report = Transfer::new().submit(&mut hr).unwrap();
+        assert!(report.events.is_empty());
+        assert_eq!(report.bytes, 0);
+        assert_eq!(report.end, hr.node.clock.now());
+    }
+}

@@ -3,7 +3,7 @@
 //! lossy-revoked blocks awaiting recomputation.
 
 use super::block::{BlockId, KvBlockMeta, SeqId};
-use crate::harvest::api::HandleId;
+use crate::harvest::api::LeaseId;
 use crate::memsim::Ns;
 use std::collections::BTreeMap;
 
@@ -14,7 +14,7 @@ pub enum BlockResidency {
     Local,
     /// Cached in peer HBM under a live harvest handle (lossy: no other
     /// copy exists unless it was host-materialised first).
-    Peer { handle: HandleId, peer: usize },
+    Peer { handle: LeaseId, peer: usize },
     /// Authoritative copy in host DRAM (vanilla-vLLM offload target).
     Host,
     /// Lost (peer revocation of a lossy block); must be recomputed.
@@ -27,7 +27,7 @@ pub enum BlockResidency {
 pub struct UnifiedBlockTable {
     entries: BTreeMap<BlockId, (KvBlockMeta, BlockResidency)>,
     by_seq: BTreeMap<SeqId, Vec<BlockId>>,
-    by_handle: BTreeMap<HandleId, BlockId>,
+    by_handle: BTreeMap<LeaseId, BlockId>,
     next_id: u64,
 }
 
@@ -72,7 +72,7 @@ impl UnifiedBlockTable {
 
     /// Revocation path: the peer copy under `handle` is gone. Lossy KV
     /// semantics → the block becomes `Dropped`. Returns the block.
-    pub fn drop_by_handle(&mut self, handle: HandleId) -> Option<BlockId> {
+    pub fn drop_by_handle(&mut self, handle: LeaseId) -> Option<BlockId> {
         let id = self.by_handle.remove(&handle)?;
         self.entries.get_mut(&id)?.1 = BlockResidency::Dropped;
         Some(id)
@@ -183,7 +183,7 @@ mod tests {
         let mut t = UnifiedBlockTable::new();
         let s = SeqId(1);
         let a = t.new_block(s, 0);
-        let h = HandleId(5);
+        let h = LeaseId(5);
         t.set_residency(a, BlockResidency::Peer { handle: h, peer: 1 });
         t.check_invariants().unwrap();
         t.set_residency(a, BlockResidency::Local);
@@ -196,7 +196,7 @@ mod tests {
     fn drop_by_handle_marks_dropped() {
         let mut t = UnifiedBlockTable::new();
         let a = t.new_block(SeqId(1), 0);
-        let h = HandleId(9);
+        let h = LeaseId(9);
         t.set_residency(a, BlockResidency::Peer { handle: h, peer: 1 });
         assert_eq!(t.drop_by_handle(h), Some(a));
         assert_eq!(t.residency(a), Some(BlockResidency::Dropped));
@@ -209,7 +209,7 @@ mod tests {
         let s = SeqId(2);
         let a = t.new_block(s, 0);
         let b = t.new_block(s, 0);
-        let h = HandleId(1);
+        let h = LeaseId(1);
         t.set_residency(b, BlockResidency::Peer { handle: h, peer: 1 });
         let removed = t.remove_seq(s);
         assert_eq!(removed.len(), 2);

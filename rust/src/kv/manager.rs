@@ -8,25 +8,31 @@
 //!
 //! Flow:
 //! * Decode appends tokens; full local pool ⇒ the eviction policy picks
-//!   a victim and the handler migrates it out — to peer HBM via
-//!   `harvest_alloc` when available (Harvest mode), else to host DRAM
-//!   (vanilla-vLLM mode).
+//!   victims and the handler migrates them out — to peer HBM via a
+//!   vectored `alloc_many` lease when available (Harvest mode), else to
+//!   host DRAM (vanilla-vLLM mode). Multi-block admission is
+//!   all-or-nothing: one policy consultation per batch, and a partial
+//!   placement failure rolls back to the host path for the whole batch.
 //! * Decode touching a non-local block issues a reload through the
 //!   handler: peer → NVLink, host → PCIe, `Dropped` → recompute (or
 //!   whichever is cheaper per [`RecomputeModel`]).
-//! * Peer revocation drops lossy blocks via the unified table
-//!   (`drop_by_handle`), exactly the §5.2 callback semantics.
+//! * Peer revocations arrive as pull-model events: every public entry
+//!   point first drains the manager's session queue ([`KvOffloadManager::sync`])
+//!   and drops lossy blocks via the unified table — the §5.2 callback
+//!   semantics without any shared mutable state (the pre-lease design
+//!   needed reference-counted interior mutability so push callbacks
+//!   could reach the table from inside the runtime).
 
 use super::block::{BlockId, SeqId};
 use super::block_table::{BlockResidency, UnifiedBlockTable};
 use super::eviction::{EvictionPolicy, Lru};
 use super::recompute::RecomputeModel;
-use crate::harvest::api::{AllocHints, Durability};
-use crate::harvest::HarvestRuntime;
+use crate::harvest::api::{AllocHints, Durability, LeaseId};
+use crate::harvest::session::{HarvestSession, Lease, Transfer};
+use crate::harvest::{HarvestRuntime, PayloadKind};
 use crate::memsim::{DeviceId, Ns};
 use crate::moe::config::KvModel;
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::collections::BTreeMap;
 
 /// DMA descriptor granularity for KV reloads: blocks are batched into
 /// chunks of this size (scattered block copies cannot use one huge
@@ -91,36 +97,46 @@ impl KvStats {
 
 /// Executes data movement for one device pair (§5.2). Thin by design:
 /// policy lives in the manager; the handler only knows how to move KV
-/// bytes (batched into [`RELOAD_CHUNK_BYTES`] descriptors).
+/// bytes (batched into [`RELOAD_CHUNK_BYTES`] descriptors through the
+/// unified [`Transfer`] builder).
 #[derive(Debug, Clone, Copy)]
 pub struct OffloadingHandler {
     pub compute_gpu: usize,
 }
 
 impl OffloadingHandler {
-    /// Transfer `bytes` of KV between tiers; returns (start, end).
+    /// Transfer `bytes` of KV between tiers; returns the copy event.
     pub fn transfer(
         &self,
         hr: &mut HarvestRuntime,
         src: DeviceId,
         dst: DeviceId,
         bytes: u64,
-        tag: Option<u64>,
     ) -> crate::memsim::CopyEvent {
-        let n_chunks = bytes.div_ceil(RELOAD_CHUNK_BYTES).max(1);
-        hr.node.copy_scattered(src, dst, bytes, n_chunks, tag)
+        let report = Transfer::new()
+            .chunked(RELOAD_CHUNK_BYTES)
+            .raw(src, dst, bytes)
+            .submit(hr)
+            .expect("raw transfers cannot go stale");
+        report.events[0]
     }
 }
 
-/// The manager.
+/// The manager. Owns its block table and eviction policy directly — the
+/// pull-model event API needs no shared state with the runtime.
 pub struct KvOffloadManager {
     pub cfg: KvConfig,
-    table: Rc<RefCell<UnifiedBlockTable>>,
+    table: UnifiedBlockTable,
     policy: Box<dyn EvictionPolicy>,
     handler: OffloadingHandler,
     recompute: RecomputeModel,
+    /// Session opened lazily on first runtime interaction (the manager
+    /// is constructed before it ever sees the runtime).
+    session: Option<HarvestSession>,
+    /// Live peer leases, keyed by id; the table's `Peer` entries mirror
+    /// this map exactly.
+    leases: BTreeMap<LeaseId, Lease>,
     pub stats: KvStats,
-    drops_observed: Rc<RefCell<u64>>,
 }
 
 impl KvOffloadManager {
@@ -135,54 +151,80 @@ impl KvOffloadManager {
     ) -> Self {
         Self {
             cfg,
-            table: Rc::new(RefCell::new(UnifiedBlockTable::new())),
+            table: UnifiedBlockTable::new(),
             policy,
             handler: OffloadingHandler { compute_gpu },
             recompute: RecomputeModel::new(cfg.model.active_params_b),
+            session: None,
+            leases: BTreeMap::new(),
             stats: KvStats::default(),
-            drops_observed: Rc::new(RefCell::new(0)),
         }
     }
 
-    pub fn table(&self) -> std::cell::Ref<'_, UnifiedBlockTable> {
-        self.table.borrow()
+    pub fn table(&self) -> &UnifiedBlockTable {
+        &self.table
     }
 
     pub fn local_blocks(&self) -> usize {
         self.policy.len()
     }
 
+    fn session(&mut self, hr: &mut HarvestRuntime) -> HarvestSession {
+        *self
+            .session
+            .get_or_insert_with(|| HarvestSession::open(hr, PayloadKind::KvBlock))
+    }
+
+    /// Drain pending revocation events and repair the block table: the
+    /// tick-boundary pull that replaces the old push callbacks. Every
+    /// public entry point calls this first, so the manager's view is
+    /// current before it makes placement decisions; tests and engines
+    /// may also call it directly after advancing virtual time.
+    pub fn sync(&mut self, hr: &mut HarvestRuntime) {
+        let Some(session) = self.session else { return };
+        for ev in session.drain_revocations(hr) {
+            // The runtime already drained DMA, invalidated the placement
+            // and freed the bytes; we only repair our own indexes.
+            self.leases.remove(&ev.lease);
+            self.stats.revocation_drops += 1;
+            if ev.durability == Durability::HostBacked {
+                // A host copy exists: fall back to it.
+                if let Some(b) = self.table.drop_by_handle(ev.lease) {
+                    self.table.set_residency(b, BlockResidency::Host);
+                }
+            } else {
+                self.table.drop_by_handle(ev.lease);
+            }
+        }
+    }
+
     /// Append one token to `seq`, paging in a new block when the last one
     /// fills. May evict under pressure. Returns the block written.
     pub fn append_token(&mut self, hr: &mut HarvestRuntime, seq: SeqId) -> BlockId {
+        self.sync(hr);
         self.stats.appends += 1;
         let now = hr.node.clock.now();
-        let last = {
-            let t = self.table.borrow();
-            t.seq_blocks(seq).last().copied().and_then(|id| {
-                let m = t.meta(id)?;
-                (m.tokens < self.cfg.block_tokens).then_some(id)
-            })
-        };
+        let last = self.table.seq_blocks(seq).last().copied().and_then(|id| {
+            let m = self.table.meta(id)?;
+            (m.tokens < self.cfg.block_tokens).then_some(id)
+        });
         let id = match last {
             // The tail block must be local to be appended to.
-            Some(id) if self.table.borrow().residency(id) == Some(BlockResidency::Local) => id,
+            Some(id) if self.table.residency(id) == Some(BlockResidency::Local) => id,
             Some(id) => {
                 self.ensure_local(hr, id);
                 id
             }
             None => {
                 self.make_room(hr, 1);
-                let id = self.table.borrow_mut().new_block(seq, now);
+                let id = self.table.new_block(seq, now);
                 self.policy.insert(id, now);
                 id
             }
         };
-        let mut t = self.table.borrow_mut();
-        let m = t.meta_mut(id).expect("live block");
+        let m = self.table.meta_mut(id).expect("live block");
         m.tokens += 1;
         m.touch(now);
-        drop(t);
         self.policy.touch(id, now);
         id
     }
@@ -191,7 +233,8 @@ impl KvOffloadManager {
     /// Returns when the sequence is fully resident (virtual time may
     /// advance past reload DMA and recompute).
     pub fn access_seq(&mut self, hr: &mut HarvestRuntime, seq: SeqId) -> Ns {
-        let ids: Vec<BlockId> = self.table.borrow().seq_blocks(seq).to_vec();
+        self.sync(hr);
+        let ids: Vec<BlockId> = self.table.seq_blocks(seq).to_vec();
         let mut ready = hr.node.clock.now();
         for id in ids {
             ready = ready.max(self.access_block(hr, id));
@@ -202,8 +245,9 @@ impl KvOffloadManager {
 
     /// Touch one block; reload/recompute if non-local. Returns readiness.
     pub fn access_block(&mut self, hr: &mut HarvestRuntime, id: BlockId) -> Ns {
+        self.sync(hr);
         let now = hr.node.clock.now();
-        let res = self.table.borrow().residency(id).expect("live block");
+        let res = self.table.residency(id).expect("live block");
         let ready = match res {
             BlockResidency::Local => {
                 self.stats.local_hits += 1;
@@ -212,7 +256,7 @@ impl KvOffloadManager {
             _ => self.ensure_local(hr, id),
         };
         self.policy.touch(id, hr.node.clock.now());
-        if let Some(m) = self.table.borrow_mut().meta_mut(id) {
+        if let Some(m) = self.table.meta_mut(id) {
             m.touch(hr.node.clock.now());
         }
         ready
@@ -222,24 +266,26 @@ impl KvOffloadManager {
     /// to make room first. Returns the readiness time.
     fn ensure_local(&mut self, hr: &mut HarvestRuntime, id: BlockId) -> Ns {
         self.make_room(hr, 1);
-        let res = self.table.borrow().residency(id).expect("live block");
+        let res = self.table.residency(id).expect("live block");
         let bytes = self.cfg.block_bytes();
         let ready = match res {
             BlockResidency::Local => hr.node.clock.now(),
-            BlockResidency::Peer { handle, peer } => {
-                let ev = self.handler.transfer(
-                    hr,
-                    DeviceId::Gpu(peer),
-                    DeviceId::Gpu(self.handler.compute_gpu),
-                    bytes,
-                    Some(handle.0),
-                );
-                // The peer copy is consumed: free the harvest allocation.
-                let _ = hr.free(handle);
+            BlockResidency::Peer { handle, .. } => {
+                // Post-sync, every Peer entry is backed by a live lease.
+                let lease = self.leases.remove(&handle).expect("peer block has live lease");
+                let session = self.session.expect("lease implies session");
+                let report = Transfer::new()
+                    .chunked(RELOAD_CHUNK_BYTES)
+                    .fetch(&lease, self.handler.compute_gpu)
+                    .submit(hr)
+                    .expect("live lease");
+                // The peer copy is consumed: release the lease (ordered
+                // free; drains the fetch we just tagged).
+                session.release(hr, lease).expect("live lease");
                 self.stats.peer_reloads += 1;
                 self.stats.bytes_from_peer += bytes;
-                self.stats.reload_ns += ev.duration();
-                ev.end
+                self.stats.reload_ns += report.events[0].duration();
+                report.end
             }
             BlockResidency::Host => {
                 let ev = self.handler.transfer(
@@ -247,7 +293,6 @@ impl KvOffloadManager {
                     DeviceId::Host,
                     DeviceId::Gpu(self.handler.compute_gpu),
                     bytes,
-                    None,
                 );
                 self.stats.host_reloads += 1;
                 self.stats.bytes_from_host += bytes;
@@ -256,33 +301,58 @@ impl KvOffloadManager {
             }
             BlockResidency::Dropped => {
                 // Recompute the block's tokens (prefill replay).
-                let tokens = self.table.borrow().meta(id).map(|m| m.tokens).unwrap_or(0);
+                let tokens = self.table.meta(id).map(|m| m.tokens).unwrap_or(0);
                 let dur = self.recompute.recompute_ns(tokens as u64);
                 self.stats.recomputes += 1;
                 self.stats.recompute_ns += dur;
                 hr.node.clock.now() + dur
             }
         };
-        self.table.borrow_mut().set_residency(id, BlockResidency::Local);
+        self.table.set_residency(id, BlockResidency::Local);
         self.policy.insert(id, hr.node.clock.now());
         ready
     }
 
-    /// Evict until `headroom` local slots are free.
+    /// Evict until `headroom` local slots are free. Victims are gathered
+    /// first and offloaded as one batch, so multi-block pressure costs
+    /// one vectored admission instead of N scalar ones.
     fn make_room(&mut self, hr: &mut HarvestRuntime, headroom: usize) {
+        let mut victims = Vec::new();
         while self.policy.len() + headroom > self.cfg.local_capacity_blocks {
             let Some(victim) = self.policy.victim() else { break };
-            self.evict_block(hr, victim);
+            self.policy.remove(victim);
+            victims.push(victim);
         }
+        self.offload_batch(hr, victims);
+    }
+
+    /// Pre-admission hook: guarantee `blocks` free local slots (e.g.
+    /// before prefilling a prompt), evicting one vectored batch if the
+    /// pool is short. Clamped to the pool size.
+    pub fn reserve_local(&mut self, hr: &mut HarvestRuntime, blocks: usize) {
+        self.sync(hr);
+        self.make_room(hr, blocks.min(self.cfg.local_capacity_blocks));
     }
 
     /// Migrate one local block out (§5.2 "workers similarly request block
     /// evictions, allowing handlers to migrate blocks out of local HBM").
     pub fn evict_block(&mut self, hr: &mut HarvestRuntime, id: BlockId) {
-        debug_assert_eq!(self.table.borrow().residency(id), Some(BlockResidency::Local));
-        let bytes = self.cfg.block_bytes();
+        self.sync(hr);
+        debug_assert_eq!(self.table.residency(id), Some(BlockResidency::Local));
         self.policy.remove(id);
+        self.offload_batch(hr, vec![id]);
+    }
+
+    /// Move `victims` (already detached from the eviction policy) out of
+    /// local HBM: all-or-nothing into peer leases when Harvest is on and
+    /// the batch fits, host DRAM otherwise.
+    fn offload_batch(&mut self, hr: &mut HarvestRuntime, victims: Vec<BlockId>) {
+        if victims.is_empty() {
+            return;
+        }
+        let bytes = self.cfg.block_bytes();
         if self.cfg.use_harvest {
+            let session = self.session(hr);
             let hints = AllocHints {
                 compute_gpu: Some(self.handler.compute_gpu),
                 durability: if self.cfg.host_backed_peer {
@@ -292,81 +362,79 @@ impl KvOffloadManager {
                 },
                 ..Default::default()
             };
-            if let Ok(handle) = hr.alloc(bytes, hints) {
-                // Move local -> peer.
-                self.handler.transfer(
-                    hr,
-                    DeviceId::Gpu(self.handler.compute_gpu),
-                    DeviceId::Gpu(handle.peer),
-                    bytes,
-                    Some(handle.id.0),
-                );
-                if self.cfg.host_backed_peer {
-                    // Durable mode: also materialise the host copy now.
-                    self.handler.transfer(
-                        hr,
-                        DeviceId::Gpu(self.handler.compute_gpu),
-                        DeviceId::Host,
-                        bytes,
-                        None,
-                    );
-                }
-                let table = Rc::clone(&self.table);
-                let drops = Rc::clone(&self.drops_observed);
-                let host_backed = self.cfg.host_backed_peer;
-                hr.register_cb(handle.id, move |rev| {
-                    let mut t = table.borrow_mut();
-                    if host_backed {
-                        // A host copy exists: fall back to it.
-                        if let Some(b) = t.drop_by_handle(rev.handle.id) {
-                            t.set_residency(b, BlockResidency::Host);
+            let sizes = vec![bytes; victims.len()];
+            match session.alloc_many(hr, &sizes, hints) {
+                Ok(leases) => {
+                    // One batched-DMA submission: local -> peer for every
+                    // victim (plus durable host copies if configured).
+                    let mut batch = Transfer::new().chunked(RELOAD_CHUNK_BYTES);
+                    for lease in &leases {
+                        batch =
+                            batch.populate(lease, DeviceId::Gpu(self.handler.compute_gpu));
+                        if self.cfg.host_backed_peer {
+                            batch = batch.raw(
+                                DeviceId::Gpu(self.handler.compute_gpu),
+                                DeviceId::Host,
+                                bytes,
+                            );
                         }
-                    } else {
-                        t.drop_by_handle(rev.handle.id);
                     }
-                    *drops.borrow_mut() += 1;
-                })
-                .expect("fresh handle");
-                self.table
-                    .borrow_mut()
-                    .set_residency(id, BlockResidency::Peer { handle: handle.id, peer: handle.peer });
-                self.stats.evictions_to_peer += 1;
-                return;
+                    batch.submit(hr).expect("fresh leases");
+                    for (id, lease) in victims.into_iter().zip(leases) {
+                        self.table.set_residency(
+                            id,
+                            BlockResidency::Peer { handle: lease.id(), peer: lease.peer() },
+                        );
+                        self.leases.insert(lease.id(), lease);
+                        self.stats.evictions_to_peer += 1;
+                    }
+                    return;
+                }
+                Err(_) => {
+                    // All-or-nothing rollback: no element of the batch
+                    // landed on a peer; every victim takes the host path.
+                    self.stats.peer_alloc_failures += 1;
+                }
             }
-            self.stats.peer_alloc_failures += 1;
         }
         // Vanilla vLLM path: evict to host DRAM over PCIe.
-        self.handler.transfer(
-            hr,
-            DeviceId::Gpu(self.handler.compute_gpu),
-            DeviceId::Host,
-            bytes,
-            None,
-        );
-        self.table.borrow_mut().set_residency(id, BlockResidency::Host);
-        self.stats.evictions_to_host += 1;
+        for id in victims {
+            self.handler.transfer(
+                hr,
+                DeviceId::Gpu(self.handler.compute_gpu),
+                DeviceId::Host,
+                bytes,
+            );
+            self.table.set_residency(id, BlockResidency::Host);
+            self.stats.evictions_to_host += 1;
+        }
     }
 
-    /// Finish a sequence: release all its blocks (and any peer handles).
+    /// Finish a sequence: release all its blocks (and any peer leases).
     pub fn finish_seq(&mut self, hr: &mut HarvestRuntime, seq: SeqId) {
-        let removed = self.table.borrow_mut().remove_seq(seq);
+        self.sync(hr);
+        let removed = self.table.remove_seq(seq);
         for (id, res) in removed {
             self.policy.remove(id);
             if let BlockResidency::Peer { handle, .. } = res {
-                let _ = hr.free(handle);
+                if let Some(lease) = self.leases.remove(&handle) {
+                    let session = self.session.expect("lease implies session");
+                    let _ = session.release(hr, lease);
+                }
             }
         }
     }
 
-    /// How many peer-revocation drops callbacks have delivered.
+    /// How many peer-revocation drops the event queue has delivered.
     pub fn drops_observed(&self) -> u64 {
-        *self.drops_observed.borrow()
+        self.stats.revocation_drops
     }
 
-    /// Consistency between policy membership and table residency.
+    /// Consistency between policy membership, table residency, and the
+    /// lease map.
     pub fn check_invariants(&self) -> Result<(), String> {
-        self.table.borrow().check_invariants()?;
-        let local_in_table = self.table.borrow().count_by_residency().0;
+        self.table.check_invariants()?;
+        let local_in_table = self.table.count_by_residency().0;
         if local_in_table != self.policy.len() {
             return Err(format!(
                 "policy tracks {} blocks, table says {} local",
@@ -377,6 +445,14 @@ impl KvOffloadManager {
         if self.policy.len() > self.cfg.local_capacity_blocks {
             return Err("local pool over capacity".into());
         }
+        let peer_in_table = self.table.count_by_residency().1;
+        if peer_in_table != self.leases.len() {
+            return Err(format!(
+                "table has {} peer blocks but manager holds {} leases",
+                peer_in_table,
+                self.leases.len()
+            ));
+        }
         Ok(())
     }
 }
@@ -384,7 +460,7 @@ impl KvOffloadManager {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::harvest::{HarvestConfig, RevocationReason};
+    use crate::harvest::{HarvestConfig, MigConfig, RevocationReason};
     use crate::memsim::tenant::TenantLoad;
     use crate::memsim::{NodeSpec, SimNode};
     use crate::moe::config::find_kv_model;
@@ -461,10 +537,10 @@ mod tests {
             let first = kv.table().seq_blocks(s)[0];
             assert_ne!(kv.table().residency(first), Some(BlockResidency::Local));
             kv.access_block(&mut h, first);
-            (kv.stats.clone(), kv)
+            (kv.stats.clone(), kv, h)
         };
-        let (harvest_stats, kv1) = measure(true);
-        let (host_stats, _) = measure(false);
+        let (harvest_stats, kv1, h1) = measure(true);
+        let (host_stats, _, _) = measure(false);
         assert_eq!(harvest_stats.peer_reloads, 1);
         assert_eq!(host_stats.host_reloads, 1);
         assert!(
@@ -474,6 +550,7 @@ mod tests {
             host_stats.reload_ns
         );
         kv1.check_invariants().unwrap();
+        drop(h1);
     }
 
     #[test]
@@ -487,7 +564,10 @@ mod tests {
         let peer_before = kv.table().count_by_residency().1;
         assert!(peer_before > 0);
         h.revoke_peer(1, RevocationReason::TenantPressure);
+        // pull model: the drops become visible at the next sync
+        kv.sync(&mut h);
         assert_eq!(kv.drops_observed() as usize, peer_before);
+        assert_eq!(kv.stats.revocation_drops as usize, peer_before);
         let (_, peer, _, dropped) = kv.table().count_by_residency();
         assert_eq!(peer, 0);
         assert_eq!(dropped, peer_before);
@@ -497,6 +577,23 @@ mod tests {
         kv.access_block(&mut h, first);
         assert_eq!(kv.stats.recomputes, before + 1);
         assert!(kv.stats.recompute_ns > 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn revocation_visible_without_explicit_sync() {
+        // Entry points sync implicitly: no manual call needed as long as
+        // the manager is used at all after the revocation.
+        let mut h = hr();
+        let mut kv = KvOffloadManager::new(cfg(true, 4), 0);
+        let s = SeqId(1);
+        for _ in 0..(16 * 6) {
+            kv.append_token(&mut h, s);
+        }
+        h.revoke_peer(1, RevocationReason::TenantPressure);
+        kv.access_seq(&mut h, s); // syncs, then recomputes dropped blocks
+        assert!(kv.stats.recomputes > 0);
+        assert_eq!(kv.table().count_by_residency().1, 0);
         kv.check_invariants().unwrap();
     }
 
@@ -511,6 +608,7 @@ mod tests {
             kv.append_token(&mut h, s);
         }
         h.revoke_peer(1, RevocationReason::TenantPressure);
+        kv.sync(&mut h);
         let (_, peer, host, dropped) = kv.table().count_by_residency();
         assert_eq!(peer, 0);
         assert_eq!(dropped, 0, "durable blocks never drop");
@@ -533,7 +631,48 @@ mod tests {
     }
 
     #[test]
-    fn finish_seq_releases_peer_handles() {
+    fn reserve_local_batches_eviction_all_or_nothing() {
+        // Peer capped below the batch: the vectored admission must fail
+        // as a whole (no partial peer placement) and every victim must
+        // take the host path.
+        let node = SimNode::new(NodeSpec::h100x2());
+        let mut hcfg = HarvestConfig::for_node(2);
+        let c = cfg(true, 4);
+        // room for exactly one block on the peer
+        hcfg.mig[1] = MigConfig::CachePartition { bytes: c.block_bytes() + c.block_bytes() / 2 };
+        let mut h = HarvestRuntime::new(node, hcfg);
+        let mut kv = KvOffloadManager::new(c, 0);
+        let s = SeqId(1);
+        for _ in 0..(16 * 4) {
+            kv.append_token(&mut h, s); // fills the pool, no eviction yet
+        }
+        assert_eq!(kv.stats.evictions_to_peer + kv.stats.evictions_to_host, 0);
+        // need 3 free slots -> batch of 3 victims; only 1 would fit
+        kv.reserve_local(&mut h, kv.cfg.local_capacity_blocks - 1);
+        assert_eq!(kv.stats.evictions_to_peer, 0, "no partial placement");
+        assert_eq!(kv.stats.evictions_to_host, 3, "whole batch rolled over to host");
+        assert_eq!(h.live_bytes_on(1), 0, "rollback left nothing on the peer");
+        assert_eq!(kv.stats.peer_alloc_failures, 1, "one vectored consultation");
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reserve_local_admits_batch_to_peer_when_it_fits() {
+        let mut h = hr();
+        let mut kv = KvOffloadManager::new(cfg(true, 4), 0);
+        let s = SeqId(1);
+        for _ in 0..(16 * 4) {
+            kv.append_token(&mut h, s);
+        }
+        kv.reserve_local(&mut h, 3);
+        assert_eq!(kv.stats.evictions_to_peer, 3, "one vectored batch of 3");
+        assert_eq!(kv.stats.evictions_to_host, 0);
+        assert_eq!(h.live_bytes_on(1), 3 * kv.cfg.block_bytes());
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn finish_seq_releases_peer_leases() {
         let mut h = hr();
         let mut kv = KvOffloadManager::new(cfg(true, 4), 0);
         let s = SeqId(1);
@@ -542,7 +681,7 @@ mod tests {
         }
         assert!(h.live_bytes_on(1) > 0);
         kv.finish_seq(&mut h, s);
-        assert_eq!(h.live_bytes_on(1), 0, "harvest allocations freed");
+        assert_eq!(h.live_bytes_on(1), 0, "harvest leases released");
         assert!(kv.table().is_empty());
         assert_eq!(kv.local_blocks(), 0);
     }

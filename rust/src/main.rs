@@ -300,7 +300,7 @@ fn serve_real(cfg: &DeploymentConfig) -> Result<()> {
         fmt_bytes(rt.kv_state_bytes() as u64),
         "pjrt-cpu"
     );
-    let mut engine = RealEngine::new(rt);
+    let mut engine = RealEngine::new(rt)?;
     let mut spec = cfg.workload_spec();
     // keep prompts inside the tiny model's context window
     spec.mean_prompt_tokens = spec.mean_prompt_tokens.min(48.0);

@@ -136,6 +136,9 @@ impl CgoPipe {
         tier: OffloadTier,
     ) -> PipelineStats {
         let mut stats = PipelineStats { tokens: self.batch_tokens(), ..Default::default() };
+        // Tick boundary: drain revocation events accumulated since the
+        // last pass so the whole pass sees one consistent residency view.
+        reb.sync(hr);
         let pass_start = hr.node.clock.now();
         let mut compute_cursor = pass_start;
         for layer in 0..self.model.n_layers as usize {

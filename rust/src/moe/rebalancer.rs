@@ -3,18 +3,25 @@
 //! "At server start, a user-defined subset of experts is loaded into
 //! local HBM, while the remaining experts reside in host DRAM. As peer
 //! memory becomes available, the rebalancer allocates peer GPU memory
-//! using `harvest_alloc` and migrates selected expert weights into peer
-//! HBM. ... If a peer allocation is revoked, the rebalancer invalidates
-//! the corresponding residency entry, and future invocations
-//! automatically fall back to pinned host DRAM."
+//! and migrates selected expert weights into peer HBM. ... If a peer
+//! allocation is revoked, the rebalancer invalidates the corresponding
+//! residency entry, and future invocations automatically fall back to
+//! pinned host DRAM."
+//!
+//! Revocations arrive as pull-model events on the rebalancer's
+//! [`HarvestSession`]; [`ExpertRebalancer::sync`] drains them at tick
+//! boundaries (pipeline pass start, rebalance rounds, fetches) and
+//! repairs the residency map. The pre-lease design had to share the map
+//! with the runtime's push callbacks through reference-counted interior
+//! mutability; the map is now plainly owned.
 
 use super::config::MoeModel;
 use super::residency::{ExpertKey, ExpertResidency, ResidencyMap};
-use crate::harvest::api::{AllocHints, Durability};
-use crate::harvest::HarvestRuntime;
+use crate::harvest::api::{AllocHints, Durability, LeaseId};
+use crate::harvest::session::{HarvestSession, Lease, Transfer};
+use crate::harvest::{HarvestRuntime, PayloadKind};
 use crate::memsim::{CopyEvent, DeviceId};
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::collections::BTreeMap;
 
 /// Where an expert fetch was served from (metrics / Fig. 5 attribution).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -24,17 +31,19 @@ pub enum FetchSource {
     Host,
 }
 
-/// The rebalancer. Holds the residency map behind `Rc<RefCell<_>>` so
-/// revocation callbacks (owned by the Harvest controller) can invalidate
-/// entries while the pipeline holds the rebalancer.
+/// The rebalancer. Owns the residency map and the leases backing every
+/// peer-cached expert.
 pub struct ExpertRebalancer {
     pub model: &'static MoeModel,
-    map: Rc<RefCell<ResidencyMap>>,
+    map: ResidencyMap,
     compute_gpu: usize,
+    session: Option<HarvestSession>,
+    /// Live peer leases; the map's `PeerHbm` entries mirror this exactly.
+    leases: BTreeMap<LeaseId, Lease>,
     /// Cumulative migration/fetch statistics.
     pub migrations: u64,
     pub migration_failures: u64,
-    pub revocations_observed: Rc<RefCell<u64>>,
+    revocations_observed: u64,
 }
 
 impl ExpertRebalancer {
@@ -43,35 +52,59 @@ impl ExpertRebalancer {
     pub fn new(model: &'static MoeModel, compute_gpu: usize, offload_fraction: f64) -> Self {
         let n_local = ((1.0 - offload_fraction.clamp(0.0, 1.0)) * model.n_experts as f64).round()
             as u32;
-        let map = Rc::new(RefCell::new(ResidencyMap::init(
-            model.n_layers as u32,
-            model.n_experts as u32,
-            n_local,
-        )));
+        let map = ResidencyMap::init(model.n_layers as u32, model.n_experts as u32, n_local);
         Self {
             model,
             map,
             compute_gpu,
+            session: None,
+            leases: BTreeMap::new(),
             migrations: 0,
             migration_failures: 0,
-            revocations_observed: Rc::new(RefCell::new(0)),
+            revocations_observed: 0,
         }
     }
 
-    pub fn residency(&self) -> std::cell::Ref<'_, ResidencyMap> {
-        self.map.borrow()
+    pub fn residency(&self) -> &ResidencyMap {
+        &self.map
     }
 
     pub fn compute_gpu(&self) -> usize {
         self.compute_gpu
     }
 
+    /// Peer revocations observed via the event queue so far.
+    pub fn revocations_observed(&self) -> u64 {
+        self.revocations_observed
+    }
+
+    fn session(&mut self, hr: &mut HarvestRuntime) -> HarvestSession {
+        *self
+            .session
+            .get_or_insert_with(|| HarvestSession::open(hr, PayloadKind::ExpertWeights))
+    }
+
+    /// Drain pending revocation events and invalidate the corresponding
+    /// residency entries (fall back to pinned host DRAM). Called by
+    /// every entry point; the pipeline also calls it once per decode
+    /// pass so the whole tick sees one consistent residency view.
+    pub fn sync(&mut self, hr: &mut HarvestRuntime) {
+        let Some(session) = self.session else { return };
+        for ev in session.drain_revocations(hr) {
+            self.leases.remove(&ev.lease);
+            self.map.invalidate_handle(ev.lease);
+            self.revocations_observed += 1;
+        }
+    }
+
     /// Migrate up to `max_migrations` host-resident experts into peer HBM
     /// (host → peer copies; the host copy stays authoritative). Returns
     /// how many were promoted. Stops at the first capacity rejection.
     pub fn rebalance(&mut self, hr: &mut HarvestRuntime, max_migrations: usize) -> usize {
+        self.sync(hr);
         let candidates: Vec<ExpertKey> =
-            self.map.borrow().host_resident().take(max_migrations).collect();
+            self.map.host_resident().take(max_migrations).collect();
+        let session = self.session(hr);
         let mut promoted = 0;
         for key in candidates {
             let hints = AllocHints {
@@ -79,8 +112,8 @@ impl ExpertRebalancer {
                 durability: Durability::HostBacked,
                 ..Default::default()
             };
-            let handle = match hr.alloc(self.model.expert_bytes(), hints) {
-                Ok(h) => h,
+            let lease = match session.alloc(hr, self.model.expert_bytes(), hints) {
+                Ok(l) => l,
                 Err(_) => {
                     self.migration_failures += 1;
                     break; // peers full: stop this round
@@ -88,16 +121,13 @@ impl ExpertRebalancer {
             };
             // Populate the cache: host -> peer (stays off the critical
             // path; CGOPipe compute continues meanwhile).
-            hr.copy_in(handle.id, DeviceId::Host).expect("fresh handle");
-            let map = Rc::clone(&self.map);
-            let observed = Rc::clone(&self.revocations_observed);
-            hr.register_cb(handle.id, move |rev| {
-                map.borrow_mut().invalidate_handle(rev.handle.id);
-                *observed.borrow_mut() += 1;
-            })
-            .expect("fresh handle");
-            let ok = self.map.borrow_mut().promote_to_peer(key, handle.id, handle.peer);
+            Transfer::new()
+                .populate(&lease, DeviceId::Host)
+                .submit(hr)
+                .expect("fresh lease");
+            let ok = self.map.promote_to_peer(key, lease.id(), lease.peer());
             debug_assert!(ok);
+            self.leases.insert(lease.id(), lease);
             promoted += 1;
             self.migrations += 1;
         }
@@ -115,16 +145,22 @@ impl ExpertRebalancer {
         hr: &mut HarvestRuntime,
         key: ExpertKey,
     ) -> (FetchSource, Option<CopyEvent>) {
-        let residency = self.map.borrow().get(key);
+        self.sync(hr);
+        let residency = self.map.get(key);
         match residency {
             ExpertResidency::LocalHbm => (FetchSource::Local, None),
             ExpertResidency::PeerHbm { handle, .. } => {
-                match hr.fetch_to(handle, self.compute_gpu) {
-                    Ok(ev) => (FetchSource::Peer, Some(ev)),
-                    Err(_) => {
-                        // Raced with a revocation: residency says peer but
-                        // the handle died. Invalidate and fall back.
-                        self.map.borrow_mut().invalidate_handle(handle);
+                // Post-sync a PeerHbm entry should always have a live
+                // lease; a failed submit means a revocation raced in
+                // anyway, so invalidate and fall back to host.
+                let served = self.leases.get(&handle).and_then(|lease| {
+                    Transfer::new().fetch(lease, self.compute_gpu).submit(hr).ok()
+                });
+                match served {
+                    Some(report) => (FetchSource::Peer, Some(report.events[0])),
+                    None => {
+                        self.leases.remove(&handle);
+                        self.map.invalidate_handle(handle);
                         let ev = hr.node.copy(
                             DeviceId::Host,
                             DeviceId::Gpu(self.compute_gpu),
@@ -236,9 +272,11 @@ mod tests {
         reb.rebalance(&mut hr, 8);
         let (_, p, _) = reb.residency().counts();
         assert_eq!(p, 8);
-        // revoke everything on the peer
+        // revoke everything on the peer; the events become visible at the
+        // next sync (here explicit, normally the pass-start drain)
         hr.revoke_peer(1, RevocationReason::TenantPressure);
-        assert_eq!(*reb.revocations_observed.borrow(), 8);
+        reb.sync(&mut hr);
+        assert_eq!(reb.revocations_observed(), 8);
         let (_, p, h) = reb.residency().counts();
         assert_eq!(p, 0);
         assert_eq!(h as u64, model.n_layers * model.n_experts);
@@ -246,6 +284,21 @@ mod tests {
         // fetches now come from host
         let (src, _) = reb.fetch_expert(&mut hr, ExpertKey { layer: 0, expert: 0 });
         assert_eq!(src, FetchSource::Host);
+    }
+
+    #[test]
+    fn fetch_syncs_implicitly_after_revocation() {
+        let mut hr = runtime();
+        let model = find_moe_model("phi-tiny").unwrap();
+        let mut reb = ExpertRebalancer::new(model, 0, 1.0);
+        reb.rebalance(&mut hr, 4);
+        hr.revoke_peer(1, RevocationReason::ExternalReclaim);
+        // no explicit sync: fetch_expert drains first, so it must not
+        // try the dead peer entry
+        let (src, _) = reb.fetch_expert(&mut hr, ExpertKey { layer: 0, expert: 0 });
+        assert_eq!(src, FetchSource::Host);
+        assert_eq!(reb.revocations_observed(), 4);
+        reb.residency().check_invariants().unwrap();
     }
 
     #[test]
@@ -264,6 +317,7 @@ mod tests {
         assert_eq!(reb.residency().counts().1, 32);
         // pressure spike revokes everything
         hr.advance_to(1_500_000);
+        reb.sync(&mut hr);
         assert_eq!(reb.residency().counts().1, 0);
         // pressure clears; rebalancer re-promotes
         hr.advance_to(2_500_000);

@@ -7,7 +7,7 @@
 //! server start. On revocation the rebalancer invalidates the peer entry
 //! and lookups fall back to pinned host DRAM automatically.
 
-use crate::harvest::api::HandleId;
+use crate::harvest::api::LeaseId;
 use std::collections::BTreeMap;
 
 /// (layer, expert) key.
@@ -24,7 +24,7 @@ pub enum ExpertResidency {
     LocalHbm,
     /// Cached in peer HBM under a live harvest handle (host copy remains
     /// authoritative).
-    PeerHbm { handle: HandleId, peer: usize },
+    PeerHbm { handle: LeaseId, peer: usize },
     /// Host DRAM only (the authoritative copy).
     Host,
 }
@@ -35,7 +35,7 @@ pub enum ExpertResidency {
 pub struct ResidencyMap {
     entries: BTreeMap<ExpertKey, ExpertResidency>,
     /// Reverse index: harvest handle -> expert (for revocation callbacks).
-    by_handle: BTreeMap<HandleId, ExpertKey>,
+    by_handle: BTreeMap<LeaseId, ExpertKey>,
 }
 
 impl ResidencyMap {
@@ -69,7 +69,7 @@ impl ResidencyMap {
 
     /// Promote a host-resident expert into the peer cache. Local experts
     /// are never demoted to peer (that would be a slowdown).
-    pub fn promote_to_peer(&mut self, key: ExpertKey, handle: HandleId, peer: usize) -> bool {
+    pub fn promote_to_peer(&mut self, key: ExpertKey, handle: LeaseId, peer: usize) -> bool {
         match self.get(key) {
             ExpertResidency::Host => {
                 self.entries.insert(key, ExpertResidency::PeerHbm { handle, peer });
@@ -82,7 +82,7 @@ impl ResidencyMap {
 
     /// Invalidate the peer entry for `handle` (revocation callback path);
     /// the expert falls back to host. Returns the expert, if any.
-    pub fn invalidate_handle(&mut self, handle: HandleId) -> Option<ExpertKey> {
+    pub fn invalidate_handle(&mut self, handle: LeaseId) -> Option<ExpertKey> {
         let key = self.by_handle.remove(&handle)?;
         debug_assert!(matches!(self.get(key), ExpertResidency::PeerHbm { .. }));
         self.entries.insert(key, ExpertResidency::Host);
@@ -90,7 +90,7 @@ impl ResidencyMap {
     }
 
     /// All experts currently cached on a peer.
-    pub fn peer_cached(&self) -> impl Iterator<Item = (ExpertKey, HandleId, usize)> + '_ {
+    pub fn peer_cached(&self) -> impl Iterator<Item = (ExpertKey, LeaseId, usize)> + '_ {
         self.entries.iter().filter_map(|(&k, &r)| match r {
             ExpertResidency::PeerHbm { handle, peer } => Some((k, handle, peer)),
             _ => None,
@@ -160,7 +160,7 @@ mod tests {
     #[test]
     fn promote_and_invalidate_roundtrip() {
         let mut m = ResidencyMap::init(1, 4, 1);
-        let h = HandleId(42);
+        let h = LeaseId(42);
         assert!(m.promote_to_peer(key(0, 2), h, 1));
         assert_eq!(m.get(key(0, 2)), ExpertResidency::PeerHbm { handle: h, peer: 1 });
         m.check_invariants().unwrap();
@@ -174,24 +174,24 @@ mod tests {
     #[test]
     fn local_experts_never_promoted() {
         let mut m = ResidencyMap::init(1, 4, 2);
-        assert!(!m.promote_to_peer(key(0, 0), HandleId(1), 1));
+        assert!(!m.promote_to_peer(key(0, 0), LeaseId(1), 1));
         assert!(m.is_local(key(0, 0)));
     }
 
     #[test]
     fn double_promotion_rejected() {
         let mut m = ResidencyMap::init(1, 4, 0);
-        assert!(m.promote_to_peer(key(0, 1), HandleId(1), 1));
-        assert!(!m.promote_to_peer(key(0, 1), HandleId(2), 1), "already peer-cached");
+        assert!(m.promote_to_peer(key(0, 1), LeaseId(1), 1));
+        assert!(!m.promote_to_peer(key(0, 1), LeaseId(2), 1), "already peer-cached");
         m.check_invariants().unwrap();
     }
 
     #[test]
     fn iterators_enumerate_tiers() {
         let mut m = ResidencyMap::init(1, 4, 1);
-        m.promote_to_peer(key(0, 1), HandleId(9), 1);
+        m.promote_to_peer(key(0, 1), LeaseId(9), 1);
         let cached: Vec<_> = m.peer_cached().collect();
-        assert_eq!(cached, vec![(key(0, 1), HandleId(9), 1)]);
+        assert_eq!(cached, vec![(key(0, 1), LeaseId(9), 1)]);
         let host: Vec<_> = m.host_resident().collect();
         assert_eq!(host, vec![key(0, 2), key(0, 3)]);
     }

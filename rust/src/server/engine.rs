@@ -28,7 +28,12 @@ struct PagePool {
 }
 
 impl PagePool {
+    /// `num_pages` must be >= 2: the last page is reserved as the padding
+    /// scratch page, and a pool with no allocatable pages can never admit
+    /// a request (callers would spin forever). Checked by
+    /// [`RealEngine::new`].
     fn new(num_pages: usize) -> Self {
+        debug_assert!(num_pages >= 2, "pool needs a padding page plus allocatable pages");
         // reserve the last page for padding slots
         Self { free: (0..num_pages as i32 - 1).rev().collect() }
     }
@@ -120,10 +125,17 @@ pub struct RealEngine {
 }
 
 impl RealEngine {
-    pub fn new(rt: ModelRuntime) -> Self {
+    pub fn new(rt: ModelRuntime) -> Result<Self> {
         let cfg = rt.config().clone();
+        if cfg.num_pages < 2 {
+            bail!(
+                "model KV pool has {} page(s); need >= 2 (one padding page + \
+                 at least one allocatable page)",
+                cfg.num_pages
+            );
+        }
         let max_batch = rt.batch_variants().last().copied().unwrap_or(1);
-        Self { rt, pool: PagePool::new(cfg.num_pages), max_batch }
+        Ok(Self { rt, pool: PagePool::new(cfg.num_pages), max_batch })
     }
 
     pub fn model_runtime(&self) -> &ModelRuntime {
@@ -216,14 +228,20 @@ impl RealEngine {
                         metrics.on_first_token(0, s.started.elapsed().as_nanos() as u64);
                     }
                     if s.cursor >= s.tokens.len() {
-                        // sample greedily from the real logits
+                        // Sample greedily from the real logits with a
+                        // total-order fold: NaNs never win (`>` is false),
+                        // ties break to the lowest token id, and an
+                        // all-NaN row deterministically yields token 0 —
+                        // `partial_cmp(..).unwrap()` here used to panic
+                        // the whole serve loop on a single NaN logit.
                         let logits = &out.logits[i];
                         let next = logits
                             .iter()
                             .enumerate()
-                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                            .map(|(t, _)| t as i32)
-                            .unwrap_or(0);
+                            .fold((0usize, f32::NEG_INFINITY), |best, (t, &v)| {
+                                if v > best.1 { (t, v) } else { best }
+                            })
+                            .0 as i32;
                         s.tokens.push(next);
                         s.req.generated += 1;
                         metrics.on_token(step_ns / ids.len() as u64);

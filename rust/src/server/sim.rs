@@ -96,6 +96,10 @@ impl SimEngine {
             for mut req in batcher.admit(now, |_| true) {
                 let prefill_ns = self.cfg.prefill_ns_per_token * req.prompt_tokens as u64;
                 hr.advance_to(hr.node.clock.now() + prefill_ns);
+                // Vectored admission: free the prompt's block footprint in
+                // one all-or-nothing batch instead of evicting per token.
+                let blocks = (req.prompt_tokens as usize).div_ceil(self.cfg.kv.block_tokens as usize);
+                self.kv.reserve_local(hr, blocks);
                 for _ in 0..req.prompt_tokens {
                     self.kv.append_token(hr, req.id);
                 }
@@ -110,8 +114,10 @@ impl SimEngine {
                 continue;
             }
             let step_start = hr.node.clock.now();
-            // KV residency first: reload whatever the cohort needs (this
+            // Tick boundary: drain revocations accumulated while time
+            // advanced, then restore KV residency for the cohort (this
             // is where preemption churn costs).
+            self.kv.sync(hr);
             for &seq in &cohort {
                 self.kv.access_seq(hr, seq);
             }

@@ -5,7 +5,9 @@
 //! failure-injection scenarios no single module covers.
 
 use harvest::config::{find_preset, DeploymentConfig, WorkloadKind};
-use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime, MigConfig, RevocationReason};
+use harvest::harvest::{
+    AllocHints, HarvestConfig, HarvestRuntime, MigConfig, PayloadKind, RevocationReason, Transfer,
+};
 use harvest::kv::{KvConfig, KvOffloadManager, SeqId};
 use harvest::memsim::{DeviceId, NodeSpec, SimNode, TenantLoad};
 use harvest::moe::pipeline::OffloadTier;
@@ -452,12 +454,107 @@ fn host_backed_kv_block_reloads_from_host_after_revocation() {
 fn compute_gpu_is_never_selected_as_peer() {
     let node = SimNode::new(NodeSpec::nvlink_domain(4));
     let mut hr = HarvestRuntime::new(node, HarvestConfig::for_node(4));
+    let session = hr.open_session(PayloadKind::Generic);
+    let mut held = Vec::new();
     for compute in 0..4usize {
         for _ in 0..8 {
-            let h = hr
-                .alloc(GIB, AllocHints { compute_gpu: Some(compute), ..Default::default() })
+            let lease = session
+                .alloc(
+                    &mut hr,
+                    GIB,
+                    AllocHints { compute_gpu: Some(compute), ..Default::default() },
+                )
                 .unwrap();
-            assert_ne!(h.peer, compute, "allocated on the compute GPU");
+            assert_ne!(lease.peer(), compute, "allocated on the compute GPU");
+            held.push(lease);
         }
     }
+    drop(held);
+    assert_eq!(hr.sweep_leaked(), 32, "dropped leases all reclaimed");
+    for p in 0..4 {
+        assert_eq!(hr.live_bytes_on(p), 0);
+    }
+}
+
+// ---------------------------------------------------------------------
+// The redesigned revocation pipeline, observed end-to-end
+// ---------------------------------------------------------------------
+
+#[test]
+fn revocation_pipeline_drains_and_invalidates_before_event_observable() {
+    // §3.2 ordering through the pull-model API: when `drain_revocations`
+    // hands over an event, the in-flight DMA touching the region has
+    // been drained and the placement invalidated *already*.
+    let mut hr = hr2();
+    let session = hr.open_session(PayloadKind::KvBlock);
+    let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+    let lease = session.alloc(&mut hr, 256 * (1 << 20), hints).unwrap();
+    let id = lease.id();
+    // long in-flight copy tagged with the lease
+    let fill = Transfer::new().populate(&lease, DeviceId::Host).submit(&mut hr).unwrap();
+    assert!(fill.end > hr.node.clock.now(), "copy still in flight");
+    // co-tenant pressure revokes it
+    hr.node.set_tenant_load(1, TenantLoad::from_steps(80 * GIB, vec![(0, 0), (1, 80 * GIB)]));
+    hr.advance_to(2);
+    // BEFORE draining: placement is gone, bytes are free
+    assert!(!hr.is_live(id), "invalidated before the event is observable");
+    assert_eq!(hr.node.gpus[1].hbm.used(), 0, "freed before the event is observable");
+    let events = session.drain_revocations(&mut hr);
+    assert_eq!(events.len(), 1);
+    assert_eq!(events[0].lease, id);
+    assert_eq!(events[0].kind, PayloadKind::KvBlock);
+    assert_eq!(events[0].reason, RevocationReason::TenantPressure);
+    assert!(
+        events[0].at >= fill.end,
+        "drain-DMA precedes the event: at={} < copy end={}",
+        events[0].at,
+        fill.end
+    );
+    // exactly once
+    assert!(session.drain_revocations(&mut hr).is_empty());
+    drop(lease);
+    assert_eq!(hr.sweep_leaked(), 0, "revoked lease is not double-freed by the sweep");
+}
+
+#[test]
+fn kv_multi_block_admission_is_all_or_nothing() {
+    // Acceptance: a KV admission batch that does not fully fit on the
+    // peer rolls back completely — no partial placement — and the whole
+    // batch takes the host path instead.
+    let node = SimNode::new(NodeSpec::h100x2());
+    let kv_cfg = KvConfig {
+        model: find_kv_model("kimi").unwrap(),
+        block_tokens: 16,
+        local_capacity_blocks: 6,
+        use_harvest: true,
+        host_backed_peer: false,
+    };
+    let mut hcfg = HarvestConfig::for_node(2);
+    // space for 2 blocks on the peer; the batch below needs 5
+    hcfg.mig[1] = MigConfig::CachePartition { bytes: 2 * kv_cfg.block_bytes() };
+    let mut hr = HarvestRuntime::new(node, hcfg);
+    let mut kv = KvOffloadManager::new(kv_cfg, 0);
+    let s = SeqId(1);
+    for _ in 0..(16 * 6) {
+        kv.append_token(&mut hr, s); // fills the local pool exactly
+    }
+    assert_eq!(kv.stats.evictions_to_peer + kv.stats.evictions_to_host, 0);
+    kv.reserve_local(&mut hr, 5); // vectored admission of 5 victims
+    assert_eq!(kv.stats.evictions_to_peer, 0, "no partial peer placement");
+    assert_eq!(kv.stats.evictions_to_host, 5, "entire batch fell back to host");
+    assert_eq!(kv.stats.peer_alloc_failures, 1, "one vectored policy consultation");
+    assert_eq!(hr.live_bytes_on(1), 0, "rollback left no bytes on the peer");
+    assert_eq!(hr.node.gpus[1].hbm.used(), 0);
+    kv.check_invariants().unwrap();
+    // …and when the batch fits, it lands wholesale on the peer:
+    let mut hr_roomy = hr2();
+    let mut kv2 = KvOffloadManager::new(kv_cfg, 0);
+    for _ in 0..(16 * 6) {
+        kv2.append_token(&mut hr_roomy, s);
+    }
+    kv2.reserve_local(&mut hr_roomy, 5);
+    assert_eq!(kv2.stats.evictions_to_peer, 5, "one all-or-nothing batch admitted");
+    assert_eq!(kv2.stats.evictions_to_host, 0);
+    assert_eq!(hr_roomy.live_bytes_on(1), 5 * kv_cfg.block_bytes());
+    kv2.check_invariants().unwrap();
 }

@@ -4,7 +4,8 @@
 //! prints a reproducing seed.
 
 use harvest::harvest::{
-    AllocHints, HarvestConfig, HarvestRuntime, RevocationReason, VictimPolicy,
+    AllocHints, HarvestConfig, HarvestRuntime, Lease, PayloadKind, RevocationReason, Transfer,
+    VictimPolicy,
 };
 use harvest::kv::{BlockResidency, KvConfig, KvOffloadManager, SeqId};
 use harvest::memsim::{DeviceId, FitStrategy, Hbm, NodeSpec, SimNode, TenantLoad};
@@ -12,9 +13,7 @@ use harvest::moe::{find_kv_model, find_moe_model, ExpertRebalancer, RouterSim};
 use harvest::server::{CompletelyFair, Fcfs, Scheduler, WorkloadGen, WorkloadSpec};
 use harvest::util::check;
 use harvest::util::rng::Rng;
-use std::cell::RefCell;
 use std::collections::BTreeMap;
-use std::rc::Rc;
 
 const MIB: u64 = 1 << 20;
 const GIB: u64 = 1 << 30;
@@ -129,12 +128,15 @@ fn prop_hbm_largest_free_is_honest() {
 // Harvest controller
 // ---------------------------------------------------------------------
 
-/// Random alloc/free/revoke/pressure interleavings: every revocation
-/// callback fires exactly once, drains precede frees, live accounting
-/// matches the arena, and pressure enforcement converges to budget.
+/// Random alloc/alloc_many/release/revoke/pressure interleavings under
+/// the session API: every revocation is observed exactly once via
+/// `drain_revocations` (releases never produce events), live accounting
+/// matches the arena, and pressure enforcement converges to budget. No
+/// shared state between the runtime and this "consumer" — the whole
+/// point of the pull model.
 #[test]
-fn prop_controller_callbacks_exactly_once() {
-    check("controller-cb-once", 80, 0xCB01, |rng| {
+fn prop_session_events_exactly_once() {
+    check("session-events-once", 80, 0xCB01, |rng| {
         let n_gpus = 2 + rng.below(3) as usize;
         let node = SimNode::new(NodeSpec::nvlink_domain(n_gpus));
         let mut cfg = HarvestConfig::for_node(n_gpus);
@@ -145,38 +147,62 @@ fn prop_controller_callbacks_exactly_once() {
             _ => VictimPolicy::SmallestFirst,
         };
         let mut hr = HarvestRuntime::new(node, cfg);
-        let fired: Rc<RefCell<BTreeMap<u64, u32>>> = Rc::new(RefCell::new(BTreeMap::new()));
-        let mut live = Vec::new();
+        let session = hr.open_session(PayloadKind::Generic);
+        let mut live: Vec<Lease> = Vec::new();
+        let mut released: Vec<u64> = Vec::new();
+        let mut seen: BTreeMap<u64, u32> = BTreeMap::new();
         let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
         for step in 0..rng.below(120) + 20 {
             match rng.below(10) {
-                0..=4 => {
-                    if let Ok(h) = hr.alloc((1 + rng.below(512)) * MIB, hints) {
-                        let f = fired.clone();
-                        hr.register_cb(h.id, move |rev| {
-                            *f.borrow_mut().entry(rev.handle.id.0).or_insert(0) += 1;
-                        })
-                        .map_err(|e| format!("register_cb: {e}"))?;
+                0..=3 => {
+                    if let Ok(l) = session.alloc(&mut hr, (1 + rng.below(512)) * MIB, hints) {
                         if rng.bool(0.3) {
-                            let _ = hr.copy_in(h.id, DeviceId::Host);
+                            Transfer::new()
+                                .populate(&l, DeviceId::Host)
+                                .submit(&mut hr)
+                                .map_err(|e| format!("populate: {e}"))?;
                         }
-                        live.push(h.id);
+                        live.push(l);
+                    }
+                }
+                4 => {
+                    // vectored batch: all-or-nothing
+                    let sizes: Vec<u64> =
+                        (0..1 + rng.below(4)).map(|_| (1 + rng.below(256)) * MIB).collect();
+                    let before: u64 = (0..n_gpus).map(|p| hr.live_bytes_on(p)).sum();
+                    match session.alloc_many(&mut hr, &sizes, hints) {
+                        Ok(batch) => {
+                            let peer = batch[0].peer();
+                            if !batch.iter().all(|l| l.peer() == peer) {
+                                return err("alloc_many split across peers".into());
+                            }
+                            live.extend(batch);
+                        }
+                        Err(_) => {
+                            let after: u64 = (0..n_gpus).map(|p| hr.live_bytes_on(p)).sum();
+                            if after != before {
+                                return err(format!(
+                                    "failed alloc_many changed accounting {before} -> {after}"
+                                ));
+                            }
+                        }
                     }
                 }
                 5..=6 => {
                     if !live.is_empty() {
-                        let id = live.swap_remove(rng.below(live.len() as u64) as usize);
-                        hr.free(id).map_err(|e| format!("free: {e}"))?;
-                        // explicit free must NOT fire the callback
-                        if fired.borrow().contains_key(&id.0) {
-                            return err(format!("free fired callback for {id:?}"));
-                        }
+                        let l = live.swap_remove(rng.below(live.len() as u64) as usize);
+                        let id = l.id().0;
+                        session.release(&mut hr, l).map_err(|e| format!("release: {e}"))?;
+                        released.push(id);
                     }
                 }
                 7..=8 => {
                     if !live.is_empty() {
-                        let id = live.swap_remove(rng.below(live.len() as u64) as usize);
+                        let i = rng.below(live.len() as u64) as usize;
+                        let id = live[i].id();
                         hr.revoke(id, RevocationReason::PolicyEviction);
+                        // the stale RAII owner stays in `live` until the
+                        // event is drained below — like a real consumer
                     }
                 }
                 _ => {
@@ -188,35 +214,119 @@ fn prop_controller_callbacks_exactly_once() {
                         peer,
                         TenantLoad::from_steps(80 * GIB, vec![(0, 0), (now + step + 1, used)]),
                     );
-                    let revs = hr.advance_to(now + step + 2);
-                    for r in &revs {
-                        live.retain(|&id| id != r.handle.id);
-                    }
+                    hr.advance_to(now + step + 2);
                 }
             }
-            // invariant: our arena usage equals live handle accounting
+            // tick boundary: observe events, drop stale owners
+            for ev in session.drain_revocations(&mut hr) {
+                *seen.entry(ev.lease.0).or_insert(0) += 1;
+                live.retain(|l| l.id() != ev.lease);
+            }
+            // invariant: our arena usage equals live lease accounting
             for p in 0..n_gpus {
                 let arena = hr.node.gpus[p].hbm.used();
-                let handles = hr.live_bytes_on(p);
-                if arena != handles {
-                    return err(format!("gpu{p}: arena {arena} != handles {handles}"));
+                let leases = hr.live_bytes_on(p);
+                if arena != leases {
+                    return err(format!("gpu{p}: arena {arena} != leases {leases}"));
                 }
             }
         }
-        // Shutdown: revoke all peers; every registered-and-revoked handle
-        // must have fired exactly once.
+        // Shutdown: revoke all peers; drain the tail.
         for p in 0..n_gpus {
             hr.revoke_peer(p, RevocationReason::Shutdown);
         }
-        for (&id, &count) in fired.borrow().iter() {
+        for ev in session.drain_revocations(&mut hr) {
+            *seen.entry(ev.lease.0).or_insert(0) += 1;
+            live.retain(|l| l.id() != ev.lease);
+        }
+        if !live.is_empty() {
+            return err(format!("{} leases alive after shutdown", live.len()));
+        }
+        for (&id, &count) in &seen {
             if count != 1 {
-                return err(format!("handle {id} callback fired {count} times"));
+                return err(format!("lease {id} observed {count} times"));
+            }
+            if released.contains(&id) {
+                return err(format!("released lease {id} produced an event"));
             }
         }
-        // Every revocation recorded must match a fired callback.
+        // Every recorded revocation must have been observed exactly once.
         for rev in &hr.revocations {
-            if fired.borrow().get(&rev.handle.id.0) != Some(&1) {
-                return err(format!("revocation {:?} with no single callback", rev.handle.id));
+            if seen.get(&rev.handle.id.0) != Some(&1) {
+                return err(format!("revocation {:?} not observed once", rev.handle.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Leases dropped without an explicit release never leak accounting:
+/// at every step arena usage equals the `bytes_on` ledger, and after the
+/// final sweep both return to zero — no matter how drops, releases,
+/// revocations and sweeps interleave.
+#[test]
+fn prop_leases_never_leak_accounting() {
+    check("lease-leak-sweep", 80, 0x1EAB, |rng| {
+        let node = SimNode::new(NodeSpec::h100x2());
+        let mut hr = HarvestRuntime::new(node, HarvestConfig::for_node(2));
+        let session = hr.open_session(PayloadKind::Generic);
+        let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+        let mut held: Vec<Lease> = Vec::new();
+        let mut dropped = 0u64;
+        for _ in 0..rng.below(150) + 20 {
+            match rng.below(8) {
+                0..=3 => {
+                    if let Ok(l) = session.alloc(&mut hr, (1 + rng.below(256)) * MIB, hints) {
+                        held.push(l);
+                    }
+                }
+                4 => {
+                    // leak: drop the RAII owner without releasing
+                    if !held.is_empty() {
+                        let l = held.swap_remove(rng.below(held.len() as u64) as usize);
+                        drop(l);
+                        dropped += 1;
+                    }
+                }
+                5 => {
+                    if !held.is_empty() {
+                        let l = held.swap_remove(rng.below(held.len() as u64) as usize);
+                        session.release(&mut hr, l).map_err(|e| format!("release: {e}"))?;
+                    }
+                }
+                6 => {
+                    if !held.is_empty() {
+                        let id = held[rng.below(held.len() as u64) as usize].id();
+                        hr.revoke(id, RevocationReason::PolicyEviction);
+                        for ev in session.drain_revocations(&mut hr) {
+                            held.retain(|l| l.id() != ev.lease);
+                        }
+                    }
+                }
+                _ => {
+                    hr.sweep_leaked();
+                }
+            }
+            // Leaked-but-unswept leases are still live and accounted, so
+            // this identity must hold at *every* step:
+            for p in 0..2 {
+                let arena = hr.node.gpus[p].hbm.used();
+                let ledger = hr.live_bytes_on(p);
+                if arena != ledger {
+                    return err(format!("gpu{p}: arena {arena} != ledger {ledger}"));
+                }
+            }
+        }
+        // Drop everything still held and sweep: accounting returns to
+        // zero — leaked leases are reclaimed, not lost.
+        held.clear();
+        hr.sweep_leaked();
+        for p in 0..2 {
+            if hr.live_bytes_on(p) != 0 || hr.node.gpus[p].hbm.used() != 0 {
+                return err(format!(
+                    "gpu{p}: {} bytes leaked after final sweep (dropped {dropped} leases)",
+                    hr.live_bytes_on(p)
+                ));
             }
         }
         Ok(())
@@ -412,12 +522,13 @@ fn prop_residency_map_consistent_under_revocation() {
         reb.residency().check_invariants().map_err(|e| format!("post-rebalance: {e}"))?;
         // revoke a random subset of peer allocations
         let handles: Vec<_> = reb.residency().peer_cached().map(|(_, h, _)| h).collect();
-        // (the rebalancer registered callbacks that invalidate residency)
         for h in handles {
             if rng.bool(0.5) {
                 hr.revoke(h, RevocationReason::TenantPressure);
             }
         }
+        // pull model: the rebalancer repairs its map at the next sync
+        reb.sync(&mut hr);
         reb.residency().check_invariants().map_err(|e| format!("post-revoke: {e}"))?;
         // every remaining peer entry must still be live in the runtime
         for (_, h, _) in reb.residency().peer_cached() {
