@@ -19,6 +19,9 @@ use std::path::Path;
 
 const MIB: u64 = 1 << 20;
 
+// Measures the deprecated raw shim deliberately: it is the §3.2 paper
+// surface and stays until the lease migration completes.
+#[allow(deprecated)]
 fn bench_harvest_alloc_free(b: &Bench) {
     let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
     let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
@@ -35,6 +38,7 @@ fn bench_harvest_alloc_free(b: &Bench) {
     });
 }
 
+#[allow(deprecated)] // raw-shim fragmentation path, same rationale as above
 fn bench_alloc_under_fragmentation(b: &Bench) {
     // 2000 standing allocations fragment the arena; measure steady-state
     // alloc/free with a full policy view rebuild.

@@ -14,8 +14,10 @@ use crate::memsim::Ns;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct LeaseId(pub u64);
 
-/// Deprecated alias for [`LeaseId`], kept so pre-lease call sites keep
-/// compiling during the migration. New code should say `LeaseId`.
+/// Alias for [`LeaseId`], kept so pre-lease call sites keep compiling
+/// during the migration.
+#[deprecated(note = "renamed to `LeaseId` — a handle is now the RAII \
+                     `harvest::session::Lease`; the bare id only names it")]
 pub type HandleId = LeaseId;
 
 /// What happens to the cached object when its peer allocation is revoked

@@ -303,6 +303,16 @@ impl HarvestRuntime {
         self.monitor.record_transfer(peer, at, bytes);
     }
 
+    pub(crate) fn record_peer_prefetch(&mut self, peer: usize, at: Ns, bytes: u64) {
+        self.monitor.record_prefetch_transfer(peer, at, bytes);
+    }
+
+    /// Read-only view of the peer monitor (demand vs prefetch bandwidth
+    /// attribution, churn windows) for metrics and tests.
+    pub fn monitor(&self) -> &PeerMonitor {
+        &self.monitor
+    }
+
     /// Free every lease that was dropped without an explicit release.
     /// Returns how many were reclaimed. Called automatically at
     /// allocation, pressure-enforcement, drain and time-advance
@@ -646,15 +656,20 @@ impl HarvestRuntime {
     // The paper's §3.2 C-style API. Kept thin so the lease migration is
     // reviewable; new code should open a session instead.
 
-    /// Deprecated: §3.2 `harvest_alloc` returning a raw, manually-freed
-    /// handle. Allocates under the runtime's legacy session.
+    /// §3.2 `harvest_alloc` returning a raw, manually-freed handle.
+    /// Allocates under the runtime's legacy session.
+    #[deprecated(note = "open a session: `hr.open_session(kind)` then \
+                         `session.alloc(&mut hr, size, hints)` returns an RAII `Lease` \
+                         (leaks are swept, double free does not typecheck)")]
     pub fn alloc(&mut self, size: u64, hints: AllocHints) -> Result<HarvestHandle, HarvestError> {
         self.alloc_raw(LEGACY_SESSION, size, hints)
     }
 
-    /// Deprecated: §3.2 `harvest_register_cb`. Push callback fired at
-    /// step 3 of the revocation pipeline. Prefer
-    /// [`HarvestSession::drain_revocations`].
+    /// §3.2 `harvest_register_cb`. Push callback fired at step 3 of the
+    /// revocation pipeline.
+    #[deprecated(note = "pull events instead: `session.drain_revocations(&mut hr)` at a tick \
+                         boundary — the drain → invalidate → free pipeline is complete before \
+                         an event is observable, and no shared mutable state is needed")]
     pub fn register_cb(
         &mut self,
         id: LeaseId,
@@ -667,9 +682,11 @@ impl HarvestRuntime {
         Ok(())
     }
 
-    /// Deprecated: populate the peer cache (async copy `size` bytes from
-    /// `src` into the allocation). Prefer the
-    /// [`super::session::Transfer`] builder.
+    /// Populate the peer cache (async copy `size` bytes from `src` into
+    /// the allocation).
+    #[deprecated(note = "use the unified builder: \
+                         `Transfer::new().populate(&lease, src).submit(&mut hr)` — batched, \
+                         lease-tagged, and chunkable via `.chunked(bytes)`")]
     pub fn copy_in(&mut self, id: LeaseId, src: DeviceId) -> Result<CopyEvent, HarvestError> {
         let h = self.handle_info(id).ok_or(HarvestError::StaleLease(id))?;
         let ev = self.node.copy(src, DeviceId::Gpu(h.peer), h.size, Some(id.0));
@@ -677,8 +694,10 @@ impl HarvestRuntime {
         Ok(ev)
     }
 
-    /// Deprecated: serve a cache hit (async peer → compute copy). Prefer
-    /// the [`super::session::Transfer`] builder.
+    /// Serve a cache hit (async peer → compute copy).
+    #[deprecated(note = "use the unified builder: \
+                         `Transfer::new().fetch(&lease, compute_gpu).submit(&mut hr)` — batched, \
+                         lease-tagged, and chunkable via `.chunked(bytes)`")]
     pub fn fetch_to(&mut self, id: LeaseId, compute: usize) -> Result<CopyEvent, HarvestError> {
         let h = self.handle_info(id).ok_or(HarvestError::StaleLease(id))?;
         let ev = self.node.copy(DeviceId::Gpu(h.peer), DeviceId::Gpu(compute), h.size, Some(id.0));
@@ -688,6 +707,9 @@ impl HarvestRuntime {
 }
 
 #[cfg(test)]
+// The shim surface is deliberately exercised here to keep its behavior
+// pinned until removal.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::harvest::session::Transfer;

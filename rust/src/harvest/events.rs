@@ -13,6 +13,40 @@
 //! drains its queue at a tick boundary of its choosing via
 //! `drain_revocations`. By the time an event is observable, the lease it
 //! names is guaranteed dead.
+//!
+//! # The drain ordering guarantee
+//!
+//! Events are delivered FIFO in pipeline-completion order, exactly once,
+//! and only after invalidation:
+//!
+//! ```
+//! use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime, PayloadKind,
+//!                        RevocationReason};
+//! use harvest::memsim::{NodeSpec, SimNode};
+//!
+//! let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()),
+//!                                  HarvestConfig::for_node(2));
+//! let session = hr.open_session(PayloadKind::Generic);
+//! let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+//! let a = session.alloc(&mut hr, 1 << 20, hints)?;
+//! let b = session.alloc(&mut hr, 1 << 20, hints)?;
+//!
+//! assert!(hr.revoke(a.id(), RevocationReason::TenantPressure).is_some());
+//! assert!(hr.revoke(b.id(), RevocationReason::PolicyEviction).is_some());
+//!
+//! // By the time the events are drainable, both leases are already dead
+//! // (drain-DMA → invalidate → free completed first)...
+//! assert!(!hr.is_live(a.id()) && !hr.is_live(b.id()));
+//! let events = session.drain_revocations(&mut hr);
+//! // ...and they arrive oldest first, exactly once.
+//! assert_eq!(events.len(), 2);
+//! assert_eq!(events[0].lease, a.id());
+//! assert_eq!(events[1].lease, b.id());
+//! assert!(events[0].at <= events[1].at);
+//! assert!(session.drain_revocations(&mut hr).is_empty());
+//! # drop((a, b)); // stale RAII owners; the runtime's sweep ignores them
+//! # Ok::<(), harvest::harvest::HarvestError>(())
+//! ```
 
 use super::api::{Durability, LeaseId, RevocationReason};
 use crate::memsim::Ns;

@@ -37,7 +37,12 @@
 //!   default) plus the locality / fairness / interference / stability
 //!   variants §3.2 sketches. Vectored batches consult the policy once.
 //! * [`monitor`] — peer-availability views (free capacity, churn,
-//!   bandwidth demand) that policies consult.
+//!   bandwidth demand — demand and prefetch traffic attributed
+//!   separately) that policies consult.
+//! * [`prefetch`] — the deadline-aware prefetch planner: admission
+//!   control that lets consumers overlap peer DMA with decode compute
+//!   without ever delaying a demand fetch, plus the hit/late/waste
+//!   outcome ledger.
 //! * [`controller`] — the runtime: performs allocations on the selected
 //!   peer, watches tenant pressure, drives the revocation pipeline, and
 //!   keeps the paper's raw surface alive as deprecated shims.
@@ -55,14 +60,18 @@ pub mod events;
 pub mod mig;
 pub mod monitor;
 pub mod policy;
+pub mod prefetch;
 pub mod session;
 
-pub use api::{AllocHints, Durability, HandleId, HarvestError, HarvestHandle, LeaseId,
-              Revocation, RevocationReason};
+pub use api::{AllocHints, Durability, HarvestError, HarvestHandle, LeaseId, Revocation,
+              RevocationReason};
+#[allow(deprecated)] // re-exported so pre-lease call sites keep compiling
+pub use api::HandleId;
 pub use controller::{HarvestConfig, HarvestRuntime, VictimPolicy};
 pub use events::{PayloadKind, RevocationEvent, RevocationQueue};
 pub use mig::MigConfig;
 pub use monitor::{PeerMonitor, PeerView};
 pub use policy::{BestFit, FirstAvailable, InterferenceAware, LocalityAware, PlacementPolicy,
                  RateLimitFairness, StabilityAware};
+pub use prefetch::{PrefetchConfig, PrefetchPlanner, PrefetchStats};
 pub use session::{HarvestSession, Lease, SessionId, Transfer, TransferReport};

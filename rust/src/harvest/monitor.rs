@@ -38,6 +38,15 @@ pub struct PeerMonitor {
     /// Per device: (time, bytes transferred) events.
     bw_events: Vec<VecDeque<(Ns, u64)>>,
     last_seen_used: Vec<u64>,
+    /// Cumulative bytes of *demand* traffic per device (critical-path
+    /// populates/fetches).
+    demand_bytes: Vec<u64>,
+    /// Cumulative bytes of *background prefetch* traffic per device.
+    /// Prefetch traffic still lands in `bw_events` — the interference
+    /// policy must see total link pressure either way — but the split
+    /// lets metrics attribute hit/waste bandwidth to the prefetch
+    /// pipeline.
+    prefetch_bytes: Vec<u64>,
 }
 
 impl PeerMonitor {
@@ -47,6 +56,8 @@ impl PeerMonitor {
             churn_events: vec![VecDeque::new(); n_gpus],
             bw_events: vec![VecDeque::new(); n_gpus],
             last_seen_used: vec![0; n_gpus],
+            demand_bytes: vec![0; n_gpus],
+            prefetch_bytes: vec![0; n_gpus],
         }
     }
 
@@ -67,9 +78,30 @@ impl PeerMonitor {
         }
     }
 
-    /// Record link traffic touching `device` (for interference scoring).
+    /// Record demand link traffic touching `device` (for interference
+    /// scoring).
     pub fn record_transfer(&mut self, device: usize, at: Ns, bytes: u64) {
         self.bw_events[device].push_back((at, bytes));
+        self.demand_bytes[device] += bytes;
+    }
+
+    /// Record background *prefetch* traffic touching `device`. Counted in
+    /// the same sliding bandwidth window as demand traffic (interference
+    /// policies must steer away from links our own prefetches saturate
+    /// too), but attributed separately in the cumulative counters.
+    pub fn record_prefetch_transfer(&mut self, device: usize, at: Ns, bytes: u64) {
+        self.bw_events[device].push_back((at, bytes));
+        self.prefetch_bytes[device] += bytes;
+    }
+
+    /// Cumulative demand bytes recorded against `device`.
+    pub fn demand_bytes_on(&self, device: usize) -> u64 {
+        self.demand_bytes[device]
+    }
+
+    /// Cumulative prefetch bytes recorded against `device`.
+    pub fn prefetch_bytes_on(&self, device: usize) -> u64 {
+        self.prefetch_bytes[device]
     }
 
     fn expire(q: &mut VecDeque<(Ns, u64)>, now: Ns, window: Ns) {
@@ -187,5 +219,20 @@ mod tests {
         let v = mon.views(&node, &[None, None], &[0, 0]);
         assert!((v[0].bw_demand - 0.5e9).abs() < 1.0);
         assert_eq!(v[1].bw_demand, 0.0);
+    }
+
+    #[test]
+    fn prefetch_traffic_split_but_visible_to_interference_signal() {
+        let node = SimNode::new(NodeSpec::default());
+        let mut mon = PeerMonitor::new(2, 1_000_000_000);
+        mon.record_transfer(1, 0, 100);
+        mon.record_prefetch_transfer(1, 0, 400);
+        // attribution is split...
+        assert_eq!(mon.demand_bytes_on(1), 100);
+        assert_eq!(mon.prefetch_bytes_on(1), 400);
+        assert_eq!(mon.demand_bytes_on(0), 0);
+        // ...but the policy-facing bandwidth signal sees the sum
+        let v = mon.views(&node, &[None, None], &[0, 0]);
+        assert!((v[1].bw_demand - 500.0).abs() < 1.0);
     }
 }

@@ -1,0 +1,435 @@
+//! Deadline-aware prefetch planning — the §5 transfer-pipeline idea
+//! turned into a subsystem.
+//!
+//! Harvest's speedup comes from hiding data movement behind compute, but
+//! a reload issued *at the moment of use* still lands its latency on the
+//! decode critical path. The prefetch pipeline closes that gap:
+//!
+//! 1. A predictor names what decode will need next — the scheduler's
+//!    [`crate::server::scheduler::Scheduler::lookahead`] for KV blocks,
+//!    the router's [`crate::moe::router::RouterSim::predict_activations`]
+//!    for expert weights.
+//! 2. The consumer (the KV manager's
+//!    [`crate::kv::manager::KvOffloadManager::plan_prefetch`] /
+//!    [`crate::kv::manager::KvOffloadManager::submit_prefetch`], the
+//!    rebalancer's
+//!    [`crate::moe::rebalancer::ExpertRebalancer::prefetch_experts`])
+//!    turns the prediction into concrete background transfers, each with
+//!    a **deadline**: the virtual time by which the data must be resident
+//!    (typically the start of the next decode step or layer).
+//! 3. The [`PrefetchPlanner`] performs admission control against the
+//!    simulated interconnect: a background transfer is issued only when
+//!    the link carries no queued *demand* traffic and
+//!    [`crate::memsim::Topology::earliest_completion`] (plus a safety
+//!    slack) meets the deadline. Prefetch traffic therefore never delays
+//!    a demand fetch — it either rides an idle window or yields.
+//! 4. Issued transfers are submitted through the
+//!    [`crate::harvest::session::Transfer`] builder in *background* mode:
+//!    recorded as prefetch bandwidth in the
+//!    [`crate::harvest::monitor::PeerMonitor`], and still covered by the
+//!    §3.2 drain-before-free barrier (their lease tags are kept, so a
+//!    revocation never frees bytes under an in-flight copy). Consumers
+//!    keep that barrier off the hot path by deferring lease release
+//!    until the background copy has completed. A prefetch invalidated
+//!    before use is wasted bandwidth, never a correctness bug.
+//!
+//! The planner also keeps the outcome ledger: **hits** (prefetched and
+//! consumed on time), **late** (consumed before the background copy
+//! finished — a partial stall), and **wasted** (revoked, preempted or
+//! evicted before use).
+//!
+//! # Example
+//!
+//! ```
+//! use harvest::harvest::prefetch::{PrefetchConfig, PrefetchPlanner};
+//! use harvest::memsim::{DeviceId, NodeSpec, SimNode};
+//!
+//! let node = SimNode::new(NodeSpec::h100x2());
+//! let mut planner = PrefetchPlanner::new(PrefetchConfig::default());
+//! let (src, dst) = (DeviceId::Gpu(1), DeviceId::Gpu(0));
+//!
+//! // An idle NVLink and a comfortable deadline: admitted.
+//! assert!(planner.admit(&node.topo, src, dst, 1 << 20, None, 1_000_000));
+//! planner.record_issued(7, 1 << 20, 40_000, 1_000_000);
+//!
+//! // Consumed after the copy finished: a hit.
+//! assert!(planner.mark_used(7, 50_000));
+//! assert_eq!(planner.stats().hits, 1);
+//!
+//! // An impossible deadline yields instead of queueing.
+//! assert!(!planner.admit(&node.topo, src, dst, 1 << 30, None, 10));
+//! assert_eq!(planner.stats().yielded, 1);
+//! ```
+
+use crate::memsim::{DeviceId, Ns, Topology};
+use std::collections::BTreeMap;
+
+/// Tuning knobs for the prefetch pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefetchConfig {
+    /// How many future decode steps the scheduler lookahead covers.
+    pub horizon: usize,
+    /// Cap on concurrently tracked in-flight prefetches.
+    pub max_inflight: usize,
+    /// Safety margin: an admitted transfer must complete this long
+    /// before its deadline (absorbs estimate error on real hardware;
+    /// the simulator's estimates are exact, so the default is 0).
+    pub slack_ns: Ns,
+}
+
+impl Default for PrefetchConfig {
+    fn default() -> Self {
+        Self { horizon: 2, max_inflight: 256, slack_ns: 0 }
+    }
+}
+
+/// Outcome ledger of the prefetch pipeline. `planned` counts admission
+/// attempts; every attempt ends as exactly one of `issued` or `yielded`,
+/// and every issue eventually resolves as a hit, a late arrival, or
+/// waste.
+#[derive(Debug, Clone, Default)]
+pub struct PrefetchStats {
+    /// Admission-control consultations.
+    pub planned: u64,
+    /// Background transfers actually issued.
+    pub issued: u64,
+    /// Skipped by admission control (busy link / unmeetable deadline /
+    /// in-flight cap).
+    pub yielded: u64,
+    /// Entries skipped at submit without any transfer: invalidated
+    /// between plan and submit (a revocation raced in), or not yet
+    /// fetchable (the copy that would be read is still being written).
+    pub stale_plans: u64,
+    /// Prefetched data consumed after its background copy completed:
+    /// the reload left the critical path entirely.
+    pub hits: u64,
+    /// Prefetched data consumed while the copy was still in flight —
+    /// a shortened, but not eliminated, stall.
+    pub late: u64,
+    /// Prefetched data invalidated before use (revocation, preemption,
+    /// eviction): wasted bandwidth, never a correctness hazard.
+    pub wasted: u64,
+    /// Total bytes moved by issued prefetches.
+    pub bytes_prefetched: u64,
+    /// Bytes of prefetched data that were wasted.
+    pub bytes_wasted: u64,
+}
+
+impl PrefetchStats {
+    /// Fraction of issued prefetches that were consumed on time.
+    pub fn hit_rate(&self) -> f64 {
+        if self.issued == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.issued as f64
+        }
+    }
+
+    /// Fraction of issued prefetches whose bytes were wasted.
+    pub fn waste_rate(&self) -> f64 {
+        if self.bytes_prefetched == 0 {
+            0.0
+        } else {
+            self.bytes_wasted as f64 / self.bytes_prefetched as f64
+        }
+    }
+}
+
+/// One issued-and-unresolved prefetch.
+#[derive(Debug, Clone, Copy)]
+struct Inflight {
+    ready_at: Ns,
+    bytes: u64,
+}
+
+/// Deadline-aware admission control + outcome accounting for background
+/// transfers. One planner instance per consumer (the KV manager and the
+/// expert rebalancer each own one); keys are consumer-chosen `u64`s
+/// (block ids, lease ids).
+#[derive(Debug)]
+pub struct PrefetchPlanner {
+    cfg: PrefetchConfig,
+    stats: PrefetchStats,
+    inflight: BTreeMap<u64, Inflight>,
+    /// Per directed link: the horizon up to which the queue is *our own*
+    /// prefetch traffic. Admission distinguishes "busy with demand"
+    /// (always yield) from "busy with earlier prefetches of this same
+    /// batch" (fine, as long as the whole queue still meets the
+    /// deadline).
+    issued_until: BTreeMap<(DeviceId, DeviceId), Ns>,
+}
+
+impl PrefetchPlanner {
+    pub fn new(cfg: PrefetchConfig) -> Self {
+        Self {
+            cfg,
+            stats: PrefetchStats::default(),
+            inflight: BTreeMap::new(),
+            issued_until: BTreeMap::new(),
+        }
+    }
+
+    pub fn cfg(&self) -> &PrefetchConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> &PrefetchStats {
+        &self.stats
+    }
+
+    /// Issued prefetches not yet resolved as hit/late/wasted.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Whether `key` has an issued, unresolved prefetch.
+    pub fn is_inflight(&self, key: u64) -> bool {
+        self.inflight.contains_key(&key)
+    }
+
+    /// Admission control for one background transfer of `bytes` over
+    /// (src → dst), needed by `deadline`. `chunk` must match how the
+    /// transfer will actually be issued: `Some(descriptor_bytes)` for a
+    /// scattered [`crate::harvest::session::Transfer::chunked`] copy
+    /// (which pays per-chunk overheads the contiguous estimate would
+    /// undershoot — and an under-estimated prefetch could occupy the
+    /// link past its deadline, delaying demand), `None` for a
+    /// contiguous one. Returns `false` (counting a yield) when:
+    ///
+    /// * too many prefetches are already in flight,
+    /// * the link is busy with traffic we did not issue — queued demand
+    ///   transfers must never wait behind a prefetch, or
+    /// * the transfer cannot complete `slack_ns` before the deadline
+    ///   (issuing it would occupy the link past the moment demand
+    ///   traffic may arrive).
+    ///
+    /// Contract: callers must pick `deadline` no later than the next
+    /// instant demand traffic can appear on this link (the next decode
+    /// step / layer boundary); completion-before-deadline is what makes
+    /// "prefetch never delays demand" hold.
+    pub fn admit(
+        &mut self,
+        topo: &Topology,
+        src: DeviceId,
+        dst: DeviceId,
+        bytes: u64,
+        chunk: Option<u64>,
+        deadline: Ns,
+    ) -> bool {
+        self.stats.planned += 1;
+        if self.inflight.len() >= self.cfg.max_inflight {
+            self.stats.yielded += 1;
+            return false;
+        }
+        let now = topo.clock().now();
+        let own = self.issued_until.get(&(src, dst)).copied().unwrap_or(0);
+        if topo.busy_until(src, dst) > now.max(own) {
+            // Someone else's traffic is queued: yield to it.
+            self.stats.yielded += 1;
+            return false;
+        }
+        let done = match chunk {
+            // The builder only scatters when the payload exceeds the
+            // descriptor size; mirror that here.
+            Some(c) if bytes > c => topo.earliest_completion_scattered(src, dst, bytes, c),
+            _ => topo.earliest_completion(src, dst, bytes),
+        };
+        match done {
+            Some(done) if done.saturating_add(self.cfg.slack_ns) <= deadline => true,
+            _ => {
+                self.stats.yielded += 1;
+                false
+            }
+        }
+    }
+
+    /// A transfer admitted by [`PrefetchPlanner::admit`] was issued;
+    /// `ready_at` is its completion time on the simulated link. Pair
+    /// with [`PrefetchPlanner::mark_link_busy`] so later admits in the
+    /// same batch can tell the queue apart from demand traffic.
+    pub fn record_issued(&mut self, key: u64, bytes: u64, ready_at: Ns, deadline: Ns) {
+        // `ready_at` may exceed the admission estimate (scattered copies
+        // pay per-chunk overheads the contiguous estimate ignores); the
+        // late-arrival accounting in `mark_used` absorbs the error.
+        let _ = deadline;
+        self.stats.issued += 1;
+        self.stats.bytes_prefetched += bytes;
+        self.inflight.insert(key, Inflight { ready_at, bytes });
+    }
+
+    /// Extend the own-traffic horizon on (src → dst) to `until`. Called
+    /// together with [`PrefetchPlanner::record_issued`] so later admits
+    /// in the same batch recognize the queue as prefetch traffic rather
+    /// than demand.
+    pub fn mark_link_busy(&mut self, src: DeviceId, dst: DeviceId, until: Ns) {
+        let e = self.issued_until.entry((src, dst)).or_insert(0);
+        *e = (*e).max(until);
+    }
+
+    /// The prefetched object under `key` was consumed at `now`. Returns
+    /// whether it arrived on time (`true` → hit, `false` → late).
+    /// Unknown keys (never prefetched, or already resolved) count as
+    /// on-time and touch no counters.
+    pub fn mark_used(&mut self, key: u64, now: Ns) -> bool {
+        let Some(fl) = self.inflight.remove(&key) else { return true };
+        if fl.ready_at <= now {
+            self.stats.hits += 1;
+            true
+        } else {
+            self.stats.late += 1;
+            false
+        }
+    }
+
+    /// The prefetched object under `key` was invalidated before use
+    /// (revocation, scheduler preemption, eviction). No-op for unknown
+    /// keys.
+    pub fn mark_canceled(&mut self, key: u64) {
+        if let Some(fl) = self.inflight.remove(&key) {
+            self.stats.wasted += 1;
+            self.stats.bytes_wasted += fl.bytes;
+        }
+    }
+
+    /// A planned entry went stale between plan and submit (the lease it
+    /// named was revoked, the block moved). Nothing was issued; nothing
+    /// can be read — the entry is simply dropped.
+    pub fn mark_stale_plan(&mut self) {
+        self.stats.stale_plans += 1;
+    }
+
+    /// Cancel every in-flight prefetch (e.g. the consumer is shutting
+    /// down or the working set was invalidated wholesale).
+    pub fn cancel_all(&mut self) {
+        let keys: Vec<u64> = self.inflight.keys().copied().collect();
+        for k in keys {
+            self.mark_canceled(k);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::{NodeSpec, SimNode};
+
+    const MIB: u64 = 1 << 20;
+
+    fn node() -> SimNode {
+        SimNode::new(NodeSpec::h100x2())
+    }
+
+    fn planner() -> PrefetchPlanner {
+        PrefetchPlanner::new(PrefetchConfig::default())
+    }
+
+    #[test]
+    fn admits_on_idle_link_with_room_to_deadline() {
+        let node = node();
+        let mut p = planner();
+        let est = node
+            .topo
+            .earliest_completion(DeviceId::Gpu(1), DeviceId::Gpu(0), MIB)
+            .unwrap();
+        assert!(p.admit(&node.topo, DeviceId::Gpu(1), DeviceId::Gpu(0), MIB, None, est));
+        assert!(
+            !p.admit(&node.topo, DeviceId::Gpu(1), DeviceId::Gpu(0), MIB, None, est - 1),
+            "one ns short of the completion estimate must yield"
+        );
+        assert_eq!(p.stats().planned, 2);
+        assert_eq!(p.stats().yielded, 1);
+    }
+
+    #[test]
+    fn yields_to_queued_demand_traffic() {
+        let mut node = node();
+        // demand transfer occupies the link
+        let ev = node.copy(DeviceId::Gpu(1), DeviceId::Gpu(0), 64 * MIB, None);
+        assert!(ev.end > node.clock.now());
+        let mut p = planner();
+        assert!(
+            !p.admit(&node.topo, DeviceId::Gpu(1), DeviceId::Gpu(0), MIB, None, u64::MAX),
+            "prefetch must never queue behind demand traffic"
+        );
+        assert_eq!(p.stats().yielded, 1);
+        // the reverse link is untouched and admissible
+        assert!(p.admit(&node.topo, DeviceId::Gpu(0), DeviceId::Gpu(1), MIB, None, u64::MAX));
+    }
+
+    #[test]
+    fn own_batch_may_queue_behind_itself_until_deadline() {
+        let mut node = node();
+        let mut p = planner();
+        let (src, dst) = (DeviceId::Gpu(1), DeviceId::Gpu(0));
+        let deadline = 500_000; // 0.5 ms: room for a dozen-ish 4 MiB copies
+        let mut issued = 0;
+        for key in 0..64u64 {
+            if !p.admit(&node.topo, src, dst, 4 * MIB, None, deadline) {
+                break;
+            }
+            let ev = node.copy(src, dst, 4 * MIB, None);
+            p.record_issued(key, 4 * MIB, ev.end, deadline);
+            p.mark_link_busy(src, dst, ev.end);
+            assert!(ev.end <= deadline, "admitted transfer violates deadline");
+            issued += 1;
+        }
+        assert!(issued > 1, "a batch must be able to queue behind itself");
+        assert!(
+            p.stats().yielded > 0 || issued == 64,
+            "eventually the deadline caps the batch"
+        );
+        // everything issued completes before the deadline: demand traffic
+        // arriving at the deadline is not delayed.
+        assert!(node.topo.busy_until(src, dst) <= deadline);
+    }
+
+    #[test]
+    fn inflight_cap_yields() {
+        let node = node();
+        let mut p = PrefetchPlanner::new(PrefetchConfig { max_inflight: 1, ..Default::default() });
+        assert!(p.admit(&node.topo, DeviceId::Gpu(1), DeviceId::Gpu(0), MIB, None, u64::MAX));
+        p.record_issued(1, MIB, 100, u64::MAX);
+        assert_eq!(p.in_flight(), 1);
+        assert!(!p.admit(&node.topo, DeviceId::Gpu(1), DeviceId::Gpu(0), MIB, None, u64::MAX));
+        p.mark_used(1, 200);
+        assert!(p.admit(&node.topo, DeviceId::Gpu(1), DeviceId::Gpu(0), MIB, None, u64::MAX));
+    }
+
+    #[test]
+    fn outcome_ledger_hits_late_waste() {
+        let mut p = planner();
+        p.record_issued(1, MIB, 1_000, 2_000);
+        p.record_issued(2, MIB, 1_000, 2_000);
+        p.record_issued(3, 2 * MIB, 1_000, 2_000);
+        assert!(p.mark_used(1, 1_500), "arrived before use: hit");
+        assert!(!p.mark_used(2, 500), "used before arrival: late");
+        p.mark_canceled(3);
+        p.mark_canceled(3); // double cancel is a no-op
+        let s = p.stats();
+        assert_eq!((s.hits, s.late, s.wasted), (1, 1, 1));
+        assert_eq!(s.bytes_prefetched, 4 * MIB);
+        assert_eq!(s.bytes_wasted, 2 * MIB);
+        assert!((p.stats().hit_rate() - 1.0 / 3.0).abs() < 1e-9);
+        assert!((p.stats().waste_rate() - 0.5).abs() < 1e-9);
+        assert_eq!(p.in_flight(), 0);
+    }
+
+    #[test]
+    fn unknown_keys_are_benign() {
+        let mut p = planner();
+        assert!(p.mark_used(99, 0), "unknown key counts as on-time, touches nothing");
+        p.mark_canceled(99);
+        assert_eq!(p.stats().hits + p.stats().late + p.stats().wasted, 0);
+    }
+
+    #[test]
+    fn cancel_all_flushes_inflight() {
+        let mut p = planner();
+        p.record_issued(1, MIB, 10, 100);
+        p.record_issued(2, MIB, 10, 100);
+        p.cancel_all();
+        assert_eq!(p.in_flight(), 0);
+        assert_eq!(p.stats().wasted, 2);
+        assert_eq!(p.stats().bytes_wasted, 2 * MIB);
+    }
+}

@@ -17,8 +17,44 @@
 //!   revocation pipeline (drain DMA → invalidate → free) before the
 //!   event becomes drainable.
 //! * [`Transfer`] — one builder for every data movement (`copy_in` and
-//!   `fetch_to` unified), with per-lease DMA tagging and optional
-//!   scattered-descriptor chunking for paged KV.
+//!   `fetch_to` unified), with per-lease DMA tagging, optional
+//!   scattered-descriptor chunking for paged KV, and a
+//!   [`Transfer::background`] mode that attributes a batch as prefetch
+//!   bandwidth in the peer monitor.
+//!
+//! # Example: open → alloc_many → Transfer → release
+//!
+//! ```
+//! use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime, PayloadKind, Transfer};
+//! use harvest::memsim::{DeviceId, NodeSpec, SimNode};
+//!
+//! let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()),
+//!                                  HarvestConfig::for_node(2));
+//! let session = hr.open_session(PayloadKind::KvBlock);
+//! let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+//!
+//! // Vectored, all-or-nothing: one policy consultation, one peer for
+//! // the whole batch, full rollback on failure.
+//! let leases = session.alloc_many(&mut hr, &[1 << 20, 1 << 20], hints)?;
+//! assert_eq!(leases.len(), 2);
+//! assert_eq!(leases[0].peer(), leases[1].peer());
+//!
+//! // One batched submission: populate both entries, then serve a hit.
+//! let report = Transfer::new()
+//!     .populate(&leases[0], DeviceId::Host)
+//!     .populate(&leases[1], DeviceId::Host)
+//!     .fetch(&leases[0], 0)
+//!     .submit(&mut hr)?;
+//! assert_eq!(report.events.len(), 3);
+//! assert_eq!(report.bytes, 3 << 20);
+//!
+//! // Release consumes each lease — releasing twice does not typecheck.
+//! for lease in leases {
+//!     session.release(&mut hr, lease)?;
+//! }
+//! assert_eq!(hr.live_bytes_on(1), 0);
+//! # Ok::<(), harvest::harvest::HarvestError>(())
+//! ```
 
 use super::api::{AllocHints, HarvestError, HarvestHandle, LeaseId};
 use super::controller::HarvestRuntime;
@@ -284,6 +320,7 @@ impl TransferReport {
 pub struct Transfer {
     ops: Vec<TransferOp>,
     chunk_bytes: Option<u64>,
+    background: bool,
 }
 
 impl Transfer {
@@ -296,6 +333,20 @@ impl Transfer {
     pub fn chunked(mut self, descriptor_bytes: u64) -> Self {
         assert!(descriptor_bytes > 0, "descriptor size must be positive");
         self.chunk_bytes = Some(descriptor_bytes);
+        self
+    }
+
+    /// Mark this batch as *background* (prefetch) traffic: its peer
+    /// traffic is recorded as prefetch bandwidth in the
+    /// [`super::monitor::PeerMonitor`] — still visible to the
+    /// interference policy, but attributed separately from demand
+    /// traffic. Background ops keep their lease tags, so the §3.2
+    /// drain-before-free barrier covers them exactly like demand DMA; to
+    /// keep that barrier off the hot path, consumers defer the lease
+    /// release until the background copy has completed (see
+    /// [`crate::kv::manager::KvOffloadManager::submit_prefetch`]).
+    pub fn background(mut self) -> Self {
+        self.background = true;
         self
     }
 
@@ -342,7 +393,8 @@ impl Transfer {
             match *op {
                 TransferOp::Populate { lease, src } => {
                     let h = hr.handle_info(lease).ok_or(HarvestError::StaleLease(lease))?;
-                    resolved.push((src, DeviceId::Gpu(h.peer), h.size, Some(lease.0), Some(h.peer)));
+                    resolved
+                        .push((src, DeviceId::Gpu(h.peer), h.size, Some(lease.0), Some(h.peer)));
                 }
                 TransferOp::Fetch { lease, compute } => {
                     let h = hr.handle_info(lease).ok_or(HarvestError::StaleLease(lease))?;
@@ -370,7 +422,11 @@ impl Transfer {
                 _ => hr.node.copy(src, dst, bytes, tag),
             };
             if let Some(p) = peer {
-                hr.record_peer_transfer(p, ev.end, bytes);
+                if self.background {
+                    hr.record_peer_prefetch(p, ev.end, bytes);
+                } else {
+                    hr.record_peer_transfer(p, ev.end, bytes);
+                }
             }
             report.bytes += bytes;
             report.end = report.end.max(ev.end);
@@ -528,6 +584,32 @@ mod tests {
         );
         s.release(&mut hr, l).unwrap();
         s.release(&mut hr, l2).unwrap();
+    }
+
+    #[test]
+    fn background_transfer_attributed_as_prefetch_but_still_barriered() {
+        let mut hr = rt();
+        let s = HarvestSession::open(&mut hr, PayloadKind::KvBlock);
+        let l = s.alloc(&mut hr, 8 * MIB, hints()).unwrap();
+        let report = Transfer::new()
+            .background()
+            .populate(&l, DeviceId::Host)
+            .fetch(&l, 0)
+            .submit(&mut hr)
+            .unwrap();
+        assert_eq!(report.events.len(), 2);
+        // attributed as prefetch, not demand, on the peer
+        assert_eq!(hr.monitor().prefetch_bytes_on(1), 16 * MIB);
+        assert_eq!(hr.monitor().demand_bytes_on(1), 0);
+        // but the §3.2 drain-before-free barrier still covers it: the
+        // peer bytes cannot be freed while the background copy reads them
+        assert_eq!(hr.node.dma.tag_busy_until(l.id().0), report.end);
+        s.release(&mut hr, l).unwrap();
+        assert_eq!(
+            hr.node.clock.now(),
+            report.end,
+            "an in-flight background copy is drained before its memory is freed"
+        );
     }
 
     #[test]

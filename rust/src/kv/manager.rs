@@ -28,11 +28,12 @@ use super::block_table::{BlockResidency, UnifiedBlockTable};
 use super::eviction::{EvictionPolicy, Lru};
 use super::recompute::RecomputeModel;
 use crate::harvest::api::{AllocHints, Durability, LeaseId};
+use crate::harvest::prefetch::{PrefetchConfig, PrefetchPlanner, PrefetchStats};
 use crate::harvest::session::{HarvestSession, Lease, Transfer};
 use crate::harvest::{HarvestRuntime, PayloadKind};
 use crate::memsim::{DeviceId, Ns};
 use crate::moe::config::KvModel;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// DMA descriptor granularity for KV reloads: blocks are batched into
 /// chunks of this size (scattered block copies cannot use one huge
@@ -136,7 +137,32 @@ pub struct KvOffloadManager {
     /// Live peer leases, keyed by id; the table's `Peer` entries mirror
     /// this map exactly.
     leases: BTreeMap<LeaseId, Lease>,
+    /// Deadline-aware prefetch admission control + outcome ledger
+    /// (enabled via [`KvOffloadManager::with_prefetch`]).
+    planner: Option<PrefetchPlanner>,
+    /// Blocks brought local by a background prefetch and not yet used:
+    /// block → completion time of the background copy. A use before
+    /// completion is a *late* (shortened) stall; eviction or sequence
+    /// finish before use is *waste*.
+    pending_prefetch: BTreeMap<BlockId, Ns>,
+    /// Source leases of issued prefetches, held until their background
+    /// copy completes (lease, copy end). Releasing earlier would free
+    /// peer memory an in-flight read still touches; releasing eagerly
+    /// would block on the drain barrier. `sync` releases matured
+    /// entries, when the drain is a guaranteed no-op.
+    deferred_release: Vec<(Lease, Ns)>,
     pub stats: KvStats,
+}
+
+/// One candidate produced by [`KvOffloadManager::plan_prefetch`]: a
+/// non-local block a predicted-to-decode sequence will touch. Plans are
+/// snapshots — [`KvOffloadManager::submit_prefetch`] revalidates each
+/// entry against current residency, so a revocation landing between plan
+/// and submit is skipped, never read.
+#[derive(Debug, Clone, Copy)]
+pub struct PlannedPrefetch {
+    pub block: BlockId,
+    pub bytes: u64,
 }
 
 impl KvOffloadManager {
@@ -157,8 +183,29 @@ impl KvOffloadManager {
             recompute: RecomputeModel::new(cfg.model.active_params_b),
             session: None,
             leases: BTreeMap::new(),
+            planner: None,
+            pending_prefetch: BTreeMap::new(),
+            deferred_release: Vec::new(),
             stats: KvStats::default(),
         }
+    }
+
+    /// Enable the deadline-aware prefetch pipeline: callers (the sim
+    /// engine) can then [`KvOffloadManager::plan_prefetch`] /
+    /// [`KvOffloadManager::submit_prefetch`] predicted sequences so their
+    /// reloads overlap decode compute instead of stalling it.
+    pub fn with_prefetch(mut self, cfg: PrefetchConfig) -> Self {
+        self.planner = Some(PrefetchPlanner::new(cfg));
+        self
+    }
+
+    pub fn prefetch_enabled(&self) -> bool {
+        self.planner.is_some()
+    }
+
+    /// The prefetch outcome ledger (None when prefetch is disabled).
+    pub fn prefetch_stats(&self) -> Option<&PrefetchStats> {
+        self.planner.as_ref().map(|p| p.stats())
     }
 
     pub fn table(&self) -> &UnifiedBlockTable {
@@ -182,6 +229,22 @@ impl KvOffloadManager {
     /// may also call it directly after advancing virtual time.
     pub fn sync(&mut self, hr: &mut HarvestRuntime) {
         let Some(session) = self.session else { return };
+        // Release prefetch source leases whose background copy has
+        // completed: the drain inside `release` is a no-op now, so this
+        // never blocks. Leases revoked in the meantime release as a
+        // harmless StaleLease error (the runtime already freed them,
+        // after draining the tagged copy per §3.2).
+        if !self.deferred_release.is_empty() {
+            let now = hr.node.clock.now();
+            let deferred = std::mem::take(&mut self.deferred_release);
+            for (lease, ready) in deferred {
+                if ready <= now {
+                    let _ = session.release(hr, lease);
+                } else {
+                    self.deferred_release.push((lease, ready));
+                }
+            }
+        }
         for ev in session.drain_revocations(hr) {
             // The runtime already drained DMA, invalidated the placement
             // and freed the bytes; we only repair our own indexes.
@@ -251,7 +314,18 @@ impl KvOffloadManager {
         let ready = match res {
             BlockResidency::Local => {
                 self.stats.local_hits += 1;
-                now
+                match self.pending_prefetch.remove(&id) {
+                    // A prefetched block: on-time arrival means the whole
+                    // reload left the critical path; a late arrival still
+                    // shortens the stall to the residual copy time.
+                    Some(ready_at) => {
+                        if let Some(p) = self.planner.as_mut() {
+                            p.mark_used(id.0, now);
+                        }
+                        ready_at.max(now)
+                    }
+                    None => now,
+                }
             }
             _ => self.ensure_local(hr, id),
         };
@@ -316,12 +390,37 @@ impl KvOffloadManager {
     /// Evict until `headroom` local slots are free. Victims are gathered
     /// first and offloaded as one batch, so multi-block pressure costs
     /// one vectored admission instead of N scalar ones.
+    ///
+    /// Blocks whose background prefetch copy is still in flight are
+    /// skipped as victims while any alternative exists — spilling them
+    /// would read local bytes the copy has not finished writing. If
+    /// *only* such blocks remain, the oldest one's copy is waited out
+    /// (a demand-path stall, correctness over overlap) and it is
+    /// evicted normally.
     fn make_room(&mut self, hr: &mut HarvestRuntime, headroom: usize) {
+        let now = hr.node.clock.now();
         let mut victims = Vec::new();
-        while self.policy.len() + headroom > self.cfg.local_capacity_blocks {
-            let Some(victim) = self.policy.victim() else { break };
-            self.policy.remove(victim);
-            victims.push(victim);
+        let mut inflight: Vec<BlockId> = Vec::new();
+        while self.policy.len() + inflight.len() + headroom > self.cfg.local_capacity_blocks {
+            match self.policy.victim() {
+                Some(victim) => {
+                    self.policy.remove(victim);
+                    if self.pending_prefetch.get(&victim).is_some_and(|&r| r > now) {
+                        inflight.push(victim);
+                        continue;
+                    }
+                    victims.push(victim);
+                }
+                None => {
+                    let Some(victim) = inflight.pop() else { break };
+                    let ready = self.pending_prefetch.get(&victim).copied().unwrap_or(now);
+                    hr.node.clock.advance_to(ready);
+                    victims.push(victim);
+                }
+            }
+        }
+        for id in inflight {
+            self.policy.insert(id, now);
         }
         self.offload_batch(hr, victims);
     }
@@ -332,6 +431,182 @@ impl KvOffloadManager {
     pub fn reserve_local(&mut self, hr: &mut HarvestRuntime, blocks: usize) {
         self.sync(hr);
         self.make_room(hr, blocks.min(self.cfg.local_capacity_blocks));
+    }
+
+    // -- deadline-aware prefetch ------------------------------------------
+
+    /// Phase 1 of a prefetch round: name every non-local block the
+    /// predicted `seqs` (from [`crate::server::scheduler::Scheduler::lookahead`])
+    /// would have to reload, deduplicated, in prediction order. Moves
+    /// nothing and issues nothing. `Dropped` blocks are excluded —
+    /// recompute is not DMA and cannot be overlapped by this pipeline.
+    pub fn plan_prefetch(
+        &mut self,
+        hr: &mut HarvestRuntime,
+        seqs: &[SeqId],
+    ) -> Vec<PlannedPrefetch> {
+        self.sync(hr);
+        if self.planner.is_none() {
+            return Vec::new();
+        }
+        let bytes = self.cfg.block_bytes();
+        let mut seen: BTreeSet<BlockId> = BTreeSet::new();
+        let mut out = Vec::new();
+        for &seq in seqs {
+            for &id in self.table.seq_blocks(seq) {
+                if !seen.insert(id) {
+                    continue;
+                }
+                if matches!(
+                    self.table.residency(id),
+                    Some(BlockResidency::Peer { .. }) | Some(BlockResidency::Host)
+                ) {
+                    out.push(PlannedPrefetch { block: id, bytes });
+                }
+            }
+        }
+        out
+    }
+
+    /// Phase 2: issue the planned reloads that are still valid and that
+    /// the planner admits, as background transfers completing by
+    /// `deadline` (the start of the next decode step — the contract that
+    /// keeps prefetch traffic from ever delaying a demand fetch).
+    ///
+    /// Every entry is revalidated against *current* residency first: a
+    /// revocation arriving between plan and submit turned the block
+    /// `Dropped` (or host-backed), so the stale peer lease is never
+    /// read. Returns how many background reloads were issued.
+    pub fn submit_prefetch(
+        &mut self,
+        hr: &mut HarvestRuntime,
+        plan: &[PlannedPrefetch],
+        deadline: Ns,
+    ) -> usize {
+        if self.planner.is_none() || plan.is_empty() {
+            return 0;
+        }
+        // Fold in any revocations that raced in since the plan was made.
+        self.sync(hr);
+        let compute = self.handler.compute_gpu;
+        let dst = DeviceId::Gpu(compute);
+        let mut issued = 0;
+        for p in plan {
+            // Revalidate: the block may have been revoked (Dropped),
+            // reloaded by a demand fetch (Local), or freed (None) since
+            // the plan snapshot.
+            let src = match self.table.residency(p.block) {
+                Some(BlockResidency::Peer { handle, peer }) => {
+                    if hr.node.dma.tag_busy_until(handle.0) > hr.node.clock.now() {
+                        // The spill populate that created this peer copy
+                        // is itself still in flight: fetching now would
+                        // read unwritten bytes, and releasing the lease
+                        // would block on the drain barrier. Skip; the
+                        // next round can pick it up.
+                        self.planner.as_mut().unwrap().mark_stale_plan();
+                        continue;
+                    }
+                    DeviceId::Gpu(peer)
+                }
+                Some(BlockResidency::Host) => DeviceId::Host,
+                _ => {
+                    self.planner.as_mut().unwrap().mark_stale_plan();
+                    continue;
+                }
+            };
+            // Admission before any movement: a yielded prefetch must not
+            // trigger an eviction either. Admit against the scattered
+            // cost the reload will actually pay.
+            let admitted = self.planner.as_mut().unwrap().admit(
+                &hr.node.topo,
+                src,
+                dst,
+                p.bytes,
+                Some(RELOAD_CHUNK_BYTES),
+                deadline,
+            );
+            if !admitted {
+                continue;
+            }
+            self.make_room(hr, 1);
+            // make_room can only evict *local* blocks; `p.block` is not
+            // local, so the source we validated above is untouched.
+            let ready_at = match self.table.residency(p.block).expect("validated above") {
+                BlockResidency::Peer { handle, .. } => {
+                    let lease =
+                        self.leases.remove(&handle).expect("post-sync peer block has live lease");
+                    match Transfer::new()
+                        .chunked(RELOAD_CHUNK_BYTES)
+                        .background()
+                        .fetch(&lease, compute)
+                        .submit(hr)
+                    {
+                        Ok(report) => {
+                            // The peer copy is being consumed. The lease
+                            // stays alive until the tagged background
+                            // copy completes (its bytes must not be
+                            // reallocated under an in-flight read);
+                            // `sync` releases it once matured, when the
+                            // drain barrier is a guaranteed no-op.
+                            // Bandwidth is accounted in the planner's
+                            // ledger only — KvStats' bytes_from_* stay
+                            // demand-reload counters.
+                            self.deferred_release.push((lease, report.end));
+                            report.end
+                        }
+                        Err(_) => {
+                            // Unreachable single-threaded (nothing revokes
+                            // between the sync above and here), but fail
+                            // closed: treat the lease as already dead.
+                            self.table.drop_by_handle(handle);
+                            drop(lease);
+                            self.planner.as_mut().unwrap().mark_stale_plan();
+                            continue;
+                        }
+                    }
+                }
+                BlockResidency::Host => {
+                    let report = Transfer::new()
+                        .chunked(RELOAD_CHUNK_BYTES)
+                        .raw(DeviceId::Host, dst, p.bytes)
+                        .submit(hr)
+                        .expect("raw transfers cannot go stale");
+                    report.end
+                }
+                _ => unreachable!("validated above"),
+            };
+            self.table.set_residency(p.block, BlockResidency::Local);
+            self.policy.insert(p.block, hr.node.clock.now());
+            self.pending_prefetch.insert(p.block, ready_at);
+            let planner = self.planner.as_mut().unwrap();
+            planner.record_issued(p.block.0, p.bytes, ready_at, deadline);
+            planner.mark_link_busy(src, dst, ready_at);
+            issued += 1;
+        }
+        issued
+    }
+
+    /// Plan + submit in one call — the engine's per-step hook.
+    pub fn prefetch_seqs(
+        &mut self,
+        hr: &mut HarvestRuntime,
+        seqs: &[SeqId],
+        deadline: Ns,
+    ) -> usize {
+        let plan = self.plan_prefetch(hr, seqs);
+        self.submit_prefetch(hr, &plan, deadline)
+    }
+
+    /// Cancel pending prefetches for `seq` (scheduler preemption or
+    /// cancellation): their blocks stay local, but the outcome ledger
+    /// records the bandwidth as wasted if they are never used.
+    pub fn cancel_prefetch_seq(&mut self, seq: SeqId) {
+        let Some(planner) = self.planner.as_mut() else { return };
+        for &id in self.table.seq_blocks(seq) {
+            if self.pending_prefetch.remove(&id).is_some() {
+                planner.mark_canceled(id.0);
+            }
+        }
     }
 
     /// Migrate one local block out (§5.2 "workers similarly request block
@@ -349,6 +624,15 @@ impl KvOffloadManager {
     fn offload_batch(&mut self, hr: &mut HarvestRuntime, victims: Vec<BlockId>) {
         if victims.is_empty() {
             return;
+        }
+        // Evicting a block whose prefetch was never consumed: the
+        // background bandwidth was wasted (misprediction or preemption).
+        if let Some(planner) = self.planner.as_mut() {
+            for id in &victims {
+                if self.pending_prefetch.remove(id).is_some() {
+                    planner.mark_canceled(id.0);
+                }
+            }
         }
         let bytes = self.cfg.block_bytes();
         if self.cfg.use_harvest {
@@ -416,6 +700,12 @@ impl KvOffloadManager {
         let removed = self.table.remove_seq(seq);
         for (id, res) in removed {
             self.policy.remove(id);
+            if self.pending_prefetch.remove(&id).is_some() {
+                // Prefetched for a sequence that finished before using it.
+                if let Some(p) = self.planner.as_mut() {
+                    p.mark_canceled(id.0);
+                }
+            }
             if let BlockResidency::Peer { handle, .. } = res {
                 if let Some(lease) = self.leases.remove(&handle) {
                     let session = self.session.expect("lease implies session");
@@ -453,6 +743,11 @@ impl KvOffloadManager {
                 self.leases.len()
             ));
         }
+        for &id in self.pending_prefetch.keys() {
+            if self.table.residency(id) != Some(BlockResidency::Local) {
+                return Err(format!("pending prefetch for non-local block {id:?}"));
+            }
+        }
         Ok(())
     }
 }
@@ -460,7 +755,7 @@ impl KvOffloadManager {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::harvest::{HarvestConfig, MigConfig, RevocationReason};
+    use crate::harvest::{HarvestConfig, MigConfig, PrefetchConfig, RevocationReason};
     use crate::memsim::tenant::TenantLoad;
     use crate::memsim::{NodeSpec, SimNode};
     use crate::moe::config::find_kv_model;
@@ -698,6 +993,122 @@ mod tests {
         kv.access_seq(&mut h, s);
         assert!(h.node.clock.now() > t0, "reloads take time");
         // afterwards everything the pool can hold is local
+        kv.check_invariants().unwrap();
+    }
+
+    /// 6 blocks in an 8-slot pool with the first two explicitly evicted
+    /// to peer: room to prefetch without evicting anything.
+    fn prefetch_setup(h: &mut HarvestRuntime) -> (KvOffloadManager, SeqId, BlockId, BlockId) {
+        let mut kv =
+            KvOffloadManager::new(cfg(true, 8), 0).with_prefetch(PrefetchConfig::default());
+        let s = SeqId(1);
+        for _ in 0..(16 * 6) {
+            kv.append_token(h, s);
+        }
+        let b0 = kv.table().seq_blocks(s)[0];
+        let b1 = kv.table().seq_blocks(s)[1];
+        kv.evict_block(h, b0);
+        kv.evict_block(h, b1);
+        assert!(matches!(kv.table().residency(b0), Some(BlockResidency::Peer { .. })));
+        assert!(matches!(kv.table().residency(b1), Some(BlockResidency::Peer { .. })));
+        // let the spill DMA complete so nothing below waits on it
+        h.advance_to(h.node.clock.now() + 10_000_000);
+        (kv, s, b0, b1)
+    }
+
+    #[test]
+    fn prefetch_overlaps_reload_off_critical_path() {
+        let mut h = hr();
+        let (mut kv, s, b0, b1) = prefetch_setup(&mut h);
+        let plan = kv.plan_prefetch(&mut h, &[s]);
+        assert_eq!(plan.len(), 2, "both peer blocks planned");
+        let t0 = h.node.clock.now();
+        let deadline = t0 + 1_000_000;
+        let issued = kv.submit_prefetch(&mut h, &plan, deadline);
+        assert_eq!(issued, 2);
+        assert_eq!(h.node.clock.now(), t0, "background prefetch must not advance the clock");
+        assert_eq!(kv.table().residency(b0), Some(BlockResidency::Local));
+        assert_eq!(kv.table().residency(b1), Some(BlockResidency::Local));
+        kv.check_invariants().unwrap();
+        // the consumed source leases stay alive until their copies end
+        assert_eq!(h.live_bytes_on(1), 2 * kv.cfg.block_bytes(), "deferred release");
+        // once the background copies complete, access is pure hit: no stall
+        h.advance_to(deadline);
+        let t1 = h.node.clock.now();
+        kv.access_seq(&mut h, s);
+        assert_eq!(h.node.clock.now(), t1, "prefetched blocks reload without stall");
+        assert_eq!(h.live_bytes_on(1), 0, "matured source leases released at sync");
+        let pf = kv.prefetch_stats().unwrap();
+        assert_eq!(pf.issued, 2);
+        assert_eq!(pf.hits, 2);
+        assert_eq!(pf.late, 0);
+        assert_eq!(kv.stats.peer_reloads, 0, "no demand reload was needed");
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn late_prefetch_is_counted_and_still_bounded_by_copy_end() {
+        let mut h = hr();
+        let (mut kv, s, _b0, _b1) = prefetch_setup(&mut h);
+        let plan = kv.plan_prefetch(&mut h, &[s]);
+        let t0 = h.node.clock.now();
+        kv.submit_prefetch(&mut h, &plan, t0 + 1_000_000);
+        // consume immediately, before the background copies finish
+        kv.access_seq(&mut h, s);
+        let pf = kv.prefetch_stats().unwrap();
+        assert_eq!(pf.late, 2, "used before arrival");
+        assert_eq!(pf.hits, 0);
+        assert!(h.node.clock.now() > t0, "partial stall: wait out the residual copy");
+        assert!(h.node.clock.now() <= t0 + 1_000_000);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn revocation_between_plan_and_submit_never_reads_stale_lease() {
+        let mut h = hr();
+        let (mut kv, s, b0, b1) = prefetch_setup(&mut h);
+        let plan = kv.plan_prefetch(&mut h, &[s]);
+        assert_eq!(plan.len(), 2);
+        // the race: peer revokes everything after the plan snapshot
+        h.revoke_peer(1, RevocationReason::TenantPressure);
+        let issued = kv.submit_prefetch(&mut h, &plan, u64::MAX);
+        assert_eq!(issued, 0, "stale plan entries are skipped, not read");
+        let pf = kv.prefetch_stats().unwrap();
+        assert_eq!(pf.stale_plans, 2);
+        assert_eq!(pf.issued, 0);
+        // lossy blocks dropped by the revocation stay dropped
+        assert_eq!(kv.table().residency(b0), Some(BlockResidency::Dropped));
+        assert_eq!(kv.table().residency(b1), Some(BlockResidency::Dropped));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn unused_prefetch_counts_as_waste() {
+        let mut h = hr();
+        let (mut kv, s, _b0, _b1) = prefetch_setup(&mut h);
+        let plan = kv.plan_prefetch(&mut h, &[s]);
+        kv.submit_prefetch(&mut h, &plan, h.node.clock.now() + 1_000_000);
+        // the sequence finishes before ever touching the prefetched blocks
+        kv.finish_seq(&mut h, s);
+        let pf = kv.prefetch_stats().unwrap();
+        assert_eq!(pf.wasted, 2);
+        assert_eq!(pf.bytes_wasted, 2 * kv.cfg.block_bytes());
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefetch_yields_to_demand_traffic_and_evicts_nothing() {
+        let mut h = hr();
+        let (mut kv, s, _b0, _b1) = prefetch_setup(&mut h);
+        let plan = kv.plan_prefetch(&mut h, &[s]);
+        let local_before = kv.local_blocks();
+        // demand traffic occupies the reload link (peer -> compute)
+        h.node.copy(DeviceId::Gpu(1), DeviceId::Gpu(0), 256 * (1 << 20), None);
+        let issued = kv.submit_prefetch(&mut h, &plan, u64::MAX);
+        assert_eq!(issued, 0, "prefetch must never queue behind demand traffic");
+        let pf = kv.prefetch_stats().unwrap();
+        assert_eq!(pf.yielded, 2);
+        assert_eq!(kv.local_blocks(), local_before, "a yielded prefetch evicts nothing");
         kv.check_invariants().unwrap();
     }
 

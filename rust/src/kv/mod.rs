@@ -31,5 +31,5 @@ pub mod recompute;
 pub use block::{BlockId, KvBlockMeta, SeqId};
 pub use block_table::{BlockResidency, UnifiedBlockTable};
 pub use eviction::{EvictionPolicy, Fifo, Lfu, Lru, PolicySwitcher};
-pub use manager::{KvConfig, KvOffloadManager, KvStats, OffloadingHandler};
+pub use manager::{KvConfig, KvOffloadManager, KvStats, OffloadingHandler, PlannedPrefetch};
 pub use recompute::RecomputeModel;

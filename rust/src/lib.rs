@@ -16,7 +16,7 @@
 //! | module | role |
 //! |---|---|
 //! | [`memsim`] | calibrated multi-GPU node simulation: HBM allocator, NVLink/PCIe interconnect model, virtual clock, async DMA, tenant pressure |
-//! | [`harvest`] | the paper's contribution behind a lease-based API: sessions with RAII `Lease`s, vectored all-or-nothing `alloc_many`, pull-model revocation events (`drain_revocations`), the unified `Transfer` builder, placement policies, revocation pipeline, MIG isolation (the paper's raw `harvest_alloc`/`harvest_free`/`harvest_register_cb` survive as deprecated shims) |
+//! | [`harvest`] | the paper's contribution behind a lease-based API: sessions with RAII `Lease`s, vectored all-or-nothing `alloc_many`, pull-model revocation events (`drain_revocations`), the unified `Transfer` builder, placement policies, revocation pipeline, deadline-aware prefetch planning (`prefetch`), MIG isolation (the paper's raw `harvest_alloc`/`harvest_free`/`harvest_register_cb` survive as deprecated shims) |
 //! | [`moe`] | MoE serving path: Table-1 model registry, routing simulator, expert residency map + rebalancer, CGOPipe-style pipeline |
 //! | [`kv`] | paged KV cache: blocks, unified block table, `KvOffloadManager`, per-device `OffloadingHandler`, eviction policies |
 //! | [`server`] | serving coordinator: requests, continuous batcher, FCFS + completely-fair schedulers, engine, metrics |

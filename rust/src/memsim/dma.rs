@@ -123,7 +123,11 @@ impl DmaEngine {
     }
 
     /// Drain all in-flight ops touching `tag`: advance virtual time past
-    /// them and forget the tag. The revocation pre-free barrier.
+    /// them and forget the tag. The revocation pre-free barrier —
+    /// background (prefetch) transfers are covered by it exactly like
+    /// demand DMA; consumers keep the barrier off the hot path by only
+    /// freeing once the tagged copy has already completed (see
+    /// [`crate::harvest::session::Transfer::background`]).
     pub fn drain_tag(&mut self, topo: &Topology, tag: u64) -> Ns {
         let t = self.tags.remove(&tag).unwrap_or(0);
         topo.clock().advance_to(t)
@@ -198,6 +202,20 @@ mod tests {
         assert_eq!(t, b.end);
         // tag forgotten after drain
         assert_eq!(dma.tag_busy_until(7), 0);
+    }
+
+    #[test]
+    fn drain_of_completed_tag_is_a_noop_barrier() {
+        let (mut topo, mut dma) = setup();
+        let s = dma.create_stream();
+        let ev =
+            dma.copy(&mut topo, s, DeviceId::Gpu(0), DeviceId::Gpu(1), MIB, Some(9)).unwrap();
+        // once virtual time has passed the op, draining costs nothing —
+        // the property the deferred-release prefetch path relies on
+        topo.clock().advance_to(ev.end + 10);
+        let before = topo.clock().now();
+        assert_eq!(dma.drain_tag(&topo, 9), before, "no further advance");
+        assert_eq!(dma.tag_busy_until(9), 0, "tag forgotten after drain");
     }
 
     #[test]

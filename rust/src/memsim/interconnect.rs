@@ -294,6 +294,41 @@ impl Topology {
     pub fn busy_until(&self, src: DeviceId, dst: DeviceId) -> Ns {
         self.links.get(&(src, dst)).map(|l| l.busy_until).unwrap_or(0)
     }
+
+    /// Earliest completion of a contiguous (src,dst) transfer issued at
+    /// the current virtual time, accounting for FIFO contention:
+    /// `max(now, busy_until) + latency(bytes)`. This is the estimate the
+    /// deadline-aware prefetch planner consults to decide whether a
+    /// background transfer can meet its deadline without delaying demand
+    /// traffic (see [`crate::harvest::prefetch`]).
+    pub fn earliest_completion(&self, src: DeviceId, dst: DeviceId, bytes: u64) -> Option<Ns> {
+        let link = self.links.get(&(src, dst))?;
+        Some(self.clock.now().max(link.busy_until) + link.model.latency(bytes))
+    }
+
+    /// Like [`Topology::earliest_completion`], but for a *scattered*
+    /// transfer split into `bytes.div_ceil(chunk)` descriptors, each
+    /// paying the link's per-transfer base latency — the exact cost
+    /// model [`crate::memsim::DmaEngine::copy_scattered`] charges.
+    /// Admission control must use this for chunked transfers: the
+    /// contiguous estimate undershoots, and a prefetch admitted on it
+    /// could occupy the link past its deadline.
+    pub fn earliest_completion_scattered(
+        &self,
+        src: DeviceId,
+        dst: DeviceId,
+        bytes: u64,
+        chunk: u64,
+    ) -> Option<Ns> {
+        let link = self.links.get(&(src, dst))?;
+        let n = bytes.div_ceil(chunk.max(1)).max(1);
+        // copy_scattered splits into n pieces of bytes/n, the first
+        // bytes % n of them one byte larger.
+        let per = bytes / n;
+        let rem = bytes % n;
+        let lat = (n - rem) * link.model.latency(per) + rem * link.model.latency(per + 1);
+        Some(self.clock.now().max(link.busy_until) + lat)
+    }
 }
 
 #[cfg(test)]
@@ -455,6 +490,43 @@ mod tests {
             assert!(nv.latency(bytes) < cxl.latency(bytes));
             assert!(cxl.latency(bytes) < pcie.latency(bytes));
         }
+    }
+
+    #[test]
+    fn earliest_completion_accounts_for_queue() {
+        let clock = Clock::new();
+        let mut t = Topology::h100_node(clock, 2);
+        let idle = t.earliest_completion(DeviceId::Gpu(0), DeviceId::Gpu(1), MIB).unwrap();
+        assert_eq!(idle, LinkModel::nvlink_h100().latency(MIB));
+        // queue a transfer: the next one completes after it
+        let (_, e1) = t.schedule(DeviceId::Gpu(0), DeviceId::Gpu(1), MIB, 0).unwrap();
+        let queued = t.earliest_completion(DeviceId::Gpu(0), DeviceId::Gpu(1), MIB).unwrap();
+        assert_eq!(queued, e1 + LinkModel::nvlink_h100().latency(MIB));
+        // unknown link pair
+        assert!(t.earliest_completion(DeviceId::Gpu(0), DeviceId::Gpu(0), MIB).is_none());
+    }
+
+    #[test]
+    fn scattered_completion_matches_scattered_copy_cost() {
+        let t = Topology::h100_node(Clock::new(), 2);
+        let (src, dst) = (DeviceId::Gpu(1), DeviceId::Gpu(0));
+        let bytes = 9 * MIB;
+        let chunk = 4 * MIB;
+        let scattered = t.earliest_completion_scattered(src, dst, bytes, chunk).unwrap();
+        let contiguous = t.earliest_completion(src, dst, bytes).unwrap();
+        assert!(
+            scattered > contiguous,
+            "per-chunk overheads must be charged: {scattered} <= {contiguous}"
+        );
+        // exact agreement with what the DMA engine would schedule
+        let m = LinkModel::nvlink_h100(); // 1 hop on the 2-GPU mesh
+        let n = bytes.div_ceil(chunk); // 3 chunks of 3 MiB
+        assert_eq!(scattered, n * m.latency(bytes / n));
+        // degenerate single chunk equals the contiguous estimate
+        assert_eq!(
+            t.earliest_completion_scattered(src, dst, MIB, chunk),
+            t.earliest_completion(src, dst, MIB)
+        );
     }
 
     #[test]

@@ -80,6 +80,9 @@ pub struct PipelineStats {
     pub fetches_host: u64,
     pub bytes_from_peer: u64,
     pub bytes_from_host: u64,
+    /// Experts predictively promoted to peer HBM during this pass (only
+    /// non-zero under [`CgoPipe::decode_pass_prefetched`]).
+    pub prefetch_promotions: u64,
 }
 
 impl PipelineStats {
@@ -100,6 +103,7 @@ impl PipelineStats {
         self.fetches_host += other.fetches_host;
         self.bytes_from_peer += other.bytes_from_peer;
         self.bytes_from_host += other.bytes_from_host;
+        self.prefetch_promotions += other.prefetch_promotions;
     }
 }
 
@@ -135,13 +139,63 @@ impl CgoPipe {
         hr: &mut HarvestRuntime,
         tier: OffloadTier,
     ) -> PipelineStats {
+        self.run_pass(router, reb, hr, tier, false)
+    }
+
+    /// [`CgoPipe::decode_pass`] plus the predictive prefetch pipeline:
+    /// while layer *L*'s micro-batches compute, the rebalancer promotes
+    /// the experts the router predicts for layer *L+1* into peer HBM
+    /// (host→peer populates, which share no link with the demand expert
+    /// fetches), with the predicted start of that layer as the deadline.
+    /// Requires the rebalancer to be built
+    /// [`ExpertRebalancer::with_prefetch`]; otherwise identical to
+    /// [`CgoPipe::decode_pass`].
+    pub fn decode_pass_prefetched(
+        &self,
+        router: &mut RouterSim,
+        reb: &mut ExpertRebalancer,
+        hr: &mut HarvestRuntime,
+        tier: OffloadTier,
+    ) -> PipelineStats {
+        self.run_pass(router, reb, hr, tier, true)
+    }
+
+    fn run_pass(
+        &self,
+        router: &mut RouterSim,
+        reb: &mut ExpertRebalancer,
+        hr: &mut HarvestRuntime,
+        tier: OffloadTier,
+        prefetch: bool,
+    ) -> PipelineStats {
         let mut stats = PipelineStats { tokens: self.batch_tokens(), ..Default::default() };
         // Tick boundary: drain revocation events accumulated since the
         // last pass so the whole pass sees one consistent residency view.
         reb.sync(hr);
         let pass_start = hr.node.clock.now();
+        let layer_compute_ns = self.cost.microbatch_ns(self.model, self.micro_batch_tokens)
+            * self.n_micro_batches as u64;
         let mut compute_cursor = pass_start;
         for layer in 0..self.model.n_layers as usize {
+            if prefetch
+                && reb.prefetch_enabled()
+                && matches!(tier, OffloadTier::Harvest)
+                && layer + 1 < self.model.n_layers as usize
+            {
+                // Predictive promotion for the *next* layer, overlapped
+                // with this layer's compute. Deadline: the earliest that
+                // layer's first micro-batch can start.
+                let next = layer + 1;
+                let n_hot = (self.model.n_experts as usize / 4).max(self.model.top_k as usize);
+                let keys: Vec<ExpertKey> = router
+                    .predict_activations(next, n_hot)
+                    .into_iter()
+                    .map(|e| ExpertKey { layer: next as u32, expert: e as u32 })
+                    .collect();
+                let deadline = compute_cursor + layer_compute_ns;
+                let promoted = reb.prefetch_experts(hr, &keys, deadline);
+                stats.prefetch_promotions += promoted as u64;
+            }
             // Routing for the whole layer is known up front (gating runs
             // on the CPU from the previous layer's activations), so
             // transfers for later micro-batches overlap earlier compute —
@@ -312,6 +366,51 @@ mod tests {
         let s = pipe.decode_pass(&mut router, &mut reb, &mut hr, OffloadTier::Cpu);
         let tps = s.tokens_per_sec();
         assert!((300.0..4000.0).contains(&tps), "qwen baseline {tps:.0} tok/s");
+    }
+
+    #[test]
+    fn prefetched_pass_promotes_predicted_experts_and_serves_from_peer() {
+        let model = find_moe_model("phi-tiny").unwrap();
+        let hr_new = || {
+            HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2))
+        };
+        // Everything starts host-resident; no upfront rebalance. The
+        // prefetched pass must promote predicted-hot experts on its own.
+        let pipe = CgoPipe::paper_setup(model);
+        let mut hr = hr_new();
+        let mut router = RouterSim::new(model, model.n_layers as usize, 7);
+        let mut reb = ExpertRebalancer::new(model, 0, 1.0)
+            .with_prefetch(crate::harvest::PrefetchConfig::default());
+        let p = pipe.decode_pass_prefetched(&mut router, &mut reb, &mut hr, OffloadTier::Harvest);
+        assert!(p.prefetch_promotions > 0, "predictive promotion must happen");
+        assert!(p.fetches_peer > 0, "promoted experts serve later layers from peer");
+        let pf = reb.prefetch_stats().unwrap();
+        assert!(pf.issued >= p.prefetch_promotions);
+        assert!(pf.hits > 0, "{pf:?}");
+
+        // And it beats the plain (reactive, host-only) pass.
+        let mut hr2 = hr_new();
+        let mut router2 = RouterSim::new(model, model.n_layers as usize, 7);
+        let mut reb2 = ExpertRebalancer::new(model, 0, 1.0);
+        let plain = pipe.decode_pass(&mut router2, &mut reb2, &mut hr2, OffloadTier::Harvest);
+        assert_eq!(plain.fetches_peer, 0, "no promotion without prefetch");
+        assert!(
+            p.fetches_host < plain.fetches_host,
+            "prefetch {} host fetches !< plain {}",
+            p.fetches_host,
+            plain.fetches_host
+        );
+    }
+
+    #[test]
+    fn prefetched_pass_without_planner_matches_plain_pass() {
+        let (pipe, mut router, mut reb, mut hr) = setup("phi-tiny", 0.5);
+        let a = pipe.decode_pass_prefetched(&mut router, &mut reb, &mut hr, OffloadTier::Harvest);
+        assert_eq!(a.prefetch_promotions, 0, "no planner, no promotions");
+        let (pipe2, mut router2, mut reb2, mut hr2) = setup("phi-tiny", 0.5);
+        let b = pipe2.decode_pass(&mut router2, &mut reb2, &mut hr2, OffloadTier::Harvest);
+        assert_eq!(a.pass_ns, b.pass_ns, "identical without a planner");
+        assert_eq!(a.fetches_host, b.fetches_host);
     }
 
     #[test]

@@ -18,9 +18,10 @@
 use super::config::MoeModel;
 use super::residency::{ExpertKey, ExpertResidency, ResidencyMap};
 use crate::harvest::api::{AllocHints, Durability, LeaseId};
+use crate::harvest::prefetch::{PrefetchConfig, PrefetchPlanner, PrefetchStats};
 use crate::harvest::session::{HarvestSession, Lease, Transfer};
 use crate::harvest::{HarvestRuntime, PayloadKind};
-use crate::memsim::{CopyEvent, DeviceId};
+use crate::memsim::{CopyEvent, DeviceId, Ns};
 use std::collections::BTreeMap;
 
 /// Where an expert fetch was served from (metrics / Fig. 5 attribution).
@@ -40,6 +41,15 @@ pub struct ExpertRebalancer {
     session: Option<HarvestSession>,
     /// Live peer leases; the map's `PeerHbm` entries mirror this exactly.
     leases: BTreeMap<LeaseId, Lease>,
+    /// Deadline-aware predictive promotion (enabled via
+    /// [`ExpertRebalancer::with_prefetch`]).
+    planner: Option<PrefetchPlanner>,
+    /// Leases created by predictive prefetch: lease → (deadline, used?).
+    /// First use settles the planner ledger against the *deadline* (the
+    /// pipeline tracks compute on a cursor ahead of the virtual clock,
+    /// so clock-now would misread every promotion as late); revocation
+    /// before first use is waste.
+    prefetched: BTreeMap<LeaseId, (Ns, bool)>,
     /// Cumulative migration/fetch statistics.
     pub migrations: u64,
     pub migration_failures: u64,
@@ -59,10 +69,29 @@ impl ExpertRebalancer {
             compute_gpu,
             session: None,
             leases: BTreeMap::new(),
+            planner: None,
+            prefetched: BTreeMap::new(),
             migrations: 0,
             migration_failures: 0,
             revocations_observed: 0,
         }
+    }
+
+    /// Enable deadline-aware predictive promotion: the pipeline can then
+    /// call [`ExpertRebalancer::prefetch_experts`] with the router's
+    /// predicted activations.
+    pub fn with_prefetch(mut self, cfg: PrefetchConfig) -> Self {
+        self.planner = Some(PrefetchPlanner::new(cfg));
+        self
+    }
+
+    pub fn prefetch_enabled(&self) -> bool {
+        self.planner.is_some()
+    }
+
+    /// The prefetch outcome ledger (None when prefetch is disabled).
+    pub fn prefetch_stats(&self) -> Option<&PrefetchStats> {
+        self.planner.as_ref().map(|p| p.stats())
     }
 
     pub fn residency(&self) -> &ResidencyMap {
@@ -94,6 +123,14 @@ impl ExpertRebalancer {
             self.leases.remove(&ev.lease);
             self.map.invalidate_handle(ev.lease);
             self.revocations_observed += 1;
+            if self.prefetched.remove(&ev.lease).is_some() {
+                // A predictively promoted expert revoked (whether or not
+                // it ever served a fetch); if it never did, the planner
+                // still holds its in-flight entry and counts the waste.
+                if let Some(p) = self.planner.as_mut() {
+                    p.mark_canceled(ev.lease.0);
+                }
+            }
         }
     }
 
@@ -134,6 +171,77 @@ impl ExpertRebalancer {
         promoted
     }
 
+    /// Predictively promote `predicted` experts (the router's
+    /// [`crate::moe::router::RouterSim::predict_activations`]) from host
+    /// DRAM into peer HBM, deadline-aware: each host→peer populate is a
+    /// background transfer that must complete by `deadline` (the
+    /// predicted start of the layer that needs them) and yields instead
+    /// of queueing behind demand traffic. Unlike
+    /// [`ExpertRebalancer::rebalance`], which promotes host-resident
+    /// experts in index order, this promotes exactly what the router
+    /// expects to fire — predictive, not reactive. Returns how many
+    /// were promoted.
+    pub fn prefetch_experts(
+        &mut self,
+        hr: &mut HarvestRuntime,
+        predicted: &[ExpertKey],
+        deadline: Ns,
+    ) -> usize {
+        self.sync(hr);
+        if self.planner.is_none() {
+            return 0;
+        }
+        let bytes = self.model.expert_bytes();
+        let session = self.session(hr);
+        let mut promoted = 0;
+        for &key in predicted {
+            if !matches!(self.map.get(key), ExpertResidency::Host) {
+                continue; // local or already peer-cached
+            }
+            let hints = AllocHints {
+                compute_gpu: Some(self.compute_gpu),
+                durability: Durability::HostBacked,
+                ..Default::default()
+            };
+            // The placement policy picks the peer, which determines the
+            // populate link — so allocate first, then ask the planner.
+            let Ok(lease) = session.alloc(hr, bytes, hints) else {
+                self.migration_failures += 1;
+                break; // peers full: stop this round
+            };
+            let (src, dst) = (DeviceId::Host, DeviceId::Gpu(lease.peer()));
+            // Contiguous populate (expert weights are one segment).
+            let admitted = self
+                .planner
+                .as_mut()
+                .unwrap()
+                .admit(&hr.node.topo, src, dst, bytes, None, deadline);
+            if !admitted {
+                // Busy link or unmeetable deadline on *this* peer's
+                // populate link: undo the allocation and try the next
+                // predicted expert — the policy may place it on another
+                // peer whose link is idle.
+                let _ = session.release(hr, lease);
+                continue;
+            }
+            let report = Transfer::new()
+                .background()
+                .populate(&lease, DeviceId::Host)
+                .submit(hr)
+                .expect("fresh lease");
+            let ok = self.map.promote_to_peer(key, lease.id(), lease.peer());
+            debug_assert!(ok);
+            let planner = self.planner.as_mut().unwrap();
+            planner.record_issued(lease.id().0, bytes, report.end, deadline);
+            planner.mark_link_busy(src, dst, report.end);
+            self.prefetched.insert(lease.id(), (deadline, false));
+            self.leases.insert(lease.id(), lease);
+            promoted += 1;
+            self.migrations += 1;
+        }
+        promoted
+    }
+
     /// Serve one expert for the FFN of `key` on the compute GPU. Returns
     /// the tier it came from and the async copy event (None for local).
     ///
@@ -157,10 +265,34 @@ impl ExpertRebalancer {
                     Transfer::new().fetch(lease, self.compute_gpu).submit(hr).ok()
                 });
                 match served {
-                    Some(report) => (FetchSource::Peer, Some(report.events[0])),
+                    Some(report) => {
+                        // First use of a predictively promoted expert:
+                        // settle the prefetch ledger — a hit if the
+                        // populate completed by the deadline it was
+                        // promised for.
+                        if let Some((deadline, used)) = self.prefetched.get_mut(&handle) {
+                            if !*used {
+                                *used = true;
+                                let deadline = *deadline;
+                                if let Some(p) = self.planner.as_mut() {
+                                    p.mark_used(handle.0, deadline);
+                                }
+                            }
+                        }
+                        (FetchSource::Peer, Some(report.events[0]))
+                    }
                     None => {
                         self.leases.remove(&handle);
                         self.map.invalidate_handle(handle);
+                        // Mirror the sync path: a predictively promoted
+                        // expert dying here must settle the planner's
+                        // in-flight entry as waste, or it would occupy a
+                        // max_inflight slot forever.
+                        if self.prefetched.remove(&handle).is_some() {
+                            if let Some(p) = self.planner.as_mut() {
+                                p.mark_canceled(handle.0);
+                            }
+                        }
                         let ev = hr.node.copy(
                             DeviceId::Host,
                             DeviceId::Gpu(self.compute_gpu),
@@ -298,6 +430,73 @@ mod tests {
         let (src, _) = reb.fetch_expert(&mut hr, ExpertKey { layer: 0, expert: 0 });
         assert_eq!(src, FetchSource::Host);
         assert_eq!(reb.revocations_observed(), 4);
+        reb.residency().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefetch_promotes_exactly_the_predicted_experts() {
+        let mut hr = runtime();
+        let model = find_moe_model("phi-tiny").unwrap();
+        let mut reb = ExpertRebalancer::new(model, 0, 1.0)
+            .with_prefetch(crate::harvest::PrefetchConfig::default());
+        let predicted = [
+            ExpertKey { layer: 3, expert: 5 },
+            ExpertKey { layer: 3, expert: 9 },
+            ExpertKey { layer: 7, expert: 1 },
+        ];
+        let deadline = hr.node.clock.now() + 100_000_000;
+        let promoted = reb.prefetch_experts(&mut hr, &predicted, deadline);
+        assert_eq!(promoted, 3);
+        for key in predicted {
+            assert!(
+                matches!(reb.residency().get(key), ExpertResidency::PeerHbm { .. }),
+                "{key:?} not promoted"
+            );
+        }
+        // prediction-driven: nothing else moved
+        assert_eq!(reb.residency().counts().1, 3);
+        assert_eq!(reb.prefetch_stats().unwrap().issued, 3);
+        // first fetch settles the ledger as a hit once the populate is done
+        hr.advance_to(deadline);
+        let (src, _) = reb.fetch_expert(&mut hr, predicted[0]);
+        assert_eq!(src, FetchSource::Peer);
+        assert_eq!(reb.prefetch_stats().unwrap().hits, 1);
+        reb.residency().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefetch_yields_to_busy_populate_link() {
+        let mut hr = runtime();
+        let model = find_moe_model("phi-tiny").unwrap();
+        let mut reb = ExpertRebalancer::new(model, 0, 1.0)
+            .with_prefetch(crate::harvest::PrefetchConfig::default());
+        // demand traffic owns the host->peer link
+        hr.node.copy(DeviceId::Host, DeviceId::Gpu(1), 1 << 30, None);
+        let predicted = [ExpertKey { layer: 0, expert: 0 }];
+        let promoted = reb.prefetch_experts(&mut hr, &predicted, u64::MAX);
+        assert_eq!(promoted, 0, "must yield to demand traffic");
+        assert_eq!(reb.prefetch_stats().unwrap().yielded, 1);
+        assert_eq!(hr.live_bytes_on(1), 0, "yielded prefetch leaves no allocation behind");
+        reb.residency().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn revoked_unused_prefetch_counts_as_waste() {
+        let mut hr = runtime();
+        let model = find_moe_model("phi-tiny").unwrap();
+        let mut reb = ExpertRebalancer::new(model, 0, 1.0)
+            .with_prefetch(crate::harvest::PrefetchConfig::default());
+        let predicted = [ExpertKey { layer: 0, expert: 0 }, ExpertKey { layer: 0, expert: 1 }];
+        reb.prefetch_experts(&mut hr, &predicted, hr.node.clock.now() + 100_000_000);
+        hr.revoke_peer(1, RevocationReason::TenantPressure);
+        reb.sync(&mut hr);
+        let pf = reb.prefetch_stats().unwrap();
+        assert_eq!(pf.wasted, 2, "never-used promotions revoked -> waste");
+        assert_eq!(pf.bytes_wasted, 2 * model.expert_bytes());
+        assert_eq!(reb.residency().counts().1, 0);
+        // fallback is host, as for any revocation
+        let (src, _) = reb.fetch_expert(&mut hr, predicted[0]);
+        assert_eq!(src, FetchSource::Host);
         reb.residency().check_invariants().unwrap();
     }
 

@@ -140,6 +140,18 @@ impl RouterSim {
         (0..self.n_experts).filter(|&e| needed[e]).collect()
     }
 
+    /// Predict the `n` experts most likely to activate at `layer` under
+    /// the *current* drifted permutation: Zipf mass decreases with rank,
+    /// so rank order *is* the probability order. Pure prediction — no
+    /// sampling, no drift, no stats — making it safe for the prefetch
+    /// pipeline ([`crate::harvest::prefetch`]) to consult mid-pass: the
+    /// expert rebalancer promotes these to peer HBM ahead of the layer
+    /// that needs them. Mispredictions (drift between prediction and
+    /// use) cost wasted prefetch bandwidth, never correctness.
+    pub fn predict_activations(&self, layer: usize, n: usize) -> Vec<usize> {
+        self.perms[layer].iter().copied().take(n.min(self.n_experts)).collect()
+    }
+
     /// Shift hotspots: a few adjacent swaps in each layer's permutation
     /// (gradual drift, as observed across query-mix changes).
     fn drift(&mut self) {
@@ -227,6 +239,36 @@ mod tests {
         // 324 tokens x top-2 of 8 experts: all or nearly all experts hit
         assert!(needed.len() >= 6, "needed={needed:?}");
         assert!(needed.windows(2).all(|w| w[0] < w[1]), "sorted distinct");
+    }
+
+    #[test]
+    fn predicted_hot_experts_capture_actual_skew() {
+        let m = find_moe_model("phi-3.5").unwrap();
+        let mut r = RouterSim::new(m, 1, 11).with_drift_interval(1_000_000); // no drift
+        let predicted: Vec<usize> = r.predict_activations(0, 4);
+        assert_eq!(predicted.len(), 4);
+        for _ in 0..5_000 {
+            r.route_token(0);
+        }
+        // The predicted top-4 of 16 experts must take far more than the
+        // uniform 25% share of actual activations.
+        let total: u64 = r.stats.activations.iter().sum();
+        let hot: u64 = predicted.iter().map(|&e| r.stats.activations[e]).sum();
+        let share = hot as f64 / total as f64;
+        assert!(share > 0.4, "predicted-hot share {share:.2} barely beats uniform");
+    }
+
+    #[test]
+    fn predict_activations_is_pure_and_bounded() {
+        let m = find_moe_model("mixtral").unwrap();
+        let r = RouterSim::new(m, 2, 3);
+        let a = r.predict_activations(1, 100);
+        assert_eq!(a.len(), 8, "clamped to n_experts");
+        assert_eq!(a, r.predict_activations(1, 100), "pure");
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 8, "a permutation prefix has no duplicates");
     }
 
     #[test]

@@ -112,6 +112,11 @@ pub struct RealEngineReport {
     pub metrics: ServeMetrics,
     pub expert_usage: ExpertUsage,
     pub decode_steps: u64,
+    /// Steps decoded while at least one request sat in the admission
+    /// queue (blocked on free KV pages or batch slots) — the real
+    /// engine's capacity analogue of the sim engine's
+    /// `decode_stall_ns` bandwidth stall.
+    pub admission_blocked_steps: u64,
     pub wall_seconds: f64,
     /// Generated token ids per request (for determinism checks).
     pub outputs: BTreeMap<u64, Vec<i32>>,
@@ -168,6 +173,7 @@ impl RealEngine {
         let mut batcher = ContinuousBatcher::new(self.max_batch, requests);
         let mut live: BTreeMap<SeqId, LiveSeq> = BTreeMap::new();
         let mut steps = 0u64;
+        let mut blocked_steps = 0u64;
 
         while !batcher.all_done() {
             // Admission: virtual arrivals are ignored on the real engine
@@ -192,6 +198,10 @@ impl RealEngine {
             }
             if live.is_empty() {
                 break;
+            }
+            if batcher.pending() > 0 {
+                // This step decodes while someone queues for capacity.
+                blocked_steps += 1;
             }
             // One step: every live sequence feeds its next token.
             let ids: Vec<SeqId> = live.keys().copied().collect();
@@ -263,6 +273,7 @@ impl RealEngine {
             metrics,
             expert_usage: usage,
             decode_steps: steps,
+            admission_blocked_steps: blocked_steps,
             wall_seconds: wall_start.elapsed().as_secs_f64(),
             outputs,
         })

@@ -1,5 +1,7 @@
-//! Serving metrics: TTFT, end-to-end latency, throughput; JSON export.
+//! Serving metrics: TTFT, end-to-end latency, throughput, decode-stall
+//! attribution and prefetch outcomes; JSON export.
 
+use crate::harvest::prefetch::PrefetchStats;
 use crate::memsim::Ns;
 use crate::util::json::{obj, Json};
 use crate::util::stats::Summary;
@@ -15,6 +17,12 @@ pub struct ServeMetrics {
     pub per_token: Summary,
     pub tokens_generated: u64,
     pub requests_finished: u64,
+    /// Total decode time spent waiting on KV residency (reload DMA /
+    /// recompute) rather than computing — the quantity the prefetch
+    /// pipeline exists to shrink.
+    pub decode_stall_ns: Ns,
+    /// Prefetch outcome ledger, when the engine ran with prefetch on.
+    pub prefetch: Option<PrefetchStats>,
     start: Option<Ns>,
     end: Ns,
 }
@@ -45,6 +53,12 @@ impl ServeMetrics {
         self.end = self.end.max(now);
     }
 
+    /// Record time a decode step spent blocked on KV residency before
+    /// its compute could start.
+    pub fn on_stall(&mut self, stall_ns: Ns) {
+        self.decode_stall_ns += stall_ns;
+    }
+
     pub fn makespan_ns(&self) -> Ns {
         self.end.saturating_sub(self.start.unwrap_or(0))
     }
@@ -60,7 +74,7 @@ impl ServeMetrics {
     }
 
     pub fn to_json(&self) -> Json {
-        obj([
+        let mut pairs: Vec<(&'static str, Json)> = vec![
             ("tokens_generated", self.tokens_generated.into()),
             ("requests_finished", self.requests_finished.into()),
             ("makespan_ns", self.makespan_ns().into()),
@@ -70,7 +84,17 @@ impl ServeMetrics {
             ("e2e_p50_ns", self.e2e.percentile(50.0).into()),
             ("e2e_p99_ns", self.e2e.percentile(99.0).into()),
             ("per_token_mean_ns", self.per_token.mean().into()),
-        ])
+            ("decode_stall_ns", self.decode_stall_ns.into()),
+        ];
+        if let Some(p) = &self.prefetch {
+            pairs.push(("prefetch_issued", p.issued.into()));
+            pairs.push(("prefetch_hits", p.hits.into()));
+            pairs.push(("prefetch_late", p.late.into()));
+            pairs.push(("prefetch_wasted", p.wasted.into()));
+            pairs.push(("prefetch_yielded", p.yielded.into()));
+            pairs.push(("prefetch_bytes", p.bytes_prefetched.into()));
+        }
+        obj(pairs)
     }
 }
 
@@ -110,5 +134,26 @@ mod tests {
         let j = m.to_json();
         assert!(j.get("throughput_tps").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(j.get("tokens_generated").unwrap().as_u64().unwrap(), 1);
+    }
+
+    #[test]
+    fn stall_and_prefetch_surface_in_json() {
+        let mut m = ServeMetrics::new();
+        m.on_start(0);
+        m.on_stall(40);
+        m.on_stall(2);
+        m.on_finish(0, 100);
+        assert_eq!(m.decode_stall_ns, 42);
+        let j = m.to_json();
+        assert_eq!(j.get("decode_stall_ns").unwrap().as_u64().unwrap(), 42);
+        assert!(j.get("prefetch_hits").is_err(), "absent without prefetch");
+        m.prefetch = Some(crate::harvest::prefetch::PrefetchStats {
+            issued: 3,
+            hits: 2,
+            ..Default::default()
+        });
+        let j = m.to_json();
+        assert_eq!(j.get("prefetch_hits").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(j.get("prefetch_issued").unwrap().as_u64().unwrap(), 3);
     }
 }

@@ -26,6 +26,20 @@ pub trait Scheduler {
     fn select(&mut self, slots: usize) -> Vec<SeqId>;
     /// Number of runnable sequences.
     fn runnable(&self) -> usize;
+
+    /// Predict which sequences decode within the next `horizon` steps of
+    /// `slots` each, nearest first, without mutating scheduler state.
+    /// This is the prefetch pipeline's demand signal
+    /// ([`crate::harvest::prefetch`]): the KV manager reloads these
+    /// sequences' blocks in the background while the current step's
+    /// compute runs. Predictions are best-effort — admissions and
+    /// retirements between now and then can change the real cohort; a
+    /// misprediction costs wasted prefetch bandwidth, never correctness.
+    /// The default declines to predict.
+    fn lookahead(&self, slots: usize, horizon: usize) -> Vec<SeqId> {
+        let _ = (slots, horizon);
+        Vec::new()
+    }
 }
 
 /// First-come-first-served continuous batching: the oldest `slots`
@@ -60,6 +74,17 @@ impl Scheduler for Fcfs {
 
     fn runnable(&self) -> usize {
         self.queue.len()
+    }
+
+    /// FCFS keeps a stable head set; queued sequences join only as slots
+    /// free up. The next cohort is exactly the head `slots`; in the
+    /// worst case an entire cohort retires each step (common when
+    /// requests admitted together finish together) and the next `slots`
+    /// queued sequences move up, so `slots * horizon` is the tight
+    /// over-bound on what can decode within `horizon` steps.
+    fn lookahead(&self, slots: usize, horizon: usize) -> Vec<SeqId> {
+        let n = slots.saturating_mul(horizon.max(1));
+        self.queue.iter().take(n).copied().collect()
     }
 }
 
@@ -111,6 +136,35 @@ impl Scheduler for CompletelyFair {
 
     fn runnable(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Exact rotation replay on a scratch copy of the queue: absent
+    /// admissions/retirements, the prediction for step *k* equals what
+    /// the *k*-th future [`Scheduler::select`] will return. This is
+    /// what makes prefetch effective under token-level preemption — the
+    /// *next* cohort is usually a different set whose KV was just
+    /// evicted.
+    fn lookahead(&self, slots: usize, horizon: usize) -> Vec<SeqId> {
+        let mut q = self.queue.clone();
+        let mut used = self.used;
+        let mut out: Vec<SeqId> = Vec::new();
+        for _ in 0..horizon.max(1) {
+            for s in q.iter().take(slots) {
+                if !out.contains(s) {
+                    out.push(*s);
+                }
+            }
+            used += 1;
+            if used >= self.quantum && q.len() > slots {
+                for _ in 0..slots.min(q.len()) {
+                    if let Some(s) = q.pop_front() {
+                        q.push_back(s);
+                    }
+                }
+                used = 0;
+            }
+        }
+        out
     }
 }
 
@@ -181,6 +235,55 @@ mod tests {
             }
         }
         assert_eq!(served.len(), 6, "all sequences served within 3 rounds");
+    }
+
+    #[test]
+    fn fcfs_lookahead_covers_head_and_bounded_tail() {
+        let mut f = Fcfs::new();
+        for i in 0..6 {
+            f.admit(s(i));
+        }
+        assert_eq!(f.lookahead(2, 1), vec![s(0), s(1)], "horizon 1 = next cohort");
+        // worst case: the whole cohort retires each step, so two more
+        // steps can reach the next 2*2 queued sequences
+        assert_eq!(f.lookahead(2, 3), vec![s(0), s(1), s(2), s(3), s(4), s(5)]);
+        // prediction matches the next select exactly at horizon 1
+        assert_eq!(f.lookahead(2, 1), f.select(2));
+    }
+
+    #[test]
+    fn cf_lookahead_replays_rotation_exactly() {
+        let mut c = CompletelyFair::new(1);
+        for i in 0..6 {
+            c.admit(s(i));
+        }
+        // Predict three steps ahead, then confirm against real selects.
+        let predicted = c.lookahead(2, 3);
+        assert_eq!(predicted, vec![s(0), s(1), s(2), s(3), s(4), s(5)]);
+        let mut actual: Vec<SeqId> = Vec::new();
+        for _ in 0..3 {
+            for x in c.select(2) {
+                if !actual.contains(&x) {
+                    actual.push(x);
+                }
+            }
+        }
+        assert_eq!(predicted, actual, "lookahead must replay select's rotation");
+    }
+
+    #[test]
+    fn cf_lookahead_is_pure() {
+        let mut c = CompletelyFair::new(2);
+        for i in 0..4 {
+            c.admit(s(i));
+        }
+        c.select(2); // used = 1, mid-quantum
+        let a = c.lookahead(2, 4);
+        let b = c.lookahead(2, 4);
+        assert_eq!(a, b, "lookahead must not mutate state");
+        // and it respects the partially consumed quantum
+        assert_eq!(c.lookahead(2, 1), vec![s(0), s(1)]);
+        assert_eq!(c.select(2), vec![s(0), s(1)], "prediction matches next select");
     }
 
     #[test]

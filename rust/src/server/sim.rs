@@ -13,6 +13,7 @@ use super::batcher::ContinuousBatcher;
 use super::metrics::ServeMetrics;
 use super::request::Request;
 use super::scheduler::Scheduler;
+use crate::harvest::prefetch::PrefetchConfig;
 use crate::harvest::HarvestRuntime;
 use crate::kv::{KvConfig, KvOffloadManager, SeqId};
 use crate::memsim::Ns;
@@ -29,6 +30,10 @@ pub struct SimEngineConfig {
     pub step_compute_ns: Ns,
     /// Prefill compute time per prompt token.
     pub prefill_ns_per_token: Ns,
+    /// Deadline-aware prefetch: overlap predicted reloads with each
+    /// step's compute (None = demand fetching only, the pre-prefetch
+    /// behavior).
+    pub prefetch: Option<PrefetchConfig>,
 }
 
 impl SimEngineConfig {
@@ -42,11 +47,19 @@ impl SimEngineConfig {
             max_running,
             step_compute_ns: per_tok as Ns,
             prefill_ns_per_token: (per_tok / 4.0) as Ns,
+            prefetch: None,
         }
+    }
+
+    /// Enable the prefetch pipeline.
+    pub fn with_prefetch(mut self, cfg: PrefetchConfig) -> Self {
+        self.prefetch = Some(cfg);
+        self
     }
 }
 
-/// Run report.
+/// Run report. The prefetch outcome ledger lives in
+/// [`ServeMetrics::prefetch`] (None when prefetch was disabled).
 #[derive(Debug, Clone)]
 pub struct SimEngineReport {
     pub metrics: ServeMetrics,
@@ -64,7 +77,10 @@ pub struct SimEngine {
 
 impl SimEngine {
     pub fn new(cfg: SimEngineConfig, scheduler: Box<dyn Scheduler>, compute_gpu: usize) -> Self {
-        let kv = KvOffloadManager::new(cfg.kv, compute_gpu);
+        let mut kv = KvOffloadManager::new(cfg.kv, compute_gpu);
+        if let Some(p) = cfg.prefetch {
+            kv = kv.with_prefetch(p);
+        }
         Self { cfg, kv, scheduler }
     }
 
@@ -121,6 +137,20 @@ impl SimEngine {
             for &seq in &cohort {
                 self.kv.access_seq(hr, seq);
             }
+            // Everything between step_start and here was waiting on KV
+            // residency, not computing.
+            metrics.on_stall(hr.node.clock.now() - step_start);
+            // Overlap: while this step's compute runs, issue background
+            // reloads for the sequences the scheduler predicts will
+            // decode next. The deadline is the start of the next step —
+            // the planner guarantees prefetch DMA is off every link
+            // again by the time demand fetches can reappear.
+            if let Some(pcfg) = self.cfg.prefetch {
+                let predicted =
+                    self.scheduler.lookahead(self.cfg.decode_slots, pcfg.horizon);
+                let deadline = hr.node.clock.now() + self.cfg.step_compute_ns;
+                self.kv.prefetch_seqs(hr, &predicted, deadline);
+            }
             // Batched compute.
             hr.advance_to(hr.node.clock.now() + self.cfg.step_compute_ns);
             let step_ns = hr.node.clock.now() - step_start;
@@ -139,6 +169,7 @@ impl SimEngine {
                 }
             }
         }
+        metrics.prefetch = self.kv.prefetch_stats().cloned();
         SimEngineReport {
             metrics,
             kv_stats: self.kv.stats.clone(),
@@ -235,6 +266,63 @@ mod tests {
             cf.kv_stats.reloads(),
             fcfs.kv_stats.reloads()
         );
+    }
+
+    fn run_prefetch(
+        cap: usize,
+        slots: usize,
+        n: usize,
+        prefetch: bool,
+    ) -> SimEngineReport {
+        let mut hr =
+            HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+        let mut cfg = SimEngineConfig::new(kv_cfg(true, cap), slots, 16);
+        if prefetch {
+            cfg = cfg.with_prefetch(crate::harvest::prefetch::PrefetchConfig::default());
+        }
+        let mut eng = SimEngine::new(cfg, Box::new(CompletelyFair::new(1)), 0);
+        eng.run(&mut hr, workload(n))
+    }
+
+    #[test]
+    fn prefetch_reduces_decode_stall_under_cf_churn() {
+        // 16 requests of ~5 blocks rotating through 8 slots against a
+        // 60-block pool: every rotation reloads the incoming cohort.
+        // With prefetch those reloads ride the compute window instead.
+        let off = run_prefetch(60, 8, 16, false);
+        let on = run_prefetch(60, 8, 16, true);
+        assert!(off.metrics.decode_stall_ns > 0, "baseline must stall under churn");
+        assert!(
+            on.metrics.decode_stall_ns < off.metrics.decode_stall_ns,
+            "prefetch on: stall {} >= off {}",
+            on.metrics.decode_stall_ns,
+            off.metrics.decode_stall_ns
+        );
+        let pf = on.metrics.prefetch.as_ref().expect("prefetch ledger present");
+        assert!(pf.issued > 0 && pf.hits > 0, "{pf:?}");
+        assert!(off.metrics.prefetch.is_none());
+        // both complete everything; overlap must not cost throughput
+        assert_eq!(on.metrics.requests_finished, 16);
+        assert_eq!(off.metrics.requests_finished, 16);
+        assert!(
+            on.metrics.tokens_per_sec() >= off.metrics.tokens_per_sec() * 0.95,
+            "prefetch must not cost throughput: on {:.0} vs off {:.0}",
+            on.metrics.tokens_per_sec(),
+            off.metrics.tokens_per_sec()
+        );
+    }
+
+    #[test]
+    fn prefetch_is_inert_with_ample_memory() {
+        // Nothing is ever non-local, so the planner has nothing to do
+        // and results match the non-prefetch run exactly.
+        let off = run_prefetch(10_000, 8, 8, false);
+        let on = run_prefetch(10_000, 8, 8, true);
+        assert_eq!(on.kv_stats.reloads(), 0);
+        assert_eq!(on.metrics.prefetch.as_ref().unwrap().issued, 0);
+        assert_eq!(on.metrics.decode_stall_ns, off.metrics.decode_stall_ns);
+        assert_eq!(on.metrics.tokens_generated, off.metrics.tokens_generated);
+        assert_eq!(on.metrics.makespan_ns(), off.metrics.makespan_ns());
     }
 
     #[test]

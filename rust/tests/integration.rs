@@ -6,7 +6,8 @@
 
 use harvest::config::{find_preset, DeploymentConfig, WorkloadKind};
 use harvest::harvest::{
-    AllocHints, HarvestConfig, HarvestRuntime, MigConfig, PayloadKind, RevocationReason, Transfer,
+    AllocHints, HarvestConfig, HarvestRuntime, MigConfig, PayloadKind, PrefetchConfig,
+    RevocationReason, Transfer,
 };
 use harvest::kv::{KvConfig, KvOffloadManager, SeqId};
 use harvest::memsim::{DeviceId, NodeSpec, SimNode, TenantLoad};
@@ -265,6 +266,94 @@ fn all_requests_complete_under_churn_and_revocation() {
     assert_eq!(report.metrics.tokens_generated, n as u64 * new_tokens as u64);
     // the oscillation must actually have caused revocations
     assert!(!hr.revocations.is_empty(), "test intended to exercise revocation but none happened");
+}
+
+// ---------------------------------------------------------------------
+// Deadline-aware prefetch pipeline (overlap peer DMA with decode)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prefetch_overlap_reduces_decode_stall_on_offload_heavy_config() {
+    // Acceptance: the prefetch-enabled run shows lower decode-stall time
+    // on an offload-heavy configuration, completes the same work, and
+    // never hurts throughput beyond noise.
+    let run = |prefetch: bool| {
+        let mut hr = hr2();
+        let cfg = KvConfig {
+            model: find_kv_model("deepseek").unwrap(),
+            block_tokens: 16,
+            local_capacity_blocks: 60,
+            use_harvest: true,
+            host_backed_peer: false,
+        };
+        let mut ecfg = harvest::server::SimEngineConfig::new(cfg, 8, 16);
+        if prefetch {
+            ecfg = ecfg.with_prefetch(PrefetchConfig::default());
+        }
+        let spec = WorkloadSpec {
+            n_requests: 16,
+            mean_prompt_tokens: 96.0,
+            max_new_tokens: 16,
+            ..Default::default()
+        };
+        let mut eng = SimEngine::new(ecfg, Box::new(CompletelyFair::new(1)), 0);
+        eng.run(&mut hr, WorkloadGen::new(spec).generate())
+    };
+    let off = run(false);
+    let on = run(true);
+    assert!(off.metrics.decode_stall_ns > 0, "offload-heavy baseline must stall");
+    assert!(
+        on.metrics.decode_stall_ns < off.metrics.decode_stall_ns,
+        "prefetch-on stall {} >= prefetch-off {}",
+        on.metrics.decode_stall_ns,
+        off.metrics.decode_stall_ns
+    );
+    let pf = on.metrics.prefetch.as_ref().expect("ledger present");
+    assert!(pf.hits > 0, "{pf:?}");
+    assert_eq!(on.metrics.requests_finished, off.metrics.requests_finished);
+    assert!(on.metrics.tokens_per_sec() >= off.metrics.tokens_per_sec() * 0.95);
+}
+
+#[test]
+fn prefetch_traffic_recorded_in_monitor_and_visible_to_interference_policy() {
+    let mut hr = hr2();
+    let cfg = KvConfig {
+        model: find_kv_model("kimi").unwrap(),
+        block_tokens: 16,
+        local_capacity_blocks: 8,
+        use_harvest: true,
+        host_backed_peer: false,
+    };
+    let mut kv = KvOffloadManager::new(cfg, 0).with_prefetch(PrefetchConfig::default());
+    let s = SeqId(1);
+    for _ in 0..(16 * 12) {
+        kv.append_token(&mut hr, s); // 12 blocks vs 8 slots: spills to peer
+    }
+    // let spill DMA finish so the fetch link is demand-free
+    hr.advance_to(hr.node.clock.now() + 50_000_000);
+    assert_eq!(hr.monitor().prefetch_bytes_on(1), 0);
+    let demand_before = hr.monitor().demand_bytes_on(1);
+    assert!(demand_before > 0, "spill populates are demand traffic");
+
+    let plan = kv.plan_prefetch(&mut hr, &[s]);
+    assert!(!plan.is_empty());
+    let deadline = hr.node.clock.now() + 1_000_000_000;
+    let issued = kv.submit_prefetch(&mut hr, &plan, deadline);
+    assert!(issued > 0);
+
+    // Background traffic is attributed as prefetch...
+    let pf_bytes = hr.monitor().prefetch_bytes_on(1);
+    assert_eq!(pf_bytes, issued as u64 * kv.cfg.block_bytes());
+    // ...without polluting the demand counter (evictions made room, so
+    // demand bytes may grow, but never by the prefetched amount)...
+    assert!(hr.monitor().demand_bytes_on(1) >= demand_before);
+    // ...and the interference policy's bandwidth signal sees it.
+    let views = hr.peer_views();
+    assert!(
+        views[1].bw_demand > 0.0,
+        "interference signal must include prefetch traffic"
+    );
+    kv.check_invariants().unwrap();
 }
 
 // ---------------------------------------------------------------------

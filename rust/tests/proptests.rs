@@ -4,8 +4,8 @@
 //! prints a reproducing seed.
 
 use harvest::harvest::{
-    AllocHints, HarvestConfig, HarvestRuntime, Lease, PayloadKind, RevocationReason, Transfer,
-    VictimPolicy,
+    AllocHints, HarvestConfig, HarvestRuntime, Lease, PayloadKind, PrefetchConfig,
+    RevocationReason, Transfer, VictimPolicy,
 };
 use harvest::kv::{BlockResidency, KvConfig, KvOffloadManager, SeqId};
 use harvest::memsim::{DeviceId, FitStrategy, Hbm, NodeSpec, SimNode, TenantLoad};
@@ -336,6 +336,7 @@ fn prop_leases_never_leak_accounting() {
 /// After `enforce_pressure`, every peer's harvested bytes fit within
 /// capacity - tenant - reserve (and the MIG limit if set).
 #[test]
+#[allow(deprecated)] // exercises the legacy shim alloc path deliberately
 fn prop_pressure_enforcement_converges() {
     check("pressure-converges", 100, 0x9E55, |rng| {
         let node = SimNode::new(NodeSpec::h100x2());
@@ -435,6 +436,91 @@ fn prop_kv_manager_invariants() {
             kv.table().check_invariants().map_err(|e| format!("table invariant: {e}"))?;
             if kv.local_blocks() > cap {
                 return err(format!("local blocks {} > capacity {cap}", kv.local_blocks()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The prefetch plan/submit race: a revocation (targeted, peer-wide, or
+/// tenant-pressure-driven) arriving *between* `plan_prefetch` and
+/// `submit_prefetch` must never produce a stale-lease read — submit
+/// revalidates every entry, issues only still-valid reloads, and all
+/// manager/table invariants hold throughout. Late-used and never-used
+/// prefetches are accounted, not corrupted.
+#[test]
+fn prop_prefetch_plan_submit_revocation_race() {
+    check("prefetch-race", 50, 0x9F31, |rng| {
+        let node = SimNode::new(NodeSpec::h100x2());
+        let mut hr = HarvestRuntime::new(node, HarvestConfig::for_node(2));
+        let cfg = KvConfig {
+            model: find_kv_model("deepseek").unwrap(),
+            block_tokens: 16,
+            local_capacity_blocks: 6 + rng.below(10) as usize,
+            use_harvest: true,
+            host_backed_peer: rng.bool(0.3),
+        };
+        let mut kv = KvOffloadManager::new(cfg, 0).with_prefetch(PrefetchConfig::default());
+        let seqs: Vec<SeqId> = (0u64..3).map(SeqId).collect();
+        for &s in &seqs {
+            for _ in 0..(16 * (2 + rng.below(4))) {
+                kv.append_token(&mut hr, s);
+            }
+        }
+        for round in 0..rng.below(25) + 5 {
+            let plan = kv.plan_prefetch(&mut hr, &seqs);
+            // The race: revocations land after the plan snapshot.
+            if rng.bool(0.7) {
+                match rng.below(3) {
+                    0 => {
+                        hr.revoke_peer(1, RevocationReason::ExternalReclaim);
+                    }
+                    1 => {
+                        let ids: Vec<_> = hr.live_handles().map(|h| h.id).collect();
+                        if !ids.is_empty() {
+                            let id = ids[rng.below(ids.len() as u64) as usize];
+                            hr.revoke(id, RevocationReason::PolicyEviction);
+                        }
+                    }
+                    _ => {
+                        let now = hr.node.clock.now();
+                        hr.node.set_tenant_load(
+                            1,
+                            TenantLoad::from_steps(
+                                80 * GIB,
+                                vec![(0, 0), (now + round + 1, rng.below(81) * GIB)],
+                            ),
+                        );
+                        hr.advance_to(now + round + 2);
+                    }
+                }
+            }
+            let deadline = hr.node.clock.now() + 1_000_000 + rng.below(5_000_000);
+            kv.submit_prefetch(&mut hr, &plan, deadline);
+            kv.check_invariants().map_err(|e| format!("post-submit: {e}"))?;
+            // Consume some of it (hit or late), append more, or idle.
+            match rng.below(3) {
+                0 => {
+                    let s = seqs[rng.below(3) as usize];
+                    kv.access_seq(&mut hr, s);
+                }
+                1 => {
+                    let s = seqs[rng.below(3) as usize];
+                    kv.append_token(&mut hr, s);
+                }
+                _ => {
+                    let now = hr.node.clock.now();
+                    hr.advance_to(now + rng.below(2_000_000));
+                }
+            }
+            kv.check_invariants().map_err(|e| format!("post-use: {e}"))?;
+            // Ledger sanity: every issue resolves to at most one outcome.
+            let pf = kv.prefetch_stats().unwrap();
+            if pf.hits + pf.late + pf.wasted > pf.issued {
+                return err(format!(
+                    "outcomes exceed issues: {} + {} + {} > {}",
+                    pf.hits, pf.late, pf.wasted, pf.issued
+                ));
             }
         }
         Ok(())
