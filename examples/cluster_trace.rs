@@ -39,7 +39,7 @@ fn main() {
     let session = hr.open_session(PayloadKind::Generic);
     let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
 
-    let chunk = 1 * GIB;
+    let chunk = GIB;
     let mut held: Vec<Lease> = Vec::new();
     let mut samples = Vec::new();
     for hour5 in 0..(24 * 12) {
@@ -50,7 +50,9 @@ fn main() {
             held.retain(|l| l.id() != ev.lease);
         }
         // greedily top up
-        while let Ok(lease) = session.alloc(&mut hr, chunk, hints) {
+        while let Ok(lease) =
+            session.alloc(&mut hr, chunk, harvest::harvest::TierPreference::PEER_ONLY, hints)
+        {
             held.push(lease);
         }
         samples.push(hr.live_bytes_on(1));

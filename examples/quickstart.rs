@@ -10,7 +10,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use harvest::harvest::{
-    AllocHints, Durability, HarvestConfig, HarvestRuntime, PayloadKind, Transfer,
+    AllocHints, Durability, HarvestConfig, HarvestRuntime, PayloadKind, TierPreference, Transfer,
 };
 use harvest::memsim::{DeviceId, NodeSpec, SimNode, TenantLoad};
 use harvest::util::{fmt_bytes, fmt_ns};
@@ -36,12 +36,14 @@ fn main() {
         durability: Durability::HostBacked, // authoritative copy in DRAM
         ..Default::default()
     };
-    let lease = session.alloc(&mut hr, 256 * MIB, hints).expect("peer capacity available");
+    let lease = session
+        .alloc(&mut hr, 256 * MIB, TierPreference::FastestAvailable, hints)
+        .expect("peer capacity available");
     println!(
-        "alloc -> lease {:?}: {} on peer GPU {} ({:?})",
+        "alloc -> lease {:?}: {} on tier {} ({:?})",
         lease.id(),
         fmt_bytes(lease.size()),
-        lease.peer(),
+        lease.tier(),
         lease.kind(),
     );
 

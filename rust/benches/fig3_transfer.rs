@@ -1,27 +1,46 @@
 //! Fig. 3 — GPU↔GPU vs GPU↔CPU transfer latency of memory chunks of
 //! different sizes, mapped to expert sizes of the Table-1 MoE models.
 //!
+//! Tier-aware edition: each measurement allocates a lease pinned to the
+//! tier under test (`Pinned(PeerHbm(1))` vs `Pinned(Host)`) and times a
+//! lease-addressed `Transfer::fetch` to the compute GPU — the exact path
+//! consumers pay, not a hand-rolled `node.copy`.
+//!
 //! Paper anchors: speedup ranges from 7.5× (Phi-tiny) to 9.5× (Mixtral).
 //!
 //! Run: `cargo bench --bench fig3_transfer`
 
-use harvest::memsim::{DeviceId, NodeSpec, SimNode};
+use harvest::harvest::{
+    AllocHints, HarvestConfig, HarvestRuntime, MemoryTier, PayloadKind, TierPreference, Transfer,
+};
+use harvest::memsim::{NodeSpec, SimNode};
 use harvest::moe::MOE_MODELS;
 use harvest::util::bench::Table;
 use harvest::util::{fmt_bytes, fmt_ns};
 
+/// Time one lease-addressed fetch of `bytes` from `tier` to GPU 0 on a
+/// fresh node (link FIFO starts idle, matching the paper's isolated
+/// microbenchmark).
+fn fetch_ns(tier: MemoryTier, bytes: u64) -> u64 {
+    let mut hr =
+        HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+    let session = hr.open_session(PayloadKind::Generic);
+    let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+    let lease = session
+        .alloc(&mut hr, bytes, TierPreference::Pinned(tier), hints)
+        .expect("fresh node has capacity");
+    let report = Transfer::new().fetch(&lease, 0).submit(&mut hr).expect("live lease");
+    let ns = report.events[0].duration();
+    session.release(&mut hr, lease).expect("live lease");
+    ns
+}
+
 fn measure(bytes: u64) -> (u64, u64) {
-    // Fresh node per measurement: link FIFO starts idle (matches the
-    // paper's isolated microbenchmark).
-    let mut node = SimNode::new(NodeSpec::h100x2());
-    let p2p = node.copy(DeviceId::Gpu(1), DeviceId::Gpu(0), bytes, None).duration();
-    let mut node = SimNode::new(NodeSpec::h100x2());
-    let h2d = node.copy(DeviceId::Host, DeviceId::Gpu(0), bytes, None).duration();
-    (p2p, h2d)
+    (fetch_ns(MemoryTier::PeerHbm(1), bytes), fetch_ns(MemoryTier::Host, bytes))
 }
 
 fn main() {
-    println!("Fig. 3 — GPU<->GPU vs GPU<->CPU transfer latency (virtual time)\n");
+    println!("Fig. 3 — GPU<->GPU vs GPU<->CPU transfer latency (tier-aware leases)\n");
     let table = Table::new(&[22, 12, 13, 13, 9, 10]);
     table.row(&[
         "CHUNK".into(),

@@ -2,25 +2,45 @@
 //! the §5.3 models (DeepSeek-V3, Mistral-Large-3-675B, Kimi-K2) at FP16
 //! across chunk sizes of 100–8000 KV cache entries.
 //!
+//! Tier-aware edition: each reload is a lease pinned to the tier under
+//! test, fetched through the chunked `Transfer` path the
+//! `KvOffloadManager` uses (scattered ~4 MiB DMA descriptors).
+//!
 //! Paper anchors: Kimi-K2 speedup 5.42× (100 entries) → 5.68× (8000);
 //! Mistral-Large-3 ~3× → 5.65× over the same range.
 //!
 //! Run: `cargo bench --bench fig7_kv_latency`
 
+use harvest::harvest::{
+    AllocHints, HarvestConfig, HarvestRuntime, MemoryTier, PayloadKind, TierPreference, Transfer,
+};
 use harvest::kv::manager::RELOAD_CHUNK_BYTES;
-use harvest::memsim::{DeviceId, NodeSpec, SimNode};
+use harvest::memsim::{NodeSpec, SimNode};
 use harvest::moe::KV_MODELS;
 use harvest::util::bench::Table;
 use harvest::util::{fmt_bytes, fmt_ns};
 
 const ENTRIES: &[u64] = &[100, 500, 1000, 2000, 4000, 8000];
 
-/// One reload measurement: scattered block copies batched into ~4 MiB DMA
-/// descriptors, the same path `kv::OffloadingHandler` uses.
-fn reload(src: DeviceId, bytes: u64) -> u64 {
-    let mut node = SimNode::new(NodeSpec::h100x2());
-    let chunks = bytes.div_ceil(RELOAD_CHUNK_BYTES).max(1);
-    node.copy_scattered(src, DeviceId::Gpu(0), bytes, chunks, None).duration()
+/// One reload measurement: a lease on `tier`, fetched to GPU 0 as
+/// scattered block copies batched into ~4 MiB DMA descriptors — the same
+/// path `KvOffloadManager::ensure_local` pays.
+fn reload(tier: MemoryTier, bytes: u64) -> u64 {
+    let mut hr =
+        HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+    let session = hr.open_session(PayloadKind::KvBlock);
+    let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+    let lease = session
+        .alloc(&mut hr, bytes, TierPreference::Pinned(tier), hints)
+        .expect("fresh node has capacity");
+    let report = Transfer::new()
+        .chunked(RELOAD_CHUNK_BYTES)
+        .fetch(&lease, 0)
+        .submit(&mut hr)
+        .expect("live lease");
+    let ns = report.events[0].duration();
+    session.release(&mut hr, lease).expect("live lease");
+    ns
 }
 
 fn main() {
@@ -39,8 +59,8 @@ fn main() {
         table.sep();
         for &n in ENTRIES {
             let bytes = n * m.kv_bytes_per_token();
-            let p2p = reload(DeviceId::Gpu(1), bytes);
-            let h2d = reload(DeviceId::Host, bytes);
+            let p2p = reload(MemoryTier::PeerHbm(1), bytes);
+            let h2d = reload(MemoryTier::Host, bytes);
             let paper = match (m.name, n) {
                 ("Kimi-K2", 100) => "5.42x",
                 ("Kimi-K2", 8000) => "5.68x",
@@ -59,5 +79,8 @@ fn main() {
         }
         println!();
     }
-    println!("(reloads batched into {} DMA descriptors — kv::OffloadingHandler path)", fmt_bytes(RELOAD_CHUNK_BYTES));
+    println!(
+        "(reloads batched into {} DMA descriptors — the KvOffloadManager lease path)",
+        fmt_bytes(RELOAD_CHUNK_BYTES)
+    );
 }

@@ -6,7 +6,7 @@
 //!
 //! Run: `cargo bench --bench hot_path`
 
-use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime, PayloadKind};
+use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime, PayloadKind, TierPreference};
 use harvest::kv::{KvConfig, KvOffloadManager, SeqId};
 use harvest::memsim::{NodeSpec, SimNode};
 use harvest::moe::pipeline::OffloadTier;
@@ -54,28 +54,60 @@ fn bench_alloc_under_fragmentation(b: &Bench) {
 }
 
 fn bench_lease_session_paths(b: &Bench) {
-    // The redesigned surface: RAII lease alloc/release, and the vectored
-    // alloc_many path (one policy consultation per 16-block batch vs 16).
+    // The redesigned surface: RAII tier-aware lease alloc/release, and
+    // the vectored alloc_many path (one policy consultation per 16-block
+    // batch vs 16).
     let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
     let session = hr.open_session(PayloadKind::KvBlock);
     let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
     b.wall("session alloc+release (64 MiB lease)", || {
-        let lease = session.alloc(&mut hr, 64 * MIB, hints).unwrap();
+        let lease =
+            session.alloc(&mut hr, 64 * MIB, TierPreference::FastestAvailable, hints).unwrap();
         session.release(&mut hr, lease).unwrap();
     });
     let sizes = [4 * MIB; 16];
     b.wall("session alloc_many+release (16 x 4 MiB)", || {
-        let batch = session.alloc_many(&mut hr, &sizes, hints).unwrap();
+        let batch = session
+            .alloc_many(&mut hr, &sizes, TierPreference::FastestAvailable, hints)
+            .unwrap();
         for lease in batch {
             session.release(&mut hr, lease).unwrap();
         }
     });
     b.wall("scalar alloc x16 +release (4 MiB each)", || {
-        let batch: Vec<_> =
-            (0..16).map(|_| session.alloc(&mut hr, 4 * MIB, hints).unwrap()).collect();
+        let batch: Vec<_> = (0..16)
+            .map(|_| {
+                session.alloc(&mut hr, 4 * MIB, TierPreference::FastestAvailable, hints).unwrap()
+            })
+            .collect();
         for lease in batch {
             session.release(&mut hr, lease).unwrap();
         }
+    });
+    // Cross-tier placement: the policy scores peer vs host vs CXL per
+    // alloc — the tier decision is on the allocation hot path now.
+    let mut hr_cxl = HarvestRuntime::new(
+        SimNode::new(NodeSpec::h100x2().with_cxl(256 * (1 << 30))),
+        HarvestConfig::for_node(2),
+    );
+    let s2 = hr_cxl.open_session(PayloadKind::KvBlock);
+    b.wall("session alloc+release (3-tier node)", || {
+        let lease = s2
+            .alloc(&mut hr_cxl, 64 * MIB, TierPreference::FastestAvailable, hints)
+            .unwrap();
+        s2.release(&mut hr_cxl, lease).unwrap();
+    });
+    b.wall("lease migrate peer->host->peer (64 MiB)", || {
+        let lease = s2.alloc(&mut hr_cxl, 64 * MIB, TierPreference::PEER_ONLY, hints).unwrap();
+        harvest::harvest::Transfer::new()
+            .migrate(&lease, harvest::harvest::MemoryTier::Host)
+            .submit(&mut hr_cxl)
+            .unwrap();
+        harvest::harvest::Transfer::new()
+            .migrate(&lease, harvest::harvest::MemoryTier::PeerHbm(1))
+            .submit(&mut hr_cxl)
+            .unwrap();
+        s2.release(&mut hr_cxl, lease).unwrap();
     });
 }
 

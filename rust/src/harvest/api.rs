@@ -1,14 +1,52 @@
-//! Harvest API surface types (§3.2), lease edition.
+//! Harvest API surface types (§3.2), tiered-lease edition.
 //!
 //! The paper's raw surface (`harvest_alloc` / `harvest_free` /
 //! `harvest_register_cb`) is reproduced as deprecated shims on
 //! [`crate::harvest::HarvestRuntime`]; the supported surface is the
 //! lease-based one in [`crate::harvest::session`]. The types here are
-//! shared by both: identifiers, hints, durability modes, revocation
-//! reasons and errors.
+//! shared by both: identifiers, memory tiers, tier preferences, hints,
+//! durability modes, revocation reasons and errors.
+//!
+//! # Memory tiers
+//!
+//! Harvest's core claim is that peer GPU memory is *one tier* in a cache
+//! hierarchy whose slow alternative is PCIe host offload. [`MemoryTier`]
+//! makes the hierarchy explicit, and [`TierPreference`] lets every
+//! allocation say which slice of it is acceptable — one placement
+//! decision instead of N ad-hoc consumer paths:
+//!
+//! ```
+//! use harvest::harvest::{MemoryTier, TierPreference};
+//!
+//! // Fast → slow: local HBM, peer HBM over NVLink, CXL-attached memory,
+//! // host DRAM over PCIe.
+//! assert!(MemoryTier::PeerHbm(1).speed_rank() < MemoryTier::CxlMem.speed_rank());
+//! assert!(MemoryTier::CxlMem.speed_rank() < MemoryTier::Host.speed_rank());
+//!
+//! // `FastestAvailable` admits every harvest tier; the placement policy
+//! // scores them under one cost model.
+//! assert!(TierPreference::FastestAvailable.allows(MemoryTier::PeerHbm(0)));
+//! assert!(TierPreference::FastestAvailable.allows(MemoryTier::Host));
+//!
+//! // `AtLeast(tier)` bounds the *slowest* acceptable tier (tier class,
+//! // not a specific device): at least CXL-speed excludes host DRAM.
+//! let pref = TierPreference::AtLeast(MemoryTier::CxlMem);
+//! assert!(pref.allows(MemoryTier::PeerHbm(2)));
+//! assert!(pref.allows(MemoryTier::CxlMem));
+//! assert!(!pref.allows(MemoryTier::Host));
+//!
+//! // `PEER_ONLY` is the pre-tier API's semantics (peer HBM or nothing).
+//! assert!(TierPreference::PEER_ONLY.allows(MemoryTier::PeerHbm(3)));
+//! assert!(!TierPreference::PEER_ONLY.allows(MemoryTier::Host));
+//!
+//! // `Pinned` names one exact tier — for peers, one exact device.
+//! let pinned = TierPreference::Pinned(MemoryTier::PeerHbm(1));
+//! assert!(pinned.allows(MemoryTier::PeerHbm(1)));
+//! assert!(!pinned.allows(MemoryTier::PeerHbm(2)));
+//! ```
 
 use crate::memsim::hbm::AllocId;
-use crate::memsim::Ns;
+use crate::memsim::{DeviceId, Ns};
 
 /// Opaque, never-reused identifier of a harvest lease (née "handle").
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -20,6 +58,129 @@ pub struct LeaseId(pub u64);
                      `harvest::session::Lease`; the bare id only names it")]
 pub type HandleId = LeaseId;
 
+/// One tier of the cache hierarchy, fastest first. Every lease is
+/// resident on exactly one tier at a time;
+/// [`crate::harvest::session::Transfer::migrate`] moves it between
+/// tiers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum MemoryTier {
+    /// The compute GPU's own HBM. Consumers manage this pool themselves
+    /// (the KV local pool, pinned experts); the harvest runtime never
+    /// allocates here — the variant exists so residency and preferences
+    /// can name the whole hierarchy.
+    LocalHbm,
+    /// Spare HBM on peer GPU `.0`, reached over NVLink — the paper's
+    /// contribution tier. Revocable under co-tenant pressure.
+    PeerHbm(usize),
+    /// CXL-attached memory expander (§8): lower setup latency than the
+    /// host-paging PCIe path, an intermediate tier between peer HBM and
+    /// host DRAM. Absent unless the node is built with a CXL arena.
+    CxlMem,
+    /// Host DRAM over PCIe — the slow tier the paper's baselines page
+    /// against. Effectively never revoked.
+    Host,
+}
+
+impl MemoryTier {
+    /// Position in the fast→slow hierarchy (0 = fastest). All peers
+    /// share one rank: tier *class*, not device identity.
+    pub fn speed_rank(&self) -> u8 {
+        match self {
+            MemoryTier::LocalHbm => 0,
+            MemoryTier::PeerHbm(_) => 1,
+            MemoryTier::CxlMem => 2,
+            MemoryTier::Host => 3,
+        }
+    }
+
+    /// The simulated device holding this tier's bytes. Local HBM is not
+    /// a harvest-addressable device (leases never live there).
+    pub fn device(&self) -> DeviceId {
+        match self {
+            MemoryTier::PeerHbm(g) => DeviceId::Gpu(*g),
+            MemoryTier::CxlMem => DeviceId::Cxl,
+            MemoryTier::Host => DeviceId::Host,
+            MemoryTier::LocalHbm => {
+                unreachable!("local HBM is not a harvest-addressable device")
+            }
+        }
+    }
+
+    /// The peer GPU index, when this tier is peer HBM.
+    pub fn peer_gpu(&self) -> Option<usize> {
+        match self {
+            MemoryTier::PeerHbm(g) => Some(*g),
+            _ => None,
+        }
+    }
+
+    pub fn is_peer(&self) -> bool {
+        matches!(self, MemoryTier::PeerHbm(_))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemoryTier::LocalHbm => "local-hbm",
+            MemoryTier::PeerHbm(_) => "peer-hbm",
+            MemoryTier::CxlMem => "cxl-mem",
+            MemoryTier::Host => "host",
+        }
+    }
+}
+
+impl std::fmt::Display for MemoryTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MemoryTier::PeerHbm(g) => write!(f, "peer-hbm(gpu{g})"),
+            other => write!(f, "{}", other.name()),
+        }
+    }
+}
+
+/// What slice of the tier hierarchy an allocation accepts. Passed to
+/// [`crate::harvest::session::HarvestSession::alloc`] /
+/// [`crate::harvest::session::HarvestSession::alloc_many`]; the
+/// placement policy scores the admissible tiers under one cost model
+/// ([`crate::harvest::policy::PlacementPolicy::place_tiered`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TierPreference {
+    /// Any harvest tier; the cost model picks the cheapest (peer HBM on
+    /// an idle fabric, host/CXL when peers are full or their links are
+    /// saturated).
+    #[default]
+    FastestAvailable,
+    /// Any tier at least as fast as the named tier *class* (the peer
+    /// index inside `AtLeast(PeerHbm(_))` is ignored — any peer
+    /// qualifies). `AtLeast(Host)` admits everything.
+    AtLeast(MemoryTier),
+    /// Exactly this tier — and for `Pinned(PeerHbm(g))`, exactly that
+    /// device. Fails with [`HarvestError::TierUnavailable`] rather than
+    /// spilling elsewhere.
+    Pinned(MemoryTier),
+}
+
+impl TierPreference {
+    /// The pre-tier API's semantics: peer HBM or nothing. (The peer
+    /// index in the `AtLeast` payload is ignored; any peer qualifies.)
+    pub const PEER_ONLY: TierPreference = TierPreference::AtLeast(MemoryTier::PeerHbm(0));
+
+    /// Whether an allocation under this preference may land on `tier`.
+    /// Local HBM is never an allocation target.
+    pub fn allows(&self, tier: MemoryTier) -> bool {
+        if matches!(tier, MemoryTier::LocalHbm) {
+            return false;
+        }
+        match *self {
+            TierPreference::FastestAvailable => true,
+            TierPreference::AtLeast(slowest) => tier.speed_rank() <= slowest.speed_rank(),
+            TierPreference::Pinned(t) => match (t, tier) {
+                (MemoryTier::PeerHbm(want), MemoryTier::PeerHbm(got)) => want == got,
+                (want, got) => want == got,
+            },
+        }
+    }
+}
+
 /// What happens to the cached object when its peer allocation is revoked
 /// (§3.1: consistency is an application choice).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -29,18 +190,21 @@ pub enum Durability {
     #[default]
     HostBacked,
     /// The object is lost on revocation and reconstructed later (the KV
-    /// cache mode — recompute or drop).
+    /// cache mode — recompute or drop). Under
+    /// [`crate::harvest::HarvestConfig::demote_to_host`] the controller
+    /// demotes lossy leases to host DRAM instead of dropping them.
     Lossy,
 }
 
 /// Placement hints passed to allocation calls (§3.2 "hint constraints").
+/// Tier selection itself is a [`TierPreference`] argument, not a hint —
+/// pin a specific peer with `TierPreference::Pinned(MemoryTier::PeerHbm(g))`.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct AllocHints {
     /// The compute GPU this cache entry serves (locality policies place
-    /// close to it; it is never selected as the peer).
+    /// close to it; it is never selected as the peer, and tier fetch
+    /// costs are estimated against it).
     pub compute_gpu: Option<usize>,
-    /// Pin to an explicit peer.
-    pub prefer_peer: Option<usize>,
     /// Client identity for fairness accounting.
     pub client: Option<u32>,
     /// Durability mode (recorded on the lease; the runtime never tracks
@@ -50,18 +214,28 @@ pub struct AllocHints {
 
 /// The (device, pointer, size) tuple the paper's API returns, plus
 /// bookkeeping metadata. This is the *raw* placement record; the RAII
-/// owner of it is [`crate::harvest::session::Lease`].
+/// owner of it is [`crate::harvest::session::Lease`]. `tier` is the
+/// residency at the time the record was read — the lease's shared tier
+/// cell stays current across migrations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HarvestHandle {
     pub id: LeaseId,
-    /// Peer GPU index holding the bytes.
-    pub peer: usize,
-    /// The device "pointer" (simulated: allocation id + byte offset).
+    /// Tier holding the bytes.
+    pub tier: MemoryTier,
+    /// The device "pointer" (simulated: allocation id + byte offset
+    /// within the tier's arena).
     pub alloc: AllocId,
     pub offset: u64,
     pub size: u64,
     pub durability: Durability,
     pub client: Option<u32>,
+}
+
+impl HarvestHandle {
+    /// The peer GPU index, when the record places the bytes in peer HBM.
+    pub fn peer_gpu(&self) -> Option<usize> {
+        self.tier.peer_gpu()
+    }
 }
 
 /// Why a peer allocation disappeared (§3.2: allocator pressure,
@@ -92,11 +266,12 @@ pub struct Revocation {
 /// Errors from the allocation and transfer paths.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum HarvestError {
-    /// No peer currently has a segment that fits under the policy. For
-    /// vectored allocations `requested` is the total batch size.
+    /// No admissible tier currently has a segment that fits under the
+    /// policy. For vectored allocations `requested` is the total batch
+    /// size.
     NoCapacity { requested: u64 },
-    /// The hints pinned a peer that cannot serve the request.
-    PeerUnavailable { peer: usize },
+    /// The preference pinned a tier that cannot serve the request.
+    TierUnavailable { tier: MemoryTier },
     /// Unknown, revoked, or already-released lease.
     StaleLease(LeaseId),
     /// Zero-byte request (vectored: any zero-byte element).
@@ -107,10 +282,10 @@ impl std::fmt::Display for HarvestError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             HarvestError::NoCapacity { requested } => {
-                write!(f, "no peer capacity for {requested} bytes")
+                write!(f, "no tier capacity for {requested} bytes")
             }
-            HarvestError::PeerUnavailable { peer } => {
-                write!(f, "pinned peer gpu{peer} unavailable")
+            HarvestError::TierUnavailable { tier } => {
+                write!(f, "pinned tier {tier} unavailable")
             }
             HarvestError::StaleLease(id) => write!(f, "stale lease {id:?}"),
             HarvestError::ZeroSize => write!(f, "zero-size harvest allocation"),
@@ -119,3 +294,52 @@ impl std::fmt::Display for HarvestError {
 }
 
 impl std::error::Error for HarvestError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_ranks_order_fast_to_slow() {
+        assert!(MemoryTier::LocalHbm.speed_rank() < MemoryTier::PeerHbm(0).speed_rank());
+        assert!(MemoryTier::PeerHbm(7).speed_rank() < MemoryTier::CxlMem.speed_rank());
+        assert!(MemoryTier::CxlMem.speed_rank() < MemoryTier::Host.speed_rank());
+    }
+
+    #[test]
+    fn tier_devices() {
+        assert_eq!(MemoryTier::PeerHbm(3).device(), DeviceId::Gpu(3));
+        assert_eq!(MemoryTier::Host.device(), DeviceId::Host);
+        assert_eq!(MemoryTier::CxlMem.device(), DeviceId::Cxl);
+        assert_eq!(MemoryTier::PeerHbm(2).peer_gpu(), Some(2));
+        assert_eq!(MemoryTier::Host.peer_gpu(), None);
+    }
+
+    #[test]
+    fn preference_admission() {
+        use MemoryTier::*;
+        use TierPreference::*;
+        for t in [PeerHbm(0), PeerHbm(5), CxlMem, Host] {
+            assert!(FastestAvailable.allows(t), "{t}");
+        }
+        assert!(!FastestAvailable.allows(LocalHbm), "local pool is consumer-managed");
+        assert!(AtLeast(Host).allows(Host));
+        assert!(AtLeast(Host).allows(CxlMem));
+        assert!(AtLeast(CxlMem).allows(PeerHbm(1)));
+        assert!(!AtLeast(CxlMem).allows(Host));
+        assert!(TierPreference::PEER_ONLY.allows(PeerHbm(9)), "index in AtLeast ignored");
+        assert!(!TierPreference::PEER_ONLY.allows(CxlMem));
+        assert!(Pinned(Host).allows(Host));
+        assert!(!Pinned(Host).allows(CxlMem));
+        assert!(Pinned(PeerHbm(1)).allows(PeerHbm(1)));
+        assert!(!Pinned(PeerHbm(1)).allows(PeerHbm(2)), "pinned peer is device-exact");
+        assert!(!Pinned(LocalHbm).allows(LocalHbm));
+    }
+
+    #[test]
+    fn tier_display_names() {
+        assert_eq!(MemoryTier::PeerHbm(2).to_string(), "peer-hbm(gpu2)");
+        assert_eq!(MemoryTier::Host.to_string(), "host");
+        assert_eq!(MemoryTier::CxlMem.to_string(), "cxl-mem");
+    }
+}

@@ -9,10 +9,16 @@
 //! [`crate::harvest::session::HarvestSession`] owns a
 //! [`RevocationQueue`] inside the runtime; the controller completes the
 //! whole pipeline (drain in-flight DMA, invalidate the placement, free
-//! the arena bytes) **before** enqueueing the event, and the consumer
-//! drains its queue at a tick boundary of its choosing via
-//! `drain_revocations`. By the time an event is observable, the lease it
-//! names is guaranteed dead.
+//! the arena bytes — or, for a demotion, migrate the bytes to a slower
+//! tier) **before** enqueueing the event, and the consumer drains its
+//! queue at a tick boundary of its choosing via `drain_revocations`.
+//!
+//! Each event carries a [`RevocationAction`]: under
+//! [`RevocationAction::Dropped`] the lease it names is guaranteed dead
+//! by the time the event is drainable; under
+//! [`RevocationAction::Demoted`] the lease *survives* on the slower
+//! tier it was migrated to (peer → host under pressure), and only the
+//! fast-tier placement is gone.
 //!
 //! # The drain ordering guarantee
 //!
@@ -21,15 +27,15 @@
 //!
 //! ```
 //! use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime, PayloadKind,
-//!                        RevocationReason};
+//!                        RevocationAction, RevocationReason, TierPreference};
 //! use harvest::memsim::{NodeSpec, SimNode};
 //!
 //! let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()),
 //!                                  HarvestConfig::for_node(2));
 //! let session = hr.open_session(PayloadKind::Generic);
 //! let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
-//! let a = session.alloc(&mut hr, 1 << 20, hints)?;
-//! let b = session.alloc(&mut hr, 1 << 20, hints)?;
+//! let a = session.alloc(&mut hr, 1 << 20, TierPreference::PEER_ONLY, hints)?;
+//! let b = session.alloc(&mut hr, 1 << 20, TierPreference::PEER_ONLY, hints)?;
 //!
 //! assert!(hr.revoke(a.id(), RevocationReason::TenantPressure).is_some());
 //! assert!(hr.revoke(b.id(), RevocationReason::PolicyEviction).is_some());
@@ -38,17 +44,20 @@
 //! // (drain-DMA → invalidate → free completed first)...
 //! assert!(!hr.is_live(a.id()) && !hr.is_live(b.id()));
 //! let events = session.drain_revocations(&mut hr);
-//! // ...and they arrive oldest first, exactly once.
+//! // ...and they arrive oldest first, exactly once, each carrying the
+//! // tier they were revoked from and what happened to the payload.
 //! assert_eq!(events.len(), 2);
 //! assert_eq!(events[0].lease, a.id());
 //! assert_eq!(events[1].lease, b.id());
+//! assert!(events.iter().all(|e| e.action == RevocationAction::Dropped));
+//! assert!(events.iter().all(|e| e.tier.is_peer()));
 //! assert!(events[0].at <= events[1].at);
 //! assert!(session.drain_revocations(&mut hr).is_empty());
 //! # drop((a, b)); // stale RAII owners; the runtime's sweep ignores them
 //! # Ok::<(), harvest::harvest::HarvestError>(())
 //! ```
 
-use super::api::{Durability, LeaseId, RevocationReason};
+use super::api::{Durability, LeaseId, MemoryTier, RevocationReason};
 use crate::memsim::Ns;
 use std::collections::VecDeque;
 
@@ -77,19 +86,35 @@ impl PayloadKind {
     }
 }
 
+/// What the revocation pipeline did with the payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RevocationAction {
+    /// The lease is dead and its bytes are gone; the consumer repairs
+    /// its indexes (host fallback or reconstruct, per durability).
+    Dropped,
+    /// The lease *survived*: pressure evicted it from its fast tier but
+    /// the controller migrated the bytes to `to` (peer → host demotion)
+    /// instead of dropping them. The lease now reads from `to`; no data
+    /// was lost, only latency.
+    Demoted { to: MemoryTier },
+}
+
 /// One completed revocation as observed by the owning session. Unlike
 /// the legacy [`crate::harvest::api::Revocation`] it does not carry a
-/// live `HarvestHandle` — the placement it describes is already gone —
-/// only the facts a consumer needs to repair its own indexes.
+/// live `HarvestHandle` — the fast-tier placement it describes is
+/// already gone — only the facts a consumer needs to repair its own
+/// indexes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RevocationEvent {
-    /// The revoked lease. Guaranteed dead (not live in the runtime) by
-    /// the time the event can be drained.
+    /// The revoked lease. Under [`RevocationAction::Dropped`] it is
+    /// guaranteed dead (not live in the runtime) by the time the event
+    /// can be drained; under [`RevocationAction::Demoted`] it is still
+    /// live, resident on the demotion target tier.
     pub lease: LeaseId,
     /// Payload kind the owning session declared at `open`.
     pub kind: PayloadKind,
-    /// Peer GPU the bytes lived on.
-    pub peer: usize,
+    /// Tier the bytes were revoked from.
+    pub tier: MemoryTier,
     /// Size of the revoked allocation.
     pub size: u64,
     /// Durability the lease was allocated with — tells the consumer
@@ -98,7 +123,11 @@ pub struct RevocationEvent {
     /// Client identity from the allocation hints, if any.
     pub client: Option<u32>,
     pub reason: RevocationReason,
-    /// Virtual time at which the free completed (after the DMA drain).
+    /// What happened to the payload: dropped, or demoted to a slower
+    /// tier with the lease intact.
+    pub action: RevocationAction,
+    /// Virtual time at which the pipeline completed (after the DMA
+    /// drain; for demotions, when the demotion copy was issued).
     pub at: Ns,
 }
 
@@ -155,11 +184,12 @@ mod tests {
         RevocationEvent {
             lease: LeaseId(id),
             kind: PayloadKind::Generic,
-            peer: 1,
+            tier: MemoryTier::PeerHbm(1),
             size: 64,
             durability: Durability::Lossy,
             client: None,
             reason: RevocationReason::TenantPressure,
+            action: RevocationAction::Dropped,
             at,
         }
     }

@@ -1,5 +1,5 @@
 //! The Harvest runtime — the paper's system contribution (§3), behind a
-//! lease-based client API.
+//! tier-aware, lease-based client API.
 //!
 //! Harvest exposes unused HBM on *peer GPUs* as a best-effort, revocable
 //! cache tier. The paper sketches a C-style surface (§3.2):
@@ -10,46 +10,56 @@
 //! harvest_register_cb(handle, cb)
 //! ```
 //!
-//! This crate redesigns it around revocable **leases** with pull-model
-//! revocation events:
+//! This crate redesigns it around revocable **leases** on an explicit
+//! **memory-tier hierarchy** (`LocalHbm` / `PeerHbm(gpu)` / `CxlMem` /
+//! `Host`), with pull-model revocation events:
 //!
 //! ```text
 //! let session = hr.open_session(PayloadKind::KvBlock);
-//! let lease   = session.alloc(&mut hr, size, hints)?;          // RAII
-//! let batch   = session.alloc_many(&mut hr, &sizes, hints)?;   // all-or-nothing
+//! let lease   = session.alloc(&mut hr, size, TierPreference::FastestAvailable, hints)?;
+//! let batch   = session.alloc_many(&mut hr, &sizes, pref, hints)?;  // all-or-nothing
 //! Transfer::new().populate(&lease, src).fetch(&lease, gpu).submit(&mut hr)?;
-//! session.release(&mut hr, lease)?;                            // consumes: no double free
+//! Transfer::new().migrate(&lease, MemoryTier::Host).submit(&mut hr)?; // demote/promote
+//! session.release(&mut hr, lease)?;                             // consumes: no double free
 //! for ev in session.drain_revocations(&mut hr) { /* repair indexes */ }
 //! ```
 //!
+//! * [`api`] — [`api::MemoryTier`] and [`api::TierPreference`] (the
+//!   hierarchy and what slice of it an allocation accepts), ids, hints,
+//!   durability modes, revocation reasons, errors.
 //! * [`session`] — [`session::HarvestSession`] (per-consumer identity +
-//!   private event queue), [`session::Lease`] (RAII: leaked leases are
-//!   swept, double-free does not typecheck), and the
-//!   [`session::Transfer`] builder unifying populate/fetch/raw moves in
-//!   one batched-DMA path with per-lease tagging.
+//!   private event queue), [`session::Lease`] (RAII, carries its
+//!   resident tier across migrations; leaked leases are swept,
+//!   double-free does not typecheck), and the [`session::Transfer`]
+//!   builder unifying populate/fetch/raw/migrate moves in one
+//!   batched-DMA path with per-lease tagging.
 //! * [`events`] — [`events::PayloadKind`], [`events::RevocationEvent`]
-//!   and the drainable [`events::RevocationQueue`]. The controller
-//!   completes drain-DMA → invalidate → free **before** an event becomes
-//!   observable, so consumers repair their indexes at tick boundaries
-//!   with no shared mutable state.
-//! * [`api`] — ids, hints, durability modes, revocation reasons, errors.
+//!   with its [`events::RevocationAction`] (`Dropped` vs `Demoted`), and
+//!   the drainable [`events::RevocationQueue`]. The controller completes
+//!   drain-DMA → invalidate → free (or the demotion migration) **before**
+//!   an event becomes observable, so consumers repair their indexes at
+//!   tick boundaries with no shared mutable state.
 //! * [`policy`] — pluggable placement policies: best-fit (the paper's
 //!   default) plus the locality / fairness / interference / stability
-//!   variants §3.2 sketches. Vectored batches consult the policy once.
-//! * [`monitor`] — peer-availability views (free capacity, churn,
+//!   variants §3.2 sketches, each extended to the cross-tier decision by
+//!   [`policy::PlacementPolicy::place_tiered`] — peer HBM, host DRAM and
+//!   CXL scored under one cost model (capacity, link queue,
+//!   interference). Vectored batches consult the policy once.
+//! * [`monitor`] — per-tier availability views (free capacity, churn,
 //!   bandwidth demand — demand and prefetch traffic attributed
-//!   separately) that policies consult.
+//!   separately on every tier slot) that policies consult.
 //! * [`prefetch`] — the deadline-aware prefetch planner: admission
-//!   control that lets consumers overlap peer DMA with decode compute
-//!   without ever delaying a demand fetch, plus the hit/late/waste
-//!   outcome ledger.
+//!   control that lets consumers overlap tier DMA (peer reloads *and*
+//!   host→peer promotions) with decode compute without ever delaying a
+//!   demand fetch, plus the hit/late/waste outcome ledger.
 //! * [`controller`] — the runtime: performs allocations on the selected
-//!   peer, watches tenant pressure, drives the revocation pipeline, and
+//!   tier, watches tenant pressure (optionally demoting lossy leases to
+//!   host instead of dropping them), drives the revocation pipeline, and
 //!   keeps the paper's raw surface alive as deprecated shims.
 //! * [`mig`] — MIG-style isolation: harvesting confined to a reserved
 //!   capacity partition per peer GPU.
 //!
-//! Correctness never depends on the peer tier: every cached object is
+//! Correctness never depends on the fast tiers: every cached object is
 //! either [`api::Durability::HostBacked`] or
 //! [`api::Durability::Lossy`] (reconstructible), and the runtime never
 //! tracks dirty state or performs write-back (§3.1).
@@ -63,15 +73,15 @@ pub mod policy;
 pub mod prefetch;
 pub mod session;
 
-pub use api::{AllocHints, Durability, HarvestError, HarvestHandle, LeaseId, Revocation,
-              RevocationReason};
+pub use api::{AllocHints, Durability, HarvestError, HarvestHandle, LeaseId, MemoryTier,
+              Revocation, RevocationReason, TierPreference};
 #[allow(deprecated)] // re-exported so pre-lease call sites keep compiling
 pub use api::HandleId;
 pub use controller::{HarvestConfig, HarvestRuntime, VictimPolicy};
-pub use events::{PayloadKind, RevocationEvent, RevocationQueue};
+pub use events::{PayloadKind, RevocationAction, RevocationEvent, RevocationQueue};
 pub use mig::MigConfig;
 pub use monitor::{PeerMonitor, PeerView};
 pub use policy::{BestFit, FirstAvailable, InterferenceAware, LocalityAware, PlacementPolicy,
-                 RateLimitFairness, StabilityAware};
+                 RateLimitFairness, StabilityAware, TierView, TieredPlacementRequest};
 pub use prefetch::{PrefetchConfig, PrefetchPlanner, PrefetchStats};
 pub use session::{HarvestSession, Lease, SessionId, Transfer, TransferReport};

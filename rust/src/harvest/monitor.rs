@@ -1,12 +1,18 @@
 //! Peer-availability monitoring (§3.1: "The Harvest runtime monitors peer
 //! memory availability").
 //!
-//! [`PeerMonitor`] maintains, per GPU, the statistics placement policies
-//! consult: instantaneous harvestable bytes, largest allocatable segment,
-//! recent tenant *churn* (how often / how much co-tenant usage moved —
-//! the stability policy's signal), and recent link bandwidth demand (the
-//! interference policy's signal).
+//! [`PeerMonitor`] maintains, per cache tier, the statistics placement
+//! policies consult: instantaneous harvestable bytes, largest
+//! allocatable segment, recent tenant *churn* (how often / how much
+//! co-tenant usage moved — the stability policy's signal), and recent
+//! link bandwidth demand (the interference policy's signal). Traffic is
+//! tracked per tier slot — one per GPU, plus host DRAM and CXL — so the
+//! unified tier placement
+//! ([`crate::harvest::policy::PlacementPolicy::place_tiered`]) sees
+//! host/CXL link pressure exactly like peer link pressure, with the
+//! demand/prefetch attribution split preserved on every slot.
 
+use super::api::MemoryTier;
 use crate::memsim::{Ns, SimNode};
 use std::collections::VecDeque;
 
@@ -29,19 +35,22 @@ pub struct PeerView {
     pub our_bytes: u64,
 }
 
-/// Sliding-window churn/bandwidth tracker.
+/// Sliding-window churn/bandwidth tracker. Slot layout: `0..n_gpus` are
+/// the GPUs, then host DRAM, then CXL.
 #[derive(Debug, Clone)]
 pub struct PeerMonitor {
     window: Ns,
-    /// Per device: (time, |usage delta| in bytes) events.
+    n_gpus: usize,
+    /// Per slot: (time, |usage delta| in bytes) events (GPU slots only —
+    /// host/CXL carry no co-tenant timeline).
     churn_events: Vec<VecDeque<(Ns, u64)>>,
-    /// Per device: (time, bytes transferred) events.
+    /// Per slot: (time, bytes transferred) events.
     bw_events: Vec<VecDeque<(Ns, u64)>>,
     last_seen_used: Vec<u64>,
-    /// Cumulative bytes of *demand* traffic per device (critical-path
-    /// populates/fetches).
+    /// Cumulative bytes of *demand* traffic per slot (critical-path
+    /// populates/fetches/migrations).
     demand_bytes: Vec<u64>,
-    /// Cumulative bytes of *background prefetch* traffic per device.
+    /// Cumulative bytes of *background prefetch* traffic per slot.
     /// Prefetch traffic still lands in `bw_events` — the interference
     /// policy must see total link pressure either way — but the split
     /// lets metrics attribute hit/waste bandwidth to the prefetch
@@ -51,13 +60,24 @@ pub struct PeerMonitor {
 
 impl PeerMonitor {
     pub fn new(n_gpus: usize, window: Ns) -> Self {
+        let slots = n_gpus + 2; // + host, + cxl
         Self {
             window,
-            churn_events: vec![VecDeque::new(); n_gpus],
-            bw_events: vec![VecDeque::new(); n_gpus],
-            last_seen_used: vec![0; n_gpus],
-            demand_bytes: vec![0; n_gpus],
-            prefetch_bytes: vec![0; n_gpus],
+            n_gpus,
+            churn_events: vec![VecDeque::new(); slots],
+            bw_events: vec![VecDeque::new(); slots],
+            last_seen_used: vec![0; slots],
+            demand_bytes: vec![0; slots],
+            prefetch_bytes: vec![0; slots],
+        }
+    }
+
+    fn slot(&self, tier: MemoryTier) -> usize {
+        match tier {
+            MemoryTier::PeerHbm(g) => g,
+            MemoryTier::Host => self.n_gpus,
+            MemoryTier::CxlMem => self.n_gpus + 1,
+            MemoryTier::LocalHbm => unreachable!("local HBM traffic is not harvest traffic"),
         }
     }
 
@@ -74,34 +94,65 @@ impl PeerMonitor {
                 self.last_seen_used[i] = used;
             }
             Self::expire(&mut self.churn_events[i], now, self.window);
-            Self::expire(&mut self.bw_events[i], now, self.window);
+        }
+        for q in &mut self.bw_events {
+            Self::expire(q, now, self.window);
         }
     }
 
-    /// Record demand link traffic touching `device` (for interference
-    /// scoring).
+    /// Record demand link traffic touching peer GPU `device` (for
+    /// interference scoring).
     pub fn record_transfer(&mut self, device: usize, at: Ns, bytes: u64) {
-        self.bw_events[device].push_back((at, bytes));
-        self.demand_bytes[device] += bytes;
+        self.record_tier_transfer(MemoryTier::PeerHbm(device), at, bytes);
     }
 
-    /// Record background *prefetch* traffic touching `device`. Counted in
+    /// Record background *prefetch* traffic touching peer GPU `device`.
+    pub fn record_prefetch_transfer(&mut self, device: usize, at: Ns, bytes: u64) {
+        self.record_tier_prefetch(MemoryTier::PeerHbm(device), at, bytes);
+    }
+
+    /// Record demand link traffic touching `tier`. Counted in the
+    /// sliding bandwidth window the interference policy consults.
+    pub fn record_tier_transfer(&mut self, tier: MemoryTier, at: Ns, bytes: u64) {
+        let s = self.slot(tier);
+        self.bw_events[s].push_back((at, bytes));
+        self.demand_bytes[s] += bytes;
+    }
+
+    /// Record background *prefetch* traffic touching `tier`. Counted in
     /// the same sliding bandwidth window as demand traffic (interference
     /// policies must steer away from links our own prefetches saturate
     /// too), but attributed separately in the cumulative counters.
-    pub fn record_prefetch_transfer(&mut self, device: usize, at: Ns, bytes: u64) {
-        self.bw_events[device].push_back((at, bytes));
-        self.prefetch_bytes[device] += bytes;
+    pub fn record_tier_prefetch(&mut self, tier: MemoryTier, at: Ns, bytes: u64) {
+        let s = self.slot(tier);
+        self.bw_events[s].push_back((at, bytes));
+        self.prefetch_bytes[s] += bytes;
     }
 
-    /// Cumulative demand bytes recorded against `device`.
+    /// Cumulative demand bytes recorded against peer GPU `device`.
     pub fn demand_bytes_on(&self, device: usize) -> u64 {
         self.demand_bytes[device]
     }
 
-    /// Cumulative prefetch bytes recorded against `device`.
+    /// Cumulative prefetch bytes recorded against peer GPU `device`.
     pub fn prefetch_bytes_on(&self, device: usize) -> u64 {
         self.prefetch_bytes[device]
+    }
+
+    /// Cumulative demand bytes recorded against `tier`.
+    pub fn demand_bytes_on_tier(&self, tier: MemoryTier) -> u64 {
+        self.demand_bytes[self.slot(tier)]
+    }
+
+    /// Cumulative prefetch bytes recorded against `tier`.
+    pub fn prefetch_bytes_on_tier(&self, tier: MemoryTier) -> u64 {
+        self.prefetch_bytes[self.slot(tier)]
+    }
+
+    /// Recent bytes/sec moved over links touching `tier` (demand +
+    /// prefetch) — the interference signal the tier cost model consults.
+    pub fn bw_demand_on_tier(&self, tier: MemoryTier) -> f64 {
+        Self::rate_per_sec(&self.bw_events[self.slot(tier)], self.window)
     }
 
     fn expire(q: &mut VecDeque<(Ns, u64)>, now: Ns, window: Ns) {
@@ -127,7 +178,6 @@ impl PeerMonitor {
         partition_limit: &[Option<u64>],
         our_bytes: &[u64],
     ) -> Vec<PeerView> {
-        let _now = node.clock.now();
         (0..node.n_gpus())
             .map(|i| {
                 let cap = node.gpus[i].hbm.capacity();
@@ -234,5 +284,22 @@ mod tests {
         // ...but the policy-facing bandwidth signal sees the sum
         let v = mon.views(&node, &[None, None], &[0, 0]);
         assert!((v[1].bw_demand - 500.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn host_and_cxl_slots_track_independently() {
+        let mut mon = PeerMonitor::new(2, 1_000_000_000);
+        mon.record_tier_transfer(MemoryTier::Host, 0, 1_000);
+        mon.record_tier_prefetch(MemoryTier::Host, 0, 500);
+        mon.record_tier_transfer(MemoryTier::CxlMem, 0, 7_000);
+        // demand/prefetch split preserved on the host slot
+        assert_eq!(mon.demand_bytes_on_tier(MemoryTier::Host), 1_000);
+        assert_eq!(mon.prefetch_bytes_on_tier(MemoryTier::Host), 500);
+        assert_eq!(mon.demand_bytes_on_tier(MemoryTier::CxlMem), 7_000);
+        // gpu slots untouched
+        assert_eq!(mon.demand_bytes_on(0) + mon.demand_bytes_on(1), 0);
+        // tier bandwidth signal sums demand + prefetch
+        assert!((mon.bw_demand_on_tier(MemoryTier::Host) - 1_500.0).abs() < 1.0);
+        assert!((mon.bw_demand_on_tier(MemoryTier::CxlMem) - 7_000.0).abs() < 1.0);
     }
 }

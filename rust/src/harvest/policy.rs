@@ -1,14 +1,21 @@
-//! Placement policies (§3.2 "Allocation policy").
+//! Placement policies (§3.2 "Allocation policy"), tier edition.
 //!
-//! A [`PlacementPolicy`] chooses which peer GPU serves a `harvest_alloc`.
-//! The paper's prototype uses best-fit; the section explicitly sketches
-//! four alternatives ("Other policies can optimize locality ..., fairness
-//! ..., interference ..., or stability ...") — all five are implemented
-//! here and ablated in `rust/benches/` (DESIGN.md experiment index).
+//! A [`PlacementPolicy`] answers two questions for every allocation:
+//!
+//! 1. **Which peer?** — [`PlacementPolicy::select`], the paper's
+//!    per-policy choice (best-fit by default; locality / fairness /
+//!    interference / stability variants per §3.2's sketch).
+//! 2. **Which tier?** — [`PlacementPolicy::place_tiered`], the unified
+//!    cross-tier decision: the policy-selected peer competes against
+//!    host DRAM ([`crate::memsim::LinkModel::pcie5_host`]) and CXL
+//!    ([`crate::memsim::LinkModel::cxl_mem`]) under **one cost model**
+//!    (capacity, link queue depth, interference load), constrained by
+//!    the caller's [`TierPreference`]. Peer-vs-host-vs-CXL stops being N
+//!    ad-hoc consumer paths and becomes a single policy decision.
 
-use super::api::AllocHints;
+use super::api::{AllocHints, MemoryTier, TierPreference};
 use super::monitor::PeerView;
-use crate::memsim::Topology;
+use crate::memsim::{Ns, Topology};
 
 /// Context a policy sees for one allocation request. A vectored
 /// `alloc_many` batch is presented as a single request: `size` is the
@@ -38,10 +45,107 @@ impl PlacementRequest<'_> {
     }
 }
 
-/// Chooses a peer GPU for an allocation, or `None` to reject.
+/// Snapshot of one candidate tier as seen by the cross-tier cost model.
+/// Built by the controller from the arenas, the link topology and the
+/// monitor; one entry per feasible-ish tier (every harvestable peer,
+/// host DRAM, CXL when attached).
+#[derive(Debug, Clone, Copy)]
+pub struct TierView {
+    pub tier: MemoryTier,
+    /// Bytes allocatable on the tier right now.
+    pub free_bytes: u64,
+    /// Largest contiguous segment on the tier.
+    pub largest_free: u64,
+    /// Unloaded latency of fetching the requested bytes from this tier
+    /// to the compute GPU (the serve path the allocation exists for).
+    pub fetch_ns: Ns,
+    /// How long the fetch link stays busy with already-queued transfers
+    /// (`busy_until − now`): the contention term of the cost model.
+    pub queue_ns: Ns,
+    /// Recent traffic on links touching the tier as a fraction of the
+    /// fetch link's peak bandwidth: the interference term.
+    pub load: f64,
+    /// Tenant churn on the tier (peers only; 0 for host/CXL).
+    pub churn_per_sec: f64,
+}
+
+impl TierView {
+    /// The unified cost: unloaded fetch latency scaled by interference
+    /// load, plus the current link queue. Lower is better; ties break to
+    /// the faster tier class.
+    pub fn cost_ns(&self) -> Ns {
+        let scaled = (self.fetch_ns as f64 * (1.0 + self.load)) as Ns;
+        scaled.saturating_add(self.queue_ns)
+    }
+}
+
+/// One cross-tier placement request: the peer views (for the per-policy
+/// peer choice) plus a [`TierView`] per candidate tier, under a caller
+/// [`TierPreference`].
+pub struct TieredPlacementRequest<'a> {
+    pub size: u64,
+    pub contiguous: u64,
+    pub pref: TierPreference,
+    pub hints: AllocHints,
+    /// Peer views for [`PlacementPolicy::select`] (already filtered to
+    /// harvestable devices).
+    pub peer_views: &'a [PeerView],
+    /// One view per candidate tier (peers, host, CXL when present).
+    pub tier_views: &'a [TierView],
+    pub topo: &'a Topology,
+}
+
+/// Chooses where an allocation lives.
 pub trait PlacementPolicy {
     fn name(&self) -> &'static str;
+
+    /// The per-policy *peer* choice among `req.views`, or `None` to
+    /// reject the peer tier.
     fn select(&mut self, req: &PlacementRequest<'_>) -> Option<usize>;
+
+    /// The unified cross-tier decision. The default implementation asks
+    /// [`PlacementPolicy::select`] which peer should represent the peer
+    /// tier (preserving each policy's peer-selection character), then
+    /// scores that peer against host DRAM and CXL with
+    /// [`TierView::cost_ns`], honouring `req.pref`. Ties break to the
+    /// faster tier class.
+    fn place_tiered(&mut self, req: &TieredPlacementRequest<'_>) -> Option<MemoryTier> {
+        let peer = {
+            let pr = PlacementRequest {
+                size: req.size,
+                contiguous: req.contiguous,
+                hints: req.hints,
+                views: req.peer_views,
+                topo: req.topo,
+            };
+            self.select(&pr)
+        };
+        let mut best: Option<(MemoryTier, Ns)> = None;
+        for tv in req.tier_views {
+            if !req.pref.allows(tv.tier) {
+                continue;
+            }
+            if let MemoryTier::PeerHbm(g) = tv.tier {
+                if peer != Some(g) {
+                    continue; // only the policy's chosen peer competes
+                }
+            }
+            if tv.free_bytes < req.size || tv.largest_free < req.contiguous {
+                continue;
+            }
+            let cost = tv.cost_ns();
+            let better = match best {
+                None => true,
+                Some((bt, bc)) => {
+                    cost < bc || (cost == bc && tv.tier.speed_rank() < bt.speed_rank())
+                }
+            };
+            if better {
+                best = Some((tv.tier, cost));
+            }
+        }
+        best.map(|(t, _)| t)
+    }
 }
 
 /// The paper's default: the feasible peer whose fitting segment leaves
@@ -318,5 +422,125 @@ mod tests {
         let views = vec![view(0, 0, 0), churny, placid];
         let r = req(100, AllocHints::default(), &views, &t);
         assert_eq!(StabilityAware.select(&r), Some(2));
+    }
+
+    // -- cross-tier placement ---------------------------------------------
+
+    fn tier_view(tier: MemoryTier, free: u64, fetch_ns: Ns) -> TierView {
+        TierView {
+            tier,
+            free_bytes: free,
+            largest_free: free,
+            fetch_ns,
+            queue_ns: 0,
+            load: 0.0,
+            churn_per_sec: 0.0,
+        }
+    }
+
+    fn tiered<'a>(
+        size: u64,
+        pref: TierPreference,
+        peer_views: &'a [PeerView],
+        tier_views: &'a [TierView],
+        topo: &'a Topology,
+    ) -> TieredPlacementRequest<'a> {
+        TieredPlacementRequest {
+            size,
+            contiguous: size,
+            pref,
+            hints: AllocHints { compute_gpu: Some(0), ..Default::default() },
+            peer_views,
+            tier_views,
+            topo,
+        }
+    }
+
+    #[test]
+    fn idle_peer_beats_host_and_cxl() {
+        let t = topo(2);
+        let peers = vec![view(1, 1000, 1000)];
+        let tiers = vec![
+            tier_view(MemoryTier::PeerHbm(1), 1000, 10),
+            tier_view(MemoryTier::CxlMem, 1000, 40),
+            tier_view(MemoryTier::Host, 1000, 100),
+        ];
+        let r = tiered(100, TierPreference::FastestAvailable, &peers, &tiers, &t);
+        assert_eq!(BestFit.place_tiered(&r), Some(MemoryTier::PeerHbm(1)));
+    }
+
+    #[test]
+    fn queued_peer_link_spills_to_cxl_then_host() {
+        let t = topo(2);
+        let peers = vec![view(1, 1000, 1000)];
+        let mut busy_peer = tier_view(MemoryTier::PeerHbm(1), 1000, 10);
+        busy_peer.queue_ns = 1_000; // demand queue on the fetch link
+        let tiers = vec![
+            busy_peer,
+            tier_view(MemoryTier::CxlMem, 1000, 40),
+            tier_view(MemoryTier::Host, 1000, 100),
+        ];
+        let r = tiered(100, TierPreference::FastestAvailable, &peers, &tiers, &t);
+        assert_eq!(BestFit.place_tiered(&r), Some(MemoryTier::CxlMem));
+        // CXL full -> host wins
+        let tiers = vec![busy_peer, tier_view(MemoryTier::CxlMem, 0, 40),
+                         tier_view(MemoryTier::Host, 1000, 100)];
+        let r = tiered(100, TierPreference::FastestAvailable, &peers, &tiers, &t);
+        assert_eq!(BestFit.place_tiered(&r), Some(MemoryTier::Host));
+    }
+
+    #[test]
+    fn interference_load_scales_cost() {
+        let t = topo(2);
+        let peers = vec![view(1, 1000, 1000)];
+        let mut loaded_peer = tier_view(MemoryTier::PeerHbm(1), 1000, 60);
+        loaded_peer.load = 1.0; // saturated link: cost doubles to 120
+        let tiers = vec![loaded_peer, tier_view(MemoryTier::Host, 1000, 100)];
+        let r = tiered(100, TierPreference::FastestAvailable, &peers, &tiers, &t);
+        assert_eq!(BestFit.place_tiered(&r), Some(MemoryTier::Host));
+    }
+
+    #[test]
+    fn preference_constrains_tiers() {
+        let t = topo(2);
+        let peers = vec![view(1, 0, 0)]; // peer full
+        let tiers = vec![
+            tier_view(MemoryTier::PeerHbm(1), 0, 10),
+            tier_view(MemoryTier::CxlMem, 1000, 40),
+            tier_view(MemoryTier::Host, 1000, 100),
+        ];
+        // peers-only preference: nothing admissible
+        let r = tiered(100, TierPreference::PEER_ONLY, &peers, &tiers, &t);
+        assert_eq!(BestFit.place_tiered(&r), None);
+        // at-least-CXL admits CXL but not host
+        let r = tiered(100, TierPreference::AtLeast(MemoryTier::CxlMem), &peers, &tiers, &t);
+        assert_eq!(BestFit.place_tiered(&r), Some(MemoryTier::CxlMem));
+    }
+
+    #[test]
+    fn policy_peer_choice_feeds_tier_decision() {
+        // Best-fit picks peer 2 (tighter segment); the tier decision must
+        // score *that* peer, not peer 1.
+        let t = topo(3);
+        let peers = vec![view(1, 1000, 1000), view(2, 300, 300)];
+        let tiers = vec![
+            tier_view(MemoryTier::PeerHbm(1), 1000, 10),
+            tier_view(MemoryTier::PeerHbm(2), 300, 10),
+            tier_view(MemoryTier::Host, 10_000, 100),
+        ];
+        let r = tiered(250, TierPreference::FastestAvailable, &peers, &tiers, &t);
+        assert_eq!(BestFit.place_tiered(&r), Some(MemoryTier::PeerHbm(2)));
+    }
+
+    #[test]
+    fn equal_cost_ties_break_to_faster_class() {
+        let t = topo(2);
+        let peers = vec![view(1, 1000, 1000)];
+        let tiers = vec![
+            tier_view(MemoryTier::Host, 1000, 50),
+            tier_view(MemoryTier::CxlMem, 1000, 50),
+        ];
+        let r = tiered(100, TierPreference::FastestAvailable, &peers, &tiers, &t);
+        assert_eq!(BestFit.place_tiered(&r), Some(MemoryTier::CxlMem));
     }
 }

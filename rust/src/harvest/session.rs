@@ -1,31 +1,39 @@
-//! Lease-based client surface: sessions, RAII leases, and the unified
-//! transfer builder.
+//! Lease-based client surface: sessions, RAII tier-carrying leases, and
+//! the unified transfer builder.
 //!
 //! Consumers open one [`HarvestSession`] per subsystem (the KV offload
 //! manager, the MoE rebalancer, …) and get:
 //!
 //! * [`Lease`] — an RAII handle replacing the bare `HandleId`. The
-//!   payload kind, durability and client identity ride on the lease;
-//!   releasing consumes it (double-free is unrepresentable), and a lease
-//!   dropped without release is reclaimed by the runtime's leak sweep,
-//!   so `bytes_on` accounting can never drift.
-//! * [`HarvestSession::alloc_many`] — vectored, all-or-nothing
-//!   allocation for multi-block admission: one policy consultation for
-//!   the whole batch, full rollback on partial placement failure.
+//!   payload kind, durability, client identity and **resident tier**
+//!   ride on the lease ([`Lease::tier`] stays current across
+//!   migrations); releasing consumes it (double-free is
+//!   unrepresentable), and a lease dropped without release is reclaimed
+//!   by the runtime's leak sweep, so per-tier `bytes_on` accounting can
+//!   never drift.
+//! * [`HarvestSession::alloc`] / [`HarvestSession::alloc_many`] — every
+//!   allocation names a [`TierPreference`]; the placement policy scores
+//!   peer HBM, host DRAM and CXL under one cost model and the returned
+//!   leases carry the chosen tier. `alloc_many` is vectored and
+//!   all-or-nothing: one policy consultation for the whole batch, one
+//!   tier, full rollback on partial placement failure.
 //! * [`HarvestSession::drain_revocations`] — the pull-model replacement
 //!   for `harvest_register_cb`: the controller finishes the whole
-//!   revocation pipeline (drain DMA → invalidate → free) before the
-//!   event becomes drainable.
+//!   revocation pipeline (drain DMA → invalidate → free, or the
+//!   demotion migration) before the event becomes drainable.
 //! * [`Transfer`] — one builder for every data movement (`copy_in` and
 //!   `fetch_to` unified), with per-lease DMA tagging, optional
-//!   scattered-descriptor chunking for paged KV, and a
+//!   scattered-descriptor chunking for paged KV, a
 //!   [`Transfer::background`] mode that attributes a batch as prefetch
-//!   bandwidth in the peer monitor.
+//!   bandwidth in the peer monitor, and [`Transfer::migrate`] to move a
+//!   live lease between tiers (demotion under pressure, promotion when
+//!   capacity opens) as a first-class, monitored, revocation-safe op.
 //!
-//! # Example: open → alloc_many → Transfer → release
+//! # Example: open → alloc_many → Transfer → migrate → release
 //!
 //! ```
-//! use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime, PayloadKind, Transfer};
+//! use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime, MemoryTier,
+//!                        PayloadKind, TierPreference, Transfer};
 //! use harvest::memsim::{DeviceId, NodeSpec, SimNode};
 //!
 //! let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()),
@@ -33,11 +41,15 @@
 //! let session = hr.open_session(PayloadKind::KvBlock);
 //! let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
 //!
-//! // Vectored, all-or-nothing: one policy consultation, one peer for
-//! // the whole batch, full rollback on failure.
-//! let leases = session.alloc_many(&mut hr, &[1 << 20, 1 << 20], hints)?;
+//! // Vectored, all-or-nothing: one policy consultation, one tier for
+//! // the whole batch, full rollback on failure. On an idle fabric the
+//! // cost model picks peer HBM.
+//! let leases =
+//!     session.alloc_many(&mut hr, &[1 << 20, 1 << 20], TierPreference::FastestAvailable,
+//!                        hints)?;
 //! assert_eq!(leases.len(), 2);
-//! assert_eq!(leases[0].peer(), leases[1].peer());
+//! assert_eq!(leases[0].tier(), MemoryTier::PeerHbm(1));
+//! assert_eq!(leases[0].tier(), leases[1].tier());
 //!
 //! // One batched submission: populate both entries, then serve a hit.
 //! let report = Transfer::new()
@@ -48,19 +60,25 @@
 //! assert_eq!(report.events.len(), 3);
 //! assert_eq!(report.bytes, 3 << 20);
 //!
+//! // Demote one lease to host DRAM: the lease survives, carrying its
+//! // new tier; later fetches ride the PCIe link instead.
+//! Transfer::new().migrate(&leases[1], MemoryTier::Host).submit(&mut hr)?;
+//! assert_eq!(leases[1].tier(), MemoryTier::Host);
+//!
 //! // Release consumes each lease — releasing twice does not typecheck.
 //! for lease in leases {
 //!     session.release(&mut hr, lease)?;
 //! }
 //! assert_eq!(hr.live_bytes_on(1), 0);
+//! assert_eq!(hr.live_bytes_on_tier(MemoryTier::Host), 0);
 //! # Ok::<(), harvest::harvest::HarvestError>(())
 //! ```
 
-use super::api::{AllocHints, HarvestError, HarvestHandle, LeaseId};
+use super::api::{AllocHints, HarvestError, HarvestHandle, LeaseId, MemoryTier, TierPreference};
 use super::controller::HarvestRuntime;
 use super::events::{PayloadKind, RevocationEvent};
-use crate::memsim::{CopyEvent, DeviceId, Ns};
-use std::cell::RefCell;
+use crate::memsim::{AllocId, CopyEvent, DeviceId, Ns};
+use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
 /// Identifier of a session within one runtime.
@@ -76,21 +94,27 @@ pub(crate) type ReclaimInbox = Rc<RefCell<Vec<LeaseId>>>;
 // Lease
 // ---------------------------------------------------------------------
 
-/// RAII ownership of one peer-HBM allocation.
+/// RAII ownership of one harvest allocation, resident on exactly one
+/// [`MemoryTier`] at a time.
 ///
 /// A `Lease` is not `Clone`/`Copy`: exactly one owner exists, and the
 /// only ways it ends are
 ///
 /// 1. [`HarvestSession::release`] — explicit, ordered free (consumes the
 ///    lease, so releasing twice does not typecheck);
-/// 2. revocation by the runtime — the lease object the consumer still
-///    holds goes stale, and the session's event queue says so;
+/// 2. drop-revocation by the runtime — the lease object the consumer
+///    still holds goes stale, and the session's event queue says so
+///    (a *demotion* is not an ending: the lease lives on, on the slower
+///    tier — [`Lease::tier`] tracks it);
 /// 3. dropping it — the id lands in the reclaim inbox and the runtime
 ///    frees the bytes at its next sweep. Leaks are therefore bounded to
 ///    one sweep interval, never permanent.
 #[derive(Debug)]
 pub struct Lease {
     handle: HarvestHandle,
+    /// Residency cell shared with the runtime: migrations and demotions
+    /// update it in place, so the lease always knows its current tier.
+    tier: Rc<Cell<MemoryTier>>,
     kind: PayloadKind,
     session: SessionId,
     reclaim: ReclaimInbox,
@@ -101,19 +125,29 @@ pub struct Lease {
 impl Lease {
     pub(crate) fn new(
         handle: HarvestHandle,
+        tier: Rc<Cell<MemoryTier>>,
         kind: PayloadKind,
         session: SessionId,
         reclaim: ReclaimInbox,
     ) -> Self {
-        Self { handle, kind, session, reclaim, armed: true }
+        Self { handle, tier, kind, session, reclaim, armed: true }
     }
 
     pub fn id(&self) -> LeaseId {
         self.handle.id
     }
 
-    pub fn peer(&self) -> usize {
-        self.handle.peer
+    /// The tier currently holding the bytes. Stays correct across
+    /// [`Transfer::migrate`] and controller demotions (the cell is
+    /// shared with the runtime); after a drop-revocation it reports the
+    /// last tier the lease lived on.
+    pub fn tier(&self) -> MemoryTier {
+        self.tier.get()
+    }
+
+    /// The peer GPU index, when the lease is resident in peer HBM.
+    pub fn peer(&self) -> Option<usize> {
+        self.tier().peer_gpu()
     }
 
     pub fn size(&self) -> u64 {
@@ -136,8 +170,9 @@ impl Lease {
         self.session
     }
 
-    /// The raw placement record (for metrics / interop with the
-    /// deprecated surface).
+    /// The raw placement record as of allocation time (for metrics /
+    /// interop with the deprecated surface). `raw().tier` is a snapshot;
+    /// [`Lease::tier`] is current.
     pub fn raw(&self) -> HarvestHandle {
         self.handle
     }
@@ -213,35 +248,40 @@ impl HarvestSession {
         AllocHints { client: hints.client.or(self.client), ..hints }
     }
 
-    /// §3.2 `harvest_alloc`, lease edition: select a peer under the
-    /// placement policy and return an RAII lease for the allocation.
+    /// §3.2 `harvest_alloc`, tiered-lease edition: select a tier under
+    /// the placement policy (constrained by `pref`) and return an RAII
+    /// lease carrying its resident tier.
     pub fn alloc(
         &self,
         hr: &mut HarvestRuntime,
         size: u64,
+        pref: TierPreference,
         hints: AllocHints,
     ) -> Result<Lease, HarvestError> {
         self.check_bound(hr);
-        let handle = hr.alloc_raw(self.id, size, self.effective_hints(hints))?;
-        Ok(Lease::new(handle, self.kind, self.id, hr.reclaim_inbox()))
+        let handle = hr.alloc_raw(self.id, size, pref, self.effective_hints(hints))?;
+        Ok(Lease::new(handle, hr.tier_cell(handle.id), self.kind, self.id, hr.reclaim_inbox()))
     }
 
     /// Vectored allocation with all-or-nothing semantics: the placement
     /// policy is consulted once for the aggregate request, every element
-    /// lands on the same peer, and a partial placement failure rolls the
+    /// lands on the same tier, and a partial placement failure rolls the
     /// whole batch back (no bytes remain allocated, no leases escape).
     pub fn alloc_many(
         &self,
         hr: &mut HarvestRuntime,
         sizes: &[u64],
+        pref: TierPreference,
         hints: AllocHints,
     ) -> Result<Vec<Lease>, HarvestError> {
         self.check_bound(hr);
-        let handles = hr.alloc_many_raw(self.id, sizes, self.effective_hints(hints))?;
+        let handles = hr.alloc_many_raw(self.id, sizes, pref, self.effective_hints(hints))?;
         let inbox = hr.reclaim_inbox();
         Ok(handles
             .into_iter()
-            .map(|h| Lease::new(h, self.kind, self.id, Rc::clone(&inbox)))
+            .map(|h| {
+                Lease::new(h, hr.tier_cell(h.id), self.kind, self.id, Rc::clone(&inbox))
+            })
             .collect())
     }
 
@@ -257,8 +297,9 @@ impl HarvestSession {
 
     /// Drain this session's pending revocation events, oldest first.
     /// Consumers call this at tick boundaries (decode-pass start, KV
-    /// manager entry points); every event refers to a lease the runtime
-    /// has already drained, invalidated and freed — in that order.
+    /// manager entry points); every event refers to a lease whose
+    /// pipeline the runtime has already completed — drained, invalidated
+    /// and freed for drops; drained and migrated for demotions.
     pub fn drain_revocations(&self, hr: &mut HarvestRuntime) -> Vec<RevocationEvent> {
         self.check_bound(hr);
         hr.drain_session(self.id)
@@ -282,12 +323,14 @@ impl HarvestSession {
 
 #[derive(Debug, Clone, Copy)]
 enum TransferOp {
-    /// Populate the peer cache: `src` → the lease's peer allocation.
+    /// Populate the cache: `src` → the lease's resident tier.
     Populate { lease: LeaseId, src: DeviceId },
-    /// Serve a hit: the lease's peer allocation → the compute GPU.
+    /// Serve a hit: the lease's resident tier → the compute GPU.
     Fetch { lease: LeaseId, compute: usize },
-    /// An untagged raw move (host spill path, durable host copies).
+    /// An untagged raw move (diagnostics, synthetic link load).
     Raw { src: DeviceId, dst: DeviceId, bytes: u64 },
+    /// Move the lease's bytes to another tier (demotion / promotion).
+    Migrate { lease: LeaseId, to: MemoryTier },
 }
 
 /// Report of one submitted transfer batch.
@@ -309,7 +352,8 @@ impl TransferReport {
     }
 }
 
-/// Batched-DMA builder unifying the old `copy_in` / `fetch_to` pair.
+/// Batched-DMA builder unifying the old `copy_in` / `fetch_to` pair and
+/// the new cross-tier migration.
 ///
 /// Ops accumulate, then [`Transfer::submit`] schedules them in order on
 /// the simulated DMA engine. Lease-addressed ops are tagged with the
@@ -336,7 +380,7 @@ impl Transfer {
         self
     }
 
-    /// Mark this batch as *background* (prefetch) traffic: its peer
+    /// Mark this batch as *background* (prefetch) traffic: its tier
     /// traffic is recorded as prefetch bandwidth in the
     /// [`super::monitor::PeerMonitor`] — still visible to the
     /// interference policy, but attributed separately from demand
@@ -351,24 +395,38 @@ impl Transfer {
     }
 
     /// Queue a populate: copy `lease.size()` bytes from `src` into the
-    /// lease's peer allocation (the old `copy_in`).
+    /// lease's resident tier (the old `copy_in`).
     pub fn populate(mut self, lease: &Lease, src: DeviceId) -> Self {
         self.ops.push(TransferOp::Populate { lease: lease.id(), src });
         self
     }
 
-    /// Queue a fetch: copy the lease's bytes from its peer to
+    /// Queue a fetch: copy the lease's bytes from its resident tier to
     /// `compute_gpu` (the old `fetch_to` — the fast path the paper
-    /// measures).
+    /// measures; over NVLink from peers, PCIe from host, the CXL link
+    /// from the expander).
     pub fn fetch(mut self, lease: &Lease, compute_gpu: usize) -> Self {
         self.ops.push(TransferOp::Fetch { lease: lease.id(), compute: compute_gpu });
         self
     }
 
-    /// Queue an untagged raw move between arbitrary devices (host
-    /// spills, durable host copies).
+    /// Queue an untagged raw move between arbitrary devices (diagnostic
+    /// traffic; consumers move cached state through lease-addressed ops).
     pub fn raw(mut self, src: DeviceId, dst: DeviceId, bytes: u64) -> Self {
         self.ops.push(TransferOp::Raw { src, dst, bytes });
+        self
+    }
+
+    /// Queue a migration: allocate on tier `to`, copy the lease's bytes
+    /// over (tagged — the §3.2 drain barrier covers the move), release
+    /// the source segment, and update the lease's resident tier in
+    /// place. Demotion (peer→host under pressure) and promotion
+    /// (host→peer when capacity opens) are the two canonical uses; a
+    /// same-tier migrate is a no-op. The destination must share a link
+    /// with the source tier (peer↔host, peer↔CXL — no direct host↔CXL
+    /// path).
+    pub fn migrate(mut self, lease: &Lease, to: MemoryTier) -> Self {
+        self.ops.push(TransferOp::Migrate { lease: lease.id(), to });
         self
     }
 
@@ -380,54 +438,80 @@ impl Transfer {
         self.ops.is_empty()
     }
 
-    /// Schedule every queued op, in order. Fails with
-    /// [`HarvestError::StaleLease`] (scheduling nothing at all) if any
-    /// lease-addressed op names a lease that is no longer live — check
-    /// ordering is all-or-nothing so a half-submitted batch cannot
-    /// occur.
+    /// Schedule every queued op, in order, all-or-nothing: before
+    /// anything moves, every lease-addressed op is checked live
+    /// ([`HarvestError::StaleLease`] otherwise) and every migration's
+    /// destination segment is *reserved* — a reservation that fails
+    /// (even through fragmentation) rolls its siblings back and returns
+    /// [`HarvestError::NoCapacity`] with nothing scheduled. Execution
+    /// then resolves each op's devices against the lease's residency *at
+    /// that point in the batch*, so a fetch queued after a migrate reads
+    /// from the destination tier, not a stale snapshot.
     pub fn submit(self, hr: &mut HarvestRuntime) -> Result<TransferReport, HarvestError> {
-        // Validate every lease op before scheduling anything.
-        let mut resolved: Vec<(DeviceId, DeviceId, u64, Option<u64>, Option<usize>)> =
-            Vec::with_capacity(self.ops.len());
+        // Pass 1: validate liveness; drop migrations that are already
+        // no-ops against the current residency.
+        let mut ops: Vec<TransferOp> = Vec::with_capacity(self.ops.len());
         for op in &self.ops {
             match *op {
-                TransferOp::Populate { lease, src } => {
-                    let h = hr.handle_info(lease).ok_or(HarvestError::StaleLease(lease))?;
-                    resolved
-                        .push((src, DeviceId::Gpu(h.peer), h.size, Some(lease.0), Some(h.peer)));
+                TransferOp::Populate { lease, .. } | TransferOp::Fetch { lease, .. } => {
+                    hr.handle_info(lease).ok_or(HarvestError::StaleLease(lease))?;
+                    ops.push(*op);
                 }
-                TransferOp::Fetch { lease, compute } => {
+                TransferOp::Raw { .. } => ops.push(*op),
+                TransferOp::Migrate { lease, to } => {
                     let h = hr.handle_info(lease).ok_or(HarvestError::StaleLease(lease))?;
-                    resolved.push((
-                        DeviceId::Gpu(h.peer),
-                        DeviceId::Gpu(compute),
-                        h.size,
-                        Some(lease.0),
-                        Some(h.peer),
-                    ));
-                }
-                TransferOp::Raw { src, dst, bytes } => {
-                    resolved.push((src, dst, bytes, None, None));
+                    if h.tier != to {
+                        ops.push(*op);
+                    }
                 }
             }
         }
-        let mut report =
-            TransferReport { events: Vec::with_capacity(resolved.len()), bytes: 0, end: 0 };
-        for (src, dst, bytes, tag, peer) in resolved {
-            let ev = match self.chunk_bytes {
-                Some(chunk) if bytes > chunk => {
-                    let n_chunks = bytes.div_ceil(chunk);
-                    hr.node.copy_scattered(src, dst, bytes, n_chunks, tag)
-                }
-                _ => hr.node.copy(src, dst, bytes, tag),
-            };
-            if let Some(p) = peer {
-                if self.background {
-                    hr.record_peer_prefetch(p, ev.end, bytes);
-                } else {
-                    hr.record_peer_transfer(p, ev.end, bytes);
+        // Pass 2: reserve every migration destination; roll back on the
+        // first failure so a rejected batch leaves no allocation behind.
+        let mut reserved: Vec<(MemoryTier, AllocId)> = Vec::new();
+        for op in &ops {
+            if let TransferOp::Migrate { lease, to } = *op {
+                match hr.prepare_migration(lease, to) {
+                    Ok(a) => reserved.push((to, a)),
+                    Err(e) => {
+                        for (t, a) in reserved {
+                            hr.unprepare_migration(t, a);
+                        }
+                        return Err(e);
+                    }
                 }
             }
+        }
+        let mut reservations = reserved.into_iter();
+        // Pass 3: execute in order, resolving residency fresh per op.
+        let mut report =
+            TransferReport { events: Vec::with_capacity(ops.len()), bytes: 0, end: 0 };
+        for op in ops {
+            let (ev, bytes) = match op {
+                TransferOp::Populate { lease, src } => {
+                    let h = hr.handle_info(lease).expect("validated above");
+                    let ev = self.copy(hr, src, h.tier.device(), h.size, Some(lease.0));
+                    hr.record_tier_traffic(h.tier, ev.end, h.size, self.background);
+                    (ev, h.size)
+                }
+                TransferOp::Fetch { lease, compute } => {
+                    let h = hr.handle_info(lease).expect("validated above");
+                    let ev =
+                        self.copy(hr, h.tier.device(), DeviceId::Gpu(compute), h.size, Some(lease.0));
+                    hr.record_tier_traffic(h.tier, ev.end, h.size, self.background);
+                    (ev, h.size)
+                }
+                TransferOp::Raw { src, dst, bytes } => {
+                    (self.copy(hr, src, dst, bytes, None), bytes)
+                }
+                TransferOp::Migrate { lease, to } => {
+                    let (_, dst_alloc) =
+                        reservations.next().expect("one reservation per migrate");
+                    let ev =
+                        hr.commit_migration(lease, to, dst_alloc, self.background, self.chunk_bytes);
+                    (ev, ev.bytes)
+                }
+            };
             report.bytes += bytes;
             report.end = report.end.max(ev.end);
             report.events.push(ev);
@@ -436,6 +520,23 @@ impl Transfer {
             report.end = hr.node.clock.now();
         }
         Ok(report)
+    }
+
+    /// One (possibly chunked) copy on the simulated DMA engine.
+    fn copy(
+        &self,
+        hr: &mut HarvestRuntime,
+        src: DeviceId,
+        dst: DeviceId,
+        bytes: u64,
+        tag: Option<u64>,
+    ) -> CopyEvent {
+        match self.chunk_bytes {
+            Some(chunk) if bytes > chunk => {
+                hr.node.copy_scattered(src, dst, bytes, bytes.div_ceil(chunk), tag)
+            }
+            _ => hr.node.copy(src, dst, bytes, tag),
+        }
     }
 }
 
@@ -453,21 +554,36 @@ mod tests {
         HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2))
     }
 
+    fn rt_cxl() -> HarvestRuntime {
+        HarvestRuntime::new(
+            SimNode::new(NodeSpec::h100x2().with_cxl(64 * GIB)),
+            HarvestConfig::for_node(2),
+        )
+    }
+
     fn hints() -> AllocHints {
         AllocHints { compute_gpu: Some(0), ..Default::default() }
     }
 
+    const PEERS: TierPreference = TierPreference::PEER_ONLY;
+
     #[test]
-    fn lease_carries_typed_metadata() {
+    fn lease_carries_typed_metadata_and_tier() {
         let mut hr = rt();
         let s = HarvestSession::open_for_client(&mut hr, PayloadKind::KvBlock, 7);
         let lease = s
-            .alloc(&mut hr, 2 * MIB, AllocHints { durability: Durability::Lossy, ..hints() })
+            .alloc(
+                &mut hr,
+                2 * MIB,
+                PEERS,
+                AllocHints { durability: Durability::Lossy, ..hints() },
+            )
             .unwrap();
         assert_eq!(lease.kind(), PayloadKind::KvBlock);
         assert_eq!(lease.durability(), Durability::Lossy);
         assert_eq!(lease.client(), Some(7), "session client stamped onto the lease");
-        assert_eq!(lease.peer(), 1);
+        assert_eq!(lease.tier(), MemoryTier::PeerHbm(1));
+        assert_eq!(lease.peer(), Some(1));
         assert_eq!(lease.size(), 2 * MIB);
         s.release(&mut hr, lease).unwrap();
         assert_eq!(hr.live_bytes_on(1), 0);
@@ -477,7 +593,7 @@ mod tests {
     fn dropped_lease_is_reclaimed_by_sweep() {
         let mut hr = rt();
         let s = HarvestSession::open(&mut hr, PayloadKind::Generic);
-        let lease = s.alloc(&mut hr, 4 * MIB, hints()).unwrap();
+        let lease = s.alloc(&mut hr, 4 * MIB, PEERS, hints()).unwrap();
         let id = lease.id();
         drop(lease); // leaked, not released
         assert!(hr.is_live(id), "not yet swept");
@@ -493,14 +609,14 @@ mod tests {
     fn release_consumes_and_revoked_lease_is_stale() {
         let mut hr = rt();
         let s = HarvestSession::open(&mut hr, PayloadKind::Generic);
-        let lease = s.alloc(&mut hr, MIB, hints()).unwrap();
+        let lease = s.alloc(&mut hr, MIB, PEERS, hints()).unwrap();
         let id = lease.id();
         s.release(&mut hr, lease).unwrap();
         // `lease` is moved — releasing again does not compile. The raw id
         // is stale:
         assert_eq!(hr.free(id), Err(HarvestError::StaleLease(id)));
         // a revoked lease's transfers fail closed
-        let lease2 = s.alloc(&mut hr, MIB, hints()).unwrap();
+        let lease2 = s.alloc(&mut hr, MIB, PEERS, hints()).unwrap();
         hr.revoke(lease2.id(), crate::harvest::api::RevocationReason::PolicyEviction);
         let err = Transfer::new().fetch(&lease2, 0).submit(&mut hr).unwrap_err();
         assert_eq!(err, HarvestError::StaleLease(lease2.id()));
@@ -513,16 +629,19 @@ mod tests {
         hr.config.mig[1] = crate::harvest::MigConfig::CachePartition { bytes: 3 * GIB };
         let s = HarvestSession::open(&mut hr, PayloadKind::KvBlock);
         // 2 GiB fits...
-        let got = s.alloc_many(&mut hr, &[GIB, GIB], hints()).unwrap();
+        let got = s.alloc_many(&mut hr, &[GIB, GIB], PEERS, hints()).unwrap();
         assert_eq!(got.len(), 2);
-        assert!(got.iter().all(|l| l.peer() == 1), "one peer for the whole batch");
+        assert!(
+            got.iter().all(|l| l.tier() == MemoryTier::PeerHbm(1)),
+            "one tier for the whole batch"
+        );
         assert_eq!(hr.live_bytes_on(1), 2 * GIB);
         for l in got {
             s.release(&mut hr, l).unwrap();
         }
         // ...4 GiB does not: nothing must stick
         let before_fail = hr.alloc_failures;
-        let err = s.alloc_many(&mut hr, &[GIB, GIB, GIB, GIB], hints()).unwrap_err();
+        let err = s.alloc_many(&mut hr, &[GIB, GIB, GIB, GIB], PEERS, hints()).unwrap_err();
         assert!(matches!(err, HarvestError::NoCapacity { requested } if requested == 4 * GIB));
         assert_eq!(hr.live_bytes_on(1), 0, "rollback left no bytes");
         assert_eq!(hr.node.gpus[1].hbm.used(), 0);
@@ -530,11 +649,37 @@ mod tests {
     }
 
     #[test]
+    fn alloc_many_spills_whole_batch_to_next_tier() {
+        let mut hr = rt();
+        // peer holds 3 GiB at most; fastest-available rolls the whole
+        // batch to host DRAM rather than splitting it
+        hr.config.mig[1] = crate::harvest::MigConfig::CachePartition { bytes: 3 * GIB };
+        let s = HarvestSession::open(&mut hr, PayloadKind::KvBlock);
+        let got = s
+            .alloc_many(
+                &mut hr,
+                &[GIB, GIB, GIB, GIB],
+                TierPreference::FastestAvailable,
+                hints(),
+            )
+            .unwrap();
+        assert!(got.iter().all(|l| l.tier() == MemoryTier::Host), "one tier per batch");
+        assert_eq!(hr.live_bytes_on(1), 0);
+        assert_eq!(hr.live_bytes_on_tier(MemoryTier::Host), 4 * GIB);
+        for l in got {
+            s.release(&mut hr, l).unwrap();
+        }
+    }
+
+    #[test]
     fn alloc_many_rejects_zero_and_accepts_empty() {
         let mut hr = rt();
         let s = HarvestSession::open(&mut hr, PayloadKind::Generic);
-        assert!(s.alloc_many(&mut hr, &[], hints()).unwrap().is_empty());
-        assert_eq!(s.alloc_many(&mut hr, &[MIB, 0], hints()).unwrap_err(), HarvestError::ZeroSize);
+        assert!(s.alloc_many(&mut hr, &[], PEERS, hints()).unwrap().is_empty());
+        assert_eq!(
+            s.alloc_many(&mut hr, &[MIB, 0], PEERS, hints()).unwrap_err(),
+            HarvestError::ZeroSize
+        );
         assert_eq!(hr.live_bytes_on(1), 0);
     }
 
@@ -542,8 +687,8 @@ mod tests {
     fn transfer_builder_orders_and_tags() {
         let mut hr = rt();
         let s = HarvestSession::open(&mut hr, PayloadKind::ExpertWeights);
-        let a = s.alloc(&mut hr, 32 * MIB, hints()).unwrap();
-        let b = s.alloc(&mut hr, 32 * MIB, hints()).unwrap();
+        let a = s.alloc(&mut hr, 32 * MIB, PEERS, hints()).unwrap();
+        let b = s.alloc(&mut hr, 32 * MIB, PEERS, hints()).unwrap();
         let report = Transfer::new()
             .populate(&a, DeviceId::Host)
             .populate(&b, DeviceId::Host)
@@ -563,13 +708,115 @@ mod tests {
     }
 
     #[test]
+    fn fetch_resolves_resident_tier_device() {
+        // Host- and CXL-tier leases fetch over their own links.
+        let mut hr = rt_cxl();
+        let s = HarvestSession::open(&mut hr, PayloadKind::KvBlock);
+        let host =
+            s.alloc(&mut hr, MIB, TierPreference::Pinned(MemoryTier::Host), hints()).unwrap();
+        let cxl =
+            s.alloc(&mut hr, MIB, TierPreference::Pinned(MemoryTier::CxlMem), hints()).unwrap();
+        let report =
+            Transfer::new().fetch(&host, 0).fetch(&cxl, 0).submit(&mut hr).unwrap();
+        assert_eq!(report.events[0].src, DeviceId::Host);
+        assert_eq!(report.events[1].src, DeviceId::Cxl);
+        assert!(
+            report.events[1].duration() < report.events[0].duration(),
+            "CXL fetch beats PCIe host fetch"
+        );
+        // host traffic is monitored, demand-attributed, per tier
+        assert_eq!(hr.monitor().demand_bytes_on_tier(MemoryTier::Host), MIB);
+        assert_eq!(hr.monitor().demand_bytes_on_tier(MemoryTier::CxlMem), MIB);
+        s.release(&mut hr, host).unwrap();
+        s.release(&mut hr, cxl).unwrap();
+    }
+
+    #[test]
+    fn migrate_moves_bytes_and_updates_tier() {
+        let mut hr = rt();
+        let s = HarvestSession::open(&mut hr, PayloadKind::KvBlock);
+        let lease = s.alloc(&mut hr, 8 * MIB, PEERS, hints()).unwrap();
+        assert_eq!(lease.tier(), MemoryTier::PeerHbm(1));
+        // demote to host
+        let report =
+            Transfer::new().migrate(&lease, MemoryTier::Host).submit(&mut hr).unwrap();
+        assert_eq!(report.events[0].src, DeviceId::Gpu(1));
+        assert_eq!(report.events[0].dst, DeviceId::Host);
+        assert_eq!(lease.tier(), MemoryTier::Host, "lease tracks its residency");
+        assert_eq!(hr.live_bytes_on(1), 0);
+        assert_eq!(hr.live_bytes_on_tier(MemoryTier::Host), 8 * MIB);
+        assert_eq!(hr.node.gpus[1].hbm.used(), 0);
+        assert_eq!(hr.node.host.used(), 8 * MIB);
+        // promote back to the peer
+        Transfer::new().migrate(&lease, MemoryTier::PeerHbm(1)).submit(&mut hr).unwrap();
+        assert_eq!(lease.tier(), MemoryTier::PeerHbm(1));
+        assert_eq!(hr.live_bytes_on(1), 8 * MIB);
+        assert_eq!(hr.live_bytes_on_tier(MemoryTier::Host), 0);
+        assert_eq!(hr.migrations, 2);
+        // a same-tier migrate is a no-op
+        let report =
+            Transfer::new().migrate(&lease, MemoryTier::PeerHbm(1)).submit(&mut hr).unwrap();
+        assert!(report.events.is_empty());
+        s.release(&mut hr, lease).unwrap();
+    }
+
+    #[test]
+    fn migrate_is_revocation_safe_and_monitored() {
+        let mut hr = rt();
+        let s = HarvestSession::open(&mut hr, PayloadKind::KvBlock);
+        let lease = s.alloc(&mut hr, 16 * MIB, PEERS, hints()).unwrap();
+        let before = hr.monitor().prefetch_bytes_on(1);
+        // background promotion-style migrate: prefetch-attributed
+        let report = Transfer::new()
+            .background()
+            .migrate(&lease, MemoryTier::Host)
+            .submit(&mut hr)
+            .unwrap();
+        assert!(report.end > hr.node.clock.now(), "migration copy is async");
+        assert_eq!(hr.monitor().prefetch_bytes_on(1), before + 16 * MIB);
+        assert_eq!(hr.monitor().prefetch_bytes_on_tier(MemoryTier::Host), 16 * MIB);
+        // the in-flight migration is lease-tagged: releasing drains it
+        s.release(&mut hr, lease).unwrap();
+        assert!(hr.node.clock.now() >= report.end, "drain barrier covered the migration");
+        assert_eq!(hr.live_bytes_on_tier(MemoryTier::Host), 0);
+    }
+
+    #[test]
+    fn migrate_to_full_tier_schedules_nothing() {
+        let mut hr = rt_cxl();
+        let s = HarvestSession::open(&mut hr, PayloadKind::Generic);
+        let big = s.alloc(&mut hr, 64 * GIB, PEERS, hints()).unwrap();
+        // CXL expander is 64 GiB but a filler lease occupies half
+        let filler =
+            s.alloc(&mut hr, 32 * GIB, TierPreference::Pinned(MemoryTier::CxlMem), hints())
+                .unwrap();
+        let err = Transfer::new()
+            .migrate(&big, MemoryTier::CxlMem)
+            .submit(&mut hr)
+            .unwrap_err();
+        assert!(matches!(err, HarvestError::NoCapacity { .. }));
+        assert_eq!(big.tier(), MemoryTier::PeerHbm(1), "failed migrate changes nothing");
+        assert_eq!(hr.live_bytes_on(1), 64 * GIB);
+        // host<->CXL share no link: the pair fails cleanly, not at copy time
+        let host =
+            s.alloc(&mut hr, MIB, TierPreference::Pinned(MemoryTier::Host), hints()).unwrap();
+        let err =
+            Transfer::new().migrate(&host, MemoryTier::CxlMem).submit(&mut hr).unwrap_err();
+        assert_eq!(err, HarvestError::TierUnavailable { tier: MemoryTier::CxlMem });
+        assert_eq!(host.tier(), MemoryTier::Host);
+        s.release(&mut hr, host).unwrap();
+        s.release(&mut hr, big).unwrap();
+        s.release(&mut hr, filler).unwrap();
+    }
+
+    #[test]
     fn chunked_transfer_uses_scattered_descriptors() {
         let mut hr = rt();
         let s = HarvestSession::open(&mut hr, PayloadKind::KvBlock);
-        let l = s.alloc(&mut hr, 16 * MIB, hints()).unwrap();
+        let l = s.alloc(&mut hr, 16 * MIB, PEERS, hints()).unwrap();
         let whole =
             Transfer::new().populate(&l, DeviceId::Host).submit(&mut hr).unwrap();
-        let l2 = s.alloc(&mut hr, 16 * MIB, hints()).unwrap();
+        let l2 = s.alloc(&mut hr, 16 * MIB, PEERS, hints()).unwrap();
         let chunked = Transfer::new()
             .chunked(4 * MIB)
             .populate(&l2, DeviceId::Host)
@@ -590,7 +837,7 @@ mod tests {
     fn background_transfer_attributed_as_prefetch_but_still_barriered() {
         let mut hr = rt();
         let s = HarvestSession::open(&mut hr, PayloadKind::KvBlock);
-        let l = s.alloc(&mut hr, 8 * MIB, hints()).unwrap();
+        let l = s.alloc(&mut hr, 8 * MIB, PEERS, hints()).unwrap();
         let report = Transfer::new()
             .background()
             .populate(&l, DeviceId::Host)

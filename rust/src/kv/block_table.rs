@@ -1,9 +1,10 @@
 //! The unified KV block table (§5.2): logical block id → residency
-//! across local HBM / peer GPU / host DRAM, plus `Dropped` for
-//! lossy-revoked blocks awaiting recomputation.
+//! across local HBM and the harvest tiers (peer GPU / CXL / host DRAM,
+//! all lease-addressed), plus `Dropped` for lossy-revoked blocks
+//! awaiting recomputation.
 
 use super::block::{BlockId, KvBlockMeta, SeqId};
-use crate::harvest::api::LeaseId;
+use crate::harvest::api::{LeaseId, MemoryTier};
 use crate::memsim::Ns;
 use std::collections::BTreeMap;
 
@@ -12,17 +13,31 @@ use std::collections::BTreeMap;
 pub enum BlockResidency {
     /// In the compute GPU's KV pool — attention can read it directly.
     Local,
-    /// Cached in peer HBM under a live harvest handle (lossy: no other
-    /// copy exists unless it was host-materialised first).
-    Peer { handle: LeaseId, peer: usize },
-    /// Authoritative copy in host DRAM (vanilla-vLLM offload target).
-    Host,
-    /// Lost (peer revocation of a lossy block); must be recomputed.
+    /// Off-pool, cached under a live harvest lease on `tier` (peer HBM
+    /// over NVLink, CXL, or host DRAM over PCIe). The pre-tier design
+    /// kept a parallel `Host` variant with raw untracked copies; host is
+    /// now just another leased tier.
+    Leased { handle: LeaseId, tier: MemoryTier },
+    /// Lost (revocation of a lossy block); must be recomputed.
     Dropped,
 }
 
+impl BlockResidency {
+    /// The tier holding a leased block, if any.
+    pub fn tier(&self) -> Option<MemoryTier> {
+        match self {
+            BlockResidency::Leased { tier, .. } => Some(*tier),
+            _ => None,
+        }
+    }
+
+    pub fn is_peer(&self) -> bool {
+        matches!(self, BlockResidency::Leased { tier: MemoryTier::PeerHbm(_), .. })
+    }
+}
+
 /// The table. One entry per logical block, with per-sequence ordering and
-/// a reverse handle index for revocation callbacks.
+/// a reverse handle index for revocation repair.
 #[derive(Debug, Clone, Default)]
 pub struct UnifiedBlockTable {
     entries: BTreeMap<BlockId, (KvBlockMeta, BlockResidency)>,
@@ -61,16 +76,21 @@ impl UnifiedBlockTable {
     /// Transition a block's residency, maintaining the handle index.
     pub fn set_residency(&mut self, id: BlockId, res: BlockResidency) {
         let Some((_, cur)) = self.entries.get_mut(&id) else { return };
-        if let BlockResidency::Peer { handle, .. } = *cur {
+        if let BlockResidency::Leased { handle, .. } = *cur {
             self.by_handle.remove(&handle);
         }
-        if let BlockResidency::Peer { handle, .. } = res {
+        if let BlockResidency::Leased { handle, .. } = res {
             self.by_handle.insert(handle, id);
         }
         self.entries.get_mut(&id).unwrap().1 = res;
     }
 
-    /// Revocation path: the peer copy under `handle` is gone. Lossy KV
+    /// The block currently leased under `handle`, if any.
+    pub fn block_of_handle(&self, handle: LeaseId) -> Option<BlockId> {
+        self.by_handle.get(&handle).copied()
+    }
+
+    /// Revocation path: the leased copy under `handle` is gone. Lossy KV
     /// semantics → the block becomes `Dropped`. Returns the block.
     pub fn drop_by_handle(&mut self, handle: LeaseId) -> Option<BlockId> {
         let id = self.by_handle.remove(&handle)?;
@@ -85,7 +105,7 @@ impl UnifiedBlockTable {
         ids.into_iter()
             .filter_map(|id| {
                 let (_, r) = self.entries.remove(&id)?;
-                if let BlockResidency::Peer { handle, .. } = r {
+                if let BlockResidency::Leased { handle, .. } = r {
                     self.by_handle.remove(&handle);
                 }
                 Some((id, r))
@@ -109,13 +129,15 @@ impl UnifiedBlockTable {
         self.entries.is_empty()
     }
 
+    /// Counts as `(local, peer-leased, host-or-cxl-leased, dropped)` —
+    /// the off-GPU tiers share the third slot.
     pub fn count_by_residency(&self) -> (usize, usize, usize, usize) {
         let mut c = (0, 0, 0, 0);
         for (_, r) in self.entries.values() {
             match r {
                 BlockResidency::Local => c.0 += 1,
-                BlockResidency::Peer { .. } => c.1 += 1,
-                BlockResidency::Host => c.2 += 1,
+                BlockResidency::Leased { tier: MemoryTier::PeerHbm(_), .. } => c.1 += 1,
+                BlockResidency::Leased { .. } => c.2 += 1,
                 BlockResidency::Dropped => c.3 += 1,
             }
         }
@@ -130,19 +152,19 @@ impl UnifiedBlockTable {
     }
 
     /// Invariants (property-tested): reverse handle index is exactly the
-    /// set of Peer entries; per-seq lists are dense, ordered, and agree
+    /// set of Leased entries; per-seq lists are dense, ordered, and agree
     /// with metadata.
     pub fn check_invariants(&self) -> Result<(), String> {
         for (&h, &id) in &self.by_handle {
             match self.residency(id) {
-                Some(BlockResidency::Peer { handle, .. }) if handle == h => {}
+                Some(BlockResidency::Leased { handle, .. }) if handle == h => {}
                 other => return Err(format!("by_handle {h:?} -> {id:?} but {other:?}")),
             }
         }
         for (&id, (m, r)) in &self.entries {
-            if let BlockResidency::Peer { handle, .. } = r {
+            if let BlockResidency::Leased { handle, .. } = r {
                 if self.by_handle.get(handle) != Some(&id) {
-                    return Err(format!("peer block {id:?} missing reverse index"));
+                    return Err(format!("leased block {id:?} missing reverse index"));
                 }
             }
             let list = self.seq_blocks(m.seq);
@@ -166,6 +188,10 @@ impl UnifiedBlockTable {
 mod tests {
     use super::*;
 
+    fn peer(handle: LeaseId, gpu: usize) -> BlockResidency {
+        BlockResidency::Leased { handle, tier: MemoryTier::PeerHbm(gpu) }
+    }
+
     #[test]
     fn blocks_append_in_order() {
         let mut t = UnifiedBlockTable::new();
@@ -184,12 +210,19 @@ mod tests {
         let s = SeqId(1);
         let a = t.new_block(s, 0);
         let h = LeaseId(5);
-        t.set_residency(a, BlockResidency::Peer { handle: h, peer: 1 });
+        t.set_residency(a, peer(h, 1));
+        assert_eq!(t.block_of_handle(h), Some(a));
+        t.check_invariants().unwrap();
+        // a tier change under the same lease keeps the index
+        t.set_residency(a, BlockResidency::Leased { handle: h, tier: MemoryTier::Host });
+        assert_eq!(t.block_of_handle(h), Some(a));
+        assert_eq!(t.residency(a).unwrap().tier(), Some(MemoryTier::Host));
         t.check_invariants().unwrap();
         t.set_residency(a, BlockResidency::Local);
         t.check_invariants().unwrap();
-        // handle mapping gone after leaving Peer
+        // handle mapping gone after leaving Leased
         assert_eq!(t.drop_by_handle(h), None);
+        assert_eq!(t.block_of_handle(h), None);
     }
 
     #[test]
@@ -197,7 +230,7 @@ mod tests {
         let mut t = UnifiedBlockTable::new();
         let a = t.new_block(SeqId(1), 0);
         let h = LeaseId(9);
-        t.set_residency(a, BlockResidency::Peer { handle: h, peer: 1 });
+        t.set_residency(a, peer(h, 1));
         assert_eq!(t.drop_by_handle(h), Some(a));
         assert_eq!(t.residency(a), Some(BlockResidency::Dropped));
         t.check_invariants().unwrap();
@@ -210,7 +243,7 @@ mod tests {
         let a = t.new_block(s, 0);
         let b = t.new_block(s, 0);
         let h = LeaseId(1);
-        t.set_residency(b, BlockResidency::Peer { handle: h, peer: 1 });
+        t.set_residency(b, peer(h, 1));
         let removed = t.remove_seq(s);
         assert_eq!(removed.len(), 2);
         assert!(t.is_empty());
@@ -227,10 +260,12 @@ mod tests {
         let a = t.new_block(s, 0);
         let b = t.new_block(s, 0);
         let c = t.new_block(s, 0);
-        t.set_residency(a, BlockResidency::Host);
+        let d = t.new_block(s, 0);
+        t.set_residency(a, BlockResidency::Leased { handle: LeaseId(1), tier: MemoryTier::Host });
         t.set_residency(b, BlockResidency::Dropped);
+        t.set_residency(d, peer(LeaseId(2), 1));
         let _ = c;
-        assert_eq!(t.count_by_residency(), (1, 0, 1, 1));
+        assert_eq!(t.count_by_residency(), (1, 1, 1, 1));
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! `KvOffloadManager` + per-device `OffloadingHandler` (§5.2).
+//! `KvOffloadManager` + per-device `OffloadingHandler` (§5.2), tiered.
 //!
 //! "We introduce a KVOffloadManager into vLLM's KV manager, which serves
 //! as a pluggable control interface for implementing Harvest's
@@ -8,26 +8,37 @@
 //!
 //! Flow:
 //! * Decode appends tokens; full local pool ⇒ the eviction policy picks
-//!   victims and the handler migrates them out — to peer HBM via a
-//!   vectored `alloc_many` lease when available (Harvest mode), else to
-//!   host DRAM (vanilla-vLLM mode). Multi-block admission is
-//!   all-or-nothing: one policy consultation per batch, and a partial
-//!   placement failure rolls back to the host path for the whole batch.
+//!   victims and the manager migrates them out through **one vectored
+//!   tier-aware lease batch**: under Harvest the placement policy scores
+//!   peer HBM vs CXL vs host DRAM (`TierPreference::FastestAvailable`);
+//!   vanilla-vLLM mode pins the batch to host
+//!   (`TierPreference::Pinned(Host)`). Either way the bytes move through
+//!   lease-addressed `Transfer`s, so *all* offload traffic — host
+//!   included — is visible in the `PeerMonitor` with the demand/prefetch
+//!   split preserved. Multi-block admission is all-or-nothing: one
+//!   policy consultation per batch, one tier for the whole batch.
 //! * Decode touching a non-local block issues a reload through the
-//!   handler: peer → NVLink, host → PCIe, `Dropped` → recompute (or
-//!   whichever is cheaper per [`RecomputeModel`]).
-//! * Peer revocations arrive as pull-model events: every public entry
-//!   point first drains the manager's session queue ([`KvOffloadManager::sync`])
-//!   and drops lossy blocks via the unified table — the §5.2 callback
-//!   semantics without any shared mutable state (the pre-lease design
-//!   needed reference-counted interior mutability so push callbacks
-//!   could reach the table from inside the runtime).
+//!   block's lease: peer → NVLink, CXL → the expander link, host → PCIe,
+//!   `Dropped` → recompute.
+//! * Revocations arrive as pull-model events: every public entry point
+//!   first drains the manager's session queue ([`KvOffloadManager::sync`]).
+//!   A [`RevocationAction::Dropped`] event drops lossy blocks (or falls
+//!   back to their durable host-shadow lease); a
+//!   [`RevocationAction::Demoted`] event means the controller already
+//!   migrated the bytes peer→host — the manager only re-points the
+//!   block's residency tier, no data was lost.
+//! * The prefetch pipeline plans two kinds of background work: reloads
+//!   (tier → local, ahead of the next decode step) and **promotions**
+//!   (host/CXL → peer via `Transfer::migrate`, so blocks predicted
+//!   further out wait on NVLink instead of PCIe when they finally
+//!   reload).
 
 use super::block::{BlockId, SeqId};
 use super::block_table::{BlockResidency, UnifiedBlockTable};
 use super::eviction::{EvictionPolicy, Lru};
 use super::recompute::RecomputeModel;
-use crate::harvest::api::{AllocHints, Durability, LeaseId};
+use crate::harvest::api::{AllocHints, Durability, LeaseId, MemoryTier, TierPreference};
+use crate::harvest::events::RevocationAction;
 use crate::harvest::prefetch::{PrefetchConfig, PrefetchPlanner, PrefetchStats};
 use crate::harvest::session::{HarvestSession, Lease, Transfer};
 use crate::harvest::{HarvestRuntime, PayloadKind};
@@ -49,11 +60,12 @@ pub struct KvConfig {
     pub block_tokens: u32,
     /// Local KV pool capacity, in blocks.
     pub local_capacity_blocks: usize,
-    /// Harvest mode: evict to peer HBM when possible. Off = vanilla vLLM
-    /// (evict to host only) — the Fig. 7 baseline.
+    /// Harvest mode: evict through the tier policy (peer HBM preferred,
+    /// CXL/host spill). Off = vanilla vLLM (host-pinned leases only) —
+    /// the Fig. 7 baseline.
     pub use_harvest: bool,
-    /// Also materialise a host copy when evicting to peer (durable mode;
-    /// default off — §5.2 treats peer KV as lossy).
+    /// Also materialise a durable host-shadow lease when evicting to
+    /// peer (default off — §5.2 treats peer KV as lossy).
     pub host_backed_peer: bool,
 }
 
@@ -69,13 +81,22 @@ pub struct KvStats {
     pub appends: u64,
     pub local_hits: u64,
     pub peer_reloads: u64,
+    pub cxl_reloads: u64,
     pub host_reloads: u64,
     pub recomputes: u64,
     pub evictions_to_peer: u64,
+    pub evictions_to_cxl: u64,
     pub evictions_to_host: u64,
     pub peer_alloc_failures: u64,
     pub revocation_drops: u64,
+    /// Peer leases the controller demoted to host instead of dropping.
+    pub demotions: u64,
+    /// Background host/CXL→peer promotions issued.
+    pub promotions: u64,
+    /// Promoted blocks whose later reload actually rode the fast tier.
+    pub promotion_hits: u64,
     pub bytes_from_peer: u64,
+    pub bytes_from_cxl: u64,
     pub bytes_from_host: u64,
     pub reload_ns: Ns,
     pub recompute_ns: Ns,
@@ -83,7 +104,7 @@ pub struct KvStats {
 
 impl KvStats {
     pub fn reloads(&self) -> u64 {
-        self.peer_reloads + self.host_reloads + self.recomputes
+        self.peer_reloads + self.cxl_reloads + self.host_reloads + self.recomputes
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -96,31 +117,13 @@ impl KvStats {
     }
 }
 
-/// Executes data movement for one device pair (§5.2). Thin by design:
-/// policy lives in the manager; the handler only knows how to move KV
-/// bytes (batched into [`RELOAD_CHUNK_BYTES`] descriptors through the
-/// unified [`Transfer`] builder).
+/// Executes data movement for one device (§5.2). Thin by design: policy
+/// lives in the manager; the handler only knows which compute GPU it
+/// serves — every move is a lease-addressed [`Transfer`] batched into
+/// [`RELOAD_CHUNK_BYTES`] descriptors.
 #[derive(Debug, Clone, Copy)]
 pub struct OffloadingHandler {
     pub compute_gpu: usize,
-}
-
-impl OffloadingHandler {
-    /// Transfer `bytes` of KV between tiers; returns the copy event.
-    pub fn transfer(
-        &self,
-        hr: &mut HarvestRuntime,
-        src: DeviceId,
-        dst: DeviceId,
-        bytes: u64,
-    ) -> crate::memsim::CopyEvent {
-        let report = Transfer::new()
-            .chunked(RELOAD_CHUNK_BYTES)
-            .raw(src, dst, bytes)
-            .submit(hr)
-            .expect("raw transfers cannot go stale");
-        report.events[0]
-    }
 }
 
 /// The manager. Owns its block table and eviction policy directly — the
@@ -134,9 +137,13 @@ pub struct KvOffloadManager {
     /// Session opened lazily on first runtime interaction (the manager
     /// is constructed before it ever sees the runtime).
     session: Option<HarvestSession>,
-    /// Live peer leases, keyed by id; the table's `Peer` entries mirror
-    /// this map exactly.
+    /// Live leases backing every `Leased` block, keyed by id; the
+    /// table's `Leased` entries mirror this map exactly.
     leases: BTreeMap<LeaseId, Lease>,
+    /// Durable host-shadow leases for peer-resident blocks
+    /// (`host_backed_peer` mode): the authoritative copy a revocation
+    /// falls back to. One per shadowed block.
+    host_shadow: BTreeMap<BlockId, Lease>,
     /// Deadline-aware prefetch admission control + outcome ledger
     /// (enabled via [`KvOffloadManager::with_prefetch`]).
     planner: Option<PrefetchPlanner>,
@@ -145,9 +152,12 @@ pub struct KvOffloadManager {
     /// completion is a *late* (shortened) stall; eviction or sequence
     /// finish before use is *waste*.
     pending_prefetch: BTreeMap<BlockId, Ns>,
+    /// Blocks whose lease is being background-migrated to peer HBM:
+    /// block → completion time of the promotion copy.
+    pending_promotions: BTreeMap<BlockId, Ns>,
     /// Source leases of issued prefetches, held until their background
     /// copy completes (lease, copy end). Releasing earlier would free
-    /// peer memory an in-flight read still touches; releasing eagerly
+    /// tier memory an in-flight read still touches; releasing eagerly
     /// would block on the drain barrier. `sync` releases matured
     /// entries, when the drain is a guaranteed no-op.
     deferred_release: Vec<(Lease, Ns)>,
@@ -183,8 +193,10 @@ impl KvOffloadManager {
             recompute: RecomputeModel::new(cfg.model.active_params_b),
             session: None,
             leases: BTreeMap::new(),
+            host_shadow: BTreeMap::new(),
             planner: None,
             pending_prefetch: BTreeMap::new(),
+            pending_promotions: BTreeMap::new(),
             deferred_release: Vec::new(),
             stats: KvStats::default(),
         }
@@ -193,7 +205,9 @@ impl KvOffloadManager {
     /// Enable the deadline-aware prefetch pipeline: callers (the sim
     /// engine) can then [`KvOffloadManager::plan_prefetch`] /
     /// [`KvOffloadManager::submit_prefetch`] predicted sequences so their
-    /// reloads overlap decode compute instead of stalling it.
+    /// reloads overlap decode compute instead of stalling it, and
+    /// [`KvOffloadManager::promote_blocks`] host-resident blocks toward
+    /// peer HBM when capacity opens.
     pub fn with_prefetch(mut self, cfg: PrefetchConfig) -> Self {
         self.planner = Some(PrefetchPlanner::new(cfg));
         self
@@ -222,6 +236,18 @@ impl KvOffloadManager {
             .get_or_insert_with(|| HarvestSession::open(hr, PayloadKind::KvBlock))
     }
 
+    fn offload_hints(&self) -> AllocHints {
+        AllocHints {
+            compute_gpu: Some(self.handler.compute_gpu),
+            durability: if self.cfg.host_backed_peer {
+                Durability::HostBacked
+            } else {
+                Durability::Lossy
+            },
+            ..Default::default()
+        }
+    }
+
     /// Drain pending revocation events and repair the block table: the
     /// tick-boundary pull that replaces the old push callbacks. Every
     /// public entry point calls this first, so the manager's view is
@@ -246,17 +272,41 @@ impl KvOffloadManager {
             }
         }
         for ev in session.drain_revocations(hr) {
-            // The runtime already drained DMA, invalidated the placement
-            // and freed the bytes; we only repair our own indexes.
-            self.leases.remove(&ev.lease);
-            self.stats.revocation_drops += 1;
-            if ev.durability == Durability::HostBacked {
-                // A host copy exists: fall back to it.
-                if let Some(b) = self.table.drop_by_handle(ev.lease) {
-                    self.table.set_residency(b, BlockResidency::Host);
+            match ev.action {
+                RevocationAction::Demoted { to } => {
+                    // The controller already migrated the bytes and the
+                    // lease survived; we only re-point our residency tier.
+                    self.stats.demotions += 1;
+                    if let Some(b) = self.table.block_of_handle(ev.lease) {
+                        self.pending_promotions.remove(&b);
+                        self.table.set_residency(
+                            b,
+                            BlockResidency::Leased { handle: ev.lease, tier: to },
+                        );
+                    }
                 }
-            } else {
-                self.table.drop_by_handle(ev.lease);
+                RevocationAction::Dropped => {
+                    // The runtime already drained DMA, invalidated the
+                    // placement and freed the bytes; we repair our indexes.
+                    self.leases.remove(&ev.lease);
+                    self.stats.revocation_drops += 1;
+                    if let Some(b) = self.table.drop_by_handle(ev.lease) {
+                        self.pending_promotions.remove(&b);
+                        if ev.durability == Durability::HostBacked {
+                            if let Some(shadow) = self.host_shadow.remove(&b) {
+                                // The durable host-shadow lease takes over.
+                                self.table.set_residency(
+                                    b,
+                                    BlockResidency::Leased {
+                                        handle: shadow.id(),
+                                        tier: shadow.tier(),
+                                    },
+                                );
+                                self.leases.insert(shadow.id(), shadow);
+                            }
+                        }
+                    }
+                }
             }
         }
     }
@@ -342,36 +392,63 @@ impl KvOffloadManager {
         self.make_room(hr, 1);
         let res = self.table.residency(id).expect("live block");
         let bytes = self.cfg.block_bytes();
+        let now = hr.node.clock.now();
         let ready = match res {
-            BlockResidency::Local => hr.node.clock.now(),
-            BlockResidency::Peer { handle, .. } => {
-                // Post-sync, every Peer entry is backed by a live lease.
-                let lease = self.leases.remove(&handle).expect("peer block has live lease");
+            BlockResidency::Local => now,
+            BlockResidency::Leased { handle, .. } => {
+                // Post-sync, every Leased entry is backed by a live lease.
+                let lease = self.leases.remove(&handle).expect("leased block has live lease");
+                let tier = lease.tier();
                 let session = self.session.expect("lease implies session");
+                // The copy that created this placement (spill populate or
+                // promotion migrate) may still be writing it; a demand
+                // fetch physically serializes behind that copy, so wait
+                // it out — a demand-path stall, correctness over overlap
+                // (the background path skips instead; see
+                // [`KvOffloadManager::submit_prefetch`]).
+                let placed_at = hr.node.dma.tag_busy_until(handle.0);
+                if placed_at > hr.node.clock.now() {
+                    hr.node.clock.advance_to(placed_at);
+                }
                 let report = Transfer::new()
                     .chunked(RELOAD_CHUNK_BYTES)
                     .fetch(&lease, self.handler.compute_gpu)
                     .submit(hr)
                     .expect("live lease");
-                // The peer copy is consumed: release the lease (ordered
+                // The cached copy is consumed: release the lease (ordered
                 // free; drains the fetch we just tagged).
                 session.release(hr, lease).expect("live lease");
-                self.stats.peer_reloads += 1;
-                self.stats.bytes_from_peer += bytes;
+                match tier {
+                    MemoryTier::PeerHbm(_) => {
+                        self.stats.peer_reloads += 1;
+                        self.stats.bytes_from_peer += bytes;
+                    }
+                    MemoryTier::CxlMem => {
+                        self.stats.cxl_reloads += 1;
+                        self.stats.bytes_from_cxl += bytes;
+                    }
+                    _ => {
+                        self.stats.host_reloads += 1;
+                        self.stats.bytes_from_host += bytes;
+                    }
+                }
                 self.stats.reload_ns += report.events[0].duration();
-                report.end
-            }
-            BlockResidency::Host => {
-                let ev = self.handler.transfer(
-                    hr,
-                    DeviceId::Host,
-                    DeviceId::Gpu(self.handler.compute_gpu),
-                    bytes,
-                );
-                self.stats.host_reloads += 1;
-                self.stats.bytes_from_host += bytes;
-                self.stats.reload_ns += ev.duration();
-                ev.end
+                let mut ready = report.end;
+                // A pending promotion resolves here: the reload rode
+                // whichever tier the migration reached in time.
+                if let Some(p_ready) = self.pending_promotions.remove(&id) {
+                    if p_ready <= now {
+                        self.stats.promotion_hits += 1;
+                    }
+                    ready = ready.max(p_ready);
+                }
+                // The durable host shadow is no longer needed once local;
+                // release it when its populate has matured.
+                if let Some(shadow) = self.host_shadow.remove(&id) {
+                    let matured = hr.node.dma.tag_busy_until(shadow.id().0);
+                    self.deferred_release.push((shadow, matured));
+                }
+                ready
             }
             BlockResidency::Dropped => {
                 // Recompute the block's tokens (prefill replay).
@@ -379,7 +456,7 @@ impl KvOffloadManager {
                 let dur = self.recompute.recompute_ns(tokens as u64);
                 self.stats.recomputes += 1;
                 self.stats.recompute_ns += dur;
-                hr.node.clock.now() + dur
+                now + dur
             }
         };
         self.table.set_residency(id, BlockResidency::Local);
@@ -457,10 +534,7 @@ impl KvOffloadManager {
                 if !seen.insert(id) {
                     continue;
                 }
-                if matches!(
-                    self.table.residency(id),
-                    Some(BlockResidency::Peer { .. }) | Some(BlockResidency::Host)
-                ) {
+                if matches!(self.table.residency(id), Some(BlockResidency::Leased { .. })) {
                     out.push(PlannedPrefetch { block: id, bytes });
                 }
             }
@@ -475,8 +549,8 @@ impl KvOffloadManager {
     ///
     /// Every entry is revalidated against *current* residency first: a
     /// revocation arriving between plan and submit turned the block
-    /// `Dropped` (or host-backed), so the stale peer lease is never
-    /// read. Returns how many background reloads were issued.
+    /// `Dropped` (or swapped it to its host shadow), so a stale lease is
+    /// never read. Returns how many background reloads were issued.
     pub fn submit_prefetch(
         &mut self,
         hr: &mut HarvestRuntime,
@@ -496,19 +570,19 @@ impl KvOffloadManager {
             // reloaded by a demand fetch (Local), or freed (None) since
             // the plan snapshot.
             let src = match self.table.residency(p.block) {
-                Some(BlockResidency::Peer { handle, peer }) => {
+                Some(BlockResidency::Leased { handle, tier }) => {
                     if hr.node.dma.tag_busy_until(handle.0) > hr.node.clock.now() {
-                        // The spill populate that created this peer copy
-                        // is itself still in flight: fetching now would
-                        // read unwritten bytes, and releasing the lease
-                        // would block on the drain barrier. Skip; the
-                        // next round can pick it up.
+                        // The copy that created this tier placement (spill
+                        // populate or promotion migrate) is itself still
+                        // in flight: fetching now would read unwritten
+                        // bytes, and releasing the lease would block on
+                        // the drain barrier. Skip; the next round can
+                        // pick it up.
                         self.planner.as_mut().unwrap().mark_stale_plan();
                         continue;
                     }
-                    DeviceId::Gpu(peer)
+                    tier.device()
                 }
-                Some(BlockResidency::Host) => DeviceId::Host,
                 _ => {
                     self.planner.as_mut().unwrap().mark_stale_plan();
                     continue;
@@ -532,9 +606,11 @@ impl KvOffloadManager {
             // make_room can only evict *local* blocks; `p.block` is not
             // local, so the source we validated above is untouched.
             let ready_at = match self.table.residency(p.block).expect("validated above") {
-                BlockResidency::Peer { handle, .. } => {
-                    let lease =
-                        self.leases.remove(&handle).expect("post-sync peer block has live lease");
+                BlockResidency::Leased { handle, .. } => {
+                    let lease = self
+                        .leases
+                        .remove(&handle)
+                        .expect("post-sync leased block has live lease");
                     match Transfer::new()
                         .chunked(RELOAD_CHUNK_BYTES)
                         .background()
@@ -542,7 +618,7 @@ impl KvOffloadManager {
                         .submit(hr)
                     {
                         Ok(report) => {
-                            // The peer copy is being consumed. The lease
+                            // The cached copy is being consumed. The lease
                             // stays alive until the tagged background
                             // copy completes (its bytes must not be
                             // reallocated under an in-flight read);
@@ -565,16 +641,20 @@ impl KvOffloadManager {
                         }
                     }
                 }
-                BlockResidency::Host => {
-                    let report = Transfer::new()
-                        .chunked(RELOAD_CHUNK_BYTES)
-                        .raw(DeviceId::Host, dst, p.bytes)
-                        .submit(hr)
-                        .expect("raw transfers cannot go stale");
-                    report.end
-                }
                 _ => unreachable!("validated above"),
             };
+            // A pending promotion resolves here: the prefetch rode
+            // whichever tier the migration reached.
+            if let Some(p_ready) = self.pending_promotions.remove(&p.block) {
+                if p_ready <= hr.node.clock.now() {
+                    self.stats.promotion_hits += 1;
+                }
+            }
+            // The durable host shadow is no longer needed once local.
+            if let Some(shadow) = self.host_shadow.remove(&p.block) {
+                let matured = hr.node.dma.tag_busy_until(shadow.id().0);
+                self.deferred_release.push((shadow, matured));
+            }
             self.table.set_residency(p.block, BlockResidency::Local);
             self.policy.insert(p.block, hr.node.clock.now());
             self.pending_prefetch.insert(p.block, ready_at);
@@ -595,6 +675,86 @@ impl KvOffloadManager {
     ) -> usize {
         let plan = self.plan_prefetch(hr, seqs);
         self.submit_prefetch(hr, &plan, deadline)
+    }
+
+    /// Background host/CXL → peer **promotion** for blocks of the
+    /// predicted `seqs` that are not worth reloading to the local pool
+    /// yet (they would evict hotter blocks) but will reload soon: their
+    /// lease is migrated toward peer HBM under the same deadline-aware
+    /// admission control, so the eventual reload rides NVLink instead of
+    /// PCIe. The reverse of the controller's pressure demotion. Returns
+    /// how many promotions were issued.
+    pub fn promote_blocks(
+        &mut self,
+        hr: &mut HarvestRuntime,
+        seqs: &[SeqId],
+        deadline: Ns,
+    ) -> usize {
+        self.sync(hr);
+        // Promotion targets peer HBM; the vanilla-vLLM baseline
+        // (use_harvest off) must never touch that tier.
+        if self.planner.is_none() || !self.cfg.use_harvest {
+            return 0;
+        }
+        let bytes = self.cfg.block_bytes();
+        let hints = self.offload_hints();
+        let mut seen: BTreeSet<BlockId> = BTreeSet::new();
+        let mut candidates: Vec<BlockId> = Vec::new();
+        for &seq in seqs {
+            for &id in self.table.seq_blocks(seq) {
+                if seen.insert(id) {
+                    candidates.push(id);
+                }
+            }
+        }
+        let mut promoted = 0;
+        for id in candidates {
+            let Some(BlockResidency::Leased { handle, tier }) = self.table.residency(id)
+            else {
+                continue;
+            };
+            if tier.is_peer() || self.pending_promotions.contains_key(&id) {
+                continue;
+            }
+            if hr.node.dma.tag_busy_until(handle.0) > hr.node.clock.now() {
+                continue; // spill copy still writing the source
+            }
+            // Ask the placement policy for a peer target; peers full
+            // ends the round.
+            let Ok(dest) =
+                hr.select_placement(bytes, bytes, TierPreference::PEER_ONLY, hints)
+            else {
+                return promoted;
+            };
+            let (src, dst) = (tier.device(), dest.device());
+            let admitted = self.planner.as_mut().unwrap().admit(
+                &hr.node.topo,
+                src,
+                dst,
+                bytes,
+                Some(RELOAD_CHUNK_BYTES),
+                deadline,
+            );
+            if !admitted {
+                continue;
+            }
+            let lease = self.leases.get(&handle).expect("leased block has live lease");
+            let Ok(report) = Transfer::new()
+                .chunked(RELOAD_CHUNK_BYTES)
+                .background()
+                .migrate(lease, dest)
+                .submit(hr)
+            else {
+                continue; // target filled up between select and submit
+            };
+            self.table.set_residency(id, BlockResidency::Leased { handle, tier: dest });
+            self.pending_promotions.insert(id, report.end);
+            let planner = self.planner.as_mut().unwrap();
+            planner.mark_link_busy(src, dst, report.end);
+            self.stats.promotions += 1;
+            promoted += 1;
+        }
+        promoted
     }
 
     /// Cancel pending prefetches for `seq` (scheduler preemption or
@@ -619,8 +779,10 @@ impl KvOffloadManager {
     }
 
     /// Move `victims` (already detached from the eviction policy) out of
-    /// local HBM: all-or-nothing into peer leases when Harvest is on and
-    /// the batch fits, host DRAM otherwise.
+    /// local HBM through one vectored tier-aware lease batch: the
+    /// placement policy scores peer vs CXL vs host under Harvest
+    /// (`FastestAvailable`), or pins host in vanilla mode. All-or-
+    /// nothing: the whole batch lands on one tier.
     fn offload_batch(&mut self, hr: &mut HarvestRuntime, victims: Vec<BlockId>) {
         if victims.is_empty() {
             return;
@@ -635,117 +797,143 @@ impl KvOffloadManager {
             }
         }
         let bytes = self.cfg.block_bytes();
-        if self.cfg.use_harvest {
-            let session = self.session(hr);
-            let hints = AllocHints {
-                compute_gpu: Some(self.handler.compute_gpu),
-                durability: if self.cfg.host_backed_peer {
-                    Durability::HostBacked
-                } else {
-                    Durability::Lossy
-                },
-                ..Default::default()
-            };
-            let sizes = vec![bytes; victims.len()];
-            match session.alloc_many(hr, &sizes, hints) {
-                Ok(leases) => {
-                    // One batched-DMA submission: local -> peer for every
-                    // victim (plus durable host copies if configured).
-                    let mut batch = Transfer::new().chunked(RELOAD_CHUNK_BYTES);
-                    for lease in &leases {
-                        batch =
-                            batch.populate(lease, DeviceId::Gpu(self.handler.compute_gpu));
-                        if self.cfg.host_backed_peer {
-                            batch = batch.raw(
-                                DeviceId::Gpu(self.handler.compute_gpu),
-                                DeviceId::Host,
-                                bytes,
-                            );
-                        }
-                    }
-                    batch.submit(hr).expect("fresh leases");
-                    for (id, lease) in victims.into_iter().zip(leases) {
-                        self.table.set_residency(
-                            id,
-                            BlockResidency::Peer { handle: lease.id(), peer: lease.peer() },
-                        );
-                        self.leases.insert(lease.id(), lease);
-                        self.stats.evictions_to_peer += 1;
-                    }
-                    return;
-                }
-                Err(_) => {
-                    // All-or-nothing rollback: no element of the batch
-                    // landed on a peer; every victim takes the host path.
-                    self.stats.peer_alloc_failures += 1;
-                }
+        let session = self.session(hr);
+        let hints = self.offload_hints();
+        let pref = if self.cfg.use_harvest {
+            TierPreference::FastestAvailable
+        } else {
+            TierPreference::Pinned(MemoryTier::Host)
+        };
+        let sizes = vec![bytes; victims.len()];
+        let Ok(leases) = session.alloc_many(hr, &sizes, pref, hints) else {
+            // Even the host tier cannot take the batch (the modeled DRAM
+            // arena is exhausted or fragmented) — where a real server
+            // would backpressure. Degrade without aborting: the victims'
+            // bytes are surrendered and the blocks fall to `Dropped`
+            // (recomputed on next use), never a partial placement.
+            if self.cfg.use_harvest {
+                self.stats.peer_alloc_failures += 1;
             }
+            for id in victims {
+                self.table.set_residency(id, BlockResidency::Dropped);
+            }
+            return;
+        };
+        let tier = leases[0].tier();
+        if self.cfg.use_harvest && !tier.is_peer() {
+            // One vectored consultation spilled the whole batch off-peer.
+            self.stats.peer_alloc_failures += 1;
         }
-        // Vanilla vLLM path: evict to host DRAM over PCIe.
-        for id in victims {
-            self.handler.transfer(
-                hr,
-                DeviceId::Gpu(self.handler.compute_gpu),
-                DeviceId::Host,
-                bytes,
+        // Durable host shadows ride along only for peer-resident copies
+        // (a host-tier lease IS the host copy already); if the host
+        // arena cannot hold them the batch simply stays shadow-less
+        // (its durability then degrades to lossy on revocation).
+        let shadows: Vec<Lease> = if self.cfg.host_backed_peer && tier.is_peer() {
+            session
+                .alloc_many(
+                    hr,
+                    &sizes,
+                    TierPreference::Pinned(MemoryTier::Host),
+                    AllocHints { durability: Durability::HostBacked, ..hints },
+                )
+                .unwrap_or_default()
+        } else {
+            Vec::new()
+        };
+        // One batched-DMA submission: local -> tier for every victim
+        // (plus the durable host copies if configured).
+        let src = DeviceId::Gpu(self.handler.compute_gpu);
+        let mut batch = Transfer::new().chunked(RELOAD_CHUNK_BYTES);
+        for lease in &leases {
+            batch = batch.populate(lease, src);
+        }
+        for shadow in &shadows {
+            batch = batch.populate(shadow, src);
+        }
+        batch.submit(hr).expect("fresh leases");
+        let mut shadows = shadows.into_iter();
+        for (id, lease) in victims.into_iter().zip(leases) {
+            match tier {
+                MemoryTier::PeerHbm(_) => self.stats.evictions_to_peer += 1,
+                MemoryTier::CxlMem => self.stats.evictions_to_cxl += 1,
+                _ => self.stats.evictions_to_host += 1,
+            }
+            self.table.set_residency(
+                id,
+                BlockResidency::Leased { handle: lease.id(), tier: lease.tier() },
             );
-            self.table.set_residency(id, BlockResidency::Host);
-            self.stats.evictions_to_host += 1;
+            self.leases.insert(lease.id(), lease);
+            if let Some(shadow) = shadows.next() {
+                self.host_shadow.insert(id, shadow);
+            }
         }
     }
 
-    /// Finish a sequence: release all its blocks (and any peer leases).
+    /// Finish a sequence: release all its blocks (and any leases).
     pub fn finish_seq(&mut self, hr: &mut HarvestRuntime, seq: SeqId) {
         self.sync(hr);
         let removed = self.table.remove_seq(seq);
         for (id, res) in removed {
             self.policy.remove(id);
+            self.pending_promotions.remove(&id);
             if self.pending_prefetch.remove(&id).is_some() {
                 // Prefetched for a sequence that finished before using it.
                 if let Some(p) = self.planner.as_mut() {
                     p.mark_canceled(id.0);
                 }
             }
-            if let BlockResidency::Peer { handle, .. } = res {
+            if let BlockResidency::Leased { handle, .. } = res {
                 if let Some(lease) = self.leases.remove(&handle) {
                     let session = self.session.expect("lease implies session");
                     let _ = session.release(hr, lease);
                 }
             }
+            if let Some(shadow) = self.host_shadow.remove(&id) {
+                let session = self.session.expect("lease implies session");
+                let _ = session.release(hr, shadow);
+            }
         }
     }
 
-    /// How many peer-revocation drops the event queue has delivered.
+    /// How many revocation drops the event queue has delivered.
     pub fn drops_observed(&self) -> u64 {
         self.stats.revocation_drops
     }
 
-    /// Consistency between policy membership, table residency, and the
-    /// lease map.
+    /// Consistency between policy membership, table residency, the lease
+    /// map, and the shadow/promotion side tables.
     pub fn check_invariants(&self) -> Result<(), String> {
         self.table.check_invariants()?;
-        let local_in_table = self.table.count_by_residency().0;
-        if local_in_table != self.policy.len() {
+        let (local, peer, offgpu, _dropped) = self.table.count_by_residency();
+        if local != self.policy.len() {
             return Err(format!(
-                "policy tracks {} blocks, table says {} local",
-                self.policy.len(),
-                local_in_table
+                "policy tracks {} blocks, table says {local} local",
+                self.policy.len()
             ));
         }
         if self.policy.len() > self.cfg.local_capacity_blocks {
             return Err("local pool over capacity".into());
         }
-        let peer_in_table = self.table.count_by_residency().1;
-        if peer_in_table != self.leases.len() {
+        if peer + offgpu != self.leases.len() {
             return Err(format!(
-                "table has {} peer blocks but manager holds {} leases",
-                peer_in_table,
+                "table has {} leased blocks but manager holds {} leases",
+                peer + offgpu,
                 self.leases.len()
             ));
         }
         for &id in self.pending_prefetch.keys() {
             if self.table.residency(id) != Some(BlockResidency::Local) {
                 return Err(format!("pending prefetch for non-local block {id:?}"));
+            }
+        }
+        for &id in self.pending_promotions.keys() {
+            if !self.table.residency(id).map(|r| r.is_peer()).unwrap_or(false) {
+                return Err(format!("pending promotion for non-peer block {id:?}"));
+            }
+        }
+        for &id in self.host_shadow.keys() {
+            if !self.table.residency(id).map(|r| r.is_peer()).unwrap_or(false) {
+                return Err(format!("host shadow for non-peer block {id:?}"));
             }
         }
         Ok(())
@@ -774,6 +962,10 @@ mod tests {
             use_harvest,
             host_backed_peer: false,
         }
+    }
+
+    fn peer_count(kv: &KvOffloadManager) -> usize {
+        kv.table().count_by_residency().1
     }
 
     #[test]
@@ -817,6 +1009,33 @@ mod tests {
         assert_eq!(kv.stats.evictions_to_peer, 0);
         assert!(kv.stats.evictions_to_host >= 2);
         assert!(h.node.topo.bytes_moved(DeviceId::Gpu(0), DeviceId::Host) > 0);
+        // host traffic is lease-addressed now: the monitor sees it
+        assert!(h.monitor().demand_bytes_on_tier(MemoryTier::Host) > 0);
+        assert!(h.live_bytes_on_tier(MemoryTier::Host) > 0, "host copies are leases");
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_spills_to_cxl_before_host_when_attached() {
+        // Peer full + CXL attached: the tier policy lands the batch on
+        // the expander (faster than host) rather than host DRAM.
+        let node = SimNode::new(NodeSpec::h100x2().with_cxl(64 * GIB));
+        let mut h = HarvestRuntime::new(node, HarvestConfig::for_node(2));
+        h.node.set_tenant_load(1, TenantLoad::constant(80 * GIB, 80 * GIB));
+        let mut kv = KvOffloadManager::new(cfg(true, 4), 0);
+        let s = SeqId(1);
+        for _ in 0..(16 * 6) {
+            kv.append_token(&mut h, s);
+        }
+        assert_eq!(kv.stats.evictions_to_peer, 0);
+        assert!(kv.stats.evictions_to_cxl >= 2, "{:?}", kv.stats);
+        assert_eq!(kv.stats.evictions_to_host, 0);
+        assert!(kv.stats.peer_alloc_failures > 0, "off-peer spill is counted");
+        // reloads come from the expander
+        let first = kv.table().seq_blocks(s)[0];
+        kv.access_block(&mut h, first);
+        assert_eq!(kv.stats.cxl_reloads, 1);
+        kv.check_invariants().unwrap();
     }
 
     #[test]
@@ -856,7 +1075,7 @@ mod tests {
         for _ in 0..(16 * 6) {
             kv.append_token(&mut h, s);
         }
-        let peer_before = kv.table().count_by_residency().1;
+        let peer_before = peer_count(&kv);
         assert!(peer_before > 0);
         h.revoke_peer(1, RevocationReason::TenantPressure);
         // pull model: the drops become visible at the next sync
@@ -888,12 +1107,12 @@ mod tests {
         h.revoke_peer(1, RevocationReason::TenantPressure);
         kv.access_seq(&mut h, s); // syncs, then recomputes dropped blocks
         assert!(kv.stats.recomputes > 0);
-        assert_eq!(kv.table().count_by_residency().1, 0);
+        assert_eq!(peer_count(&kv), 0);
         kv.check_invariants().unwrap();
     }
 
     #[test]
-    fn host_backed_peer_falls_back_to_host() {
+    fn host_backed_peer_falls_back_to_shadow_lease() {
         let mut h = hr();
         let mut c = cfg(true, 4);
         c.host_backed_peer = true;
@@ -902,12 +1121,58 @@ mod tests {
         for _ in 0..(16 * 6) {
             kv.append_token(&mut h, s);
         }
+        assert!(
+            h.live_bytes_on_tier(MemoryTier::Host) > 0,
+            "durable shadows are host-tier leases"
+        );
         h.revoke_peer(1, RevocationReason::TenantPressure);
         kv.sync(&mut h);
         let (_, peer, host, dropped) = kv.table().count_by_residency();
         assert_eq!(peer, 0);
         assert_eq!(dropped, 0, "durable blocks never drop");
-        assert!(host >= 2);
+        assert!(host >= 2, "shadow leases took over");
+        // and the shadow actually serves the reload over PCIe
+        let first = kv.table().seq_blocks(s)[0];
+        kv.access_block(&mut h, first);
+        assert!(kv.stats.host_reloads >= 1);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn demotion_keeps_blocks_reloadable_without_recompute() {
+        // Pressure with demote_to_host: lossy peer blocks migrate to
+        // host-tier leases instead of dropping — the §5.2 lossy path
+        // stops paying recompute for pressure spikes.
+        let node = SimNode::new(NodeSpec::h100x2());
+        let mut hc = HarvestConfig::for_node(2);
+        hc.demote_to_host = true;
+        let mut h = HarvestRuntime::new(node, hc);
+        let mut kv = KvOffloadManager::new(cfg(true, 4), 0);
+        let s = SeqId(1);
+        for _ in 0..(16 * 6) {
+            kv.append_token(&mut h, s);
+        }
+        let peer_before = peer_count(&kv);
+        assert!(peer_before > 0);
+        let now = h.node.clock.now();
+        h.node.set_tenant_load(
+            1,
+            TenantLoad::from_steps(80 * GIB, vec![(0, 0), (now + 1_000, 80 * GIB)]),
+        );
+        h.advance_to(now + 2_000);
+        kv.sync(&mut h);
+        assert_eq!(kv.stats.demotions as usize, peer_before);
+        assert_eq!(kv.stats.revocation_drops, 0);
+        let (_, peer, offgpu, dropped) = kv.table().count_by_residency();
+        assert_eq!(peer, 0);
+        assert_eq!(dropped, 0, "nothing dropped: data moved, not lost");
+        assert_eq!(offgpu, peer_before);
+        // reload comes from host, not recompute
+        let first = kv.table().seq_blocks(s)[0];
+        kv.access_block(&mut h, first);
+        assert_eq!(kv.stats.recomputes, 0);
+        assert!(kv.stats.host_reloads >= 1);
+        kv.check_invariants().unwrap();
     }
 
     #[test]
@@ -922,14 +1187,15 @@ mod tests {
         }
         assert_eq!(kv.stats.evictions_to_peer, 0);
         assert!(kv.stats.peer_alloc_failures > 0);
-        assert!(kv.stats.evictions_to_host > 0, "graceful fallback to vanilla path");
+        assert!(kv.stats.evictions_to_host > 0, "graceful fallback to the host tier");
+        kv.check_invariants().unwrap();
     }
 
     #[test]
     fn reserve_local_batches_eviction_all_or_nothing() {
-        // Peer capped below the batch: the vectored admission must fail
-        // as a whole (no partial peer placement) and every victim must
-        // take the host path.
+        // Peer capped below the batch: the vectored tier consultation
+        // must spill the batch as a whole (no partial peer placement)
+        // onto the host tier.
         let node = SimNode::new(NodeSpec::h100x2());
         let mut hcfg = HarvestConfig::for_node(2);
         let c = cfg(true, 4);
@@ -946,7 +1212,7 @@ mod tests {
         kv.reserve_local(&mut h, kv.cfg.local_capacity_blocks - 1);
         assert_eq!(kv.stats.evictions_to_peer, 0, "no partial placement");
         assert_eq!(kv.stats.evictions_to_host, 3, "whole batch rolled over to host");
-        assert_eq!(h.live_bytes_on(1), 0, "rollback left nothing on the peer");
+        assert_eq!(h.live_bytes_on(1), 0, "nothing stuck on the peer");
         assert_eq!(kv.stats.peer_alloc_failures, 1, "one vectored consultation");
         kv.check_invariants().unwrap();
     }
@@ -967,7 +1233,7 @@ mod tests {
     }
 
     #[test]
-    fn finish_seq_releases_peer_leases() {
+    fn finish_seq_releases_all_leases() {
         let mut h = hr();
         let mut kv = KvOffloadManager::new(cfg(true, 4), 0);
         let s = SeqId(1);
@@ -977,6 +1243,7 @@ mod tests {
         assert!(h.live_bytes_on(1) > 0);
         kv.finish_seq(&mut h, s);
         assert_eq!(h.live_bytes_on(1), 0, "harvest leases released");
+        assert_eq!(h.live_bytes_on_tier(MemoryTier::Host), 0);
         assert!(kv.table().is_empty());
         assert_eq!(kv.local_blocks(), 0);
     }
@@ -1009,8 +1276,8 @@ mod tests {
         let b1 = kv.table().seq_blocks(s)[1];
         kv.evict_block(h, b0);
         kv.evict_block(h, b1);
-        assert!(matches!(kv.table().residency(b0), Some(BlockResidency::Peer { .. })));
-        assert!(matches!(kv.table().residency(b1), Some(BlockResidency::Peer { .. })));
+        assert!(kv.table().residency(b0).unwrap().is_peer());
+        assert!(kv.table().residency(b1).unwrap().is_peer());
         // let the spill DMA complete so nothing below waits on it
         h.advance_to(h.node.clock.now() + 10_000_000);
         (kv, s, b0, b1)
@@ -1110,6 +1377,88 @@ mod tests {
         assert_eq!(pf.yielded, 2);
         assert_eq!(kv.local_blocks(), local_before, "a yielded prefetch evicts nothing");
         kv.check_invariants().unwrap();
+    }
+
+    /// Harvest mode with the peer full for the first 1 ms: two blocks
+    /// evicted in that window spill to host-tier leases, then the
+    /// pressure clears and the peer opens up — the promotion setup.
+    fn promotion_setup(h: &mut HarvestRuntime) -> (KvOffloadManager, SeqId, BlockId, BlockId) {
+        h.node.set_tenant_load(
+            1,
+            TenantLoad::from_steps(80 * GIB, vec![(0, 80 * GIB), (1_000_000, 0)]),
+        );
+        let mut kv =
+            KvOffloadManager::new(cfg(true, 8), 0).with_prefetch(PrefetchConfig::default());
+        let s = SeqId(1);
+        for _ in 0..(16 * 6) {
+            kv.append_token(h, s);
+        }
+        let b0 = kv.table().seq_blocks(s)[0];
+        let b1 = kv.table().seq_blocks(s)[1];
+        kv.evict_block(h, b0);
+        kv.evict_block(h, b1);
+        assert_eq!(kv.table().residency(b0).unwrap().tier(), Some(MemoryTier::Host));
+        assert_eq!(kv.table().residency(b1).unwrap().tier(), Some(MemoryTier::Host));
+        // pressure clears; spill copies settle
+        h.advance_to(h.node.clock.now() + 50_000_000);
+        (kv, s, b0, b1)
+    }
+
+    #[test]
+    fn promotion_migrates_host_blocks_to_peer_in_background() {
+        // Blocks evicted to host while the peer was full get promoted
+        // back toward peer HBM when the planner predicts their sequence
+        // will decode and peer capacity has opened up.
+        let mut h = hr();
+        let (mut kv, s, b0, b1) = promotion_setup(&mut h);
+        let t0 = h.node.clock.now();
+        let promoted = kv.promote_blocks(&mut h, &[s], t0 + 10_000_000);
+        assert_eq!(promoted, 2);
+        assert_eq!(h.node.clock.now(), t0, "promotion is background work");
+        assert!(kv.table().residency(b0).unwrap().is_peer(), "lease migrated to peer");
+        assert!(kv.table().residency(b1).unwrap().is_peer());
+        assert_eq!(kv.stats.promotions, 2);
+        assert_eq!(h.live_bytes_on(1), 2 * kv.cfg.block_bytes());
+        assert_eq!(h.live_bytes_on_tier(MemoryTier::Host), 0, "host bytes released");
+        kv.check_invariants().unwrap();
+        // the eventual reload rides NVLink and counts a promotion hit
+        h.advance_to(t0 + 10_000_000);
+        kv.access_seq(&mut h, s);
+        assert_eq!(kv.stats.peer_reloads, 2);
+        assert_eq!(kv.stats.host_reloads, 0);
+        assert_eq!(kv.stats.promotion_hits, 2);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn promotion_yields_when_link_busy_and_never_runs_for_vanilla() {
+        let mut h = hr();
+        let (mut kv, s, b0, _b1) = promotion_setup(&mut h);
+        // demand traffic owns the host->peer link: promotion must yield
+        h.node.copy(DeviceId::Host, DeviceId::Gpu(1), 1 << 30, None);
+        let promoted = kv.promote_blocks(&mut h, &[s], u64::MAX);
+        assert_eq!(promoted, 0);
+        assert_eq!(kv.table().residency(b0).unwrap().tier(), Some(MemoryTier::Host));
+        kv.check_invariants().unwrap();
+        // and the vanilla-vLLM baseline never touches the peer tier
+        let mut h2 = hr();
+        let mut vanilla =
+            KvOffloadManager::new(cfg(false, 8), 0).with_prefetch(PrefetchConfig::default());
+        let s2 = SeqId(2);
+        for _ in 0..(16 * 6) {
+            vanilla.append_token(&mut h2, s2);
+        }
+        let v0 = vanilla.table().seq_blocks(s2)[0];
+        vanilla.evict_block(&mut h2, v0);
+        h2.advance_to(h2.node.clock.now() + 50_000_000);
+        assert_eq!(vanilla.promote_blocks(&mut h2, &[s2], u64::MAX), 0);
+        assert_eq!(
+            vanilla.table().residency(v0).unwrap().tier(),
+            Some(MemoryTier::Host),
+            "use_harvest off: promotion must not move blocks to peer HBM"
+        );
+        assert_eq!(h2.live_bytes_on(1), 0);
+        vanilla.check_invariants().unwrap();
     }
 
     #[test]

@@ -15,8 +15,8 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`memsim`] | calibrated multi-GPU node simulation: HBM allocator, NVLink/PCIe interconnect model, virtual clock, async DMA, tenant pressure |
-//! | [`harvest`] | the paper's contribution behind a lease-based API: sessions with RAII `Lease`s, vectored all-or-nothing `alloc_many`, pull-model revocation events (`drain_revocations`), the unified `Transfer` builder, placement policies, revocation pipeline, deadline-aware prefetch planning (`prefetch`), MIG isolation (the paper's raw `harvest_alloc`/`harvest_free`/`harvest_register_cb` survive as deprecated shims) |
+//! | [`memsim`] | calibrated multi-GPU node simulation: HBM/host/CXL arenas, NVLink/PCIe/CXL interconnect model, virtual clock, async DMA, tenant pressure |
+//! | [`harvest`] | the paper's contribution behind a tier-aware lease API: `MemoryTier` + `TierPreference` on every allocation, sessions with RAII `Lease`s that carry their resident tier, vectored all-or-nothing `alloc_many`, pull-model revocation events with `Dropped`/`Demoted` actions, the unified `Transfer` builder (populate/fetch/migrate), cross-tier placement policies (`place_tiered`), deadline-aware prefetch planning (`prefetch`), MIG isolation (the paper's raw `harvest_alloc`/`harvest_free`/`harvest_register_cb` survive as deprecated shims) |
 //! | [`moe`] | MoE serving path: Table-1 model registry, routing simulator, expert residency map + rebalancer, CGOPipe-style pipeline |
 //! | [`kv`] | paged KV cache: blocks, unified block table, `KvOffloadManager`, per-device `OffloadingHandler`, eviction policies |
 //! | [`server`] | serving coordinator: requests, continuous batcher, FCFS + completely-fair schedulers, engine, metrics |

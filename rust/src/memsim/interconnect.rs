@@ -31,6 +31,10 @@ pub enum DeviceId {
     Gpu(usize),
     /// Host DRAM (CPU side).
     Host,
+    /// CXL-attached memory expander (§8) — an intermediate tier between
+    /// peer HBM and host DRAM, reached over [`LinkModel::cxl_mem`]-class
+    /// links from every GPU.
+    Cxl,
 }
 
 impl std::fmt::Display for DeviceId {
@@ -38,6 +42,7 @@ impl std::fmt::Display for DeviceId {
         match self {
             DeviceId::Gpu(i) => write!(f, "gpu{i}"),
             DeviceId::Host => write!(f, "host"),
+            DeviceId::Cxl => write!(f, "cxl"),
         }
     }
 }
@@ -206,6 +211,17 @@ impl Topology {
                     Link { model: pcie, busy_until: 0, bytes_moved: 0, transfers: 0 },
                 );
             }
+            // Every GPU also reaches the (optional) CXL memory expander;
+            // whether any bytes live there is the node's concern — an
+            // unused link costs nothing.
+            let cxl = LinkModel::cxl_mem();
+            for pair in [(DeviceId::Gpu(i), DeviceId::Cxl), (DeviceId::Cxl, DeviceId::Gpu(i))]
+            {
+                links.insert(
+                    pair,
+                    Link { model: cxl, busy_until: 0, bytes_moved: 0, transfers: 0 },
+                );
+            }
         }
         Self { links, clock, fabric }
     }
@@ -242,7 +258,7 @@ impl Topology {
             .keys()
             .filter_map(|(s, _)| match s {
                 DeviceId::Gpu(g) => Some(g + 1),
-                DeviceId::Host => None,
+                DeviceId::Host | DeviceId::Cxl => None,
             })
             .max()
             .unwrap_or(0);
@@ -527,6 +543,26 @@ mod tests {
             t.earliest_completion_scattered(src, dst, MIB, chunk),
             t.earliest_completion(src, dst, MIB)
         );
+    }
+
+    #[test]
+    fn cxl_links_wired_per_gpu() {
+        let mut t = Topology::h100_node(Clock::new(), 2);
+        for g in 0..2 {
+            assert!(t.link_model(DeviceId::Gpu(g), DeviceId::Cxl).is_some());
+            assert!(t.link_model(DeviceId::Cxl, DeviceId::Gpu(g)).is_some());
+        }
+        // no direct host<->cxl path — traffic staged through a GPU
+        assert!(t.link_model(DeviceId::Host, DeviceId::Cxl).is_none());
+        // tier ordering holds on the wired links too
+        let nv = t.estimate(DeviceId::Gpu(1), DeviceId::Gpu(0), MIB).unwrap();
+        let cxl = t.estimate(DeviceId::Cxl, DeviceId::Gpu(0), MIB).unwrap();
+        let host = t.estimate(DeviceId::Host, DeviceId::Gpu(0), MIB).unwrap();
+        assert!(nv < cxl && cxl < host, "nv={nv} cxl={cxl} host={host}");
+        // and the cxl link schedules like any other
+        let (s, e) = t.schedule(DeviceId::Cxl, DeviceId::Gpu(0), MIB, 0).unwrap();
+        assert_eq!(s, 0);
+        assert_eq!(e, cxl);
     }
 
     #[test]

@@ -1,12 +1,15 @@
 //! A whole simulated server node: GPUs (HBM + tenant load) + host DRAM +
-//! link topology + DMA engine + virtual clock, wired together.
+//! optional CXL memory + link topology + DMA engine + virtual clock,
+//! wired together.
 //!
 //! This is the object the Harvest runtime, the MoE pipeline and the KV
 //! manager all share. It corresponds to the paper's testbed (an Azure
 //! NC80adis H100 v5: 2× H100 80 GB, PCIe 5.0, 12 NVLink links) by
 //! default, but node shape is fully configurable — DESIGN.md's §7
 //! limitations call out larger NVLink domains, and `NodeSpec::n_gpus`
-//! lets benches explore them.
+//! lets benches explore them. Host DRAM and CXL-attached memory are
+//! allocatable arenas like the GPUs' HBM, so the tier-aware harvest
+//! controller can account host/CXL leases exactly like peer ones.
 
 use super::clock::{Clock, Ns};
 use super::dma::{DmaEngine, StreamId};
@@ -37,6 +40,12 @@ pub struct NodeSpec {
     pub pcie: LinkModel,
     /// GPU↔GPU wiring (§2.2 larger NVLink domains / §8 topology).
     pub fabric: FabricKind,
+    /// Host DRAM capacity (the testbed carries 1.9 TB; we model a round
+    /// 1 TiB — effectively unconstrained next to 80 GiB HBM).
+    pub host_dram_bytes: u64,
+    /// CXL memory-expander capacity. 0 = tier absent (the default — the
+    /// paper's testbed has none); enable with [`NodeSpec::with_cxl`].
+    pub cxl_bytes: u64,
 }
 
 impl Default for NodeSpec {
@@ -53,17 +62,14 @@ impl NodeSpec {
             nvlink: LinkModel::nvlink_h100(),
             pcie: LinkModel::pcie5_host(),
             fabric: FabricKind::FullMesh,
+            host_dram_bytes: 1024 * GIB,
+            cxl_bytes: 0,
         }
     }
 
     /// An `n`-GPU NVLink/NVSwitch domain (future-deployment sweeps).
     pub fn nvlink_domain(n: usize) -> Self {
-        Self {
-            gpus: vec![GpuSpec::default(); n],
-            nvlink: LinkModel::nvlink_h100(),
-            pcie: LinkModel::pcie5_host(),
-            fabric: FabricKind::FullMesh,
-        }
+        Self { gpus: vec![GpuSpec::default(); n], ..Self::h100x2() }
     }
 
     /// Same, wired through an NVSwitch (NVL72-class racks).
@@ -76,9 +82,18 @@ impl NodeSpec {
         Self { fabric: FabricKind::Ring, ..Self::nvlink_domain(n) }
     }
 
-    /// Host tier replaced by CXL-attached memory (§8).
+    /// Host tier's link replaced by CXL-attached memory characteristics
+    /// (§8). Distinct from [`NodeSpec::with_cxl`], which adds a separate
+    /// CXL arena *alongside* host DRAM.
     pub fn with_cxl_host(mut self) -> Self {
         self.pcie = LinkModel::cxl_mem();
+        self
+    }
+
+    /// Attach a CXL memory expander of `bytes`, making [`DeviceId::Cxl`]
+    /// an allocatable tier between peer HBM and host DRAM.
+    pub fn with_cxl(mut self, bytes: u64) -> Self {
+        self.cxl_bytes = bytes;
         self
     }
 }
@@ -94,12 +109,18 @@ pub struct Gpu {
 pub struct SimNode {
     pub clock: Clock,
     pub gpus: Vec<Gpu>,
+    /// Host DRAM arena (the slow offload tier).
+    pub host: Hbm,
+    /// CXL memory-expander arena; capacity 0 when the tier is absent.
+    pub cxl: Hbm,
     pub topo: Topology,
     pub dma: DmaEngine,
     /// One pre-created stream per (src,dst) device-pair class, so
     /// subsystems can issue copies without managing stream lifetime.
     h2d_streams: Vec<StreamId>,
     d2h_streams: Vec<StreamId>,
+    c2d_streams: Vec<StreamId>,
+    d2c_streams: Vec<StreamId>,
     p2p_streams: Vec<Vec<StreamId>>,
 }
 
@@ -120,12 +141,31 @@ impl SimNode {
             .collect();
         let h2d_streams = (0..n).map(|_| dma.create_stream()).collect();
         let d2h_streams = (0..n).map(|_| dma.create_stream()).collect();
+        let c2d_streams = (0..n).map(|_| dma.create_stream()).collect();
+        let d2c_streams = (0..n).map(|_| dma.create_stream()).collect();
         let p2p_streams = (0..n).map(|_| (0..n).map(|_| dma.create_stream()).collect()).collect();
-        Self { clock, gpus, topo, dma, h2d_streams, d2h_streams, p2p_streams }
+        Self {
+            clock,
+            gpus,
+            host: Hbm::new(spec.host_dram_bytes, FitStrategy::BestFit),
+            cxl: Hbm::new(spec.cxl_bytes, FitStrategy::BestFit),
+            topo,
+            dma,
+            h2d_streams,
+            d2h_streams,
+            c2d_streams,
+            d2c_streams,
+            p2p_streams,
+        }
     }
 
     pub fn n_gpus(&self) -> usize {
         self.gpus.len()
+    }
+
+    /// Whether the node carries a CXL memory expander.
+    pub fn has_cxl(&self) -> bool {
+        self.cxl.capacity() > 0
     }
 
     /// Install a tenant-load timeline on GPU `i`.
@@ -147,8 +187,10 @@ impl SimNode {
         match (src, dst) {
             (DeviceId::Host, DeviceId::Gpu(d)) => self.h2d_streams[d],
             (DeviceId::Gpu(d), DeviceId::Host) => self.d2h_streams[d],
+            (DeviceId::Cxl, DeviceId::Gpu(d)) => self.c2d_streams[d],
+            (DeviceId::Gpu(d), DeviceId::Cxl) => self.d2c_streams[d],
             (DeviceId::Gpu(s), DeviceId::Gpu(d)) => self.p2p_streams[s][d],
-            (DeviceId::Host, DeviceId::Host) => panic!("host->host copy"),
+            (src, dst) => panic!("no direct {src}->{dst} path: stage through a GPU"),
         }
     }
 
@@ -199,6 +241,24 @@ mod tests {
         assert_eq!(node.gpus[0].hbm.capacity(), 80 * GIB);
         assert!(node.topo.link_model(DeviceId::Gpu(0), DeviceId::Gpu(1)).is_some());
         assert!(node.topo.link_model(DeviceId::Gpu(0), DeviceId::Host).is_some());
+        // host DRAM is an allocatable arena; CXL absent by default
+        assert_eq!(node.host.capacity(), 1024 * GIB);
+        assert!(!node.has_cxl());
+    }
+
+    #[test]
+    fn cxl_spec_attaches_allocatable_arena() {
+        let mut node = SimNode::new(NodeSpec::h100x2().with_cxl(256 * GIB));
+        assert!(node.has_cxl());
+        assert_eq!(node.cxl.capacity(), 256 * GIB);
+        let a = node.cxl.alloc(GIB).unwrap();
+        let ev = node.copy(DeviceId::Cxl, DeviceId::Gpu(0), GIB, None);
+        assert!(ev.end > 0);
+        // cxl beats host, loses to nvlink — the intermediate tier
+        let host = node.topo.estimate(DeviceId::Host, DeviceId::Gpu(0), GIB).unwrap();
+        let nv = node.topo.estimate(DeviceId::Gpu(1), DeviceId::Gpu(0), GIB).unwrap();
+        assert!(nv < ev.duration() && ev.duration() < host);
+        node.cxl.free(a);
     }
 
     #[test]

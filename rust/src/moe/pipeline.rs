@@ -218,13 +218,10 @@ impl CgoPipe {
                         OffloadTier::Harvest => reb.fetch_expert(hr, key),
                         OffloadTier::Cpu => {
                             // Baseline: always serve offloaded experts
-                            // from host DRAM over PCIe.
-                            let ev = hr.node.copy(
-                                crate::memsim::DeviceId::Host,
-                                crate::memsim::DeviceId::Gpu(reb.compute_gpu()),
-                                self.model.expert_bytes(),
-                                None,
-                            );
+                            // from host DRAM over PCIe — through the
+                            // rebalancer's host-tier staging lease, so
+                            // even baseline traffic is monitor-visible.
+                            let ev = reb.fetch_expert_host(hr, key);
                             (FetchSource::Host, Some(ev))
                         }
                     };

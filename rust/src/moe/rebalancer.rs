@@ -8,16 +8,26 @@
 //! residency entry, and future invocations automatically fall back to
 //! pinned host DRAM."
 //!
+//! Tiered edition: the "pinned host DRAM" the paper assumes is itself a
+//! first-class tier now — offloaded expert weights live in **host-tier
+//! staging leases** (`TierPreference::Pinned(Host)`, allocated lazily on
+//! first use), so every host fetch is a lease-addressed `Transfer` the
+//! `PeerMonitor` sees, exactly like peer fetches. Peer promotion
+//! allocates with `TierPreference::PEER_ONLY` (promoting expert weights
+//! to a *slower* tier would be a pessimisation, so the preference says
+//! so).
+//!
 //! Revocations arrive as pull-model events on the rebalancer's
 //! [`HarvestSession`]; [`ExpertRebalancer::sync`] drains them at tick
 //! boundaries (pipeline pass start, rebalance rounds, fetches) and
-//! repairs the residency map. The pre-lease design had to share the map
-//! with the runtime's push callbacks through reference-counted interior
-//! mutability; the map is now plainly owned.
+//! repairs the residency map. Expert leases are host-backed, so the
+//! controller never demotes them — a `Demoted` event is handled
+//! defensively by releasing the (now redundant) host-tier copy.
 
 use super::config::MoeModel;
 use super::residency::{ExpertKey, ExpertResidency, ResidencyMap};
-use crate::harvest::api::{AllocHints, Durability, LeaseId};
+use crate::harvest::api::{AllocHints, Durability, LeaseId, MemoryTier, TierPreference};
+use crate::harvest::events::RevocationAction;
 use crate::harvest::prefetch::{PrefetchConfig, PrefetchPlanner, PrefetchStats};
 use crate::harvest::session::{HarvestSession, Lease, Transfer};
 use crate::harvest::{HarvestRuntime, PayloadKind};
@@ -32,8 +42,9 @@ pub enum FetchSource {
     Host,
 }
 
-/// The rebalancer. Owns the residency map and the leases backing every
-/// peer-cached expert.
+/// The rebalancer. Owns the residency map, the peer leases backing every
+/// peer-cached expert, and the host-tier staging leases backing the
+/// offloaded working set.
 pub struct ExpertRebalancer {
     pub model: &'static MoeModel,
     map: ResidencyMap,
@@ -41,6 +52,11 @@ pub struct ExpertRebalancer {
     session: Option<HarvestSession>,
     /// Live peer leases; the map's `PeerHbm` entries mirror this exactly.
     leases: BTreeMap<LeaseId, Lease>,
+    /// Host-tier staging leases for offloaded experts, allocated lazily
+    /// at first fetch (the weights were loaded at server start; staging
+    /// allocation itself moves no bytes). These make host traffic
+    /// monitor-visible and host capacity accountable.
+    staging: BTreeMap<ExpertKey, Lease>,
     /// Deadline-aware predictive promotion (enabled via
     /// [`ExpertRebalancer::with_prefetch`]).
     planner: Option<PrefetchPlanner>,
@@ -69,6 +85,7 @@ impl ExpertRebalancer {
             compute_gpu,
             session: None,
             leases: BTreeMap::new(),
+            staging: BTreeMap::new(),
             planner: None,
             prefetched: BTreeMap::new(),
             migrations: 0,
@@ -113,6 +130,14 @@ impl ExpertRebalancer {
             .get_or_insert_with(|| HarvestSession::open(hr, PayloadKind::ExpertWeights))
     }
 
+    fn peer_hints(&self) -> AllocHints {
+        AllocHints {
+            compute_gpu: Some(self.compute_gpu),
+            durability: Durability::HostBacked,
+            ..Default::default()
+        }
+    }
+
     /// Drain pending revocation events and invalidate the corresponding
     /// residency entries (fall back to pinned host DRAM). Called by
     /// every entry point; the pipeline also calls it once per decode
@@ -120,7 +145,20 @@ impl ExpertRebalancer {
     pub fn sync(&mut self, hr: &mut HarvestRuntime) {
         let Some(session) = self.session else { return };
         for ev in session.drain_revocations(hr) {
-            self.leases.remove(&ev.lease);
+            match ev.action {
+                RevocationAction::Dropped => {
+                    self.leases.remove(&ev.lease);
+                }
+                RevocationAction::Demoted { .. } => {
+                    // Expert leases are host-backed, so the controller
+                    // never demotes them in practice; defensively, a
+                    // host-tier copy of a pinned-host expert is redundant
+                    // — release it and fall back like a drop.
+                    if let Some(lease) = self.leases.remove(&ev.lease) {
+                        let _ = session.release(hr, lease);
+                    }
+                }
+            }
             self.map.invalidate_handle(ev.lease);
             self.revocations_observed += 1;
             if self.prefetched.remove(&ev.lease).is_some() {
@@ -135,21 +173,23 @@ impl ExpertRebalancer {
     }
 
     /// Migrate up to `max_migrations` host-resident experts into peer HBM
-    /// (host → peer copies; the host copy stays authoritative). Returns
-    /// how many were promoted. Stops at the first capacity rejection.
+    /// (host → peer populates; the host copy stays authoritative).
+    /// Returns how many were promoted. Stops at the first capacity
+    /// rejection.
     pub fn rebalance(&mut self, hr: &mut HarvestRuntime, max_migrations: usize) -> usize {
         self.sync(hr);
         let candidates: Vec<ExpertKey> =
             self.map.host_resident().take(max_migrations).collect();
         let session = self.session(hr);
+        let hints = self.peer_hints();
         let mut promoted = 0;
         for key in candidates {
-            let hints = AllocHints {
-                compute_gpu: Some(self.compute_gpu),
-                durability: Durability::HostBacked,
-                ..Default::default()
-            };
-            let lease = match session.alloc(hr, self.model.expert_bytes(), hints) {
+            let lease = match session.alloc(
+                hr,
+                self.model.expert_bytes(),
+                TierPreference::PEER_ONLY,
+                hints,
+            ) {
                 Ok(l) => l,
                 Err(_) => {
                     self.migration_failures += 1;
@@ -162,7 +202,8 @@ impl ExpertRebalancer {
                 .populate(&lease, DeviceId::Host)
                 .submit(hr)
                 .expect("fresh lease");
-            let ok = self.map.promote_to_peer(key, lease.id(), lease.peer());
+            let peer = lease.peer().expect("peer-only preference");
+            let ok = self.map.promote_to_peer(key, lease.id(), peer);
             debug_assert!(ok);
             self.leases.insert(lease.id(), lease);
             promoted += 1;
@@ -193,23 +234,20 @@ impl ExpertRebalancer {
         }
         let bytes = self.model.expert_bytes();
         let session = self.session(hr);
+        let hints = self.peer_hints();
         let mut promoted = 0;
         for &key in predicted {
             if !matches!(self.map.get(key), ExpertResidency::Host) {
                 continue; // local or already peer-cached
             }
-            let hints = AllocHints {
-                compute_gpu: Some(self.compute_gpu),
-                durability: Durability::HostBacked,
-                ..Default::default()
-            };
             // The placement policy picks the peer, which determines the
             // populate link — so allocate first, then ask the planner.
-            let Ok(lease) = session.alloc(hr, bytes, hints) else {
+            let Ok(lease) = session.alloc(hr, bytes, TierPreference::PEER_ONLY, hints) else {
                 self.migration_failures += 1;
                 break; // peers full: stop this round
             };
-            let (src, dst) = (DeviceId::Host, DeviceId::Gpu(lease.peer()));
+            let peer = lease.peer().expect("peer-only preference");
+            let (src, dst) = (DeviceId::Host, DeviceId::Gpu(peer));
             // Contiguous populate (expert weights are one segment).
             let admitted = self
                 .planner
@@ -229,7 +267,7 @@ impl ExpertRebalancer {
                 .populate(&lease, DeviceId::Host)
                 .submit(hr)
                 .expect("fresh lease");
-            let ok = self.map.promote_to_peer(key, lease.id(), lease.peer());
+            let ok = self.map.promote_to_peer(key, lease.id(), peer);
             debug_assert!(ok);
             let planner = self.planner.as_mut().unwrap();
             planner.record_issued(lease.id().0, bytes, report.end, deadline);
@@ -240,6 +278,33 @@ impl ExpertRebalancer {
             self.migrations += 1;
         }
         promoted
+    }
+
+    /// Serve an expert from its host-tier staging lease (the §4.3
+    /// fallback path, and the CGOPipe host-offload baseline). The
+    /// staging lease is allocated on first use — pinning the weights'
+    /// host DRAM in the harvest accounting — and the fetch is a
+    /// lease-addressed PCIe copy the monitor records as host demand.
+    pub fn fetch_expert_host(&mut self, hr: &mut HarvestRuntime, key: ExpertKey) -> CopyEvent {
+        let session = self.session(hr);
+        let bytes = self.model.expert_bytes();
+        if !self.staging.contains_key(&key) {
+            let hints = AllocHints {
+                compute_gpu: Some(self.compute_gpu),
+                durability: Durability::HostBacked,
+                ..Default::default()
+            };
+            let lease = session
+                .alloc(hr, bytes, TierPreference::Pinned(MemoryTier::Host), hints)
+                .expect("host DRAM holds the offloaded working set");
+            self.staging.insert(key, lease);
+        }
+        let lease = self.staging.get(&key).expect("just ensured");
+        let report = Transfer::new()
+            .fetch(lease, self.compute_gpu)
+            .submit(hr)
+            .expect("host staging leases are never revoked");
+        report.events[0]
     }
 
     /// Serve one expert for the FFN of `key` on the compute GPU. Returns
@@ -293,23 +358,13 @@ impl ExpertRebalancer {
                                 p.mark_canceled(handle.0);
                             }
                         }
-                        let ev = hr.node.copy(
-                            DeviceId::Host,
-                            DeviceId::Gpu(self.compute_gpu),
-                            self.model.expert_bytes(),
-                            None,
-                        );
+                        let ev = self.fetch_expert_host(hr, key);
                         (FetchSource::Host, Some(ev))
                     }
                 }
             }
             ExpertResidency::Host => {
-                let ev = hr.node.copy(
-                    DeviceId::Host,
-                    DeviceId::Gpu(self.compute_gpu),
-                    self.model.expert_bytes(),
-                    None,
-                );
+                let ev = self.fetch_expert_host(hr, key);
                 (FetchSource::Host, Some(ev))
             }
         }
@@ -378,6 +433,30 @@ mod tests {
         let (src, ev) = reb.fetch_expert(&mut hr, ExpertKey { layer: 23, expert: 15 });
         assert_eq!(src, FetchSource::Host);
         assert_eq!(ev.unwrap().src, DeviceId::Host);
+    }
+
+    #[test]
+    fn host_fetches_are_staged_leases_and_monitored() {
+        let mut hr = runtime();
+        let model = find_moe_model("phi-tiny").unwrap();
+        let mut reb = ExpertRebalancer::new(model, 0, 1.0);
+        let key = ExpertKey { layer: 0, expert: 3 };
+        let (src, _) = reb.fetch_expert(&mut hr, key);
+        assert_eq!(src, FetchSource::Host);
+        // the staging lease pins the host bytes in harvest accounting
+        assert_eq!(hr.live_bytes_on_tier(MemoryTier::Host), model.expert_bytes());
+        // and the PCIe fetch is demand traffic on the host tier slot
+        assert_eq!(
+            hr.monitor().demand_bytes_on_tier(MemoryTier::Host),
+            model.expert_bytes()
+        );
+        // a second fetch reuses the staging lease (no second allocation)
+        let (_, _) = reb.fetch_expert(&mut hr, key);
+        assert_eq!(hr.live_bytes_on_tier(MemoryTier::Host), model.expert_bytes());
+        assert_eq!(
+            hr.monitor().demand_bytes_on_tier(MemoryTier::Host),
+            2 * model.expert_bytes()
+        );
     }
 
     #[test]

@@ -144,12 +144,17 @@ impl SimEngine {
             // reloads for the sequences the scheduler predicts will
             // decode next. The deadline is the start of the next step —
             // the planner guarantees prefetch DMA is off every link
-            // again by the time demand fetches can reappear.
+            // again by the time demand fetches can reappear. Predicted
+            // blocks stuck on the host/CXL tiers (pressure demotions,
+            // host spills) that the reload pass left behind are promoted
+            // toward peer HBM in the same window, so their eventual
+            // reload rides NVLink instead of PCIe.
             if let Some(pcfg) = self.cfg.prefetch {
                 let predicted =
                     self.scheduler.lookahead(self.cfg.decode_slots, pcfg.horizon);
                 let deadline = hr.node.clock.now() + self.cfg.step_compute_ns;
                 self.kv.prefetch_seqs(hr, &predicted, deadline);
+                self.kv.promote_blocks(hr, &predicted, deadline);
             }
             // Batched compute.
             hr.advance_to(hr.node.clock.now() + self.cfg.step_compute_ns);
@@ -323,6 +328,78 @@ mod tests {
         assert_eq!(on.metrics.decode_stall_ns, off.metrics.decode_stall_ns);
         assert_eq!(on.metrics.tokens_generated, off.metrics.tokens_generated);
         assert_eq!(on.metrics.makespan_ns(), off.metrics.makespan_ns());
+    }
+
+    #[test]
+    fn demotion_under_pressure_serves_all_requests_without_recompute() {
+        // End-to-end RevocationAction::Demoted: tenant pressure
+        // oscillates while the engine decodes; with demote_to_host the
+        // controller migrates lossy peer blocks to host-tier leases
+        // instead of dropping them, so the run never pays recompute and
+        // still finishes everything.
+        let run = |demote: bool| {
+            let mut hcfg = HarvestConfig::for_node(2);
+            hcfg.demote_to_host = demote;
+            let mut hr =
+                HarvestRuntime::new(SimNode::new(crate::memsim::NodeSpec::h100x2()), hcfg);
+            const GIB: u64 = 1 << 30;
+            let steps: Vec<(u64, u64)> = (0..40)
+                .map(|i| (i * 5_000_000, if i % 2 == 1 { 80 * GIB } else { 0 }))
+                .collect();
+            hr.node.set_tenant_load(
+                1,
+                crate::memsim::TenantLoad::from_steps(80 * GIB, steps),
+            );
+            let cfg = SimEngineConfig::new(kv_cfg(true, 32), 4, 16);
+            let mut eng = SimEngine::new(cfg, Box::new(CompletelyFair::new(1)), 0);
+            let report = eng.run(&mut hr, workload(12));
+            (report, hr.demotions)
+        };
+        let (dropped, demoted_ct) = run(false);
+        assert_eq!(dropped.metrics.requests_finished, 12);
+        assert_eq!(demoted_ct, 0);
+        assert!(
+            dropped.kv_stats.recomputes > 0,
+            "baseline must lose lossy blocks under this pressure"
+        );
+        let (demoted, demoted_ct) = run(true);
+        assert_eq!(demoted.metrics.requests_finished, 12);
+        assert!(demoted_ct > 0, "pressure must exercise the demotion path");
+        assert!(demoted.kv_stats.demotions > 0, "demotion events observed by the manager");
+        assert_eq!(demoted.kv_stats.recomputes, 0, "demoted blocks are never lost");
+        assert!(
+            demoted.kv_stats.host_reloads > 0,
+            "demoted blocks reload from their host-tier lease"
+        );
+    }
+
+    #[test]
+    fn promotion_prefetch_pulls_demoted_blocks_back_to_peer() {
+        // With prefetch on, blocks the scheduler predicts for later
+        // steps that sit on the host tier are background-migrated to
+        // peer HBM — the promotion half of the demote/promote cycle.
+        let mut hr =
+            HarvestRuntime::new(SimNode::new(crate::memsim::NodeSpec::h100x2()), {
+                let mut c = HarvestConfig::for_node(2);
+                c.demote_to_host = true;
+                c
+            });
+        const GIB: u64 = 1 << 30;
+        // one early pressure spike demotes, then the peer frees up
+        let steps = vec![(0u64, 0u64), (5_000_000, 80 * GIB), (10_000_000, 0)];
+        hr.node.set_tenant_load(1, crate::memsim::TenantLoad::from_steps(80 * GIB, steps));
+        let cfg = SimEngineConfig::new(kv_cfg(true, 32), 4, 16)
+            .with_prefetch(crate::harvest::prefetch::PrefetchConfig::default());
+        let mut eng = SimEngine::new(cfg, Box::new(CompletelyFair::new(1)), 0);
+        let report = eng.run(&mut hr, workload(12));
+        assert_eq!(report.metrics.requests_finished, 12);
+        if report.kv_stats.demotions > 0 {
+            assert!(
+                report.kv_stats.promotions > 0,
+                "demoted blocks should be promoted back: {:?}",
+                report.kv_stats
+            );
+        }
     }
 
     #[test]

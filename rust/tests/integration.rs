@@ -6,8 +6,8 @@
 
 use harvest::config::{find_preset, DeploymentConfig, WorkloadKind};
 use harvest::harvest::{
-    AllocHints, HarvestConfig, HarvestRuntime, MigConfig, PayloadKind, PrefetchConfig,
-    RevocationReason, Transfer,
+    AllocHints, HarvestConfig, HarvestRuntime, MemoryTier, MigConfig, PayloadKind,
+    PrefetchConfig, RevocationReason, TierPreference, Transfer,
 };
 use harvest::kv::{KvConfig, KvOffloadManager, SeqId};
 use harvest::memsim::{DeviceId, NodeSpec, SimNode, TenantLoad};
@@ -495,9 +495,7 @@ fn lossy_kv_block_recomputes_after_revocation() {
         let t = kv.table();
         t.seq_blocks(s)
             .iter()
-            .filter(|&&b| {
-                matches!(t.residency(b), Some(harvest::kv::BlockResidency::Peer { .. }))
-            })
+            .filter(|&&b| t.residency(b).map(|r| r.is_peer()).unwrap_or(false))
             .count()
     };
     assert!(peer_blocks > 0, "spill to peer expected");
@@ -551,10 +549,15 @@ fn compute_gpu_is_never_selected_as_peer() {
                 .alloc(
                     &mut hr,
                     GIB,
+                    TierPreference::PEER_ONLY,
                     AllocHints { compute_gpu: Some(compute), ..Default::default() },
                 )
                 .unwrap();
-            assert_ne!(lease.peer(), compute, "allocated on the compute GPU");
+            assert_ne!(
+                lease.tier(),
+                MemoryTier::PeerHbm(compute),
+                "allocated on the compute GPU"
+            );
             held.push(lease);
         }
     }
@@ -577,7 +580,7 @@ fn revocation_pipeline_drains_and_invalidates_before_event_observable() {
     let mut hr = hr2();
     let session = hr.open_session(PayloadKind::KvBlock);
     let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
-    let lease = session.alloc(&mut hr, 256 * (1 << 20), hints).unwrap();
+    let lease = session.alloc(&mut hr, 256 * (1 << 20), TierPreference::PEER_ONLY, hints).unwrap();
     let id = lease.id();
     // long in-flight copy tagged with the lease
     let fill = Transfer::new().populate(&lease, DeviceId::Host).submit(&mut hr).unwrap();

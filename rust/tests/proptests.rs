@@ -4,8 +4,8 @@
 //! prints a reproducing seed.
 
 use harvest::harvest::{
-    AllocHints, HarvestConfig, HarvestRuntime, Lease, PayloadKind, PrefetchConfig,
-    RevocationReason, Transfer, VictimPolicy,
+    AllocHints, HarvestConfig, HarvestRuntime, Lease, MemoryTier, PayloadKind, PrefetchConfig,
+    RevocationAction, RevocationReason, TierPreference, Transfer, VictimPolicy,
 };
 use harvest::kv::{BlockResidency, KvConfig, KvOffloadManager, SeqId};
 use harvest::memsim::{DeviceId, FitStrategy, Hbm, NodeSpec, SimNode, TenantLoad};
@@ -155,7 +155,12 @@ fn prop_session_events_exactly_once() {
         for step in 0..rng.below(120) + 20 {
             match rng.below(10) {
                 0..=3 => {
-                    if let Ok(l) = session.alloc(&mut hr, (1 + rng.below(512)) * MIB, hints) {
+                    if let Ok(l) = session.alloc(
+                        &mut hr,
+                        (1 + rng.below(512)) * MIB,
+                        TierPreference::PEER_ONLY,
+                        hints,
+                    ) {
                         if rng.bool(0.3) {
                             Transfer::new()
                                 .populate(&l, DeviceId::Host)
@@ -170,10 +175,11 @@ fn prop_session_events_exactly_once() {
                     let sizes: Vec<u64> =
                         (0..1 + rng.below(4)).map(|_| (1 + rng.below(256)) * MIB).collect();
                     let before: u64 = (0..n_gpus).map(|p| hr.live_bytes_on(p)).sum();
-                    match session.alloc_many(&mut hr, &sizes, hints) {
+                    match session.alloc_many(&mut hr, &sizes, TierPreference::PEER_ONLY, hints)
+                    {
                         Ok(batch) => {
-                            let peer = batch[0].peer();
-                            if !batch.iter().all(|l| l.peer() == peer) {
+                            let peer = batch[0].tier();
+                            if !batch.iter().all(|l| l.tier() == peer) {
                                 return err("alloc_many split across peers".into());
                             }
                             live.extend(batch);
@@ -276,7 +282,12 @@ fn prop_leases_never_leak_accounting() {
         for _ in 0..rng.below(150) + 20 {
             match rng.below(8) {
                 0..=3 => {
-                    if let Ok(l) = session.alloc(&mut hr, (1 + rng.below(256)) * MIB, hints) {
+                    if let Ok(l) = session.alloc(
+                        &mut hr,
+                        (1 + rng.below(256)) * MIB,
+                        TierPreference::PEER_ONLY,
+                        hints,
+                    ) {
                         held.push(l);
                     }
                 }
@@ -336,7 +347,6 @@ fn prop_leases_never_leak_accounting() {
 /// After `enforce_pressure`, every peer's harvested bytes fit within
 /// capacity - tenant - reserve (and the MIG limit if set).
 #[test]
-#[allow(deprecated)] // exercises the legacy shim alloc path deliberately
 fn prop_pressure_enforcement_converges() {
     check("pressure-converges", 100, 0x9E55, |rng| {
         let node = SimNode::new(NodeSpec::h100x2());
@@ -344,9 +354,18 @@ fn prop_pressure_enforcement_converges() {
         cfg.reserve_bytes = rng.below(8) * GIB;
         let reserve = cfg.reserve_bytes;
         let mut hr = HarvestRuntime::new(node, cfg);
+        let session = hr.open_session(PayloadKind::Generic);
         let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+        let mut held: Vec<Lease> = Vec::new();
         for _ in 0..rng.below(20) + 1 {
-            let _ = hr.alloc((1 + rng.below(8)) * GIB, hints);
+            if let Ok(l) = session.alloc(
+                &mut hr,
+                (1 + rng.below(8)) * GIB,
+                TierPreference::PEER_ONLY,
+                hints,
+            ) {
+                held.push(l);
+            }
         }
         let tenant_used = rng.below(80) * GIB;
         let now = hr.node.clock.now();
@@ -360,6 +379,8 @@ fn prop_pressure_enforcement_converges() {
         if ours > budget {
             return err(format!("after enforcement: ours {ours} > budget {budget}"));
         }
+        drop(held);
+        hr.sweep_leaked();
         Ok(())
     });
 }
@@ -548,8 +569,145 @@ fn prop_kv_tier_policy_respected() {
         }
         let table = kv.table();
         for seq_block in table.seq_blocks(s) {
-            if let Some(BlockResidency::Peer { .. }) = table.residency(*seq_block) {
+            if table.residency(*seq_block).map(|r| r.is_peer()).unwrap_or(false) {
                 return err("harvest disabled but block on peer".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Random alloc/migrate/revoke/release/pressure sequences across tiers:
+/// per-tier `bytes_on` accounting always equals both the arena usage and
+/// the sum of live lease sizes by resident tier (so a lease can never be
+/// accounted on two tiers at once), demotions update the surviving
+/// lease's tier in place, and everything returns to zero at the end.
+#[test]
+fn prop_tiered_lease_accounting_under_migration() {
+    check("tier-accounting", 60, 0x71E4, |rng| {
+        let node = SimNode::new(NodeSpec::h100x2().with_cxl(32 * GIB));
+        let mut cfg = HarvestConfig::for_node(2);
+        cfg.demote_to_host = rng.bool(0.5);
+        let mut hr = HarvestRuntime::new(node, cfg);
+        let session = hr.open_session(PayloadKind::Generic);
+        let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+        let tiers = [MemoryTier::PeerHbm(1), MemoryTier::Host, MemoryTier::CxlMem];
+        let mut held: Vec<Lease> = Vec::new();
+        for step in 0..rng.below(150) + 30 {
+            match rng.below(10) {
+                0..=3 => {
+                    let pref = match rng.below(4) {
+                        0 => TierPreference::FastestAvailable,
+                        1 => TierPreference::PEER_ONLY,
+                        2 => TierPreference::Pinned(MemoryTier::Host),
+                        _ => TierPreference::Pinned(MemoryTier::CxlMem),
+                    };
+                    let hints = AllocHints {
+                        durability: if rng.bool(0.5) {
+                            harvest::harvest::Durability::Lossy
+                        } else {
+                            harvest::harvest::Durability::HostBacked
+                        },
+                        ..hints
+                    };
+                    if let Ok(l) =
+                        session.alloc(&mut hr, (1 + rng.below(128)) * MIB, pref, hints)
+                    {
+                        held.push(l);
+                    }
+                }
+                4..=5 => {
+                    // migrate a random live lease to a random tier (a
+                    // full destination fails cleanly, changing nothing)
+                    if !held.is_empty() {
+                        let i = rng.below(held.len() as u64) as usize;
+                        let to = tiers[rng.below(3) as usize];
+                        let l = &held[i];
+                        if Transfer::new().migrate(l, to).submit(&mut hr).is_ok()
+                            && l.tier() != to
+                        {
+                            return err(format!(
+                                "migrated lease reports {} not {to}",
+                                l.tier()
+                            ));
+                        }
+                    }
+                }
+                6 => {
+                    if !held.is_empty() {
+                        let l = held.swap_remove(rng.below(held.len() as u64) as usize);
+                        session.release(&mut hr, l).map_err(|e| format!("release: {e}"))?;
+                    }
+                }
+                7 => {
+                    if !held.is_empty() {
+                        let i = rng.below(held.len() as u64) as usize;
+                        hr.revoke(held[i].id(), RevocationReason::PolicyEviction);
+                    }
+                }
+                _ => {
+                    // tenant pressure spike on the peer; with
+                    // demote_to_host on, lossy leases demote instead
+                    let now = hr.node.clock.now();
+                    let used = rng.below(80) * GIB;
+                    hr.node.set_tenant_load(
+                        1,
+                        TenantLoad::from_steps(80 * GIB, vec![(0, 0), (now + step + 1, used)]),
+                    );
+                    hr.advance_to(now + step + 2);
+                }
+            }
+            // observe events: drops leave `held`; demotions must already
+            // have re-tiered the surviving lease
+            for ev in session.drain_revocations(&mut hr) {
+                match ev.action {
+                    RevocationAction::Dropped => held.retain(|l| l.id() != ev.lease),
+                    RevocationAction::Demoted { to } => {
+                        let Some(l) = held.iter().find(|l| l.id() == ev.lease) else {
+                            return err(format!("demotion for unknown lease {:?}", ev.lease));
+                        };
+                        if l.tier() != to || hr.tier_of(ev.lease) != Some(to) {
+                            return err(format!(
+                                "demoted lease on {} but event says {to}",
+                                l.tier()
+                            ));
+                        }
+                    }
+                }
+            }
+            // the three-way identity, per tier: runtime ledger == arena
+            // usage == sum of live leases resident there
+            for &tier in &tiers {
+                let ledger = hr.live_bytes_on_tier(tier);
+                let arena = match tier {
+                    MemoryTier::PeerHbm(g) => hr.node.gpus[g].hbm.used(),
+                    MemoryTier::Host => hr.node.host.used(),
+                    MemoryTier::CxlMem => hr.node.cxl.used(),
+                    MemoryTier::LocalHbm => 0,
+                };
+                let leases: u64 =
+                    held.iter().filter(|l| l.tier() == tier).map(|l| l.size()).sum();
+                if ledger != arena || ledger != leases {
+                    return err(format!(
+                        "{tier}: ledger {ledger} arena {arena} leases {leases}"
+                    ));
+                }
+            }
+            // and no lease is double-counted across tiers
+            let total: u64 = tiers.iter().map(|&t| hr.live_bytes_on_tier(t)).sum();
+            let held_total: u64 = held.iter().map(|l| l.size()).sum();
+            if total != held_total {
+                return err(format!("tier sum {total} != held sum {held_total}"));
+            }
+        }
+        // teardown: everything releases back to zero on every tier
+        for l in held.drain(..) {
+            session.release(&mut hr, l).map_err(|e| format!("final release: {e}"))?;
+        }
+        hr.sweep_leaked();
+        for &tier in &tiers {
+            if hr.live_bytes_on_tier(tier) != 0 {
+                return err(format!("{tier}: bytes left after teardown"));
             }
         }
         Ok(())
