@@ -1,0 +1,58 @@
+//! Multi-node cluster serving quickstart: run the `cluster-4` preset —
+//! 4 simulated 2×H100 nodes behind prefix-affinity routing on an RDMA
+//! node fabric — and compare routing policies on the same session
+//! workload.
+//!
+//! Run: `cargo run --release --example cluster_serve`
+
+use harvest::cluster::{Cluster, RouterPolicy};
+use harvest::config::find_preset;
+use harvest::server::{SimEngineConfig, WorkloadGen};
+use harvest::util::{fmt_bytes, fmt_ns};
+
+fn main() {
+    let cfg = find_preset("cluster-4").expect("preset registered");
+    let kv = cfg.kv_config().expect("kv model known");
+    println!(
+        "preset `{}`: {} nodes ({} GPUs x {} GiB each), {} fabric, {} requests\n",
+        cfg.name, cfg.nodes, cfg.n_gpus, cfg.hbm_gib, cfg.node_fabric.name(), cfg.n_requests
+    );
+
+    for policy in
+        [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::PrefixAffinity]
+    {
+        let mut spec = cfg.cluster_spec();
+        spec.router = policy;
+        let engine = SimEngineConfig::new(kv, cfg.decode_slots, cfg.max_running);
+        let mut cluster =
+            Cluster::new(&spec, engine, cfg.scheduler_spec().expect("scheduler known"));
+        let report = cluster.run(WorkloadGen::new(cfg.workload_spec()).generate());
+        let m = &report.aggregate;
+        let hits: u64 = report.per_node.iter().map(|n| n.prefix_hits).sum();
+        println!(
+            "{:<14} {:.0} tok/s | ttft p50 {} p99 {} | {} prefix hits | {} migrations ({})",
+            policy.name(),
+            m.tokens_per_sec(),
+            fmt_ns(m.ttft.percentile(50.0) as u64),
+            fmt_ns(m.ttft.percentile(99.0) as u64),
+            hits,
+            report.stats.prefix_migrations,
+            fmt_bytes(report.stats.migrated_bytes),
+        );
+        for n in &report.per_node {
+            println!(
+                "    node {}: {:>3} served, {:>4} kv reloads, ledger {} harvested",
+                n.node,
+                n.finished,
+                n.kv_stats.reloads(),
+                fmt_bytes(n.ledger.total())
+            );
+        }
+    }
+    println!(
+        "\ntakeaway: affinity routing pins each shared-prefix session to the node\n\
+         already holding its KV blocks — prefill shrinks to the unshared suffix\n\
+         and tail TTFT drops relative to round-robin, while spillover migrations\n\
+         keep the holder from becoming a hotspot."
+    );
+}

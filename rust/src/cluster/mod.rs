@@ -1,0 +1,480 @@
+//! Scale-out cluster serving: multi-node sharding, affinity-aware
+//! request routing, and cross-node harvest (ROADMAP "Scale-out
+//! serving").
+//!
+//! Everything below this module simulates *one* server node. A
+//! [`Cluster`] lifts that stack to N nodes:
+//!
+//! ```text
+//!             arrivals (global virtual-time order)
+//!                  │
+//!              ┌───▼────┐   per-arrival NodeView snapshots
+//!              │ Router │◄───────────────────────────────┐
+//!              └───┬────┘                                │
+//!     assign / shed│        ┌────────────────────────────┤
+//!        ┌─────────┼────────┼──────────┐                 │
+//!   ┌────▼───┐ ┌───▼────┐ ┌─▼──────┐   │            ┌────┴───┐
+//!   │ node 0 │ │ node 1 │ │ node 2 │  ...           │ node N │
+//!   │ HR+KV  │ │ HR+KV  │ │ HR+KV  │                │ HR+KV  │
+//!   └────┬───┘ └───┬────┘ └─┬──────┘                └────┬───┘
+//!        └───── NodeFabric (RDMA / Ethernet NICs) ───────┘
+//!                 prefix-KV spillover migrations
+//! ```
+//!
+//! * Every [`node::ClusterNode`] owns a full single-node stack — its own
+//!   [`crate::memsim::SimNode`], [`crate::harvest::HarvestRuntime`],
+//!   [`crate::kv::KvOffloadManager`], scheduler and metrics — stepped
+//!   incrementally (one `SimEngine`-equivalent iteration at a time).
+//! * The cluster event loop is a conservative discrete-event scheduler
+//!   over one shared virtual timeline: at each turn it dispatches the
+//!   earliest event — the next request arrival (routed against live
+//!   node snapshots) or the laggard node's next decode step — so node
+//!   clocks advance in global order and routing decisions never see the
+//!   future.
+//! * The [`router::Router`] picks a node per arrival (round-robin /
+//!   least-loaded / prefix-affinity, TOML `cluster.router_policy`), and
+//!   sheds when every node is saturated.
+//! * Affinity spillover moves a session's prefix-KV blocks between nodes
+//!   over the [`NodeFabric`]: the source node restores residency through
+//!   its lease machinery and egresses to host staging, the NIC transfer
+//!   rides the fabric link (FIFO per direction), and the target node
+//!   rebuilds the blocks behind a `ready_at` gate that overlaps the
+//!   remaining prefill.
+//!
+//! Per-node metrics roll up into one aggregate [`ServeMetrics`] whose
+//! makespan is the union window — `tokens_per_sec` is genuine aggregate
+//! cluster throughput, not a sum of per-node rates.
+
+pub mod node;
+pub mod router;
+
+pub use node::{ClusterNode, NodeReport, SchedulerSpec};
+pub use router::{NodeView, RouteDecision, Router, RouterPolicy};
+
+use crate::harvest::HarvestConfig;
+use crate::kv::SeqId;
+use crate::memsim::{NodeFabric, NodeFabricKind, NodeSpec, Ns, SimNode};
+use crate::server::{Request, ServeMetrics, SimEngineConfig};
+use crate::util::json::{obj, Json};
+use std::collections::{BTreeMap, VecDeque};
+
+/// Live harvest bytes by tier class — one node's slice, or the cluster
+/// rollup (the conservation property test pins per-node slices summing
+/// exactly to the rollup).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierLedger {
+    pub peer: u64,
+    pub cxl: u64,
+    pub host: u64,
+}
+
+impl TierLedger {
+    pub fn total(&self) -> u64 {
+        self.peer + self.cxl + self.host
+    }
+
+    pub fn accumulate(&mut self, other: &TierLedger) {
+        self.peer += other.peer;
+        self.cxl += other.cxl;
+        self.host += other.host;
+    }
+}
+
+/// Cluster shape + routing knobs (materialized from
+/// [`crate::config::DeploymentConfig`] in deployments).
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    /// Node count (1 = the single-node stack behind the same interface).
+    pub nodes: usize,
+    /// Shape of every node (homogeneous fleet).
+    pub node: NodeSpec,
+    /// Harvest controller config for every node.
+    pub harvest: HarvestConfig,
+    /// Inter-node link class.
+    pub fabric: NodeFabricKind,
+    pub router: RouterPolicy,
+    /// Queue depth at which affinity routing spills off the prefix
+    /// holder (migrating the prefix KV).
+    pub spill_queue_depth: usize,
+    /// Per-node queue depth at which a node stops accepting; when every
+    /// node is there, arrivals are shed.
+    pub shed_queue_depth: usize,
+}
+
+impl ClusterSpec {
+    /// `nodes` × the paper's 2×H100 testbed, RDMA-wired, least-loaded
+    /// routing, no shedding.
+    pub fn new(nodes: usize) -> Self {
+        Self {
+            nodes,
+            node: NodeSpec::h100x2(),
+            harvest: HarvestConfig::for_node(2),
+            fabric: NodeFabricKind::default(),
+            router: RouterPolicy::default(),
+            spill_queue_depth: 16,
+            shed_queue_depth: usize::MAX,
+        }
+    }
+}
+
+/// Cluster-level counters.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterStats {
+    /// Requests assigned to a node.
+    pub routed: u64,
+    /// Requests rejected because every node was saturated.
+    pub shed: u64,
+    /// Prefix-KV spillover migrations performed over the node fabric.
+    pub prefix_migrations: u64,
+    /// Bytes those migrations moved node-to-node.
+    pub migrated_bytes: u64,
+}
+
+/// Result of [`Cluster::run`].
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub per_node: Vec<NodeReport>,
+    /// All nodes' metrics merged; makespan = earliest start → latest
+    /// finish, so `aggregate.tokens_per_sec()` is cluster throughput.
+    pub aggregate: ServeMetrics,
+    pub stats: ClusterStats,
+    /// Total bytes moved over the inter-node fabric (migrations).
+    pub fabric_bytes: u64,
+    /// Which node served each admitted request.
+    pub assignments: BTreeMap<SeqId, usize>,
+    /// Requests shed at the router.
+    pub shed: Vec<SeqId>,
+    pub router_policy: &'static str,
+    /// Sum of the per-node ledgers.
+    pub ledger: TierLedger,
+}
+
+impl ClusterReport {
+    /// The node that served `seq` (None if shed).
+    pub fn node_of(&self, seq: SeqId) -> Option<usize> {
+        self.assignments.get(&seq).copied()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self
+            .per_node
+            .iter()
+            .map(|n| {
+                let mut o = match n.metrics.to_json() {
+                    Json::Obj(m) => m,
+                    _ => unreachable!("metrics serialize to an object"),
+                };
+                o.insert("node".into(), Json::from(n.node));
+                o.insert("routed".into(), Json::from(n.routed));
+                o.insert("finished".into(), Json::from(n.finished));
+                o.insert("prefix_hits".into(), Json::from(n.prefix_hits));
+                o.insert("kv_reloads".into(), Json::from(n.kv_stats.reloads()));
+                Json::Obj(o)
+            })
+            .collect();
+        obj([
+            ("router_policy", Json::from(self.router_policy)),
+            ("nodes", Json::from(self.per_node.len())),
+            ("routed", Json::from(self.stats.routed)),
+            ("shed", Json::from(self.stats.shed)),
+            ("prefix_migrations", Json::from(self.stats.prefix_migrations)),
+            ("migrated_bytes", Json::from(self.stats.migrated_bytes)),
+            ("fabric_bytes", Json::from(self.fabric_bytes)),
+            ("aggregate", self.aggregate.to_json()),
+            ("per_node", Json::Arr(nodes)),
+        ])
+    }
+}
+
+/// The multi-node deployment: N stepped nodes + router + node fabric.
+pub struct Cluster {
+    nodes: Vec<ClusterNode>,
+    fabric: NodeFabric,
+    router: Router,
+    stats: ClusterStats,
+    assignments: BTreeMap<SeqId, usize>,
+    shed: Vec<SeqId>,
+}
+
+impl Cluster {
+    pub fn new(spec: &ClusterSpec, engine: SimEngineConfig, sched: SchedulerSpec) -> Self {
+        assert!(spec.nodes >= 1, "a cluster needs at least one node");
+        let nodes = (0..spec.nodes)
+            .map(|id| {
+                ClusterNode::new(
+                    id,
+                    SimNode::new(spec.node.clone()),
+                    spec.harvest.clone(),
+                    engine,
+                    sched,
+                )
+            })
+            .collect();
+        Self {
+            nodes,
+            fabric: NodeFabric::new(spec.nodes, spec.fabric),
+            router: Router::new(spec.router, spec.spill_queue_depth, spec.shed_queue_depth),
+            stats: ClusterStats::default(),
+            assignments: BTreeMap::new(),
+            shed: Vec::new(),
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node(&self, i: usize) -> &ClusterNode {
+        &self.nodes[i]
+    }
+
+    pub fn fabric(&self) -> &NodeFabric {
+        &self.fabric
+    }
+
+    pub fn router_policy(&self) -> RouterPolicy {
+        self.router.policy()
+    }
+
+    /// Serve `requests` to completion (or shed) across the cluster.
+    /// Callable once per cluster; the nodes' state stays inspectable
+    /// afterwards (tests verify ledgers against the live runtimes).
+    pub fn run(&mut self, mut requests: Vec<Request>) -> ClusterReport {
+        requests.sort_by_key(|r| (r.arrival, r.id.0));
+        let mut arrivals: VecDeque<Request> = requests.into();
+        loop {
+            let node_event: Option<(Ns, usize)> = self
+                .nodes
+                .iter()
+                .filter(|n| n.has_work())
+                .map(|n| (n.next_event_time(), n.id))
+                .min();
+            match (arrivals.front().map(|r| r.arrival), node_event) {
+                (None, None) => break,
+                // The laggard node's step precedes the next arrival:
+                // dispatch it so routing sees state no older than the
+                // arrival instant.
+                (Some(t), Some((nt, id))) if t > nt => self.nodes[id].step(),
+                (Some(_), _) => {
+                    let req = arrivals.pop_front().expect("checked front");
+                    self.route(req);
+                }
+                (None, Some((_, id))) => self.nodes[id].step(),
+            }
+        }
+        for n in &mut self.nodes {
+            n.finalize();
+        }
+        self.report()
+    }
+
+    fn route(&mut self, req: Request) {
+        let views: Vec<NodeView> =
+            self.nodes.iter().map(|n| n.view(req.prefix_group)).collect();
+        match self.router.route(&req, &views) {
+            RouteDecision::Shed => {
+                self.stats.shed += 1;
+                self.shed.push(req.id);
+            }
+            RouteDecision::Assign { node, migrate_prefix_from } => {
+                if let (Some(from), Some(group)) = (migrate_prefix_from, req.prefix_group) {
+                    if from != node && !self.nodes[node].holds_prefix(group) {
+                        self.migrate_prefix(from, node, group);
+                    }
+                }
+                self.stats.routed += 1;
+                self.assignments.insert(req.id, node);
+                self.nodes[node].enqueue(req);
+            }
+        }
+    }
+
+    /// Move a prefix group's KV blocks `from` → `to` over the node
+    /// fabric: source-side residency restore + D2H egress (lease
+    /// machinery), the NIC hop (FIFO contention per direction), then
+    /// target-side rebuild gated on the delivery time.
+    fn migrate_prefix(&mut self, from: usize, to: usize, group: u32) {
+        let Some((tokens, bytes, src_ready)) = self.nodes[from].export_prefix(group) else {
+            return;
+        };
+        let earliest = src_ready.max(self.nodes[to].now());
+        let delivered = match self.fabric.schedule(from, to, bytes, earliest) {
+            Some((_, end)) => end,
+            None => earliest, // single-node degenerate case
+        };
+        self.nodes[to].install_prefix(group, tokens, delivered);
+        self.stats.prefix_migrations += 1;
+        self.stats.migrated_bytes += bytes;
+    }
+
+    fn report(&self) -> ClusterReport {
+        let per_node: Vec<NodeReport> = self.nodes.iter().map(|n| n.report()).collect();
+        let mut aggregate = ServeMetrics::new();
+        let mut ledger = TierLedger::default();
+        for n in &per_node {
+            aggregate.merge(&n.metrics);
+            ledger.accumulate(&n.ledger);
+        }
+        ClusterReport {
+            per_node,
+            aggregate,
+            stats: self.stats.clone(),
+            fabric_bytes: self.fabric.total_bytes_moved(),
+            assignments: self.assignments.clone(),
+            shed: self.shed.clone(),
+            router_policy: self.router.policy().name(),
+            ledger,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::KvConfig;
+    use crate::moe::find_kv_model;
+    use crate::server::{WorkloadGen, WorkloadSpec};
+
+    fn engine(cap_blocks: usize, slots: usize, max_running: usize) -> SimEngineConfig {
+        let kv = KvConfig {
+            model: find_kv_model("deepseek").unwrap(),
+            block_tokens: 16,
+            local_capacity_blocks: cap_blocks,
+            use_harvest: true,
+            host_backed_peer: false,
+        };
+        SimEngineConfig::new(kv, slots, max_running)
+    }
+
+    fn workload(n: usize, shared: f64, groups: usize, gap_ns: u64) -> Vec<Request> {
+        WorkloadGen::new(WorkloadSpec {
+            n_requests: n,
+            mean_prompt_tokens: 64.0,
+            max_new_tokens: 8,
+            mean_interarrival_ns: gap_ns,
+            shared_prefix_fraction: shared,
+            shared_prefix_tokens: 32,
+            n_prefix_groups: groups,
+            ..Default::default()
+        })
+        .generate()
+    }
+
+    fn run_cluster(nodes: usize, policy: RouterPolicy, reqs: Vec<Request>) -> ClusterReport {
+        let mut spec = ClusterSpec::new(nodes);
+        spec.router = policy;
+        let mut cluster = Cluster::new(&spec, engine(10_000, 8, 16), SchedulerSpec::Fcfs);
+        cluster.run(reqs)
+    }
+
+    #[test]
+    fn single_node_cluster_serves_everything() {
+        let r = run_cluster(1, RouterPolicy::RoundRobin, workload(12, 0.0, 1, 0));
+        assert_eq!(r.aggregate.requests_finished, 12);
+        assert_eq!(r.aggregate.tokens_generated, 12 * 8);
+        assert_eq!(r.stats.routed, 12);
+        assert_eq!(r.stats.shed, 0);
+        assert_eq!(r.per_node.len(), 1);
+        assert!(r.aggregate.tokens_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn round_robin_spreads_requests_across_nodes() {
+        let r = run_cluster(3, RouterPolicy::RoundRobin, workload(12, 0.0, 1, 0));
+        assert_eq!(r.aggregate.requests_finished, 12);
+        for n in &r.per_node {
+            assert_eq!(n.routed, 4, "round-robin assigns evenly");
+            assert_eq!(n.finished, 4);
+        }
+        // assignments cycle 0,1,2,0,1,2,... in arrival (= id) order
+        assert_eq!(r.node_of(SeqId(0)), Some(0));
+        assert_eq!(r.node_of(SeqId(1)), Some(1));
+        assert_eq!(r.node_of(SeqId(2)), Some(2));
+        assert_eq!(r.node_of(SeqId(3)), Some(0));
+    }
+
+    #[test]
+    fn affinity_keeps_groups_together_and_hits_prefix_cache() {
+        let reqs = workload(24, 1.0, 2, 2_000_000);
+        let r = run_cluster(3, RouterPolicy::PrefixAffinity, reqs.clone());
+        assert_eq!(r.aggregate.requests_finished, 24);
+        // every request of a group landed on one node
+        let mut group_node: BTreeMap<u32, usize> = BTreeMap::new();
+        for req in &reqs {
+            let g = req.prefix_group.expect("fraction 1.0");
+            let node = r.node_of(req.id).expect("served");
+            assert_eq!(*group_node.entry(g).or_insert(node), node, "group split across nodes");
+        }
+        // all admissions after the first per group reused the prefix
+        let hits: u64 = r.per_node.iter().map(|n| n.prefix_hits).sum();
+        assert_eq!(hits, 24 - group_node.len() as u64);
+    }
+
+    #[test]
+    fn affinity_spills_and_migrates_prefix_over_fabric() {
+        // One group and a spill threshold of 1: as soon as the holder
+        // has any request queued or decoding, the next arrival spills —
+        // which must move the prefix KV over the fabric. Arrivals are
+        // staggered so the holder is established before the burst.
+        let mut spec = ClusterSpec::new(2);
+        spec.router = RouterPolicy::PrefixAffinity;
+        spec.spill_queue_depth = 1;
+        let mut cluster = Cluster::new(&spec, engine(10_000, 4, 4), SchedulerSpec::Fcfs);
+        let r = cluster.run(workload(16, 1.0, 1, 2_000_000));
+        assert_eq!(r.aggregate.requests_finished, 16);
+        assert!(r.stats.prefix_migrations >= 1, "{:?}", r.stats);
+        assert!(r.stats.migrated_bytes > 0);
+        assert_eq!(r.fabric_bytes, r.stats.migrated_bytes, "only migrations ride the fabric");
+        // both nodes ended up holding the group's prefix
+        assert!(cluster.node(0).holds_prefix(0));
+        assert!(cluster.node(1).holds_prefix(0));
+    }
+
+    #[test]
+    fn shed_threshold_rejects_exactly_once_per_request() {
+        let mut spec = ClusterSpec::new(2);
+        spec.router = RouterPolicy::LeastLoaded;
+        spec.shed_queue_depth = 3;
+        // burst arrival: queues saturate instantly, later arrivals shed
+        let mut cluster = Cluster::new(&spec, engine(10_000, 2, 4), SchedulerSpec::Fcfs);
+        let r = cluster.run(workload(20, 0.0, 1, 0));
+        assert!(r.stats.shed > 0, "burst must exceed 2 nodes x 3 queue slots");
+        assert_eq!(r.stats.routed + r.stats.shed, 20);
+        assert_eq!(r.aggregate.requests_finished, r.stats.routed);
+        assert_eq!(r.shed.len() as u64, r.stats.shed);
+        for id in &r.shed {
+            assert!(r.node_of(*id).is_none(), "shed request must not be assigned");
+        }
+    }
+
+    #[test]
+    fn per_node_ledgers_sum_to_cluster_ledger() {
+        // Tight pools force offload to harvest tiers; prefix seqs stay
+        // cached past the run, so the end-of-run ledger is non-trivial.
+        let mut spec = ClusterSpec::new(2);
+        spec.router = RouterPolicy::PrefixAffinity;
+        let mut cluster = Cluster::new(&spec, engine(24, 4, 8), SchedulerSpec::Fcfs);
+        let r = cluster.run(workload(16, 0.5, 2, 0));
+        assert_eq!(r.aggregate.requests_finished, 16);
+        let mut sum = TierLedger::default();
+        for (i, n) in r.per_node.iter().enumerate() {
+            assert_eq!(n.ledger, cluster.node(i).ledger(), "report snapshots live state");
+            sum.accumulate(&n.ledger);
+        }
+        assert_eq!(sum, r.ledger);
+    }
+
+    #[test]
+    fn aggregate_throughput_scales_with_nodes() {
+        let tps = |nodes| {
+            run_cluster(nodes, RouterPolicy::LeastLoaded, workload(48, 0.0, 1, 0))
+                .aggregate
+                .tokens_per_sec()
+        };
+        let one = tps(1);
+        let two = tps(2);
+        let four = tps(4);
+        assert!(two > one * 1.3, "2 nodes: {two:.0} <= 1.3x {one:.0}");
+        assert!(four > two * 1.3, "4 nodes: {four:.0} <= 1.3x {two:.0}");
+    }
+}

@@ -1,0 +1,416 @@
+//! One node of the cluster: a full single-node serving stack —
+//! [`HarvestRuntime`] over its own [`crate::memsim::SimNode`], a
+//! [`KvOffloadManager`], a decode scheduler and serving metrics — driven
+//! as an *incremental step loop* instead of [`crate::server::SimEngine`]'s
+//! closed run-to-completion loop, so the [`super::Cluster`] event loop
+//! can interleave nodes in global virtual-time order and route arrivals
+//! against live node state.
+//!
+//! Each step reproduces one `SimEngine` iteration exactly: admit arrived
+//! requests (prefill), drain revocations, restore KV residency for the
+//! scheduled cohort (charging decode stalls), overlap deadline-aware
+//! prefetch/promotion with the step's compute, decode one token per
+//! cohort member. On top of that the node keeps a **prefix cache**: the
+//! KV blocks of each shared prompt prefix it has served, held as a
+//! dedicated sequence in the KV manager (so they age, offload to harvest
+//! tiers and reload like any other blocks). A request routed here whose
+//! prefix group is cached prefills only its unshared suffix — the
+//! affinity win the router exploits — and decode touches the prefix
+//! blocks every step, keeping them genuinely resident on this node.
+
+use crate::harvest::{HarvestRuntime, Transfer};
+use crate::kv::{KvOffloadManager, KvStats, SeqId};
+use crate::memsim::{DeviceId, Ns, SimNode};
+use crate::server::{CompletelyFair, Fcfs, Request, Scheduler, ServeMetrics, SimEngineConfig};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use super::router::NodeView;
+use super::TierLedger;
+
+/// Sequence-id namespace for prefix-cache sequences, far above any
+/// request id the workload generator produces.
+const PREFIX_SEQ_BASE: u64 = 1 << 40;
+
+/// Which decode scheduler each node runs (a buildable spec, since every
+/// node needs its own scheduler instance).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerSpec {
+    Fcfs,
+    CompletelyFair { quantum: u32 },
+}
+
+impl SchedulerSpec {
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        match *self {
+            SchedulerSpec::Fcfs => Box::new(Fcfs::new()),
+            SchedulerSpec::CompletelyFair { quantum } => Box::new(CompletelyFair::new(quantum)),
+        }
+    }
+
+    /// Parse the config-file spelling (`server.scheduler` + quantum).
+    pub fn parse(name: &str, quantum: u32) -> anyhow::Result<Self> {
+        match name {
+            "fcfs" => Ok(SchedulerSpec::Fcfs),
+            "cf" | "completely-fair" => Ok(SchedulerSpec::CompletelyFair { quantum }),
+            other => anyhow::bail!("unknown scheduler `{other}` (fcfs | cf)"),
+        }
+    }
+}
+
+/// A cached shared-prefix: its KV lives under `seq` in this node's KV
+/// manager; `ready_at` gates reuse while the blocks are still arriving
+/// (initial build or fabric migration).
+#[derive(Debug, Clone, Copy)]
+struct PrefixEntry {
+    seq: SeqId,
+    tokens: u32,
+    ready_at: Ns,
+}
+
+/// Per-node slice of a [`super::ClusterReport`].
+#[derive(Debug, Clone)]
+pub struct NodeReport {
+    pub node: usize,
+    pub metrics: ServeMetrics,
+    pub kv_stats: KvStats,
+    /// Requests the router assigned here.
+    pub routed: u64,
+    /// Requests served to completion here.
+    pub finished: u64,
+    /// Admissions whose prefill reused this node's cached prefix KV.
+    pub prefix_hits: u64,
+    /// Live harvest bytes by tier class at report time.
+    pub ledger: TierLedger,
+}
+
+/// One simulated server of the cluster.
+pub struct ClusterNode {
+    pub id: usize,
+    hr: HarvestRuntime,
+    kv: KvOffloadManager,
+    scheduler: Box<dyn Scheduler>,
+    cfg: SimEngineConfig,
+    compute_gpu: usize,
+    /// Routed, not yet admitted (arrival order — the router processes
+    /// arrivals in global time order).
+    pending: VecDeque<Request>,
+    /// Admitted, decoding.
+    live: BTreeMap<SeqId, Request>,
+    prefix_cache: BTreeMap<u32, PrefixEntry>,
+    next_prefix_seq: u64,
+    pub metrics: ServeMetrics,
+    finished: Vec<SeqId>,
+    routed: u64,
+    prefix_hits: u64,
+}
+
+impl ClusterNode {
+    pub(crate) fn new(
+        id: usize,
+        node: SimNode,
+        harvest: crate::harvest::HarvestConfig,
+        engine: SimEngineConfig,
+        sched: SchedulerSpec,
+    ) -> Self {
+        let mut kv = KvOffloadManager::new(engine.kv, 0);
+        if let Some(p) = engine.prefetch {
+            kv = kv.with_prefetch(p);
+        }
+        let hr = HarvestRuntime::new(node, harvest);
+        let mut metrics = ServeMetrics::new();
+        metrics.on_start(hr.node.clock.now());
+        Self {
+            id,
+            hr,
+            kv,
+            scheduler: sched.build(),
+            cfg: engine,
+            compute_gpu: 0,
+            pending: VecDeque::new(),
+            live: BTreeMap::new(),
+            prefix_cache: BTreeMap::new(),
+            next_prefix_seq: 0,
+            metrics,
+            finished: Vec::new(),
+            routed: 0,
+            prefix_hits: 0,
+        }
+    }
+
+    // -- introspection ---------------------------------------------------
+
+    pub fn now(&self) -> Ns {
+        self.hr.node.clock.now()
+    }
+
+    /// Requests waiting or decoding here.
+    pub fn queue_depth(&self) -> usize {
+        self.pending.len() + self.live.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || !self.live.is_empty()
+    }
+
+    /// The virtual time of this node's next step (only meaningful while
+    /// [`ClusterNode::has_work`]).
+    pub(crate) fn next_event_time(&self) -> Ns {
+        if !self.live.is_empty() {
+            return self.now();
+        }
+        match self.pending.front() {
+            Some(r) => self.now().max(r.arrival),
+            None => self.now(),
+        }
+    }
+
+    pub fn holds_prefix(&self, group: u32) -> bool {
+        self.prefix_cache.contains_key(&group)
+    }
+
+    /// The KV sequence holding `group`'s prefix blocks on this node.
+    pub fn prefix_seq(&self, group: u32) -> Option<SeqId> {
+        self.prefix_cache.get(&group).map(|e| e.seq)
+    }
+
+    pub fn kv_manager(&self) -> &KvOffloadManager {
+        &self.kv
+    }
+
+    pub fn runtime(&self) -> &HarvestRuntime {
+        &self.hr
+    }
+
+    /// Live harvest bytes by tier class (the node's slice of the
+    /// cluster ledger).
+    pub fn ledger(&self) -> TierLedger {
+        use crate::harvest::MemoryTier;
+        let peer = (0..self.hr.node.n_gpus()).map(|g| self.hr.live_bytes_on(g)).sum();
+        TierLedger {
+            peer,
+            cxl: self.hr.live_bytes_on_tier(MemoryTier::CxlMem),
+            host: self.hr.live_bytes_on_tier(MemoryTier::Host),
+        }
+    }
+
+    /// Load snapshot for the router. `group` marks whose prefix
+    /// membership to report.
+    pub(crate) fn view(&self, group: Option<u32>) -> NodeView {
+        let free_hbm =
+            (0..self.hr.node.n_gpus()).map(|g| self.hr.node.harvestable_now(g)).sum();
+        NodeView {
+            node: self.id,
+            queue_depth: self.queue_depth(),
+            free_local_blocks: self
+                .cfg
+                .kv
+                .local_capacity_blocks
+                .saturating_sub(self.kv.local_blocks()),
+            free_hbm_bytes: free_hbm,
+            has_prefix: group.is_some_and(|g| self.prefix_cache.contains_key(&g)),
+        }
+    }
+
+    pub(crate) fn report(&self) -> NodeReport {
+        NodeReport {
+            node: self.id,
+            metrics: self.metrics.clone(),
+            kv_stats: self.kv.stats.clone(),
+            routed: self.routed,
+            finished: self.finished.len() as u64,
+            prefix_hits: self.prefix_hits,
+            ledger: self.ledger(),
+        }
+    }
+
+    // -- routing-side entry points ---------------------------------------
+
+    /// Accept a routed request (arrivals are handed over in global
+    /// arrival order, so the pending queue stays arrival-sorted).
+    pub(crate) fn enqueue(&mut self, req: Request) {
+        self.routed += 1;
+        self.pending.push_back(req);
+    }
+
+    /// Read out `seq`'s blocks for a fabric migration: restore residency
+    /// (lease-addressed reloads for anything on a harvest tier), then
+    /// egress compute-GPU → host staging for the NIC. Returns the byte
+    /// count and the virtual time the payload is ready to leave.
+    pub(crate) fn export_prefix(&mut self, group: u32) -> Option<(u32, u64, Ns)> {
+        let entry = *self.prefix_cache.get(&group)?;
+        let ready = self.kv.access_seq(&mut self.hr, entry.seq);
+        let blocks = self.kv.table().seq_blocks(entry.seq).len() as u64;
+        let bytes = blocks * self.cfg.kv.block_bytes();
+        if bytes == 0 {
+            return Some((entry.tokens, 0, ready));
+        }
+        let report = Transfer::new()
+            .raw(DeviceId::Gpu(self.compute_gpu), DeviceId::Host, bytes)
+            .submit(&mut self.hr)
+            .expect("raw transfer cannot go stale");
+        Some((entry.tokens, bytes, report.end.max(ready)))
+    }
+
+    /// Land a migrated prefix: build the group's blocks in this node's
+    /// KV manager and gate reuse on the later of `ready_at` (the fabric
+    /// delivery time) and the host-staging → HBM ingress completing on
+    /// the local PCIe link. (The ingress is scheduled when the migration
+    /// is decided rather than at NIC delivery — a deliberate
+    /// simplification that can occupy the link early; the *gate* is
+    /// never early, so reuse always pays both hops.)
+    pub(crate) fn install_prefix(&mut self, group: u32, tokens: u32, ready_at: Ns) {
+        if self.prefix_cache.contains_key(&group) {
+            return;
+        }
+        let seq = self.build_prefix(group, tokens);
+        let blocks = self.kv.table().seq_blocks(seq).len() as u64;
+        let bytes = blocks * self.cfg.kv.block_bytes();
+        let mut gate = ready_at;
+        if bytes > 0 {
+            let ingress = Transfer::new()
+                .raw(DeviceId::Host, DeviceId::Gpu(self.compute_gpu), bytes)
+                .submit(&mut self.hr)
+                .expect("raw transfer cannot go stale");
+            gate = gate.max(ingress.end);
+        }
+        if let Some(e) = self.prefix_cache.get_mut(&group) {
+            e.ready_at = gate;
+        }
+    }
+
+    /// Create the prefix sequence and append its tokens (no compute is
+    /// charged here — the caller accounts prefill or fabric time).
+    fn build_prefix(&mut self, group: u32, tokens: u32) -> SeqId {
+        let seq = SeqId(PREFIX_SEQ_BASE + self.next_prefix_seq);
+        self.next_prefix_seq += 1;
+        let bt = self.cfg.kv.block_tokens as usize;
+        self.kv.reserve_local(&mut self.hr, (tokens as usize).div_ceil(bt));
+        for _ in 0..tokens {
+            self.kv.append_token(&mut self.hr, seq);
+        }
+        self.prefix_cache
+            .insert(group, PrefixEntry { seq, tokens, ready_at: self.now() });
+        seq
+    }
+
+    // -- the step loop ---------------------------------------------------
+
+    /// Admission + prefill for every arrived request that fits.
+    fn admit_ready(&mut self) {
+        while self.live.len() < self.cfg.max_running {
+            let Some(front) = self.pending.front() else { break };
+            if front.arrival > self.now() {
+                break;
+            }
+            let mut req = self.pending.pop_front().expect("checked front");
+            self.prefill(&mut req);
+            self.scheduler.admit(req.id);
+            self.live.insert(req.id, req);
+        }
+    }
+
+    /// Prefill one request. A cached prefix group shrinks the prefill to
+    /// the unshared suffix (the affinity win); reuse waits for the
+    /// prefix's `ready_at` when its blocks are still in flight over the
+    /// node fabric — the wait overlaps the suffix prefill.
+    fn prefill(&mut self, req: &mut Request) {
+        let (cached, gate) = match req.prefix_group.and_then(|g| self.prefix_cache.get(&g)) {
+            Some(e) => (e.tokens.min(req.shared_prefix_tokens), e.ready_at),
+            None => (0, 0),
+        };
+        if cached > 0 {
+            self.prefix_hits += 1;
+        }
+        let fresh = req.prompt_tokens - cached;
+        let prefill_ns = self.cfg.prefill_ns_per_token * fresh as u64;
+        self.hr.advance_to(self.now() + prefill_ns);
+        self.hr.advance_to(gate);
+        let bt = self.cfg.kv.block_tokens as usize;
+        // Vectored admission: free the suffix's block footprint in one
+        // all-or-nothing batch instead of evicting per token.
+        self.kv.reserve_local(&mut self.hr, (fresh as usize).div_ceil(bt));
+        for _ in 0..fresh {
+            self.kv.append_token(&mut self.hr, req.id);
+        }
+        if cached == 0 && req.shared_prefix_tokens > 0 {
+            if let Some(g) = req.prefix_group {
+                // First request of the group on this node: its prefill
+                // (charged above, full-length) built the prefix KV —
+                // retain it as the group cache.
+                self.build_prefix(g, req.shared_prefix_tokens);
+            }
+        }
+        req.first_token_at = Some(self.now());
+        self.metrics.on_first_token(req.arrival, self.now());
+    }
+
+    /// Run one engine iteration: admit, restore residency, overlap
+    /// prefetch with compute, decode one token per cohort member.
+    /// Mirrors [`crate::server::SimEngine::run`]'s loop body.
+    pub(crate) fn step(&mut self) {
+        if self.live.is_empty() {
+            if let Some(front) = self.pending.front() {
+                let at = front.arrival.max(self.now());
+                self.hr.advance_to(at);
+            }
+        }
+        self.admit_ready();
+        let cohort = self.scheduler.select(self.cfg.decode_slots);
+        if cohort.is_empty() {
+            return;
+        }
+        let step_start = self.now();
+        // Tick boundary: fold in revocations, then restore residency —
+        // the cohort's own blocks plus the prefix blocks decode attends
+        // over (this is where preemption and offload churn cost).
+        self.kv.sync(&mut self.hr);
+        let mut groups_touched: BTreeSet<u32> = BTreeSet::new();
+        for &seq in &cohort {
+            if let Some(g) = self.live.get(&seq).and_then(|r| r.prefix_group) {
+                if groups_touched.insert(g) {
+                    let pseq = self.prefix_cache.get(&g).map(|e| e.seq);
+                    if let Some(pseq) = pseq {
+                        self.kv.access_seq(&mut self.hr, pseq);
+                    }
+                }
+            }
+        }
+        for &seq in &cohort {
+            self.kv.access_seq(&mut self.hr, seq);
+        }
+        self.metrics.on_stall(self.now() - step_start);
+        // Overlap predicted reloads/promotions with this step's compute.
+        if let Some(pcfg) = self.cfg.prefetch {
+            let predicted = self.scheduler.lookahead(self.cfg.decode_slots, pcfg.horizon);
+            let deadline = self.now() + self.cfg.step_compute_ns;
+            self.kv.prefetch_seqs(&mut self.hr, &predicted, deadline);
+            self.kv.promote_blocks(&mut self.hr, &predicted, deadline);
+        }
+        self.hr.advance_to(self.now() + self.cfg.step_compute_ns);
+        let step_ns = self.now() - step_start;
+        for &seq in &cohort {
+            self.kv.append_token(&mut self.hr, seq);
+            let now = self.hr.node.clock.now();
+            let req = self.live.get_mut(&seq).expect("scheduled request is live");
+            req.generated += 1;
+            let finished = req.done();
+            let arrival = req.arrival;
+            if finished {
+                req.finished_at = Some(now);
+            }
+            self.metrics.on_token(step_ns);
+            if finished {
+                self.metrics.on_finish(arrival, now);
+                self.scheduler.retire(seq);
+                self.kv.finish_seq(&mut self.hr, seq);
+                self.live.remove(&seq);
+                self.finished.push(seq);
+            }
+        }
+    }
+
+    /// Finalize metrics at end of run (attach the prefetch ledger).
+    pub(crate) fn finalize(&mut self) {
+        self.metrics.prefetch = self.kv.prefetch_stats().cloned();
+    }
+}

@@ -1,0 +1,297 @@
+//! Request router: which node of the cluster serves an arriving request.
+//!
+//! The router acts on a per-arrival snapshot of every node
+//! ([`NodeView`]) and never inspects node internals — exactly the
+//! information a production front-end would scrape (queue depth, free KV
+//! budget, harvestable HBM, prefix-cache membership). Three policies:
+//!
+//! | policy | decision rule |
+//! |---|---|
+//! | [`RouterPolicy::RoundRobin`] | next node in id order, skipping shed-saturated nodes |
+//! | [`RouterPolicy::LeastLoaded`] | minimize queue depth relative to free KV budget (queue pressure × memory headroom) |
+//! | [`RouterPolicy::PrefixAffinity`] | the node already holding the request's shared-prefix KV; spills to the least-loaded node (migrating the prefix blocks over the node fabric) when the holder's queue exceeds the spill threshold; least-loaded for prefix-less requests |
+//!
+//! Every policy sheds (rejects) a request when *all* nodes sit at or
+//! above the shed threshold — the admission-control half of the
+//! queueing-stability picture ("A Queueing-Theoretic Framework for
+//! Stability Analysis of LLM Inference", PAPERS.md): unbounded queues
+//! under KV memory pressure destabilize every node at once, so the
+//! router bounds them cluster-wide.
+
+use crate::server::Request;
+use std::cmp::Ordering;
+
+/// Routing policy selector (TOML: `cluster.router_policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouterPolicy {
+    /// Cycle through nodes in id order regardless of load.
+    RoundRobin,
+    /// Pick the node with the lowest queue-pressure-per-free-HBM score.
+    #[default]
+    LeastLoaded,
+    /// Prefer the node holding the request's shared-prefix KV blocks;
+    /// fall back to least-loaded (with prefix migration) under overload.
+    PrefixAffinity,
+}
+
+impl RouterPolicy {
+    /// Parse the config-file spelling.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "round-robin" | "rr" => Ok(RouterPolicy::RoundRobin),
+            "least-loaded" | "ll" => Ok(RouterPolicy::LeastLoaded),
+            "affinity" | "prefix-affinity" => Ok(RouterPolicy::PrefixAffinity),
+            other => anyhow::bail!(
+                "unknown router policy `{other}` (round-robin | least-loaded | affinity)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::LeastLoaded => "least-loaded",
+            RouterPolicy::PrefixAffinity => "affinity",
+        }
+    }
+}
+
+/// Per-node load snapshot the router decides on.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeView {
+    pub node: usize,
+    /// Requests queued for admission plus requests decoding.
+    pub queue_depth: usize,
+    /// Free slots in the node's local KV pool.
+    pub free_local_blocks: usize,
+    /// Harvestable peer-HBM bytes across the node's GPUs right now.
+    pub free_hbm_bytes: u64,
+    /// Whether this node holds the arriving request's prefix-group KV.
+    pub has_prefix: bool,
+}
+
+/// Outcome of routing one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteDecision {
+    Assign {
+        node: usize,
+        /// When set, the request's shared-prefix KV blocks should be
+        /// migrated from this node to `node` over the node fabric
+        /// before the request's prefill can reuse them.
+        migrate_prefix_from: Option<usize>,
+    },
+    /// Every node is at or above the shed threshold: reject.
+    Shed,
+}
+
+/// Total order on load: `(queue+1) / (free_blocks+1)` compared by exact
+/// integer cross-multiplication (no float ties), node id as tiebreak.
+fn load_order(a: &NodeView, b: &NodeView) -> Ordering {
+    let lhs = (a.queue_depth as u128 + 1) * (b.free_local_blocks as u128 + 1);
+    let rhs = (b.queue_depth as u128 + 1) * (a.free_local_blocks as u128 + 1);
+    lhs.cmp(&rhs)
+        .then_with(|| b.free_hbm_bytes.cmp(&a.free_hbm_bytes))
+        .then_with(|| a.node.cmp(&b.node))
+}
+
+/// The router. Holds only policy state (the round-robin cursor); every
+/// decision is a pure function of the views otherwise.
+#[derive(Debug)]
+pub struct Router {
+    policy: RouterPolicy,
+    /// Holder queue depth at which affinity routing spills elsewhere.
+    spill_queue_depth: usize,
+    /// Per-node queue depth at which a node stops accepting; all nodes
+    /// there ⇒ shed.
+    shed_queue_depth: usize,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: RouterPolicy, spill_queue_depth: usize, shed_queue_depth: usize) -> Self {
+        Self { policy, spill_queue_depth: spill_queue_depth.max(1), shed_queue_depth, rr_next: 0 }
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    fn least_loaded(&self, views: &[NodeView]) -> Option<usize> {
+        views
+            .iter()
+            .filter(|v| v.queue_depth < self.shed_queue_depth)
+            .min_by(|a, b| load_order(a, b))
+            .map(|v| v.node)
+    }
+
+    /// Route one arriving request against the current node views (one
+    /// [`NodeView`] per node, in node-id order).
+    pub fn route(&mut self, req: &Request, views: &[NodeView]) -> RouteDecision {
+        assert!(!views.is_empty(), "routing against an empty cluster");
+        if views.iter().all(|v| v.queue_depth >= self.shed_queue_depth) {
+            return RouteDecision::Shed;
+        }
+        match self.policy {
+            RouterPolicy::RoundRobin => {
+                for _ in 0..views.len() {
+                    let v = &views[self.rr_next % views.len()];
+                    self.rr_next = (self.rr_next + 1) % views.len();
+                    if v.queue_depth < self.shed_queue_depth {
+                        return RouteDecision::Assign { node: v.node, migrate_prefix_from: None };
+                    }
+                }
+                RouteDecision::Shed
+            }
+            RouterPolicy::LeastLoaded => match self.least_loaded(views) {
+                Some(node) => RouteDecision::Assign { node, migrate_prefix_from: None },
+                None => RouteDecision::Shed,
+            },
+            RouterPolicy::PrefixAffinity => {
+                let holder = req.prefix_group.and_then(|_| {
+                    views
+                        .iter()
+                        .filter(|v| v.has_prefix && v.queue_depth < self.shed_queue_depth)
+                        .min_by(|a, b| load_order(a, b))
+                });
+                match holder {
+                    Some(h) if h.queue_depth < self.spill_queue_depth => {
+                        RouteDecision::Assign { node: h.node, migrate_prefix_from: None }
+                    }
+                    Some(h) => {
+                        // Holder overloaded: shed load to the least-loaded
+                        // node and take the session's KV with it.
+                        match self.least_loaded(views) {
+                            Some(node) if node != h.node => RouteDecision::Assign {
+                                node,
+                                migrate_prefix_from: Some(h.node),
+                            },
+                            Some(node) => {
+                                RouteDecision::Assign { node, migrate_prefix_from: None }
+                            }
+                            None => RouteDecision::Shed,
+                        }
+                    }
+                    None => match self.least_loaded(views) {
+                        Some(node) => RouteDecision::Assign { node, migrate_prefix_from: None },
+                        None => RouteDecision::Shed,
+                    },
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::SeqId;
+    use crate::server::RequestState;
+
+    fn req(group: Option<u32>) -> Request {
+        Request {
+            id: SeqId(0),
+            arrival: 0,
+            prompt_tokens: 100,
+            max_new_tokens: 8,
+            shared_prefix_tokens: if group.is_some() { 64 } else { 0 },
+            prefix_group: group,
+            state: RequestState::Queued,
+            generated: 0,
+            first_token_at: None,
+            finished_at: None,
+        }
+    }
+
+    fn view(node: usize, queue: usize, free: usize, has_prefix: bool) -> NodeView {
+        NodeView {
+            node,
+            queue_depth: queue,
+            free_local_blocks: free,
+            free_hbm_bytes: 0,
+            has_prefix,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RouterPolicy::RoundRobin, 8, usize::MAX);
+        let views = vec![view(0, 0, 10, false), view(1, 0, 10, false), view(2, 0, 10, false)];
+        let picks: Vec<_> = (0..6)
+            .map(|_| match r.route(&req(None), &views) {
+                RouteDecision::Assign { node, .. } => node,
+                RouteDecision::Shed => panic!("unexpected shed"),
+            })
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_balances_queue_against_free_blocks() {
+        let mut r = Router::new(RouterPolicy::LeastLoaded, 8, usize::MAX);
+        // node 1 has a shorter queue relative to its free pool
+        let views = vec![view(0, 4, 10, false), view(1, 2, 10, false)];
+        assert_eq!(
+            r.route(&req(None), &views),
+            RouteDecision::Assign { node: 1, migrate_prefix_from: None }
+        );
+        // same queues: more free blocks wins
+        let views = vec![view(0, 3, 5, false), view(1, 3, 50, false)];
+        assert_eq!(
+            r.route(&req(None), &views),
+            RouteDecision::Assign { node: 1, migrate_prefix_from: None }
+        );
+        // exact tie: lowest id (deterministic)
+        let views = vec![view(0, 3, 10, false), view(1, 3, 10, false)];
+        assert_eq!(
+            r.route(&req(None), &views),
+            RouteDecision::Assign { node: 0, migrate_prefix_from: None }
+        );
+    }
+
+    #[test]
+    fn affinity_prefers_holder_until_spill_threshold() {
+        let mut r = Router::new(RouterPolicy::PrefixAffinity, 4, usize::MAX);
+        // holder busy but under the spill threshold: stay for the prefix
+        let views = vec![view(0, 3, 10, true), view(1, 0, 10, false)];
+        assert_eq!(
+            r.route(&req(Some(7)), &views),
+            RouteDecision::Assign { node: 0, migrate_prefix_from: None }
+        );
+        // holder at the threshold: spill to least-loaded, migrate the KV
+        let views = vec![view(0, 4, 10, true), view(1, 0, 10, false)];
+        assert_eq!(
+            r.route(&req(Some(7)), &views),
+            RouteDecision::Assign { node: 1, migrate_prefix_from: Some(0) }
+        );
+        // no prefix on the request: plain least-loaded
+        let views = vec![view(0, 4, 10, true), view(1, 0, 10, false)];
+        assert_eq!(
+            r.route(&req(None), &views),
+            RouteDecision::Assign { node: 1, migrate_prefix_from: None }
+        );
+    }
+
+    #[test]
+    fn shed_when_every_node_saturated() {
+        for policy in
+            [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::PrefixAffinity]
+        {
+            let mut r = Router::new(policy, 4, 8);
+            let views = vec![view(0, 8, 10, true), view(1, 9, 10, false)];
+            assert_eq!(r.route(&req(Some(1)), &views), RouteDecision::Shed, "{policy:?}");
+            // one node below the bound: served again
+            let views = vec![view(0, 8, 10, true), view(1, 7, 10, false)];
+            assert!(matches!(r.route(&req(Some(1)), &views), RouteDecision::Assign { .. }));
+        }
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in
+            [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::PrefixAffinity]
+        {
+            assert_eq!(RouterPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(RouterPolicy::parse("random").is_err());
+    }
+}

@@ -15,9 +15,10 @@
 //! the configurations used by the examples and benches, and every preset
 //! round-trips through the parser (tested below).
 
+use crate::cluster::{ClusterSpec, RouterPolicy, SchedulerSpec};
 use crate::harvest::{HarvestConfig, MigConfig, VictimPolicy};
 use crate::kv::KvConfig;
-use crate::memsim::{FabricKind, GpuSpec, NodeSpec};
+use crate::memsim::{FabricKind, GpuSpec, NodeFabricKind, NodeSpec};
 use crate::moe::{find_kv_model, find_moe_model};
 use crate::server::WorkloadSpec;
 use anyhow::{anyhow, bail, Context, Result};
@@ -305,6 +306,18 @@ pub struct DeploymentConfig {
     pub n_gpus: usize,
     pub hbm_gib: u64,
     pub fabric: FabricKind,
+    /// CXL memory-expander capacity per node (0 = tier absent).
+    pub cxl_gib: u64,
+    /// Cluster shape: how many nodes serve behind the router (1 = the
+    /// single-node stack, no router in the path).
+    pub nodes: usize,
+    pub router_policy: RouterPolicy,
+    /// Inter-node link class (`cluster.fabric`).
+    pub node_fabric: NodeFabricKind,
+    /// Affinity spill threshold (queue depth on the prefix holder).
+    pub spill_queue_depth: usize,
+    /// Shed threshold per node (0 = never shed).
+    pub shed_queue_depth: usize,
     /// Harvest controller.
     pub harvest_enabled: bool,
     pub victim_policy: VictimPolicy,
@@ -328,6 +341,10 @@ pub struct DeploymentConfig {
     pub n_requests: usize,
     pub mean_prompt_tokens: f64,
     pub shared_prefix_fraction: f64,
+    /// Mean request inter-arrival gap in microseconds (0 = burst).
+    pub mean_interarrival_us: u64,
+    /// Distinct shared prefixes (sessions) in the workload.
+    pub prefix_groups: usize,
     pub seed: u64,
 }
 
@@ -339,6 +356,12 @@ impl Default for DeploymentConfig {
             n_gpus: 2,
             hbm_gib: 80,
             fabric: FabricKind::FullMesh,
+            cxl_gib: 0,
+            nodes: 1,
+            router_policy: RouterPolicy::LeastLoaded,
+            node_fabric: NodeFabricKind::Rdma,
+            spill_queue_depth: 16,
+            shed_queue_depth: 0,
             harvest_enabled: true,
             victim_policy: VictimPolicy::Lifo,
             reserve_gib: 0,
@@ -358,6 +381,8 @@ impl Default for DeploymentConfig {
             n_requests: 64,
             mean_prompt_tokens: 180.0,
             shared_prefix_fraction: 0.0,
+            mean_interarrival_us: 0,
+            prefix_groups: 1,
             seed: 0,
         }
     }
@@ -391,6 +416,12 @@ impl DeploymentConfig {
             "node.gpus",
             "node.hbm_gib",
             "node.fabric",
+            "node.cxl_gib",
+            "cluster.nodes",
+            "cluster.router_policy",
+            "cluster.fabric",
+            "cluster.spill_queue_depth",
+            "cluster.shed_queue_depth",
             "harvest.enabled",
             "harvest.victim_policy",
             "harvest.reserve_gib",
@@ -410,6 +441,8 @@ impl DeploymentConfig {
             "requests.n",
             "requests.mean_prompt_tokens",
             "requests.shared_prefix_fraction",
+            "requests.mean_interarrival_us",
+            "requests.prefix_groups",
             "requests.seed",
         ];
         for key in doc.keys() {
@@ -424,6 +457,16 @@ impl DeploymentConfig {
             n_gpus: doc.usize_or("node.gpus", d.n_gpus)?,
             hbm_gib: doc.u64_or("node.hbm_gib", d.hbm_gib)?,
             fabric: fabric_from_str(&doc.str_or("node.fabric", fabric_name(d.fabric)))?,
+            cxl_gib: doc.u64_or("node.cxl_gib", d.cxl_gib)?,
+            nodes: doc.usize_or("cluster.nodes", d.nodes)?,
+            router_policy: RouterPolicy::parse(
+                &doc.str_or("cluster.router_policy", d.router_policy.name()),
+            )?,
+            node_fabric: NodeFabricKind::parse(
+                &doc.str_or("cluster.fabric", d.node_fabric.name()),
+            )?,
+            spill_queue_depth: doc.usize_or("cluster.spill_queue_depth", d.spill_queue_depth)?,
+            shed_queue_depth: doc.usize_or("cluster.shed_queue_depth", d.shed_queue_depth)?,
             harvest_enabled: doc.bool_or("harvest.enabled", d.harvest_enabled)?,
             victim_policy: VictimPolicy::parse(
                 &doc.str_or("harvest.victim_policy", d.victim_policy.name()),
@@ -450,6 +493,9 @@ impl DeploymentConfig {
             mean_prompt_tokens: doc.f64_or("requests.mean_prompt_tokens", d.mean_prompt_tokens)?,
             shared_prefix_fraction: doc
                 .f64_or("requests.shared_prefix_fraction", d.shared_prefix_fraction)?,
+            mean_interarrival_us: doc
+                .u64_or("requests.mean_interarrival_us", d.mean_interarrival_us)?,
+            prefix_groups: doc.usize_or("requests.prefix_groups", d.prefix_groups)?,
             seed: doc.u64_or("requests.seed", d.seed)?,
         };
         cfg.validate()?;
@@ -483,11 +529,16 @@ impl DeploymentConfig {
         if self.workload == WorkloadKind::KvOffload && find_kv_model(&self.kv_model).is_none() {
             bail!("unknown KV model `{}` (see §5.3 registry)", self.kv_model);
         }
-        if !matches!(self.scheduler.as_str(), "fcfs" | "cf" | "completely-fair") {
-            bail!("unknown scheduler `{}` (fcfs | cf)", self.scheduler);
-        }
+        // One source of truth for scheduler spellings.
+        SchedulerSpec::parse(&self.scheduler, self.quantum)?;
         if self.decode_slots == 0 || self.max_running == 0 {
             bail!("server.decode_slots and server.max_running must be > 0");
+        }
+        if self.nodes == 0 {
+            bail!("cluster.nodes must be >= 1");
+        }
+        if self.prefix_groups == 0 {
+            bail!("requests.prefix_groups must be >= 1");
         }
         Ok(())
     }
@@ -501,7 +552,17 @@ impl DeploymentConfig {
         s.push_str("[node]\n");
         s.push_str(&format!("gpus = {}\n", self.n_gpus));
         s.push_str(&format!("hbm_gib = {}\n", self.hbm_gib));
-        s.push_str(&format!("fabric = \"{}\"\n\n", fabric_name(self.fabric)));
+        s.push_str(&format!("fabric = \"{}\"\n", fabric_name(self.fabric)));
+        if self.cxl_gib > 0 {
+            s.push_str(&format!("cxl_gib = {}\n", self.cxl_gib));
+        }
+        s.push('\n');
+        s.push_str("[cluster]\n");
+        s.push_str(&format!("nodes = {}\n", self.nodes));
+        s.push_str(&format!("router_policy = \"{}\"\n", self.router_policy.name()));
+        s.push_str(&format!("fabric = \"{}\"\n", self.node_fabric.name()));
+        s.push_str(&format!("spill_queue_depth = {}\n", self.spill_queue_depth));
+        s.push_str(&format!("shed_queue_depth = {}\n\n", self.shed_queue_depth));
         s.push_str("[harvest]\n");
         s.push_str(&format!("enabled = {}\n", self.harvest_enabled));
         s.push_str(&format!("victim_policy = \"{}\"\n", self.victim_policy.name()));
@@ -529,6 +590,8 @@ impl DeploymentConfig {
         s.push_str(&format!("n = {}\n", self.n_requests));
         s.push_str(&format!("mean_prompt_tokens = {:?}\n", self.mean_prompt_tokens));
         s.push_str(&format!("shared_prefix_fraction = {:?}\n", self.shared_prefix_fraction));
+        s.push_str(&format!("mean_interarrival_us = {}\n", self.mean_interarrival_us));
+        s.push_str(&format!("prefix_groups = {}\n", self.prefix_groups));
         s.push_str(&format!("seed = {}\n", self.seed));
         s
     }
@@ -541,7 +604,33 @@ impl DeploymentConfig {
         for g in &mut spec.gpus {
             *g = GpuSpec { hbm_bytes: self.hbm_gib * GIB, ..GpuSpec::default() };
         }
+        if self.cxl_gib > 0 {
+            spec = spec.with_cxl(self.cxl_gib * GIB);
+        }
         spec
+    }
+
+    /// Cluster shape for the multi-node serving path (meaningful for any
+    /// `nodes >= 1`; the single-node stack is a 1-node cluster).
+    pub fn cluster_spec(&self) -> ClusterSpec {
+        ClusterSpec {
+            nodes: self.nodes,
+            node: self.node_spec(),
+            harvest: self.harvest_config(),
+            fabric: self.node_fabric,
+            router: self.router_policy,
+            spill_queue_depth: self.spill_queue_depth,
+            shed_queue_depth: if self.shed_queue_depth == 0 {
+                usize::MAX
+            } else {
+                self.shed_queue_depth
+            },
+        }
+    }
+
+    /// The per-node decode scheduler.
+    pub fn scheduler_spec(&self) -> Result<SchedulerSpec> {
+        SchedulerSpec::parse(&self.scheduler, self.quantum)
     }
 
     pub fn harvest_config(&self) -> HarvestConfig {
@@ -577,6 +666,8 @@ impl DeploymentConfig {
             max_new_tokens: self.max_new_tokens,
             shared_prefix_fraction: self.shared_prefix_fraction,
             shared_prefix_tokens: if self.shared_prefix_fraction > 0.0 { 64 } else { 0 },
+            mean_interarrival_ns: self.mean_interarrival_us * 1_000,
+            n_prefix_groups: self.prefix_groups,
             seed: self.seed,
             ..WorkloadSpec::default()
         }
@@ -619,6 +710,29 @@ pub fn presets() -> Vec<DeploymentConfig> {
             n_gpus: 8,
             fabric: FabricKind::NvSwitch,
             moe_model: "Phi-3.5-MoE".into(),
+            ..base.clone()
+        },
+        // §8 "potentially CXL-attached memory": a 256 GiB expander makes
+        // CxlMem an allocatable tier between peer HBM and host DRAM; a
+        // tight local pool forces the tier policy to actually use it.
+        DeploymentConfig {
+            name: "cxl-expander".into(),
+            workload: WorkloadKind::KvOffload,
+            cxl_gib: 256,
+            local_capacity_blocks: 512,
+            ..base.clone()
+        },
+        // Scale-out serving: 4 nodes behind prefix-affinity routing on a
+        // shared-prefix session workload, RDMA node fabric.
+        DeploymentConfig {
+            name: "cluster-4".into(),
+            workload: WorkloadKind::KvOffload,
+            nodes: 4,
+            router_policy: RouterPolicy::PrefixAffinity,
+            n_requests: 128,
+            shared_prefix_fraction: 0.75,
+            mean_interarrival_us: 1_500,
+            prefix_groups: 8,
             ..base.clone()
         },
         // End-to-end real-compute serve on the AOT tiny model.
@@ -754,6 +868,12 @@ mod tests {
             assert_eq!(back.offload_fraction, p.offload_fraction);
             assert_eq!(back.scheduler, p.scheduler);
             assert_eq!(back.mig_cache_gib, p.mig_cache_gib);
+            assert_eq!(back.cxl_gib, p.cxl_gib);
+            assert_eq!(back.nodes, p.nodes);
+            assert_eq!(back.router_policy, p.router_policy);
+            assert_eq!(back.node_fabric, p.node_fabric);
+            assert_eq!(back.prefix_groups, p.prefix_groups);
+            assert_eq!(back.mean_interarrival_us, p.mean_interarrival_us);
         }
     }
 
@@ -787,6 +907,54 @@ mod tests {
         assert_eq!(back.fabric, FabricKind::Ring);
         assert!(DeploymentConfig::from_toml("[node]\nfabric = \"torus\"").is_err());
         assert_eq!(find_preset("nvswitch-8").unwrap().fabric, FabricKind::NvSwitch);
+    }
+
+    #[test]
+    fn cluster_keys_parse_and_materialize() {
+        let cfg = DeploymentConfig::from_toml(
+            "[cluster]\nnodes = 4\nrouter_policy = \"affinity\"\nfabric = \"ethernet\"\n\
+             shed_queue_depth = 32\n[node]\ncxl_gib = 128",
+        )
+        .unwrap();
+        assert_eq!(cfg.nodes, 4);
+        assert_eq!(cfg.router_policy, RouterPolicy::PrefixAffinity);
+        assert_eq!(cfg.node_fabric, NodeFabricKind::Ethernet);
+        let spec = cfg.cluster_spec();
+        assert_eq!(spec.nodes, 4);
+        assert_eq!(spec.router, RouterPolicy::PrefixAffinity);
+        assert_eq!(spec.fabric, NodeFabricKind::Ethernet);
+        assert_eq!(spec.shed_queue_depth, 32);
+        assert_eq!(spec.node.cxl_bytes, 128 * GIB);
+        // shed 0 means "never shed"
+        let cfg = DeploymentConfig::from_toml("").unwrap();
+        assert_eq!(cfg.cluster_spec().shed_queue_depth, usize::MAX);
+        // rejections
+        assert!(DeploymentConfig::from_toml("[cluster]\nnodes = 0").is_err());
+        assert!(DeploymentConfig::from_toml("[cluster]\nrouter_policy = \"x\"").is_err());
+        assert!(DeploymentConfig::from_toml("[cluster]\nfabric = \"infiniband9\"").is_err());
+    }
+
+    #[test]
+    fn cxl_expander_preset_attaches_tier() {
+        let p = find_preset("cxl-expander").unwrap();
+        assert_eq!(p.cxl_gib, 256);
+        let spec = p.node_spec();
+        assert_eq!(spec.cxl_bytes, 256 * GIB);
+        assert!(crate::memsim::SimNode::new(spec).has_cxl());
+    }
+
+    #[test]
+    fn cluster_preset_materializes_multi_node_spec() {
+        let p = find_preset("cluster-4").unwrap();
+        assert_eq!(p.nodes, 4);
+        let spec = p.cluster_spec();
+        assert_eq!(spec.nodes, 4);
+        assert_eq!(spec.router, RouterPolicy::PrefixAffinity);
+        let w = p.workload_spec();
+        assert_eq!(w.n_prefix_groups, 8);
+        assert_eq!(w.mean_interarrival_ns, 1_500_000);
+        assert!(w.shared_prefix_tokens > 0);
+        assert!(matches!(p.scheduler_spec().unwrap(), SchedulerSpec::Fcfs));
     }
 
     #[test]

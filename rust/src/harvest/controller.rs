@@ -745,14 +745,18 @@ impl HarvestRuntime {
         to: MemoryTier,
     ) -> Result<crate::memsim::AllocId, HarvestError> {
         let entry = self.live.get(&id).ok_or(HarvestError::StaleLease(id))?;
-        let from = entry.handle.tier;
-        // The destination must be migratable at all (never local HBM)
-        // and share a link with the source — host↔CXL have no direct
-        // path (traffic would have to stage through a GPU), so that
-        // pair fails cleanly here instead of panicking at copy time.
-        if matches!(to, MemoryTier::LocalHbm)
-            || self.node.topo.link_model(from.device(), to.device()).is_none()
-        {
+        // The destination must be migratable at all: never local HBM,
+        // never a tier whose arena is absent (CXL on a node without an
+        // expander), never a peer the node doesn't have. Link-less
+        // pairs (host↔CXL) are fine — commit stages them through the
+        // least-loaded GPU-adjacent link.
+        let absent = match to {
+            MemoryTier::LocalHbm => true,
+            MemoryTier::CxlMem => !self.node.has_cxl(),
+            MemoryTier::PeerHbm(g) => g >= self.node.n_gpus(),
+            MemoryTier::Host => false,
+        };
+        if absent {
             return Err(HarvestError::TierUnavailable { tier: to });
         }
         let size = entry.handle.size;
@@ -773,9 +777,11 @@ impl HarvestRuntime {
     /// drain-before-free barrier intact: any later free/revocation of
     /// the lease drains the migration first. A lease already resident on
     /// `to` (e.g. a duplicate migrate in one batch) releases the
-    /// reservation and moves nothing. Tiers must share a link
-    /// (peer↔host, peer↔CXL, host↔peer); there is no direct host↔CXL
-    /// path.
+    /// reservation and moves nothing. Tier pairs with a direct link
+    /// (peer↔host, peer↔CXL) copy straight across; the link-less
+    /// host↔CXL pair is staged through the GPU whose adjacent links are
+    /// least loaded (two hops, both lease-tagged, the second starting
+    /// when the first delivers).
     pub(crate) fn commit_migration(
         &mut self,
         id: LeaseId,
@@ -786,12 +792,10 @@ impl HarvestRuntime {
     ) -> CopyEvent {
         let old = self.live.get(&id).expect("prepared migration names a live lease").handle;
         // An earlier migrate in the same batch may have moved the lease
-        // already: a now-redundant hop (same tier) or a now-linkless
-        // pair (e.g. host↔CXL) releases its reservation and moves
-        // nothing rather than copying from a stale placement.
-        if to == old.tier
-            || self.node.topo.link_model(old.tier.device(), to.device()).is_none()
-        {
+        // already: a now-redundant hop (same tier) releases its
+        // reservation and moves nothing rather than copying from a
+        // stale placement.
+        if to == old.tier {
             self.arena_mut(to).free(dst_alloc);
             let now = self.node.clock.now();
             return CopyEvent {
@@ -802,15 +806,30 @@ impl HarvestRuntime {
                 dst: to.device(),
             };
         }
-        let ev = match chunk {
-            Some(c) if old.size > c => self.node.copy_scattered(
-                old.tier.device(),
-                to.device(),
-                old.size,
-                old.size.div_ceil(c),
-                Some(id.0),
-            ),
-            _ => self.node.copy(old.tier.device(), to.device(), old.size, Some(id.0)),
+        let (src_dev, dst_dev) = (old.tier.device(), to.device());
+        let ev = if self.node.topo.link_model(src_dev, dst_dev).is_some() {
+            match chunk {
+                Some(c) if old.size > c => self.node.copy_scattered(
+                    src_dev,
+                    dst_dev,
+                    old.size,
+                    old.size.div_ceil(c),
+                    Some(id.0),
+                ),
+                _ => self.node.copy(src_dev, dst_dev, old.size, Some(id.0)),
+            }
+        } else {
+            // Link-less pair (host↔CXL): stage through the GPU whose
+            // pair of adjacent links is least loaded right now. The hops
+            // are contiguous — a bounce buffer, not scattered paged
+            // descriptors — and both carry the lease tag.
+            let via = (0..self.node.n_gpus())
+                .min_by_key(|&g| {
+                    self.node.topo.busy_until(src_dev, DeviceId::Gpu(g))
+                        + self.node.topo.busy_until(DeviceId::Gpu(g), dst_dev)
+                })
+                .expect("node has at least one GPU");
+            self.node.copy_via(src_dev, via, dst_dev, old.size, Some(id.0))
         };
         // The source segment is released at issue time. The lease tag
         // still covers the in-flight read (a later free/revocation of
@@ -1320,6 +1339,47 @@ mod tests {
         assert_eq!(h.live_bytes_on_tier(MemoryTier::Host), 0);
         drop(backed);
         h.sweep_leaked();
+    }
+
+    #[test]
+    fn host_cxl_migration_stages_through_least_loaded_gpu() {
+        let mut h = HarvestRuntime::new(
+            SimNode::new(NodeSpec::h100x2().with_cxl(64 * GIB)),
+            HarvestConfig::for_node(2),
+        );
+        let s = h.open_session(PayloadKind::KvBlock);
+        let lease =
+            s.alloc(&mut h, 8 * MIB, TierPreference::Pinned(MemoryTier::Host), hints(0)).unwrap();
+        // Load gpu0's host-adjacent link so the least-loaded choice is gpu1.
+        Transfer::new()
+            .raw(DeviceId::Host, DeviceId::Gpu(0), 512 * MIB)
+            .submit(&mut h)
+            .unwrap();
+        let report =
+            Transfer::new().migrate(&lease, MemoryTier::CxlMem).submit(&mut h).unwrap();
+        // Both hops of the staged copy moved the bytes through gpu1.
+        assert_eq!(h.node.topo.bytes_moved(DeviceId::Host, DeviceId::Gpu(1)), 8 * MIB);
+        assert_eq!(h.node.topo.bytes_moved(DeviceId::Gpu(1), DeviceId::Cxl), 8 * MIB);
+        assert_eq!(h.node.topo.bytes_moved(DeviceId::Host, DeviceId::Gpu(0)), 512 * MIB);
+        // Accounting follows the bytes: host ledger empty, CXL holds them.
+        assert_eq!(lease.tier(), MemoryTier::CxlMem);
+        assert_eq!(h.live_bytes_on_tier(MemoryTier::Host), 0);
+        assert_eq!(h.live_bytes_on_tier(MemoryTier::CxlMem), 8 * MIB);
+        assert_eq!(h.node.host.used(), 0);
+        assert_eq!(h.node.cxl.used(), 8 * MIB);
+        assert_eq!(h.migrations, 1);
+        // The drain barrier covers both hops: releasing waits out hop 2.
+        assert!(report.end > h.node.clock.now(), "staged migration is async");
+        s.release(&mut h, lease).unwrap();
+        assert!(h.node.clock.now() >= report.end);
+        assert_eq!(h.live_bytes_on_tier(MemoryTier::CxlMem), 0);
+        // And the reverse direction (CXL -> host) stages too.
+        let lease =
+            s.alloc(&mut h, MIB, TierPreference::Pinned(MemoryTier::CxlMem), hints(0)).unwrap();
+        Transfer::new().migrate(&lease, MemoryTier::Host).submit(&mut h).unwrap();
+        assert_eq!(lease.tier(), MemoryTier::Host);
+        assert_eq!(h.live_bytes_on_tier(MemoryTier::Host), MIB);
+        s.release(&mut h, lease).unwrap();
     }
 
     // The shim surface (the paper's §3.2 C-style API) is deliberately

@@ -422,9 +422,10 @@ impl Transfer {
     /// the source segment, and update the lease's resident tier in
     /// place. Demotion (peer→host under pressure) and promotion
     /// (host→peer when capacity opens) are the two canonical uses; a
-    /// same-tier migrate is a no-op. The destination must share a link
-    /// with the source tier (peer↔host, peer↔CXL — no direct host↔CXL
-    /// path).
+    /// same-tier migrate is a no-op. Tier pairs with a direct link
+    /// (peer↔host, peer↔CXL) copy straight across; host↔CXL has no
+    /// direct link and is staged through the least-loaded GPU-adjacent
+    /// link pair (two tagged hops).
     pub fn migrate(mut self, lease: &Lease, to: MemoryTier) -> Self {
         self.ops.push(TransferOp::Migrate { lease: lease.id(), to });
         self
@@ -797,13 +798,24 @@ mod tests {
         assert!(matches!(err, HarvestError::NoCapacity { .. }));
         assert_eq!(big.tier(), MemoryTier::PeerHbm(1), "failed migrate changes nothing");
         assert_eq!(hr.live_bytes_on(1), 64 * GIB);
-        // host<->CXL share no link: the pair fails cleanly, not at copy time
+        // a tier whose arena is absent fails cleanly, not at copy time
         let host =
             s.alloc(&mut hr, MIB, TierPreference::Pinned(MemoryTier::Host), hints()).unwrap();
+        let mut plain = rt(); // no CXL expander attached
+        let s2 = HarvestSession::open(&mut plain, PayloadKind::Generic);
+        let host2 =
+            s2.alloc(&mut plain, MIB, TierPreference::Pinned(MemoryTier::Host), hints()).unwrap();
         let err =
-            Transfer::new().migrate(&host, MemoryTier::CxlMem).submit(&mut hr).unwrap_err();
+            Transfer::new().migrate(&host2, MemoryTier::CxlMem).submit(&mut plain).unwrap_err();
         assert_eq!(err, HarvestError::TierUnavailable { tier: MemoryTier::CxlMem });
-        assert_eq!(host.tier(), MemoryTier::Host);
+        assert_eq!(host2.tier(), MemoryTier::Host);
+        s2.release(&mut plain, host2).unwrap();
+        // host<->CXL share no direct link but the migration stages the
+        // copy through a GPU instead of erroring
+        let report = Transfer::new().migrate(&host, MemoryTier::CxlMem).submit(&mut hr).unwrap();
+        assert_eq!(host.tier(), MemoryTier::CxlMem);
+        assert_eq!(report.events[0].src, DeviceId::Host);
+        assert_eq!(report.events[0].dst, DeviceId::Cxl);
         s.release(&mut hr, host).unwrap();
         s.release(&mut hr, big).unwrap();
         s.release(&mut hr, filler).unwrap();

@@ -15,7 +15,8 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`memsim`] | calibrated multi-GPU node simulation: HBM/host/CXL arenas, NVLink/PCIe/CXL interconnect model, virtual clock, async DMA, tenant pressure |
+//! | [`memsim`] | calibrated multi-GPU node simulation: HBM/host/CXL arenas, NVLink/PCIe/CXL interconnect model, inter-node NIC fabric, virtual clock, async DMA, tenant pressure |
+//! | [`cluster`] | scale-out serving: N simulated nodes behind a pluggable request router (round-robin / least-loaded / prefix-affinity), RDMA/Ethernet node fabric, cross-node prefix-KV migration, per-node + aggregate metrics rollups |
 //! | [`harvest`] | the paper's contribution behind a tier-aware lease API: `MemoryTier` + `TierPreference` on every allocation, sessions with RAII `Lease`s that carry their resident tier, vectored all-or-nothing `alloc_many`, pull-model revocation events with `Dropped`/`Demoted` actions, the unified `Transfer` builder (populate/fetch/migrate), cross-tier placement policies (`place_tiered`), deadline-aware prefetch planning (`prefetch`), MIG isolation (the paper's raw `harvest_alloc`/`harvest_free`/`harvest_register_cb` survive as deprecated shims) |
 //! | [`moe`] | MoE serving path: Table-1 model registry, routing simulator, expert residency map + rebalancer, CGOPipe-style pipeline |
 //! | [`kv`] | paged KV cache: blocks, unified block table, `KvOffloadManager`, per-device `OffloadingHandler`, eviction policies |
@@ -28,6 +29,7 @@
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
 //! request path is pure Rust via the `xla` crate's PJRT CPU client.
 
+pub mod cluster;
 pub mod config;
 pub mod harvest;
 pub mod kv;

@@ -23,9 +23,7 @@ use harvest::moe::config::{KV_MODELS, MOE_MODELS};
 use harvest::moe::pipeline::OffloadTier;
 use harvest::moe::{CgoPipe, ExpertRebalancer, RouterSim};
 use harvest::runtime::ModelRuntime;
-use harvest::server::{
-    CompletelyFair, Fcfs, RealEngine, Scheduler, SimEngine, SimEngineConfig, WorkloadGen,
-};
+use harvest::server::{RealEngine, SimEngine, SimEngineConfig, WorkloadGen};
 use harvest::trace::{ClusterTrace, TraceSpec};
 use harvest::util::{fmt_bytes, fmt_ns};
 use std::path::Path;
@@ -187,6 +185,14 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let cfg = load_config(args)?;
     println!("deployment `{}` ({} workload)", cfg.name, cfg.workload.name());
     println!("  node: {} GPUs x {} GiB HBM", cfg.n_gpus, cfg.hbm_gib);
+    if cfg.nodes > 1 {
+        println!(
+            "  cluster: {} nodes, {} routing, {} fabric",
+            cfg.nodes,
+            cfg.router_policy.name(),
+            cfg.node_fabric.name()
+        );
+    }
     println!(
         "  harvest: {} (victim={:?}, reserve={} GiB, mig={:?})",
         if cfg.harvest_enabled { "on" } else { "off" },
@@ -251,12 +257,12 @@ fn serve_moe(cfg: &DeploymentConfig) -> Result<()> {
 }
 
 fn serve_kv(cfg: &DeploymentConfig) -> Result<()> {
+    if cfg.nodes > 1 {
+        return serve_kv_cluster(cfg);
+    }
     let mut hr = HarvestRuntime::new(SimNode::new(cfg.node_spec()), cfg.harvest_config());
     let kv = cfg.kv_config()?;
-    let scheduler: Box<dyn Scheduler> = match cfg.scheduler.as_str() {
-        "cf" | "completely-fair" => Box::new(CompletelyFair::new(cfg.quantum)),
-        _ => Box::new(Fcfs::new()),
-    };
+    let scheduler = cfg.scheduler_spec()?.build();
     let engine_cfg = SimEngineConfig::new(kv, cfg.decode_slots, cfg.max_running);
     let mut engine = SimEngine::new(engine_cfg, scheduler, 0);
     let requests = WorkloadGen::new(cfg.workload_spec()).generate();
@@ -286,6 +292,50 @@ fn serve_kv(cfg: &DeploymentConfig) -> Result<()> {
         s.host_reloads,
         s.recomputes
     );
+    Ok(())
+}
+
+fn serve_kv_cluster(cfg: &DeploymentConfig) -> Result<()> {
+    use harvest::cluster::Cluster;
+    let kv = cfg.kv_config()?;
+    println!(
+        "  kv model {}: {} per token, block = {} tokens, pool = {} blocks/node",
+        kv.model.name,
+        fmt_bytes(kv.model.kv_bytes_per_token()),
+        kv.block_tokens,
+        kv.local_capacity_blocks
+    );
+    let engine = SimEngineConfig::new(kv, cfg.decode_slots, cfg.max_running);
+    let mut cluster = Cluster::new(&cfg.cluster_spec(), engine, cfg.scheduler_spec()?);
+    let requests = WorkloadGen::new(cfg.workload_spec()).generate();
+    let report = cluster.run(requests);
+    let m = &report.aggregate;
+    println!(
+        "  served {} requests / {} tokens in {} -> {:.0} tok/s aggregate ({} shed)",
+        m.requests_finished,
+        m.tokens_generated,
+        fmt_ns(m.makespan_ns()),
+        m.tokens_per_sec(),
+        report.stats.shed
+    );
+    println!(
+        "  routing: {} | prefix migrations {} ({} over the {} fabric)",
+        report.router_policy,
+        report.stats.prefix_migrations,
+        fmt_bytes(report.stats.migrated_bytes),
+        cluster.fabric().kind().name()
+    );
+    for n in &report.per_node {
+        println!(
+            "    node {}: {} served, {:.0} tok/s, {} prefix hits, {} kv reloads, p99 ttft {}",
+            n.node,
+            n.finished,
+            n.metrics.tokens_per_sec(),
+            n.prefix_hits,
+            n.kv_stats.reloads(),
+            fmt_ns(n.metrics.ttft.percentile(99.0) as u64)
+        );
+    }
     Ok(())
 }
 

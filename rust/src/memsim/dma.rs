@@ -65,10 +65,28 @@ impl DmaEngine {
         bytes: u64,
         tag: Option<u64>,
     ) -> Option<CopyEvent> {
+        self.copy_after(topo, stream, src, dst, bytes, tag, 0)
+    }
+
+    /// Like [`DmaEngine::copy`], but the op starts no earlier than
+    /// `earliest` (in addition to the clock and the stream's FIFO
+    /// order). This is how a dependent second hop of a staged transfer
+    /// (e.g. host→GPU→CXL, which has no direct link) waits for its first
+    /// hop without advancing virtual time.
+    pub fn copy_after(
+        &mut self,
+        topo: &mut Topology,
+        stream: StreamId,
+        src: DeviceId,
+        dst: DeviceId,
+        bytes: u64,
+        tag: Option<u64>,
+        earliest: Ns,
+    ) -> Option<CopyEvent> {
         let now = topo.clock().now();
         let sbusy = self.streams.get_mut(&stream)?;
-        let earliest = now.max(*sbusy);
-        let (start, end) = topo.schedule(src, dst, bytes, earliest)?;
+        let at = now.max(*sbusy).max(earliest);
+        let (start, end) = topo.schedule(src, dst, bytes, at)?;
         *sbusy = end;
         if let Some(t) = tag {
             let e = self.tags.entry(t).or_insert(0);
@@ -247,6 +265,27 @@ mod tests {
         dma.copy_scattered(&mut topo, s, DeviceId::Gpu(0), DeviceId::Host, 100, 7, None).unwrap();
         assert_eq!(topo.bytes_moved(DeviceId::Gpu(0), DeviceId::Host), 100);
         assert_eq!(topo.transfers(DeviceId::Gpu(0), DeviceId::Host), 7);
+    }
+
+    #[test]
+    fn copy_after_respects_dependency() {
+        let (mut topo, mut dma) = setup();
+        let s1 = dma.create_stream();
+        let s2 = dma.create_stream();
+        // hop 1: host -> gpu0; hop 2 (gpu0 -> gpu1) must not start before
+        // hop 1 delivered the bytes, even though the links are disjoint.
+        let hop1 =
+            dma.copy(&mut topo, s1, DeviceId::Host, DeviceId::Gpu(0), MIB, Some(3)).unwrap();
+        let hop2 = dma
+            .copy_after(&mut topo, s2, DeviceId::Gpu(0), DeviceId::Gpu(1), MIB, Some(3), hop1.end)
+            .unwrap();
+        assert_eq!(hop2.start, hop1.end);
+        assert_eq!(dma.tag_busy_until(3), hop2.end, "both hops share the tag");
+        // earliest in the past degenerates to a plain copy
+        let plain = dma
+            .copy_after(&mut topo, s1, DeviceId::Host, DeviceId::Gpu(0), MIB, None, 0)
+            .unwrap();
+        assert_eq!(plain.start, hop1.end, "link FIFO still applies");
     }
 
     #[test]

@@ -54,6 +54,8 @@ pub enum LinkKind {
     NvLink,
     /// GPU↔host link (PCIe 5.0 x16-class).
     Pcie,
+    /// Node↔node network link (RDMA / Ethernet NIC-class).
+    Nic,
 }
 
 /// Analytic latency/bandwidth model of one link direction.
@@ -101,6 +103,31 @@ impl LinkModel {
             kind: LinkKind::Pcie,
             base_latency_ns: 6_000,
             peak_bw_bytes_per_ns: 56.0,
+            half_sat_bytes: 1.0 * 1024.0 * 1024.0,
+        }
+    }
+
+    /// 400 Gb/s RDMA NIC (ConnectX/EFA-class): GPUDirect-style inter-node
+    /// path — ~45 GB/s effective after protocol overheads, ~15 µs setup
+    /// (QP posting + rendezvous). The fast inter-node fabric class used
+    /// by [`NodeFabric`].
+    pub fn rdma_nic() -> Self {
+        Self {
+            kind: LinkKind::Nic,
+            base_latency_ns: 15_000,
+            peak_bw_bytes_per_ns: 45.0,
+            half_sat_bytes: 2.0 * 1024.0 * 1024.0,
+        }
+    }
+
+    /// 100 Gb/s Ethernet NIC with a TCP-class stack: ~11 GB/s effective,
+    /// ~60 µs setup (kernel stack + copies). The cost-reduced inter-node
+    /// fabric class used by [`NodeFabric`].
+    pub fn ethernet_100g() -> Self {
+        Self {
+            kind: LinkKind::Nic,
+            base_latency_ns: 60_000,
+            peak_bw_bytes_per_ns: 11.0,
             half_sat_bytes: 1.0 * 1024.0 * 1024.0,
         }
     }
@@ -347,6 +374,133 @@ impl Topology {
     }
 }
 
+// ---------------------------------------------------------------------
+// Inter-node fabric
+// ---------------------------------------------------------------------
+
+/// Link technology class wiring the *nodes* of a cluster together
+/// (the intra-node story is [`FabricKind`]; this is the layer above it —
+/// see [`crate::cluster`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NodeFabricKind {
+    /// RDMA NICs (400 Gb/s-class, GPUDirect path) — the default for
+    /// GPU-cluster deployments.
+    #[default]
+    Rdma,
+    /// Commodity 100 Gb/s Ethernet with a TCP-class stack.
+    Ethernet,
+}
+
+impl NodeFabricKind {
+    /// Parse the config-file spelling.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "rdma" => Ok(NodeFabricKind::Rdma),
+            "ethernet" | "eth" => Ok(NodeFabricKind::Ethernet),
+            other => anyhow::bail!("unknown node fabric `{other}` (rdma | ethernet)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NodeFabricKind::Rdma => "rdma",
+            NodeFabricKind::Ethernet => "ethernet",
+        }
+    }
+
+    /// The link model for one direction of a node pair.
+    pub fn link_model(&self) -> LinkModel {
+        match self {
+            NodeFabricKind::Rdma => LinkModel::rdma_nic(),
+            NodeFabricKind::Ethernet => LinkModel::ethernet_100g(),
+        }
+    }
+}
+
+/// The inter-node network: one directed [`Link`]-modelled NIC path per
+/// node pair, FIFO contention per direction, same analytic
+/// latency/bandwidth model as the intra-node links.
+///
+/// Unlike [`Topology`] this carries no clock — each node of a cluster
+/// advances its own virtual clock, so callers pass the earliest start
+/// explicitly and sequence completions themselves (see
+/// [`crate::cluster::Cluster`]).
+#[derive(Debug, Clone)]
+pub struct NodeFabric {
+    links: BTreeMap<(usize, usize), Link>,
+    kind: NodeFabricKind,
+}
+
+impl NodeFabric {
+    /// Full-mesh NIC wiring between `n_nodes` nodes.
+    pub fn new(n_nodes: usize, kind: NodeFabricKind) -> Self {
+        let model = kind.link_model();
+        let mut links = BTreeMap::new();
+        for i in 0..n_nodes {
+            for j in 0..n_nodes {
+                if i != j {
+                    links.insert(
+                        (i, j),
+                        Link { model, busy_until: 0, bytes_moved: 0, transfers: 0 },
+                    );
+                }
+            }
+        }
+        Self { links, kind }
+    }
+
+    pub fn kind(&self) -> NodeFabricKind {
+        self.kind
+    }
+
+    /// Unloaded latency of a `bytes`-sized transfer between two nodes.
+    pub fn estimate(&self, src: usize, dst: usize, bytes: u64) -> Option<Ns> {
+        self.links.get(&(src, dst)).map(|l| l.model.latency(bytes))
+    }
+
+    /// Schedule a transfer at earliest `earliest`; returns (start, end).
+    /// Each direction of a node pair serializes FIFO; distinct pairs are
+    /// independent NIC queues.
+    pub fn schedule(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bytes: u64,
+        earliest: Ns,
+    ) -> Option<(Ns, Ns)> {
+        let link = self.links.get_mut(&(src, dst))?;
+        let start = earliest.max(link.busy_until);
+        let end = start + link.model.latency(bytes);
+        link.busy_until = end;
+        link.bytes_moved += bytes;
+        link.transfers += 1;
+        Some((start, end))
+    }
+
+    /// When the (src,dst) direction becomes idle.
+    pub fn busy_until(&self, src: usize, dst: usize) -> Ns {
+        self.links.get(&(src, dst)).map(|l| l.busy_until).unwrap_or(0)
+    }
+
+    pub fn bytes_moved(&self, src: usize, dst: usize) -> u64 {
+        self.links.get(&(src, dst)).map(|l| l.bytes_moved).unwrap_or(0)
+    }
+
+    pub fn transfers(&self, src: usize, dst: usize) -> u64 {
+        self.links.get(&(src, dst)).map(|l| l.transfers).unwrap_or(0)
+    }
+
+    /// Total bytes moved over the whole fabric (all directions).
+    pub fn total_bytes_moved(&self) -> u64 {
+        self.links.values().map(|l| l.bytes_moved).sum()
+    }
+
+    /// Total transfers over the whole fabric.
+    pub fn total_transfers(&self) -> u64 {
+        self.links.values().map(|l| l.transfers).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -563,6 +717,53 @@ mod tests {
         let (s, e) = t.schedule(DeviceId::Cxl, DeviceId::Gpu(0), MIB, 0).unwrap();
         assert_eq!(s, 0);
         assert_eq!(e, cxl);
+    }
+
+    #[test]
+    fn node_fabric_orders_between_nvlink_and_pcie_setup() {
+        // An RDMA hop is slower than NVLink for expert-sized payloads but
+        // competitive with (and for large payloads similar to) PCIe host
+        // paging; Ethernet is strictly the slowest class.
+        let nv = LinkModel::nvlink_h100();
+        let rdma = LinkModel::rdma_nic();
+        let eth = LinkModel::ethernet_100g();
+        for bytes in [MIB, 64 * MIB, 352 * MIB] {
+            assert!(nv.latency(bytes) < rdma.latency(bytes));
+            assert!(rdma.latency(bytes) < eth.latency(bytes));
+        }
+    }
+
+    #[test]
+    fn node_fabric_schedules_fifo_per_direction() {
+        let mut f = NodeFabric::new(3, NodeFabricKind::Rdma);
+        let (s1, e1) = f.schedule(0, 1, MIB, 0).unwrap();
+        let (s2, e2) = f.schedule(0, 1, MIB, 0).unwrap();
+        assert_eq!(s1, 0);
+        assert_eq!(s2, e1, "same direction serializes");
+        // reverse direction and distinct pairs are independent
+        let (s3, _) = f.schedule(1, 0, MIB, 0).unwrap();
+        let (s4, _) = f.schedule(0, 2, MIB, 0).unwrap();
+        assert_eq!(s3, 0);
+        assert_eq!(s4, 0);
+        assert_eq!(f.busy_until(0, 1), e2);
+        assert_eq!(f.bytes_moved(0, 1), 2 * MIB);
+        assert_eq!(f.transfers(0, 1), 2);
+        assert_eq!(f.total_bytes_moved(), 4 * MIB);
+        assert_eq!(f.total_transfers(), 4);
+        // no self link
+        assert!(f.schedule(1, 1, MIB, 0).is_none());
+        assert!(f.estimate(1, 1, MIB).is_none());
+    }
+
+    #[test]
+    fn node_fabric_kind_parse_roundtrip() {
+        for k in [NodeFabricKind::Rdma, NodeFabricKind::Ethernet] {
+            assert_eq!(NodeFabricKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(NodeFabricKind::parse("carrier-pigeon").is_err());
+        let rdma = NodeFabric::new(2, NodeFabricKind::Rdma);
+        let eth = NodeFabric::new(2, NodeFabricKind::Ethernet);
+        assert!(rdma.estimate(0, 1, MIB).unwrap() < eth.estimate(0, 1, MIB).unwrap());
     }
 
     #[test]

@@ -30,6 +30,8 @@ pub use clock::{Clock, Ns};
 pub use collective::{CollectivePattern, CollectiveTraffic};
 pub use dma::{CopyEvent, DmaEngine, StreamId};
 pub use hbm::{AllocError, AllocId, FitStrategy, Hbm};
-pub use interconnect::{DeviceId, FabricKind, LinkKind, LinkModel, Topology};
+pub use interconnect::{
+    DeviceId, FabricKind, LinkKind, LinkModel, NodeFabric, NodeFabricKind, Topology,
+};
 pub use node::{GpuSpec, NodeSpec, SimNode};
 pub use tenant::{TenantLoad, UtilizationModel};

@@ -208,6 +208,31 @@ impl SimNode {
             .expect("copy on wired node cannot fail")
     }
 
+    /// Async two-hop copy staged through GPU `via`: `src → via → dst`,
+    /// for endpoint pairs with no direct link (host↔CXL). The second hop
+    /// starts when the first delivers (no virtual-time advance); both
+    /// hops carry `tag`, so drain-by-tag covers the whole staged move.
+    /// Returns a combined event spanning hop 1's start to hop 2's end.
+    pub fn copy_via(
+        &mut self,
+        src: DeviceId,
+        via: usize,
+        dst: DeviceId,
+        bytes: u64,
+        tag: Option<u64>,
+    ) -> super::dma::CopyEvent {
+        assert!(src != dst, "staging between identical endpoints");
+        let hop = DeviceId::Gpu(via);
+        assert!(src != hop && dst != hop, "staging GPU must differ from both endpoints");
+        let first = self.copy(src, hop, bytes, tag);
+        let stream2 = self.stream_for(hop, dst);
+        let second = self
+            .dma
+            .copy_after(&mut self.topo, stream2, hop, dst, bytes, tag, first.end)
+            .expect("copy on wired node cannot fail");
+        super::dma::CopyEvent { start: first.start, end: second.end, bytes, src, dst }
+    }
+
     /// Async scattered copy (n_chunks pieces) on the default stream.
     pub fn copy_scattered(
         &mut self,
@@ -285,6 +310,23 @@ mod tests {
         assert!(ev.end > 0);
         let t = node.sync(DeviceId::Gpu(0), DeviceId::Gpu(1));
         assert_eq!(t, ev.end);
+    }
+
+    #[test]
+    fn copy_via_stages_through_gpu() {
+        let mut node = SimNode::new(NodeSpec::h100x2().with_cxl(64 * GIB));
+        // no direct host<->cxl link: the staged path must traverse both
+        // GPU-adjacent links, hop 2 strictly after hop 1.
+        let ev = node.copy_via(DeviceId::Host, 1, DeviceId::Cxl, 1 << 20, Some(42));
+        assert_eq!(node.topo.bytes_moved(DeviceId::Host, DeviceId::Gpu(1)), 1 << 20);
+        assert_eq!(node.topo.bytes_moved(DeviceId::Gpu(1), DeviceId::Cxl), 1 << 20);
+        let hop1 = node.topo.busy_until(DeviceId::Host, DeviceId::Gpu(1));
+        let hop2 = node.topo.busy_until(DeviceId::Gpu(1), DeviceId::Cxl);
+        assert!(hop2 > hop1, "second hop waits for the first");
+        assert_eq!(ev.end, hop2);
+        assert_eq!(ev.start, 0);
+        // the whole staged move is covered by the tag barrier
+        assert_eq!(node.dma.tag_busy_until(42), ev.end);
     }
 
     #[test]

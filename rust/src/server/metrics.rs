@@ -59,6 +59,50 @@ impl ServeMetrics {
         self.decode_stall_ns += stall_ns;
     }
 
+    /// Fold another run's metrics into this one — the per-node →
+    /// cluster rollup ([`crate::cluster::ClusterReport`]). Sample
+    /// summaries concatenate (percentiles stay exact), counters add, and
+    /// the makespan window becomes the union: earliest start to latest
+    /// finish, so [`ServeMetrics::tokens_per_sec`] reports *aggregate*
+    /// cluster throughput over wall (virtual) time, not a sum of
+    /// per-node rates.
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        for &x in other.ttft.samples() {
+            self.ttft.add(x);
+        }
+        for &x in other.e2e.samples() {
+            self.e2e.add(x);
+        }
+        for &x in other.per_token.samples() {
+            self.per_token.add(x);
+        }
+        self.tokens_generated += other.tokens_generated;
+        self.requests_finished += other.requests_finished;
+        self.decode_stall_ns += other.decode_stall_ns;
+        self.prefetch = match (self.prefetch.take(), &other.prefetch) {
+            (None, None) => None,
+            (Some(p), None) => Some(p),
+            (None, Some(q)) => Some(q.clone()),
+            (Some(mut p), Some(q)) => {
+                p.planned += q.planned;
+                p.issued += q.issued;
+                p.yielded += q.yielded;
+                p.stale_plans += q.stale_plans;
+                p.hits += q.hits;
+                p.late += q.late;
+                p.wasted += q.wasted;
+                p.bytes_prefetched += q.bytes_prefetched;
+                p.bytes_wasted += q.bytes_wasted;
+                Some(p)
+            }
+        };
+        self.start = match (self.start, other.start) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.end = self.end.max(other.end);
+    }
+
     pub fn makespan_ns(&self) -> Ns {
         self.end.saturating_sub(self.start.unwrap_or(0))
     }
@@ -123,6 +167,44 @@ mod tests {
         m.on_start(999);
         m.on_finish(0, 300);
         assert_eq!(m.makespan_ns(), 200);
+    }
+
+    #[test]
+    fn merge_unions_window_and_concatenates_samples() {
+        let mut a = ServeMetrics::new();
+        a.on_start(100);
+        a.on_first_token(0, 150);
+        a.on_token(50);
+        a.on_finish(0, 200);
+        let mut b = ServeMetrics::new();
+        b.on_start(50);
+        b.on_first_token(0, 90);
+        b.on_token(40);
+        b.on_token(40);
+        b.on_stall(7);
+        b.on_finish(0, 400);
+        a.merge(&b);
+        assert_eq!(a.tokens_generated, 3);
+        assert_eq!(a.requests_finished, 2);
+        assert_eq!(a.decode_stall_ns, 7);
+        assert_eq!(a.ttft.count(), 2);
+        assert_eq!(a.makespan_ns(), 350, "earliest start .. latest finish");
+        // aggregate throughput over the union window
+        assert!((a.tokens_per_sec() - 3.0 / 350e-9).abs() < 1.0);
+        // merging into an empty rollup is identity
+        let mut empty = ServeMetrics::new();
+        empty.merge(&a);
+        assert_eq!(empty.makespan_ns(), a.makespan_ns());
+        assert_eq!(empty.tokens_generated, a.tokens_generated);
+        // prefetch ledgers add when present
+        let mut p = ServeMetrics::new();
+        p.prefetch = Some(PrefetchStats { issued: 2, hits: 1, ..Default::default() });
+        let mut q = ServeMetrics::new();
+        q.prefetch = Some(PrefetchStats { issued: 3, hits: 2, ..Default::default() });
+        p.merge(&q);
+        let pf = p.prefetch.unwrap();
+        assert_eq!(pf.issued, 5);
+        assert_eq!(pf.hits, 3);
     }
 
     #[test]

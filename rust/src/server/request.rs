@@ -32,6 +32,11 @@ pub struct Request {
     pub max_new_tokens: u32,
     /// Leading tokens shared with other requests (prefix-reuse studies).
     pub shared_prefix_tokens: u32,
+    /// Which shared prefix this request reuses, when it has one. All
+    /// requests with the same group id share one prompt prefix; the
+    /// cluster router's affinity policy uses this to steer a request to
+    /// the node already holding the group's prefix KV blocks.
+    pub prefix_group: Option<u32>,
     pub state: RequestState,
     pub generated: u32,
     pub first_token_at: Option<Ns>,
@@ -62,6 +67,10 @@ pub struct WorkloadSpec {
     /// Fraction of requests sharing a common prompt prefix (§6.2).
     pub shared_prefix_fraction: f64,
     pub shared_prefix_tokens: u32,
+    /// How many distinct shared prefixes exist (each shared request is
+    /// assigned to one uniformly). 1 = the pre-cluster behavior of a
+    /// single global prefix.
+    pub n_prefix_groups: usize,
     pub seed: u64,
 }
 
@@ -75,6 +84,7 @@ impl Default for WorkloadSpec {
             mean_interarrival_ns: 0,
             shared_prefix_fraction: 0.0,
             shared_prefix_tokens: 0,
+            n_prefix_groups: 1,
             seed: 0,
         }
     }
@@ -103,10 +113,11 @@ impl WorkloadGen {
                     t += rng.exp(1.0 / s.mean_interarrival_ns as f64) as Ns;
                 }
                 let prompt = rng.lognormal(mu, s.prompt_sigma).round().max(1.0) as u32;
-                let shared = if rng.bool(s.shared_prefix_fraction) {
-                    s.shared_prefix_tokens.min(prompt)
+                let (shared, group) = if rng.bool(s.shared_prefix_fraction) {
+                    let g = rng.below(s.n_prefix_groups.max(1) as u64) as u32;
+                    (s.shared_prefix_tokens.min(prompt), Some(g))
                 } else {
-                    0
+                    (0, None)
                 };
                 Request {
                     id: SeqId(i as u64),
@@ -114,6 +125,7 @@ impl WorkloadGen {
                     prompt_tokens: prompt,
                     max_new_tokens: s.max_new_tokens,
                     shared_prefix_tokens: shared,
+                    prefix_group: if shared > 0 { group } else { None },
                     state: RequestState::Queued,
                     generated: 0,
                     first_token_at: None,
@@ -169,6 +181,30 @@ mod tests {
         let frac = with as f64 / reqs.len() as f64;
         assert!((0.45..0.55).contains(&frac), "frac={frac}");
         assert!(reqs.iter().all(|r| r.shared_prefix_tokens <= r.prompt_tokens));
+    }
+
+    #[test]
+    fn prefix_groups_partition_shared_requests() {
+        let gen = WorkloadGen::new(WorkloadSpec {
+            n_requests: 2_000,
+            shared_prefix_fraction: 0.6,
+            shared_prefix_tokens: 64,
+            n_prefix_groups: 4,
+            ..Default::default()
+        });
+        let reqs = gen.generate();
+        let mut per_group = [0usize; 4];
+        for r in &reqs {
+            match r.prefix_group {
+                Some(g) => {
+                    assert!(r.shared_prefix_tokens > 0);
+                    per_group[g as usize] += 1;
+                }
+                None => assert_eq!(r.shared_prefix_tokens, 0),
+            }
+        }
+        // every group is used, roughly uniformly
+        assert!(per_group.iter().all(|&c| c > 150), "{per_group:?}");
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::memsim::Ns;
 use std::collections::BTreeMap;
 
 /// Engine configuration.
+#[derive(Debug, Clone, Copy)]
 pub struct SimEngineConfig {
     pub kv: KvConfig,
     /// Sequences decoding per step (GPU batch capacity).

@@ -11,7 +11,10 @@
 //! Output format is stable so `cargo bench | tee bench_output.txt` diffs
 //! cleanly between optimization iterations.
 
+use super::json::Json;
 use super::stats::{percentile, Summary};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 /// Wall-clock bench runner.
@@ -88,6 +91,37 @@ impl Bench {
     }
 }
 
+/// Machine-readable bench summary: named JSON records accumulated during
+/// a bench run and written as one `BENCH_<name>.json`-style document, so
+/// CI (and humans diffing runs) consume results without scraping the
+/// aligned-table stdout. Keys are insertion-independent (BTreeMap), so
+/// the emitted file is byte-stable for identical results.
+pub struct JsonReport {
+    path: PathBuf,
+    entries: BTreeMap<String, Json>,
+}
+
+impl JsonReport {
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        Self { path: path.into(), entries: BTreeMap::new() }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Record one named result (later adds under the same key override).
+    pub fn add(&mut self, key: &str, value: Json) {
+        self.entries.insert(key.to_string(), value);
+    }
+
+    /// Write the accumulated document to [`JsonReport::path`].
+    pub fn write(&self) -> std::io::Result<()> {
+        let doc = Json::Obj(self.entries.clone());
+        std::fs::write(&self.path, doc.to_string() + "\n")
+    }
+}
+
 /// Opaque value sink — prevents the optimizer from deleting the measured
 /// work (`std::hint::black_box` stand-in usage point for benches).
 pub fn sink<T>(x: T) -> T {
@@ -150,6 +184,22 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.p99_ns >= r.p50_ns);
         assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn json_report_roundtrips_through_parser() {
+        let dir = std::env::temp_dir().join("harvest_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let mut r = JsonReport::new(&path);
+        r.add("alpha", crate::util::json::obj([("tps", Json::from(123.5))]));
+        r.add("beta", Json::from(7u64));
+        r.write().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("alpha").unwrap().get("tps").unwrap().as_f64().unwrap(), 123.5);
+        assert_eq!(parsed.get("beta").unwrap().as_u64().unwrap(), 7);
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -650,3 +650,174 @@ fn kv_multi_block_admission_is_all_or_nothing() {
     assert_eq!(hr_roomy.live_bytes_on(1), 5 * kv_cfg.block_bytes());
     kv2.check_invariants().unwrap();
 }
+
+// ---------------------------------------------------------------------
+// Cluster serving (scale-out): affinity, scaling, TOML-selected routing
+// ---------------------------------------------------------------------
+
+mod cluster_serving {
+    use super::*;
+    use harvest::cluster::{Cluster, ClusterSpec, RouterPolicy, SchedulerSpec};
+    use std::collections::BTreeMap;
+
+    fn cluster_engine(cap_blocks: usize, slots: usize, max_running: usize) -> SimEngineConfig {
+        let kv = KvConfig {
+            model: find_kv_model("kimi").unwrap(),
+            block_tokens: 16,
+            local_capacity_blocks: cap_blocks,
+            use_harvest: true,
+            host_backed_peer: false,
+        };
+        SimEngineConfig::new(kv, slots, max_running)
+    }
+
+    /// Staggered session workload: every request reuses one of `groups`
+    /// shared prefixes.
+    fn session_workload(
+        n: usize,
+        groups: usize,
+        prefix: u32,
+        gap_ns: u64,
+    ) -> Vec<harvest::server::Request> {
+        WorkloadGen::new(WorkloadSpec {
+            n_requests: n,
+            mean_prompt_tokens: prefix as f64 + 32.0,
+            prompt_sigma: 0.2,
+            max_new_tokens: 16,
+            mean_interarrival_ns: gap_ns,
+            shared_prefix_fraction: 1.0,
+            shared_prefix_tokens: prefix,
+            n_prefix_groups: groups,
+            ..Default::default()
+        })
+        .generate()
+    }
+
+    #[test]
+    fn affinity_routing_keeps_decode_on_the_node_holding_kv_blocks() {
+        let mut spec = ClusterSpec::new(3);
+        spec.router = RouterPolicy::PrefixAffinity;
+        let mut cluster = Cluster::new(&spec, cluster_engine(4_096, 8, 32), SchedulerSpec::Fcfs);
+        let reqs = session_workload(36, 3, 64, 3_000_000);
+        let report = cluster.run(reqs.clone());
+        assert_eq!(report.aggregate.requests_finished, 36);
+        assert_eq!(report.stats.shed, 0);
+        // Every group was pinned to exactly one node...
+        let mut group_node: BTreeMap<u32, usize> = BTreeMap::new();
+        for req in &reqs {
+            let g = req.prefix_group.expect("all requests share a prefix");
+            let node = report.node_of(req.id).expect("request served");
+            let holder = *group_node.entry(g).or_insert(node);
+            assert_eq!(holder, node, "group {g} decoded off its KV-holder node");
+        }
+        // ...and that node really holds the group's prefix KV blocks in
+        // its own KV manager; the others never built them.
+        for (&g, &holder) in &group_node {
+            for i in 0..cluster.n_nodes() {
+                let node = cluster.node(i);
+                if i == holder {
+                    let seq = node.prefix_seq(g).expect("holder caches the prefix");
+                    assert!(
+                        !node.kv_manager().table().seq_blocks(seq).is_empty(),
+                        "holder's prefix sequence has no KV blocks"
+                    );
+                } else {
+                    assert!(
+                        node.prefix_seq(g).is_none(),
+                        "node {i} built prefix {g} it never needed (no spillover configured)"
+                    );
+                }
+            }
+        }
+        // All but the first request per group prefilled against the cache.
+        let hits: u64 = report.per_node.iter().map(|n| n.prefix_hits).sum();
+        assert_eq!(hits, 36 - group_node.len() as u64);
+    }
+
+    #[test]
+    fn affinity_beats_round_robin_p99_ttft_on_shared_prefix_workload() {
+        // 4 nodes, 2 long-prefix sessions, arrivals paced so queues stay
+        // shallow: TTFT is dominated by prefill. Round-robin re-builds
+        // every prefix on every node (groups x nodes full prefills);
+        // affinity pays one full prefill per group and serves the rest
+        // from the holder's cache — the tail collapses.
+        let run = |policy: RouterPolicy| {
+            let mut spec = ClusterSpec::new(4);
+            spec.router = policy;
+            let mut cluster =
+                Cluster::new(&spec, cluster_engine(8_192, 8, 32), SchedulerSpec::Fcfs);
+            cluster.run(session_workload(256, 2, 256, 6_000_000))
+        };
+        let rr = run(RouterPolicy::RoundRobin);
+        let aff = run(RouterPolicy::PrefixAffinity);
+        assert_eq!(rr.aggregate.requests_finished, 256);
+        assert_eq!(aff.aggregate.requests_finished, 256);
+        let rr_p99 = rr.aggregate.ttft.percentile(99.0);
+        let aff_p99 = aff.aggregate.ttft.percentile(99.0);
+        assert!(
+            aff_p99 < rr_p99 * 0.7,
+            "affinity p99 ttft {aff_p99:.0} ns not well under round-robin {rr_p99:.0} ns"
+        );
+        // affinity also does strictly more cache reuse
+        let rr_hits: u64 = rr.per_node.iter().map(|n| n.prefix_hits).sum();
+        let aff_hits: u64 = aff.per_node.iter().map(|n| n.prefix_hits).sum();
+        assert!(aff_hits > rr_hits, "affinity hits {aff_hits} <= rr hits {rr_hits}");
+    }
+
+    #[test]
+    fn aggregate_decode_throughput_increases_with_node_count() {
+        // The cluster_scaling bench's headline, pinned as a test: the
+        // same batch workload over 1 -> 2 -> 4 nodes raises aggregate
+        // tokens/s (per-node prefill serializes; nodes run in parallel).
+        let tps = |nodes: usize| {
+            let mut spec = ClusterSpec::new(nodes);
+            spec.router = RouterPolicy::LeastLoaded;
+            let mut cluster =
+                Cluster::new(&spec, cluster_engine(4_096, 8, 32), SchedulerSpec::Fcfs);
+            let reqs = WorkloadGen::new(WorkloadSpec {
+                n_requests: 64,
+                mean_prompt_tokens: 160.0,
+                max_new_tokens: 16,
+                ..Default::default()
+            })
+            .generate();
+            let report = cluster.run(reqs);
+            assert_eq!(report.aggregate.requests_finished, 64);
+            report.aggregate.tokens_per_sec()
+        };
+        let one = tps(1);
+        let two = tps(2);
+        let four = tps(4);
+        assert!(two > one * 1.4, "2 nodes {two:.0} <= 1.4 x 1 node {one:.0}");
+        assert!(four > two * 1.4, "4 nodes {four:.0} <= 1.4 x 2 nodes {two:.0}");
+    }
+
+    #[test]
+    fn router_policy_and_cluster_shape_selectable_from_toml() {
+        // End-to-end: TOML text -> DeploymentConfig -> ClusterSpec ->
+        // served workload, for every policy spelling.
+        for (spelling, expect) in [
+            ("round-robin", RouterPolicy::RoundRobin),
+            ("least-loaded", RouterPolicy::LeastLoaded),
+            ("affinity", RouterPolicy::PrefixAffinity),
+        ] {
+            let toml = format!(
+                "workload = \"kv\"\n[cluster]\nnodes = 2\nrouter_policy = \"{spelling}\"\n\
+                 [requests]\nn = 8\n[kv]\nmodel = \"Kimi-K2\"",
+            );
+            let cfg = DeploymentConfig::from_toml(&toml).unwrap();
+            assert_eq!(cfg.router_policy, expect);
+            let engine = SimEngineConfig::new(
+                cfg.kv_config().unwrap(),
+                cfg.decode_slots,
+                cfg.max_running,
+            );
+            let mut cluster =
+                Cluster::new(&cfg.cluster_spec(), engine, cfg.scheduler_spec().unwrap());
+            let report = cluster.run(WorkloadGen::new(cfg.workload_spec()).generate());
+            assert_eq!(report.router_policy, expect.name());
+            assert_eq!(report.aggregate.requests_finished, 8);
+            assert_eq!(report.per_node.len(), 2);
+        }
+    }
+}

@@ -892,6 +892,7 @@ fn prop_workload_gen_well_formed() {
             mean_interarrival_ns: rng.below(2) * 1_000_000,
             shared_prefix_fraction: rng.f64(),
             shared_prefix_tokens: rng.below(128) as u32,
+            n_prefix_groups: 1 + rng.below(4) as usize,
             seed: rng.u64(),
         };
         let a = WorkloadGen::new(spec).generate();
@@ -978,6 +979,156 @@ fn prop_dma_drain_is_barrier() {
         }
         if node.dma.tag_busy_until(tag) > node.clock.now() {
             return err("tag still busy after drain".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Cluster: request + byte conservation under routing and spillover
+// ---------------------------------------------------------------------
+
+/// Cluster-wide accounting conserves requests and bytes: every arrival
+/// is admitted-and-finished or shed exactly once (never both, never
+/// twice); the per-node per-tier lease ledgers agree with each node's
+/// arena occupancy and sum exactly to the cluster rollup; every node's
+/// KV manager invariants hold after the run — under random node counts,
+/// router policies, spill/shed thresholds, pool pressure and workloads.
+#[test]
+fn prop_cluster_conservation() {
+    use harvest::cluster::{Cluster, ClusterSpec, RouterPolicy, SchedulerSpec, TierLedger};
+    use harvest::server::SimEngineConfig;
+
+    check("cluster-conservation", 24, 0xC1A57E, |rng| {
+        let nodes = 1 + rng.below(3) as usize;
+        let policy = match rng.below(3) {
+            0 => RouterPolicy::RoundRobin,
+            1 => RouterPolicy::LeastLoaded,
+            _ => RouterPolicy::PrefixAffinity,
+        };
+        let mut spec = ClusterSpec::new(nodes);
+        spec.router = policy;
+        spec.spill_queue_depth = 1 + rng.below(8) as usize;
+        // Sometimes bound the queues so shedding is exercised.
+        spec.shed_queue_depth =
+            if rng.bool(0.3) { 2 + rng.below(4) as usize } else { usize::MAX };
+        let kv = KvConfig {
+            model: find_kv_model("deepseek").unwrap(),
+            block_tokens: 16,
+            // small pools force offload through the tier machinery
+            local_capacity_blocks: 16 + rng.below(64) as usize,
+            use_harvest: rng.bool(0.8),
+            host_backed_peer: false,
+        };
+        let sched = if rng.bool(0.5) {
+            SchedulerSpec::Fcfs
+        } else {
+            SchedulerSpec::CompletelyFair { quantum: 1 + rng.below(3) as u32 }
+        };
+        let engine =
+            SimEngineConfig::new(kv, 2 + rng.below(6) as usize, 4 + rng.below(12) as usize);
+        let n_requests = 8 + rng.below(24) as usize;
+        let reqs = WorkloadGen::new(WorkloadSpec {
+            n_requests,
+            mean_prompt_tokens: 48.0 + rng.below(64) as f64,
+            max_new_tokens: 4 + rng.below(8) as u32,
+            mean_interarrival_ns: if rng.bool(0.5) { 0 } else { 1_000_000 },
+            shared_prefix_fraction: if rng.bool(0.5) { 0.6 } else { 0.0 },
+            shared_prefix_tokens: 32,
+            n_prefix_groups: 1 + rng.below(3) as usize,
+            seed: rng.below(1 << 30),
+            ..Default::default()
+        })
+        .generate();
+        let tokens_per_request = reqs[0].max_new_tokens as u64;
+        let mut cluster = Cluster::new(&spec, engine, sched);
+        let report = cluster.run(reqs);
+
+        // -- request conservation: finished + shed == arrivals, each id
+        //    in exactly one of {assigned, shed}.
+        if report.stats.routed + report.stats.shed != n_requests as u64 {
+            return err(format!(
+                "routed {} + shed {} != {n_requests}",
+                report.stats.routed, report.stats.shed
+            ));
+        }
+        if report.aggregate.requests_finished != report.stats.routed {
+            return err(format!(
+                "finished {} != routed {} (an admitted request was lost or double-served)",
+                report.aggregate.requests_finished, report.stats.routed
+            ));
+        }
+        if report.assignments.len() as u64 != report.stats.routed {
+            return err("assignment map disagrees with routed count".into());
+        }
+        for id in &report.shed {
+            if report.assignments.contains_key(id) {
+                return err(format!("request {id:?} both shed and assigned"));
+            }
+        }
+        let finished_per_node: u64 = report.per_node.iter().map(|n| n.finished).sum();
+        if finished_per_node != report.aggregate.requests_finished {
+            return err("per-node finished counts do not sum to the aggregate".into());
+        }
+        // every finished request generated exactly its token budget
+        if report.aggregate.tokens_generated
+            != report.aggregate.requests_finished * tokens_per_request
+        {
+            return err(format!(
+                "{} tokens for {} finished requests of {} each",
+                report.aggregate.tokens_generated,
+                report.aggregate.requests_finished,
+                tokens_per_request
+            ));
+        }
+
+        // -- byte conservation: per-node ledgers match the arenas and
+        //    sum to the cluster rollup.
+        let mut rollup = TierLedger::default();
+        for (i, nr) in report.per_node.iter().enumerate() {
+            let node = cluster.node(i);
+            let hr = node.runtime();
+            let ledger = node.ledger();
+            if ledger != nr.ledger {
+                return err(format!("node {i}: report ledger {:?} != live {ledger:?}", nr.ledger));
+            }
+            let arena_peer: u64 =
+                (0..hr.node.n_gpus()).map(|g| hr.node.gpus[g].hbm.used()).sum();
+            if ledger.peer != arena_peer {
+                return err(format!(
+                    "node {i}: peer ledger {} != arena used {arena_peer}",
+                    ledger.peer
+                ));
+            }
+            if ledger.host != hr.node.host.used() {
+                return err(format!(
+                    "node {i}: host ledger {} != arena used {}",
+                    ledger.host,
+                    hr.node.host.used()
+                ));
+            }
+            if ledger.cxl != hr.node.cxl.used() {
+                return err(format!(
+                    "node {i}: cxl ledger {} != arena used {}",
+                    ledger.cxl,
+                    hr.node.cxl.used()
+                ));
+            }
+            let by_tier: u64 = (0..hr.node.n_gpus())
+                .map(|g| hr.live_bytes_on_tier(MemoryTier::PeerHbm(g)))
+                .sum::<u64>()
+                + hr.live_bytes_on_tier(MemoryTier::Host)
+                + hr.live_bytes_on_tier(MemoryTier::CxlMem);
+            if by_tier != ledger.total() {
+                return err(format!("node {i}: tier sum {by_tier} != ledger {}", ledger.total()));
+            }
+            if let Err(e) = node.kv_manager().check_invariants() {
+                return err(format!("node {i}: kv invariants: {e}"));
+            }
+            rollup.accumulate(&ledger);
+        }
+        if rollup != report.ledger {
+            return err(format!("rollup {rollup:?} != report ledger {:?}", report.ledger));
         }
         Ok(())
     });
