@@ -55,6 +55,7 @@ use crate::harvest::HarvestConfig;
 use crate::kv::SeqId;
 use crate::memsim::{NodeFabric, NodeFabricKind, NodeSpec, Ns, SimNode};
 use crate::server::{Request, ServeMetrics, SimEngineConfig};
+use crate::tenantsim::{TenantFleet, TenantMix};
 use crate::util::json::{obj, Json};
 use std::collections::{BTreeMap, VecDeque};
 
@@ -99,6 +100,12 @@ pub struct ClusterSpec {
     /// Per-node queue depth at which a node stops accepting; when every
     /// node is there, arrivals are shed.
     pub shed_queue_depth: usize,
+    /// Co-tenant mix every node runs (None = no closed-loop tenants).
+    pub tenants: Option<TenantMix>,
+    /// Per-node mix overrides (node id → mix) on top of `tenants` —
+    /// heterogeneous pressure across the fleet. An override with
+    /// `enabled = false` turns that node's tenants off entirely.
+    pub tenant_overrides: BTreeMap<usize, TenantMix>,
 }
 
 impl ClusterSpec {
@@ -113,7 +120,14 @@ impl ClusterSpec {
             router: RouterPolicy::default(),
             spill_queue_depth: 16,
             shed_queue_depth: usize::MAX,
+            tenants: None,
+            tenant_overrides: BTreeMap::new(),
         }
+    }
+
+    /// The mix node `id` runs (override, else the fleet-wide mix).
+    fn mix_for(&self, id: usize) -> Option<&TenantMix> {
+        self.tenant_overrides.get(&id).or(self.tenants.as_ref())
     }
 }
 
@@ -199,14 +213,22 @@ pub struct Cluster {
 impl Cluster {
     pub fn new(spec: &ClusterSpec, engine: SimEngineConfig, sched: SchedulerSpec) -> Self {
         assert!(spec.nodes >= 1, "a cluster needs at least one node");
+        let n_gpus = spec.node.gpus.len();
+        let hbm_bytes = spec.node.gpus.first().map(|g| g.hbm_bytes).unwrap_or(0);
         let nodes = (0..spec.nodes)
             .map(|id| {
+                // Per-node fleet, seeded with the node id so one mix
+                // still yields decorrelated (heterogeneous) pressure.
+                let fleet = spec.mix_for(id).map(|mix| {
+                    TenantFleet::from_mix(mix, n_gpus, hbm_bytes, id as u64)
+                });
                 ClusterNode::new(
                     id,
                     SimNode::new(spec.node.clone()),
                     spec.harvest.clone(),
                     engine,
                     sched,
+                    fleet.filter(|f| !f.is_empty()),
                 )
             })
             .collect();

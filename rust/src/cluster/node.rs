@@ -22,6 +22,7 @@ use crate::harvest::{HarvestRuntime, Transfer};
 use crate::kv::{KvOffloadManager, KvStats, SeqId};
 use crate::memsim::{DeviceId, Ns, SimNode};
 use crate::server::{CompletelyFair, Fcfs, Request, Scheduler, ServeMetrics, SimEngineConfig};
+use crate::tenantsim::{FleetStats, TenantFleet};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use super::router::NodeView;
@@ -81,6 +82,8 @@ pub struct NodeReport {
     pub prefix_hits: u64,
     /// Live harvest bytes by tier class at report time.
     pub ledger: TierLedger,
+    /// Co-tenant fleet counters (None when this node runs without one).
+    pub tenant: Option<FleetStats>,
 }
 
 /// One simulated server of the cluster.
@@ -102,6 +105,9 @@ pub struct ClusterNode {
     finished: Vec<SeqId>,
     routed: u64,
     prefix_hits: u64,
+    /// This node's co-tenant population (per-node fleets: heterogeneous
+    /// pressure across an otherwise homogeneous cluster).
+    tenants: Option<TenantFleet>,
 }
 
 impl ClusterNode {
@@ -111,12 +117,17 @@ impl ClusterNode {
         harvest: crate::harvest::HarvestConfig,
         engine: SimEngineConfig,
         sched: SchedulerSpec,
+        tenants: Option<TenantFleet>,
     ) -> Self {
         let mut kv = KvOffloadManager::new(engine.kv, 0);
         if let Some(p) = engine.prefetch {
             kv = kv.with_prefetch(p);
         }
-        let hr = HarvestRuntime::new(node, harvest);
+        let mut hr = HarvestRuntime::new(node, harvest);
+        let mut tenants = tenants;
+        if let Some(f) = tenants.as_mut() {
+            f.install(&mut hr);
+        }
         let mut metrics = ServeMetrics::new();
         metrics.on_start(hr.node.clock.now());
         Self {
@@ -134,6 +145,18 @@ impl ClusterNode {
             finished: Vec::new(),
             routed: 0,
             prefix_hits: 0,
+            tenants,
+        }
+    }
+
+    /// Advance this node's clock, stepping its co-tenant fleet when one
+    /// is attached.
+    fn advance(&mut self, t: Ns) {
+        match &mut self.tenants {
+            Some(f) => f.advance_to(&mut self.hr, t),
+            None => {
+                self.hr.advance_to(t);
+            }
         }
     }
 
@@ -220,7 +243,13 @@ impl ClusterNode {
             finished: self.finished.len() as u64,
             prefix_hits: self.prefix_hits,
             ledger: self.ledger(),
+            tenant: self.tenants.as_ref().map(|f| f.stats()),
         }
+    }
+
+    /// This node's co-tenant fleet counters, when one is attached.
+    pub fn tenant_stats(&self) -> Option<FleetStats> {
+        self.tenants.as_ref().map(|f| f.stats())
     }
 
     // -- routing-side entry points ---------------------------------------
@@ -323,8 +352,8 @@ impl ClusterNode {
         }
         let fresh = req.prompt_tokens - cached;
         let prefill_ns = self.cfg.prefill_ns_per_token * fresh as u64;
-        self.hr.advance_to(self.now() + prefill_ns);
-        self.hr.advance_to(gate);
+        self.advance(self.now() + prefill_ns);
+        self.advance(gate);
         let bt = self.cfg.kv.block_tokens as usize;
         // Vectored admission: free the suffix's block footprint in one
         // all-or-nothing batch instead of evicting per token.
@@ -349,9 +378,9 @@ impl ClusterNode {
     /// Mirrors [`crate::server::SimEngine::run`]'s loop body.
     pub(crate) fn step(&mut self) {
         if self.live.is_empty() {
-            if let Some(front) = self.pending.front() {
-                let at = front.arrival.max(self.now());
-                self.hr.advance_to(at);
+            let next_arrival = self.pending.front().map(|r| r.arrival.max(self.now()));
+            if let Some(at) = next_arrival {
+                self.advance(at);
             }
         }
         self.admit_ready();
@@ -386,7 +415,7 @@ impl ClusterNode {
             self.kv.prefetch_seqs(&mut self.hr, &predicted, deadline);
             self.kv.promote_blocks(&mut self.hr, &predicted, deadline);
         }
-        self.hr.advance_to(self.now() + self.cfg.step_compute_ns);
+        self.advance(self.now() + self.cfg.step_compute_ns);
         let step_ns = self.now() - step_start;
         for &seq in &cohort {
             self.kv.append_token(&mut self.hr, seq);

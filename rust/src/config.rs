@@ -21,8 +21,9 @@ use crate::kv::KvConfig;
 use crate::memsim::{FabricKind, GpuSpec, NodeFabricKind, NodeSpec};
 use crate::moe::{find_kv_model, find_moe_model};
 use crate::server::WorkloadSpec;
+use crate::tenantsim::{TenantFleet, TenantMix, TenantPriority};
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 const GIB: u64 = 1 << 30;
 
@@ -323,6 +324,13 @@ pub struct DeploymentConfig {
     pub victim_policy: VictimPolicy,
     pub reserve_gib: u64,
     pub mig_cache_gib: Option<u64>,
+    /// Pressure-revoked lossy leases demote to host instead of dropping.
+    pub demote_to_host: bool,
+    /// Closed-loop co-tenant actors (`[tenants]`; disabled by default —
+    /// pressure then comes only from replay timelines, as pre-fleet).
+    pub tenants: TenantMix,
+    /// Per-node overrides (`[tenants.node<k>]`) for multi-node runs.
+    pub tenant_overrides: Vec<(usize, TenantMix)>,
     /// MoE workload parameters (§4.4 defaults).
     pub moe_model: String,
     pub offload_fraction: f64,
@@ -366,6 +374,9 @@ impl Default for DeploymentConfig {
             victim_policy: VictimPolicy::Lifo,
             reserve_gib: 0,
             mig_cache_gib: None,
+            demote_to_host: false,
+            tenants: TenantMix::default(),
+            tenant_overrides: Vec::new(),
             moe_model: "Qwen2-MoE".into(),
             offload_fraction: 0.5,
             micro_batch_tokens: 324,
@@ -405,6 +416,64 @@ fn fabric_name(f: FabricKind) -> &'static str {
     }
 }
 
+/// Keys a `[tenants]` (or `[tenants.node<k>]`) section accepts.
+const TENANT_KEYS: &[&str] = &[
+    "enabled",
+    "training",
+    "inference",
+    "batch",
+    "training_gib",
+    "activation_gib",
+    "host_gib",
+    "collective_mib",
+    "step_period_us",
+    "inference_target",
+    "batch_gib",
+    "batch_priority",
+    "seed",
+];
+
+/// Parse one tenant-mix section; unset keys fall back to `base` (the
+/// built-in defaults for `[tenants]`, the fleet-wide mix for per-node
+/// override sections — an override only names what it changes).
+fn tenant_mix(doc: &TomlDoc, section: &str, base: &TenantMix) -> Result<TenantMix> {
+    let p = |k: &str| format!("{section}.{k}");
+    Ok(TenantMix {
+        enabled: doc.bool_or(&p("enabled"), base.enabled)?,
+        training: doc.usize_or(&p("training"), base.training)?,
+        inference: doc.usize_or(&p("inference"), base.inference)?,
+        batch: doc.usize_or(&p("batch"), base.batch)?,
+        training_gib: doc.u64_or(&p("training_gib"), base.training_gib)?,
+        activation_gib: doc.u64_or(&p("activation_gib"), base.activation_gib)?,
+        host_gib: doc.u64_or(&p("host_gib"), base.host_gib)?,
+        collective_mib: doc.u64_or(&p("collective_mib"), base.collective_mib)?,
+        step_period_us: doc.u64_or(&p("step_period_us"), base.step_period_us)?,
+        inference_target: doc.f64_or(&p("inference_target"), base.inference_target)?,
+        batch_gib: doc.u64_or(&p("batch_gib"), base.batch_gib)?,
+        batch_priority: TenantPriority::parse(
+            &doc.str_or(&p("batch_priority"), base.batch_priority.name()),
+        )?,
+        seed: doc.u64_or(&p("seed"), base.seed)?,
+    })
+}
+
+fn emit_tenant_mix(s: &mut String, header: &str, m: &TenantMix) {
+    s.push_str(&format!("[{header}]\n"));
+    s.push_str(&format!("enabled = {}\n", m.enabled));
+    s.push_str(&format!("training = {}\n", m.training));
+    s.push_str(&format!("inference = {}\n", m.inference));
+    s.push_str(&format!("batch = {}\n", m.batch));
+    s.push_str(&format!("training_gib = {}\n", m.training_gib));
+    s.push_str(&format!("activation_gib = {}\n", m.activation_gib));
+    s.push_str(&format!("host_gib = {}\n", m.host_gib));
+    s.push_str(&format!("collective_mib = {}\n", m.collective_mib));
+    s.push_str(&format!("step_period_us = {}\n", m.step_period_us));
+    s.push_str(&format!("inference_target = {:?}\n", m.inference_target));
+    s.push_str(&format!("batch_gib = {}\n", m.batch_gib));
+    s.push_str(&format!("batch_priority = \"{}\"\n", m.batch_priority.name()));
+    s.push_str(&format!("seed = {}\n", m.seed));
+}
+
 impl DeploymentConfig {
     /// Parse from TOML-subset text. Unknown keys are rejected so typos
     /// fail loudly rather than silently falling back to defaults.
@@ -426,6 +495,7 @@ impl DeploymentConfig {
             "harvest.victim_policy",
             "harvest.reserve_gib",
             "harvest.mig_cache_gib",
+            "harvest.demote_to_host",
             "moe.model",
             "moe.offload_fraction",
             "moe.micro_batch_tokens",
@@ -446,12 +516,33 @@ impl DeploymentConfig {
             "requests.seed",
         ];
         for key in doc.keys() {
+            // `[tenants]` / `[tenants.node<k>]` sections are validated
+            // field-by-field (the node index is data, not grammar).
+            if let Some(rest) = key.strip_prefix("tenants.") {
+                let (scope, field) = match rest.split_once('.') {
+                    Some((node, field)) => (Some(node), field),
+                    None => (None, rest),
+                };
+                if let Some(node) = scope {
+                    if node.strip_prefix("node").and_then(|n| n.parse::<usize>().ok()).is_none()
+                    {
+                        bail!(
+                            "unknown config key `{key}` (per-node tenant overrides are \
+                             `[tenants.node<k>]`)"
+                        );
+                    }
+                }
+                if !TENANT_KEYS.contains(&field) {
+                    bail!("unknown config key `{key}`");
+                }
+                continue;
+            }
             if !KNOWN.contains(&key) {
                 bail!("unknown config key `{key}`");
             }
         }
         let d = DeploymentConfig::default();
-        let cfg = DeploymentConfig {
+        let mut cfg = DeploymentConfig {
             name: doc.str_or("name", &d.name),
             workload: WorkloadKind::parse(&doc.str_or("workload", d.workload.name()))?,
             n_gpus: doc.usize_or("node.gpus", d.n_gpus)?,
@@ -476,6 +567,9 @@ impl DeploymentConfig {
                 Some(v) => Some(v.as_u64().context("key `harvest.mig_cache_gib`")?),
                 None => None,
             },
+            demote_to_host: doc.bool_or("harvest.demote_to_host", d.demote_to_host)?,
+            tenants: tenant_mix(&doc, "tenants", &d.tenants)?,
+            tenant_overrides: Vec::new(), // filled below (needs the base mix)
             moe_model: doc.str_or("moe.model", &d.moe_model),
             offload_fraction: doc.f64_or("moe.offload_fraction", d.offload_fraction)?,
             micro_batch_tokens: doc.usize_or("moe.micro_batch_tokens", d.micro_batch_tokens)?,
@@ -498,6 +592,16 @@ impl DeploymentConfig {
             prefix_groups: doc.usize_or("requests.prefix_groups", d.prefix_groups)?,
             seed: doc.u64_or("requests.seed", d.seed)?,
         };
+        let node_ids: BTreeSet<usize> = doc
+            .keys()
+            .filter_map(|k| k.strip_prefix("tenants.node"))
+            .filter_map(|rest| rest.split_once('.'))
+            .filter_map(|(idx, _)| idx.parse::<usize>().ok())
+            .collect();
+        for i in node_ids {
+            let mix = tenant_mix(&doc, &format!("tenants.node{i}"), &cfg.tenants)?;
+            cfg.tenant_overrides.push((i, mix));
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -540,6 +644,28 @@ impl DeploymentConfig {
         if self.prefix_groups == 0 {
             bail!("requests.prefix_groups must be >= 1");
         }
+        for (label, mix) in std::iter::once((None, &self.tenants))
+            .chain(self.tenant_overrides.iter().map(|(i, m)| (Some(*i), m)))
+        {
+            if !(0.0..=1.0).contains(&mix.inference_target) {
+                match label {
+                    None => bail!("tenants.inference_target must be in [0, 1]"),
+                    Some(i) => bail!("tenants.node{i}.inference_target must be in [0, 1]"),
+                }
+            }
+            if mix.enabled && mix.step_period_us == 0 {
+                bail!("tenants.step_period_us must be > 0");
+            }
+        }
+        for (i, _) in &self.tenant_overrides {
+            if *i >= self.nodes {
+                bail!(
+                    "tenants.node{i} override names a node outside the cluster \
+                     (cluster.nodes = {})",
+                    self.nodes
+                );
+            }
+        }
         Ok(())
     }
 
@@ -569,6 +695,13 @@ impl DeploymentConfig {
         s.push_str(&format!("reserve_gib = {}\n", self.reserve_gib));
         if let Some(gib) = self.mig_cache_gib {
             s.push_str(&format!("mig_cache_gib = {gib}\n"));
+        }
+        s.push_str(&format!("demote_to_host = {}\n", self.demote_to_host));
+        s.push('\n');
+        emit_tenant_mix(&mut s, "tenants", &self.tenants);
+        for (i, mix) in &self.tenant_overrides {
+            s.push('\n');
+            emit_tenant_mix(&mut s, &format!("tenants.node{i}"), mix);
         }
         s.push('\n');
         s.push_str("[moe]\n");
@@ -625,7 +758,28 @@ impl DeploymentConfig {
             } else {
                 self.shed_queue_depth
             },
+            tenants: Some(self.tenants.clone()),
+            tenant_overrides: self.tenant_overrides.iter().cloned().collect(),
         }
+    }
+
+    /// The mix node 0 effectively runs: its `[tenants.node0]` override
+    /// when present, else the fleet-wide `[tenants]` mix.
+    pub fn node0_tenant_mix(&self) -> &TenantMix {
+        self.tenant_overrides
+            .iter()
+            .find(|(i, _)| *i == 0)
+            .map(|(_, m)| m)
+            .unwrap_or(&self.tenants)
+    }
+
+    /// The co-tenant fleet a single-node launch runs (None when the mix
+    /// is disabled). Multi-node launches build per-node fleets from
+    /// [`DeploymentConfig::cluster_spec`] instead.
+    pub fn tenant_fleet(&self) -> Option<TenantFleet> {
+        let mix = self.node0_tenant_mix();
+        let fleet = TenantFleet::from_mix(mix, self.n_gpus, self.hbm_gib * GIB, 0);
+        (!fleet.is_empty()).then_some(fleet)
     }
 
     /// The per-node decode scheduler.
@@ -637,6 +791,7 @@ impl DeploymentConfig {
         let mut cfg = HarvestConfig::for_node(self.n_gpus);
         cfg.victim_policy = self.victim_policy;
         cfg.reserve_bytes = self.reserve_gib * GIB;
+        cfg.demote_to_host = self.demote_to_host;
         if let Some(gib) = self.mig_cache_gib {
             // Partition every potential peer; the compute GPU's entry is
             // ignored by the controller (never selected as a peer).
@@ -733,6 +888,20 @@ pub fn presets() -> Vec<DeploymentConfig> {
             shared_prefix_fraction: 0.75,
             mean_interarrival_us: 1_500,
             prefix_groups: 8,
+            ..base.clone()
+        },
+        // Closed-loop co-tenants: a training job (ring all-reduce on the
+        // serving GPUs' NVLinks), a second inference service and a
+        // bursty batch job contend with the KV serve path; demotion
+        // keeps revoked blocks alive on the host tier.
+        DeploymentConfig {
+            name: "multi-tenant".into(),
+            workload: WorkloadKind::KvOffload,
+            scheduler: "cf".into(),
+            quantum: 2,
+            local_capacity_blocks: 512,
+            demote_to_host: true,
+            tenants: TenantMix { enabled: true, host_gib: 4, ..TenantMix::default() },
             ..base.clone()
         },
         // End-to-end real-compute serve on the AOT tiny model.
@@ -874,7 +1043,66 @@ mod tests {
             assert_eq!(back.node_fabric, p.node_fabric);
             assert_eq!(back.prefix_groups, p.prefix_groups);
             assert_eq!(back.mean_interarrival_us, p.mean_interarrival_us);
+            assert_eq!(back.demote_to_host, p.demote_to_host);
+            assert_eq!(back.tenants, p.tenants);
+            assert_eq!(back.tenant_overrides, p.tenant_overrides);
         }
+    }
+
+    #[test]
+    fn tenants_section_parses_and_overrides_per_node() {
+        let cfg = DeploymentConfig::from_toml(
+            "[cluster]\nnodes = 3\n[tenants]\nenabled = true\ntraining = 2\n\
+             inference_target = 0.4\nbatch_priority = \"best-effort\"\n\
+             [tenants.node1]\nenabled = false\n[tenants.node2]\nbatch = 5\nhost_gib = 8",
+        )
+        .unwrap();
+        assert!(cfg.tenants.enabled);
+        assert_eq!(cfg.tenants.training, 2);
+        assert_eq!(cfg.tenants.inference_target, 0.4);
+        assert_eq!(
+            cfg.tenants.batch_priority,
+            crate::tenantsim::TenantPriority::BestEffort
+        );
+        // overrides inherit the base mix, changing only named fields
+        assert_eq!(cfg.tenant_overrides.len(), 2);
+        let (i1, node1) = &cfg.tenant_overrides[0];
+        assert_eq!(*i1, 1);
+        assert!(!node1.enabled);
+        assert_eq!(node1.training, 2, "inherited from [tenants]");
+        let (i2, node2) = &cfg.tenant_overrides[1];
+        assert_eq!(*i2, 2);
+        assert!(node2.enabled);
+        assert_eq!(node2.batch, 5);
+        assert_eq!(node2.host_gib, 8);
+        // round-trips
+        let back = DeploymentConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.tenants, cfg.tenants);
+        assert_eq!(back.tenant_overrides, cfg.tenant_overrides);
+        // rejections: typos, bad node scopes, bad ranges
+        assert!(DeploymentConfig::from_toml("[tenants]\ntrainign = 1").is_err());
+        assert!(DeploymentConfig::from_toml("[tenants.gpu0]\nbatch = 1").is_err());
+        assert!(DeploymentConfig::from_toml("[tenants]\ninference_target = 1.5").is_err());
+        assert!(
+            DeploymentConfig::from_toml("[tenants.node7]\nbatch = 1").is_err(),
+            "override outside cluster.nodes"
+        );
+        assert!(DeploymentConfig::from_toml("[tenants]\nbatch_priority = \"vip\"").is_err());
+    }
+
+    #[test]
+    fn multi_tenant_preset_builds_a_fleet() {
+        let p = find_preset("multi-tenant").unwrap();
+        assert!(p.tenants.enabled);
+        assert!(p.demote_to_host);
+        assert!(p.harvest_config().demote_to_host);
+        let fleet = p.tenant_fleet().expect("enabled mix builds a fleet");
+        assert_eq!(fleet.len(), 3, "training + inference + batch");
+        // disabled mixes build none
+        assert!(find_preset("paper-kv").unwrap().tenant_fleet().is_none());
+        // the cluster spec carries the mix to every node
+        let spec = p.cluster_spec();
+        assert_eq!(spec.tenants.as_ref().unwrap(), &p.tenants);
     }
 
     #[test]

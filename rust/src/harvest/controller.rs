@@ -200,6 +200,21 @@ struct SessionState {
     queue: RevocationQueue,
 }
 
+/// A migration source segment whose in-flight copy still reads it: the
+/// ledgers moved to the destination tier at issue time, but the arena
+/// segment is only released once virtual time passes the copy's end, so
+/// no unrelated allocation can reuse bytes a DMA engine is reading.
+struct DeferredFree {
+    /// Copy-completion time; the segment is freed at the first
+    /// time-advance / allocation boundary at or after it.
+    end: Ns,
+    tier: MemoryTier,
+    alloc: crate::memsim::AllocId,
+    bytes: u64,
+    /// The owning lease's DMA tag — draining it waits the copy out.
+    tag: u64,
+}
+
 /// The session deprecated shims allocate under (created at construction,
 /// so raw-handle call sites need no setup).
 const LEGACY_SESSION: SessionId = SessionId(0);
@@ -233,6 +248,14 @@ pub struct HarvestRuntime {
     /// Drop-inbox shared with RAII leases; swept at allocation /
     /// pressure / time boundaries.
     reclaim: ReclaimInbox,
+    /// Migration source segments awaiting copy completion before the
+    /// arena reuses them, plus per-tier pending-byte rollups (peers by
+    /// index, then host, then CXL) so pressure enforcement can subtract
+    /// them in O(1).
+    deferred: Vec<DeferredFree>,
+    pending_free_peer: Vec<u64>,
+    pending_free_host: u64,
+    pending_free_cxl: u64,
     /// Leases reclaimed by the leak sweep (metrics / tests).
     pub leaked_reclaimed: u64,
     /// Every completed drop-revocation, in order (for tests/metrics).
@@ -280,6 +303,10 @@ impl HarvestRuntime {
                 queue: RevocationQueue::new(),
             }],
             reclaim: ReclaimInbox::default(),
+            deferred: Vec::new(),
+            pending_free_peer: vec![0; n],
+            pending_free_host: 0,
+            pending_free_cxl: 0,
             leaked_reclaimed: 0,
             revocations: Vec::new(),
             demotions: 0,
@@ -412,6 +439,7 @@ impl HarvestRuntime {
     /// allocation, pressure-enforcement, drain and time-advance
     /// boundaries, and callable directly.
     pub fn sweep_leaked(&mut self) -> usize {
+        self.process_deferred_frees();
         let dropped: Vec<LeaseId> = std::mem::take(&mut *self.reclaim.borrow_mut());
         let mut n = 0;
         for id in dropped {
@@ -423,6 +451,87 @@ impl HarvestRuntime {
             }
         }
         n
+    }
+
+    // -- deferred migration-source frees ----------------------------------
+
+    fn pending_slot_mut(&mut self, tier: MemoryTier) -> &mut u64 {
+        match tier {
+            MemoryTier::PeerHbm(g) => &mut self.pending_free_peer[g],
+            MemoryTier::Host => &mut self.pending_free_host,
+            MemoryTier::CxlMem => &mut self.pending_free_cxl,
+            MemoryTier::LocalHbm => unreachable!("local HBM is consumer-managed"),
+        }
+    }
+
+    /// Bytes of migration source segments on `tier` whose copies are
+    /// still in flight: already subtracted from the tier ledger
+    /// ([`HarvestRuntime::live_bytes_on_tier`]) but still occupying the
+    /// arena until virtual time passes each copy's end. The invariant
+    /// `arena.used() == ledger + tenant-held + pending frees` holds at
+    /// every boundary.
+    pub fn pending_free_bytes_on_tier(&self, tier: MemoryTier) -> u64 {
+        match tier {
+            MemoryTier::PeerHbm(g) => self.pending_free_peer[g],
+            MemoryTier::Host => self.pending_free_host,
+            MemoryTier::CxlMem => self.pending_free_cxl,
+            MemoryTier::LocalHbm => 0,
+        }
+    }
+
+    fn defer_source_free(&mut self, handle: &HarvestHandle, end: Ns) {
+        *self.pending_slot_mut(handle.tier) += handle.size;
+        self.deferred.push(DeferredFree {
+            end,
+            tier: handle.tier,
+            alloc: handle.alloc,
+            bytes: handle.size,
+            tag: handle.id.0,
+        });
+    }
+
+    /// Release every deferred segment whose copy has completed by now.
+    /// Runs at every allocation / pressure / drain / time-advance
+    /// boundary; returns the bytes released.
+    fn process_deferred_frees(&mut self) -> u64 {
+        let now = self.node.clock.now();
+        let mut released = 0;
+        let mut i = 0;
+        while i < self.deferred.len() {
+            if self.deferred[i].end <= now {
+                let d = self.deferred.swap_remove(i);
+                self.arena_mut(d.tier).free(d.alloc);
+                *self.pending_slot_mut(d.tier) -= d.bytes;
+                released += d.bytes;
+            } else {
+                i += 1;
+            }
+        }
+        released
+    }
+
+    /// Wait out every in-flight migration copy reading a source segment
+    /// on `tier` (advances virtual time — the `cudaStreamSynchronize`
+    /// a real allocator stall pays) and release the segments. The
+    /// tenant broker tries this before evicting more leases: tenants
+    /// always win, even against bytes a demotion is still reading, and
+    /// recovering an already-moved source costs no new harvest loss.
+    pub fn drain_deferred_frees(&mut self, tier: MemoryTier) -> u64 {
+        let tags: Vec<u64> = self
+            .deferred
+            .iter()
+            .filter(|d| d.tier == tier)
+            .map(|d| d.tag)
+            .collect();
+        if tags.is_empty() {
+            return 0;
+        }
+        for tag in tags {
+            self.node.dma.drain_tag(&self.node.topo, tag);
+        }
+        let before = self.pending_free_bytes_on_tier(tier);
+        self.process_deferred_frees();
+        before - self.pending_free_bytes_on_tier(tier)
     }
 
     // -- views + accounting ----------------------------------------------
@@ -721,7 +830,11 @@ impl HarvestRuntime {
         let entry = self.live.remove(&id).ok_or(HarvestError::StaleLease(id))?;
         let handle = entry.handle;
         self.account_remove(&handle);
+        // Draining the lease tag advances time past any migration copy
+        // still reading an old source segment of this lease — release
+        // whatever that unblocked.
         self.node.dma.drain_tag(&self.node.topo, id.0);
+        self.process_deferred_frees();
         self.arena_mut(handle.tier).free(handle.alloc);
         if let Some(k) = self.order_key.remove(&id) {
             if let MemoryTier::PeerHbm(g) = handle.tier {
@@ -831,16 +944,14 @@ impl HarvestRuntime {
                 .expect("node has at least one GPU");
             self.node.copy_via(src_dev, via, dst_dev, old.size, Some(id.0))
         };
-        // The source segment is released at issue time. The lease tag
-        // still covers the in-flight read (a later free/revocation of
-        // this lease drains it first); an *unrelated* allocation could
-        // in principle reuse the segment while the copy reads it — a
-        // deliberate fidelity simplification in this data-less
-        // virtual-time model (mirroring `revoke`, which also frees after
-        // draining only the lease's own tag), chosen over deferred
-        // frees because the pressure-enforcement loop needs demotions to
-        // release peer bytes immediately to converge.
-        self.arena_mut(old.tier).free(old.alloc);
+        // Ledgers move at issue time; the *segment* is freed only at
+        // copy-completion time (lease-tagged deferred free), so no
+        // unrelated allocation can reuse bytes the in-flight copy still
+        // reads and per-tier accounting never transiently undercounts
+        // the arena. Pressure enforcement subtracts the pending bytes
+        // (`pending_free_bytes_on_tier`), so demotions still release
+        // peer *budget* immediately and the enforcement loop converges.
+        self.defer_source_free(&old, ev.end);
         self.account_remove(&old);
         let offset = self.arena(to).offset_of(dst_alloc).unwrap();
         let entry = self.live.get_mut(&id).unwrap();
@@ -895,6 +1006,7 @@ impl HarvestRuntime {
         self.account_remove(&handle);
         // 1. Drain: advance virtual time past every op touching the region.
         let drained_at = self.node.dma.drain_tag(&self.node.topo, id.0);
+        self.process_deferred_frees();
         // 2. Invalidate + free.
         self.arena_mut(handle.tier).free(handle.alloc);
         if let Some(k) = self.order_key.remove(&id) {
@@ -1003,9 +1115,18 @@ impl HarvestRuntime {
         let mut out = Vec::new();
         for peer in 0..self.node.n_gpus() {
             loop {
-                let cap = self.node.gpus[peer].hbm.capacity();
-                let tenant = self.node.gpus[peer].tenant.used_at(now);
-                let ours = self.node.gpus[peer].hbm.used();
+                let g = &self.node.gpus[peer];
+                let cap = g.hbm.capacity();
+                // Co-tenants: the exogenous timeline plus actor-held
+                // arena segments. Our bytes: everything else in the
+                // arena, minus sources of in-flight migrations (their
+                // budget already moved to the destination tier).
+                let tenant = g.tenant_used_at(now);
+                let ours = g
+                    .hbm
+                    .used()
+                    .saturating_sub(g.tenant_held)
+                    .saturating_sub(self.pending_free_peer[peer]);
                 let budget = cap.saturating_sub(tenant).saturating_sub(self.config.reserve_bytes);
                 let limit = self.config.mig[peer].harvest_limit().unwrap_or(u64::MAX);
                 if ours <= budget.min(limit) {
@@ -1023,6 +1144,49 @@ impl HarvestRuntime {
         }
         self.monitor.observe(&self.node);
         out
+    }
+
+    /// Make room for a tenant allocation on `peer` by revoking (or,
+    /// under [`HarvestConfig::demote_to_host`], demoting) one victim
+    /// lease there. Returns `false` when no revocable lease remains on
+    /// the peer — the paper's correctness invariant is that tenants
+    /// always win, so the [`crate::tenantsim::PressureBroker`] loops
+    /// this until the tenant's arena allocation succeeds or harvest
+    /// genuinely holds nothing on the GPU.
+    pub fn yield_to_tenant(&mut self, peer: usize) -> bool {
+        self.sweep_leaked();
+        let Some(victim) = self.pick_victim(peer) else { return false };
+        if self.config.demote_to_host && self.try_demote(victim, RevocationReason::TenantPressure)
+        {
+            return true;
+        }
+        self.revoke(victim, RevocationReason::TenantPressure);
+        true
+    }
+
+    /// The host/CXL analogue of [`HarvestRuntime::yield_to_tenant`]:
+    /// revoke one live lease resident on `tier` so a tenant's host or
+    /// CXL allocation can proceed. Victim choice follows the configured
+    /// [`VictimPolicy`] over allocation order (lease ids are monotone).
+    pub fn yield_tier_to_tenant(&mut self, tier: MemoryTier) -> bool {
+        if tier.is_peer() {
+            return self.yield_to_tenant(tier.peer_gpu().expect("peer tier"));
+        }
+        self.sweep_leaked();
+        let on_tier = self.live.iter().filter(|(_, e)| e.handle.tier == tier);
+        let victim = match self.config.victim_policy {
+            VictimPolicy::Lifo => on_tier.map(|(&id, _)| id).max(),
+            VictimPolicy::Fifo => on_tier.map(|(&id, _)| id).min(),
+            VictimPolicy::LargestFirst => on_tier
+                .max_by_key(|(&id, e)| (e.handle.size, std::cmp::Reverse(id)))
+                .map(|(&id, _)| id),
+            VictimPolicy::SmallestFirst => {
+                on_tier.min_by_key(|(&id, e)| (e.handle.size, id)).map(|(&id, _)| id)
+            }
+        };
+        let Some(victim) = victim else { return false };
+        self.revoke(victim, RevocationReason::TenantPressure);
+        true
     }
 
     /// Advance virtual time to `t`, enforcing pressure at every tenant
@@ -1361,18 +1525,24 @@ mod tests {
         assert_eq!(h.node.topo.bytes_moved(DeviceId::Host, DeviceId::Gpu(1)), 8 * MIB);
         assert_eq!(h.node.topo.bytes_moved(DeviceId::Gpu(1), DeviceId::Cxl), 8 * MIB);
         assert_eq!(h.node.topo.bytes_moved(DeviceId::Host, DeviceId::Gpu(0)), 512 * MIB);
-        // Accounting follows the bytes: host ledger empty, CXL holds them.
+        // Accounting follows the bytes at issue time: host ledger empty,
+        // CXL holds them. The host *segment* stays pinned (pending
+        // free) until the staged copy completes — no early reuse.
         assert_eq!(lease.tier(), MemoryTier::CxlMem);
         assert_eq!(h.live_bytes_on_tier(MemoryTier::Host), 0);
         assert_eq!(h.live_bytes_on_tier(MemoryTier::CxlMem), 8 * MIB);
-        assert_eq!(h.node.host.used(), 0);
+        assert_eq!(h.pending_free_bytes_on_tier(MemoryTier::Host), 8 * MIB);
+        assert_eq!(h.node.host.used(), 8 * MIB, "source pinned while the copy reads it");
         assert_eq!(h.node.cxl.used(), 8 * MIB);
         assert_eq!(h.migrations, 1);
-        // The drain barrier covers both hops: releasing waits out hop 2.
+        // The drain barrier covers both hops: releasing waits out hop 2,
+        // which also releases the deferred source segment.
         assert!(report.end > h.node.clock.now(), "staged migration is async");
         s.release(&mut h, lease).unwrap();
         assert!(h.node.clock.now() >= report.end);
         assert_eq!(h.live_bytes_on_tier(MemoryTier::CxlMem), 0);
+        assert_eq!(h.pending_free_bytes_on_tier(MemoryTier::Host), 0);
+        assert_eq!(h.node.host.used(), 0, "deferred free lands at copy completion");
         // And the reverse direction (CXL -> host) stages too.
         let lease =
             s.alloc(&mut h, MIB, TierPreference::Pinned(MemoryTier::CxlMem), hints(0)).unwrap();

@@ -86,7 +86,10 @@ impl PeerMonitor {
     pub fn observe(&mut self, node: &SimNode) {
         let now = node.clock.now();
         for (i, gpu) in node.gpus.iter().enumerate() {
-            let used = gpu.tenant.used_at(now);
+            // Timeline *and* actor-held segments: closed-loop tenant
+            // allocation churn feeds the stability signal exactly like
+            // replayed timeline churn.
+            let used = gpu.tenant_used_at(now);
             let prev = self.last_seen_used[i];
             if used != prev {
                 let delta = used.abs_diff(prev);
@@ -183,7 +186,11 @@ impl PeerMonitor {
                 let cap = node.gpus[i].hbm.capacity();
                 let mut harvestable = node.harvestable_now(i);
                 if let Some(limit) = partition_limit[i] {
-                    harvestable = harvestable.min(limit.saturating_sub(node.gpus[i].hbm.used()));
+                    // The MIG partition caps *harvest* bytes; tenant
+                    // actors' arena segments don't count against it.
+                    let harvest_used =
+                        node.gpus[i].hbm.used().saturating_sub(node.gpus[i].tenant_held);
+                    harvestable = harvestable.min(limit.saturating_sub(harvest_used));
                 }
                 PeerView {
                     device: i,

@@ -746,7 +746,10 @@ mod tests {
         assert_eq!(lease.tier(), MemoryTier::Host, "lease tracks its residency");
         assert_eq!(hr.live_bytes_on(1), 0);
         assert_eq!(hr.live_bytes_on_tier(MemoryTier::Host), 8 * MIB);
-        assert_eq!(hr.node.gpus[1].hbm.used(), 0);
+        // ledger moves at issue time; the peer segment stays pinned
+        // (deferred free) until the in-flight copy completes
+        assert_eq!(hr.node.gpus[1].hbm.used(), 8 * MIB);
+        assert_eq!(hr.pending_free_bytes_on_tier(MemoryTier::PeerHbm(1)), 8 * MIB);
         assert_eq!(hr.node.host.used(), 8 * MIB);
         // promote back to the peer
         Transfer::new().migrate(&lease, MemoryTier::PeerHbm(1)).submit(&mut hr).unwrap();

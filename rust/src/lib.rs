@@ -16,6 +16,7 @@
 //! | module | role |
 //! |---|---|
 //! | [`memsim`] | calibrated multi-GPU node simulation: HBM/host/CXL arenas, NVLink/PCIe/CXL interconnect model, inter-node NIC fabric, virtual clock, async DMA, tenant pressure |
+//! | [`tenantsim`] | closed-loop co-tenant workloads: a `TenantActor` trait (training / inference / batch actors + replay-mode timeline) allocating real arena segments and injecting collective traffic, mediated by a `PressureBroker` that makes harvest leases yield — tenants always win |
 //! | [`cluster`] | scale-out serving: N simulated nodes behind a pluggable request router (round-robin / least-loaded / prefix-affinity), RDMA/Ethernet node fabric, cross-node prefix-KV migration, per-node + aggregate metrics rollups |
 //! | [`harvest`] | the paper's contribution behind a tier-aware lease API: `MemoryTier` + `TierPreference` on every allocation, sessions with RAII `Lease`s that carry their resident tier, vectored all-or-nothing `alloc_many`, pull-model revocation events with `Dropped`/`Demoted` actions, the unified `Transfer` builder (populate/fetch/migrate), cross-tier placement policies (`place_tiered`), deadline-aware prefetch planning (`prefetch`), MIG isolation (the paper's raw `harvest_alloc`/`harvest_free`/`harvest_register_cb` survive as deprecated shims) |
 //! | [`moe`] | MoE serving path: Table-1 model registry, routing simulator, expert residency map + rebalancer, CGOPipe-style pipeline |
@@ -37,6 +38,7 @@ pub mod memsim;
 pub mod moe;
 pub mod runtime;
 pub mod server;
+pub mod tenantsim;
 pub mod trace;
 pub mod util;
 

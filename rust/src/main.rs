@@ -265,6 +265,18 @@ fn serve_kv(cfg: &DeploymentConfig) -> Result<()> {
     let scheduler = cfg.scheduler_spec()?.build();
     let engine_cfg = SimEngineConfig::new(kv, cfg.decode_slots, cfg.max_running);
     let mut engine = SimEngine::new(engine_cfg, scheduler, 0);
+    if let Some(fleet) = cfg.tenant_fleet() {
+        let mix = cfg.node0_tenant_mix();
+        println!(
+            "  tenants: {} actors ({} training / {} inference / {} batch, {} priority bursts)",
+            fleet.len(),
+            mix.training,
+            mix.inference,
+            mix.batch,
+            mix.batch_priority.name()
+        );
+        engine = engine.with_tenants(fleet);
+    }
     let requests = WorkloadGen::new(cfg.workload_spec()).generate();
     println!(
         "  kv model {}: {} per token, block = {} tokens, pool = {} blocks",
@@ -292,6 +304,16 @@ fn serve_kv(cfg: &DeploymentConfig) -> Result<()> {
         s.host_reloads,
         s.recomputes
     );
+    if let Some(t) = &report.tenant {
+        println!(
+            "  tenants: {} held, {} injected, {} lease yields ({} demotions), {} denied",
+            fmt_bytes(t.held_bytes()),
+            fmt_bytes(t.traffic_bytes()),
+            t.broker.lease_yields,
+            hr.demotions,
+            t.denied()
+        );
+    }
     Ok(())
 }
 
@@ -335,6 +357,15 @@ fn serve_kv_cluster(cfg: &DeploymentConfig) -> Result<()> {
             n.kv_stats.reloads(),
             fmt_ns(n.metrics.ttft.percentile(99.0) as u64)
         );
+        if let Some(t) = &n.tenant {
+            println!(
+                "      tenants: {} held, {} injected, {} lease yields, {} denied",
+                fmt_bytes(t.held_bytes()),
+                fmt_bytes(t.traffic_bytes()),
+                t.broker.lease_yields,
+                t.denied()
+            );
+        }
     }
     Ok(())
 }

@@ -59,6 +59,17 @@ impl CollectiveTraffic {
         }
     }
 
+    /// Fast-forward the schedule so the next step starts no earlier
+    /// than `t` (never rewinds). Used by tenant actors created mid-run:
+    /// without it the first `inject_until` would back-fill steps from
+    /// virtual time 0.
+    pub fn skip_to(&mut self, t: Ns) {
+        if self.next_step < t {
+            let missed = (t - self.next_step).div_ceil(self.period_ns);
+            self.next_step += missed * self.period_ns;
+        }
+    }
+
     /// Mean bytes/sec this collective pushes onto each participating
     /// link direction (for sizing experiments).
     pub fn per_link_demand_bytes_per_sec(&self) -> f64 {

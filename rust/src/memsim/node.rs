@@ -98,11 +98,35 @@ impl NodeSpec {
     }
 }
 
-/// One simulated GPU: its HBM arena plus the co-tenant load timeline.
+/// One simulated GPU: its HBM arena plus the co-tenant load.
+///
+/// Co-tenant usage has two sources that coexist:
+///
+/// * `tenant` — the exogenous *timeline* (replay mode: pre-generated
+///   pressure that occupies no real arena segments);
+/// * `tenant_held` — bytes tenant **actors**
+///   ([`crate::tenantsim`]) hold as real segments *inside* `hbm`, so
+///   they genuinely fragment the arena. Maintained by the
+///   [`crate::tenantsim::PressureBroker`].
+///
+/// Total co-tenant usage at time `t` is [`Gpu::tenant_used_at`]; the
+/// harvest controller's own bytes on this GPU are
+/// `hbm.used() - tenant_held` (minus any deferred migration-source
+/// frees it tracks itself).
 #[derive(Debug)]
 pub struct Gpu {
     pub hbm: Hbm,
     pub tenant: TenantLoad,
+    /// Bytes of real `hbm` segments held by tenant actors.
+    pub tenant_held: u64,
+}
+
+impl Gpu {
+    /// Combined co-tenant usage at `t`: the exogenous timeline plus
+    /// actor-held arena segments.
+    pub fn tenant_used_at(&self, t: Ns) -> u64 {
+        self.tenant.used_at(t) + self.tenant_held
+    }
 }
 
 /// The wired node.
@@ -137,6 +161,7 @@ impl SimNode {
             .map(|g| Gpu {
                 hbm: Hbm::new(g.hbm_bytes, g.fit),
                 tenant: TenantLoad::constant(g.hbm_bytes, 0),
+                tenant_held: 0,
             })
             .collect();
         let h2d_streams = (0..n).map(|_| dma.create_stream()).collect();
@@ -175,7 +200,9 @@ impl SimNode {
     }
 
     /// Bytes currently free for harvesting on GPU `i`: capacity minus
-    /// co-tenant usage minus what we have already allocated there.
+    /// co-tenant usage minus what is already allocated in the arena.
+    /// Actor-held tenant segments live *inside* the arena (counted by
+    /// `hbm.used()`); only the exogenous timeline is added on top.
     pub fn harvestable_now(&self, i: usize) -> u64 {
         let g = &self.gpus[i];
         let tenant_used = g.tenant.used_at(self.clock.now());

@@ -17,6 +17,7 @@ use crate::harvest::prefetch::PrefetchConfig;
 use crate::harvest::HarvestRuntime;
 use crate::kv::{KvConfig, KvOffloadManager, SeqId};
 use crate::memsim::Ns;
+use crate::tenantsim::{FleetStats, TenantFleet};
 use std::collections::BTreeMap;
 
 /// Engine configuration.
@@ -60,13 +61,15 @@ impl SimEngineConfig {
 }
 
 /// Run report. The prefetch outcome ledger lives in
-/// [`ServeMetrics::prefetch`] (None when prefetch was disabled).
+/// [`ServeMetrics::prefetch`] (None when prefetch was disabled);
+/// `tenant` carries the co-tenant fleet's counters when one ran.
 #[derive(Debug, Clone)]
 pub struct SimEngineReport {
     pub metrics: ServeMetrics,
     pub kv_stats: crate::kv::KvStats,
     pub scheduler: &'static str,
     pub use_harvest: bool,
+    pub tenant: Option<FleetStats>,
 }
 
 /// The engine.
@@ -74,6 +77,9 @@ pub struct SimEngine {
     cfg: SimEngineConfig,
     kv: KvOffloadManager,
     scheduler: Box<dyn Scheduler>,
+    /// Closed-loop co-tenants stepped on every time advance (None =
+    /// exogenous-timeline mode, the pre-fleet behavior).
+    tenants: Option<TenantFleet>,
 }
 
 impl SimEngine {
@@ -82,7 +88,7 @@ impl SimEngine {
         if let Some(p) = cfg.prefetch {
             kv = kv.with_prefetch(p);
         }
-        Self { cfg, kv, scheduler }
+        Self { cfg, kv, scheduler, tenants: None }
     }
 
     pub fn with_kv(
@@ -90,7 +96,26 @@ impl SimEngine {
         scheduler: Box<dyn Scheduler>,
         kv: KvOffloadManager,
     ) -> Self {
-        Self { cfg, kv, scheduler }
+        Self { cfg, kv, scheduler, tenants: None }
+    }
+
+    /// Attach a co-tenant fleet: every virtual-time advance in the run
+    /// loop routes through [`TenantFleet::advance_to`], so tenant
+    /// allocation churn and collective traffic land exactly where the
+    /// serve path's own DMA does.
+    pub fn with_tenants(mut self, fleet: TenantFleet) -> Self {
+        self.tenants = Some(fleet);
+        self
+    }
+
+    /// Advance virtual time, through the fleet when one is attached.
+    fn advance(&mut self, hr: &mut HarvestRuntime, t: Ns) {
+        match &mut self.tenants {
+            Some(f) => f.advance_to(hr, t),
+            None => {
+                hr.advance_to(t);
+            }
+        }
     }
 
     /// Serve `requests` to completion in virtual time.
@@ -98,6 +123,11 @@ impl SimEngine {
         let scheduler_name = self.scheduler.name();
         let mut metrics = ServeMetrics::new();
         metrics.on_start(hr.node.clock.now());
+        // Co-tenants exist from t=0 (persistent footprints, replay
+        // timelines), not from the first time advance.
+        if let Some(f) = self.tenants.as_mut() {
+            f.install(hr);
+        }
         let mut batcher = ContinuousBatcher::new(self.cfg.max_running, requests);
         let mut live: BTreeMap<SeqId, Request> = BTreeMap::new();
 
@@ -105,14 +135,16 @@ impl SimEngine {
             // Idle: jump to the next arrival.
             if self.scheduler.runnable() == 0 {
                 if let Some(at) = batcher.next_arrival() {
-                    hr.advance_to(at.max(hr.node.clock.now()));
+                    let target = at.max(hr.node.clock.now());
+                    self.advance(hr, target);
                 }
             }
             // Admission + prefill.
             let now = hr.node.clock.now();
             for mut req in batcher.admit(now, |_| true) {
                 let prefill_ns = self.cfg.prefill_ns_per_token * req.prompt_tokens as u64;
-                hr.advance_to(hr.node.clock.now() + prefill_ns);
+                let target = hr.node.clock.now() + prefill_ns;
+                self.advance(hr, target);
                 // Vectored admission: free the prompt's block footprint in
                 // one all-or-nothing batch instead of evicting per token.
                 let blocks = (req.prompt_tokens as usize).div_ceil(self.cfg.kv.block_tokens as usize);
@@ -158,7 +190,8 @@ impl SimEngine {
                 self.kv.promote_blocks(hr, &predicted, deadline);
             }
             // Batched compute.
-            hr.advance_to(hr.node.clock.now() + self.cfg.step_compute_ns);
+            let compute_end = hr.node.clock.now() + self.cfg.step_compute_ns;
+            self.advance(hr, compute_end);
             let step_ns = hr.node.clock.now() - step_start;
             for &seq in &cohort {
                 self.kv.append_token(hr, seq);
@@ -181,6 +214,7 @@ impl SimEngine {
             kv_stats: self.kv.stats.clone(),
             scheduler: scheduler_name,
             use_harvest: self.cfg.kv.use_harvest,
+            tenant: self.tenants.as_ref().map(|f| f.stats()),
         }
     }
 }

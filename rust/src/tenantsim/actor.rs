@@ -1,0 +1,156 @@
+//! The [`TenantActor`] trait and the context actors act through.
+//!
+//! An actor is an event-driven co-tenant workload on the shared
+//! simulation clock: it names the next virtual time it wants to run
+//! ([`TenantActor::next_wake`]), and when the [`super::TenantFleet`]
+//! reaches that time it gets one [`TenantActor::step`] with a
+//! [`TenantCtx`] — the capability to allocate/free real arena segments
+//! (through the [`super::PressureBroker`], so harvest leases yield) and
+//! to inject traffic onto the node's FIFO links.
+
+use super::broker::{PressureBroker, TenantOom};
+use crate::harvest::{HarvestRuntime, MemoryTier};
+use crate::memsim::{CollectiveTraffic, DeviceId, Ns};
+
+/// How hard a tenant allocation pushes when the arena is full.
+///
+/// ```
+/// use harvest::tenantsim::TenantPriority;
+/// // Guaranteed tenants evict harvest leases; best-effort ones don't.
+/// assert!(TenantPriority::Guaranteed.evicts_harvest());
+/// assert!(!TenantPriority::BestEffort.evicts_harvest());
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TenantPriority {
+    /// The paper's co-tenant: its allocation *must* succeed while any
+    /// revocable harvest lease (or in-flight migration source) occupies
+    /// the arena — the broker revokes/demotes/waits until it fits.
+    #[default]
+    Guaranteed,
+    /// Opportunistic tenant (e.g. preemptible batch filler): takes only
+    /// genuinely free capacity and is denied rather than evicting
+    /// harvest state.
+    BestEffort,
+}
+
+impl TenantPriority {
+    /// Whether a failed allocation at this priority may revoke harvest
+    /// leases to make room.
+    pub fn evicts_harvest(&self) -> bool {
+        matches!(self, TenantPriority::Guaranteed)
+    }
+
+    /// Parse the config-file spelling.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "guaranteed" => Ok(TenantPriority::Guaranteed),
+            "best-effort" | "besteffort" => Ok(TenantPriority::BestEffort),
+            other => anyhow::bail!("unknown tenant priority `{other}` (guaranteed | best-effort)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TenantPriority::Guaranteed => "guaranteed",
+            TenantPriority::BestEffort => "best-effort",
+        }
+    }
+}
+
+/// A real arena segment held by a tenant actor. Obtained from
+/// [`TenantCtx::alloc`], returned with [`TenantCtx::free`]; the broker
+/// keeps per-tier held-byte accounting in sync.
+#[derive(Debug)]
+pub struct TenantSegment {
+    pub tier: MemoryTier,
+    pub(crate) alloc: crate::memsim::AllocId,
+    pub bytes: u64,
+}
+
+/// Cumulative per-actor activity counters (for reports and benches).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ActorStats {
+    /// Steps executed.
+    pub steps: u64,
+    /// Bytes currently held across all tiers.
+    pub held_bytes: u64,
+    /// Cumulative bytes allocated.
+    pub alloc_bytes: u64,
+    /// Cumulative bytes freed.
+    pub freed_bytes: u64,
+    /// Allocations denied (best-effort) or failed (genuine OOM).
+    pub denied: u64,
+    /// Bytes of link traffic injected (collectives, H2D loads).
+    pub traffic_bytes: u64,
+}
+
+/// What an actor can do during a step: broker-mediated allocation plus
+/// direct traffic injection onto the node's links.
+pub struct TenantCtx<'a> {
+    pub hr: &'a mut HarvestRuntime,
+    pub broker: &'a mut PressureBroker,
+}
+
+impl TenantCtx<'_> {
+    /// Current virtual time.
+    pub fn now(&self) -> Ns {
+        self.hr.node.clock.now()
+    }
+
+    /// Allocate `bytes` of tier memory for a tenant. `PeerHbm(g)` here
+    /// simply names GPU `g`'s arena — tenants are co-located, every GPU
+    /// is "local" to them. See [`PressureBroker::alloc`].
+    pub fn alloc(
+        &mut self,
+        tier: MemoryTier,
+        bytes: u64,
+        priority: TenantPriority,
+    ) -> Result<TenantSegment, TenantOom> {
+        self.broker.alloc(self.hr, tier, bytes, priority)
+    }
+
+    /// Return a segment to its arena.
+    pub fn free(&mut self, seg: TenantSegment) {
+        self.broker.free(self.hr, seg);
+    }
+
+    /// Schedule this collective's steps up to `until` onto the node's
+    /// links (FIFO per direction — Harvest's own copies queue behind
+    /// them, and vice versa). Returns the bytes injected.
+    pub fn inject_collective(&mut self, c: &mut CollectiveTraffic, until: Ns) -> u64 {
+        let before = c.bytes_injected;
+        c.inject_until(&mut self.hr.node.topo, until);
+        c.bytes_injected - before
+    }
+
+    /// Schedule one point-to-point transfer starting now (e.g. an
+    /// inference tenant's host→GPU weight or KV load).
+    pub fn schedule_copy(&mut self, src: DeviceId, dst: DeviceId, bytes: u64) {
+        let now = self.now();
+        self.hr.node.topo.schedule(src, dst, bytes, now);
+    }
+}
+
+/// A closed-loop co-tenant workload on the simulation clock.
+///
+/// Contract: after [`TenantActor::step`] runs at time `t`, the actor's
+/// [`TenantActor::next_wake`] must be strictly greater than `t` (or
+/// `None`) — the fleet relies on this for progress.
+pub trait TenantActor {
+    /// Display label (e.g. `train-0`).
+    fn label(&self) -> &str;
+
+    /// One-time setup at fleet install: replay actors register their
+    /// timeline, resident tenants grab their persistent footprint.
+    fn install(&mut self, _ctx: &mut TenantCtx<'_>) {}
+
+    /// The next virtual time this actor wants to run; `None` = passive.
+    fn next_wake(&self) -> Option<Ns>;
+
+    /// Run the actor at `now` (its wake time, possibly later if the
+    /// fleet is catching up after an idle jump).
+    fn step(&mut self, now: Ns, ctx: &mut TenantCtx<'_>);
+
+    /// Cumulative activity counters.
+    fn stats(&self) -> ActorStats;
+}

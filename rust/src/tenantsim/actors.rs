@@ -1,0 +1,415 @@
+//! Concrete co-tenant actors: a training job, a second inference
+//! service, bursty batch jobs, and the replay-mode wrapper over the
+//! pre-generated [`TenantLoad`] timeline.
+//!
+//! All actors are deterministic given their seed and the fleet's step
+//! order, so runs reproduce exactly.
+
+use super::actor::{ActorStats, TenantActor, TenantCtx, TenantPriority, TenantSegment};
+use crate::harvest::MemoryTier;
+use crate::memsim::{CollectivePattern, CollectiveTraffic, DeviceId, Ns, TenantLoad};
+use crate::util::rng::Rng;
+
+fn take_all(stats: &mut ActorStats, ctx: &mut TenantCtx<'_>, segs: &mut Vec<TenantSegment>) {
+    for seg in segs.drain(..) {
+        stats.freed_bytes += seg.bytes;
+        stats.held_bytes -= seg.bytes;
+        ctx.free(seg);
+    }
+}
+
+fn grab(
+    stats: &mut ActorStats,
+    ctx: &mut TenantCtx<'_>,
+    tier: MemoryTier,
+    bytes: u64,
+    priority: TenantPriority,
+) -> Option<TenantSegment> {
+    match ctx.alloc(tier, bytes, priority) {
+        Ok(seg) => {
+            stats.alloc_bytes += bytes;
+            stats.held_bytes += bytes;
+            Some(seg)
+        }
+        Err(_) => {
+            stats.denied += 1;
+            None
+        }
+    }
+}
+
+/// A data-parallel training job: a persistent per-GPU model footprint,
+/// an activation footprint that oscillates with the training step, a
+/// host-DRAM staging buffer (optimizer state / checkpoints), and a
+/// periodic ring all-reduce injected onto the same NVLink FIFOs the
+/// harvest DMA engine uses — the §7 congestion caveat made concrete.
+pub struct TrainingActor {
+    label: String,
+    gpus: Vec<usize>,
+    model_bytes_per_gpu: u64,
+    activation_bytes: u64,
+    host_bytes: u64,
+    step_period: Ns,
+    collective: CollectiveTraffic,
+    model: Vec<TenantSegment>,
+    host_seg: Vec<TenantSegment>,
+    activations: Vec<TenantSegment>,
+    next: Ns,
+    stats: ActorStats,
+}
+
+impl TrainingActor {
+    /// A job training across `gpus` (ring order), holding
+    /// `model_bytes_per_gpu` permanently on each, oscillating
+    /// `activation_bytes` per GPU with the step cadence, staging
+    /// `host_bytes` in host DRAM, and all-reducing
+    /// `bytes_per_allreduce` per participant every `step_period`.
+    pub fn new(
+        label: impl Into<String>,
+        gpus: Vec<usize>,
+        model_bytes_per_gpu: u64,
+        activation_bytes: u64,
+        host_bytes: u64,
+        bytes_per_allreduce: u64,
+        step_period: Ns,
+    ) -> Self {
+        let collective = CollectiveTraffic::new(
+            CollectivePattern::RingAllReduce,
+            gpus.clone(),
+            bytes_per_allreduce,
+            step_period,
+        );
+        Self {
+            label: label.into(),
+            gpus,
+            model_bytes_per_gpu,
+            activation_bytes,
+            host_bytes,
+            step_period,
+            collective,
+            model: Vec::new(),
+            host_seg: Vec::new(),
+            activations: Vec::new(),
+            next: 0,
+            stats: ActorStats::default(),
+        }
+    }
+}
+
+impl TenantActor for TrainingActor {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn install(&mut self, ctx: &mut TenantCtx<'_>) {
+        let now = ctx.now();
+        self.collective.skip_to(now);
+        self.next = now;
+        if self.model_bytes_per_gpu > 0 {
+            for &g in &self.gpus {
+                if let Some(seg) = grab(
+                    &mut self.stats,
+                    ctx,
+                    MemoryTier::PeerHbm(g),
+                    self.model_bytes_per_gpu,
+                    TenantPriority::Guaranteed,
+                ) {
+                    self.model.push(seg);
+                }
+            }
+        }
+        if self.host_bytes > 0 {
+            if let Some(seg) = grab(
+                &mut self.stats,
+                ctx,
+                MemoryTier::Host,
+                self.host_bytes,
+                TenantPriority::Guaranteed,
+            ) {
+                self.host_seg.push(seg);
+            }
+        }
+    }
+
+    fn next_wake(&self) -> Option<Ns> {
+        Some(self.next)
+    }
+
+    fn step(&mut self, now: Ns, ctx: &mut TenantCtx<'_>) {
+        self.stats.steps += 1;
+        // This step's gradient exchange: queued onto the shared links,
+        // where harvest fetches will contend with it.
+        self.stats.traffic_bytes +=
+            ctx.inject_collective(&mut self.collective, now + self.step_period);
+        // Activations build up during the forward pass and are released
+        // after the backward pass: alternate steps alternate footprint.
+        if self.activations.is_empty() {
+            if self.activation_bytes > 0 {
+                for &g in &self.gpus {
+                    if let Some(seg) = grab(
+                        &mut self.stats,
+                        ctx,
+                        MemoryTier::PeerHbm(g),
+                        self.activation_bytes,
+                        TenantPriority::Guaranteed,
+                    ) {
+                        self.activations.push(seg);
+                    }
+                }
+            }
+        } else {
+            take_all(&mut self.stats, ctx, &mut self.activations);
+        }
+        self.next = now + self.step_period;
+    }
+
+    fn stats(&self) -> ActorStats {
+        self.stats
+    }
+}
+
+/// A second inference service co-located on one GPU: Poisson request
+/// arrivals, each holding a KV-sized segment for a service-time-like
+/// duration and pulling its bytes host→GPU over PCIe on admission.
+/// Sized so the stationary mean footprint tracks `target_util` of the
+/// GPU's capacity.
+pub struct InferenceActor {
+    label: String,
+    gpu: usize,
+    rng: Rng,
+    mean_job_bytes: u64,
+    mean_hold: Ns,
+    mean_gap: Ns,
+    priority: TenantPriority,
+    /// (expiry, segment), unordered; scanned on wake.
+    jobs: Vec<(Ns, TenantSegment)>,
+    next_arrival: Ns,
+    stats: ActorStats,
+}
+
+impl InferenceActor {
+    pub fn new(
+        label: impl Into<String>,
+        gpu: usize,
+        capacity: u64,
+        target_util: f64,
+        mean_job_bytes: u64,
+        mean_hold: Ns,
+        seed: u64,
+    ) -> Self {
+        let target_util = target_util.clamp(0.01, 1.0);
+        // Little's law: held ≈ rate × hold × size; solve for the gap.
+        let gap = mean_job_bytes as f64 * mean_hold as f64
+            / (target_util * capacity as f64).max(1.0);
+        Self {
+            label: label.into(),
+            gpu,
+            rng: Rng::new(seed),
+            mean_job_bytes,
+            mean_hold,
+            mean_gap: (gap as Ns).max(1),
+            priority: TenantPriority::Guaranteed,
+            jobs: Vec::new(),
+            next_arrival: 0,
+            stats: ActorStats::default(),
+        }
+    }
+}
+
+impl TenantActor for InferenceActor {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn install(&mut self, ctx: &mut TenantCtx<'_>) {
+        self.next_arrival = ctx.now();
+    }
+
+    fn next_wake(&self) -> Option<Ns> {
+        let expiry = self.jobs.iter().map(|&(end, _)| end).min();
+        Some(match expiry {
+            Some(e) => e.min(self.next_arrival),
+            None => self.next_arrival,
+        })
+    }
+
+    fn step(&mut self, now: Ns, ctx: &mut TenantCtx<'_>) {
+        self.stats.steps += 1;
+        // Retire finished requests.
+        let mut i = 0;
+        while i < self.jobs.len() {
+            if self.jobs[i].0 <= now {
+                let (_, seg) = self.jobs.swap_remove(i);
+                self.stats.freed_bytes += seg.bytes;
+                self.stats.held_bytes -= seg.bytes;
+                ctx.free(seg);
+            } else {
+                i += 1;
+            }
+        }
+        // Admit the arrival that woke us (if it did).
+        if now >= self.next_arrival {
+            let scale = self.rng.lognormal(0.0, 0.5);
+            let bytes = ((self.mean_job_bytes as f64 * scale) as u64).max(1 << 20);
+            let tier = MemoryTier::PeerHbm(self.gpu);
+            if let Some(seg) = grab(&mut self.stats, ctx, tier, bytes, self.priority) {
+                // KV / weight ingress rides the host link.
+                ctx.schedule_copy(DeviceId::Host, DeviceId::Gpu(self.gpu), bytes);
+                self.stats.traffic_bytes += bytes;
+                let hold = (self.rng.exp(1.0 / self.mean_hold as f64) as Ns).max(1);
+                self.jobs.push((now + hold, seg));
+            }
+            let gap = (self.rng.exp(1.0 / self.mean_gap as f64) as Ns).max(1);
+            self.next_arrival = now + gap;
+        }
+    }
+
+    fn stats(&self) -> ActorStats {
+        self.stats
+    }
+}
+
+/// A bursty batch job: exponential off-periods, then a burst that grabs
+/// one large segment, loads it host→GPU, holds it for an exponential
+/// on-period and releases it. With [`TenantPriority::Guaranteed`] a
+/// burst is exactly the paper's revocation trigger; with
+/// [`TenantPriority::BestEffort`] it models a preemptible filler that
+/// loses to Harvest instead.
+pub struct BatchActor {
+    label: String,
+    gpu: usize,
+    burst_bytes: u64,
+    mean_idle: Ns,
+    mean_hold: Ns,
+    priority: TenantPriority,
+    rng: Rng,
+    holding: Option<TenantSegment>,
+    next: Ns,
+    stats: ActorStats,
+}
+
+impl BatchActor {
+    pub fn new(
+        label: impl Into<String>,
+        gpu: usize,
+        burst_bytes: u64,
+        mean_idle: Ns,
+        mean_hold: Ns,
+        priority: TenantPriority,
+        seed: u64,
+    ) -> Self {
+        Self {
+            label: label.into(),
+            gpu,
+            burst_bytes,
+            mean_idle,
+            mean_hold,
+            priority,
+            rng: Rng::new(seed),
+            holding: None,
+            next: 0,
+            stats: ActorStats::default(),
+        }
+    }
+}
+
+impl TenantActor for BatchActor {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn install(&mut self, ctx: &mut TenantCtx<'_>) {
+        // First burst after one idle period from install time.
+        self.next = ctx.now() + (self.rng.exp(1.0 / self.mean_idle as f64) as Ns).max(1);
+    }
+
+    fn next_wake(&self) -> Option<Ns> {
+        Some(self.next)
+    }
+
+    fn step(&mut self, now: Ns, ctx: &mut TenantCtx<'_>) {
+        self.stats.steps += 1;
+        if self.burst_bytes == 0 {
+            self.next = now + self.mean_idle.max(1);
+            return;
+        }
+        match self.holding.take() {
+            Some(seg) => {
+                self.stats.freed_bytes += seg.bytes;
+                self.stats.held_bytes -= seg.bytes;
+                ctx.free(seg);
+                self.next = now + (self.rng.exp(1.0 / self.mean_idle as f64) as Ns).max(1);
+            }
+            None => {
+                match grab(
+                    &mut self.stats,
+                    ctx,
+                    MemoryTier::PeerHbm(self.gpu),
+                    self.burst_bytes,
+                    self.priority,
+                ) {
+                    Some(seg) => {
+                        ctx.schedule_copy(DeviceId::Host, DeviceId::Gpu(self.gpu), seg.bytes);
+                        self.stats.traffic_bytes += seg.bytes;
+                        self.holding = Some(seg);
+                        self.next =
+                            now + (self.rng.exp(1.0 / self.mean_hold as f64) as Ns).max(1);
+                    }
+                    None => {
+                        // denied (best-effort) or genuine OOM: back off
+                        self.next =
+                            now + (self.rng.exp(1.0 / self.mean_idle as f64) as Ns).max(1);
+                    }
+                }
+            }
+        }
+    }
+
+    fn stats(&self) -> ActorStats {
+        self.stats
+    }
+}
+
+/// Replay mode: the pre-generated [`TenantLoad`] timeline behind the
+/// same trait. Installing it registers the timeline on the node —
+/// exactly what pre-fleet code did with
+/// [`crate::memsim::SimNode::set_tenant_load`] — and the actor then
+/// stays passive, so runs reproduce PR-≤4 pressure sequences
+/// bit-for-bit.
+pub struct ReplayActor {
+    label: String,
+    gpu: usize,
+    load: Option<TenantLoad>,
+    stats: ActorStats,
+}
+
+impl ReplayActor {
+    /// Replay `load` on GPU `gpu`. The timeline's capacity must match
+    /// the GPU's HBM capacity (asserted at install).
+    pub fn new(label: impl Into<String>, gpu: usize, load: TenantLoad) -> Self {
+        Self { label: label.into(), gpu, load: Some(load), stats: ActorStats::default() }
+    }
+}
+
+impl TenantActor for ReplayActor {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn install(&mut self, ctx: &mut TenantCtx<'_>) {
+        let load = self.load.take().expect("replay actor installs once");
+        ctx.hr.node.set_tenant_load(self.gpu, load);
+    }
+
+    fn next_wake(&self) -> Option<Ns> {
+        // The timeline drives pressure on its own: `advance_to` already
+        // enforces at each of its change points. No steps needed.
+        None
+    }
+
+    fn step(&mut self, _now: Ns, _ctx: &mut TenantCtx<'_>) {}
+
+    fn stats(&self) -> ActorStats {
+        self.stats
+    }
+}

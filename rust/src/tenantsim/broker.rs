@@ -1,0 +1,343 @@
+//! The [`PressureBroker`]: mediates tenant allocation demands against
+//! harvested leases.
+//!
+//! The paper's correctness invariant is that harvesting is *invisible*
+//! to co-tenants: their allocations behave as if Harvest were not
+//! there. The broker enforces exactly that. A tenant allocation first
+//! tries the arena directly (free capacity); if it fails and the tenant
+//! is [`TenantPriority::Guaranteed`], the broker makes harvest yield —
+//! first waiting out in-flight migration reads whose budget already
+//! left the tier ([`HarvestRuntime::drain_deferred_frees`]: pure
+//! recovery, an allocator stall), then revoking or demoting leases
+//! ([`HarvestRuntime::yield_to_tenant`] /
+//! [`HarvestRuntime::yield_tier_to_tenant`]) — until the allocation
+//! fits or harvest genuinely holds nothing there. Only then is the
+//! tenant OOM, and that OOM is real: the arena is full of *other
+//! tenants'* bytes.
+
+use super::actor::{TenantPriority, TenantSegment};
+use crate::harvest::{HarvestRuntime, MemoryTier};
+
+/// A tenant allocation failure. After a guaranteed-priority failure no
+/// revocable harvest lease remains on the tier — the pressure came from
+/// other tenants, not from Harvest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantOom {
+    pub tier: MemoryTier,
+    pub requested: u64,
+}
+
+impl std::fmt::Display for TenantOom {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tenant OOM: {} bytes on {}", self.requested, self.tier)
+    }
+}
+
+impl std::error::Error for TenantOom {}
+
+/// Cumulative broker counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BrokerStats {
+    pub allocs: u64,
+    pub alloc_bytes: u64,
+    pub frees: u64,
+    pub freed_bytes: u64,
+    /// Harvest leases revoked/demoted to make a tenant allocation fit.
+    pub lease_yields: u64,
+    /// Times a tenant allocation had to wait out an in-flight
+    /// migration's source read (deferred frees drained).
+    pub inflight_waits: u64,
+    /// Best-effort allocations denied (no eviction attempted).
+    pub denied: u64,
+    /// Guaranteed allocations that failed with no harvest lease left to
+    /// revoke — genuine tenant-vs-tenant OOM.
+    pub oom: u64,
+    /// OOMs declared while harvest still held live bytes on the tier.
+    /// Always 0 by construction ("tenants always win"); counted so the
+    /// conservation property test can assert it directly.
+    pub oom_with_harvest: u64,
+}
+
+/// Mediates tenant allocations against harvested leases (one per
+/// [`super::TenantFleet`], i.e. per node).
+///
+/// Tenant segments are real arena segments; per-GPU held bytes live on
+/// [`crate::memsim::node::Gpu::tenant_held`] (where the harvest
+/// controller's pressure accounting reads them), host/CXL held bytes on
+/// the broker itself (the arenas' `free_bytes` is what `place_tiered`
+/// consults there).
+#[derive(Debug, Default)]
+pub struct PressureBroker {
+    host_held: u64,
+    cxl_held: u64,
+    pub stats: BrokerStats,
+}
+
+impl PressureBroker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bytes tenant actors hold on `tier` through this broker's node.
+    pub fn held_on(&self, hr: &HarvestRuntime, tier: MemoryTier) -> u64 {
+        match tier {
+            MemoryTier::PeerHbm(g) => hr.node.gpus[g].tenant_held,
+            MemoryTier::Host => self.host_held,
+            MemoryTier::CxlMem => self.cxl_held,
+            MemoryTier::LocalHbm => 0,
+        }
+    }
+
+    /// Allocate `bytes` on `tier` for a tenant. Guaranteed priority
+    /// makes harvest yield (revoke → demote → wait out in-flight
+    /// migration reads) until the allocation fits or no harvest state
+    /// remains on the tier; best-effort takes free capacity or is
+    /// denied.
+    pub fn alloc(
+        &mut self,
+        hr: &mut HarvestRuntime,
+        tier: MemoryTier,
+        bytes: u64,
+        priority: TenantPriority,
+    ) -> Result<TenantSegment, TenantOom> {
+        assert!(bytes > 0, "zero-size tenant allocation");
+        assert!(tier != MemoryTier::LocalHbm, "local HBM is not a tenant tier");
+        if tier == MemoryTier::CxlMem && !hr.node.has_cxl() {
+            // No expander: a hard failure for a guaranteed tenant, a
+            // plain denial for a best-effort one.
+            if priority.evicts_harvest() {
+                self.stats.oom += 1;
+            } else {
+                self.stats.denied += 1;
+            }
+            return Err(TenantOom { tier, requested: bytes });
+        }
+        loop {
+            let arena = match tier {
+                MemoryTier::PeerHbm(g) => &mut hr.node.gpus[g].hbm,
+                MemoryTier::Host => &mut hr.node.host,
+                MemoryTier::CxlMem => &mut hr.node.cxl,
+                MemoryTier::LocalHbm => unreachable!(),
+            };
+            match arena.alloc(bytes) {
+                Ok(alloc) => {
+                    match tier {
+                        MemoryTier::PeerHbm(g) => hr.node.gpus[g].tenant_held += bytes,
+                        MemoryTier::Host => self.host_held += bytes,
+                        MemoryTier::CxlMem => self.cxl_held += bytes,
+                        MemoryTier::LocalHbm => unreachable!(),
+                    }
+                    self.stats.allocs += 1;
+                    self.stats.alloc_bytes += bytes;
+                    // The new footprint may push a peer under the
+                    // configured reserve headroom: enforce now, so
+                    // harvest yields when the tenant lands rather than
+                    // at the next consumer call.
+                    if tier.is_peer() {
+                        hr.enforce_pressure();
+                    }
+                    return Ok(TenantSegment { tier, alloc, bytes });
+                }
+                Err(_) => {
+                    if !priority.evicts_harvest() {
+                        self.stats.denied += 1;
+                        return Err(TenantOom { tier, requested: bytes });
+                    }
+                    // Prefer waiting out in-flight migration reads over
+                    // evicting another lease: a pending source's budget
+                    // has already left this tier, so draining it is pure
+                    // recovery (an allocator stall), not new harvest
+                    // loss. Without this order, demote_to_host would
+                    // cascade — every demotion leaves its source pinned,
+                    // so the retry keeps failing and evicts the next
+                    // victim until nothing remains.
+                    if hr.drain_deferred_frees(tier) > 0 {
+                        self.stats.inflight_waits += 1;
+                        continue;
+                    }
+                    if hr.yield_tier_to_tenant(tier) {
+                        self.stats.lease_yields += 1;
+                        continue;
+                    }
+                    self.stats.oom += 1;
+                    if hr.live_bytes_on_tier(tier) > 0 {
+                        self.stats.oom_with_harvest += 1;
+                    }
+                    return Err(TenantOom { tier, requested: bytes });
+                }
+            }
+        }
+    }
+
+    /// Return a segment to its arena.
+    pub fn free(&mut self, hr: &mut HarvestRuntime, seg: TenantSegment) {
+        match seg.tier {
+            MemoryTier::PeerHbm(g) => {
+                hr.node.gpus[g].hbm.free(seg.alloc);
+                hr.node.gpus[g].tenant_held -= seg.bytes;
+            }
+            MemoryTier::Host => {
+                hr.node.host.free(seg.alloc);
+                self.host_held -= seg.bytes;
+            }
+            MemoryTier::CxlMem => {
+                hr.node.cxl.free(seg.alloc);
+                self.cxl_held -= seg.bytes;
+            }
+            MemoryTier::LocalHbm => unreachable!("local HBM is not a tenant tier"),
+        }
+        self.stats.frees += 1;
+        self.stats.freed_bytes += seg.bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harvest::{
+        AllocHints, HarvestConfig, PayloadKind, RevocationReason, TierPreference, Transfer,
+    };
+    use crate::memsim::{NodeSpec, SimNode};
+
+    const GIB: u64 = 1 << 30;
+    const MIB: u64 = 1 << 20;
+
+    fn rt() -> HarvestRuntime {
+        HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2))
+    }
+
+    fn hints() -> AllocHints {
+        AllocHints { compute_gpu: Some(0), ..Default::default() }
+    }
+
+    #[test]
+    fn tenant_alloc_occupies_real_arena_bytes() {
+        let mut hr = rt();
+        let mut b = PressureBroker::new();
+        let seg = b
+            .alloc(&mut hr, MemoryTier::PeerHbm(1), 10 * GIB, TenantPriority::Guaranteed)
+            .unwrap();
+        assert_eq!(hr.node.gpus[1].hbm.used(), 10 * GIB);
+        assert_eq!(hr.node.gpus[1].tenant_held, 10 * GIB);
+        assert_eq!(hr.node.harvestable_now(1), 70 * GIB);
+        assert_eq!(b.held_on(&hr, MemoryTier::PeerHbm(1)), 10 * GIB);
+        b.free(&mut hr, seg);
+        assert_eq!(hr.node.gpus[1].hbm.used(), 0);
+        assert_eq!(hr.node.gpus[1].tenant_held, 0);
+    }
+
+    #[test]
+    fn guaranteed_tenant_evicts_harvest_leases() {
+        let mut hr = rt();
+        let s = hr.open_session(PayloadKind::Generic);
+        // harvest fills most of the peer
+        let leases: Vec<_> = (0..4)
+            .map(|_| s.alloc(&mut hr, 19 * GIB, TierPreference::PEER_ONLY, hints()).unwrap())
+            .collect();
+        assert_eq!(hr.live_bytes_on(1), 76 * GIB);
+        // a 10 GiB tenant burst does not fit in the 4 GiB slack: harvest
+        // must yield exactly enough victims
+        let mut b = PressureBroker::new();
+        let seg = b
+            .alloc(&mut hr, MemoryTier::PeerHbm(1), 10 * GIB, TenantPriority::Guaranteed)
+            .unwrap();
+        assert_eq!(seg.bytes, 10 * GIB);
+        assert!(b.stats.lease_yields >= 1);
+        assert!(hr.revocations.iter().all(|r| r.reason == RevocationReason::TenantPressure));
+        assert!(hr.live_bytes_on(1) < 76 * GIB);
+        // the evicted consumer hears about it through its session
+        assert!(!s.drain_revocations(&mut hr).is_empty());
+        b.free(&mut hr, seg);
+        for l in leases {
+            if hr.is_live(l.id()) {
+                s.release(&mut hr, l).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn best_effort_tenant_is_denied_not_harvest() {
+        let mut hr = rt();
+        let s = hr.open_session(PayloadKind::Generic);
+        let lease = s.alloc(&mut hr, 79 * GIB, TierPreference::PEER_ONLY, hints()).unwrap();
+        let mut b = PressureBroker::new();
+        let err = b
+            .alloc(&mut hr, MemoryTier::PeerHbm(1), 10 * GIB, TenantPriority::BestEffort)
+            .unwrap_err();
+        assert_eq!(err.tier, MemoryTier::PeerHbm(1));
+        assert_eq!(b.stats.denied, 1);
+        assert!(hr.is_live(lease.id()), "best-effort tenants never evict");
+        s.release(&mut hr, lease).unwrap();
+    }
+
+    #[test]
+    fn tenant_waits_out_inflight_migration_reads() {
+        // A demoted lease's source segment is pending-free until the
+        // async copy completes; a guaranteed tenant needing those bytes
+        // drains the copy instead of OOMing.
+        let mut hr = rt();
+        let s = hr.open_session(PayloadKind::Generic);
+        let lease = s.alloc(&mut hr, 79 * GIB, TierPreference::PEER_ONLY, hints()).unwrap();
+        Transfer::new().migrate(&lease, MemoryTier::Host).submit(&mut hr).unwrap();
+        assert_eq!(hr.pending_free_bytes_on_tier(MemoryTier::PeerHbm(1)), 79 * GIB);
+        let mut b = PressureBroker::new();
+        let seg = b
+            .alloc(&mut hr, MemoryTier::PeerHbm(1), 79 * GIB, TenantPriority::Guaranteed)
+            .unwrap();
+        assert_eq!(b.stats.inflight_waits, 1);
+        assert_eq!(b.stats.oom, 0);
+        assert_eq!(hr.pending_free_bytes_on_tier(MemoryTier::PeerHbm(1)), 0);
+        b.free(&mut hr, seg);
+        s.release(&mut hr, lease).unwrap();
+    }
+
+    #[test]
+    fn host_pressure_evicts_host_leases_and_fails_pins() {
+        // Small host arena so tenant pressure there is meaningful.
+        let mut spec = NodeSpec::h100x2();
+        spec.host_dram_bytes = 8 * GIB;
+        let mut hr = HarvestRuntime::new(SimNode::new(spec), HarvestConfig::for_node(2));
+        let s = hr.open_session(PayloadKind::Generic);
+        let host_lease =
+            s.alloc(&mut hr, 6 * GIB, TierPreference::Pinned(MemoryTier::Host), hints()).unwrap();
+        let mut b = PressureBroker::new();
+        // tenant claims the host tier; the harvest host lease yields
+        let seg =
+            b.alloc(&mut hr, MemoryTier::Host, 7 * GIB, TenantPriority::Guaranteed).unwrap();
+        assert!(!hr.is_live(host_lease.id()), "host lease revoked for the tenant");
+        assert_eq!(b.stats.lease_yields, 1);
+        // and under that pressure a new host pin fails TierUnavailable
+        let err = s
+            .alloc(&mut hr, 4 * GIB, TierPreference::Pinned(MemoryTier::Host), hints())
+            .unwrap_err();
+        assert_eq!(
+            err,
+            crate::harvest::HarvestError::TierUnavailable { tier: MemoryTier::Host }
+        );
+        b.free(&mut hr, seg);
+        drop(host_lease);
+        hr.sweep_leaked();
+    }
+
+    #[test]
+    fn oom_only_when_no_harvest_left() {
+        let mut hr = rt();
+        let mut b = PressureBroker::new();
+        // two tenants fill the GPU; a third fails with harvest holding
+        // nothing — genuine tenant-vs-tenant OOM
+        let a = b
+            .alloc(&mut hr, MemoryTier::PeerHbm(1), 40 * GIB, TenantPriority::Guaranteed)
+            .unwrap();
+        let c = b
+            .alloc(&mut hr, MemoryTier::PeerHbm(1), 40 * GIB, TenantPriority::Guaranteed)
+            .unwrap();
+        let err = b
+            .alloc(&mut hr, MemoryTier::PeerHbm(1), GIB, TenantPriority::Guaranteed)
+            .unwrap_err();
+        assert_eq!(err.requested, GIB);
+        assert_eq!(b.stats.oom, 1);
+        assert_eq!(hr.live_bytes_on(1), 0);
+        b.free(&mut hr, a);
+        b.free(&mut hr, c);
+    }
+}

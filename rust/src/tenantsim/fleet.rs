@@ -1,0 +1,374 @@
+//! The [`TenantFleet`]: a node's co-tenant population, stepped on the
+//! shared virtual clock.
+//!
+//! The fleet owns the actors and the [`PressureBroker`] and exposes one
+//! entry point, [`TenantFleet::advance_to`] — a drop-in replacement for
+//! [`HarvestRuntime::advance_to`] that dispatches actor events (in
+//! virtual-time order, ties broken by actor index) on the way to `t`.
+//! An empty fleet degenerates to exactly `hr.advance_to(t)`, and a
+//! fleet of [`super::ReplayActor`]s only installs timelines, so
+//! replay-mode runs reproduce pre-fleet pressure sequences bit-for-bit.
+//!
+//! ```
+//! use harvest::harvest::{HarvestConfig, HarvestRuntime};
+//! use harvest::memsim::{NodeSpec, SimNode, TenantLoad};
+//! use harvest::tenantsim::{ReplayActor, TenantFleet};
+//!
+//! const GIB: u64 = 1 << 30;
+//! let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()),
+//!                                  HarvestConfig::for_node(2));
+//! let mut fleet = TenantFleet::new();
+//! // replay mode: the old exogenous timeline behind the actor trait
+//! let load = TenantLoad::from_steps(80 * GIB, vec![(0, 0), (1_000, 10 * GIB)]);
+//! fleet.push(Box::new(ReplayActor::new("replay-1", 1, load)));
+//! fleet.advance_to(&mut hr, 2_000);
+//! assert_eq!(hr.node.harvestable_now(1), 70 * GIB);
+//! ```
+
+use super::actor::{ActorStats, TenantActor, TenantCtx, TenantPriority};
+use super::actors::{BatchActor, InferenceActor, TrainingActor};
+use super::broker::{BrokerStats, PressureBroker};
+use crate::harvest::HarvestRuntime;
+use crate::memsim::Ns;
+
+const GIB: u64 = 1 << 30;
+const MIB: u64 = 1 << 20;
+
+/// Declarative actor mix — the `[tenants]` TOML section, also usable
+/// per cluster node (`[tenants.node<k>]` overrides).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantMix {
+    /// Master switch; a disabled mix builds an empty fleet.
+    pub enabled: bool,
+    /// Training jobs (each spans every GPU with a ring all-reduce).
+    pub training: usize,
+    /// Co-located inference services (one GPU each, KV-churn style).
+    pub inference: usize,
+    /// Bursty batch jobs (one GPU each).
+    pub batch: usize,
+    /// Persistent model footprint per GPU per training job (GiB).
+    pub training_gib: u64,
+    /// Oscillating activation footprint per GPU per training job (GiB).
+    pub activation_gib: u64,
+    /// Host-DRAM staging per training job (GiB) — host-tier pressure.
+    pub host_gib: u64,
+    /// Ring all-reduce payload per participant per step (MiB).
+    pub collective_mib: u64,
+    /// Training step cadence (µs).
+    pub step_period_us: u64,
+    /// Stationary mean GPU-memory utilisation each inference service
+    /// targets (fraction of one GPU's capacity).
+    pub inference_target: f64,
+    /// Burst size per batch job (GiB).
+    pub batch_gib: u64,
+    /// Batch jobs' priority: `guaranteed` bursts revoke harvest leases
+    /// (the paper's co-tenant), `best-effort` ones are preemptible
+    /// fillers that lose to Harvest instead.
+    pub batch_priority: TenantPriority,
+    pub seed: u64,
+}
+
+impl Default for TenantMix {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            training: 1,
+            inference: 1,
+            batch: 1,
+            training_gib: 8,
+            activation_gib: 4,
+            host_gib: 0,
+            collective_mib: 64,
+            step_period_us: 1_000,
+            inference_target: 0.2,
+            batch_gib: 8,
+            batch_priority: TenantPriority::Guaranteed,
+            seed: 0,
+        }
+    }
+}
+
+/// Fleet-level rollup: per-actor counters plus the broker's.
+#[derive(Debug, Clone, Default)]
+pub struct FleetStats {
+    /// `(label, counters)` per actor, fleet order.
+    pub actors: Vec<(String, ActorStats)>,
+    pub broker: BrokerStats,
+}
+
+impl FleetStats {
+    /// Bytes tenant actors hold right now, all tiers.
+    pub fn held_bytes(&self) -> u64 {
+        self.actors.iter().map(|(_, s)| s.held_bytes).sum()
+    }
+
+    /// Link traffic the actors injected (collectives + loads).
+    pub fn traffic_bytes(&self) -> u64 {
+        self.actors.iter().map(|(_, s)| s.traffic_bytes).sum()
+    }
+
+    /// Actor allocations denied or failed.
+    pub fn denied(&self) -> u64 {
+        self.actors.iter().map(|(_, s)| s.denied).sum()
+    }
+}
+
+/// A node's co-tenant population: actors + broker, stepped together.
+#[derive(Default)]
+pub struct TenantFleet {
+    actors: Vec<Box<dyn TenantActor>>,
+    broker: PressureBroker,
+    installed: bool,
+}
+
+impl TenantFleet {
+    /// An empty fleet (`advance_to` == `HarvestRuntime::advance_to`).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build the fleet a [`TenantMix`] describes for an `n_gpus`-GPU
+    /// node with `hbm_bytes` per GPU. `seed_salt` decorrelates per-node
+    /// fleets built from one mix (pass the node id). Actors that target
+    /// a single GPU rotate over GPUs `1..n` — GPU 0 is the serving
+    /// stack's compute GPU, whose arena harvest never touches.
+    pub fn from_mix(mix: &TenantMix, n_gpus: usize, hbm_bytes: u64, seed_salt: u64) -> Self {
+        let mut fleet = Self::new();
+        if !mix.enabled {
+            return fleet;
+        }
+        let seed = mix.seed ^ (seed_salt.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        for i in 0..mix.training {
+            fleet.push(Box::new(TrainingActor::new(
+                format!("train-{i}"),
+                (0..n_gpus).collect(),
+                mix.training_gib * GIB,
+                mix.activation_gib * GIB,
+                mix.host_gib * GIB,
+                mix.collective_mib * MIB,
+                (mix.step_period_us * 1_000).max(1),
+            )));
+        }
+        let peer = |i: usize| if n_gpus > 1 { 1 + i % (n_gpus - 1) } else { 0 };
+        for i in 0..mix.inference {
+            fleet.push(Box::new(InferenceActor::new(
+                format!("infer-{i}"),
+                peer(i),
+                hbm_bytes,
+                mix.inference_target,
+                256 * MIB,
+                5_000_000, // 5 ms mean hold
+                seed.wrapping_add(0x1000 + i as u64),
+            )));
+        }
+        for i in 0..mix.batch {
+            fleet.push(Box::new(BatchActor::new(
+                format!("batch-{i}"),
+                peer(i + mix.inference),
+                mix.batch_gib * GIB,
+                10_000_000, // 10 ms mean idle
+                5_000_000,  // 5 ms mean hold
+                mix.batch_priority,
+                seed.wrapping_add(0x2000 + i as u64),
+            )));
+        }
+        fleet
+    }
+
+    /// Add an actor (builder-style fleets for tests and benches).
+    pub fn push(&mut self, actor: Box<dyn TenantActor>) {
+        assert!(!self.installed, "add actors before the fleet first runs");
+        self.actors.push(actor);
+    }
+
+    pub fn len(&self) -> usize {
+        self.actors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.actors.is_empty()
+    }
+
+    pub fn broker(&self) -> &PressureBroker {
+        &self.broker
+    }
+
+    /// One-time actor setup (replay timelines, persistent footprints).
+    /// Idempotent; `advance_to` calls it lazily.
+    pub fn install(&mut self, hr: &mut HarvestRuntime) {
+        if self.installed {
+            return;
+        }
+        self.installed = true;
+        for actor in &mut self.actors {
+            let mut ctx = TenantCtx { hr, broker: &mut self.broker };
+            actor.install(&mut ctx);
+        }
+    }
+
+    /// Advance virtual time to `t`, dispatching every actor event on
+    /// the way (earliest wake first, ties by actor index) and enforcing
+    /// harvest pressure at each — the fleet-aware replacement for
+    /// [`HarvestRuntime::advance_to`].
+    pub fn advance_to(&mut self, hr: &mut HarvestRuntime, t: Ns) {
+        self.install(hr);
+        loop {
+            let next = self
+                .actors
+                .iter()
+                .enumerate()
+                .filter_map(|(i, a)| a.next_wake().map(|w| (w, i)))
+                .min()
+                .filter(|&(w, _)| w <= t);
+            let Some((wake, i)) = next else { break };
+            // An actor created mid-run may want a past wake; run it now.
+            let at = wake.max(hr.node.clock.now());
+            hr.advance_to(at);
+            let mut ctx = TenantCtx { hr, broker: &mut self.broker };
+            self.actors[i].step(at, &mut ctx);
+            debug_assert!(
+                self.actors[i].next_wake().is_none_or(|w| w > wake),
+                "actor {} did not advance past {wake}",
+                self.actors[i].label()
+            );
+        }
+        hr.advance_to(t);
+    }
+
+    /// Current per-actor + broker counters.
+    pub fn stats(&self) -> FleetStats {
+        FleetStats {
+            actors: self
+                .actors
+                .iter()
+                .map(|a| (a.label().to_string(), a.stats()))
+                .collect(),
+            broker: self.broker.stats,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harvest::{HarvestConfig, RevocationReason};
+    use crate::memsim::{NodeSpec, SimNode, TenantLoad};
+    use crate::util::rng::Rng;
+
+    fn rt() -> HarvestRuntime {
+        HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2))
+    }
+
+    #[test]
+    fn empty_fleet_is_plain_advance() {
+        let mut a = rt();
+        let mut b = rt();
+        let mut fleet = TenantFleet::new();
+        a.advance_to(5_000_000);
+        fleet.advance_to(&mut b, 5_000_000);
+        assert_eq!(a.node.clock.now(), b.node.clock.now());
+        assert_eq!(a.revocations.len(), b.revocations.len());
+    }
+
+    #[test]
+    fn replay_actor_reproduces_timeline_pressure_bit_for_bit() {
+        let load = {
+            let mut rng = Rng::new(11);
+            TenantLoad::generate(
+                &mut rng,
+                80 * GIB,
+                0.6,
+                crate::memsim::tenant::TenantChurn::default(),
+                2_000_000_000,
+            )
+        };
+        let run = |replay: bool| {
+            let mut hr = rt();
+            let mut fleet = TenantFleet::new();
+            if replay {
+                fleet.push(Box::new(super::super::ReplayActor::new(
+                    "replay",
+                    1,
+                    load.clone(),
+                )));
+            } else {
+                hr.node.set_tenant_load(1, load.clone());
+            }
+            let s = hr.open_session(crate::harvest::PayloadKind::Generic);
+            let hints = crate::harvest::AllocHints {
+                compute_gpu: Some(0),
+                ..Default::default()
+            };
+            let mut revs = Vec::new();
+            let mut leases = Vec::new();
+            for step in 1..=40u64 {
+                if let Ok(l) = s.alloc(
+                    &mut hr,
+                    2 * GIB,
+                    crate::harvest::TierPreference::PEER_ONLY,
+                    hints,
+                ) {
+                    leases.push(l);
+                }
+                fleet.advance_to(&mut hr, step * 50_000_000);
+                for ev in s.drain_revocations(&mut hr) {
+                    leases.retain(|l| l.id() != ev.lease);
+                }
+                revs.extend(hr.revocations.drain(..).map(|r| (r.at, r.handle.id)));
+            }
+            drop(leases);
+            hr.sweep_leaked();
+            revs
+        };
+        let replayed = run(true);
+        assert!(!replayed.is_empty(), "pressure at 0.6 utilisation must revoke something");
+        assert_eq!(replayed, run(false), "replay mode must be bit-for-bit");
+    }
+
+    #[test]
+    fn from_mix_builds_and_runs() {
+        let mix = TenantMix { enabled: true, ..Default::default() };
+        let mut fleet = TenantFleet::from_mix(&mix, 2, 80 * GIB, 0);
+        assert_eq!(fleet.len(), 3);
+        let mut hr = rt();
+        fleet.advance_to(&mut hr, 50_000_000);
+        let stats = fleet.stats();
+        assert!(stats.held_bytes() > 0, "training model footprint persists");
+        assert!(stats.traffic_bytes() > 0, "collective traffic injected");
+        assert!(stats.broker.allocs > 0);
+        // disabled mix builds nothing
+        assert!(TenantFleet::from_mix(&TenantMix::default(), 2, 80 * GIB, 0).is_empty());
+    }
+
+    #[test]
+    fn tenant_burst_revokes_harvest_lease() {
+        let mut hr = rt();
+        let s = hr.open_session(crate::harvest::PayloadKind::Generic);
+        let hints =
+            crate::harvest::AllocHints { compute_gpu: Some(0), ..Default::default() };
+        let lease = s
+            .alloc(&mut hr, 70 * GIB, crate::harvest::TierPreference::PEER_ONLY, hints)
+            .unwrap();
+        let mut fleet = TenantFleet::new();
+        fleet.push(Box::new(BatchActor::new(
+            "batch-0",
+            1,
+            40 * GIB,
+            1_000_000,
+            5_000_000,
+            TenantPriority::Guaranteed,
+            7,
+        )));
+        fleet.advance_to(&mut hr, 100_000_000);
+        assert!(!hr.is_live(lease.id()), "the burst must evict the lease");
+        assert!(hr
+            .revocations
+            .iter()
+            .any(|r| r.reason == RevocationReason::TenantPressure));
+        assert!(fleet.broker().stats.lease_yields >= 1);
+        drop(lease);
+        hr.sweep_leaked();
+    }
+
+    const GIB: u64 = 1 << 30;
+}

@@ -1,0 +1,59 @@
+//! Closed-loop co-tenant workloads — the adversary Harvest harvests
+//! *from*.
+//!
+//! The paper's premise (§2.1) is that co-tenants leave GPU memory idle
+//! in bursts; everything before this module modelled them as a
+//! pre-generated scalar timeline ([`crate::memsim::TenantLoad`]) that
+//! could change a number but never fragment an arena, load a link, or
+//! react to Harvest. This module makes tenants **first-class actors on
+//! the simulation clock**:
+//!
+//! ```text
+//!            TenantFleet::advance_to(hr, t)
+//!   ┌──────────┬─────────────┬────────────┐
+//!   │ Training │ Inference   │ Batch      │   TenantActor impls
+//!   │ (ring    │ (KV churn,  │ (bursty    │   (+ Replay: the old
+//!   │  all-    │  H2D loads) │  hogs)     │    timeline, verbatim)
+//!   │  reduce) │             │            │
+//!   └────┬─────┴──────┬──────┴─────┬──────┘
+//!        │ alloc/free │ collective │ traffic
+//!        ▼            ▼            ▼
+//!   ┌─────────────────────────────────────┐      alloc fails?
+//!   │            PressureBroker           │──► HarvestRuntime::
+//!   │  (tenants always win: revoke or     │    yield_to_tenant /
+//!   │   demote harvest leases to fit)     │    yield_tier_to_tenant
+//!   └────┬────────────────────────────┬───┘
+//!        ▼ real segments              ▼ FIFO link traffic
+//!   per-GPU / host / CXL arenas   Topology (shared with Harvest DMA)
+//! ```
+//!
+//! * Actors allocate and free **real segments** in the per-GPU HBM
+//!   arenas (and the host/CXL arenas), so the harvest controller sees
+//!   genuine fragmentation and capacity pressure, and `place_tiered`
+//!   sees genuine tier occupancy.
+//! * Actors inject their collective / copy traffic onto the **same
+//!   [`crate::memsim::Topology`] FIFO links** the DMA engine uses, so a
+//!   training job's ring all-reduce measurably queues Harvest's peer
+//!   fetches (the §7 NVLink-congestion caveat, now exercised).
+//! * The [`PressureBroker`] preserves the paper's correctness
+//!   invariant — *tenants always win*: a guaranteed-priority tenant
+//!   allocation that does not fit revokes (or, under
+//!   `demote_to_host`, demotes) harvest leases until it does.
+//! * [`ReplayActor`] wraps the old [`crate::memsim::TenantLoad`]
+//!   timeline behind the same [`TenantActor`] trait, bit-for-bit, so
+//!   existing benches stay reproducible.
+//!
+//! The [`TenantFleet`] is stepped from [`crate::server::SimEngine`]'s
+//! run loop and from each [`crate::cluster::ClusterNode`] step
+//! (per-node fleets → heterogeneous per-node pressure), configured via
+//! the `[tenants]` TOML section ([`TenantMix`]).
+
+pub mod actor;
+pub mod actors;
+pub mod broker;
+pub mod fleet;
+
+pub use actor::{ActorStats, TenantActor, TenantCtx, TenantPriority, TenantSegment};
+pub use actors::{BatchActor, InferenceActor, ReplayActor, TrainingActor};
+pub use broker::{BrokerStats, PressureBroker, TenantOom};
+pub use fleet::{FleetStats, TenantFleet, TenantMix};

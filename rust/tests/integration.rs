@@ -821,3 +821,131 @@ mod cluster_serving {
         }
     }
 }
+
+// ---------------------------------------------------------------------
+// Tenant actors (closed-loop co-tenants): NVLink interference,
+// burst-driven revocation/demotion, replay compatibility
+// ---------------------------------------------------------------------
+
+mod tenant_actors {
+    use super::*;
+    use harvest::tenantsim::{BatchActor, TenantFleet, TenantPriority, TrainingActor};
+
+    const MIB: u64 = 1 << 20;
+
+    /// A training actor's ring all-reduce rides the same NVLink FIFOs as
+    /// harvest DMA, so a demand fetch queues behind it: the link's
+    /// busy-until horizon (the `queue_ns` term every `TierView` exposes
+    /// to placement policies) grows, and the fetch measurably slows.
+    #[test]
+    fn training_collective_delays_harvest_peer_fetches() {
+        let fetch_with = |training: bool| {
+            let mut hr = hr2();
+            let s = hr.open_session(PayloadKind::KvBlock);
+            let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+            let lease = s
+                .alloc(&mut hr, 256 * MIB, TierPreference::PEER_ONLY, hints)
+                .unwrap();
+            assert_eq!(lease.tier(), MemoryTier::PeerHbm(1));
+            let mut fleet = TenantFleet::new();
+            if training {
+                // 512 MiB per participant per 1 ms step: more than the
+                // link drains per period, so a backlog builds.
+                fleet.push(Box::new(TrainingActor::new(
+                    "train-0",
+                    vec![0, 1],
+                    GIB,
+                    0,
+                    0,
+                    512 * MIB,
+                    1_000_000,
+                )));
+            }
+            fleet.advance_to(&mut hr, 10_000_000);
+            let now = hr.node.clock.now();
+            let queue_ns = hr
+                .node
+                .topo
+                .busy_until(DeviceId::Gpu(1), DeviceId::Gpu(0))
+                .saturating_sub(now);
+            let report = Transfer::new().fetch(&lease, 0).submit(&mut hr).unwrap();
+            let duration = report.end - now;
+            s.release(&mut hr, lease).unwrap();
+            if training {
+                assert!(fleet.stats().traffic_bytes() > 0, "collective must inject");
+            }
+            (queue_ns, duration)
+        };
+        let (quiet_queue, quiet) = fetch_with(false);
+        let (congested_queue, congested) = fetch_with(true);
+        assert_eq!(quiet_queue, 0, "no tenant -> idle NVLink");
+        assert!(congested_queue > 0, "collective backlog must be queue-visible");
+        assert!(
+            congested > quiet,
+            "fetch behind the collective ({congested} ns) must be slower than quiet \
+             ({quiet} ns)"
+        );
+    }
+
+    /// End-to-end through `SimEngine::run`: a guaranteed-priority batch
+    /// tenant bursting to full GPU capacity forces the controller to
+    /// revoke/demote the KV manager's peer leases mid-serve — and with
+    /// `demote_to_host` on, every displaced block survives on the host
+    /// tier (no recompute), while all requests still finish.
+    #[test]
+    fn tenant_burst_triggers_revocation_and_demotion_through_engine() {
+        let run = |with_tenant: bool| {
+            let mut hcfg = HarvestConfig::for_node(2);
+            hcfg.demote_to_host = true;
+            let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), hcfg);
+            let kv = KvConfig {
+                model: find_kv_model("deepseek").unwrap(),
+                block_tokens: 16,
+                local_capacity_blocks: 32,
+                use_harvest: true,
+                host_backed_peer: false,
+            };
+            let cfg = SimEngineConfig::new(kv, 4, 16);
+            let mut eng = SimEngine::new(cfg, Box::new(CompletelyFair::new(1)), 0);
+            if with_tenant {
+                let mut fleet = TenantFleet::new();
+                // Bursts claim the whole peer GPU: nothing short of
+                // evicting every harvest lease satisfies them.
+                fleet.push(Box::new(BatchActor::new(
+                    "batch-0",
+                    1,
+                    80 * GIB,
+                    2_000_000,
+                    2_000_000,
+                    TenantPriority::Guaranteed,
+                    3,
+                )));
+                eng = eng.with_tenants(fleet);
+            }
+            let reqs = WorkloadGen::new(WorkloadSpec {
+                n_requests: 12,
+                mean_prompt_tokens: 64.0,
+                max_new_tokens: 8,
+                ..Default::default()
+            })
+            .generate();
+            let report = eng.run(&mut hr, reqs);
+            (report, hr.demotions, hr.revocations.len())
+        };
+        let (quiet, quiet_demotions, quiet_revocations) = run(false);
+        assert_eq!(quiet.metrics.requests_finished, 12);
+        assert_eq!(quiet_demotions + quiet_revocations as u64, 0, "no tenant, no pressure");
+        let (report, demotions, _) = run(true);
+        assert_eq!(report.metrics.requests_finished, 12, "tenant bursts must not kill serving");
+        let tenant = report.tenant.as_ref().expect("fleet stats reported");
+        assert!(tenant.broker.lease_yields >= 1, "bursts must displace harvest leases");
+        assert_eq!(tenant.broker.oom_with_harvest, 0, "tenants always win");
+        assert!(demotions > 0, "lossy KV leases demote under demote_to_host");
+        assert!(report.kv_stats.demotions > 0, "KV manager observes the demotions");
+        assert_eq!(report.kv_stats.recomputes, 0, "demoted blocks are never lost");
+        assert!(
+            report.kv_stats.host_reloads > 0,
+            "demoted blocks reload from their host-tier lease"
+        );
+    }
+}

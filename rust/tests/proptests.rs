@@ -675,10 +675,13 @@ fn prop_tiered_lease_accounting_under_migration() {
                     }
                 }
             }
-            // the three-way identity, per tier: runtime ledger == arena
-            // usage == sum of live leases resident there
+            // the identity, per tier: arena usage == runtime ledger ==
+            // sum of live leases resident there, plus (arena-side only)
+            // migration sources whose in-flight copies still pin their
+            // segments (freed at copy completion, never reused early)
             for &tier in &tiers {
                 let ledger = hr.live_bytes_on_tier(tier);
+                let pending = hr.pending_free_bytes_on_tier(tier);
                 let arena = match tier {
                     MemoryTier::PeerHbm(g) => hr.node.gpus[g].hbm.used(),
                     MemoryTier::Host => hr.node.host.used(),
@@ -687,9 +690,10 @@ fn prop_tiered_lease_accounting_under_migration() {
                 };
                 let leases: u64 =
                     held.iter().filter(|l| l.tier() == tier).map(|l| l.size()).sum();
-                if ledger != arena || ledger != leases {
+                if ledger + pending != arena || ledger != leases {
                     return err(format!(
-                        "{tier}: ledger {ledger} arena {arena} leases {leases}"
+                        "{tier}: ledger {ledger} + pending {pending} != arena {arena} \
+                         (leases {leases})"
                     ));
                 }
             }
@@ -709,6 +713,161 @@ fn prop_tiered_lease_accounting_under_migration() {
             if hr.live_bytes_on_tier(tier) != 0 {
                 return err(format!("{tier}: bytes left after teardown"));
             }
+            // every release drained its lease tag, so no deferred
+            // migration source outlives its lease
+            let arena = match tier {
+                MemoryTier::PeerHbm(g) => hr.node.gpus[g].hbm.used(),
+                MemoryTier::Host => hr.node.host.used(),
+                MemoryTier::CxlMem => hr.node.cxl.used(),
+                MemoryTier::LocalHbm => 0,
+            };
+            if arena != 0 {
+                return err(format!("{tier}: {arena} arena bytes left after teardown"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Closed-loop tenant actors + harvest consumer churn, random
+/// interleavings: at every step each GPU arena decomposes exactly into
+/// tenant-held + live harvest leases + pending migration sources (and
+/// likewise the host arena); guaranteed tenants never OOM while a
+/// revocable harvest lease exists on the tier; and replay-mode fleets
+/// reproduce the exogenous-timeline pressure sequence bit-for-bit (see
+/// also `tenantsim::fleet`'s unit test of the same identity).
+#[test]
+fn prop_tenant_conservation() {
+    use harvest::tenantsim::{
+        BatchActor, InferenceActor, TenantFleet, TenantPriority, TrainingActor,
+    };
+    check("tenant-conservation", 40, 0x7E4A, |rng| {
+        let mut spec = NodeSpec::h100x2();
+        spec.host_dram_bytes = 64 * GIB; // small enough to contend
+        let mut cfg = HarvestConfig::for_node(2);
+        cfg.demote_to_host = rng.bool(0.5);
+        let mut hr = HarvestRuntime::new(SimNode::new(spec), cfg);
+        let session = hr.open_session(PayloadKind::Generic);
+        let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+        let mut fleet = TenantFleet::new();
+        if rng.bool(0.7) {
+            fleet.push(Box::new(TrainingActor::new(
+                "train",
+                vec![0, 1],
+                (1 + rng.below(8)) * GIB,
+                rng.below(4) * GIB,
+                rng.below(4) * GIB,
+                32 * MIB,
+                500_000 + rng.below(1_000_000),
+            )));
+        }
+        if rng.bool(0.7) {
+            fleet.push(Box::new(InferenceActor::new(
+                "infer",
+                1,
+                80 * GIB,
+                0.05 + rng.f64() * 0.4,
+                128 * MIB,
+                2_000_000,
+                rng.u64(),
+            )));
+        }
+        if rng.bool(0.7) {
+            let priority = if rng.bool(0.5) {
+                TenantPriority::Guaranteed
+            } else {
+                TenantPriority::BestEffort
+            };
+            fleet.push(Box::new(BatchActor::new(
+                "batch",
+                1,
+                (1 + rng.below(30)) * GIB,
+                2_000_000,
+                2_000_000,
+                priority,
+                rng.u64(),
+            )));
+        }
+        let mut held: Vec<Lease> = Vec::new();
+        let mut t = 0u64;
+        for _ in 0..rng.below(60) + 20 {
+            match rng.below(6) {
+                0..=2 => {
+                    let pref = if rng.bool(0.7) {
+                        TierPreference::PEER_ONLY
+                    } else {
+                        TierPreference::FastestAvailable
+                    };
+                    let durability = if rng.bool(0.5) {
+                        harvest::harvest::Durability::Lossy
+                    } else {
+                        harvest::harvest::Durability::HostBacked
+                    };
+                    if let Ok(l) = session.alloc(
+                        &mut hr,
+                        (1 + rng.below(64)) * 64 * MIB,
+                        pref,
+                        AllocHints { durability, ..hints },
+                    ) {
+                        held.push(l);
+                    }
+                }
+                3 => {
+                    if !held.is_empty() {
+                        let l = held.swap_remove(rng.below(held.len() as u64) as usize);
+                        session.release(&mut hr, l).map_err(|e| format!("release: {e}"))?;
+                    }
+                }
+                _ => {
+                    t += 500_000 + rng.below(2_000_000);
+                    fleet.advance_to(&mut hr, t);
+                }
+            }
+            for ev in session.drain_revocations(&mut hr) {
+                if ev.action == RevocationAction::Dropped {
+                    held.retain(|l| l.id() != ev.lease);
+                }
+            }
+            // per-GPU conservation: tenant segments + harvest leases +
+            // in-flight migration sources account for every arena byte
+            for g in 0..2 {
+                let arena = hr.node.gpus[g].hbm.used();
+                let tenant = hr.node.gpus[g].tenant_held;
+                let leases = hr.live_bytes_on(g);
+                let pending = hr.pending_free_bytes_on_tier(MemoryTier::PeerHbm(g));
+                if tenant + leases + pending != arena {
+                    return err(format!(
+                        "gpu{g}: tenant {tenant} + leases {leases} + pending {pending} \
+                         != arena {arena}"
+                    ));
+                }
+            }
+            // host-arena conservation via the broker's ledger
+            let host = hr.node.host.used();
+            let tenant_host = fleet.broker().held_on(&hr, MemoryTier::Host);
+            let lease_host = hr.live_bytes_on_tier(MemoryTier::Host);
+            let pending_host = hr.pending_free_bytes_on_tier(MemoryTier::Host);
+            if tenant_host + lease_host + pending_host != host {
+                return err(format!(
+                    "host: tenant {tenant_host} + leases {lease_host} + pending \
+                     {pending_host} != arena {host}"
+                ));
+            }
+            // tenants always win: an OOM with harvest bytes still live
+            // on the tier would break the paper's invariant
+            let b = fleet.broker().stats;
+            if b.oom_with_harvest > 0 {
+                return err(format!(
+                    "guaranteed tenant OOMed while harvest held bytes ({b:?})"
+                ));
+            }
+        }
+        for l in held.drain(..) {
+            session.release(&mut hr, l).map_err(|e| format!("final release: {e}"))?;
+        }
+        hr.sweep_leaked();
+        if hr.live_bytes_on(1) != 0 || hr.live_bytes_on_tier(MemoryTier::Host) != 0 {
+            return err("harvest bytes left after teardown".into());
         }
         Ok(())
     });
