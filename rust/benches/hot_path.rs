@@ -4,6 +4,10 @@
 //! whole decode passes) and, when `artifacts/` is present, the real PJRT
 //! decode step (the L1/L2 hot path as seen from Rust).
 //!
+//! Each measurement is also recorded into `BENCH_hot_path.json` (see
+//! `util::bench::JsonReport`) so CI can diff runs without scraping the
+//! aligned-table stdout.
+//!
 //! Run: `cargo bench --bench hot_path`
 
 use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime, PayloadKind, TierPreference};
@@ -14,32 +18,52 @@ use harvest::moe::{find_kv_model, find_moe_model, CgoPipe, ExpertRebalancer, Rou
 use harvest::runtime::{DecodeSlot, ModelRuntime};
 use harvest::server::{CompletelyFair, Scheduler};
 use harvest::trace::{ClusterTrace, TraceSpec};
-use harvest::util::bench::{sink, Bench};
+use harvest::util::bench::{sink, Bench, JsonReport, WallResult};
+use harvest::util::json::{obj, Json};
 use std::path::Path;
 
 const MIB: u64 = 1 << 20;
 
+/// Record one wall measurement into the machine-readable summary.
+fn rec(json: &mut JsonReport, r: WallResult) {
+    json.add(
+        &r.name,
+        obj([
+            ("mean_ns", Json::from(r.mean_ns)),
+            ("p50_ns", Json::from(r.p50_ns)),
+            ("p99_ns", Json::from(r.p99_ns)),
+            ("iters", Json::from(u64::from(r.iters))),
+        ]),
+    );
+}
+
 // Measures the deprecated raw shim deliberately: it is the §3.2 paper
 // surface and stays until the lease migration completes.
 #[allow(deprecated)]
-fn bench_harvest_alloc_free(b: &Bench) {
+fn bench_harvest_alloc_free(b: &Bench, json: &mut JsonReport) {
     let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
     let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
-    b.wall("harvest_alloc+free (64 MiB, 2-GPU)", || {
-        let h = hr.alloc(64 * MIB, hints).unwrap();
-        hr.free(h.id).unwrap();
-    });
+    rec(
+        json,
+        b.wall("harvest_alloc+free (64 MiB, 2-GPU)", || {
+            let h = hr.alloc(64 * MIB, hints).unwrap();
+            hr.free(h.id).unwrap();
+        }),
+    );
     // Placement cost grows with domain size: policy scans all peers.
     let mut hr8 =
         HarvestRuntime::new(SimNode::new(NodeSpec::nvlink_domain(8)), HarvestConfig::for_node(8));
-    b.wall("harvest_alloc+free (64 MiB, 8-GPU)", || {
-        let h = hr8.alloc(64 * MIB, hints).unwrap();
-        hr8.free(h.id).unwrap();
-    });
+    rec(
+        json,
+        b.wall("harvest_alloc+free (64 MiB, 8-GPU)", || {
+            let h = hr8.alloc(64 * MIB, hints).unwrap();
+            hr8.free(h.id).unwrap();
+        }),
+    );
 }
 
 #[allow(deprecated)] // raw-shim fragmentation path, same rationale as above
-fn bench_alloc_under_fragmentation(b: &Bench) {
+fn bench_alloc_under_fragmentation(b: &Bench, json: &mut JsonReport) {
     // 2000 standing allocations fragment the arena; measure steady-state
     // alloc/free with a full policy view rebuild.
     let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
@@ -47,43 +71,57 @@ fn bench_alloc_under_fragmentation(b: &Bench) {
     let standing: Vec<_> =
         (0..2000).map(|i| hr.alloc((1 + i % 16) * MIB, hints).unwrap()).collect();
     sink(&standing);
-    b.wall("harvest_alloc+free (2000 standing allocs)", || {
-        let h = hr.alloc(8 * MIB, hints).unwrap();
-        hr.free(h.id).unwrap();
-    });
+    rec(
+        json,
+        b.wall("harvest_alloc+free (2000 standing allocs)", || {
+            let h = hr.alloc(8 * MIB, hints).unwrap();
+            hr.free(h.id).unwrap();
+        }),
+    );
 }
 
-fn bench_lease_session_paths(b: &Bench) {
+fn bench_lease_session_paths(b: &Bench, json: &mut JsonReport) {
     // The redesigned surface: RAII tier-aware lease alloc/release, and
     // the vectored alloc_many path (one policy consultation per 16-block
     // batch vs 16).
     let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
     let session = hr.open_session(PayloadKind::KvBlock);
     let hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
-    b.wall("session alloc+release (64 MiB lease)", || {
-        let lease =
-            session.alloc(&mut hr, 64 * MIB, TierPreference::FastestAvailable, hints).unwrap();
-        session.release(&mut hr, lease).unwrap();
-    });
+    rec(
+        json,
+        b.wall("session alloc+release (64 MiB lease)", || {
+            let lease =
+                session.alloc(&mut hr, 64 * MIB, TierPreference::FastestAvailable, hints).unwrap();
+            session.release(&mut hr, lease).unwrap();
+        }),
+    );
     let sizes = [4 * MIB; 16];
-    b.wall("session alloc_many+release (16 x 4 MiB)", || {
-        let batch = session
-            .alloc_many(&mut hr, &sizes, TierPreference::FastestAvailable, hints)
-            .unwrap();
-        for lease in batch {
-            session.release(&mut hr, lease).unwrap();
-        }
-    });
-    b.wall("scalar alloc x16 +release (4 MiB each)", || {
-        let batch: Vec<_> = (0..16)
-            .map(|_| {
-                session.alloc(&mut hr, 4 * MIB, TierPreference::FastestAvailable, hints).unwrap()
-            })
-            .collect();
-        for lease in batch {
-            session.release(&mut hr, lease).unwrap();
-        }
-    });
+    rec(
+        json,
+        b.wall("session alloc_many+release (16 x 4 MiB)", || {
+            let batch = session
+                .alloc_many(&mut hr, &sizes, TierPreference::FastestAvailable, hints)
+                .unwrap();
+            for lease in batch {
+                session.release(&mut hr, lease).unwrap();
+            }
+        }),
+    );
+    rec(
+        json,
+        b.wall("scalar alloc x16 +release (4 MiB each)", || {
+            let batch: Vec<_> = (0..16)
+                .map(|_| {
+                    session
+                        .alloc(&mut hr, 4 * MIB, TierPreference::FastestAvailable, hints)
+                        .unwrap()
+                })
+                .collect();
+            for lease in batch {
+                session.release(&mut hr, lease).unwrap();
+            }
+        }),
+    );
     // Cross-tier placement: the policy scores peer vs host vs CXL per
     // alloc — the tier decision is on the allocation hot path now.
     let mut hr_cxl = HarvestRuntime::new(
@@ -91,42 +129,54 @@ fn bench_lease_session_paths(b: &Bench) {
         HarvestConfig::for_node(2),
     );
     let s2 = hr_cxl.open_session(PayloadKind::KvBlock);
-    b.wall("session alloc+release (3-tier node)", || {
-        let lease = s2
-            .alloc(&mut hr_cxl, 64 * MIB, TierPreference::FastestAvailable, hints)
-            .unwrap();
-        s2.release(&mut hr_cxl, lease).unwrap();
-    });
-    b.wall("lease migrate peer->host->peer (64 MiB)", || {
-        let lease = s2.alloc(&mut hr_cxl, 64 * MIB, TierPreference::PEER_ONLY, hints).unwrap();
-        harvest::harvest::Transfer::new()
-            .migrate(&lease, harvest::harvest::MemoryTier::Host)
-            .submit(&mut hr_cxl)
-            .unwrap();
-        harvest::harvest::Transfer::new()
-            .migrate(&lease, harvest::harvest::MemoryTier::PeerHbm(1))
-            .submit(&mut hr_cxl)
-            .unwrap();
-        s2.release(&mut hr_cxl, lease).unwrap();
-    });
+    rec(
+        json,
+        b.wall("session alloc+release (3-tier node)", || {
+            let lease = s2
+                .alloc(&mut hr_cxl, 64 * MIB, TierPreference::FastestAvailable, hints)
+                .unwrap();
+            s2.release(&mut hr_cxl, lease).unwrap();
+        }),
+    );
+    rec(
+        json,
+        b.wall("lease migrate peer->host->peer (64 MiB)", || {
+            let lease = s2.alloc(&mut hr_cxl, 64 * MIB, TierPreference::PEER_ONLY, hints).unwrap();
+            harvest::harvest::Transfer::new()
+                .migrate(&lease, harvest::harvest::MemoryTier::Host)
+                .submit(&mut hr_cxl)
+                .unwrap();
+            harvest::harvest::Transfer::new()
+                .migrate(&lease, harvest::harvest::MemoryTier::PeerHbm(1))
+                .submit(&mut hr_cxl)
+                .unwrap();
+            s2.release(&mut hr_cxl, lease).unwrap();
+        }),
+    );
 }
 
-fn bench_expert_fetch(b: &Bench) {
+fn bench_expert_fetch(b: &Bench, json: &mut JsonReport) {
     let model = find_moe_model("mixtral").unwrap();
     let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
     let mut reb = ExpertRebalancer::new(model, 0, 0.5);
     reb.rebalance(&mut hr, usize::MAX);
     let peer_key = harvest::moe::ExpertKey { layer: 0, expert: reb.model.n_experts as u32 / 2 };
-    b.wall("fetch_expert (peer hit, Mixtral)", || {
-        sink(reb.fetch_expert(&mut hr, peer_key));
-    });
+    rec(
+        json,
+        b.wall("fetch_expert (peer hit, Mixtral)", || {
+            sink(reb.fetch_expert(&mut hr, peer_key));
+        }),
+    );
     let host_key = harvest::moe::ExpertKey { layer: 0, expert: 0 };
-    b.wall("fetch_expert (local hit, Mixtral)", || {
-        sink(reb.fetch_expert(&mut hr, host_key));
-    });
+    rec(
+        json,
+        b.wall("fetch_expert (local hit, Mixtral)", || {
+            sink(reb.fetch_expert(&mut hr, host_key));
+        }),
+    );
 }
 
-fn bench_kv_ops(b: &Bench) {
+fn bench_kv_ops(b: &Bench, json: &mut JsonReport) {
     let cfg = KvConfig {
         model: find_kv_model("kimi").unwrap(),
         block_tokens: 16,
@@ -136,9 +186,12 @@ fn bench_kv_ops(b: &Bench) {
     };
     let mut hr = HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
     let mut kv = KvOffloadManager::new(cfg, 0);
-    b.wall("kv append_token (no eviction)", || {
-        sink(kv.append_token(&mut hr, SeqId(1)));
-    });
+    rec(
+        json,
+        b.wall("kv append_token (no eviction)", || {
+            sink(kv.append_token(&mut hr, SeqId(1)));
+        }),
+    );
     // tight pool: every append evicts (the churn path §6.3 stresses)
     let tight = KvConfig { local_capacity_blocks: 8, ..cfg };
     let mut hr2 =
@@ -147,30 +200,42 @@ fn bench_kv_ops(b: &Bench) {
     for _ in 0..32 * 16 {
         kv2.append_token(&mut hr2, SeqId(1));
     }
-    b.wall("kv append_token (evicting)", || {
-        sink(kv2.append_token(&mut hr2, SeqId(1)));
-    });
-    b.wall("kv access_seq (hot, 4096-block pool)", || {
-        sink(kv.access_seq(&mut hr, SeqId(1)));
-    });
+    rec(
+        json,
+        b.wall("kv append_token (evicting)", || {
+            sink(kv2.append_token(&mut hr2, SeqId(1)));
+        }),
+    );
+    rec(
+        json,
+        b.wall("kv access_seq (hot, 4096-block pool)", || {
+            sink(kv.access_seq(&mut hr, SeqId(1)));
+        }),
+    );
 }
 
-fn bench_router_and_scheduler(b: &Bench) {
+fn bench_router_and_scheduler(b: &Bench, json: &mut JsonReport) {
     let model = find_moe_model("qwen").unwrap();
     let mut router = RouterSim::new(model, model.n_layers as usize, 1);
-    b.wall("route_microbatch (324 tok, Qwen 64-expert)", || {
-        sink(router.route_microbatch(0, 324));
-    });
+    rec(
+        json,
+        b.wall("route_microbatch (324 tok, Qwen 64-expert)", || {
+            sink(router.route_microbatch(0, 324));
+        }),
+    );
     let mut cf = CompletelyFair::new(1);
     for i in 0..256 {
         cf.admit(SeqId(i));
     }
-    b.wall("CF select (256 runnable, 32 slots)", || {
-        sink(cf.select(32));
-    });
+    rec(
+        json,
+        b.wall("CF select (256 runnable, 32 slots)", || {
+            sink(cf.select(32));
+        }),
+    );
 }
 
-fn bench_decode_pass(b: &Bench) {
+fn bench_decode_pass(b: &Bench, json: &mut JsonReport) {
     // Whole CGOPipe decode pass in virtual time — wall time here is the
     // simulator's own overhead (the L3 inner loop).
     let model = find_moe_model("qwen").unwrap();
@@ -179,19 +244,25 @@ fn bench_decode_pass(b: &Bench) {
     let mut router = RouterSim::new(model, model.n_layers as usize, 2);
     let mut reb = ExpertRebalancer::new(model, 0, 0.5);
     reb.rebalance(&mut hr, usize::MAX);
-    b.wall("CGOPipe decode_pass (Qwen, 4536 tok)", || {
-        sink(pipe.decode_pass(&mut router, &mut reb, &mut hr, OffloadTier::Harvest));
-    });
+    rec(
+        json,
+        b.wall("CGOPipe decode_pass (Qwen, 4536 tok)", || {
+            sink(pipe.decode_pass(&mut router, &mut reb, &mut hr, OffloadTier::Harvest));
+        }),
+    );
 }
 
-fn bench_trace(b: &Bench) {
+fn bench_trace(b: &Bench, json: &mut JsonReport) {
     let spec = TraceSpec { machines: 200, snapshots_per_machine: 64, ..Default::default() };
-    b.wall("trace synthesize (12.8k snapshots)", || {
-        sink(ClusterTrace::synthesize(spec.clone()));
-    });
+    rec(
+        json,
+        b.wall("trace synthesize (12.8k snapshots)", || {
+            sink(ClusterTrace::synthesize(spec.clone()));
+        }),
+    );
 }
 
-fn bench_pjrt_decode(b: &Bench) {
+fn bench_pjrt_decode(json: &mut JsonReport) {
     let dir = std::env::var("HARVEST_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     if !Path::new(&dir).join("manifest.json").exists() {
         println!("(skipping PJRT decode bench: no {dir}/manifest.json — run `make artifacts`)");
@@ -214,9 +285,12 @@ fn bench_pjrt_decode(b: &Bench) {
             })
             .collect();
         let small = Bench::new(2, 10);
-        small.wall(&format!("PJRT decode step (batch {bsz})"), || {
-            sink(rt.decode(&slots).expect("decode"));
-        });
+        rec(
+            json,
+            small.wall(&format!("PJRT decode step (batch {bsz})"), || {
+                sink(rt.decode(&slots).expect("decode"));
+            }),
+        );
         rt.reset_kv().unwrap();
     }
 }
@@ -225,13 +299,18 @@ fn main() {
     println!("== Harvest hot-path wall-clock benches ==\n");
     Bench::header();
     let b = Bench::default();
-    bench_harvest_alloc_free(&b);
-    bench_alloc_under_fragmentation(&b);
-    bench_lease_session_paths(&b);
-    bench_expert_fetch(&b);
-    bench_kv_ops(&b);
-    bench_router_and_scheduler(&b);
-    bench_decode_pass(&b);
-    bench_trace(&b);
-    bench_pjrt_decode(&b);
+    let mut json = JsonReport::new("BENCH_hot_path.json");
+    bench_harvest_alloc_free(&b, &mut json);
+    bench_alloc_under_fragmentation(&b, &mut json);
+    bench_lease_session_paths(&b, &mut json);
+    bench_expert_fetch(&b, &mut json);
+    bench_kv_ops(&b, &mut json);
+    bench_router_and_scheduler(&b, &mut json);
+    bench_decode_pass(&b, &mut json);
+    bench_trace(&b, &mut json);
+    bench_pjrt_decode(&mut json);
+    match json.write() {
+        Ok(()) => println!("\nwrote {}", json.path().display()),
+        Err(e) => println!("\ncould not write {}: {e}", json.path().display()),
+    }
 }

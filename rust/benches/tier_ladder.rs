@@ -1,0 +1,270 @@
+//! Tier ladder — the cold-tier aging ladder end to end, in virtual time.
+//!
+//! Idle sessions spill out of the local KV pool to peer HBM, then an
+//! aging daemon (`KvOffloadManager::age_idle_blocks`, one rung per
+//! sweep) walks them down the ladder: peer HBM → host DRAM →
+//! compressed-in-place → the paged SSD arena. The sweep here varies the
+//! idle age (number of 5 ms aging periods a session has sat cold) and
+//! reports where the bytes live afterwards, plus the full comeback cost
+//! when decode touches the sequences again — which must complete with
+//! **zero recomputes** at every rung: the ladder trades latency for
+//! recomputation, never correctness.
+//!
+//! A second section replays the pressure path from the integration
+//! suite: a guaranteed-priority tenant burst displaces every harvest
+//! lease, and the `compress_before_demote` ladder (compress → demote →
+//! drop) is compared against the bare revocation path. With the ladder
+//! the burst costs compressions and demotions; without it the same
+//! burst costs recomputes.
+//!
+//! A machine-readable summary is written to `BENCH_tier_ladder.json`
+//! (see `util::bench::JsonReport`).
+//!
+//! Run: `cargo bench --bench tier_ladder` (`-- --smoke` for the CI
+//! short run).
+
+use harvest::harvest::{HarvestConfig, HarvestRuntime, MemoryTier};
+use harvest::kv::{KvConfig, KvOffloadManager, SeqId};
+use harvest::memsim::{NodeSpec, SimNode};
+use harvest::moe::find_kv_model;
+use harvest::tenantsim::{BatchActor, TenantFleet, TenantPriority};
+use harvest::util::bench::{JsonReport, Table};
+use harvest::util::json::{obj, Json};
+use harvest::util::{fmt_bytes, fmt_ns};
+
+const GIB: u64 = 1 << 30;
+/// Aging daemon period: each sweep steps idle blocks one rung down.
+const SWEEP_NS: u64 = 5_000_000;
+/// In-place compression target on the compress rung.
+const RATIO_PCT: u32 = 50;
+const BLOCKS_PER_SEQ: u64 = 12;
+
+/// Fresh runtime + KV manager with `seqs` sequences appended through a
+/// 4-block local pool, so nearly everything spills to peer HBM (lossy:
+/// only the ladder keeps the spill alive under pressure).
+fn build(seqs: u64, ladder: bool) -> (HarvestRuntime, KvOffloadManager) {
+    let mut hcfg = HarvestConfig::for_node(2);
+    if ladder {
+        hcfg.demote_to_host = true;
+        hcfg.compress_before_demote = true;
+    }
+    let spec = if ladder {
+        NodeSpec::h100x2().with_ssd(256 * GIB)
+    } else {
+        NodeSpec::h100x2()
+    };
+    let mut hr = HarvestRuntime::new(SimNode::new(spec), hcfg);
+    let kv_cfg = KvConfig {
+        model: find_kv_model("deepseek").unwrap(),
+        block_tokens: 16,
+        local_capacity_blocks: 4,
+        use_harvest: true,
+        host_backed_peer: false,
+    };
+    let mut kv = KvOffloadManager::new(kv_cfg, 0);
+    for s in 0..seqs {
+        for _ in 0..16 * BLOCKS_PER_SEQ {
+            kv.append_token(&mut hr, SeqId(s));
+        }
+    }
+    assert!(kv.stats.evictions_to_peer > 0, "tight pool must spill to peer");
+    (hr, kv)
+}
+
+struct LadderRow {
+    idle_ns: u64,
+    stepped: usize,
+    peer: u64,
+    host: u64,
+    ssd: u64,
+    compressed: usize,
+    comeback_ns: u64,
+    decompress_ns: u64,
+    ssd_reloads: u64,
+}
+
+/// Age the spilled sessions for `sweeps` periods, then bring them all
+/// back through decode and account the round trip.
+fn ladder_row(seqs: u64, sweeps: u32) -> LadderRow {
+    let (mut hr, mut kv) = build(seqs, true);
+    let mut stepped = 0;
+    for _ in 0..sweeps {
+        let now = hr.node.clock.now();
+        hr.advance_to(now + SWEEP_NS);
+        stepped += kv.age_idle_blocks(&mut hr, SWEEP_NS, RATIO_PCT);
+    }
+    kv.sync(&mut hr);
+    let peer = hr.live_bytes_on_tier(MemoryTier::PeerHbm(1));
+    let host = hr.live_bytes_on_tier(MemoryTier::Host);
+    let ssd = hr.live_bytes_on_tier(MemoryTier::Ssd);
+    let compressed = kv.compressed_blocks().count();
+    let start = hr.node.clock.now();
+    for s in 0..seqs {
+        kv.access_seq(&mut hr, SeqId(s));
+    }
+    let comeback_ns = hr.node.clock.now() - start;
+    assert_eq!(
+        kv.stats.recomputes, 0,
+        "the ladder must bring every block home without recompute (sweeps {sweeps})"
+    );
+    kv.check_invariants().unwrap();
+    LadderRow {
+        idle_ns: u64::from(sweeps) * SWEEP_NS,
+        stepped,
+        peer,
+        host,
+        ssd,
+        compressed,
+        comeback_ns,
+        decompress_ns: kv.stats.decompress_ns,
+        ssd_reloads: kv.stats.ssd_reloads,
+    }
+}
+
+struct PressureRow {
+    compressions: u64,
+    demotions: u64,
+    recomputes: u64,
+    revocations: u64,
+}
+
+/// The integration-suite pressure path: a guaranteed batch tenant
+/// bursts to the whole peer GPU, displacing every harvest lease, then
+/// decode touches the sequences again.
+fn pressure_row(seqs: u64, ladder: bool) -> PressureRow {
+    let (mut hr, mut kv) = build(seqs, ladder);
+    let mut fleet = TenantFleet::new();
+    fleet.push(Box::new(BatchActor::new(
+        "batch-0",
+        1,
+        80 * GIB,
+        2_000_000,
+        2_000_000,
+        TenantPriority::Guaranteed,
+        3,
+    )));
+    for t in 1..=5u64 {
+        let now = hr.node.clock.now();
+        fleet.advance_to(&mut hr, now.max(t * 2_000_000));
+    }
+    kv.sync(&mut hr);
+    for s in 0..seqs {
+        kv.access_seq(&mut hr, SeqId(s));
+    }
+    kv.check_invariants().unwrap();
+    PressureRow {
+        compressions: kv.stats.compressions,
+        demotions: kv.stats.demotions,
+        recomputes: kv.stats.recomputes,
+        revocations: hr.revocations.len() as u64,
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let seqs = if smoke { 2 } else { 4 };
+    let mut json = JsonReport::new("BENCH_tier_ladder.json");
+
+    println!(
+        "tier ladder — idle-age sweep over the cold-tier aging ladder\n\
+         ({seqs} sequences x {BLOCKS_PER_SEQ} blocks, 4-block local pool, one rung per {} sweep)\n",
+        fmt_ns(SWEEP_NS)
+    );
+    let t = Table::new(&[8, 6, 10, 10, 10, 6, 11, 11]);
+    t.row(&[
+        "IDLE".into(),
+        "STEPS".into(),
+        "PEER".into(),
+        "HOST".into(),
+        "SSD".into(),
+        "CBLKS".into(),
+        "COMEBACK".into(),
+        "DECOMP".into(),
+    ]);
+    t.sep();
+    for sweeps in 0..=3u32 {
+        let r = ladder_row(seqs, sweeps);
+        match sweeps {
+            1 => assert!(r.host > 0, "first sweep must land spill on host DRAM"),
+            2 => assert!(r.compressed > 0, "second sweep must compress in place"),
+            3 => {
+                assert!(r.ssd > 0, "third sweep must page out to the SSD arena");
+                assert!(r.ssd_reloads > 0, "comeback must reload from SSD");
+                assert!(r.decompress_ns > 0, "SSD comeback pays decompression");
+            }
+            _ => {}
+        }
+        t.row(&[
+            fmt_ns(r.idle_ns),
+            format!("{}", r.stepped),
+            fmt_bytes(r.peer),
+            fmt_bytes(r.host),
+            fmt_bytes(r.ssd),
+            format!("{}", r.compressed),
+            fmt_ns(r.comeback_ns),
+            fmt_ns(r.decompress_ns),
+        ]);
+        json.add(
+            &format!("idle_{}ms", u64::from(sweeps) * SWEEP_NS / 1_000_000),
+            obj([
+                ("idle_ns", Json::from(r.idle_ns)),
+                ("rung_steps", Json::from(r.stepped)),
+                ("peer_bytes", Json::from(r.peer)),
+                ("host_bytes", Json::from(r.host)),
+                ("ssd_bytes", Json::from(r.ssd)),
+                ("compressed_blocks", Json::from(r.compressed)),
+                ("comeback_ns", Json::from(r.comeback_ns)),
+                ("decompress_ns", Json::from(r.decompress_ns)),
+                ("ssd_reloads", Json::from(r.ssd_reloads)),
+                ("recomputes", Json::from(0u64)),
+            ]),
+        );
+    }
+
+    println!("\npressure burst (guaranteed tenant displaces every lease):\n");
+    let p = Table::new(&[12, 10, 9, 11, 10]);
+    p.row(&[
+        "LADDER".into(),
+        "COMPRESS".into(),
+        "DEMOTE".into(),
+        "RECOMPUTE".into(),
+        "REVOKE".into(),
+    ]);
+    p.sep();
+    for ladder in [true, false] {
+        let r = pressure_row(seqs, ladder);
+        if ladder {
+            assert_eq!(r.recomputes, 0, "ladder on: the burst must cost zero recomputes");
+            assert!(r.compressions > 0, "ladder on: pressure compresses before demoting");
+        } else {
+            assert!(r.recomputes > 0, "ladder off: displaced lossy blocks recompute");
+        }
+        p.row(&[
+            if ladder { "on" } else { "off" }.into(),
+            format!("{}", r.compressions),
+            format!("{}", r.demotions),
+            format!("{}", r.recomputes),
+            format!("{}", r.revocations),
+        ]);
+        json.add(
+            if ladder { "pressure_ladder_on" } else { "pressure_ladder_off" },
+            obj([
+                ("compressions", Json::from(r.compressions)),
+                ("demotions", Json::from(r.demotions)),
+                ("recomputes", Json::from(r.recomputes)),
+                ("revocations", Json::from(r.revocations)),
+            ]),
+        );
+    }
+
+    match json.write() {
+        Ok(()) => println!("\nwrote {}", json.path().display()),
+        Err(e) => println!("\ncould not write {}: {e}", json.path().display()),
+    }
+    println!(
+        "\ntakeaway: idle sessions descend peer -> host -> compressed -> SSD and every\n\
+         rung still pages back in with zero recomputes — deeper rungs trade comeback\n\
+         latency (NVMe + decompression) for freed hot-tier capacity, and under a\n\
+         pressure burst the same ladder turns forced drops into compress/demote."
+    );
+}

@@ -1,8 +1,9 @@
 //! Tier sweep — reload latency per block size across the full cache
 //! hierarchy: peer HBM (NVLink) vs CXL-attached memory vs host DRAM
-//! (PCIe), measured through the same chunked tier-aware lease path the
-//! KV manager uses. The table the `TierPreference` cost model is
-//! implicitly navigating on every placement decision.
+//! (PCIe) vs paged NVMe SSD (staged through host), measured through the
+//! same chunked tier-aware lease path the KV manager uses. The table
+//! the `TierPreference` cost model is implicitly navigating on every
+//! placement decision — five tiers since the cold-tier ladder landed.
 //!
 //! Run: `cargo bench --bench tier_sweep`
 
@@ -18,11 +19,13 @@ use harvest::util::{fmt_bytes, fmt_ns};
 const GIB: u64 = 1 << 30;
 const ENTRIES: &[u64] = &[100, 1000, 8000];
 
-/// Chunked reload of `bytes` from `tier` to GPU 0 on a fresh CXL-bearing
-/// node (idle links — the unloaded point of the cost model).
+/// Chunked reload of `bytes` from `tier` to GPU 0 on a fresh node
+/// carrying every cold tier (idle links — the unloaded point of the
+/// cost model). SSD reloads stage through host DRAM, so they pay the
+/// NVMe link plus the PCIe hop the host column pays alone.
 fn reload(tier: MemoryTier, bytes: u64) -> u64 {
     let mut hr = HarvestRuntime::new(
-        SimNode::new(NodeSpec::h100x2().with_cxl(256 * GIB)),
+        SimNode::new(NodeSpec::h100x2().with_cxl(256 * GIB).with_ssd(1024 * GIB)),
         HarvestConfig::for_node(2),
     );
     let session = hr.open_session(PayloadKind::KvBlock);
@@ -41,18 +44,19 @@ fn reload(tier: MemoryTier, bytes: u64) -> u64 {
 }
 
 fn main() {
-    println!("Tier sweep — chunked KV reload latency: peer HBM vs CXL vs host DRAM\n");
+    println!("Tier sweep — chunked KV reload latency: peer HBM vs CXL vs host DRAM vs SSD\n");
     for m in KV_MODELS {
         println!("{} ({} KiB per KV entry):", m.name, m.kv_bytes_per_token() / 1024);
-        let table = Table::new(&[10, 12, 12, 12, 12, 11, 11]);
+        let table = Table::new(&[10, 12, 12, 12, 12, 12, 11, 11]);
         table.row(&[
             "ENTRIES".into(),
             "BYTES".into(),
             "PEER HBM".into(),
             "CXL".into(),
             "HOST".into(),
+            "SSD".into(),
             "HOST/PEER".into(),
-            "HOST/CXL".into(),
+            "SSD/HOST".into(),
         ]);
         table.sep();
         for &n in ENTRIES {
@@ -60,9 +64,10 @@ fn main() {
             let peer = reload(MemoryTier::PeerHbm(1), bytes);
             let cxl = reload(MemoryTier::CxlMem, bytes);
             let host = reload(MemoryTier::Host, bytes);
+            let ssd = reload(MemoryTier::Ssd, bytes);
             assert!(
-                peer < cxl && cxl < host,
-                "tier ordering violated: peer {peer} cxl {cxl} host {host}"
+                peer < cxl && cxl < host && host < ssd,
+                "tier ordering violated: peer {peer} cxl {cxl} host {host} ssd {ssd}"
             );
             table.row(&[
                 format!("{n}"),
@@ -70,15 +75,17 @@ fn main() {
                 fmt_ns(peer),
                 fmt_ns(cxl),
                 fmt_ns(host),
+                fmt_ns(ssd),
                 format!("{:.2}x", host as f64 / peer as f64),
-                format!("{:.2}x", host as f64 / cxl as f64),
+                format!("{:.2}x", ssd as f64 / host as f64),
             ]);
         }
         println!();
     }
     println!(
-        "(chunked into {} descriptors; CXL sits between the peer and host tiers —\n\
-         exactly the gap the demote/promote migration paths trade across)",
+        "(chunked into {} descriptors; CXL sits between the peer and host tiers and\n\
+         SSD behind host — exactly the gaps the cold-tier ladder's demote/promote\n\
+         migration paths trade across)",
         fmt_bytes(RELOAD_CHUNK_BYTES)
     );
 }

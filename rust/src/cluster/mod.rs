@@ -67,17 +67,20 @@ pub struct TierLedger {
     pub peer: u64,
     pub cxl: u64,
     pub host: u64,
+    /// Bytes parked on the SSD cold tier (paged, compressed or not).
+    pub ssd: u64,
 }
 
 impl TierLedger {
     pub fn total(&self) -> u64 {
-        self.peer + self.cxl + self.host
+        self.peer + self.cxl + self.host + self.ssd
     }
 
     pub fn accumulate(&mut self, other: &TierLedger) {
         self.peer += other.peer;
         self.cxl += other.cxl;
         self.host += other.host;
+        self.ssd += other.ssd;
     }
 }
 

@@ -213,6 +213,7 @@ impl ClusterNode {
             peer,
             cxl: self.hr.live_bytes_on_tier(MemoryTier::CxlMem),
             host: self.hr.live_bytes_on_tier(MemoryTier::Host),
+            ssd: self.hr.live_bytes_on_tier(MemoryTier::Ssd),
         }
     }
 

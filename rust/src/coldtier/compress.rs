@@ -1,0 +1,139 @@
+//! Modeled layer-wise KV compression.
+//!
+//! The [`Compressor`] models PyramidInfer-style token pruning plus
+//! quantization as two numbers: the **ratio** (compressed size as a
+//! percent of the original) and the **decode-side cost** (ns per
+//! original byte to reconstruct the tensors on reload). Compressing is
+//! free in virtual time — pruning happens as a side effect of attention
+//! compute — so the model charges nothing up front and everything on
+//! the next read, which is exactly when a real serving stack would pay
+//! the dequantize/scatter kernels.
+//!
+//! The size formula is shared verbatim with the harvest controller's
+//! in-place `compress_lease` so that pager accounting, lease
+//! accounting, and this model can never disagree.
+
+/// Compression-ratio + decompression-cost model.
+///
+/// ```
+/// use harvest::coldtier::Compressor;
+///
+/// // Keep 25% of bytes; decompression reconstructs at 4 GB/s (0.25 ns/byte).
+/// let c = Compressor::new(25, 0.25);
+/// assert_eq!(c.compressed_size(1024), 256);
+/// assert_eq!(c.compressed_size(1), 1); // never rounds to zero
+/// assert_eq!(c.saved_bytes(1024), 768);
+/// assert_eq!(c.decompress_cost_ns(1024), 256);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Compressor {
+    ratio_pct: u32,
+    decompress_ns_per_byte: f64,
+}
+
+impl Default for Compressor {
+    /// Keep 50% of bytes; reconstruct at ~4 GB/s (0.25 ns per original
+    /// byte).
+    fn default() -> Self {
+        Self::new(50, 0.25)
+    }
+}
+
+impl Compressor {
+    /// New model keeping `ratio_pct` percent of bytes and charging
+    /// `decompress_ns_per_byte` (per *original* byte) on reload.
+    ///
+    /// # Panics
+    ///
+    /// Panics unless `1 <= ratio_pct <= 99` and the cost is
+    /// non-negative and finite.
+    pub fn new(ratio_pct: u32, decompress_ns_per_byte: f64) -> Self {
+        assert!((1..=99).contains(&ratio_pct), "compression ratio must be 1..=99 percent");
+        assert!(
+            decompress_ns_per_byte.is_finite() && decompress_ns_per_byte >= 0.0,
+            "decompression cost must be finite and non-negative"
+        );
+        Self { ratio_pct, decompress_ns_per_byte }
+    }
+
+    /// Compressed size as a percent of the original.
+    pub fn ratio_pct(&self) -> u32 {
+        self.ratio_pct
+    }
+
+    /// Decode-side reconstruction cost in ns per original byte.
+    pub fn decompress_ns_per_byte(&self) -> f64 {
+        self.decompress_ns_per_byte
+    }
+
+    /// Size after compressing `original` bytes: floor at the ratio but
+    /// never below one byte. Zero stays zero (nothing to compress).
+    ///
+    /// This is the exact formula the harvest controller applies when it
+    /// shrinks a lease in place, so tier accounting and this model
+    /// always agree.
+    pub fn compressed_size(&self, original: u64) -> u64 {
+        if original == 0 {
+            return 0;
+        }
+        (original * u64::from(self.ratio_pct) / 100).max(1)
+    }
+
+    /// Bytes released by compressing `original` bytes.
+    pub fn saved_bytes(&self, original: u64) -> u64 {
+        original - self.compressed_size(original)
+    }
+
+    /// Virtual-time cost to reconstruct a segment that was `original`
+    /// bytes before compression.
+    pub fn decompress_cost_ns(&self, original: u64) -> u64 {
+        (original as f64 * self.decompress_ns_per_byte).ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_controller_formula() {
+        let c = Compressor::new(50, 0.25);
+        assert_eq!(c.compressed_size(0), 0);
+        assert_eq!(c.compressed_size(1), 1); // 1*50/100 = 0 -> clamped to 1
+        assert_eq!(c.compressed_size(100), 50);
+        assert_eq!(c.compressed_size(101), 50); // floor division
+        let gib = 1u64 << 30;
+        assert_eq!(c.compressed_size(2 * gib), gib);
+        assert_eq!(c.saved_bytes(2 * gib), gib);
+    }
+
+    #[test]
+    fn decompress_cost_scales_with_original_bytes() {
+        let c = Compressor::new(25, 0.5);
+        assert_eq!(c.decompress_cost_ns(0), 0);
+        assert_eq!(c.decompress_cost_ns(1), 1); // 0.5 ns rounds up
+        assert_eq!(c.decompress_cost_ns(1000), 500);
+        let free = Compressor::new(25, 0.0);
+        assert_eq!(free.decompress_cost_ns(1 << 30), 0);
+    }
+
+    #[test]
+    fn default_is_half_size_at_4gbps() {
+        let c = Compressor::default();
+        assert_eq!(c.ratio_pct(), 50);
+        assert_eq!(c.compressed_size(1 << 20), 1 << 19);
+        assert!((c.decompress_ns_per_byte() - 0.25).abs() < f64::EPSILON);
+    }
+
+    #[test]
+    #[should_panic(expected = "ratio")]
+    fn ratio_100_panics() {
+        let _ = Compressor::new(100, 0.25);
+    }
+
+    #[test]
+    #[should_panic(expected = "ratio")]
+    fn ratio_0_panics() {
+        let _ = Compressor::new(0, 0.25);
+    }
+}

@@ -1,0 +1,248 @@
+//! Watermark-driven write-back eviction planning.
+//!
+//! The [`Evictor`] decides *what to push down the ladder and when*:
+//! it tracks last-touch times and dirty bits per cached entry, and when
+//! occupancy crosses the high watermark it plans evictions —
+//! oldest-idle first, skipping entries touched more recently than the
+//! configured idle age — until the projected occupancy falls back
+//! under the low watermark. Dirty entries come back as write-backs
+//! (the bytes must reach the lower tier before the fast copy is
+//! reclaimed); clean entries are plain drops.
+//!
+//! The evictor is pure planning: it never moves bytes itself. Callers
+//! (the KV offload manager, the tier-ladder bench) execute each
+//! [`EvictAction`] with `Transfer::migrate` / `Transfer::compress` and
+//! then [`Evictor::forget`] the entry.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Virtual-time nanoseconds (matches the simulator clock).
+type Ns = u64;
+
+/// Thresholds steering [`Evictor::plan`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvictorConfig {
+    /// Start evicting when `used > high_watermark * capacity`.
+    pub high_watermark: f64,
+    /// Keep evicting until projected `used <= low_watermark * capacity`.
+    pub low_watermark: f64,
+    /// Only entries idle at least this long are eviction candidates.
+    pub idle_age_ns: Ns,
+}
+
+impl Default for EvictorConfig {
+    /// Evict above 90% occupancy down to 70%, considering entries idle
+    /// for at least 1 ms of virtual time.
+    fn default() -> Self {
+        Self { high_watermark: 0.90, low_watermark: 0.70, idle_age_ns: 1_000_000 }
+    }
+}
+
+/// One planned eviction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvictAction {
+    /// The caller-assigned entry id (e.g. a KV block id).
+    pub id: u64,
+    /// True if the entry is dirty and its bytes must be written back
+    /// to the lower tier; false means the copy can simply be dropped.
+    pub write_back: bool,
+}
+
+/// Dirty/age tracker plus watermark eviction planner.
+///
+/// ```
+/// use harvest::coldtier::{Evictor, EvictorConfig};
+///
+/// let mut ev = Evictor::new(EvictorConfig {
+///     high_watermark: 0.8,
+///     low_watermark: 0.5,
+///     idle_age_ns: 100,
+/// });
+/// ev.touch(1, 0);
+/// ev.touch(2, 50);
+/// ev.mark_dirty(1);
+///
+/// // 90 of 100 bytes used at t=500: over the 80% high watermark, so
+/// // plan evictions (oldest idle first) down to the 50% low watermark.
+/// let plan = ev.plan(90, 100, 500, |_| 40);
+/// assert_eq!(plan.len(), 1); // one 40-byte victim gets us to 50
+/// assert_eq!(plan[0].id, 1); // entry 1 is oldest
+/// assert!(plan[0].write_back); // and dirty
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct Evictor {
+    config: EvictorConfig,
+    last_touch: BTreeMap<u64, Ns>,
+    dirty: BTreeSet<u64>,
+}
+
+impl Evictor {
+    /// New evictor with the given thresholds.
+    ///
+    /// # Panics
+    ///
+    /// Panics unless `0 < low <= high <= 1`.
+    pub fn new(config: EvictorConfig) -> Self {
+        assert!(
+            config.low_watermark > 0.0
+                && config.low_watermark <= config.high_watermark
+                && config.high_watermark <= 1.0,
+            "watermarks must satisfy 0 < low <= high <= 1"
+        );
+        Self { config, last_touch: BTreeMap::new(), dirty: BTreeSet::new() }
+    }
+
+    /// The active thresholds.
+    pub fn config(&self) -> EvictorConfig {
+        self.config
+    }
+
+    /// Record an access to `id` at virtual time `now` (registers the
+    /// entry on first touch).
+    pub fn touch(&mut self, id: u64, now: Ns) {
+        self.last_touch.insert(id, now);
+    }
+
+    /// Mark `id` dirty: its next eviction must write back.
+    pub fn mark_dirty(&mut self, id: u64) {
+        self.dirty.insert(id);
+    }
+
+    /// Clear the dirty bit (e.g. after an explicit write-back).
+    pub fn mark_clean(&mut self, id: u64) {
+        self.dirty.remove(&id);
+    }
+
+    /// Is `id` currently dirty?
+    pub fn is_dirty(&self, id: u64) -> bool {
+        self.dirty.contains(&id)
+    }
+
+    /// Number of tracked entries.
+    pub fn tracked(&self) -> usize {
+        self.last_touch.len()
+    }
+
+    /// Last touch time for `id`, if tracked.
+    pub fn last_touch(&self, id: u64) -> Option<Ns> {
+        self.last_touch.get(&id).copied()
+    }
+
+    /// Drop all state for `id` (call after executing its eviction).
+    pub fn forget(&mut self, id: u64) {
+        self.last_touch.remove(&id);
+        self.dirty.remove(&id);
+    }
+
+    /// Plan evictions for a tier holding `used` of `capacity` bytes at
+    /// virtual time `now`; `size_of(id)` reports each entry's size.
+    ///
+    /// Returns an empty plan while `used <= high_watermark * capacity`.
+    /// Otherwise picks tracked entries oldest-idle first — skipping any
+    /// touched within `idle_age_ns` — until the projected occupancy is
+    /// at or below the low watermark (or candidates run out). Planned
+    /// entries are *not* forgotten; the caller forgets them once the
+    /// eviction actually executes.
+    pub fn plan(
+        &self,
+        used: u64,
+        capacity: u64,
+        now: Ns,
+        mut size_of: impl FnMut(u64) -> u64,
+    ) -> Vec<EvictAction> {
+        let high = (self.config.high_watermark * capacity as f64) as u64;
+        let low = (self.config.low_watermark * capacity as f64) as u64;
+        if used <= high {
+            return Vec::new();
+        }
+
+        // Oldest idle first; entry id breaks ties deterministically.
+        let mut candidates: Vec<(Ns, u64)> = self
+            .last_touch
+            .iter()
+            .filter(|(_, &t)| now.saturating_sub(t) >= self.config.idle_age_ns)
+            .map(|(&id, &t)| (t, id))
+            .collect();
+        candidates.sort_unstable();
+
+        let mut projected = used;
+        let mut plan = Vec::new();
+        for (_, id) in candidates {
+            if projected <= low {
+                break;
+            }
+            plan.push(EvictAction { id, write_back: self.dirty.contains(&id) });
+            projected = projected.saturating_sub(size_of(id));
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn evictor() -> Evictor {
+        Evictor::new(EvictorConfig { high_watermark: 0.8, low_watermark: 0.5, idle_age_ns: 100 })
+    }
+
+    #[test]
+    fn under_high_watermark_plans_nothing() {
+        let mut ev = evictor();
+        ev.touch(1, 0);
+        assert!(ev.plan(80, 100, 1_000, |_| 10).is_empty());
+    }
+
+    #[test]
+    fn evicts_oldest_idle_down_to_low_watermark() {
+        let mut ev = evictor();
+        ev.touch(1, 0); // oldest
+        ev.touch(2, 10);
+        ev.touch(3, 950); // too recent at now=1000 (idle 50 < 100)
+        ev.mark_dirty(2);
+
+        let plan = ev.plan(95, 100, 1_000, |_| 25);
+        // 95 -> 70 -> 45 <= 50: two victims, oldest first.
+        assert_eq!(
+            plan,
+            vec![
+                EvictAction { id: 1, write_back: false },
+                EvictAction { id: 2, write_back: true },
+            ]
+        );
+    }
+
+    #[test]
+    fn recent_entries_are_exempt_even_under_pressure() {
+        let mut ev = evictor();
+        ev.touch(1, 990);
+        ev.touch(2, 995);
+        assert!(ev.plan(100, 100, 1_000, |_| 50).is_empty());
+    }
+
+    #[test]
+    fn dirty_bit_lifecycle() {
+        let mut ev = evictor();
+        ev.touch(7, 0);
+        assert!(!ev.is_dirty(7));
+        ev.mark_dirty(7);
+        assert!(ev.is_dirty(7));
+        ev.mark_clean(7);
+        assert!(!ev.is_dirty(7));
+        ev.mark_dirty(7);
+        ev.forget(7);
+        assert!(!ev.is_dirty(7));
+        assert_eq!(ev.tracked(), 0);
+        assert_eq!(ev.last_touch(7), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "watermarks")]
+    fn inverted_watermarks_panic() {
+        let _ = Evictor::new(EvictorConfig {
+            high_watermark: 0.5,
+            low_watermark: 0.8,
+            idle_age_ns: 0,
+        });
+    }
+}

@@ -1,0 +1,68 @@
+//! The SSD cold tier (the bottom rung of the demotion ladder).
+//!
+//! The paper's tier story stops at host memory: when host and CXL fill
+//! up, revoking a lossy lease ends in `Dropped` → recompute, so a
+//! long-idle multi-turn session pays full prefill on return. This
+//! subsystem extends the ladder two rungs further — **compressed in
+//! place**, then **paged out to a byte-addressed SSD arena** — so idle
+//! sessions age peer → host/CXL → compressed → SSD and come back with
+//! zero recomputes, paying only page-in latency plus a modeled
+//! decompression cost.
+//!
+//! Three components, each usable standalone:
+//!
+//! * [`Pager`] — fixed-size pages over the SSD arena
+//!   ([`crate::memsim::SimNode::ssd`]): a page table keyed by arena
+//!   [`crate::memsim::AllocId`] plus free accounting. Every SSD-resident
+//!   lease occupies whole pages, so arena occupancy always equals
+//!   `pages_mapped() * page_bytes()` — the invariant
+//!   [`Pager::balances`] checks.
+//! * [`Evictor`] — watermark-driven write-back planning: dirty tracking
+//!   and last-touch ages per cached entry, and a [`Evictor::plan`] that
+//!   picks oldest-idle victims (write-back for dirty entries, plain
+//!   drop for clean ones) until occupancy falls back under the low
+//!   watermark.
+//! * [`Compressor`] — modeled layer-wise token-pruning/quantization
+//!   (PyramidInfer-style): a configurable compressed-size ratio and a
+//!   decode-side decompression cost in ns/byte. Compression itself is
+//!   free in virtual time — the cost is charged when the bytes are next
+//!   read.
+//!
+//! The tier machinery in [`crate::harvest`] wires these in:
+//! `MemoryTier::Ssd` allocations route through the controller's pager,
+//! `Transfer::compress` / `Transfer::decompress` reshape leases in
+//! place, and the pressure ladder under
+//! [`crate::harvest::HarvestConfig::compress_before_demote`] tries
+//! compress → demote → drop before losing any bytes.
+//!
+//! ```
+//! use harvest::coldtier::{Compressor, Pager};
+//! use harvest::memsim::{FitStrategy, Hbm};
+//!
+//! // A 16 MiB SSD arena paged at 2 MiB.
+//! let mut ssd = Hbm::new(16 << 20, FitStrategy::BestFit);
+//! let mut pager = Pager::new(2 << 20);
+//! let comp = Compressor::new(50, 0.25);
+//!
+//! // A 5 MiB KV segment compresses to 2.5 MiB and pages out in 2 pages.
+//! let compressed = comp.compressed_size(5 << 20);
+//! assert_eq!(compressed, (5 << 20) / 2);
+//! let seg = ssd.alloc(pager.padded(compressed)).unwrap();
+//! pager.map(seg, compressed);
+//! assert_eq!(pager.pages_mapped(), 2);
+//! assert!(pager.balances(&ssd));
+//!
+//! // Decode-side: reloading charges the modeled decompression cost.
+//! assert_eq!(comp.decompress_cost_ns(5 << 20), ((5u64 << 20) as f64 * 0.25) as u64);
+//! pager.unmap(seg);
+//! ssd.free(seg);
+//! assert!(pager.balances(&ssd));
+//! ```
+
+pub mod compress;
+pub mod evict;
+pub mod pager;
+
+pub use compress::Compressor;
+pub use evict::{EvictAction, Evictor, EvictorConfig};
+pub use pager::{PageRun, Pager};

@@ -1,0 +1,223 @@
+//! Fixed-size paging over the byte-addressed SSD arena.
+//!
+//! The SSD arena ([`crate::memsim::SimNode::ssd`]) is an ordinary
+//! [`Hbm`] byte allocator, but NVMe devices don't hand out bytes — they
+//! hand out blocks. The [`Pager`] models that: every cold-tier resident
+//! occupies a whole number of fixed-size pages, and the pager keeps the
+//! page table (arena segment → page run) plus free accounting so the
+//! tier machinery can assert, at every boundary, that the page table
+//! and the arena agree ([`Pager::balances`]).
+//!
+//! The pager does not own the arena; callers allocate
+//! [`Pager::padded`] bytes from it, then [`Pager::map`] the returned
+//! [`AllocId`] with the *logical* (unpadded) size. The difference is
+//! tracked as internal-fragmentation slack ([`Pager::slack_bytes`]).
+
+use std::collections::BTreeMap;
+
+use crate::memsim::{AllocId, Hbm};
+
+/// One page-table entry: the run of pages backing an arena segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageRun {
+    /// Number of fixed-size pages in the run.
+    pub pages: u64,
+    /// Logical bytes stored (≤ `pages * page_bytes`).
+    pub logical_bytes: u64,
+}
+
+/// Page table + free accounting for the SSD arena.
+///
+/// ```
+/// use harvest::coldtier::Pager;
+/// use harvest::memsim::{FitStrategy, Hbm};
+///
+/// let mut ssd = Hbm::new(8 << 20, FitStrategy::BestFit);
+/// let mut pager = Pager::new(2 << 20); // 2 MiB pages
+///
+/// // A 3 MiB payload rounds up to 2 pages (4 MiB).
+/// assert_eq!(pager.padded(3 << 20), 4 << 20);
+/// let seg = ssd.alloc(pager.padded(3 << 20)).unwrap();
+/// pager.map(seg, 3 << 20);
+///
+/// assert_eq!(pager.pages_mapped(), 2);
+/// assert_eq!(pager.mapped_bytes(), 4 << 20);
+/// assert_eq!(pager.logical_bytes(), 3 << 20);
+/// assert_eq!(pager.slack_bytes(), 1 << 20);
+/// assert!(pager.balances(&ssd));
+///
+/// pager.unmap(seg);
+/// ssd.free(seg);
+/// assert_eq!(pager.pages_mapped(), 0);
+/// assert!(pager.balances(&ssd));
+/// ```
+#[derive(Debug, Clone)]
+pub struct Pager {
+    page_bytes: u64,
+    table: BTreeMap<AllocId, PageRun>,
+    pages_mapped: u64,
+    logical_bytes: u64,
+}
+
+impl Pager {
+    /// New pager with the given page size.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `page_bytes` is zero.
+    pub fn new(page_bytes: u64) -> Self {
+        assert!(page_bytes > 0, "page size must be non-zero");
+        Self { page_bytes, table: BTreeMap::new(), pages_mapped: 0, logical_bytes: 0 }
+    }
+
+    /// The fixed page size in bytes.
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    /// Pages needed to hold `size` logical bytes (zero stays zero).
+    pub fn pages_for(&self, size: u64) -> u64 {
+        size.div_ceil(self.page_bytes)
+    }
+
+    /// `size` rounded up to a whole number of pages — the amount to
+    /// actually allocate from the SSD arena.
+    pub fn padded(&self, size: u64) -> u64 {
+        self.pages_for(size) * self.page_bytes
+    }
+
+    /// Record that arena segment `seg` (of [`Self::padded`]`(size)`
+    /// bytes) now backs `size` logical bytes.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `seg` is already mapped or `size` is zero — both
+    /// indicate tier-accounting bugs upstream.
+    pub fn map(&mut self, seg: AllocId, size: u64) {
+        assert!(size > 0, "mapping zero logical bytes");
+        let run = PageRun { pages: self.pages_for(size), logical_bytes: size };
+        let prev = self.table.insert(seg, run);
+        assert!(prev.is_none(), "segment already mapped in page table");
+        self.pages_mapped += run.pages;
+        self.logical_bytes += run.logical_bytes;
+    }
+
+    /// Drop the page-table entry for `seg`, returning its run.
+    ///
+    /// The caller still owns the arena segment and must free it
+    /// separately.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `seg` is not mapped.
+    pub fn unmap(&mut self, seg: AllocId) -> PageRun {
+        let run = self.table.remove(&seg).expect("unmap of segment not in page table");
+        self.pages_mapped -= run.pages;
+        self.logical_bytes -= run.logical_bytes;
+        run
+    }
+
+    /// Page-table entry for `seg`, if mapped.
+    pub fn run_of(&self, seg: AllocId) -> Option<PageRun> {
+        self.table.get(&seg).copied()
+    }
+
+    /// Number of mapped segments (page-table entries).
+    pub fn mapped_segments(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Total pages currently mapped.
+    pub fn pages_mapped(&self) -> u64 {
+        self.pages_mapped
+    }
+
+    /// Total mapped bytes (`pages_mapped * page_bytes`) — must equal
+    /// SSD arena occupancy at every quiescent boundary.
+    pub fn mapped_bytes(&self) -> u64 {
+        self.pages_mapped * self.page_bytes
+    }
+
+    /// Total logical bytes stored across all runs.
+    pub fn logical_bytes(&self) -> u64 {
+        self.logical_bytes
+    }
+
+    /// Internal fragmentation: mapped minus logical bytes.
+    pub fn slack_bytes(&self) -> u64 {
+        self.mapped_bytes() - self.logical_bytes
+    }
+
+    /// Does the page table agree with the arena? True iff
+    /// [`Self::mapped_bytes`] equals `arena.used()`.
+    pub fn balances(&self, arena: &Hbm) -> bool {
+        self.mapped_bytes() == arena.used()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::FitStrategy;
+
+    const MIB: u64 = 1024 * 1024;
+
+    #[test]
+    fn rounding_and_accounting() {
+        let pager = Pager::new(2 * MIB);
+        assert_eq!(pager.pages_for(0), 0);
+        assert_eq!(pager.pages_for(1), 1);
+        assert_eq!(pager.pages_for(2 * MIB), 1);
+        assert_eq!(pager.pages_for(2 * MIB + 1), 2);
+        assert_eq!(pager.padded(3 * MIB), 4 * MIB);
+        assert_eq!(pager.padded(0), 0);
+    }
+
+    #[test]
+    fn map_unmap_balances_against_arena() {
+        let mut ssd = Hbm::new(16 * MIB, FitStrategy::BestFit);
+        let mut pager = Pager::new(2 * MIB);
+
+        let a = ssd.alloc(pager.padded(3 * MIB)).unwrap();
+        pager.map(a, 3 * MIB);
+        let b = ssd.alloc(pager.padded(2 * MIB)).unwrap();
+        pager.map(b, 2 * MIB);
+
+        assert_eq!(pager.mapped_segments(), 2);
+        assert_eq!(pager.pages_mapped(), 3);
+        assert_eq!(pager.mapped_bytes(), 6 * MIB);
+        assert_eq!(pager.logical_bytes(), 5 * MIB);
+        assert_eq!(pager.slack_bytes(), MIB);
+        assert!(pager.balances(&ssd));
+        assert_eq!(pager.run_of(a), Some(PageRun { pages: 2, logical_bytes: 3 * MIB }));
+
+        let run = pager.unmap(a);
+        assert_eq!(run.pages, 2);
+        ssd.free(a);
+        assert!(pager.balances(&ssd));
+        assert_eq!(pager.run_of(a), None);
+
+        pager.unmap(b);
+        ssd.free(b);
+        assert_eq!(pager.pages_mapped(), 0);
+        assert_eq!(pager.logical_bytes(), 0);
+        assert!(pager.balances(&ssd));
+    }
+
+    #[test]
+    #[should_panic(expected = "already mapped")]
+    fn double_map_panics() {
+        let mut ssd = Hbm::new(4 * MIB, FitStrategy::BestFit);
+        let mut pager = Pager::new(MIB);
+        let a = ssd.alloc(MIB).unwrap();
+        pager.map(a, MIB);
+        pager.map(a, MIB);
+    }
+
+    #[test]
+    #[should_panic(expected = "not in page table")]
+    fn unmap_unknown_panics() {
+        let mut pager = Pager::new(MIB);
+        pager.unmap(AllocId(42));
+    }
+}

@@ -326,6 +326,17 @@ pub struct DeploymentConfig {
     pub mig_cache_gib: Option<u64>,
     /// Pressure-revoked lossy leases demote to host instead of dropping.
     pub demote_to_host: bool,
+    /// Cold-tier SSD arena capacity per node (`[coldtier]`; 0 = tier
+    /// absent). When present the demotion ladder bottoms out on paged
+    /// NVMe instead of dropping leases.
+    pub ssd_gib: u64,
+    /// Cold-tier pager page size in KiB (allocations are padded up).
+    pub ssd_page_kib: u64,
+    /// In-place compression target, percent of original size (1..=99).
+    pub compress_ratio_pct: u32,
+    /// Pressure ladder: try compressing a lease in place before
+    /// demoting it, and demote before dropping.
+    pub compress_before_demote: bool,
     /// Closed-loop co-tenant actors (`[tenants]`; disabled by default —
     /// pressure then comes only from replay timelines, as pre-fleet).
     pub tenants: TenantMix,
@@ -375,6 +386,10 @@ impl Default for DeploymentConfig {
             reserve_gib: 0,
             mig_cache_gib: None,
             demote_to_host: false,
+            ssd_gib: 0,
+            ssd_page_kib: 2048,
+            compress_ratio_pct: 50,
+            compress_before_demote: false,
             tenants: TenantMix::default(),
             tenant_overrides: Vec::new(),
             moe_model: "Qwen2-MoE".into(),
@@ -496,6 +511,10 @@ impl DeploymentConfig {
             "harvest.reserve_gib",
             "harvest.mig_cache_gib",
             "harvest.demote_to_host",
+            "coldtier.ssd_gib",
+            "coldtier.page_kib",
+            "coldtier.compress_ratio_pct",
+            "coldtier.compress_before_demote",
             "moe.model",
             "moe.offload_fraction",
             "moe.micro_batch_tokens",
@@ -568,6 +587,13 @@ impl DeploymentConfig {
                 None => None,
             },
             demote_to_host: doc.bool_or("harvest.demote_to_host", d.demote_to_host)?,
+            ssd_gib: doc.u64_or("coldtier.ssd_gib", d.ssd_gib)?,
+            ssd_page_kib: doc.u64_or("coldtier.page_kib", d.ssd_page_kib)?,
+            compress_ratio_pct: doc
+                .u64_or("coldtier.compress_ratio_pct", d.compress_ratio_pct as u64)?
+                as u32,
+            compress_before_demote: doc
+                .bool_or("coldtier.compress_before_demote", d.compress_before_demote)?,
             tenants: tenant_mix(&doc, "tenants", &d.tenants)?,
             tenant_overrides: Vec::new(), // filled below (needs the base mix)
             moe_model: doc.str_or("moe.model", &d.moe_model),
@@ -644,6 +670,12 @@ impl DeploymentConfig {
         if self.prefix_groups == 0 {
             bail!("requests.prefix_groups must be >= 1");
         }
+        if self.compress_ratio_pct == 0 || self.compress_ratio_pct > 99 {
+            bail!("coldtier.compress_ratio_pct must be in 1..=99");
+        }
+        if self.ssd_page_kib == 0 {
+            bail!("coldtier.page_kib must be > 0");
+        }
         for (label, mix) in std::iter::once((None, &self.tenants))
             .chain(self.tenant_overrides.iter().map(|(i, m)| (Some(*i), m)))
         {
@@ -698,6 +730,12 @@ impl DeploymentConfig {
         }
         s.push_str(&format!("demote_to_host = {}\n", self.demote_to_host));
         s.push('\n');
+        s.push_str("[coldtier]\n");
+        s.push_str(&format!("ssd_gib = {}\n", self.ssd_gib));
+        s.push_str(&format!("page_kib = {}\n", self.ssd_page_kib));
+        s.push_str(&format!("compress_ratio_pct = {}\n", self.compress_ratio_pct));
+        s.push_str(&format!("compress_before_demote = {}\n", self.compress_before_demote));
+        s.push('\n');
         emit_tenant_mix(&mut s, "tenants", &self.tenants);
         for (i, mix) in &self.tenant_overrides {
             s.push('\n');
@@ -739,6 +777,9 @@ impl DeploymentConfig {
         }
         if self.cxl_gib > 0 {
             spec = spec.with_cxl(self.cxl_gib * GIB);
+        }
+        if self.ssd_gib > 0 {
+            spec = spec.with_ssd(self.ssd_gib * GIB);
         }
         spec
     }
@@ -792,6 +833,9 @@ impl DeploymentConfig {
         cfg.victim_policy = self.victim_policy;
         cfg.reserve_bytes = self.reserve_gib * GIB;
         cfg.demote_to_host = self.demote_to_host;
+        cfg.compress_before_demote = self.compress_before_demote;
+        cfg.compress_ratio_pct = self.compress_ratio_pct;
+        cfg.ssd_page_bytes = self.ssd_page_kib * 1024;
         if let Some(gib) = self.mig_cache_gib {
             // Partition every potential peer; the compute GPU's entry is
             // ignored by the controller (never selected as a peer).
@@ -902,6 +946,23 @@ pub fn presets() -> Vec<DeploymentConfig> {
             local_capacity_blocks: 512,
             demote_to_host: true,
             tenants: TenantMix { enabled: true, host_gib: 4, ..TenantMix::default() },
+            ..base.clone()
+        },
+        // Long-context sessions over the full cold-tier ladder: a tight
+        // local pool plus a CXL expander and an SSD arena lets idle
+        // sessions age peer -> host/CXL -> compressed -> SSD and come
+        // back with zero recomputes instead of being dropped.
+        DeploymentConfig {
+            name: "long-context".into(),
+            workload: WorkloadKind::KvOffload,
+            cxl_gib: 256,
+            ssd_gib: 1024,
+            compress_before_demote: true,
+            demote_to_host: true,
+            local_capacity_blocks: 512,
+            mean_prompt_tokens: 900.0,
+            shared_prefix_fraction: 0.5,
+            prefix_groups: 4,
             ..base.clone()
         },
         // End-to-end real-compute serve on the AOT tiny model.
@@ -1044,6 +1105,10 @@ mod tests {
             assert_eq!(back.prefix_groups, p.prefix_groups);
             assert_eq!(back.mean_interarrival_us, p.mean_interarrival_us);
             assert_eq!(back.demote_to_host, p.demote_to_host);
+            assert_eq!(back.ssd_gib, p.ssd_gib);
+            assert_eq!(back.ssd_page_kib, p.ssd_page_kib);
+            assert_eq!(back.compress_ratio_pct, p.compress_ratio_pct);
+            assert_eq!(back.compress_before_demote, p.compress_before_demote);
             assert_eq!(back.tenants, p.tenants);
             assert_eq!(back.tenant_overrides, p.tenant_overrides);
         }
@@ -1169,6 +1234,53 @@ mod tests {
         let spec = p.node_spec();
         assert_eq!(spec.cxl_bytes, 256 * GIB);
         assert!(crate::memsim::SimNode::new(spec).has_cxl());
+    }
+
+    #[test]
+    fn coldtier_keys_parse_and_materialize() {
+        let cfg = DeploymentConfig::from_toml(
+            "[coldtier]\nssd_gib = 512\npage_kib = 1024\ncompress_ratio_pct = 40\n\
+             compress_before_demote = true",
+        )
+        .unwrap();
+        assert_eq!(cfg.ssd_gib, 512);
+        assert_eq!(cfg.ssd_page_kib, 1024);
+        assert_eq!(cfg.compress_ratio_pct, 40);
+        assert!(cfg.compress_before_demote);
+        let spec = cfg.node_spec();
+        assert_eq!(spec.ssd_bytes, 512 * GIB);
+        let hc = cfg.harvest_config();
+        assert!(hc.compress_before_demote);
+        assert_eq!(hc.compress_ratio_pct, 40);
+        assert_eq!(hc.ssd_page_bytes, 1024 * 1024);
+        // round-trips
+        let back = DeploymentConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.ssd_gib, cfg.ssd_gib);
+        assert_eq!(back.compress_ratio_pct, cfg.compress_ratio_pct);
+        // absent by default; rejections
+        let d = DeploymentConfig::from_toml("").unwrap();
+        assert_eq!(d.ssd_gib, 0);
+        assert_eq!(d.node_spec().ssd_bytes, 0, "tier absent by default");
+        assert!(DeploymentConfig::from_toml("[coldtier]\ncompress_ratio_pct = 0").is_err());
+        assert!(DeploymentConfig::from_toml("[coldtier]\ncompress_ratio_pct = 100").is_err());
+        assert!(DeploymentConfig::from_toml("[coldtier]\npage_kib = 0").is_err());
+        assert!(DeploymentConfig::from_toml("[coldtier]\nssdgib = 1").is_err());
+    }
+
+    #[test]
+    fn long_context_preset_attaches_ssd_tier() {
+        let p = find_preset("long-context").unwrap();
+        assert_eq!(p.ssd_gib, 1024);
+        assert!(p.compress_before_demote);
+        assert!(p.demote_to_host);
+        let spec = p.node_spec();
+        assert_eq!(spec.ssd_bytes, 1024 * GIB);
+        assert_eq!(spec.cxl_bytes, 256 * GIB);
+        let node = crate::memsim::SimNode::new(spec);
+        assert!(node.has_ssd() && node.has_cxl());
+        let hc = p.harvest_config();
+        assert!(hc.compress_before_demote && hc.demote_to_host);
+        assert_eq!(hc.ssd_page_bytes, 2048 * 1024);
     }
 
     #[test]

@@ -19,9 +19,10 @@
 //! use harvest::harvest::{MemoryTier, TierPreference};
 //!
 //! // Fast → slow: local HBM, peer HBM over NVLink, CXL-attached memory,
-//! // host DRAM over PCIe.
+//! // host DRAM over PCIe, NVMe SSD behind the host bridge.
 //! assert!(MemoryTier::PeerHbm(1).speed_rank() < MemoryTier::CxlMem.speed_rank());
 //! assert!(MemoryTier::CxlMem.speed_rank() < MemoryTier::Host.speed_rank());
+//! assert!(MemoryTier::Host.speed_rank() < MemoryTier::Ssd.speed_rank());
 //!
 //! // `FastestAvailable` admits every harvest tier; the placement policy
 //! // scores them under one cost model.
@@ -29,11 +30,13 @@
 //! assert!(TierPreference::FastestAvailable.allows(MemoryTier::Host));
 //!
 //! // `AtLeast(tier)` bounds the *slowest* acceptable tier (tier class,
-//! // not a specific device): at least CXL-speed excludes host DRAM.
+//! // not a specific device): at least CXL-speed excludes host DRAM and
+//! // the SSD cold tier.
 //! let pref = TierPreference::AtLeast(MemoryTier::CxlMem);
 //! assert!(pref.allows(MemoryTier::PeerHbm(2)));
 //! assert!(pref.allows(MemoryTier::CxlMem));
 //! assert!(!pref.allows(MemoryTier::Host));
+//! assert!(!pref.allows(MemoryTier::Ssd));
 //!
 //! // `PEER_ONLY` is the pre-tier API's semantics (peer HBM or nothing).
 //! assert!(TierPreference::PEER_ONLY.allows(MemoryTier::PeerHbm(3)));
@@ -79,6 +82,12 @@ pub enum MemoryTier {
     /// Host DRAM over PCIe — the slow tier the paper's baselines page
     /// against. Effectively never revoked.
     Host,
+    /// NVMe SSD arena behind the host bridge — the cold-tier ladder's
+    /// capacity rung (effectively unbounded bytes at block-device
+    /// speed). Only the host reaches it directly; GPU↔SSD traffic
+    /// stages through host DRAM. Absent unless the node is built with
+    /// an SSD arena ([`crate::memsim::NodeSpec::with_ssd`]).
+    Ssd,
 }
 
 impl MemoryTier {
@@ -90,6 +99,7 @@ impl MemoryTier {
             MemoryTier::PeerHbm(_) => 1,
             MemoryTier::CxlMem => 2,
             MemoryTier::Host => 3,
+            MemoryTier::Ssd => 4,
         }
     }
 
@@ -100,6 +110,7 @@ impl MemoryTier {
             MemoryTier::PeerHbm(g) => DeviceId::Gpu(*g),
             MemoryTier::CxlMem => DeviceId::Cxl,
             MemoryTier::Host => DeviceId::Host,
+            MemoryTier::Ssd => DeviceId::Ssd,
             MemoryTier::LocalHbm => {
                 unreachable!("local HBM is not a harvest-addressable device")
             }
@@ -124,6 +135,7 @@ impl MemoryTier {
             MemoryTier::PeerHbm(_) => "peer-hbm",
             MemoryTier::CxlMem => "cxl-mem",
             MemoryTier::Host => "host",
+            MemoryTier::Ssd => "ssd",
         }
     }
 }
@@ -151,7 +163,8 @@ pub enum TierPreference {
     FastestAvailable,
     /// Any tier at least as fast as the named tier *class* (the peer
     /// index inside `AtLeast(PeerHbm(_))` is ignored — any peer
-    /// qualifies). `AtLeast(Host)` admits everything.
+    /// qualifies). `AtLeast(Host)` admits everything but the SSD cold
+    /// tier; `AtLeast(Ssd)` admits everything.
     AtLeast(MemoryTier),
     /// Exactly this tier — and for `Pinned(PeerHbm(g))`, exactly that
     /// device. Fails with [`HarvestError::TierUnavailable`] rather than
@@ -304,6 +317,7 @@ mod tests {
         assert!(MemoryTier::LocalHbm.speed_rank() < MemoryTier::PeerHbm(0).speed_rank());
         assert!(MemoryTier::PeerHbm(7).speed_rank() < MemoryTier::CxlMem.speed_rank());
         assert!(MemoryTier::CxlMem.speed_rank() < MemoryTier::Host.speed_rank());
+        assert!(MemoryTier::Host.speed_rank() < MemoryTier::Ssd.speed_rank());
     }
 
     #[test]
@@ -311,6 +325,7 @@ mod tests {
         assert_eq!(MemoryTier::PeerHbm(3).device(), DeviceId::Gpu(3));
         assert_eq!(MemoryTier::Host.device(), DeviceId::Host);
         assert_eq!(MemoryTier::CxlMem.device(), DeviceId::Cxl);
+        assert_eq!(MemoryTier::Ssd.device(), DeviceId::Ssd);
         assert_eq!(MemoryTier::PeerHbm(2).peer_gpu(), Some(2));
         assert_eq!(MemoryTier::Host.peer_gpu(), None);
     }
@@ -319,14 +334,19 @@ mod tests {
     fn preference_admission() {
         use MemoryTier::*;
         use TierPreference::*;
-        for t in [PeerHbm(0), PeerHbm(5), CxlMem, Host] {
+        for t in [PeerHbm(0), PeerHbm(5), CxlMem, Host, Ssd] {
             assert!(FastestAvailable.allows(t), "{t}");
         }
         assert!(!FastestAvailable.allows(LocalHbm), "local pool is consumer-managed");
         assert!(AtLeast(Host).allows(Host));
         assert!(AtLeast(Host).allows(CxlMem));
+        assert!(!AtLeast(Host).allows(Ssd), "the cold tier is opt-in");
+        assert!(AtLeast(Ssd).allows(Host), "AtLeast(Ssd) admits everything");
+        assert!(AtLeast(Ssd).allows(Ssd));
         assert!(AtLeast(CxlMem).allows(PeerHbm(1)));
         assert!(!AtLeast(CxlMem).allows(Host));
+        assert!(Pinned(Ssd).allows(Ssd));
+        assert!(!Pinned(Ssd).allows(Host));
         assert!(TierPreference::PEER_ONLY.allows(PeerHbm(9)), "index in AtLeast ignored");
         assert!(!TierPreference::PEER_ONLY.allows(CxlMem));
         assert!(Pinned(Host).allows(Host));
@@ -341,5 +361,6 @@ mod tests {
         assert_eq!(MemoryTier::PeerHbm(2).to_string(), "peer-hbm(gpu2)");
         assert_eq!(MemoryTier::Host.to_string(), "host");
         assert_eq!(MemoryTier::CxlMem.to_string(), "cxl-mem");
+        assert_eq!(MemoryTier::Ssd.to_string(), "ssd");
     }
 }

@@ -107,6 +107,20 @@ pub struct HarvestConfig {
     /// live on the host tier) instead of dropping them. Host-backed
     /// leases are always dropped — their host copy already exists.
     pub demote_to_host: bool,
+    /// First rung of the pressure ladder: before demoting (or dropping)
+    /// a lossy peer lease, shrink it *in place* to
+    /// [`HarvestConfig::compress_ratio_pct`] percent of its size
+    /// (modeled layer-wise KV compression — see [`crate::coldtier`]),
+    /// surfaced as [`RevocationAction::Compressed`]. The full ladder is
+    /// compress → demote → drop.
+    pub compress_before_demote: bool,
+    /// Target size of an in-place compression, in percent of the
+    /// original (1..=99). 50 models fp8-quantize-plus-prune per
+    /// PyramidInfer-style layer-wise budgets.
+    pub compress_ratio_pct: u32,
+    /// Page size of the SSD cold-tier pager ([`crate::coldtier::Pager`]):
+    /// every SSD-resident lease occupies whole pages.
+    pub ssd_page_bytes: u64,
 }
 
 const GIB: u64 = 1 << 30;
@@ -119,6 +133,9 @@ impl HarvestConfig {
             monitor_window: 1_000_000_000,
             reserve_bytes: 0,
             demote_to_host: false,
+            compress_before_demote: false,
+            compress_ratio_pct: 50,
+            ssd_page_bytes: 2 * 1024 * 1024,
         }
     }
 
@@ -133,6 +150,9 @@ impl HarvestConfig {
     /// monitor_window_ns = 1000000000
     /// mig_cache_gib = 10       # optional: partition every GPU
     /// demote_to_host = true    # pressure demotes lossy leases to host
+    /// compress_before_demote = true  # ladder: compress -> demote -> drop
+    /// compress_ratio_pct = 50  # in-place compression target (1..=99)
+    /// ssd_page_kib = 2048      # cold-tier pager page size
     /// ```
     ///
     /// Unknown keys are rejected so typos fail loudly.
@@ -146,6 +166,9 @@ impl HarvestConfig {
             "monitor_window_ns",
             "mig_cache_gib",
             "demote_to_host",
+            "compress_before_demote",
+            "compress_ratio_pct",
+            "ssd_page_kib",
         ];
         for key in doc.keys() {
             if !KNOWN.contains(&key) {
@@ -178,11 +201,40 @@ impl HarvestConfig {
         if let Some(v) = doc.get("demote_to_host") {
             cfg.demote_to_host = v.as_bool().context("key `demote_to_host`")?;
         }
+        if let Some(v) = doc.get("compress_before_demote") {
+            cfg.compress_before_demote = v.as_bool().context("key `compress_before_demote`")?;
+        }
+        if let Some(v) = doc.get("compress_ratio_pct") {
+            cfg.compress_ratio_pct = v.as_u64().context("key `compress_ratio_pct`")? as u32;
+            if cfg.compress_ratio_pct == 0 || cfg.compress_ratio_pct > 99 {
+                anyhow::bail!("compress_ratio_pct must be in 1..=99");
+            }
+        }
+        if let Some(v) = doc.get("ssd_page_kib") {
+            cfg.ssd_page_bytes = v.as_u64().context("key `ssd_page_kib`")? * 1024;
+            if cfg.ssd_page_bytes == 0 {
+                anyhow::bail!("ssd_page_kib must be positive");
+            }
+        }
         Ok(cfg)
     }
 }
 
 type Callback = Box<dyn FnMut(&Revocation)>;
+
+/// In-place compression state of a live lease (see
+/// [`HarvestRuntime::compression_of`]): set by `Transfer::compress` or
+/// the pressure ladder, cleared by `Transfer::decompress`. Consumers
+/// charge the modeled decode-side decompression cost
+/// ([`crate::coldtier::Compressor::decompress_cost_ns`]) when they next
+/// read the payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompressionInfo {
+    /// Compressed-to target in percent of the original size.
+    pub ratio: u32,
+    /// Byte count before compression — what decompression restores.
+    pub original_size: u64,
+}
 
 /// Per-lease runtime record: the raw placement plus owner routing. The
 /// `tier` cell is shared with the consumer's RAII `Lease`, so a
@@ -192,6 +244,8 @@ struct LiveEntry {
     session: SessionId,
     kind: PayloadKind,
     tier: Rc<Cell<MemoryTier>>,
+    /// Present while the lease's bytes are compressed in place.
+    compression: Option<CompressionInfo>,
 }
 
 /// Per-session runtime state.
@@ -233,6 +287,7 @@ pub struct HarvestRuntime {
     bytes_on: Vec<u64>,
     host_bytes_live: u64,
     cxl_bytes_live: u64,
+    ssd_bytes_live: u64,
     client_bytes: BTreeMap<(MemoryTier, u32), u64>,
     /// Allocation order per peer (for LIFO/FIFO victim selection):
     /// insertion-sequence -> lease, O(log n) removal on free/revoke.
@@ -256,6 +311,11 @@ pub struct HarvestRuntime {
     pending_free_peer: Vec<u64>,
     pending_free_host: u64,
     pending_free_cxl: u64,
+    pending_free_ssd: u64,
+    /// Page table + free accounting over the SSD arena: every
+    /// SSD-resident lease's segment is page-rounded through it, so
+    /// `pager.mapped_bytes() == node.ssd.used()` at every boundary.
+    pager: crate::coldtier::Pager,
     /// Leases reclaimed by the leak sweep (metrics / tests).
     pub leaked_reclaimed: u64,
     /// Every completed drop-revocation, in order (for tests/metrics).
@@ -263,6 +323,8 @@ pub struct HarvestRuntime {
     pub revocations: Vec<Revocation>,
     /// Pressure revocations resolved as peer→host demotions.
     pub demotions: u64,
+    /// In-place compressions (pressure ladder + consumer-initiated).
+    pub compressions: u64,
     /// Completed tier migrations (consumer-initiated + demotions).
     pub migrations: u64,
     /// Cumulative counters.
@@ -283,15 +345,18 @@ impl HarvestRuntime {
         assert_eq!(config.mig.len(), node.n_gpus(), "one MigConfig per GPU");
         let n = node.n_gpus();
         let monitor = PeerMonitor::new(n, config.monitor_window);
+        let pager = crate::coldtier::Pager::new(config.ssd_page_bytes);
         Self {
             node,
             policy,
             config,
             monitor,
+            pager,
             live: BTreeMap::new(),
             bytes_on: vec![0; n],
             host_bytes_live: 0,
             cxl_bytes_live: 0,
+            ssd_bytes_live: 0,
             client_bytes: BTreeMap::new(),
             order: vec![BTreeMap::new(); n],
             order_key: BTreeMap::new(),
@@ -307,9 +372,11 @@ impl HarvestRuntime {
             pending_free_peer: vec![0; n],
             pending_free_host: 0,
             pending_free_cxl: 0,
+            pending_free_ssd: 0,
             leaked_reclaimed: 0,
             revocations: Vec::new(),
             demotions: 0,
+            compressions: 0,
             migrations: 0,
             alloc_attempts: 0,
             alloc_failures: 0,
@@ -335,6 +402,7 @@ impl HarvestRuntime {
             MemoryTier::PeerHbm(g) => self.bytes_on[g],
             MemoryTier::Host => self.host_bytes_live,
             MemoryTier::CxlMem => self.cxl_bytes_live,
+            MemoryTier::Ssd => self.ssd_bytes_live,
             MemoryTier::LocalHbm => 0,
         }
     }
@@ -354,11 +422,19 @@ impl HarvestRuntime {
         self.live.get(&id).map(|e| e.handle.tier)
     }
 
+    /// In-place compression state of a live lease: `Some` while its
+    /// bytes are compressed (ratio + the byte count decompression
+    /// restores), `None` for uncompressed or dead leases.
+    pub fn compression_of(&self, id: LeaseId) -> Option<CompressionInfo> {
+        self.live.get(&id).and_then(|e| e.compression)
+    }
+
     fn arena(&self, tier: MemoryTier) -> &Hbm {
         match tier {
             MemoryTier::PeerHbm(g) => &self.node.gpus[g].hbm,
             MemoryTier::Host => &self.node.host,
             MemoryTier::CxlMem => &self.node.cxl,
+            MemoryTier::Ssd => &self.node.ssd,
             MemoryTier::LocalHbm => unreachable!("local HBM is consumer-managed"),
         }
     }
@@ -368,8 +444,43 @@ impl HarvestRuntime {
             MemoryTier::PeerHbm(g) => &mut self.node.gpus[g].hbm,
             MemoryTier::Host => &mut self.node.host,
             MemoryTier::CxlMem => &mut self.node.cxl,
+            MemoryTier::Ssd => &mut self.node.ssd,
             MemoryTier::LocalHbm => unreachable!("local HBM is consumer-managed"),
         }
+    }
+
+    /// Allocate `size` bytes on `tier`'s arena. SSD allocations route
+    /// through the cold-tier [`crate::coldtier::Pager`]: the segment is
+    /// page-rounded and entered in the page table, so arena occupancy
+    /// always equals whole pages.
+    fn tier_alloc(
+        &mut self,
+        tier: MemoryTier,
+        size: u64,
+    ) -> Result<crate::memsim::AllocId, crate::memsim::AllocError> {
+        if tier == MemoryTier::Ssd {
+            let padded = self.pager.padded(size);
+            let alloc = self.node.ssd.alloc(padded)?;
+            self.pager.map(alloc, size);
+            Ok(alloc)
+        } else {
+            self.arena_mut(tier).alloc(size)
+        }
+    }
+
+    /// Release an arena segment, unmapping it from the pager when it
+    /// lives on the SSD tier.
+    fn tier_free(&mut self, tier: MemoryTier, alloc: crate::memsim::AllocId) {
+        if tier == MemoryTier::Ssd {
+            self.pager.unmap(alloc);
+        }
+        self.arena_mut(tier).free(alloc);
+    }
+
+    /// Read-only view of the SSD cold-tier pager (page table + free
+    /// accounting) for metrics and invariant checks.
+    pub fn pager(&self) -> &crate::coldtier::Pager {
+        &self.pager
     }
 
     // -- session plumbing -------------------------------------------------
@@ -460,6 +571,7 @@ impl HarvestRuntime {
             MemoryTier::PeerHbm(g) => &mut self.pending_free_peer[g],
             MemoryTier::Host => &mut self.pending_free_host,
             MemoryTier::CxlMem => &mut self.pending_free_cxl,
+            MemoryTier::Ssd => &mut self.pending_free_ssd,
             MemoryTier::LocalHbm => unreachable!("local HBM is consumer-managed"),
         }
     }
@@ -475,6 +587,7 @@ impl HarvestRuntime {
             MemoryTier::PeerHbm(g) => self.pending_free_peer[g],
             MemoryTier::Host => self.pending_free_host,
             MemoryTier::CxlMem => self.pending_free_cxl,
+            MemoryTier::Ssd => self.pending_free_ssd,
             MemoryTier::LocalHbm => 0,
         }
     }
@@ -500,7 +613,7 @@ impl HarvestRuntime {
         while i < self.deferred.len() {
             if self.deferred[i].end <= now {
                 let d = self.deferred.swap_remove(i);
-                self.arena_mut(d.tier).free(d.alloc);
+                self.tier_free(d.tier, d.alloc);
                 *self.pending_slot_mut(d.tier) -= d.bytes;
                 released += d.bytes;
             } else {
@@ -625,6 +738,32 @@ impl HarvestRuntime {
                 &self.node.topo,
             );
         }
+        if self.node.has_ssd() && pref.allows(MemoryTier::Ssd) {
+            // The SSD hangs off the host bridge with no GPU link, so the
+            // generic link lookup above would hit the local-fetch
+            // fallback (0 ns, infinite bandwidth) and mis-score the cold
+            // tier as free. Compose the staged SSD→host→GPU fetch
+            // explicitly: latencies add, queues add, and the NVMe link
+            // is the bandwidth bottleneck.
+            let topo = &self.node.topo;
+            let nvme = topo
+                .link_model(DeviceId::Ssd, DeviceId::Host)
+                .expect("SSD arena is wired behind the host bridge");
+            let pcie = topo.link_model(DeviceId::Host, dst);
+            let fetch_ns = nvme.latency(size) + pcie.map_or(0, |m| m.latency(size));
+            let queue_ns = topo.busy_until(DeviceId::Ssd, DeviceId::Host).saturating_sub(now)
+                + topo.busy_until(DeviceId::Host, dst).saturating_sub(now);
+            let peak = nvme.peak_bw_bytes_per_ns * 1e9;
+            out.push(TierView {
+                tier: MemoryTier::Ssd,
+                free_bytes: self.node.ssd.free_bytes(),
+                largest_free: self.node.ssd.largest_free(),
+                fetch_ns,
+                queue_ns,
+                load: (self.monitor.bw_demand_on_tier(MemoryTier::Ssd) / peak).min(4.0),
+                churn_per_sec: 0.0,
+            });
+        }
         out
     }
 
@@ -634,6 +773,7 @@ impl HarvestRuntime {
             MemoryTier::PeerHbm(g) => self.bytes_on[g] += h.size,
             MemoryTier::Host => self.host_bytes_live += h.size,
             MemoryTier::CxlMem => self.cxl_bytes_live += h.size,
+            MemoryTier::Ssd => self.ssd_bytes_live += h.size,
             MemoryTier::LocalHbm => unreachable!(),
         }
         if let Some(c) = h.client {
@@ -646,6 +786,7 @@ impl HarvestRuntime {
             MemoryTier::PeerHbm(g) => self.bytes_on[g] -= h.size,
             MemoryTier::Host => self.host_bytes_live -= h.size,
             MemoryTier::CxlMem => self.cxl_bytes_live -= h.size,
+            MemoryTier::Ssd => self.ssd_bytes_live -= h.size,
             MemoryTier::LocalHbm => unreachable!(),
         }
         if let Some(c) = h.client {
@@ -684,6 +825,13 @@ impl HarvestRuntime {
                 MemoryTier::Host | MemoryTier::CxlMem => {
                     let arena = self.arena(t);
                     arena.free_bytes() >= total && arena.largest_free() >= contiguous
+                }
+                MemoryTier::Ssd => {
+                    // Pager rounding: the arena must hold the
+                    // page-padded footprint, not just the logical bytes.
+                    let padded = self.pager.padded(total.max(contiguous));
+                    let arena = self.arena(t);
+                    arena.free_bytes() >= padded && arena.largest_free() >= padded
                 }
                 MemoryTier::LocalHbm => false,
             };
@@ -730,7 +878,7 @@ impl HarvestRuntime {
         let kind = self.sessions[session.0 as usize].kind;
         self.live.insert(
             handle.id,
-            LiveEntry { handle, session, kind, tier: Rc::new(Cell::new(tier)) },
+            LiveEntry { handle, session, kind, tier: Rc::new(Cell::new(tier)), compression: None },
         );
         self.account_add(&handle);
         if let MemoryTier::PeerHbm(g) = tier {
@@ -764,7 +912,7 @@ impl HarvestRuntime {
                 return Err(e);
             }
         };
-        let alloc = self.arena_mut(tier).alloc(size).map_err(|_| {
+        let alloc = self.tier_alloc(tier, size).map_err(|_| {
             self.alloc_failures += 1;
             HarvestError::NoCapacity { requested: size }
         })?;
@@ -804,11 +952,11 @@ impl HarvestRuntime {
         // batch, so place each element and roll back on the first miss.
         let mut placed = Vec::with_capacity(sizes.len());
         for &size in sizes {
-            match self.arena_mut(tier).alloc(size) {
+            match self.tier_alloc(tier, size) {
                 Ok(a) => placed.push((a, size)),
                 Err(_) => {
                     for (a, _) in placed {
-                        self.arena_mut(tier).free(a);
+                        self.tier_free(tier, a);
                     }
                     return fail(self, HarvestError::NoCapacity { requested: total });
                 }
@@ -835,7 +983,7 @@ impl HarvestRuntime {
         // whatever that unblocked.
         self.node.dma.drain_tag(&self.node.topo, id.0);
         self.process_deferred_frees();
-        self.arena_mut(handle.tier).free(handle.alloc);
+        self.tier_free(handle.tier, handle.alloc);
         if let Some(k) = self.order_key.remove(&id) {
             if let MemoryTier::PeerHbm(g) = handle.tier {
                 self.order[g].remove(&k);
@@ -866,6 +1014,7 @@ impl HarvestRuntime {
         let absent = match to {
             MemoryTier::LocalHbm => true,
             MemoryTier::CxlMem => !self.node.has_cxl(),
+            MemoryTier::Ssd => !self.node.has_ssd(),
             MemoryTier::PeerHbm(g) => g >= self.node.n_gpus(),
             MemoryTier::Host => false,
         };
@@ -873,14 +1022,12 @@ impl HarvestRuntime {
             return Err(HarvestError::TierUnavailable { tier: to });
         }
         let size = entry.handle.size;
-        self.arena_mut(to)
-            .alloc(size)
-            .map_err(|_| HarvestError::NoCapacity { requested: size })
+        self.tier_alloc(to, size).map_err(|_| HarvestError::NoCapacity { requested: size })
     }
 
     /// Roll back a [`HarvestRuntime::prepare_migration`] reservation.
     pub(crate) fn unprepare_migration(&mut self, to: MemoryTier, alloc: crate::memsim::AllocId) {
-        self.arena_mut(to).free(alloc);
+        self.tier_free(to, alloc);
     }
 
     /// Phase 2 of a migration: issue the (lease-tagged) copy into the
@@ -909,7 +1056,7 @@ impl HarvestRuntime {
         // reservation and moves nothing rather than copying from a
         // stale placement.
         if to == old.tier {
-            self.arena_mut(to).free(dst_alloc);
+            self.tier_free(to, dst_alloc);
             let now = self.node.clock.now();
             return CopyEvent {
                 start: now,
@@ -932,17 +1079,46 @@ impl HarvestRuntime {
                 _ => self.node.copy(src_dev, dst_dev, old.size, Some(id.0)),
             }
         } else {
-            // Link-less pair (host↔CXL): stage through the GPU whose
-            // pair of adjacent links is least loaded right now. The hops
-            // are contiguous — a bounce buffer, not scattered paged
-            // descriptors — and both carry the lease tag.
-            let via = (0..self.node.n_gpus())
-                .min_by_key(|&g| {
-                    self.node.topo.busy_until(src_dev, DeviceId::Gpu(g))
-                        + self.node.topo.busy_until(DeviceId::Gpu(g), dst_dev)
-                })
-                .expect("node has at least one GPU");
-            self.node.copy_via(src_dev, via, dst_dev, old.size, Some(id.0))
+            // Link-less pair: stage the copy through intermediate
+            // devices. The hops are contiguous — a bounce buffer, not
+            // scattered paged descriptors — and all carry the lease tag.
+            // GPU↔SSD bounces through host DRAM (the SSD hangs off the
+            // host bridge); CXL↔SSD additionally crosses the least-loaded
+            // GPU to reach host; host↔CXL bounces through the GPU whose
+            // pair of adjacent links is least loaded right now.
+            let least_loaded = |node: &SimNode, a: DeviceId, b: DeviceId| {
+                (0..node.n_gpus())
+                    .min_by_key(|&g| {
+                        node.topo.busy_until(a, DeviceId::Gpu(g))
+                            + node.topo.busy_until(DeviceId::Gpu(g), b)
+                    })
+                    .expect("node has at least one GPU")
+            };
+            match (src_dev, dst_dev) {
+                (DeviceId::Gpu(_), DeviceId::Ssd) | (DeviceId::Ssd, DeviceId::Gpu(_)) => {
+                    self.node.copy_path(&[src_dev, DeviceId::Host, dst_dev], old.size, Some(id.0))
+                }
+                (DeviceId::Cxl, DeviceId::Ssd) => {
+                    let via = least_loaded(&self.node, DeviceId::Cxl, DeviceId::Host);
+                    self.node.copy_path(
+                        &[DeviceId::Cxl, DeviceId::Gpu(via), DeviceId::Host, DeviceId::Ssd],
+                        old.size,
+                        Some(id.0),
+                    )
+                }
+                (DeviceId::Ssd, DeviceId::Cxl) => {
+                    let via = least_loaded(&self.node, DeviceId::Host, DeviceId::Cxl);
+                    self.node.copy_path(
+                        &[DeviceId::Ssd, DeviceId::Host, DeviceId::Gpu(via), DeviceId::Cxl],
+                        old.size,
+                        Some(id.0),
+                    )
+                }
+                _ => {
+                    let via = least_loaded(&self.node, src_dev, dst_dev);
+                    self.node.copy_via(src_dev, via, dst_dev, old.size, Some(id.0))
+                }
+            }
         };
         // Ledgers move at issue time; the *segment* is freed only at
         // copy-completion time (lease-tagged deferred free), so no
@@ -997,6 +1173,75 @@ impl HarvestRuntime {
         Ok(self.commit_migration(id, to, dst_alloc, background, chunk))
     }
 
+    // -- in-place compression ---------------------------------------------
+
+    /// Shrink a live lease *in place* to `ratio` percent of its current
+    /// size (modeled layer-wise KV compression — the freed tail returns
+    /// to the arena immediately, which is what makes this rung of the
+    /// pressure ladder work even when the arena has zero free headroom).
+    /// Compression itself is free in virtual time: the modeled cost is
+    /// paid decode-side, when the consumer charges
+    /// [`crate::coldtier::Compressor::decompress_cost_ns`] on reload.
+    /// An already-compressed lease is left untouched (returns 0).
+    /// Returns the bytes released to the arena.
+    pub(crate) fn compress_lease(&mut self, id: LeaseId, ratio: u32) -> Result<u64, HarvestError> {
+        assert!((1..=99).contains(&ratio), "compress ratio must be in 1..=99, got {ratio}");
+        let entry = self.live.get(&id).ok_or(HarvestError::StaleLease(id))?;
+        if entry.compression.is_some() {
+            return Ok(0);
+        }
+        let old = entry.handle;
+        // Shrinking bytes a DMA engine may still be reading needs the
+        // same drain-first ordering as a revocation.
+        self.node.dma.drain_tag(&self.node.topo, id.0);
+        self.process_deferred_frees();
+        let new_size = (old.size * u64::from(ratio) / 100).max(1);
+        let released = if old.tier == MemoryTier::Ssd {
+            let padded = self.pager.padded(new_size);
+            let released = self.node.ssd.shrink(old.alloc, padded);
+            self.pager.unmap(old.alloc);
+            self.pager.map(old.alloc, new_size);
+            released
+        } else {
+            self.arena_mut(old.tier).shrink(old.alloc, new_size)
+        };
+        self.account_remove(&old);
+        let entry = self.live.get_mut(&id).unwrap();
+        entry.handle.size = new_size;
+        entry.compression = Some(CompressionInfo { ratio, original_size: old.size });
+        let new = entry.handle;
+        self.account_add(&new);
+        self.compressions += 1;
+        Ok(released)
+    }
+
+    /// Undo an in-place compression: re-grow the lease to its original
+    /// byte count on its current tier (a fresh full-size segment — the
+    /// arena must have room, [`HarvestError::NoCapacity`] otherwise) and
+    /// clear the compression tag. Returns the bytes restored. A lease
+    /// that is not compressed is left untouched (returns 0).
+    pub(crate) fn decompress_lease(&mut self, id: LeaseId) -> Result<u64, HarvestError> {
+        let entry = self.live.get(&id).ok_or(HarvestError::StaleLease(id))?;
+        let Some(info) = entry.compression else { return Ok(0) };
+        let old = entry.handle;
+        self.node.dma.drain_tag(&self.node.topo, id.0);
+        self.process_deferred_frees();
+        let new_alloc = self
+            .tier_alloc(old.tier, info.original_size)
+            .map_err(|_| HarvestError::NoCapacity { requested: info.original_size })?;
+        self.tier_free(old.tier, old.alloc);
+        let offset = self.arena(old.tier).offset_of(new_alloc).unwrap();
+        self.account_remove(&old);
+        let entry = self.live.get_mut(&id).unwrap();
+        entry.handle.alloc = new_alloc;
+        entry.handle.offset = offset;
+        entry.handle.size = info.original_size;
+        entry.compression = None;
+        let new = entry.handle;
+        self.account_add(&new);
+        Ok(info.original_size - old.size)
+    }
+
     /// The revocation pipeline for one lease. Ordering per §3.2:
     /// drain in-flight DMA → free + invalidate → make the event
     /// observable (enqueue; fire the deprecated callback if one exists).
@@ -1008,7 +1253,7 @@ impl HarvestRuntime {
         let drained_at = self.node.dma.drain_tag(&self.node.topo, id.0);
         self.process_deferred_frees();
         // 2. Invalidate + free.
-        self.arena_mut(handle.tier).free(handle.alloc);
+        self.tier_free(handle.tier, handle.alloc);
         if let Some(k) = self.order_key.remove(&id) {
             if let MemoryTier::PeerHbm(g) = handle.tier {
                 self.order[g].remove(&k);
@@ -1039,6 +1284,47 @@ impl HarvestRuntime {
             cb(&rev);
         }
         Some(rev)
+    }
+
+    /// The compression variant of the revocation pipeline — the first
+    /// rung of the compress → demote → drop ladder: shrink a lossy peer
+    /// lease in place to [`HarvestConfig::compress_ratio_pct`] percent,
+    /// keep it alive on its tier, and surface
+    /// [`RevocationAction::Compressed`]. Returns `false` when the lease
+    /// is not compressible (not a lossy peer lease, legacy session, or
+    /// already compressed) — the caller falls through to demotion, then
+    /// drop.
+    fn try_compress(&mut self, id: LeaseId, reason: RevocationReason) -> bool {
+        let Some(entry) = self.live.get(&id) else { return false };
+        let handle = entry.handle;
+        let session = entry.session;
+        let compressible = handle.tier.is_peer()
+            && handle.durability == super::api::Durability::Lossy
+            && session != LEGACY_SESSION
+            && entry.compression.is_none();
+        if !compressible {
+            return false;
+        }
+        // Same §3.2 ordering as a drop: drain in-flight DMA touching the
+        // region first, then shrink, then make it observable.
+        let drained_at = self.node.dma.drain_tag(&self.node.topo, id.0);
+        let ratio = self.config.compress_ratio_pct;
+        if self.compress_lease(id, ratio).is_err() {
+            return false;
+        }
+        let kind = self.live.get(&id).map(|e| e.kind).unwrap_or_default();
+        self.sessions[session.0 as usize].queue.push(RevocationEvent {
+            lease: id,
+            kind,
+            tier: handle.tier,
+            size: handle.size,
+            durability: handle.durability,
+            client: handle.client,
+            reason,
+            action: RevocationAction::Compressed { ratio },
+            at: drained_at,
+        });
+        true
     }
 
     /// The demotion variant of the revocation pipeline: instead of
@@ -1133,6 +1419,12 @@ impl HarvestRuntime {
                     break;
                 }
                 let Some(victim) = self.pick_victim(peer) else { break };
+                // The ladder: compress in place, then demote, then drop.
+                if self.config.compress_before_demote
+                    && self.try_compress(victim, RevocationReason::TenantPressure)
+                {
+                    continue;
+                }
                 let demoted = self.config.demote_to_host
                     && self.try_demote(victim, RevocationReason::TenantPressure);
                 if !demoted {
@@ -1156,6 +1448,11 @@ impl HarvestRuntime {
     pub fn yield_to_tenant(&mut self, peer: usize) -> bool {
         self.sweep_leaked();
         let Some(victim) = self.pick_victim(peer) else { return false };
+        if self.config.compress_before_demote
+            && self.try_compress(victim, RevocationReason::TenantPressure)
+        {
+            return true;
+        }
         if self.config.demote_to_host && self.try_demote(victim, RevocationReason::TenantPressure)
         {
             return true;
@@ -1770,6 +2067,139 @@ mod tests {
         assert_eq!(revs.len(), 1, "over reserve budget -> revoke LIFO victim");
         drop((a, b));
         h.sweep_leaked();
+    }
+
+    #[test]
+    fn ssd_pin_is_page_rounded_and_pager_balances() {
+        let mut h = HarvestRuntime::new(
+            SimNode::new(NodeSpec::h100x2().with_ssd(64 * GIB)),
+            HarvestConfig::for_node(2),
+        );
+        let page = h.config.ssd_page_bytes;
+        let s = h.open_session(PayloadKind::KvBlock);
+        // 3 MiB rounds up to two 2 MiB pages in the arena
+        let lease = s
+            .alloc(&mut h, 3 * MIB, TierPreference::Pinned(MemoryTier::Ssd), hints(0))
+            .unwrap();
+        assert_eq!(lease.tier(), MemoryTier::Ssd);
+        assert_eq!(lease.size(), 3 * MIB, "logical size is unrounded");
+        assert_eq!(h.live_bytes_on_tier(MemoryTier::Ssd), 3 * MIB);
+        assert_eq!(h.node.ssd.used(), 4 * MIB, "arena occupancy is whole pages");
+        assert_eq!(h.pager().pages_mapped(), 2);
+        assert_eq!(h.pager().mapped_bytes(), h.node.ssd.used());
+        assert_eq!(h.pager().page_bytes(), page);
+        s.release(&mut h, lease).unwrap();
+        assert_eq!(h.node.ssd.used(), 0);
+        assert_eq!(h.pager().pages_mapped(), 0);
+        // a node without an SSD arena rejects the pin
+        let mut h = rt();
+        let s = h.open_session(PayloadKind::KvBlock);
+        let err = s
+            .alloc(&mut h, MIB, TierPreference::Pinned(MemoryTier::Ssd), hints(0))
+            .unwrap_err();
+        assert_eq!(err, HarvestError::TierUnavailable { tier: MemoryTier::Ssd });
+    }
+
+    #[test]
+    fn migrate_stages_gpu_to_ssd_through_host() {
+        let mut h = HarvestRuntime::new(
+            SimNode::new(NodeSpec::h100x2().with_ssd(64 * GIB)),
+            HarvestConfig::for_node(2),
+        );
+        let s = h.open_session(PayloadKind::KvBlock);
+        let lease = peer_alloc(&mut h, &s, 8 * MIB).unwrap();
+        Transfer::new().migrate(&lease, MemoryTier::Ssd).submit(&mut h).unwrap();
+        assert_eq!(lease.tier(), MemoryTier::Ssd);
+        // both hops of the staged write-back moved the bytes
+        assert_eq!(h.node.topo.bytes_moved(DeviceId::Gpu(1), DeviceId::Host), 8 * MIB);
+        assert_eq!(h.node.topo.bytes_moved(DeviceId::Host, DeviceId::Ssd), 8 * MIB);
+        assert_eq!(h.live_bytes_on(1), 0);
+        assert_eq!(h.live_bytes_on_tier(MemoryTier::Ssd), 8 * MIB);
+        assert_eq!(h.pager().mapped_bytes(), h.node.ssd.used());
+        // promote back up: SSD → host → peer, lease intact throughout
+        Transfer::new().migrate(&lease, MemoryTier::PeerHbm(1)).submit(&mut h).unwrap();
+        assert_eq!(lease.tier(), MemoryTier::PeerHbm(1));
+        assert_eq!(h.live_bytes_on(1), 8 * MIB);
+        s.release(&mut h, lease).unwrap();
+        assert_eq!(h.node.ssd.used(), 0, "deferred SSD free lands after the drain");
+        assert_eq!(h.pager().pages_mapped(), 0);
+    }
+
+    #[test]
+    fn pressure_ladder_compresses_then_demotes() {
+        let node = SimNode::new(NodeSpec::h100x2());
+        let mut cfg = HarvestConfig::for_node(2);
+        cfg.demote_to_host = true;
+        cfg.compress_before_demote = true;
+        cfg.compress_ratio_pct = 50;
+        let mut h = HarvestRuntime::new(node, cfg);
+        let s = h.open_session(PayloadKind::KvBlock);
+        let lossy = s
+            .alloc(
+                &mut h,
+                2 * GIB,
+                TierPreference::PEER_ONLY,
+                AllocHints { durability: Durability::Lossy, ..hints(0) },
+            )
+            .unwrap();
+        // Mild pressure: compressing to 1 GiB is enough, so the first
+        // rung of the ladder resolves it in place.
+        let now = h.node.clock.now();
+        h.node.set_tenant_load(
+            1,
+            TenantLoad::from_steps(80 * GIB, vec![(0, 0), (now + 1_000, 79 * GIB - GIB / 2)]),
+        );
+        let revs = h.advance_to(now + 2_000);
+        assert!(revs.is_empty(), "nothing dropped: {revs:?}");
+        assert_eq!(h.compressions, 1);
+        assert_eq!(h.demotions, 0);
+        assert!(h.is_live(lossy.id()));
+        assert_eq!(lossy.tier(), MemoryTier::PeerHbm(1), "compressed in place");
+        assert_eq!(h.live_bytes_on(1), GIB, "half the bytes remain");
+        let info = h.compression_of(lossy.id()).expect("compressed");
+        assert_eq!(info, CompressionInfo { ratio: 50, original_size: 2 * GIB });
+        let events = s.drain_revocations(&mut h);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].action, RevocationAction::Compressed { ratio: 50 });
+        assert_eq!(events[0].size, 2 * GIB, "event reports the pre-compression size");
+        // Tighter pressure: the lease is already compressed, so the next
+        // rung demotes it to host — still alive, still compressed.
+        let now = h.node.clock.now();
+        h.node.set_tenant_load(
+            1,
+            TenantLoad::from_steps(80 * GIB, vec![(0, 0), (now + 1_000, 80 * GIB)]),
+        );
+        let revs = h.advance_to(now + 2_000);
+        assert!(revs.is_empty(), "demoted, not dropped: {revs:?}");
+        assert_eq!(h.demotions, 1);
+        assert_eq!(lossy.tier(), MemoryTier::Host);
+        assert!(h.compression_of(lossy.id()).is_some(), "compression survives demotion");
+        let events = s.drain_revocations(&mut h);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].action, RevocationAction::Demoted { to: MemoryTier::Host });
+        s.release(&mut h, lossy).unwrap();
+    }
+
+    #[test]
+    fn compress_decompress_round_trip_restores_bytes() {
+        let mut h = rt();
+        let s = h.open_session(PayloadKind::KvBlock);
+        let lease = peer_alloc(&mut h, &s, 64 * MIB).unwrap();
+        let released = h.compress_lease(lease.id(), 25).unwrap();
+        assert_eq!(released, 48 * MIB);
+        assert_eq!(h.live_bytes_on(1), 16 * MIB);
+        assert_eq!(h.node.gpus[1].hbm.used(), 16 * MIB);
+        // double compression is a no-op, not a recompress
+        assert_eq!(h.compress_lease(lease.id(), 25).unwrap(), 0);
+        assert_eq!(h.compressions, 1);
+        let restored = h.decompress_lease(lease.id()).unwrap();
+        assert_eq!(restored, 48 * MIB);
+        assert!(h.compression_of(lease.id()).is_none());
+        assert_eq!(h.live_bytes_on(1), 64 * MIB);
+        assert_eq!(h.node.gpus[1].hbm.used(), 64 * MIB);
+        // decompressing an uncompressed lease is a no-op
+        assert_eq!(h.decompress_lease(lease.id()).unwrap(), 0);
+        s.release(&mut h, lease).unwrap();
     }
 
     #[test]

@@ -97,6 +97,12 @@ pub enum RevocationAction {
     /// instead of dropping them. The lease now reads from `to`; no data
     /// was lost, only latency.
     Demoted { to: MemoryTier },
+    /// The lease *survived in place*: pressure shrank it to
+    /// `ratio` percent of its original size via modeled layer-wise KV
+    /// compression instead of migrating or dropping it. The lease still
+    /// reads from its original tier; the consumer must charge the
+    /// modeled decompression cost when it next reloads the payload.
+    Compressed { ratio: u32 },
 }
 
 /// One completed revocation as observed by the owning session. Unlike

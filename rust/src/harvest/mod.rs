@@ -77,7 +77,7 @@ pub use api::{AllocHints, Durability, HarvestError, HarvestHandle, LeaseId, Memo
               Revocation, RevocationReason, TierPreference};
 #[allow(deprecated)] // re-exported so pre-lease call sites keep compiling
 pub use api::HandleId;
-pub use controller::{HarvestConfig, HarvestRuntime, VictimPolicy};
+pub use controller::{CompressionInfo, HarvestConfig, HarvestRuntime, VictimPolicy};
 pub use events::{PayloadKind, RevocationAction, RevocationEvent, RevocationQueue};
 pub use mig::MigConfig;
 pub use monitor::{PeerMonitor, PeerView};

@@ -6,7 +6,8 @@
 //! allocatable segment, recent tenant *churn* (how often / how much
 //! co-tenant usage moved — the stability policy's signal), and recent
 //! link bandwidth demand (the interference policy's signal). Traffic is
-//! tracked per tier slot — one per GPU, plus host DRAM and CXL — so the
+//! tracked per tier slot — one per GPU, plus host DRAM, CXL, and the SSD
+//! cold tier — so the
 //! unified tier placement
 //! ([`crate::harvest::policy::PlacementPolicy::place_tiered`]) sees
 //! host/CXL link pressure exactly like peer link pressure, with the
@@ -36,7 +37,7 @@ pub struct PeerView {
 }
 
 /// Sliding-window churn/bandwidth tracker. Slot layout: `0..n_gpus` are
-/// the GPUs, then host DRAM, then CXL.
+/// the GPUs, then host DRAM, then CXL, then SSD.
 #[derive(Debug, Clone)]
 pub struct PeerMonitor {
     window: Ns,
@@ -60,7 +61,7 @@ pub struct PeerMonitor {
 
 impl PeerMonitor {
     pub fn new(n_gpus: usize, window: Ns) -> Self {
-        let slots = n_gpus + 2; // + host, + cxl
+        let slots = n_gpus + 3; // + host, + cxl, + ssd
         Self {
             window,
             n_gpus,
@@ -77,6 +78,7 @@ impl PeerMonitor {
             MemoryTier::PeerHbm(g) => g,
             MemoryTier::Host => self.n_gpus,
             MemoryTier::CxlMem => self.n_gpus + 1,
+            MemoryTier::Ssd => self.n_gpus + 2,
             MemoryTier::LocalHbm => unreachable!("local HBM traffic is not harvest traffic"),
         }
     }
@@ -299,10 +301,13 @@ mod tests {
         mon.record_tier_transfer(MemoryTier::Host, 0, 1_000);
         mon.record_tier_prefetch(MemoryTier::Host, 0, 500);
         mon.record_tier_transfer(MemoryTier::CxlMem, 0, 7_000);
+        mon.record_tier_transfer(MemoryTier::Ssd, 0, 3_000);
         // demand/prefetch split preserved on the host slot
         assert_eq!(mon.demand_bytes_on_tier(MemoryTier::Host), 1_000);
         assert_eq!(mon.prefetch_bytes_on_tier(MemoryTier::Host), 500);
         assert_eq!(mon.demand_bytes_on_tier(MemoryTier::CxlMem), 7_000);
+        assert_eq!(mon.demand_bytes_on_tier(MemoryTier::Ssd), 3_000);
+        assert!((mon.bw_demand_on_tier(MemoryTier::Ssd) - 3_000.0).abs() < 1.0);
         // gpu slots untouched
         assert_eq!(mon.demand_bytes_on(0) + mon.demand_bytes_on(1), 0);
         // tier bandwidth signal sums demand + prefetch

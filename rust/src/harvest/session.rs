@@ -331,6 +331,11 @@ enum TransferOp {
     Raw { src: DeviceId, dst: DeviceId, bytes: u64 },
     /// Move the lease's bytes to another tier (demotion / promotion).
     Migrate { lease: LeaseId, to: MemoryTier },
+    /// Shrink the lease in place to `ratio` percent (modeled KV
+    /// compression; no bytes move).
+    Compress { lease: LeaseId, ratio: u32 },
+    /// Re-grow a compressed lease to its original size on its tier.
+    Decompress { lease: LeaseId },
 }
 
 /// Report of one submitted transfer batch.
@@ -431,6 +436,33 @@ impl Transfer {
         self
     }
 
+    /// Queue an in-place compression: shrink the lease to `ratio_pct`
+    /// percent of its current size (modeled layer-wise KV compression —
+    /// see [`crate::coldtier::Compressor`]), releasing the tail to its
+    /// arena immediately. Compression is a *placement action*: it moves
+    /// no bytes and is free in virtual time; the modeled cost is paid
+    /// decode-side when the consumer next reloads the payload and
+    /// charges the compressor's decompression rate. Compressing an
+    /// already-compressed lease is a no-op.
+    ///
+    /// # Panics
+    /// If `ratio_pct` is outside `1..=99`.
+    pub fn compress(mut self, lease: &Lease, ratio_pct: u32) -> Self {
+        assert!((1..=99).contains(&ratio_pct), "compress ratio must be in 1..=99");
+        self.ops.push(TransferOp::Compress { lease: lease.id(), ratio: ratio_pct });
+        self
+    }
+
+    /// Queue a decompression: re-grow a compressed lease to its original
+    /// byte count on its current tier (fails the submission with
+    /// [`HarvestError::NoCapacity`] when the arena cannot hold the
+    /// full-size segment again). Decompressing an uncompressed lease is
+    /// a no-op.
+    pub fn decompress(mut self, lease: &Lease) -> Self {
+        self.ops.push(TransferOp::Decompress { lease: lease.id() });
+        self
+    }
+
     pub fn len(&self) -> usize {
         self.ops.len()
     }
@@ -464,6 +496,10 @@ impl Transfer {
                     if h.tier != to {
                         ops.push(*op);
                     }
+                }
+                TransferOp::Compress { lease, .. } | TransferOp::Decompress { lease } => {
+                    hr.handle_info(lease).ok_or(HarvestError::StaleLease(lease))?;
+                    ops.push(*op);
                 }
             }
         }
@@ -512,6 +548,22 @@ impl Transfer {
                         hr.commit_migration(lease, to, dst_alloc, self.background, self.chunk_bytes);
                     (ev, ev.bytes)
                 }
+                // Compression actions move no bytes: they reshape the
+                // lease's arena footprint at the current virtual time.
+                TransferOp::Compress { lease, ratio } => {
+                    let h = hr.handle_info(lease).expect("validated above");
+                    hr.compress_lease(lease, ratio)?;
+                    let now = hr.node.clock.now();
+                    let dev = h.tier.device();
+                    (CopyEvent { start: now, end: now, bytes: 0, src: dev, dst: dev }, 0)
+                }
+                TransferOp::Decompress { lease } => {
+                    let h = hr.handle_info(lease).expect("validated above");
+                    hr.decompress_lease(lease)?;
+                    let now = hr.node.clock.now();
+                    let dev = h.tier.device();
+                    (CopyEvent { start: now, end: now, bytes: 0, src: dev, dst: dev }, 0)
+                }
             };
             report.bytes += bytes;
             report.end = report.end.max(ev.end);
@@ -523,7 +575,10 @@ impl Transfer {
         Ok(report)
     }
 
-    /// One (possibly chunked) copy on the simulated DMA engine.
+    /// One (possibly chunked) copy on the simulated DMA engine. The SSD
+    /// hangs behind host DRAM only, so GPU/CXL endpoints reach it as a
+    /// staged multi-hop copy (chunking does not apply there — the NVMe
+    /// hop dominates and carries its own half-saturation model).
     fn copy(
         &self,
         hr: &mut HarvestRuntime,
@@ -532,6 +587,22 @@ impl Transfer {
         bytes: u64,
         tag: Option<u64>,
     ) -> CopyEvent {
+        match (src, dst) {
+            (DeviceId::Ssd, DeviceId::Gpu(_)) | (DeviceId::Gpu(_), DeviceId::Ssd) => {
+                return hr.node.copy_path(&[src, DeviceId::Host, dst], bytes, tag);
+            }
+            (DeviceId::Ssd, DeviceId::Cxl) => {
+                return hr
+                    .node
+                    .copy_path(&[src, DeviceId::Host, DeviceId::Gpu(0), dst], bytes, tag);
+            }
+            (DeviceId::Cxl, DeviceId::Ssd) => {
+                return hr
+                    .node
+                    .copy_path(&[src, DeviceId::Gpu(0), DeviceId::Host, dst], bytes, tag);
+            }
+            _ => {}
+        }
         match self.chunk_bytes {
             Some(chunk) if bytes > chunk => {
                 hr.node.copy_scattered(src, dst, bytes, bytes.div_ceil(chunk), tag)
@@ -872,6 +943,40 @@ mod tests {
             report.end,
             "an in-flight background copy is drained before its memory is freed"
         );
+    }
+
+    #[test]
+    fn compress_then_decompress_via_builder_round_trips() {
+        let mut hr = rt();
+        let s = HarvestSession::open(&mut hr, PayloadKind::KvBlock);
+        let l = s.alloc(&mut hr, 32 * MIB, PEERS, hints()).unwrap();
+        let report = Transfer::new().compress(&l, 50).submit(&mut hr).unwrap();
+        assert_eq!(report.bytes, 0, "compression moves no bytes");
+        assert_eq!(hr.live_bytes_on(1), 16 * MIB);
+        let info = hr.compression_of(l.id()).expect("compressed");
+        assert_eq!(info.ratio, 50);
+        assert_eq!(info.original_size, 32 * MIB);
+        assert_eq!(
+            hr.handle_info(l.id()).unwrap().size,
+            16 * MIB,
+            "runtime-side size shrank in place"
+        );
+        // compress → demote → promote → decompress restores the bytes
+        Transfer::new()
+            .migrate(&l, MemoryTier::Host)
+            .migrate(&l, MemoryTier::PeerHbm(1))
+            .submit(&mut hr)
+            .unwrap();
+        assert!(hr.compression_of(l.id()).is_some(), "tag rides along migrations");
+        Transfer::new().decompress(&l).submit(&mut hr).unwrap();
+        assert!(hr.compression_of(l.id()).is_none());
+        assert_eq!(hr.live_bytes_on(1), 32 * MIB);
+        assert_eq!(hr.handle_info(l.id()).unwrap().size, 32 * MIB);
+        // both ops are idempotent no-ops the second time around
+        let report = Transfer::new().decompress(&l).submit(&mut hr).unwrap();
+        assert_eq!(report.bytes, 0);
+        assert_eq!(hr.compressions, 1);
+        s.release(&mut hr, l).unwrap();
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! The unified KV block table (§5.2): logical block id → residency
-//! across local HBM and the harvest tiers (peer GPU / CXL / host DRAM,
-//! all lease-addressed), plus `Dropped` for lossy-revoked blocks
+//! across local HBM and the harvest tiers (peer GPU / CXL / host DRAM /
+//! SSD, all lease-addressed), plus `Dropped` for lossy-revoked blocks
 //! awaiting recomputation.
 
 use super::block::{BlockId, KvBlockMeta, SeqId};
@@ -148,6 +148,17 @@ impl UnifiedBlockTable {
     pub fn local_blocks(&self) -> impl Iterator<Item = (BlockId, &KvBlockMeta)> + '_ {
         self.entries.iter().filter_map(|(&id, (m, r))| {
             matches!(r, BlockResidency::Local).then_some((id, m))
+        })
+    }
+
+    /// Blocks currently leased off-pool (cold-tier aging candidates),
+    /// with their lease handle, resident tier, and metadata.
+    pub fn leased_blocks(
+        &self,
+    ) -> impl Iterator<Item = (BlockId, LeaseId, MemoryTier, &KvBlockMeta)> + '_ {
+        self.entries.iter().filter_map(|(&id, (m, r))| match r {
+            BlockResidency::Leased { handle, tier } => Some((id, *handle, *tier, m)),
+            _ => None,
         })
     }
 

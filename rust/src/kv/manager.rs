@@ -19,7 +19,14 @@
 //!   policy consultation per batch, one tier for the whole batch.
 //! * Decode touching a non-local block issues a reload through the
 //!   block's lease: peer → NVLink, CXL → the expander link, host → PCIe,
-//!   `Dropped` → recompute.
+//!   SSD → NVMe staged through host, `Dropped` → recompute. A block the
+//!   pressure ladder compressed in place ([`RevocationAction::Compressed`])
+//!   additionally pays the modeled decode-side decompression cost
+//!   ([`crate::coldtier::Compressor`]) before attention can read it.
+//! * [`KvOffloadManager::age_idle_blocks`] walks idle leased blocks one
+//!   rung down the cold-tier ladder (peer → host, host → compressed →
+//!   SSD) so long-idle sessions surrender fast-tier capacity without
+//!   ever becoming `Dropped` — the `tier_ladder` bench's driver.
 //! * Revocations arrive as pull-model events: every public entry point
 //!   first drains the manager's session queue ([`KvOffloadManager::sync`]).
 //!   A [`RevocationAction::Dropped`] event drops lossy blocks (or falls
@@ -52,6 +59,11 @@ use std::collections::{BTreeMap, BTreeSet};
 /// latency ratio band — see DESIGN.md §Calibration).
 pub const RELOAD_CHUNK_BYTES: u64 = 4 * 1024 * 1024;
 
+/// Decode-side reconstruction rate charged when a compressed KV block
+/// reloads: ns per *original* byte (~4 GB/s — dequantize + token
+/// scatter kernels; see [`crate::coldtier::Compressor`]).
+pub const KV_DECOMPRESS_NS_PER_BYTE: f64 = 0.25;
+
 /// Configuration of the KV offload manager.
 #[derive(Debug, Clone, Copy)]
 pub struct KvConfig {
@@ -83,10 +95,14 @@ pub struct KvStats {
     pub peer_reloads: u64,
     pub cxl_reloads: u64,
     pub host_reloads: u64,
+    /// Reloads paged in from the SSD cold tier (staged through host).
+    pub ssd_reloads: u64,
     pub recomputes: u64,
     pub evictions_to_peer: u64,
     pub evictions_to_cxl: u64,
     pub evictions_to_host: u64,
+    /// Offload batches the tier policy landed directly on the SSD arena.
+    pub evictions_to_ssd: u64,
     pub peer_alloc_failures: u64,
     pub revocation_drops: u64,
     /// Peer leases the controller demoted to host instead of dropping.
@@ -95,16 +111,24 @@ pub struct KvStats {
     pub promotions: u64,
     /// Promoted blocks whose later reload actually rode the fast tier.
     pub promotion_hits: u64,
+    /// Blocks compressed in place — by the controller's pressure ladder
+    /// (`compress_before_demote`) or by [`KvOffloadManager::age_idle_blocks`].
+    pub compressions: u64,
     pub bytes_from_peer: u64,
     pub bytes_from_cxl: u64,
     pub bytes_from_host: u64,
+    pub bytes_from_ssd: u64,
     pub reload_ns: Ns,
     pub recompute_ns: Ns,
+    /// Modeled decode-side reconstruction time charged when compressed
+    /// blocks reload (see [`crate::coldtier::Compressor`]).
+    pub decompress_ns: Ns,
 }
 
 impl KvStats {
     pub fn reloads(&self) -> u64 {
-        self.peer_reloads + self.cxl_reloads + self.host_reloads + self.recomputes
+        self.peer_reloads + self.cxl_reloads + self.host_reloads + self.ssd_reloads
+            + self.recomputes
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -155,6 +179,11 @@ pub struct KvOffloadManager {
     /// Blocks whose lease is being background-migrated to peer HBM:
     /// block → completion time of the promotion copy.
     pending_promotions: BTreeMap<BlockId, Ns>,
+    /// Blocks whose lease is compressed in place (by the controller's
+    /// pressure ladder or by [`KvOffloadManager::age_idle_blocks`]):
+    /// block → compression ratio percent. Their reload pays the modeled
+    /// decompression cost; the tag clears when the block comes local.
+    compressed: BTreeMap<BlockId, u32>,
     /// Source leases of issued prefetches, held until their background
     /// copy completes (lease, copy end). Releasing earlier would free
     /// tier memory an in-flight read still touches; releasing eagerly
@@ -197,6 +226,7 @@ impl KvOffloadManager {
             planner: None,
             pending_prefetch: BTreeMap::new(),
             pending_promotions: BTreeMap::new(),
+            compressed: BTreeMap::new(),
             deferred_release: Vec::new(),
             stats: KvStats::default(),
         }
@@ -285,6 +315,16 @@ impl KvOffloadManager {
                         );
                     }
                 }
+                RevocationAction::Compressed { ratio } => {
+                    // The lease survived in place, shrunk to `ratio`
+                    // percent: residency is unchanged, but the block's
+                    // next reload pays the decode-side reconstruction
+                    // cost — tag it so `ensure_local` charges it.
+                    self.stats.compressions += 1;
+                    if let Some(b) = self.table.block_of_handle(ev.lease) {
+                        self.compressed.insert(b, ratio);
+                    }
+                }
                 RevocationAction::Dropped => {
                     // The runtime already drained DMA, invalidated the
                     // placement and freed the bytes; we repair our indexes.
@@ -292,6 +332,7 @@ impl KvOffloadManager {
                     self.stats.revocation_drops += 1;
                     if let Some(b) = self.table.drop_by_handle(ev.lease) {
                         self.pending_promotions.remove(&b);
+                        self.compressed.remove(&b);
                         if ev.durability == Durability::HostBacked {
                             if let Some(shadow) = self.host_shadow.remove(&b) {
                                 // The durable host-shadow lease takes over.
@@ -410,6 +451,10 @@ impl KvOffloadManager {
                 if placed_at > hr.node.clock.now() {
                     hr.node.clock.advance_to(placed_at);
                 }
+                // A compressed copy moves fewer bytes but must be
+                // reconstructed before attention can read it: look up
+                // the tag before release frees the controller entry.
+                let compression = hr.compression_of(handle);
                 let report = Transfer::new()
                     .chunked(RELOAD_CHUNK_BYTES)
                     .fetch(&lease, self.handler.compute_gpu)
@@ -427,6 +472,10 @@ impl KvOffloadManager {
                         self.stats.cxl_reloads += 1;
                         self.stats.bytes_from_cxl += bytes;
                     }
+                    MemoryTier::Ssd => {
+                        self.stats.ssd_reloads += 1;
+                        self.stats.bytes_from_ssd += bytes;
+                    }
                     _ => {
                         self.stats.host_reloads += 1;
                         self.stats.bytes_from_host += bytes;
@@ -434,6 +483,16 @@ impl KvOffloadManager {
                 }
                 self.stats.reload_ns += report.events[0].duration();
                 let mut ready = report.end;
+                if let Some(info) = compression {
+                    let cost = crate::coldtier::Compressor::new(
+                        info.ratio,
+                        KV_DECOMPRESS_NS_PER_BYTE,
+                    )
+                    .decompress_cost_ns(info.original_size);
+                    self.stats.decompress_ns += cost;
+                    ready += cost;
+                }
+                self.compressed.remove(&id);
                 // A pending promotion resolves here: the reload rode
                 // whichever tier the migration reached in time.
                 if let Some(p_ready) = self.pending_promotions.remove(&id) {
@@ -757,6 +816,97 @@ impl KvOffloadManager {
         promoted
     }
 
+    // -- cold-tier aging ladder -------------------------------------------
+
+    /// One sweep of the cold-tier aging ladder (the `tier_ladder`
+    /// bench's driver): every leased block idle for at least `idle_ns`
+    /// steps one rung down —
+    ///
+    /// * peer HBM → host DRAM ([`Transfer::migrate`]),
+    /// * uncompressed host/CXL → compressed in place
+    ///   ([`Transfer::compress`] at `ratio_pct`),
+    /// * compressed host/CXL → the SSD arena (when the node has one).
+    ///
+    /// Local blocks are untouched (the eviction policy owns them), as
+    /// are blocks whose placement copy is still in flight. Migrations
+    /// run as background transfers, so the sweep never advances the
+    /// clock. Without the ladder the same idle blocks are dropped under
+    /// pressure and recomputed on return; with it they page back in
+    /// with zero recomputes, paying DMA plus the modeled decompression
+    /// cost. Returns the number of rung transitions executed.
+    ///
+    /// # Panics
+    ///
+    /// Panics unless `1 <= ratio_pct <= 99` (the [`Transfer::compress`]
+    /// contract).
+    pub fn age_idle_blocks(
+        &mut self,
+        hr: &mut HarvestRuntime,
+        idle_ns: Ns,
+        ratio_pct: u32,
+    ) -> usize {
+        self.sync(hr);
+        let now = hr.node.clock.now();
+        let candidates: Vec<(BlockId, LeaseId, MemoryTier)> = self
+            .table
+            .leased_blocks()
+            .filter(|(_, _, _, m)| now.saturating_sub(m.last_access) >= idle_ns)
+            .map(|(id, handle, tier, _)| (id, handle, tier))
+            .collect();
+        let mut stepped = 0;
+        for (id, handle, tier) in candidates {
+            if self.pending_promotions.contains_key(&id)
+                || hr.node.dma.tag_busy_until(handle.0) > now
+            {
+                continue; // the copy that placed it is still writing
+            }
+            let is_compressed = hr.compression_of(handle).is_some();
+            let lease = self.leases.get(&handle).expect("leased block has live lease");
+            let dest = match tier {
+                MemoryTier::PeerHbm(_) => Some(MemoryTier::Host),
+                MemoryTier::Host | MemoryTier::CxlMem if is_compressed => {
+                    if hr.node.has_ssd() {
+                        Some(MemoryTier::Ssd)
+                    } else {
+                        continue; // no cold tier below: already terminal
+                    }
+                }
+                MemoryTier::Host | MemoryTier::CxlMem => None, // compress rung
+                _ => continue, // SSD is the bottom of the ladder
+            };
+            match dest {
+                Some(to) => {
+                    if Transfer::new()
+                        .chunked(RELOAD_CHUNK_BYTES)
+                        .background()
+                        .migrate(lease, to)
+                        .submit(hr)
+                        .is_err()
+                    {
+                        continue; // no capacity below: stay put this round
+                    }
+                    self.table
+                        .set_residency(id, BlockResidency::Leased { handle, tier: to });
+                }
+                None => {
+                    if Transfer::new().compress(lease, ratio_pct).submit(hr).is_err() {
+                        continue;
+                    }
+                    self.compressed.insert(id, ratio_pct);
+                    self.stats.compressions += 1;
+                }
+            }
+            stepped += 1;
+        }
+        stepped
+    }
+
+    /// Blocks currently carrying a compression tag (their next reload
+    /// pays the modeled decompression cost), with their ratio percent.
+    pub fn compressed_blocks(&self) -> impl Iterator<Item = (BlockId, u32)> + '_ {
+        self.compressed.iter().map(|(&id, &r)| (id, r))
+    }
+
     /// Cancel pending prefetches for `seq` (scheduler preemption or
     /// cancellation): their blocks stay local, but the outcome ledger
     /// records the bandwidth as wasted if they are never used.
@@ -856,6 +1006,7 @@ impl KvOffloadManager {
             match tier {
                 MemoryTier::PeerHbm(_) => self.stats.evictions_to_peer += 1,
                 MemoryTier::CxlMem => self.stats.evictions_to_cxl += 1,
+                MemoryTier::Ssd => self.stats.evictions_to_ssd += 1,
                 _ => self.stats.evictions_to_host += 1,
             }
             self.table.set_residency(
@@ -876,6 +1027,7 @@ impl KvOffloadManager {
         for (id, res) in removed {
             self.policy.remove(id);
             self.pending_promotions.remove(&id);
+            self.compressed.remove(&id);
             if self.pending_prefetch.remove(&id).is_some() {
                 // Prefetched for a sequence that finished before using it.
                 if let Some(p) = self.planner.as_mut() {
@@ -934,6 +1086,11 @@ impl KvOffloadManager {
         for &id in self.host_shadow.keys() {
             if !self.table.residency(id).map(|r| r.is_peer()).unwrap_or(false) {
                 return Err(format!("host shadow for non-peer block {id:?}"));
+            }
+        }
+        for &id in self.compressed.keys() {
+            if !matches!(self.table.residency(id), Some(BlockResidency::Leased { .. })) {
+                return Err(format!("compression tag on non-leased block {id:?}"));
             }
         }
         Ok(())
@@ -1459,6 +1616,99 @@ mod tests {
         );
         assert_eq!(h2.live_bytes_on(1), 0);
         vanilla.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn age_ladder_steps_blocks_down_to_ssd_and_back_without_recompute() {
+        let node = SimNode::new(NodeSpec::h100x2().with_ssd(64 * GIB));
+        let mut h = HarvestRuntime::new(node, HarvestConfig::for_node(2));
+        let mut kv = KvOffloadManager::new(cfg(true, 8), 0);
+        let s = SeqId(1);
+        for _ in 0..(16 * 6) {
+            kv.append_token(&mut h, s);
+        }
+        let b0 = kv.table().seq_blocks(s)[0];
+        kv.evict_block(&mut h, b0);
+        assert!(kv.table().residency(b0).unwrap().is_peer());
+
+        // Rung 1 (after the spill copy matures): peer -> host.
+        h.advance_to(h.node.clock.now() + 50_000_000);
+        assert_eq!(kv.age_idle_blocks(&mut h, 1_000_000, 50), 1);
+        assert_eq!(kv.table().residency(b0).unwrap().tier(), Some(MemoryTier::Host));
+
+        // Rung 2: compress in place — half the host bytes, no movement.
+        h.advance_to(h.node.clock.now() + 50_000_000);
+        assert_eq!(kv.age_idle_blocks(&mut h, 1_000_000, 50), 1);
+        assert_eq!(kv.stats.compressions, 1);
+        assert_eq!(kv.compressed_blocks().count(), 1);
+        assert_eq!(
+            h.live_bytes_on_tier(MemoryTier::Host),
+            kv.cfg.block_bytes() * 50 / 100
+        );
+
+        // Rung 3: compressed host copy pages out to the SSD arena.
+        h.advance_to(h.node.clock.now() + 50_000_000);
+        assert_eq!(kv.age_idle_blocks(&mut h, 1_000_000, 50), 1);
+        assert_eq!(kv.table().residency(b0).unwrap().tier(), Some(MemoryTier::Ssd));
+        assert_eq!(h.pager().mapped_bytes(), h.node.ssd.used(), "page table balances");
+        assert!(h.node.ssd.used() > 0);
+
+        // Bottom of the ladder: nothing left to step.
+        h.advance_to(h.node.clock.now() + 1_000_000_000);
+        assert_eq!(kv.age_idle_blocks(&mut h, 1_000_000, 50), 0);
+        kv.check_invariants().unwrap();
+
+        // The way back: one staged SSD reload plus the modeled
+        // decompression cost — and zero recomputes.
+        kv.access_block(&mut h, b0);
+        assert_eq!(kv.table().residency(b0), Some(BlockResidency::Local));
+        assert_eq!(kv.stats.recomputes, 0);
+        assert_eq!(kv.stats.ssd_reloads, 1);
+        assert!(kv.stats.bytes_from_ssd > 0);
+        assert!(kv.stats.decompress_ns > 0, "compressed copy pays reconstruction");
+        assert_eq!(kv.compressed_blocks().count(), 0, "tag cleared on reload");
+        assert_eq!(h.pager().mapped_bytes(), 0, "SSD pages released");
+        assert_eq!(h.node.ssd.used(), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pressure_ladder_compresses_then_demotes_and_reload_pays_decompression() {
+        // compress_before_demote: every peer victim is first shrunk in
+        // place; the tenant wants *all* of HBM, so the shrunken copies
+        // still demote to host — with their compression tags riding
+        // along. Nothing is ever dropped.
+        let node = SimNode::new(NodeSpec::h100x2());
+        let mut hc = HarvestConfig::for_node(2);
+        hc.demote_to_host = true;
+        hc.compress_before_demote = true;
+        let mut h = HarvestRuntime::new(node, hc);
+        let mut kv = KvOffloadManager::new(cfg(true, 4), 0);
+        let s = SeqId(1);
+        for _ in 0..(16 * 6) {
+            kv.append_token(&mut h, s);
+        }
+        let peer_before = peer_count(&kv);
+        assert!(peer_before > 0);
+        let now = h.node.clock.now();
+        h.node.set_tenant_load(
+            1,
+            TenantLoad::from_steps(80 * GIB, vec![(0, 0), (now + 1_000, 80 * GIB)]),
+        );
+        h.advance_to(now + 2_000);
+        kv.sync(&mut h);
+        assert_eq!(kv.stats.compressions as usize, peer_before);
+        assert_eq!(kv.stats.demotions as usize, peer_before);
+        assert_eq!(kv.stats.revocation_drops, 0);
+        assert_eq!(kv.compressed_blocks().count(), peer_before);
+        // reload rides host DMA plus decompression — never recompute
+        let first = kv.table().seq_blocks(s)[0];
+        kv.access_block(&mut h, first);
+        assert_eq!(kv.stats.recomputes, 0);
+        assert!(kv.stats.host_reloads >= 1);
+        assert!(kv.stats.decompress_ns > 0);
+        assert_eq!(kv.compressed_blocks().count(), peer_before - 1, "tag cleared");
+        kv.check_invariants().unwrap();
     }
 
     #[test]

@@ -223,6 +223,29 @@ impl Hbm {
         self.free_by_size.insert((len, offset));
     }
 
+    /// Shrink a live allocation in place to `new_size` bytes, returning
+    /// the tail to the free list (the segment keeps its offset). Returns
+    /// the number of bytes released. This is how modeled in-place KV
+    /// compression reclaims capacity without requiring free headroom —
+    /// an alloc-new-then-free dance could not run on a full arena.
+    ///
+    /// Panics on a dead id or a grow request (`new_size` must be in
+    /// `1..=current size`); a no-op shrink to the current size returns 0.
+    pub fn shrink(&mut self, id: AllocId, new_size: u64) -> u64 {
+        assert!(new_size > 0, "shrink to zero is a free");
+        let (offset, len) = *self.allocs.get(&id).expect("shrink of dead AllocId");
+        assert!(new_size <= len, "shrink cannot grow: {new_size} > {len}");
+        let released = len - new_size;
+        if released == 0 {
+            return 0;
+        }
+        self.allocs.insert(id, (offset, new_size));
+        self.used -= released;
+        self.insert_free(offset + new_size, released);
+        debug_assert_eq!(self.used() + self.free_bytes(), self.capacity);
+        released
+    }
+
     /// Size of an allocation, if live.
     pub fn size_of(&self, id: AllocId) -> Option<u64> {
         self.allocs.get(&id).map(|&(_, len)| len)
@@ -393,6 +416,38 @@ mod tests {
         let a = h.alloc(10).unwrap();
         h.free(a);
         h.free(a);
+    }
+
+    #[test]
+    fn shrink_releases_tail_in_place() {
+        let mut h = Hbm::new(1000, FitStrategy::BestFit);
+        let a = h.alloc(400).unwrap(); // [0,400)
+        let _b = h.alloc(600).unwrap(); // [400,1000) — arena is FULL
+        assert_eq!(h.free_bytes(), 0);
+        // shrink works with zero headroom: the compression use case
+        assert_eq!(h.shrink(a, 100), 300);
+        assert_eq!(h.size_of(a), Some(100));
+        assert_eq!(h.offset_of(a), Some(0), "segment keeps its offset");
+        assert_eq!(h.free_bytes(), 300);
+        assert_eq!(h.used(), 700);
+        // released tail is allocatable and coalesces on free
+        let c = h.alloc(300).unwrap();
+        assert_eq!(h.offset_of(c), Some(100));
+        h.free(c);
+        h.free(a);
+        assert_eq!(h.largest_free(), 400);
+        // no-op shrink
+        let d = h.alloc(50).unwrap();
+        assert_eq!(h.shrink(d, 50), 0);
+        h.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot grow")]
+    fn shrink_grow_panics() {
+        let mut h = Hbm::new(100, FitStrategy::BestFit);
+        let a = h.alloc(10).unwrap();
+        h.shrink(a, 20);
     }
 
     #[test]

@@ -35,6 +35,10 @@ pub enum DeviceId {
     /// peer HBM and host DRAM, reached over [`LinkModel::cxl_mem`]-class
     /// links from every GPU.
     Cxl,
+    /// NVMe SSD arena behind the host bridge (the cold-tier ladder's
+    /// last rung): reached only over a [`LinkModel::nvme_ssd`]-class link
+    /// from the host — GPUs stage SSD traffic through host DRAM.
+    Ssd,
 }
 
 impl std::fmt::Display for DeviceId {
@@ -43,6 +47,7 @@ impl std::fmt::Display for DeviceId {
             DeviceId::Gpu(i) => write!(f, "gpu{i}"),
             DeviceId::Host => write!(f, "host"),
             DeviceId::Cxl => write!(f, "cxl"),
+            DeviceId::Ssd => write!(f, "ssd"),
         }
     }
 }
@@ -104,6 +109,20 @@ impl LinkModel {
             base_latency_ns: 6_000,
             peak_bw_bytes_per_ns: 56.0,
             half_sat_bytes: 1.0 * 1024.0 * 1024.0,
+        }
+    }
+
+    /// Datacenter NVMe SSD behind the host bridge (PCIe 4.0 x4-class
+    /// drive): ~GB/s-class sequential bandwidth — an order of magnitude
+    /// below the host-paging PCIe path — plus ~90 µs of submission-queue
+    /// + FTL setup. The cold-tier ladder's capacity rung: effectively
+    /// unbounded bytes at block-device speed.
+    pub fn nvme_ssd() -> Self {
+        Self {
+            kind: LinkKind::Pcie,
+            base_latency_ns: 90_000,
+            peak_bw_bytes_per_ns: 6.5,
+            half_sat_bytes: 4.0 * 1024.0 * 1024.0,
         }
     }
 
@@ -250,6 +269,13 @@ impl Topology {
                 );
             }
         }
+        // The (optional) NVMe cold tier sits behind the host bridge:
+        // only the host reaches it directly; GPU↔SSD traffic stages
+        // through host DRAM. As with CXL, an unused link costs nothing.
+        let ssd = LinkModel::nvme_ssd();
+        for pair in [(DeviceId::Host, DeviceId::Ssd), (DeviceId::Ssd, DeviceId::Host)] {
+            links.insert(pair, Link { model: ssd, busy_until: 0, bytes_moved: 0, transfers: 0 });
+        }
         Self { links, clock, fabric }
     }
 
@@ -285,7 +311,7 @@ impl Topology {
             .keys()
             .filter_map(|(s, _)| match s {
                 DeviceId::Gpu(g) => Some(g + 1),
-                DeviceId::Host | DeviceId::Cxl => None,
+                DeviceId::Host | DeviceId::Cxl | DeviceId::Ssd => None,
             })
             .max()
             .unwrap_or(0);
@@ -717,6 +743,27 @@ mod tests {
         let (s, e) = t.schedule(DeviceId::Cxl, DeviceId::Gpu(0), MIB, 0).unwrap();
         assert_eq!(s, 0);
         assert_eq!(e, cxl);
+    }
+
+    #[test]
+    fn ssd_link_wired_behind_host_only() {
+        let mut t = Topology::h100_node(Clock::new(), 2);
+        assert!(t.link_model(DeviceId::Host, DeviceId::Ssd).is_some());
+        assert!(t.link_model(DeviceId::Ssd, DeviceId::Host).is_some());
+        // no direct GPU<->SSD or CXL<->SSD path — traffic stages through host
+        for g in 0..2 {
+            assert!(t.link_model(DeviceId::Gpu(g), DeviceId::Ssd).is_none());
+            assert!(t.link_model(DeviceId::Ssd, DeviceId::Gpu(g)).is_none());
+        }
+        assert!(t.link_model(DeviceId::Cxl, DeviceId::Ssd).is_none());
+        // the SSD rung is strictly the slowest link class in the node
+        let host = t.estimate(DeviceId::Host, DeviceId::Gpu(0), MIB).unwrap();
+        let ssd = t.estimate(DeviceId::Ssd, DeviceId::Host, MIB).unwrap();
+        assert!(ssd > host, "ssd={ssd} host={host}");
+        // and it schedules like any other link
+        let (s, e) = t.schedule(DeviceId::Ssd, DeviceId::Host, MIB, 0).unwrap();
+        assert_eq!(s, 0);
+        assert_eq!(e, ssd);
     }
 
     #[test]

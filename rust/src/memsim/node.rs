@@ -46,6 +46,9 @@ pub struct NodeSpec {
     /// CXL memory-expander capacity. 0 = tier absent (the default — the
     /// paper's testbed has none); enable with [`NodeSpec::with_cxl`].
     pub cxl_bytes: u64,
+    /// NVMe SSD arena capacity (the cold-tier ladder's last rung).
+    /// 0 = tier absent (the default); enable with [`NodeSpec::with_ssd`].
+    pub ssd_bytes: u64,
 }
 
 impl Default for NodeSpec {
@@ -64,6 +67,7 @@ impl NodeSpec {
             fabric: FabricKind::FullMesh,
             host_dram_bytes: 1024 * GIB,
             cxl_bytes: 0,
+            ssd_bytes: 0,
         }
     }
 
@@ -94,6 +98,13 @@ impl NodeSpec {
     /// an allocatable tier between peer HBM and host DRAM.
     pub fn with_cxl(mut self, bytes: u64) -> Self {
         self.cxl_bytes = bytes;
+        self
+    }
+
+    /// Attach an NVMe SSD arena of `bytes`, making [`DeviceId::Ssd`] an
+    /// allocatable cold tier behind the host bridge.
+    pub fn with_ssd(mut self, bytes: u64) -> Self {
+        self.ssd_bytes = bytes;
         self
     }
 }
@@ -137,6 +148,8 @@ pub struct SimNode {
     pub host: Hbm,
     /// CXL memory-expander arena; capacity 0 when the tier is absent.
     pub cxl: Hbm,
+    /// NVMe SSD arena (cold tier); capacity 0 when the tier is absent.
+    pub ssd: Hbm,
     pub topo: Topology,
     pub dma: DmaEngine,
     /// One pre-created stream per (src,dst) device-pair class, so
@@ -146,6 +159,8 @@ pub struct SimNode {
     c2d_streams: Vec<StreamId>,
     d2c_streams: Vec<StreamId>,
     p2p_streams: Vec<Vec<StreamId>>,
+    h2s_stream: StreamId,
+    s2h_stream: StreamId,
 }
 
 impl SimNode {
@@ -169,11 +184,14 @@ impl SimNode {
         let c2d_streams = (0..n).map(|_| dma.create_stream()).collect();
         let d2c_streams = (0..n).map(|_| dma.create_stream()).collect();
         let p2p_streams = (0..n).map(|_| (0..n).map(|_| dma.create_stream()).collect()).collect();
+        let h2s_stream = dma.create_stream();
+        let s2h_stream = dma.create_stream();
         Self {
             clock,
             gpus,
             host: Hbm::new(spec.host_dram_bytes, FitStrategy::BestFit),
             cxl: Hbm::new(spec.cxl_bytes, FitStrategy::BestFit),
+            ssd: Hbm::new(spec.ssd_bytes, FitStrategy::BestFit),
             topo,
             dma,
             h2d_streams,
@@ -181,6 +199,8 @@ impl SimNode {
             c2d_streams,
             d2c_streams,
             p2p_streams,
+            h2s_stream,
+            s2h_stream,
         }
     }
 
@@ -191,6 +211,11 @@ impl SimNode {
     /// Whether the node carries a CXL memory expander.
     pub fn has_cxl(&self) -> bool {
         self.cxl.capacity() > 0
+    }
+
+    /// Whether the node carries an NVMe SSD cold tier.
+    pub fn has_ssd(&self) -> bool {
+        self.ssd.capacity() > 0
     }
 
     /// Install a tenant-load timeline on GPU `i`.
@@ -217,7 +242,9 @@ impl SimNode {
             (DeviceId::Cxl, DeviceId::Gpu(d)) => self.c2d_streams[d],
             (DeviceId::Gpu(d), DeviceId::Cxl) => self.d2c_streams[d],
             (DeviceId::Gpu(s), DeviceId::Gpu(d)) => self.p2p_streams[s][d],
-            (src, dst) => panic!("no direct {src}->{dst} path: stage through a GPU"),
+            (DeviceId::Host, DeviceId::Ssd) => self.h2s_stream,
+            (DeviceId::Ssd, DeviceId::Host) => self.s2h_stream,
+            (src, dst) => panic!("no direct {src}->{dst} path: stage the copy"),
         }
     }
 
@@ -258,6 +285,38 @@ impl SimNode {
             .copy_after(&mut self.topo, stream2, hop, dst, bytes, tag, first.end)
             .expect("copy on wired node cannot fail");
         super::dma::CopyEvent { start: first.start, end: second.end, bytes, src, dst }
+    }
+
+    /// Async multi-hop copy along `path` (≥ 2 endpoints; each adjacent
+    /// pair must be a wired link): hop *k+1* starts when hop *k*
+    /// delivers, without advancing virtual time, and every hop carries
+    /// `tag` so drain-by-tag covers the whole staged move. This is how
+    /// link-less endpoint pairs are reached — GPU↔SSD stages through
+    /// host DRAM, CXL↔SSD through a GPU *and* host. Returns a combined
+    /// event spanning the first hop's start to the last hop's end.
+    pub fn copy_path(
+        &mut self,
+        path: &[DeviceId],
+        bytes: u64,
+        tag: Option<u64>,
+    ) -> super::dma::CopyEvent {
+        assert!(path.len() >= 2, "a copy path needs at least two endpoints");
+        let first = self.copy(path[0], path[1], bytes, tag);
+        let mut last = first;
+        for w in path[1..].windows(2) {
+            let stream = self.stream_for(w[0], w[1]);
+            last = self
+                .dma
+                .copy_after(&mut self.topo, stream, w[0], w[1], bytes, tag, last.end)
+                .expect("copy on wired node cannot fail");
+        }
+        super::dma::CopyEvent {
+            start: first.start,
+            end: last.end,
+            bytes,
+            src: path[0],
+            dst: *path.last().unwrap(),
+        }
     }
 
     /// Async scattered copy (n_chunks pieces) on the default stream.
@@ -354,6 +413,36 @@ mod tests {
         assert_eq!(ev.start, 0);
         // the whole staged move is covered by the tag barrier
         assert_eq!(node.dma.tag_busy_until(42), ev.end);
+    }
+
+    #[test]
+    fn ssd_spec_attaches_allocatable_arena() {
+        let mut node = SimNode::new(NodeSpec::h100x2().with_ssd(1024 * GIB));
+        assert!(node.has_ssd());
+        assert_eq!(node.ssd.capacity(), 1024 * GIB);
+        let a = node.ssd.alloc(GIB).unwrap();
+        // the direct rung: host <-> ssd over the NVMe link
+        let ev = node.copy(DeviceId::Ssd, DeviceId::Host, GIB, None);
+        let host = node.topo.estimate(DeviceId::Host, DeviceId::Gpu(0), GIB).unwrap();
+        assert!(ev.duration() > host, "ssd rung is slower than host paging");
+        node.ssd.free(a);
+        assert!(!SimNode::new(NodeSpec::h100x2()).has_ssd(), "absent by default");
+    }
+
+    #[test]
+    fn copy_path_stages_gpu_to_ssd_through_host() {
+        let mut node = SimNode::new(NodeSpec::h100x2().with_ssd(64 * GIB));
+        let path = [DeviceId::Gpu(0), DeviceId::Host, DeviceId::Ssd];
+        let ev = node.copy_path(&path, 1 << 20, Some(7));
+        assert_eq!(node.topo.bytes_moved(DeviceId::Gpu(0), DeviceId::Host), 1 << 20);
+        assert_eq!(node.topo.bytes_moved(DeviceId::Host, DeviceId::Ssd), 1 << 20);
+        let hop1 = node.topo.busy_until(DeviceId::Gpu(0), DeviceId::Host);
+        let hop2 = node.topo.busy_until(DeviceId::Host, DeviceId::Ssd);
+        assert!(hop2 > hop1, "write-back waits for the d2h hop");
+        assert_eq!(ev.end, hop2);
+        assert_eq!((ev.src, ev.dst), (DeviceId::Gpu(0), DeviceId::Ssd));
+        // the whole staged move is covered by the tag barrier
+        assert_eq!(node.dma.tag_busy_until(7), ev.end);
     }
 
     #[test]

@@ -79,12 +79,14 @@ impl PressureBroker {
     }
 
     /// Bytes tenant actors hold on `tier` through this broker's node.
+    /// The SSD cold tier is harvest backing store, pressure-exempt by
+    /// construction — tenants never allocate there, so it reports 0.
     pub fn held_on(&self, hr: &HarvestRuntime, tier: MemoryTier) -> u64 {
         match tier {
             MemoryTier::PeerHbm(g) => hr.node.gpus[g].tenant_held,
             MemoryTier::Host => self.host_held,
             MemoryTier::CxlMem => self.cxl_held,
-            MemoryTier::LocalHbm => 0,
+            MemoryTier::LocalHbm | MemoryTier::Ssd => 0,
         }
     }
 
@@ -102,6 +104,10 @@ impl PressureBroker {
     ) -> Result<TenantSegment, TenantOom> {
         assert!(bytes > 0, "zero-size tenant allocation");
         assert!(tier != MemoryTier::LocalHbm, "local HBM is not a tenant tier");
+        assert!(
+            tier != MemoryTier::Ssd,
+            "the SSD cold tier is harvest backing store, not a tenant tier"
+        );
         if tier == MemoryTier::CxlMem && !hr.node.has_cxl() {
             // No expander: a hard failure for a guaranteed tenant, a
             // plain denial for a best-effort one.
@@ -117,7 +123,7 @@ impl PressureBroker {
                 MemoryTier::PeerHbm(g) => &mut hr.node.gpus[g].hbm,
                 MemoryTier::Host => &mut hr.node.host,
                 MemoryTier::CxlMem => &mut hr.node.cxl,
-                MemoryTier::LocalHbm => unreachable!(),
+                MemoryTier::LocalHbm | MemoryTier::Ssd => unreachable!(),
             };
             match arena.alloc(bytes) {
                 Ok(alloc) => {
@@ -125,7 +131,7 @@ impl PressureBroker {
                         MemoryTier::PeerHbm(g) => hr.node.gpus[g].tenant_held += bytes,
                         MemoryTier::Host => self.host_held += bytes,
                         MemoryTier::CxlMem => self.cxl_held += bytes,
-                        MemoryTier::LocalHbm => unreachable!(),
+                        MemoryTier::LocalHbm | MemoryTier::Ssd => unreachable!(),
                     }
                     self.stats.allocs += 1;
                     self.stats.alloc_bytes += bytes;
@@ -184,7 +190,9 @@ impl PressureBroker {
                 hr.node.cxl.free(seg.alloc);
                 self.cxl_held -= seg.bytes;
             }
-            MemoryTier::LocalHbm => unreachable!("local HBM is not a tenant tier"),
+            MemoryTier::LocalHbm | MemoryTier::Ssd => {
+                unreachable!("not a tenant tier")
+            }
         }
         self.stats.frees += 1;
         self.stats.freed_bytes += seg.bytes;
@@ -317,6 +325,20 @@ mod tests {
         b.free(&mut hr, seg);
         drop(host_lease);
         hr.sweep_leaked();
+    }
+
+    #[test]
+    #[should_panic(expected = "not a tenant tier")]
+    fn ssd_cold_tier_is_pressure_exempt() {
+        // Tenants never contend for the SSD arena: harvest's cold
+        // backing store survives any burst by construction.
+        let mut hr = HarvestRuntime::new(
+            SimNode::new(NodeSpec::h100x2().with_ssd(GIB)),
+            HarvestConfig::for_node(2),
+        );
+        let mut b = PressureBroker::new();
+        assert_eq!(b.held_on(&hr, MemoryTier::Ssd), 0);
+        let _ = b.alloc(&mut hr, MemoryTier::Ssd, MIB, TenantPriority::Guaranteed);
     }
 
     #[test]

@@ -948,4 +948,98 @@ mod tenant_actors {
             "demoted blocks reload from their host-tier lease"
         );
     }
+
+    /// The full cold-tier ladder under a full-pressure tenant burst:
+    /// with `compress_before_demote` armed the controller compresses the
+    /// KV manager's peer leases in place, then demotes the (still
+    /// over-budget) compressed leases; the aging sweep writes them back
+    /// to the paged SSD arena; and the decode path brings every block
+    /// home with **zero recomputes**, paying the modeled decompression
+    /// cost instead. With the ladder off, the same burst drops the lossy
+    /// leases and the serve path pays recomputes.
+    #[test]
+    fn tenant_burst_drives_cold_tier_ladder_and_back_without_recompute() {
+        let run = |ladder: bool| {
+            let mut hcfg = HarvestConfig::for_node(2);
+            if ladder {
+                hcfg.demote_to_host = true;
+                hcfg.compress_before_demote = true;
+            }
+            let node = SimNode::new(NodeSpec::h100x2().with_ssd(256 * GIB));
+            let mut hr = HarvestRuntime::new(node, hcfg);
+            let kv_cfg = KvConfig {
+                model: find_kv_model("deepseek").unwrap(),
+                block_tokens: 16,
+                local_capacity_blocks: 4,
+                use_harvest: true,
+                host_backed_peer: false, // lossy: only the ladder saves them
+            };
+            let mut kv = KvOffloadManager::new(kv_cfg, 0);
+            let s = SeqId(1);
+            for _ in 0..16 * 12 {
+                kv.append_token(&mut hr, s); // 12 blocks vs 4 slots: spills to peer
+            }
+            assert!(kv.stats.evictions_to_peer > 0, "spill to peer expected");
+            // Guaranteed batch tenant bursts to the whole peer GPU:
+            // nothing short of displacing every harvest lease satisfies it.
+            let mut fleet = TenantFleet::new();
+            fleet.push(Box::new(BatchActor::new(
+                "batch-0",
+                1,
+                80 * GIB,
+                2_000_000,
+                2_000_000,
+                TenantPriority::Guaranteed,
+                3,
+            )));
+            for t in 1..=5u64 {
+                let now = hr.node.clock.now();
+                fleet.advance_to(&mut hr, now.max(t * 2_000_000));
+            }
+            kv.sync(&mut hr);
+            (hr, kv)
+        };
+
+        // -- ladder on: compress -> demote -> SSD write-back -> home, no
+        //    recompute.
+        let (mut hr, mut kv) = run(true);
+        assert!(kv.stats.compressions > 0, "pressure must compress before demoting");
+        assert!(kv.stats.demotions > 0, "full burst must still demote");
+        assert_eq!(kv.stats.recomputes, 0, "ladder keeps every block alive");
+        assert!(kv.compressed_blocks().count() > 0, "tags survive demotion");
+        // idle out the demoted blocks; compressed host residents page out
+        // to the SSD arena
+        let now = hr.node.clock.now();
+        hr.advance_to(now + 100_000_000);
+        let stepped = kv.age_idle_blocks(&mut hr, 1_000_000, 50);
+        assert!(stepped > 0, "aging sweep must move idle blocks");
+        assert!(
+            hr.live_bytes_on_tier(MemoryTier::Ssd) > 0,
+            "compressed idle blocks write back to SSD"
+        );
+        assert_eq!(
+            hr.pager().mapped_bytes(),
+            hr.node.ssd.used(),
+            "pager page table covers the SSD arena exactly"
+        );
+        // decode touches the sequence again: everything comes home
+        kv.access_seq(&mut hr, s);
+        assert_eq!(kv.stats.recomputes, 0, "round trip completes with zero recomputes");
+        assert!(kv.stats.ssd_reloads > 0, "blocks reloaded from the SSD tier");
+        assert!(kv.stats.bytes_from_ssd > 0);
+        assert!(kv.stats.decompress_ns > 0, "reload pays the modeled decompression cost");
+        kv.check_invariants().unwrap();
+
+        // -- ladder off: the same burst drops lossy leases and decode
+        //    pays recomputes.
+        let (mut hr, mut kv) = run(false);
+        assert_eq!(kv.stats.compressions, 0);
+        assert_eq!(kv.stats.demotions, 0);
+        kv.access_seq(&mut hr, s);
+        assert!(
+            kv.stats.recomputes > 0,
+            "without the ladder, displaced lossy blocks must be recomputed"
+        );
+        kv.check_invariants().unwrap();
+    }
 }

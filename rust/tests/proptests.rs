@@ -673,6 +673,14 @@ fn prop_tiered_lease_accounting_under_migration() {
                             ));
                         }
                     }
+                    RevocationAction::Compressed { .. } => {
+                        // `compress_before_demote` is off in this test, so
+                        // the compression rung must never fire.
+                        return err(format!(
+                            "compression event with the ladder disabled: {:?}",
+                            ev.lease
+                        ));
+                    }
                 }
             }
             // the identity, per tier: arena usage == runtime ledger ==
@@ -686,6 +694,7 @@ fn prop_tiered_lease_accounting_under_migration() {
                     MemoryTier::PeerHbm(g) => hr.node.gpus[g].hbm.used(),
                     MemoryTier::Host => hr.node.host.used(),
                     MemoryTier::CxlMem => hr.node.cxl.used(),
+                    MemoryTier::Ssd => hr.node.ssd.used(),
                     MemoryTier::LocalHbm => 0,
                 };
                 let leases: u64 =
@@ -719,11 +728,301 @@ fn prop_tiered_lease_accounting_under_migration() {
                 MemoryTier::PeerHbm(g) => hr.node.gpus[g].hbm.used(),
                 MemoryTier::Host => hr.node.host.used(),
                 MemoryTier::CxlMem => hr.node.cxl.used(),
+                MemoryTier::Ssd => hr.node.ssd.used(),
                 MemoryTier::LocalHbm => 0,
             };
             if arena != 0 {
                 return err(format!("{tier}: {arena} arena bytes left after teardown"));
             }
+        }
+        Ok(())
+    });
+}
+
+/// The cold-tier ladder keeps the books: random alloc / migrate (now
+/// including the SSD tier) / compress / decompress / revoke / pressure
+/// interleavings with the compress-before-demote ladder armed. At every
+/// step each lease is accounted on exactly one tier at its *current*
+/// (possibly compressed) size, a compressed size never exceeds the
+/// original, the cold-tier pager's page table exactly covers the SSD
+/// arena, and a compress -> demote -> promote -> decompress round trip
+/// restores the original byte count.
+#[test]
+fn prop_ladder_accounting() {
+    check("ladder-accounting", 40, 0x1ADD, |rng| {
+        let node = SimNode::new(NodeSpec::h100x2().with_cxl(32 * GIB).with_ssd(64 * GIB));
+        let mut cfg = HarvestConfig::for_node(2);
+        cfg.demote_to_host = true;
+        cfg.compress_before_demote = true;
+        cfg.compress_ratio_pct = 1 + rng.below(99) as u32;
+        let ratio = cfg.compress_ratio_pct;
+        let mut hr = HarvestRuntime::new(node, cfg);
+        let session = hr.open_session(PayloadKind::Generic);
+        let base_hints = AllocHints { compute_gpu: Some(0), ..Default::default() };
+        let tiers =
+            [MemoryTier::PeerHbm(1), MemoryTier::Host, MemoryTier::CxlMem, MemoryTier::Ssd];
+        // `Lease::size()` snapshots the original byte count; the live
+        // (possibly compressed) size is derived from the runtime's
+        // compression tag with the controller's exact formula.
+        let current_size = |hr: &HarvestRuntime, l: &Lease| -> Result<u64, String> {
+            match hr.compression_of(l.id()) {
+                None => Ok(l.size()),
+                Some(info) => {
+                    if info.original_size != l.size() {
+                        return Err(format!(
+                            "compression records original {} but lease says {}",
+                            info.original_size,
+                            l.size()
+                        ));
+                    }
+                    let c = (info.original_size * u64::from(info.ratio) / 100).max(1);
+                    if c > info.original_size {
+                        return Err(format!(
+                            "compressed {c} > original {}",
+                            info.original_size
+                        ));
+                    }
+                    Ok(c)
+                }
+            }
+        };
+        let mut held: Vec<Lease> = Vec::new();
+        for step in 0..rng.below(120) + 30 {
+            match rng.below(12) {
+                0..=3 => {
+                    let pref = match rng.below(5) {
+                        0 => TierPreference::FastestAvailable,
+                        1 => TierPreference::PEER_ONLY,
+                        2 => TierPreference::Pinned(MemoryTier::Host),
+                        3 => TierPreference::Pinned(MemoryTier::CxlMem),
+                        _ => TierPreference::Pinned(MemoryTier::Ssd),
+                    };
+                    let hints = AllocHints {
+                        durability: if rng.bool(0.5) {
+                            harvest::harvest::Durability::Lossy
+                        } else {
+                            harvest::harvest::Durability::HostBacked
+                        },
+                        ..base_hints
+                    };
+                    if let Ok(l) =
+                        session.alloc(&mut hr, (1 + rng.below(128)) * MIB, pref, hints)
+                    {
+                        held.push(l);
+                    }
+                }
+                4..=5 => {
+                    if !held.is_empty() {
+                        let i = rng.below(held.len() as u64) as usize;
+                        let to = tiers[rng.below(4) as usize];
+                        let l = &held[i];
+                        if Transfer::new().migrate(l, to).submit(&mut hr).is_ok()
+                            && l.tier() != to
+                        {
+                            return err(format!(
+                                "migrated lease reports {} not {to}",
+                                l.tier()
+                            ));
+                        }
+                    }
+                }
+                6 => {
+                    // compress in place (idempotent on a compressed lease)
+                    if !held.is_empty() {
+                        let i = rng.below(held.len() as u64) as usize;
+                        Transfer::new()
+                            .compress(&held[i], ratio)
+                            .submit(&mut hr)
+                            .map_err(|e| format!("compress: {e}"))?;
+                        if hr.compression_of(held[i].id()).is_none() {
+                            return err("compress left no tag".into());
+                        }
+                    }
+                }
+                7 => {
+                    // decompress (no-op on an uncompressed lease; a full
+                    // arena fails cleanly and changes nothing)
+                    if !held.is_empty() {
+                        let i = rng.below(held.len() as u64) as usize;
+                        if Transfer::new().decompress(&held[i]).submit(&mut hr).is_ok()
+                            && hr.compression_of(held[i].id()).is_some()
+                        {
+                            return err("decompress left the tag".into());
+                        }
+                    }
+                }
+                8 => {
+                    if !held.is_empty() {
+                        let l = held.swap_remove(rng.below(held.len() as u64) as usize);
+                        session.release(&mut hr, l).map_err(|e| format!("release: {e}"))?;
+                    }
+                }
+                9 => {
+                    if !held.is_empty() {
+                        let i = rng.below(held.len() as u64) as usize;
+                        hr.revoke(held[i].id(), RevocationReason::PolicyEviction);
+                    }
+                }
+                _ => {
+                    // pressure spike: the armed ladder compresses, then
+                    // demotes, then drops
+                    let now = hr.node.clock.now();
+                    let used = rng.below(80) * GIB;
+                    hr.node.set_tenant_load(
+                        1,
+                        TenantLoad::from_steps(80 * GIB, vec![(0, 0), (now + step + 1, used)]),
+                    );
+                    hr.advance_to(now + step + 2);
+                }
+            }
+            for ev in session.drain_revocations(&mut hr) {
+                match ev.action {
+                    RevocationAction::Dropped => held.retain(|l| l.id() != ev.lease),
+                    RevocationAction::Demoted { to } => {
+                        let Some(l) = held.iter().find(|l| l.id() == ev.lease) else {
+                            return err(format!("demotion for unknown lease {:?}", ev.lease));
+                        };
+                        if l.tier() != to {
+                            return err(format!(
+                                "demoted lease on {} but event says {to}",
+                                l.tier()
+                            ));
+                        }
+                    }
+                    RevocationAction::Compressed { ratio: r } => {
+                        let Some(l) = held.iter().find(|l| l.id() == ev.lease) else {
+                            return err(format!(
+                                "compression for unknown lease {:?}",
+                                ev.lease
+                            ));
+                        };
+                        match hr.compression_of(l.id()) {
+                            Some(info) if info.ratio == r => {}
+                            other => {
+                                return err(format!(
+                                    "Compressed {{ ratio: {r} }} event but tag is {other:?}"
+                                ))
+                            }
+                        }
+                    }
+                }
+            }
+            // each lease on exactly one tier, at its current size
+            let mut total = 0u64;
+            let mut held_total = 0u64;
+            for l in &held {
+                held_total += current_size(&hr, l)?;
+            }
+            for &tier in &tiers {
+                let ledger = hr.live_bytes_on_tier(tier);
+                let pending = hr.pending_free_bytes_on_tier(tier);
+                let mut leases = 0u64;
+                for l in held.iter().filter(|l| l.tier() == tier) {
+                    leases += current_size(&hr, l)?;
+                }
+                if ledger != leases {
+                    return err(format!("{tier}: ledger {ledger} != lease sum {leases}"));
+                }
+                total += ledger;
+                match tier {
+                    MemoryTier::Ssd => {
+                        // pager invariant: page table == arena occupancy
+                        // (logical bytes padded up to whole pages)
+                        if !hr.pager().balances(&hr.node.ssd) {
+                            return err(format!(
+                                "pager maps {} bytes but SSD arena holds {}",
+                                hr.pager().mapped_bytes(),
+                                hr.node.ssd.used()
+                            ));
+                        }
+                        if ledger + pending != hr.pager().logical_bytes() {
+                            return err(format!(
+                                "ssd: ledger {ledger} + pending {pending} != pager \
+                                 logical {}",
+                                hr.pager().logical_bytes()
+                            ));
+                        }
+                    }
+                    _ => {
+                        let arena = match tier {
+                            MemoryTier::PeerHbm(g) => hr.node.gpus[g].hbm.used(),
+                            MemoryTier::Host => hr.node.host.used(),
+                            MemoryTier::CxlMem => hr.node.cxl.used(),
+                            _ => 0,
+                        };
+                        if ledger + pending != arena {
+                            return err(format!(
+                                "{tier}: ledger {ledger} + pending {pending} != arena \
+                                 {arena}"
+                            ));
+                        }
+                    }
+                }
+            }
+            if total != held_total {
+                return err(format!("tier sum {total} != held sum {held_total}"));
+            }
+        }
+        // compress -> demote -> promote -> decompress round trip: the
+        // compressed size survives every hop and decompression restores
+        // exactly the original byte count.
+        let now = hr.node.clock.now();
+        hr.node.set_tenant_load(1, TenantLoad::from_steps(80 * GIB, vec![(0, 0)]));
+        hr.advance_to(now + 1);
+        let l = session
+            .alloc(&mut hr, 64 * MIB, TierPreference::PEER_ONLY, base_hints)
+            .map_err(|e| format!("round-trip alloc: {e}"))?;
+        let original = l.size();
+        Transfer::new()
+            .compress(&l, ratio)
+            .submit(&mut hr)
+            .map_err(|e| format!("round-trip compress: {e}"))?;
+        let compressed = current_size(&hr, &l)?;
+        if compressed > original {
+            return err(format!("compressed {compressed} > original {original}"));
+        }
+        for to in [MemoryTier::Host, MemoryTier::Ssd, MemoryTier::Host] {
+            Transfer::new()
+                .migrate(&l, to)
+                .submit(&mut hr)
+                .map_err(|e| format!("round-trip migrate to {to}: {e}"))?;
+            if current_size(&hr, &l)? != compressed {
+                return err(format!("migration to {to} changed the compressed size"));
+            }
+        }
+        let before = hr.live_bytes_on_tier(MemoryTier::Host);
+        Transfer::new()
+            .decompress(&l)
+            .submit(&mut hr)
+            .map_err(|e| format!("round-trip decompress: {e}"))?;
+        if hr.compression_of(l.id()).is_some() {
+            return err("round-trip decompression left the tag".into());
+        }
+        let after = hr.live_bytes_on_tier(MemoryTier::Host);
+        if after - before != original - compressed {
+            return err(format!(
+                "round trip restored {} bytes, expected {}",
+                after - before,
+                original - compressed
+            ));
+        }
+        held.push(l);
+        // teardown: every tier and the pager return to zero
+        for l in held.drain(..) {
+            session.release(&mut hr, l).map_err(|e| format!("final release: {e}"))?;
+        }
+        hr.sweep_leaked();
+        for &tier in &tiers {
+            if hr.live_bytes_on_tier(tier) != 0 {
+                return err(format!("{tier}: bytes left after teardown"));
+            }
+        }
+        if hr.pager().pages_mapped() != 0 || hr.node.ssd.used() != 0 {
+            return err(format!(
+                "SSD not empty after teardown: {} pages, {} arena bytes",
+                hr.pager().pages_mapped(),
+                hr.node.ssd.used()
+            ));
         }
         Ok(())
     });
@@ -1273,11 +1572,19 @@ fn prop_cluster_conservation() {
                     hr.node.cxl.used()
                 ));
             }
+            if ledger.ssd != hr.live_bytes_on_tier(MemoryTier::Ssd) {
+                return err(format!(
+                    "node {i}: ssd ledger {} != runtime ledger {}",
+                    ledger.ssd,
+                    hr.live_bytes_on_tier(MemoryTier::Ssd)
+                ));
+            }
             let by_tier: u64 = (0..hr.node.n_gpus())
                 .map(|g| hr.live_bytes_on_tier(MemoryTier::PeerHbm(g)))
                 .sum::<u64>()
                 + hr.live_bytes_on_tier(MemoryTier::Host)
-                + hr.live_bytes_on_tier(MemoryTier::CxlMem);
+                + hr.live_bytes_on_tier(MemoryTier::CxlMem)
+                + hr.live_bytes_on_tier(MemoryTier::Ssd);
             if by_tier != ledger.total() {
                 return err(format!("node {i}: tier sum {by_tier} != ledger {}", ledger.total()));
             }
