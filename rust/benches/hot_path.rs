@@ -10,17 +10,19 @@
 //!
 //! Run: `cargo bench --bench hot_path`
 
+use harvest::cluster::{Cluster, ClusterSpec, Event, EventCalendar, RouterPolicy, SchedulerSpec};
 use harvest::harvest::{AllocHints, HarvestConfig, HarvestRuntime, PayloadKind, TierPreference};
 use harvest::kv::{KvConfig, KvOffloadManager, SeqId};
 use harvest::memsim::{NodeSpec, SimNode};
 use harvest::moe::pipeline::OffloadTier;
 use harvest::moe::{find_kv_model, find_moe_model, CgoPipe, ExpertRebalancer, RouterSim};
 use harvest::runtime::{DecodeSlot, ModelRuntime};
-use harvest::server::{CompletelyFair, Scheduler};
+use harvest::server::{CompletelyFair, Scheduler, SimEngineConfig, WorkloadGen, WorkloadSpec};
 use harvest::trace::{ClusterTrace, TraceSpec};
 use harvest::util::bench::{sink, Bench, JsonReport, WallResult};
 use harvest::util::json::{obj, Json};
 use std::path::Path;
+use std::time::Instant;
 
 const MIB: u64 = 1 << 20;
 
@@ -262,6 +264,103 @@ fn bench_trace(b: &Bench, json: &mut JsonReport) {
     );
 }
 
+fn bench_dispatch(b: &Bench, json: &mut JsonReport) {
+    // The cluster's dispatch decision, isolated: pick the next due event
+    // across 64 busy nodes. Calendar = O(log heap) pop + lazy refresh
+    // (what `Cluster::run` does now); linear scan = O(nodes) min over
+    // every node per event (what it did before). 1024 dispatches per
+    // sample amortize the timer.
+    const N: usize = 64;
+    let seed_times = |i: u64| i * 17 % 101;
+    let mut cal = EventCalendar::new(N);
+    for i in 0..N {
+        cal.refresh_node(i, true, seed_times(i as u64));
+    }
+    let mut tick = 0u64;
+    rec(
+        json,
+        b.wall("dispatch x1024 (64 nodes, calendar)", || {
+            for _ in 0..1024 {
+                if let Some((at, Event::NodeReady(n))) = cal.pop() {
+                    tick += 1;
+                    cal.refresh_node(n, true, at + 1 + tick % 7);
+                }
+            }
+            sink(tick);
+        }),
+    );
+    let mut times: Vec<u64> = (0..N as u64).map(seed_times).collect();
+    let mut tick2 = 0u64;
+    rec(
+        json,
+        b.wall("dispatch x1024 (64 nodes, linear scan)", || {
+            for _ in 0..1024 {
+                let mut best = u64::MAX;
+                let mut who = 0usize;
+                for (i, &t) in times.iter().enumerate() {
+                    if t < best {
+                        best = t;
+                        who = i;
+                    }
+                }
+                tick2 += 1;
+                times[who] = best + 1 + tick2 % 7;
+            }
+            sink(tick2);
+        }),
+    );
+}
+
+fn bench_cluster_steps(json: &mut JsonReport, smoke: bool) {
+    // End-to-end stepping throughput of the event-calendar cluster loop:
+    // one 16-node run under memory pressure with staggered arrivals (the
+    // dispatch-bound regime the laggard scan was worst at), reported as
+    // stepper iterations per wall second.
+    let nodes = 16;
+    let kv = KvConfig {
+        model: find_kv_model("deepseek").unwrap(),
+        block_tokens: 16,
+        local_capacity_blocks: 48,
+        use_harvest: true,
+        host_backed_peer: false,
+    };
+    let mut spec = ClusterSpec::new(nodes);
+    spec.router = RouterPolicy::LeastLoaded;
+    let reqs = WorkloadGen::new(WorkloadSpec {
+        n_requests: if smoke { 64 } else { 512 },
+        mean_prompt_tokens: 64.0,
+        max_new_tokens: 8,
+        mean_interarrival_ns: 100_000,
+        shared_prefix_fraction: 0.5,
+        shared_prefix_tokens: 32,
+        n_prefix_groups: 4,
+        seed: 7,
+        ..Default::default()
+    })
+    .generate();
+    let mut cluster = Cluster::new(&spec, SimEngineConfig::new(kv, 4, 8), SchedulerSpec::Fcfs);
+    let t = Instant::now();
+    let report = sink(cluster.run(reqs));
+    let wall_ns = t.elapsed().as_nanos() as u64;
+    let steps: u64 = report.per_node.iter().map(|n| n.steps).sum();
+    let steps_per_sec = steps as f64 * 1e9 / wall_ns as f64;
+    println!(
+        "{:<44} {:>12.0} steps/s   ({} steps / {} reqs)",
+        "cluster steps/sec (16 nodes)",
+        steps_per_sec,
+        steps,
+        report.aggregate.requests_finished
+    );
+    json.add(
+        "cluster steps/sec (16 nodes)",
+        obj([
+            ("steps", Json::from(steps)),
+            ("wall_ns", Json::from(wall_ns)),
+            ("steps_per_sec", Json::from(steps_per_sec)),
+        ]),
+    );
+}
+
 fn bench_pjrt_decode(json: &mut JsonReport) {
     let dir = std::env::var("HARVEST_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     if !Path::new(&dir).join("manifest.json").exists() {
@@ -296,19 +395,29 @@ fn bench_pjrt_decode(json: &mut JsonReport) {
 }
 
 fn main() {
+    // `--smoke` (CI): only the cluster-dispatch arms, few iterations —
+    // proves the calendar pair + 16-node end-to-end arm run and emit
+    // their JSON without paying for the full suite.
+    let smoke = std::env::args().any(|a| a == "--smoke");
     println!("== Harvest hot-path wall-clock benches ==\n");
     Bench::header();
-    let b = Bench::default();
+    let b = if smoke { Bench::new(1, 5) } else { Bench::default() };
     let mut json = JsonReport::new("BENCH_hot_path.json");
-    bench_harvest_alloc_free(&b, &mut json);
-    bench_alloc_under_fragmentation(&b, &mut json);
-    bench_lease_session_paths(&b, &mut json);
-    bench_expert_fetch(&b, &mut json);
-    bench_kv_ops(&b, &mut json);
-    bench_router_and_scheduler(&b, &mut json);
-    bench_decode_pass(&b, &mut json);
-    bench_trace(&b, &mut json);
-    bench_pjrt_decode(&mut json);
+    if !smoke {
+        bench_harvest_alloc_free(&b, &mut json);
+        bench_alloc_under_fragmentation(&b, &mut json);
+        bench_lease_session_paths(&b, &mut json);
+        bench_expert_fetch(&b, &mut json);
+        bench_kv_ops(&b, &mut json);
+        bench_router_and_scheduler(&b, &mut json);
+        bench_decode_pass(&b, &mut json);
+        bench_trace(&b, &mut json);
+    }
+    bench_dispatch(&b, &mut json);
+    bench_cluster_steps(&mut json, smoke);
+    if !smoke {
+        bench_pjrt_decode(&mut json);
+    }
     match json.write() {
         Ok(()) => println!("\nwrote {}", json.path().display()),
         Err(e) => println!("\ncould not write {}: {e}", json.path().display()),

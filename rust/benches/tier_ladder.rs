@@ -24,9 +24,10 @@
 //! short run).
 
 use harvest::harvest::{HarvestConfig, HarvestRuntime, MemoryTier};
-use harvest::kv::{KvConfig, KvOffloadManager, SeqId};
+use harvest::kv::{KvConfig, KvOffloadManager, KvStats, SeqId};
 use harvest::memsim::{NodeSpec, SimNode};
 use harvest::moe::find_kv_model;
+use harvest::server::{AgingConfig, Fcfs, SimEngine, SimEngineConfig, WorkloadGen, WorkloadSpec};
 use harvest::tenantsim::{BatchActor, TenantFleet, TenantPriority};
 use harvest::util::bench::{JsonReport, Table};
 use harvest::util::json::{obj, Json};
@@ -160,6 +161,52 @@ fn pressure_row(seqs: u64, ladder: bool) -> PressureRow {
     }
 }
 
+/// The ladder driven at the serving loop's own cadence: an engine run
+/// with [`AgingConfig`] wired into [`SimEngineConfig`], staggered
+/// shared-prefix arrivals leaving the cached prefix idle between
+/// requests. Previously `age_idle_blocks` was driven by *neither*
+/// serving loop — only this bench called it by hand; now the stepper
+/// sweeps it on the configured period for the engine and every cluster
+/// node alike.
+fn engine_cadence_row(smoke: bool) -> (u64, KvStats) {
+    let mut hcfg = HarvestConfig::for_node(2);
+    hcfg.demote_to_host = true;
+    hcfg.compress_before_demote = true;
+    let mut hr =
+        HarvestRuntime::new(SimNode::new(NodeSpec::h100x2().with_ssd(256 * GIB)), hcfg);
+    let kv_cfg = KvConfig {
+        model: find_kv_model("deepseek").unwrap(),
+        block_tokens: 16,
+        local_capacity_blocks: 8,
+        use_harvest: true,
+        host_backed_peer: false,
+    };
+    let engine = SimEngineConfig::new(kv_cfg, 2, 4).with_aging(AgingConfig {
+        sweep_ns: SWEEP_NS,
+        idle_ns: SWEEP_NS,
+        ratio_pct: RATIO_PCT,
+    });
+    let mut eng = SimEngine::new(engine, Box::new(Fcfs::new()), 0);
+    let reqs = WorkloadGen::new(WorkloadSpec {
+        n_requests: if smoke { 6 } else { 12 },
+        mean_prompt_tokens: 96.0,
+        max_new_tokens: 6,
+        mean_interarrival_ns: 4 * SWEEP_NS,
+        shared_prefix_fraction: 0.8,
+        shared_prefix_tokens: 32,
+        n_prefix_groups: 1,
+        seed: 3,
+        ..Default::default()
+    })
+    .generate();
+    let report = eng.run(&mut hr, reqs);
+    assert_eq!(
+        report.kv_stats.recomputes, 0,
+        "cadence-driven aging must never cost recomputes"
+    );
+    (report.steps, report.kv_stats)
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let seqs = if smoke { 2 } else { 4 };
@@ -256,6 +303,24 @@ fn main() {
             ]),
         );
     }
+
+    println!("\nengine-cadence aging (stepper-driven sweeps, staggered prefix reuse):\n");
+    let (steps, stats) = engine_cadence_row(smoke);
+    println!(
+        "  {} steps, {} demotions, {} compressions, {} ssd reloads, 0 recomputes",
+        steps, stats.demotions, stats.compressions, stats.ssd_reloads
+    );
+    json.add(
+        "engine_cadence",
+        obj([
+            ("steps", Json::from(steps)),
+            ("demotions", Json::from(stats.demotions)),
+            ("compressions", Json::from(stats.compressions)),
+            ("ssd_reloads", Json::from(stats.ssd_reloads)),
+            ("recomputes", Json::from(stats.recomputes)),
+            ("reloads", Json::from(stats.reloads())),
+        ]),
+    );
 
     match json.write() {
         Ok(()) => println!("\nwrote {}", json.path().display()),

@@ -1,0 +1,164 @@
+//! The cluster's event calendar: a binary heap over `(time, class, id)`
+//! replacing the old O(nodes) laggard scan per dispatched event.
+//!
+//! Two event classes share one timeline:
+//!
+//! * **Arrival** — the next request in the global arrival stream. Only
+//!   the *head* arrival is ever in the heap (the stream is pre-sorted);
+//!   popping it routes the request and pushes its successor.
+//! * **NodeReady** — node `id` has work and its next step falls due at
+//!   the keyed time ([`crate::cluster::ClusterNode::next_event_time`]).
+//!
+//! Node entries are invalidated *lazily*: touching a node (routing to
+//! it, stepping it, using it as a migration source) bumps its
+//! generation counter and pushes a fresh entry; stale entries are
+//! discarded on pop. That keeps every operation O(log heap) with no
+//! rebuilds.
+//!
+//! Tie-breaking preserves the laggard scan's semantics exactly: at
+//! equal times an arrival dispatches before any node step (`Arrival`
+//! compares below `NodeReady`), and earlier node ids step first. Pop
+//! times are provably nondecreasing — refreshed node entries never key
+//! earlier than the event that caused the refresh — which
+//! `rust/tests/proptests.rs::prop_event_calendar_ordering` pins down.
+
+use crate::memsim::Ns;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// What the calendar popped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// Dispatch the head of the arrival stream.
+    Arrival,
+    /// Step node `.0`.
+    NodeReady(usize),
+}
+
+/// Heap key: `(time, class, node-id, generation)`. Class 0 = arrival,
+/// class 1 = node-ready, so arrivals win ties; node id breaks
+/// node-vs-node ties like the old `min()` scan did.
+type Key = (Ns, u8, usize, u64);
+
+/// The calendar. See the module docs for semantics.
+#[derive(Debug, Default)]
+pub struct EventCalendar {
+    heap: BinaryHeap<Reverse<Key>>,
+    /// Current generation per node; heap entries carrying an older
+    /// generation are stale and skipped on pop.
+    node_gen: Vec<u64>,
+}
+
+impl EventCalendar {
+    pub fn new(n_nodes: usize) -> Self {
+        Self { heap: BinaryHeap::new(), node_gen: vec![0; n_nodes] }
+    }
+
+    /// Key the head of the arrival stream. Call once at startup and
+    /// once after each [`Event::Arrival`] pop (with the new head).
+    pub fn push_arrival(&mut self, at: Ns) {
+        self.heap.push(Reverse((at, 0, 0, 0)));
+    }
+
+    /// Re-key node `id` after its state changed: its previous entry (if
+    /// any) becomes stale; when `has_work`, a fresh entry lands at
+    /// `at`. Call after routing to a node, stepping it, or advancing
+    /// its clock as a migration source.
+    pub fn refresh_node(&mut self, id: usize, has_work: bool, at: Ns) {
+        self.node_gen[id] += 1;
+        if has_work {
+            self.heap.push(Reverse((at, 1, id, self.node_gen[id])));
+        }
+    }
+
+    /// Pop the earliest live event, discarding stale node entries.
+    /// Returns `None` when nothing is pending — with the push
+    /// discipline above that means: no queued arrival and no node with
+    /// work.
+    pub fn pop(&mut self) -> Option<(Ns, Event)> {
+        while let Some(Reverse((at, class, id, gen))) = self.heap.pop() {
+            if class == 0 {
+                return Some((at, Event::Arrival));
+            }
+            if gen == self.node_gen[id] {
+                return Some((at, Event::NodeReady(id)));
+            }
+        }
+        None
+    }
+
+    /// Live + stale entries currently heaped (bench/diagnostic).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_win_ties_and_ids_break_node_ties() {
+        let mut cal = EventCalendar::new(3);
+        cal.refresh_node(2, true, 10);
+        cal.refresh_node(1, true, 10);
+        cal.push_arrival(10);
+        assert_eq!(cal.pop(), Some((10, Event::Arrival)));
+        assert_eq!(cal.pop(), Some((10, Event::NodeReady(1))));
+        assert_eq!(cal.pop(), Some((10, Event::NodeReady(2))));
+        assert_eq!(cal.pop(), None);
+    }
+
+    #[test]
+    fn refresh_invalidates_stale_entries() {
+        let mut cal = EventCalendar::new(2);
+        cal.refresh_node(0, true, 5);
+        cal.refresh_node(0, true, 9); // state changed; 5 is stale
+        cal.refresh_node(1, true, 7);
+        assert_eq!(cal.pop(), Some((7, Event::NodeReady(1))));
+        assert_eq!(cal.pop(), Some((9, Event::NodeReady(0))));
+        assert_eq!(cal.pop(), None);
+    }
+
+    #[test]
+    fn refresh_without_work_just_invalidates() {
+        let mut cal = EventCalendar::new(1);
+        cal.refresh_node(0, true, 3);
+        cal.refresh_node(0, false, 0);
+        assert_eq!(cal.pop(), None);
+    }
+
+    #[test]
+    fn pop_times_nondecreasing_under_interleaving() {
+        let mut cal = EventCalendar::new(4);
+        cal.push_arrival(0);
+        let mut last = 0;
+        let mut clock = 0;
+        let mut popped = 0;
+        for i in 0..200 {
+            let Some((at, ev)) = cal.pop() else { break };
+            popped += 1;
+            assert!(at >= last, "pop went backwards: {at} < {last}");
+            last = at;
+            clock = clock.max(at);
+            match ev {
+                Event::Arrival => {
+                    let node = i % 4;
+                    cal.refresh_node(node, true, clock);
+                    if i < 40 {
+                        cal.push_arrival(at + (i as u64 % 3));
+                    }
+                }
+                Event::NodeReady(n) => {
+                    clock += 2;
+                    cal.refresh_node(n, i % 5 != 0, clock);
+                }
+            }
+        }
+        assert!(popped > 40, "interleaving exercised both event classes: {popped}");
+    }
+}

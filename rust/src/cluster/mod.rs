@@ -22,15 +22,18 @@
 //! ```
 //!
 //! * Every [`node::ClusterNode`] owns a full single-node stack — its own
-//!   [`crate::memsim::SimNode`], [`crate::harvest::HarvestRuntime`],
-//!   [`crate::kv::KvOffloadManager`], scheduler and metrics — stepped
-//!   incrementally (one `SimEngine`-equivalent iteration at a time).
+//!   [`crate::memsim::SimNode`], [`crate::harvest::HarvestRuntime`], and
+//!   a [`crate::server::NodeStepper`] (KV manager, scheduler, metrics) —
+//!   stepped incrementally, one iteration of the *same* loop body
+//!   [`crate::server::SimEngine`] runs (one stepper, diverge-proof by
+//!   the differential tests).
 //! * The cluster event loop is a conservative discrete-event scheduler
-//!   over one shared virtual timeline: at each turn it dispatches the
-//!   earliest event — the next request arrival (routed against live
-//!   node snapshots) or the laggard node's next decode step — so node
+//!   over one shared virtual timeline, dispatched off an
+//!   [`calendar::EventCalendar`] (binary heap keyed on time): at each
+//!   turn it pops the earliest event — the next request arrival (routed
+//!   against live node snapshots) or a node's next decode step — so node
 //!   clocks advance in global order and routing decisions never see the
-//!   future.
+//!   future. Each dispatch costs O(log heap), not O(nodes).
 //! * The [`router::Router`] picks a node per arrival (round-robin /
 //!   least-loaded / prefix-affinity, TOML `cluster.router_policy`), and
 //!   sheds when every node is saturated.
@@ -45,13 +48,15 @@
 //! makespan is the union window — `tokens_per_sec` is genuine aggregate
 //! cluster throughput, not a sum of per-node rates.
 
+pub mod calendar;
 pub mod node;
 pub mod router;
 
+pub use calendar::{Event, EventCalendar};
 pub use node::{ClusterNode, NodeReport, SchedulerSpec};
 pub use router::{NodeView, RouteDecision, Router, RouterPolicy};
 
-use crate::harvest::HarvestConfig;
+use crate::harvest::{HarvestConfig, HarvestRuntime};
 use crate::kv::SeqId;
 use crate::memsim::{NodeFabric, NodeFabricKind, NodeSpec, Ns, SimNode};
 use crate::server::{Request, ServeMetrics, SimEngineConfig};
@@ -81,6 +86,42 @@ impl TierLedger {
         self.cxl += other.cxl;
         self.host += other.host;
         self.ssd += other.ssd;
+    }
+
+    /// Live harvest bytes by tier class on one runtime — a node's slice
+    /// of the cluster ledger, and what the differential tests compare
+    /// between a bare engine run and a 1-node cluster run.
+    pub fn snapshot(hr: &HarvestRuntime) -> TierLedger {
+        use crate::harvest::MemoryTier;
+        TierLedger {
+            peer: (0..hr.node.n_gpus()).map(|g| hr.live_bytes_on(g)).sum(),
+            cxl: hr.live_bytes_on_tier(MemoryTier::CxlMem),
+            host: hr.live_bytes_on_tier(MemoryTier::Host),
+            ssd: hr.live_bytes_on_tier(MemoryTier::Ssd),
+        }
+    }
+}
+
+/// One entry of the cluster's dispatch log: what [`Cluster::run`]'s
+/// event calendar dispatched, in order. The ordering property tests
+/// assert over this — dispatch times never decrease, and no node steps
+/// past an arrival that is still waiting to be routed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// An arrival was routed to `node` at `at`.
+    Route { at: Ns, node: usize },
+    /// An arrival was shed at `at` (every node saturated).
+    Shed { at: Ns },
+    /// Node `node` ran one stepper iteration falling due at `at`.
+    Step { at: Ns, node: usize },
+}
+
+impl Dispatch {
+    /// The virtual time this dispatch fell due.
+    pub fn at(&self) -> Ns {
+        match *self {
+            Dispatch::Route { at, .. } | Dispatch::Shed { at } | Dispatch::Step { at, .. } => at,
+        }
     }
 }
 
@@ -203,7 +244,8 @@ impl ClusterReport {
     }
 }
 
-/// The multi-node deployment: N stepped nodes + router + node fabric.
+/// The multi-node deployment: N stepped nodes + router + node fabric,
+/// dispatched off one [`EventCalendar`].
 pub struct Cluster {
     nodes: Vec<ClusterNode>,
     fabric: NodeFabric,
@@ -211,6 +253,9 @@ pub struct Cluster {
     stats: ClusterStats,
     assignments: BTreeMap<SeqId, usize>,
     shed: Vec<SeqId>,
+    dispatches: Vec<Dispatch>,
+    /// Router-view scratch, reused per arrival (no per-event allocs).
+    views: Vec<NodeView>,
 }
 
 impl Cluster {
@@ -242,6 +287,8 @@ impl Cluster {
             stats: ClusterStats::default(),
             assignments: BTreeMap::new(),
             shed: Vec::new(),
+            dispatches: Vec::new(),
+            views: Vec::new(),
         }
     }
 
@@ -261,30 +308,46 @@ impl Cluster {
         self.router.policy()
     }
 
+    /// The dispatch log of the last [`Cluster::run`]: every event the
+    /// calendar dispatched, in dispatch order (the ordering property
+    /// tests assert over this).
+    pub fn dispatch_log(&self) -> &[Dispatch] {
+        &self.dispatches
+    }
+
     /// Serve `requests` to completion (or shed) across the cluster.
     /// Callable once per cluster; the nodes' state stays inspectable
     /// afterwards (tests verify ledgers against the live runtimes).
+    ///
+    /// Dispatch runs off an [`EventCalendar`]: the head arrival and
+    /// every working node's next step share one binary heap, so each
+    /// dispatched event costs O(log heap) instead of the old O(nodes)
+    /// laggard scan. Semantics are unchanged — events dispatch in
+    /// nondecreasing time, arrivals route before node steps at equal
+    /// times (so routing never sees state older than the arrival
+    /// instant), and lower node ids step first on ties.
     pub fn run(&mut self, mut requests: Vec<Request>) -> ClusterReport {
         requests.sort_by_key(|r| (r.arrival, r.id.0));
         let mut arrivals: VecDeque<Request> = requests.into();
-        loop {
-            let node_event: Option<(Ns, usize)> = self
-                .nodes
-                .iter()
-                .filter(|n| n.has_work())
-                .map(|n| (n.next_event_time(), n.id))
-                .min();
-            match (arrivals.front().map(|r| r.arrival), node_event) {
-                (None, None) => break,
-                // The laggard node's step precedes the next arrival:
-                // dispatch it so routing sees state no older than the
-                // arrival instant.
-                (Some(t), Some((nt, id))) if t > nt => self.nodes[id].step(),
-                (Some(_), _) => {
-                    let req = arrivals.pop_front().expect("checked front");
-                    self.route(req);
+        let mut cal = EventCalendar::new(self.nodes.len());
+        if let Some(r) = arrivals.front() {
+            cal.push_arrival(r.arrival);
+        }
+        while let Some((at, ev)) = cal.pop() {
+            match ev {
+                Event::Arrival => {
+                    let req = arrivals.pop_front().expect("arrival event implies a queued request");
+                    if let Some(next) = arrivals.front() {
+                        cal.push_arrival(next.arrival);
+                    }
+                    self.route(at, req, &mut cal);
                 }
-                (None, Some((_, id))) => self.nodes[id].step(),
+                Event::NodeReady(id) => {
+                    self.nodes[id].step();
+                    self.dispatches.push(Dispatch::Step { at, node: id });
+                    let n = &self.nodes[id];
+                    cal.refresh_node(id, n.has_work(), n.next_event_time());
+                }
             }
         }
         for n in &mut self.nodes {
@@ -293,23 +356,36 @@ impl Cluster {
         self.report()
     }
 
-    fn route(&mut self, req: Request) {
-        let views: Vec<NodeView> =
-            self.nodes.iter().map(|n| n.view(req.prefix_group)).collect();
-        match self.router.route(&req, &views) {
+    fn route(&mut self, at: Ns, req: Request, cal: &mut EventCalendar) {
+        self.views.clear();
+        self.views.extend(self.nodes.iter().map(|n| n.view(req.prefix_group)));
+        match self.router.route(&req, &self.views) {
             RouteDecision::Shed => {
                 self.stats.shed += 1;
                 self.shed.push(req.id);
+                self.dispatches.push(Dispatch::Shed { at });
             }
             RouteDecision::Assign { node, migrate_prefix_from } => {
+                let mut migration_src = None;
                 if let (Some(from), Some(group)) = (migrate_prefix_from, req.prefix_group) {
                     if from != node && !self.nodes[node].holds_prefix(group) {
                         self.migrate_prefix(from, node, group);
+                        migration_src = Some(from);
                     }
                 }
                 self.stats.routed += 1;
                 self.assignments.insert(req.id, node);
                 self.nodes[node].enqueue(req);
+                self.dispatches.push(Dispatch::Route { at, node });
+                // Re-key every node this arrival touched: the assigned
+                // node gained work; a migration source's clock advanced
+                // (residency restore + D2H egress).
+                let n = &self.nodes[node];
+                cal.refresh_node(node, n.has_work(), n.next_event_time());
+                if let Some(src) = migration_src.filter(|&s| s != node) {
+                    let n = &self.nodes[src];
+                    cal.refresh_node(src, n.has_work(), n.next_event_time());
+                }
             }
         }
     }

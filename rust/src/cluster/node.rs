@@ -1,36 +1,29 @@
 //! One node of the cluster: a full single-node serving stack —
-//! [`HarvestRuntime`] over its own [`crate::memsim::SimNode`], a
-//! [`KvOffloadManager`], a decode scheduler and serving metrics — driven
-//! as an *incremental step loop* instead of [`crate::server::SimEngine`]'s
-//! closed run-to-completion loop, so the [`super::Cluster`] event loop
-//! can interleave nodes in global virtual-time order and route arrivals
-//! against live node state.
+//! [`HarvestRuntime`] over its own [`crate::memsim::SimNode`] plus a
+//! [`crate::server::NodeStepper`] (KV manager, decode scheduler, prefix
+//! cache, serving metrics, optional co-tenant fleet) — driven
+//! *incrementally* under the [`super::Cluster`] event calendar instead
+//! of [`crate::server::SimEngine`]'s closed run-to-completion loop.
 //!
-//! Each step reproduces one `SimEngine` iteration exactly: admit arrived
-//! requests (prefill), drain revocations, restore KV residency for the
-//! scheduled cohort (charging decode stalls), overlap deadline-aware
-//! prefetch/promotion with the step's compute, decode one token per
-//! cohort member. On top of that the node keeps a **prefix cache**: the
-//! KV blocks of each shared prompt prefix it has served, held as a
-//! dedicated sequence in the KV manager (so they age, offload to harvest
-//! tiers and reload like any other blocks). A request routed here whose
-//! prefix group is cached prefills only its unshared suffix — the
-//! affinity win the router exploits — and decode touches the prefix
-//! blocks every step, keeping them genuinely resident on this node.
+//! The loop body is **not** re-implemented here: every
+//! [`ClusterNode::step`] is one [`crate::server::NodeStepper::step`],
+//! the exact same code path the single-node engine runs. What this type
+//! adds is the cluster plumbing: the node owns its runtime (the engine
+//! borrows one), exposes routing snapshots ([`NodeView`]), tier ledgers
+//! and report rollups, and adapts the stepper's prefix-cache
+//! export/install hooks to fabric migrations.
 
-use crate::harvest::{HarvestRuntime, Transfer};
+use crate::harvest::HarvestRuntime;
 use crate::kv::{KvOffloadManager, KvStats, SeqId};
-use crate::memsim::{DeviceId, Ns, SimNode};
-use crate::server::{CompletelyFair, Fcfs, Request, Scheduler, ServeMetrics, SimEngineConfig};
+use crate::memsim::{Ns, SimNode};
+use crate::server::{
+    CompletelyFair, Fcfs, NodeStepper, Request, RequestOutcome, Scheduler, ServeMetrics,
+    SimEngineConfig,
+};
 use crate::tenantsim::{FleetStats, TenantFleet};
-use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use super::router::NodeView;
 use super::TierLedger;
-
-/// Sequence-id namespace for prefix-cache sequences, far above any
-/// request id the workload generator produces.
-const PREFIX_SEQ_BASE: u64 = 1 << 40;
 
 /// Which decode scheduler each node runs (a buildable spec, since every
 /// node needs its own scheduler instance).
@@ -58,16 +51,6 @@ impl SchedulerSpec {
     }
 }
 
-/// A cached shared-prefix: its KV lives under `seq` in this node's KV
-/// manager; `ready_at` gates reuse while the blocks are still arriving
-/// (initial build or fabric migration).
-#[derive(Debug, Clone, Copy)]
-struct PrefixEntry {
-    seq: SeqId,
-    tokens: u32,
-    ready_at: Ns,
-}
-
 /// Per-node slice of a [`super::ClusterReport`].
 #[derive(Debug, Clone)]
 pub struct NodeReport {
@@ -84,30 +67,19 @@ pub struct NodeReport {
     pub ledger: TierLedger,
     /// Co-tenant fleet counters (None when this node runs without one).
     pub tenant: Option<FleetStats>,
+    /// Per-request completion records in finish order.
+    pub completions: Vec<RequestOutcome>,
+    /// Engine iterations this node executed.
+    pub steps: u64,
 }
 
-/// One simulated server of the cluster.
+/// One simulated server of the cluster: an owned runtime plus the
+/// shared stepper.
 pub struct ClusterNode {
     pub id: usize,
     hr: HarvestRuntime,
-    kv: KvOffloadManager,
-    scheduler: Box<dyn Scheduler>,
-    cfg: SimEngineConfig,
-    compute_gpu: usize,
-    /// Routed, not yet admitted (arrival order — the router processes
-    /// arrivals in global time order).
-    pending: VecDeque<Request>,
-    /// Admitted, decoding.
-    live: BTreeMap<SeqId, Request>,
-    prefix_cache: BTreeMap<u32, PrefixEntry>,
-    next_prefix_seq: u64,
-    pub metrics: ServeMetrics,
-    finished: Vec<SeqId>,
+    stepper: NodeStepper,
     routed: u64,
-    prefix_hits: u64,
-    /// This node's co-tenant population (per-node fleets: heterogeneous
-    /// pressure across an otherwise homogeneous cluster).
-    tenants: Option<TenantFleet>,
 }
 
 impl ClusterNode {
@@ -119,45 +91,11 @@ impl ClusterNode {
         sched: SchedulerSpec,
         tenants: Option<TenantFleet>,
     ) -> Self {
-        let mut kv = KvOffloadManager::new(engine.kv, 0);
-        if let Some(p) = engine.prefetch {
-            kv = kv.with_prefetch(p);
-        }
         let mut hr = HarvestRuntime::new(node, harvest);
-        let mut tenants = tenants;
-        if let Some(f) = tenants.as_mut() {
-            f.install(&mut hr);
-        }
-        let mut metrics = ServeMetrics::new();
-        metrics.on_start(hr.node.clock.now());
-        Self {
-            id,
-            hr,
-            kv,
-            scheduler: sched.build(),
-            cfg: engine,
-            compute_gpu: 0,
-            pending: VecDeque::new(),
-            live: BTreeMap::new(),
-            prefix_cache: BTreeMap::new(),
-            next_prefix_seq: 0,
-            metrics,
-            finished: Vec::new(),
-            routed: 0,
-            prefix_hits: 0,
-            tenants,
-        }
-    }
-
-    /// Advance this node's clock, stepping its co-tenant fleet when one
-    /// is attached.
-    fn advance(&mut self, t: Ns) {
-        match &mut self.tenants {
-            Some(f) => f.advance_to(&mut self.hr, t),
-            None => {
-                self.hr.advance_to(t);
-            }
-        }
+        let mut stepper = NodeStepper::new(engine, sched.build(), 0);
+        stepper.set_tenants(tenants);
+        stepper.install(&mut hr);
+        Self { id, hr, stepper, routed: 0 }
     }
 
     // -- introspection ---------------------------------------------------
@@ -168,53 +106,45 @@ impl ClusterNode {
 
     /// Requests waiting or decoding here.
     pub fn queue_depth(&self) -> usize {
-        self.pending.len() + self.live.len()
+        self.stepper.queue_depth()
     }
 
     pub fn has_work(&self) -> bool {
-        !self.pending.is_empty() || !self.live.is_empty()
+        self.stepper.has_work()
     }
 
     /// The virtual time of this node's next step (only meaningful while
     /// [`ClusterNode::has_work`]).
     pub(crate) fn next_event_time(&self) -> Ns {
-        if !self.live.is_empty() {
-            return self.now();
-        }
-        match self.pending.front() {
-            Some(r) => self.now().max(r.arrival),
-            None => self.now(),
-        }
+        self.stepper.next_event_time(&self.hr)
     }
 
     pub fn holds_prefix(&self, group: u32) -> bool {
-        self.prefix_cache.contains_key(&group)
+        self.stepper.holds_prefix(group)
     }
 
     /// The KV sequence holding `group`'s prefix blocks on this node.
     pub fn prefix_seq(&self, group: u32) -> Option<SeqId> {
-        self.prefix_cache.get(&group).map(|e| e.seq)
+        self.stepper.prefix_seq(group)
     }
 
     pub fn kv_manager(&self) -> &KvOffloadManager {
-        &self.kv
+        self.stepper.kv_manager()
     }
 
     pub fn runtime(&self) -> &HarvestRuntime {
         &self.hr
     }
 
+    /// This node's serving metrics so far.
+    pub fn metrics(&self) -> &ServeMetrics {
+        self.stepper.metrics()
+    }
+
     /// Live harvest bytes by tier class (the node's slice of the
     /// cluster ledger).
     pub fn ledger(&self) -> TierLedger {
-        use crate::harvest::MemoryTier;
-        let peer = (0..self.hr.node.n_gpus()).map(|g| self.hr.live_bytes_on(g)).sum();
-        TierLedger {
-            peer,
-            cxl: self.hr.live_bytes_on_tier(MemoryTier::CxlMem),
-            host: self.hr.live_bytes_on_tier(MemoryTier::Host),
-            ssd: self.hr.live_bytes_on_tier(MemoryTier::Ssd),
-        }
+        TierLedger::snapshot(&self.hr)
     }
 
     /// Load snapshot for the router. `group` marks whose prefix
@@ -222,35 +152,37 @@ impl ClusterNode {
     pub(crate) fn view(&self, group: Option<u32>) -> NodeView {
         let free_hbm =
             (0..self.hr.node.n_gpus()).map(|g| self.hr.node.harvestable_now(g)).sum();
+        let cfg = self.stepper.config();
         NodeView {
             node: self.id,
             queue_depth: self.queue_depth(),
-            free_local_blocks: self
-                .cfg
+            free_local_blocks: cfg
                 .kv
                 .local_capacity_blocks
-                .saturating_sub(self.kv.local_blocks()),
+                .saturating_sub(self.stepper.kv_manager().local_blocks()),
             free_hbm_bytes: free_hbm,
-            has_prefix: group.is_some_and(|g| self.prefix_cache.contains_key(&g)),
+            has_prefix: group.is_some_and(|g| self.stepper.holds_prefix(g)),
         }
     }
 
     pub(crate) fn report(&self) -> NodeReport {
         NodeReport {
             node: self.id,
-            metrics: self.metrics.clone(),
-            kv_stats: self.kv.stats.clone(),
+            metrics: self.stepper.metrics().clone(),
+            kv_stats: self.stepper.kv_manager().stats.clone(),
             routed: self.routed,
-            finished: self.finished.len() as u64,
-            prefix_hits: self.prefix_hits,
+            finished: self.stepper.finished(),
+            prefix_hits: self.stepper.prefix_hits(),
             ledger: self.ledger(),
-            tenant: self.tenants.as_ref().map(|f| f.stats()),
+            tenant: self.stepper.tenant_stats(),
+            completions: self.stepper.completions().to_vec(),
+            steps: self.stepper.steps(),
         }
     }
 
     /// This node's co-tenant fleet counters, when one is attached.
     pub fn tenant_stats(&self) -> Option<FleetStats> {
-        self.tenants.as_ref().map(|f| f.stats())
+        self.stepper.tenant_stats()
     }
 
     // -- routing-side entry points ---------------------------------------
@@ -259,188 +191,31 @@ impl ClusterNode {
     /// arrival order, so the pending queue stays arrival-sorted).
     pub(crate) fn enqueue(&mut self, req: Request) {
         self.routed += 1;
-        self.pending.push_back(req);
+        self.stepper.enqueue(req);
     }
 
-    /// Read out `seq`'s blocks for a fabric migration: restore residency
-    /// (lease-addressed reloads for anything on a harvest tier), then
-    /// egress compute-GPU → host staging for the NIC. Returns the byte
-    /// count and the virtual time the payload is ready to leave.
+    /// Read out `seq`'s blocks for a fabric migration (see
+    /// [`NodeStepper::export_prefix`]).
     pub(crate) fn export_prefix(&mut self, group: u32) -> Option<(u32, u64, Ns)> {
-        let entry = *self.prefix_cache.get(&group)?;
-        let ready = self.kv.access_seq(&mut self.hr, entry.seq);
-        let blocks = self.kv.table().seq_blocks(entry.seq).len() as u64;
-        let bytes = blocks * self.cfg.kv.block_bytes();
-        if bytes == 0 {
-            return Some((entry.tokens, 0, ready));
-        }
-        let report = Transfer::new()
-            .raw(DeviceId::Gpu(self.compute_gpu), DeviceId::Host, bytes)
-            .submit(&mut self.hr)
-            .expect("raw transfer cannot go stale");
-        Some((entry.tokens, bytes, report.end.max(ready)))
+        self.stepper.export_prefix(&mut self.hr, group)
     }
 
-    /// Land a migrated prefix: build the group's blocks in this node's
-    /// KV manager and gate reuse on the later of `ready_at` (the fabric
-    /// delivery time) and the host-staging → HBM ingress completing on
-    /// the local PCIe link. (The ingress is scheduled when the migration
-    /// is decided rather than at NIC delivery — a deliberate
-    /// simplification that can occupy the link early; the *gate* is
-    /// never early, so reuse always pays both hops.)
+    /// Land a migrated prefix (see [`NodeStepper::install_prefix`]).
     pub(crate) fn install_prefix(&mut self, group: u32, tokens: u32, ready_at: Ns) {
-        if self.prefix_cache.contains_key(&group) {
-            return;
-        }
-        let seq = self.build_prefix(group, tokens);
-        let blocks = self.kv.table().seq_blocks(seq).len() as u64;
-        let bytes = blocks * self.cfg.kv.block_bytes();
-        let mut gate = ready_at;
-        if bytes > 0 {
-            let ingress = Transfer::new()
-                .raw(DeviceId::Host, DeviceId::Gpu(self.compute_gpu), bytes)
-                .submit(&mut self.hr)
-                .expect("raw transfer cannot go stale");
-            gate = gate.max(ingress.end);
-        }
-        if let Some(e) = self.prefix_cache.get_mut(&group) {
-            e.ready_at = gate;
-        }
-    }
-
-    /// Create the prefix sequence and append its tokens (no compute is
-    /// charged here — the caller accounts prefill or fabric time).
-    fn build_prefix(&mut self, group: u32, tokens: u32) -> SeqId {
-        let seq = SeqId(PREFIX_SEQ_BASE + self.next_prefix_seq);
-        self.next_prefix_seq += 1;
-        let bt = self.cfg.kv.block_tokens as usize;
-        self.kv.reserve_local(&mut self.hr, (tokens as usize).div_ceil(bt));
-        for _ in 0..tokens {
-            self.kv.append_token(&mut self.hr, seq);
-        }
-        self.prefix_cache
-            .insert(group, PrefixEntry { seq, tokens, ready_at: self.now() });
-        seq
+        self.stepper.install_prefix(&mut self.hr, group, tokens, ready_at)
     }
 
     // -- the step loop ---------------------------------------------------
 
-    /// Admission + prefill for every arrived request that fits.
-    fn admit_ready(&mut self) {
-        while self.live.len() < self.cfg.max_running {
-            let Some(front) = self.pending.front() else { break };
-            if front.arrival > self.now() {
-                break;
-            }
-            let mut req = self.pending.pop_front().expect("checked front");
-            self.prefill(&mut req);
-            self.scheduler.admit(req.id);
-            self.live.insert(req.id, req);
-        }
-    }
-
-    /// Prefill one request. A cached prefix group shrinks the prefill to
-    /// the unshared suffix (the affinity win); reuse waits for the
-    /// prefix's `ready_at` when its blocks are still in flight over the
-    /// node fabric — the wait overlaps the suffix prefill.
-    fn prefill(&mut self, req: &mut Request) {
-        let (cached, gate) = match req.prefix_group.and_then(|g| self.prefix_cache.get(&g)) {
-            Some(e) => (e.tokens.min(req.shared_prefix_tokens), e.ready_at),
-            None => (0, 0),
-        };
-        if cached > 0 {
-            self.prefix_hits += 1;
-        }
-        let fresh = req.prompt_tokens - cached;
-        let prefill_ns = self.cfg.prefill_ns_per_token * fresh as u64;
-        self.advance(self.now() + prefill_ns);
-        self.advance(gate);
-        let bt = self.cfg.kv.block_tokens as usize;
-        // Vectored admission: free the suffix's block footprint in one
-        // all-or-nothing batch instead of evicting per token.
-        self.kv.reserve_local(&mut self.hr, (fresh as usize).div_ceil(bt));
-        for _ in 0..fresh {
-            self.kv.append_token(&mut self.hr, req.id);
-        }
-        if cached == 0 && req.shared_prefix_tokens > 0 {
-            if let Some(g) = req.prefix_group {
-                // First request of the group on this node: its prefill
-                // (charged above, full-length) built the prefix KV —
-                // retain it as the group cache.
-                self.build_prefix(g, req.shared_prefix_tokens);
-            }
-        }
-        req.first_token_at = Some(self.now());
-        self.metrics.on_first_token(req.arrival, self.now());
-    }
-
-    /// Run one engine iteration: admit, restore residency, overlap
-    /// prefetch with compute, decode one token per cohort member.
-    /// Mirrors [`crate::server::SimEngine::run`]'s loop body.
+    /// Run one engine iteration — exactly
+    /// [`crate::server::NodeStepper::step`], the same loop body
+    /// `SimEngine::run` executes.
     pub(crate) fn step(&mut self) {
-        if self.live.is_empty() {
-            let next_arrival = self.pending.front().map(|r| r.arrival.max(self.now()));
-            if let Some(at) = next_arrival {
-                self.advance(at);
-            }
-        }
-        self.admit_ready();
-        let cohort = self.scheduler.select(self.cfg.decode_slots);
-        if cohort.is_empty() {
-            return;
-        }
-        let step_start = self.now();
-        // Tick boundary: fold in revocations, then restore residency —
-        // the cohort's own blocks plus the prefix blocks decode attends
-        // over (this is where preemption and offload churn cost).
-        self.kv.sync(&mut self.hr);
-        let mut groups_touched: BTreeSet<u32> = BTreeSet::new();
-        for &seq in &cohort {
-            if let Some(g) = self.live.get(&seq).and_then(|r| r.prefix_group) {
-                if groups_touched.insert(g) {
-                    let pseq = self.prefix_cache.get(&g).map(|e| e.seq);
-                    if let Some(pseq) = pseq {
-                        self.kv.access_seq(&mut self.hr, pseq);
-                    }
-                }
-            }
-        }
-        for &seq in &cohort {
-            self.kv.access_seq(&mut self.hr, seq);
-        }
-        self.metrics.on_stall(self.now() - step_start);
-        // Overlap predicted reloads/promotions with this step's compute.
-        if let Some(pcfg) = self.cfg.prefetch {
-            let predicted = self.scheduler.lookahead(self.cfg.decode_slots, pcfg.horizon);
-            let deadline = self.now() + self.cfg.step_compute_ns;
-            self.kv.prefetch_seqs(&mut self.hr, &predicted, deadline);
-            self.kv.promote_blocks(&mut self.hr, &predicted, deadline);
-        }
-        self.advance(self.now() + self.cfg.step_compute_ns);
-        let step_ns = self.now() - step_start;
-        for &seq in &cohort {
-            self.kv.append_token(&mut self.hr, seq);
-            let now = self.hr.node.clock.now();
-            let req = self.live.get_mut(&seq).expect("scheduled request is live");
-            req.generated += 1;
-            let finished = req.done();
-            let arrival = req.arrival;
-            if finished {
-                req.finished_at = Some(now);
-            }
-            self.metrics.on_token(step_ns);
-            if finished {
-                self.metrics.on_finish(arrival, now);
-                self.scheduler.retire(seq);
-                self.kv.finish_seq(&mut self.hr, seq);
-                self.live.remove(&seq);
-                self.finished.push(seq);
-            }
-        }
+        self.stepper.step(&mut self.hr);
     }
 
     /// Finalize metrics at end of run (attach the prefetch ledger).
     pub(crate) fn finalize(&mut self) {
-        self.metrics.prefetch = self.kv.prefetch_stats().cloned();
+        self.stepper.finalize();
     }
 }

@@ -88,7 +88,7 @@ impl KvConfig {
 }
 
 /// Cumulative statistics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct KvStats {
     pub appends: u64,
     pub local_hits: u64,

@@ -11,6 +11,11 @@
 //!
 //! Schedulers ([`scheduler`]): FCFS continuous batching (vLLM-style) and
 //! Completely-Fair decoding (token-level preemption, §6.3).
+//!
+//! The sim engine's loop body lives in [`stepper::NodeStepper`] — one
+//! shared per-iteration pipeline that [`sim::SimEngine`] drives to
+//! completion and [`crate::cluster::ClusterNode`] drives incrementally,
+//! so single-node and cluster serving can never diverge.
 
 pub mod batcher;
 pub mod engine;
@@ -18,6 +23,7 @@ pub mod metrics;
 pub mod request;
 pub mod scheduler;
 pub mod sim;
+pub mod stepper;
 
 pub use batcher::ContinuousBatcher;
 pub use engine::RealEngine;
@@ -25,3 +31,4 @@ pub use metrics::ServeMetrics;
 pub use request::{Request, RequestState, WorkloadGen, WorkloadSpec};
 pub use scheduler::{CompletelyFair, Fcfs, Scheduler};
 pub use sim::{SimEngine, SimEngineConfig, SimEngineReport};
+pub use stepper::{AgingConfig, NodeStepper, RequestOutcome};

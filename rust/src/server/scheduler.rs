@@ -40,6 +40,23 @@ pub trait Scheduler {
         let _ = (slots, horizon);
         Vec::new()
     }
+
+    /// Allocation-free [`Scheduler::select`]: write the cohort into
+    /// `out` (cleared first) instead of returning a fresh `Vec`. The
+    /// stepper calls this once per iteration with a reused scratch
+    /// buffer. The default delegates to `select`; the built-in
+    /// schedulers override it to write `out` directly.
+    fn select_into(&mut self, slots: usize, out: &mut Vec<SeqId>) {
+        out.clear();
+        out.extend(self.select(slots));
+    }
+
+    /// Allocation-free [`Scheduler::lookahead`], same contract as
+    /// [`Scheduler::select_into`].
+    fn lookahead_into(&self, slots: usize, horizon: usize, out: &mut Vec<SeqId>) {
+        out.clear();
+        out.extend(self.lookahead(slots, horizon));
+    }
 }
 
 /// First-come-first-served continuous batching: the oldest `slots`
@@ -86,6 +103,17 @@ impl Scheduler for Fcfs {
         let n = slots.saturating_mul(horizon.max(1));
         self.queue.iter().take(n).copied().collect()
     }
+
+    fn select_into(&mut self, slots: usize, out: &mut Vec<SeqId>) {
+        out.clear();
+        out.extend(self.queue.iter().take(slots).copied());
+    }
+
+    fn lookahead_into(&self, slots: usize, horizon: usize, out: &mut Vec<SeqId>) {
+        out.clear();
+        let n = slots.saturating_mul(horizon.max(1));
+        out.extend(self.queue.iter().take(n).copied());
+    }
 }
 
 /// Token-level round-robin with a quantum: after a sequence has decoded
@@ -119,19 +147,25 @@ impl Scheduler for CompletelyFair {
     }
 
     fn select(&mut self, slots: usize) -> Vec<SeqId> {
-        let picked: Vec<SeqId> = self.queue.iter().take(slots).copied().collect();
+        let mut out = Vec::new();
+        self.select_into(slots, &mut out);
+        out
+    }
+
+    fn select_into(&mut self, slots: usize, out: &mut Vec<SeqId>) {
+        out.clear();
+        out.extend(self.queue.iter().take(slots).copied());
         self.used += 1;
         if self.used >= self.quantum && self.queue.len() > slots {
             // Rotate the whole served set to the back: the *next* cohort
             // gets the slots (token-level preemption).
-            for _ in 0..picked.len().min(self.queue.len()) {
+            for _ in 0..out.len().min(self.queue.len()) {
                 if let Some(s) = self.queue.pop_front() {
                     self.queue.push_back(s);
                 }
             }
             self.used = 0;
         }
-        picked
     }
 
     fn runnable(&self) -> usize {
@@ -145,9 +179,15 @@ impl Scheduler for CompletelyFair {
     /// *next* cohort is usually a different set whose KV was just
     /// evicted.
     fn lookahead(&self, slots: usize, horizon: usize) -> Vec<SeqId> {
+        let mut out = Vec::new();
+        self.lookahead_into(slots, horizon, &mut out);
+        out
+    }
+
+    fn lookahead_into(&self, slots: usize, horizon: usize, out: &mut Vec<SeqId>) {
+        out.clear();
         let mut q = self.queue.clone();
         let mut used = self.used;
-        let mut out: Vec<SeqId> = Vec::new();
         for _ in 0..horizon.max(1) {
             for s in q.iter().take(slots) {
                 if !out.contains(s) {
@@ -164,7 +204,6 @@ impl Scheduler for CompletelyFair {
                 used = 0;
             }
         }
-        out
     }
 }
 

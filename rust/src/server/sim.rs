@@ -8,17 +8,21 @@
 //! come from peer HBM over NVLink; without, from host DRAM over PCIe —
 //! the difference is the paper's "scheduler robustness" effect: finer-
 //! grained fairness without the full throughput penalty of paging.
+//!
+//! The loop body itself lives in [`super::stepper::NodeStepper`] —
+//! `SimEngine::run` just drives a stepper over a closed request list.
+//! The cluster drives the same stepper incrementally, which is what
+//! keeps single-node and cluster results diverge-proof.
 
-use super::batcher::ContinuousBatcher;
 use super::metrics::ServeMetrics;
 use super::request::Request;
 use super::scheduler::Scheduler;
+use super::stepper::{AgingConfig, NodeStepper, RequestOutcome};
 use crate::harvest::prefetch::PrefetchConfig;
 use crate::harvest::HarvestRuntime;
-use crate::kv::{KvConfig, KvOffloadManager, SeqId};
+use crate::kv::{KvConfig, KvOffloadManager};
 use crate::memsim::Ns;
 use crate::tenantsim::{FleetStats, TenantFleet};
-use std::collections::BTreeMap;
 
 /// Engine configuration.
 #[derive(Debug, Clone, Copy)]
@@ -36,6 +40,11 @@ pub struct SimEngineConfig {
     /// step's compute (None = demand fetching only, the pre-prefetch
     /// behavior).
     pub prefetch: Option<PrefetchConfig>,
+    /// Periodic idle-aging sweep over the cold-tier ladder (None = no
+    /// background aging, the pre-ladder behavior). The stepper runs the
+    /// sweep, so single-node and cluster runs share the cadence by
+    /// construction.
+    pub aging: Option<AgingConfig>,
 }
 
 impl SimEngineConfig {
@@ -50,12 +59,19 @@ impl SimEngineConfig {
             step_compute_ns: per_tok as Ns,
             prefill_ns_per_token: (per_tok / 4.0) as Ns,
             prefetch: None,
+            aging: None,
         }
     }
 
     /// Enable the prefetch pipeline.
     pub fn with_prefetch(mut self, cfg: PrefetchConfig) -> Self {
         self.prefetch = Some(cfg);
+        self
+    }
+
+    /// Enable the background idle-aging sweep.
+    pub fn with_aging(mut self, cfg: AgingConfig) -> Self {
+        self.aging = Some(cfg);
         self
     }
 }
@@ -70,25 +86,21 @@ pub struct SimEngineReport {
     pub scheduler: &'static str,
     pub use_harvest: bool,
     pub tenant: Option<FleetStats>,
+    /// Per-request completion records in finish order — what the
+    /// differential tests compare against a 1-node cluster run.
+    pub completions: Vec<RequestOutcome>,
+    /// Engine iterations the run took.
+    pub steps: u64,
 }
 
-/// The engine.
+/// The engine: a closed-loop driver over one [`NodeStepper`].
 pub struct SimEngine {
-    cfg: SimEngineConfig,
-    kv: KvOffloadManager,
-    scheduler: Box<dyn Scheduler>,
-    /// Closed-loop co-tenants stepped on every time advance (None =
-    /// exogenous-timeline mode, the pre-fleet behavior).
-    tenants: Option<TenantFleet>,
+    stepper: NodeStepper,
 }
 
 impl SimEngine {
     pub fn new(cfg: SimEngineConfig, scheduler: Box<dyn Scheduler>, compute_gpu: usize) -> Self {
-        let mut kv = KvOffloadManager::new(cfg.kv, compute_gpu);
-        if let Some(p) = cfg.prefetch {
-            kv = kv.with_prefetch(p);
-        }
-        Self { cfg, kv, scheduler, tenants: None }
+        Self { stepper: NodeStepper::new(cfg, scheduler, compute_gpu) }
     }
 
     pub fn with_kv(
@@ -96,7 +108,7 @@ impl SimEngine {
         scheduler: Box<dyn Scheduler>,
         kv: KvOffloadManager,
     ) -> Self {
-        Self { cfg, kv, scheduler, tenants: None }
+        Self { stepper: NodeStepper::from_parts(cfg, scheduler, kv, 0) }
     }
 
     /// Attach a co-tenant fleet: every virtual-time advance in the run
@@ -104,117 +116,32 @@ impl SimEngine {
     /// allocation churn and collective traffic land exactly where the
     /// serve path's own DMA does.
     pub fn with_tenants(mut self, fleet: TenantFleet) -> Self {
-        self.tenants = Some(fleet);
+        self.stepper.set_tenants(Some(fleet));
         self
     }
 
-    /// Advance virtual time, through the fleet when one is attached.
-    fn advance(&mut self, hr: &mut HarvestRuntime, t: Ns) {
-        match &mut self.tenants {
-            Some(f) => f.advance_to(hr, t),
-            None => {
-                hr.advance_to(t);
-            }
-        }
+    /// The underlying stepper (inspection; the cluster drives its own).
+    pub fn stepper(&self) -> &NodeStepper {
+        &self.stepper
     }
 
-    /// Serve `requests` to completion in virtual time.
+    /// Serve `requests` to completion in virtual time. One run per
+    /// engine: the stepper's queues and metrics carry across calls.
     pub fn run(&mut self, hr: &mut HarvestRuntime, requests: Vec<Request>) -> SimEngineReport {
-        let scheduler_name = self.scheduler.name();
-        let mut metrics = ServeMetrics::new();
-        metrics.on_start(hr.node.clock.now());
-        // Co-tenants exist from t=0 (persistent footprints, replay
-        // timelines), not from the first time advance.
-        if let Some(f) = self.tenants.as_mut() {
-            f.install(hr);
+        self.stepper.install(hr);
+        self.stepper.enqueue_all(requests);
+        while self.stepper.has_work() {
+            self.stepper.step(hr);
         }
-        let mut batcher = ContinuousBatcher::new(self.cfg.max_running, requests);
-        let mut live: BTreeMap<SeqId, Request> = BTreeMap::new();
-
-        while !batcher.all_done() {
-            // Idle: jump to the next arrival.
-            if self.scheduler.runnable() == 0 {
-                if let Some(at) = batcher.next_arrival() {
-                    let target = at.max(hr.node.clock.now());
-                    self.advance(hr, target);
-                }
-            }
-            // Admission + prefill.
-            let now = hr.node.clock.now();
-            for mut req in batcher.admit(now, |_| true) {
-                let prefill_ns = self.cfg.prefill_ns_per_token * req.prompt_tokens as u64;
-                let target = hr.node.clock.now() + prefill_ns;
-                self.advance(hr, target);
-                // Vectored admission: free the prompt's block footprint in
-                // one all-or-nothing batch instead of evicting per token.
-                let blocks = (req.prompt_tokens as usize).div_ceil(self.cfg.kv.block_tokens as usize);
-                self.kv.reserve_local(hr, blocks);
-                for _ in 0..req.prompt_tokens {
-                    self.kv.append_token(hr, req.id);
-                }
-                req.first_token_at = Some(hr.node.clock.now());
-                metrics.on_first_token(req.arrival, hr.node.clock.now());
-                self.scheduler.admit(req.id);
-                live.insert(req.id, req);
-            }
-            // One decode step for the scheduled cohort.
-            let cohort = self.scheduler.select(self.cfg.decode_slots);
-            if cohort.is_empty() {
-                continue;
-            }
-            let step_start = hr.node.clock.now();
-            // Tick boundary: drain revocations accumulated while time
-            // advanced, then restore KV residency for the cohort (this
-            // is where preemption churn costs).
-            self.kv.sync(hr);
-            for &seq in &cohort {
-                self.kv.access_seq(hr, seq);
-            }
-            // Everything between step_start and here was waiting on KV
-            // residency, not computing.
-            metrics.on_stall(hr.node.clock.now() - step_start);
-            // Overlap: while this step's compute runs, issue background
-            // reloads for the sequences the scheduler predicts will
-            // decode next. The deadline is the start of the next step —
-            // the planner guarantees prefetch DMA is off every link
-            // again by the time demand fetches can reappear. Predicted
-            // blocks stuck on the host/CXL tiers (pressure demotions,
-            // host spills) that the reload pass left behind are promoted
-            // toward peer HBM in the same window, so their eventual
-            // reload rides NVLink instead of PCIe.
-            if let Some(pcfg) = self.cfg.prefetch {
-                let predicted =
-                    self.scheduler.lookahead(self.cfg.decode_slots, pcfg.horizon);
-                let deadline = hr.node.clock.now() + self.cfg.step_compute_ns;
-                self.kv.prefetch_seqs(hr, &predicted, deadline);
-                self.kv.promote_blocks(hr, &predicted, deadline);
-            }
-            // Batched compute.
-            let compute_end = hr.node.clock.now() + self.cfg.step_compute_ns;
-            self.advance(hr, compute_end);
-            let step_ns = hr.node.clock.now() - step_start;
-            for &seq in &cohort {
-                self.kv.append_token(hr, seq);
-                let req = live.get_mut(&seq).expect("scheduled request is live");
-                req.generated += 1;
-                metrics.on_token(step_ns);
-                if req.done() {
-                    req.finished_at = Some(hr.node.clock.now());
-                    metrics.on_finish(req.arrival, hr.node.clock.now());
-                    self.scheduler.retire(seq);
-                    batcher.finish(seq);
-                    self.kv.finish_seq(hr, seq);
-                    live.remove(&seq);
-                }
-            }
-        }
-        metrics.prefetch = self.kv.prefetch_stats().cloned();
+        self.stepper.finalize();
         SimEngineReport {
-            metrics,
-            kv_stats: self.kv.stats.clone(),
-            scheduler: scheduler_name,
-            use_harvest: self.cfg.kv.use_harvest,
-            tenant: self.tenants.as_ref().map(|f| f.stats()),
+            metrics: self.stepper.metrics().clone(),
+            kv_stats: self.stepper.kv_manager().stats.clone(),
+            scheduler: self.stepper.scheduler_name(),
+            use_harvest: self.stepper.config().kv.use_harvest,
+            tenant: self.stepper.tenant_stats(),
+            completions: self.stepper.completions().to_vec(),
+            steps: self.stepper.steps(),
         }
     }
 }

@@ -1,0 +1,541 @@
+//! The one serving loop body — shared by the single-node engine and the
+//! cluster.
+//!
+//! [`NodeStepper`] owns everything one serving node iterates over:
+//! pending/live request queues, the decode scheduler, the
+//! [`KvOffloadManager`], the optional co-tenant fleet, the shared-prefix
+//! cache, and serving metrics. One call to [`NodeStepper::step`] is one
+//! engine iteration:
+//!
+//! ```text
+//!   idle? ── jump to next arrival ─┐
+//!                                  ▼
+//!   admit arrived requests (prefill, prefix-cache aware)
+//!                                  ▼
+//!   select cohort ── sync (drain revocations) ── idle-age sweep
+//!                                  ▼
+//!   restore KV residency (prefix blocks + cohort) → decode stall
+//!                                  ▼
+//!   overlap deadline-aware prefetch/promotion with compute
+//!                                  ▼
+//!   advance one step of compute (tenant fleet wakes ride along)
+//!                                  ▼
+//!   decode one token per cohort member; retire finished requests
+//! ```
+//!
+//! [`crate::server::SimEngine::run`] drives a stepper to completion over
+//! a closed request list; [`crate::cluster::ClusterNode`] drives the
+//! *same* stepper incrementally under the cluster's event calendar, so
+//! the loop body exists exactly once and single-node and cluster
+//! results cannot silently diverge (`rust/tests/differential.rs` pins
+//! the equivalence bit-for-bit).
+//!
+//! # Example
+//!
+//! ```
+//! use harvest::harvest::{HarvestConfig, HarvestRuntime};
+//! use harvest::kv::KvConfig;
+//! use harvest::memsim::{NodeSpec, SimNode};
+//! use harvest::moe::find_kv_model;
+//! use harvest::server::{Fcfs, NodeStepper, SimEngineConfig, WorkloadGen, WorkloadSpec};
+//!
+//! let mut hr =
+//!     HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+//! let kv = KvConfig {
+//!     model: find_kv_model("deepseek").unwrap(),
+//!     block_tokens: 16,
+//!     local_capacity_blocks: 10_000,
+//!     use_harvest: true,
+//!     host_backed_peer: false,
+//! };
+//! let cfg = SimEngineConfig::new(kv, 8, 16);
+//! let mut stepper = NodeStepper::new(cfg, Box::new(Fcfs::new()), 0);
+//! stepper.install(&mut hr);
+//! let spec = WorkloadSpec { n_requests: 4, max_new_tokens: 4, ..Default::default() };
+//! stepper.enqueue_all(WorkloadGen::new(spec).generate());
+//! while stepper.has_work() {
+//!     stepper.step(&mut hr);
+//! }
+//! assert_eq!(stepper.completions().len(), 4);
+//! assert!(stepper.steps() >= 4);
+//! ```
+
+use super::metrics::ServeMetrics;
+use super::request::Request;
+use super::scheduler::Scheduler;
+use super::sim::SimEngineConfig;
+use crate::harvest::{HarvestRuntime, Transfer};
+use crate::kv::{KvOffloadManager, SeqId};
+use crate::memsim::{DeviceId, Ns};
+use crate::tenantsim::{FleetStats, TenantFleet};
+use std::collections::{BTreeMap, VecDeque};
+
+/// Sequence-id namespace for prefix-cache sequences, far above any
+/// request id the workload generator produces.
+pub const PREFIX_SEQ_BASE: u64 = 1 << 40;
+
+/// Periodic idle-aging sweep: every `sweep_ns` of virtual time the
+/// stepper runs one [`KvOffloadManager::age_idle_blocks`] rung over
+/// blocks idle for at least `idle_ns`, demoting `ratio_pct` percent of
+/// them one tier down the cold ladder. Both the single-node engine and
+/// every cluster node inherit the cadence from the same config, so the
+/// ladder can never tick at different rates on the two paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AgingConfig {
+    /// Virtual-time period between sweeps.
+    pub sweep_ns: Ns,
+    /// A block must have been untouched this long to age.
+    pub idle_ns: Ns,
+    /// Fraction of eligible blocks each sweep demotes (1..=99).
+    pub ratio_pct: u32,
+}
+
+impl Default for AgingConfig {
+    fn default() -> Self {
+        Self { sweep_ns: 2_000_000, idle_ns: 4_000_000, ratio_pct: 50 }
+    }
+}
+
+/// Per-request completion record — the differential-equivalence tests
+/// compare these bit-for-bit between a bare [`crate::server::SimEngine`]
+/// run and a 1-node [`crate::cluster::Cluster`] run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestOutcome {
+    pub id: SeqId,
+    pub arrival: Ns,
+    pub first_token_at: Ns,
+    pub finished_at: Ns,
+    /// Tokens decoded for this request.
+    pub generated: u32,
+}
+
+/// A cached shared-prefix: its KV lives under `seq` in this node's KV
+/// manager; `ready_at` gates reuse while the blocks are still arriving
+/// (initial build or fabric migration).
+#[derive(Debug, Clone, Copy)]
+struct PrefixEntry {
+    seq: SeqId,
+    tokens: u32,
+    ready_at: Ns,
+}
+
+/// One serving node's complete stepping state. See the module docs for
+/// the per-iteration pipeline.
+pub struct NodeStepper {
+    cfg: SimEngineConfig,
+    kv: KvOffloadManager,
+    scheduler: Box<dyn Scheduler>,
+    /// Closed-loop co-tenants stepped on every time advance (None =
+    /// exogenous-timeline mode).
+    tenants: Option<TenantFleet>,
+    /// GPU whose HBM stages prefix-cache export/install raw transfers.
+    compute_gpu: usize,
+    /// Arrived-or-routed, not yet admitted (kept arrival-sorted).
+    pending: VecDeque<Request>,
+    /// Admitted, decoding.
+    live: BTreeMap<SeqId, Request>,
+    prefix_cache: BTreeMap<u32, PrefixEntry>,
+    next_prefix_seq: u64,
+    metrics: ServeMetrics,
+    completions: Vec<RequestOutcome>,
+    prefix_hits: u64,
+    steps: u64,
+    next_sweep: Ns,
+    installed: bool,
+    // Scratch buffers reused across steps — the hot path allocates
+    // nothing per iteration.
+    cohort: Vec<SeqId>,
+    predicted: Vec<SeqId>,
+    groups: Vec<u32>,
+}
+
+impl NodeStepper {
+    /// Build a stepper with a fresh KV manager (prefetch wired in when
+    /// the config asks for it). `compute_gpu` is the GPU whose HBM the
+    /// KV manager allocates from.
+    pub fn new(cfg: SimEngineConfig, scheduler: Box<dyn Scheduler>, compute_gpu: usize) -> Self {
+        let mut kv = KvOffloadManager::new(cfg.kv, compute_gpu);
+        if let Some(p) = cfg.prefetch {
+            kv = kv.with_prefetch(p);
+        }
+        Self::from_parts(cfg, scheduler, kv, compute_gpu)
+    }
+
+    /// Build a stepper around an existing KV manager (ablations hand in
+    /// specially configured managers).
+    pub fn from_parts(
+        cfg: SimEngineConfig,
+        scheduler: Box<dyn Scheduler>,
+        kv: KvOffloadManager,
+        compute_gpu: usize,
+    ) -> Self {
+        Self {
+            cfg,
+            kv,
+            scheduler,
+            tenants: None,
+            compute_gpu,
+            pending: VecDeque::new(),
+            live: BTreeMap::new(),
+            prefix_cache: BTreeMap::new(),
+            next_prefix_seq: 0,
+            metrics: ServeMetrics::new(),
+            completions: Vec::new(),
+            prefix_hits: 0,
+            steps: 0,
+            next_sweep: 0,
+            installed: false,
+            cohort: Vec::new(),
+            predicted: Vec::new(),
+            groups: Vec::new(),
+        }
+    }
+
+    /// Attach (or detach) a co-tenant fleet. Call before
+    /// [`NodeStepper::install`].
+    pub fn set_tenants(&mut self, tenants: Option<TenantFleet>) {
+        self.tenants = tenants;
+    }
+
+    /// Latch the metrics start time and install the co-tenant fleet
+    /// (tenants exist from t=0 — persistent footprints, replay
+    /// timelines — not from the first time advance). Idempotent.
+    pub fn install(&mut self, hr: &mut HarvestRuntime) {
+        if self.installed {
+            return;
+        }
+        self.installed = true;
+        self.metrics.on_start(hr.node.clock.now());
+        self.next_sweep = hr.node.clock.now();
+        if let Some(f) = self.tenants.as_mut() {
+            f.install(hr);
+        }
+    }
+
+    /// Advance virtual time, through the fleet when one is attached.
+    /// Free-standing over the split-off fields so callers can hold
+    /// disjoint borrows of the rest of the stepper.
+    fn advance_time(tenants: &mut Option<TenantFleet>, hr: &mut HarvestRuntime, t: Ns) {
+        match tenants {
+            Some(f) => f.advance_to(hr, t),
+            None => {
+                hr.advance_to(t);
+            }
+        }
+    }
+
+    fn advance(&mut self, hr: &mut HarvestRuntime, t: Ns) {
+        Self::advance_time(&mut self.tenants, hr, t);
+    }
+
+    // -- queue entry points ----------------------------------------------
+
+    /// Hand over one routed request (callers feed arrivals in global
+    /// arrival order, so the pending queue stays arrival-sorted).
+    pub fn enqueue(&mut self, req: Request) {
+        self.pending.push_back(req);
+    }
+
+    /// Load a closed request list, sorting it into canonical
+    /// `(arrival, id)` dispatch order — the same order the cluster
+    /// routes arrivals in.
+    pub fn enqueue_all(&mut self, mut requests: Vec<Request>) {
+        requests.sort_by_key(|r| (r.arrival, r.id.0));
+        self.pending.extend(requests);
+    }
+
+    // -- introspection ---------------------------------------------------
+
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || !self.live.is_empty()
+    }
+
+    /// Requests waiting or decoding here.
+    pub fn queue_depth(&self) -> usize {
+        self.pending.len() + self.live.len()
+    }
+
+    /// The virtual time of this stepper's next step (only meaningful
+    /// while [`NodeStepper::has_work`]).
+    pub fn next_event_time(&self, hr: &HarvestRuntime) -> Ns {
+        let now = hr.node.clock.now();
+        if !self.live.is_empty() {
+            return now;
+        }
+        match self.pending.front() {
+            Some(r) => now.max(r.arrival),
+            None => now,
+        }
+    }
+
+    pub fn holds_prefix(&self, group: u32) -> bool {
+        self.prefix_cache.contains_key(&group)
+    }
+
+    /// The KV sequence holding `group`'s prefix blocks on this node.
+    pub fn prefix_seq(&self, group: u32) -> Option<SeqId> {
+        self.prefix_cache.get(&group).map(|e| e.seq)
+    }
+
+    pub fn kv_manager(&self) -> &KvOffloadManager {
+        &self.kv
+    }
+
+    pub fn config(&self) -> &SimEngineConfig {
+        &self.cfg
+    }
+
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    pub fn scheduler_name(&self) -> &'static str {
+        self.scheduler.name()
+    }
+
+    /// Completion records in finish order.
+    pub fn completions(&self) -> &[RequestOutcome] {
+        &self.completions
+    }
+
+    /// Engine iterations executed so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Admissions whose prefill reused the cached prefix KV.
+    pub fn prefix_hits(&self) -> u64 {
+        self.prefix_hits
+    }
+
+    /// Requests served to completion.
+    pub fn finished(&self) -> u64 {
+        self.completions.len() as u64
+    }
+
+    /// This stepper's co-tenant fleet counters, when one is attached.
+    pub fn tenant_stats(&self) -> Option<FleetStats> {
+        self.tenants.as_ref().map(|f| f.stats())
+    }
+
+    // -- prefix-cache migration (cluster spillover) ----------------------
+
+    /// Read out `group`'s blocks for a fabric migration: restore
+    /// residency (lease-addressed reloads for anything on a harvest
+    /// tier), then egress compute-GPU → host staging for the NIC.
+    /// Returns the token count, byte count and the virtual time the
+    /// payload is ready to leave.
+    pub fn export_prefix(&mut self, hr: &mut HarvestRuntime, group: u32) -> Option<(u32, u64, Ns)> {
+        let entry = *self.prefix_cache.get(&group)?;
+        let ready = self.kv.access_seq(hr, entry.seq);
+        let blocks = self.kv.table().seq_blocks(entry.seq).len() as u64;
+        let bytes = blocks * self.cfg.kv.block_bytes();
+        if bytes == 0 {
+            return Some((entry.tokens, 0, ready));
+        }
+        let report = Transfer::new()
+            .raw(DeviceId::Gpu(self.compute_gpu), DeviceId::Host, bytes)
+            .submit(hr)
+            .expect("raw transfer cannot go stale");
+        Some((entry.tokens, bytes, report.end.max(ready)))
+    }
+
+    /// Land a migrated prefix: build the group's blocks in this node's
+    /// KV manager and gate reuse on the later of `ready_at` (the fabric
+    /// delivery time) and the host-staging → HBM ingress completing on
+    /// the local PCIe link. (The ingress is scheduled when the migration
+    /// is decided rather than at NIC delivery — a deliberate
+    /// simplification that can occupy the link early; the *gate* is
+    /// never early, so reuse always pays both hops.)
+    pub fn install_prefix(&mut self, hr: &mut HarvestRuntime, group: u32, tokens: u32, ready_at: Ns) {
+        if self.prefix_cache.contains_key(&group) {
+            return;
+        }
+        let seq = self.build_prefix(hr, group, tokens);
+        let blocks = self.kv.table().seq_blocks(seq).len() as u64;
+        let bytes = blocks * self.cfg.kv.block_bytes();
+        let mut gate = ready_at;
+        if bytes > 0 {
+            let ingress = Transfer::new()
+                .raw(DeviceId::Host, DeviceId::Gpu(self.compute_gpu), bytes)
+                .submit(hr)
+                .expect("raw transfer cannot go stale");
+            gate = gate.max(ingress.end);
+        }
+        if let Some(e) = self.prefix_cache.get_mut(&group) {
+            e.ready_at = gate;
+        }
+    }
+
+    /// Create the prefix sequence and append its tokens (no compute is
+    /// charged here — the caller accounts prefill or fabric time).
+    fn build_prefix(&mut self, hr: &mut HarvestRuntime, group: u32, tokens: u32) -> SeqId {
+        let seq = SeqId(PREFIX_SEQ_BASE + self.next_prefix_seq);
+        self.next_prefix_seq += 1;
+        let bt = self.cfg.kv.block_tokens as usize;
+        self.kv.reserve_local(hr, (tokens as usize).div_ceil(bt));
+        for _ in 0..tokens {
+            self.kv.append_token(hr, seq);
+        }
+        self.prefix_cache
+            .insert(group, PrefixEntry { seq, tokens, ready_at: hr.node.clock.now() });
+        seq
+    }
+
+    // -- the step body ---------------------------------------------------
+
+    /// Admission + prefill for every arrived request that fits. The
+    /// admission cutoff is the *rolling* clock: a request arriving while
+    /// an earlier admission's prefill advanced time joins the same
+    /// admission round instead of waiting a full decode step.
+    fn admit_ready(&mut self, hr: &mut HarvestRuntime) {
+        while self.live.len() < self.cfg.max_running {
+            let Some(front) = self.pending.front() else { break };
+            if front.arrival > hr.node.clock.now() {
+                break;
+            }
+            let mut req = self.pending.pop_front().expect("checked front");
+            self.prefill(hr, &mut req);
+            self.scheduler.admit(req.id);
+            self.live.insert(req.id, req);
+        }
+    }
+
+    /// Prefill one request. A cached prefix group shrinks the prefill to
+    /// the unshared suffix (the affinity win); reuse waits for the
+    /// prefix's `ready_at` when its blocks are still in flight over the
+    /// node fabric — the wait overlaps the suffix prefill.
+    fn prefill(&mut self, hr: &mut HarvestRuntime, req: &mut Request) {
+        let (cached, gate) = match req.prefix_group.and_then(|g| self.prefix_cache.get(&g)) {
+            Some(e) => (e.tokens.min(req.shared_prefix_tokens), e.ready_at),
+            None => (0, 0),
+        };
+        if cached > 0 {
+            self.prefix_hits += 1;
+        }
+        let fresh = req.prompt_tokens - cached;
+        let prefill_ns = self.cfg.prefill_ns_per_token * fresh as u64;
+        let target = hr.node.clock.now() + prefill_ns;
+        self.advance(hr, target);
+        self.advance(hr, gate);
+        let bt = self.cfg.kv.block_tokens as usize;
+        // Vectored admission: free the suffix's block footprint in one
+        // all-or-nothing batch instead of evicting per token.
+        self.kv.reserve_local(hr, (fresh as usize).div_ceil(bt));
+        for _ in 0..fresh {
+            self.kv.append_token(hr, req.id);
+        }
+        if cached == 0 && req.shared_prefix_tokens > 0 {
+            if let Some(g) = req.prefix_group {
+                // First request of the group on this node: its prefill
+                // (charged above, full-length) built the prefix KV —
+                // retain it as the group cache.
+                self.build_prefix(hr, g, req.shared_prefix_tokens);
+            }
+        }
+        req.first_token_at = Some(hr.node.clock.now());
+        self.metrics.on_first_token(req.arrival, hr.node.clock.now());
+    }
+
+    /// Run one engine iteration (see the module docs for the pipeline).
+    /// Progress is guaranteed whenever [`NodeStepper::has_work`]: an
+    /// idle stepper jumps to its next arrival and admits it; a busy one
+    /// decodes a token per cohort member.
+    pub fn step(&mut self, hr: &mut HarvestRuntime) {
+        // Idle: jump to the next arrival.
+        if self.live.is_empty() {
+            if let Some(at) = self.pending.front().map(|r| r.arrival) {
+                let target = at.max(hr.node.clock.now());
+                self.advance(hr, target);
+            }
+        }
+        self.admit_ready(hr);
+        self.scheduler.select_into(self.cfg.decode_slots, &mut self.cohort);
+        if self.cohort.is_empty() {
+            return;
+        }
+        self.steps += 1;
+        let step_start = hr.node.clock.now();
+        // Tick boundary: fold in revocations accumulated while time
+        // advanced, then run the idle-aging ladder at its cadence.
+        self.kv.sync(hr);
+        if let Some(a) = self.cfg.aging {
+            if step_start >= self.next_sweep {
+                self.kv.age_idle_blocks(hr, a.idle_ns, a.ratio_pct);
+                self.next_sweep = step_start + a.sweep_ns;
+            }
+        }
+        // Restore residency — the prefix blocks decode attends over,
+        // then the cohort's own blocks (this is where preemption and
+        // offload churn cost).
+        self.groups.clear();
+        for i in 0..self.cohort.len() {
+            let seq = self.cohort[i];
+            let Some(g) = self.live.get(&seq).and_then(|r| r.prefix_group) else { continue };
+            if self.groups.contains(&g) {
+                continue;
+            }
+            self.groups.push(g);
+            if let Some(pseq) = self.prefix_cache.get(&g).map(|e| e.seq) {
+                self.kv.access_seq(hr, pseq);
+            }
+        }
+        for i in 0..self.cohort.len() {
+            let seq = self.cohort[i];
+            self.kv.access_seq(hr, seq);
+        }
+        // Everything between step_start and here was waiting on KV
+        // residency, not computing.
+        self.metrics.on_stall(hr.node.clock.now() - step_start);
+        // Overlap: while this step's compute runs, issue background
+        // reloads for the sequences the scheduler predicts will decode
+        // next. The deadline is the start of the next step — the
+        // planner guarantees prefetch DMA is off every link again by
+        // the time demand fetches can reappear. Predicted blocks stuck
+        // on the host/CXL tiers are promoted toward peer HBM in the
+        // same window, so their eventual reload rides NVLink instead of
+        // PCIe.
+        if let Some(pcfg) = self.cfg.prefetch {
+            self.scheduler.lookahead_into(
+                self.cfg.decode_slots,
+                pcfg.horizon,
+                &mut self.predicted,
+            );
+            let deadline = hr.node.clock.now() + self.cfg.step_compute_ns;
+            self.kv.prefetch_seqs(hr, &self.predicted, deadline);
+            self.kv.promote_blocks(hr, &self.predicted, deadline);
+        }
+        // Batched compute.
+        let compute_end = hr.node.clock.now() + self.cfg.step_compute_ns;
+        Self::advance_time(&mut self.tenants, hr, compute_end);
+        let step_ns = hr.node.clock.now() - step_start;
+        for i in 0..self.cohort.len() {
+            let seq = self.cohort[i];
+            self.kv.append_token(hr, seq);
+            let now = hr.node.clock.now();
+            let req = self.live.get_mut(&seq).expect("scheduled request is live");
+            req.generated += 1;
+            self.metrics.on_token(step_ns);
+            if req.done() {
+                req.finished_at = Some(now);
+                let outcome = RequestOutcome {
+                    id: req.id,
+                    arrival: req.arrival,
+                    first_token_at: req.first_token_at.unwrap_or(now),
+                    finished_at: now,
+                    generated: req.generated,
+                };
+                self.metrics.on_finish(outcome.arrival, now);
+                self.scheduler.retire(seq);
+                self.kv.finish_seq(hr, seq);
+                self.live.remove(&seq);
+                self.completions.push(outcome);
+            }
+        }
+    }
+
+    /// Finalize metrics at end of run (attach the prefetch ledger).
+    pub fn finalize(&mut self) {
+        self.metrics.prefetch = self.kv.prefetch_stats().cloned();
+    }
+}

@@ -1,0 +1,347 @@
+//! Differential equivalence: one stepper, proven diverge-proof.
+//!
+//! The serving loop body exists exactly once (`server/stepper.rs`);
+//! `SimEngine::run` drives it to completion and a 1-node `Cluster::run`
+//! drives it through the event calendar. These tests pin the two paths
+//! to *bit-for-bit* identical results — per-request completion times,
+//! KV counter ledgers (reloads, recomputes, promotions, ...), and
+//! per-tier byte ledgers — across router policies, schedulers, shared
+//! prefixes, co-tenant fleets, prefetch and idle-aging.
+//!
+//! Also here: same-seed determinism of the calendar path, and a golden
+//! trace for one canonical 4-node workload so stepper edits that shift
+//! event ordering fail loudly. The golden file blesses itself on first
+//! run (it is committed as `{"unblessed": true}` because goldens cannot
+//! be hand-computed); once blessed, any drift is a hard failure.
+
+use harvest::cluster::{Cluster, ClusterReport, ClusterSpec, RouterPolicy, SchedulerSpec, TierLedger};
+use harvest::harvest::{HarvestConfig, HarvestRuntime, PrefetchConfig};
+use harvest::kv::{KvConfig, KvStats};
+use harvest::memsim::{NodeSpec, SimNode};
+use harvest::moe::find_kv_model;
+use harvest::server::{
+    AgingConfig, RequestOutcome, SimEngine, SimEngineConfig, WorkloadGen, WorkloadSpec,
+};
+use harvest::tenantsim::{TenantFleet, TenantMix};
+use harvest::util::json::{obj, Json};
+
+fn kv_cfg(cap_blocks: usize) -> KvConfig {
+    KvConfig {
+        model: find_kv_model("deepseek").unwrap(),
+        block_tokens: 16,
+        local_capacity_blocks: cap_blocks,
+        use_harvest: true,
+        host_backed_peer: false,
+    }
+}
+
+fn tenant_mix() -> TenantMix {
+    TenantMix { enabled: true, training: 1, inference: 1, batch: 1, ..Default::default() }
+}
+
+/// Everything the two paths must agree on, bit for bit.
+#[derive(Debug, PartialEq)]
+struct Trace {
+    completions: Vec<RequestOutcome>,
+    kv_stats: KvStats,
+    ledger: TierLedger,
+    steps: u64,
+    prefix_hits: u64,
+    decode_stall_ns: u64,
+    tokens_generated: u64,
+}
+
+fn sim_side(
+    engine: SimEngineConfig,
+    sched: SchedulerSpec,
+    spec: WorkloadSpec,
+    mix: Option<&TenantMix>,
+) -> Trace {
+    let node = NodeSpec::h100x2();
+    let n_gpus = node.gpus.len();
+    let hbm = node.gpus.first().map(|g| g.hbm_bytes).unwrap_or(0);
+    let mut hr = HarvestRuntime::new(SimNode::new(node), HarvestConfig::for_node(2));
+    let mut eng = SimEngine::new(engine, sched.build(), 0);
+    if let Some(m) = mix {
+        // Mirror `Cluster::new` exactly: node 0's fleet is salted with
+        // its node id (0) and dropped when empty.
+        let fleet = TenantFleet::from_mix(m, n_gpus, hbm, 0);
+        if !fleet.is_empty() {
+            eng = eng.with_tenants(fleet);
+        }
+    }
+    let report = eng.run(&mut hr, WorkloadGen::new(spec).generate());
+    Trace {
+        completions: report.completions,
+        kv_stats: report.kv_stats,
+        ledger: TierLedger::snapshot(&hr),
+        steps: report.steps,
+        prefix_hits: eng.stepper().prefix_hits(),
+        decode_stall_ns: report.metrics.decode_stall_ns,
+        tokens_generated: report.metrics.tokens_generated,
+    }
+}
+
+fn cluster_side(
+    engine: SimEngineConfig,
+    sched: SchedulerSpec,
+    spec: WorkloadSpec,
+    policy: RouterPolicy,
+    mix: Option<&TenantMix>,
+) -> Trace {
+    let mut cspec = ClusterSpec::new(1);
+    cspec.router = policy;
+    cspec.tenants = mix.cloned();
+    let mut cluster = Cluster::new(&cspec, engine, sched);
+    let report = cluster.run(WorkloadGen::new(spec).generate());
+    assert_eq!(report.stats.shed, 0, "1-node default spec must not shed");
+    let n = &report.per_node[0];
+    Trace {
+        completions: n.completions.clone(),
+        kv_stats: n.kv_stats.clone(),
+        ledger: n.ledger,
+        steps: n.steps,
+        prefix_hits: n.prefix_hits,
+        decode_stall_ns: n.metrics.decode_stall_ns,
+        tokens_generated: n.metrics.tokens_generated,
+    }
+}
+
+fn assert_equivalent(
+    label: &str,
+    engine: SimEngineConfig,
+    sched: SchedulerSpec,
+    spec: WorkloadSpec,
+    policy: RouterPolicy,
+    mix: Option<&TenantMix>,
+) {
+    let sim = sim_side(engine, sched, spec, mix);
+    let cluster = cluster_side(engine, sched, spec, policy, mix);
+    assert!(
+        !sim.completions.is_empty(),
+        "{label}: the case must actually serve requests"
+    );
+    assert_eq!(sim, cluster, "{label}: single-node cluster diverged from the bare engine");
+}
+
+fn burst_workload() -> WorkloadSpec {
+    WorkloadSpec {
+        n_requests: 20,
+        mean_prompt_tokens: 48.0,
+        max_new_tokens: 6,
+        mean_interarrival_ns: 0,
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+fn staggered_prefix_workload() -> WorkloadSpec {
+    WorkloadSpec {
+        n_requests: 24,
+        mean_prompt_tokens: 64.0,
+        max_new_tokens: 8,
+        mean_interarrival_ns: 1_000_000,
+        shared_prefix_fraction: 0.7,
+        shared_prefix_tokens: 32,
+        n_prefix_groups: 3,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+/// The satellite matrix: every router policy × both schedulers × both
+/// workload shapes, under memory pressure (tight pool → real harvest
+/// traffic on both paths).
+#[test]
+fn one_node_cluster_matches_engine_across_policies_and_schedulers() {
+    let engine = SimEngineConfig::new(kv_cfg(48), 4, 12);
+    for policy in
+        [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::PrefixAffinity]
+    {
+        for sched in [SchedulerSpec::Fcfs, SchedulerSpec::CompletelyFair { quantum: 1 }] {
+            for (wname, spec) in
+                [("burst", burst_workload()), ("staggered", staggered_prefix_workload())]
+            {
+                let label = format!("{:?}/{:?}/{wname}", policy, sched);
+                assert_equivalent(&label, engine, sched, spec, policy, None);
+            }
+        }
+    }
+}
+
+/// Co-tenant fleets ride the same time advances on both paths: the
+/// fleet is installed at t=0 and stepped inside the stepper, so tenant
+/// churn lands identically.
+#[test]
+fn one_node_cluster_matches_engine_with_tenants() {
+    let engine = SimEngineConfig::new(kv_cfg(64), 4, 12);
+    let mix = tenant_mix();
+    assert_equivalent(
+        "tenants/least-loaded/cf",
+        engine,
+        SchedulerSpec::CompletelyFair { quantum: 1 },
+        staggered_prefix_workload(),
+        RouterPolicy::LeastLoaded,
+        Some(&mix),
+    );
+    assert_equivalent(
+        "tenants/round-robin/fcfs",
+        engine,
+        SchedulerSpec::Fcfs,
+        burst_workload(),
+        RouterPolicy::RoundRobin,
+        Some(&mix),
+    );
+}
+
+/// Prefetch planning and host→peer promotion run inside the stepper —
+/// the overlap window and deadlines match on both paths.
+#[test]
+fn one_node_cluster_matches_engine_with_prefetch() {
+    let engine =
+        SimEngineConfig::new(kv_cfg(60), 8, 16).with_prefetch(PrefetchConfig::default());
+    assert_equivalent(
+        "prefetch/least-loaded/cf",
+        engine,
+        SchedulerSpec::CompletelyFair { quantum: 1 },
+        burst_workload(),
+        RouterPolicy::LeastLoaded,
+        None,
+    );
+}
+
+/// The idle-aging ladder ticks at the stepper's cadence — previously it
+/// was wired into *neither* loop (only the `tier_ladder` bench drove it
+/// by hand), so the two paths could never even agree on when blocks
+/// age. Now the cadence is part of the engine config.
+#[test]
+fn one_node_cluster_matches_engine_with_idle_aging() {
+    let engine = SimEngineConfig::new(kv_cfg(48), 4, 12).with_aging(AgingConfig::default());
+    assert_equivalent(
+        "aging/least-loaded/fcfs",
+        engine,
+        SchedulerSpec::Fcfs,
+        staggered_prefix_workload(),
+        RouterPolicy::LeastLoaded,
+        None,
+    );
+}
+
+// ---------------------------------------------------------------------
+// Determinism + golden trace (calendar path)
+// ---------------------------------------------------------------------
+
+fn canonical_4node() -> (ClusterSpec, SimEngineConfig, SchedulerSpec, WorkloadSpec) {
+    let mut spec = ClusterSpec::new(4);
+    spec.router = RouterPolicy::PrefixAffinity;
+    spec.spill_queue_depth = 2;
+    spec.tenants = Some(tenant_mix());
+    let engine = SimEngineConfig::new(kv_cfg(48), 4, 8).with_aging(AgingConfig::default());
+    let sched = SchedulerSpec::CompletelyFair { quantum: 1 };
+    let workload = WorkloadSpec {
+        n_requests: 32,
+        mean_prompt_tokens: 64.0,
+        max_new_tokens: 8,
+        mean_interarrival_ns: 500_000,
+        shared_prefix_fraction: 0.6,
+        shared_prefix_tokens: 32,
+        n_prefix_groups: 4,
+        seed: 42,
+        ..Default::default()
+    };
+    (spec, engine, sched, workload)
+}
+
+fn run_canonical() -> (ClusterReport, Vec<harvest::cluster::Dispatch>) {
+    let (spec, engine, sched, workload) = canonical_4node();
+    let mut cluster = Cluster::new(&spec, engine, sched);
+    let report = cluster.run(WorkloadGen::new(workload).generate());
+    (report, cluster.dispatch_log().to_vec())
+}
+
+/// Integer-only summary of a cluster run — stable across platforms, and
+/// sensitive to any shift in event ordering (completion times fold into
+/// a running hash).
+fn summarize(report: &ClusterReport) -> Json {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for n in &report.per_node {
+        for c in &n.completions {
+            for v in [c.id.0, c.arrival, c.first_token_at, c.finished_at, c.generated as u64] {
+                hash ^= v;
+                hash = hash.wrapping_mul(0x1000_0000_01b3);
+            }
+        }
+    }
+    let nodes: Vec<Json> = report
+        .per_node
+        .iter()
+        .map(|n| {
+            obj([
+                ("node", Json::from(n.node)),
+                ("routed", Json::from(n.routed)),
+                ("finished", Json::from(n.finished)),
+                ("steps", Json::from(n.steps)),
+                ("prefix_hits", Json::from(n.prefix_hits)),
+                ("reloads", Json::from(n.kv_stats.reloads())),
+                ("recomputes", Json::from(n.kv_stats.recomputes)),
+                ("ledger_peer", Json::from(n.ledger.peer)),
+                ("ledger_cxl", Json::from(n.ledger.cxl)),
+                ("ledger_host", Json::from(n.ledger.host)),
+                ("ledger_ssd", Json::from(n.ledger.ssd)),
+            ])
+        })
+        .collect();
+    obj([
+        ("requests_finished", Json::from(report.aggregate.requests_finished)),
+        ("tokens_generated", Json::from(report.aggregate.tokens_generated)),
+        ("makespan_ns", Json::from(report.aggregate.makespan_ns())),
+        ("routed", Json::from(report.stats.routed)),
+        ("shed", Json::from(report.stats.shed)),
+        ("prefix_migrations", Json::from(report.stats.prefix_migrations)),
+        ("migrated_bytes", Json::from(report.stats.migrated_bytes)),
+        ("fabric_bytes", Json::from(report.fabric_bytes)),
+        // Masked to 53 bits: util::json stores numbers as f64, and we
+        // want the golden file integer-exact.
+        ("completion_hash", Json::from(hash & ((1u64 << 53) - 1))),
+        ("per_node", Json::Arr(nodes)),
+    ])
+}
+
+/// Same seed → identical `ClusterReport`, twice over, including the
+/// calendar's full dispatch order.
+#[test]
+fn same_seed_same_report() {
+    let (a, da) = run_canonical();
+    let (b, db) = run_canonical();
+    assert_eq!(summarize(&a).to_string(), summarize(&b).to_string());
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    assert_eq!(da, db, "dispatch order must be deterministic");
+    for (x, y) in a.per_node.iter().zip(&b.per_node) {
+        assert_eq!(x.completions, y.completions);
+        assert_eq!(x.kv_stats, y.kv_stats);
+    }
+}
+
+/// Golden trace for the canonical 4-node workload. Committed unblessed
+/// (`{"unblessed": true}`); the first test run regenerates and blesses
+/// it in the working tree, after which any event-ordering drift fails
+/// against the blessed copy. Re-bless deliberately by resetting the
+/// file to `{"unblessed": true}`.
+#[test]
+fn golden_trace_4node() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/cluster_4node.json");
+    let (report, _) = run_canonical();
+    let got = summarize(&report).to_string();
+    let committed = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("golden file missing at {path}: {e}"));
+    if committed.contains("unblessed") {
+        std::fs::write(path, &got).expect("bless golden file");
+        return;
+    }
+    assert_eq!(
+        committed.trim(),
+        got,
+        "canonical 4-node trace drifted — if the change is intentional, reset \
+         {path} to {{\"unblessed\": true}} and re-run to re-bless"
+    );
+}

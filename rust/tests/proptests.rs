@@ -1599,3 +1599,274 @@ fn prop_cluster_conservation() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------
+// Cluster: event-calendar dispatch ordering
+// ---------------------------------------------------------------------
+
+/// The event calendar dispatches in nondecreasing virtual time with the
+/// laggard scan's exact tie rule (arrivals before node steps, lower
+/// node ids first), and lazy invalidation never surfaces a stale node
+/// entry. Checked two ways: directly against a shadow model of the heap
+/// under random interleavings, and end-to-end over [`Cluster::run`]'s
+/// dispatch log — times never decrease, every routed/shed dispatch
+/// lands exactly at its request's arrival time in arrival order, and no
+/// node ever steps past an arrival that is still waiting to be routed.
+#[test]
+fn prop_event_calendar_ordering() {
+    use harvest::cluster::{Event, EventCalendar};
+
+    check("event-calendar-model", 100, 0xCA1E17DA, |rng| {
+        let n_nodes = 1 + rng.below(6) as usize;
+        let mut cal = EventCalendar::new(n_nodes);
+        // Shadow model: the single live (time, gen) per node, plus the
+        // queued arrival times (only the head is ever heaped).
+        let mut live: Vec<Option<u64>> = vec![None; n_nodes];
+        let mut arrivals: std::collections::VecDeque<u64> = std::collections::VecDeque::new();
+        let mut t = 0u64;
+        for _ in 0..rng.below(8) + 1 {
+            t += rng.below(50);
+            arrivals.push_back(t);
+        }
+        if let Some(&head) = arrivals.front() {
+            cal.push_arrival(head);
+        }
+        let mut last = 0u64;
+        let mut clock = 0u64;
+        for _ in 0..400 {
+            let Some((at, ev)) = cal.pop() else { break };
+            if at < last {
+                return err(format!("pop went backwards: {at} < {last}"));
+            }
+            // Arrivals always beat node entries at equal times.
+            if let Event::NodeReady(_) = ev {
+                if arrivals.front().is_some_and(|&a| a <= at) {
+                    return err(format!(
+                        "node stepped at {at} past pending arrival {:?}",
+                        arrivals.front()
+                    ));
+                }
+            }
+            last = at;
+            clock = clock.max(at);
+            match ev {
+                Event::Arrival => {
+                    let Some(a) = arrivals.pop_front() else {
+                        return err("arrival popped with none queued".into());
+                    };
+                    if a != at {
+                        return err(format!("arrival dispatched at {at}, queued for {a}"));
+                    }
+                    if let Some(&next) = arrivals.front() {
+                        cal.push_arrival(next);
+                    }
+                    // Routing touches a random node: its pending entry
+                    // (if any) goes stale, replaced at >= now.
+                    let node = rng.below(n_nodes as u64) as usize;
+                    let ready = clock + rng.below(20);
+                    live[node] = Some(ready);
+                    cal.refresh_node(node, true, ready);
+                }
+                Event::NodeReady(n) => {
+                    match live[n] {
+                        Some(want) if want == at => {}
+                        other => {
+                            return err(format!(
+                                "stale entry surfaced: node {n} popped at {at}, model {other:?}"
+                            ));
+                        }
+                    }
+                    // Step the node forward; sometimes it drains.
+                    clock += 1 + rng.below(10);
+                    let still = rng.bool(0.7);
+                    live[n] = still.then_some(clock);
+                    cal.refresh_node(n, still, clock);
+                }
+            }
+        }
+        // Drained calendar means the model is drained too.
+        if cal.pop().is_none() && (!arrivals.is_empty() || live.iter().any(Option::is_some)) {
+            return err("calendar empty but model still has pending events".into());
+        }
+        Ok(())
+    });
+
+    use harvest::cluster::{Cluster, ClusterSpec, Dispatch, RouterPolicy, SchedulerSpec};
+    use harvest::server::SimEngineConfig;
+
+    check("cluster-dispatch-log", 16, 0xD15A7C4, |rng| {
+        let nodes = 1 + rng.below(4) as usize;
+        let mut spec = ClusterSpec::new(nodes);
+        spec.router = match rng.below(3) {
+            0 => RouterPolicy::RoundRobin,
+            1 => RouterPolicy::LeastLoaded,
+            _ => RouterPolicy::PrefixAffinity,
+        };
+        spec.spill_queue_depth = 1 + rng.below(6) as usize;
+        if rng.bool(0.3) {
+            spec.shed_queue_depth = 2 + rng.below(4) as usize;
+        }
+        let kv = KvConfig {
+            model: find_kv_model("deepseek").unwrap(),
+            block_tokens: 16,
+            local_capacity_blocks: 24 + rng.below(48) as usize,
+            use_harvest: true,
+            host_backed_peer: false,
+        };
+        let sched = if rng.bool(0.5) {
+            SchedulerSpec::Fcfs
+        } else {
+            SchedulerSpec::CompletelyFair { quantum: 1 }
+        };
+        let engine = SimEngineConfig::new(kv, 4, 8);
+        let n_requests = 8 + rng.below(16) as usize;
+        let reqs = WorkloadGen::new(WorkloadSpec {
+            n_requests,
+            mean_prompt_tokens: 48.0,
+            max_new_tokens: 4 + rng.below(6) as u32,
+            mean_interarrival_ns: if rng.bool(0.5) { 0 } else { 500_000 },
+            shared_prefix_fraction: if rng.bool(0.5) { 0.5 } else { 0.0 },
+            shared_prefix_tokens: 32,
+            n_prefix_groups: 2,
+            seed: rng.below(1 << 30),
+            ..Default::default()
+        })
+        .generate();
+        let mut arrival_times: Vec<u64> = reqs.iter().map(|r| r.arrival).collect();
+        arrival_times.sort_unstable();
+        let mut cluster = Cluster::new(&spec, engine, sched);
+        cluster.run(reqs);
+
+        let log = cluster.dispatch_log();
+        if log.is_empty() {
+            return err("empty dispatch log".into());
+        }
+        let mut last = 0u64;
+        let mut consumed = 0usize;
+        for d in log {
+            let at = d.at();
+            if at < last {
+                return err(format!("dispatch time decreased: {at} < {last} ({d:?})"));
+            }
+            last = at;
+            match *d {
+                Dispatch::Route { at, .. } | Dispatch::Shed { at } => {
+                    // Arrivals dispatch in arrival order, at their own
+                    // arrival time.
+                    if consumed >= arrival_times.len() {
+                        return err("more route/shed dispatches than arrivals".into());
+                    }
+                    if arrival_times[consumed] != at {
+                        return err(format!(
+                            "arrival #{consumed} dispatched at {at}, arrived at {}",
+                            arrival_times[consumed]
+                        ));
+                    }
+                    consumed += 1;
+                }
+                Dispatch::Step { at, node } => {
+                    if node >= nodes {
+                        return err(format!("step on unknown node {node}"));
+                    }
+                    // No node steps past a pending earlier arrival.
+                    if consumed < arrival_times.len() && arrival_times[consumed] < at {
+                        return err(format!(
+                            "node {node} stepped at {at} past pending arrival {}",
+                            arrival_times[consumed]
+                        ));
+                    }
+                }
+            }
+        }
+        if consumed != arrival_times.len() {
+            return err(format!("{consumed}/{} arrivals dispatched", arrival_times.len()));
+        }
+        Ok(())
+    });
+}
+
+/// Randomized differential: a 1-node cluster run and a bare engine run
+/// are bit-for-bit identical — completions, KV counters, tier ledger,
+/// step count — across random pools, schedulers, policies and
+/// workloads. (The curated matrix lives in `tests/differential.rs`;
+/// this is the fuzzed version.)
+#[test]
+fn prop_single_node_cluster_matches_engine() {
+    use harvest::cluster::{Cluster, ClusterSpec, RouterPolicy, SchedulerSpec, TierLedger};
+    use harvest::server::{SimEngine, SimEngineConfig};
+
+    check("single-node-differential", 20, 0xD1FF, |rng| {
+        let kv = KvConfig {
+            model: find_kv_model("deepseek").unwrap(),
+            block_tokens: 16,
+            local_capacity_blocks: 24 + rng.below(64) as usize,
+            use_harvest: true,
+            host_backed_peer: false,
+        };
+        let sched = if rng.bool(0.5) {
+            SchedulerSpec::Fcfs
+        } else {
+            SchedulerSpec::CompletelyFair { quantum: 1 + rng.below(2) as u32 }
+        };
+        let engine =
+            SimEngineConfig::new(kv, 2 + rng.below(6) as usize, 4 + rng.below(10) as usize);
+        let spec = WorkloadSpec {
+            n_requests: 8 + rng.below(20) as usize,
+            mean_prompt_tokens: 48.0 + rng.below(48) as f64,
+            max_new_tokens: 3 + rng.below(8) as u32,
+            mean_interarrival_ns: if rng.bool(0.5) { 0 } else { 750_000 },
+            shared_prefix_fraction: if rng.bool(0.5) { 0.6 } else { 0.0 },
+            shared_prefix_tokens: 32,
+            n_prefix_groups: 1 + rng.below(3) as usize,
+            seed: rng.below(1 << 30),
+            ..Default::default()
+        };
+
+        let mut hr =
+            HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+        let mut eng = SimEngine::new(engine, sched.build(), 0);
+        let sim = eng.run(&mut hr, WorkloadGen::new(spec).generate());
+        let sim_ledger = TierLedger::snapshot(&hr);
+
+        let mut cspec = ClusterSpec::new(1);
+        cspec.router = match rng.below(3) {
+            0 => RouterPolicy::RoundRobin,
+            1 => RouterPolicy::LeastLoaded,
+            _ => RouterPolicy::PrefixAffinity,
+        };
+        let mut cluster = Cluster::new(&cspec, engine, sched);
+        let report = cluster.run(WorkloadGen::new(spec).generate());
+        let node = &report.per_node[0];
+
+        if sim.completions != node.completions {
+            return err(format!(
+                "completions diverged: sim {} vs cluster {} entries",
+                sim.completions.len(),
+                node.completions.len()
+            ));
+        }
+        if sim.kv_stats != node.kv_stats {
+            return err(format!(
+                "kv stats diverged:\n  sim     {:?}\n  cluster {:?}",
+                sim.kv_stats, node.kv_stats
+            ));
+        }
+        if sim_ledger != node.ledger {
+            return err(format!(
+                "tier ledger diverged: sim {sim_ledger:?} vs cluster {:?}",
+                node.ledger
+            ));
+        }
+        if sim.steps != node.steps {
+            return err(format!("step counts diverged: {} vs {}", sim.steps, node.steps));
+        }
+        if sim.metrics.makespan_ns() != report.aggregate.makespan_ns() {
+            return err(format!(
+                "makespan diverged: {} vs {}",
+                sim.metrics.makespan_ns(),
+                report.aggregate.makespan_ns()
+            ));
+        }
+        Ok(())
+    });
+}
