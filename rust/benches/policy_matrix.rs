@@ -1,0 +1,161 @@
+//! Policy matrix: placement policy × router policy shootout under
+//! heterogeneous co-tenant pressure.
+//!
+//! One 4-node fleet where nodes 2 and 3 run batch-heavy tenant fleets
+//! (their harvestable pools churn; nodes 0 and 1 stay quiet), serving a
+//! shared-prefix session workload. Every cell of the matrix runs the
+//! same workload through a different (placement, router) pair:
+//!
+//! * placement decides *where inside a node* harvested KV segments go
+//!   ([`PlacementSpec`]: best-fit / first-available / stability /
+//!   interference);
+//! * the router decides *which node* serves each request — including
+//!   `harvest-priced`, which scores nodes by priced harvestable
+//!   capacity (tier-discounted, churn-discounted) rather than by raw
+//!   queue depth.
+//!
+//! The interesting diagonal: stability-aware placement plus
+//! harvest-priced routing should steer work away from the churning
+//! nodes *and* keep what lands there on stable devices, showing up as
+//! lower p99 TTFT at equal goodput.
+//!
+//! A machine-readable summary is written to `BENCH_policy_matrix.json`
+//! (one record per matrix cell, see `util::bench::JsonReport`).
+//!
+//! Run: `cargo bench --bench policy_matrix` (`-- --smoke` for the CI
+//! short run).
+
+use harvest::cluster::{Cluster, ClusterReport, ClusterSpec, RouterPolicy, SchedulerSpec};
+use harvest::harvest::PlacementSpec;
+use harvest::kv::KvConfig;
+use harvest::moe::find_kv_model;
+use harvest::server::{SimEngineConfig, WorkloadGen, WorkloadSpec};
+use harvest::tenantsim::TenantMix;
+use harvest::util::bench::{JsonReport, Table};
+use harvest::util::fmt_ns;
+use harvest::util::json::{obj, Json};
+
+fn engine() -> SimEngineConfig {
+    let kv = KvConfig {
+        model: find_kv_model("deepseek").unwrap(),
+        block_tokens: 16,
+        local_capacity_blocks: 64,
+        use_harvest: true,
+        host_backed_peer: false,
+    };
+    SimEngineConfig::new(kv, 4, 8)
+}
+
+/// Batch-heavy mix for the churning half of the fleet: one big batch
+/// job per node, salted per node so the churn phases differ.
+fn churn_mix(node: usize) -> TenantMix {
+    TenantMix {
+        enabled: true,
+        training: 0,
+        inference: 0,
+        batch: 1,
+        batch_gib: 76,
+        seed: 3 + node as u64,
+        ..Default::default()
+    }
+}
+
+fn run(placement: PlacementSpec, router: RouterPolicy, spec: WorkloadSpec) -> ClusterReport {
+    let mut cspec = ClusterSpec::new(4);
+    cspec.router = router;
+    cspec.placement = placement;
+    cspec.harvest.demote_to_host = true;
+    cspec.tenant_overrides.insert(2, churn_mix(2));
+    cspec.tenant_overrides.insert(3, churn_mix(3));
+    let mut cluster = Cluster::new(&cspec, engine(), SchedulerSpec::CompletelyFair { quantum: 1 });
+    cluster.run(WorkloadGen::new(spec).generate())
+}
+
+fn cell_json(placement: PlacementSpec, router: RouterPolicy, r: &ClusterReport) -> Json {
+    let quiet_routed = r.per_node[0].routed + r.per_node[1].routed;
+    obj([
+        ("placement", Json::from(placement.name())),
+        ("router", Json::from(router.name())),
+        ("goodput_tok_s", Json::from(r.aggregate.goodput_tok_s())),
+        ("ttft_p50_ns", Json::from(r.aggregate.ttft.percentile(50.0))),
+        ("ttft_p99_ns", Json::from(r.aggregate.ttft.percentile(99.0))),
+        ("requests_finished", Json::from(r.aggregate.requests_finished)),
+        ("quiet_node_routed", Json::from(quiet_routed)),
+        ("churn_node_routed", Json::from(r.stats.routed - quiet_routed)),
+        ("prefix_migrations", Json::from(r.stats.prefix_migrations)),
+        ("fabric_bytes", Json::from(r.fabric_bytes)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n = if smoke { 48 } else { 192 };
+    let mut json = JsonReport::new("BENCH_policy_matrix.json");
+
+    let sessions = WorkloadSpec {
+        n_requests: n,
+        mean_prompt_tokens: 96.0,
+        max_new_tokens: 12,
+        mean_interarrival_ns: 800_000,
+        shared_prefix_fraction: 0.6,
+        shared_prefix_tokens: 32,
+        n_prefix_groups: 6,
+        seed: 17,
+        ..Default::default()
+    };
+
+    println!(
+        "policy matrix — 4 nodes, nodes 2+3 under batch-tenant churn, {n} session requests\n"
+    );
+    let placements = [
+        PlacementSpec::BestFit,
+        PlacementSpec::FirstAvailable,
+        PlacementSpec::StabilityAware,
+        PlacementSpec::parse("interference").unwrap(),
+    ];
+    let routers =
+        [RouterPolicy::LeastLoaded, RouterPolicy::PrefixAffinity, RouterPolicy::HarvestPriced];
+
+    let t = Table::new(&[16, 14, 12, 12, 12, 12]);
+    t.row(&[
+        "PLACEMENT".into(),
+        "ROUTER".into(),
+        "GOODPUT".into(),
+        "TTFT P50".into(),
+        "TTFT P99".into(),
+        "QUIET%".into(),
+    ]);
+    t.sep();
+    for placement in placements {
+        for router in routers {
+            let r = run(placement, router, sessions);
+            assert_eq!(
+                r.aggregate.requests_finished, n as u64,
+                "no admission controller armed — the matrix must serve everything"
+            );
+            let quiet = r.per_node[0].routed + r.per_node[1].routed;
+            t.row(&[
+                placement.name().into(),
+                router.name().into(),
+                format!("{:.0}", r.aggregate.goodput_tok_s()),
+                fmt_ns(r.aggregate.ttft.percentile(50.0) as u64),
+                fmt_ns(r.aggregate.ttft.percentile(99.0) as u64),
+                format!("{:.0}%", 100.0 * quiet as f64 / r.stats.routed.max(1) as f64),
+            ]);
+            let key = format!("{}__{}", placement.name(), router.name());
+            json.add(&key, cell_json(placement, router, &r));
+        }
+        t.sep();
+    }
+
+    match json.write() {
+        Ok(()) => println!("wrote {}", json.path().display()),
+        Err(e) => println!("could not write {}: {e}", json.path().display()),
+    }
+    println!(
+        "\ntakeaway: harvest-priced routing shifts load onto the quiet half of the\n\
+         fleet (QUIET% up vs least-loaded) because churning nodes price their\n\
+         harvestable capacity down; placement then decides how well the work that\n\
+         does land on a churning node survives its demotions."
+    );
+}

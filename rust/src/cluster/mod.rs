@@ -56,7 +56,8 @@ pub use calendar::{Event, EventCalendar};
 pub use node::{ClusterNode, NodeReport, SchedulerSpec};
 pub use router::{NodeView, RouteDecision, Router, RouterPolicy};
 
-use crate::harvest::{HarvestConfig, HarvestRuntime};
+use crate::control::AdmissionPolicy;
+use crate::harvest::{HarvestConfig, HarvestRuntime, PlacementSpec};
 use crate::kv::SeqId;
 use crate::memsim::{NodeFabric, NodeFabricKind, NodeSpec, Ns, SimNode};
 use crate::server::{Request, ServeMetrics, SimEngineConfig};
@@ -143,7 +144,18 @@ pub struct ClusterSpec {
     pub spill_queue_depth: usize,
     /// Per-node queue depth at which a node stops accepting; when every
     /// node is there, arrivals are shed.
+    ///
+    /// **Deprecated shim** — the static spelling of what
+    /// [`ClusterSpec::admission`] now controls. Honored only while
+    /// `admission` is left at its default; see
+    /// [`ClusterSpec::effective_admission`].
     pub shed_queue_depth: usize,
+    /// Admission policy every node runs: the legacy static queue-depth
+    /// gate, or the SLO control plane
+    /// ([`crate::control::AdmissionController`]).
+    pub admission: AdmissionPolicy,
+    /// Harvest placement policy every node's runtime uses.
+    pub placement: PlacementSpec,
     /// Co-tenant mix every node runs (None = no closed-loop tenants).
     pub tenants: Option<TenantMix>,
     /// Per-node mix overrides (node id → mix) on top of `tenants` —
@@ -164,8 +176,23 @@ impl ClusterSpec {
             router: RouterPolicy::default(),
             spill_queue_depth: 16,
             shed_queue_depth: usize::MAX,
+            admission: AdmissionPolicy::default(),
+            placement: PlacementSpec::default(),
             tenants: None,
             tenant_overrides: BTreeMap::new(),
+        }
+    }
+
+    /// The admission policy the cluster actually runs: `admission`,
+    /// except that a default (never-shed static) policy inherits the
+    /// legacy `shed_queue_depth` knob — so old specs that only set
+    /// `shed_queue_depth` keep working bit-for-bit.
+    pub fn effective_admission(&self) -> AdmissionPolicy {
+        match self.admission {
+            AdmissionPolicy::StaticDepth { shed_queue_depth } if shed_queue_depth == usize::MAX => {
+                AdmissionPolicy::StaticDepth { shed_queue_depth: self.shed_queue_depth }
+            }
+            other => other,
         }
     }
 
@@ -180,8 +207,12 @@ impl ClusterSpec {
 pub struct ClusterStats {
     /// Requests assigned to a node.
     pub routed: u64,
-    /// Requests rejected because every node was saturated.
+    /// Requests rejected at the router because every node was saturated
+    /// (static admission only — the SLO control plane sheds at nodes).
     pub shed: u64,
+    /// Requests shed *after* routing by per-node admission controllers
+    /// (SLO admission only; filled in at report time).
+    pub node_shed: u64,
     /// Prefix-KV spillover migrations performed over the node fabric.
     pub prefix_migrations: u64,
     /// Bytes those migrations moved node-to-node.
@@ -227,6 +258,7 @@ impl ClusterReport {
                 o.insert("finished".into(), Json::from(n.finished));
                 o.insert("prefix_hits".into(), Json::from(n.prefix_hits));
                 o.insert("kv_reloads".into(), Json::from(n.kv_stats.reloads()));
+                o.insert("sheds".into(), Json::from(n.sheds));
                 Json::Obj(o)
             })
             .collect();
@@ -235,6 +267,7 @@ impl ClusterReport {
             ("nodes", Json::from(self.per_node.len())),
             ("routed", Json::from(self.stats.routed)),
             ("shed", Json::from(self.stats.shed)),
+            ("node_shed", Json::from(self.stats.node_shed)),
             ("prefix_migrations", Json::from(self.stats.prefix_migrations)),
             ("migrated_bytes", Json::from(self.stats.migrated_bytes)),
             ("fabric_bytes", Json::from(self.fabric_bytes)),
@@ -263,6 +296,15 @@ impl Cluster {
         assert!(spec.nodes >= 1, "a cluster needs at least one node");
         let n_gpus = spec.node.gpus.len();
         let hbm_bytes = spec.node.gpus.first().map(|g| g.hbm_bytes).unwrap_or(0);
+        let admission = spec.effective_admission();
+        // SLO admission lives in the node steppers (the router only
+        // steers toward accepting nodes); under static admission the
+        // engine config passes through untouched (callers may still arm
+        // a controller directly, as the differential tests do).
+        let mut engine = engine;
+        if let Some(acfg) = admission.admission_config() {
+            engine.admission = Some(acfg);
+        }
         let nodes = (0..spec.nodes)
             .map(|id| {
                 // Per-node fleet, seeded with the node id so one mix
@@ -274,6 +316,7 @@ impl Cluster {
                     id,
                     SimNode::new(spec.node.clone()),
                     spec.harvest.clone(),
+                    spec.placement,
                     engine,
                     sched,
                     fleet.filter(|f| !f.is_empty()),
@@ -283,7 +326,7 @@ impl Cluster {
         Self {
             nodes,
             fabric: NodeFabric::new(spec.nodes, spec.fabric),
-            router: Router::new(spec.router, spec.spill_queue_depth, spec.shed_queue_depth),
+            router: Router::with_admission(spec.router, spec.spill_queue_depth, admission),
             stats: ClusterStats::default(),
             assignments: BTreeMap::new(),
             shed: Vec::new(),
@@ -412,14 +455,16 @@ impl Cluster {
         let per_node: Vec<NodeReport> = self.nodes.iter().map(|n| n.report()).collect();
         let mut aggregate = ServeMetrics::new();
         let mut ledger = TierLedger::default();
+        let mut stats = self.stats.clone();
         for n in &per_node {
             aggregate.merge(&n.metrics);
             ledger.accumulate(&n.ledger);
+            stats.node_shed += n.sheds;
         }
         ClusterReport {
             per_node,
             aggregate,
-            stats: self.stats.clone(),
+            stats,
             fabric_bytes: self.fabric.total_bytes_moved(),
             assignments: self.assignments.clone(),
             shed: self.shed.clone(),

@@ -71,6 +71,8 @@ pub struct NodeReport {
     pub completions: Vec<RequestOutcome>,
     /// Engine iterations this node executed.
     pub steps: u64,
+    /// Requests this node's admission controller shed.
+    pub sheds: u64,
 }
 
 /// One simulated server of the cluster: an owned runtime plus the
@@ -87,11 +89,12 @@ impl ClusterNode {
         id: usize,
         node: SimNode,
         harvest: crate::harvest::HarvestConfig,
+        placement: crate::harvest::PlacementSpec,
         engine: SimEngineConfig,
         sched: SchedulerSpec,
         tenants: Option<TenantFleet>,
     ) -> Self {
-        let mut hr = HarvestRuntime::new(node, harvest);
+        let mut hr = HarvestRuntime::with_policy(node, harvest, placement.build());
         let mut stepper = NodeStepper::new(engine, sched.build(), 0);
         stepper.set_tenants(tenants);
         stepper.install(&mut hr);
@@ -148,21 +151,32 @@ impl ClusterNode {
     }
 
     /// Load snapshot for the router. `group` marks whose prefix
-    /// membership to report.
+    /// membership to report. Besides the load triple, the view carries
+    /// the control-plane signals harvest-priced routing consumes:
+    /// per-tier harvestable bytes, tenant-held bytes, occupancy, churn
+    /// counters, and the admission controller's accepting state.
     pub(crate) fn view(&self, group: Option<u32>) -> NodeView {
         let free_hbm =
             (0..self.hr.node.n_gpus()).map(|g| self.hr.node.harvestable_now(g)).sum();
         let cfg = self.stepper.config();
-        NodeView {
-            node: self.id,
-            queue_depth: self.queue_depth(),
-            free_local_blocks: cfg
-                .kv
-                .local_capacity_blocks
-                .saturating_sub(self.stepper.kv_manager().local_blocks()),
-            free_hbm_bytes: free_hbm,
-            has_prefix: group.is_some_and(|g| self.stepper.holds_prefix(g)),
-        }
+        let free_local_blocks = cfg
+            .kv
+            .local_capacity_blocks
+            .saturating_sub(self.stepper.kv_manager().local_blocks());
+        let now = self.hr.node.clock.now();
+        let mut v = NodeView::new(self.id, self.queue_depth(), free_local_blocks);
+        v.free_hbm_bytes = free_hbm;
+        v.has_prefix = group.is_some_and(|g| self.stepper.holds_prefix(g));
+        v.occupancy_pm = self.stepper.occupancy_pm();
+        v.tenant_held_bytes = self.hr.node.gpus.iter().map(|g| g.tenant_used_at(now)).sum();
+        v.harvest_host_bytes = self.hr.node.host.free_bytes();
+        v.harvest_cxl_bytes = self.hr.node.cxl.free_bytes();
+        v.harvest_ssd_bytes = self.hr.node.ssd.free_bytes();
+        v.sheds = self.stepper.shed_ids().len() as u64;
+        v.demotions = self.hr.demotions;
+        v.accepting = self.stepper.admission_accepting();
+        v.block_bytes = cfg.kv.block_bytes();
+        v
     }
 
     pub(crate) fn report(&self) -> NodeReport {
@@ -177,12 +191,23 @@ impl ClusterNode {
             tenant: self.stepper.tenant_stats(),
             completions: self.stepper.completions().to_vec(),
             steps: self.stepper.steps(),
+            sheds: self.stepper.shed_ids().len() as u64,
         }
     }
 
     /// This node's co-tenant fleet counters, when one is attached.
     pub fn tenant_stats(&self) -> Option<FleetStats> {
         self.stepper.tenant_stats()
+    }
+
+    /// Requests this node's admission controller shed, in decision order.
+    pub fn shed_ids(&self) -> &[SeqId] {
+        self.stepper.shed_ids()
+    }
+
+    /// The node stepper's admission-controller counters, when one runs.
+    pub fn admission_stats(&self) -> Option<crate::control::AdmissionStats> {
+        self.stepper.admission_stats()
     }
 
     // -- routing-side entry points ---------------------------------------

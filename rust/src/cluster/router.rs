@@ -3,21 +3,29 @@
 //! The router acts on a per-arrival snapshot of every node
 //! ([`NodeView`]) and never inspects node internals — exactly the
 //! information a production front-end would scrape (queue depth, free KV
-//! budget, harvestable HBM, prefix-cache membership). Three policies:
+//! budget, per-tier harvestable bytes, prefix-cache membership,
+//! admission state). Four policies:
 //!
 //! | policy | decision rule |
 //! |---|---|
 //! | [`RouterPolicy::RoundRobin`] | next node in id order, skipping shed-saturated nodes |
 //! | [`RouterPolicy::LeastLoaded`] | minimize queue depth relative to free KV budget (queue pressure × memory headroom) |
 //! | [`RouterPolicy::PrefixAffinity`] | the node already holding the request's shared-prefix KV; spills to the least-loaded node (migrating the prefix blocks over the node fabric) when the holder's queue exceeds the spill threshold; least-loaded for prefix-less requests |
+//! | [`RouterPolicy::HarvestPriced`] | maximize harvest-priced capacity per queued request: free KV blocks at full price plus per-tier harvestable bytes discounted by reload cost and demotion risk ([`crate::control::pricing`]) |
 //!
-//! Every policy sheds (rejects) a request when *all* nodes sit at or
-//! above the shed threshold — the admission-control half of the
+//! How a saturated cluster sheds depends on the
+//! [`AdmissionPolicy`](crate::control::AdmissionPolicy): under the
+//! legacy `StaticDepth` shim the *router* sheds when every node's queue
+//! sits at or above the threshold — the admission-control half of the
 //! queueing-stability picture ("A Queueing-Theoretic Framework for
-//! Stability Analysis of LLM Inference", PAPERS.md): unbounded queues
-//! under KV memory pressure destabilize every node at once, so the
-//! router bounds them cluster-wide.
+//! Stability Analysis of LLM Inference", PAPERS.md). Under
+//! `SloOccupancy` the router never sheds: it only *prefers* nodes whose
+//! admission controller is accepting, and each node's controller owns
+//! the admit/defer/shed decision (so shed accounting lives in exactly
+//! one place).
 
+use crate::control::pricing::{price_order, PricingWeights};
+use crate::control::AdmissionPolicy;
 use crate::server::Request;
 use std::cmp::Ordering;
 
@@ -32,6 +40,9 @@ pub enum RouterPolicy {
     /// Prefer the node holding the request's shared-prefix KV blocks;
     /// fall back to least-loaded (with prefix migration) under overload.
     PrefixAffinity,
+    /// Maximize harvest-priced capacity per queued request (free KV
+    /// blocks + tier-discounted harvestable bytes, churn-discounted).
+    HarvestPriced,
 }
 
 impl RouterPolicy {
@@ -41,8 +52,9 @@ impl RouterPolicy {
             "round-robin" | "rr" => Ok(RouterPolicy::RoundRobin),
             "least-loaded" | "ll" => Ok(RouterPolicy::LeastLoaded),
             "affinity" | "prefix-affinity" => Ok(RouterPolicy::PrefixAffinity),
+            "harvest-priced" | "priced" => Ok(RouterPolicy::HarvestPriced),
             other => anyhow::bail!(
-                "unknown router policy `{other}` (round-robin | least-loaded | affinity)"
+                "unknown router policy `{other}` (round-robin | least-loaded | affinity | harvest-priced)"
             ),
         }
     }
@@ -52,11 +64,16 @@ impl RouterPolicy {
             RouterPolicy::RoundRobin => "round-robin",
             RouterPolicy::LeastLoaded => "least-loaded",
             RouterPolicy::PrefixAffinity => "affinity",
+            RouterPolicy::HarvestPriced => "harvest-priced",
         }
     }
 }
 
 /// Per-node load snapshot the router decides on.
+///
+/// Construct with [`NodeView::new`] and fill in the enriched fields you
+/// have; the defaults (zero bytes everywhere, `accepting`) keep simple
+/// policies working without the control-plane signals.
 #[derive(Debug, Clone, Copy)]
 pub struct NodeView {
     pub node: usize,
@@ -68,6 +85,48 @@ pub struct NodeView {
     pub free_hbm_bytes: u64,
     /// Whether this node holds the arriving request's prefix-group KV.
     pub has_prefix: bool,
+    /// KV-block pool occupancy, per-mille.
+    pub occupancy_pm: u32,
+    /// Bytes currently held by co-located tenants across the node's GPUs.
+    pub tenant_held_bytes: u64,
+    /// Harvestable host-DRAM bytes.
+    pub harvest_host_bytes: u64,
+    /// Harvestable CXL-expander bytes.
+    pub harvest_cxl_bytes: u64,
+    /// Harvestable SSD bytes.
+    pub harvest_ssd_bytes: u64,
+    /// Requests this node's admission controller has shed so far.
+    pub sheds: u64,
+    /// Harvest-lease demotions this node has performed (tenant churn).
+    pub demotions: u64,
+    /// Whether the node's admission controller is below its high
+    /// watermark (always `true` for nodes without a controller).
+    pub accepting: bool,
+    /// Bytes per KV block (prices `free_local_blocks` against raw bytes).
+    pub block_bytes: u64,
+}
+
+impl NodeView {
+    /// A view with the load triple set and every enriched signal at its
+    /// neutral default (no harvestable bytes, no churn, accepting).
+    pub fn new(node: usize, queue_depth: usize, free_local_blocks: usize) -> Self {
+        Self {
+            node,
+            queue_depth,
+            free_local_blocks,
+            free_hbm_bytes: 0,
+            has_prefix: false,
+            occupancy_pm: 0,
+            tenant_held_bytes: 0,
+            harvest_host_bytes: 0,
+            harvest_cxl_bytes: 0,
+            harvest_ssd_bytes: 0,
+            sheds: 0,
+            demotions: 0,
+            accepting: true,
+            block_bytes: 0,
+        }
+    }
 }
 
 /// Outcome of routing one request.
@@ -101,25 +160,55 @@ pub struct Router {
     policy: RouterPolicy,
     /// Holder queue depth at which affinity routing spills elsewhere.
     spill_queue_depth: usize,
-    /// Per-node queue depth at which a node stops accepting; all nodes
-    /// there ⇒ shed.
-    shed_queue_depth: usize,
+    /// How saturation is decided (and who sheds): see module docs.
+    admission: AdmissionPolicy,
+    weights: PricingWeights,
     rr_next: usize,
 }
 
 impl Router {
+    /// Legacy constructor: static-depth admission (the `shed_queue_depth`
+    /// shim). Equivalent to [`Router::with_admission`] with
+    /// [`AdmissionPolicy::StaticDepth`].
     pub fn new(policy: RouterPolicy, spill_queue_depth: usize, shed_queue_depth: usize) -> Self {
-        Self { policy, spill_queue_depth: spill_queue_depth.max(1), shed_queue_depth, rr_next: 0 }
+        Self::with_admission(
+            policy,
+            spill_queue_depth,
+            AdmissionPolicy::StaticDepth { shed_queue_depth },
+        )
+    }
+
+    /// A router gated by the given admission policy.
+    pub fn with_admission(
+        policy: RouterPolicy,
+        spill_queue_depth: usize,
+        admission: AdmissionPolicy,
+    ) -> Self {
+        Self {
+            policy,
+            spill_queue_depth: spill_queue_depth.max(1),
+            admission,
+            weights: PricingWeights::default(),
+            rr_next: 0,
+        }
     }
 
     pub fn policy(&self) -> RouterPolicy {
         self.policy
     }
 
-    fn least_loaded(&self, views: &[NodeView]) -> Option<usize> {
+    /// Whether this node is open to new work under the admission policy.
+    fn node_open(&self, v: &NodeView) -> bool {
+        match self.admission {
+            AdmissionPolicy::StaticDepth { shed_queue_depth } => v.queue_depth < shed_queue_depth,
+            AdmissionPolicy::SloOccupancy(_) => v.accepting,
+        }
+    }
+
+    fn least_loaded(&self, views: &[NodeView], relaxed: bool) -> Option<usize> {
         views
             .iter()
-            .filter(|v| v.queue_depth < self.shed_queue_depth)
+            .filter(|v| relaxed || self.node_open(v))
             .min_by(|a, b| load_order(a, b))
             .map(|v| v.node)
     }
@@ -128,7 +217,12 @@ impl Router {
     /// [`NodeView`] per node, in node-id order).
     pub fn route(&mut self, req: &Request, views: &[NodeView]) -> RouteDecision {
         assert!(!views.is_empty(), "routing against an empty cluster");
-        if views.iter().all(|v| v.queue_depth >= self.shed_queue_depth) {
+        // `relaxed` means "ignore the per-node gate": set when no node
+        // is open. Static admission sheds at the router instead; the
+        // occupancy controller never sheds here — the chosen node's own
+        // controller will defer or shed with full local information.
+        let relaxed = !views.iter().any(|v| self.node_open(v));
+        if relaxed && matches!(self.admission, AdmissionPolicy::StaticDepth { .. }) {
             return RouteDecision::Shed;
         }
         match self.policy {
@@ -136,21 +230,31 @@ impl Router {
                 for _ in 0..views.len() {
                     let v = &views[self.rr_next % views.len()];
                     self.rr_next = (self.rr_next + 1) % views.len();
-                    if v.queue_depth < self.shed_queue_depth {
+                    if relaxed || self.node_open(v) {
                         return RouteDecision::Assign { node: v.node, migrate_prefix_from: None };
                     }
                 }
                 RouteDecision::Shed
             }
-            RouterPolicy::LeastLoaded => match self.least_loaded(views) {
+            RouterPolicy::LeastLoaded => match self.least_loaded(views, relaxed) {
                 Some(node) => RouteDecision::Assign { node, migrate_prefix_from: None },
                 None => RouteDecision::Shed,
             },
+            RouterPolicy::HarvestPriced => {
+                let best = views
+                    .iter()
+                    .filter(|v| relaxed || self.node_open(v))
+                    .min_by(|a, b| price_order(a, b, &self.weights));
+                match best {
+                    Some(v) => RouteDecision::Assign { node: v.node, migrate_prefix_from: None },
+                    None => RouteDecision::Shed,
+                }
+            }
             RouterPolicy::PrefixAffinity => {
                 let holder = req.prefix_group.and_then(|_| {
                     views
                         .iter()
-                        .filter(|v| v.has_prefix && v.queue_depth < self.shed_queue_depth)
+                        .filter(|v| v.has_prefix && (relaxed || self.node_open(v)))
                         .min_by(|a, b| load_order(a, b))
                 });
                 match holder {
@@ -160,7 +264,7 @@ impl Router {
                     Some(h) => {
                         // Holder overloaded: shed load to the least-loaded
                         // node and take the session's KV with it.
-                        match self.least_loaded(views) {
+                        match self.least_loaded(views, relaxed) {
                             Some(node) if node != h.node => RouteDecision::Assign {
                                 node,
                                 migrate_prefix_from: Some(h.node),
@@ -171,7 +275,7 @@ impl Router {
                             None => RouteDecision::Shed,
                         }
                     }
-                    None => match self.least_loaded(views) {
+                    None => match self.least_loaded(views, relaxed) {
                         Some(node) => RouteDecision::Assign { node, migrate_prefix_from: None },
                         None => RouteDecision::Shed,
                     },
@@ -184,6 +288,7 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::control::AdmissionConfig;
     use crate::kv::SeqId;
     use crate::server::RequestState;
 
@@ -203,13 +308,9 @@ mod tests {
     }
 
     fn view(node: usize, queue: usize, free: usize, has_prefix: bool) -> NodeView {
-        NodeView {
-            node,
-            queue_depth: queue,
-            free_local_blocks: free,
-            free_hbm_bytes: 0,
-            has_prefix,
-        }
+        let mut v = NodeView::new(node, queue, free);
+        v.has_prefix = has_prefix;
+        v
     }
 
     #[test]
@@ -273,9 +374,12 @@ mod tests {
 
     #[test]
     fn shed_when_every_node_saturated() {
-        for policy in
-            [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::PrefixAffinity]
-        {
+        for policy in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::PrefixAffinity,
+            RouterPolicy::HarvestPriced,
+        ] {
             let mut r = Router::new(policy, 4, 8);
             let views = vec![view(0, 8, 10, true), view(1, 9, 10, false)];
             assert_eq!(r.route(&req(Some(1)), &views), RouteDecision::Shed, "{policy:?}");
@@ -286,10 +390,60 @@ mod tests {
     }
 
     #[test]
+    fn harvest_priced_prefers_cheap_reloads() {
+        let mut r = Router::new(RouterPolicy::HarvestPriced, 4, usize::MAX);
+        // Equal queues and local pools; node 1 has host-harvestable
+        // bytes, node 0 only SSD — host wins on reload cost.
+        let mut v0 = view(0, 2, 10, false);
+        v0.block_bytes = 4096;
+        v0.harvest_ssd_bytes = 1 << 20;
+        let mut v1 = view(1, 2, 10, false);
+        v1.block_bytes = 4096;
+        v1.harvest_host_bytes = 1 << 20;
+        assert_eq!(
+            r.route(&req(None), &[v0, v1]),
+            RouteDecision::Assign { node: 1, migrate_prefix_from: None }
+        );
+        // Heavy demotion churn on node 1 discounts its harvest bytes
+        // below node 0's SSD bytes.
+        v1.demotions = 100_000;
+        assert_eq!(
+            r.route(&req(None), &[v0, v1]),
+            RouteDecision::Assign { node: 0, migrate_prefix_from: None }
+        );
+    }
+
+    #[test]
+    fn occupancy_admission_prefers_accepting_but_never_sheds() {
+        let admission = AdmissionPolicy::SloOccupancy(AdmissionConfig::default());
+        let mut r = Router::with_admission(RouterPolicy::LeastLoaded, 4, admission);
+        // Node 0 is the load-order winner but its controller is
+        // pressured: route to the accepting node 1.
+        let mut v0 = view(0, 0, 50, false);
+        v0.accepting = false;
+        let v1 = view(1, 3, 10, false);
+        assert_eq!(
+            r.route(&req(None), &[v0, v1]),
+            RouteDecision::Assign { node: 1, migrate_prefix_from: None }
+        );
+        // Every controller pressured: still route (to the best node) —
+        // the node-level controller owns the shed decision.
+        let mut v1 = v1;
+        v1.accepting = false;
+        assert_eq!(
+            r.route(&req(None), &[v0, v1]),
+            RouteDecision::Assign { node: 0, migrate_prefix_from: None }
+        );
+    }
+
+    #[test]
     fn policy_parse_roundtrip() {
-        for p in
-            [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::PrefixAffinity]
-        {
+        for p in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::LeastLoaded,
+            RouterPolicy::PrefixAffinity,
+            RouterPolicy::HarvestPriced,
+        ] {
             assert_eq!(RouterPolicy::parse(p.name()).unwrap(), p);
         }
         assert!(RouterPolicy::parse("random").is_err());

@@ -16,7 +16,8 @@
 //! round-trips through the parser (tested below).
 
 use crate::cluster::{ClusterSpec, RouterPolicy, SchedulerSpec};
-use crate::harvest::{HarvestConfig, MigConfig, VictimPolicy};
+use crate::control::{AdmissionConfig, AdmissionPolicy, SloConfig};
+use crate::harvest::{HarvestConfig, MigConfig, PlacementSpec, VictimPolicy};
 use crate::kv::KvConfig;
 use crate::memsim::{FabricKind, GpuSpec, NodeFabricKind, NodeSpec};
 use crate::moe::{find_kv_model, find_moe_model};
@@ -326,6 +327,24 @@ pub struct DeploymentConfig {
     pub mig_cache_gib: Option<u64>,
     /// Pressure-revoked lossy leases demote to host instead of dropping.
     pub demote_to_host: bool,
+    /// Harvest placement policy (`harvest.placement`): best-fit |
+    /// first-available | locality | stability | interference.
+    pub placement: String,
+    /// Admission policy (`slo.admission`): `"static"` keeps the legacy
+    /// `cluster.shed_queue_depth` gate; `"occupancy"` arms the SLO
+    /// control plane ([`crate::control::AdmissionController`]).
+    pub slo_admission: String,
+    /// p99 TTFT target in milliseconds (`slo.ttft_p99_ms`).
+    pub slo_ttft_p99_ms: u64,
+    /// Goodput floor in completed tokens/sec (`slo.goodput_floor_tps`;
+    /// 0 disables the floor).
+    pub slo_goodput_floor_tps: f64,
+    /// Sliding stability window in milliseconds (`slo.window_ms`).
+    pub slo_window_ms: u64,
+    /// Hysteresis watermarks in percent of pressure (occupancy or
+    /// tenant-held), enter/exit the Pressured state.
+    pub slo_high_watermark_pct: u32,
+    pub slo_low_watermark_pct: u32,
     /// Cold-tier SSD arena capacity per node (`[coldtier]`; 0 = tier
     /// absent). When present the demotion ladder bottoms out on paged
     /// NVMe instead of dropping leases.
@@ -386,6 +405,13 @@ impl Default for DeploymentConfig {
             reserve_gib: 0,
             mig_cache_gib: None,
             demote_to_host: false,
+            placement: "best-fit".into(),
+            slo_admission: "static".into(),
+            slo_ttft_p99_ms: 50,
+            slo_goodput_floor_tps: 0.0,
+            slo_window_ms: 20,
+            slo_high_watermark_pct: 90,
+            slo_low_watermark_pct: 70,
             ssd_gib: 0,
             ssd_page_kib: 2048,
             compress_ratio_pct: 50,
@@ -511,6 +537,13 @@ impl DeploymentConfig {
             "harvest.reserve_gib",
             "harvest.mig_cache_gib",
             "harvest.demote_to_host",
+            "harvest.placement",
+            "slo.admission",
+            "slo.ttft_p99_ms",
+            "slo.goodput_floor_tps",
+            "slo.window_ms",
+            "slo.high_watermark_pct",
+            "slo.low_watermark_pct",
             "coldtier.ssd_gib",
             "coldtier.page_kib",
             "coldtier.compress_ratio_pct",
@@ -587,6 +620,18 @@ impl DeploymentConfig {
                 None => None,
             },
             demote_to_host: doc.bool_or("harvest.demote_to_host", d.demote_to_host)?,
+            placement: doc.str_or("harvest.placement", &d.placement),
+            slo_admission: doc.str_or("slo.admission", &d.slo_admission),
+            slo_ttft_p99_ms: doc.u64_or("slo.ttft_p99_ms", d.slo_ttft_p99_ms)?,
+            slo_goodput_floor_tps: doc
+                .f64_or("slo.goodput_floor_tps", d.slo_goodput_floor_tps)?,
+            slo_window_ms: doc.u64_or("slo.window_ms", d.slo_window_ms)?,
+            slo_high_watermark_pct: doc
+                .u64_or("slo.high_watermark_pct", d.slo_high_watermark_pct as u64)?
+                as u32,
+            slo_low_watermark_pct: doc
+                .u64_or("slo.low_watermark_pct", d.slo_low_watermark_pct as u64)?
+                as u32,
             ssd_gib: doc.u64_or("coldtier.ssd_gib", d.ssd_gib)?,
             ssd_page_kib: doc.u64_or("coldtier.page_kib", d.ssd_page_kib)?,
             compress_ratio_pct: doc
@@ -659,8 +704,29 @@ impl DeploymentConfig {
         if self.workload == WorkloadKind::KvOffload && find_kv_model(&self.kv_model).is_none() {
             bail!("unknown KV model `{}` (see §5.3 registry)", self.kv_model);
         }
-        // One source of truth for scheduler spellings.
+        // One source of truth for scheduler / placement / admission
+        // spellings.
         SchedulerSpec::parse(&self.scheduler, self.quantum)?;
+        PlacementSpec::parse(&self.placement)?;
+        self.admission_policy()?;
+        if !(1..=100).contains(&self.slo_high_watermark_pct)
+            || !(1..=100).contains(&self.slo_low_watermark_pct)
+        {
+            bail!("slo watermarks must be in 1..=100");
+        }
+        if self.slo_low_watermark_pct >= self.slo_high_watermark_pct {
+            bail!(
+                "slo.low_watermark_pct ({}) must be below slo.high_watermark_pct ({})",
+                self.slo_low_watermark_pct,
+                self.slo_high_watermark_pct
+            );
+        }
+        if self.slo_ttft_p99_ms == 0 || self.slo_window_ms == 0 {
+            bail!("slo.ttft_p99_ms and slo.window_ms must be > 0");
+        }
+        if self.slo_goodput_floor_tps < 0.0 {
+            bail!("slo.goodput_floor_tps must be >= 0");
+        }
         if self.decode_slots == 0 || self.max_running == 0 {
             bail!("server.decode_slots and server.max_running must be > 0");
         }
@@ -729,6 +795,15 @@ impl DeploymentConfig {
             s.push_str(&format!("mig_cache_gib = {gib}\n"));
         }
         s.push_str(&format!("demote_to_host = {}\n", self.demote_to_host));
+        s.push_str(&format!("placement = \"{}\"\n", self.placement));
+        s.push('\n');
+        s.push_str("[slo]\n");
+        s.push_str(&format!("admission = \"{}\"\n", self.slo_admission));
+        s.push_str(&format!("ttft_p99_ms = {}\n", self.slo_ttft_p99_ms));
+        s.push_str(&format!("goodput_floor_tps = {:?}\n", self.slo_goodput_floor_tps));
+        s.push_str(&format!("window_ms = {}\n", self.slo_window_ms));
+        s.push_str(&format!("high_watermark_pct = {}\n", self.slo_high_watermark_pct));
+        s.push_str(&format!("low_watermark_pct = {}\n", self.slo_low_watermark_pct));
         s.push('\n');
         s.push_str("[coldtier]\n");
         s.push_str(&format!("ssd_gib = {}\n", self.ssd_gib));
@@ -799,6 +874,14 @@ impl DeploymentConfig {
             } else {
                 self.shed_queue_depth
             },
+            // Both spellings are range-checked by `validate`, so a
+            // validated config cannot fail here.
+            admission: self
+                .admission_policy()
+                .expect("slo.admission validated by DeploymentConfig::validate"),
+            placement: self
+                .placement_spec()
+                .expect("harvest.placement validated by DeploymentConfig::validate"),
             tenants: Some(self.tenants.clone()),
             tenant_overrides: self.tenant_overrides.iter().cloned().collect(),
         }
@@ -826,6 +909,43 @@ impl DeploymentConfig {
     /// The per-node decode scheduler.
     pub fn scheduler_spec(&self) -> Result<SchedulerSpec> {
         SchedulerSpec::parse(&self.scheduler, self.quantum)
+    }
+
+    /// The harvest placement policy spec (`harvest.placement`).
+    pub fn placement_spec(&self) -> Result<PlacementSpec> {
+        PlacementSpec::parse(&self.placement)
+    }
+
+    /// The admission policy serving runs (`[slo]`). `"static"` maps
+    /// `cluster.shed_queue_depth` onto the legacy router-side gate
+    /// (0 = never shed); `"occupancy"` arms the node-side SLO
+    /// controller with the section's targets and watermarks.
+    pub fn admission_policy(&self) -> Result<AdmissionPolicy> {
+        match self.slo_admission.as_str() {
+            "static" => Ok(AdmissionPolicy::StaticDepth {
+                shed_queue_depth: if self.shed_queue_depth == 0 {
+                    usize::MAX
+                } else {
+                    self.shed_queue_depth
+                },
+            }),
+            "occupancy" => Ok(AdmissionPolicy::SloOccupancy(AdmissionConfig {
+                slo: SloConfig {
+                    ttft_p99_ns: self.slo_ttft_p99_ms * 1_000_000,
+                    goodput_floor_tps: self.slo_goodput_floor_tps,
+                    window_ns: self.slo_window_ms * 1_000_000,
+                },
+                high_watermark_pct: self.slo_high_watermark_pct,
+                low_watermark_pct: self.slo_low_watermark_pct,
+            })),
+            other => bail!("unknown slo.admission `{other}` (static | occupancy)"),
+        }
+    }
+
+    /// The [`crate::control::AdmissionConfig`] when the SLO controller
+    /// is armed (None under static admission).
+    pub fn admission_config(&self) -> Result<Option<AdmissionConfig>> {
+        Ok(self.admission_policy()?.admission_config())
     }
 
     pub fn harvest_config(&self) -> HarvestConfig {
@@ -963,6 +1083,24 @@ pub fn presets() -> Vec<DeploymentConfig> {
             mean_prompt_tokens: 900.0,
             shared_prefix_fraction: 0.5,
             prefix_groups: 4,
+            ..base.clone()
+        },
+        // SLO-governed serving: 4 nodes behind harvest-priced routing,
+        // node-side occupancy admission (defer under the hysteresis
+        // band, shed only past the stability boundary), heterogeneous
+        // tenant pressure so pricing has something to avoid.
+        DeploymentConfig {
+            name: "slo-serve".into(),
+            workload: WorkloadKind::KvOffload,
+            nodes: 4,
+            router_policy: RouterPolicy::HarvestPriced,
+            slo_admission: "occupancy".into(),
+            slo_ttft_p99_ms: 40,
+            local_capacity_blocks: 512,
+            demote_to_host: true,
+            n_requests: 128,
+            mean_interarrival_us: 800,
+            tenants: TenantMix { enabled: true, host_gib: 4, ..TenantMix::default() },
             ..base.clone()
         },
         // End-to-end real-compute serve on the AOT tiny model.
@@ -1225,6 +1363,61 @@ mod tests {
         assert!(DeploymentConfig::from_toml("[cluster]\nnodes = 0").is_err());
         assert!(DeploymentConfig::from_toml("[cluster]\nrouter_policy = \"x\"").is_err());
         assert!(DeploymentConfig::from_toml("[cluster]\nfabric = \"infiniband9\"").is_err());
+    }
+
+    #[test]
+    fn slo_keys_parse_and_materialize() {
+        let cfg = DeploymentConfig::from_toml(
+            "[slo]\nadmission = \"occupancy\"\nttft_p99_ms = 30\ngoodput_floor_tps = 100.0\n\
+             window_ms = 10\nhigh_watermark_pct = 85\nlow_watermark_pct = 60\n\
+             [harvest]\nplacement = \"stability\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.slo_admission, "occupancy");
+        assert_eq!(cfg.placement_spec().unwrap(), PlacementSpec::StabilityAware);
+        let policy = cfg.admission_policy().unwrap();
+        let acfg = policy.admission_config().expect("occupancy arms the controller");
+        assert_eq!(acfg.slo.ttft_p99_ns, 30_000_000);
+        assert_eq!(acfg.slo.window_ns, 10_000_000);
+        assert_eq!(acfg.slo.goodput_floor_tps, 100.0);
+        assert_eq!(acfg.high_watermark_pct, 85);
+        assert_eq!(acfg.low_watermark_pct, 60);
+        let spec = cfg.cluster_spec();
+        assert_eq!(spec.placement, PlacementSpec::StabilityAware);
+        assert_eq!(spec.effective_admission(), policy);
+        // round-trips
+        let back = DeploymentConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back.slo_admission, cfg.slo_admission);
+        assert_eq!(back.slo_ttft_p99_ms, cfg.slo_ttft_p99_ms);
+        assert_eq!(back.slo_goodput_floor_tps, cfg.slo_goodput_floor_tps);
+        assert_eq!(back.slo_high_watermark_pct, cfg.slo_high_watermark_pct);
+        assert_eq!(back.placement, cfg.placement);
+        // the static default maps shed_queue_depth onto the legacy gate
+        let d = DeploymentConfig::from_toml("[cluster]\nshed_queue_depth = 8").unwrap();
+        assert_eq!(
+            d.admission_policy().unwrap(),
+            AdmissionPolicy::StaticDepth { shed_queue_depth: 8 }
+        );
+        assert!(d.admission_config().unwrap().is_none());
+        // rejections
+        assert!(DeploymentConfig::from_toml("[slo]\nadmission = \"magic\"").is_err());
+        assert!(DeploymentConfig::from_toml("[slo]\nhigh_watermark_pct = 101").is_err());
+        assert!(DeploymentConfig::from_toml(
+            "[slo]\nhigh_watermark_pct = 50\nlow_watermark_pct = 60"
+        )
+        .is_err());
+        assert!(DeploymentConfig::from_toml("[slo]\nttft_p99_ms = 0").is_err());
+        assert!(DeploymentConfig::from_toml("[harvest]\nplacement = \"psychic\"").is_err());
+    }
+
+    #[test]
+    fn slo_serve_preset_arms_the_control_plane() {
+        let p = find_preset("slo-serve").unwrap();
+        assert_eq!(p.router_policy, RouterPolicy::HarvestPriced);
+        assert_eq!(p.slo_admission, "occupancy");
+        let spec = p.cluster_spec();
+        assert!(spec.effective_admission().admission_config().is_some());
+        assert_eq!(spec.router, RouterPolicy::HarvestPriced);
     }
 
     #[test]

@@ -1,0 +1,382 @@
+//! Per-node admission control: admit / defer / shed with hysteresis.
+//!
+//! The controller sits in the node stepper's admission loop (the single
+//! loop body shared by `SimEngine` and `ClusterNode`, so both paths stay
+//! bit-for-bit identical) and decides, for each pending arrival, whether
+//! to admit it now, defer it (leave it queued and re-examine on the next
+//! step), or shed it. Decisions steer on three measured signals:
+//!
+//! 1. **Memory pressure** — the max of KV-block occupancy and tenant-held
+//!    HBM fraction, run through a hysteresis state machine (enter the
+//!    `Pressured` state at the high watermark, leave at the low one) so
+//!    admission degrades gracefully instead of oscillating at a single
+//!    threshold.
+//! 2. **Stability** — the sliding-window arrival rate vs. drain rate from
+//!    the [`SloMonitor`]; a queue that grows faster than it drains is past
+//!    the queueing stability boundary and waiting will not save it.
+//! 3. **SLO headroom** — predicted TTFT (wait already accrued plus the
+//!    queueing estimate) against the monitor's effective budget.
+//!
+//! A request is shed only when all three say so: it is predicted to miss
+//! the budget, the node is unstable, *and* pressure is at or above the
+//! low watermark — the controller never sheds below the low watermark.
+
+use crate::memsim::Ns;
+
+use super::slo::{SloConfig, SloMonitor};
+
+/// How a node decides which arrivals to serve.
+///
+/// The default is [`StaticDepth`](Self::StaticDepth) with an unbounded
+/// depth (never shed), matching the legacy behaviour bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionPolicy {
+    /// **Deprecated shim** for the legacy `shed_queue_depth` knob: shed
+    /// at the router when every node's queue is at least this deep,
+    /// spill/route below it. No feedback, no deferral; it cannot see
+    /// the stability boundary. Kept so old configs (TOML key
+    /// `cluster.shed_queue_depth`) keep working bit-for-bit — new
+    /// configs should use the `[slo]` section, which selects
+    /// [`SloOccupancy`](Self::SloOccupancy) instead.
+    StaticDepth {
+        /// Queue depth at which arrivals are shed; `usize::MAX` never sheds.
+        shed_queue_depth: usize,
+    },
+    /// Occupancy-driven feedback control: each node runs an
+    /// [`AdmissionController`] in its stepper and the router never
+    /// sheds (all admission accounting is node-level).
+    SloOccupancy(AdmissionConfig),
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy::StaticDepth { shed_queue_depth: usize::MAX }
+    }
+}
+
+impl AdmissionPolicy {
+    /// Short name for reports: `"static"` or `"occupancy"`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::StaticDepth { .. } => "static",
+            AdmissionPolicy::SloOccupancy(_) => "occupancy",
+        }
+    }
+
+    /// The controller config when this policy is feedback-driven.
+    pub fn admission_config(&self) -> Option<AdmissionConfig> {
+        match self {
+            AdmissionPolicy::StaticDepth { .. } => None,
+            AdmissionPolicy::SloOccupancy(cfg) => Some(*cfg),
+        }
+    }
+}
+
+/// Tuning for the occupancy-driven [`AdmissionController`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdmissionConfig {
+    /// SLO targets and monitor window.
+    pub slo: SloConfig,
+    /// Memory-pressure per-cent at which the node enters the
+    /// `Pressured` hysteresis state (new arrivals defer).
+    pub high_watermark_pct: u32,
+    /// Per-cent at which the node leaves `Pressured`. Shedding never
+    /// happens below this watermark.
+    pub low_watermark_pct: u32,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self { slo: SloConfig::default(), high_watermark_pct: 90, low_watermark_pct: 70 }
+    }
+}
+
+impl AdmissionConfig {
+    fn high_pm(&self) -> u32 {
+        self.high_watermark_pct.saturating_mul(10)
+    }
+
+    fn low_pm(&self) -> u32 {
+        self.low_watermark_pct.saturating_mul(10)
+    }
+}
+
+/// The controller's verdict for one pending arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    /// Start serving the request now.
+    Admit,
+    /// Leave it at the head of the queue; re-examine on the next step.
+    Defer,
+    /// Reject it permanently (counted in the shed ledger).
+    Shed,
+}
+
+/// Measured node state sampled by the stepper at decision time.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdmissionSignals {
+    /// KV-block pool occupancy, per-mille (`used * 1000 / capacity`).
+    pub occupancy_pm: u32,
+    /// Tenant-held fraction of total HBM, per-mille.
+    pub tenant_pressure_pm: u32,
+    /// Requests queued behind this one plus requests currently live.
+    pub queue_depth: usize,
+    /// Requests currently being served. A node with zero live work
+    /// never defers (deferring with no work would freeze virtual time).
+    pub live: usize,
+}
+
+impl AdmissionSignals {
+    /// Combined memory pressure: max of KV occupancy and tenant-held
+    /// fraction, per-mille.
+    pub fn pressure_pm(&self) -> u32 {
+        self.occupancy_pm.max(self.tenant_pressure_pm)
+    }
+}
+
+/// Counters exposed for tests and reports.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionStats {
+    /// Requests admitted (including after deferral).
+    pub admitted: u64,
+    /// Defer decisions issued (one request may defer many times).
+    pub defer_events: u64,
+    /// Requests shed by the controller.
+    pub shed: u64,
+    /// Times the hysteresis state machine entered `Pressured`.
+    pub pressure_enters: u64,
+    /// Times it left `Pressured`.
+    pub pressure_exits: u64,
+    /// Minimum memory pressure (per-mille) observed at any shed;
+    /// `u32::MAX` if nothing was shed. Tests assert this never drops
+    /// below the low watermark.
+    pub min_shed_pressure_pm: u32,
+}
+
+impl Default for AdmissionStats {
+    fn default() -> Self {
+        Self {
+            admitted: 0,
+            defer_events: 0,
+            shed: 0,
+            pressure_enters: 0,
+            pressure_exits: 0,
+            min_shed_pressure_pm: u32::MAX,
+        }
+    }
+}
+
+/// Feedback admission controller for one serving node.
+///
+/// Deterministic: all state is derived from virtual-time signals the
+/// stepper feeds it, so a 1-node cluster and a bare `SimEngine` running
+/// the same workload make identical decisions.
+///
+/// ```
+/// use harvest::control::{
+///     AdmissionConfig, AdmissionController, AdmissionDecision, AdmissionSignals,
+/// };
+///
+/// let mut ctl = AdmissionController::new(AdmissionConfig::default());
+/// // Cold start, empty node: admit.
+/// let idle = AdmissionSignals { occupancy_pm: 100, ..Default::default() };
+/// assert_eq!(ctl.decide(0, 0, &idle), AdmissionDecision::Admit);
+/// // Above the high watermark with live work: defer, don't thrash.
+/// let pressed = AdmissionSignals {
+///     occupancy_pm: 950,
+///     queue_depth: 4,
+///     live: 2,
+///     ..Default::default()
+/// };
+/// assert_eq!(ctl.decide(1_000, 1_000, &pressed), AdmissionDecision::Defer);
+/// assert!(!ctl.accepting());
+/// ```
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    monitor: SloMonitor,
+    pressured: bool,
+    stats: AdmissionStats,
+}
+
+impl AdmissionController {
+    /// A controller in the relaxed (not pressured) state.
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        let monitor = SloMonitor::new(cfg.slo.window_ns);
+        Self { cfg, monitor, pressured: false, stats: AdmissionStats::default() }
+    }
+
+    /// The tuning this controller runs with.
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Record an arrival in the monitor window (once per request).
+    pub fn note_arrival(&mut self, at: Ns) {
+        self.monitor.note_arrival(at);
+    }
+
+    /// Record a completion: feeds achieved TTFT and goodput back into
+    /// the budget setpoint.
+    pub fn note_finish(&mut self, at: Ns, ttft_ns: Ns, tokens: u64) {
+        self.monitor.note_finish(at, ttft_ns, tokens);
+    }
+
+    /// `true` while the node is below the high watermark (hysteresis
+    /// state relaxed). Routers prefer accepting nodes.
+    pub fn accepting(&self) -> bool {
+        !self.pressured
+    }
+
+    /// Decision counters.
+    pub fn stats(&self) -> AdmissionStats {
+        self.stats
+    }
+
+    /// Read-only view of the monitor (for reports).
+    pub fn monitor_mut(&mut self) -> &mut SloMonitor {
+        &mut self.monitor
+    }
+
+    /// Decide the fate of the request that arrived at `arrival`, given
+    /// the node state in `sig` at virtual time `now`.
+    pub fn decide(&mut self, now: Ns, arrival: Ns, sig: &AdmissionSignals) -> AdmissionDecision {
+        let pressure = sig.pressure_pm();
+        if !self.pressured && pressure >= self.cfg.high_pm() {
+            self.pressured = true;
+            self.stats.pressure_enters += 1;
+        } else if self.pressured && pressure <= self.cfg.low_pm() {
+            self.pressured = false;
+            self.stats.pressure_exits += 1;
+        }
+
+        let budget = self.monitor.effective_budget(now, self.cfg.slo.ttft_p99_ns);
+        let waited = now.saturating_sub(arrival);
+        let predicted_ttft = waited.saturating_add(self.monitor.est_wait_ns(now, sig.queue_depth));
+        let over_budget = predicted_ttft > budget;
+        let unstable =
+            self.monitor.arrivals_in_window(now) > self.monitor.finishes_in_window(now);
+        // Never shed below the low watermark.
+        let can_shed = pressure >= self.cfg.low_pm();
+        // A goodput shortfall suppresses shedding unless memory is
+        // critical — shedding while under-delivering tokens only digs
+        // the goodput hole deeper.
+        let floor = self.cfg.slo.goodput_floor_tps;
+        let goodput_ok = floor <= 0.0 || self.monitor.goodput_tps(now) >= floor;
+
+        let decision = if over_budget && unstable && can_shed && (goodput_ok || self.pressured) {
+            AdmissionDecision::Shed
+        } else if self.pressured && sig.live > 0 {
+            AdmissionDecision::Defer
+        } else {
+            AdmissionDecision::Admit
+        };
+        match decision {
+            AdmissionDecision::Admit => self.stats.admitted += 1,
+            AdmissionDecision::Defer => self.stats.defer_events += 1,
+            AdmissionDecision::Shed => {
+                self.stats.shed += 1;
+                self.stats.min_shed_pressure_pm = self.stats.min_shed_pressure_pm.min(pressure);
+            }
+        }
+        decision
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(occ_pm: u32, queue: usize, live: usize) -> AdmissionSignals {
+        AdmissionSignals {
+            occupancy_pm: occ_pm,
+            tenant_pressure_pm: 0,
+            queue_depth: queue,
+            live,
+        }
+    }
+
+    #[test]
+    fn cold_start_admits() {
+        let mut ctl = AdmissionController::new(AdmissionConfig::default());
+        assert_eq!(ctl.decide(0, 0, &sig(0, 0, 0)), AdmissionDecision::Admit);
+        assert_eq!(ctl.stats().admitted, 1);
+    }
+
+    #[test]
+    fn idle_node_never_defers() {
+        let mut ctl = AdmissionController::new(AdmissionConfig::default());
+        // Way above the high watermark, but no live work: deferring
+        // would freeze virtual time, so the controller admits.
+        let d = ctl.decide(10, 10, &sig(990, 0, 0));
+        assert_eq!(d, AdmissionDecision::Admit);
+        assert!(!ctl.accepting());
+    }
+
+    #[test]
+    fn hysteresis_band_holds_state() {
+        let mut ctl = AdmissionController::new(AdmissionConfig::default());
+        // 90% high, 70% low. 80% does not enter Pressured...
+        ctl.decide(0, 0, &sig(800, 1, 1));
+        assert!(ctl.accepting());
+        // ...95% does...
+        ctl.decide(1, 1, &sig(950, 1, 1));
+        assert!(!ctl.accepting());
+        // ...and 80% (inside the dead band) keeps it Pressured.
+        ctl.decide(2, 2, &sig(800, 1, 1));
+        assert!(!ctl.accepting());
+        // 70% releases it.
+        ctl.decide(3, 3, &sig(700, 1, 1));
+        assert!(ctl.accepting());
+        assert_eq!(ctl.stats().pressure_enters, 1);
+        assert_eq!(ctl.stats().pressure_exits, 1);
+    }
+
+    #[test]
+    fn sheds_only_when_unstable_over_budget_and_above_low_watermark() {
+        let cfg = AdmissionConfig {
+            slo: SloConfig { ttft_p99_ns: 1_000, goodput_floor_tps: 0.0, window_ns: 10_000 },
+            ..Default::default()
+        };
+        let mut ctl = AdmissionController::new(cfg);
+        // Build a slow drain estimate: 1 finish per 10 µs window.
+        ctl.note_finish(5_000, 500, 4);
+        for t in 0..8u64 {
+            ctl.note_arrival(5_000 + t);
+        }
+        // Over budget (queue 8 * 10 µs each >> 1 µs budget), unstable
+        // (8 arrivals vs 1 finish), pressure above low watermark: shed.
+        let d = ctl.decide(5_010, 5_010, &sig(750, 8, 2));
+        assert_eq!(d, AdmissionDecision::Shed);
+        // Identical load below the low watermark: never shed.
+        let mut relaxed = AdmissionController::new(cfg);
+        relaxed.note_finish(5_000, 500, 4);
+        for t in 0..8u64 {
+            relaxed.note_arrival(5_000 + t);
+        }
+        let d = relaxed.decide(5_010, 5_010, &sig(200, 8, 2));
+        assert_ne!(d, AdmissionDecision::Shed);
+        assert_eq!(relaxed.stats().min_shed_pressure_pm, u32::MAX);
+    }
+
+    #[test]
+    fn goodput_floor_suppresses_shedding_when_relaxed() {
+        let cfg = AdmissionConfig {
+            slo: SloConfig {
+                ttft_p99_ns: 1_000,
+                goodput_floor_tps: 1e12, // unreachable floor
+                window_ns: 10_000,
+            },
+            ..Default::default()
+        };
+        let mut ctl = AdmissionController::new(cfg);
+        ctl.note_finish(5_000, 500, 4);
+        for t in 0..8u64 {
+            ctl.note_arrival(5_000 + t);
+        }
+        // Same overload as above (pressure 75% is above low, below
+        // high) — but goodput is under the floor, so no shed.
+        let d = ctl.decide(5_010, 5_010, &sig(750, 8, 2));
+        assert_ne!(d, AdmissionDecision::Shed);
+    }
+}

@@ -1,0 +1,44 @@
+//! SLO control plane: feedback-driven admission, harvest-priced routing.
+//!
+//! The serving layer has a sharp, queueing-theoretic stability boundary:
+//! once KV-block occupancy saturates (or tenant pressure squeezes the
+//! harvestable pool), throughput collapses and TTFT degrades
+//! super-linearly. The static `shed_queue_depth` threshold cannot see
+//! that boundary — it sheds on queue length alone, which lags occupancy
+//! by the full pipeline depth.
+//!
+//! This module closes the loop:
+//!
+//! ```text
+//!    arrivals ──▶ AdmissionController ──admit/defer──▶ NodeStepper
+//!                   ▲          │shed                      │
+//!         setpoint  │          ▼                          │ TTFT,
+//!        (budget)   │     shed ledger                     │ tokens
+//!                   │                                     ▼
+//!                 SloMonitor ◀──── windowed TTFT / goodput┘
+//! ```
+//!
+//! * [`slo`] — SLO targets (`p99 TTFT`, goodput floor) and the sliding
+//!   [`SloMonitor`] window that measures achieved TTFT, goodput, and
+//!   arrival-vs-drain rates.
+//! * [`admission`] — the per-node [`AdmissionController`]: tri-state
+//!   admit / defer / shed decisions against measured KV occupancy,
+//!   tenant pressure, and the monitor's stability estimate, with
+//!   hysteresis watermarks so it degrades gracefully instead of
+//!   oscillating. The legacy static threshold survives as
+//!   [`AdmissionPolicy::StaticDepth`].
+//! * [`pricing`] — the router-scoring layer behind
+//!   `RouterPolicy::HarvestPriced`: prices each node's *harvestable*
+//!   capacity (free KV blocks + per-tier harvestable bytes discounted
+//!   by reload cost and demotion risk under tenant churn).
+
+pub mod admission;
+pub mod pricing;
+pub mod slo;
+
+pub use admission::{
+    AdmissionConfig, AdmissionController, AdmissionDecision, AdmissionPolicy, AdmissionSignals,
+    AdmissionStats,
+};
+pub use pricing::{priced_capacity, PricingWeights};
+pub use slo::{SloConfig, SloMonitor};

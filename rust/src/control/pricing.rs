@@ -1,0 +1,140 @@
+//! Harvest pricing: score a node by what its memory is *worth*.
+//!
+//! Free KV blocks are worth full price — a request placed there runs
+//! from local HBM. Harvestable bytes on colder tiers are worth less:
+//! they must be reloaded across NVLink / the host bridge / NVMe before
+//! they serve tokens, and under tenant churn they may be demoted out
+//! from under the cache before they pay off at all. The pricer folds
+//! both effects into one integer score the router can compare exactly
+//! (per-mille weights and u128 cross-multiplication — no float ties, no
+//! platform-dependent ordering).
+
+use std::cmp::Ordering;
+
+use crate::cluster::NodeView;
+
+/// Per-mille value of a harvestable byte on each tier, ordered by
+/// reload cost, plus the churn scale for the demotion-risk discount.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PricingWeights {
+    /// Free local KV blocks (no reload needed): full price.
+    pub local_pm: u32,
+    /// Peer-GPU HBM harvestable over NVLink.
+    pub peer_pm: u32,
+    /// CXL-expander bytes.
+    pub cxl_pm: u32,
+    /// Host DRAM over the PCIe/host bridge.
+    pub host_pm: u32,
+    /// NVMe SSD pages (reload dominated by read latency).
+    pub ssd_pm: u32,
+    /// Churn half-life: the harvest-tier price is multiplied by
+    /// `churn_scale / (churn_scale + sheds + demotions)`, so a node
+    /// that has been demoting (tenant churn) or shedding (overload)
+    /// recently is discounted smoothly.
+    pub churn_scale: u64,
+}
+
+impl Default for PricingWeights {
+    fn default() -> Self {
+        Self { local_pm: 1000, peer_pm: 900, cxl_pm: 450, host_pm: 300, ssd_pm: 80, churn_scale: 64 }
+    }
+}
+
+/// Price a node's harvestable capacity in weighted bytes (per-mille
+/// scaled): full-price local KV blocks plus per-tier harvestable bytes
+/// discounted by reload cost, the harvest portion further discounted by
+/// demotion risk under the node's recent churn.
+///
+/// ```
+/// use harvest::cluster::NodeView;
+/// use harvest::control::{priced_capacity, PricingWeights};
+///
+/// let w = PricingWeights::default();
+/// let mut v = NodeView::new(0, 0, 4);
+/// v.block_bytes = 1024;
+/// // 4 free blocks of 1 KiB at full price = 4096 * 1000.
+/// assert_eq!(priced_capacity(&v, &w), 4096 * 1000);
+/// // Host bytes are discounted to 300‰ of a local byte.
+/// v.harvest_host_bytes = 1000;
+/// assert_eq!(priced_capacity(&v, &w), 4096 * 1000 + 1000 * 300);
+/// // Recent demotions discount the harvest-tier portion only.
+/// v.demotions = 64;
+/// assert_eq!(priced_capacity(&v, &w), 4096 * 1000 + 1000 * 300 / 2);
+/// ```
+pub fn priced_capacity(v: &NodeView, w: &PricingWeights) -> u128 {
+    let local =
+        v.free_local_blocks as u128 * v.block_bytes as u128 * w.local_pm as u128;
+    let tiered = v.free_hbm_bytes as u128 * w.peer_pm as u128
+        + v.harvest_cxl_bytes as u128 * w.cxl_pm as u128
+        + v.harvest_host_bytes as u128 * w.host_pm as u128
+        + v.harvest_ssd_bytes as u128 * w.ssd_pm as u128;
+    let churn = v.sheds.saturating_add(v.demotions) as u128;
+    let scale = w.churn_scale.max(1) as u128;
+    local + tiered * (scale * 1000 / (scale + churn)) / 1000
+}
+
+/// Order two nodes by price-per-queued-request, best first: compares
+/// `price / (queue_depth + 1)` by exact cross-multiplication, breaking
+/// ties toward the prefix-holding node, then the lower node id.
+pub fn price_order(a: &NodeView, b: &NodeView, w: &PricingWeights) -> Ordering {
+    let pa = priced_capacity(a, w);
+    let pb = priced_capacity(b, w);
+    let lhs = pa * (b.queue_depth as u128 + 1);
+    let rhs = pb * (a.queue_depth as u128 + 1);
+    rhs.cmp(&lhs)
+        .then_with(|| b.has_prefix.cmp(&a.has_prefix))
+        .then_with(|| a.node.cmp(&b.node))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(node: usize, queue: usize, blocks: usize) -> NodeView {
+        let mut v = NodeView::new(node, queue, blocks);
+        v.block_bytes = 4096;
+        v
+    }
+
+    #[test]
+    fn local_blocks_beat_discounted_tiers() {
+        let w = PricingWeights::default();
+        let mut far = view(0, 0, 0);
+        far.harvest_ssd_bytes = 8 * 4096; // same raw bytes, SSD tier
+        let near = view(1, 0, 8);
+        assert!(priced_capacity(&near, &w) > priced_capacity(&far, &w));
+    }
+
+    #[test]
+    fn churn_discounts_harvest_but_not_local() {
+        let w = PricingWeights::default();
+        let mut calm = view(0, 0, 4);
+        calm.harvest_host_bytes = 1 << 20;
+        let mut churny = calm;
+        churny.node = 1;
+        churny.demotions = 1000;
+        let calm_p = priced_capacity(&calm, &w);
+        let churny_p = priced_capacity(&churny, &w);
+        assert!(churny_p < calm_p);
+        // The local component is untouched by churn.
+        assert!(churny_p >= priced_capacity(&view(1, 0, 4), &w));
+    }
+
+    #[test]
+    fn ordering_is_per_queue_slot_with_deterministic_ties() {
+        let w = PricingWeights::default();
+        // Same price, deeper queue loses.
+        let shallow = view(0, 1, 8);
+        let deep = view(1, 7, 8);
+        assert_eq!(price_order(&shallow, &deep, &w), Ordering::Less);
+        // Identical nodes: lower id wins.
+        let a = view(0, 2, 8);
+        let b = view(1, 2, 8);
+        assert_eq!(price_order(&a, &b, &w), Ordering::Less);
+        assert_eq!(price_order(&b, &a, &w), Ordering::Greater);
+        // Prefix holder breaks otherwise-equal scores.
+        let mut pfx = view(1, 2, 8);
+        pfx.has_prefix = true;
+        assert_eq!(price_order(&pfx, &a, &w), Ordering::Less);
+    }
+}

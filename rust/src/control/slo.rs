@@ -1,0 +1,228 @@
+//! SLO targets and the sliding-window monitor that measures them.
+//!
+//! [`SloConfig`] carries the targets (p99 TTFT, goodput floor) parsed
+//! from the `[slo]` TOML section. [`SloMonitor`] tracks a sliding
+//! window of arrivals and completions in virtual time and derives the
+//! signals the admission controller steers on: achieved TTFT p99,
+//! completed-token goodput, the arrival-vs-drain stability estimate,
+//! and the *effective* TTFT budget (the setpoint tightens when the
+//! window is already missing the target, so the controller reacts
+//! before the miss compounds).
+
+use std::collections::VecDeque;
+
+use crate::memsim::Ns;
+
+/// Service-level objectives for a serving node.
+///
+/// Parsed from the `[slo]` TOML section; all signals are evaluated over
+/// a sliding window of [`window_ns`](Self::window_ns) virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloConfig {
+    /// Target p99 time-to-first-token. Deferred-admission wait counts
+    /// against this budget (TTFT is measured from arrival, not from
+    /// admission), so the controller cannot game the metric by queueing.
+    pub ttft_p99_ns: Ns,
+    /// Goodput floor in completed tokens/sec; `0.0` disables the floor.
+    /// While the window's goodput is below the floor, shedding is
+    /// suppressed unless memory is critical (hysteresis state pressed).
+    pub goodput_floor_tps: f64,
+    /// Sliding-window length for all monitor signals.
+    pub window_ns: Ns,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        Self {
+            ttft_p99_ns: 50_000_000, // 50 ms
+            goodput_floor_tps: 0.0,
+            window_ns: 20_000_000, // 20 ms
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct FinishRecord {
+    at: Ns,
+    ttft_ns: Ns,
+    tokens: u64,
+}
+
+/// Sliding-window tracker of achieved TTFT, goodput, and arrival/drain
+/// rates, in virtual time.
+///
+/// Feeds the admission controller's setpoint: when the windowed p99
+/// TTFT already exceeds the target, [`SloMonitor::effective_budget`]
+/// tightens proportionally so admission turns conservative *before*
+/// the miss compounds.
+///
+/// ```
+/// use harvest::control::SloMonitor;
+///
+/// let mut m = SloMonitor::new(1_000);
+/// m.note_arrival(100);
+/// m.note_arrival(200);
+/// m.note_finish(250, 150, 8);
+/// assert_eq!(m.arrivals_in_window(250), 2);
+/// assert_eq!(m.finishes_in_window(250), 1);
+/// // One finish in a 1 µs window => estimated drain interval 1 µs/req,
+/// // so a queue of 3 predicts a 3 µs wait.
+/// assert_eq!(m.est_wait_ns(250, 3), 3_000);
+/// // The window slides: at t=1300 the arrival at t=100 has aged out.
+/// assert_eq!(m.arrivals_in_window(1_300), 1);
+/// ```
+#[derive(Debug, Clone)]
+pub struct SloMonitor {
+    window_ns: Ns,
+    arrivals: VecDeque<Ns>,
+    finishes: VecDeque<FinishRecord>,
+}
+
+impl SloMonitor {
+    /// A monitor with a sliding window of `window_ns` (clamped to ≥ 1).
+    pub fn new(window_ns: Ns) -> Self {
+        Self { window_ns: window_ns.max(1), arrivals: VecDeque::new(), finishes: VecDeque::new() }
+    }
+
+    /// Window length in nanoseconds.
+    pub fn window_ns(&self) -> Ns {
+        self.window_ns
+    }
+
+    /// Record a request arrival at virtual time `at`.
+    pub fn note_arrival(&mut self, at: Ns) {
+        self.arrivals.push_back(at);
+    }
+
+    /// Record a request completion: finished at `at`, with first token
+    /// `ttft_ns` after arrival, having generated `tokens` tokens.
+    pub fn note_finish(&mut self, at: Ns, ttft_ns: Ns, tokens: u64) {
+        self.finishes.push_back(FinishRecord { at, ttft_ns, tokens });
+    }
+
+    fn prune(&mut self, now: Ns) {
+        let cutoff = now.saturating_sub(self.window_ns);
+        while self.arrivals.front().is_some_and(|&a| a < cutoff) {
+            self.arrivals.pop_front();
+        }
+        while self.finishes.front().is_some_and(|f| f.at < cutoff) {
+            self.finishes.pop_front();
+        }
+    }
+
+    /// Arrivals observed inside the window ending at `now`.
+    pub fn arrivals_in_window(&mut self, now: Ns) -> usize {
+        self.prune(now);
+        self.arrivals.len()
+    }
+
+    /// Completions observed inside the window ending at `now`.
+    pub fn finishes_in_window(&mut self, now: Ns) -> usize {
+        self.prune(now);
+        self.finishes.len()
+    }
+
+    /// Estimated per-request drain interval: window length divided by
+    /// windowed completions. `None` before the first completion lands
+    /// (cold start — the controller admits rather than guess).
+    pub fn drain_interval_ns(&mut self, now: Ns) -> Option<Ns> {
+        self.prune(now);
+        let n = self.finishes.len() as u64;
+        if n == 0 { None } else { Some(self.window_ns / n) }
+    }
+
+    /// Predicted queueing wait for a request behind `queue_depth`
+    /// others, from the windowed drain rate. Zero at cold start.
+    pub fn est_wait_ns(&mut self, now: Ns, queue_depth: usize) -> Ns {
+        match self.drain_interval_ns(now) {
+            Some(step) => (queue_depth as u64).saturating_mul(step),
+            None => 0,
+        }
+    }
+
+    /// Achieved p99 TTFT over the window, `None` if no completions.
+    pub fn ttft_p99(&mut self, now: Ns) -> Option<Ns> {
+        self.prune(now);
+        if self.finishes.is_empty() {
+            return None;
+        }
+        let mut ttfts: Vec<Ns> = self.finishes.iter().map(|f| f.ttft_ns).collect();
+        ttfts.sort_unstable();
+        let rank = (ttfts.len() - 1) * 99 / 100;
+        Some(ttfts[rank])
+    }
+
+    /// Completed-token goodput over the window, in tokens/sec.
+    pub fn goodput_tps(&mut self, now: Ns) -> f64 {
+        self.prune(now);
+        let tokens: u64 = self.finishes.iter().map(|f| f.tokens).sum();
+        tokens as f64 * 1e9 / self.window_ns as f64
+    }
+
+    /// The effective TTFT budget given a `target`: equal to the target
+    /// while the window is meeting it, tightened proportionally
+    /// (`target²/achieved`, floored at `target/4`) once the windowed
+    /// p99 exceeds it. This is the feedback setpoint — a node already
+    /// missing its SLO admits less, not more.
+    pub fn effective_budget(&mut self, now: Ns, target: Ns) -> Ns {
+        match self.ttft_p99(now) {
+            Some(achieved) if achieved > target && achieved > 0 => {
+                let tightened =
+                    (target as u128 * target as u128 / achieved as u128) as Ns;
+                tightened.max(target / 4)
+            }
+            _ => target,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_slides_and_prunes() {
+        let mut m = SloMonitor::new(1_000);
+        for t in [0u64, 400, 800, 1_200] {
+            m.note_arrival(t);
+        }
+        // Window [200, 1200]: arrival at t=0 aged out.
+        assert_eq!(m.arrivals_in_window(1_200), 3);
+        assert_eq!(m.arrivals_in_window(2_300), 0);
+    }
+
+    #[test]
+    fn drain_rate_and_est_wait() {
+        let mut m = SloMonitor::new(10_000);
+        assert_eq!(m.drain_interval_ns(0), None);
+        assert_eq!(m.est_wait_ns(0, 100), 0);
+        for i in 0..5u64 {
+            m.note_finish(i * 1_000, 500, 4);
+        }
+        // 5 finishes in a 10 µs window -> 2 µs per request.
+        assert_eq!(m.drain_interval_ns(4_000), Some(2_000));
+        assert_eq!(m.est_wait_ns(4_000, 3), 6_000);
+    }
+
+    #[test]
+    fn goodput_counts_completed_tokens_only() {
+        let mut m = SloMonitor::new(1_000_000_000); // 1 s window
+        m.note_finish(10, 100, 32);
+        m.note_finish(20, 100, 32);
+        assert!((m.goodput_tps(30) - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn budget_tightens_when_missing_target() {
+        let mut m = SloMonitor::new(1_000_000);
+        // Meeting the target: budget == target.
+        m.note_finish(100, 40, 1);
+        assert_eq!(m.effective_budget(100, 100), 100);
+        // Missing by 2x: budget halves.
+        m.note_finish(200, 200, 1);
+        assert_eq!(m.effective_budget(200, 100), 50);
+        // Missing catastrophically: floored at target/4.
+        m.note_finish(300, 100_000, 1);
+        assert_eq!(m.effective_budget(300, 100), 25);
+    }
+}

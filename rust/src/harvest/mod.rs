@@ -82,6 +82,7 @@ pub use events::{PayloadKind, RevocationAction, RevocationEvent, RevocationQueue
 pub use mig::MigConfig;
 pub use monitor::{PeerMonitor, PeerView};
 pub use policy::{BestFit, FirstAvailable, InterferenceAware, LocalityAware, PlacementPolicy,
-                 RateLimitFairness, StabilityAware, TierView, TieredPlacementRequest};
+                 PlacementSpec, RateLimitFairness, StabilityAware, TierView,
+                 TieredPlacementRequest};
 pub use prefetch::{PrefetchConfig, PrefetchPlanner, PrefetchStats};
 pub use session::{HarvestSession, Lease, SessionId, Transfer, TransferReport};

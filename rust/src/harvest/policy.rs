@@ -148,6 +148,80 @@ pub trait PlacementPolicy {
     }
 }
 
+/// Buildable placement-policy spec — the cluster-facing analogue of
+/// [`crate::cluster::SchedulerSpec`]: every node needs its own policy
+/// instance, so deployments carry this `Copy` spec and call
+/// [`PlacementSpec::build`] per node. Also what the `policy_matrix`
+/// bench sweeps.
+///
+/// ```
+/// use harvest::harvest::PlacementSpec;
+/// let spec = PlacementSpec::parse("stability").unwrap();
+/// assert_eq!(spec, PlacementSpec::StabilityAware);
+/// assert_eq!(spec.name(), "stability");
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PlacementSpec {
+    /// [`BestFit`] (the default).
+    BestFit,
+    /// [`FirstAvailable`].
+    FirstAvailable,
+    /// [`LocalityAware`].
+    LocalityAware,
+    /// [`StabilityAware`].
+    StabilityAware,
+    /// [`InterferenceAware`] with its hot-peer ceiling (bytes/sec).
+    InterferenceAware { bw_demand_ceiling: f64 },
+}
+
+impl Default for PlacementSpec {
+    fn default() -> Self {
+        PlacementSpec::BestFit
+    }
+}
+
+impl PlacementSpec {
+    pub fn build(&self) -> Box<dyn PlacementPolicy> {
+        match *self {
+            PlacementSpec::BestFit => Box::new(BestFit),
+            PlacementSpec::FirstAvailable => Box::new(FirstAvailable),
+            PlacementSpec::LocalityAware => Box::new(LocalityAware),
+            PlacementSpec::StabilityAware => Box::new(StabilityAware),
+            PlacementSpec::InterferenceAware { bw_demand_ceiling } => {
+                Box::new(InterferenceAware { bw_demand_ceiling })
+            }
+        }
+    }
+
+    /// Parse the config-file spelling (`harvest.placement`).
+    pub fn parse(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "best-fit" => Ok(PlacementSpec::BestFit),
+            "first-available" | "first" => Ok(PlacementSpec::FirstAvailable),
+            "locality" => Ok(PlacementSpec::LocalityAware),
+            "stability" => Ok(PlacementSpec::StabilityAware),
+            "interference" => Ok(PlacementSpec::InterferenceAware {
+                bw_demand_ceiling: InterferenceAware::default().bw_demand_ceiling,
+            }),
+            other => anyhow::bail!(
+                "unknown placement policy `{other}` \
+                 (best-fit | first-available | locality | stability | interference)"
+            ),
+        }
+    }
+
+    /// The built policy's [`PlacementPolicy::name`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementSpec::BestFit => "best-fit",
+            PlacementSpec::FirstAvailable => "first-available",
+            PlacementSpec::LocalityAware => "locality",
+            PlacementSpec::StabilityAware => "stability",
+            PlacementSpec::InterferenceAware { .. } => "interference",
+        }
+    }
+}
+
 /// The paper's default: the feasible peer whose fitting segment leaves
 /// the least leftover (minimises fragmentation). Ties break to the lower
 /// device index for determinism.

@@ -18,7 +18,8 @@
 //! | [`memsim`] | calibrated multi-GPU node simulation: HBM/host/CXL/SSD arenas, NVLink/PCIe/CXL/NVMe interconnect model, inter-node NIC fabric, virtual clock, async DMA, tenant pressure |
 //! | [`coldtier`] | the SSD cold tier: fixed-size-page `Pager` over the byte-addressed SSD arena, watermark-driven write-back `Evictor`, and the modeled KV `Compressor` (ratio + decode-side decompression cost) behind the compress → demote → drop pressure ladder |
 //! | [`tenantsim`] | closed-loop co-tenant workloads: a `TenantActor` trait (training / inference / batch actors + replay-mode timeline) allocating real arena segments and injecting collective traffic, mediated by a `PressureBroker` that makes harvest leases yield — tenants always win |
-//! | [`cluster`] | scale-out serving: N simulated nodes behind a pluggable request router (round-robin / least-loaded / prefix-affinity), RDMA/Ethernet node fabric, cross-node prefix-KV migration, per-node + aggregate metrics rollups |
+//! | [`cluster`] | scale-out serving: N simulated nodes behind a pluggable request router (round-robin / least-loaded / prefix-affinity / harvest-priced), RDMA/Ethernet node fabric, cross-node prefix-KV migration, per-node + aggregate metrics rollups |
+//! | [`control`] | SLO control plane: per-node feedback admission (occupancy + tenant pressure + queueing stability, hysteresis watermarks), harvest-priced router scoring, `[slo]` targets tracked by a sliding `SloMonitor` |
 //! | [`harvest`] | the paper's contribution behind a tier-aware lease API: `MemoryTier` + `TierPreference` on every allocation, sessions with RAII `Lease`s that carry their resident tier, vectored all-or-nothing `alloc_many`, pull-model revocation events with `Dropped`/`Demoted` actions, the unified `Transfer` builder (populate/fetch/migrate), cross-tier placement policies (`place_tiered`), deadline-aware prefetch planning (`prefetch`), MIG isolation (the paper's raw `harvest_alloc`/`harvest_free`/`harvest_register_cb` survive as deprecated shims) |
 //! | [`moe`] | MoE serving path: Table-1 model registry, routing simulator, expert residency map + rebalancer, CGOPipe-style pipeline |
 //! | [`kv`] | paged KV cache: blocks, unified block table, `KvOffloadManager`, per-device `OffloadingHandler`, eviction policies |
@@ -34,6 +35,7 @@
 pub mod cluster;
 pub mod coldtier;
 pub mod config;
+pub mod control;
 pub mod harvest;
 pub mod kv;
 pub mod memsim;

@@ -260,10 +260,18 @@ fn serve_kv(cfg: &DeploymentConfig) -> Result<()> {
     if cfg.nodes > 1 {
         return serve_kv_cluster(cfg);
     }
-    let mut hr = HarvestRuntime::new(SimNode::new(cfg.node_spec()), cfg.harvest_config());
+    let mut hr = HarvestRuntime::with_policy(
+        SimNode::new(cfg.node_spec()),
+        cfg.harvest_config(),
+        cfg.placement_spec()?.build(),
+    );
     let kv = cfg.kv_config()?;
     let scheduler = cfg.scheduler_spec()?.build();
-    let engine_cfg = SimEngineConfig::new(kv, cfg.decode_slots, cfg.max_running);
+    let mut engine_cfg = SimEngineConfig::new(kv, cfg.decode_slots, cfg.max_running);
+    let admission = cfg.admission_policy()?;
+    if let Some(acfg) = admission.admission_config() {
+        engine_cfg = engine_cfg.with_admission(acfg);
+    }
     let mut engine = SimEngine::new(engine_cfg, scheduler, 0);
     if let Some(fleet) = cfg.tenant_fleet() {
         let mix = cfg.node0_tenant_mix();
@@ -294,6 +302,14 @@ fn serve_kv(cfg: &DeploymentConfig) -> Result<()> {
         fmt_ns(m.makespan_ns()),
         m.tokens_per_sec(),
         report.scheduler
+    );
+    println!(
+        "  admission {}: shed {} ({:.1}%), deferred {}, goodput {:.0} tok/s",
+        admission.name(),
+        report.sheds.len(),
+        100.0 * m.shed_rate(),
+        m.deferred_admissions,
+        m.goodput_tok_s()
     );
     let s = &report.kv_stats;
     println!(
@@ -346,6 +362,14 @@ fn serve_kv_cluster(cfg: &DeploymentConfig) -> Result<()> {
         report.stats.prefix_migrations,
         fmt_bytes(report.stats.migrated_bytes),
         cluster.fabric().kind().name()
+    );
+    println!(
+        "  admission {}: node sheds {}, deferred {}, goodput {:.0} tok/s ({:.1}% shed)",
+        cfg.admission_policy()?.name(),
+        report.stats.node_shed,
+        m.deferred_admissions,
+        m.goodput_tok_s(),
+        100.0 * m.shed_rate()
     );
     for n in &report.per_node {
         println!(

@@ -258,7 +258,7 @@ impl RealEngine {
                     }
                 }
                 if s.req.generated >= s.req.max_new_tokens {
-                    metrics.on_finish(0, s.started.elapsed().as_nanos() as u64);
+                    metrics.on_finish(0, s.started.elapsed().as_nanos() as u64, s.req.generated as u64);
                     let s = live.remove(&id).expect("live");
                     outputs.insert(
                         id.0,

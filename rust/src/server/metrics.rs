@@ -17,6 +17,23 @@ pub struct ServeMetrics {
     pub per_token: Summary,
     pub tokens_generated: u64,
     pub requests_finished: u64,
+    /// Tokens belonging to *completed* requests only — the numerator of
+    /// [`ServeMetrics::goodput_tok_s`]. Work spent on requests that
+    /// never finish (still live at run end) is excluded, so an
+    /// admission controller gets no goodput credit for half-served
+    /// requests.
+    pub tokens_completed: u64,
+    /// Requests rejected by admission control (router static-depth shed
+    /// or the node controller's shed decision).
+    pub requests_shed: u64,
+    /// Requests that were deferred by admission control at least once
+    /// before being admitted.
+    pub deferred_admissions: u64,
+    /// Total wait accrued across deferred admissions (arrival →
+    /// admission). Informational: this wait is *already counted in
+    /// TTFT*, which is measured from arrival — deferral cannot game the
+    /// latency metric.
+    pub deferred_wait_ns: Ns,
     /// Total decode time spent waiting on KV residency (reload DMA /
     /// recompute) rather than computing — the quantity the prefetch
     /// pipeline exists to shrink.
@@ -47,10 +64,27 @@ impl ServeMetrics {
         self.tokens_generated += 1;
     }
 
-    pub fn on_finish(&mut self, arrival: Ns, now: Ns) {
+    /// Record a completion; `tokens` is what the request generated end
+    /// to end and accrues to the completed-only goodput counter.
+    pub fn on_finish(&mut self, arrival: Ns, now: Ns, tokens: u64) {
         self.e2e.add((now - arrival) as f64);
         self.requests_finished += 1;
+        self.tokens_completed += tokens;
         self.end = self.end.max(now);
+    }
+
+    /// Record a request rejected by admission control.
+    pub fn on_shed(&mut self) {
+        self.requests_shed += 1;
+    }
+
+    /// Record a request admitted after deferral, with the wait it
+    /// accrued between arrival and admission. TTFT is measured from
+    /// arrival, so this wait is already inside the TTFT samples — the
+    /// counter only attributes it.
+    pub fn on_deferred_admit(&mut self, wait_ns: Ns) {
+        self.deferred_admissions += 1;
+        self.deferred_wait_ns += wait_ns;
     }
 
     /// Record time a decode step spent blocked on KV residency before
@@ -78,6 +112,10 @@ impl ServeMetrics {
         }
         self.tokens_generated += other.tokens_generated;
         self.requests_finished += other.requests_finished;
+        self.tokens_completed += other.tokens_completed;
+        self.requests_shed += other.requests_shed;
+        self.deferred_admissions += other.deferred_admissions;
+        self.deferred_wait_ns += other.deferred_wait_ns;
         self.decode_stall_ns += other.decode_stall_ns;
         self.prefetch = match (self.prefetch.take(), &other.prefetch) {
             (None, None) => None,
@@ -117,12 +155,40 @@ impl ServeMetrics {
         }
     }
 
+    /// Completed-only throughput: tokens of *finished* requests over
+    /// the makespan. The SLO controller's goodput floor steers on this.
+    pub fn goodput_tok_s(&self) -> f64 {
+        let span = self.makespan_ns();
+        if span == 0 {
+            0.0
+        } else {
+            self.tokens_completed as f64 / (span as f64 / 1e9)
+        }
+    }
+
+    /// Fraction of terminated requests (finished + shed) that were
+    /// shed. `0.0` when nothing has terminated.
+    pub fn shed_rate(&self) -> f64 {
+        let total = self.requests_finished + self.requests_shed;
+        if total == 0 {
+            0.0
+        } else {
+            self.requests_shed as f64 / total as f64
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let mut pairs: Vec<(&'static str, Json)> = vec![
             ("tokens_generated", self.tokens_generated.into()),
             ("requests_finished", self.requests_finished.into()),
             ("makespan_ns", self.makespan_ns().into()),
             ("throughput_tps", self.tokens_per_sec().into()),
+            ("tokens_completed", self.tokens_completed.into()),
+            ("goodput_tok_s", self.goodput_tok_s().into()),
+            ("requests_shed", self.requests_shed.into()),
+            ("shed_rate", self.shed_rate().into()),
+            ("deferred_admissions", self.deferred_admissions.into()),
+            ("deferred_wait_ns", self.deferred_wait_ns.into()),
             ("ttft_p50_ns", self.ttft.percentile(50.0).into()),
             ("ttft_p99_ns", self.ttft.percentile(99.0).into()),
             ("e2e_p50_ns", self.e2e.percentile(50.0).into()),
@@ -153,7 +219,7 @@ mod tests {
         m.on_first_token(0, 150);
         m.on_token(50);
         m.on_token(50);
-        m.on_finish(0, 200);
+        m.on_finish(0, 200, 2);
         assert_eq!(m.tokens_generated, 2);
         assert_eq!(m.requests_finished, 1);
         assert_eq!(m.makespan_ns(), 100);
@@ -165,7 +231,7 @@ mod tests {
         let mut m = ServeMetrics::new();
         m.on_start(100);
         m.on_start(999);
-        m.on_finish(0, 300);
+        m.on_finish(0, 300, 0);
         assert_eq!(m.makespan_ns(), 200);
     }
 
@@ -175,14 +241,14 @@ mod tests {
         a.on_start(100);
         a.on_first_token(0, 150);
         a.on_token(50);
-        a.on_finish(0, 200);
+        a.on_finish(0, 200, 1);
         let mut b = ServeMetrics::new();
         b.on_start(50);
         b.on_first_token(0, 90);
         b.on_token(40);
         b.on_token(40);
         b.on_stall(7);
-        b.on_finish(0, 400);
+        b.on_finish(0, 400, 2);
         a.merge(&b);
         assert_eq!(a.tokens_generated, 3);
         assert_eq!(a.requests_finished, 2);
@@ -212,7 +278,7 @@ mod tests {
         let mut m = ServeMetrics::new();
         m.on_start(0);
         m.on_token(10);
-        m.on_finish(0, 10);
+        m.on_finish(0, 10, 1);
         let j = m.to_json();
         assert!(j.get("throughput_tps").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(j.get("tokens_generated").unwrap().as_u64().unwrap(), 1);
@@ -224,7 +290,7 @@ mod tests {
         m.on_start(0);
         m.on_stall(40);
         m.on_stall(2);
-        m.on_finish(0, 100);
+        m.on_finish(0, 100, 0);
         assert_eq!(m.decode_stall_ns, 42);
         let j = m.to_json();
         assert_eq!(j.get("decode_stall_ns").unwrap().as_u64().unwrap(), 42);
@@ -237,5 +303,38 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("prefetch_hits").unwrap().as_u64().unwrap(), 2);
         assert_eq!(j.get("prefetch_issued").unwrap().as_u64().unwrap(), 3);
+    }
+
+    #[test]
+    fn goodput_shed_rate_and_deferrals() {
+        let mut m = ServeMetrics::new();
+        m.on_start(0);
+        // Two finished requests (8 tokens each), one shed, one deferral.
+        for _ in 0..20 {
+            m.on_token(5);
+        }
+        m.on_finish(0, 50, 8);
+        m.on_finish(0, 100, 8);
+        m.on_shed();
+        m.on_deferred_admit(30);
+        // Goodput counts completed tokens (16), not all generated (20).
+        assert!((m.goodput_tok_s() - 16.0 / 100e-9).abs() < 1.0);
+        assert!(m.goodput_tok_s() < m.tokens_per_sec());
+        assert!((m.shed_rate() - 1.0 / 3.0).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.get("tokens_completed").unwrap().as_u64().unwrap(), 16);
+        assert_eq!(j.get("requests_shed").unwrap().as_u64().unwrap(), 1);
+        assert!(j.get("goodput_tok_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("shed_rate").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("deferred_admissions").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(j.get("deferred_wait_ns").unwrap().as_u64().unwrap(), 30);
+        // New counters roll up through merge.
+        let mut rollup = ServeMetrics::new();
+        rollup.merge(&m);
+        rollup.merge(&m);
+        assert_eq!(rollup.tokens_completed, 32);
+        assert_eq!(rollup.requests_shed, 2);
+        assert_eq!(rollup.deferred_admissions, 2);
+        assert_eq!(rollup.deferred_wait_ns, 60);
     }
 }

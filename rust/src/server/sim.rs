@@ -18,6 +18,7 @@ use super::metrics::ServeMetrics;
 use super::request::Request;
 use super::scheduler::Scheduler;
 use super::stepper::{AgingConfig, NodeStepper, RequestOutcome};
+use crate::control::AdmissionConfig;
 use crate::harvest::prefetch::PrefetchConfig;
 use crate::harvest::HarvestRuntime;
 use crate::kv::{KvConfig, KvOffloadManager};
@@ -45,6 +46,10 @@ pub struct SimEngineConfig {
     /// sweep, so single-node and cluster runs share the cadence by
     /// construction.
     pub aging: Option<AgingConfig>,
+    /// SLO feedback admission control (None = admit everything that
+    /// fits, the legacy behavior). The stepper owns the controller, so
+    /// single-node and cluster runs make identical decisions.
+    pub admission: Option<AdmissionConfig>,
 }
 
 impl SimEngineConfig {
@@ -60,6 +65,7 @@ impl SimEngineConfig {
             prefill_ns_per_token: (per_tok / 4.0) as Ns,
             prefetch: None,
             aging: None,
+            admission: None,
         }
     }
 
@@ -72,6 +78,12 @@ impl SimEngineConfig {
     /// Enable the background idle-aging sweep.
     pub fn with_aging(mut self, cfg: AgingConfig) -> Self {
         self.aging = Some(cfg);
+        self
+    }
+
+    /// Enable SLO feedback admission control.
+    pub fn with_admission(mut self, cfg: AdmissionConfig) -> Self {
+        self.admission = Some(cfg);
         self
     }
 }
@@ -91,6 +103,9 @@ pub struct SimEngineReport {
     pub completions: Vec<RequestOutcome>,
     /// Engine iterations the run took.
     pub steps: u64,
+    /// Requests the admission controller shed, in decision order
+    /// (empty without a controller).
+    pub sheds: Vec<crate::kv::SeqId>,
 }
 
 /// The engine: a closed-loop driver over one [`NodeStepper`].
@@ -142,6 +157,7 @@ impl SimEngine {
             tenant: self.stepper.tenant_stats(),
             completions: self.stepper.completions().to_vec(),
             steps: self.stepper.steps(),
+            sheds: self.stepper.shed_ids().to_vec(),
         }
     }
 }

@@ -10,7 +10,8 @@
 //! ```text
 //!   idle? ── jump to next arrival ─┐
 //!                                  ▼
-//!   admit arrived requests (prefill, prefix-cache aware)
+//!   admit arrived requests (SLO admission control: admit/defer/shed;
+//!                           prefill, prefix-cache aware)
 //!                                  ▼
 //!   select cohort ── sync (drain revocations) ── idle-age sweep
 //!                                  ▼
@@ -64,11 +65,12 @@ use super::metrics::ServeMetrics;
 use super::request::Request;
 use super::scheduler::Scheduler;
 use super::sim::SimEngineConfig;
+use crate::control::{AdmissionController, AdmissionDecision, AdmissionSignals, AdmissionStats};
 use crate::harvest::{HarvestRuntime, Transfer};
 use crate::kv::{KvOffloadManager, SeqId};
 use crate::memsim::{DeviceId, Ns};
 use crate::tenantsim::{FleetStats, TenantFleet};
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 /// Sequence-id namespace for prefix-cache sequences, far above any
 /// request id the workload generator produces.
@@ -142,6 +144,17 @@ pub struct NodeStepper {
     steps: u64,
     next_sweep: Ns,
     installed: bool,
+    /// Feedback admission control (None = admit everything that fits,
+    /// the legacy behaviour).
+    admission: Option<AdmissionController>,
+    /// Requests currently deferred by the controller (only ever the
+    /// queue front, but deferral can repeat across steps).
+    deferred: BTreeSet<SeqId>,
+    /// High-water mark of arrivals already fed to the monitor window,
+    /// as the `(arrival, id)` dispatch key.
+    noted_upto: Option<(Ns, u64)>,
+    /// Requests shed by the controller, in decision order.
+    sheds: Vec<SeqId>,
     // Scratch buffers reused across steps — the hot path allocates
     // nothing per iteration.
     cohort: Vec<SeqId>,
@@ -185,6 +198,10 @@ impl NodeStepper {
             steps: 0,
             next_sweep: 0,
             installed: false,
+            admission: cfg.admission.map(AdmissionController::new),
+            deferred: BTreeSet::new(),
+            noted_upto: None,
+            sheds: Vec::new(),
             cohort: Vec::new(),
             predicted: Vec::new(),
             groups: Vec::new(),
@@ -318,6 +335,41 @@ impl NodeStepper {
         self.tenants.as_ref().map(|f| f.stats())
     }
 
+    /// `false` while the admission controller sits in its `Pressured`
+    /// hysteresis state; always `true` without a controller. Routers
+    /// prefer accepting nodes.
+    pub fn admission_accepting(&self) -> bool {
+        self.admission.as_ref().is_none_or(|c| c.accepting())
+    }
+
+    /// Controller decision counters, when a controller is attached.
+    pub fn admission_stats(&self) -> Option<AdmissionStats> {
+        self.admission.as_ref().map(|c| c.stats())
+    }
+
+    /// Requests shed by the admission controller, in decision order.
+    pub fn shed_ids(&self) -> &[SeqId] {
+        &self.sheds
+    }
+
+    /// KV-block pool occupancy, per-mille.
+    pub fn occupancy_pm(&self) -> u32 {
+        let cap = self.cfg.kv.local_capacity_blocks.max(1);
+        (self.kv.local_blocks().min(cap) as u128 * 1000 / cap as u128) as u32
+    }
+
+    /// Tenant-held fraction of total GPU HBM at `hr`'s current virtual
+    /// time, per-mille.
+    pub fn tenant_pressure_pm(hr: &HarvestRuntime) -> u32 {
+        let now = hr.node.clock.now();
+        let (mut held, mut cap) = (0u64, 0u64);
+        for g in &hr.node.gpus {
+            held += g.tenant_used_at(now);
+            cap += g.hbm.capacity();
+        }
+        if cap == 0 { 0 } else { (held.min(cap) as u128 * 1000 / cap as u128) as u32 }
+    }
+
     // -- prefix-cache migration (cluster spillover) ----------------------
 
     /// Read out `group`'s blocks for a fabric migration: restore
@@ -384,20 +436,78 @@ impl NodeStepper {
 
     // -- the step body ---------------------------------------------------
 
+    /// Feed every arrived-but-unseen request's arrival time into the
+    /// controller's monitor window (exactly once per request). Pending
+    /// stays `(arrival, id)`-sorted and is only popped from the front,
+    /// so the unseen requests form a suffix past `noted_upto`.
+    fn note_arrivals(&mut self, now: Ns) {
+        let Some(ctl) = self.admission.as_mut() else { return };
+        for r in &self.pending {
+            let key = (r.arrival, r.id.0);
+            if self.noted_upto.is_some_and(|hi| key <= hi) {
+                continue;
+            }
+            if r.arrival > now {
+                break;
+            }
+            ctl.note_arrival(r.arrival);
+            self.noted_upto = Some(key);
+        }
+    }
+
     /// Admission + prefill for every arrived request that fits. The
     /// admission cutoff is the *rolling* clock: a request arriving while
     /// an earlier admission's prefill advanced time joins the same
     /// admission round instead of waiting a full decode step.
+    ///
+    /// With an [`AdmissionController`] attached, each front request gets
+    /// a tri-state verdict: admit (prefill now — TTFT still counts from
+    /// arrival, so any deferral wait already paid is inside the metric),
+    /// defer (leave the FIFO intact and re-examine next step), or shed
+    /// (pop, record, never serve).
     fn admit_ready(&mut self, hr: &mut HarvestRuntime) {
+        self.note_arrivals(hr.node.clock.now());
         while self.live.len() < self.cfg.max_running {
             let Some(front) = self.pending.front() else { break };
             if front.arrival > hr.node.clock.now() {
                 break;
             }
-            let mut req = self.pending.pop_front().expect("checked front");
-            self.prefill(hr, &mut req);
-            self.scheduler.admit(req.id);
-            self.live.insert(req.id, req);
+            let (id, arrival) = (front.id, front.arrival);
+            let decision = match self.admission.is_some() {
+                false => AdmissionDecision::Admit,
+                true => {
+                    let sig = AdmissionSignals {
+                        occupancy_pm: self.occupancy_pm(),
+                        tenant_pressure_pm: Self::tenant_pressure_pm(hr),
+                        queue_depth: self.pending.len() + self.live.len(),
+                        live: self.live.len(),
+                    };
+                    let ctl = self.admission.as_mut().expect("checked admission");
+                    ctl.decide(hr.node.clock.now(), arrival, &sig)
+                }
+            };
+            match decision {
+                AdmissionDecision::Admit => {
+                    let mut req = self.pending.pop_front().expect("checked front");
+                    if self.deferred.remove(&id) {
+                        let wait = hr.node.clock.now().saturating_sub(arrival);
+                        self.metrics.on_deferred_admit(wait);
+                    }
+                    self.prefill(hr, &mut req);
+                    self.scheduler.admit(req.id);
+                    self.live.insert(req.id, req);
+                }
+                AdmissionDecision::Defer => {
+                    self.deferred.insert(id);
+                    break;
+                }
+                AdmissionDecision::Shed => {
+                    self.pending.pop_front();
+                    self.deferred.remove(&id);
+                    self.metrics.on_shed();
+                    self.sheds.push(id);
+                }
+            }
         }
     }
 
@@ -525,7 +635,11 @@ impl NodeStepper {
                     finished_at: now,
                     generated: req.generated,
                 };
-                self.metrics.on_finish(outcome.arrival, now);
+                self.metrics.on_finish(outcome.arrival, now, outcome.generated as u64);
+                if let Some(ctl) = self.admission.as_mut() {
+                    let ttft = outcome.first_token_at.saturating_sub(outcome.arrival);
+                    ctl.note_finish(now, ttft, outcome.generated as u64);
+                }
                 self.scheduler.retire(seq);
                 self.kv.finish_seq(hr, seq);
                 self.live.remove(&seq);

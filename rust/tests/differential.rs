@@ -6,7 +6,9 @@
 //! to *bit-for-bit* identical results — per-request completion times,
 //! KV counter ledgers (reloads, recomputes, promotions, ...), and
 //! per-tier byte ledgers — across router policies, schedulers, shared
-//! prefixes, co-tenant fleets, prefetch and idle-aging.
+//! prefixes, co-tenant fleets, prefetch, idle-aging, and the SLO
+//! admission controller (admit/defer/shed decisions and shed ledgers
+//! must match id-for-id).
 //!
 //! Also here: same-seed determinism of the calendar path, and a golden
 //! trace for one canonical 4-node workload so stepper edits that shift
@@ -15,8 +17,9 @@
 //! be hand-computed); once blessed, any drift is a hard failure.
 
 use harvest::cluster::{Cluster, ClusterReport, ClusterSpec, RouterPolicy, SchedulerSpec, TierLedger};
+use harvest::control::{AdmissionConfig, SloConfig};
 use harvest::harvest::{HarvestConfig, HarvestRuntime, PrefetchConfig};
-use harvest::kv::{KvConfig, KvStats};
+use harvest::kv::{KvConfig, KvStats, SeqId};
 use harvest::memsim::{NodeSpec, SimNode};
 use harvest::moe::find_kv_model;
 use harvest::server::{
@@ -43,12 +46,14 @@ fn tenant_mix() -> TenantMix {
 #[derive(Debug, PartialEq)]
 struct Trace {
     completions: Vec<RequestOutcome>,
+    sheds: Vec<SeqId>,
     kv_stats: KvStats,
     ledger: TierLedger,
     steps: u64,
     prefix_hits: u64,
     decode_stall_ns: u64,
     tokens_generated: u64,
+    deferred_admissions: u64,
 }
 
 fn sim_side(
@@ -73,12 +78,14 @@ fn sim_side(
     let report = eng.run(&mut hr, WorkloadGen::new(spec).generate());
     Trace {
         completions: report.completions,
+        sheds: report.sheds,
         kv_stats: report.kv_stats,
         ledger: TierLedger::snapshot(&hr),
         steps: report.steps,
         prefix_hits: eng.stepper().prefix_hits(),
         decode_stall_ns: report.metrics.decode_stall_ns,
         tokens_generated: report.metrics.tokens_generated,
+        deferred_admissions: report.metrics.deferred_admissions,
     }
 }
 
@@ -94,16 +101,18 @@ fn cluster_side(
     cspec.tenants = mix.cloned();
     let mut cluster = Cluster::new(&cspec, engine, sched);
     let report = cluster.run(WorkloadGen::new(spec).generate());
-    assert_eq!(report.stats.shed, 0, "1-node default spec must not shed");
+    assert_eq!(report.stats.shed, 0, "1-node default spec must not shed at the router");
     let n = &report.per_node[0];
     Trace {
         completions: n.completions.clone(),
+        sheds: cluster.node(0).shed_ids().to_vec(),
         kv_stats: n.kv_stats.clone(),
         ledger: n.ledger,
         steps: n.steps,
         prefix_hits: n.prefix_hits,
         decode_stall_ns: n.metrics.decode_stall_ns,
         tokens_generated: n.metrics.tokens_generated,
+        deferred_admissions: n.metrics.deferred_admissions,
     }
 }
 
@@ -224,6 +233,46 @@ fn one_node_cluster_matches_engine_with_idle_aging() {
         staggered_prefix_workload(),
         RouterPolicy::LeastLoaded,
         None,
+    );
+}
+
+/// The SLO admission controller is part of the shared loop body, so a
+/// controller-armed engine and a 1-node cluster make identical
+/// admit/defer/shed calls: completions, shed ledgers (exact ids, in
+/// shed order), and deferral counters all match bit for bit. The
+/// cluster side relies on `Cluster::new` passing a pre-armed engine
+/// config through untouched under the default static spec.
+#[test]
+fn one_node_cluster_matches_engine_with_admission_controller() {
+    let acfg = AdmissionConfig {
+        slo: SloConfig {
+            ttft_p99_ns: 5_000_000,
+            goodput_floor_tps: 0.0,
+            window_ns: 10_000_000,
+        },
+        high_watermark_pct: 85,
+        low_watermark_pct: 60,
+    };
+    // Tight pool + sustained overload: the controller must actually
+    // defer and shed on both paths, or the arm proves nothing (guarded
+    // below).
+    let engine = SimEngineConfig::new(kv_cfg(32), 2, 4).with_admission(acfg);
+    let overload = WorkloadSpec {
+        n_requests: 48,
+        mean_prompt_tokens: 128.0,
+        max_new_tokens: 16,
+        mean_interarrival_ns: 150_000,
+        seed: 23,
+        ..Default::default()
+    };
+    let sim = sim_side(engine, SchedulerSpec::Fcfs, overload, None);
+    let cluster =
+        cluster_side(engine, SchedulerSpec::Fcfs, overload, RouterPolicy::LeastLoaded, None);
+    assert!(!sim.sheds.is_empty(), "controller arm: the case must actually shed");
+    assert!(!sim.completions.is_empty(), "controller arm: the case must still serve");
+    assert_eq!(
+        sim, cluster,
+        "controller-on single-node cluster diverged from the bare engine"
     );
 }
 

@@ -793,6 +793,147 @@ mod cluster_serving {
     }
 
     #[test]
+    fn harvest_priced_beats_least_loaded_p99_ttft_under_heterogeneous_tenants() {
+        use harvest::tenantsim::TenantMix;
+
+        // Nodes 2 and 3 host a guaranteed batch tenant bursting to
+        // nearly the whole peer GPU; nodes 0 and 1 run idle. Least-loaded
+        // balances queue depths blindly, so half the fleet lands on nodes
+        // whose peer tier is gone and churning (demotions, host reloads).
+        // Harvest-priced routing sees the missing harvestable bytes and
+        // the churn discount and steers around the contended pair.
+        let run = |policy: RouterPolicy| {
+            let mut spec = ClusterSpec::new(4);
+            spec.router = policy;
+            spec.harvest.demote_to_host = true;
+            for node in [2usize, 3] {
+                spec.tenant_overrides.insert(
+                    node,
+                    TenantMix {
+                        enabled: true,
+                        training: 0,
+                        inference: 0,
+                        batch: 1,
+                        batch_gib: 76,
+                        seed: 3 + node as u64,
+                        ..Default::default()
+                    },
+                );
+            }
+            let kv = KvConfig {
+                model: find_kv_model("deepseek").unwrap(),
+                block_tokens: 16,
+                // tight pool: decode spills into the harvest tiers
+                local_capacity_blocks: 24,
+                use_harvest: true,
+                host_backed_peer: false,
+            };
+            let engine = SimEngineConfig::new(kv, 4, 8);
+            let mut cluster =
+                Cluster::new(&spec, engine, SchedulerSpec::CompletelyFair { quantum: 1 });
+            let reqs = WorkloadGen::new(WorkloadSpec {
+                n_requests: 96,
+                mean_prompt_tokens: 96.0,
+                max_new_tokens: 12,
+                mean_interarrival_ns: 800_000,
+                ..Default::default()
+            })
+            .generate();
+            cluster.run(reqs)
+        };
+        let ll = run(RouterPolicy::LeastLoaded);
+        let hp = run(RouterPolicy::HarvestPriced);
+        assert_eq!(ll.aggregate.requests_finished, 96);
+        assert_eq!(hp.aggregate.requests_finished, 96);
+        assert_eq!(hp.stats.shed + hp.stats.node_shed, 0, "routing test must not shed");
+        // Harvest-priced demonstrably shifts work onto the idle pair...
+        let idle_routed = |r: &harvest::cluster::ClusterReport| {
+            r.per_node[0].routed + r.per_node[1].routed
+        };
+        assert!(
+            idle_routed(&hp) > idle_routed(&ll),
+            "harvest-priced routed {} requests to the idle pair, least-loaded {}",
+            idle_routed(&hp),
+            idle_routed(&ll)
+        );
+        // ...and the TTFT tail tightens.
+        let ll_p99 = ll.aggregate.ttft.percentile(99.0);
+        let hp_p99 = hp.aggregate.ttft.percentile(99.0);
+        assert!(
+            hp_p99 < ll_p99,
+            "harvest-priced p99 ttft {hp_p99:.0} ns not under least-loaded {ll_p99:.0} ns"
+        );
+    }
+
+    #[test]
+    fn slo_admission_holds_p99_ttft_where_static_shedding_collapses() {
+        // The find_knee bench's headline, pinned as a test: push one
+        // node past its stability boundary (arrivals faster than it
+        // drains). The static gate admits everything up to a depth it
+        // cannot justify, so admitted requests queue without bound and
+        // the p99 TTFT grows with the backlog. The SLO controller sheds
+        // the excess and holds the tail near its budget.
+        use harvest::control::{AdmissionConfig, AdmissionPolicy, SloConfig};
+
+        let slo = SloConfig {
+            ttft_p99_ns: 30_000_000, // 30 ms
+            goodput_floor_tps: 0.0,
+            window_ns: 20_000_000,
+        };
+        let run = |admission: AdmissionPolicy| {
+            let mut spec = ClusterSpec::new(1);
+            spec.admission = admission;
+            let kv = KvConfig {
+                model: find_kv_model("deepseek").unwrap(),
+                block_tokens: 16,
+                local_capacity_blocks: 48,
+                use_harvest: true,
+                host_backed_peer: false,
+            };
+            // 2 decode slots, long decodes, arrivals every 150 µs: far
+            // past the knee for this service rate.
+            let engine = SimEngineConfig::new(kv, 2, 4);
+            let mut cluster = Cluster::new(&spec, engine, SchedulerSpec::Fcfs);
+            let reqs = WorkloadGen::new(WorkloadSpec {
+                n_requests: 160,
+                mean_prompt_tokens: 128.0,
+                max_new_tokens: 24,
+                mean_interarrival_ns: 150_000,
+                ..Default::default()
+            })
+            .generate();
+            cluster.run(reqs)
+        };
+        let occupancy = run(AdmissionPolicy::SloOccupancy(AdmissionConfig {
+            slo,
+            high_watermark_pct: 85,
+            low_watermark_pct: 60,
+        }));
+        let legacy = run(AdmissionPolicy::StaticDepth { shed_queue_depth: usize::MAX });
+        let total = |r: &harvest::cluster::ClusterReport| {
+            r.aggregate.requests_finished + r.stats.shed + r.stats.node_shed
+        };
+        assert_eq!(total(&occupancy), 160, "every arrival served or shed exactly once");
+        assert_eq!(total(&legacy), 160);
+        assert_eq!(legacy.stats.shed + legacy.stats.node_shed, 0, "unbounded gate never sheds");
+        let held = occupancy.aggregate.ttft.percentile(99.0);
+        let collapsed = legacy.aggregate.ttft.percentile(99.0);
+        assert!(
+            occupancy.stats.node_shed > 0,
+            "past the knee the controller must shed some load"
+        );
+        assert!(
+            held < collapsed,
+            "SLO admission p99 ttft {held:.0} ns not under the unbounded gate's \
+             {collapsed:.0} ns"
+        );
+        // the survivors still make real progress (arrivals run ~16x the
+        // service rate here, so most of the load *should* shed — but a
+        // controller that sheds everything defeats the point)
+        assert!(occupancy.aggregate.requests_finished >= 8, "over-shedding defeats the point");
+    }
+
+    #[test]
     fn router_policy_and_cluster_shape_selectable_from_toml() {
         // End-to-end: TOML text -> DeploymentConfig -> ClusterSpec ->
         // served workload, for every policy spelling.

@@ -1870,3 +1870,192 @@ fn prop_single_node_cluster_matches_engine() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------
+// SLO admission control
+// ---------------------------------------------------------------------
+
+/// Admission conservation under feedback control: with a controller
+/// armed, every generated request is served to completion or shed
+/// exactly once — never both, never lost, however deferrals interleave
+/// with finishes — the controller's own counters agree with the engine
+/// report, and nothing is ever shed while memory pressure sits below the
+/// low watermark.
+#[test]
+fn prop_admission_conservation() {
+    use harvest::control::{AdmissionConfig, SloConfig};
+    use harvest::server::{SimEngine, SimEngineConfig};
+
+    check("admission-conservation", 30, 0xAD417, |rng| {
+        let mut hr =
+            HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+        let kv = KvConfig {
+            model: find_kv_model("deepseek").unwrap(),
+            block_tokens: 16,
+            // small pools keep occupancy (and thus deferral) exercised
+            local_capacity_blocks: 12 + rng.below(48) as usize,
+            use_harvest: rng.bool(0.7),
+            host_backed_peer: false,
+        };
+        let acfg = AdmissionConfig {
+            slo: SloConfig {
+                ttft_p99_ns: 100_000 + rng.below(50_000_000),
+                goodput_floor_tps: if rng.bool(0.3) { 1e9 } else { 0.0 },
+                window_ns: 1_000_000 + rng.below(50_000_000),
+            },
+            high_watermark_pct: 60 + rng.below(35) as u32, // 60..=94
+            low_watermark_pct: 20 + rng.below(40) as u32,  // 20..=59
+        };
+        let cfg = SimEngineConfig::new(kv, 2 + rng.below(4) as usize, 4 + rng.below(8) as usize)
+            .with_admission(acfg);
+        let sched: Box<dyn Scheduler> = if rng.bool(0.5) {
+            Box::new(Fcfs::new())
+        } else {
+            Box::new(CompletelyFair::new(1 + rng.below(2) as u32))
+        };
+        let mut eng = SimEngine::new(cfg, sched, 0);
+        let n = 8 + rng.below(24) as usize;
+        let reqs = WorkloadGen::new(WorkloadSpec {
+            n_requests: n,
+            mean_prompt_tokens: 48.0 + rng.below(64) as f64,
+            max_new_tokens: 4 + rng.below(8) as u32,
+            mean_interarrival_ns: rng.below(3) * 400_000,
+            seed: rng.below(1 << 30),
+            ..Default::default()
+        })
+        .generate();
+        let report = eng.run(&mut hr, reqs);
+
+        let finished = report.metrics.requests_finished;
+        let shed = report.sheds.len() as u64;
+        if finished + shed != n as u64 {
+            return err(format!("finished {finished} + shed {shed} != arrivals {n}"));
+        }
+        let mut uniq = report.sheds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        if uniq.len() != report.sheds.len() {
+            return err(format!("duplicate ids in the shed ledger: {:?}", report.sheds));
+        }
+        if report.completions.len() as u64 != finished {
+            return err(format!(
+                "{} completion records for {finished} finishes",
+                report.completions.len()
+            ));
+        }
+        for c in &report.completions {
+            if report.sheds.contains(&c.id) {
+                return err(format!("{:?} both shed and completed", c.id));
+            }
+        }
+        if report.metrics.requests_shed != shed {
+            return err(format!(
+                "metrics shed {} != ledger {shed}",
+                report.metrics.requests_shed
+            ));
+        }
+        let stats = eng.stepper().admission_stats().expect("controller armed");
+        if stats.admitted != finished || stats.shed != shed {
+            return err(format!(
+                "controller counters ({}, {}) disagree with report ({finished}, {shed})",
+                stats.admitted, stats.shed
+            ));
+        }
+        // Shedding below the low watermark is forbidden by construction.
+        if stats.shed > 0 && stats.min_shed_pressure_pm < acfg.low_watermark_pct * 10 {
+            return err(format!(
+                "shed at {} pm, below the low watermark {} pm",
+                stats.min_shed_pressure_pm,
+                acfg.low_watermark_pct * 10
+            ));
+        }
+        // Deferred admissions surfaced in the metrics iff deferrals ran.
+        if stats.defer_events == 0 && report.metrics.deferred_admissions > 0 {
+            return err("deferred admissions recorded without defer decisions".into());
+        }
+        Ok(())
+    });
+}
+
+/// The hysteresis dead band never oscillates: driving the controller
+/// with an arbitrary pressure walk, the accepting state flips only when
+/// the walk genuinely crosses a watermark (enters at >= high, exits at
+/// <= low), enters and exits alternate, and a walk confined strictly
+/// inside the (low, high) band never changes state at all.
+#[test]
+fn prop_admission_hysteresis_no_oscillation() {
+    use harvest::control::{AdmissionConfig, AdmissionController, AdmissionSignals, SloConfig};
+
+    check("admission-hysteresis", 120, 0x4F57, |rng| {
+        let cfg = AdmissionConfig {
+            slo: SloConfig::default(),
+            high_watermark_pct: 60 + rng.below(35) as u32, // 60..=94
+            low_watermark_pct: 20 + rng.below(40) as u32,  // 20..=59
+        };
+        let (high_pm, low_pm) = (cfg.high_watermark_pct * 10, cfg.low_watermark_pct * 10);
+        let mut ctl = AdmissionController::new(cfg);
+        let mut was = ctl.accepting();
+        let mut transitions = 0u64;
+        let mut t = 0u64;
+        for _ in 0..200 {
+            t += 1 + rng.below(1_000);
+            let pressure = rng.below(1_001) as u32;
+            let s = AdmissionSignals {
+                occupancy_pm: pressure,
+                tenant_pressure_pm: 0,
+                queue_depth: rng.below(8) as usize,
+                live: rng.below(4) as usize,
+            };
+            ctl.note_arrival(t);
+            if rng.bool(0.5) {
+                ctl.note_finish(t, rng.below(100_000), 4);
+            }
+            let _ = ctl.decide(t, t.saturating_sub(rng.below(1_000)), &s);
+            let is = ctl.accepting();
+            if is != was {
+                transitions += 1;
+                if was && pressure < high_pm {
+                    return err(format!(
+                        "entered Pressured at {pressure} pm, below high {high_pm} pm"
+                    ));
+                }
+                if !was && pressure > low_pm {
+                    return err(format!(
+                        "exited Pressured at {pressure} pm, above low {low_pm} pm"
+                    ));
+                }
+            }
+            was = is;
+        }
+        let st = ctl.stats();
+        if st.pressure_enters + st.pressure_exits != transitions {
+            return err(format!(
+                "{} + {} state changes recorded, {transitions} observed",
+                st.pressure_enters, st.pressure_exits
+            ));
+        }
+        if st.pressure_enters.abs_diff(st.pressure_exits) > 1 {
+            return err(format!(
+                "enters {} / exits {} do not alternate",
+                st.pressure_enters, st.pressure_exits
+            ));
+        }
+        // A walk strictly inside the dead band holds the initial state.
+        let mut band = AdmissionController::new(cfg);
+        let initial = band.accepting();
+        for i in 0..100u64 {
+            let p = low_pm + 1 + rng.below(u64::from(high_pm - low_pm - 1)) as u32;
+            let s = AdmissionSignals {
+                occupancy_pm: p,
+                tenant_pressure_pm: 0,
+                queue_depth: 2,
+                live: 1,
+            };
+            band.decide(i, i, &s);
+            if band.accepting() != initial {
+                return err(format!("state flipped inside the dead band at {p} pm"));
+            }
+        }
+        Ok(())
+    });
+}
