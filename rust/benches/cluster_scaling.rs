@@ -23,6 +23,7 @@
 use harvest::cluster::{Cluster, ClusterReport, ClusterSpec, RouterPolicy, SchedulerSpec};
 use harvest::kv::KvConfig;
 use harvest::moe::find_kv_model;
+use harvest::obs::MetricsRegistry;
 use harvest::server::{SimEngineConfig, WorkloadGen, WorkloadSpec};
 use harvest::util::bench::{JsonReport, Table};
 use harvest::util::json::{obj, Json};
@@ -47,6 +48,12 @@ fn run(nodes: usize, policy: RouterPolicy, spec: WorkloadSpec) -> ClusterReport 
 }
 
 fn report_json(r: &ClusterReport) -> Json {
+    // Cluster-wide registry snapshot: merged serve metrics (histograms
+    // merge bucket-wise, so the p99s here are the true fleet tails) plus
+    // the summed tier ledger, in the same shape `serve` prints.
+    let mut reg = MetricsRegistry::new();
+    r.aggregate.register(&mut reg, "serve");
+    r.ledger.register(&mut reg, "ledger");
     obj([
         ("nodes", Json::from(r.per_node.len())),
         ("policy", Json::from(r.router_policy)),
@@ -57,6 +64,7 @@ fn report_json(r: &ClusterReport) -> Json {
         ("shed", Json::from(r.stats.shed)),
         ("prefix_migrations", Json::from(r.stats.prefix_migrations)),
         ("fabric_bytes", Json::from(r.fabric_bytes)),
+        ("registry", reg.to_json()),
     ])
 }
 

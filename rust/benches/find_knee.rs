@@ -30,6 +30,7 @@ use harvest::cluster::{Cluster, ClusterReport, ClusterSpec, SchedulerSpec};
 use harvest::control::{AdmissionConfig, AdmissionPolicy, SloConfig};
 use harvest::kv::KvConfig;
 use harvest::moe::find_kv_model;
+use harvest::obs::MetricsRegistry;
 use harvest::server::{SimEngineConfig, WorkloadGen, WorkloadSpec};
 use harvest::util::bench::{JsonReport, Table};
 use harvest::util::fmt_ns;
@@ -69,6 +70,9 @@ struct Arm {
     finished: u64,
     shed: u64,
     shed_pct: f64,
+    /// Tier-ledger subtree from the unified metrics registry (where the
+    /// run's harvested bytes landed).
+    registry: Json,
 }
 
 fn run(admission: AdmissionPolicy, interarrival_ns: u64, n: usize) -> Arm {
@@ -94,12 +98,15 @@ fn run(admission: AdmissionPolicy, interarrival_ns: u64, n: usize) -> Arm {
         n as u64,
         "every request must finish or land in a shed ledger"
     );
+    let mut reg = MetricsRegistry::new();
+    r.ledger.register(&mut reg, "ledger");
     Arm {
         p99_ttft_ns: r.aggregate.ttft.percentile(99.0),
         goodput_tok_s: r.aggregate.goodput_tok_s(),
         finished: r.aggregate.requests_finished,
         shed,
         shed_pct: 100.0 * shed as f64 / n as f64,
+        registry: reg.to_json(),
     }
 }
 
@@ -181,6 +188,7 @@ fn main() {
             _ => unreachable!("arm_json builds an object"),
         };
         occ.insert("knee_held".into(), Json::Bool(held));
+        occ.insert("registry".into(), oc.registry.clone());
         json.add(&format!("occupancy_{gap}"), Json::Obj(occ));
     }
 

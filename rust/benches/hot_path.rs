@@ -16,6 +16,8 @@ use harvest::kv::{KvConfig, KvOffloadManager, SeqId};
 use harvest::memsim::{NodeSpec, SimNode};
 use harvest::moe::pipeline::OffloadTier;
 use harvest::moe::{find_kv_model, find_moe_model, CgoPipe, ExpertRebalancer, RouterSim};
+use harvest::obs::profile::{self, Phase};
+use harvest::obs::trace as obstrace;
 use harvest::runtime::{DecodeSlot, ModelRuntime};
 use harvest::server::{CompletelyFair, Scheduler, SimEngineConfig, WorkloadGen, WorkloadSpec};
 use harvest::trace::{ClusterTrace, TraceSpec};
@@ -311,12 +313,7 @@ fn bench_dispatch(b: &Bench, json: &mut JsonReport) {
     );
 }
 
-fn bench_cluster_steps(json: &mut JsonReport, smoke: bool) {
-    // End-to-end stepping throughput of the event-calendar cluster loop:
-    // one 16-node run under memory pressure with staggered arrivals (the
-    // dispatch-bound regime the laggard scan was worst at), reported as
-    // stepper iterations per wall second.
-    let nodes = 16;
+fn cluster_steps_workload(smoke: bool) -> (ClusterSpec, KvConfig, Vec<harvest::server::Request>) {
     let kv = KvConfig {
         model: find_kv_model("deepseek").unwrap(),
         block_tokens: 16,
@@ -324,7 +321,7 @@ fn bench_cluster_steps(json: &mut JsonReport, smoke: bool) {
         use_harvest: true,
         host_backed_peer: false,
     };
-    let mut spec = ClusterSpec::new(nodes);
+    let mut spec = ClusterSpec::new(16);
     spec.router = RouterPolicy::LeastLoaded;
     let reqs = WorkloadGen::new(WorkloadSpec {
         n_requests: if smoke { 64 } else { 512 },
@@ -338,6 +335,15 @@ fn bench_cluster_steps(json: &mut JsonReport, smoke: bool) {
         ..Default::default()
     })
     .generate();
+    (spec, kv, reqs)
+}
+
+fn bench_cluster_steps(json: &mut JsonReport, smoke: bool) -> f64 {
+    // End-to-end stepping throughput of the event-calendar cluster loop:
+    // one 16-node run under memory pressure with staggered arrivals (the
+    // dispatch-bound regime the laggard scan was worst at), reported as
+    // stepper iterations per wall second.
+    let (spec, kv, reqs) = cluster_steps_workload(smoke);
     let mut cluster = Cluster::new(&spec, SimEngineConfig::new(kv, 4, 8), SchedulerSpec::Fcfs);
     let t = Instant::now();
     let report = sink(cluster.run(reqs));
@@ -358,6 +364,65 @@ fn bench_cluster_steps(json: &mut JsonReport, smoke: bool) {
             ("wall_ns", Json::from(wall_ns)),
             ("steps_per_sec", Json::from(steps_per_sec)),
         ]),
+    );
+    steps_per_sec
+}
+
+fn bench_cluster_steps_profiled(json: &mut JsonReport, smoke: bool) {
+    // Same workload with the per-phase stepper profiler on: where the
+    // wall clock of a step actually goes (coverage = fraction of total
+    // step time attributed to a named phase).
+    let (spec, kv, reqs) = cluster_steps_workload(smoke);
+    let mut cluster = Cluster::new(&spec, SimEngineConfig::new(kv, 4, 8), SchedulerSpec::Fcfs);
+    profile::reset();
+    profile::enable();
+    sink(cluster.run(reqs));
+    profile::disable();
+    let prof = profile::snapshot();
+    println!(
+        "{:<44} {:>11.1}% phase coverage ({} steps profiled)",
+        "stepper phase profile (16 nodes)",
+        prof.coverage() * 100.0,
+        prof.calls(Phase::Total)
+    );
+    json.add("stepper phase profile (16 nodes)", prof.to_json());
+}
+
+fn bench_obs_disabled_overhead(json: &mut JsonReport, steps_per_sec: f64) {
+    // The zero-overhead-when-off contract, measured: a disabled phase
+    // timer and a disabled trace instant must stay in the nanoseconds —
+    // they sit on every step of the serving hot path. The hard bound
+    // below fails the bench (and CI's smoke run) on a regression.
+    profile::disable();
+    obstrace::disable();
+    const N: u64 = 1_000_000;
+    let t = Instant::now();
+    for _ in 0..N {
+        let _ = sink(profile::timer(Phase::Compute));
+    }
+    let timer_ns = t.elapsed().as_nanos() as f64 / N as f64;
+    let t = Instant::now();
+    for i in 0..N {
+        obstrace::instant(obstrace::Subsystem::Stepper, "tick", i, &[]);
+    }
+    let instant_ns = t.elapsed().as_nanos() as f64 / N as f64;
+    println!(
+        "{:<44} {:>9.1} ns timer, {:.1} ns instant (disabled)",
+        "obs disabled-mode overhead", timer_ns, instant_ns
+    );
+    json.add(
+        "obs disabled-mode overhead",
+        obj([
+            ("timer_ns_per_call", Json::from(timer_ns)),
+            ("instant_ns_per_call", Json::from(instant_ns)),
+            ("cluster_steps_per_sec", Json::from(steps_per_sec)),
+        ]),
+    );
+    const BOUND_NS: f64 = 100.0;
+    assert!(
+        timer_ns < BOUND_NS && instant_ns < BOUND_NS,
+        "disabled-mode observability overhead regressed: timer {timer_ns:.1} ns, \
+         instant {instant_ns:.1} ns (bound {BOUND_NS} ns)"
     );
 }
 
@@ -414,7 +479,9 @@ fn main() {
         bench_trace(&b, &mut json);
     }
     bench_dispatch(&b, &mut json);
-    bench_cluster_steps(&mut json, smoke);
+    let steps_per_sec = bench_cluster_steps(&mut json, smoke);
+    bench_cluster_steps_profiled(&mut json, smoke);
+    bench_obs_disabled_overhead(&mut json, steps_per_sec);
     if !smoke {
         bench_pjrt_decode(&mut json);
     }

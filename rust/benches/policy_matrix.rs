@@ -29,6 +29,7 @@ use harvest::cluster::{Cluster, ClusterReport, ClusterSpec, RouterPolicy, Schedu
 use harvest::harvest::PlacementSpec;
 use harvest::kv::KvConfig;
 use harvest::moe::find_kv_model;
+use harvest::obs::MetricsRegistry;
 use harvest::server::{SimEngineConfig, WorkloadGen, WorkloadSpec};
 use harvest::tenantsim::TenantMix;
 use harvest::util::bench::{JsonReport, Table};
@@ -73,6 +74,10 @@ fn run(placement: PlacementSpec, router: RouterPolicy, spec: WorkloadSpec) -> Cl
 
 fn cell_json(placement: PlacementSpec, router: RouterPolicy, r: &ClusterReport) -> Json {
     let quiet_routed = r.per_node[0].routed + r.per_node[1].routed;
+    // Where the cell's harvested bytes actually landed, straight from
+    // the summed tier ledger via the unified registry.
+    let mut reg = MetricsRegistry::new();
+    r.ledger.register(&mut reg, "ledger");
     obj([
         ("placement", Json::from(placement.name())),
         ("router", Json::from(router.name())),
@@ -84,6 +89,7 @@ fn cell_json(placement: PlacementSpec, router: RouterPolicy, r: &ClusterReport) 
         ("churn_node_routed", Json::from(r.stats.routed - quiet_routed)),
         ("prefix_migrations", Json::from(r.stats.prefix_migrations)),
         ("fabric_bytes", Json::from(r.fabric_bytes)),
+        ("registry", reg.to_json()),
     ])
 }
 

@@ -25,6 +25,7 @@ use harvest::harvest::{HarvestConfig, HarvestRuntime};
 use harvest::kv::KvConfig;
 use harvest::memsim::{NodeSpec, SimNode};
 use harvest::moe::find_kv_model;
+use harvest::obs::MetricsRegistry;
 use harvest::server::{
     CompletelyFair, SimEngine, SimEngineConfig, SimEngineReport, WorkloadGen, WorkloadSpec,
 };
@@ -131,6 +132,14 @@ fn main() {
             m.requests_finished, n as u64,
             "{name}: the serve path must survive its co-tenants"
         );
+        // Full registry snapshot per mix: the same serve/kv/broker tree
+        // `serve` prints, so rollup tooling reads one shape everywhere.
+        let mut reg = MetricsRegistry::new();
+        m.register(&mut reg, "serve");
+        s.register(&mut reg, "kv");
+        if let Some(ts) = &r.report.tenant {
+            ts.broker.register(&mut reg, "tenant.broker");
+        }
         json.add(
             name,
             obj([
@@ -144,6 +153,7 @@ fn main() {
                 ("lease_yields", Json::from(yields)),
                 ("tenant_denied", Json::from(denied)),
                 ("tenant_traffic_bytes", Json::from(traffic)),
+                ("registry", reg.to_json()),
             ]),
         );
         if name == "none" {

@@ -27,6 +27,7 @@ use harvest::harvest::{HarvestConfig, HarvestRuntime, MemoryTier};
 use harvest::kv::{KvConfig, KvOffloadManager, KvStats, SeqId};
 use harvest::memsim::{NodeSpec, SimNode};
 use harvest::moe::find_kv_model;
+use harvest::obs::MetricsRegistry;
 use harvest::server::{AgingConfig, Fcfs, SimEngine, SimEngineConfig, WorkloadGen, WorkloadSpec};
 use harvest::tenantsim::{BatchActor, TenantFleet, TenantPriority};
 use harvest::util::bench::{JsonReport, Table};
@@ -310,6 +311,11 @@ fn main() {
         "  {} steps, {} demotions, {} compressions, {} ssd reloads, 0 recomputes",
         steps, stats.demotions, stats.compressions, stats.ssd_reloads
     );
+    // The full KvStats registry subtree for the cadence run — same
+    // names `serve` prints under `kv.*`, so the ladder's reload/demote
+    // economics line up with serve output key-for-key.
+    let mut reg = MetricsRegistry::new();
+    stats.register(&mut reg, "kv");
     json.add(
         "engine_cadence",
         obj([
@@ -319,6 +325,7 @@ fn main() {
             ("ssd_reloads", Json::from(stats.ssd_reloads)),
             ("recomputes", Json::from(stats.recomputes)),
             ("reloads", Json::from(stats.reloads())),
+            ("registry", reg.to_json()),
         ]),
     );
 

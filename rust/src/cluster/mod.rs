@@ -89,6 +89,16 @@ impl TierLedger {
         self.ssd += other.ssd;
     }
 
+    /// Register the live-bytes-by-tier snapshot into the unified metrics
+    /// registry under `prefix` (e.g. `"ledger"`).
+    pub fn register(&self, reg: &mut crate::obs::MetricsRegistry, prefix: &str) {
+        reg.counter(&format!("{prefix}.peer_bytes"), self.peer);
+        reg.counter(&format!("{prefix}.cxl_bytes"), self.cxl);
+        reg.counter(&format!("{prefix}.host_bytes"), self.host);
+        reg.counter(&format!("{prefix}.ssd_bytes"), self.ssd);
+        reg.counter(&format!("{prefix}.total_bytes"), self.total());
+    }
+
     /// Live harvest bytes by tier class on one runtime — a node's slice
     /// of the cluster ledger, and what the differential tests compare
     /// between a bare engine run and a 1-node cluster run.
@@ -404,11 +414,28 @@ impl Cluster {
         self.views.extend(self.nodes.iter().map(|n| n.view(req.prefix_group)));
         match self.router.route(&req, &self.views) {
             RouteDecision::Shed => {
+                crate::obs::trace::instant(
+                    crate::obs::trace::Subsystem::Router,
+                    "shed",
+                    at,
+                    &[("req", req.id.0)],
+                );
                 self.stats.shed += 1;
                 self.shed.push(req.id);
                 self.dispatches.push(Dispatch::Shed { at });
             }
             RouteDecision::Assign { node, migrate_prefix_from } => {
+                crate::obs::trace::instant(
+                    crate::obs::trace::Subsystem::Router,
+                    "assign",
+                    at,
+                    &[
+                        ("req", req.id.0),
+                        ("node", node as u64),
+                        ("queue", self.views[node].queue_depth as u64),
+                        ("occ_pm", self.views[node].occupancy_pm as u64),
+                    ],
+                );
                 let mut migration_src = None;
                 if let (Some(from), Some(group)) = (migrate_prefix_from, req.prefix_group) {
                     if from != node && !self.nodes[node].holds_prefix(group) {
@@ -438,6 +465,7 @@ impl Cluster {
     /// machinery), the NIC hop (FIFO contention per direction), then
     /// target-side rebuild gated on the delivery time.
     fn migrate_prefix(&mut self, from: usize, to: usize, group: u32) {
+        crate::obs::trace::set_node(from as u32);
         let Some((tokens, bytes, src_ready)) = self.nodes[from].export_prefix(group) else {
             return;
         };
@@ -446,6 +474,14 @@ impl Cluster {
             Some((_, end)) => end,
             None => earliest, // single-node degenerate case
         };
+        crate::obs::trace::set_node(to as u32);
+        crate::obs::trace::span(
+            crate::obs::trace::Subsystem::Router,
+            "migrate_prefix",
+            earliest,
+            delivered.max(earliest),
+            &[("from", from as u64), ("to", to as u64), ("group", group as u64), ("bytes", bytes)],
+        );
         self.nodes[to].install_prefix(group, tokens, delivered);
         self.stats.prefix_migrations += 1;
         self.stats.migrated_bytes += bytes;

@@ -236,6 +236,7 @@ impl ClusterNode {
     /// [`crate::server::NodeStepper::step`], the same loop body
     /// `SimEngine::run` executes.
     pub(crate) fn step(&mut self) {
+        crate::obs::trace::set_node(self.id as u32);
         self.stepper.step(&mut self.hr);
     }
 

@@ -345,6 +345,16 @@ pub struct DeploymentConfig {
     /// tenant-held), enter/exit the Pressured state.
     pub slo_high_watermark_pct: u32,
     pub slo_low_watermark_pct: u32,
+    /// Virtual-time tracer ring capacity in events (`obs.ring_cap`);
+    /// bounds the memory a `serve --trace` run retains.
+    pub obs_ring_cap: usize,
+    /// Wall-clock per-phase stepper profiling (`obs.profile`).
+    pub obs_profile: bool,
+    /// Arm the SLO flight recorder during traced runs (`obs.flight`).
+    pub obs_flight: bool,
+    /// Shed count within one SLO window that triggers a flight dump
+    /// (`obs.shed_burst`).
+    pub obs_shed_burst: usize,
     /// Cold-tier SSD arena capacity per node (`[coldtier]`; 0 = tier
     /// absent). When present the demotion ladder bottoms out on paged
     /// NVMe instead of dropping leases.
@@ -412,6 +422,10 @@ impl Default for DeploymentConfig {
             slo_window_ms: 20,
             slo_high_watermark_pct: 90,
             slo_low_watermark_pct: 70,
+            obs_ring_cap: 65_536,
+            obs_profile: false,
+            obs_flight: true,
+            obs_shed_burst: 4,
             ssd_gib: 0,
             ssd_page_kib: 2048,
             compress_ratio_pct: 50,
@@ -544,6 +558,10 @@ impl DeploymentConfig {
             "slo.window_ms",
             "slo.high_watermark_pct",
             "slo.low_watermark_pct",
+            "obs.ring_cap",
+            "obs.profile",
+            "obs.flight",
+            "obs.shed_burst",
             "coldtier.ssd_gib",
             "coldtier.page_kib",
             "coldtier.compress_ratio_pct",
@@ -632,6 +650,10 @@ impl DeploymentConfig {
             slo_low_watermark_pct: doc
                 .u64_or("slo.low_watermark_pct", d.slo_low_watermark_pct as u64)?
                 as u32,
+            obs_ring_cap: doc.usize_or("obs.ring_cap", d.obs_ring_cap)?,
+            obs_profile: doc.bool_or("obs.profile", d.obs_profile)?,
+            obs_flight: doc.bool_or("obs.flight", d.obs_flight)?,
+            obs_shed_burst: doc.usize_or("obs.shed_burst", d.obs_shed_burst)?,
             ssd_gib: doc.u64_or("coldtier.ssd_gib", d.ssd_gib)?,
             ssd_page_kib: doc.u64_or("coldtier.page_kib", d.ssd_page_kib)?,
             compress_ratio_pct: doc
@@ -727,6 +749,12 @@ impl DeploymentConfig {
         if self.slo_goodput_floor_tps < 0.0 {
             bail!("slo.goodput_floor_tps must be >= 0");
         }
+        if self.obs_ring_cap == 0 {
+            bail!("obs.ring_cap must be > 0");
+        }
+        if self.obs_shed_burst == 0 {
+            bail!("obs.shed_burst must be > 0");
+        }
         if self.decode_slots == 0 || self.max_running == 0 {
             bail!("server.decode_slots and server.max_running must be > 0");
         }
@@ -804,6 +832,12 @@ impl DeploymentConfig {
         s.push_str(&format!("window_ms = {}\n", self.slo_window_ms));
         s.push_str(&format!("high_watermark_pct = {}\n", self.slo_high_watermark_pct));
         s.push_str(&format!("low_watermark_pct = {}\n", self.slo_low_watermark_pct));
+        s.push('\n');
+        s.push_str("[obs]\n");
+        s.push_str(&format!("ring_cap = {}\n", self.obs_ring_cap));
+        s.push_str(&format!("profile = {}\n", self.obs_profile));
+        s.push_str(&format!("flight = {}\n", self.obs_flight));
+        s.push_str(&format!("shed_burst = {}\n", self.obs_shed_burst));
         s.push('\n');
         s.push_str("[coldtier]\n");
         s.push_str(&format!("ssd_gib = {}\n", self.ssd_gib));
@@ -1249,7 +1283,25 @@ mod tests {
             assert_eq!(back.compress_before_demote, p.compress_before_demote);
             assert_eq!(back.tenants, p.tenants);
             assert_eq!(back.tenant_overrides, p.tenant_overrides);
+            assert_eq!(back.obs_ring_cap, p.obs_ring_cap);
+            assert_eq!(back.obs_profile, p.obs_profile);
+            assert_eq!(back.obs_flight, p.obs_flight);
+            assert_eq!(back.obs_shed_burst, p.obs_shed_burst);
         }
+    }
+
+    #[test]
+    fn obs_section_parses_and_validates() {
+        let cfg = DeploymentConfig::from_toml(
+            "[obs]\nring_cap = 1024\nprofile = true\nflight = false\nshed_burst = 2",
+        )
+        .unwrap();
+        assert_eq!(cfg.obs_ring_cap, 1024);
+        assert!(cfg.obs_profile);
+        assert!(!cfg.obs_flight);
+        assert_eq!(cfg.obs_shed_burst, 2);
+        assert!(DeploymentConfig::from_toml("[obs]\nring_cap = 0").is_err());
+        assert!(DeploymentConfig::from_toml("[obs]\nshed_burst = 0").is_err());
     }
 
     #[test]

@@ -166,6 +166,21 @@ impl Default for AdmissionStats {
     }
 }
 
+impl AdmissionStats {
+    /// Register the decision counters into the unified metrics registry
+    /// under `prefix` (e.g. `"admission"`).
+    pub fn register(&self, reg: &mut crate::obs::MetricsRegistry, prefix: &str) {
+        reg.counter(&format!("{prefix}.admitted"), self.admitted);
+        reg.counter(&format!("{prefix}.defer_events"), self.defer_events);
+        reg.counter(&format!("{prefix}.shed"), self.shed);
+        reg.counter(&format!("{prefix}.pressure_enters"), self.pressure_enters);
+        reg.counter(&format!("{prefix}.pressure_exits"), self.pressure_exits);
+        if self.min_shed_pressure_pm != u32::MAX {
+            reg.gauge(&format!("{prefix}.min_shed_pressure_pm"), self.min_shed_pressure_pm as f64);
+        }
+    }
+}
+
 /// Feedback admission controller for one serving node.
 ///
 /// Deterministic: all state is derived from virtual-time signals the
@@ -197,13 +212,20 @@ pub struct AdmissionController {
     monitor: SloMonitor,
     pressured: bool,
     stats: AdmissionStats,
+    last_predicted_ttft_ns: Ns,
 }
 
 impl AdmissionController {
     /// A controller in the relaxed (not pressured) state.
     pub fn new(cfg: AdmissionConfig) -> Self {
         let monitor = SloMonitor::new(cfg.slo.window_ns);
-        Self { cfg, monitor, pressured: false, stats: AdmissionStats::default() }
+        Self {
+            cfg,
+            monitor,
+            pressured: false,
+            stats: AdmissionStats::default(),
+            last_predicted_ttft_ns: 0,
+        }
     }
 
     /// The tuning this controller runs with.
@@ -238,6 +260,13 @@ impl AdmissionController {
         &mut self.monitor
     }
 
+    /// The TTFT (wait already accrued + queueing estimate) the last
+    /// [`decide`](Self::decide) call predicted — the third input the
+    /// tracer attaches to admission decision events.
+    pub fn last_predicted_ttft_ns(&self) -> Ns {
+        self.last_predicted_ttft_ns
+    }
+
     /// Decide the fate of the request that arrived at `arrival`, given
     /// the node state in `sig` at virtual time `now`.
     pub fn decide(&mut self, now: Ns, arrival: Ns, sig: &AdmissionSignals) -> AdmissionDecision {
@@ -253,6 +282,7 @@ impl AdmissionController {
         let budget = self.monitor.effective_budget(now, self.cfg.slo.ttft_p99_ns);
         let waited = now.saturating_sub(arrival);
         let predicted_ttft = waited.saturating_add(self.monitor.est_wait_ns(now, sig.queue_depth));
+        self.last_predicted_ttft_ns = predicted_ttft;
         let over_budget = predicted_ttft > budget;
         let unstable =
             self.monitor.arrivals_in_window(now) > self.monitor.finishes_in_window(now);

@@ -210,6 +210,25 @@ impl PeerMonitor {
     pub fn last_observed_tenant_used(&self, device: usize) -> u64 {
         self.last_seen_used[device]
     }
+
+    /// Register the cumulative per-tier demand/prefetch traffic split
+    /// into the unified metrics registry under `prefix` (e.g.
+    /// `"harvest.tiers"`). Peer traffic is the sum over GPU slots;
+    /// host/CXL/SSD report their own slots.
+    pub fn register(&self, reg: &mut crate::obs::MetricsRegistry, prefix: &str) {
+        let gpu_sum = |v: &[u64]| -> u64 { v[..self.n_gpus].iter().sum() };
+        let tiers: [(&str, usize); 3] = [
+            ("host", self.n_gpus),
+            ("cxl", self.n_gpus + 1),
+            ("ssd", self.n_gpus + 2),
+        ];
+        reg.counter(&format!("{prefix}.peer.demand_bytes"), gpu_sum(&self.demand_bytes));
+        reg.counter(&format!("{prefix}.peer.prefetch_bytes"), gpu_sum(&self.prefetch_bytes));
+        for (name, slot) in tiers {
+            reg.counter(&format!("{prefix}.{name}.demand_bytes"), self.demand_bytes[slot]);
+            reg.counter(&format!("{prefix}.{name}.prefetch_bytes"), self.prefetch_bytes[slot]);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -313,5 +332,22 @@ mod tests {
         // tier bandwidth signal sums demand + prefetch
         assert!((mon.bw_demand_on_tier(MemoryTier::Host) - 1_500.0).abs() < 1.0);
         assert!((mon.bw_demand_on_tier(MemoryTier::CxlMem) - 7_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn register_reports_per_tier_traffic_split() {
+        use crate::obs::{Metric, MetricsRegistry};
+        let mut mon = PeerMonitor::new(2, 1_000_000_000);
+        mon.record_transfer(0, 0, 100);
+        mon.record_prefetch_transfer(1, 0, 400);
+        mon.record_tier_transfer(MemoryTier::Host, 0, 1_000);
+        mon.record_tier_prefetch(MemoryTier::Ssd, 0, 3_000);
+        let mut reg = MetricsRegistry::new();
+        mon.register(&mut reg, "tiers");
+        assert_eq!(reg.get("tiers.peer.demand_bytes"), Some(&Metric::Counter(100)));
+        assert_eq!(reg.get("tiers.peer.prefetch_bytes"), Some(&Metric::Counter(400)));
+        assert_eq!(reg.get("tiers.host.demand_bytes"), Some(&Metric::Counter(1_000)));
+        assert_eq!(reg.get("tiers.ssd.prefetch_bytes"), Some(&Metric::Counter(3_000)));
+        assert_eq!(reg.get("tiers.cxl.demand_bytes"), Some(&Metric::Counter(0)));
     }
 }

@@ -62,6 +62,7 @@
 //! ```
 
 use crate::memsim::{DeviceId, Ns, Topology};
+use crate::obs::trace::{self, Subsystem};
 use std::collections::BTreeMap;
 
 /// Tuning knobs for the prefetch pipeline.
@@ -132,6 +133,22 @@ impl PrefetchStats {
         } else {
             self.bytes_wasted as f64 / self.bytes_prefetched as f64
         }
+    }
+
+    /// Register the outcome ledger into the unified metrics registry
+    /// under `prefix` (e.g. `"serve.prefetch"`).
+    pub fn register(&self, reg: &mut crate::obs::MetricsRegistry, prefix: &str) {
+        reg.counter(&format!("{prefix}.planned"), self.planned);
+        reg.counter(&format!("{prefix}.issued"), self.issued);
+        reg.counter(&format!("{prefix}.yielded"), self.yielded);
+        reg.counter(&format!("{prefix}.stale_plans"), self.stale_plans);
+        reg.counter(&format!("{prefix}.hits"), self.hits);
+        reg.counter(&format!("{prefix}.late"), self.late);
+        reg.counter(&format!("{prefix}.wasted"), self.wasted);
+        reg.counter(&format!("{prefix}.bytes_prefetched"), self.bytes_prefetched);
+        reg.counter(&format!("{prefix}.bytes_wasted"), self.bytes_wasted);
+        reg.gauge(&format!("{prefix}.hit_rate"), self.hit_rate());
+        reg.gauge(&format!("{prefix}.waste_rate"), self.waste_rate());
     }
 }
 
@@ -217,15 +234,17 @@ impl PrefetchPlanner {
         deadline: Ns,
     ) -> bool {
         self.stats.planned += 1;
+        let now = topo.clock().now();
         if self.inflight.len() >= self.cfg.max_inflight {
             self.stats.yielded += 1;
+            trace::instant(Subsystem::Prefetch, "yield_inflight_cap", now, &[("bytes", bytes)]);
             return false;
         }
-        let now = topo.clock().now();
         let own = self.issued_until.get(&(src, dst)).copied().unwrap_or(0);
         if topo.busy_until(src, dst) > now.max(own) {
             // Someone else's traffic is queued: yield to it.
             self.stats.yielded += 1;
+            trace::instant(Subsystem::Prefetch, "yield_link_busy", now, &[("bytes", bytes)]);
             return false;
         }
         let done = match chunk {
@@ -235,9 +254,18 @@ impl PrefetchPlanner {
             _ => topo.earliest_completion(src, dst, bytes),
         };
         match done {
-            Some(done) if done.saturating_add(self.cfg.slack_ns) <= deadline => true,
+            Some(done) if done.saturating_add(self.cfg.slack_ns) <= deadline => {
+                trace::instant(
+                    Subsystem::Prefetch,
+                    "plan",
+                    now,
+                    &[("bytes", bytes), ("deadline", deadline), ("eta", done)],
+                );
+                true
+            }
             _ => {
                 self.stats.yielded += 1;
+                trace::instant(Subsystem::Prefetch, "yield_deadline", now, &[("bytes", bytes)]);
                 false
             }
         }
@@ -254,6 +282,11 @@ impl PrefetchPlanner {
         let _ = deadline;
         self.stats.issued += 1;
         self.stats.bytes_prefetched += bytes;
+        trace::instant_now(
+            Subsystem::Prefetch,
+            "issued",
+            &[("key", key), ("bytes", bytes), ("ready_at", ready_at)],
+        );
         self.inflight.insert(key, Inflight { ready_at, bytes });
     }
 
@@ -274,9 +307,16 @@ impl PrefetchPlanner {
         let Some(fl) = self.inflight.remove(&key) else { return true };
         if fl.ready_at <= now {
             self.stats.hits += 1;
+            trace::instant(Subsystem::Prefetch, "hit", now, &[("key", key)]);
             true
         } else {
             self.stats.late += 1;
+            trace::instant(
+                Subsystem::Prefetch,
+                "late",
+                now,
+                &[("key", key), ("ready_at", fl.ready_at)],
+            );
             false
         }
     }
@@ -288,6 +328,11 @@ impl PrefetchPlanner {
         if let Some(fl) = self.inflight.remove(&key) {
             self.stats.wasted += 1;
             self.stats.bytes_wasted += fl.bytes;
+            trace::instant_now(
+                Subsystem::Prefetch,
+                "wasted",
+                &[("key", key), ("bytes", fl.bytes)],
+            );
         }
     }
 
@@ -296,6 +341,7 @@ impl PrefetchPlanner {
     /// can be read — the entry is simply dropped.
     pub fn mark_stale_plan(&mut self) {
         self.stats.stale_plans += 1;
+        trace::instant_now(Subsystem::Prefetch, "stale_plan", &[]);
     }
 
     /// Cancel every in-flight prefetch (e.g. the consumer is shutting

@@ -78,6 +78,7 @@ use super::api::{AllocHints, HarvestError, HarvestHandle, LeaseId, MemoryTier, T
 use super::controller::HarvestRuntime;
 use super::events::{PayloadKind, RevocationEvent};
 use crate::memsim::{AllocId, CopyEvent, DeviceId, Ns};
+use crate::obs::trace::{self, Subsystem};
 use std::cell::{Cell, RefCell};
 use std::rc::Rc;
 
@@ -524,6 +525,14 @@ impl Transfer {
         let mut report =
             TransferReport { events: Vec::with_capacity(ops.len()), bytes: 0, end: 0 };
         for op in ops {
+            let op_name = match op {
+                TransferOp::Populate { .. } => "populate",
+                TransferOp::Fetch { .. } => "fetch",
+                TransferOp::Raw { .. } => "raw",
+                TransferOp::Migrate { .. } => "migrate",
+                TransferOp::Compress { .. } => "compress",
+                TransferOp::Decompress { .. } => "decompress",
+            };
             let (ev, bytes) = match op {
                 TransferOp::Populate { lease, src } => {
                     let h = hr.handle_info(lease).expect("validated above");
@@ -565,6 +574,20 @@ impl Transfer {
                     (CopyEvent { start: now, end: now, bytes: 0, src: dev, dst: dev }, 0)
                 }
             };
+            if trace::is_enabled() {
+                trace::span(
+                    Subsystem::Transfer,
+                    op_name,
+                    ev.start,
+                    ev.end,
+                    &[
+                        ("src", trace::dev(ev.src)),
+                        ("dst", trace::dev(ev.dst)),
+                        ("bytes", ev.bytes),
+                        ("bg", self.background as u64),
+                    ],
+                );
+            }
             report.bytes += bytes;
             report.end = report.end.max(ev.end);
             report.events.push(ev);

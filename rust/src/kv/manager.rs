@@ -51,6 +51,7 @@ use crate::harvest::session::{HarvestSession, Lease, Transfer};
 use crate::harvest::{HarvestRuntime, PayloadKind};
 use crate::memsim::{DeviceId, Ns};
 use crate::moe::config::KvModel;
+use crate::obs::trace::{self, Subsystem};
 use std::collections::{BTreeMap, BTreeSet};
 
 /// DMA descriptor granularity for KV reloads: blocks are batched into
@@ -138,6 +139,41 @@ impl KvStats {
         } else {
             self.local_hits as f64 / total as f64
         }
+    }
+
+    /// Register every counter into the unified metrics registry under
+    /// `prefix` (e.g. `"kv"`).
+    pub fn register(&self, reg: &mut crate::obs::MetricsRegistry, prefix: &str) {
+        let c = [
+            ("appends", self.appends),
+            ("local_hits", self.local_hits),
+            ("peer_reloads", self.peer_reloads),
+            ("cxl_reloads", self.cxl_reloads),
+            ("host_reloads", self.host_reloads),
+            ("ssd_reloads", self.ssd_reloads),
+            ("recomputes", self.recomputes),
+            ("evictions_to_peer", self.evictions_to_peer),
+            ("evictions_to_cxl", self.evictions_to_cxl),
+            ("evictions_to_host", self.evictions_to_host),
+            ("evictions_to_ssd", self.evictions_to_ssd),
+            ("peer_alloc_failures", self.peer_alloc_failures),
+            ("revocation_drops", self.revocation_drops),
+            ("demotions", self.demotions),
+            ("promotions", self.promotions),
+            ("promotion_hits", self.promotion_hits),
+            ("compressions", self.compressions),
+            ("bytes_from_peer", self.bytes_from_peer),
+            ("bytes_from_cxl", self.bytes_from_cxl),
+            ("bytes_from_host", self.bytes_from_host),
+            ("bytes_from_ssd", self.bytes_from_ssd),
+            ("reload_ns", self.reload_ns),
+            ("recompute_ns", self.recompute_ns),
+            ("decompress_ns", self.decompress_ns),
+        ];
+        for (name, v) in c {
+            reg.counter(&format!("{prefix}.{name}"), v);
+        }
+        reg.gauge(&format!("{prefix}.hit_rate"), self.hit_rate());
     }
 }
 
@@ -307,6 +343,11 @@ impl KvOffloadManager {
                     // The controller already migrated the bytes and the
                     // lease survived; we only re-point our residency tier.
                     self.stats.demotions += 1;
+                    trace::instant_now(
+                        Subsystem::Revocation,
+                        "demoted",
+                        &[("lease", ev.lease.0), ("to_tier", to.speed_rank() as u64)],
+                    );
                     if let Some(b) = self.table.block_of_handle(ev.lease) {
                         self.pending_promotions.remove(&b);
                         self.table.set_residency(
@@ -321,6 +362,11 @@ impl KvOffloadManager {
                     // next reload pays the decode-side reconstruction
                     // cost — tag it so `ensure_local` charges it.
                     self.stats.compressions += 1;
+                    trace::instant_now(
+                        Subsystem::Revocation,
+                        "compressed",
+                        &[("lease", ev.lease.0), ("ratio_pct", ratio as u64)],
+                    );
                     if let Some(b) = self.table.block_of_handle(ev.lease) {
                         self.compressed.insert(b, ratio);
                     }
@@ -330,6 +376,7 @@ impl KvOffloadManager {
                     // placement and freed the bytes; we repair our indexes.
                     self.leases.remove(&ev.lease);
                     self.stats.revocation_drops += 1;
+                    trace::instant_now(Subsystem::Revocation, "dropped", &[("lease", ev.lease.0)]);
                     if let Some(b) = self.table.drop_by_handle(ev.lease) {
                         self.pending_promotions.remove(&b);
                         self.compressed.remove(&b);
@@ -887,6 +934,16 @@ impl KvOffloadManager {
                     }
                     self.table
                         .set_residency(id, BlockResidency::Leased { handle, tier: to });
+                    trace::instant(
+                        Subsystem::ColdTier,
+                        "age_demote",
+                        now,
+                        &[
+                            ("block", id.0),
+                            ("from_tier", tier.speed_rank() as u64),
+                            ("to_tier", to.speed_rank() as u64),
+                        ],
+                    );
                 }
                 None => {
                     if Transfer::new().compress(lease, ratio_pct).submit(hr).is_err() {
@@ -894,6 +951,12 @@ impl KvOffloadManager {
                     }
                     self.compressed.insert(id, ratio_pct);
                     self.stats.compressions += 1;
+                    trace::instant(
+                        Subsystem::ColdTier,
+                        "age_compress",
+                        now,
+                        &[("block", id.0), ("ratio_pct", ratio_pct as u64)],
+                    );
                 }
             }
             stepped += 1;

@@ -24,6 +24,7 @@
 //! | [`moe`] | MoE serving path: Table-1 model registry, routing simulator, expert residency map + rebalancer, CGOPipe-style pipeline |
 //! | [`kv`] | paged KV cache: blocks, unified block table, `KvOffloadManager`, per-device `OffloadingHandler`, eviction policies |
 //! | [`server`] | serving coordinator: requests, continuous batcher, FCFS + completely-fair schedulers, engine, metrics |
+//! | [`obs`] | observability plane: virtual-time span tracer (Chrome/Perfetto export), unified `MetricsRegistry` snapshot tree, wall-clock stepper phase profiler, SLO flight recorder — zero-overhead when off, provably inert to the simulation |
 //! | [`runtime`] | PJRT bridge: load AOT `artifacts/*.hlo.txt` (lowered from JAX/Pallas) and execute on the request path |
 //! | [`trace`] | Alibaba-gpu-v2020-like cluster trace synthesis (Fig. 2) |
 //! | [`config`] | TOML config system + deployment presets |
@@ -40,6 +41,7 @@ pub mod harvest;
 pub mod kv;
 pub mod memsim;
 pub mod moe;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod tenantsim;

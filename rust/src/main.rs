@@ -1,7 +1,7 @@
 //! `harvest` — the launcher CLI.
 //!
 //! ```text
-//! harvest serve    --preset paper-moe | --config deploy.toml [--set key=value ...]
+//! harvest serve    --preset paper-moe | --config deploy.toml [--set key=value ...] [--trace out.json]
 //! harvest presets  [--dump NAME]
 //! harvest models
 //! harvest trace    [--machines N] [--snapshots-per-machine N]
@@ -22,6 +22,7 @@ use harvest::memsim::{DeviceId, SimNode};
 use harvest::moe::config::{KV_MODELS, MOE_MODELS};
 use harvest::moe::pipeline::OffloadTier;
 use harvest::moe::{CgoPipe, ExpertRebalancer, RouterSim};
+use harvest::obs::{self, MetricsRegistry};
 use harvest::runtime::ModelRuntime;
 use harvest::server::{RealEngine, SimEngine, SimEngineConfig, WorkloadGen};
 use harvest::trace::{ClusterTrace, TraceSpec};
@@ -65,7 +66,8 @@ fn print_help() {
         "harvest — opportunistic peer-to-peer GPU caching for LLM inference
 
 USAGE:
-  harvest serve    --preset NAME | --config FILE [--set key=value ...]
+  harvest serve    --preset NAME | --config FILE [--set key=value ...] [--trace FILE]
+                   --trace writes a Perfetto-loadable trace (see [obs] config)
   harvest presets  [--dump NAME]      list (or dump) deployment presets
   harvest models                      print the Table-1 / §5.3 registries
   harvest trace    [--machines N] [--snapshots-per-machine N]
@@ -183,6 +185,19 @@ fn patch_toml(text: &str, path: &str, value: &str) -> Result<String> {
 
 fn cmd_serve(args: &[String]) -> Result<()> {
     let cfg = load_config(args)?;
+    let trace_path = take_opt(args, "--trace");
+    if trace_path.is_some() {
+        obs::trace::enable(cfg.obs_ring_cap);
+        if cfg.obs_flight {
+            obs::flight::arm(obs::FlightConfig {
+                shed_burst: cfg.obs_shed_burst as u64,
+                ..Default::default()
+            });
+        }
+    }
+    if cfg.obs_profile {
+        obs::profile::enable();
+    }
     println!("deployment `{}` ({} workload)", cfg.name, cfg.workload.name());
     println!("  node: {} GPUs x {} GiB HBM", cfg.n_gpus, cfg.hbm_gib);
     if cfg.nodes > 1 {
@@ -200,11 +215,32 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         cfg.reserve_gib,
         cfg.mig_cache_gib
     );
-    match cfg.workload {
+    let result = match cfg.workload {
         WorkloadKind::MoeOffload => serve_moe(&cfg),
         WorkloadKind::KvOffload => serve_kv(&cfg),
         WorkloadKind::RealServe => serve_real(&cfg),
+    };
+    if let Some(path) = trace_path {
+        let dropped = obs::trace::dropped();
+        let events = obs::trace::take();
+        std::fs::write(&path, obs::trace::to_chrome_json(&events).to_string())
+            .with_context(|| format!("writing trace to {path}"))?;
+        println!("  trace: {} events -> {path} ({dropped} evicted from ring)", events.len());
+        let dumps = obs::flight::take_dumps();
+        if !dumps.is_empty() {
+            let fpath = format!("{path}.flight.json");
+            std::fs::write(&fpath, obs::flight::dumps_to_json(&dumps).to_string())
+                .with_context(|| format!("writing flight dumps to {fpath}"))?;
+            println!("  flight: {} incident dumps -> {fpath}", dumps.len());
+        }
+        obs::flight::disarm();
+        obs::trace::disable();
     }
+    if cfg.obs_profile {
+        println!("  profile: {}", obs::profile::snapshot().to_json().to_string());
+        obs::profile::disable();
+    }
+    result
 }
 
 fn serve_moe(cfg: &DeploymentConfig) -> Result<()> {
@@ -330,6 +366,20 @@ fn serve_kv(cfg: &DeploymentConfig) -> Result<()> {
             t.denied()
         );
     }
+    // One registry snapshot over every stat surface — serve's single
+    // machine-readable output.
+    let mut reg = MetricsRegistry::new();
+    report.metrics.register(&mut reg, "serve");
+    report.kv_stats.register(&mut reg, "kv");
+    if let Some(a) = &report.admission {
+        a.register(&mut reg, "admission");
+    }
+    if let Some(t) = &report.tenant {
+        t.broker.register(&mut reg, "tenant.broker");
+    }
+    hr.monitor().register(&mut reg, "harvest.tiers");
+    harvest::cluster::TierLedger::snapshot(&hr).register(&mut reg, "ledger");
+    println!("{}", reg.to_json().to_string());
     Ok(())
 }
 
@@ -391,6 +441,25 @@ fn serve_kv_cluster(cfg: &DeploymentConfig) -> Result<()> {
             );
         }
     }
+    // Cluster rollup + per-node slices in one registry snapshot.
+    let mut reg = MetricsRegistry::new();
+    report.aggregate.register(&mut reg, "serve");
+    report.ledger.register(&mut reg, "ledger");
+    for n in &report.per_node {
+        let p = format!("node{}", n.node);
+        n.metrics.register(&mut reg, &format!("{p}.serve"));
+        n.kv_stats.register(&mut reg, &format!("{p}.kv"));
+        if let Some(t) = &n.tenant {
+            t.broker.register(&mut reg, &format!("{p}.tenant.broker"));
+        }
+    }
+    for i in 0..cluster.n_nodes() {
+        if let Some(a) = cluster.node(i).admission_stats() {
+            a.register(&mut reg, &format!("node{i}.admission"));
+        }
+        cluster.node(i).runtime().monitor().register(&mut reg, &format!("node{i}.harvest.tiers"));
+    }
+    println!("{}", reg.to_json().to_string());
     Ok(())
 }
 

@@ -1,0 +1,271 @@
+//! Flight recorder: automatic trace-ring dumps at SLO incidents.
+//!
+//! The control plane exists to prevent exactly three bad outcomes: a
+//! TTFT window miss, a burst of shed requests, and a tenant OOM that
+//! harvested memory contributed to (`BrokerStats::oom_with_harvest`).
+//! When armed, the recorder watches per-node signals the stepper feeds
+//! it at the end of every step and, on an incident, snapshots the
+//! tracer's ring ([`crate::obs::trace::snapshot`]) — the last-N events
+//! leading up to the incident — as a [`FlightDump`] postmortem.
+//!
+//! Triggers are edge-triggered per node (a sustained miss produces one
+//! dump, not one per step) and the dump list is bounded, so an armed
+//! recorder in a pathological run stays cheap.
+//!
+//! ```
+//! use harvest::obs::flight::{self, FlightConfig, FlightSignals};
+//! use harvest::obs::trace;
+//!
+//! trace::enable(256);
+//! flight::arm(FlightConfig::default());
+//! // A window miss: achieved p99 40 ms against a 10 ms target.
+//! let sig = FlightSignals {
+//!     ttft_p99_ns: 40_000_000,
+//!     ttft_target_ns: 10_000_000,
+//!     ..Default::default()
+//! };
+//! flight::observe(0, 1_000, &sig);
+//! let dumps = flight::take_dumps();
+//! assert_eq!(dumps.len(), 1);
+//! assert_eq!(dumps[0].reason, "ttft_window_miss");
+//! flight::disarm();
+//! trace::disable();
+//! ```
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::memsim::Ns;
+use crate::util::json::Json;
+
+use super::trace::{self, TraceEvent};
+
+/// Tuning for the flight recorder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlightConfig {
+    /// Sliding window for shed-burst detection.
+    pub window_ns: Ns,
+    /// Sheds within the window that count as a burst.
+    pub shed_burst: u64,
+    /// Maximum dumps kept (later incidents are dropped, not rotated —
+    /// the first occurrences are the diagnostic ones).
+    pub max_dumps: usize,
+}
+
+impl Default for FlightConfig {
+    fn default() -> Self {
+        Self { window_ns: 20_000_000, shed_burst: 4, max_dumps: 8 }
+    }
+}
+
+/// Per-node signals sampled by the stepper at the end of a step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FlightSignals {
+    /// Achieved windowed p99 TTFT (0 = unknown / no completions yet).
+    pub ttft_p99_ns: Ns,
+    /// SLO target (0 = no target configured; miss detection off).
+    pub ttft_target_ns: Ns,
+    /// Requests shed by this node during this step.
+    pub new_sheds: u64,
+    /// Cumulative tenant OOMs that harvested memory contributed to.
+    pub oom_with_harvest: u64,
+}
+
+/// One postmortem: the trace ring as it stood when a trigger fired.
+#[derive(Debug, Clone)]
+pub struct FlightDump {
+    /// Which trigger fired: `"ttft_window_miss"`, `"shed_burst"`, or
+    /// `"oom_with_harvest"`.
+    pub reason: &'static str,
+    /// Node the triggering signal came from.
+    pub node: u32,
+    /// Virtual time of the trigger.
+    pub at: Ns,
+    /// Ring contents at the trigger (oldest first).
+    pub events: Vec<TraceEvent>,
+}
+
+#[derive(Default)]
+struct NodeState {
+    miss_latched: bool,
+    shed_times: VecDeque<Ns>,
+    burst_latched: bool,
+    oom_seen: u64,
+}
+
+struct Recorder {
+    cfg: FlightConfig,
+    nodes: BTreeMap<u32, NodeState>,
+    dumps: Vec<FlightDump>,
+}
+
+thread_local! {
+    static RECORDER: RefCell<Option<Recorder>> = const { RefCell::new(None) };
+}
+
+/// Arm the recorder for this thread (clears prior dumps and state).
+pub fn arm(cfg: FlightConfig) {
+    RECORDER.with(|r| {
+        *r.borrow_mut() =
+            Some(Recorder { cfg, nodes: BTreeMap::new(), dumps: Vec::new() });
+    });
+}
+
+/// Disarm and discard all state for this thread.
+pub fn disarm() {
+    RECORDER.with(|r| *r.borrow_mut() = None);
+}
+
+/// Whether the recorder is armed on this thread — the stepper's
+/// fast-path check before it gathers any signals.
+#[inline]
+pub fn is_armed() -> bool {
+    RECORDER.with(|r| r.borrow().is_some())
+}
+
+/// Feed one step's signals for `node` at virtual time `now`. Fires at
+/// most one dump per call; triggers are edge-triggered per node.
+pub fn observe(node: u32, now: Ns, sig: &FlightSignals) {
+    RECORDER.with(|r| {
+        let mut r = r.borrow_mut();
+        let Some(rec) = r.as_mut() else { return };
+        let cfg = rec.cfg;
+        let st = rec.nodes.entry(node).or_default();
+
+        // TTFT window miss: fire on the false→true transition only.
+        let missing =
+            sig.ttft_target_ns > 0 && sig.ttft_p99_ns > 0 && sig.ttft_p99_ns > sig.ttft_target_ns;
+        let mut reason = None;
+        if missing && !st.miss_latched {
+            reason = Some("ttft_window_miss");
+        }
+        st.miss_latched = missing;
+
+        // Shed burst: N sheds inside a sliding virtual-time window.
+        for _ in 0..sig.new_sheds {
+            st.shed_times.push_back(now);
+        }
+        let cutoff = now.saturating_sub(cfg.window_ns);
+        while st.shed_times.front().is_some_and(|&t| t < cutoff) {
+            st.shed_times.pop_front();
+        }
+        let bursting = (st.shed_times.len() as u64) >= cfg.shed_burst;
+        if reason.is_none() && bursting && !st.burst_latched {
+            reason = Some("shed_burst");
+        }
+        st.burst_latched = bursting;
+
+        // Harvest-implicated tenant OOM: fire on every increase.
+        if reason.is_none() && sig.oom_with_harvest > st.oom_seen {
+            reason = Some("oom_with_harvest");
+        }
+        st.oom_seen = st.oom_seen.max(sig.oom_with_harvest);
+
+        if let Some(reason) = reason {
+            if rec.dumps.len() < cfg.max_dumps {
+                rec.dumps.push(FlightDump { reason, node, at: now, events: trace::snapshot() });
+            }
+        }
+    });
+}
+
+/// Drain accumulated dumps (recorder stays armed).
+pub fn take_dumps() -> Vec<FlightDump> {
+    RECORDER.with(|r| match r.borrow_mut().as_mut() {
+        Some(rec) => std::mem::take(&mut rec.dumps),
+        None => Vec::new(),
+    })
+}
+
+/// Render dumps as JSON: `[{reason, node, at_ns, trace: {traceEvents}}]`.
+pub fn dumps_to_json(dumps: &[FlightDump]) -> Json {
+    Json::Arr(
+        dumps
+            .iter()
+            .map(|d| {
+                let mut obj = BTreeMap::new();
+                obj.insert("reason".into(), Json::Str(d.reason.into()));
+                obj.insert("node".into(), Json::Num(d.node as f64));
+                obj.insert("at_ns".into(), Json::Num(d.at as f64));
+                obj.insert("trace".into(), trace::to_chrome_json(&d.events));
+                Json::Obj(obj)
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet() -> FlightSignals {
+        FlightSignals::default()
+    }
+
+    #[test]
+    fn window_miss_is_edge_triggered() {
+        arm(FlightConfig::default());
+        let miss = FlightSignals { ttft_p99_ns: 90, ttft_target_ns: 50, ..quiet() };
+        observe(0, 100, &miss);
+        observe(0, 200, &miss); // still missing: latched, no new dump
+        observe(0, 300, &quiet()); // recovers
+        observe(0, 400, &miss); // misses again: second dump
+        let dumps = take_dumps();
+        disarm();
+        assert_eq!(dumps.len(), 2);
+        assert!(dumps.iter().all(|d| d.reason == "ttft_window_miss"));
+    }
+
+    #[test]
+    fn shed_burst_uses_sliding_window() {
+        arm(FlightConfig { window_ns: 1_000, shed_burst: 3, max_dumps: 8 });
+        observe(1, 100, &FlightSignals { new_sheds: 2, ..quiet() });
+        assert!(take_dumps().is_empty());
+        observe(1, 200, &FlightSignals { new_sheds: 1, ..quiet() });
+        let dumps = take_dumps();
+        assert_eq!(dumps.len(), 1);
+        assert_eq!(dumps[0].reason, "shed_burst");
+        assert_eq!(dumps[0].node, 1);
+        // Far in the future the window has drained; a single shed is
+        // quiet again.
+        observe(1, 10_000, &FlightSignals { new_sheds: 1, ..quiet() });
+        assert!(take_dumps().is_empty());
+        disarm();
+    }
+
+    #[test]
+    fn oom_fires_per_increase_and_dumps_are_bounded() {
+        arm(FlightConfig { max_dumps: 2, ..FlightConfig::default() });
+        observe(0, 10, &FlightSignals { oom_with_harvest: 1, ..quiet() });
+        observe(0, 20, &FlightSignals { oom_with_harvest: 1, ..quiet() }); // no increase
+        observe(0, 30, &FlightSignals { oom_with_harvest: 2, ..quiet() });
+        observe(0, 40, &FlightSignals { oom_with_harvest: 3, ..quiet() }); // over cap
+        let dumps = take_dumps();
+        disarm();
+        assert_eq!(dumps.len(), 2);
+        assert!(dumps.iter().all(|d| d.reason == "oom_with_harvest"));
+    }
+
+    #[test]
+    fn disarmed_observe_is_noop() {
+        disarm();
+        observe(0, 10, &FlightSignals { oom_with_harvest: 5, ..quiet() });
+        assert!(!is_armed());
+        assert!(take_dumps().is_empty());
+    }
+
+    #[test]
+    fn dumps_include_ring_snapshot() {
+        trace::enable(64);
+        trace::instant(trace::Subsystem::Admission, "shed", 90, &[]);
+        arm(FlightConfig { window_ns: 1_000, shed_burst: 1, max_dumps: 4 });
+        observe(2, 100, &FlightSignals { new_sheds: 1, ..quiet() });
+        let dumps = take_dumps();
+        disarm();
+        trace::disable();
+        assert_eq!(dumps.len(), 1);
+        assert_eq!(dumps[0].events.len(), 1);
+        let json = dumps_to_json(&dumps).to_string();
+        assert!(json.contains("shed_burst"));
+    }
+}

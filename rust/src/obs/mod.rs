@@ -1,0 +1,42 @@
+//! Unified observability plane: tracing, metrics, profiling, postmortems.
+//!
+//! Four cooperating pieces, all zero-overhead when off and all strictly
+//! read-only with respect to the simulation (no virtual time is spent,
+//! no control-flow decision ever depends on them — see
+//! `tests/obs_differential.rs` for the bit-for-bit proof):
+//!
+//! | piece | what it captures |
+//! |-------|------------------|
+//! | [`trace`] | virtual-time spans/instants in a bounded ring, exported as Chrome trace-event JSON (Perfetto-loadable; pid = node, tid = subsystem) |
+//! | [`registry`] | one snapshot tree of counters/gauges/log-bucket histograms that every stat surface registers into |
+//! | [`profile`] | wall-clock per-phase accumulator for the stepper hot loop |
+//! | [`flight`] | flight recorder — dumps the trace ring when the SLO control plane sees a window miss, a shed burst, or a tenant OOM-with-harvest |
+//!
+//! All state is thread-local: parallel test threads and parallel bench
+//! harnesses never observe each other, and no `&mut` plumbing threads
+//! through the simulation APIs. Enable via the `[obs]` TOML section and
+//! the `serve --trace <path>` CLI flag, or programmatically:
+//!
+//! ```
+//! use harvest::obs::{profile, trace};
+//!
+//! trace::enable(1024);
+//! profile::enable();
+//! trace::span(trace::Subsystem::Stepper, "step", 0, 1_000, &[("cohort", 4)]);
+//! let events = trace::take();
+//! assert_eq!(events.len(), 1);
+//! let json = trace::to_chrome_json(&events).to_string();
+//! assert!(json.contains("traceEvents"));
+//! trace::disable();
+//! profile::disable();
+//! ```
+
+pub mod flight;
+pub mod profile;
+pub mod registry;
+pub mod trace;
+
+pub use flight::{FlightConfig, FlightDump, FlightSignals};
+pub use profile::{Phase, PhaseProfile, PhaseTimer};
+pub use registry::{LogHistogram, Metric, MetricsRegistry};
+pub use trace::{Subsystem, TraceEvent};

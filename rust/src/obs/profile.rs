@@ -1,0 +1,313 @@
+//! Wall-clock per-phase profiler for the stepper hot loop.
+//!
+//! The stepper's `step()` is the whole serving hot path (ROADMAP open
+//! item: "profile the remaining per-step costs"). This module
+//! accumulates real (`std::time::Instant`) time per [`Phase`] into
+//! thread-local counters via RAII [`PhaseTimer`] guards. When disabled
+//! (the default) a timer is a `None` that does nothing on drop — a few
+//! nanoseconds per call, cheap enough to leave in the hot loop
+//! unconditionally (the `hot_path` bench pins this bound in CI).
+//!
+//! Wall-clock time never feeds back into the simulation: virtual time
+//! and all decisions are identical with profiling on or off.
+//!
+//! ```
+//! use harvest::obs::profile::{self, Phase};
+//!
+//! profile::enable();
+//! {
+//!     let _t = profile::timer(Phase::Decode);
+//!     // ... work ...
+//! }
+//! let snap = profile::snapshot();
+//! assert_eq!(snap.calls(Phase::Decode), 1);
+//! profile::disable();
+//! ```
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// One accumulation bucket of the stepper loop.
+///
+/// `Total` wraps the whole `step()`; the remaining buckets are the
+/// disjoint segments inside it, except `Prefill` which nests inside
+/// `Admission` (so coverage sums exclude it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    /// The entire `step()` body.
+    Total,
+    /// Arrival noting, idle-jump, and the admit loop (includes Prefill).
+    Admission,
+    /// Prompt prefill of newly admitted requests (nested in Admission).
+    Prefill,
+    /// Scheduler cohort selection.
+    Select,
+    /// KV manager sync (revocation application, deferred releases).
+    KvSync,
+    /// Cold-tier aging sweep.
+    Aging,
+    /// Residency checks / reloads for the decode cohort.
+    Residency,
+    /// Prefetch lookahead planning and issue.
+    Prefetch,
+    /// Virtual compute advance (tenant fleet + clock).
+    Compute,
+    /// Token append + completion bookkeeping.
+    Decode,
+}
+
+/// All phases, in display order.
+pub const PHASES: [Phase; 10] = [
+    Phase::Total,
+    Phase::Admission,
+    Phase::Prefill,
+    Phase::Select,
+    Phase::KvSync,
+    Phase::Aging,
+    Phase::Residency,
+    Phase::Prefetch,
+    Phase::Compute,
+    Phase::Decode,
+];
+
+impl Phase {
+    fn idx(self) -> usize {
+        match self {
+            Phase::Total => 0,
+            Phase::Admission => 1,
+            Phase::Prefill => 2,
+            Phase::Select => 3,
+            Phase::KvSync => 4,
+            Phase::Aging => 5,
+            Phase::Residency => 6,
+            Phase::Prefetch => 7,
+            Phase::Compute => 8,
+            Phase::Decode => 9,
+        }
+    }
+
+    /// Stable bucket name used in JSON output.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Total => "total",
+            Phase::Admission => "admission",
+            Phase::Prefill => "prefill",
+            Phase::Select => "select",
+            Phase::KvSync => "kv_sync",
+            Phase::Aging => "aging",
+            Phase::Residency => "residency",
+            Phase::Prefetch => "prefetch",
+            Phase::Compute => "compute",
+            Phase::Decode => "decode",
+        }
+    }
+}
+
+/// Accumulated wall-clock nanoseconds and call counts per phase.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PhaseProfile {
+    ns: [u64; PHASES.len()],
+    calls: [u64; PHASES.len()],
+}
+
+impl PhaseProfile {
+    /// Accumulated nanoseconds in `phase`.
+    pub fn ns(&self, phase: Phase) -> u64 {
+        self.ns[phase.idx()]
+    }
+
+    /// Number of completed timers for `phase`.
+    pub fn calls(&self, phase: Phase) -> u64 {
+        self.calls[phase.idx()]
+    }
+
+    /// Total nanoseconds measured across whole `step()` calls.
+    pub fn total_ns(&self) -> u64 {
+        self.ns(Phase::Total)
+    }
+
+    /// Sum of the disjoint top-level buckets (everything except
+    /// `Total` itself and the nested `Prefill`).
+    pub fn covered_ns(&self) -> u64 {
+        PHASES
+            .iter()
+            .filter(|&&p| p != Phase::Total && p != Phase::Prefill)
+            .map(|&p| self.ns(p))
+            .sum()
+    }
+
+    /// `covered_ns / total_ns` — how much of the step the buckets
+    /// explain (0 when nothing was measured).
+    pub fn coverage(&self) -> f64 {
+        let total = self.total_ns();
+        if total == 0 {
+            0.0
+        } else {
+            self.covered_ns() as f64 / total as f64
+        }
+    }
+
+    /// Add another profile's accumulations into this one.
+    pub fn merge(&mut self, other: &PhaseProfile) {
+        for (a, b) in self.ns.iter_mut().zip(other.ns.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.calls.iter_mut().zip(other.calls.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Per-phase `{ns, calls, pct_of_total}` plus a coverage summary.
+    pub fn to_json(&self) -> Json {
+        let total = self.total_ns();
+        let mut phases = BTreeMap::new();
+        for &p in &PHASES {
+            let mut obj = BTreeMap::new();
+            obj.insert("ns".into(), Json::Num(self.ns(p) as f64));
+            obj.insert("calls".into(), Json::Num(self.calls(p) as f64));
+            let pct = if total == 0 { 0.0 } else { self.ns(p) as f64 * 100.0 / total as f64 };
+            obj.insert("pct_of_total".into(), Json::Num((pct * 100.0).round() / 100.0));
+            phases.insert(p.name().to_string(), Json::Obj(obj));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("phases".into(), Json::Obj(phases));
+        root.insert("total_ns".into(), Json::Num(total as f64));
+        root.insert("covered_ns".into(), Json::Num(self.covered_ns() as f64));
+        root.insert(
+            "coverage".into(),
+            Json::Num((self.coverage() * 10_000.0).round() / 10_000.0),
+        );
+        Json::Obj(root)
+    }
+}
+
+thread_local! {
+    static ENABLED: Cell<bool> = const { Cell::new(false) };
+    static ACCUM: RefCell<PhaseProfile> = RefCell::new(PhaseProfile::default());
+}
+
+/// Turn profiling on for this thread (accumulators keep prior totals;
+/// call [`reset`] for a clean slate).
+pub fn enable() {
+    ENABLED.with(|e| e.set(true));
+}
+
+/// Turn profiling off for this thread.
+pub fn disable() {
+    ENABLED.with(|e| e.set(false));
+}
+
+/// Whether profiling is on for this thread.
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.with(|e| e.get())
+}
+
+/// Zero all accumulators.
+pub fn reset() {
+    ACCUM.with(|a| *a.borrow_mut() = PhaseProfile::default());
+}
+
+/// Copy of the current accumulators.
+pub fn snapshot() -> PhaseProfile {
+    ACCUM.with(|a| a.borrow().clone())
+}
+
+/// Start timing `phase`; the elapsed wall-clock time is accumulated
+/// when the returned guard drops. When profiling is off the guard holds
+/// no `Instant` and its drop is a no-op.
+#[inline]
+pub fn timer(phase: Phase) -> PhaseTimer {
+    PhaseTimer { phase, start: if is_enabled() { Some(Instant::now()) } else { None } }
+}
+
+/// RAII guard returned by [`timer`].
+#[must_use = "the timer accumulates on drop; binding it to `_` drops immediately"]
+pub struct PhaseTimer {
+    phase: Phase,
+    start: Option<Instant>,
+}
+
+impl Drop for PhaseTimer {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            let dt = t0.elapsed().as_nanos() as u64;
+            ACCUM.with(|a| {
+                let mut a = a.borrow_mut();
+                let i = self.phase.idx();
+                a.ns[i] += dt;
+                a.calls[i] += 1;
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_timer_accumulates_nothing() {
+        disable();
+        reset();
+        {
+            let _t = timer(Phase::Compute);
+        }
+        let snap = snapshot();
+        assert_eq!(snap.calls(Phase::Compute), 0);
+        assert_eq!(snap.total_ns(), 0);
+    }
+
+    #[test]
+    fn enabled_timer_counts_calls_and_time() {
+        enable();
+        reset();
+        {
+            let _total = timer(Phase::Total);
+            let _t = timer(Phase::Decode);
+            std::hint::black_box(vec![0u8; 1024]);
+        }
+        disable();
+        let snap = snapshot();
+        assert_eq!(snap.calls(Phase::Decode), 1);
+        assert_eq!(snap.calls(Phase::Total), 1);
+        assert!(snap.ns(Phase::Total) >= snap.ns(Phase::Decode));
+        reset();
+    }
+
+    #[test]
+    fn coverage_excludes_total_and_nested_prefill() {
+        let mut p = PhaseProfile::default();
+        p.ns[Phase::Total.idx()] = 100;
+        p.ns[Phase::Admission.idx()] = 40;
+        p.ns[Phase::Prefill.idx()] = 30; // nested inside Admission
+        p.ns[Phase::Decode.idx()] = 50;
+        assert_eq!(p.covered_ns(), 90);
+        assert!((p.coverage() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds_buckets() {
+        let mut a = PhaseProfile::default();
+        a.ns[Phase::Compute.idx()] = 10;
+        a.calls[Phase::Compute.idx()] = 1;
+        let mut b = PhaseProfile::default();
+        b.ns[Phase::Compute.idx()] = 5;
+        b.calls[Phase::Compute.idx()] = 2;
+        a.merge(&b);
+        assert_eq!(a.ns(Phase::Compute), 15);
+        assert_eq!(a.calls(Phase::Compute), 3);
+    }
+
+    #[test]
+    fn json_has_all_phases() {
+        let json = PhaseProfile::default().to_json();
+        let phases = json.get("phases").unwrap();
+        for p in PHASES {
+            assert!(phases.get(p.name()).is_ok(), "missing phase {}", p.name());
+        }
+    }
+}

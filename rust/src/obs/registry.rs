@@ -1,0 +1,340 @@
+//! One metrics registry for every stat surface in the crate.
+//!
+//! The simulator grew seven disjoint stat structs (`ServeMetrics`,
+//! `KvStats`, `TierLedger`, `BrokerStats`, `AdmissionStats`, the
+//! prefetch ledger, `PeerMonitor` tier slots), each with its own
+//! accessors and JSON. [`MetricsRegistry`] is the single snapshot tree
+//! they all register into: dot-separated metric names
+//! (`"serve.ttft_p99_ns"`, `"kv.reloads.ssd"`) nest into one JSON
+//! object, and [`LogHistogram`] keeps full TTFT/TBT distributions with
+//! fixed log₂ buckets so merged rollups stay exact (bucket-wise sums,
+//! never averaged percentiles).
+//!
+//! ```
+//! use harvest::obs::registry::{LogHistogram, MetricsRegistry};
+//!
+//! let mut h = LogHistogram::default();
+//! for v in [100u64, 200, 400, 800] {
+//!     h.record(v);
+//! }
+//! assert_eq!(h.count(), 4);
+//! assert_eq!(h.sum(), 1_500);
+//!
+//! let mut reg = MetricsRegistry::new();
+//! reg.counter("serve.requests_finished", 4);
+//! reg.gauge("serve.goodput_tok_s", 123.5);
+//! reg.hist("serve.ttft_ns", &h);
+//! let json = reg.to_json();
+//! let finished = json.get("serve").unwrap().get("requests_finished").unwrap();
+//! assert_eq!(finished.as_u64().unwrap(), 4);
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Number of log₂ buckets (values up to `u64::MAX` bucket by leading
+/// bit: bucket 0 holds zero, bucket *i* holds `[2^(i-1), 2^i)`).
+pub const BUCKETS: usize = 65;
+
+/// Fixed-size log₂-bucket histogram of `u64` samples.
+///
+/// Percentiles come from bucket upper bounds (≤ 2× relative error),
+/// and [`merge`](Self::merge) is an exact bucket-wise sum — two nodes'
+/// histograms merge into the true cluster distribution, unlike
+/// averaging per-node percentile points.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogHistogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    sum: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self { counts: [0; BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl LogHistogram {
+    fn bucket(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            64 - v.leading_zeros() as usize
+        }
+    }
+
+    /// Upper bound of bucket `i` (inclusive).
+    fn bucket_upper(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all samples (saturating).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// `true` when no samples have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Mean sample value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Bucket-wise merge: the exact histogram of the union of samples.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    /// Approximate percentile `p` in `[0, 100]`: the upper bound of the
+    /// bucket holding the rank-`p` sample (0 when empty).
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_upper(i);
+            }
+        }
+        Self::bucket_upper(BUCKETS - 1)
+    }
+
+    /// JSON snapshot: count, sum, mean, p50/p90/p99, and the non-empty
+    /// buckets as `[lower_bound, count]` pairs.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                let lower = if i == 0 { 0 } else { 1u64 << (i - 1) };
+                Json::Arr(vec![Json::Num(lower as f64), Json::Num(c as f64)])
+            })
+            .collect();
+        let mut obj = BTreeMap::new();
+        obj.insert("count".into(), Json::Num(self.count as f64));
+        obj.insert("sum".into(), Json::Num(self.sum as f64));
+        obj.insert("mean".into(), Json::Num(self.mean()));
+        obj.insert("p50".into(), Json::Num(self.percentile(50.0) as f64));
+        obj.insert("p90".into(), Json::Num(self.percentile(90.0) as f64));
+        obj.insert("p99".into(), Json::Num(self.percentile(99.0) as f64));
+        obj.insert("buckets".into(), Json::Arr(buckets));
+        Json::Obj(obj)
+    }
+}
+
+/// One registered metric.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Metric {
+    /// Monotonic count; merges by addition.
+    Counter(u64),
+    /// Point-in-time value; merges by taking the newer value.
+    Gauge(f64),
+    /// Full distribution; merges bucket-wise.
+    Hist(LogHistogram),
+}
+
+/// Snapshot tree of named metrics.
+///
+/// Names are dot-separated paths (`"kv.reloads.host"`); [`to_json`]
+/// (Self::to_json) nests them into one object so `serve`, the benches,
+/// and rollups all emit the same shape.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    metrics: BTreeMap<String, Metric>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or overwrite) a counter.
+    pub fn counter(&mut self, name: &str, v: u64) {
+        self.metrics.insert(name.to_string(), Metric::Counter(v));
+    }
+
+    /// Register (or overwrite) a gauge.
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.metrics.insert(name.to_string(), Metric::Gauge(v));
+    }
+
+    /// Register (or overwrite) a histogram snapshot.
+    pub fn hist(&mut self, name: &str, h: &LogHistogram) {
+        self.metrics.insert(name.to_string(), Metric::Hist(h.clone()));
+    }
+
+    /// Look up a metric by full dotted name.
+    pub fn get(&self, name: &str) -> Option<&Metric> {
+        self.metrics.get(name)
+    }
+
+    /// Number of registered metrics.
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    /// `true` when nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    /// Merge another registry in: counters add, gauges take `other`'s
+    /// value, histograms merge bucket-wise. Metrics only in `other` are
+    /// inserted.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (name, m) in &other.metrics {
+            match (self.metrics.get_mut(name), m) {
+                (Some(Metric::Counter(a)), Metric::Counter(b)) => *a += b,
+                (Some(Metric::Gauge(a)), Metric::Gauge(b)) => *a = *b,
+                (Some(Metric::Hist(a)), Metric::Hist(b)) => a.merge(b),
+                _ => {
+                    self.metrics.insert(name.clone(), m.clone());
+                }
+            }
+        }
+    }
+
+    /// Nest dotted names into one JSON tree. A name that collides with
+    /// a parent path (`"a.b"` and `"a.b.c"`) keeps the later entry —
+    /// callers keep namespaces distinct by convention.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        for (name, m) in &self.metrics {
+            let leaf = match m {
+                Metric::Counter(v) => Json::Num(*v as f64),
+                Metric::Gauge(v) => Json::Num(*v),
+                Metric::Hist(h) => h.to_json(),
+            };
+            insert_path(&mut root, name, leaf);
+        }
+        Json::Obj(root)
+    }
+}
+
+fn insert_path(root: &mut BTreeMap<String, Json>, path: &str, leaf: Json) {
+    match path.split_once('.') {
+        None => {
+            root.insert(path.to_string(), leaf);
+        }
+        Some((head, rest)) => {
+            let entry =
+                root.entry(head.to_string()).or_insert_with(|| Json::Obj(BTreeMap::new()));
+            if !matches!(entry, Json::Obj(_)) {
+                *entry = Json::Obj(BTreeMap::new());
+            }
+            if let Json::Obj(map) = entry {
+                insert_path(map, rest, leaf);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_by_leading_bit() {
+        let mut h = LogHistogram::default();
+        h.record(0);
+        h.record(1);
+        h.record(2);
+        h.record(3);
+        h.record(1 << 40);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 6 + (1 << 40));
+        // p50 of {0,1,2,3,2^40}: rank-3 sample lives in bucket [2,4).
+        assert_eq!(h.percentile(50.0), 3);
+        assert_eq!(h.percentile(100.0), (1u64 << 41) - 1);
+    }
+
+    #[test]
+    fn histogram_merge_is_bucketwise() {
+        let mut a = LogHistogram::default();
+        let mut b = LogHistogram::default();
+        for _ in 0..99 {
+            a.record(10);
+        }
+        b.record(1_000_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        // The tail sample survives the merge exactly: p100 sits in
+        // 1M's bucket, not at an averaged midpoint.
+        assert!(a.percentile(100.0) >= 1_000_000);
+        assert_eq!(a.percentile(50.0), 15);
+    }
+
+    #[test]
+    fn registry_merges_by_kind() {
+        let mut a = MetricsRegistry::new();
+        a.counter("x.count", 2);
+        a.gauge("x.rate", 1.0);
+        let mut b = MetricsRegistry::new();
+        b.counter("x.count", 3);
+        b.gauge("x.rate", 9.0);
+        b.counter("y.only", 7);
+        a.merge(&b);
+        assert_eq!(a.get("x.count"), Some(&Metric::Counter(5)));
+        assert_eq!(a.get("x.rate"), Some(&Metric::Gauge(9.0)));
+        assert_eq!(a.get("y.only"), Some(&Metric::Counter(7)));
+    }
+
+    #[test]
+    fn to_json_nests_dotted_paths() {
+        let mut reg = MetricsRegistry::new();
+        reg.counter("kv.reloads.host", 4);
+        reg.counter("kv.reloads.ssd", 1);
+        reg.gauge("serve.tps", 10.5);
+        let json = reg.to_json();
+        let reloads = json.get("kv").unwrap().get("reloads").unwrap();
+        assert_eq!(reloads.get("host").unwrap().as_u64().unwrap(), 4);
+        assert_eq!(reloads.get("ssd").unwrap().as_u64().unwrap(), 1);
+        let tps = json.get("serve").unwrap().get("tps").unwrap();
+        assert_eq!(tps.as_f64().unwrap(), 10.5);
+    }
+
+    #[test]
+    fn empty_histogram_percentiles_are_zero() {
+        let h = LogHistogram::default();
+        assert_eq!(h.percentile(99.0), 0);
+        assert!(h.is_empty());
+        assert_eq!(h.mean(), 0.0);
+    }
+}

@@ -1,0 +1,414 @@
+//! Virtual-time span/instant tracer with a bounded ring buffer.
+//!
+//! Recording is thread-local and **zero-overhead when off**: every
+//! recording entry point first reads one thread-local `Cell<bool>` and
+//! returns. Events carry only `&'static str` names and a fixed array of
+//! numeric args — nothing is formatted or allocated until export, so a
+//! hot simulation loop can trace unconditionally.
+//!
+//! Timestamps are **virtual** nanoseconds ([`Ns`]) from the simulation
+//! clock, never wall-clock: a traced run and an untraced run see the
+//! identical timeline. Export is Chrome trace-event JSON
+//! ([`to_chrome_json`]) loadable in Perfetto / `chrome://tracing`, with
+//! `pid` = node id and `tid` = subsystem.
+//!
+//! ```
+//! use harvest::obs::trace::{self, Subsystem};
+//!
+//! trace::enable(4096);
+//! trace::set_node(2);
+//! trace::span(Subsystem::Transfer, "fetch", 100, 350, &[("bytes", 4096)]);
+//! trace::instant(Subsystem::Admission, "shed", 400, &[("occ_pm", 950)]);
+//! let events = trace::take();
+//! assert_eq!(events.len(), 2);
+//! assert_eq!(events[0].node, 2);
+//! assert!(events[0].is_span() && !events[1].is_span());
+//! trace::disable();
+//! assert!(!trace::is_enabled());
+//! ```
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+
+use crate::memsim::{DeviceId, Ns};
+use crate::util::json::Json;
+
+/// Which layer of the system an event came from. Becomes the Chrome
+/// trace `tid` (one lane per subsystem under each node's `pid`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Subsystem {
+    /// `NodeStepper` phases: admit, prefill, kv_sync, compute, decode…
+    Stepper,
+    /// DMA transfer ops (populate / fetch / migrate / compress…).
+    Transfer,
+    /// Revocation outcomes applied by the KV manager.
+    Revocation,
+    /// Cold-tier ladder rungs (age-out demotions and compressions).
+    ColdTier,
+    /// Prefetch planner lifecycle: plan → issue → hit / late / waste.
+    Prefetch,
+    /// Admission controller decisions with their input signals.
+    Admission,
+    /// Cluster router decisions.
+    Router,
+    /// Tenant-actor wakes.
+    Tenant,
+}
+
+/// All subsystems, in `tid` order.
+pub const SUBSYSTEMS: [Subsystem; 8] = [
+    Subsystem::Stepper,
+    Subsystem::Transfer,
+    Subsystem::Revocation,
+    Subsystem::ColdTier,
+    Subsystem::Prefetch,
+    Subsystem::Admission,
+    Subsystem::Router,
+    Subsystem::Tenant,
+];
+
+impl Subsystem {
+    /// Stable lane name used as the Chrome trace category and thread name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Subsystem::Stepper => "stepper",
+            Subsystem::Transfer => "transfer",
+            Subsystem::Revocation => "revocation",
+            Subsystem::ColdTier => "coldtier",
+            Subsystem::Prefetch => "prefetch",
+            Subsystem::Admission => "admission",
+            Subsystem::Router => "router",
+            Subsystem::Tenant => "tenant",
+        }
+    }
+
+    /// Chrome trace `tid` (1-based, stable across runs).
+    pub fn tid(self) -> u32 {
+        match self {
+            Subsystem::Stepper => 1,
+            Subsystem::Transfer => 2,
+            Subsystem::Revocation => 3,
+            Subsystem::ColdTier => 4,
+            Subsystem::Prefetch => 5,
+            Subsystem::Admission => 6,
+            Subsystem::Router => 7,
+            Subsystem::Tenant => 8,
+        }
+    }
+}
+
+/// Maximum numeric args carried per event (fixed so recording never
+/// allocates).
+pub const MAX_ARGS: usize = 4;
+
+/// One recorded span or instant. `Copy`, allocation-free: names are
+/// `&'static str` and args are a fixed `(&str, u64)` array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Node (cluster member) the event belongs to — Chrome trace `pid`.
+    pub node: u32,
+    /// Source lane — Chrome trace `tid`.
+    pub sub: Subsystem,
+    /// Event name (static, no formatting at record time).
+    pub name: &'static str,
+    /// Virtual start time (equals [`end`](Self::end) for instants).
+    pub start: Ns,
+    /// Virtual end time.
+    pub end: Ns,
+    span: bool,
+    args: [(&'static str, u64); MAX_ARGS],
+    nargs: u8,
+}
+
+impl TraceEvent {
+    /// `true` for duration spans, `false` for instants.
+    pub fn is_span(&self) -> bool {
+        self.span
+    }
+
+    /// The populated numeric args.
+    pub fn args(&self) -> &[(&'static str, u64)] {
+        &self.args[..self.nargs as usize]
+    }
+}
+
+struct Tracer {
+    cap: usize,
+    ring: VecDeque<TraceEvent>,
+    node: u32,
+    hint: Ns,
+    dropped: u64,
+}
+
+impl Tracer {
+    fn push(&mut self, ev: TraceEvent) {
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(ev);
+    }
+}
+
+thread_local! {
+    static ENABLED: Cell<bool> = const { Cell::new(false) };
+    static TRACER: RefCell<Tracer> = RefCell::new(Tracer {
+        cap: 0,
+        ring: VecDeque::new(),
+        node: 0,
+        hint: 0,
+        dropped: 0,
+    });
+}
+
+/// Turn tracing on for this thread with a ring of `ring_cap` events
+/// (clamped to ≥ 1). Clears any previously recorded events.
+pub fn enable(ring_cap: usize) {
+    TRACER.with(|t| {
+        let mut t = t.borrow_mut();
+        t.cap = ring_cap.max(1);
+        t.ring.clear();
+        t.dropped = 0;
+    });
+    ENABLED.with(|e| e.set(true));
+}
+
+/// Turn tracing off for this thread (recorded events stay until
+/// [`take`] or the next [`enable`]).
+pub fn disable() {
+    ENABLED.with(|e| e.set(false));
+}
+
+/// Whether tracing is on for this thread. This is the fast-path check
+/// every recording entry point performs first — one `Cell` read.
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.with(|e| e.get())
+}
+
+/// Set the node id attached to subsequently recorded events. Cluster
+/// drivers call this before stepping each node; single-node engines use
+/// node 0. No-op when tracing is off.
+#[inline]
+pub fn set_node(node: u32) {
+    if !is_enabled() {
+        return;
+    }
+    TRACER.with(|t| t.borrow_mut().node = node);
+}
+
+/// Current node context (0 when tracing is off or unset).
+pub fn current_node() -> u32 {
+    TRACER.with(|t| t.borrow().node)
+}
+
+/// Set the virtual-time hint used by [`instant_now`] for call sites
+/// that have no natural timestamp of their own. No-op when off.
+#[inline]
+pub fn set_time(now: Ns) {
+    if !is_enabled() {
+        return;
+    }
+    TRACER.with(|t| t.borrow_mut().hint = now);
+}
+
+fn pack(args: &[(&'static str, u64)]) -> ([(&'static str, u64); MAX_ARGS], u8) {
+    let mut packed = [("", 0u64); MAX_ARGS];
+    let n = args.len().min(MAX_ARGS);
+    packed[..n].copy_from_slice(&args[..n]);
+    (packed, n as u8)
+}
+
+/// Record a duration span `[start, end]` in virtual time. Extra args
+/// beyond [`MAX_ARGS`] are silently dropped. No-op when off.
+#[inline]
+pub fn span(sub: Subsystem, name: &'static str, start: Ns, end: Ns, args: &[(&'static str, u64)]) {
+    if !is_enabled() {
+        return;
+    }
+    let (packed, nargs) = pack(args);
+    TRACER.with(|t| {
+        let mut t = t.borrow_mut();
+        let node = t.node;
+        t.push(TraceEvent { node, sub, name, start, end, span: true, args: packed, nargs });
+    });
+}
+
+/// Record an instant at virtual time `at`. No-op when off.
+#[inline]
+pub fn instant(sub: Subsystem, name: &'static str, at: Ns, args: &[(&'static str, u64)]) {
+    if !is_enabled() {
+        return;
+    }
+    let (packed, nargs) = pack(args);
+    TRACER.with(|t| {
+        let mut t = t.borrow_mut();
+        let node = t.node;
+        t.push(TraceEvent { node, sub, name, start: at, end: at, span: false, args: packed, nargs });
+    });
+}
+
+/// Record an instant at the current [`set_time`] hint — for call sites
+/// (e.g. prefetch cancellation) that are not handed a timestamp. No-op
+/// when off.
+#[inline]
+pub fn instant_now(sub: Subsystem, name: &'static str, args: &[(&'static str, u64)]) {
+    if !is_enabled() {
+        return;
+    }
+    let at = TRACER.with(|t| t.borrow().hint);
+    instant(sub, name, at, args);
+}
+
+/// Drain and return all recorded events (oldest first).
+pub fn take() -> Vec<TraceEvent> {
+    TRACER.with(|t| t.borrow_mut().ring.drain(..).collect())
+}
+
+/// Copy of the current ring contents without draining (used by the
+/// flight recorder to snapshot state at a trigger).
+pub fn snapshot() -> Vec<TraceEvent> {
+    TRACER.with(|t| t.borrow().ring.iter().copied().collect())
+}
+
+/// Events evicted from the ring so far (oldest-first overflow).
+pub fn dropped() -> u64 {
+    TRACER.with(|t| t.borrow().dropped)
+}
+
+/// Numeric code for a device in event args: `Gpu(i)` → `i`, host →
+/// 1000, CXL → 1001, SSD → 1002.
+pub fn dev(d: DeviceId) -> u64 {
+    match d {
+        DeviceId::Gpu(i) => i as u64,
+        DeviceId::Host => 1000,
+        DeviceId::Cxl => 1001,
+        DeviceId::Ssd => 1002,
+    }
+}
+
+fn event_json(ev: &TraceEvent) -> Json {
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("name".into(), Json::Str(ev.name.into()));
+    obj.insert("cat".into(), Json::Str(ev.sub.name().into()));
+    obj.insert("pid".into(), Json::Num(ev.node as f64));
+    obj.insert("tid".into(), Json::Num(ev.sub.tid() as f64));
+    obj.insert("ts".into(), Json::Num(ev.start as f64 / 1_000.0));
+    if ev.span {
+        obj.insert("ph".into(), Json::Str("X".into()));
+        obj.insert("dur".into(), Json::Num(ev.end.saturating_sub(ev.start) as f64 / 1_000.0));
+    } else {
+        obj.insert("ph".into(), Json::Str("i".into()));
+        obj.insert("s".into(), Json::Str("t".into()));
+    }
+    if !ev.args().is_empty() {
+        let mut args = std::collections::BTreeMap::new();
+        for &(k, v) in ev.args() {
+            args.insert(k.to_string(), Json::Num(v as f64));
+        }
+        obj.insert("args".into(), Json::Obj(args));
+    }
+    Json::Obj(obj)
+}
+
+/// Export events as Chrome trace-event JSON (the `{"traceEvents": […]}`
+/// object form), loadable in Perfetto or `chrome://tracing`. `pid` is
+/// the node, `tid` the subsystem; timestamps are virtual µs. Metadata
+/// events name each process/thread lane.
+pub fn to_chrome_json(events: &[TraceEvent]) -> Json {
+    let mut out = Vec::new();
+    let mut nodes: Vec<u32> = events.iter().map(|e| e.node).collect();
+    nodes.sort_unstable();
+    nodes.dedup();
+    for &node in &nodes {
+        let mut meta = std::collections::BTreeMap::new();
+        meta.insert("name".into(), Json::Str("process_name".into()));
+        meta.insert("ph".into(), Json::Str("M".into()));
+        meta.insert("pid".into(), Json::Num(node as f64));
+        let mut args = std::collections::BTreeMap::new();
+        args.insert("name".into(), Json::Str(format!("node{node}")));
+        meta.insert("args".into(), Json::Obj(args));
+        out.push(Json::Obj(meta));
+        for sub in SUBSYSTEMS {
+            let mut meta = std::collections::BTreeMap::new();
+            meta.insert("name".into(), Json::Str("thread_name".into()));
+            meta.insert("ph".into(), Json::Str("M".into()));
+            meta.insert("pid".into(), Json::Num(node as f64));
+            meta.insert("tid".into(), Json::Num(sub.tid() as f64));
+            let mut args = std::collections::BTreeMap::new();
+            args.insert("name".into(), Json::Str(sub.name().into()));
+            meta.insert("args".into(), Json::Obj(args));
+            out.push(Json::Obj(meta));
+        }
+    }
+    out.extend(events.iter().map(event_json));
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("traceEvents".into(), Json::Arr(out));
+    root.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        disable();
+        span(Subsystem::Stepper, "step", 0, 10, &[]);
+        instant(Subsystem::Router, "route", 5, &[]);
+        enable(16);
+        assert!(take().is_empty());
+        disable();
+    }
+
+    #[test]
+    fn ring_evicts_oldest_first() {
+        enable(4);
+        for i in 0..10u64 {
+            instant(Subsystem::Stepper, "tick", i, &[("i", i)]);
+        }
+        let evs = take();
+        disable();
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs.iter().map(|e| e.start).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+        assert_eq!(dropped(), 6);
+    }
+
+    #[test]
+    fn args_truncate_at_max() {
+        enable(4);
+        let args: Vec<(&'static str, u64)> =
+            vec![("a", 1), ("b", 2), ("c", 3), ("d", 4), ("e", 5)];
+        span(Subsystem::Transfer, "copy", 0, 1, &args);
+        let evs = take();
+        disable();
+        assert_eq!(evs[0].args().len(), MAX_ARGS);
+        assert_eq!(evs[0].args()[3], ("d", 4));
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        enable(16);
+        set_node(3);
+        span(Subsystem::Transfer, "fetch", 2_000, 5_000, &[("bytes", 64)]);
+        let json = to_chrome_json(&take());
+        disable();
+        let evs = json.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process_name + 8 thread_name metadata events + the span.
+        assert_eq!(evs.len(), 10);
+        let span = evs.last().unwrap();
+        assert_eq!(span.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(span.get("pid").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(span.get("ts").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(span.get("dur").unwrap().as_f64().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn dev_codes_are_stable() {
+        assert_eq!(dev(DeviceId::Gpu(7)), 7);
+        assert_eq!(dev(DeviceId::Host), 1000);
+        assert_eq!(dev(DeviceId::Cxl), 1001);
+        assert_eq!(dev(DeviceId::Ssd), 1002);
+    }
+}

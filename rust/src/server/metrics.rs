@@ -3,6 +3,7 @@
 
 use crate::harvest::prefetch::PrefetchStats;
 use crate::memsim::Ns;
+use crate::obs::{LogHistogram, MetricsRegistry};
 use crate::util::json::{obj, Json};
 use crate::util::stats::Summary;
 
@@ -40,6 +41,14 @@ pub struct ServeMetrics {
     pub decode_stall_ns: Ns,
     /// Prefetch outcome ledger, when the engine ran with prefetch on.
     pub prefetch: Option<PrefetchStats>,
+    /// Full TTFT distribution in fixed log₂ buckets — unlike the
+    /// percentile points above, bucket counts merge exactly across
+    /// nodes ([`ServeMetrics::merge`] sums buckets, never averages
+    /// percentiles).
+    pub ttft_hist: LogHistogram,
+    /// Full time-between-tokens (per decode step) distribution, same
+    /// bucketing as [`ServeMetrics::ttft_hist`].
+    pub tbt_hist: LogHistogram,
     start: Option<Ns>,
     end: Ns,
 }
@@ -57,10 +66,12 @@ impl ServeMetrics {
 
     pub fn on_first_token(&mut self, arrival: Ns, now: Ns) {
         self.ttft.add((now - arrival) as f64);
+        self.ttft_hist.record(now - arrival);
     }
 
     pub fn on_token(&mut self, step_ns: Ns) {
         self.per_token.add(step_ns as f64);
+        self.tbt_hist.record(step_ns);
         self.tokens_generated += 1;
     }
 
@@ -117,6 +128,8 @@ impl ServeMetrics {
         self.deferred_admissions += other.deferred_admissions;
         self.deferred_wait_ns += other.deferred_wait_ns;
         self.decode_stall_ns += other.decode_stall_ns;
+        self.ttft_hist.merge(&other.ttft_hist);
+        self.tbt_hist.merge(&other.tbt_hist);
         self.prefetch = match (self.prefetch.take(), &other.prefetch) {
             (None, None) => None,
             (Some(p), None) => Some(p),
@@ -205,6 +218,29 @@ impl ServeMetrics {
             pairs.push(("prefetch_bytes", p.bytes_prefetched.into()));
         }
         obj(pairs)
+    }
+
+    /// Register this run's serving metrics into the unified registry
+    /// under `prefix` (e.g. `"serve"`): the headline counters and
+    /// gauges, the full TTFT/TBT histograms, and the prefetch ledger
+    /// when one is attached.
+    pub fn register(&self, reg: &mut MetricsRegistry, prefix: &str) {
+        reg.counter(&format!("{prefix}.tokens_generated"), self.tokens_generated);
+        reg.counter(&format!("{prefix}.requests_finished"), self.requests_finished);
+        reg.counter(&format!("{prefix}.tokens_completed"), self.tokens_completed);
+        reg.counter(&format!("{prefix}.requests_shed"), self.requests_shed);
+        reg.counter(&format!("{prefix}.deferred_admissions"), self.deferred_admissions);
+        reg.counter(&format!("{prefix}.deferred_wait_ns"), self.deferred_wait_ns);
+        reg.counter(&format!("{prefix}.decode_stall_ns"), self.decode_stall_ns);
+        reg.counter(&format!("{prefix}.makespan_ns"), self.makespan_ns());
+        reg.gauge(&format!("{prefix}.throughput_tps"), self.tokens_per_sec());
+        reg.gauge(&format!("{prefix}.goodput_tok_s"), self.goodput_tok_s());
+        reg.gauge(&format!("{prefix}.shed_rate"), self.shed_rate());
+        reg.hist(&format!("{prefix}.ttft_ns"), &self.ttft_hist);
+        reg.hist(&format!("{prefix}.tbt_ns"), &self.tbt_hist);
+        if let Some(p) = &self.prefetch {
+            p.register(reg, &format!("{prefix}.prefetch"));
+        }
     }
 }
 
@@ -336,5 +372,43 @@ mod tests {
         assert_eq!(rollup.requests_shed, 2);
         assert_eq!(rollup.deferred_admissions, 2);
         assert_eq!(rollup.deferred_wait_ns, 60);
+    }
+
+    #[test]
+    fn histograms_record_and_merge_bucketwise() {
+        // Node A: 99 fast first tokens. Node B: one slow outlier.
+        let mut a = ServeMetrics::new();
+        for _ in 0..99 {
+            a.on_first_token(0, 1_000);
+        }
+        let mut b = ServeMetrics::new();
+        b.on_first_token(0, 1_000_000);
+        a.merge(&b);
+        assert_eq!(a.ttft_hist.count(), 100);
+        // Bucket-wise merge keeps the outlier at the tail: the merged
+        // p100 must sit at the slow sample's magnitude. Averaging two
+        // per-node p99 points (1 µs and 1 ms) could not recover this.
+        assert!(a.ttft_hist.percentile(100.0) >= 1_000_000);
+        assert!(a.ttft_hist.percentile(50.0) < 2_048);
+    }
+
+    #[test]
+    fn register_exposes_counters_and_histograms() {
+        let mut m = ServeMetrics::new();
+        m.on_start(0);
+        m.on_first_token(0, 100);
+        m.on_token(10);
+        m.on_finish(0, 110, 1);
+        let mut reg = MetricsRegistry::new();
+        m.register(&mut reg, "serve");
+        match reg.get("serve.tokens_generated") {
+            Some(crate::obs::Metric::Counter(1)) => {}
+            other => panic!("unexpected metric: {other:?}"),
+        }
+        match reg.get("serve.ttft_ns") {
+            Some(crate::obs::Metric::Hist(h)) => assert_eq!(h.count(), 1),
+            other => panic!("unexpected metric: {other:?}"),
+        }
+        assert!(reg.get("serve.prefetch.issued").is_none(), "no ledger attached");
     }
 }

@@ -106,6 +106,8 @@ pub struct SimEngineReport {
     /// Requests the admission controller shed, in decision order
     /// (empty without a controller).
     pub sheds: Vec<crate::kv::SeqId>,
+    /// Admission-controller counters (None without a controller).
+    pub admission: Option<crate::control::AdmissionStats>,
 }
 
 /// The engine: a closed-loop driver over one [`NodeStepper`].
@@ -143,6 +145,7 @@ impl SimEngine {
     /// Serve `requests` to completion in virtual time. One run per
     /// engine: the stepper's queues and metrics carry across calls.
     pub fn run(&mut self, hr: &mut HarvestRuntime, requests: Vec<Request>) -> SimEngineReport {
+        crate::obs::trace::set_node(0);
         self.stepper.install(hr);
         self.stepper.enqueue_all(requests);
         while self.stepper.has_work() {
@@ -158,6 +161,7 @@ impl SimEngine {
             completions: self.stepper.completions().to_vec(),
             steps: self.stepper.steps(),
             sheds: self.stepper.shed_ids().to_vec(),
+            admission: self.stepper.admission_stats(),
         }
     }
 }

@@ -69,6 +69,9 @@ use crate::control::{AdmissionController, AdmissionDecision, AdmissionSignals, A
 use crate::harvest::{HarvestRuntime, Transfer};
 use crate::kv::{KvOffloadManager, SeqId};
 use crate::memsim::{DeviceId, Ns};
+use crate::obs::profile::{self, Phase};
+use crate::obs::trace::{self, Subsystem};
+use crate::obs::{flight, FlightSignals};
 use crate::tenantsim::{FleetStats, TenantFleet};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
@@ -483,7 +486,26 @@ impl NodeStepper {
                         live: self.live.len(),
                     };
                     let ctl = self.admission.as_mut().expect("checked admission");
-                    ctl.decide(hr.node.clock.now(), arrival, &sig)
+                    let d = ctl.decide(hr.node.clock.now(), arrival, &sig);
+                    if trace::is_enabled() {
+                        let name = match d {
+                            AdmissionDecision::Admit => "admit",
+                            AdmissionDecision::Defer => "defer",
+                            AdmissionDecision::Shed => "shed",
+                        };
+                        trace::instant(
+                            Subsystem::Admission,
+                            name,
+                            hr.node.clock.now(),
+                            &[
+                                ("occ_pm", sig.occupancy_pm as u64),
+                                ("tenant_pm", sig.tenant_pressure_pm as u64),
+                                ("queue", sig.queue_depth as u64),
+                                ("predicted_ttft_ns", ctl.last_predicted_ttft_ns()),
+                            ],
+                        );
+                    }
+                    d
                 }
             };
             match decision {
@@ -516,6 +538,8 @@ impl NodeStepper {
     /// prefix's `ready_at` when its blocks are still in flight over the
     /// node fabric — the wait overlaps the suffix prefill.
     fn prefill(&mut self, hr: &mut HarvestRuntime, req: &mut Request) {
+        let _t = profile::timer(Phase::Prefill);
+        let prefill_start = hr.node.clock.now();
         let (cached, gate) = match req.prefix_group.and_then(|g| self.prefix_cache.get(&g)) {
             Some(e) => (e.tokens.min(req.shared_prefix_tokens), e.ready_at),
             None => (0, 0),
@@ -545,6 +569,13 @@ impl NodeStepper {
         }
         req.first_token_at = Some(hr.node.clock.now());
         self.metrics.on_first_token(req.arrival, hr.node.clock.now());
+        trace::span(
+            Subsystem::Stepper,
+            "prefill",
+            prefill_start,
+            hr.node.clock.now(),
+            &[("req", req.id.0), ("fresh", fresh as u64), ("cached", cached as u64)],
+        );
     }
 
     /// Run one engine iteration (see the module docs for the pipeline).
@@ -552,48 +583,82 @@ impl NodeStepper {
     /// idle stepper jumps to its next arrival and admits it; a busy one
     /// decodes a token per cohort member.
     pub fn step(&mut self, hr: &mut HarvestRuntime) {
-        // Idle: jump to the next arrival.
-        if self.live.is_empty() {
-            if let Some(at) = self.pending.front().map(|r| r.arrival) {
-                let target = at.max(hr.node.clock.now());
-                self.advance(hr, target);
+        let _t_total = profile::timer(Phase::Total);
+        let sheds_before = self.sheds.len();
+        let v_enter = hr.node.clock.now();
+        trace::set_time(v_enter);
+        {
+            let _t = profile::timer(Phase::Admission);
+            // Idle: jump to the next arrival.
+            if self.live.is_empty() {
+                if let Some(at) = self.pending.front().map(|r| r.arrival) {
+                    let target = at.max(hr.node.clock.now());
+                    self.advance(hr, target);
+                }
             }
+            self.admit_ready(hr);
         }
-        self.admit_ready(hr);
-        self.scheduler.select_into(self.cfg.decode_slots, &mut self.cohort);
+        trace::span(Subsystem::Stepper, "admit", v_enter, hr.node.clock.now(), &[]);
+        {
+            let _t = profile::timer(Phase::Select);
+            self.scheduler.select_into(self.cfg.decode_slots, &mut self.cohort);
+        }
         if self.cohort.is_empty() {
+            self.flight_check(hr, sheds_before);
             return;
         }
         self.steps += 1;
         let step_start = hr.node.clock.now();
         // Tick boundary: fold in revocations accumulated while time
         // advanced, then run the idle-aging ladder at its cadence.
-        self.kv.sync(hr);
-        if let Some(a) = self.cfg.aging {
-            if step_start >= self.next_sweep {
-                self.kv.age_idle_blocks(hr, a.idle_ns, a.ratio_pct);
-                self.next_sweep = step_start + a.sweep_ns;
+        {
+            let _t = profile::timer(Phase::KvSync);
+            self.kv.sync(hr);
+        }
+        let v_synced = hr.node.clock.now();
+        trace::span(Subsystem::Stepper, "kv_sync", step_start, v_synced, &[]);
+        {
+            let _t = profile::timer(Phase::Aging);
+            if let Some(a) = self.cfg.aging {
+                if step_start >= self.next_sweep {
+                    let stepped = self.kv.age_idle_blocks(hr, a.idle_ns, a.ratio_pct);
+                    self.next_sweep = step_start + a.sweep_ns;
+                    trace::span(
+                        Subsystem::Stepper,
+                        "aging_sweep",
+                        v_synced,
+                        hr.node.clock.now(),
+                        &[("aged", stepped as u64)],
+                    );
+                }
             }
         }
-        // Restore residency — the prefix blocks decode attends over,
-        // then the cohort's own blocks (this is where preemption and
-        // offload churn cost).
-        self.groups.clear();
-        for i in 0..self.cohort.len() {
-            let seq = self.cohort[i];
-            let Some(g) = self.live.get(&seq).and_then(|r| r.prefix_group) else { continue };
-            if self.groups.contains(&g) {
-                continue;
+        let v_aged = hr.node.clock.now();
+        {
+            let _t = profile::timer(Phase::Residency);
+            // Restore residency — the prefix blocks decode attends over,
+            // then the cohort's own blocks (this is where preemption and
+            // offload churn cost).
+            self.groups.clear();
+            for i in 0..self.cohort.len() {
+                let seq = self.cohort[i];
+                let Some(g) = self.live.get(&seq).and_then(|r| r.prefix_group) else {
+                    continue;
+                };
+                if self.groups.contains(&g) {
+                    continue;
+                }
+                self.groups.push(g);
+                if let Some(pseq) = self.prefix_cache.get(&g).map(|e| e.seq) {
+                    self.kv.access_seq(hr, pseq);
+                }
             }
-            self.groups.push(g);
-            if let Some(pseq) = self.prefix_cache.get(&g).map(|e| e.seq) {
-                self.kv.access_seq(hr, pseq);
+            for i in 0..self.cohort.len() {
+                let seq = self.cohort[i];
+                self.kv.access_seq(hr, seq);
             }
         }
-        for i in 0..self.cohort.len() {
-            let seq = self.cohort[i];
-            self.kv.access_seq(hr, seq);
-        }
+        trace::span(Subsystem::Stepper, "residency", v_aged, hr.node.clock.now(), &[]);
         // Everything between step_start and here was waiting on KV
         // residency, not computing.
         self.metrics.on_stall(hr.node.clock.now() - step_start);
@@ -605,47 +670,104 @@ impl NodeStepper {
         // on the host/CXL tiers are promoted toward peer HBM in the
         // same window, so their eventual reload rides NVLink instead of
         // PCIe.
-        if let Some(pcfg) = self.cfg.prefetch {
-            self.scheduler.lookahead_into(
-                self.cfg.decode_slots,
-                pcfg.horizon,
-                &mut self.predicted,
-            );
-            let deadline = hr.node.clock.now() + self.cfg.step_compute_ns;
-            self.kv.prefetch_seqs(hr, &self.predicted, deadline);
-            self.kv.promote_blocks(hr, &self.predicted, deadline);
-        }
-        // Batched compute.
-        let compute_end = hr.node.clock.now() + self.cfg.step_compute_ns;
-        Self::advance_time(&mut self.tenants, hr, compute_end);
-        let step_ns = hr.node.clock.now() - step_start;
-        for i in 0..self.cohort.len() {
-            let seq = self.cohort[i];
-            self.kv.append_token(hr, seq);
-            let now = hr.node.clock.now();
-            let req = self.live.get_mut(&seq).expect("scheduled request is live");
-            req.generated += 1;
-            self.metrics.on_token(step_ns);
-            if req.done() {
-                req.finished_at = Some(now);
-                let outcome = RequestOutcome {
-                    id: req.id,
-                    arrival: req.arrival,
-                    first_token_at: req.first_token_at.unwrap_or(now),
-                    finished_at: now,
-                    generated: req.generated,
-                };
-                self.metrics.on_finish(outcome.arrival, now, outcome.generated as u64);
-                if let Some(ctl) = self.admission.as_mut() {
-                    let ttft = outcome.first_token_at.saturating_sub(outcome.arrival);
-                    ctl.note_finish(now, ttft, outcome.generated as u64);
-                }
-                self.scheduler.retire(seq);
-                self.kv.finish_seq(hr, seq);
-                self.live.remove(&seq);
-                self.completions.push(outcome);
+        {
+            let _t = profile::timer(Phase::Prefetch);
+            if let Some(pcfg) = self.cfg.prefetch {
+                self.scheduler.lookahead_into(
+                    self.cfg.decode_slots,
+                    pcfg.horizon,
+                    &mut self.predicted,
+                );
+                let deadline = hr.node.clock.now() + self.cfg.step_compute_ns;
+                self.kv.prefetch_seqs(hr, &self.predicted, deadline);
+                self.kv.promote_blocks(hr, &self.predicted, deadline);
             }
         }
+        // Batched compute.
+        let v_compute = hr.node.clock.now();
+        {
+            let _t = profile::timer(Phase::Compute);
+            let compute_end = v_compute + self.cfg.step_compute_ns;
+            Self::advance_time(&mut self.tenants, hr, compute_end);
+        }
+        trace::span(
+            Subsystem::Stepper,
+            "compute",
+            v_compute,
+            hr.node.clock.now(),
+            &[("cohort", self.cohort.len() as u64)],
+        );
+        let step_ns = hr.node.clock.now() - step_start;
+        let v_decode = hr.node.clock.now();
+        {
+            let _t = profile::timer(Phase::Decode);
+            for i in 0..self.cohort.len() {
+                let seq = self.cohort[i];
+                self.kv.append_token(hr, seq);
+                let now = hr.node.clock.now();
+                let req = self.live.get_mut(&seq).expect("scheduled request is live");
+                req.generated += 1;
+                self.metrics.on_token(step_ns);
+                if req.done() {
+                    req.finished_at = Some(now);
+                    let outcome = RequestOutcome {
+                        id: req.id,
+                        arrival: req.arrival,
+                        first_token_at: req.first_token_at.unwrap_or(now),
+                        finished_at: now,
+                        generated: req.generated,
+                    };
+                    self.metrics.on_finish(outcome.arrival, now, outcome.generated as u64);
+                    if let Some(ctl) = self.admission.as_mut() {
+                        let ttft = outcome.first_token_at.saturating_sub(outcome.arrival);
+                        ctl.note_finish(now, ttft, outcome.generated as u64);
+                    }
+                    self.scheduler.retire(seq);
+                    self.kv.finish_seq(hr, seq);
+                    self.live.remove(&seq);
+                    self.completions.push(outcome);
+                }
+            }
+        }
+        trace::span(Subsystem::Stepper, "decode", v_decode, hr.node.clock.now(), &[]);
+        trace::span(
+            Subsystem::Stepper,
+            "step",
+            v_enter,
+            hr.node.clock.now(),
+            &[("steps", self.steps), ("live", self.live.len() as u64)],
+        );
+        self.flight_check(hr, sheds_before);
+    }
+
+    /// Feed this step's end-of-step signals to the flight recorder (a
+    /// no-op unless one is armed). Reads only: TTFT p99 comes from the
+    /// controller's monitor (whose lazy window prune is query-idempotent
+    /// — every monitor read prunes first, so observing here changes no
+    /// later answer) and the OOM counter from the tenant broker.
+    fn flight_check(&mut self, hr: &HarvestRuntime, sheds_before: usize) {
+        if !flight::is_armed() {
+            return;
+        }
+        let now = hr.node.clock.now();
+        let (p99, target) = match self.admission.as_mut() {
+            Some(ctl) => {
+                let target = ctl.config().slo.ttft_p99_ns;
+                (ctl.monitor_mut().ttft_p99(now).unwrap_or(0), target)
+            }
+            None => (0, 0),
+        };
+        let oom = self.tenants.as_ref().map_or(0, |f| f.broker().stats.oom_with_harvest);
+        flight::observe(
+            trace::current_node(),
+            now,
+            &FlightSignals {
+                ttft_p99_ns: p99,
+                ttft_target_ns: target,
+                new_sheds: (self.sheds.len() - sheds_before) as u64,
+                oom_with_harvest: oom,
+            },
+        );
     }
 
     /// Finalize metrics at end of run (attach the prefetch ledger).

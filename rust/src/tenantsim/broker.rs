@@ -58,6 +58,22 @@ pub struct BrokerStats {
     pub oom_with_harvest: u64,
 }
 
+impl BrokerStats {
+    /// Register the broker counters into the unified metrics registry
+    /// under `prefix` (e.g. `"tenants.broker"`).
+    pub fn register(&self, reg: &mut crate::obs::MetricsRegistry, prefix: &str) {
+        reg.counter(&format!("{prefix}.allocs"), self.allocs);
+        reg.counter(&format!("{prefix}.alloc_bytes"), self.alloc_bytes);
+        reg.counter(&format!("{prefix}.frees"), self.frees);
+        reg.counter(&format!("{prefix}.freed_bytes"), self.freed_bytes);
+        reg.counter(&format!("{prefix}.lease_yields"), self.lease_yields);
+        reg.counter(&format!("{prefix}.inflight_waits"), self.inflight_waits);
+        reg.counter(&format!("{prefix}.denied"), self.denied);
+        reg.counter(&format!("{prefix}.oom"), self.oom);
+        reg.counter(&format!("{prefix}.oom_with_harvest"), self.oom_with_harvest);
+    }
+}
+
 /// Mediates tenant allocations against harvested leases (one per
 /// [`super::TenantFleet`], i.e. per node).
 ///

@@ -224,6 +224,12 @@ impl TenantFleet {
             // An actor created mid-run may want a past wake; run it now.
             let at = wake.max(hr.node.clock.now());
             hr.advance_to(at);
+            crate::obs::trace::instant(
+                crate::obs::trace::Subsystem::Tenant,
+                "wake",
+                at,
+                &[("actor", i as u64)],
+            );
             let mut ctx = TenantCtx { hr, broker: &mut self.broker };
             self.actors[i].step(at, &mut ctx);
             debug_assert!(

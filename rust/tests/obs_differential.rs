@@ -1,0 +1,224 @@
+//! Observability differential: obs fully on vs fully off must be
+//! bit-for-bit invisible to the simulation.
+//!
+//! The tracer records *virtual* timestamps, the profiler only reads
+//! wall clocks, and the flight recorder only snapshots the trace ring —
+//! none of them may perturb a single simulation outcome. These tests
+//! run identical workloads with the whole observability plane off and
+//! then fully armed (tracing + phase profiling + flight recorder) and
+//! require the results to match exactly: per-request completion times,
+//! shed ledgers, KV counters, tier ledgers, and — on the cluster path —
+//! the full dispatch order.
+//!
+//! Companion to `tests/differential.rs`, which pins the engine and
+//! 1-node-cluster paths to each other; here each path is pinned to its
+//! own untraced self.
+
+use std::collections::BTreeSet;
+
+use harvest::cluster::{Cluster, ClusterSpec, Dispatch, RouterPolicy, SchedulerSpec, TierLedger};
+use harvest::control::{AdmissionConfig, SloConfig};
+use harvest::harvest::{HarvestConfig, HarvestRuntime, PrefetchConfig};
+use harvest::kv::{KvConfig, KvStats, SeqId};
+use harvest::memsim::{NodeSpec, SimNode};
+use harvest::moe::find_kv_model;
+use harvest::obs::profile::{self, Phase};
+use harvest::obs::trace::{self, Subsystem};
+use harvest::obs::{flight, FlightConfig};
+use harvest::server::{
+    AgingConfig, RequestOutcome, SimEngine, SimEngineConfig, WorkloadGen, WorkloadSpec,
+};
+use harvest::tenantsim::TenantMix;
+
+fn kv_cfg(cap_blocks: usize) -> KvConfig {
+    KvConfig {
+        model: find_kv_model("deepseek").unwrap(),
+        block_tokens: 16,
+        local_capacity_blocks: cap_blocks,
+        use_harvest: true,
+        host_backed_peer: false,
+    }
+}
+
+fn admission() -> AdmissionConfig {
+    AdmissionConfig {
+        slo: SloConfig {
+            ttft_p99_ns: 5_000_000,
+            goodput_floor_tps: 0.0,
+            window_ns: 10_000_000,
+        },
+        high_watermark_pct: 85,
+        low_watermark_pct: 60,
+    }
+}
+
+/// Arm the whole plane: big trace ring, clean profiler, flight recorder.
+fn obs_on() {
+    trace::enable(1 << 20);
+    profile::reset();
+    profile::enable();
+    flight::arm(FlightConfig::default());
+}
+
+/// Everything off and drained.
+fn obs_off() {
+    trace::disable();
+    profile::disable();
+    flight::disarm();
+}
+
+/// Everything one engine run must reproduce exactly, traced or not.
+#[derive(Debug, PartialEq)]
+struct EngineTrace {
+    completions: Vec<RequestOutcome>,
+    sheds: Vec<SeqId>,
+    kv_stats: KvStats,
+    ledger: TierLedger,
+    steps: u64,
+    tokens_generated: u64,
+    decode_stall_ns: u64,
+    deferred_admissions: u64,
+}
+
+/// Overloaded single engine with every instrumented subsystem live:
+/// tight pool (harvest transfers), prefetch, idle-aging, and the SLO
+/// admission controller under sustained pressure.
+fn engine_run() -> EngineTrace {
+    let mut hr =
+        HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+    let cfg = SimEngineConfig::new(kv_cfg(32), 2, 4)
+        .with_prefetch(PrefetchConfig::default())
+        .with_aging(AgingConfig::default())
+        .with_admission(admission());
+    let mut eng =
+        SimEngine::new(cfg, SchedulerSpec::CompletelyFair { quantum: 1 }.build(), 0);
+    let spec = WorkloadSpec {
+        n_requests: 48,
+        mean_prompt_tokens: 128.0,
+        max_new_tokens: 16,
+        mean_interarrival_ns: 150_000,
+        seed: 23,
+        ..Default::default()
+    };
+    let report = eng.run(&mut hr, WorkloadGen::new(spec).generate());
+    EngineTrace {
+        completions: report.completions,
+        sheds: report.sheds,
+        kv_stats: report.kv_stats,
+        ledger: TierLedger::snapshot(&hr),
+        steps: report.steps,
+        tokens_generated: report.metrics.tokens_generated,
+        decode_stall_ns: report.metrics.decode_stall_ns,
+        deferred_admissions: report.metrics.deferred_admissions,
+    }
+}
+
+#[test]
+fn engine_run_bit_identical_with_obs_on() {
+    obs_off();
+    let base = engine_run();
+
+    obs_on();
+    let traced = engine_run();
+    let events = trace::take();
+    let prof = profile::snapshot();
+    let dumps = flight::take_dumps();
+    obs_off();
+
+    assert!(!base.completions.is_empty(), "the case must actually serve requests");
+    assert_eq!(base, traced, "tracing+profiling+flight changed a simulation outcome");
+
+    // The traced arm must have actually traced something, across
+    // several subsystems, or the equality above proves nothing.
+    assert!(!events.is_empty(), "armed run recorded no events");
+    let subs: BTreeSet<Subsystem> = events.iter().map(|e| e.sub).collect();
+    assert!(
+        subs.len() >= 3,
+        "engine trace should cover several subsystems, got {subs:?}"
+    );
+    assert!(subs.contains(&Subsystem::Stepper) && subs.contains(&Subsystem::Admission));
+
+    // The profiler saw every step, and its phase buckets nest inside
+    // the total (coverage is a fraction, never an over-count).
+    assert_eq!(prof.calls(Phase::Total), traced.steps, "one Total sample per step");
+    assert!(prof.coverage() > 0.0 && prof.coverage() <= 1.0);
+
+    // Flight dumps are a side channel; draining them must not have
+    // disturbed anything (the equality above already proved it), and
+    // the recorder keeps its cap.
+    assert!(dumps.len() <= FlightConfig::default().max_dumps);
+}
+
+/// A third run after disarming matches the first untraced run — the
+/// plane leaves no residue behind once off.
+#[test]
+fn obs_leaves_no_residue_after_disarm() {
+    obs_off();
+    let a = engine_run();
+    obs_on();
+    let _ = engine_run();
+    let _ = trace::take();
+    obs_off();
+    let b = engine_run();
+    assert_eq!(a, b, "a traced run left state behind that changed the next run");
+}
+
+fn staggered() -> WorkloadSpec {
+    WorkloadSpec {
+        n_requests: 24,
+        mean_prompt_tokens: 64.0,
+        max_new_tokens: 8,
+        mean_interarrival_ns: 1_000_000,
+        shared_prefix_fraction: 0.7,
+        shared_prefix_tokens: 32,
+        n_prefix_groups: 3,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+/// 4-node calendar path with co-tenants: full report JSON plus the
+/// dispatch order.
+fn cluster_run() -> (String, Vec<Dispatch>) {
+    let mut spec = ClusterSpec::new(4);
+    spec.router = RouterPolicy::PrefixAffinity;
+    spec.tenants = Some(TenantMix {
+        enabled: true,
+        training: 1,
+        inference: 1,
+        batch: 1,
+        ..Default::default()
+    });
+    let engine = SimEngineConfig::new(kv_cfg(48), 4, 8).with_aging(AgingConfig::default());
+    let mut cluster =
+        Cluster::new(&spec, engine, SchedulerSpec::CompletelyFair { quantum: 1 });
+    let report = cluster.run(WorkloadGen::new(staggered()).generate());
+    (report.to_json().to_string(), cluster.dispatch_log().to_vec())
+}
+
+#[test]
+fn cluster_run_bit_identical_with_obs_on() {
+    obs_off();
+    let (base_json, base_dispatch) = cluster_run();
+
+    obs_on();
+    let (traced_json, traced_dispatch) = cluster_run();
+    let events = trace::take();
+    obs_off();
+
+    assert_eq!(base_json, traced_json, "traced cluster run diverged");
+    assert_eq!(base_dispatch, traced_dispatch, "dispatch order changed under tracing");
+
+    // Multi-node attribution: events must carry more than one pid and
+    // include the router lane.
+    let nodes: BTreeSet<u32> = events.iter().map(|e| e.node).collect();
+    assert!(nodes.len() > 1, "4-node trace stuck on one pid: {nodes:?}");
+    assert!(
+        events.iter().any(|e| e.sub == Subsystem::Router),
+        "cluster trace has no router events"
+    );
+    assert!(
+        events.iter().any(|e| e.sub == Subsystem::Tenant),
+        "co-tenant run traced no tenant wakes"
+    );
+}

@@ -1,0 +1,163 @@
+//! Property tests for the observability plane over real serving runs.
+//!
+//! Rather than synthetic event streams, these run an instrumented
+//! engine workload (tight pool, SLO admission under overload) and
+//! check structural invariants of whatever the run recorded:
+//!
+//! * every span is well-formed (`end >= start`, bounded args);
+//! * per-node stepper timelines are nondecreasing in virtual time;
+//! * the bounded ring evicts oldest-first — a small-ring run records
+//!   exactly the tail of the same run with an unbounded ring;
+//! * admission decision instants reconcile one-for-one with the
+//!   controller's own `AdmissionStats` counters;
+//! * Chrome trace export round-trips through `util::json`.
+
+use harvest::cluster::SchedulerSpec;
+use harvest::control::{AdmissionConfig, AdmissionStats, SloConfig};
+use harvest::harvest::{HarvestConfig, HarvestRuntime};
+use harvest::kv::KvConfig;
+use harvest::memsim::{NodeSpec, SimNode};
+use harvest::moe::find_kv_model;
+use harvest::obs::trace::{self, Subsystem, TraceEvent, MAX_ARGS};
+use harvest::server::{SimEngine, SimEngineConfig, WorkloadGen, WorkloadSpec};
+
+fn kv_cfg(cap_blocks: usize) -> KvConfig {
+    KvConfig {
+        model: find_kv_model("deepseek").unwrap(),
+        block_tokens: 16,
+        local_capacity_blocks: cap_blocks,
+        use_harvest: true,
+        host_backed_peer: false,
+    }
+}
+
+fn admission() -> AdmissionConfig {
+    AdmissionConfig {
+        slo: SloConfig {
+            ttft_p99_ns: 5_000_000,
+            goodput_floor_tps: 0.0,
+            window_ns: 10_000_000,
+        },
+        high_watermark_pct: 85,
+        low_watermark_pct: 60,
+    }
+}
+
+/// One deterministic overloaded engine run, traced with a ring of
+/// `ring_cap`. Returns the recorded events, the admission controller's
+/// own counters, and how many events the ring evicted.
+fn traced_run(ring_cap: usize) -> (Vec<TraceEvent>, AdmissionStats, u64) {
+    trace::enable(ring_cap);
+    let mut hr =
+        HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+    let cfg = SimEngineConfig::new(kv_cfg(32), 2, 4).with_admission(admission());
+    let mut eng = SimEngine::new(cfg, SchedulerSpec::Fcfs.build(), 0);
+    let spec = WorkloadSpec {
+        n_requests: 48,
+        mean_prompt_tokens: 128.0,
+        max_new_tokens: 16,
+        mean_interarrival_ns: 150_000,
+        seed: 23,
+        ..Default::default()
+    };
+    let _ = eng.run(&mut hr, WorkloadGen::new(spec).generate());
+    let stats = eng.stepper().admission_stats().expect("controller is armed");
+    let dropped = trace::dropped();
+    let events = trace::take();
+    trace::disable();
+    (events, stats, dropped)
+}
+
+#[test]
+fn spans_are_well_formed() {
+    let (events, _, dropped) = traced_run(1 << 20);
+    assert_eq!(dropped, 0, "ring must be big enough for the whole run");
+    assert!(!events.is_empty());
+    for ev in &events {
+        assert!(ev.end >= ev.start, "span {} ends before it starts", ev.name);
+        assert!(ev.args().len() <= MAX_ARGS);
+        if !ev.is_span() {
+            assert_eq!(ev.start, ev.end, "instant {} has a duration", ev.name);
+        }
+    }
+}
+
+/// The stepper emits its `kv_sync` span once per step, anchored at the
+/// step's start — per node, those anchors never go backwards in the
+/// ring's record order. (Virtual time is monotone per node even though
+/// different subsystems interleave freely.)
+#[test]
+fn stepper_virtual_time_is_nondecreasing_per_node() {
+    let (events, _, _) = traced_run(1 << 20);
+    let mut last_start: std::collections::BTreeMap<u32, u64> = Default::default();
+    let mut seen = 0u64;
+    for ev in events.iter().filter(|e| e.sub == Subsystem::Stepper && e.name == "kv_sync") {
+        let last = last_start.entry(ev.node).or_insert(0);
+        assert!(
+            ev.start >= *last,
+            "node {} stepped backwards: {} after {}",
+            ev.node,
+            ev.start,
+            last
+        );
+        *last = ev.start;
+        seen += 1;
+    }
+    assert!(seen > 10, "expected many steps, saw {seen}");
+}
+
+/// Oldest-first eviction, end to end: a small ring holds exactly the
+/// tail of the identical run recorded with a large ring, and the
+/// dropped counter accounts for every missing event.
+#[test]
+fn ring_eviction_drops_oldest_first() {
+    let (all, _, dropped_all) = traced_run(1 << 20);
+    assert_eq!(dropped_all, 0);
+    const CAP: usize = 64;
+    assert!(all.len() > CAP, "run must overflow the small ring");
+    let (tail, _, dropped_tail) = traced_run(CAP);
+    assert_eq!(tail.len(), CAP);
+    assert_eq!(dropped_tail as usize, all.len() - CAP);
+    assert_eq!(tail.as_slice(), &all[all.len() - CAP..], "ring kept non-tail events");
+}
+
+/// Every admission decision leaves exactly one instant in the
+/// `admission` lane, so the lane reconciles with the controller's own
+/// counters — the trace is an audit log of the control plane, not a
+/// sampling of it.
+#[test]
+fn admission_instants_reconcile_with_stats() {
+    let (events, stats, dropped) = traced_run(1 << 20);
+    assert_eq!(dropped, 0, "reconciliation needs the complete event stream");
+    let count = |name: &str| {
+        events.iter().filter(|e| e.sub == Subsystem::Admission && e.name == name).count() as u64
+    };
+    assert_eq!(count("admit"), stats.admitted);
+    assert_eq!(count("defer"), stats.defer_events);
+    assert_eq!(count("shed"), stats.shed);
+    assert!(
+        stats.admitted > 0 && stats.shed > 0,
+        "overload case must both admit and shed, got {stats:?}"
+    );
+}
+
+/// Chrome export is valid JSON that survives a parse → print round trip
+/// through `util::json`, with one trace event per recorded event plus
+/// the process/thread metadata header.
+#[test]
+fn chrome_export_round_trips_through_json() {
+    let (events, _, _) = traced_run(1 << 20);
+    let exported = trace::to_chrome_json(&events);
+    let text = exported.to_string();
+    let reparsed = harvest::util::json::Json::parse(&text).expect("export must parse");
+    assert_eq!(reparsed.to_string(), text, "parse → print must be a fixed point");
+
+    let arr = reparsed.get("traceEvents").unwrap().as_arr().unwrap();
+    let nodes: std::collections::BTreeSet<u32> = events.iter().map(|e| e.node).collect();
+    // Per node: 1 process_name + 8 thread_name metadata events.
+    assert_eq!(arr.len(), events.len() + nodes.len() * 9);
+    assert_eq!(
+        reparsed.get("displayTimeUnit").unwrap().as_str().unwrap(),
+        "ms"
+    );
+}
