@@ -141,8 +141,9 @@ fn main() {
         json.add(&format!("routing_{}", policy.name()), report_json(&r));
     }
 
-    match json.write() {
-        Ok(()) => println!("\nwrote {}", json.path().display()),
+    let label = std::env::var("BENCH_LABEL").unwrap_or_else(|_| "local".to_string());
+    match json.append_trajectory(&label, smoke) {
+        Ok(()) => println!("\nappended point `{label}` to {}", json.path().display()),
         Err(e) => println!("\ncould not write {}: {e}", json.path().display()),
     }
     println!(

@@ -485,8 +485,9 @@ fn main() {
     if !smoke {
         bench_pjrt_decode(&mut json);
     }
-    match json.write() {
-        Ok(()) => println!("\nwrote {}", json.path().display()),
+    let label = std::env::var("BENCH_LABEL").unwrap_or_else(|_| "local".to_string());
+    match json.append_trajectory(&label, smoke) {
+        Ok(()) => println!("\nappended point `{label}` to {}", json.path().display()),
         Err(e) => println!("\ncould not write {}: {e}", json.path().display()),
     }
 }

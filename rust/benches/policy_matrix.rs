@@ -154,8 +154,9 @@ fn main() {
         t.sep();
     }
 
-    match json.write() {
-        Ok(()) => println!("wrote {}", json.path().display()),
+    let label = std::env::var("BENCH_LABEL").unwrap_or_else(|_| "local".to_string());
+    match json.append_trajectory(&label, smoke) {
+        Ok(()) => println!("appended point `{label}` to {}", json.path().display()),
         Err(e) => println!("could not write {}: {e}", json.path().display()),
     }
     println!(

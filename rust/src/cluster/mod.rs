@@ -246,6 +246,12 @@ pub struct ClusterReport {
     pub router_policy: &'static str,
     /// Sum of the per-node ledgers.
     pub ledger: TierLedger,
+    /// Cluster-wide rollup of the per-node attribution ledgers (None
+    /// unless the engine config armed attribution). Deliberately *not*
+    /// part of [`ClusterReport::to_json`] — the differential tests
+    /// compare that JSON armed-vs-off; attribution surfaces through the
+    /// metrics registry and `serve --report` instead.
+    pub attribution: Option<crate::obs::AttributionReport>,
 }
 
 impl ClusterReport {
@@ -492,10 +498,17 @@ impl Cluster {
         let mut aggregate = ServeMetrics::new();
         let mut ledger = TierLedger::default();
         let mut stats = self.stats.clone();
+        let mut attribution: Option<crate::obs::AttributionReport> = None;
         for n in &per_node {
             aggregate.merge(&n.metrics);
             ledger.accumulate(&n.ledger);
             stats.node_shed += n.sheds;
+            if let Some(a) = &n.attribution {
+                match attribution.as_mut() {
+                    Some(rollup) => rollup.merge(a),
+                    None => attribution = Some(a.clone()),
+                }
+            }
         }
         ClusterReport {
             per_node,
@@ -506,6 +519,7 @@ impl Cluster {
             shed: self.shed.clone(),
             router_policy: self.router.policy().name(),
             ledger,
+            attribution,
         }
     }
 }

@@ -73,6 +73,9 @@ pub struct NodeReport {
     pub steps: u64,
     /// Requests this node's admission controller shed.
     pub sheds: u64,
+    /// Per-request latency attribution ledgers (None unless the engine
+    /// config armed attribution — see [`crate::obs::attrib`]).
+    pub attribution: Option<crate::obs::AttributionReport>,
 }
 
 /// One simulated server of the cluster: an owned runtime plus the
@@ -192,6 +195,7 @@ impl ClusterNode {
             completions: self.stepper.completions().to_vec(),
             steps: self.stepper.steps(),
             sheds: self.stepper.shed_ids().len() as u64,
+            attribution: self.stepper.attribution_report(),
         }
     }
 

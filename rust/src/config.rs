@@ -355,6 +355,10 @@ pub struct DeploymentConfig {
     /// Shed count within one SLO window that triggers a flight dump
     /// (`obs.shed_burst`).
     pub obs_shed_burst: usize,
+    /// Arm per-request latency attribution ledgers (`obs.attribution`);
+    /// observation-only — the served schedule is bit-for-bit identical.
+    /// `serve --report` arms this implicitly.
+    pub obs_attribution: bool,
     /// Cold-tier SSD arena capacity per node (`[coldtier]`; 0 = tier
     /// absent). When present the demotion ladder bottoms out on paged
     /// NVMe instead of dropping leases.
@@ -426,6 +430,7 @@ impl Default for DeploymentConfig {
             obs_profile: false,
             obs_flight: true,
             obs_shed_burst: 4,
+            obs_attribution: false,
             ssd_gib: 0,
             ssd_page_kib: 2048,
             compress_ratio_pct: 50,
@@ -654,6 +659,7 @@ impl DeploymentConfig {
             obs_profile: doc.bool_or("obs.profile", d.obs_profile)?,
             obs_flight: doc.bool_or("obs.flight", d.obs_flight)?,
             obs_shed_burst: doc.usize_or("obs.shed_burst", d.obs_shed_burst)?,
+            obs_attribution: doc.bool_or("obs.attribution", d.obs_attribution)?,
             ssd_gib: doc.u64_or("coldtier.ssd_gib", d.ssd_gib)?,
             ssd_page_kib: doc.u64_or("coldtier.page_kib", d.ssd_page_kib)?,
             compress_ratio_pct: doc
@@ -838,6 +844,7 @@ impl DeploymentConfig {
         s.push_str(&format!("profile = {}\n", self.obs_profile));
         s.push_str(&format!("flight = {}\n", self.obs_flight));
         s.push_str(&format!("shed_burst = {}\n", self.obs_shed_burst));
+        s.push_str(&format!("attribution = {}\n", self.obs_attribution));
         s.push('\n');
         s.push_str("[coldtier]\n");
         s.push_str(&format!("ssd_gib = {}\n", self.ssd_gib));
@@ -1287,19 +1294,23 @@ mod tests {
             assert_eq!(back.obs_profile, p.obs_profile);
             assert_eq!(back.obs_flight, p.obs_flight);
             assert_eq!(back.obs_shed_burst, p.obs_shed_burst);
+            assert_eq!(back.obs_attribution, p.obs_attribution);
         }
     }
 
     #[test]
     fn obs_section_parses_and_validates() {
         let cfg = DeploymentConfig::from_toml(
-            "[obs]\nring_cap = 1024\nprofile = true\nflight = false\nshed_burst = 2",
+            "[obs]\nring_cap = 1024\nprofile = true\nflight = false\nshed_burst = 2\n\
+             attribution = true",
         )
         .unwrap();
         assert_eq!(cfg.obs_ring_cap, 1024);
         assert!(cfg.obs_profile);
         assert!(!cfg.obs_flight);
         assert_eq!(cfg.obs_shed_burst, 2);
+        assert!(cfg.obs_attribution);
+        assert!(!DeploymentConfig::default().obs_attribution);
         assert!(DeploymentConfig::from_toml("[obs]\nring_cap = 0").is_err());
         assert!(DeploymentConfig::from_toml("[obs]\nshed_burst = 0").is_err());
     }

@@ -120,6 +120,13 @@ pub struct KvStats {
     pub bytes_from_host: u64,
     pub bytes_from_ssd: u64,
     pub reload_ns: Ns,
+    /// Per-source-tier split of `reload_ns`, so attribution can charge a
+    /// reload stall to the tier that served it (always sums to
+    /// `reload_ns`).
+    pub reload_ns_peer: Ns,
+    pub reload_ns_cxl: Ns,
+    pub reload_ns_host: Ns,
+    pub reload_ns_ssd: Ns,
     pub recompute_ns: Ns,
     /// Modeled decode-side reconstruction time charged when compressed
     /// blocks reload (see [`crate::coldtier::Compressor`]).
@@ -167,6 +174,10 @@ impl KvStats {
             ("bytes_from_host", self.bytes_from_host),
             ("bytes_from_ssd", self.bytes_from_ssd),
             ("reload_ns", self.reload_ns),
+            ("reload_ns_peer", self.reload_ns_peer),
+            ("reload_ns_cxl", self.reload_ns_cxl),
+            ("reload_ns_host", self.reload_ns_host),
+            ("reload_ns_ssd", self.reload_ns_ssd),
             ("recompute_ns", self.recompute_ns),
             ("decompress_ns", self.decompress_ns),
         ];
@@ -510,25 +521,30 @@ impl KvOffloadManager {
                 // The cached copy is consumed: release the lease (ordered
                 // free; drains the fetch we just tagged).
                 session.release(hr, lease).expect("live lease");
+                let dur = report.events[0].duration();
                 match tier {
                     MemoryTier::PeerHbm(_) => {
                         self.stats.peer_reloads += 1;
                         self.stats.bytes_from_peer += bytes;
+                        self.stats.reload_ns_peer += dur;
                     }
                     MemoryTier::CxlMem => {
                         self.stats.cxl_reloads += 1;
                         self.stats.bytes_from_cxl += bytes;
+                        self.stats.reload_ns_cxl += dur;
                     }
                     MemoryTier::Ssd => {
                         self.stats.ssd_reloads += 1;
                         self.stats.bytes_from_ssd += bytes;
+                        self.stats.reload_ns_ssd += dur;
                     }
                     _ => {
                         self.stats.host_reloads += 1;
                         self.stats.bytes_from_host += bytes;
+                        self.stats.reload_ns_host += dur;
                     }
                 }
-                self.stats.reload_ns += report.events[0].duration();
+                self.stats.reload_ns += dur;
                 let mut ready = report.end;
                 if let Some(info) = compression {
                     let cost = crate::coldtier::Compressor::new(

@@ -1,7 +1,10 @@
 //! `harvest` — the launcher CLI.
 //!
 //! ```text
-//! harvest serve    --preset paper-moe | --config deploy.toml [--set key=value ...] [--trace out.json]
+//! harvest serve    --preset paper-moe | --config deploy.toml [--set key=value ...]
+//!                  [--trace out.json] [--report report.json]
+//! harvest analyze  --trace out.json [--report report.json] [--top K]
+//! harvest guard    [--dir DIR] [--threshold FRAC]
 //! harvest presets  [--dump NAME]
 //! harvest models
 //! harvest trace    [--machines N] [--snapshots-per-machine N]
@@ -26,6 +29,7 @@ use harvest::obs::{self, MetricsRegistry};
 use harvest::runtime::ModelRuntime;
 use harvest::server::{RealEngine, SimEngine, SimEngineConfig, WorkloadGen};
 use harvest::trace::{ClusterTrace, TraceSpec};
+use harvest::util::json::Json;
 use harvest::util::{fmt_bytes, fmt_ns};
 use std::path::Path;
 
@@ -42,6 +46,8 @@ fn run(args: &[String]) -> Result<()> {
     let rest = &args[1.min(args.len())..];
     match cmd {
         "serve" => cmd_serve(rest),
+        "analyze" => cmd_analyze(rest),
+        "guard" => cmd_guard(rest),
         "presets" => cmd_presets(rest),
         "models" => cmd_models(),
         "trace" => cmd_trace(rest),
@@ -68,6 +74,13 @@ fn print_help() {
 USAGE:
   harvest serve    --preset NAME | --config FILE [--set key=value ...] [--trace FILE]
                    --trace writes a Perfetto-loadable trace (see [obs] config)
+                   --report FILE arms per-request latency attribution and writes
+                   the registry + attribution report document
+  harvest analyze  --trace FILE [--report FILE] [--top K]
+                   offline latency forensics: per-phase rollups, critical path,
+                   causal attribution table, top-K slow-request breakdowns
+  harvest guard    [--dir DIR] [--threshold FRAC]   perf-trajectory regression
+                   gate over the committed BENCH_*.json trajectories
   harvest presets  [--dump NAME]      list (or dump) deployment presets
   harvest models                      print the Table-1 / §5.3 registries
   harvest trace    [--machines N] [--snapshots-per-machine N]
@@ -215,9 +228,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         cfg.reserve_gib,
         cfg.mig_cache_gib
     );
+    let report_path = take_opt(args, "--report");
+    if report_path.is_some() && !matches!(cfg.workload, WorkloadKind::KvOffload) {
+        bail!("--report (latency attribution) is only supported for the kv workload");
+    }
     let result = match cfg.workload {
         WorkloadKind::MoeOffload => serve_moe(&cfg),
-        WorkloadKind::KvOffload => serve_kv(&cfg),
+        WorkloadKind::KvOffload => serve_kv(&cfg, report_path.as_deref()),
         WorkloadKind::RealServe => serve_real(&cfg),
     };
     if let Some(path) = trace_path {
@@ -292,9 +309,9 @@ fn serve_moe(cfg: &DeploymentConfig) -> Result<()> {
     Ok(())
 }
 
-fn serve_kv(cfg: &DeploymentConfig) -> Result<()> {
+fn serve_kv(cfg: &DeploymentConfig, report_path: Option<&str>) -> Result<()> {
     if cfg.nodes > 1 {
-        return serve_kv_cluster(cfg);
+        return serve_kv_cluster(cfg, report_path);
     }
     let mut hr = HarvestRuntime::with_policy(
         SimNode::new(cfg.node_spec()),
@@ -304,6 +321,9 @@ fn serve_kv(cfg: &DeploymentConfig) -> Result<()> {
     let kv = cfg.kv_config()?;
     let scheduler = cfg.scheduler_spec()?.build();
     let mut engine_cfg = SimEngineConfig::new(kv, cfg.decode_slots, cfg.max_running);
+    if cfg.obs_attribution || report_path.is_some() {
+        engine_cfg = engine_cfg.with_attribution();
+    }
     let admission = cfg.admission_policy()?;
     if let Some(acfg) = admission.admission_config() {
         engine_cfg = engine_cfg.with_admission(acfg);
@@ -330,32 +350,7 @@ fn serve_kv(cfg: &DeploymentConfig) -> Result<()> {
         kv.local_capacity_blocks
     );
     let report = engine.run(&mut hr, requests);
-    let m = &report.metrics;
-    println!(
-        "  served {} requests / {} tokens in {} -> {:.0} tok/s ({} scheduler)",
-        m.requests_finished,
-        m.tokens_generated,
-        fmt_ns(m.makespan_ns()),
-        m.tokens_per_sec(),
-        report.scheduler
-    );
-    println!(
-        "  admission {}: shed {} ({:.1}%), deferred {}, goodput {:.0} tok/s",
-        admission.name(),
-        report.sheds.len(),
-        100.0 * m.shed_rate(),
-        m.deferred_admissions,
-        m.goodput_tok_s()
-    );
-    let s = &report.kv_stats;
-    println!(
-        "  kv: hit-rate {:.1}%, reloads {} (peer {}, host {}, recompute {})",
-        100.0 * s.hit_rate(),
-        s.reloads(),
-        s.peer_reloads,
-        s.host_reloads,
-        s.recomputes
-    );
+    println!("  scheduler {}, admission {}", report.scheduler, admission.name());
     if let Some(t) = &report.tenant {
         println!(
             "  tenants: {} held, {} injected, {} lease yields ({} demotions), {} denied",
@@ -367,7 +362,8 @@ fn serve_kv(cfg: &DeploymentConfig) -> Result<()> {
         );
     }
     // One registry snapshot over every stat surface — serve's single
-    // machine-readable output.
+    // machine-readable output, and the tree the human summary renders
+    // from (shared with the cluster path so the two cannot drift).
     let mut reg = MetricsRegistry::new();
     report.metrics.register(&mut reg, "serve");
     report.kv_stats.register(&mut reg, "kv");
@@ -379,11 +375,20 @@ fn serve_kv(cfg: &DeploymentConfig) -> Result<()> {
     }
     hr.monitor().register(&mut reg, "harvest.tiers");
     harvest::cluster::TierLedger::snapshot(&hr).register(&mut reg, "ledger");
+    let pricing = obs::TierPricing::default();
+    obs::harvest_economics(&report.kv_stats, &pricing).register(&mut reg, "economics");
+    if let Some(a) = &report.attribution {
+        a.register(&mut reg, "attrib");
+    }
+    print_serve_summary(&reg);
     println!("{}", reg.to_json().to_string());
+    if let Some(path) = report_path {
+        write_report_file(path, &reg, report.attribution.as_ref())?;
+    }
     Ok(())
 }
 
-fn serve_kv_cluster(cfg: &DeploymentConfig) -> Result<()> {
+fn serve_kv_cluster(cfg: &DeploymentConfig, report_path: Option<&str>) -> Result<()> {
     use harvest::cluster::Cluster;
     let kv = cfg.kv_config()?;
     println!(
@@ -393,65 +398,48 @@ fn serve_kv_cluster(cfg: &DeploymentConfig) -> Result<()> {
         kv.block_tokens,
         kv.local_capacity_blocks
     );
-    let engine = SimEngineConfig::new(kv, cfg.decode_slots, cfg.max_running);
+    let mut engine = SimEngineConfig::new(kv, cfg.decode_slots, cfg.max_running);
+    if cfg.obs_attribution || report_path.is_some() {
+        engine = engine.with_attribution();
+    }
     let mut cluster = Cluster::new(&cfg.cluster_spec(), engine, cfg.scheduler_spec()?);
     let requests = WorkloadGen::new(cfg.workload_spec()).generate();
     let report = cluster.run(requests);
-    let m = &report.aggregate;
     println!(
-        "  served {} requests / {} tokens in {} -> {:.0} tok/s aggregate ({} shed)",
-        m.requests_finished,
-        m.tokens_generated,
-        fmt_ns(m.makespan_ns()),
-        m.tokens_per_sec(),
-        report.stats.shed
-    );
-    println!(
-        "  routing: {} | prefix migrations {} ({} over the {} fabric)",
+        "  routing: {} | {} router shed | prefix migrations {} ({} over the {} fabric)",
         report.router_policy,
+        report.stats.shed,
         report.stats.prefix_migrations,
         fmt_bytes(report.stats.migrated_bytes),
         cluster.fabric().kind().name()
     );
     println!(
-        "  admission {}: node sheds {}, deferred {}, goodput {:.0} tok/s ({:.1}% shed)",
+        "  admission {} (node sheds {})",
         cfg.admission_policy()?.name(),
-        report.stats.node_shed,
-        m.deferred_admissions,
-        m.goodput_tok_s(),
-        100.0 * m.shed_rate()
+        report.stats.node_shed
     );
-    for n in &report.per_node {
-        println!(
-            "    node {}: {} served, {:.0} tok/s, {} prefix hits, {} kv reloads, p99 ttft {}",
-            n.node,
-            n.finished,
-            n.metrics.tokens_per_sec(),
-            n.prefix_hits,
-            n.kv_stats.reloads(),
-            fmt_ns(n.metrics.ttft.percentile(99.0) as u64)
-        );
-        if let Some(t) = &n.tenant {
-            println!(
-                "      tenants: {} held, {} injected, {} lease yields, {} denied",
-                fmt_bytes(t.held_bytes()),
-                fmt_bytes(t.traffic_bytes()),
-                t.broker.lease_yields,
-                t.denied()
-            );
-        }
-    }
-    // Cluster rollup + per-node slices in one registry snapshot.
+    // Cluster rollup + per-node slices in one registry snapshot — the
+    // tree the shared human summary renders from.
     let mut reg = MetricsRegistry::new();
     report.aggregate.register(&mut reg, "serve");
     report.ledger.register(&mut reg, "ledger");
+    let pricing = obs::TierPricing::default();
+    let mut econ = obs::HarvestEconomics::default();
     for n in &report.per_node {
         let p = format!("node{}", n.node);
         n.metrics.register(&mut reg, &format!("{p}.serve"));
         n.kv_stats.register(&mut reg, &format!("{p}.kv"));
+        let e = obs::harvest_economics(&n.kv_stats, &pricing);
+        e.register(&mut reg, &format!("{p}.economics"));
+        econ.tax_ns += e.tax_ns;
+        econ.dividend_ns += e.dividend_ns;
         if let Some(t) = &n.tenant {
             t.broker.register(&mut reg, &format!("{p}.tenant.broker"));
         }
+    }
+    econ.register(&mut reg, "economics");
+    if let Some(a) = &report.attribution {
+        a.register(&mut reg, "attrib");
     }
     for i in 0..cluster.n_nodes() {
         if let Some(a) = cluster.node(i).admission_stats() {
@@ -459,7 +447,109 @@ fn serve_kv_cluster(cfg: &DeploymentConfig) -> Result<()> {
         }
         cluster.node(i).runtime().monitor().register(&mut reg, &format!("node{i}.harvest.tiers"));
     }
+    print_serve_summary(&reg);
     println!("{}", reg.to_json().to_string());
+    if let Some(path) = report_path {
+        write_report_file(path, &reg, report.attribution.as_ref())?;
+    }
+    Ok(())
+}
+
+/// Render the human serve summary from the registry snapshot — the same
+/// tree `serve` prints as JSON and `--report` exports. Both the
+/// single-node and the cluster path feed this one renderer, so the two
+/// summaries cannot drift: the printed numbers ARE the registry values.
+fn print_serve_summary(reg: &MetricsRegistry) {
+    use harvest::obs::Metric;
+    let counter = |name: &str| match reg.get(name) {
+        Some(Metric::Counter(v)) => *v,
+        _ => 0,
+    };
+    let gauge = |name: &str| match reg.get(name) {
+        Some(Metric::Gauge(v)) => *v,
+        _ => 0.0,
+    };
+    let p99 = |name: &str| match reg.get(name) {
+        Some(Metric::Hist(h)) => h.percentile(99.0),
+        _ => 0,
+    };
+    println!(
+        "  served {} requests / {} tokens in {} -> {:.0} tok/s",
+        counter("serve.requests_finished"),
+        counter("serve.tokens_generated"),
+        fmt_ns(counter("serve.makespan_ns")),
+        gauge("serve.throughput_tps")
+    );
+    println!(
+        "  admission: shed {} ({:.1}%), deferred {}, goodput {:.0} tok/s, p99 ttft {}",
+        counter("serve.requests_shed"),
+        100.0 * gauge("serve.shed_rate"),
+        counter("serve.deferred_admissions"),
+        gauge("serve.goodput_tok_s"),
+        fmt_ns(p99("serve.ttft_ns"))
+    );
+    if reg.get("kv.hit_rate").is_some() {
+        let reloads = counter("kv.peer_reloads")
+            + counter("kv.cxl_reloads")
+            + counter("kv.host_reloads")
+            + counter("kv.ssd_reloads");
+        println!(
+            "  kv: hit-rate {:.1}%, {} reloads (peer {}, host {}), {} recomputes",
+            100.0 * gauge("kv.hit_rate"),
+            reloads,
+            counter("kv.peer_reloads"),
+            counter("kv.host_reloads"),
+            counter("kv.recomputes")
+        );
+    }
+    println!(
+        "  harvest economics: tax {} vs dividend {} (net {:+.2} ms)",
+        fmt_ns(counter("economics.harvest_tax_ns")),
+        fmt_ns(counter("economics.harvest_dividend_ns")),
+        gauge("economics.harvest_net_ns") / 1e6
+    );
+    if reg.get("attrib.requests").is_some() {
+        println!(
+            "  attribution: {} ledgers, {} unattributed of {} measured ttft",
+            counter("attrib.requests"),
+            fmt_ns(counter("attrib.unattributed_ns")),
+            fmt_ns(counter("attrib.ttft_measured_ns"))
+        );
+    }
+    for i in 0.. {
+        let p = format!("node{i}");
+        if reg.get(&format!("{p}.serve.requests_finished")).is_none() {
+            break;
+        }
+        let reloads = counter(&format!("{p}.kv.peer_reloads"))
+            + counter(&format!("{p}.kv.cxl_reloads"))
+            + counter(&format!("{p}.kv.host_reloads"))
+            + counter(&format!("{p}.kv.ssd_reloads"));
+        println!(
+            "    node {i}: {} served, {:.0} tok/s, {} kv reloads, p99 ttft {}",
+            counter(&format!("{p}.serve.requests_finished")),
+            gauge(&format!("{p}.serve.throughput_tps")),
+            reloads,
+            fmt_ns(p99(&format!("{p}.serve.ttft_ns")))
+        );
+    }
+}
+
+/// Write the `serve --report` document: the full registry snapshot plus
+/// (when attribution ran) the per-request attribution report `analyze`
+/// consumes.
+fn write_report_file(
+    path: &str,
+    reg: &MetricsRegistry,
+    attribution: Option<&obs::AttributionReport>,
+) -> Result<()> {
+    let mut doc = vec![("registry", reg.to_json())];
+    if let Some(a) = attribution {
+        doc.push(("attribution", a.to_json(8)));
+    }
+    std::fs::write(path, harvest::util::json::obj(doc).to_string() + "\n")
+        .with_context(|| format!("writing report to {path}"))?;
+    println!("  report: -> {path}");
     Ok(())
 }
 
@@ -594,5 +684,162 @@ fn cmd_transfer(args: &[String]) -> Result<()> {
         );
     }
     println!("(paper Fig. 3: speedups 7.5x Phi-tiny -> 9.5x Mixtral)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// analyze / guard
+// ---------------------------------------------------------------------
+
+fn read_json(path: &str) -> Result<Json> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    Json::parse(&text).with_context(|| format!("parsing {path} as JSON"))
+}
+
+/// Offline latency forensics: flamegraph-style rollups + top-K slow
+/// spans out of a `serve --trace` document, and (with `--report`) the
+/// causal attribution table + slowest-request breakdowns out of a
+/// `serve --report` document. Pure reading — see [`harvest::obs::analyze`].
+fn cmd_analyze(args: &[String]) -> Result<()> {
+    let trace_path = take_opt(args, "--trace")
+        .ok_or_else(|| anyhow!("analyze requires --trace FILE (from `serve --trace`)"))?;
+    let top_k: usize = take_opt(args, "--top").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let a = obs::analyze::analyze_trace(&read_json(&trace_path)?, top_k)?;
+    println!("trace {trace_path}: {} node(s), step time {}", a.nodes.len(), us(a.step_total_us));
+    println!(
+        "{:<12} {:<16} {:>8} {:>12} {:>12} {:>12} {:>7}",
+        "SUBSYSTEM", "SPAN", "COUNT", "TOTAL", "MEAN", "MAX", "% STEP"
+    );
+    for sp in &a.spans {
+        let pct = if a.step_total_us > 0.0 { 100.0 * sp.total_us / a.step_total_us } else { 0.0 };
+        println!(
+            "{:<12} {:<16} {:>8} {:>12} {:>12} {:>12} {:>6.1}%",
+            sp.subsystem,
+            sp.name,
+            sp.count,
+            us(sp.total_us),
+            us(sp.mean_us()),
+            us(sp.max_us),
+            pct
+        );
+    }
+    for (sub, name, count) in &a.instants {
+        println!("{sub:<12} {name:<16} {count:>8}   (instants)");
+    }
+    if !a.slowest.is_empty() {
+        println!("\ntop {} longest spans:", a.slowest.len());
+        for sp in &a.slowest {
+            println!(
+                "  node {} {}/{} at {} for {}",
+                sp.node,
+                sp.subsystem,
+                sp.name,
+                us(sp.ts_us),
+                us(sp.dur_us)
+            );
+        }
+    }
+    if let Some(rpath) = take_opt(args, "--report") {
+        print_attribution_forensics(&read_json(&rpath)?)?;
+    }
+    Ok(())
+}
+
+/// Render the attribution sections of a `serve --report` document.
+fn print_attribution_forensics(doc: &Json) -> Result<()> {
+    let Some(rows) = obs::analyze::attribution_totals(doc) else {
+        bail!("report has no `attribution` section (rerun serve with --report)");
+    };
+    let attrib = doc.get("attribution")?;
+    let measured = attrib.get("e2e_measured_ns")?.as_u64()?;
+    let unattributed = attrib.get("unattributed_ns")?.as_u64()?;
+    println!("\ncausal attribution ({} requests):", attrib.get("requests")?.as_u64()?);
+    println!("{:<18} {:>14} {:>14}", "COMPONENT", "TTFT", "DECODE");
+    for (name, ttft, decode) in &rows {
+        if *ttft == 0 && *decode == 0 {
+            continue;
+        }
+        println!("{name:<18} {:>14} {:>14}", fmt_ns(*ttft), fmt_ns(*decode));
+    }
+    let attributed = measured.saturating_sub(unattributed);
+    let cover = if measured > 0 { 100.0 * attributed as f64 / measured as f64 } else { 100.0 };
+    println!("coverage: {cover:.2}% of measured latency ({} unattributed)", fmt_ns(unattributed));
+    if let Some(slow) = obs::analyze::slow_requests(doc) {
+        println!("\nslowest requests by TTFT:");
+        for (id, ttft, e2e, comps) in &slow {
+            let parts: Vec<String> = comps
+                .iter()
+                .filter(|(_, ns)| *ns > 0)
+                .map(|(name, ns)| format!("{name} {}", fmt_ns(*ns)))
+                .collect();
+            println!(
+                "  req {id}: ttft {} (e2e {}) <- {}",
+                fmt_ns(*ttft),
+                fmt_ns(*e2e),
+                parts.join(", ")
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Microseconds (trace units) -> human string via [`fmt_ns`].
+fn us(us: f64) -> String {
+    fmt_ns((us * 1e3) as u64)
+}
+
+/// Perf-trajectory regression gate (CI's `trajectory-guard` step): for
+/// each guarded metric, compare the newest trajectory point against the
+/// most recent earlier point from the same tier (smoke vs full) and fail
+/// past `--threshold` (default 20%). Fewer than two comparable points
+/// records a baseline and passes.
+fn cmd_guard(args: &[String]) -> Result<()> {
+    use harvest::util::bench::{latest_pair, load_trajectory, regression_frac};
+    let threshold: f64 =
+        take_opt(args, "--threshold").map(|s| s.parse()).transpose()?.unwrap_or(0.20);
+    let dir = take_opt(args, "--dir").unwrap_or_else(|| ".".into());
+    // (file, dotted metric, higher-is-better, display name)
+    let checks = [
+        (
+            "BENCH_hot_path.json",
+            "cluster steps/sec (16 nodes).steps_per_sec",
+            true,
+            "cluster steps/sec",
+        ),
+        (
+            "BENCH_find_knee.json",
+            "knee.occupancy_p99_pre_knee_ns",
+            false,
+            "p99 TTFT pre-knee (occupancy admission)",
+        ),
+    ];
+    let mut regressed = Vec::new();
+    for (file, metric, higher_better, label) in checks {
+        let points = load_trajectory(&Path::new(&dir).join(file));
+        match latest_pair(&points, metric) {
+            None => println!(
+                "guard: {label}: baseline recorded ({} point(s) in {file}, need 2 comparable)",
+                points.len()
+            ),
+            Some((prev, latest)) => {
+                let frac = regression_frac(prev, latest, higher_better);
+                let verdict = if frac > threshold { "REGRESSED" } else { "ok" };
+                println!(
+                    "guard: {label}: {prev:.1} -> {latest:.1} ({:+.1}% vs previous) [{verdict}]",
+                    100.0 * frac
+                );
+                if frac > threshold {
+                    regressed.push(label);
+                }
+            }
+        }
+    }
+    if !regressed.is_empty() {
+        bail!(
+            "perf trajectory regressed past {:.0}%: {}",
+            100.0 * threshold,
+            regressed.join(", ")
+        );
+    }
     Ok(())
 }

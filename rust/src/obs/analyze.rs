@@ -1,0 +1,235 @@
+//! Offline latency forensics over exported observability artifacts.
+//!
+//! `harvest analyze` (see `main.rs`) feeds this module a Chrome
+//! trace-event document (from `serve --trace`) and optionally a report
+//! document (from `serve --report`) and renders what it returns:
+//!
+//! * [`analyze_trace`] — flamegraph-style per-`(subsystem, span)`
+//!   rollups, the step critical-path denominator, and the top-K longest
+//!   individual spans across the run;
+//! * [`attribution_totals`] / [`slow_requests`] — the per-component
+//!   causal attribution table and the slowest-request forensics out of
+//!   a report's `attribution` section (see [`crate::obs::attrib`]).
+//!
+//! Everything here is pure parsing/aggregation over [`Json`] values, so
+//! the unit tests cover the analysis without spawning a serve run.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Rollup of one `(subsystem, span-name)` lane across the whole trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanStat {
+    pub subsystem: String,
+    pub name: String,
+    pub count: u64,
+    /// Sum of span durations, µs (trace timestamps are virtual µs).
+    pub total_us: f64,
+    /// Longest single span, µs.
+    pub max_us: f64,
+}
+
+impl SpanStat {
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_us / self.count as f64
+        }
+    }
+}
+
+/// One long individual span (top-K forensics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlowSpan {
+    pub subsystem: String,
+    pub name: String,
+    pub node: u32,
+    pub ts_us: f64,
+    pub dur_us: f64,
+}
+
+/// Everything `analyze` derives from one trace document.
+#[derive(Debug, Clone, Default)]
+pub struct TraceAnalysis {
+    /// Distinct node ids (`pid`s) that emitted events.
+    pub nodes: Vec<u32>,
+    /// Per-lane rollups, sorted by total duration descending.
+    pub spans: Vec<SpanStat>,
+    /// Instant-event counts per `(subsystem, name)`.
+    pub instants: Vec<(String, String, u64)>,
+    /// Total time inside `stepper/step` spans — the critical-path
+    /// denominator the per-phase percentages are quoted against.
+    pub step_total_us: f64,
+    /// The `top_k` longest individual spans.
+    pub slowest: Vec<SlowSpan>,
+}
+
+/// Aggregate a Chrome trace-event document (the `{"traceEvents": […]}`
+/// object form written by `serve --trace`). Metadata (`"M"`) events are
+/// skipped; `"X"` spans roll up by `(cat, name)`; `"i"` instants are
+/// counted.
+pub fn analyze_trace(doc: &Json, top_k: usize) -> Result<TraceAnalysis> {
+    let Some(Json::Arr(events)) = doc.opt("traceEvents") else {
+        bail!("not a Chrome trace document: no traceEvents array");
+    };
+    let mut spans: BTreeMap<(String, String), SpanStat> = BTreeMap::new();
+    let mut instants: BTreeMap<(String, String), u64> = BTreeMap::new();
+    let mut nodes: Vec<u32> = Vec::new();
+    let mut slowest: Vec<SlowSpan> = Vec::new();
+    let mut step_total_us = 0.0;
+    for ev in events {
+        let ph = ev.opt("ph").and_then(|p| p.as_str().ok()).unwrap_or("");
+        if ph != "X" && ph != "i" {
+            continue;
+        }
+        let sub = ev.opt("cat").and_then(|c| c.as_str().ok()).unwrap_or("?").to_string();
+        let name = ev.opt("name").and_then(|n| n.as_str().ok()).unwrap_or("?").to_string();
+        let node = ev.opt("pid").and_then(|p| p.as_u64().ok()).unwrap_or(0) as u32;
+        if !nodes.contains(&node) {
+            nodes.push(node);
+        }
+        if ph == "i" {
+            *instants.entry((sub, name)).or_insert(0) += 1;
+            continue;
+        }
+        let dur = ev.opt("dur").and_then(|d| d.as_f64().ok()).unwrap_or(0.0);
+        let ts = ev.opt("ts").and_then(|t| t.as_f64().ok()).unwrap_or(0.0);
+        if sub == "stepper" && name == "step" {
+            step_total_us += dur;
+        }
+        let stat = spans.entry((sub.clone(), name.clone())).or_insert_with(|| SpanStat {
+            subsystem: sub.clone(),
+            name: name.clone(),
+            count: 0,
+            total_us: 0.0,
+            max_us: 0.0,
+        });
+        stat.count += 1;
+        stat.total_us += dur;
+        stat.max_us = stat.max_us.max(dur);
+        slowest.push(SlowSpan { subsystem: sub, name, node, ts_us: ts, dur_us: dur });
+    }
+    nodes.sort_unstable();
+    let mut spans: Vec<SpanStat> = spans.into_values().collect();
+    spans.sort_by(|a, b| b.total_us.total_cmp(&a.total_us));
+    slowest.sort_by(|a, b| b.dur_us.total_cmp(&a.dur_us));
+    slowest.truncate(top_k);
+    let instants = instants.into_iter().map(|((s, n), c)| (s, n, c)).collect();
+    Ok(TraceAnalysis { nodes, spans, instants, step_total_us, slowest })
+}
+
+/// Pull the per-component `(name, ttft_ns, decode_ns)` totals out of a
+/// report document's `attribution.totals` section, sorted by combined
+/// charge descending. `None` when the report has no attribution (run
+/// without `--report` / `[obs] attribution`).
+pub fn attribution_totals(report: &Json) -> Option<Vec<(String, u64, u64)>> {
+    let Json::Obj(totals) = report.opt("attribution")?.opt("totals")? else {
+        return None;
+    };
+    let mut rows: Vec<(String, u64, u64)> = totals
+        .iter()
+        .map(|(name, v)| {
+            let ttft = v.opt("ttft_ns").and_then(|x| x.as_u64().ok()).unwrap_or(0);
+            let decode = v.opt("decode_ns").and_then(|x| x.as_u64().ok()).unwrap_or(0);
+            (name.clone(), ttft, decode)
+        })
+        .collect();
+    rows.sort_by_key(|(name, t, d)| (std::cmp::Reverse(t + d), name.clone()));
+    Some(rows)
+}
+
+/// The slowest-by-TTFT request forensics out of a report document:
+/// `(id, ttft_ns, e2e_ns, [(component, ns)])` rows, already ranked by
+/// the serve run.
+#[allow(clippy::type_complexity)]
+pub fn slow_requests(report: &Json) -> Option<Vec<(u64, u64, u64, Vec<(String, u64)>)>> {
+    let Json::Arr(items) = report.opt("attribution")?.opt("slowest_by_ttft")? else {
+        return None;
+    };
+    let mut out = Vec::new();
+    for it in items {
+        let id = it.opt("id").and_then(|x| x.as_u64().ok()).unwrap_or(0);
+        let ttft = it.opt("ttft_ns").and_then(|x| x.as_u64().ok()).unwrap_or(0);
+        let e2e = it.opt("e2e_ns").and_then(|x| x.as_u64().ok()).unwrap_or(0);
+        let mut comps = Vec::new();
+        if let Some(Json::Obj(m)) = it.opt("ttft_components") {
+            for (k, v) in m {
+                comps.push((k.clone(), v.as_u64().unwrap_or(0)));
+            }
+        }
+        comps.sort_by_key(|(name, ns)| (std::cmp::Reverse(*ns), name.clone()));
+        out.push((id, ttft, e2e, comps));
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::attrib::{AttribTracker, Component};
+    use crate::obs::trace::{self, Subsystem};
+
+    fn sample_trace() -> Json {
+        trace::enable(64);
+        trace::set_node(0);
+        trace::span(Subsystem::Stepper, "step", 0, 10_000, &[]);
+        trace::span(Subsystem::Stepper, "kv_sync", 0, 2_000, &[]);
+        trace::span(Subsystem::Transfer, "fetch", 2_000, 9_000, &[("bytes", 4096)]);
+        trace::instant(Subsystem::Admission, "shed", 500, &[]);
+        trace::set_node(1);
+        trace::span(Subsystem::Stepper, "step", 0, 6_000, &[]);
+        let doc = trace::to_chrome_json(&trace::take());
+        trace::disable();
+        doc
+    }
+
+    #[test]
+    fn trace_rollup_groups_by_lane() {
+        let a = analyze_trace(&sample_trace(), 2).unwrap();
+        assert_eq!(a.nodes, vec![0, 1]);
+        // stepper/step dominates: 10µs + 6µs across the two nodes.
+        assert_eq!(a.spans[0].name, "step");
+        assert_eq!(a.spans[0].count, 2);
+        assert!((a.spans[0].total_us - 16.0).abs() < 1e-9);
+        assert!((a.step_total_us - 16.0).abs() < 1e-9);
+        assert_eq!(a.instants, vec![("admission".into(), "shed".into(), 1)]);
+        assert_eq!(a.slowest.len(), 2);
+        assert_eq!(a.slowest[0].name, "step");
+        assert!((a.slowest[0].dur_us - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn analyze_rejects_non_trace_documents() {
+        assert!(analyze_trace(&Json::Null, 4).is_err());
+    }
+
+    #[test]
+    fn report_sections_roundtrip_through_analysis() {
+        let mut t = AttribTracker::new();
+        t.note_admit(3, 0, 100);
+        t.charge(3, Component::PrefillCompute, 700);
+        t.note_first_token(3, 700);
+        t.note_finish(3, 700);
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("attribution".to_string(), t.report().to_json(4));
+        let report = Json::Obj(root);
+        let rows = attribution_totals(&report).unwrap();
+        assert_eq!(rows[0].0, "prefill_compute");
+        assert_eq!(rows[0].1, 600);
+        let slow = slow_requests(&report).unwrap();
+        assert_eq!(slow.len(), 1);
+        assert_eq!(slow[0].0, 3);
+        assert_eq!(slow[0].1, 700);
+        assert_eq!(slow[0].3[0], ("prefill_compute".to_string(), 600));
+    }
+
+    #[test]
+    fn missing_attribution_is_none() {
+        assert!(attribution_totals(&Json::Obj(Default::default())).is_none());
+        assert!(slow_requests(&Json::Obj(Default::default())).is_none());
+    }
+}

@@ -1,0 +1,758 @@
+//! Per-request causal latency attribution (latency forensics).
+//!
+//! PR 9's telemetry says *what happened*; this module says *where the
+//! time went*. Every admitted request carries an attribution ledger
+//! that decomposes its measured TTFT and decode latency into an
+//! exhaustive, mutually-exclusive set of [`Component`]s — queue wait,
+//! admission deferral, prefill compute, per-source-tier KV reload
+//! stalls, decompression, revocation recompute, link interference,
+//! aging sweeps, scheduler wait, batched compute — with a conservation
+//! invariant: the components sum **bit-exactly** to the measured
+//! latency, and the "unattributed" remainder is pinned to zero by
+//! `tests/attrib_conservation.rs`.
+//!
+//! The mechanism is cursor-based telescoping: each ledger tracks the
+//! last virtual-time point it has attributed up to, and every stepper
+//! phase charges `now - cursor` to exactly one component (or splits it
+//! across the KV components in proportion to what [`KvStats`] says
+//! happened inside the window). Sums telescope, so conservation holds
+//! by construction — no clock read is ever double-counted or dropped.
+//!
+//! The tracker is strictly read-only with respect to the simulation: it
+//! observes the clock and KV counters, never advances time, and no
+//! control-flow decision depends on it (`tests/obs_differential.rs`
+//! proves an armed run is bit-for-bit identical to an off run).
+//!
+//! On top of the ledgers, [`harvest_economics`] prices the **harvest
+//! tax** (what revocable/compressed placement cost us: recompute +
+//! decompression) against the **harvest dividend** (what the fast tiers
+//! saved versus a host-baseline counterfactual priced from
+//! [`LinkModel`]), so the registry can answer "was harvesting worth
+//! it?" per run.
+//!
+//! ```
+//! use harvest::kv::KvStats;
+//! use harvest::obs::attrib::{harvest_economics, TierPricing};
+//!
+//! let stats = KvStats {
+//!     bytes_from_peer: 64 << 20,
+//!     reload_ns_peer: 200_000,
+//!     recompute_ns: 50_000,
+//!     ..Default::default()
+//! };
+//! let econ = harvest_economics(&stats, &TierPricing::default());
+//! assert_eq!(econ.tax_ns, 50_000);
+//! assert!(econ.dividend_ns > 0); // peer reload beat the host price
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::kv::manager::RELOAD_CHUNK_BYTES;
+use crate::kv::KvStats;
+use crate::memsim::{LinkModel, Ns};
+use crate::obs::registry::MetricsRegistry;
+use crate::util::json::Json;
+
+/// Number of attribution components (array length of the ledgers).
+pub const NUM_COMPONENTS: usize = 15;
+
+/// One cause a nanosecond of request latency can be charged to. The set
+/// is exhaustive and mutually exclusive: every attributed window lands
+/// in exactly one component.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Component {
+    /// Router/queue wait: arrival until the admission verdict that
+    /// first examined the request (first deferral, or admission).
+    QueueWait = 0,
+    /// Admission deferral: first `Defer` verdict until admission.
+    AdmissionDefer = 1,
+    /// Fresh-suffix prefill compute.
+    PrefillCompute = 2,
+    /// Waiting on a prefix whose blocks were still arriving over the
+    /// node fabric (cluster spillover migration gate).
+    PrefixFabric = 3,
+    /// KV reload stall served from peer HBM (unloaded-price share).
+    ReloadPeer = 4,
+    /// KV reload stall served from CXL memory (unloaded-price share).
+    ReloadCxl = 5,
+    /// KV reload stall served from host DRAM (unloaded-price share).
+    ReloadHost = 6,
+    /// KV reload stall served from the SSD cold tier (unloaded-price
+    /// share).
+    ReloadSsd = 7,
+    /// Decompression of compressed-in-place blocks on reload.
+    Decompress = 8,
+    /// Revocation-induced recompute (prefill replay of dropped blocks).
+    Recompute = 9,
+    /// Link interference: the share of a reload stall *above* the
+    /// unloaded [`LinkModel`] price — queueing behind co-tenant
+    /// collectives, other reloads, or migration traffic on the link.
+    Interference = 10,
+    /// Cold-ladder idle-aging sweep running inside the step.
+    AgingSweep = 11,
+    /// Waiting for a decode slot (not selected into the cohort, or
+    /// waiting for earlier cohort members' appends).
+    SchedulerWait = 12,
+    /// Batched decode compute.
+    Compute = 13,
+    /// KV bookkeeping the window-split could not price (reservation
+    /// eviction cascades, prefetch admission) — and the residual
+    /// nanoseconds of integer splits, so conservation stays exact.
+    KvOther = 14,
+}
+
+impl Component {
+    /// Every component, in ledger-array order.
+    pub const ALL: [Component; NUM_COMPONENTS] = [
+        Component::QueueWait,
+        Component::AdmissionDefer,
+        Component::PrefillCompute,
+        Component::PrefixFabric,
+        Component::ReloadPeer,
+        Component::ReloadCxl,
+        Component::ReloadHost,
+        Component::ReloadSsd,
+        Component::Decompress,
+        Component::Recompute,
+        Component::Interference,
+        Component::AgingSweep,
+        Component::SchedulerWait,
+        Component::Compute,
+        Component::KvOther,
+    ];
+
+    /// Stable snake_case name (registry keys, JSON, tables).
+    pub fn name(self) -> &'static str {
+        match self {
+            Component::QueueWait => "queue_wait",
+            Component::AdmissionDefer => "admission_defer",
+            Component::PrefillCompute => "prefill_compute",
+            Component::PrefixFabric => "prefix_fabric",
+            Component::ReloadPeer => "reload_peer",
+            Component::ReloadCxl => "reload_cxl",
+            Component::ReloadHost => "reload_host",
+            Component::ReloadSsd => "reload_ssd",
+            Component::Decompress => "decompress",
+            Component::Recompute => "recompute",
+            Component::Interference => "interference",
+            Component::AgingSweep => "aging_sweep",
+            Component::SchedulerWait => "scheduler_wait",
+            Component::Compute => "compute",
+            Component::KvOther => "kv_other",
+        }
+    }
+}
+
+/// Finished-request ledger: measured latencies plus their component
+/// decomposition. Invariants (pinned by `tests/attrib_conservation.rs`):
+/// `ttft` sums to exactly `ttft_ns`, and `ttft_ns` plus the `decode`
+/// sum equals exactly `e2e_ns`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestAttribution {
+    /// Request id (`SeqId.0`).
+    pub id: u64,
+    pub arrival: Ns,
+    /// Measured `first_token_at - arrival`.
+    pub ttft_ns: Ns,
+    /// Measured `finished_at - arrival`.
+    pub e2e_ns: Ns,
+    /// TTFT decomposition, indexed by `Component as usize`.
+    pub ttft: [Ns; NUM_COMPONENTS],
+    /// Decode-phase decomposition, indexed by `Component as usize`.
+    pub decode: [Ns; NUM_COMPONENTS],
+}
+
+impl RequestAttribution {
+    /// Sum of the TTFT components.
+    pub fn ttft_sum(&self) -> Ns {
+        self.ttft.iter().sum()
+    }
+
+    /// Sum of the decode-phase components.
+    pub fn decode_sum(&self) -> Ns {
+        self.decode.iter().sum()
+    }
+
+    /// Nanoseconds of measured latency the ledger failed to attribute.
+    /// Zero by construction (the conservation property test pins it).
+    pub fn unattributed_ns(&self) -> Ns {
+        let ttft_gap = self.ttft_ns.saturating_sub(self.ttft_sum());
+        let decode_gap =
+            self.e2e_ns.saturating_sub(self.ttft_ns).saturating_sub(self.decode_sum());
+        ttft_gap + decode_gap
+    }
+
+    /// Combined TTFT + decode charge for one component.
+    pub fn total(&self, c: Component) -> Ns {
+        self.ttft[c as usize] + self.decode[c as usize]
+    }
+}
+
+/// Unloaded per-tier reload pricing, used two ways: to split a measured
+/// KV stall into pure reload cost vs [`Component::Interference`], and
+/// to price the host-baseline counterfactual for
+/// [`harvest_economics`]. Transfers are priced per
+/// [`RELOAD_CHUNK_BYTES`] descriptor, matching how the KV manager
+/// actually issues them.
+#[derive(Debug, Clone, Copy)]
+pub struct TierPricing {
+    pub peer: LinkModel,
+    pub cxl: LinkModel,
+    pub host: LinkModel,
+    pub ssd: LinkModel,
+}
+
+impl Default for TierPricing {
+    fn default() -> Self {
+        Self {
+            peer: LinkModel::nvlink_h100(),
+            cxl: LinkModel::cxl_mem(),
+            host: LinkModel::pcie5_host(),
+            ssd: LinkModel::nvme_ssd(),
+        }
+    }
+}
+
+impl TierPricing {
+    /// Unloaded cost of moving `bytes` over `link` in
+    /// [`RELOAD_CHUNK_BYTES`] descriptors (0 for 0 bytes).
+    fn chunked(link: &LinkModel, bytes: u64) -> Ns {
+        if bytes == 0 {
+            return 0;
+        }
+        let full = bytes / RELOAD_CHUNK_BYTES;
+        let rem = bytes % RELOAD_CHUNK_BYTES;
+        let mut total = full.saturating_mul(link.latency(RELOAD_CHUNK_BYTES));
+        if rem > 0 {
+            total = total.saturating_add(link.latency(rem));
+        }
+        total
+    }
+
+    /// Unloaded price of serving `bytes` from the host baseline — the
+    /// counterfactual every harvest tier is measured against.
+    pub fn host_price(&self, bytes: u64) -> Ns {
+        Self::chunked(&self.host, bytes)
+    }
+
+    /// Unloaded price of serving `bytes` from the tier behind
+    /// `component` (one of the four `Reload*` components).
+    pub fn tier_price(&self, component: Component, bytes: u64) -> Ns {
+        let link = match component {
+            Component::ReloadPeer => &self.peer,
+            Component::ReloadCxl => &self.cxl,
+            Component::ReloadHost => &self.host,
+            Component::ReloadSsd => &self.ssd,
+            _ => return 0,
+        };
+        Self::chunked(link, bytes)
+    }
+}
+
+/// Split a measured clock window of `delta` ns across the KV components
+/// in proportion to what the [`KvStats`] delta (`after - before`) says
+/// happened inside it. Per tier, the unloaded-price share of the
+/// recorded stall is charged to that tier's `Reload*` component and the
+/// excess to [`Component::Interference`]; recompute and decompression
+/// charge their own components. The integer-proportional split's
+/// residual lands in [`Component::KvOther`], so the returned array
+/// **always sums to exactly `delta`**.
+pub fn split_kv_window(
+    delta: Ns,
+    before: &KvStats,
+    after: &KvStats,
+    pricing: &TierPricing,
+) -> [Ns; NUM_COMPONENTS] {
+    let mut out = [0u64; NUM_COMPONENTS];
+    if delta == 0 {
+        return out;
+    }
+    let tiers = [
+        (
+            Component::ReloadPeer,
+            after.reload_ns_peer - before.reload_ns_peer,
+            after.bytes_from_peer - before.bytes_from_peer,
+        ),
+        (
+            Component::ReloadCxl,
+            after.reload_ns_cxl - before.reload_ns_cxl,
+            after.bytes_from_cxl - before.bytes_from_cxl,
+        ),
+        (
+            Component::ReloadHost,
+            after.reload_ns_host - before.reload_ns_host,
+            after.bytes_from_host - before.bytes_from_host,
+        ),
+        (
+            Component::ReloadSsd,
+            after.reload_ns_ssd - before.reload_ns_ssd,
+            after.bytes_from_ssd - before.bytes_from_ssd,
+        ),
+    ];
+    let mut weights = [0u64; NUM_COMPONENTS];
+    for (comp, actual, bytes) in tiers {
+        let unloaded = pricing.tier_price(comp, bytes);
+        let pure = actual.min(unloaded);
+        weights[comp as usize] += pure;
+        weights[Component::Interference as usize] += actual - pure;
+    }
+    weights[Component::Recompute as usize] = after.recompute_ns - before.recompute_ns;
+    weights[Component::Decompress as usize] = after.decompress_ns - before.decompress_ns;
+    let total: u64 = weights.iter().sum();
+    if total == 0 {
+        out[Component::KvOther as usize] = delta;
+        return out;
+    }
+    let mut assigned = 0u64;
+    for i in 0..NUM_COMPONENTS {
+        let share = (delta as u128 * weights[i] as u128 / total as u128) as u64;
+        out[i] = share;
+        assigned += share;
+    }
+    // Integer-division residual: keep the sum exact.
+    out[Component::KvOther as usize] += delta - assigned;
+    out
+}
+
+/// One in-flight request's ledger.
+#[derive(Debug, Clone)]
+struct Ledger {
+    arrival: Ns,
+    /// Last virtual-time point attributed (telescoping charge cursor).
+    cursor: Ns,
+    /// `Some(t)` once the first token was produced; earlier charges go
+    /// to the TTFT array, later ones to the decode array.
+    first_token_at: Option<Ns>,
+    ttft: [Ns; NUM_COMPONENTS],
+    decode: [Ns; NUM_COMPONENTS],
+}
+
+impl Ledger {
+    fn add(&mut self, c: Component, ns: Ns) {
+        match self.first_token_at {
+            None => self.ttft[c as usize] += ns,
+            Some(_) => self.decode[c as usize] += ns,
+        }
+    }
+}
+
+/// Stepper-side attribution state machine (armed via
+/// `SimEngineConfig::with_attribution` / `[obs] attribution`). The
+/// stepper calls one hook per phase boundary; everything here is
+/// observation-only.
+#[derive(Debug, Clone, Default)]
+pub struct AttribTracker {
+    pricing: TierPricing,
+    /// First `Defer` verdict time, per still-pending request.
+    first_defer: BTreeMap<u64, Ns>,
+    /// Admitted, not yet finished.
+    live: BTreeMap<u64, Ledger>,
+    /// Finished-request ledgers, in finish order.
+    done: Vec<RequestAttribution>,
+}
+
+impl AttribTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A `Defer` verdict; only the first one is remembered (the
+    /// queue-wait / defer-wait boundary).
+    pub fn note_defer(&mut self, id: u64, now: Ns) {
+        self.first_defer.entry(id).or_insert(now);
+    }
+
+    /// A `Shed` verdict: the request will never be served — drop any
+    /// deferral record.
+    pub fn note_shed(&mut self, id: u64) {
+        self.first_defer.remove(&id);
+    }
+
+    /// Admission: open the ledger and settle the pre-admission wait
+    /// (arrival → first defer → admit).
+    pub fn note_admit(&mut self, id: u64, arrival: Ns, now: Ns) {
+        let mut ledger = Ledger {
+            arrival,
+            cursor: now,
+            first_token_at: None,
+            ttft: [0; NUM_COMPONENTS],
+            decode: [0; NUM_COMPONENTS],
+        };
+        let defer_from = self.first_defer.remove(&id).unwrap_or(now).clamp(arrival, now);
+        ledger.ttft[Component::QueueWait as usize] = defer_from - arrival;
+        ledger.ttft[Component::AdmissionDefer as usize] = now - defer_from;
+        self.live.insert(id, ledger);
+    }
+
+    /// Charge `[cursor, upto)` to `c` and move the cursor.
+    pub fn charge(&mut self, id: u64, c: Component, upto: Ns) {
+        if let Some(l) = self.live.get_mut(&id) {
+            let ns = upto.saturating_sub(l.cursor);
+            l.add(c, ns);
+            l.cursor = l.cursor.max(upto);
+        }
+    }
+
+    /// Charge `[cursor, upto)` for every id in `ids` to `c`.
+    pub fn charge_many(&mut self, ids: impl IntoIterator<Item = u64>, c: Component, upto: Ns) {
+        for id in ids {
+            self.charge(id, c, upto);
+        }
+    }
+
+    /// Charge `[cursor, upto)` split across the KV components per
+    /// [`split_kv_window`] of the stats delta.
+    pub fn charge_kv(&mut self, id: u64, upto: Ns, before: &KvStats, after: &KvStats) {
+        if let Some(l) = self.live.get_mut(&id) {
+            let delta = upto.saturating_sub(l.cursor);
+            let split = split_kv_window(delta, before, after, &self.pricing);
+            for (i, &ns) in split.iter().enumerate() {
+                if ns > 0 {
+                    l.add(Component::ALL[i], ns);
+                }
+            }
+            l.cursor = l.cursor.max(upto);
+        }
+    }
+
+    /// KV-split charge for every id in `ids`.
+    pub fn charge_kv_many(
+        &mut self,
+        ids: impl IntoIterator<Item = u64>,
+        upto: Ns,
+        before: &KvStats,
+        after: &KvStats,
+    ) {
+        for id in ids {
+            self.charge_kv(id, upto, before, after);
+        }
+    }
+
+    /// First token produced: seal the TTFT side (its components now sum
+    /// to exactly `now - arrival`) and flip subsequent charges to the
+    /// decode array.
+    pub fn note_first_token(&mut self, id: u64, now: Ns) {
+        if let Some(l) = self.live.get_mut(&id) {
+            l.cursor = l.cursor.max(now);
+            l.first_token_at = Some(now);
+        }
+    }
+
+    /// Request finished at `now` (must equal the ledger cursor for the
+    /// decode side to telescope): seal and move to the finished list.
+    pub fn note_finish(&mut self, id: u64, now: Ns) {
+        let Some(mut l) = self.live.remove(&id) else { return };
+        // Defensive: any gap between the last charge and the recorded
+        // finish stays attributed (scheduler wait), never silently lost.
+        let gap = now.saturating_sub(l.cursor);
+        if gap > 0 {
+            l.add(Component::SchedulerWait, gap);
+        }
+        let first = l.first_token_at.unwrap_or(now);
+        self.done.push(RequestAttribution {
+            id,
+            arrival: l.arrival,
+            ttft_ns: first - l.arrival,
+            e2e_ns: now - l.arrival,
+            ttft: l.ttft,
+            decode: l.decode,
+        });
+    }
+
+    /// Finished-request ledgers accumulated so far.
+    pub fn report(&self) -> AttributionReport {
+        AttributionReport { requests: self.done.clone() }
+    }
+}
+
+/// Run-level attribution rollup: the finished-request ledgers plus
+/// component totals. Cluster reports concatenate per-node reports with
+/// [`AttributionReport::merge`], so the cluster totals are exactly the
+/// sum of the per-node totals.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AttributionReport {
+    pub requests: Vec<RequestAttribution>,
+}
+
+impl AttributionReport {
+    /// Total TTFT-side charge for `c` across all requests.
+    pub fn ttft_total(&self, c: Component) -> Ns {
+        self.requests.iter().map(|r| r.ttft[c as usize]).sum()
+    }
+
+    /// Total decode-side charge for `c` across all requests.
+    pub fn decode_total(&self, c: Component) -> Ns {
+        self.requests.iter().map(|r| r.decode[c as usize]).sum()
+    }
+
+    /// Combined TTFT + decode total for `c`.
+    pub fn total(&self, c: Component) -> Ns {
+        self.ttft_total(c) + self.decode_total(c)
+    }
+
+    /// Sum of measured TTFT across requests.
+    pub fn ttft_measured_total(&self) -> Ns {
+        self.requests.iter().map(|r| r.ttft_ns).sum()
+    }
+
+    /// Sum of measured end-to-end latency across requests.
+    pub fn e2e_measured_total(&self) -> Ns {
+        self.requests.iter().map(|r| r.e2e_ns).sum()
+    }
+
+    /// Total unattributed nanoseconds (zero by construction).
+    pub fn unattributed_total(&self) -> Ns {
+        self.requests.iter().map(|r| r.unattributed_ns()).sum()
+    }
+
+    /// Fold another node's report in (cluster rollup).
+    pub fn merge(&mut self, other: &AttributionReport) {
+        self.requests.extend(other.requests.iter().cloned());
+    }
+
+    /// Register the rollup under `prefix` (e.g. `"attrib"`): per-
+    /// component TTFT/decode totals plus the measured sums and the
+    /// (zero) unattributed remainder.
+    pub fn register(&self, reg: &mut MetricsRegistry, prefix: &str) {
+        reg.counter(&format!("{prefix}.requests"), self.requests.len() as u64);
+        reg.counter(&format!("{prefix}.ttft_measured_ns"), self.ttft_measured_total());
+        reg.counter(&format!("{prefix}.e2e_measured_ns"), self.e2e_measured_total());
+        reg.counter(&format!("{prefix}.unattributed_ns"), self.unattributed_total());
+        for c in Component::ALL {
+            reg.counter(&format!("{prefix}.ttft.{}_ns", c.name()), self.ttft_total(c));
+            reg.counter(&format!("{prefix}.decode.{}_ns", c.name()), self.decode_total(c));
+        }
+    }
+
+    /// JSON for `serve --report` / `analyze`: component totals plus the
+    /// `top_k` slowest requests by TTFT with their non-zero components.
+    pub fn to_json(&self, top_k: usize) -> Json {
+        let mut totals = BTreeMap::new();
+        for c in Component::ALL {
+            let mut t = BTreeMap::new();
+            t.insert("ttft_ns".into(), Json::Num(self.ttft_total(c) as f64));
+            t.insert("decode_ns".into(), Json::Num(self.decode_total(c) as f64));
+            totals.insert(c.name().to_string(), Json::Obj(t));
+        }
+        let mut order: Vec<&RequestAttribution> = self.requests.iter().collect();
+        order.sort_by_key(|r| (std::cmp::Reverse(r.ttft_ns), r.id));
+        let slowest: Vec<Json> = order
+            .into_iter()
+            .take(top_k)
+            .map(|r| {
+                let mut comps = BTreeMap::new();
+                for c in Component::ALL {
+                    if r.ttft[c as usize] > 0 {
+                        comps.insert(c.name().to_string(), Json::Num(r.ttft[c as usize] as f64));
+                    }
+                }
+                let mut o = BTreeMap::new();
+                o.insert("id".into(), Json::Num(r.id as f64));
+                o.insert("arrival_ns".into(), Json::Num(r.arrival as f64));
+                o.insert("ttft_ns".into(), Json::Num(r.ttft_ns as f64));
+                o.insert("e2e_ns".into(), Json::Num(r.e2e_ns as f64));
+                o.insert("ttft_components".into(), Json::Obj(comps));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("requests".into(), Json::Num(self.requests.len() as f64));
+        root.insert("ttft_measured_ns".into(), Json::Num(self.ttft_measured_total() as f64));
+        root.insert("e2e_measured_ns".into(), Json::Num(self.e2e_measured_total() as f64));
+        root.insert("unattributed_ns".into(), Json::Num(self.unattributed_total() as f64));
+        root.insert("totals".into(), Json::Obj(totals));
+        root.insert("slowest_by_ttft".into(), Json::Arr(slowest));
+        Json::Obj(root)
+    }
+}
+
+/// Harvest cost/benefit accounting derived from [`KvStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HarvestEconomics {
+    /// What harvesting cost: revocation recompute plus decompression of
+    /// ladder-compressed blocks.
+    pub tax_ns: Ns,
+    /// What harvesting saved: for every byte served from a
+    /// faster-than-host tier (peer HBM, CXL), the unloaded host price
+    /// minus the time the fast tier actually took (clamped at zero per
+    /// tier — a congested fast tier can save nothing, but never counts
+    /// as negative savings here; congestion shows up in the tax-free
+    /// [`Component::Interference`] attribution instead).
+    pub dividend_ns: Ns,
+}
+
+impl HarvestEconomics {
+    /// Dividend minus tax (signed: negative means harvesting lost time
+    /// net of the host-baseline counterfactual).
+    pub fn net_ns(&self) -> i128 {
+        self.dividend_ns as i128 - self.tax_ns as i128
+    }
+
+    /// Register under `prefix`: `harvest_tax_ns` / `harvest_dividend_ns`
+    /// counters and a signed `harvest_net_ns` gauge.
+    pub fn register(&self, reg: &mut MetricsRegistry, prefix: &str) {
+        reg.counter(&format!("{prefix}.harvest_tax_ns"), self.tax_ns);
+        reg.counter(&format!("{prefix}.harvest_dividend_ns"), self.dividend_ns);
+        reg.gauge(&format!("{prefix}.harvest_net_ns"), self.net_ns() as f64);
+    }
+}
+
+/// Price the harvest tax/dividend out of a run's [`KvStats`].
+pub fn harvest_economics(stats: &KvStats, pricing: &TierPricing) -> HarvestEconomics {
+    let tax_ns = stats.recompute_ns + stats.decompress_ns;
+    let mut dividend_ns = 0u64;
+    for (bytes, actual) in [
+        (stats.bytes_from_peer, stats.reload_ns_peer),
+        (stats.bytes_from_cxl, stats.reload_ns_cxl),
+    ] {
+        dividend_ns += pricing.host_price(bytes).saturating_sub(actual);
+    }
+    HarvestEconomics { tax_ns, dividend_ns }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pricing() -> TierPricing {
+        TierPricing::default()
+    }
+
+    #[test]
+    fn split_conserves_delta_exactly() {
+        let before = KvStats::default();
+        let after = KvStats {
+            reload_ns_peer: 123_457,
+            bytes_from_peer: 32 << 20,
+            reload_ns_host: 999_999,
+            bytes_from_host: 2 << 20,
+            recompute_ns: 77_777,
+            decompress_ns: 31,
+            ..Default::default()
+        };
+        for delta in [0u64, 1, 999, 1_000_003, u32::MAX as u64] {
+            let split = split_kv_window(delta, &before, &after, &pricing());
+            assert_eq!(split.iter().sum::<u64>(), delta, "delta={delta}");
+        }
+    }
+
+    #[test]
+    fn split_with_no_kv_activity_lands_in_other() {
+        let s = KvStats::default();
+        let split = split_kv_window(5_000, &s, &s, &pricing());
+        assert_eq!(split[Component::KvOther as usize], 5_000);
+        assert_eq!(split.iter().sum::<u64>(), 5_000);
+    }
+
+    #[test]
+    fn split_charges_excess_stall_to_interference() {
+        let before = KvStats::default();
+        let unloaded = pricing().tier_price(Component::ReloadPeer, RELOAD_CHUNK_BYTES);
+        // One peer-tier chunk that took 10x its unloaded price.
+        let after = KvStats {
+            bytes_from_peer: RELOAD_CHUNK_BYTES,
+            reload_ns_peer: unloaded * 10,
+            ..Default::default()
+        };
+        let split = split_kv_window(unloaded * 10, &before, &after, &pricing());
+        assert_eq!(split[Component::ReloadPeer as usize], unloaded);
+        assert_eq!(split[Component::Interference as usize], unloaded * 9);
+    }
+
+    #[test]
+    fn tracker_ledger_telescopes_to_measured_latency() {
+        let mut t = AttribTracker::new();
+        t.note_defer(7, 150);
+        t.note_defer(7, 200); // repeat defers keep the first timestamp
+        t.note_admit(7, 100, 300);
+        t.charge(7, Component::PrefillCompute, 900);
+        t.note_first_token(7, 900);
+        t.charge(7, Component::SchedulerWait, 1_000);
+        t.charge(7, Component::Compute, 1_500);
+        t.note_finish(7, 1_500);
+        let rep = t.report();
+        assert_eq!(rep.requests.len(), 1);
+        let r = &rep.requests[0];
+        assert_eq!(r.ttft_ns, 800);
+        assert_eq!(r.e2e_ns, 1_400);
+        assert_eq!(r.ttft_sum(), r.ttft_ns);
+        assert_eq!(r.ttft_ns + r.decode_sum(), r.e2e_ns);
+        assert_eq!(r.unattributed_ns(), 0);
+        assert_eq!(r.ttft[Component::QueueWait as usize], 50);
+        assert_eq!(r.ttft[Component::AdmissionDefer as usize], 150);
+        assert_eq!(r.ttft[Component::PrefillCompute as usize], 600);
+        assert_eq!(r.decode[Component::SchedulerWait as usize], 100);
+        assert_eq!(r.decode[Component::Compute as usize], 500);
+    }
+
+    #[test]
+    fn merge_totals_are_per_node_sums() {
+        let mut a = AttribTracker::new();
+        a.note_admit(1, 0, 10);
+        a.charge(1, Component::PrefillCompute, 50);
+        a.note_first_token(1, 50);
+        a.note_finish(1, 50);
+        let mut b = AttribTracker::new();
+        b.note_admit(2, 5, 10);
+        b.charge(2, Component::PrefillCompute, 40);
+        b.note_first_token(2, 40);
+        b.note_finish(2, 40);
+        let (ra, rb) = (a.report(), b.report());
+        let mut merged = ra.clone();
+        merged.merge(&rb);
+        for c in Component::ALL {
+            assert_eq!(merged.total(c), ra.total(c) + rb.total(c));
+        }
+        let expect = ra.ttft_measured_total() + rb.ttft_measured_total();
+        assert_eq!(merged.ttft_measured_total(), expect);
+    }
+
+    #[test]
+    fn economics_price_the_host_counterfactual() {
+        let s = KvStats {
+            bytes_from_peer: 64 << 20,
+            reload_ns_peer: 100_000,
+            recompute_ns: 40_000,
+            decompress_ns: 2_000,
+            ..Default::default()
+        };
+        let econ = harvest_economics(&s, &pricing());
+        assert_eq!(econ.tax_ns, 42_000);
+        let host = pricing().host_price(64 << 20);
+        assert_eq!(econ.dividend_ns, host - 100_000);
+        assert_eq!(econ.net_ns(), (host - 100_000) as i128 - 42_000);
+    }
+
+    #[test]
+    fn report_json_has_totals_and_slowest() {
+        let mut t = AttribTracker::new();
+        for (id, arrival) in [(1u64, 0u64), (2, 10)] {
+            t.note_admit(id, arrival, arrival + 100);
+            t.charge(id, Component::PrefillCompute, arrival + 100 + 50 * id);
+            t.note_first_token(id, arrival + 100 + 50 * id);
+            t.note_finish(id, arrival + 100 + 50 * id);
+        }
+        let json = t.report().to_json(1);
+        assert_eq!(json.get("requests").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(json.get("unattributed_ns").unwrap().as_u64().unwrap(), 0);
+        let slow = json.get("slowest_by_ttft").unwrap();
+        let Json::Arr(items) = slow else { panic!("expected array") };
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].get("id").unwrap().as_u64().unwrap(), 2);
+    }
+
+    #[test]
+    fn register_emits_every_component() {
+        let mut t = AttribTracker::new();
+        t.note_admit(1, 0, 4);
+        t.charge(1, Component::PrefillCompute, 9);
+        t.note_first_token(1, 9);
+        t.note_finish(1, 9);
+        let mut reg = MetricsRegistry::new();
+        t.report().register(&mut reg, "attrib");
+        assert!(reg.get("attrib.ttft.prefill_compute_ns").is_some());
+        assert!(reg.get("attrib.decode.compute_ns").is_some());
+        assert!(reg.get("attrib.unattributed_ns").is_some());
+        assert_eq!(reg.len(), 4 + 2 * NUM_COMPONENTS);
+    }
+}

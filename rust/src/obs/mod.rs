@@ -11,6 +11,8 @@
 //! | [`registry`] | one snapshot tree of counters/gauges/log-bucket histograms that every stat surface registers into |
 //! | [`profile`] | wall-clock per-phase accumulator for the stepper hot loop |
 //! | [`flight`] | flight recorder — dumps the trace ring when the SLO control plane sees a window miss, a shed burst, or a tenant OOM-with-harvest |
+//! | [`attrib`] | per-request causal latency attribution (conservation-exact TTFT/decode decomposition) + harvest tax/dividend accounting |
+//! | [`analyze`] | offline forensics over an exported trace + report: critical-path breakdowns, per-phase rollups, top-K slow requests |
 //!
 //! All state is thread-local: parallel test threads and parallel bench
 //! harnesses never observe each other, and no `&mut` plumbing threads
@@ -31,11 +33,17 @@
 //! profile::disable();
 //! ```
 
+pub mod analyze;
+pub mod attrib;
 pub mod flight;
 pub mod profile;
 pub mod registry;
 pub mod trace;
 
+pub use attrib::{
+    harvest_economics, AttribTracker, AttributionReport, Component, HarvestEconomics,
+    RequestAttribution, TierPricing,
+};
 pub use flight::{FlightConfig, FlightDump, FlightSignals};
 pub use profile::{Phase, PhaseProfile, PhaseTimer};
 pub use registry::{LogHistogram, Metric, MetricsRegistry};

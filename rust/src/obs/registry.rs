@@ -39,10 +39,11 @@ pub const BUCKETS: usize = 65;
 
 /// Fixed-size log₂-bucket histogram of `u64` samples.
 ///
-/// Percentiles come from bucket upper bounds (≤ 2× relative error),
-/// and [`merge`](Self::merge) is an exact bucket-wise sum — two nodes'
-/// histograms merge into the true cluster distribution, unlike
-/// averaging per-node percentile points.
+/// Percentiles interpolate linearly within the rank-holding bucket
+/// (≤ 2× relative error from the bucket width, unbiased at low
+/// counts), and [`merge`](Self::merge) is an exact bucket-wise sum —
+/// two nodes' histograms merge into the true cluster distribution,
+/// unlike averaging per-node percentile points.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LogHistogram {
     counts: [u64; BUCKETS],
@@ -116,8 +117,13 @@ impl LogHistogram {
         self.sum = self.sum.saturating_add(other.sum);
     }
 
-    /// Approximate percentile `p` in `[0, 100]`: the upper bound of the
-    /// bucket holding the rank-`p` sample (0 when empty).
+    /// Approximate percentile `p` in `[0, 100]`: linear interpolation
+    /// across the bucket holding the rank-`p` sample, by rank within
+    /// the bucket (0 when empty). The bucket's last rank maps to its
+    /// upper bound, so `percentile(100.0)` still covers the maximum
+    /// sample — but a lone sample near a bucket's bottom no longer
+    /// reports as the bucket top (the old upper-bound bias at low
+    /// counts).
     pub fn percentile(&self, p: f64) -> u64 {
         if self.count == 0 {
             return 0;
@@ -125,10 +131,17 @@ impl LogHistogram {
         let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
         let mut seen = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return Self::bucket_upper(i);
+            if c == 0 {
+                continue;
             }
+            if seen + c >= target {
+                let lower = if i == 0 { 0 } else { 1u64 << (i - 1) };
+                let upper = Self::bucket_upper(i);
+                let rank_in_bucket = target - seen; // 1..=c
+                let width = (upper - lower) as u128;
+                return lower + (width * rank_in_bucket as u128 / c as u128) as u64;
+            }
+            seen += c;
         }
         Self::bucket_upper(BUCKETS - 1)
     }
@@ -280,8 +293,11 @@ mod tests {
         h.record(1 << 40);
         assert_eq!(h.count(), 5);
         assert_eq!(h.sum(), 6 + (1 << 40));
-        // p50 of {0,1,2,3,2^40}: rank-3 sample lives in bucket [2,4).
-        assert_eq!(h.percentile(50.0), 3);
+        // p50 of {0,1,2,3,2^40}: rank-3 sample is the first of two in
+        // bucket [2,4), so interpolation reports the bucket's lower
+        // half rather than its upper bound.
+        assert_eq!(h.percentile(50.0), 2);
+        // The last rank of the top bucket still maps to its upper bound.
         assert_eq!(h.percentile(100.0), (1u64 << 41) - 1);
     }
 
@@ -298,7 +314,9 @@ mod tests {
         // The tail sample survives the merge exactly: p100 sits in
         // 1M's bucket, not at an averaged midpoint.
         assert!(a.percentile(100.0) >= 1_000_000);
-        assert_eq!(a.percentile(50.0), 15);
+        // p50 (rank 50 of 99 in bucket [8,16)) interpolates to
+        // 8 + 7*50/99 = 11 instead of pinning to the upper bound 15.
+        assert_eq!(a.percentile(50.0), 11);
     }
 
     #[test]

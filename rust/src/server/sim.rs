@@ -50,6 +50,11 @@ pub struct SimEngineConfig {
     /// fits, the legacy behavior). The stepper owns the controller, so
     /// single-node and cluster runs make identical decisions.
     pub admission: Option<AdmissionConfig>,
+    /// Per-request causal latency attribution (see
+    /// [`crate::obs::attrib`]). Observation-only: an armed run is
+    /// bit-for-bit identical to an off run
+    /// (`tests/obs_differential.rs`).
+    pub attribution: bool,
 }
 
 impl SimEngineConfig {
@@ -66,6 +71,7 @@ impl SimEngineConfig {
             prefetch: None,
             aging: None,
             admission: None,
+            attribution: false,
         }
     }
 
@@ -84,6 +90,12 @@ impl SimEngineConfig {
     /// Enable SLO feedback admission control.
     pub fn with_admission(mut self, cfg: AdmissionConfig) -> Self {
         self.admission = Some(cfg);
+        self
+    }
+
+    /// Enable per-request causal latency attribution.
+    pub fn with_attribution(mut self) -> Self {
+        self.attribution = true;
         self
     }
 }
@@ -108,6 +120,9 @@ pub struct SimEngineReport {
     pub sheds: Vec<crate::kv::SeqId>,
     /// Admission-controller counters (None without a controller).
     pub admission: Option<crate::control::AdmissionStats>,
+    /// Per-request latency attribution ledgers (None unless the config
+    /// armed [`SimEngineConfig::with_attribution`]).
+    pub attribution: Option<crate::obs::AttributionReport>,
 }
 
 /// The engine: a closed-loop driver over one [`NodeStepper`].
@@ -162,6 +177,7 @@ impl SimEngine {
             steps: self.stepper.steps(),
             sheds: self.stepper.shed_ids().to_vec(),
             admission: self.stepper.admission_stats(),
+            attribution: self.stepper.attribution_report(),
         }
     }
 }

@@ -69,6 +69,7 @@ use crate::control::{AdmissionController, AdmissionDecision, AdmissionSignals, A
 use crate::harvest::{HarvestRuntime, Transfer};
 use crate::kv::{KvOffloadManager, SeqId};
 use crate::memsim::{DeviceId, Ns};
+use crate::obs::attrib::{AttribTracker, Component};
 use crate::obs::profile::{self, Phase};
 use crate::obs::trace::{self, Subsystem};
 use crate::obs::{flight, FlightSignals};
@@ -163,6 +164,10 @@ pub struct NodeStepper {
     cohort: Vec<SeqId>,
     predicted: Vec<SeqId>,
     groups: Vec<u32>,
+    /// Per-request causal latency attribution (None = off, the
+    /// default). Observation-only: reads the clock and KV counters at
+    /// phase boundaries, never advances time or steers a decision.
+    attrib: Option<AttribTracker>,
 }
 
 impl NodeStepper {
@@ -208,6 +213,7 @@ impl NodeStepper {
             cohort: Vec::new(),
             predicted: Vec::new(),
             groups: Vec::new(),
+            attrib: cfg.attribution.then(AttribTracker::new),
         }
     }
 
@@ -348,6 +354,12 @@ impl NodeStepper {
     /// Controller decision counters, when a controller is attached.
     pub fn admission_stats(&self) -> Option<AdmissionStats> {
         self.admission.as_ref().map(|c| c.stats())
+    }
+
+    /// Finished-request attribution ledgers, when attribution is armed
+    /// (see [`crate::obs::attrib`]).
+    pub fn attribution_report(&self) -> Option<crate::obs::AttributionReport> {
+        self.attrib.as_ref().map(|a| a.report())
     }
 
     /// Requests shed by the admission controller, in decision order.
@@ -515,17 +527,26 @@ impl NodeStepper {
                         let wait = hr.node.clock.now().saturating_sub(arrival);
                         self.metrics.on_deferred_admit(wait);
                     }
+                    if let Some(a) = self.attrib.as_mut() {
+                        a.note_admit(id.0, arrival, hr.node.clock.now());
+                    }
                     self.prefill(hr, &mut req);
                     self.scheduler.admit(req.id);
                     self.live.insert(req.id, req);
                 }
                 AdmissionDecision::Defer => {
+                    if let Some(a) = self.attrib.as_mut() {
+                        a.note_defer(id.0, hr.node.clock.now());
+                    }
                     self.deferred.insert(id);
                     break;
                 }
                 AdmissionDecision::Shed => {
                     self.pending.pop_front();
                     self.deferred.remove(&id);
+                    if let Some(a) = self.attrib.as_mut() {
+                        a.note_shed(id.0);
+                    }
                     self.metrics.on_shed();
                     self.sheds.push(id);
                 }
@@ -551,7 +572,14 @@ impl NodeStepper {
         let prefill_ns = self.cfg.prefill_ns_per_token * fresh as u64;
         let target = hr.node.clock.now() + prefill_ns;
         self.advance(hr, target);
+        if let Some(a) = self.attrib.as_mut() {
+            a.charge(req.id.0, Component::PrefillCompute, hr.node.clock.now());
+        }
         self.advance(hr, gate);
+        if let Some(a) = self.attrib.as_mut() {
+            a.charge(req.id.0, Component::PrefixFabric, hr.node.clock.now());
+        }
+        let kv_before = self.attrib.as_ref().map(|_| self.kv.stats.clone());
         let bt = self.cfg.kv.block_tokens as usize;
         // Vectored admission: free the suffix's block footprint in one
         // all-or-nothing batch instead of evicting per token.
@@ -566,6 +594,12 @@ impl NodeStepper {
                 // retain it as the group cache.
                 self.build_prefix(hr, g, req.shared_prefix_tokens);
             }
+        }
+        if let Some(a) = self.attrib.as_mut() {
+            let now = hr.node.clock.now();
+            let before = kv_before.as_ref().expect("snapshot taken when armed");
+            a.charge_kv(req.id.0, now, before, &self.kv.stats);
+            a.note_first_token(req.id.0, now);
         }
         req.first_token_at = Some(hr.node.clock.now());
         self.metrics.on_first_token(req.arrival, hr.node.clock.now());
@@ -609,13 +643,24 @@ impl NodeStepper {
         }
         self.steps += 1;
         let step_start = hr.node.clock.now();
+        if let Some(a) = self.attrib.as_mut() {
+            // Everything since each member's last charge (its own
+            // append last step, or its first token) was waiting for
+            // this cohort slot.
+            a.charge_many(self.cohort.iter().map(|s| s.0), Component::SchedulerWait, step_start);
+        }
         // Tick boundary: fold in revocations accumulated while time
         // advanced, then run the idle-aging ladder at its cadence.
+        let kv_sync_before = self.attrib.as_ref().map(|_| self.kv.stats.clone());
         {
             let _t = profile::timer(Phase::KvSync);
             self.kv.sync(hr);
         }
         let v_synced = hr.node.clock.now();
+        if let Some(a) = self.attrib.as_mut() {
+            let before = kv_sync_before.as_ref().expect("snapshot taken when armed");
+            a.charge_kv_many(self.cohort.iter().map(|s| s.0), v_synced, before, &self.kv.stats);
+        }
         trace::span(Subsystem::Stepper, "kv_sync", step_start, v_synced, &[]);
         {
             let _t = profile::timer(Phase::Aging);
@@ -634,6 +679,10 @@ impl NodeStepper {
             }
         }
         let v_aged = hr.node.clock.now();
+        if let Some(a) = self.attrib.as_mut() {
+            a.charge_many(self.cohort.iter().map(|s| s.0), Component::AgingSweep, v_aged);
+        }
+        let kv_resid_before = self.attrib.as_ref().map(|_| self.kv.stats.clone());
         {
             let _t = profile::timer(Phase::Residency);
             // Restore residency — the prefix blocks decode attends over,
@@ -659,6 +708,11 @@ impl NodeStepper {
             }
         }
         trace::span(Subsystem::Stepper, "residency", v_aged, hr.node.clock.now(), &[]);
+        if let Some(a) = self.attrib.as_mut() {
+            let now = hr.node.clock.now();
+            let before = kv_resid_before.as_ref().expect("snapshot taken when armed");
+            a.charge_kv_many(self.cohort.iter().map(|s| s.0), now, before, &self.kv.stats);
+        }
         // Everything between step_start and here was waiting on KV
         // residency, not computing.
         self.metrics.on_stall(hr.node.clock.now() - step_start);
@@ -685,10 +739,19 @@ impl NodeStepper {
         }
         // Batched compute.
         let v_compute = hr.node.clock.now();
+        if let Some(a) = self.attrib.as_mut() {
+            // Prefetch submission is background-only, so this window is
+            // normally empty; anything that did land is KV bookkeeping.
+            a.charge_many(self.cohort.iter().map(|s| s.0), Component::KvOther, v_compute);
+        }
         {
             let _t = profile::timer(Phase::Compute);
             let compute_end = v_compute + self.cfg.step_compute_ns;
             Self::advance_time(&mut self.tenants, hr, compute_end);
+        }
+        if let Some(a) = self.attrib.as_mut() {
+            let now = hr.node.clock.now();
+            a.charge_many(self.cohort.iter().map(|s| s.0), Component::Compute, now);
         }
         trace::span(
             Subsystem::Stepper,
@@ -703,8 +766,18 @@ impl NodeStepper {
             let _t = profile::timer(Phase::Decode);
             for i in 0..self.cohort.len() {
                 let seq = self.cohort[i];
+                if let Some(a) = self.attrib.as_mut() {
+                    // Earlier cohort members' appends were queueing
+                    // ahead of this member's.
+                    a.charge(seq.0, Component::SchedulerWait, hr.node.clock.now());
+                }
+                let kv_before = self.attrib.as_ref().map(|_| self.kv.stats.clone());
                 self.kv.append_token(hr, seq);
                 let now = hr.node.clock.now();
+                if let Some(a) = self.attrib.as_mut() {
+                    let before = kv_before.as_ref().expect("snapshot taken when armed");
+                    a.charge_kv(seq.0, now, before, &self.kv.stats);
+                }
                 let req = self.live.get_mut(&seq).expect("scheduled request is live");
                 req.generated += 1;
                 self.metrics.on_token(step_ns);
@@ -721,6 +794,9 @@ impl NodeStepper {
                     if let Some(ctl) = self.admission.as_mut() {
                         let ttft = outcome.first_token_at.saturating_sub(outcome.arrival);
                         ctl.note_finish(now, ttft, outcome.generated as u64);
+                    }
+                    if let Some(a) = self.attrib.as_mut() {
+                        a.note_finish(seq.0, now);
                     }
                     self.scheduler.retire(seq);
                     self.kv.finish_seq(hr, seq);

@@ -11,7 +11,7 @@
 //! Output format is stable so `cargo bench | tee bench_output.txt` diffs
 //! cleanly between optimization iterations.
 
-use super::json::Json;
+use super::json::{obj, Json};
 use super::stats::{percentile, Summary};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -120,6 +120,112 @@ impl JsonReport {
         let doc = Json::Obj(self.entries.clone());
         std::fs::write(&self.path, doc.to_string() + "\n")
     }
+
+    /// Append the accumulated document as one datapoint of a committed
+    /// perf *trajectory* (`{"points": [{label, smoke, data}, …]}`), the
+    /// format `harvest guard` compares across PRs. A missing or
+    /// unparseable file starts an empty trajectory; a legacy flat bench
+    /// document is first wrapped as a `"seed"` point so history is kept.
+    /// The trajectory is capped at [`TRAJECTORY_CAP`] points (oldest
+    /// dropped first).
+    pub fn append_trajectory(&self, label: &str, smoke: bool) -> std::io::Result<()> {
+        let mut points = load_trajectory(&self.path);
+        points.push(TrajectoryPoint {
+            label: label.to_string(),
+            smoke,
+            data: Json::Obj(self.entries.clone()),
+        });
+        if points.len() > TRAJECTORY_CAP {
+            let excess = points.len() - TRAJECTORY_CAP;
+            points.drain(..excess);
+        }
+        let arr: Vec<Json> =
+            points.into_iter().map(|p| point_json(&p.label, p.smoke, p.data)).collect();
+        let doc = obj([("points", Json::Arr(arr))]);
+        std::fs::write(&self.path, doc.to_string() + "\n")
+    }
+}
+
+/// Max datapoints kept per committed trajectory file.
+pub const TRAJECTORY_CAP: usize = 50;
+
+/// One datapoint of a committed bench trajectory: the bench document
+/// (`data`) tagged with the run that produced it (`label`, typically a
+/// commit sha) and whether it came from the CI smoke tier (`smoke`) —
+/// smoke and full runs are never compared against each other.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrajectoryPoint {
+    pub label: String,
+    pub smoke: bool,
+    pub data: Json,
+}
+
+fn point_json(label: &str, smoke: bool, data: Json) -> Json {
+    obj([("label", Json::from(label)), ("smoke", Json::Bool(smoke)), ("data", data)])
+}
+
+/// Parse a `BENCH_*.json` document into trajectory points. Accepts both
+/// the trajectory form (`{"points": […]}`) and the legacy flat bench
+/// document, which wraps as a single pre-trajectory `"seed"` point.
+pub fn parse_trajectory(doc: &Json) -> Vec<TrajectoryPoint> {
+    if let Some(Json::Arr(points)) = doc.opt("points") {
+        points
+            .iter()
+            .map(|p| TrajectoryPoint {
+                label: p.opt("label").and_then(|l| l.as_str().ok()).unwrap_or("?").to_string(),
+                smoke: matches!(p.opt("smoke"), Some(Json::Bool(true))),
+                data: p.opt("data").cloned().unwrap_or(Json::Null),
+            })
+            .collect()
+    } else {
+        vec![TrajectoryPoint { label: "seed".to_string(), smoke: false, data: doc.clone() }]
+    }
+}
+
+/// Read a trajectory file; missing or unparseable files read as empty.
+pub fn load_trajectory(path: &Path) -> Vec<TrajectoryPoint> {
+    match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(doc) => parse_trajectory(&doc),
+            Err(_) => Vec::new(),
+        },
+        Err(_) => Vec::new(),
+    }
+}
+
+/// Walk a dotted path (`"knee.occupancy_p99_pre_knee_ns"`) into one
+/// point's bench document. Path segments themselves never contain dots.
+pub fn metric_at(data: &Json, dotted: &str) -> Option<f64> {
+    let mut cur = data;
+    for key in dotted.split('.') {
+        cur = cur.opt(key)?;
+    }
+    cur.as_f64().ok()
+}
+
+/// The guard comparison pair: the newest point's metric and the metric
+/// of the most recent *earlier* point with the same smoke flag. `None`
+/// until the trajectory holds two comparable points carrying the metric
+/// (the "baseline recorded" case).
+pub fn latest_pair(points: &[TrajectoryPoint], dotted: &str) -> Option<(f64, f64)> {
+    let latest = points.last()?;
+    let latest_v = metric_at(&latest.data, dotted)?;
+    let prev = points[..points.len() - 1].iter().rev().find(|p| p.smoke == latest.smoke)?;
+    let prev_v = metric_at(&prev.data, dotted)?;
+    Some((prev_v, latest_v))
+}
+
+/// Fractional regression of `latest` against `prev` (positive = worse,
+/// e.g. `0.25` = 25% slower). Non-positive baselines compare as 0.
+pub fn regression_frac(prev: f64, latest: f64, higher_better: bool) -> f64 {
+    if prev <= 0.0 {
+        return 0.0;
+    }
+    if higher_better {
+        (prev - latest) / prev
+    } else {
+        (latest - prev) / prev
+    }
 }
 
 /// Opaque value sink — prevents the optimizer from deleting the measured
@@ -200,6 +306,46 @@ mod tests {
         assert_eq!(parsed.get("alpha").unwrap().get("tps").unwrap().as_f64().unwrap(), 123.5);
         assert_eq!(parsed.get("beta").unwrap().as_u64().unwrap(), 7);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn trajectory_wraps_legacy_file_and_appends() {
+        let dir = std::env::temp_dir().join("harvest_bench_traj_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_traj.json");
+        // Start from a legacy flat document (pre-trajectory format).
+        std::fs::write(&path, "{\"knee\": {\"qps\": 120.0}}\n").unwrap();
+        let mut r = JsonReport::new(&path);
+        r.add("knee", crate::util::json::obj([("qps", Json::from(90.0))]));
+        r.append_trajectory("abc123", true).unwrap();
+        let points = load_trajectory(&path);
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].label, "seed");
+        assert!(!points[0].smoke);
+        assert_eq!(metric_at(&points[0].data, "knee.qps"), Some(120.0));
+        assert_eq!(points[1].label, "abc123");
+        assert!(points[1].smoke);
+        assert_eq!(metric_at(&points[1].data, "knee.qps"), Some(90.0));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn guard_pair_compares_same_smoke_tier_only() {
+        let pt = |label: &str, smoke: bool, v: f64| TrajectoryPoint {
+            label: label.to_string(),
+            smoke,
+            data: crate::util::json::obj([("steps_per_sec", Json::from(v))]),
+        };
+        // Seed (full run) must not serve as baseline for a smoke point.
+        let points = vec![pt("seed", false, 500.0), pt("a", true, 100.0), pt("b", true, 80.0)];
+        let (prev, latest) = latest_pair(&points, "steps_per_sec").unwrap();
+        assert_eq!((prev, latest), (100.0, 80.0));
+        assert!((regression_frac(prev, latest, true) - 0.2).abs() < 1e-9);
+        assert!(regression_frac(prev, latest, false) < 0.0);
+        // Only one smoke point → no comparable baseline yet.
+        let young = vec![pt("seed", false, 500.0), pt("a", true, 100.0)];
+        assert!(latest_pair(&young, "steps_per_sec").is_none());
+        assert!(latest_pair(&points, "missing.metric").is_none());
     }
 
     #[test]

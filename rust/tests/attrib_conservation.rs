@@ -1,0 +1,195 @@
+//! Conservation property for the causal attribution layer
+//! (`obs/attrib.rs`): on every finished request, the per-component
+//! ledgers must decompose the *measured* latencies exactly —
+//!
+//! * the TTFT components sum bit-exactly to the measured TTFT,
+//! * TTFT + the decode components sum bit-exactly to the measured
+//!   end-to-end latency,
+//! * so `unattributed_ns()` is pinned to 0 (not "≥ 95% coverage" — the
+//!   telescoping-cursor design makes the decomposition exhaustive by
+//!   construction, and this test is what keeps it that way),
+//!
+//! across engine configurations that exercise every charge site (tight
+//! pools forcing reload stalls, prefetch, idle-aging, SLO admission
+//! deferrals), and on the cluster path, where the rollup must equal the
+//! per-node sums component by component.
+
+use harvest::cluster::{Cluster, ClusterSpec, RouterPolicy, SchedulerSpec};
+use harvest::control::{AdmissionConfig, SloConfig};
+use harvest::harvest::{HarvestConfig, HarvestRuntime, PrefetchConfig};
+use harvest::kv::KvConfig;
+use harvest::memsim::{NodeSpec, SimNode};
+use harvest::moe::find_kv_model;
+use harvest::obs::{AttributionReport, Component};
+use harvest::server::{AgingConfig, SimEngine, SimEngineConfig, WorkloadGen, WorkloadSpec};
+use harvest::tenantsim::TenantMix;
+
+fn kv_cfg(cap_blocks: usize) -> KvConfig {
+    KvConfig {
+        model: find_kv_model("deepseek").unwrap(),
+        block_tokens: 16,
+        local_capacity_blocks: cap_blocks,
+        use_harvest: true,
+        host_backed_peer: false,
+    }
+}
+
+fn admission() -> AdmissionConfig {
+    AdmissionConfig {
+        slo: SloConfig {
+            ttft_p99_ns: 5_000_000,
+            goodput_floor_tps: 0.0,
+            window_ns: 10_000_000,
+        },
+        high_watermark_pct: 85,
+        low_watermark_pct: 60,
+    }
+}
+
+/// The conservation invariant, request by request and in rollup.
+fn check_conservation(rep: &AttributionReport, label: &str) {
+    assert!(!rep.requests.is_empty(), "{label}: no finished requests to check");
+    for r in &rep.requests {
+        assert_eq!(
+            r.ttft_sum(),
+            r.ttft_ns,
+            "{label}: req {} ttft components do not sum to the measured ttft",
+            r.id
+        );
+        assert_eq!(
+            r.ttft_ns + r.decode_sum(),
+            r.e2e_ns,
+            "{label}: req {} decode components do not close the e2e window",
+            r.id
+        );
+        assert_eq!(r.unattributed_ns(), 0, "{label}: req {} leaked latency", r.id);
+    }
+    assert_eq!(rep.unattributed_total(), 0, "{label}: rollup leaked latency");
+    // The acceptance bar is ≥ 95% of measured latency attributed; exact
+    // conservation makes it exactly 100%.
+    let measured = rep.e2e_measured_total();
+    let attributed = measured - rep.unattributed_total();
+    assert!(
+        measured == 0 || attributed * 100 >= measured * 95,
+        "{label}: attribution coverage below 95%"
+    );
+}
+
+#[test]
+fn prop_attribution_conservation_engine() {
+    // (pool blocks, prefetch, aging, admission): tight pools force
+    // reload stalls and recomputes; prefetch/aging arm their windows;
+    // admission exercises defer/queue-wait accounting.
+    let cases = [
+        (16usize, false, false, true),
+        (32, true, false, true),
+        (64, true, true, false),
+        (256, false, true, false),
+    ];
+    for (cap, prefetch, aging, adm) in cases {
+        let label = format!("engine cap={cap} prefetch={prefetch} aging={aging} adm={adm}");
+        let mut hr =
+            HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
+        let mut cfg = SimEngineConfig::new(kv_cfg(cap), 2, 4).with_attribution();
+        if prefetch {
+            cfg = cfg.with_prefetch(PrefetchConfig::default());
+        }
+        if aging {
+            cfg = cfg.with_aging(AgingConfig::default());
+        }
+        if adm {
+            cfg = cfg.with_admission(admission());
+        }
+        let sched = SchedulerSpec::CompletelyFair { quantum: 1 }.build();
+        let mut eng = SimEngine::new(cfg, sched, 0);
+        let spec = WorkloadSpec {
+            n_requests: 40,
+            mean_prompt_tokens: 128.0,
+            max_new_tokens: 12,
+            mean_interarrival_ns: 200_000,
+            seed: cap as u64,
+            ..Default::default()
+        };
+        let report = eng.run(&mut hr, WorkloadGen::new(spec).generate());
+        let attrib = report.attribution.expect("attribution was armed");
+        assert_eq!(
+            attrib.requests.len() as u64,
+            report.metrics.requests_finished,
+            "{label}: one ledger per finished request"
+        );
+        check_conservation(&attrib, &label);
+        // Prefill compute is on every request's critical path, so a
+        // non-degenerate run must charge it.
+        assert!(
+            attrib.ttft_total(Component::PrefillCompute) > 0,
+            "{label}: no prefill compute attributed"
+        );
+    }
+}
+
+#[test]
+fn prop_attribution_conservation_cluster() {
+    let mut spec = ClusterSpec::new(4);
+    spec.router = RouterPolicy::PrefixAffinity;
+    spec.tenants = Some(TenantMix {
+        enabled: true,
+        training: 1,
+        inference: 1,
+        batch: 1,
+        ..Default::default()
+    });
+    let engine = SimEngineConfig::new(kv_cfg(48), 4, 8)
+        .with_aging(AgingConfig::default())
+        .with_attribution();
+    let mut cluster = Cluster::new(&spec, engine, SchedulerSpec::CompletelyFair { quantum: 1 });
+    let workload = WorkloadSpec {
+        n_requests: 32,
+        mean_prompt_tokens: 64.0,
+        max_new_tokens: 8,
+        mean_interarrival_ns: 500_000,
+        shared_prefix_fraction: 0.7,
+        shared_prefix_tokens: 32,
+        n_prefix_groups: 3,
+        seed: 11,
+        ..Default::default()
+    };
+    let report = cluster.run(WorkloadGen::new(workload).generate());
+    let rollup = report.attribution.as_ref().expect("attribution was armed");
+    check_conservation(rollup, "cluster rollup");
+    // The rollup is exactly the concatenation of the per-node ledgers:
+    // every total matches the per-node sum, component by component.
+    let mut ledgers = 0;
+    for c in Component::ALL {
+        let ttft: u64 = report
+            .per_node
+            .iter()
+            .filter_map(|n| n.attribution.as_ref())
+            .map(|a| a.ttft_total(c))
+            .sum();
+        let decode: u64 = report
+            .per_node
+            .iter()
+            .filter_map(|n| n.attribution.as_ref())
+            .map(|a| a.decode_total(c))
+            .sum();
+        assert_eq!(rollup.ttft_total(c), ttft, "cluster ttft rollup mismatch on {:?}", c);
+        assert_eq!(rollup.decode_total(c), decode, "cluster decode rollup mismatch on {:?}", c);
+    }
+    for n in &report.per_node {
+        let a = n.attribution.as_ref().expect("every node was armed");
+        check_conservation_allow_empty(a, &format!("node {}", n.node));
+        ledgers += a.requests.len();
+    }
+    assert_eq!(ledgers, rollup.requests.len(), "rollup concatenates the per-node ledgers");
+}
+
+/// Per-node slices of a small cluster run may legitimately be empty
+/// (an unlucky node served nothing); conservation still must hold for
+/// whatever they did serve.
+fn check_conservation_allow_empty(rep: &AttributionReport, label: &str) {
+    for r in &rep.requests {
+        assert_eq!(r.ttft_sum(), r.ttft_ns, "{label}: req {} ttft mismatch", r.id);
+        assert_eq!(r.ttft_ns + r.decode_sum(), r.e2e_ns, "{label}: req {} e2e mismatch", r.id);
+        assert_eq!(r.unattributed_ns(), 0, "{label}: req {} leaked latency", r.id);
+    }
+}

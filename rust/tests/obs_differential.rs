@@ -82,14 +82,18 @@ struct EngineTrace {
 
 /// Overloaded single engine with every instrumented subsystem live:
 /// tight pool (harvest transfers), prefetch, idle-aging, and the SLO
-/// admission controller under sustained pressure.
-fn engine_run() -> EngineTrace {
+/// admission controller under sustained pressure. `attribution` arms
+/// the per-request latency ledgers (which must be invisible too).
+fn engine_run(attribution: bool) -> EngineTrace {
     let mut hr =
         HarvestRuntime::new(SimNode::new(NodeSpec::h100x2()), HarvestConfig::for_node(2));
-    let cfg = SimEngineConfig::new(kv_cfg(32), 2, 4)
+    let mut cfg = SimEngineConfig::new(kv_cfg(32), 2, 4)
         .with_prefetch(PrefetchConfig::default())
         .with_aging(AgingConfig::default())
         .with_admission(admission());
+    if attribution {
+        cfg = cfg.with_attribution();
+    }
     let mut eng =
         SimEngine::new(cfg, SchedulerSpec::CompletelyFair { quantum: 1 }.build(), 0);
     let spec = WorkloadSpec {
@@ -116,10 +120,10 @@ fn engine_run() -> EngineTrace {
 #[test]
 fn engine_run_bit_identical_with_obs_on() {
     obs_off();
-    let base = engine_run();
+    let base = engine_run(false);
 
     obs_on();
-    let traced = engine_run();
+    let traced = engine_run(false);
     let events = trace::take();
     let prof = profile::snapshot();
     let dumps = flight::take_dumps();
@@ -154,12 +158,12 @@ fn engine_run_bit_identical_with_obs_on() {
 #[test]
 fn obs_leaves_no_residue_after_disarm() {
     obs_off();
-    let a = engine_run();
+    let a = engine_run(false);
     obs_on();
-    let _ = engine_run();
+    let _ = engine_run(true);
     let _ = trace::take();
     obs_off();
-    let b = engine_run();
+    let b = engine_run(false);
     assert_eq!(a, b, "a traced run left state behind that changed the next run");
 }
 
@@ -178,8 +182,10 @@ fn staggered() -> WorkloadSpec {
 }
 
 /// 4-node calendar path with co-tenants: full report JSON plus the
-/// dispatch order.
-fn cluster_run() -> (String, Vec<Dispatch>) {
+/// dispatch order. `attribution` arms the per-node latency ledgers
+/// (deliberately excluded from the report JSON, so this comparison
+/// stays valid on armed runs).
+fn cluster_run(attribution: bool) -> (String, Vec<Dispatch>) {
     let mut spec = ClusterSpec::new(4);
     spec.router = RouterPolicy::PrefixAffinity;
     spec.tenants = Some(TenantMix {
@@ -189,7 +195,10 @@ fn cluster_run() -> (String, Vec<Dispatch>) {
         batch: 1,
         ..Default::default()
     });
-    let engine = SimEngineConfig::new(kv_cfg(48), 4, 8).with_aging(AgingConfig::default());
+    let mut engine = SimEngineConfig::new(kv_cfg(48), 4, 8).with_aging(AgingConfig::default());
+    if attribution {
+        engine = engine.with_attribution();
+    }
     let mut cluster =
         Cluster::new(&spec, engine, SchedulerSpec::CompletelyFair { quantum: 1 });
     let report = cluster.run(WorkloadGen::new(staggered()).generate());
@@ -199,10 +208,10 @@ fn cluster_run() -> (String, Vec<Dispatch>) {
 #[test]
 fn cluster_run_bit_identical_with_obs_on() {
     obs_off();
-    let (base_json, base_dispatch) = cluster_run();
+    let (base_json, base_dispatch) = cluster_run(false);
 
     obs_on();
-    let (traced_json, traced_dispatch) = cluster_run();
+    let (traced_json, traced_dispatch) = cluster_run(false);
     let events = trace::take();
     obs_off();
 
@@ -221,4 +230,27 @@ fn cluster_run_bit_identical_with_obs_on() {
         events.iter().any(|e| e.sub == Subsystem::Tenant),
         "co-tenant run traced no tenant wakes"
     );
+}
+
+/// The attribution ledgers are pure observation: an armed engine run
+/// must reproduce the unarmed run bit for bit — completion times, shed
+/// ledgers, KV counters, tier ledgers, step counts, everything.
+#[test]
+fn engine_run_bit_identical_with_attribution_on() {
+    obs_off();
+    let base = engine_run(false);
+    let armed = engine_run(true);
+    assert!(!base.completions.is_empty(), "the case must actually serve requests");
+    assert_eq!(base, armed, "attribution changed a simulation outcome");
+}
+
+/// Same on the cluster path: armed per-node ledgers must leave the full
+/// report JSON and the calendar dispatch order untouched.
+#[test]
+fn cluster_run_bit_identical_with_attribution_on() {
+    obs_off();
+    let (base_json, base_dispatch) = cluster_run(false);
+    let (armed_json, armed_dispatch) = cluster_run(true);
+    assert_eq!(base_json, armed_json, "attribution changed the cluster report");
+    assert_eq!(base_dispatch, armed_dispatch, "attribution changed the dispatch order");
 }
